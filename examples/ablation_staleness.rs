@@ -1,0 +1,83 @@
+//! Ablations over DASO's design choices (DESIGN.md experiment index):
+//!
+//! 1. Eq.-(1) staleness blend vs naive overwrite of local parameters.
+//! 2. Global-sync interval B (1 = sync every batch, larger = more
+//!    selective).
+//! 3. Pallas-kernel local averaging vs host ring collective (must be
+//!    numerically equivalent — same final metric).
+//!
+//! Run: `cargo run --release --example ablation_staleness`
+
+use daso::bench_support::print_table;
+use daso::daso::{Daso, DasoConfig};
+use daso::prelude::*;
+
+fn run(
+    rt: &ModelRuntime,
+    cfg: &TrainConfig,
+    daso_cfg: DasoConfig,
+    seed: u64,
+) -> anyhow::Result<RunReport> {
+    let (tr, va) = daso::data::for_model(&rt.spec, cfg.train_samples, cfg.val_samples, seed)?;
+    let mut s = Daso::new(daso_cfg, cfg.gpus_per_node);
+    train(rt, cfg, &*tr, &*va, &mut s)
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load("artifacts")?;
+    let rt = engine.model("mlp")?;
+    let mut cfg = TrainConfig::quick(2, 4, 10);
+    cfg.train_samples = 2048;
+    cfg.val_samples = 512;
+
+    let base = DasoConfig {
+        total_epochs: cfg.epochs,
+        warmup_epochs: 1,
+        cooldown_epochs: 1,
+        ..DasoConfig::new(cfg.epochs)
+    };
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut push = |name: &str, rep: &RunReport| {
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.4}", rep.final_metric),
+            format!("{:.2}", rep.records.last().unwrap().train_loss),
+            format!("{:.1}", rep.total_sim_time_s),
+            format!("{}", rep.comm.global_syncs),
+        ]);
+    };
+
+    // 1. Eq-1 blend vs overwrite
+    let blend = run(&rt, &cfg, base.clone(), 42)?;
+    push("Eq-1 blend (paper)", &blend);
+    let overwrite = run(&rt, &cfg, DasoConfig { staleness_blend: false, ..base.clone() }, 42)?;
+    push("overwrite (no blend)", &overwrite);
+
+    // 2. B sweep
+    for b in [1usize, 2, 8] {
+        let rep = run(&rt, &cfg, DasoConfig { b_initial: b, ..base.clone() }, 42)?;
+        push(&format!("B = {b}"), &rep);
+    }
+
+    // 3. kernel vs host local averaging — identical math expected
+    let host_avg = run(&rt, &cfg, DasoConfig { kernel_local_avg: false, ..base.clone() }, 42)?;
+    push("host-ring local avg", &host_avg);
+
+    print_table(
+        "DASO ablations (mlp, 2x4 GPUs)",
+        &["variant", "final top-1", "final loss", "sim time (s)", "global syncs"],
+        &rows,
+    );
+
+    anyhow::ensure!(blend.final_metric > 0.9, "baseline DASO failed");
+    // kernel vs host averaging must agree numerically (same data order)
+    anyhow::ensure!(
+        (blend.final_metric - host_avg.final_metric).abs() < 0.05,
+        "kernel vs host averaging diverged: {} vs {}",
+        blend.final_metric,
+        host_avg.final_metric
+    );
+    println!("ablation OK");
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! The paper's section-4.2 experiment pair (CityScapes / HRNet-OCR):
+//!
+//! - Fig. 8 (training time vs nodes): strong-scaling projection at the
+//!   true HRNet sizes, including the paper's documented Horovod AMP
+//!   handicap.
+//! - Fig. 9 (IOU vs nodes): *real* training of the scaled encoder-decoder
+//!   segmentation net on synthetic scenes, DASO vs Horovod.
+//!
+//! Run: `cargo run --release --example cityscapes_scaling [-- --full]`
+
+use daso::figures;
+use daso::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+
+    figures::print_scaling(
+        "Fig. 8 — HRNet/CityScapes training time, DASO vs Horovod (projected)",
+        &figures::fig8(&[4, 8, 16, 32, 64]),
+    );
+
+    let engine = Engine::load("artifacts")?;
+    eprintln!(
+        "training scaled segnet at several GPU counts ({})...",
+        if full { "full" } else { "quick" }
+    );
+    let rows = figures::fig9(&engine, !full)?;
+    figures::print_accuracy(
+        "Fig. 9 — mean IOU vs scale (scaled model, real training)",
+        "IOU",
+        &rows,
+    );
+
+    for r in &rows {
+        anyhow::ensure!(
+            r.daso.best_metric > 0.2,
+            "segnet failed to learn under DASO at {} nodes",
+            r.nodes
+        );
+    }
+    println!("cityscapes_scaling OK");
+    Ok(())
+}

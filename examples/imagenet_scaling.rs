@@ -1,0 +1,49 @@
+//! The paper's section-4.1 experiment pair (ImageNet / ResNet-50):
+//!
+//! - Fig. 6 (training time vs nodes): strong-scaling projection at the
+//!   true ResNet-50/ImageNet sizes on the JUWELS-like two-tier fabric.
+//! - Fig. 7 (top-1 accuracy vs nodes): *real* training of the scaled
+//!   conv ResNet on synthetic images, DASO vs Horovod with identical
+//!   hyperparameters.
+//!
+//! Run: `cargo run --release --example imagenet_scaling [-- --full]`
+
+use daso::figures;
+use daso::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+
+    figures::print_scaling(
+        "Fig. 6 — ResNet-50/ImageNet training time, DASO vs Horovod (projected)",
+        &figures::fig6(&[4, 8, 16, 32, 64]),
+    );
+
+    let engine = Engine::load("artifacts")?;
+    eprintln!(
+        "training scaled ResNet at several GPU counts ({}; use --full for the full sweep)...",
+        if full { "full" } else { "quick" }
+    );
+    let rows = figures::fig7(&engine, !full)?;
+    figures::print_accuracy(
+        "Fig. 7 — top-1 accuracy vs scale (scaled model, real training)",
+        "top-1",
+        &rows,
+    );
+
+    // the paper's qualitative claims
+    for r in &rows {
+        anyhow::ensure!(
+            (r.daso.best_metric - r.horovod.best_metric).abs() < 0.2,
+            "accuracy gap too large at {} nodes",
+            r.nodes
+        );
+        anyhow::ensure!(
+            r.daso.total_sim_time_s <= r.horovod.total_sim_time_s * 1.02,
+            "DASO slower at {} nodes",
+            r.nodes
+        );
+    }
+    println!("imagenet_scaling OK");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: train a tiny MLP with DASO on a simulated 2-node x 4-GPU
+//! cluster — the rust mirror of the paper's Listing-1 four-call API:
+//!
+//!   1. load the runtime (the node-local "process group")
+//!   2. load a model's compiled artifacts
+//!   3. create the DASO optimizer
+//!   4. train
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` once beforehand)
+
+use daso::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. runtime: PJRT CPU client + artifact manifest
+    let engine = Engine::load("artifacts")?;
+    println!("platform: {}", engine.platform());
+
+    // 2. the model's compiled executables (grad/update/eval/blend/avg)
+    let rt = engine.model("mlp")?;
+    println!(
+        "model: mlp — {} params, batch {}",
+        rt.spec.n_params, rt.spec.batch
+    );
+
+    // 3. the DASO optimizer: hierarchical + selective + asynchronous
+    let mut cfg = TrainConfig::quick(2, 4, 10); // 2 nodes x 4 GPUs, 10 epochs
+    cfg.eval_every = 2;
+    cfg.verbose = true;
+    let mut optimizer = Daso::new(DasoConfig::new(cfg.epochs), cfg.gpus_per_node);
+
+    // synthetic 10-class clusters, iid-sharded across the 8 workers
+    let (train_data, val_data) =
+        daso::data::for_model(&rt.spec, cfg.train_samples, cfg.val_samples, cfg.seed)?;
+
+    // 4. train
+    let report = train(&rt, &cfg, &*train_data, &*val_data, &mut optimizer)?;
+
+    println!("\n{}", report.summary_line());
+    println!(
+        "global syncs: {} ({} blocking warm-up/cool-down, {} non-blocking cycling)",
+        report.comm.global_syncs, report.comm.blocking_syncs, report.comm.nonblocking_syncs
+    );
+    println!(
+        "inter-node traffic: {:.1} MiB, intra-node: {:.1} MiB",
+        report.comm.bytes_inter as f64 / (1 << 20) as f64,
+        report.comm.bytes_intra as f64 / (1 << 20) as f64,
+    );
+    anyhow::ensure!(report.final_metric > 0.9, "quickstart failed to learn");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,236 @@
+"""AOT pipeline: lower every L2 model to HLO-text artifacts + manifest.
+
+Python runs exactly once (`make artifacts`); afterwards the rust binary is
+self-contained. Interchange is HLO *text*, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published `xla` 0.1.6 crate) rejects; the
+text parser reassigns ids and round-trips cleanly.
+
+Per model the artifact set is (see DESIGN.md "Artifact interface"):
+
+    grad.hlo.txt    (params[N], x, y)                 -> (loss[1], grads[N])
+    update.hlo.txt  (params[N], mom[N], grads[N], lr[1]) -> (params'[N], mom'[N])
+    eval.hlo.txt    (params[N], x, y)                 -> (aux[A], loss_sum[1])
+    blend.hlo.txt   (x_local[N], gsum[N], s[1], p[1]) -> (x_new[N],)
+    avg.hlo.txt     (stack[G, N])                     -> (mean[N],)
+    init.f32bin     little-endian f32[N] initial parameters
+
+plus a merged artifacts/manifest.json that the rust runtime parses.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model_mlp, model_resnet, model_segnet, model_transformer
+from .common import make_flat_fns
+from .kernels import fused_sgd, local_avg, staleness_blend, tiles
+
+MODULES = {
+    "mlp": model_mlp,
+    "resnet": model_resnet,
+    "segnet": model_segnet,
+    "transformer": model_transformer,
+}
+
+DEFAULT_BATCH = {"mlp": 32, "resnet": 32, "segnet": 8, "transformer": 8}
+METRIC = {"mlp": "top1", "resnet": "top1", "segnet": "iou", "transformer": "token_acc"}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (return_tuple=True:
+    the rust side unwraps with to_tuple*)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype(s):
+    return {"f32": jnp.float32, "i32": jnp.int32}[s]
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_model(name, spec, batch, gpn, outdir, log):
+    """Lower one model's artifact set; returns its manifest entry."""
+    module = MODULES[name]
+    t0 = time.time()
+    n, flat0, grad_fn, eval_fn = make_flat_fns(spec, module)
+    shapes = spec.input_shapes(batch)
+    x_spec = _spec(shapes["x"], _dtype(spec.x_dtype()))
+    y_spec = _spec(shapes["y"], jnp.int32)
+    p_spec = _spec((n,), jnp.float32)
+    s1 = _spec((1,), jnp.float32)
+
+    mdir = os.path.join(outdir, name)
+    os.makedirs(mdir, exist_ok=True)
+
+    files = {}
+
+    def emit(kind, fn, *arg_specs):
+        t = time.time()
+        text = to_hlo_text(jax.jit(fn).lower(*arg_specs))
+        rel = f"{name}/{kind}.hlo.txt"
+        with open(os.path.join(outdir, rel), "w") as f:
+            f.write(text)
+        files[kind] = rel
+        log(f"  {name}/{kind}: {len(text) / 1e6:.2f} MB HLO in {time.time() - t:.1f}s")
+
+    emit("grad", grad_fn, p_spec, x_spec, y_spec)
+    emit("eval", eval_fn, p_spec, x_spec, y_spec)
+    emit(
+        "update",
+        lambda p, m, g, lr: fused_sgd(p, m, g, lr, mu=ARGS.mu, wd=ARGS.wd),
+        p_spec, p_spec, p_spec, s1,
+    )
+    emit("blend", staleness_blend, p_spec, p_spec, s1, s1)
+    emit("avg", local_avg, _spec((gpn, n), jnp.float32))
+
+    init_rel = f"{name}/init.f32bin"
+    np.asarray(flat0, dtype="<f4").tofile(os.path.join(outdir, init_rel))
+
+    # Cross-language self-check probe: fixed inputs + expected outputs.
+    # rust/tests replays these through the PJRT loader and asserts parity,
+    # closing the python->HLO->rust interchange loop numerically.
+    r = np.random.default_rng(1234)
+    if spec.x_dtype() == "i32":
+        x_probe = r.integers(0, spec.vocab, shapes["x"]).astype(np.int32)
+    else:
+        x_probe = r.standard_normal(shapes["x"]).astype(np.float32)
+    n_cls = getattr(spec, "n_classes", getattr(spec, "vocab", 2))
+    y_probe = r.integers(0, n_cls, shapes["y"]).astype(np.int32)
+    loss, g = jax.jit(grad_fn)(flat0, x_probe, y_probe)
+    aux, loss_sum = jax.jit(eval_fn)(flat0, x_probe, y_probe)
+    x_probe.astype("<f4" if spec.x_dtype() == "f32" else "<i4").tofile(
+        os.path.join(mdir, "probe_x.bin"))
+    y_probe.astype("<i4").tofile(os.path.join(mdir, "probe_y.bin"))
+    selfcheck = {
+        "loss": float(loss[0]),
+        "grad_l2": float(jnp.linalg.norm(g)),
+        "grad_head": [float(v) for v in np.asarray(g[:8])],
+        "aux": [float(v) for v in np.asarray(aux)],
+        "loss_sum": float(loss_sum[0]),
+        "probe_x": f"{name}/probe_x.bin",
+        "probe_y": f"{name}/probe_y.bin",
+    }
+
+    entry = {
+        "n_params": n,
+        "batch": batch,
+        "x_shape": list(shapes["x"]),
+        "x_dtype": spec.x_dtype(),
+        "y_shape": list(shapes["y"]),
+        "y_dtype": "i32",
+        "aux_len": spec.aux_len,
+        "metric": METRIC[name],
+        "mu": ARGS.mu,
+        "wd": ARGS.wd,
+        "files": files,
+        "init": init_rel,
+        "selfcheck": selfcheck,
+        "hyper": {k: (list(v) if isinstance(v, tuple) else v)
+                  for k, v in spec.__dict__.items()},
+    }
+    log(f"  {name}: n_params={n} done in {time.time() - t0:.1f}s")
+    return entry
+
+
+def config_fingerprint(args, models):
+    h = hashlib.sha256()
+    h.update(json.dumps({
+        "models": models,
+        "batches": {m: getattr(args, f"batch_{m}") for m in models},
+        "preset": args.transformer_preset,
+        "gpn": args.gpus_per_node,
+        "mu": args.mu, "wd": args.wd, "seed": args.seed,
+    }, sort_keys=True).encode())
+    # artifact staleness also depends on the source files themselves
+    srcdir = os.path.dirname(os.path.abspath(__file__))
+    for root, _, fnames in sorted(os.walk(srcdir)):
+        for fn in sorted(fnames):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+ARGS = None
+
+
+def main():
+    global ARGS
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="mlp,resnet,segnet,transformer")
+    ap.add_argument("--gpus-per-node", type=int, default=4)
+    ap.add_argument("--transformer-preset", default="small",
+                    choices=sorted(model_transformer.PRESETS))
+    for m, b in DEFAULT_BATCH.items():
+        ap.add_argument(f"--batch-{m}", type=int, default=b, dest=f"batch_{m}")
+    ap.add_argument("--mu", type=float, default=0.9, help="SGD momentum")
+    ap.add_argument("--wd", type=float, default=1e-4, help="weight decay")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--force", action="store_true")
+    ARGS = ap.parse_args()
+
+    # artifacts execute on the CPU PJRT client: lower the Pallas kernels
+    # with single-tile BlockSpecs (multi-tile interpret grids become
+    # sequential HLO loops XLA-CPU cannot fuse; math is identical — see
+    # kernels/tiles.py and DESIGN.md section Hardware-Adaptation)
+    tiles.set_interpret_fast()
+
+    models = [m.strip() for m in ARGS.models.split(",") if m.strip()]
+    outdir = os.path.abspath(ARGS.out)
+    os.makedirs(outdir, exist_ok=True)
+    manifest_path = os.path.join(outdir, "manifest.json")
+
+    fp = config_fingerprint(ARGS, models)
+    if not ARGS.force and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("fingerprint") == fp:
+            print(f"artifacts up-to-date ({manifest_path}); skipping")
+            return
+
+    def log(msg):
+        print(msg, flush=True)
+
+    log(f"lowering models={models} -> {outdir}")
+    entries = {}
+    for name in models:
+        if name == "transformer":
+            base = model_transformer.PRESETS[ARGS.transformer_preset]
+            spec = type(base)(**{**base.__dict__, "seed": ARGS.seed})
+        else:
+            spec = MODULES[name].Spec(seed=ARGS.seed)
+        entries[name] = lower_model(
+            name, spec, getattr(ARGS, f"batch_{name}"), ARGS.gpus_per_node, outdir, log
+        )
+        if name == "transformer":
+            entries[name]["hyper"]["preset"] = ARGS.transformer_preset
+
+    manifest = {
+        "version": 1,
+        "fingerprint": fp,
+        "gpus_per_node": ARGS.gpus_per_node,
+        "models": entries,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Shared L2 model utilities: initializers, losses, flat-param plumbing.
+
+Every model in this package exposes the same functional surface so that
+`aot.py` can lower a uniform artifact set (see DESIGN.md "Artifact
+interface"):
+
+    spec            -- hyperparameter dataclass
+    init(spec, key) -> params pytree
+    loss_fn(spec, params, x, y) -> scalar mean loss
+    eval_fn(spec, params, x, y) -> (aux f32[A], loss_sum f32[1])
+
+All communication in the rust coordinator happens over the *flat* f32
+parameter vector; `ravel_pytree` provides the (differentiable) bijection.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def he_normal(key, shape, fan_in=None):
+    """He-normal init (fan-in scaled), f32."""
+    if fan_in is None:
+        fan_in = shape[0] if len(shape) == 2 else int(jnp.prod(jnp.array(shape[:-1])))
+    std = (2.0 / max(fan_in, 1)) ** 0.5
+    return std * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def conv_init(key, kh, kw, cin, cout):
+    """He init for an HWIO conv kernel."""
+    return he_normal(key, (kh, kw, cin, cout), fan_in=kh * kw * cin)
+
+
+def normal_init(key, shape, std=0.02):
+    return std * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# losses / metrics
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels):
+    """Mean cross-entropy. logits (..., C) f32, labels (...) int32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def softmax_xent_sum(logits, labels):
+    """Summed (not mean) cross-entropy, for cross-batch aggregation."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll)
+
+
+def count_correct(logits, labels):
+    """Number of correct argmax predictions, as f32."""
+    pred = jnp.argmax(logits, axis=-1)
+    return jnp.sum((pred == labels).astype(jnp.float32))
+
+
+def iou_parts(logits, labels, num_classes):
+    """Per-class (intersection, union) pixel counts for IOU.
+
+    Returns a flat f32[2C] vector: [I_0..I_{C-1}, U_0..U_{C-1}]. The rust
+    side accumulates these across batches/workers and computes
+    mean-IOU = mean_c I_c / U_c at the end (union of the whole set, not a
+    mean of per-batch IOUs).
+    """
+    pred = jnp.argmax(logits, axis=-1)
+    inter, union = [], []
+    for c in range(num_classes):
+        p = pred == c
+        t = labels == c
+        inter.append(jnp.sum((p & t).astype(jnp.float32)))
+        union.append(jnp.sum((p | t).astype(jnp.float32)))
+    return jnp.concatenate([jnp.stack(inter), jnp.stack(union)])
+
+
+# ---------------------------------------------------------------------------
+# normalization (stateless)
+# ---------------------------------------------------------------------------
+
+def batch_norm(x, scale, offset, axes, eps=1e-5):
+    """Batch normalization using the *current batch* statistics.
+
+    Stateless by construction: the grad/eval artifacts are pure functions
+    of (params, batch), so running statistics are deliberately not kept.
+    This matches the paper's section 4.2 setting where Horovod ran with
+    local (unsynchronized) batch norm; see DESIGN.md "Substitutions".
+    """
+    mean = jnp.mean(x, axis=axes, keepdims=True)
+    var = jnp.var(x, axis=axes, keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + eps)
+    return xn * scale + offset
+
+
+def layer_norm(x, scale, offset, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * scale + offset
+
+
+# ---------------------------------------------------------------------------
+# flat-parameter plumbing
+# ---------------------------------------------------------------------------
+
+def flatten_params(params):
+    """-> (flat f32[N], unravel_fn)."""
+    flat, unravel = ravel_pytree(params)
+    return flat.astype(jnp.float32), unravel
+
+
+def make_flat_fns(spec, module):
+    """Build the flat-vector grad/eval closures for a model module.
+
+    Returns (n_params, init_flat, grad_fn, eval_fn) where
+      grad_fn(flat, x, y) -> (loss f32[1], grads f32[N])
+      eval_fn(flat, x, y) -> (aux f32[A], loss_sum f32[1])
+    """
+    params = module.init(spec, jax.random.PRNGKey(spec.seed))
+    flat0, unravel = flatten_params(params)
+    n = int(flat0.shape[0])
+
+    def grad_fn(flat, x, y):
+        loss, g = jax.value_and_grad(
+            lambda p: module.loss_fn(spec, unravel(p), x, y)
+        )(flat)
+        return loss.reshape(1), g
+
+    def eval_fn(flat, x, y):
+        aux, loss_sum = module.eval_fn(spec, unravel(flat), x, y)
+        return aux, loss_sum.reshape(1)
+
+    return n, flat0, grad_fn, eval_fn

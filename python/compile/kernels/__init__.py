@@ -1,0 +1,26 @@
+"""L1: Pallas kernels for the DASO reproduction's compute hot-spots.
+
+- matmul_fused: tiled matmul + bias + activation (dense layers, MXU-shaped)
+- fused_sgd:    the local optimizer update, one VMEM pass
+- staleness_blend: DASO Eq. (1) stale/local parameter blend
+- local_avg:    node-local gradient average (the NCCL reduction math)
+
+Every kernel has a pure-jnp oracle in `ref.py`; pytest + hypothesis assert
+equivalence over swept shapes/dtypes. All kernels run `interpret=True` —
+the CPU PJRT client cannot execute Mosaic custom-calls (see DESIGN.md).
+"""
+
+from . import ref
+from .fused_sgd import fused_sgd
+from .local_avg import local_avg
+from .matmul_fused import matmul_fused, mm_raw
+from .staleness_blend import staleness_blend
+
+__all__ = [
+    "ref",
+    "fused_sgd",
+    "local_avg",
+    "matmul_fused",
+    "mm_raw",
+    "staleness_blend",
+]

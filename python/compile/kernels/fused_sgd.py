@@ -1,0 +1,78 @@
+"""Fused SGD-with-momentum parameter update as a Pallas kernel.
+
+The per-GPU local optimizer step from the paper (SGD, momentum 0.9,
+weight decay 1e-4). A naive implementation makes four HBM round-trips
+(read p, read m, read g; write m; read m again; write p); fusing into one
+VMEM-tiled pass reads each operand once and writes each result once:
+
+    g'  = g + wd * p
+    m'  = mu * m + g'
+    p'  = p - lr * m'
+
+The flat parameter vector is tiled 1-D (default 64 Ki elements = 256 KiB
+per operand tile in f32; 3 in + 2 out tiles ~ 1.25 MiB VMEM working set).
+`lr` is passed as a shape-(1,) array (all scalars cross the artifact
+boundary as f32[1]; see DESIGN.md "Artifact interface").
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiles
+
+INTERPRET = True
+
+DEFAULT_BLOCK = 64 * 1024
+
+
+def _sgd_kernel(lr_ref, p_ref, m_ref, g_ref, po_ref, mo_ref, *, mu, wd):
+    g = g_ref[...] + wd * p_ref[...]
+    m_new = mu * m_ref[...] + g
+    mo_ref[...] = m_new
+    po_ref[...] = p_ref[...] - lr_ref[0] * m_new
+
+
+def fused_sgd(params, momentum, grads, lr, *, mu=0.9, wd=0.0, block=None,
+              interpret=None):
+    """Apply one fused SGD step. All arrays are flat f32[N]; lr is f32[1].
+
+    Returns (new_params, new_momentum).
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    if block is None:
+        block = tiles.VEC_BLOCK
+    (n,) = params.shape
+    assert momentum.shape == (n,) and grads.shape == (n,), (n, momentum.shape, grads.shape)
+    assert lr.shape == (1,), lr.shape
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        params = jnp.pad(params, (0, pad))
+        momentum = jnp.pad(momentum, (0, pad))
+        grads = jnp.pad(grads, (0, pad))
+    np_ = params.shape[0]
+    grid = (np_ // block,)
+    p_new, m_new = pl.pallas_call(
+        functools.partial(_sgd_kernel, mu=mu, wd=wd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # lr broadcast to every tile
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lr, params, momentum, grads)
+    return p_new[:n], m_new[:n]

@@ -1,0 +1,47 @@
+"""Node-local gradient average as a Pallas kernel.
+
+The math that NCCL performs on-device during the node-local allreduce
+(paper Fig. 2): the G node-local GPUs' gradient buffers are averaged and
+every GPU receives the mean. The rust coordinator moves the buffers; this
+kernel is the reduction itself, tiled over the flat parameter vector with
+all G partials for a tile resident in VMEM at once.
+
+G is a compile-time constant (one artifact per gpus-per-node setting).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiles
+
+INTERPRET = True
+
+DEFAULT_BLOCK = 32 * 1024
+
+
+def _avg_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.mean(x_ref[...].astype(jnp.float32), axis=0)
+
+
+def local_avg(stacked, *, block=None, interpret=None):
+    """mean over axis 0 of a (G, N) stack -> (N,) f32."""
+    if interpret is None:
+        interpret = INTERPRET
+    if block is None:
+        block = tiles.AVG_BLOCK
+    g, n = stacked.shape
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    np_ = stacked.shape[1]
+    out = pl.pallas_call(
+        _avg_kernel,
+        grid=(np_ // block,),
+        in_specs=[pl.BlockSpec((g, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=interpret,
+    )(stacked)
+    return out[:n]

@@ -1,0 +1,196 @@
+"""Tiled Pallas matmul with fused bias + activation epilogue.
+
+The paper's compute hot-spot is the network forward/backward itself; this
+kernel carries the dense layers of every L2 model. GPU papers express the
+HBM <-> on-chip schedule with threadblocks + shared memory; here it is
+expressed TPU-style with a Pallas grid and BlockSpecs:
+
+  grid = (M/bm, N/bn, K/bk)   -- K innermost so the f32 accumulator tile
+                                 stays resident in VMEM across the K loop
+  x tile  (bm, bk), w tile (bk, bn), acc scratch (bm, bn) f32
+
+Default tiles are 128x128x128: MXU-native (the systolic array is 128x128)
+and VMEM-friendly (3 * 128*128 * 4 B = 192 KiB working set, leaving room
+for double buffering in a 16 MiB VMEM).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel is lowered to plain HLO for execution and the
+TPU efficiency story is an estimate (see DESIGN.md section Perf).
+
+Autodiff: pallas_call has no derivative rule, so `matmul_fused` carries a
+custom VJP. The forward kernel emits both the activated output and the
+pre-activation; the backward pass reuses the plain matmul kernel for
+dX = dPre @ W^T and dW = X^T @ dPre.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from . import tiles
+
+# Flip to False only when lowering for a real TPU target.
+INTERPRET = True
+
+
+def _pad_to(x, multiples):
+    """Zero-pad each dim of `x` up to a multiple of `multiples[i]`."""
+    pads = []
+    for dim, mult in zip(x.shape, multiples):
+        rem = (-dim) % mult
+        pads.append((0, rem))
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+def _block_sizes(m, k, n, bm, bk, bn):
+    """Clamp requested tiles to the problem size."""
+    return min(bm, m), min(bk, k), min(bn, n)
+
+
+def _acc_scratch(bm, bn):
+    return [pl.MemorySpace.ANY(shape=(bm, bn), dtype=jnp.float32)]
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps, activation):
+    """One (bm, bn) output tile; K is the innermost grid axis."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _finish():
+        o_ref[...] = ref.apply_activation(acc_ref[...], activation)
+
+
+def _mm_fused_kernel(x_ref, w_ref, b_ref, o_ref, pre_ref, acc_ref, *, k_steps, activation):
+    """Fused matmul + bias + activation, also emitting the pre-activation
+    (the VJP residual)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _finish():
+        pre = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        pre_ref[...] = pre
+        o_ref[...] = ref.apply_activation(pre, activation)
+
+
+def mm_raw(x, w, *, bm=None, bk=None, bn=None, activation="none", interpret=None):
+    """Plain Pallas matmul: act(x @ w). f32 accumulation; output f32.
+
+    No custom VJP — this is the building block used *inside* the VJP of
+    :func:`matmul_fused` (and directly by non-differentiated graphs).
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    if bm is None:
+        bm, bk, bn = tiles.MM_TILES
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bk, bn = _block_sizes(m, k, n, bm, bk, bn)
+    xp = _pad_to(x, (bm, bk))
+    wp = _pad_to(w, (bk, bn))
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, k_steps=k_steps, activation=activation),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=_acc_scratch(bm, bn),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _mm_fused_call(xp, wp, bp, bm, bk, bn, activation, interpret):
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    k_steps = kp // bk
+    return pl.pallas_call(
+        functools.partial(_mm_fused_kernel, k_steps=k_steps, activation=activation),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        ],
+        scratch_shapes=_acc_scratch(bm, bn),
+        interpret=interpret,
+    )(xp, wp, bp)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def matmul_fused(x, w, b, activation="none", bm=None, bk=None, bn=None):
+    """act(x @ w + b) as a single fused Pallas kernel, differentiable.
+
+    x: (M, K) f32/bf16, w: (K, N) f32/bf16, b: (N,) -> (M, N) f32.
+    """
+    out, _ = _matmul_fused_fwd_impl(x, w, b, activation, bm, bk, bn)
+    return out
+
+
+def _matmul_fused_fwd_impl(x, w, b, activation, bm, bk, bn):
+    if bm is None:
+        bm, bk, bn = tiles.MM_TILES
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,), (x.shape, w.shape, b.shape)
+    bm_, bk_, bn_ = _block_sizes(m, k, n, bm, bk, bn)
+    xp = _pad_to(x, (bm_, bk_))
+    wp = _pad_to(w, (bk_, bn_))
+    bp = _pad_to(b, (bn_,))
+    out_p, pre_p = _mm_fused_call(xp, wp, bp, bm_, bk_, bn_, activation, INTERPRET)
+    return out_p[:m, :n], pre_p[:m, :n]
+
+
+def _matmul_fused_fwd(x, w, b, activation, bm, bk, bn):
+    out, pre = _matmul_fused_fwd_impl(x, w, b, activation, bm, bk, bn)
+    return out, (x, w, pre)
+
+
+def _matmul_fused_bwd(activation, bm, bk, bn, res, dy):
+    if bm is None:
+        bm, bk, bn = tiles.MM_TILES
+    x, w, pre = res
+    dy = dy.astype(jnp.float32)
+    dpre = dy * ref.activation_grad(pre, activation)
+    dx = mm_raw(dpre, w.astype(jnp.float32).T, bm=bm, bk=bn, bn=bk)
+    dw = mm_raw(x.astype(jnp.float32).T, dpre, bm=bk, bk=bm, bn=bn)
+    db = jnp.sum(dpre, axis=0)
+    return dx.astype(x.dtype), dw.astype(w.dtype), db.astype(pre.dtype)
+
+
+matmul_fused.defvjp(_matmul_fused_fwd, _matmul_fused_bwd)

@@ -1,0 +1,67 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+These are the ground-truth semantics; pytest asserts each Pallas kernel
+matches its `*_ref` twin over hypothesis-swept shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+
+
+def apply_activation(x, activation: str):
+    """Shared activation epilogue (also used by the kernels themselves)."""
+    if activation == "none":
+        return x
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "gelu":
+        # tanh approximation, matches jax.nn.gelu(approximate=True)
+        c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+        return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def activation_grad(pre, activation: str):
+    """d act(pre) / d pre, evaluated at the saved pre-activation."""
+    if activation == "none":
+        return jnp.ones_like(pre)
+    if activation == "relu":
+        return (pre > 0).astype(pre.dtype)
+    if activation == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(pre.dtype)
+        inner = c * (pre + 0.044715 * pre**3)
+        t = jnp.tanh(inner)
+        dinner = c * (1.0 + 3 * 0.044715 * pre**2)
+        return 0.5 * (1.0 + t) + 0.5 * pre * (1.0 - t**2) * dinner
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def matmul_fused_ref(x, w, b, activation="none"):
+    """out = act(x @ w + b); accumulation in f32 like the kernel."""
+    pre = (
+        jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+        + b.astype(jnp.float32)
+    )
+    return apply_activation(pre, activation)
+
+
+def fused_sgd_ref(params, momentum, grads, lr, mu=0.9, wd=0.0):
+    """PyTorch-style SGD with momentum + weight decay (dampening = 0).
+
+    g      <- grad + wd * p
+    m'     <- mu * m + g
+    p'     <- p - lr * m'
+    """
+    g = grads + wd * params
+    m_new = mu * momentum + g
+    p_new = params - lr * m_new
+    return p_new, m_new
+
+
+def staleness_blend_ref(x_local, global_sum, s, p):
+    """DASO Eq. (1): x <- (2S * x_local + sum_i x_global_i) / (2S + P)."""
+    return (2.0 * s * x_local + global_sum) / (2.0 * s + p)
+
+
+def local_avg_ref(stacked):
+    """Node-local gradient average: mean over the leading (GPU) axis."""
+    return jnp.mean(stacked.astype(jnp.float32), axis=0)

@@ -1,0 +1,62 @@
+"""DASO Eq. (1) staleness-weighted parameter blend as a Pallas kernel.
+
+After a non-blocking global synchronization the received parameters are S
+batches stale; Eq. (1) of the paper blends them with the current local
+state:
+
+    x_{t+S} = (2S * x^l_{t+S-1} + sum_{i=1..P} x^i_t) / (2S + P)
+
+The kernel takes the *pre-summed* global buffer (the sum over the P group
+members' states is what actually arrives off the allreduce wire) plus the
+local state, and performs the blend in one tiled pass — fused with the
+unpack so the parameter vector is touched exactly once.
+
+`s` and `p` cross the artifact boundary as f32[1] scalars so the same
+compiled executable serves every (S, P) the cycling policy produces.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiles
+
+INTERPRET = True
+
+DEFAULT_BLOCK = 64 * 1024
+
+
+def _blend_kernel(s_ref, p_ref, xl_ref, gs_ref, o_ref):
+    two_s = 2.0 * s_ref[0]
+    o_ref[...] = (two_s * xl_ref[...] + gs_ref[...]) / (two_s + p_ref[0])
+
+
+def staleness_blend(x_local, global_sum, s, p, *, block=None, interpret=None):
+    """x_new = (2s * x_local + global_sum) / (2s + p); all flat f32[N]."""
+    if interpret is None:
+        interpret = INTERPRET
+    if block is None:
+        block = tiles.VEC_BLOCK
+    (n,) = x_local.shape
+    assert global_sum.shape == (n,)
+    assert s.shape == (1,) and p.shape == (1,)
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        x_local = jnp.pad(x_local, (0, pad))
+        global_sum = jnp.pad(global_sum, (0, pad))
+    np_ = x_local.shape[0]
+    out = pl.pallas_call(
+        _blend_kernel,
+        grid=(np_ // block,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=interpret,
+    )(s, p, x_local, global_sum)
+    return out[:n]

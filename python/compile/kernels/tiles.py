@@ -1,0 +1,41 @@
+"""Kernel tile configuration.
+
+Two regimes:
+
+- **TPU-shaped (default)**: 128x128x128 matmul tiles (MXU-native) and
+  64 Ki-element vector tiles — the BlockSpecs DESIGN.md's perf estimates
+  are based on, and what a real-TPU lowering would use. pytest exercises
+  these (and other) tile sizes against the oracle.
+
+- **CPU-interpret fast (`set_interpret_fast()`)**: degenerate single-tile
+  BlockSpecs. Under `interpret=True` every grid step lowers into a
+  sequential HLO loop iteration that XLA-CPU cannot fuse, so multi-tile
+  grids are ~10-50x slower than one big tile with zero numerical
+  difference. `aot.py` enables this mode before lowering artifacts; the
+  kernels' *math* is identical (pytest covers both regimes).
+"""
+
+# matmul (bm, bk, bn)
+MM_TILES = (128, 128, 128)
+# flat vector kernels (fused_sgd, staleness_blend)
+VEC_BLOCK = 64 * 1024
+# local_avg
+AVG_BLOCK = 32 * 1024
+
+_HUGE = 1 << 30
+
+
+def set_interpret_fast():
+    """Single-tile BlockSpecs for CPU-interpret artifact lowering."""
+    global MM_TILES, VEC_BLOCK, AVG_BLOCK
+    MM_TILES = (_HUGE, _HUGE, _HUGE)
+    VEC_BLOCK = _HUGE
+    AVG_BLOCK = _HUGE
+
+
+def set_tpu_shaped():
+    """Restore the default MXU/VMEM-shaped tiles."""
+    global MM_TILES, VEC_BLOCK, AVG_BLOCK
+    MM_TILES = (128, 128, 128)
+    VEC_BLOCK = 64 * 1024
+    AVG_BLOCK = 32 * 1024

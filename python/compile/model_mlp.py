@@ -1,0 +1,59 @@
+"""Tiny MLP classifier — the quickstart workload.
+
+Two dense layers (Pallas matmul_fused), 10-way classification over
+feature vectors. Small enough that the full DASO stack trains it to high
+accuracy in seconds on CPU, which makes it the integration-test model.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import jax
+
+from . import common
+from .kernels import matmul_fused
+
+
+@dataclass(frozen=True)
+class Spec:
+    d_in: int = 32
+    d_hidden: int = 64
+    n_classes: int = 10
+    seed: int = 0
+
+    name: str = "mlp"
+
+    @property
+    def aux_len(self):
+        return 1  # [count_correct]
+
+    def input_shapes(self, batch):
+        return {"x": (batch, self.d_in), "y": (batch,)}
+
+    def x_dtype(self):
+        return "f32"
+
+
+def init(spec, key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": common.he_normal(k1, (spec.d_in, spec.d_hidden)),
+        "b1": jnp.zeros((spec.d_hidden,), jnp.float32),
+        "w2": common.he_normal(k2, (spec.d_hidden, spec.n_classes)),
+        "b2": jnp.zeros((spec.n_classes,), jnp.float32),
+    }
+
+
+def forward(spec, params, x):
+    h = matmul_fused(x, params["w1"], params["b1"], "relu")
+    return matmul_fused(h, params["w2"], params["b2"], "none")
+
+
+def loss_fn(spec, params, x, y):
+    return common.softmax_xent(forward(spec, params, x), y)
+
+
+def eval_fn(spec, params, x, y):
+    logits = forward(spec, params, x)
+    aux = common.count_correct(logits, y).reshape(1)
+    return aux, common.softmax_xent_sum(logits, y)

@@ -1,0 +1,122 @@
+"""Small residual CNN — the ImageNet/ResNet-50 stand-in (paper section 4.1).
+
+ResNet-v1 basic-block architecture on 32x32x3 synthetic images:
+stem conv -> 3 stages of `blocks_per_stage` basic blocks with channel
+widths `widths` (stride-2 at each stage transition) -> global average
+pool -> Pallas dense head. Batch norm uses current-batch statistics
+(stateless; see common.batch_norm and DESIGN.md "Substitutions").
+
+The true ResNet-50/ImageNet *sizes* (25.6M params, 1.28M images) are
+still used by the simulated-time projector for Fig. 6; this scaled model
+carries the *optimization dynamics* experiments (Fig. 7): identical
+hyperparameters for DASO and the Horovod baseline, accuracy vs GPU count.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .kernels import matmul_fused
+
+
+@dataclass(frozen=True)
+class Spec:
+    image_size: int = 32
+    channels: int = 3
+    n_classes: int = 10
+    widths: tuple = (16, 32, 64)
+    blocks_per_stage: int = 2
+    seed: int = 0
+
+    name: str = "resnet"
+
+    @property
+    def aux_len(self):
+        return 1  # [count_correct]
+
+    def input_shapes(self, batch):
+        s = self.image_size
+        return {"x": (batch, s, s, self.channels), "y": (batch,)}
+
+    def x_dtype(self):
+        return "f32"
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _bn_relu(x, p, relu=True):
+    out = common.batch_norm(x, p["scale"], p["offset"], axes=(0, 1, 2))
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def _bn_params(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "offset": jnp.zeros((c,), jnp.float32)}
+
+
+def init(spec, key):
+    keys = iter(jax.random.split(key, 256))
+    params = {
+        "stem": {"w": common.conv_init(next(keys), 3, 3, spec.channels, spec.widths[0]),
+                 "bn": _bn_params(spec.widths[0])},
+        "stages": [],
+    }
+    cin = spec.widths[0]
+    for si, width in enumerate(spec.widths):
+        stage = []
+        for bi in range(spec.blocks_per_stage):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            block = {
+                "w1": common.conv_init(next(keys), 3, 3, cin, width),
+                "bn1": _bn_params(width),
+                "w2": common.conv_init(next(keys), 3, 3, width, width),
+                "bn2": _bn_params(width),
+            }
+            if stride != 1 or cin != width:
+                block["proj"] = common.conv_init(next(keys), 1, 1, cin, width)
+            stage.append(block)
+            cin = width
+        params["stages"].append(stage)
+    params["head"] = {
+        "w": common.he_normal(next(keys), (cin, spec.n_classes)),
+        "b": jnp.zeros((spec.n_classes,), jnp.float32),
+    }
+    return params
+
+
+def _basic_block(x, p, stride):
+    h = _conv(x, p["w1"], stride)
+    h = _bn_relu(h, p["bn1"])
+    h = _conv(h, p["w2"], 1)
+    h = _bn_relu(h, p["bn2"], relu=False)
+    shortcut = _conv(x, p["proj"], stride) if "proj" in p else x
+    return jnp.maximum(h + shortcut, 0.0)
+
+
+def forward(spec, params, x):
+    h = _conv(x, params["stem"]["w"], 1)
+    h = _bn_relu(h, params["stem"]["bn"])
+    for si, stage in enumerate(params["stages"]):
+        for bi, block in enumerate(stage):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h = _basic_block(h, block, stride)
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    return matmul_fused(h, params["head"]["w"], params["head"]["b"], "none")
+
+
+def loss_fn(spec, params, x, y):
+    return common.softmax_xent(forward(spec, params, x), y)
+
+
+def eval_fn(spec, params, x, y):
+    logits = forward(spec, params, x)
+    aux = common.count_correct(logits, y).reshape(1)
+    return aux, common.softmax_xent_sum(logits, y)

@@ -1,0 +1,105 @@
+"""Encoder–decoder segmentation network — the CityScapes/HRNet stand-in
+(paper section 4.2).
+
+A compact U-Net-style net on 32x32x3 synthetic scenes with C semantic
+classes: two stride-2 conv encoder stages, a bottleneck, and a
+transpose-conv decoder with skip connections; per-pixel softmax head.
+Cross-entropy replaces the paper's region-mutual-information loss (the
+RMI loss needs neighbourhood covariance estimation that adds nothing to
+the *communication* behaviour under study; documented in DESIGN.md).
+
+Eval emits per-class intersection/union pixel counts so the coordinator
+can compute the paper's IOU metric over the full validation set. The
+HRNet-OCR sizes (~70M params) are used by the Fig.-8 time projector.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+@dataclass(frozen=True)
+class Spec:
+    image_size: int = 32
+    channels: int = 3
+    n_classes: int = 8
+    base_width: int = 16
+    seed: int = 0
+
+    name: str = "segnet"
+
+    @property
+    def aux_len(self):
+        return 2 * self.n_classes  # [I_0..I_{C-1}, U_0..U_{C-1}]
+
+    def input_shapes(self, batch):
+        s = self.image_size
+        return {"x": (batch, s, s, self.channels), "y": (batch, s, s)}
+
+    def x_dtype(self):
+        return "f32"
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _deconv(x, w, stride=2):
+    return jax.lax.conv_transpose(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _bn_relu(x, p):
+    return jnp.maximum(common.batch_norm(x, p["scale"], p["offset"], (0, 1, 2)), 0.0)
+
+
+def _bn_params(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "offset": jnp.zeros((c,), jnp.float32)}
+
+
+def init(spec, key):
+    keys = iter(jax.random.split(key, 64))
+    w = spec.base_width
+    return {
+        "enc1": {"w": common.conv_init(next(keys), 3, 3, spec.channels, w), "bn": _bn_params(w)},
+        "enc2": {"w": common.conv_init(next(keys), 3, 3, w, 2 * w), "bn": _bn_params(2 * w)},
+        "enc3": {"w": common.conv_init(next(keys), 3, 3, 2 * w, 4 * w), "bn": _bn_params(4 * w)},
+        "mid": {"w": common.conv_init(next(keys), 3, 3, 4 * w, 4 * w), "bn": _bn_params(4 * w)},
+        "dec2": {"w": common.conv_init(next(keys), 3, 3, 4 * w, 2 * w), "bn": _bn_params(2 * w)},
+        "fuse2": {"w": common.conv_init(next(keys), 3, 3, 4 * w, 2 * w), "bn": _bn_params(2 * w)},
+        "dec1": {"w": common.conv_init(next(keys), 3, 3, 2 * w, w), "bn": _bn_params(w)},
+        "fuse1": {"w": common.conv_init(next(keys), 3, 3, 2 * w, w), "bn": _bn_params(w)},
+        "head": common.conv_init(next(keys), 1, 1, w, spec.n_classes),
+    }
+
+
+def forward(spec, params, x):
+    e1 = _bn_relu(_conv(x, params["enc1"]["w"], 1), params["enc1"]["bn"])          # 32x32, w
+    e2 = _bn_relu(_conv(e1, params["enc2"]["w"], 2), params["enc2"]["bn"])         # 16x16, 2w
+    e3 = _bn_relu(_conv(e2, params["enc3"]["w"], 2), params["enc3"]["bn"])         # 8x8, 4w
+    m = _bn_relu(_conv(e3, params["mid"]["w"], 1), params["mid"]["bn"])            # 8x8, 4w
+    d2 = _bn_relu(_deconv(m, params["dec2"]["w"], 2), params["dec2"]["bn"])        # 16x16, 2w
+    d2 = jnp.concatenate([d2, e2], axis=-1)                                        # 16x16, 4w
+    d2 = _bn_relu(_conv(d2, params["fuse2"]["w"], 1), params["fuse2"]["bn"])       # 16x16, 2w
+    d1 = _bn_relu(_deconv(d2, params["dec1"]["w"], 2), params["dec1"]["bn"])       # 32x32, w
+    d1 = jnp.concatenate([d1, e1], axis=-1)                                        # 32x32, 2w
+    d1 = _bn_relu(_conv(d1, params["fuse1"]["w"], 1), params["fuse1"]["bn"])       # 32x32, w
+    return _conv(d1, params["head"], 1)                                            # 32x32, C
+
+
+def loss_fn(spec, params, x, y):
+    return common.softmax_xent(forward(spec, params, x), y)
+
+
+def eval_fn(spec, params, x, y):
+    logits = forward(spec, params, x)
+    aux = common.iou_parts(logits, y, spec.n_classes)
+    return aux, common.softmax_xent_sum(logits, y)

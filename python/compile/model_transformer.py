@@ -1,0 +1,129 @@
+"""Decoder-only transformer LM — the end-to-end training workload.
+
+Pre-norm GPT-style blocks: LN -> causal multi-head attention -> residual;
+LN -> MLP (Pallas matmul_fused, GELU) -> residual. Token + learned
+positional embeddings; tied input/output embedding.
+
+Presets scale from CI-sized to the ~100M-parameter class used by the
+`e2e_transformer` example (system requirement: train a real LM for a few
+hundred steps and log the loss curve):
+
+    tiny    V=512   T=32  D=64   L=2  H=2    ~0.1M params
+    small   V=4096  T=64  D=256  L=4  H=4    ~4.3M
+    e2e     V=8192  T=64  D=512  L=6  H=8    ~23M
+    lm100m  V=16384 T=128 D=768  L=12 H=12   ~98M
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .kernels import matmul_fused
+
+
+@dataclass(frozen=True)
+class Spec:
+    vocab: int = 512
+    seq_len: int = 32
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    seed: int = 0
+
+    name: str = "transformer"
+
+    @property
+    def d_head(self):
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def aux_len(self):
+        return 1  # [count_correct_tokens]
+
+    def input_shapes(self, batch):
+        return {"x": (batch, self.seq_len), "y": (batch, self.seq_len)}
+
+    def x_dtype(self):
+        return "i32"
+
+
+PRESETS = {
+    "tiny": Spec(vocab=512, seq_len=32, d_model=64, n_layers=2, n_heads=2),
+    "small": Spec(vocab=2048, seq_len=64, d_model=256, n_layers=4, n_heads=4),
+    "e2e": Spec(vocab=8192, seq_len=64, d_model=512, n_layers=6, n_heads=8),
+    "lm100m": Spec(vocab=16384, seq_len=128, d_model=768, n_layers=12, n_heads=12),
+}
+
+
+def init(spec, key):
+    keys = iter(jax.random.split(key, 16 + 8 * spec.n_layers))
+    d = spec.d_model
+    params = {
+        # 1/sqrt(d) embedding init: with the tied output head the logits
+        # are x @ E^T, and a 0.02-std init leaves them (and the early
+        # gradients) too small for plain SGD+momentum to make progress in
+        # a few hundred steps
+        "embed": common.normal_init(next(keys), (spec.vocab, d), std=d ** -0.5),
+        "pos": common.normal_init(next(keys), (spec.seq_len, d)),
+        "blocks": [],
+        "ln_f": {"scale": jnp.ones((d,), jnp.float32), "offset": jnp.zeros((d,), jnp.float32)},
+    }
+    for _ in range(spec.n_layers):
+        params["blocks"].append({
+            "ln1": {"scale": jnp.ones((d,), jnp.float32), "offset": jnp.zeros((d,), jnp.float32)},
+            "wqkv": common.he_normal(next(keys), (d, 3 * d)),
+            "bqkv": jnp.zeros((3 * d,), jnp.float32),
+            "wo": common.he_normal(next(keys), (d, d)),
+            "bo": jnp.zeros((d,), jnp.float32),
+            "ln2": {"scale": jnp.ones((d,), jnp.float32), "offset": jnp.zeros((d,), jnp.float32)},
+            "w1": common.he_normal(next(keys), (d, 4 * d)),
+            "b1": jnp.zeros((4 * d,), jnp.float32),
+            "w2": common.he_normal(next(keys), (4 * d, d)),
+            "b2": jnp.zeros((d,), jnp.float32),
+        })
+    return params
+
+
+def _attention(spec, p, x):
+    """Causal multi-head self-attention. x: (B, T, D)."""
+    b, t, d = x.shape
+    h, dh = spec.n_heads, spec.d_head
+    x2 = x.reshape(b * t, d)
+    qkv = matmul_fused(x2, p["wqkv"], p["bqkv"], "none").reshape(b, t, 3, h, dh)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]     # (B, T, H, Dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (dh ** 0.5)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(b * t, d)
+    return matmul_fused(ctx, p["wo"], p["bo"], "none").reshape(b, t, d)
+
+
+def _mlp(p, x):
+    b, t, d = x.shape
+    x2 = x.reshape(b * t, d)
+    h = matmul_fused(x2, p["w1"], p["b1"], "gelu")
+    return matmul_fused(h, p["w2"], p["b2"], "none").reshape(b, t, d)
+
+
+def forward(spec, params, tokens):
+    """tokens: (B, T) int32 -> logits (B, T, V)."""
+    x = params["embed"][tokens] + params["pos"][None, :, :]
+    for p in params["blocks"]:
+        x = x + _attention(spec, p, common.layer_norm(x, p["ln1"]["scale"], p["ln1"]["offset"]))
+        x = x + _mlp(p, common.layer_norm(x, p["ln2"]["scale"], p["ln2"]["offset"]))
+    x = common.layer_norm(x, params["ln_f"]["scale"], params["ln_f"]["offset"])
+    return jnp.einsum("btd,vd->btv", x, params["embed"])   # tied head
+
+
+def loss_fn(spec, params, x, y):
+    return common.softmax_xent(forward(spec, params, x), y)
+
+
+def eval_fn(spec, params, x, y):
+    logits = forward(spec, params, x)
+    aux = common.count_correct(logits, y).reshape(1)
+    return aux, common.softmax_xent_sum(logits, y)

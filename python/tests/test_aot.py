@@ -1,0 +1,117 @@
+"""AOT artifact contract tests.
+
+The *numeric* python->HLO->rust round trip is closed by the rust side
+(rust/tests/artifact_parity.rs replays the self-check probes through the
+PJRT loader). Here we validate everything checkable from python: the HLO
+text parses back, entry signatures match the manifest, the self-check
+probe is self-consistent, and regeneration is idempotent.
+"""
+
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import aot, common, model_mlp
+from compile.kernels import staleness_blend
+
+
+def lower_text(fn, *specs):
+    return aot.to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def test_hlo_text_parses_back():
+    """HLO text must survive text -> HloModule -> proto (what the rust
+    crate's from_text path does)."""
+    spec = model_mlp.Spec()
+    n, flat0, grad_fn, _ = common.make_flat_fns(spec, model_mlp)
+    shapes = spec.input_shapes(8)
+    text = lower_text(
+        grad_fn,
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct(shapes["x"], jnp.float32),
+        jax.ShapeDtypeStruct(shapes["y"], jnp.int32),
+    )
+    assert "ENTRY" in text
+    mod = xc._xla.hlo_module_from_text(text)
+    proto = mod.as_serialized_hlo_module_proto()
+    assert len(proto) > 0
+    # text must mention the expected parameter shapes
+    assert f"f32[{n}]" in text
+    assert "f32[8,32]" in text
+
+
+def run_aot_main(tmp_path, *extra):
+    argv = sys.argv
+    sys.argv = ["aot", "--out", str(tmp_path), "--models", "mlp", *extra]
+    try:
+        aot.ARGS = None
+        aot.main()
+    finally:
+        sys.argv = argv
+
+
+def test_manifest_written_and_consistent(tmp_path):
+    run_aot_main(tmp_path, "--force")
+
+    with open(tmp_path / "manifest.json") as f:
+        manifest = json.load(f)
+    entry = manifest["models"]["mlp"]
+    for kind in ("grad", "update", "eval", "blend", "avg"):
+        path = tmp_path / entry["files"][kind]
+        assert path.exists() and path.stat().st_size > 0
+    init = np.fromfile(tmp_path / entry["init"], dtype="<f4")
+    assert init.shape[0] == entry["n_params"]
+    assert np.isfinite(init).all()
+
+    sc = entry["selfcheck"]
+    x = np.fromfile(tmp_path / sc["probe_x"], dtype="<f4")
+    y = np.fromfile(tmp_path / sc["probe_y"], dtype="<i4")
+    assert x.size == np.prod(entry["x_shape"])
+    assert y.size == np.prod(entry["y_shape"])
+    assert np.isfinite(sc["loss"]) and sc["grad_l2"] > 0
+    assert len(sc["grad_head"]) == 8
+    assert len(sc["aux"]) == entry["aux_len"]
+
+
+def test_selfcheck_probe_reproducible(tmp_path):
+    """Replaying the probe through jax must reproduce the stored outputs."""
+    run_aot_main(tmp_path, "--force")
+    with open(tmp_path / "manifest.json") as f:
+        entry = json.load(f)["models"]["mlp"]
+    sc = entry["selfcheck"]
+
+    spec = model_mlp.Spec(seed=entry["hyper"]["seed"])
+    n, flat0, grad_fn, eval_fn = common.make_flat_fns(spec, model_mlp)
+    x = np.fromfile(tmp_path / sc["probe_x"], dtype="<f4").reshape(entry["x_shape"])
+    y = np.fromfile(tmp_path / sc["probe_y"], dtype="<i4").reshape(entry["y_shape"])
+
+    loss, g = jax.jit(grad_fn)(flat0, x, y)
+    aux, loss_sum = jax.jit(eval_fn)(flat0, x, y)
+    np.testing.assert_allclose(float(loss[0]), sc["loss"], rtol=1e-5)
+    np.testing.assert_allclose(float(jnp.linalg.norm(g)), sc["grad_l2"], rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(g[:8]), sc["grad_head"], rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(aux), sc["aux"], rtol=1e-5)
+
+
+def test_aot_idempotent(tmp_path):
+    """Second run with identical config must be a fingerprint-hit no-op."""
+    run_aot_main(tmp_path, "--force")
+    with open(tmp_path / "manifest.json") as f:
+        entry = json.load(f)["models"]["mlp"]
+    target = tmp_path / entry["files"]["grad"]
+    mtime = target.stat().st_mtime_ns
+    run_aot_main(tmp_path)
+    assert target.stat().st_mtime_ns == mtime
+
+
+def test_scalar_convention_is_rank1():
+    """All scalars cross the boundary as f32[1] (DESIGN.md contract)."""
+    n = 64
+    s = jax.ShapeDtypeStruct((n,), jnp.float32)
+    s1 = jax.ShapeDtypeStruct((1,), jnp.float32)
+    text = lower_text(staleness_blend, s, s, s1, s1)
+    assert text.count("f32[1]") >= 2

@@ -1,0 +1,221 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against ref.py.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against the pure-jnp
+reference is THE correctness signal for L1 (the same kernels are baked
+into every HLO artifact the rust runtime executes).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+ACTS = ["none", "relu", "gelu"]
+F_DTYPES = [np.float32, jnp.bfloat16]
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def tol_for(dtype):
+    # bf16 has ~8 bits of mantissa; accumulation is f32 in both kernel+ref.
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# matmul_fused
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    act=st.sampled_from(ACTS),
+    blocks=st.sampled_from([(8, 8, 8), (16, 32, 16), (128, 128, 128)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_fused_shapes(m, k, n, act, blocks, seed):
+    r = rng(seed)
+    x = r.standard_normal((m, k)).astype(np.float32)
+    w = r.standard_normal((k, n)).astype(np.float32)
+    b = r.standard_normal((n,)).astype(np.float32)
+    bm, bk, bn = blocks
+    out = kernels.matmul_fused(x, w, b, act, bm, bk, bn)
+    expect = ref.matmul_fused_ref(x, w, b, act)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", F_DTYPES)
+@pytest.mark.parametrize("act", ACTS)
+def test_matmul_fused_dtypes(dtype, act):
+    r = rng(7)
+    x = jnp.asarray(r.standard_normal((33, 47)), dtype=dtype)
+    w = jnp.asarray(r.standard_normal((47, 21)), dtype=dtype)
+    b = jnp.asarray(r.standard_normal((21,)), dtype=dtype)
+    out = kernels.matmul_fused(x, w, b, act, 16, 16, 16)
+    expect = ref.matmul_fused_ref(x, w, b, act)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), **tol_for(dtype))
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_matmul_fused_vjp_matches_ref(act):
+    r = rng(11)
+    x = r.standard_normal((19, 23)).astype(np.float32)
+    w = r.standard_normal((23, 17)).astype(np.float32)
+    b = r.standard_normal((17,)).astype(np.float32)
+    dy = r.standard_normal((19, 17)).astype(np.float32)
+
+    def f(x, w, b):
+        return jnp.vdot(kernels.matmul_fused(x, w, b, act, 8, 8, 8), dy)
+
+    def f_ref(x, w, b):
+        return jnp.vdot(ref.matmul_fused_ref(x, w, b, act), dy)
+
+    g = jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(g, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(e), rtol=1e-3, atol=1e-3)
+
+
+def test_mm_raw_matches_matmul():
+    r = rng(3)
+    x = r.standard_normal((50, 64)).astype(np.float32)
+    w = r.standard_normal((64, 40)).astype(np.float32)
+    out = kernels.mm_raw(x, w, bm=16, bk=16, bn=16)
+    np.testing.assert_allclose(np.asarray(out), x @ w, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_fused_jit_compatible():
+    r = rng(5)
+    x = r.standard_normal((16, 16)).astype(np.float32)
+    w = r.standard_normal((16, 16)).astype(np.float32)
+    b = r.standard_normal((16,)).astype(np.float32)
+    f = jax.jit(lambda x, w, b: kernels.matmul_fused(x, w, b, "relu"))
+    np.testing.assert_allclose(
+        np.asarray(f(x, w, b)),
+        np.asarray(ref.matmul_fused_ref(x, w, b, "relu")),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused_sgd
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 300_000),
+    lr=st.floats(1e-5, 1.0),
+    mu=st.sampled_from([0.0, 0.5, 0.9, 0.99]),
+    wd=st.sampled_from([0.0, 1e-4, 1e-2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_sgd_matches_ref(n, lr, mu, wd, seed):
+    r = rng(seed)
+    p = r.standard_normal(n).astype(np.float32)
+    m = r.standard_normal(n).astype(np.float32)
+    g = r.standard_normal(n).astype(np.float32)
+    lr_arr = np.array([lr], np.float32)
+    p1, m1 = kernels.fused_sgd(p, m, g, lr_arr, mu=mu, wd=wd)
+    p2, m2 = ref.fused_sgd_ref(p, m, g, np.float32(lr), mu=mu, wd=wd)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-5, atol=1e-6)
+
+
+def test_fused_sgd_zero_grad_zero_momentum_is_identity():
+    p = np.linspace(-1, 1, 1000).astype(np.float32)
+    z = np.zeros_like(p)
+    p1, m1 = kernels.fused_sgd(p, z, z, np.array([0.1], np.float32), mu=0.9, wd=0.0)
+    np.testing.assert_array_equal(np.asarray(p1), p)
+    np.testing.assert_array_equal(np.asarray(m1), z)
+
+
+def test_fused_sgd_small_block_tiling():
+    r = rng(13)
+    n = 1031  # prime: exercises padding
+    p = r.standard_normal(n).astype(np.float32)
+    m = r.standard_normal(n).astype(np.float32)
+    g = r.standard_normal(n).astype(np.float32)
+    lr = np.array([0.05], np.float32)
+    p1, m1 = kernels.fused_sgd(p, m, g, lr, mu=0.9, wd=1e-4, block=128)
+    p2, m2 = ref.fused_sgd_ref(p, m, g, lr[0], mu=0.9, wd=1e-4)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# staleness_blend (DASO Eq. 1)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 300_000),
+    s=st.integers(1, 64),
+    p=st.integers(1, 1024),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_staleness_blend_matches_ref(n, s, p, seed):
+    r = rng(seed)
+    xl = r.standard_normal(n).astype(np.float32)
+    gs = r.standard_normal(n).astype(np.float32)
+    s_arr = np.array([s], np.float32)
+    p_arr = np.array([p], np.float32)
+    out = kernels.staleness_blend(xl, gs, s_arr, p_arr)
+    expect = ref.staleness_blend_ref(xl, gs, np.float32(s), np.float32(p))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-6)
+
+
+def test_staleness_blend_consensus_fixed_point():
+    """If every replica already agrees, the blend is a no-op (Eq. 1 with
+    global_sum = P * x_local must return x_local)."""
+    x = np.linspace(-2, 2, 5000).astype(np.float32)
+    p = 16
+    out = kernels.staleness_blend(
+        x, p * x, np.array([4.0], np.float32), np.array([float(p)], np.float32)
+    )
+    np.testing.assert_allclose(np.asarray(out), x, rtol=1e-5, atol=1e-6)
+
+
+def test_staleness_blend_weights_sum_to_one():
+    """Blend of constant vectors c_l and c_g (summed) is a convex combo."""
+    n, s, p = 1000, 3.0, 8.0
+    xl = np.full(n, 5.0, np.float32)
+    gs = np.full(n, 8.0 * 2.0, np.float32)  # every global replica at 2.0
+    out = kernels.staleness_blend(
+        xl, gs, np.array([s], np.float32), np.array([p], np.float32)
+    )
+    expect = (2 * s * 5.0 + p * 2.0) / (2 * s + p)
+    np.testing.assert_allclose(np.asarray(out), np.full(n, expect, np.float32), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# local_avg
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    g=st.integers(1, 8),
+    n=st.integers(1, 200_000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_local_avg_matches_ref(g, n, seed):
+    r = rng(seed)
+    st_ = r.standard_normal((g, n)).astype(np.float32)
+    out = kernels.local_avg(st_)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.local_avg_ref(st_)), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_local_avg_identical_rows():
+    row = np.arange(10_000, dtype=np.float32)
+    stacked = np.stack([row] * 4)
+    np.testing.assert_allclose(np.asarray(kernels.local_avg(stacked)), row, rtol=1e-6)

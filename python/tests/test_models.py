@@ -1,0 +1,137 @@
+"""L2 model sanity: shapes, loss/grad finiteness, learning on toy data,
+and the flat-vector plumbing used by every artifact."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import (
+    common,
+    model_mlp,
+    model_resnet,
+    model_segnet,
+    model_transformer,
+)
+from compile.kernels import fused_sgd
+
+CASES = [
+    ("mlp", model_mlp, model_mlp.Spec(), 16),
+    ("resnet", model_resnet, model_resnet.Spec(), 4),
+    ("segnet", model_segnet, model_segnet.Spec(), 2),
+    ("transformer", model_transformer, model_transformer.PRESETS["tiny"], 4),
+]
+
+
+def make_batch(spec, batch, seed=0):
+    r = np.random.default_rng(seed)
+    shapes = spec.input_shapes(batch)
+    if spec.x_dtype() == "i32":
+        x = r.integers(0, spec.vocab, shapes["x"]).astype(np.int32)
+    else:
+        x = r.standard_normal(shapes["x"]).astype(np.float32)
+    if hasattr(spec, "n_classes"):
+        hi = spec.n_classes
+    else:
+        hi = spec.vocab
+    y = r.integers(0, hi, shapes["y"]).astype(np.int32)
+    return x, y
+
+
+@pytest.mark.parametrize("name,module,spec,batch", CASES, ids=[c[0] for c in CASES])
+def test_flat_grad_shapes_and_finiteness(name, module, spec, batch):
+    n, flat0, grad_fn, eval_fn = common.make_flat_fns(spec, module)
+    x, y = make_batch(spec, batch)
+    loss, g = jax.jit(grad_fn)(flat0, x, y)
+    assert loss.shape == (1,)
+    assert g.shape == (n,)
+    assert np.isfinite(np.asarray(loss)).all()
+    assert np.isfinite(np.asarray(g)).all()
+    # cross-entropy at init should be near log(C)
+    n_cls = spec.n_classes if hasattr(spec, "n_classes") else spec.vocab
+    assert float(loss[0]) < 3.0 * np.log(n_cls) + 1.0
+
+
+@pytest.mark.parametrize("name,module,spec,batch", CASES, ids=[c[0] for c in CASES])
+def test_eval_outputs(name, module, spec, batch):
+    n, flat0, grad_fn, eval_fn = common.make_flat_fns(spec, module)
+    x, y = make_batch(spec, batch)
+    aux, loss_sum = jax.jit(eval_fn)(flat0, x, y)
+    assert aux.shape == (spec.aux_len,)
+    assert loss_sum.shape == (1,)
+    assert np.isfinite(np.asarray(aux)).all()
+    if spec.aux_len == 1:
+        # a correct-count is bounded by the number of predictions
+        total = np.prod(spec.input_shapes(batch)["y"])
+        assert 0.0 <= float(aux[0]) <= total
+    else:
+        inter = np.asarray(aux[: spec.n_classes])
+        union = np.asarray(aux[spec.n_classes:])
+        assert (inter >= 0).all() and (union >= inter - 1e-5).all()
+
+
+@pytest.mark.parametrize("name,module,spec,batch", [CASES[0], CASES[3]],
+                         ids=["mlp", "transformer"])
+def test_sgd_steps_reduce_loss(name, module, spec, batch):
+    """A few fused-SGD steps on a fixed batch must reduce the loss."""
+    n, flat, grad_fn, _ = common.make_flat_fns(spec, module)
+    x, y = make_batch(spec, batch)
+    grad_jit = jax.jit(grad_fn)
+    mom = jnp.zeros_like(flat)
+    lr = jnp.array([0.1 if name == "mlp" else 0.05], jnp.float32)
+    loss0 = float(grad_jit(flat, x, y)[0][0])
+    for _ in range(10):
+        loss, g = grad_jit(flat, x, y)
+        flat, mom = fused_sgd(flat, mom, g, lr, mu=0.9, wd=0.0)
+    loss1 = float(grad_jit(flat, x, y)[0][0])
+    assert loss1 < loss0, (loss0, loss1)
+
+
+def test_segnet_iou_parts_of_perfect_prediction():
+    """If labels are derived from the model's own argmax, IOU parts give
+    intersection == union for present classes."""
+    spec = model_segnet.Spec()
+    n, flat, _, eval_fn = common.make_flat_fns(spec, model_segnet)
+    x, _ = make_batch(spec, 2)
+    params = None  # not needed: use logits->argmax as labels
+    logits = model_segnet.forward(
+        spec, common.flatten_params(model_segnet.init(spec, jax.random.PRNGKey(0)))[1](flat), x
+    )
+    y = np.asarray(jnp.argmax(logits, -1), np.int32)
+    aux, _ = jax.jit(eval_fn)(flat, x, y)
+    inter = np.asarray(aux[: spec.n_classes])
+    union = np.asarray(aux[spec.n_classes:])
+    np.testing.assert_allclose(inter, union)
+
+
+def test_transformer_causality():
+    """Changing a future token must not affect past logits."""
+    spec = model_transformer.PRESETS["tiny"]
+    params = model_transformer.init(spec, jax.random.PRNGKey(0))
+    r = np.random.default_rng(0)
+    t = spec.seq_len
+    x1 = r.integers(0, spec.vocab, (1, t)).astype(np.int32)
+    x2 = x1.copy()
+    x2[0, -1] = (x2[0, -1] + 1) % spec.vocab
+    l1 = np.asarray(model_transformer.forward(spec, params, x1))
+    l2 = np.asarray(model_transformer.forward(spec, params, x2))
+    np.testing.assert_allclose(l1[0, : t - 1], l2[0, : t - 1], rtol=1e-4, atol=1e-4)
+    assert not np.allclose(l1[0, -1], l2[0, -1])
+
+
+def test_flatten_roundtrip():
+    spec = model_mlp.Spec()
+    params = model_mlp.init(spec, jax.random.PRNGKey(0))
+    flat, unravel = common.flatten_params(params)
+    rebuilt = unravel(flat)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(params[k]), np.asarray(rebuilt[k]))
+
+
+def test_transformer_presets_param_counts():
+    """Preset sizes must be in the advertised ballpark (see module doc)."""
+    expected = {"tiny": (5e4, 5e5), "small": (2e6, 8e6)}
+    for name, (lo, hi) in expected.items():
+        spec = model_transformer.PRESETS[name]
+        n, *_ = common.make_flat_fns(spec, model_transformer)
+        assert lo < n < hi, (name, n)

@@ -1,0 +1,70 @@
+"""Tile-regime equivalence: the CPU-interpret fast path (single-tile
+BlockSpecs, used for artifact lowering) must be numerically identical to
+the TPU-shaped 128-tile default the kernels are validated with."""
+
+import numpy as np
+import pytest
+
+from compile import kernels
+from compile.kernels import ref, tiles
+
+
+@pytest.fixture(autouse=True)
+def restore_tiles():
+    yield
+    tiles.set_tpu_shaped()
+
+
+def test_matmul_identical_across_regimes():
+    r = np.random.default_rng(0)
+    x = r.standard_normal((130, 70)).astype(np.float32)
+    w = r.standard_normal((70, 150)).astype(np.float32)
+    b = r.standard_normal((150,)).astype(np.float32)
+
+    tiles.set_tpu_shaped()
+    tpu = np.asarray(kernels.matmul_fused(x, w, b, "gelu"))
+    tiles.set_interpret_fast()
+    fast = np.asarray(kernels.matmul_fused(x, w, b, "gelu"))
+    np.testing.assert_allclose(tpu, fast, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(fast, ref.matmul_fused_ref(x, w, b, "gelu"),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_vector_kernels_identical_across_regimes():
+    r = np.random.default_rng(1)
+    n = 200_001
+    p = r.standard_normal(n).astype(np.float32)
+    m = r.standard_normal(n).astype(np.float32)
+    g = r.standard_normal(n).astype(np.float32)
+    lr = np.array([0.05], np.float32)
+
+    tiles.set_tpu_shaped()
+    p1, m1 = kernels.fused_sgd(p, m, g, lr, mu=0.9, wd=1e-4)
+    b1 = kernels.staleness_blend(p, g, np.array([2.0], np.float32),
+                                 np.array([8.0], np.float32))
+    tiles.set_interpret_fast()
+    p2, m2 = kernels.fused_sgd(p, m, g, lr, mu=0.9, wd=1e-4)
+    b2 = kernels.staleness_blend(p, g, np.array([2.0], np.float32),
+                                 np.array([8.0], np.float32))
+
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+
+def test_local_avg_identical_across_regimes():
+    r = np.random.default_rng(2)
+    st = r.standard_normal((4, 123_457)).astype(np.float32)
+    tiles.set_tpu_shaped()
+    a = np.asarray(kernels.local_avg(st))
+    tiles.set_interpret_fast()
+    b = np.asarray(kernels.local_avg(st))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_regime_switch_roundtrip():
+    tiles.set_interpret_fast()
+    assert tiles.MM_TILES[0] > 1 << 20
+    tiles.set_tpu_shaped()
+    assert tiles.MM_TILES == (128, 128, 128)
+    assert tiles.VEC_BLOCK == 64 * 1024

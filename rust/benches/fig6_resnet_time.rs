@@ -1,0 +1,38 @@
+//! Bench: regenerate paper Fig. 6 — ResNet-50/ImageNet strong-scaling
+//! training time (DASO vs Horovod), 4-64 nodes x 4 GPUs.
+//! `cargo bench --bench fig6_resnet_time`
+
+use daso::comm::Fabric;
+use daso::figures::print_scaling;
+use daso::simtime::{project_daso, project_horovod, scaling_table, Workload};
+
+fn main() {
+    let w = Workload::resnet50_imagenet();
+    let fabric = Fabric::juwels_like();
+    let rows = scaling_table(&w, &[4, 8, 16, 32, 64], 4, &fabric);
+    print_scaling("Fig. 6 — ResNet-50/ImageNet training time (projected)", &rows);
+
+    // comm-fraction detail (not in the paper's figure, but explains it)
+    println!("per-batch communication fraction:");
+    for nodes in [4usize, 16, 64] {
+        let d = project_daso(&w, nodes, 4, &fabric);
+        let h = project_horovod(&w, nodes, 4, &fabric);
+        println!(
+            "  nodes={nodes:>2}: daso {:.1}%  horovod {:.1}%",
+            100.0 * d.comm_fraction,
+            100.0 * h.comm_fraction
+        );
+    }
+
+    // paper-shape assertions (who wins, roughly by how much)
+    for r in &rows {
+        assert!(r.daso_s < r.horovod_s, "DASO must win at {} nodes", r.nodes);
+        assert!(
+            (0.05..0.45).contains(&r.savings),
+            "savings {:.3} out of the paper band at {} nodes",
+            r.savings,
+            r.nodes
+        );
+    }
+    println!("fig6 bench OK (paper: DASO up to ~25% less training time)");
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerate paper Fig. 7 — top-1 accuracy vs GPU count for the
+//! (scaled) ResNet classification workload, DASO vs Horovod, trained for
+//! real through the full stack.
+//!
+//! `cargo bench --bench fig7_resnet_accuracy` (quick sweep)
+//! `DASO_BENCH_FULL=1 cargo bench --bench fig7_resnet_accuracy` (full)
+
+use daso::figures::{fig7, print_accuracy};
+use daso::runtime::Engine;
+
+fn main() {
+    let engine = match Engine::load("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e:#}) — run `make artifacts`");
+            return;
+        }
+    };
+    let quick = std::env::var("DASO_BENCH_FULL").is_err();
+    eprintln!("fig7: training ({}) ...", if quick { "quick" } else { "full" });
+    let rows = fig7(&engine, quick).expect("fig7 runs");
+    print_accuracy("Fig. 7 — ResNet top-1 accuracy vs scale", "top-1", &rows);
+
+    // paper shape: similar accuracy at moderate scale; degradation with
+    // growing effective batch (fixed per-GPU batch, fixed dataset)
+    for r in &rows {
+        assert!(
+            (r.daso.best_metric - r.horovod.best_metric).abs() < 0.25,
+            "accuracy divergence at {} nodes",
+            r.nodes
+        );
+    }
+    if rows.len() >= 2 {
+        let first = &rows[0];
+        let last = &rows[rows.len() - 1];
+        assert!(
+            last.daso.best_metric <= first.daso.best_metric + 0.05,
+            "accuracy should not improve with scale at fixed epochs"
+        );
+    }
+    println!("fig7 bench OK");
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate paper Fig. 8 — HRNet/CityScapes strong-scaling
+//! training time (DASO vs Horovod), 4-64 nodes x 4 GPUs.
+//! `cargo bench --bench fig8_segnet_time`
+
+use daso::comm::Fabric;
+use daso::figures::print_scaling;
+use daso::simtime::{scaling_table, Workload};
+
+fn main() {
+    let w = Workload::hrnet_cityscapes();
+    let rows = scaling_table(&w, &[4, 8, 16, 32, 64], 4, &Fabric::juwels_like());
+    print_scaling("Fig. 8 — HRNet/CityScapes training time (projected)", &rows);
+
+    for r in &rows {
+        assert!(r.daso_s < r.horovod_s, "DASO must win at {} nodes", r.nodes);
+        assert!(
+            (0.15..0.50).contains(&r.savings),
+            "savings {:.3} out of the paper band at {} nodes",
+            r.savings,
+            r.nodes
+        );
+    }
+    println!("fig8 bench OK (paper: ~35% less time, ~30% at 256 GPUs)");
+}

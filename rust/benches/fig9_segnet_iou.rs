@@ -1,0 +1,27 @@
+//! Bench: regenerate paper Fig. 9 — mean IOU vs GPU count for the
+//! (scaled) segmentation workload, DASO vs Horovod, trained for real.
+//!
+//! `cargo bench --bench fig9_segnet_iou` (quick sweep)
+//! `DASO_BENCH_FULL=1 cargo bench --bench fig9_segnet_iou` (full)
+
+use daso::figures::{fig9, print_accuracy};
+use daso::runtime::Engine;
+
+fn main() {
+    let engine = match Engine::load("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e:#}) — run `make artifacts`");
+            return;
+        }
+    };
+    let quick = std::env::var("DASO_BENCH_FULL").is_err();
+    eprintln!("fig9: training ({}) ...", if quick { "quick" } else { "full" });
+    let rows = fig9(&engine, quick).expect("fig9 runs");
+    print_accuracy("Fig. 9 — segnet mean IOU vs scale", "IOU", &rows);
+
+    for r in &rows {
+        assert!(r.daso.best_metric > 0.15, "segnet failed at {} nodes", r.nodes);
+    }
+    println!("fig9 bench OK");
+}

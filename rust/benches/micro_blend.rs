@@ -1,0 +1,60 @@
+//! Micro-bench: wire packaging (bf16/f16 round trips) and the Eq.-1
+//! blend, host vs kernel — quantifies the packaging cost the paper says
+//! makes casting counterproductive for non-blocking syncs.
+//! `cargo bench --bench micro_blend`
+
+use daso::bench_support::Bench;
+use daso::runtime::Engine;
+use daso::util::half::{roundtrip_bf16, roundtrip_f16};
+use daso::util::rng::Rng;
+
+fn main() {
+    let bench = Bench::new(2, 10);
+    let mut rng = Rng::new(5);
+
+    println!("== wire packaging ==");
+    for &len in &[1_000_000usize, 10_000_000] {
+        let mut base = vec![0.0f32; len];
+        rng.fill_normal(&mut base, 1.0);
+        bench.run(&format!("bf16 roundtrip n={len}"), || {
+            let mut b = base.clone();
+            roundtrip_bf16(&mut b);
+            std::hint::black_box(&b);
+        });
+        bench.run(&format!("f16 roundtrip n={len}"), || {
+            let mut b = base.clone();
+            roundtrip_f16(&mut b);
+            std::hint::black_box(&b);
+        });
+    }
+
+    println!("== Eq.-1 blend: host vs Pallas-kernel artifact ==");
+    // host closed form at 1M params
+    let len = 1_000_000;
+    let mut x = vec![0.0f32; len];
+    let mut gsum = vec![0.0f32; len];
+    rng.fill_normal(&mut x, 1.0);
+    rng.fill_normal(&mut gsum, 2.0);
+    let (s, p) = (4.0f32, 16.0f32);
+    bench.run("blend host n=1M", || {
+        let out: Vec<f32> = x
+            .iter()
+            .zip(&gsum)
+            .map(|(xl, gs)| (2.0 * s * xl + gs) / (2.0 * s + p))
+            .collect();
+        std::hint::black_box(out);
+    });
+
+    if let Ok(engine) = Engine::load("artifacts") {
+        let rt = engine.model("transformer").unwrap();
+        let n = rt.spec.n_params;
+        let params = rt.init_params().unwrap();
+        let gsum: Vec<f32> = params.iter().map(|v| v * p).collect();
+        bench.run(&format!("blend kernel n={n}"), || {
+            std::hint::black_box(rt.blend(&params, &gsum, s, p).unwrap());
+        });
+    } else {
+        eprintln!("(artifacts not built; kernel blend skipped)");
+    }
+    println!("micro_blend OK");
+}

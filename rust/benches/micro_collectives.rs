@@ -1,0 +1,53 @@
+//! Micro-bench: the real-buffer collectives (the hot path of every
+//! simulated synchronization step) across buffer sizes and wire formats.
+//! `cargo bench --bench micro_collectives`
+
+use daso::bench_support::Bench;
+use daso::comm::{naive_mean, ring_allreduce_mean, sum_buffers, Wire};
+use daso::util::rng::Rng;
+
+fn make_bufs(n_participants: usize, len: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(1);
+    (0..n_participants)
+        .map(|_| {
+            let mut v = vec![0.0f32; len];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== collectives micro-bench ==");
+    let bench = Bench::new(2, 8);
+
+    for &len in &[100_000usize, 1_000_000, 4_000_000] {
+        for &parts in &[4usize, 8] {
+            for wire in [Wire::F32, Wire::F16, Wire::Bf16] {
+                let base = make_bufs(parts, len);
+                bench.run(
+                    &format!("ring_allreduce p={parts} n={len} {wire:?}"),
+                    || {
+                        let mut bufs = base.clone();
+                        let mut refs: Vec<&mut Vec<f32>> = bufs.iter_mut().collect();
+                        ring_allreduce_mean(&mut refs, wire);
+                        std::hint::black_box(&bufs);
+                    },
+                );
+            }
+        }
+    }
+
+    for &len in &[1_000_000usize, 4_000_000] {
+        let base = make_bufs(4, len);
+        bench.run(&format!("naive_mean p=4 n={len}"), || {
+            let refs: Vec<&Vec<f32>> = base.iter().collect();
+            std::hint::black_box(naive_mean(&refs));
+        });
+        bench.run(&format!("sum_buffers p=4 n={len}"), || {
+            let refs: Vec<&Vec<f32>> = base.iter().collect();
+            std::hint::black_box(sum_buffers(&refs));
+        });
+    }
+    println!("micro_collectives OK");
+}

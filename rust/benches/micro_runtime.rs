@@ -1,0 +1,55 @@
+//! Micro-bench: PJRT executable latency per artifact kind and model —
+//! the per-step cost floor of the whole system (L3's hot path is
+//! grad -> avg -> update [-> blend]).
+//! `cargo bench --bench micro_runtime`
+
+use daso::bench_support::Bench;
+use daso::runtime::Engine;
+use daso::util::rng::Rng;
+
+fn main() {
+    let engine = match Engine::load("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e:#}) — run `make artifacts`");
+            return;
+        }
+    };
+    println!("== runtime micro-bench ({}) ==", engine.platform());
+    let bench = Bench::new(2, 8);
+    let mut rng = Rng::new(3);
+
+    for name in engine.manifest.models.keys().cloned().collect::<Vec<_>>() {
+        let rt = engine.model(&name).unwrap();
+        let n = rt.spec.n_params;
+        let params = rt.init_params().unwrap();
+        let (x, y) = rt.probe_batch().unwrap();
+
+        bench.run(&format!("{name}/grad (n={n})"), || {
+            std::hint::black_box(rt.grad(&params, &x, &y).unwrap());
+        });
+        bench.run(&format!("{name}/eval"), || {
+            std::hint::black_box(rt.eval(&params, &x, &y).unwrap());
+        });
+
+        let mut p = params.clone();
+        let mut m = vec![0.0f32; n];
+        let mut g = vec![0.0f32; n];
+        rng.fill_normal(&mut g, 0.01);
+        bench.run(&format!("{name}/update (fused SGD)"), || {
+            rt.update(&mut p, &mut m, &g, 1e-3).unwrap();
+        });
+
+        let gsum: Vec<f32> = params.iter().map(|v| v * 4.0).collect();
+        bench.run(&format!("{name}/blend (Eq. 1)"), || {
+            std::hint::black_box(rt.blend(&params, &gsum, 1.0, 4.0).unwrap());
+        });
+
+        let gpn = rt.gpus_per_node;
+        let stacked: Vec<f32> = (0..gpn).flat_map(|_| params.clone()).collect();
+        bench.run(&format!("{name}/avg (local, G={gpn})"), || {
+            std::hint::black_box(rt.avg(&stacked).unwrap());
+        });
+    }
+    println!("micro_runtime OK");
+}

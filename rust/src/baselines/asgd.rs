@@ -1,0 +1,86 @@
+//! Asynchronous-SGD parameter-server baseline (paper section 2 related
+//! work): every worker pushes its gradients to a central server, which
+//! applies them immediately; workers then pull the new parameters.
+//! Because pushes are applied sequentially while other workers are still
+//! computing on older pulls, gradients are *stale* — the classic ASGD
+//! trade-off DASO's Eq. (1) is designed to tame in a different regime.
+
+use anyhow::Result;
+
+use crate::trainer::strategy::{CommStats, StepCtx, Strategy};
+
+pub struct AsgdServer {
+    params: Option<Vec<f32>>,
+    momentum: Option<Vec<f32>>,
+    /// how many updates the server has applied
+    pub server_steps: u64,
+    stats: CommStats,
+}
+
+impl AsgdServer {
+    pub fn new() -> Self {
+        Self { params: None, momentum: None, server_steps: 0, stats: CommStats::default() }
+    }
+}
+
+impl Default for AsgdServer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Strategy for AsgdServer {
+    fn name(&self) -> &'static str {
+        "asgd"
+    }
+
+    fn apply(&mut self, ctx: &mut StepCtx) -> Result<()> {
+        let n = ctx.rt.spec.n_params;
+        let bytes = n * 4;
+        // lazily adopt worker 0's initial state as the server state
+        if self.params.is_none() {
+            self.params = Some(ctx.cluster.workers[0].params.clone());
+            self.momentum = Some(vec![0.0; n]);
+        }
+        let params = self.params.as_mut().unwrap();
+        let momentum = self.momentum.as_mut().unwrap();
+        // the server applies `world` updates per round (vs one averaged
+        // update for synchronous training): scale the step down so the
+        // effective per-round learning rate matches — standard ASGD
+        // practice, without which training diverges at the paper's LRs
+        let lr = ctx.lr / ctx.cluster.world() as f32;
+
+        // the server's NIC serializes: each push+pull queues behind the
+        // previous one — the central bottleneck ASGD papers fight
+        let link = &ctx.fabric.inter;
+        let mut server_free_at: f64 = 0.0;
+        for w in 0..ctx.cluster.world() {
+            // worker w's grads were computed on the params it pulled last
+            // round — they are stale by however many pushes happened since
+            ctx.rt.update(params, momentum, &ctx.grads[w], lr)?;
+            self.server_steps += 1;
+
+            let worker = &mut ctx.cluster.workers[w];
+            let push_pull = 2.0 * link.transfer_time(bytes);
+            let start = worker.clock.max(server_free_at);
+            worker.wait_until(start);
+            worker.advance_clock(push_pull);
+            server_free_at = worker.clock;
+            worker.bytes_sent_inter += 2 * bytes as u64;
+            self.stats.bytes_inter += 2 * bytes as u64;
+
+            // pull: the worker adopts the *current* server state
+            worker.params.copy_from_slice(params);
+        }
+        self.stats.global_syncs += 1;
+        Ok(())
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        self.stats.clone()
+    }
+
+    fn state_desc(&self) -> String {
+        format!("server_steps={}", self.server_steps)
+    }
+}

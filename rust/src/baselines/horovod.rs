@@ -1,0 +1,100 @@
+//! Horovod-like baseline (paper section 4's comparator): fully
+//! synchronous data-parallel training. Every batch, the gradients of all
+//! P GPUs are averaged with one flat ring allreduce, compressed to IEEE
+//! fp16 on the wire, with tensor fusion (bucketing) amortizing latency —
+//! exactly the configuration the paper compares against ("Horovod was
+//! configured to use floating point 16 compression").
+
+use anyhow::Result;
+
+use crate::comm::cost::{cast_time, fused_allreduce_time, DEVICE_MEM_BW};
+use crate::comm::{ring_allreduce_mean, Wire};
+use crate::trainer::strategy::{CommStats, StepCtx, Strategy};
+
+#[derive(Debug, Clone)]
+pub struct HorovodConfig {
+    /// tensor-fusion bucket size (Horovod default: 64 MiB)
+    pub fusion_bucket_bytes: usize,
+    pub wire: Wire,
+}
+
+impl Default for HorovodConfig {
+    fn default() -> Self {
+        Self { fusion_bucket_bytes: 64 << 20, wire: Wire::F16 }
+    }
+}
+
+pub struct Horovod {
+    cfg: HorovodConfig,
+    stats: CommStats,
+}
+
+impl Horovod {
+    pub fn new(cfg: HorovodConfig) -> Self {
+        Self { cfg, stats: CommStats::default() }
+    }
+}
+
+impl Strategy for Horovod {
+    fn name(&self) -> &'static str {
+        "horovod"
+    }
+
+    fn apply(&mut self, ctx: &mut StepCtx) -> Result<()> {
+        let world = ctx.cluster.world();
+        let n = ctx.rt.spec.n_params;
+        let wire_bytes = n * self.cfg.wire.bytes_per_elem();
+
+        if world > 1 {
+            // blocking collective: everyone waits for the slowest
+            let before = ctx.cluster.makespan();
+            ctx.cluster.barrier();
+            let mut bufs: Vec<&mut Vec<f32>> = ctx.grads.iter_mut().collect();
+            ring_allreduce_mean(&mut bufs, self.cfg.wire);
+
+            // flat ring spans nodes: inter-node tier is the bottleneck
+            // (single-node runs ride the intra tier)
+            let link = if ctx.cluster.topo.nodes > 1 {
+                &ctx.fabric.inter
+            } else {
+                &ctx.fabric.intra
+            };
+            let cast_dt = if self.cfg.wire.bytes_per_elem() < 4 {
+                2.0 * cast_time(n * 4, DEVICE_MEM_BW)
+            } else {
+                0.0
+            };
+            let ring_dt =
+                fused_allreduce_time(world, wire_bytes, self.cfg.fusion_bucket_bytes, link);
+            for w in &mut ctx.cluster.workers {
+                let wait = (before - w.clock).max(0.0);
+                self.stats.comm_wait_s += wait;
+                w.advance_clock(cast_dt + ring_dt);
+                if ctx.cluster.topo.nodes > 1 {
+                    w.bytes_sent_inter += wire_bytes as u64;
+                } else {
+                    w.bytes_sent_intra += wire_bytes as u64;
+                }
+            }
+            self.stats.bytes_inter += (world * wire_bytes) as u64;
+            self.stats.global_syncs += 1;
+            self.stats.blocking_syncs += 1;
+        }
+
+        // local optimizer step with the averaged gradients
+        for w in 0..world {
+            let worker = &mut ctx.cluster.workers[w];
+            ctx.rt
+                .update(&mut worker.params, &mut worker.momentum, &ctx.grads[w], ctx.lr)?;
+        }
+        Ok(())
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        self.stats.clone()
+    }
+
+    fn state_desc(&self) -> String {
+        format!("wire={:?} bucket={}MiB", self.cfg.wire, self.cfg.fusion_bucket_bytes >> 20)
+    }
+}

@@ -1,0 +1,11 @@
+//! Baseline synchronization strategies the paper compares against (or
+//! discusses): Horovod-style synchronous allreduce, an ASGD parameter
+//! server, and no-communication ablations.
+
+pub mod asgd;
+pub mod horovod;
+pub mod serial;
+
+pub use asgd::AsgdServer;
+pub use horovod::{Horovod, HorovodConfig};
+pub use serial::LocalOnly;

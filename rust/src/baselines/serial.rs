@@ -1,0 +1,44 @@
+//! Degenerate strategies used as ground truth and for ablations.
+
+use anyhow::Result;
+
+use crate::trainer::strategy::{CommStats, StepCtx, Strategy};
+
+/// No communication at all: every worker trains its own replica on its
+/// own shard. With world = 1 this is plain serial SGD (the ground-truth
+/// baseline); with world > 1 it is the "no-sync" ablation that shows why
+/// synchronization is needed in the first place.
+pub struct LocalOnly {
+    stats: CommStats,
+}
+
+impl LocalOnly {
+    pub fn new() -> Self {
+        Self { stats: CommStats::default() }
+    }
+}
+
+impl Default for LocalOnly {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Strategy for LocalOnly {
+    fn name(&self) -> &'static str {
+        "local_only"
+    }
+
+    fn apply(&mut self, ctx: &mut StepCtx) -> Result<()> {
+        for w in 0..ctx.cluster.world() {
+            let worker = &mut ctx.cluster.workers[w];
+            ctx.rt
+                .update(&mut worker.params, &mut worker.momentum, &ctx.grads[w], ctx.lr)?;
+        }
+        Ok(())
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        self.stats.clone()
+    }
+}

@@ -1,0 +1,123 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`Bench::run`] for micro measurements (warmup + timed iterations,
+//! mean/p50/p99) and print the paper-figure tables.
+
+use std::time::Instant;
+
+use crate::util::stats::{mean, percentile, std_dev};
+
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<40} {:>8} iters  mean {:>10}  p50 {:>10}  p99 {:>10}  (+/- {:>9})",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p99_s),
+            fmt_time(self.std_s),
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup_iters: 3, iters: 10 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, iters: usize) -> Self {
+        Self { warmup_iters, iters }
+    }
+
+    /// Time `f` over the configured iterations; prints and returns stats.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: mean(&samples),
+            std_s: std_dev(&samples),
+            p50_s: percentile(&samples, 50.0),
+            p99_s: percentile(&samples, 99.0),
+        };
+        println!("{}", result.row());
+        result
+    }
+}
+
+/// Print a markdown-style table (used by the figure benches).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n## {title}\n");
+    println!("| {} |", header.join(" | "));
+    println!("|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for row in rows {
+        println!("| {} |", row.join(" | "));
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bench::new(1, 5);
+        let r = b.run("noop-plus-work", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p99_s >= r.p50_s);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+        assert!(fmt_time(2e-10).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,175 @@
+//! Hand-rolled CLI (clap is unavailable offline).
+//!
+//! `daso <command> [--flag value] [--flag=value] [positional...]`
+//! Commands: train, figures, project, selfcheck, info, help.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, Vec<String>>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (after argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut positional = Vec::new();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else {
+                    // value is the next token unless it's another flag
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            flags.entry(stripped.to_string()).or_default().push(v);
+                        }
+                        _ => {
+                            flags
+                                .entry(stripped.to_string())
+                                .or_default()
+                                .push("true".to_string());
+                        }
+                    }
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Ok(Args { command, flags, positional })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(
+                v.parse::<usize>()
+                    .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}"))?,
+            )),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated usize list, e.g. `--nodes 4,8,16`.
+    pub fn get_usize_list(&self, key: &str) -> Result<Option<Vec<usize>>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                let parsed: Result<Vec<usize>> = v
+                    .split(',')
+                    .map(|p| {
+                        p.trim()
+                            .parse::<usize>()
+                            .map_err(|_| anyhow!("--{key}: bad integer {p:?}"))
+                    })
+                    .collect();
+                Ok(Some(parsed?))
+            }
+        }
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+}
+
+pub const HELP: &str = "\
+daso — DASO (Coquelin et al. 2021) reproduction: hierarchical async/selective
+data-parallel training on a simulated multi-GPU cluster (rust + JAX + Pallas).
+
+USAGE:
+    daso <command> [flags]
+
+COMMANDS:
+    train       run one training job
+                  --model mlp|resnet|segnet|transformer   (default mlp)
+                  --strategy daso|horovod|asgd|local_only (default daso)
+                  --config <file.json>      JSON config (see config module)
+                  --set key=value           override (repeatable)
+                  --out <dir>               write run.csv / run.json
+    sweep       run daso/horovod/asgd/local_only on one model, compare
+                  (same flags as train)
+    figures     regenerate a paper figure
+                  --fig 6|7|8|9   --quick   (7/9 train for real; 6/8 project)
+    project     strong-scaling time projection
+                  --workload resnet50|hrnet --nodes 4,8,16,32,64 --gpn 4
+    selfcheck   replay the python-written probes through the PJRT runtime
+                  --artifacts <dir>         (default artifacts)
+    info        dump the artifact manifest summary
+    help        this text
+";
+
+/// Validate that a command is known (dispatch lives in main.rs).
+pub fn known_command(cmd: &str) -> bool {
+    matches!(
+        cmd,
+        "train" | "sweep" | "figures" | "project" | "selfcheck" | "info" | "help"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_positional() {
+        let a = parse(&["train", "--model", "mlp", "--set", "a=1", "--set=b=2", "extra"]);
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert_eq!(a.get_all("set"), vec!["a=1", "b=2"]);
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse(&["figures", "--quick", "--fig", "6"]);
+        assert!(a.get_bool("quick"));
+        assert_eq!(a.get_usize("fig").unwrap(), Some(6));
+    }
+
+    #[test]
+    fn usize_lists() {
+        let a = parse(&["project", "--nodes", "4,8,16"]);
+        assert_eq!(a.get_usize_list("nodes").unwrap(), Some(vec![4, 8, 16]));
+        let a = parse(&["project", "--nodes", "4,x"]);
+        assert!(a.get_usize_list("nodes").is_err());
+    }
+
+    #[test]
+    fn missing_required() {
+        let a = parse(&["train"]);
+        assert!(a.require("model").is_err());
+    }
+
+    #[test]
+    fn empty_argv_is_help() {
+        let a = Args::parse(std::iter::empty::<String>()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

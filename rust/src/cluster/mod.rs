@@ -1,0 +1,10 @@
+//! Simulated cluster: each "GPU" is a worker owning a private parameter /
+//! momentum buffer and a virtual clock; the real model math runs through
+//! the shared PJRT executables. The physical JUWELS-Booster testbed is
+//! replaced by this substrate (see DESIGN.md "Substitutions") — the
+//! *decisions* (which buffers average when, how many bytes cross which
+//! tier) are identical to the paper's.
+
+pub mod worker;
+
+pub use worker::{ClusterState, Worker};

@@ -1,0 +1,165 @@
+//! Worker (simulated GPU) state and the cluster container.
+
+use anyhow::Result;
+
+use crate::comm::{Rank, Topology};
+use crate::data::shard::Shard;
+use crate::runtime::ModelRuntime;
+
+/// One simulated GPU: a full model replica.
+pub struct Worker {
+    pub rank: Rank,
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+    /// virtual clock (seconds of simulated testbed time)
+    pub clock: f64,
+    /// this worker's iid shard of the training data
+    pub shard: Shard,
+    /// running counters
+    pub batches_done: usize,
+    pub bytes_sent_intra: u64,
+    pub bytes_sent_inter: u64,
+}
+
+impl Worker {
+    pub fn advance_clock(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative clock step {dt}");
+        self.clock += dt;
+    }
+
+    /// Block until `t` (no-op if already past it). Returns the wait time.
+    pub fn wait_until(&mut self, t: f64) -> f64 {
+        let wait = (t - self.clock).max(0.0);
+        self.clock += wait;
+        wait
+    }
+}
+
+/// The cluster: all workers plus the topology they live on.
+pub struct ClusterState {
+    pub topo: Topology,
+    pub workers: Vec<Worker>,
+}
+
+impl ClusterState {
+    /// Spawn `topo.world()` workers, all starting from the artifact's
+    /// initial parameters (identical replicas, paper's DPNN setup), each
+    /// owning an iid shard of `dataset_len` samples.
+    pub fn new(
+        topo: Topology,
+        rt: &ModelRuntime,
+        dataset_len: usize,
+        seed: u64,
+    ) -> Result<ClusterState> {
+        let init = rt.init_params()?;
+        let n = rt.spec.n_params;
+        let workers = (0..topo.world())
+            .map(|g| {
+                let rank = topo.rank_of(g);
+                Worker {
+                    rank,
+                    params: init.clone(),
+                    momentum: vec![0.0; n],
+                    clock: 0.0,
+                    shard: Shard::new(dataset_len, topo.world(), g, seed),
+                    batches_done: 0,
+                    bytes_sent_intra: 0,
+                    bytes_sent_inter: 0,
+                }
+            })
+            .collect();
+        Ok(ClusterState { topo, workers })
+    }
+
+    pub fn world(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Longest virtual clock (the cluster finishes when its slowest GPU
+    /// does — this is the "training time" the figures report).
+    pub fn makespan(&self) -> f64 {
+        self.workers.iter().map(|w| w.clock).fold(0.0, f64::max)
+    }
+
+    /// Synchronize all clocks to the max (a blocking barrier).
+    pub fn barrier(&mut self) {
+        let t = self.makespan();
+        for w in &mut self.workers {
+            w.wait_until(t);
+        }
+    }
+
+    /// Per-node barrier (node-local collectives block only the node).
+    pub fn node_barrier(&mut self, node: usize) {
+        let ranks = self.topo.node_ranks(node);
+        let t = ranks
+            .iter()
+            .map(|&r| self.workers[r].clock)
+            .fold(0.0, f64::max);
+        for r in ranks {
+            self.workers[r].wait_until(t);
+        }
+    }
+
+    /// Barrier across an arbitrary set of ranks (group collectives).
+    pub fn ranks_barrier(&mut self, ranks: &[usize]) {
+        let t = ranks
+            .iter()
+            .map(|&r| self.workers[r].clock)
+            .fold(0.0, f64::max);
+        for &r in ranks {
+            self.workers[r].wait_until(t);
+        }
+    }
+
+    /// Assert the node-identity invariant: workers on the same node hold
+    /// bit-identical parameters (follows from local gradient averaging +
+    /// identical init; checked in tests and debug builds).
+    pub fn check_node_identical(&self) -> bool {
+        for node in 0..self.topo.nodes {
+            let ranks = self.topo.node_ranks(node);
+            let first = &self.workers[ranks[0]].params;
+            for &r in &ranks[1..] {
+                if &self.workers[r].params != first {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn worker(clock: f64) -> Worker {
+        Worker {
+            rank: Rank { global: 0, node: 0, local: 0 },
+            params: vec![],
+            momentum: vec![],
+            clock,
+            shard: Shard::new(10, 1, 0, 0),
+            batches_done: 0,
+            bytes_sent_intra: 0,
+            bytes_sent_inter: 0,
+        }
+    }
+
+    #[test]
+    fn wait_until_only_moves_forward() {
+        let mut w = worker(5.0);
+        assert_eq!(w.wait_until(3.0), 0.0);
+        assert_eq!(w.clock, 5.0);
+        assert_eq!(w.wait_until(7.5), 2.5);
+        assert_eq!(w.clock, 7.5);
+    }
+
+    #[test]
+    fn advance_accumulates() {
+        let mut w = worker(0.0);
+        w.advance_clock(1.0);
+        w.advance_clock(0.5);
+        assert_eq!(w.clock, 1.5);
+    }
+}

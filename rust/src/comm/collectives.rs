@@ -1,0 +1,229 @@
+//! Collectives over real buffers — the NCCL/MPI stand-in.
+//!
+//! These do the actual data movement/averaging between the simulated
+//! GPUs' buffers. The ring allreduce mirrors a real ring numerically
+//! (chunked reduce-scatter + allgather, so the floating-point summation
+//! order matches hardware collectives, not a naive serial sum), and the
+//! wire-format wrappers apply the paper's 16-bit compression exactly.
+
+use crate::util::half;
+
+/// Wire format for a collective (the paper's message packaging).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Wire {
+    F32,
+    /// IEEE fp16 — Horovod's compression choice (section 4).
+    F16,
+    /// bfloat16 — DASO's blocking-sync packaging (section 3).
+    Bf16,
+}
+
+impl Wire {
+    pub fn bytes_per_elem(&self) -> usize {
+        match self {
+            Wire::F32 => 4,
+            Wire::F16 | Wire::Bf16 => 2,
+        }
+    }
+
+    /// Apply the encode/decode round trip this wire format would impose.
+    pub fn quantize(&self, buf: &mut [f32]) {
+        match self {
+            Wire::F32 => {}
+            Wire::F16 => half::roundtrip_f16(buf),
+            Wire::Bf16 => half::roundtrip_bf16(buf),
+        }
+    }
+}
+
+/// Ring allreduce (mean) across the given buffers; every buffer ends up
+/// holding the element-wise mean. Quantizes each participant's
+/// contribution to the wire format once before reduction (NCCL-style
+/// pre-cast), then reduces in f32.
+///
+/// `bufs` is indexed by participant; all must have equal length.
+pub fn ring_allreduce_mean(bufs: &mut [&mut Vec<f32>], wire: Wire) {
+    let n = bufs.len();
+    if n == 0 {
+        return;
+    }
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "length mismatch");
+    if n == 1 {
+        return;
+    }
+
+    for b in bufs.iter_mut() {
+        wire.quantize(b);
+    }
+
+    // reduce-scatter: chunk c is accumulated around the ring, ending
+    // complete on participant (c + n - 1) % n — same dataflow as NCCL.
+    let chunk_bounds: Vec<(usize, usize)> = (0..n)
+        .map(|c| {
+            let lo = c * len / n;
+            let hi = (c + 1) * len / n;
+            (lo, hi)
+        })
+        .collect();
+
+    // scratch reused across all steps: no allocation inside the hot loop
+    let max_chunk = chunk_bounds.iter().map(|(lo, hi)| hi - lo).max().unwrap_or(0);
+    let mut scratch = vec![0.0f32; max_chunk];
+    for step in 0..n - 1 {
+        for r in 0..n {
+            // participant r sends chunk (r - step) to r+1 which accumulates
+            let c = (r + n - step) % n;
+            let (lo, hi) = chunk_bounds[c];
+            let dst = (r + 1) % n;
+            let len = hi - lo;
+            scratch[..len].copy_from_slice(&bufs[r][lo..hi]);
+            for (d, s) in bufs[dst][lo..hi].iter_mut().zip(&scratch[..len]) {
+                *d += *s;
+            }
+        }
+    }
+
+    // each complete chunk -> mean, then allgather around the ring
+    let inv = 1.0 / n as f32;
+    for c in 0..n {
+        let owner = (c + n - 1) % n;
+        let (lo, hi) = chunk_bounds[c];
+        for v in bufs[owner][lo..hi].iter_mut() {
+            *v *= inv;
+        }
+        let complete: Vec<f32> = bufs[owner][lo..hi].to_vec();
+        for r in 0..n {
+            if r != owner {
+                bufs[r][lo..hi].copy_from_slice(&complete);
+            }
+        }
+    }
+}
+
+/// Naive mean (single accumulator) — the oracle for the ring.
+pub fn naive_mean(bufs: &[&Vec<f32>]) -> Vec<f32> {
+    let n = bufs.len();
+    assert!(n > 0);
+    let len = bufs[0].len();
+    let mut out = vec![0.0f64; len];
+    for b in bufs {
+        for (o, &v) in out.iter_mut().zip(b.iter()) {
+            *o += v as f64;
+        }
+    }
+    out.into_iter().map(|v| (v / n as f64) as f32).collect()
+}
+
+/// Element-wise sum of buffers (what a group's sent states add up to on
+/// the DASO non-blocking wire; Eq. 1 consumes the sum).
+pub fn sum_buffers(bufs: &[&Vec<f32>]) -> Vec<f32> {
+    let n = bufs.len();
+    assert!(n > 0);
+    let len = bufs[0].len();
+    let mut out = vec![0.0f32; len];
+    for b in bufs {
+        assert_eq!(b.len(), len);
+        for (o, &v) in out.iter_mut().zip(b.iter()) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Broadcast: copy `src` into every destination buffer.
+pub fn broadcast(src: &[f32], dsts: &mut [&mut Vec<f32>]) {
+    for d in dsts.iter_mut() {
+        assert_eq!(d.len(), src.len());
+        d.copy_from_slice(src);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::stats::max_abs_diff;
+
+    #[test]
+    fn ring_matches_naive_mean_f32() {
+        run_prop("ring-eq-naive", 30, |g| {
+            let n = g.usize_in(1, 8);
+            let len = g.usize_in(1, 500);
+            let mut bufs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal(len, 1.0)).collect();
+            let expect = naive_mean(&bufs.iter().collect::<Vec<_>>());
+            let mut refs: Vec<&mut Vec<f32>> = bufs.iter_mut().collect();
+            ring_allreduce_mean(&mut refs, Wire::F32);
+            for b in &bufs {
+                assert!(max_abs_diff(b, &expect) < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn ring_all_participants_agree() {
+        run_prop("ring-agreement", 30, |g| {
+            let n = g.usize_in(2, 8);
+            let len = g.usize_in(1, 300);
+            let mut bufs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal(len, 1.0)).collect();
+            let mut refs: Vec<&mut Vec<f32>> = bufs.iter_mut().collect();
+            ring_allreduce_mean(&mut refs, Wire::F32);
+            for b in &bufs[1..] {
+                assert_eq!(b, &bufs[0], "all replicas must hold identical results");
+            }
+        });
+    }
+
+    #[test]
+    fn f16_wire_bounded_error() {
+        run_prop("f16-wire-error", 20, |g| {
+            let n = g.usize_in(2, 6);
+            let len = g.usize_in(10, 200);
+            let mut bufs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal(len, 1.0)).collect();
+            let expect = naive_mean(&bufs.iter().collect::<Vec<_>>());
+            let mut refs: Vec<&mut Vec<f32>> = bufs.iter_mut().collect();
+            ring_allreduce_mean(&mut refs, Wire::F16);
+            // fp16 has 2^-11 relative error per value; mean keeps it small
+            for b in &bufs {
+                for (got, exp) in b.iter().zip(&expect) {
+                    assert!((got - exp).abs() < 5e-3 * exp.abs().max(1.0), "{got} vs {exp}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn bf16_wire_coarser_than_f16() {
+        let mut g1: Vec<Vec<f32>> = vec![vec![1.2345678; 100], vec![1.2345678; 100]];
+        let expect = 1.2345678f32;
+        let mut refs: Vec<&mut Vec<f32>> = g1.iter_mut().collect();
+        ring_allreduce_mean(&mut refs, Wire::Bf16);
+        let bf_err = (g1[0][0] - expect).abs();
+        let mut g2: Vec<Vec<f32>> = vec![vec![1.2345678; 100], vec![1.2345678; 100]];
+        let mut refs: Vec<&mut Vec<f32>> = g2.iter_mut().collect();
+        ring_allreduce_mean(&mut refs, Wire::F16);
+        let f16_err = (g2[0][0] - expect).abs();
+        assert!(bf_err >= f16_err, "bf16 {bf_err} vs f16 {f16_err}");
+        assert!(bf_err < 0.01);
+    }
+
+    #[test]
+    fn sum_and_broadcast() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 4.0];
+        assert_eq!(sum_buffers(&[&a, &b]), vec![4.0, 6.0]);
+        let src = vec![9.0f32, 9.0];
+        let mut d1 = vec![0.0f32; 2];
+        let mut d2 = vec![1.0f32; 2];
+        broadcast(&src, &mut [&mut d1, &mut d2]);
+        assert_eq!(d1, src);
+        assert_eq!(d2, src);
+    }
+
+    #[test]
+    fn wire_bytes() {
+        assert_eq!(Wire::F32.bytes_per_elem(), 4);
+        assert_eq!(Wire::F16.bytes_per_elem(), 2);
+        assert_eq!(Wire::Bf16.bytes_per_elem(), 2);
+    }
+}

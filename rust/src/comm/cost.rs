@@ -1,0 +1,134 @@
+//! Analytic collective cost model (alpha-beta), used both by the per-step
+//! clock accounting during real simulated training and by the
+//! strong-scaling projector for Figs. 6/8.
+//!
+//! Allreduce over n participants and M bytes (hybrid model, matching how
+//! NCCL/MPI pick algorithms):
+//!     t = 2 ceil(log2 n) * alpha  +  2 (n-1)/n * M / B
+//! — bandwidth term of a ring (optimal for large M), latency term of a
+//! tree (optimal for small M; a pure ring's 2(n-1) alpha hops are never
+//! paid in practice because the library switches algorithm).
+//! Binomial-tree broadcast: ceil(log2 n) * (alpha + M / B).
+
+use super::link::Link;
+
+/// Time for an allreduce of `bytes` over `n` participants.
+pub fn ring_allreduce_time(n: usize, bytes: usize, link: &Link) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let lat_hops = 2.0 * (n as f64).log2().ceil();
+    let bw_term = 2.0 * (n - 1) as f64 / n as f64 * bytes as f64 / link.bandwidth_bps;
+    lat_hops * link.latency_s + bw_term
+}
+
+/// Time for a binomial-tree broadcast of `bytes` to `n` participants.
+pub fn tree_broadcast_time(n: usize, bytes: usize, link: &Link) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let hops = (n as f64).log2().ceil();
+    hops * link.transfer_time(bytes)
+}
+
+/// Time for an allgather of `bytes` per rank over `n` participants (ring).
+pub fn ring_allgather_time(n: usize, bytes_per_rank: usize, link: &Link) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    (n - 1) as f64 * (link.latency_s + bytes_per_rank as f64 / link.bandwidth_bps)
+}
+
+/// Horovod-style fused allreduce: the message is split into fusion
+/// buckets; each bucket pays the full ring. Models tensor fusion's
+/// latency-amortization (few big buckets beat many small tensors).
+pub fn fused_allreduce_time(n: usize, bytes: usize, bucket_bytes: usize, link: &Link) -> f64 {
+    if n <= 1 || bytes == 0 {
+        return 0.0;
+    }
+    let buckets = bytes.div_ceil(bucket_bytes).max(1);
+    let per = bytes / buckets;
+    buckets as f64 * ring_allreduce_time(n, per.max(1), link)
+}
+
+/// Cast/pack overhead for wire compression: one pass over the buffer at
+/// memory bandwidth (the paper notes casting delays the send, which is
+/// why DASO skips it for non-blocking syncs).
+pub fn cast_time(bytes_f32: usize, mem_bandwidth_bps: f64) -> f64 {
+    // read f32 + write 16-bit = 1.5x traffic of the f32 buffer
+    1.5 * bytes_f32 as f64 / mem_bandwidth_bps
+}
+
+/// Default device memory bandwidth for cast cost (A100-class HBM2e).
+pub const DEVICE_MEM_BW: f64 = 1.5e12;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::link::Link;
+
+    fn l() -> Link {
+        Link { latency_s: 1e-5, bandwidth_bps: 1e10 }
+    }
+
+    #[test]
+    fn allreduce_single_rank_is_free() {
+        assert_eq!(ring_allreduce_time(1, 1 << 20, &l()), 0.0);
+    }
+
+    #[test]
+    fn allreduce_bandwidth_term_saturates() {
+        // 2(n-1)/n -> 2 as n grows: doubling n from large does not double t
+        let bytes = 100 << 20;
+        let t8 = ring_allreduce_time(8, bytes, &l());
+        let t64 = ring_allreduce_time(64, bytes, &l());
+        assert!(t64 < 1.3 * t8, "t8={t8} t64={t64}");
+    }
+
+    #[test]
+    fn allreduce_monotonic_in_bytes() {
+        assert!(ring_allreduce_time(4, 2 << 20, &l()) > ring_allreduce_time(4, 1 << 20, &l()));
+    }
+
+    #[test]
+    fn fusion_beats_tiny_messages() {
+        // 1000 tiny tensors sent unfused = 1000 rings of 4KB; fused = 1
+        let link = l();
+        let unfused: f64 =
+            (0..1000).map(|_| ring_allreduce_time(16, 4096, &link)).sum();
+        let fused = fused_allreduce_time(16, 1000 * 4096, 64 << 20, &link);
+        assert!(fused < unfused / 5.0, "fused={fused} unfused={unfused}");
+    }
+
+    #[test]
+    fn tree_broadcast_log_scaling() {
+        let link = l();
+        let t2 = tree_broadcast_time(2, 1 << 20, &link);
+        let t16 = tree_broadcast_time(16, 1 << 20, &link);
+        assert!((t16 / t2 - 4.0).abs() < 1e-9); // log2(16)/log2(2) = 4
+    }
+
+    #[test]
+    fn daso_amortized_beats_flat_every_batch() {
+        // The paper's core claim, in cost-model form: a flat all-GPU ring
+        // every batch (Horovod) costs more than DASO's node-local ring
+        // every batch + one group ring every B batches (section 3). The
+        // group ring is not cheaper per call (same bandwidth term), the
+        // savings are selectivity (1/B) and the cheap local tier.
+        let intra = Link::nvlink();
+        let inter = Link::infiniband_hdr();
+        let nodes = 16;
+        let gpn = 4;
+        let b_interval = 4;
+        let bytes = 100 << 20; // 25M params f32
+        let horovod_per_batch = ring_allreduce_time(nodes * gpn, bytes / 2, &inter); // fp16
+        let daso_per_batch = ring_allreduce_time(gpn, bytes, &intra)
+            + (ring_allreduce_time(nodes, bytes, &inter)
+                + tree_broadcast_time(gpn, bytes, &intra))
+                / b_interval as f64;
+        assert!(
+            daso_per_batch < horovod_per_batch,
+            "daso={daso_per_batch} horovod={horovod_per_batch}"
+        );
+    }
+}

@@ -1,0 +1,76 @@
+//! Two-tier fabric model: node-local GPU interconnect vs inter-node
+//! network — the asymmetry DASO exploits (paper section 1/3).
+//!
+//! Defaults are calibrated to the paper's testbed (JUWELS Booster): A100
+//! NVLink3 intra-node and HDR InfiniBand inter-node. The *ratio* between
+//! tiers (not the absolute numbers) is what drives the reproduction.
+
+/// A point-to-point link: alpha-beta model `t = latency + bytes / bw`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    pub latency_s: f64,
+    pub bandwidth_bps: f64, // bytes per second
+}
+
+impl Link {
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// NVLink3-class GPU-to-GPU link (effective per-direction).
+    pub fn nvlink() -> Link {
+        Link { latency_s: 5e-6, bandwidth_bps: 250e9 }
+    }
+
+    /// HDR InfiniBand-class inter-node link (200 Gb/s = 25 GB/s per port).
+    pub fn infiniband_hdr() -> Link {
+        Link { latency_s: 10e-6, bandwidth_bps: 25e9 }
+    }
+}
+
+/// The cluster fabric: one intra-node tier, one inter-node tier.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fabric {
+    pub intra: Link,
+    pub inter: Link,
+}
+
+impl Fabric {
+    /// JUWELS-Booster-like defaults (paper section 4 testbed).
+    pub fn juwels_like() -> Fabric {
+        Fabric { intra: Link::nvlink(), inter: Link::infiniband_hdr() }
+    }
+
+    /// A degenerate fabric with zero cost (for pure-correctness tests).
+    pub fn zero() -> Fabric {
+        let z = Link { latency_s: 0.0, bandwidth_bps: f64::INFINITY };
+        Fabric { intra: z, inter: z }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let l = Link { latency_s: 1e-6, bandwidth_bps: 1e9 };
+        let t1 = l.transfer_time(1_000_000);
+        let t2 = l.transfer_time(2_000_000);
+        assert!(t2 > t1);
+        assert!((t1 - (1e-6 + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn intra_is_faster_tier() {
+        let f = Fabric::juwels_like();
+        assert!(f.intra.bandwidth_bps > f.inter.bandwidth_bps);
+        assert!(f.intra.latency_s <= f.inter.latency_s);
+    }
+
+    #[test]
+    fn zero_fabric_is_free() {
+        let f = Fabric::zero();
+        assert_eq!(f.intra.transfer_time(1 << 30), 0.0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Cluster topology and DASO's hierarchical group structure (paper Fig 1).
+//!
+//! The global network spans all `nodes * gpus_per_node` GPUs. It is
+//! divided into `gpus_per_node` *groups*; group `g` contains the GPU with
+//! local id `g` on every node. Global communication happens exclusively
+//! within one group (one GPU per node), cutting inter-node traffic by a
+//! factor of `gpus_per_node`. The syncing group rotates to overlap
+//! communication with computation.
+
+/// A worker's global rank plus its (node, local) coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Rank {
+    pub global: usize,
+    pub node: usize,
+    pub local: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(nodes: usize, gpus_per_node: usize) -> Self {
+        assert!(nodes >= 1 && gpus_per_node >= 1);
+        Self { nodes, gpus_per_node }
+    }
+
+    /// Total GPUs in the global network (the paper's P).
+    pub fn world(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    pub fn rank(&self, node: usize, local: usize) -> Rank {
+        debug_assert!(node < self.nodes && local < self.gpus_per_node);
+        Rank { global: node * self.gpus_per_node + local, node, local }
+    }
+
+    pub fn rank_of(&self, global: usize) -> Rank {
+        debug_assert!(global < self.world());
+        Rank {
+            global,
+            node: global / self.gpus_per_node,
+            local: global % self.gpus_per_node,
+        }
+    }
+
+    /// All global ranks on one node (the node-local network).
+    pub fn node_ranks(&self, node: usize) -> Vec<usize> {
+        (0..self.gpus_per_node)
+            .map(|l| self.rank(node, l).global)
+            .collect()
+    }
+
+    /// Members of global group `g`: the GPU with local id `g` on every
+    /// node. One artifact of homogeneous clusters (paper assumption).
+    pub fn group_members(&self, g: usize) -> Vec<usize> {
+        debug_assert!(g < self.gpus_per_node);
+        (0..self.nodes).map(|n| self.rank(n, g).global).collect()
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.gpus_per_node
+    }
+
+    /// Inter-node traffic reduction factor vs flat all-GPU communication.
+    pub fn traffic_reduction(&self) -> usize {
+        self.gpus_per_node
+    }
+
+    pub fn all_ranks(&self) -> Vec<usize> {
+        (0..self.world()).collect()
+    }
+}
+
+/// Rotates the global-sync role between groups (paper section 3).
+#[derive(Debug, Clone)]
+pub struct GroupRotation {
+    n_groups: usize,
+    next: usize,
+}
+
+impl GroupRotation {
+    pub fn new(n_groups: usize) -> Self {
+        assert!(n_groups >= 1);
+        Self { n_groups, next: 0 }
+    }
+
+    /// The group that performs the next global synchronization.
+    pub fn advance(&mut self) -> usize {
+        let g = self.next;
+        self.next = (self.next + 1) % self.n_groups;
+        g
+    }
+
+    pub fn peek(&self) -> usize {
+        self.next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn rank_coordinates_roundtrip() {
+        let t = Topology::new(3, 4);
+        for g in 0..t.world() {
+            let r = t.rank_of(g);
+            assert_eq!(t.rank(r.node, r.local).global, g);
+        }
+    }
+
+    #[test]
+    fn groups_are_one_gpu_per_node() {
+        let t = Topology::new(4, 4);
+        for g in 0..t.n_groups() {
+            let members = t.group_members(g);
+            assert_eq!(members.len(), t.nodes);
+            let nodes: Vec<usize> = members.iter().map(|&m| t.rank_of(m).node).collect();
+            assert_eq!(nodes, (0..t.nodes).collect::<Vec<_>>());
+            assert!(members.iter().all(|&m| t.rank_of(m).local == g));
+        }
+    }
+
+    #[test]
+    fn prop_groups_partition_world() {
+        run_prop("groups-partition", 50, |gen| {
+            let t = Topology::new(gen.usize_in(1, 8), gen.usize_in(1, 8));
+            let mut seen = vec![false; t.world()];
+            for g in 0..t.n_groups() {
+                for m in t.group_members(g) {
+                    assert!(!seen[m], "rank {m} in two groups");
+                    seen[m] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "groups must cover the world");
+        });
+    }
+
+    #[test]
+    fn prop_node_ranks_partition_world() {
+        run_prop("nodes-partition", 50, |gen| {
+            let t = Topology::new(gen.usize_in(1, 8), gen.usize_in(1, 8));
+            let mut seen = vec![false; t.world()];
+            for n in 0..t.nodes {
+                for m in t.node_ranks(n) {
+                    assert!(!seen[m]);
+                    seen[m] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        });
+    }
+
+    #[test]
+    fn rotation_visits_all_groups_uniformly() {
+        let mut rot = GroupRotation::new(4);
+        let mut counts = [0usize; 4];
+        for _ in 0..40 {
+            counts[rot.advance()] += 1;
+        }
+        assert_eq!(counts, [10, 10, 10, 10]);
+    }
+}

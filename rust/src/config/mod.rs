@@ -1,0 +1,257 @@
+//! Run configuration: JSON config files + dotted-path CLI overrides.
+//!
+//! A run spec picks a model artifact set, a synchronization strategy and
+//! the trainer/cluster/DASO knobs. Everything has a sane default so
+//! `daso train --model mlp` works out of the box; a JSON file and
+//! `--set key=value` overrides layer on top (file < CLI).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::Fabric;
+use crate::daso::DasoConfig;
+use crate::trainer::TrainConfig;
+use crate::util::json::Value;
+
+/// Which synchronization strategy to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyKind {
+    Daso,
+    Horovod,
+    Asgd,
+    LocalOnly,
+}
+
+impl StrategyKind {
+    pub fn parse(s: &str) -> Result<StrategyKind> {
+        Ok(match s {
+            "daso" => StrategyKind::Daso,
+            "horovod" => StrategyKind::Horovod,
+            "asgd" => StrategyKind::Asgd,
+            "local_only" | "local" => StrategyKind::LocalOnly,
+            other => bail!("unknown strategy {other:?} (daso|horovod|asgd|local_only)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::Daso => "daso",
+            StrategyKind::Horovod => "horovod",
+            StrategyKind::Asgd => "asgd",
+            StrategyKind::LocalOnly => "local_only",
+        }
+    }
+}
+
+/// A complete run specification.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub model: String,
+    pub strategy: StrategyKind,
+    pub artifacts_dir: String,
+    pub out_dir: Option<String>,
+    pub train: TrainConfig,
+    pub daso: DasoConfig,
+}
+
+impl RunSpec {
+    pub fn default_for(model: &str) -> RunSpec {
+        let train = TrainConfig::quick(2, 4, 12);
+        let daso = DasoConfig::new(train.epochs);
+        RunSpec {
+            model: model.to_string(),
+            strategy: StrategyKind::Daso,
+            artifacts_dir: "artifacts".to_string(),
+            out_dir: None,
+            train,
+            daso,
+        }
+    }
+
+    /// Merge a JSON config object over the defaults.
+    pub fn apply_json(&mut self, v: &Value) -> Result<()> {
+        let obj = v.as_obj().context("config root must be an object")?;
+        for (key, val) in obj {
+            self.set_value(key, val)
+                .with_context(|| format!("config key {key:?}"))?;
+        }
+        Ok(())
+    }
+
+    pub fn load_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let v = Value::parse(&text)?;
+        self.apply_json(&v)
+    }
+
+    /// Apply a single `key=value` override (dotted paths, e.g.
+    /// `train.epochs=20`, `daso.b_initial=8`, `strategy=horovod`).
+    pub fn set(&mut self, assignment: &str) -> Result<()> {
+        let (key, val) = assignment
+            .split_once('=')
+            .ok_or_else(|| anyhow!("override must be key=value, got {assignment:?}"))?;
+        let parsed = if val == "true" || val == "false" {
+            Value::Bool(val == "true")
+        } else if let Ok(n) = val.parse::<f64>() {
+            Value::Num(n)
+        } else {
+            Value::Str(val.to_string())
+        };
+        self.set_value(key, &parsed)
+    }
+
+    fn set_value(&mut self, key: &str, v: &Value) -> Result<()> {
+        let as_f64 = || v.as_f64().ok_or_else(|| anyhow!("expected number"));
+        let as_usize = || as_f64().map(|n| n as usize);
+        let as_str = || v.as_str().ok_or_else(|| anyhow!("expected string"));
+        let as_bool = || v.as_bool().ok_or_else(|| anyhow!("expected bool"));
+        match key {
+            "model" => self.model = as_str()?.to_string(),
+            "strategy" => self.strategy = StrategyKind::parse(as_str()?)?,
+            "artifacts_dir" => self.artifacts_dir = as_str()?.to_string(),
+            "out_dir" => self.out_dir = Some(as_str()?.to_string()),
+
+            "train.nodes" | "nodes" => self.train.nodes = as_usize()?,
+            "train.gpus_per_node" | "gpus_per_node" => self.train.gpus_per_node = as_usize()?,
+            "train.epochs" | "epochs" => {
+                self.train.epochs = as_usize()?;
+                // keep DASO's phase schedule consistent with run length
+                self.daso.total_epochs = self.train.epochs;
+            }
+            "train.train_samples" => self.train.train_samples = as_usize()?,
+            "train.val_samples" => self.train.val_samples = as_usize()?,
+            "train.seed" | "seed" => self.train.seed = as_f64()? as u64,
+            "train.base_lr" => self.train.base_lr = as_f64()?,
+            "train.lr_scale" => self.train.lr_scale = as_f64()?,
+            "train.lr_warmup_epochs" => self.train.lr_warmup_epochs = as_usize()?,
+            "train.lr_decay" => self.train.lr_decay = as_f64()?,
+            "train.lr_patience" => self.train.lr_patience = as_usize()?,
+            "train.compute_time_s" => self.train.compute_time_s = as_f64()?,
+            "train.eval_every" => self.train.eval_every = as_usize()?,
+            "train.verbose" | "verbose" => self.train.verbose = as_bool()?,
+
+            "daso.b_initial" => self.daso.b_initial = as_usize()?,
+            "daso.warmup_epochs" => self.daso.warmup_epochs = as_usize()?,
+            "daso.cooldown_epochs" => self.daso.cooldown_epochs = as_usize()?,
+            "daso.plateau_patience" => self.daso.plateau_patience = as_usize()?,
+            "daso.kernel_local_avg" => self.daso.kernel_local_avg = as_bool()?,
+            "daso.staleness_blend" => self.daso.staleness_blend = as_bool()?,
+
+            "fabric.intra_latency_s" => self.train.fabric.intra.latency_s = as_f64()?,
+            "fabric.intra_bandwidth" => self.train.fabric.intra.bandwidth_bps = as_f64()?,
+            "fabric.inter_latency_s" => self.train.fabric.inter.latency_s = as_f64()?,
+            "fabric.inter_bandwidth" => self.train.fabric.inter.bandwidth_bps = as_f64()?,
+
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Construct the configured strategy object.
+    pub fn build_strategy(&self) -> Box<dyn crate::trainer::Strategy> {
+        match self.strategy {
+            StrategyKind::Daso => Box::new(crate::daso::Daso::new(
+                DasoConfig { total_epochs: self.train.epochs, ..self.daso.clone() },
+                self.train.gpus_per_node,
+            )),
+            StrategyKind::Horovod => Box::new(crate::baselines::Horovod::new(
+                crate::baselines::HorovodConfig::default(),
+            )),
+            StrategyKind::Asgd => Box::new(crate::baselines::AsgdServer::new()),
+            StrategyKind::LocalOnly => Box::new(crate::baselines::LocalOnly::new()),
+        }
+    }
+
+    /// Default fabric matches the paper's testbed.
+    pub fn default_fabric() -> Fabric {
+        Fabric::juwels_like()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let s = RunSpec::default_for("mlp");
+        assert_eq!(s.model, "mlp");
+        assert_eq!(s.strategy, StrategyKind::Daso);
+        assert!(s.train.epochs > 0);
+        assert_eq!(s.daso.total_epochs, s.train.epochs);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut s = RunSpec::default_for("mlp");
+        s.set("strategy=horovod").unwrap();
+        s.set("train.epochs=30").unwrap();
+        s.set("daso.b_initial=8").unwrap();
+        s.set("nodes=4").unwrap();
+        s.set("verbose=true").unwrap();
+        assert_eq!(s.strategy, StrategyKind::Horovod);
+        assert_eq!(s.train.epochs, 30);
+        assert_eq!(s.daso.total_epochs, 30);
+        assert_eq!(s.daso.b_initial, 8);
+        assert_eq!(s.train.nodes, 4);
+        assert!(s.train.verbose);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        let mut s = RunSpec::default_for("mlp");
+        assert!(s.set("bogus.key=1").is_err());
+        assert!(s.set("no_equals_sign").is_err());
+        assert!(s.set("strategy=notastrategy").is_err());
+    }
+
+    #[test]
+    fn json_config_merge() {
+        let mut s = RunSpec::default_for("mlp");
+        let v = Value::parse(
+            r#"{"strategy": "asgd", "train.epochs": 7, "daso.b_initial": 2}"#,
+        )
+        .unwrap();
+        s.apply_json(&v).unwrap();
+        assert_eq!(s.strategy, StrategyKind::Asgd);
+        assert_eq!(s.train.epochs, 7);
+        assert_eq!(s.daso.b_initial, 2);
+    }
+
+    #[test]
+    fn config_file_loading() {
+        let dir = std::env::temp_dir().join("daso_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(
+            &path,
+            r#"{"model": "resnet", "strategy": "horovod", "train.nodes": 8,
+                "daso.kernel_local_avg": false,
+                "fabric.inter_bandwidth": 1e9}"#,
+        )
+        .unwrap();
+        let mut s = RunSpec::default_for("mlp");
+        s.load_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(s.model, "resnet");
+        assert_eq!(s.strategy, StrategyKind::Horovod);
+        assert_eq!(s.train.nodes, 8);
+        assert!(!s.daso.kernel_local_avg);
+        assert_eq!(s.train.fabric.inter.bandwidth_bps, 1e9);
+        assert!(s.load_file("/nonexistent/cfg.json").is_err());
+    }
+
+    #[test]
+    fn build_strategy_names_match() {
+        for kind in ["daso", "horovod", "asgd", "local_only"] {
+            let mut s = RunSpec::default_for("mlp");
+            s.set(&format!("strategy={kind}")).unwrap();
+            assert_eq!(s.build_strategy().name(), kind);
+        }
+    }
+
+    #[test]
+    fn strategy_kind_roundtrip() {
+        for k in ["daso", "horovod", "asgd", "local_only"] {
+            assert_eq!(StrategyKind::parse(k).unwrap().name(), k);
+        }
+    }
+}

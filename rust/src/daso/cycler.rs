@@ -1,0 +1,138 @@
+//! The B/W cycling policy (paper section 3, cycling phase):
+//!
+//! - `B`: forward-backward passes between global synchronizations
+//!   (user-set, 4 in the paper's experiments).
+//! - `W`: batches to wait for the non-blocking global sync data;
+//!   initialized to `B/4` ("found empirically to perform best").
+//! - Each training-loss plateau halves both (floor 1).
+//! - When `B = W = 1` and the loss plateaus again, both reset to their
+//!   initial values and the cycle repeats until cool-down.
+
+use crate::optim::PlateauDetector;
+
+#[derive(Debug, Clone)]
+pub struct Cycler {
+    b_init: usize,
+    w_init: usize,
+    pub b: usize,
+    pub w: usize,
+    detector: PlateauDetector,
+    pub reductions: u64,
+    pub resets: u64,
+}
+
+impl Cycler {
+    pub fn new(b_initial: usize, plateau_patience: usize) -> Self {
+        let b = b_initial.max(1);
+        let w = (b / 4).max(1);
+        Self {
+            b_init: b,
+            w_init: w,
+            b,
+            w,
+            detector: PlateauDetector::new(plateau_patience, 0.005),
+            reductions: 0,
+            resets: 0,
+        }
+    }
+
+    /// Feed an epoch's training loss; adjusts B and W on plateau.
+    pub fn observe_loss(&mut self, loss: f64) {
+        if self.detector.observe(loss) {
+            self.on_plateau();
+        }
+    }
+
+    fn on_plateau(&mut self) {
+        if self.b == 1 && self.w == 1 {
+            self.b = self.b_init;
+            self.w = self.w_init;
+            self.resets += 1;
+        } else {
+            self.b = (self.b / 2).max(1);
+            self.w = (self.w / 2).max(1);
+            self.reductions += 1;
+        }
+    }
+
+    pub fn initial(&self) -> (usize, usize) {
+        (self.b_init, self.w_init)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    fn plateau(c: &mut Cycler) {
+        // feed identical losses until the detector fires exactly once
+        let before = (c.b, c.w, c.reductions, c.resets);
+        for _ in 0..64 {
+            c.observe_loss(1.0);
+            if (c.b, c.w, c.reductions, c.resets) != before {
+                return;
+            }
+        }
+        panic!("plateau never fired");
+    }
+
+    #[test]
+    fn w_initialized_to_quarter_b() {
+        let c = Cycler::new(4, 2);
+        assert_eq!((c.b, c.w), (4, 1));
+        let c = Cycler::new(16, 2);
+        assert_eq!((c.b, c.w), (16, 4));
+        let c = Cycler::new(1, 2);
+        assert_eq!((c.b, c.w), (1, 1));
+    }
+
+    #[test]
+    fn halves_on_plateau_with_floor_one() {
+        let mut c = Cycler::new(8, 1);
+        plateau(&mut c);
+        assert_eq!((c.b, c.w), (4, 1));
+        plateau(&mut c);
+        assert_eq!((c.b, c.w), (2, 1));
+        plateau(&mut c);
+        assert_eq!((c.b, c.w), (1, 1));
+    }
+
+    #[test]
+    fn resets_after_floor() {
+        let mut c = Cycler::new(4, 1);
+        plateau(&mut c); // 2
+        plateau(&mut c); // 1
+        assert_eq!((c.b, c.w), (1, 1));
+        plateau(&mut c); // reset
+        assert_eq!((c.b, c.w), (4, 1));
+        assert_eq!(c.resets, 1);
+    }
+
+    #[test]
+    fn improving_loss_never_changes_bw() {
+        let mut c = Cycler::new(8, 2);
+        for i in 0..50 {
+            c.observe_loss(10.0 * 0.9f64.powi(i));
+        }
+        assert_eq!((c.b, c.w), (8, 2));
+    }
+
+    #[test]
+    fn prop_invariants() {
+        run_prop("cycler-invariants", 50, |g| {
+            let b0 = g.usize_in(1, 64);
+            let mut c = Cycler::new(b0, g.usize_in(1, 4));
+            for _ in 0..g.usize_in(0, 200) {
+                c.observe_loss(if g.bool() { 1.0 } else { g.f32_in(0.0, 2.0) as f64 });
+                assert!(c.b >= 1 && c.w >= 1, "B/W must never drop below 1");
+                assert!(c.b <= b0.max(1), "B must never exceed its initial value");
+                assert!(c.w <= c.b.max(c.w), "sanity");
+                assert!(
+                    c.w <= (b0 / 4).max(1),
+                    "W must never exceed its initial value"
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,13 @@
+//! DASO — Distributed Asynchronous and Selective Optimization, the
+//! paper's contribution: hierarchical node-local/global synchronization,
+//! selective (every-B-batches) non-blocking global sync with Eq.-(1)
+//! staleness compensation, and the warm-up/cycling/cool-down phase
+//! schedule with plateau-driven B/W cycling.
+
+pub mod cycler;
+pub mod optimizer;
+pub mod phase;
+
+pub use cycler::Cycler;
+pub use optimizer::{Daso, DasoConfig};
+pub use phase::{Phase, PhaseSchedule};

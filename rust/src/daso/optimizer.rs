@@ -1,0 +1,364 @@
+//! The DASO optimizer (paper section 3): hierarchical, selective,
+//! asynchronous data-parallel synchronization.
+//!
+//! Per batch (every phase):
+//!   1. **Local synchronization** (Fig. 2): node-local gradient average
+//!      over the fast intra-node tier (the Pallas `local_avg` kernel or
+//!      the ring collective — configurable, numerically equivalent).
+//!   2. Local optimizer step (the fused-SGD Pallas kernel).
+//!
+//! Global synchronization:
+//!   - **Warm-up / cool-down** (blocking, every batch): the rotating
+//!     group's members average their *parameters* over the inter-node
+//!     tier, packaged as bf16 (Fig. 3), then broadcast node-locally
+//!     (Fig. 4).
+//!   - **Cycling** (non-blocking, every B batches): the group sends its
+//!     parameters (uncast — casting would delay the send, section 3) and
+//!     training continues; W batches later the stale sum arrives and is
+//!     blended via Eq. (1), then broadcast node-locally. B and W follow
+//!     the plateau-driven `Cycler`.
+
+use anyhow::Result;
+
+use crate::comm::cost::{cast_time, ring_allreduce_time, tree_broadcast_time, DEVICE_MEM_BW};
+use crate::comm::{ring_allreduce_mean, sum_buffers, GroupRotation, Wire};
+use crate::trainer::strategy::{CommStats, StepCtx, Strategy};
+
+use super::cycler::Cycler;
+use super::phase::{Phase, PhaseSchedule};
+
+/// Configuration for the DASO optimizer.
+#[derive(Debug, Clone)]
+pub struct DasoConfig {
+    /// initial batches between global syncs (paper experiments: 4)
+    pub b_initial: usize,
+    /// epochs of blocking sync at the start / end of training
+    pub warmup_epochs: usize,
+    pub cooldown_epochs: usize,
+    pub total_epochs: usize,
+    /// plateau patience (epochs) for the B/W cycler
+    pub plateau_patience: usize,
+    /// use the Pallas local_avg artifact for the node-local reduction
+    /// instead of the host-side ring (ablation knob; same math)
+    pub kernel_local_avg: bool,
+    /// apply Eq. (1)'s staleness-weighted blend on non-blocking sync
+    /// completion. When false, the stale group average simply overwrites
+    /// the local parameters — the ablation that shows why the weighted
+    /// average matters (the 2S local weighting was "found experimentally",
+    /// section 3).
+    pub staleness_blend: bool,
+}
+
+impl DasoConfig {
+    pub fn new(total_epochs: usize) -> Self {
+        Self {
+            b_initial: 4,
+            warmup_epochs: (total_epochs / 18).max(1).min(5),
+            cooldown_epochs: (total_epochs / 18).max(1).min(5),
+            total_epochs,
+            plateau_patience: 5,
+            kernel_local_avg: true,
+            staleness_blend: true,
+        }
+    }
+}
+
+/// In-flight non-blocking global synchronization.
+struct Inflight {
+    /// global batch at which the send started
+    start_batch: usize,
+    /// W recorded at send time (cycler may change W mid-flight)
+    wait: usize,
+    group: usize,
+    /// sum over group members' parameters at send time (what the
+    /// allreduce wire delivers; Eq. 1 consumes the sum)
+    sum: Vec<f32>,
+    /// virtual time at which the exchanged data is fully received
+    finish_time: f64,
+}
+
+pub struct Daso {
+    pub cfg: DasoConfig,
+    pub cycler: Cycler,
+    schedule: PhaseSchedule,
+    rotation: GroupRotation,
+    inflight: Option<Inflight>,
+    epoch: usize,
+    stats: CommStats,
+}
+
+impl Daso {
+    pub fn new(cfg: DasoConfig, n_groups: usize) -> Self {
+        let schedule =
+            PhaseSchedule::new(cfg.total_epochs, cfg.warmup_epochs, cfg.cooldown_epochs);
+        Self {
+            cycler: Cycler::new(cfg.b_initial, cfg.plateau_patience),
+            rotation: GroupRotation::new(n_groups),
+            inflight: None,
+            epoch: 0,
+            stats: CommStats::default(),
+            cfg,
+            schedule,
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.schedule.phase(self.epoch)
+    }
+
+    /// Step 1: node-local gradient averaging (paper Fig. 2).
+    fn local_sync(&mut self, ctx: &mut StepCtx) -> Result<()> {
+        let topo = ctx.cluster.topo;
+        let n = ctx.rt.spec.n_params;
+        let bytes = n * Wire::F32.bytes_per_elem();
+        for node in 0..topo.nodes {
+            let ranks = topo.node_ranks(node);
+            if ranks.len() == 1 {
+                continue;
+            }
+            // the collective blocks the node until all members arrive
+            ctx.cluster.node_barrier(node);
+            // the Pallas avg artifact is shape-specialized to the
+            // manifest's gpus_per_node; other node widths use the ring
+            // (numerically equivalent, property-tested)
+            if self.cfg.kernel_local_avg && ranks.len() == ctx.rt.gpus_per_node {
+                // Pallas local_avg kernel: stack grads, one fused mean
+                let mut stacked = Vec::with_capacity(ranks.len() * n);
+                for &r in &ranks {
+                    stacked.extend_from_slice(&ctx.grads[r]);
+                }
+                let mean = ctx.rt.avg(&stacked)?;
+                for &r in &ranks {
+                    ctx.grads[r].copy_from_slice(&mean);
+                }
+            } else {
+                let mut grouped: Vec<&mut Vec<f32>> = Vec::with_capacity(ranks.len());
+                // safety: ranks are disjoint indices into ctx.grads
+                let grads_ptr = ctx.grads.as_mut_ptr();
+                for &r in &ranks {
+                    grouped.push(unsafe { &mut *grads_ptr.add(r) });
+                }
+                ring_allreduce_mean(&mut grouped, Wire::F32);
+            }
+            let dt = ring_allreduce_time(ranks.len(), bytes, &ctx.fabric.intra);
+            for &r in &ranks {
+                ctx.cluster.workers[r].advance_clock(dt);
+                ctx.cluster.workers[r].bytes_sent_intra += bytes as u64;
+            }
+        }
+        self.stats.local_syncs += 1;
+        self.stats.bytes_intra += (topo.world() * bytes) as u64;
+        Ok(())
+    }
+
+    /// Local optimizer step on every worker (fused-SGD artifact).
+    fn local_update(&mut self, ctx: &mut StepCtx) -> Result<()> {
+        for w in 0..ctx.cluster.world() {
+            let worker = &mut ctx.cluster.workers[w];
+            let (params, momentum) = (&mut worker.params, &mut worker.momentum);
+            ctx.rt.update(params, momentum, &ctx.grads[w], ctx.lr)?;
+        }
+        Ok(())
+    }
+
+    /// Blocking global sync (warm-up/cool-down; paper Figs. 3-4).
+    fn blocking_global_sync(&mut self, ctx: &mut StepCtx) -> Result<()> {
+        let topo = ctx.cluster.topo;
+        if topo.nodes <= 1 {
+            // a group of one: the "global network" degenerates — nothing
+            // crosses the inter tier and the average is the identity
+            return Ok(());
+        }
+        let n = ctx.rt.spec.n_params;
+        let group = self.rotation.advance();
+        let members = topo.group_members(group);
+
+        // bf16 packaging: cast cost on each member, halves wire bytes
+        let bytes_f32 = n * 4;
+        let wire_bytes = n * Wire::Bf16.bytes_per_elem();
+        let cast_dt = 2.0 * cast_time(bytes_f32, DEVICE_MEM_BW); // pack + unpack
+        ctx.cluster.ranks_barrier(&members);
+        {
+            let workers = &mut ctx.cluster.workers;
+            let ptr = workers.as_mut_ptr();
+            let mut bufs: Vec<&mut Vec<f32>> = members
+                .iter()
+                .map(|&r| unsafe { &mut (*ptr.add(r)).params })
+                .collect();
+            ring_allreduce_mean(&mut bufs, Wire::Bf16);
+        }
+        let ring_dt = ring_allreduce_time(members.len(), wire_bytes, &ctx.fabric.inter);
+        for &r in &members {
+            ctx.cluster.workers[r].advance_clock(cast_dt + ring_dt);
+            ctx.cluster.workers[r].bytes_sent_inter += wire_bytes as u64;
+        }
+        self.stats.bytes_inter += (members.len() * wire_bytes) as u64;
+
+        self.local_broadcast(ctx, group)?;
+        self.stats.global_syncs += 1;
+        self.stats.blocking_syncs += 1;
+        Ok(())
+    }
+
+    /// Local update step (paper Fig. 4): the group member on each node
+    /// broadcasts its parameters to the node's other GPUs.
+    fn local_broadcast(&mut self, ctx: &mut StepCtx, group: usize) -> Result<()> {
+        let topo = ctx.cluster.topo;
+        let n = ctx.rt.spec.n_params;
+        let bytes = n * 4;
+        for node in 0..topo.nodes {
+            let src_rank = topo.rank(node, group).global;
+            let src = ctx.cluster.workers[src_rank].params.clone();
+            let ranks = topo.node_ranks(node);
+            let dt = tree_broadcast_time(ranks.len(), bytes, &ctx.fabric.intra);
+            // receivers must also wait for the source to be ready
+            let src_clock = ctx.cluster.workers[src_rank].clock;
+            for &r in &ranks {
+                if r != src_rank {
+                    ctx.cluster.workers[r].params.copy_from_slice(&src);
+                }
+                let w = &mut ctx.cluster.workers[r];
+                w.wait_until(src_clock);
+                w.advance_clock(dt);
+                w.bytes_sent_intra += bytes as u64;
+            }
+            self.stats.bytes_intra += (ranks.len() * bytes) as u64;
+        }
+        Ok(())
+    }
+
+    /// Start a non-blocking global sync: snapshot + "send" the rotating
+    /// group's parameters. No cast (paper: casting delays the send).
+    fn start_nonblocking(&mut self, ctx: &mut StepCtx) {
+        let topo = ctx.cluster.topo;
+        if topo.nodes <= 1 {
+            return;
+        }
+        let n = ctx.rt.spec.n_params;
+        let bytes = n * 4;
+        let group = self.rotation.advance();
+        let members = topo.group_members(group);
+
+        let bufs: Vec<&Vec<f32>> = members
+            .iter()
+            .map(|&r| &ctx.cluster.workers[r].params)
+            .collect();
+        let sum = sum_buffers(&bufs);
+
+        let send_start = members
+            .iter()
+            .map(|&r| ctx.cluster.workers[r].clock)
+            .fold(0.0, f64::max);
+        let finish_time =
+            send_start + ring_allreduce_time(members.len(), bytes, &ctx.fabric.inter);
+        // the async send itself only costs the launch latency
+        for &r in &members {
+            ctx.cluster.workers[r].advance_clock(ctx.fabric.inter.latency_s);
+            ctx.cluster.workers[r].bytes_sent_inter += bytes as u64;
+        }
+        self.stats.bytes_inter += (members.len() * bytes) as u64;
+        self.inflight = Some(Inflight {
+            start_batch: ctx.global_batch,
+            wait: self.cycler.w,
+            group,
+            sum,
+            finish_time,
+        });
+    }
+
+    /// Complete an in-flight sync: Eq. (1) blend on each node's group
+    /// member, then node-local broadcast.
+    fn complete_nonblocking(&mut self, ctx: &mut StepCtx) -> Result<()> {
+        let inflight = self.inflight.take().expect("no inflight sync");
+        let topo = ctx.cluster.topo;
+        let s = (ctx.global_batch - inflight.start_batch) as f32;
+        let p = topo.nodes as f32; // participants in the exchange
+
+        for node in 0..topo.nodes {
+            let member = topo.rank(node, inflight.group).global;
+            // wait for the data if it has not arrived yet
+            let waited = ctx.cluster.workers[member].wait_until(inflight.finish_time);
+            self.stats.comm_wait_s += waited;
+            let blended = if self.cfg.staleness_blend {
+                ctx.rt
+                    .blend(&ctx.cluster.workers[member].params, &inflight.sum, s, p)?
+            } else {
+                // ablation: adopt the stale average outright (S-batch
+                // local progress is thrown away)
+                inflight.sum.iter().map(|v| v / p).collect()
+            };
+            ctx.cluster.workers[member].params = blended;
+        }
+        self.local_broadcast(ctx, inflight.group)?;
+        self.stats.global_syncs += 1;
+        self.stats.nonblocking_syncs += 1;
+        Ok(())
+    }
+}
+
+impl Strategy for Daso {
+    fn name(&self) -> &'static str {
+        "daso"
+    }
+
+    fn on_epoch_start(&mut self, epoch: usize) {
+        self.epoch = epoch;
+    }
+
+    fn apply(&mut self, ctx: &mut StepCtx) -> Result<()> {
+        // 1. local sync + local optimizer step — every batch, every phase
+        self.local_sync(ctx)?;
+        self.local_update(ctx)?;
+
+        match self.phase() {
+            Phase::Warmup | Phase::Cooldown => {
+                // flush any sync left in flight from the cycling phase
+                if self.inflight.is_some() {
+                    self.complete_nonblocking(ctx)?;
+                }
+                self.blocking_global_sync(ctx)?;
+            }
+            Phase::Cycling => {
+                if let Some(inf) = &self.inflight {
+                    if ctx.global_batch >= inf.start_batch + inf.wait {
+                        self.complete_nonblocking(ctx)?;
+                    }
+                }
+                if self.inflight.is_none()
+                    && ctx.global_batch % self.cycler.b.max(1) == 0
+                {
+                    self.start_nonblocking(ctx);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn on_epoch_end(&mut self, epoch: usize, train_loss: f64) {
+        // B/W cycling is only active during the cycling phase
+        if self.schedule.phase(epoch) == Phase::Cycling {
+            self.cycler.observe_loss(train_loss);
+        }
+    }
+
+    fn finalize(&mut self, ctx: &mut StepCtx) -> Result<()> {
+        if self.inflight.is_some() {
+            self.complete_nonblocking(ctx)?;
+        }
+        Ok(())
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        self.stats.clone()
+    }
+
+    fn state_desc(&self) -> String {
+        format!(
+            "phase={:?} B={} W={} next_group={}",
+            self.phase(),
+            self.cycler.b,
+            self.cycler.w,
+            self.rotation.peek()
+        )
+    }
+}

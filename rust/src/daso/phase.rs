@@ -1,0 +1,66 @@
+//! DASO's three training phases (paper section 3): warm-up and cool-down
+//! use *blocking* global synchronization after every batch; the cycling
+//! phase in between uses *non-blocking* selective synchronization.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Warmup,
+    Cycling,
+    Cooldown,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseSchedule {
+    pub total_epochs: usize,
+    pub warmup_epochs: usize,
+    pub cooldown_epochs: usize,
+}
+
+impl PhaseSchedule {
+    pub fn new(total_epochs: usize, warmup_epochs: usize, cooldown_epochs: usize) -> Self {
+        Self { total_epochs, warmup_epochs, cooldown_epochs }
+    }
+
+    pub fn phase(&self, epoch: usize) -> Phase {
+        if epoch < self.warmup_epochs {
+            Phase::Warmup
+        } else if epoch + self.cooldown_epochs >= self.total_epochs {
+            Phase::Cooldown
+        } else {
+            Phase::Cycling
+        }
+    }
+
+    pub fn cycling_epochs(&self) -> usize {
+        self.total_epochs
+            .saturating_sub(self.warmup_epochs + self.cooldown_epochs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_in_order() {
+        let s = PhaseSchedule::new(10, 2, 3);
+        let phases: Vec<Phase> = (0..10).map(|e| s.phase(e)).collect();
+        assert_eq!(&phases[0..2], &[Phase::Warmup, Phase::Warmup]);
+        assert!(phases[2..7].iter().all(|&p| p == Phase::Cycling));
+        assert!(phases[7..10].iter().all(|&p| p == Phase::Cooldown));
+        assert_eq!(s.cycling_epochs(), 5);
+    }
+
+    #[test]
+    fn degenerate_all_warmup_cooldown() {
+        let s = PhaseSchedule::new(4, 2, 2);
+        assert_eq!(s.cycling_epochs(), 0);
+        assert!((0..4).all(|e| s.phase(e) != Phase::Cycling));
+    }
+
+    #[test]
+    fn zero_warmup_cooldown_is_all_cycling() {
+        let s = PhaseSchedule::new(5, 0, 0);
+        assert!((0..5).all(|e| s.phase(e) == Phase::Cycling));
+    }
+}

@@ -1,0 +1,220 @@
+//! Synthetic classification data (the ImageNet stand-in).
+//!
+//! `VectorClusters`: K Gaussian clusters in feature space; label = cluster.
+//! `SyntheticImages`: per-class low-frequency image prototypes (random
+//! coarse pattern bilinearly upsampled) + per-sample noise + random
+//! brightness, so a conv net must learn spatial structure, not a lookup.
+
+use crate::runtime::Batch;
+use crate::util::rng::Rng;
+
+use super::Dataset;
+
+/// K Gaussian clusters in R^d.
+pub struct VectorClusters {
+    n: usize,
+    dim: usize,
+    n_classes: usize,
+    centers: Vec<Vec<f32>>, // [class][dim]
+    seed: u64,
+    noise: f32,
+}
+
+impl VectorClusters {
+    pub fn new(n: usize, dim: usize, n_classes: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xC1A5_5E5);
+        let centers = (0..n_classes)
+            .map(|_| {
+                let mut c = vec![0.0; dim];
+                rng.fill_normal(&mut c, 1.5);
+                c
+            })
+            .collect();
+        Self { n, dim, n_classes, centers, seed, noise: 0.6 }
+    }
+
+    fn sample(&self, idx: usize, x: &mut [f32]) -> i32 {
+        let mut rng = Rng::new(self.seed.wrapping_add(idx as u64 * 0x9E37));
+        let label = idx % self.n_classes; // balanced classes
+        let c = &self.centers[label];
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = c[i] + rng.normal() * self.noise;
+        }
+        label as i32
+    }
+}
+
+impl Dataset for VectorClusters {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn batch(&self, indices: &[usize]) -> (Batch, Vec<i32>) {
+        let mut x = vec![0.0f32; indices.len() * self.dim];
+        let mut y = vec![0i32; indices.len()];
+        for (bi, &idx) in indices.iter().enumerate() {
+            y[bi] = self.sample(idx, &mut x[bi * self.dim..(bi + 1) * self.dim]);
+        }
+        (Batch::F32(x), y)
+    }
+}
+
+/// Bilinear upsample of a (s, s, c) coarse grid to (size, size, c).
+fn upsample_bilinear(coarse: &[f32], s: usize, c: usize, size: usize, out: &mut [f32]) {
+    let scale = s as f32 / size as f32;
+    for y in 0..size {
+        for x in 0..size {
+            let fy = (y as f32 + 0.5) * scale - 0.5;
+            let fx = (x as f32 + 0.5) * scale - 0.5;
+            let y0 = fy.floor().max(0.0) as usize;
+            let x0 = fx.floor().max(0.0) as usize;
+            let y1 = (y0 + 1).min(s - 1);
+            let x1 = (x0 + 1).min(s - 1);
+            let wy = (fy - y0 as f32).clamp(0.0, 1.0);
+            let wx = (fx - x0 as f32).clamp(0.0, 1.0);
+            for ch in 0..c {
+                let g = |yy: usize, xx: usize| coarse[(yy * s + xx) * c + ch];
+                let v = g(y0, x0) * (1.0 - wy) * (1.0 - wx)
+                    + g(y0, x1) * (1.0 - wy) * wx
+                    + g(y1, x0) * wy * (1.0 - wx)
+                    + g(y1, x1) * wy * wx;
+                out[(y * size + x) * c + ch] = v;
+            }
+        }
+    }
+}
+
+/// Low-frequency class-prototype images.
+pub struct SyntheticImages {
+    n: usize,
+    size: usize,
+    channels: usize,
+    n_classes: usize,
+    prototypes: Vec<Vec<f32>>, // [class][size*size*channels]
+    seed: u64,
+    noise: f32,
+}
+
+impl SyntheticImages {
+    pub fn new(n: usize, size: usize, channels: usize, n_classes: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x1_4A6E);
+        let coarse_s = 8.min(size);
+        let prototypes = (0..n_classes)
+            .map(|_| {
+                let mut coarse = vec![0.0f32; coarse_s * coarse_s * channels];
+                rng.fill_normal(&mut coarse, 1.0);
+                let mut img = vec![0.0f32; size * size * channels];
+                upsample_bilinear(&coarse, coarse_s, channels, size, &mut img);
+                img
+            })
+            .collect();
+        Self { n, size, channels, n_classes, prototypes, seed, noise: 0.5 }
+    }
+
+    fn elems(&self) -> usize {
+        self.size * self.size * self.channels
+    }
+
+    fn sample(&self, idx: usize, x: &mut [f32]) -> i32 {
+        let mut rng = Rng::new(self.seed.wrapping_add(idx as u64 * 0x51_AB));
+        let label = idx % self.n_classes;
+        let proto = &self.prototypes[label];
+        let brightness = rng.range_f32(-0.3, 0.3);
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = proto[i] + brightness + rng.normal() * self.noise;
+        }
+        label as i32
+    }
+}
+
+impl Dataset for SyntheticImages {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn batch(&self, indices: &[usize]) -> (Batch, Vec<i32>) {
+        let e = self.elems();
+        let mut x = vec![0.0f32; indices.len() * e];
+        let mut y = vec![0i32; indices.len()];
+        for (bi, &idx) in indices.iter().enumerate() {
+            y[bi] = self.sample(idx, &mut x[bi * e..(bi + 1) * e]);
+        }
+        (Batch::F32(x), y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_batches() {
+        let d = VectorClusters::new(100, 8, 4, 7);
+        let (x1, y1) = d.batch(&[0, 5, 9]);
+        let (x2, y2) = d.batch(&[0, 5, 9]);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let d = VectorClusters::new(100, 8, 4, 7);
+        let (_, y) = d.batch(&(0..100).collect::<Vec<_>>());
+        for c in 0..4 {
+            assert_eq!(y.iter().filter(|&&v| v == c).count(), 25);
+        }
+    }
+
+    #[test]
+    fn clusters_are_separable() {
+        // nearest-centroid on the generating centers should beat chance by far
+        let d = VectorClusters::new(400, 16, 4, 3);
+        let (x, y) = d.batch(&(0..400).collect::<Vec<_>>());
+        let x = x.as_f32().unwrap();
+        let mut correct = 0;
+        for i in 0..400 {
+            let xi = &x[i * 16..(i + 1) * 16];
+            let mut best = (f32::INFINITY, 0usize);
+            for (c, center) in d.centers.iter().enumerate() {
+                let dist: f32 = xi.iter().zip(center).map(|(a, b)| (a - b) * (a - b)).sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 as i32 == y[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct > 350, "only {correct}/400 separable");
+    }
+
+    #[test]
+    fn images_shapes_and_determinism() {
+        let d = SyntheticImages::new(50, 16, 3, 5, 11);
+        let (x, y) = d.batch(&[1, 2]);
+        assert_eq!(x.len(), 2 * 16 * 16 * 3);
+        assert_eq!(y.len(), 2);
+        let (x2, _) = d.batch(&[1, 2]);
+        assert_eq!(x, x2);
+    }
+
+    #[test]
+    fn image_prototypes_differ_between_classes() {
+        let d = SyntheticImages::new(50, 16, 3, 3, 13);
+        let a = &d.prototypes[0];
+        let b = &d.prototypes[1];
+        let diff: f32 = a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f32>()
+            / a.len() as f32;
+        assert!(diff > 0.3, "prototypes too similar: {diff}");
+    }
+
+    #[test]
+    fn upsample_constant_is_constant() {
+        let coarse = vec![2.5f32; 4 * 4 * 1];
+        let mut out = vec![0.0f32; 16 * 16];
+        upsample_bilinear(&coarse, 4, 1, 16, &mut out);
+        for v in out {
+            assert!((v - 2.5).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Synthetic semantic-segmentation scenes (the CityScapes stand-in).
+//!
+//! Each scene: a textured background (class 0) with several random
+//! axis-aligned rectangles and discs, each belonging to a semantic class
+//! with a class-characteristic colour + texture. The per-pixel label map
+//! is exact, so IOU behaves like the paper's metric: a net must learn the
+//! colour/texture -> class mapping and the object boundaries.
+
+use crate::runtime::Batch;
+use crate::util::rng::Rng;
+
+use super::Dataset;
+
+#[derive(Clone, Copy)]
+enum Shape {
+    Rect { y0: usize, x0: usize, y1: usize, x1: usize },
+    Disc { cy: f32, cx: f32, r: f32 },
+}
+
+impl Shape {
+    fn contains(&self, y: usize, x: usize) -> bool {
+        match *self {
+            Shape::Rect { y0, x0, y1, x1 } => y >= y0 && y < y1 && x >= x0 && x < x1,
+            Shape::Disc { cy, cx, r } => {
+                let dy = y as f32 - cy;
+                let dx = x as f32 - cx;
+                dy * dy + dx * dx <= r * r
+            }
+        }
+    }
+}
+
+pub struct SyntheticScenes {
+    n: usize,
+    size: usize,
+    channels: usize,
+    n_classes: usize,
+    /// per-class base colour (channels) — class 0 is background
+    class_colors: Vec<Vec<f32>>,
+    seed: u64,
+    noise: f32,
+}
+
+impl SyntheticScenes {
+    pub fn new(n: usize, size: usize, channels: usize, n_classes: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x5E6_AE17);
+        let class_colors = (0..n_classes)
+            .map(|_| {
+                let mut c = vec![0.0; channels];
+                rng.fill_normal(&mut c, 1.2);
+                c
+            })
+            .collect();
+        Self { n, size, channels, n_classes, class_colors, seed, noise: 0.35 }
+    }
+
+    fn elems(&self) -> usize {
+        self.size * self.size * self.channels
+    }
+
+    fn sample(&self, idx: usize, x: &mut [f32], y: &mut [i32]) {
+        let mut rng = Rng::new(self.seed.wrapping_add(idx as u64 * 0xA11CE));
+        let s = self.size;
+
+        // background
+        let bg = &self.class_colors[0];
+        for py in 0..s {
+            for px in 0..s {
+                y[py * s + px] = 0;
+                for ch in 0..self.channels {
+                    x[(py * s + px) * self.channels + ch] = bg[ch] + rng.normal() * self.noise;
+                }
+            }
+        }
+
+        // 1..=3 foreground objects, later objects occlude earlier ones
+        let n_obj = 1 + rng.below(3);
+        for _ in 0..n_obj {
+            let class = 1 + rng.below(self.n_classes - 1);
+            let shape = if rng.next_u64() & 1 == 0 {
+                let h = 4 + rng.below(s / 2);
+                let w = 4 + rng.below(s / 2);
+                let y0 = rng.below(s - h.min(s - 1));
+                let x0 = rng.below(s - w.min(s - 1));
+                Shape::Rect { y0, x0, y1: (y0 + h).min(s), x1: (x0 + w).min(s) }
+            } else {
+                Shape::Disc {
+                    cy: rng.range_f32(4.0, (s - 4) as f32),
+                    cx: rng.range_f32(4.0, (s - 4) as f32),
+                    r: rng.range_f32(3.0, s as f32 / 3.0),
+                }
+            };
+            let color = &self.class_colors[class];
+            for py in 0..s {
+                for px in 0..s {
+                    if shape.contains(py, px) {
+                        y[py * s + px] = class as i32;
+                        for ch in 0..self.channels {
+                            x[(py * s + px) * self.channels + ch] =
+                                color[ch] + rng.normal() * self.noise;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Dataset for SyntheticScenes {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn batch(&self, indices: &[usize]) -> (Batch, Vec<i32>) {
+        let e = self.elems();
+        let pix = self.size * self.size;
+        let mut x = vec![0.0f32; indices.len() * e];
+        let mut y = vec![0i32; indices.len() * pix];
+        for (bi, &idx) in indices.iter().enumerate() {
+            self.sample(idx, &mut x[bi * e..(bi + 1) * e], &mut y[bi * pix..(bi + 1) * pix]);
+        }
+        (Batch::F32(x), y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let d = SyntheticScenes::new(10, 16, 3, 5, 3);
+        let (x1, y1) = d.batch(&[0, 3]);
+        let (x2, y2) = d.batch(&[0, 3]);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn labels_in_range_and_foreground_present() {
+        let d = SyntheticScenes::new(30, 16, 3, 5, 4);
+        let (_, y) = d.batch(&(0..30).collect::<Vec<_>>());
+        assert!(y.iter().all(|&v| (0..5).contains(&v)));
+        let fg = y.iter().filter(|&&v| v > 0).count();
+        let total = y.len();
+        assert!(fg > total / 20, "almost no foreground: {fg}/{total}");
+        assert!(fg < total, "no background left");
+    }
+
+    #[test]
+    fn class_colors_distinct() {
+        let d = SyntheticScenes::new(5, 16, 3, 6, 9);
+        for a in 0..6 {
+            for b in (a + 1)..6 {
+                let diff: f32 = d.class_colors[a]
+                    .iter()
+                    .zip(&d.class_colors[b])
+                    .map(|(x, y)| (x - y).abs())
+                    .sum();
+                assert!(diff > 0.1, "classes {a},{b} same colour");
+            }
+        }
+    }
+
+    #[test]
+    fn pixels_correlate_with_labels() {
+        // mean colour of class-c pixels should be closer to class_colors[c]
+        // than to other classes' colours (the learnable signal exists)
+        let d = SyntheticScenes::new(50, 16, 3, 4, 17);
+        let (x, y) = d.batch(&(0..50).collect::<Vec<_>>());
+        let x = x.as_f32().unwrap();
+        let pix = 16 * 16;
+        let mut sums = vec![vec![0.0f64; 3]; 4];
+        let mut counts = vec![0usize; 4];
+        for i in 0..50 {
+            for p in 0..pix {
+                let c = y[i * pix + p] as usize;
+                counts[c] += 1;
+                for ch in 0..3 {
+                    sums[c][ch] += x[(i * pix + p) * 3 + ch] as f64;
+                }
+            }
+        }
+        for c in 0..4 {
+            if counts[c] == 0 {
+                continue;
+            }
+            let mean: Vec<f32> = sums[c].iter().map(|&s| (s / counts[c] as f64) as f32).collect();
+            let mut best = (f32::INFINITY, 0usize);
+            for (k, col) in d.class_colors.iter().enumerate() {
+                let dist: f32 = mean.iter().zip(col).map(|(a, b)| (a - b) * (a - b)).sum();
+                if dist < best.0 {
+                    best = (dist, k);
+                }
+            }
+            assert_eq!(best.1, c, "class {c} mean colour nearest to class {}", best.1);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! iid data sharding across workers (the paper's distributed batch).
+//!
+//! Each worker owns a disjoint stride-partition of the dataset (the
+//! paper's loaders "need only know how many GPUs exist and what their
+//! global rank is" — section 3.1). Per epoch, each shard is reshuffled
+//! with a worker+epoch-derived seed; batches are drawn sequentially.
+
+use crate::util::rng::Rng;
+
+/// One worker's view of the dataset.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    /// sample indices owned by this worker (stride partition)
+    indices: Vec<usize>,
+    worker: usize,
+    seed: u64,
+}
+
+impl Shard {
+    /// Partition `dataset_len` samples over `world` workers; this is
+    /// worker `rank`'s shard.
+    pub fn new(dataset_len: usize, world: usize, rank: usize, seed: u64) -> Self {
+        assert!(rank < world);
+        let indices = (rank..dataset_len).step_by(world).collect();
+        Self { indices, worker: rank, seed }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Number of full batches per epoch at the given local batch size.
+    pub fn batches_per_epoch(&self, batch: usize) -> usize {
+        self.len() / batch
+    }
+
+    /// The sample indices of batch `b` in epoch `e` (shuffled per epoch).
+    pub fn epoch_order(&self, epoch: usize) -> Vec<usize> {
+        let mut order = self.indices.clone();
+        let mut rng = Rng::new(
+            self.seed ^ (self.worker as u64) << 32 ^ epoch as u64 ^ 0x0E70C,
+        );
+        rng.shuffle(&mut order);
+        order
+    }
+
+    pub fn raw_indices(&self) -> &[usize] {
+        &self.indices
+    }
+}
+
+/// Iterator over one epoch's batches for one worker.
+pub struct EpochBatches {
+    order: Vec<usize>,
+    batch: usize,
+    cursor: usize,
+}
+
+impl EpochBatches {
+    pub fn new(shard: &Shard, epoch: usize, batch: usize) -> Self {
+        Self { order: shard.epoch_order(epoch), batch, cursor: 0 }
+    }
+}
+
+impl Iterator for EpochBatches {
+    type Item = Vec<usize>;
+
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.cursor + self.batch > self.order.len() {
+            return None;
+        }
+        let out = self.order[self.cursor..self.cursor + self.batch].to_vec();
+        self.cursor += self.batch;
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn prop_shards_partition_dataset() {
+        run_prop("shards-partition", 50, |g| {
+            let len = g.usize_in(1, 500);
+            let world = g.usize_in(1, 16);
+            let mut seen = vec![false; len];
+            for r in 0..world {
+                let shard = Shard::new(len, world, r, 1);
+                for &i in shard.raw_indices() {
+                    assert!(!seen[i], "sample {i} in two shards");
+                    seen[i] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "shards must cover the dataset");
+        });
+    }
+
+    #[test]
+    fn prop_shards_balanced() {
+        run_prop("shards-balanced", 50, |g| {
+            let len = g.usize_in(10, 500);
+            let world = g.usize_in(1, 10);
+            let sizes: Vec<usize> =
+                (0..world).map(|r| Shard::new(len, world, r, 1).len()).collect();
+            let min = *sizes.iter().min().unwrap();
+            let max = *sizes.iter().max().unwrap();
+            assert!(max - min <= 1, "unbalanced shards: {sizes:?}");
+        });
+    }
+
+    #[test]
+    fn epoch_order_is_permutation_and_varies() {
+        let shard = Shard::new(100, 4, 2, 7);
+        let e0 = shard.epoch_order(0);
+        let e1 = shard.epoch_order(1);
+        let mut s0 = e0.clone();
+        s0.sort();
+        assert_eq!(s0, shard.raw_indices().to_vec());
+        assert_ne!(e0, e1, "epochs should reshuffle");
+        assert_eq!(shard.epoch_order(0), e0, "same epoch must be deterministic");
+    }
+
+    #[test]
+    fn batch_iterator_drops_remainder() {
+        let shard = Shard::new(103, 4, 0, 1); // 26 samples
+        let batches: Vec<_> = EpochBatches::new(&shard, 0, 8).collect();
+        assert_eq!(batches.len(), 3); // 26/8
+        assert!(batches.iter().all(|b| b.len() == 8));
+    }
+
+    #[test]
+    fn different_workers_different_data() {
+        let a = Shard::new(100, 4, 0, 1);
+        let b = Shard::new(100, 4, 1, 1);
+        for i in a.raw_indices() {
+            assert!(!b.raw_indices().contains(i));
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! # DASO — Distributed Asynchronous and Selective Optimization
+//!
+//! A rust + JAX + Pallas reproduction of Coquelin et al., *"Accelerating
+//! Neural Network Training with Distributed Asynchronous and Selective
+//! Optimization (DASO)"* (2021, DOI 10.1186/s40537-021-00556-1).
+//!
+//! Three layers, Python never on the request path:
+//! - **L3 (this crate)**: the coordinator — simulated multi-node
+//!   multi-GPU cluster, hierarchical communication, the DASO optimizer
+//!   state machine, baselines, trainer, strong-scaling projector, CLI.
+//! - **L2**: JAX models AOT-lowered to HLO text by `make artifacts`.
+//! - **L1**: Pallas kernels (fused matmul, fused SGD, Eq.-1 blend, local
+//!   average) baked into those artifacts.
+//!
+//! Quick usage (mirrors the paper's Listing-1 four-call API):
+//!
+//! ```no_run
+//! use daso::prelude::*;
+//!
+//! let engine = Engine::load("artifacts")?;            // 1. runtime
+//! let rt = engine.model("mlp")?;                      // 2. model artifacts
+//! let cfg = TrainConfig::quick(2, 4, 10);             //    2 nodes x 4 GPUs
+//! let (train_d, val_d) = daso::data::for_model(&rt.spec, 2048, 512, 42)?;
+//! let mut opt = Daso::new(DasoConfig::new(cfg.epochs), cfg.gpus_per_node);
+//! let report = train(&rt, &cfg, &*train_d, &*val_d, &mut opt)?; // 3+4
+//! println!("{}", report.summary_line());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod baselines;
+pub mod bench_support;
+pub mod cli;
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod daso;
+pub mod data;
+pub mod figures;
+pub mod optim;
+pub mod runtime;
+pub mod simtime;
+pub mod trainer;
+pub mod util;
+
+/// Convenient re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::baselines::{AsgdServer, Horovod, HorovodConfig, LocalOnly};
+    pub use crate::comm::{Fabric, Link, Topology, Wire};
+    pub use crate::daso::{Daso, DasoConfig, Phase};
+    pub use crate::runtime::{Batch, Engine, Metric, ModelRuntime};
+    pub use crate::simtime::Workload;
+    pub use crate::trainer::{train, RunReport, Strategy, TrainConfig};
+}

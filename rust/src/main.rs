@@ -1,0 +1,244 @@
+//! `daso` — leader entrypoint / CLI for the DASO reproduction.
+
+use anyhow::{bail, Result};
+
+use daso::cli::{Args, HELP};
+use daso::config::RunSpec;
+use daso::figures;
+use daso::runtime::Engine;
+use daso::simtime::Workload;
+use daso::trainer::{log as runlog, train};
+use daso::util::stats::l2_norm;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "figures" => cmd_figures(&args),
+        "project" => cmd_project(&args),
+        "selfcheck" => cmd_selfcheck(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn build_spec(args: &Args) -> Result<RunSpec> {
+    let model = args.get("model").unwrap_or("mlp");
+    let mut spec = RunSpec::default_for(model);
+    if let Some(path) = args.get("config") {
+        spec.load_file(path)?;
+    }
+    if let Some(model) = args.get("model") {
+        spec.model = model.to_string();
+    }
+    if let Some(strategy) = args.get("strategy") {
+        spec.set(&format!("strategy={strategy}"))?;
+    }
+    if let Some(artifacts) = args.get("artifacts") {
+        spec.artifacts_dir = artifacts.to_string();
+    }
+    if let Some(out) = args.get("out") {
+        spec.out_dir = Some(out.to_string());
+    }
+    for assignment in args.get_all("set") {
+        spec.set(assignment)?;
+    }
+    Ok(spec)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let spec = build_spec(args)?;
+    let engine = Engine::load(&spec.artifacts_dir)?;
+    let rt = engine.model(&spec.model)?;
+    let (train_d, val_d) = daso::data::for_model(
+        &rt.spec,
+        spec.train.train_samples,
+        spec.train.val_samples,
+        spec.train.seed,
+    )?;
+    let mut strategy = spec.build_strategy();
+    eprintln!(
+        "training {} with {} on {}x{} simulated GPUs ({} epochs)",
+        spec.model,
+        spec.strategy.name(),
+        spec.train.nodes,
+        spec.train.gpus_per_node,
+        spec.train.epochs
+    );
+    let report = train(&rt, &spec.train, &*train_d, &*val_d, strategy.as_mut())?;
+    println!("{}", report.summary_line());
+    println!("{}", runlog::report_json(&report).to_string_pretty());
+    if let Some(dir) = &spec.out_dir {
+        let base = std::path::Path::new(dir);
+        let tag = format!("{}_{}", spec.model, spec.strategy.name());
+        runlog::write_csv(&report, &base.join(format!("{tag}.csv")))?;
+        runlog::write_json(&report, &base.join(format!("{tag}.json")))?;
+        eprintln!("wrote {dir}/{tag}.{{csv,json}}");
+    }
+    Ok(())
+}
+
+/// Run every strategy on the same model/config and print a comparison —
+/// the quickest way to see the paper's trade-offs side by side.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let base = build_spec(args)?;
+    let engine = Engine::load(&base.artifacts_dir)?;
+    let rt = engine.model(&base.model)?;
+    let (train_d, val_d) = daso::data::for_model(
+        &rt.spec,
+        base.train.train_samples,
+        base.train.val_samples,
+        base.train.seed,
+    )?;
+    let mut rows = Vec::new();
+    for kind in ["daso", "horovod", "asgd", "local_only"] {
+        let mut spec = base.clone();
+        spec.set(&format!("strategy={kind}"))?;
+        let mut strategy = spec.build_strategy();
+        let report = train(&rt, &spec.train, &*train_d, &*val_d, strategy.as_mut())?;
+        eprintln!("{}", report.summary_line());
+        rows.push(vec![
+            kind.to_string(),
+            format!("{:.4}", report.final_metric),
+            format!("{:.4}", report.records.last().map_or(0.0, |r| r.train_loss)),
+            format!("{:.1}", report.total_sim_time_s),
+            format!("{:.1}", report.comm.bytes_inter as f64 / (1 << 20) as f64),
+            format!("{}", report.comm.global_syncs),
+        ]);
+    }
+    daso::bench_support::print_table(
+        &format!(
+            "strategy sweep — {} on {}x{} GPUs, {} epochs",
+            base.model, base.train.nodes, base.train.gpus_per_node, base.train.epochs
+        ),
+        &["strategy", "final metric", "final loss", "sim time (s)", "inter MiB", "global syncs"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let quick = args.get_bool("quick");
+    let fig = args.get_usize("fig")?.unwrap_or(0);
+    let full_nodes: &[usize] = &[4, 8, 16, 32, 64];
+    match fig {
+        6 => figures::print_scaling(
+            "Fig. 6 — ResNet-50/ImageNet training time (projected)",
+            &figures::fig6(full_nodes),
+        ),
+        8 => figures::print_scaling(
+            "Fig. 8 — HRNet/CityScapes training time (projected)",
+            &figures::fig8(full_nodes),
+        ),
+        7 => {
+            let engine = Engine::load(args.get("artifacts").unwrap_or("artifacts"))?;
+            let rows = figures::fig7(&engine, quick)?;
+            figures::print_accuracy("Fig. 7 — top-1 accuracy vs scale", "top-1", &rows);
+        }
+        9 => {
+            let engine = Engine::load(args.get("artifacts").unwrap_or("artifacts"))?;
+            let rows = figures::fig9(&engine, quick)?;
+            figures::print_accuracy("Fig. 9 — IOU vs scale", "IOU", &rows);
+        }
+        other => bail!("--fig must be 6, 7, 8 or 9 (got {other})"),
+    }
+    Ok(())
+}
+
+fn cmd_project(args: &Args) -> Result<()> {
+    let workload = match args.get("workload").unwrap_or("resnet50") {
+        "resnet50" | "resnet" => Workload::resnet50_imagenet(),
+        "hrnet" | "cityscapes" => Workload::hrnet_cityscapes(),
+        other => bail!("unknown workload {other:?} (resnet50|hrnet)"),
+    };
+    let nodes = args
+        .get_usize_list("nodes")?
+        .unwrap_or_else(|| vec![4, 8, 16, 32, 64]);
+    let gpn = args.get_usize("gpn")?.unwrap_or(4);
+    let rows = daso::simtime::scaling_table(
+        &workload,
+        &nodes,
+        gpn,
+        &daso::comm::Fabric::juwels_like(),
+    );
+    figures::print_scaling(&format!("strong scaling — {}", workload.name), &rows);
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    let engine = Engine::load(artifacts)?;
+    println!("platform: {}", engine.platform());
+    let names: Vec<String> = engine.manifest.models.keys().cloned().collect();
+    let mut failures = 0;
+    for name in &names {
+        let rt = engine.model(name)?;
+        let sc = rt.spec.selfcheck.clone();
+        let params = rt.init_params()?;
+        let (x, y) = rt.probe_batch()?;
+        let (loss, grads) = rt.grad(&params, &x, &y)?;
+        let (aux, loss_sum) = rt.eval(&params, &x, &y)?;
+        let grad_l2 = l2_norm(&grads);
+        let ok = (loss - sc.loss).abs() <= 1e-4 * sc.loss.abs().max(1.0)
+            && (grad_l2 - sc.grad_l2).abs() <= 1e-3 * sc.grad_l2.abs().max(1.0)
+            && grads[..8]
+                .iter()
+                .zip(&sc.grad_head)
+                .all(|(a, b)| (a - b).abs() <= 1e-4 * b.abs().max(1e-3))
+            && aux
+                .iter()
+                .zip(&sc.aux)
+                .all(|(a, b)| (a - b).abs() <= 1e-3 * b.abs().max(1.0))
+            && (loss_sum - sc.loss_sum).abs() <= 1e-3 * sc.loss_sum.abs().max(1.0);
+        println!(
+            "{name:>12}: loss {loss:.6} (expect {:.6})  grad_l2 {grad_l2:.4} (expect {:.4})  {}",
+            sc.loss,
+            sc.grad_l2,
+            if ok { "OK" } else { "MISMATCH" }
+        );
+        if !ok {
+            failures += 1;
+        }
+    }
+    if failures > 0 {
+        bail!("{failures}/{} model(s) failed the parity probe", names.len());
+    }
+    println!("all {} models match the python-side outputs", names.len());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    let manifest = daso::runtime::Manifest::load(artifacts)?;
+    println!("artifacts: {:?}", manifest.root);
+    println!("gpus_per_node (avg artifact): {}", manifest.gpus_per_node);
+    for (name, m) in &manifest.models {
+        println!(
+            "  {name:>12}: {} params, batch {}, x{:?} {:?}, metric {}",
+            m.n_params,
+            m.batch,
+            m.x_shape,
+            m.x_dtype,
+            m.metric.label()
+        );
+    }
+    Ok(())
+}

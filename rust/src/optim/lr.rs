@@ -1,0 +1,124 @@
+//! Learning-rate schedule: linear warm-up to a world-scaled peak, then
+//! plateau-driven decay (the protocol of paper section 4: "the maximum
+//! learning rate is scaled with the number of global processes", 5-epoch
+//! warm-up, decay by a fixed factor when the loss is stable for 5
+//! epochs").
+
+use super::plateau::PlateauDetector;
+
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub base_lr: f64,
+    /// peak = base_lr * scale (typically the world size or sqrt of it)
+    pub scale: f64,
+    pub warmup_epochs: usize,
+    pub decay_factor: f64,
+    pub min_lr: f64,
+    detector: PlateauDetector,
+    current_factor: f64,
+    epoch: usize,
+}
+
+impl LrSchedule {
+    pub fn new(
+        base_lr: f64,
+        scale: f64,
+        warmup_epochs: usize,
+        decay_factor: f64,
+        plateau_patience: usize,
+    ) -> Self {
+        Self {
+            base_lr,
+            scale,
+            warmup_epochs,
+            decay_factor,
+            min_lr: 1e-6,
+            detector: PlateauDetector::new(plateau_patience, 0.005),
+            current_factor: 1.0,
+            epoch: 0,
+        }
+    }
+
+    pub fn peak(&self) -> f64 {
+        self.base_lr * self.scale
+    }
+
+    /// LR for the current epoch.
+    pub fn lr(&self) -> f64 {
+        let peak = self.peak();
+        let lr = if self.epoch < self.warmup_epochs {
+            // linear ramp from base_lr/scale-agnostic small value to peak
+            let frac = (self.epoch + 1) as f64 / self.warmup_epochs as f64;
+            peak * frac
+        } else {
+            peak * self.current_factor
+        };
+        lr.max(self.min_lr)
+    }
+
+    /// Advance one epoch given its mean training loss.
+    pub fn on_epoch_end(&mut self, train_loss: f64) {
+        // plateau decay only active after warm-up
+        if self.epoch >= self.warmup_epochs && self.detector.observe(train_loss) {
+            self.current_factor *= self.decay_factor;
+        }
+        self.epoch += 1;
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let mut s = LrSchedule::new(0.1, 4.0, 5, 0.5, 5);
+        let mut lrs = vec![];
+        for _ in 0..5 {
+            lrs.push(s.lr());
+            s.on_epoch_end(1.0);
+        }
+        assert!((lrs[0] - 0.4 / 5.0).abs() < 1e-12);
+        assert!((lrs[4] - 0.4).abs() < 1e-12);
+        for w in lrs.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn plateau_decays_after_warmup() {
+        let mut s = LrSchedule::new(0.1, 1.0, 2, 0.5, 2);
+        // warmup
+        s.on_epoch_end(5.0);
+        s.on_epoch_end(5.0);
+        let peak = s.lr();
+        // stall for patience epochs
+        s.on_epoch_end(5.0); // baseline best
+        s.on_epoch_end(5.0);
+        s.on_epoch_end(5.0);
+        assert!(s.lr() < peak, "{} !< {}", s.lr(), peak);
+    }
+
+    #[test]
+    fn improving_loss_keeps_peak() {
+        let mut s = LrSchedule::new(0.1, 1.0, 1, 0.5, 3);
+        s.on_epoch_end(10.0);
+        for i in 0..20 {
+            s.on_epoch_end(10.0 * 0.8f64.powi(i));
+        }
+        assert!((s.lr() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lr_never_below_min() {
+        let mut s = LrSchedule::new(1e-5, 1.0, 0, 0.1, 1);
+        for _ in 0..50 {
+            s.on_epoch_end(1.0);
+        }
+        assert!(s.lr() >= s.min_lr);
+    }
+}

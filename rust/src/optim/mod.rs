@@ -1,0 +1,9 @@
+//! Optimization-policy components shared across strategies: the plateau
+//! detector (drives both LR decay and DASO's B/W cycling) and the paper's
+//! warm-up + plateau-decay learning-rate schedule.
+
+pub mod lr;
+pub mod plateau;
+
+pub use lr::LrSchedule;
+pub use plateau::PlateauDetector;

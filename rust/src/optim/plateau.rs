@@ -1,0 +1,103 @@
+//! Training-loss plateau detection — shared by the LR scheduler ("decays
+//! ... when the training cross entropy loss is stable for 5 epochs",
+//! section 4.1) and DASO's B/W cycling policy ("each time the training
+//! loss plateaus", section 3).
+
+/// Declares a plateau when the observed loss has not improved by more
+/// than `rel_threshold` (relative) over the best seen, for `patience`
+/// consecutive observations.
+#[derive(Debug, Clone)]
+pub struct PlateauDetector {
+    pub patience: usize,
+    pub rel_threshold: f64,
+    best: f64,
+    stale: usize,
+}
+
+impl PlateauDetector {
+    pub fn new(patience: usize, rel_threshold: f64) -> Self {
+        assert!(patience >= 1);
+        Self { patience, rel_threshold, best: f64::INFINITY, stale: 0 }
+    }
+
+    /// Feed one loss observation; returns true when a plateau is declared
+    /// (and resets the stale counter so plateaus re-arm).
+    pub fn observe(&mut self, loss: f64) -> bool {
+        let improved = loss < self.best * (1.0 - self.rel_threshold) || self.best.is_infinite();
+        if improved {
+            self.best = loss;
+            self.stale = 0;
+            return false;
+        }
+        self.stale += 1;
+        if self.stale >= self.patience {
+            self.stale = 0;
+            // re-baseline so the next plateau requires a fresh stall
+            self.best = loss.min(self.best);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn best(&self) -> f64 {
+        self.best
+    }
+
+    pub fn reset(&mut self) {
+        self.best = f64::INFINITY;
+        self.stale = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn improving_loss_never_plateaus() {
+        let mut d = PlateauDetector::new(3, 0.01);
+        for i in 0..50 {
+            let loss = 10.0 * 0.9f64.powi(i);
+            assert!(!d.observe(loss), "plateaued while improving at step {i}");
+        }
+    }
+
+    #[test]
+    fn flat_loss_plateaus_after_patience() {
+        let mut d = PlateauDetector::new(3, 0.01);
+        assert!(!d.observe(1.0));
+        assert!(!d.observe(1.0));
+        assert!(!d.observe(1.0));
+        assert!(d.observe(1.0)); // 3 stale observations after the best
+    }
+
+    #[test]
+    fn rearms_after_plateau() {
+        let mut d = PlateauDetector::new(2, 0.01);
+        d.observe(1.0);
+        assert!(!d.observe(1.0));
+        assert!(d.observe(1.0)); // first plateau
+        assert!(!d.observe(1.0)); // counter reset
+        assert!(d.observe(1.0)); // second plateau
+    }
+
+    #[test]
+    fn small_improvements_below_threshold_still_stall() {
+        let mut d = PlateauDetector::new(2, 0.05);
+        d.observe(1.0);
+        assert!(!d.observe(0.99)); // <5% improvement: stale
+        assert!(d.observe(0.985));
+    }
+
+    #[test]
+    fn noise_above_threshold_resets() {
+        let mut d = PlateauDetector::new(3, 0.01);
+        d.observe(1.0);
+        d.observe(1.0);
+        assert!(!d.observe(0.5)); // big improvement resets
+        assert!(!d.observe(0.5));
+        assert!(!d.observe(0.5));
+        assert!(d.observe(0.5));
+    }
+}

@@ -1,0 +1,260 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once,
+//! and exposes typed entry points for the five per-model executables.
+//!
+//! This is the only module that touches the `xla` crate's execution API;
+//! everything above it deals in `Vec<f32>` / `Batch`. Python is never on
+//! this path — artifacts were lowered once by `make artifacts`.
+
+use std::cell::RefCell;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::buffers::{scalar_f32, to_f32_vec, Batch};
+use super::manifest::{Manifest, ModelSpec};
+
+/// Cumulative execution counters (per executable kind), for the perf pass.
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_s: f64,
+}
+
+impl ExecStats {
+    fn record(&mut self, dt: f64) {
+        self.calls += 1;
+        self.total_s += dt;
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            1e3 * self.total_s / self.calls as f64
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub grad: ExecStats,
+    pub update: ExecStats,
+    pub eval: ExecStats,
+    pub blend: ExecStats,
+    pub avg: ExecStats,
+}
+
+/// The PJRT client; create once per process, share across model runtimes.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Load the manifest and create the CPU PJRT client.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))
+    }
+
+    /// Compile the full executable set for one model.
+    pub fn model(&self, name: &str) -> Result<ModelRuntime> {
+        let spec = self.manifest.model(name)?.clone();
+        Ok(ModelRuntime {
+            grad: self.compile(&spec.grad_path)?,
+            update: self.compile(&spec.update_path)?,
+            eval: self.compile(&spec.eval_path)?,
+            blend: self.compile(&spec.blend_path)?,
+            avg: self.compile(&spec.avg_path)?,
+            gpus_per_node: self.manifest.gpus_per_node,
+            client: self.client.clone(),
+            spec,
+            stats: Rc::new(RefCell::new(RuntimeStats::default())),
+        })
+    }
+}
+
+/// Compiled executables + metadata for one model. The executables are
+/// shared (one compile) across all simulated GPUs; each worker owns only
+/// its parameter/momentum buffers.
+pub struct ModelRuntime {
+    pub spec: ModelSpec,
+    pub gpus_per_node: usize,
+    grad: xla::PjRtLoadedExecutable,
+    update: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    blend: xla::PjRtLoadedExecutable,
+    avg: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    stats: Rc<RefCell<RuntimeStats>>,
+}
+
+impl ModelRuntime {
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Upload a host f32 slice directly to a device buffer (one copy —
+    /// skips the Literal intermediate the naive path pays; see
+    /// EXPERIMENTS.md section Perf).
+    fn up_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("host->device f32")
+    }
+
+    fn up_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("host->device i32")
+    }
+
+    fn up_batch(&self, batch: &Batch, dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        match batch {
+            Batch::F32(v) => self.up_f32(v, dims),
+            Batch::I32(v) => self.up_i32(v, dims),
+        }
+    }
+
+    fn run_b(
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute_b::<xla::PjRtBuffer>(args).context("PJRT execute_b")?;
+        let lit = result[0][0].to_literal_sync().context("fetch result")?;
+        lit.to_tuple().context("untuple result")
+    }
+
+    /// (params, x, y) -> (loss, grads)
+    pub fn grad(&self, params: &[f32], x: &Batch, y: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let t = Instant::now();
+        let args = [
+            self.up_f32(params, &[self.spec.n_params])?,
+            self.up_batch(x, &self.spec.x_shape)?,
+            self.up_i32(y, &self.spec.y_shape)?,
+        ];
+        let out = Self::run_b(&self.grad, &args)?;
+        anyhow::ensure!(out.len() == 2, "grad returned {} outputs", out.len());
+        let loss = scalar_f32(&out[0])?;
+        let grads = to_f32_vec(&out[1])?;
+        self.stats.borrow_mut().grad.record(t.elapsed().as_secs_f64());
+        Ok((loss, grads))
+    }
+
+    /// (params, momentum, grads, lr) -> (params', momentum')
+    /// This is the fused-SGD Pallas kernel (momentum/weight-decay baked at
+    /// artifact build time; see manifest mu/wd). Results are copied into
+    /// the existing `params`/`momentum` allocations (no new Vecs on the
+    /// per-step hot path).
+    pub fn update(
+        &self,
+        params: &mut Vec<f32>,
+        momentum: &mut Vec<f32>,
+        grads: &[f32],
+        lr: f32,
+    ) -> Result<()> {
+        let t = Instant::now();
+        let n = self.spec.n_params;
+        let args = [
+            self.up_f32(params, &[n])?,
+            self.up_f32(momentum, &[n])?,
+            self.up_f32(grads, &[n])?,
+            self.up_f32(&[lr], &[1])?,
+        ];
+        let out = Self::run_b(&self.update, &args)?;
+        anyhow::ensure!(out.len() == 2, "update returned {} outputs", out.len());
+        out[0].copy_raw_to(params.as_mut_slice()).context("read params'")?;
+        out[1].copy_raw_to(momentum.as_mut_slice()).context("read momentum'")?;
+        self.stats.borrow_mut().update.record(t.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    /// (params, x, y) -> (aux, loss_sum)
+    pub fn eval(&self, params: &[f32], x: &Batch, y: &[i32]) -> Result<(Vec<f32>, f32)> {
+        let t = Instant::now();
+        let args = [
+            self.up_f32(params, &[self.spec.n_params])?,
+            self.up_batch(x, &self.spec.x_shape)?,
+            self.up_i32(y, &self.spec.y_shape)?,
+        ];
+        let out = Self::run_b(&self.eval, &args)?;
+        anyhow::ensure!(out.len() == 2, "eval returned {} outputs", out.len());
+        let aux = to_f32_vec(&out[0])?;
+        let loss_sum = scalar_f32(&out[1])?;
+        self.stats.borrow_mut().eval.record(t.elapsed().as_secs_f64());
+        Ok((aux, loss_sum))
+    }
+
+    /// DASO Eq. (1): (x_local, global_sum, s, p) -> blended params.
+    pub fn blend(&self, x_local: &[f32], global_sum: &[f32], s: f32, p: f32) -> Result<Vec<f32>> {
+        let t = Instant::now();
+        let n = self.spec.n_params;
+        let args = [
+            self.up_f32(x_local, &[n])?,
+            self.up_f32(global_sum, &[n])?,
+            self.up_f32(&[s], &[1])?,
+            self.up_f32(&[p], &[1])?,
+        ];
+        let out = Self::run_b(&self.blend, &args)?;
+        let blended = to_f32_vec(&out[0])?;
+        self.stats.borrow_mut().blend.record(t.elapsed().as_secs_f64());
+        Ok(blended)
+    }
+
+    /// Node-local gradient average (the Pallas local_avg kernel):
+    /// `stacked` is G contiguous gradient vectors; returns their mean.
+    pub fn avg(&self, stacked: &[f32]) -> Result<Vec<f32>> {
+        let t = Instant::now();
+        let g = self.gpus_per_node;
+        let n = self.spec.n_params;
+        anyhow::ensure!(stacked.len() == g * n, "avg expects {}x{} elems", g, n);
+        let args = [self.up_f32(stacked, &[g, n])?];
+        let out = Self::run_b(&self.avg, &args)?;
+        let mean = to_f32_vec(&out[0])?;
+        self.stats.borrow_mut().avg.record(t.elapsed().as_secs_f64());
+        Ok(mean)
+    }
+
+    /// Initial parameters as written by aot.py (identical on every worker,
+    /// matching the paper's "identical copy" data-parallel setup).
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        let params = super::manifest::read_f32_bin(&self.spec.init_path)?;
+        anyhow::ensure!(
+            params.len() == self.spec.n_params,
+            "init params length {} != n_params {}",
+            params.len(),
+            self.spec.n_params
+        );
+        Ok(params)
+    }
+
+    /// Load the self-check probe batch.
+    pub fn probe_batch(&self) -> Result<(Batch, Vec<i32>)> {
+        let x = match self.spec.x_dtype {
+            super::manifest::XDtype::F32 => {
+                Batch::F32(super::manifest::read_f32_bin(&self.spec.selfcheck.probe_x)?)
+            }
+            super::manifest::XDtype::I32 => {
+                Batch::I32(super::manifest::read_i32_bin(&self.spec.selfcheck.probe_x)?)
+            }
+        };
+        let y = super::manifest::read_i32_bin(&self.spec.selfcheck.probe_y)?;
+        Ok((x, y))
+    }
+}

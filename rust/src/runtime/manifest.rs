@@ -1,0 +1,260 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Element type of the model's `x` input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum XDtype {
+    F32,
+    I32,
+}
+
+/// How the eval artifact's aux vector is interpreted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// aux = [count_correct]; metric = correct / total
+    Top1,
+    /// aux = [I_0..I_{C-1}, U_0..U_{C-1}]; metric = mean_c I_c / U_c
+    Iou,
+    /// aux = [count_correct_tokens]; metric = correct / total tokens
+    TokenAcc,
+}
+
+impl Metric {
+    pub fn parse(s: &str) -> Result<Metric> {
+        Ok(match s {
+            "top1" => Metric::Top1,
+            "iou" => Metric::Iou,
+            "token_acc" => Metric::TokenAcc,
+            other => bail!("unknown metric {other:?}"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Metric::Top1 => "top1_accuracy",
+            Metric::Iou => "mean_iou",
+            Metric::TokenAcc => "token_accuracy",
+        }
+    }
+
+    /// Reduce an accumulated aux vector (+ total prediction count) to the
+    /// scalar the paper reports.
+    pub fn reduce(&self, aux: &[f64], total_preds: f64) -> f64 {
+        match self {
+            Metric::Top1 | Metric::TokenAcc => {
+                if total_preds == 0.0 {
+                    0.0
+                } else {
+                    aux[0] / total_preds
+                }
+            }
+            Metric::Iou => {
+                let c = aux.len() / 2;
+                let mut sum = 0.0;
+                let mut present = 0.0;
+                for i in 0..c {
+                    let (inter, union) = (aux[i], aux[c + i]);
+                    if union > 0.0 {
+                        sum += inter / union;
+                        present += 1.0;
+                    }
+                }
+                if present == 0.0 {
+                    0.0
+                } else {
+                    sum / present
+                }
+            }
+        }
+    }
+}
+
+/// Expected outputs for the cross-language parity probe.
+#[derive(Debug, Clone)]
+pub struct SelfCheck {
+    pub loss: f32,
+    pub grad_l2: f64,
+    pub grad_head: Vec<f32>,
+    pub aux: Vec<f32>,
+    pub loss_sum: f32,
+    pub probe_x: PathBuf,
+    pub probe_y: PathBuf,
+}
+
+/// One model's artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_params: usize,
+    pub batch: usize,
+    pub x_shape: Vec<usize>,
+    pub x_dtype: XDtype,
+    pub y_shape: Vec<usize>,
+    pub aux_len: usize,
+    pub metric: Metric,
+    pub mu: f32,
+    pub wd: f32,
+    pub grad_path: PathBuf,
+    pub update_path: PathBuf,
+    pub eval_path: PathBuf,
+    pub blend_path: PathBuf,
+    pub avg_path: PathBuf,
+    pub init_path: PathBuf,
+    pub selfcheck: SelfCheck,
+    /// raw hyperparameter object (model-specific; e.g. n_classes, vocab)
+    pub hyper: Value,
+}
+
+impl ModelSpec {
+    pub fn x_elems(&self) -> usize {
+        self.x_shape.iter().product()
+    }
+
+    pub fn y_elems(&self) -> usize {
+        self.y_shape.iter().product()
+    }
+
+    /// Predictions per batch (for accuracy denominators): y elements.
+    pub fn preds_per_batch(&self) -> usize {
+        self.y_elems()
+    }
+
+    pub fn hyper_usize(&self, key: &str) -> Option<usize> {
+        self.hyper.get(key).and_then(|v| v.as_usize())
+    }
+
+    /// Bytes of one parameter message at a given wire width.
+    pub fn param_bytes(&self, bytes_per_elem: usize) -> usize {
+        self.n_params * bytes_per_elem
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub gpus_per_node: usize,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Value::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let gpus_per_node = v.req_usize("gpus_per_node")?;
+        let mut models = BTreeMap::new();
+        let model_objs = v
+            .req("models")?
+            .as_obj()
+            .context("manifest `models` is not an object")?;
+        for (name, m) in model_objs {
+            let files = m.req("files")?;
+            let sc = m.req("selfcheck")?;
+            let spec = ModelSpec {
+                name: name.clone(),
+                n_params: m.req_usize("n_params")?,
+                batch: m.req_usize("batch")?,
+                x_shape: m.req_usize_arr("x_shape")?,
+                x_dtype: match m.req_str("x_dtype")? {
+                    "f32" => XDtype::F32,
+                    "i32" => XDtype::I32,
+                    other => bail!("unknown x_dtype {other:?}"),
+                },
+                y_shape: m.req_usize_arr("y_shape")?,
+                aux_len: m.req_usize("aux_len")?,
+                metric: Metric::parse(m.req_str("metric")?)?,
+                mu: m.req_f64("mu")? as f32,
+                wd: m.req_f64("wd")? as f32,
+                grad_path: root.join(files.req_str("grad")?),
+                update_path: root.join(files.req_str("update")?),
+                eval_path: root.join(files.req_str("eval")?),
+                blend_path: root.join(files.req_str("blend")?),
+                avg_path: root.join(files.req_str("avg")?),
+                init_path: root.join(m.req_str("init")?),
+                selfcheck: SelfCheck {
+                    loss: sc.req_f64("loss")? as f32,
+                    grad_l2: sc.req_f64("grad_l2")?,
+                    grad_head: sc
+                        .req_f64_arr("grad_head")?
+                        .into_iter()
+                        .map(|v| v as f32)
+                        .collect(),
+                    aux: sc.req_f64_arr("aux")?.into_iter().map(|v| v as f32).collect(),
+                    loss_sum: sc.req_f64("loss_sum")? as f32,
+                    probe_x: root.join(sc.req_str("probe_x")?),
+                    probe_y: root.join(sc.req_str("probe_y")?),
+                },
+                hyper: m.req("hyper")?.clone(),
+            };
+            models.insert(name.clone(), spec);
+        }
+        Ok(Manifest { root, gpus_per_node, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+}
+
+/// Read a little-endian f32 binary file (init params, probes).
+pub fn read_f32_bin(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path:?} length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read a little-endian i32 binary file.
+pub fn read_i32_bin(path: &Path) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path:?} length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_top1_reduce() {
+        assert_eq!(Metric::Top1.reduce(&[30.0], 40.0), 0.75);
+        assert_eq!(Metric::Top1.reduce(&[0.0], 0.0), 0.0);
+    }
+
+    #[test]
+    fn metric_iou_reduce() {
+        // two classes: IOU 0.5 and 1.0; one absent class ignored
+        let aux = [5.0, 10.0, 0.0, 10.0, 10.0, 0.0];
+        let iou = Metric::Iou.reduce(&aux, 0.0);
+        assert!((iou - 0.75).abs() < 1e-9, "{iou}");
+    }
+
+    #[test]
+    fn metric_parse() {
+        assert_eq!(Metric::parse("top1").unwrap(), Metric::Top1);
+        assert_eq!(Metric::parse("iou").unwrap(), Metric::Iou);
+        assert!(Metric::parse("bogus").is_err());
+    }
+}

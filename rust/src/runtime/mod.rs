@@ -1,0 +1,11 @@
+//! Runtime layer: the `xla` crate (PJRT C API) wrapped behind typed entry
+//! points. `HloModuleProto::from_text_file` -> `compile` once ->
+//! `execute` on the hot path. See DESIGN.md for the artifact interface.
+
+pub mod buffers;
+pub mod engine;
+pub mod manifest;
+
+pub use buffers::Batch;
+pub use engine::{Engine, ModelRuntime, RuntimeStats};
+pub use manifest::{Manifest, Metric, ModelSpec, XDtype};

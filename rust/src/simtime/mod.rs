@@ -1,0 +1,9 @@
+//! Simulated-time substrate: paper workload traces + the strong-scaling
+//! projector that regenerates the training-time figures at the paper's
+//! true message sizes and GPU counts.
+
+pub mod projector;
+pub mod workload;
+
+pub use projector::{project_daso, project_horovod, scaling_table, Projection, ScalingRow};
+pub use workload::Workload;

@@ -1,0 +1,235 @@
+//! Strong-scaling training-time projector (regenerates Figs. 6 and 8).
+//!
+//! Replays the per-batch cost structure of each strategy over the paper
+//! workload traces on the two-tier fabric, faithfully including DASO's
+//! phase schedule, selectivity (1/B amortization), comm/compute overlap
+//! of the non-blocking sync, and Horovod's fp16 + tensor fusion. Nothing
+//! about "who wins" is hard-coded — the savings emerge from the model.
+
+use crate::comm::cost::{
+    cast_time, ring_allreduce_time, tree_broadcast_time, DEVICE_MEM_BW,
+};
+use crate::comm::{Fabric, Wire};
+
+use super::workload::Workload;
+
+/// Horovod runtime behaviour constants (documented Horovod mechanics):
+/// the background controller wakes every `CYCLE_TIME_S` to fuse whatever
+/// gradients the backward pass has produced so far, and each fusion round
+/// pays a controller negotiation round-trip before the allreduce fires.
+pub const HOROVOD_CYCLE_TIME_S: f64 = 5e-3;
+pub const HOROVOD_NEGOTIATION_S: f64 = 1e-3;
+/// controller bookkeeping per gradient tensor (readiness tracking,
+/// response caching) — the cost of synchronizing ~1.5k tensors instead of
+/// one flat parameter buffer
+pub const HOROVOD_PER_TENSOR_S: f64 = 1e-4;
+/// fraction of the step spent in backward (when gradients materialize)
+const BACKWARD_FRACTION: f64 = 0.7;
+
+#[derive(Debug, Clone)]
+pub struct Projection {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// end-to-end training time (seconds)
+    pub total_s: f64,
+    /// share of time spent on communication (not overlapped)
+    pub comm_fraction: f64,
+}
+
+/// Number of fusion rounds Horovod fires per batch: bounded by how many
+/// controller cycles fit in the backward pass and by the tensor count.
+/// Many small rounds make the allreduce latency-bound — the overhead a
+/// single flat parameter exchange (DASO) avoids.
+fn horovod_fusion_rounds(w: &Workload) -> usize {
+    let cycles = (BACKWARD_FRACTION * w.step_time_s / HOROVOD_CYCLE_TIME_S).ceil() as usize;
+    cycles.clamp(1, w.n_tensors)
+}
+
+/// Horovod: every batch = compute + fp16 cast + fused ring allreduce over
+/// all P GPUs, split across the fusion rounds of that batch.
+pub fn project_horovod(w: &Workload, nodes: usize, gpn: usize, fabric: &Fabric) -> Projection {
+    let world = nodes * gpn;
+    let steps = w.steps_per_epoch(world) * w.epochs;
+    let wire_bytes = w.grad_bytes(Wire::F16.bytes_per_elem());
+    let link = if nodes > 1 { &fabric.inter } else { &fabric.intra };
+    let rounds = horovod_fusion_rounds(w);
+    let per_round_bytes = (wire_bytes / rounds).max(1);
+    let comm = 2.0 * cast_time(w.grad_bytes(4), DEVICE_MEM_BW)
+        + rounds as f64
+            * (ring_allreduce_time(world, per_round_bytes, link) + HOROVOD_NEGOTIATION_S)
+        + w.n_tensors as f64 * HOROVOD_PER_TENSOR_S;
+    let per_batch = w.step_time_s * w.horovod_step_multiplier + comm;
+    Projection {
+        nodes,
+        gpus_per_node: gpn,
+        total_s: steps as f64 * per_batch,
+        comm_fraction: comm / per_batch,
+    }
+}
+
+/// DASO: every batch = compute + node-local ring; plus global syncs:
+/// blocking (bf16, every batch) during warm-up/cool-down epochs,
+/// non-blocking (f32, every B batches, overlapped by W batches of
+/// compute) during cycling epochs.
+pub fn project_daso(w: &Workload, nodes: usize, gpn: usize, fabric: &Fabric) -> Projection {
+    let world = nodes * gpn;
+    let steps_per_epoch = w.steps_per_epoch(world);
+    let f32_bytes = w.grad_bytes(4);
+    let bf16_bytes = w.grad_bytes(2);
+
+    // every batch: local gradient ring on the fast tier
+    let local_ring = ring_allreduce_time(gpn, f32_bytes, &fabric.intra);
+
+    // blocking global sync: cast to bf16 + group ring + node broadcast
+    let blocking = 2.0 * cast_time(f32_bytes, DEVICE_MEM_BW)
+        + ring_allreduce_time(nodes, bf16_bytes, &fabric.inter)
+        + tree_broadcast_time(gpn, f32_bytes, &fabric.intra);
+
+    // non-blocking global sync: f32 group ring (a single flat parameter
+    // buffer — no fusion rounds, no negotiation), overlapped by W batches
+    // of compute; only the non-hidden remainder stalls the pipeline,
+    // plus the node broadcast of the blended parameters. Syncs per epoch
+    // are integer (ceil) — at very high node counts the few batches per
+    // epoch make skipping less effective (paper section 4.2).
+    let b = w.daso_b.max(1);
+    let wait = (b / 4).max(1);
+    let ring = ring_allreduce_time(nodes, f32_bytes, &fabric.inter);
+    let hidden = wait as f64 * (w.step_time_s + local_ring);
+    let exposed = (ring - hidden).max(0.0)
+        + tree_broadcast_time(gpn, f32_bytes, &fabric.intra)
+        + fabric.inter.latency_s; // async launch
+    let syncs_per_epoch = steps_per_epoch.div_ceil(b) as f64;
+    let nonblocking_per_epoch = syncs_per_epoch * exposed;
+
+    let warm_epochs = (w.warmup_epochs + w.cooldown_epochs).min(w.epochs);
+    let cyc_epochs = w.epochs - warm_epochs;
+
+    let warm_per_batch = w.step_time_s + local_ring + blocking;
+    let cyc_epoch_s =
+        steps_per_epoch as f64 * (w.step_time_s + local_ring) + nonblocking_per_epoch;
+
+    let total = steps_per_epoch as f64 * warm_epochs as f64 * warm_per_batch
+        + cyc_epochs as f64 * cyc_epoch_s;
+    let comm_total = steps_per_epoch as f64 * warm_epochs as f64 * (local_ring + blocking)
+        + cyc_epochs as f64
+            * (steps_per_epoch as f64 * local_ring + nonblocking_per_epoch);
+    Projection {
+        nodes,
+        gpus_per_node: gpn,
+        total_s: total,
+        comm_fraction: comm_total / total,
+    }
+}
+
+/// One row of Fig. 6 / Fig. 8: node count -> (DASO, Horovod) times.
+#[derive(Debug, Clone)]
+pub struct ScalingRow {
+    pub nodes: usize,
+    pub gpus: usize,
+    pub daso_s: f64,
+    pub horovod_s: f64,
+    /// fraction of Horovod's time DASO saves (the paper headline)
+    pub savings: f64,
+}
+
+pub fn scaling_table(
+    w: &Workload,
+    node_counts: &[usize],
+    gpn: usize,
+    fabric: &Fabric,
+) -> Vec<ScalingRow> {
+    node_counts
+        .iter()
+        .map(|&nodes| {
+            let d = project_daso(w, nodes, gpn, fabric);
+            let h = project_horovod(w, nodes, gpn, fabric);
+            ScalingRow {
+                nodes,
+                gpus: nodes * gpn,
+                daso_s: d.total_s,
+                horovod_s: h.total_s,
+                savings: 1.0 - d.total_s / h.total_s,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric() -> Fabric {
+        Fabric::juwels_like()
+    }
+
+    #[test]
+    fn daso_faster_than_horovod_at_paper_scales() {
+        // the paper's headline: up to ~25% (ResNet) / ~35% (HRNet) savings
+        for w in [Workload::resnet50_imagenet(), Workload::hrnet_cityscapes()] {
+            for nodes in [4usize, 8, 16, 32, 64] {
+                let d = project_daso(&w, nodes, 4, &fabric());
+                let h = project_horovod(&w, nodes, 4, &fabric());
+                assert!(
+                    d.total_s < h.total_s,
+                    "{} nodes={nodes}: daso {:.0}s !< horovod {:.0}s",
+                    w.name,
+                    d.total_s,
+                    h.total_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn strong_scaling_behaviour() {
+        // doubling nodes should roughly halve training time (paper: "a
+        // factor of two in GPU number results in the training time being
+        // halved")
+        let w = Workload::resnet50_imagenet();
+        let t4 = project_daso(&w, 4, 4, &fabric()).total_s;
+        let t8 = project_daso(&w, 8, 4, &fabric()).total_s;
+        let ratio = t4 / t8;
+        assert!((1.6..=2.2).contains(&ratio), "scaling ratio {ratio}");
+    }
+
+    #[test]
+    fn savings_in_paper_band() {
+        // ResNet-50: "up to 25% less time"; CityScapes: "~35%, dropping
+        // to 30% at 256 GPUs". Accept a generous band — the shape, not
+        // the decimal, is the reproduction target.
+        let rows = scaling_table(
+            &Workload::resnet50_imagenet(),
+            &[4, 8, 16, 32, 64],
+            4,
+            &fabric(),
+        );
+        for r in &rows {
+            assert!(
+                (0.02..0.45).contains(&r.savings),
+                "resnet nodes={} savings {:.3} out of band",
+                r.nodes,
+                r.savings
+            );
+        }
+        let max = rows.iter().map(|r| r.savings).fold(0.0, f64::max);
+        assert!(max > 0.10, "peak resnet savings only {max:.3}");
+    }
+
+    #[test]
+    fn segmentation_savings_shrink_at_very_high_node_counts() {
+        // paper section 4.2: at 256 GPUs fewer batches per epoch mean
+        // fewer skipped syncs, so the relative advantage drops
+        let rows =
+            scaling_table(&Workload::hrnet_cityscapes(), &[16, 64], 4, &fabric());
+        assert!(rows[0].savings >= rows[1].savings - 0.02,
+            "savings should not grow at the top end: {rows:?}");
+    }
+
+    #[test]
+    fn comm_fraction_grows_with_scale_for_horovod() {
+        let w = Workload::resnet50_imagenet();
+        let f4 = project_horovod(&w, 4, 4, &fabric()).comm_fraction;
+        let f64_ = project_horovod(&w, 64, 4, &fabric()).comm_fraction;
+        assert!(f64_ >= f4 * 0.9);
+    }
+}

@@ -1,0 +1,109 @@
+//! Paper workload traces for the strong-scaling time projections.
+//!
+//! These carry the *real* sizes of the paper's experiments (parameter
+//! counts, dataset sizes, epochs, per-GPU step time on A100-class
+//! hardware) so Figs. 6/8 are regenerated at the paper's message sizes
+//! even though local training runs on scaled models (see DESIGN.md
+//! "Substitutions").
+
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: &'static str,
+    /// model parameters (elements)
+    pub n_params: usize,
+    /// training samples per epoch
+    pub samples: usize,
+    /// per-GPU batch size (paper: fixed per GPU)
+    pub local_batch: usize,
+    pub epochs: usize,
+    /// forward-backward time per batch on one A100-class GPU (seconds)
+    pub step_time_s: f64,
+    /// number of gradient tensors the framework synchronizes — drives
+    /// Horovod's fusion-round count (many small tensors => latency-bound
+    /// allreduce, the effect DASO's single flat parameter buffer avoids)
+    pub n_tensors: usize,
+    /// DASO's configured B ("maximum number of batches between global
+    /// synchronizations was set to four for both experiments")
+    pub daso_b: usize,
+    pub warmup_epochs: usize,
+    pub cooldown_epochs: usize,
+    /// compute-time handicap of the Horovod runs relative to DASO. 1.0
+    /// unless the paper documents an asymmetry: for CityScapes, Horovod's
+    /// automatic mixed precision "did not function as intended" under the
+    /// system scheduler and was removed (section 4.2), so its per-step
+    /// compute ran slower than DASO's AMP-enabled steps.
+    pub horovod_step_multiplier: f64,
+}
+
+impl Workload {
+    /// ResNet-50 / ImageNet-2012 (paper section 4.1).
+    /// 25.6M params; 1.28M images; 90 epochs. Step time from public
+    /// A100 ResNet-50 throughput (~780 img/s mixed precision) at the
+    /// per-GPU batch used by PyTorch's reference script (128).
+    pub fn resnet50_imagenet() -> Workload {
+        Workload {
+            name: "resnet50_imagenet",
+            n_params: 25_600_000,
+            samples: 1_281_167,
+            local_batch: 128,
+            epochs: 90,
+            step_time_s: 128.0 / 780.0,
+            n_tensors: 161, // ResNet-50 conv/bn/fc gradient tensors
+            daso_b: 4,
+            warmup_epochs: 5,
+            cooldown_epochs: 5,
+            horovod_step_multiplier: 1.0,
+        }
+    }
+
+    /// Hierarchical multi-scale attention net / CityScapes (section 4.2).
+    /// HRNet-OCR backbone ~70M params; 2,975 finely annotated train
+    /// images (+ coarse in the original; the paper trains on CityScapes
+    /// only); 175 epochs; segmentation steps are much heavier per image.
+    pub fn hrnet_cityscapes() -> Workload {
+        Workload {
+            name: "hrnet_cityscapes",
+            n_params: 70_000_000,
+            samples: 2_975,
+            local_batch: 2,
+            epochs: 175,
+            step_time_s: 1.05,
+            n_tensors: 1500, // HRNet-OCR + attention heads: ~1.5k tensors
+            daso_b: 4,
+            warmup_epochs: 5,
+            cooldown_epochs: 5,
+            horovod_step_multiplier: 1.25, // AMP removed for Horovod (section 4.2)
+        }
+    }
+
+    /// Batches per epoch for each GPU at the given world size.
+    pub fn steps_per_epoch(&self, world: usize) -> usize {
+        (self.samples / (world * self.local_batch)).max(1)
+    }
+
+    pub fn grad_bytes(&self, bytes_per_elem: usize) -> usize {
+        self.n_params * bytes_per_elem
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strong_scaling_halves_steps() {
+        let w = Workload::resnet50_imagenet();
+        let s16 = w.steps_per_epoch(16);
+        let s32 = w.steps_per_epoch(32);
+        assert!((s16 as f64 / s32 as f64 - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn sane_sizes() {
+        let r = Workload::resnet50_imagenet();
+        assert_eq!(r.grad_bytes(4), 102_400_000);
+        let h = Workload::hrnet_cityscapes();
+        assert!(h.n_params > r.n_params);
+        assert!(h.steps_per_epoch(16) > 0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Run-log output: CSV per-epoch records and a JSON run summary, written
+//! under `runs/` so every experiment in EXPERIMENTS.md is regenerable.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Value};
+
+use super::loop_::RunReport;
+
+/// Write per-epoch CSV: epoch,train_loss,lr,metric,val_loss,sim_time,wall.
+pub fn write_csv(report: &RunReport, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    writeln!(f, "epoch,train_loss,lr,metric,val_loss,sim_time_s,wall_time_s,state")?;
+    for r in &report.records {
+        writeln!(
+            f,
+            "{},{:.6},{:.6},{},{},{:.3},{:.3},{}",
+            r.epoch,
+            r.train_loss,
+            r.lr,
+            r.metric.map_or(String::new(), |m| format!("{m:.6}")),
+            r.val_loss.map_or(String::new(), |m| format!("{m:.6}")),
+            r.sim_time_s,
+            r.wall_time_s,
+            r.strategy_state.replace(',', ";"),
+        )?;
+    }
+    Ok(())
+}
+
+/// JSON summary of a run.
+pub fn report_json(report: &RunReport) -> Value {
+    obj(vec![
+        ("strategy", s(&report.strategy)),
+        ("model", s(&report.model)),
+        ("world", num(report.world as f64)),
+        ("epochs", num(report.records.len() as f64)),
+        ("final_metric", num(report.final_metric)),
+        ("best_metric", num(report.best_metric)),
+        ("final_val_loss", num(report.final_val_loss)),
+        ("total_sim_time_s", num(report.total_sim_time_s)),
+        ("total_wall_s", num(report.total_wall_s)),
+        (
+            "comm",
+            obj(vec![
+                ("global_syncs", num(report.comm.global_syncs as f64)),
+                ("blocking_syncs", num(report.comm.blocking_syncs as f64)),
+                ("nonblocking_syncs", num(report.comm.nonblocking_syncs as f64)),
+                ("local_syncs", num(report.comm.local_syncs as f64)),
+                ("bytes_inter", num(report.comm.bytes_inter as f64)),
+                ("bytes_intra", num(report.comm.bytes_intra as f64)),
+                ("comm_wait_s", num(report.comm.comm_wait_s)),
+            ]),
+        ),
+        (
+            "loss_curve",
+            arr(report.records.iter().map(|r| num(r.train_loss)).collect()),
+        ),
+    ])
+}
+
+pub fn write_json(report: &RunReport, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, report_json(report).to_string_pretty())
+        .with_context(|| format!("write {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trainer::loop_::EpochRecord;
+    use crate::trainer::strategy::CommStats;
+
+    fn fake_report() -> RunReport {
+        RunReport {
+            strategy: "daso".into(),
+            model: "mlp".into(),
+            world: 4,
+            records: vec![EpochRecord {
+                epoch: 0,
+                train_loss: 2.0,
+                lr: 0.1,
+                metric: Some(0.5),
+                val_loss: Some(1.9),
+                sim_time_s: 1.0,
+                wall_time_s: 0.2,
+                strategy_state: "B=4, W=1".into(),
+            }],
+            final_metric: 0.5,
+            best_metric: 0.5,
+            final_val_loss: 1.9,
+            total_sim_time_s: 1.0,
+            total_wall_s: 0.2,
+            comm: CommStats::default(),
+        }
+    }
+
+    #[test]
+    fn csv_and_json_roundtrip() {
+        let dir = std::env::temp_dir().join("daso_log_test");
+        let report = fake_report();
+        write_csv(&report, &dir.join("run.csv")).unwrap();
+        write_json(&report, &dir.join("run.json")).unwrap();
+        let csv = std::fs::read_to_string(dir.join("run.csv")).unwrap();
+        assert!(csv.lines().count() == 2);
+        assert!(csv.contains("B=4; W=1") || csv.contains("B=4"));
+        let json = std::fs::read_to_string(dir.join("run.json")).unwrap();
+        let v = Value::parse(&json).unwrap();
+        assert_eq!(v.req_str("strategy").unwrap(), "daso");
+        assert_eq!(v.req_usize("world").unwrap(), 4);
+    }
+}

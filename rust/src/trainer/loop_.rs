@@ -1,0 +1,268 @@
+//! The training loop: epochs of lockstep rounds. Each round every worker
+//! draws a batch from its iid shard, runs the forward-backward artifact,
+//! then the strategy performs communication + updates. Virtual clocks
+//! model the paper's testbed timing; wall-clock measures this machine.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cluster::ClusterState;
+use crate::comm::{naive_mean, Fabric, Topology};
+use crate::data::Dataset;
+use crate::optim::LrSchedule;
+use crate::runtime::ModelRuntime;
+
+use super::metrics::{evaluate, MetricAccum};
+use super::strategy::{StepCtx, Strategy};
+
+/// Run configuration (see config module for file/CLI parsing).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub epochs: usize,
+    pub train_samples: usize,
+    pub val_samples: usize,
+    pub seed: u64,
+    pub base_lr: f64,
+    /// peak-LR scale; paper scales with global process count
+    pub lr_scale: f64,
+    pub lr_warmup_epochs: usize,
+    pub lr_decay: f64,
+    pub lr_patience: usize,
+    /// modeled per-batch forward-backward time on the simulated GPU
+    /// (A100-like); drives the virtual clocks
+    pub compute_time_s: f64,
+    /// evaluate every k epochs (0 = only at the end)
+    pub eval_every: usize,
+    pub fabric: Fabric,
+    /// print per-epoch progress lines
+    pub verbose: bool,
+}
+
+impl TrainConfig {
+    pub fn quick(nodes: usize, gpus_per_node: usize, epochs: usize) -> Self {
+        Self {
+            nodes,
+            gpus_per_node,
+            epochs,
+            train_samples: 2048,
+            val_samples: 512,
+            seed: 42,
+            base_lr: 0.05,
+            lr_scale: (nodes * gpus_per_node) as f64,
+            lr_warmup_epochs: (epochs / 10).max(1),
+            lr_decay: 0.5,
+            lr_patience: 5,
+            compute_time_s: 0.1,
+            eval_every: 0,
+            fabric: Fabric::juwels_like(),
+            verbose: false,
+        }
+    }
+
+    pub fn topology(&self) -> Topology {
+        Topology::new(self.nodes, self.gpus_per_node)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub lr: f64,
+    /// validation metric (None if not evaluated this epoch)
+    pub metric: Option<f64>,
+    pub val_loss: Option<f64>,
+    /// cluster makespan so far (virtual seconds)
+    pub sim_time_s: f64,
+    pub wall_time_s: f64,
+    pub strategy_state: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub strategy: String,
+    pub model: String,
+    pub world: usize,
+    pub records: Vec<EpochRecord>,
+    pub final_metric: f64,
+    pub final_val_loss: f64,
+    /// best validation metric over the run (the paper reports max IOU)
+    pub best_metric: f64,
+    pub total_sim_time_s: f64,
+    pub total_wall_s: f64,
+    pub comm: super::strategy::CommStats,
+}
+
+impl RunReport {
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{} {} world={} epochs={} sim_time={:.1}s wall={:.1}s {}={:.4} (best {:.4})",
+            self.strategy,
+            self.model,
+            self.world,
+            self.records.len(),
+            self.total_sim_time_s,
+            self.total_wall_s,
+            "metric",
+            self.final_metric,
+            self.best_metric,
+        )
+    }
+}
+
+/// Train `strategy` on `rt`'s model over the given data.
+pub fn train(
+    rt: &ModelRuntime,
+    cfg: &TrainConfig,
+    train_data: &dyn Dataset,
+    val_data: &dyn Dataset,
+    strategy: &mut dyn Strategy,
+) -> Result<RunReport> {
+    let topo = cfg.topology();
+    let mut cluster = ClusterState::new(topo, rt, train_data.len(), cfg.seed)?;
+    let world = cluster.world();
+    let mut lr_sched = LrSchedule::new(
+        cfg.base_lr,
+        cfg.lr_scale,
+        cfg.lr_warmup_epochs,
+        cfg.lr_decay,
+        cfg.lr_patience,
+    );
+
+    let batch = rt.spec.batch;
+    let steps_per_epoch = cluster.workers[0].shard.batches_per_epoch(batch);
+    anyhow::ensure!(
+        steps_per_epoch > 0,
+        "shard too small: {} samples / {} workers < batch {}",
+        train_data.len(),
+        world,
+        batch
+    );
+
+    let wall_start = Instant::now();
+    let mut records = Vec::with_capacity(cfg.epochs);
+    let mut global_batch = 0usize;
+    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); world];
+
+    for epoch in 0..cfg.epochs {
+        strategy.on_epoch_start(epoch);
+        let lr = lr_sched.lr() as f32;
+        let mut loss_sum = 0.0f64;
+
+        // per-worker epoch batch orders (iid reshuffle per epoch)
+        let orders: Vec<Vec<usize>> = cluster
+            .workers
+            .iter()
+            .map(|w| w.shard.epoch_order(epoch))
+            .collect();
+
+        for step in 0..steps_per_epoch {
+            for w in 0..world {
+                let idx = &orders[w][step * batch..(step + 1) * batch];
+                let (x, y) = train_data.batch(idx);
+                let (loss, g) = rt.grad(&cluster.workers[w].params, &x, &y)?;
+                loss_sum += loss as f64;
+                grads[w] = g;
+                let worker = &mut cluster.workers[w];
+                worker.advance_clock(cfg.compute_time_s);
+                worker.batches_done += 1;
+            }
+            global_batch += 1;
+            let mut ctx = StepCtx {
+                rt,
+                cluster: &mut cluster,
+                fabric: &cfg.fabric,
+                grads: &mut grads,
+                lr,
+                epoch,
+                global_batch,
+            };
+            strategy.apply(&mut ctx)?;
+        }
+
+        let train_loss = loss_sum / (world * steps_per_epoch) as f64;
+        lr_sched.on_epoch_end(train_loss);
+        strategy.on_epoch_end(epoch, train_loss);
+
+        let do_eval = cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0;
+        let (metric, val_loss) = if do_eval {
+            let acc = eval_consensus(rt, &cluster, val_data, epoch)?;
+            (Some(acc.value()), Some(acc.mean_loss()))
+        } else {
+            (None, None)
+        };
+
+        let rec = EpochRecord {
+            epoch,
+            train_loss,
+            lr: lr as f64,
+            metric,
+            val_loss,
+            sim_time_s: cluster.makespan(),
+            wall_time_s: wall_start.elapsed().as_secs_f64(),
+            strategy_state: strategy.state_desc(),
+        };
+        if cfg.verbose {
+            eprintln!(
+                "[{}] epoch {:>3} loss {:.4} lr {:.5} metric {} sim {:.1}s {}",
+                strategy.name(),
+                epoch,
+                rec.train_loss,
+                rec.lr,
+                rec.metric.map_or("-".into(), |m| format!("{m:.4}")),
+                rec.sim_time_s,
+                rec.strategy_state
+            );
+        }
+        records.push(rec);
+    }
+
+    // flush in-flight state, final consensus evaluation
+    {
+        let mut ctx = StepCtx {
+            rt,
+            cluster: &mut cluster,
+            fabric: &cfg.fabric,
+            grads: &mut grads,
+            lr: lr_sched.lr() as f32,
+            epoch: cfg.epochs,
+            global_batch,
+        };
+        strategy.finalize(&mut ctx)?;
+    }
+    let final_acc = eval_consensus(rt, &cluster, val_data, cfg.epochs)?;
+    let final_metric = final_acc.value();
+    let best_metric = records
+        .iter()
+        .filter_map(|r| r.metric)
+        .fold(final_metric, f64::max);
+
+    Ok(RunReport {
+        strategy: strategy.name().to_string(),
+        model: rt.spec.name.clone(),
+        world,
+        records,
+        final_metric,
+        final_val_loss: final_acc.mean_loss(),
+        best_metric,
+        total_sim_time_s: cluster.makespan(),
+        total_wall_s: wall_start.elapsed().as_secs_f64(),
+        comm: strategy.comm_stats(),
+    })
+}
+
+/// Evaluate the consensus model: the mean of all replicas' parameters
+/// (what extracting the trained network from the DPNN would produce).
+fn eval_consensus(
+    rt: &ModelRuntime,
+    cluster: &ClusterState,
+    val: &dyn Dataset,
+    epoch: usize,
+) -> Result<MetricAccum> {
+    let bufs: Vec<&Vec<f32>> = cluster.workers.iter().map(|w| &w.params).collect();
+    let consensus = naive_mean(&bufs);
+    evaluate(rt, &consensus, val, epoch)
+}

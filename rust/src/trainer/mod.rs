@@ -1,0 +1,13 @@
+//! Trainer: the strategy interface (DASO + baselines plug in here), the
+//! lockstep training loop with virtual-clock accounting, metric
+//! aggregation and run logging.
+
+pub mod log;
+#[path = "loop_.rs"]
+pub mod loop_;
+pub mod metrics;
+pub mod strategy;
+
+pub use loop_::{train, EpochRecord, RunReport, TrainConfig};
+pub use metrics::{evaluate, MetricAccum};
+pub use strategy::{CommStats, StepCtx, Strategy};

@@ -1,0 +1,64 @@
+//! The synchronization-strategy interface: DASO and every baseline
+//! implement `Strategy`. The trainer computes per-worker gradients (the
+//! forward-backward pass through the PJRT grad executable), then hands
+//! the round to the strategy, which owns all communication and parameter
+//! updates — mirroring how a DPNN optimizer wraps the local optimizer in
+//! the paper's Listing 1.
+
+use anyhow::Result;
+
+use crate::cluster::ClusterState;
+use crate::comm::Fabric;
+use crate::runtime::ModelRuntime;
+
+/// Cumulative communication accounting for a run.
+#[derive(Debug, Default, Clone)]
+pub struct CommStats {
+    pub global_syncs: u64,
+    pub blocking_syncs: u64,
+    pub nonblocking_syncs: u64,
+    pub local_syncs: u64,
+    pub bytes_inter: u64,
+    pub bytes_intra: u64,
+    /// virtual seconds spent blocked on communication (summed over workers)
+    pub comm_wait_s: f64,
+}
+
+/// One training round (each worker has done one forward-backward pass).
+pub struct StepCtx<'a> {
+    pub rt: &'a ModelRuntime,
+    pub cluster: &'a mut ClusterState,
+    pub fabric: &'a Fabric,
+    /// per-worker gradients for this round (already node-averaged or not,
+    /// depending on what the strategy does with them)
+    pub grads: &'a mut Vec<Vec<f32>>,
+    pub lr: f32,
+    pub epoch: usize,
+    /// monotone batch counter across the whole run
+    pub global_batch: usize,
+}
+
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+
+    /// Perform this round's communication + parameter updates.
+    fn apply(&mut self, ctx: &mut StepCtx) -> Result<()>;
+
+    /// Called once per epoch with the mean training loss.
+    fn on_epoch_end(&mut self, _epoch: usize, _train_loss: f64) {}
+
+    /// Called at the start of each epoch (phase bookkeeping).
+    fn on_epoch_start(&mut self, _epoch: usize) {}
+
+    /// Flush any in-flight state (end of training).
+    fn finalize(&mut self, _ctx: &mut StepCtx) -> Result<()> {
+        Ok(())
+    }
+
+    fn comm_stats(&self) -> CommStats;
+
+    /// Human-readable internal state (for run logs).
+    fn state_desc(&self) -> String {
+        String::new()
+    }
+}

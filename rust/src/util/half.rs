@@ -1,0 +1,168 @@
+//! 16-bit wire formats for parameter/gradient packaging.
+//!
+//! The paper compresses messages before global synchronization: Horovod
+//! casts to IEEE fp16, DASO to bfloat16 (section 4). These conversions are
+//! the *packaging* step on the simulated wire — implemented here exactly
+//! (round-to-nearest-even for bf16, full IEEE semantics for fp16) so the
+//! quantization error the paper tolerates is physically present in runs.
+
+/// f32 -> bfloat16 (round-to-nearest-even), returned as the raw u16.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // quiet NaN, preserve sign
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round_bit = 0x0000_8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
+    let _ = round_bit;
+    (rounded >> 16) as u16
+}
+
+/// bfloat16 (raw u16) -> f32: exact.
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// f32 -> IEEE fp16 (round-to-nearest-even), raw u16.
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xFF) as i32;
+    let mut frac = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // inf / nan
+        return sign | 0x7C00 | if frac != 0 { 0x0200 } else { 0 };
+    }
+    exp -= 127 - 15;
+    if exp >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if exp <= 0 {
+        // subnormal or zero
+        if exp < -10 {
+            return sign;
+        }
+        frac |= 0x0080_0000; // implicit leading 1
+        let shift = (14 - exp) as u32;
+        let half_ulp = 1u32 << (shift - 1);
+        let rounded = frac + half_ulp - 1 + ((frac >> shift) & 1);
+        return sign | (rounded >> shift) as u16;
+    }
+    // normal: round mantissa from 23 to 10 bits, RNE
+    let half_ulp = 0x0000_0FFFu32;
+    let rounded = frac + half_ulp + ((frac >> 13) & 1);
+    let mut out = ((exp as u32) << 10) as u32 | (rounded >> 13);
+    if rounded & 0x0080_0000 != 0 {
+        // mantissa rounding overflowed into the exponent — that's fine,
+        // it produces the correctly rounded next binade (or inf).
+        out = ((exp as u32 + 1) << 10).min(0x7C00);
+    }
+    sign | out as u16
+}
+
+/// IEEE fp16 (raw u16) -> f32: exact.
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let frac = (h & 0x03FF) as u32;
+    let bits = match exp {
+        0 => {
+            if frac == 0 {
+                sign
+            } else {
+                // subnormal: normalize
+                let mut e = 127 - 15 - 10;
+                let mut f = frac;
+                while f & 0x0400 == 0 {
+                    f <<= 1;
+                    e -= 1;
+                }
+                f &= 0x03FF;
+                sign | (((e + 10) as u32) << 23) | (f << 13)
+            }
+        }
+        0x1F => sign | 0x7F80_0000 | (frac << 13),
+        _ => sign | ((exp + 127 - 15) << 23) | (frac << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip a whole buffer through bf16 (DASO's blocking-sync packaging).
+pub fn roundtrip_bf16(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = bf16_to_f32(f32_to_bf16(*x));
+    }
+}
+
+/// Round-trip a whole buffer through fp16 (Horovod's wire compression).
+pub fn roundtrip_f16(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = f16_to_f32(f32_to_f16(*x));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_exact_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, -3.5, 1e30, -1e-30] {
+            let rt = bf16_to_f32(f32_to_bf16(v));
+            let rel = if v == 0.0 { rt.abs() } else { ((rt - v) / v).abs() };
+            assert!(rel < 0.01, "{v} -> {rt}");
+        }
+    }
+
+    #[test]
+    fn bf16_error_bound() {
+        // bf16 has 8 mantissa bits: relative error <= 2^-8 after RNE
+        let mut r = crate::util::rng::Rng::new(1);
+        for _ in 0..10_000 {
+            let v = (r.normal() * 10.0).abs() + 1e-6;
+            let rt = bf16_to_f32(f32_to_bf16(v));
+            assert!(((rt - v) / v).abs() <= 1.0 / 256.0 + 1e-7, "{v} {rt}");
+        }
+    }
+
+    #[test]
+    fn f16_exact_values() {
+        assert_eq!(f16_to_f32(f32_to_f16(1.0)), 1.0);
+        assert_eq!(f16_to_f32(f32_to_f16(-2.0)), -2.0);
+        assert_eq!(f16_to_f32(f32_to_f16(0.0)), 0.0);
+        assert_eq!(f16_to_f32(f32_to_f16(65504.0)), 65504.0); // f16 max
+        assert!(f16_to_f32(f32_to_f16(1e6)).is_infinite()); // overflow
+    }
+
+    #[test]
+    fn f16_error_bound() {
+        // fp16 has 10 mantissa bits: relative error <= 2^-11 (RNE) in range
+        let mut r = crate::util::rng::Rng::new(2);
+        for _ in 0..10_000 {
+            let v = (r.normal()).abs() + 1e-3;
+            let rt = f16_to_f32(f32_to_f16(v));
+            assert!(((rt - v) / v).abs() <= 1.0 / 2048.0 + 1e-7, "{v} {rt}");
+        }
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = 1e-7f32; // below f16 normal range
+        let rt = f16_to_f32(f32_to_f16(tiny));
+        assert!(rt >= 0.0 && rt < 1e-6);
+    }
+
+    #[test]
+    fn nan_and_sign_preserved() {
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(f16_to_f32(f32_to_f16(-0.0)).to_bits(), (-0.0f32).to_bits());
+    }
+}

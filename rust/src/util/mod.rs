@@ -1,0 +1,9 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! PRNG, half-precision wire formats, JSON, statistics, and a minimal
+//! property-testing harness (no rand/serde/proptest crates available).
+
+pub mod half;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,98 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! `run_prop` drives a closure over many seeded random cases; on failure
+//! it reports the failing case number and seed so the case can be
+//! reproduced exactly. Generators are just methods on `Gen` — enough for
+//! the coordinator invariants this repo checks (routing, batching,
+//! blending, cycling, sharding).
+
+use crate::util::rng::Rng;
+
+/// Random-value source handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.rng.fill_normal(&mut v, std);
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `cases` random cases of the property `f`. Panics with the failing
+/// seed on the first failure (the closure should panic/assert on its own).
+pub fn run_prop<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut f: F) {
+    for case in 0..cases {
+        let seed = 0xDA50_0000 + case as u64;
+        let mut g = Gen { rng: Rng::new(seed) };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property {name:?} failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        run_prop("sum-commutes", 100, |g| {
+            let a = g.f32_in(-10.0, 10.0);
+            let b = g.f32_in(-10.0, 10.0);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn reports_failures() {
+        run_prop("always-false", 10, |g| {
+            let x = g.usize_in(0, 100);
+            assert!(x > 1000, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        run_prop("gen-bounds", 200, |g| {
+            let n = g.usize_in(3, 7);
+            assert!((3..=7).contains(&n));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec_f32(n, 0.0, 1.0);
+            assert_eq!(v.len(), n);
+        });
+    }
+}

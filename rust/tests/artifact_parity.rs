@@ -1,0 +1,165 @@
+//! Cross-language interchange tests: the HLO-text artifacts, loaded and
+//! executed through the `xla` PJRT runtime, must reproduce the outputs
+//! the python side recorded at AOT time (the self-check probes), and the
+//! kernel artifacts must match their closed-form semantics.
+//!
+//! Requires `make artifacts` (skips with a message if missing).
+
+use daso::runtime::Engine;
+use daso::util::rng::Rng;
+use daso::util::stats::l2_norm;
+
+fn engine() -> Option<Engine> {
+    match Engine::load("artifacts") {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e:#}) — run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn grad_and_eval_match_python_probes() {
+    let Some(engine) = engine() else { return };
+    for name in engine.manifest.models.keys().cloned().collect::<Vec<_>>() {
+        let rt = engine.model(&name).unwrap();
+        let sc = rt.spec.selfcheck.clone();
+        let params = rt.init_params().unwrap();
+        let (x, y) = rt.probe_batch().unwrap();
+
+        let (loss, grads) = rt.grad(&params, &x, &y).unwrap();
+        assert!(
+            (loss - sc.loss).abs() <= 1e-4 * sc.loss.abs().max(1.0),
+            "{name}: loss {loss} vs {}",
+            sc.loss
+        );
+        let l2 = l2_norm(&grads);
+        assert!(
+            (l2 - sc.grad_l2).abs() <= 1e-3 * sc.grad_l2.max(1e-6),
+            "{name}: grad_l2 {l2} vs {}",
+            sc.grad_l2
+        );
+        for (i, (a, b)) in grads[..8].iter().zip(&sc.grad_head).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * b.abs().max(1e-3),
+                "{name}: grad[{i}] {a} vs {b}"
+            );
+        }
+
+        let (aux, loss_sum) = rt.eval(&params, &x, &y).unwrap();
+        assert_eq!(aux.len(), rt.spec.aux_len);
+        for (i, (a, b)) in aux.iter().zip(&sc.aux).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-3 * b.abs().max(1.0),
+                "{name}: aux[{i}] {a} vs {b}"
+            );
+        }
+        assert!(
+            (loss_sum - sc.loss_sum).abs() <= 1e-3 * sc.loss_sum.abs().max(1.0),
+            "{name}: loss_sum {loss_sum} vs {}",
+            sc.loss_sum
+        );
+    }
+}
+
+#[test]
+fn update_artifact_matches_host_sgd() {
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let n = rt.spec.n_params;
+    let (mu, wd) = (rt.spec.mu, rt.spec.wd);
+    let mut rng = Rng::new(99);
+
+    let mut params = vec![0.0f32; n];
+    let mut momentum = vec![0.0f32; n];
+    let mut grads = vec![0.0f32; n];
+    rng.fill_normal(&mut params, 1.0);
+    rng.fill_normal(&mut momentum, 0.5);
+    rng.fill_normal(&mut grads, 0.1);
+    let lr = 0.05f32;
+
+    // host reference: g' = g + wd p ; m' = mu m + g' ; p' = p - lr m'
+    let mut p_ref = params.clone();
+    let mut m_ref = momentum.clone();
+    for i in 0..n {
+        let g = grads[i] + wd * p_ref[i];
+        m_ref[i] = mu * m_ref[i] + g;
+        p_ref[i] -= lr * m_ref[i];
+    }
+
+    rt.update(&mut params, &mut momentum, &grads, lr).unwrap();
+    for i in 0..n {
+        assert!((params[i] - p_ref[i]).abs() < 1e-5, "p[{i}]");
+        assert!((momentum[i] - m_ref[i]).abs() < 1e-5, "m[{i}]");
+    }
+}
+
+#[test]
+fn blend_artifact_matches_eq1() {
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let n = rt.spec.n_params;
+    let mut rng = Rng::new(7);
+    let mut x_local = vec![0.0f32; n];
+    let mut gsum = vec![0.0f32; n];
+    rng.fill_normal(&mut x_local, 1.0);
+    rng.fill_normal(&mut gsum, 2.0);
+    for (s, p) in [(1.0f32, 2.0f32), (4.0, 16.0), (2.0, 64.0)] {
+        let out = rt.blend(&x_local, &gsum, s, p).unwrap();
+        for i in 0..n {
+            let expect = (2.0 * s * x_local[i] + gsum[i]) / (2.0 * s + p);
+            assert!(
+                (out[i] - expect).abs() < 1e-5,
+                "s={s} p={p} i={i}: {} vs {expect}",
+                out[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn avg_artifact_matches_mean() {
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let n = rt.spec.n_params;
+    let g = rt.gpus_per_node;
+    let mut rng = Rng::new(13);
+    let mut stacked = vec![0.0f32; g * n];
+    rng.fill_normal(&mut stacked, 1.0);
+    let mean = rt.avg(&stacked).unwrap();
+    for i in 0..n {
+        let expect: f32 = (0..g).map(|k| stacked[k * n + i]).sum::<f32>() / g as f32;
+        assert!((mean[i] - expect).abs() < 1e-5, "i={i}");
+    }
+}
+
+#[test]
+fn blend_consensus_is_fixed_point() {
+    // Eq. (1) with global_sum = P * x_local must return x_local exactly
+    // (up to fp): agreement is stable under DASO's blend.
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let n = rt.spec.n_params;
+    let mut rng = Rng::new(21);
+    let mut x = vec![0.0f32; n];
+    rng.fill_normal(&mut x, 1.0);
+    let p = 8.0f32;
+    let gsum: Vec<f32> = x.iter().map(|v| v * p).collect();
+    let out = rt.blend(&x, &gsum, 4.0, p).unwrap();
+    for i in 0..n {
+        assert!((out[i] - x[i]).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn grad_deterministic_across_calls() {
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let params = rt.init_params().unwrap();
+    let (x, y) = rt.probe_batch().unwrap();
+    let (l1, g1) = rt.grad(&params, &x, &y).unwrap();
+    let (l2, g2) = rt.grad(&params, &x, &y).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(g1, g2);
+}

@@ -1,0 +1,160 @@
+//! Behavioural tests of the synchronization strategies beyond the core
+//! DASO path: baseline equivalences, wire-format effects, phase-schedule
+//! edge cases. Requires `make artifacts`.
+
+use daso::baselines::{AsgdServer, Horovod, HorovodConfig, LocalOnly};
+use daso::comm::Wire;
+use daso::daso::{Daso, DasoConfig};
+use daso::runtime::Engine;
+use daso::trainer::{train, TrainConfig};
+
+fn engine() -> Option<Engine> {
+    match Engine::load("artifacts") {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e:#}) — run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn cfg(nodes: usize, gpn: usize, epochs: usize) -> TrainConfig {
+    let mut c = TrainConfig::quick(nodes, gpn, epochs);
+    c.train_samples = 1024;
+    c.val_samples = 256;
+    c.lr_scale = (nodes * gpn) as f64;
+    c
+}
+
+#[test]
+fn horovod_world1_equals_local_only() {
+    // with one worker the flat allreduce is a no-op: Horovod must follow
+    // exactly the same trajectory as no-communication training
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let c = cfg(1, 1, 4);
+    let (tr, va) = daso::data::for_model(&rt.spec, c.train_samples, c.val_samples, 2).unwrap();
+
+    let mut h = Horovod::new(HorovodConfig::default());
+    let hr = train(&rt, &c, &*tr, &*va, &mut h).unwrap();
+    let mut l = LocalOnly::new();
+    let lr_ = train(&rt, &c, &*tr, &*va, &mut l).unwrap();
+
+    for (a, b) in hr.records.iter().zip(&lr_.records) {
+        assert_eq!(a.train_loss, b.train_loss, "epoch {}", a.epoch);
+    }
+    assert_eq!(hr.final_metric, lr_.final_metric);
+}
+
+#[test]
+fn asgd_converges_with_scaled_lr() {
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let c = cfg(2, 2, 8);
+    let (tr, va) = daso::data::for_model(&rt.spec, c.train_samples, c.val_samples, 4).unwrap();
+    let mut a = AsgdServer::new();
+    let rep = train(&rt, &c, &*tr, &*va, &mut a).unwrap();
+    assert!(rep.final_metric > 0.85, "{}", rep.summary_line());
+    assert!(rep.comm.bytes_inter > 0);
+}
+
+#[test]
+fn f16_wire_does_not_destroy_convergence() {
+    // the paper's compression claim (via QSGD): 16-bit wire formats do
+    // not materially change convergence
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let c = cfg(2, 2, 6);
+    let (tr, va) = daso::data::for_model(&rt.spec, c.train_samples, c.val_samples, 6).unwrap();
+
+    let mut f32w = Horovod::new(HorovodConfig { wire: Wire::F32, ..Default::default() });
+    let r32 = train(&rt, &c, &*tr, &*va, &mut f32w).unwrap();
+    let mut f16w = Horovod::new(HorovodConfig { wire: Wire::F16, ..Default::default() });
+    let r16 = train(&rt, &c, &*tr, &*va, &mut f16w).unwrap();
+
+    assert!((r32.final_metric - r16.final_metric).abs() < 0.05,
+        "f32 {} vs f16 {}", r32.final_metric, r16.final_metric);
+}
+
+#[test]
+fn all_blocking_daso_has_no_nonblocking_syncs() {
+    // warmup+cooldown covering the whole run => cycling never happens
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let c = cfg(2, 2, 4);
+    let (tr, va) = daso::data::for_model(&rt.spec, c.train_samples, c.val_samples, 8).unwrap();
+    let mut d = Daso::new(
+        DasoConfig {
+            total_epochs: 4,
+            warmup_epochs: 2,
+            cooldown_epochs: 2,
+            ..DasoConfig::new(4)
+        },
+        2,
+    );
+    let rep = train(&rt, &c, &*tr, &*va, &mut d).unwrap();
+    assert_eq!(rep.comm.nonblocking_syncs, 0);
+    assert!(rep.comm.blocking_syncs > 0);
+    assert!(rep.final_metric > 0.85);
+}
+
+#[test]
+fn daso_single_node_is_pure_local_sync() {
+    // one node => groups of size 1: global sync is numerically a no-op
+    // but local (intra-node) averaging still runs every batch
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let c = cfg(1, 4, 4);
+    let (tr, va) = daso::data::for_model(&rt.spec, c.train_samples, c.val_samples, 10).unwrap();
+    let mut d = Daso::new(
+        DasoConfig { total_epochs: 4, warmup_epochs: 1, cooldown_epochs: 1, ..DasoConfig::new(4) },
+        4,
+    );
+    let rep = train(&rt, &c, &*tr, &*va, &mut d).unwrap();
+    assert!(rep.final_metric > 0.9, "{}", rep.summary_line());
+    assert_eq!(rep.comm.bytes_inter, 0, "single node must not touch the inter tier");
+}
+
+#[test]
+fn daso_nonblocking_overlap_reduces_wait() {
+    // with compute >> wire time, the non-blocking sync should be fully
+    // hidden: comm_wait ~ 0 during cycling
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let mut c = cfg(2, 2, 6);
+    c.compute_time_s = 0.5; // plenty of compute to hide the wire
+    let (tr, va) = daso::data::for_model(&rt.spec, c.train_samples, c.val_samples, 12).unwrap();
+    let mut d = Daso::new(
+        DasoConfig { total_epochs: 6, warmup_epochs: 1, cooldown_epochs: 1, ..DasoConfig::new(6) },
+        2,
+    );
+    let rep = train(&rt, &c, &*tr, &*va, &mut d).unwrap();
+    assert!(rep.comm.nonblocking_syncs > 0);
+    assert!(
+        rep.comm.comm_wait_s < 1e-6,
+        "non-blocking syncs should be hidden: waited {}s",
+        rep.comm.comm_wait_s
+    );
+}
+
+#[test]
+fn transformer_short_daso_run_learns() {
+    // full-stack smoke on the LM: a few steps must reduce the loss from
+    // ~ln(vocab) toward the chain's entropy floor
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("transformer").unwrap();
+    let mut c = cfg(1, 2, 2);
+    c.train_samples = 256;
+    c.val_samples = 64;
+    c.base_lr = 0.1;
+    c.lr_scale = 1.0;
+    let (tr, va) = daso::data::for_model(&rt.spec, c.train_samples, c.val_samples, 14).unwrap();
+    let mut d = Daso::new(
+        DasoConfig { total_epochs: 2, warmup_epochs: 1, cooldown_epochs: 0, ..DasoConfig::new(2) },
+        2,
+    );
+    let rep = train(&rt, &c, &*tr, &*va, &mut d).unwrap();
+    let first = rep.records.first().unwrap().train_loss;
+    let last = rep.records.last().unwrap().train_loss;
+    assert!(last < first, "LM loss must fall: {first} -> {last}");
+}

@@ -1,0 +1,217 @@
+//! End-to-end integration over the full stack: data -> cluster -> grad
+//! artifacts -> strategies -> metrics. Requires `make artifacts`.
+
+use daso::baselines::{Horovod, HorovodConfig, LocalOnly};
+use daso::daso::{Daso, DasoConfig};
+use daso::runtime::Engine;
+use daso::trainer::{train, TrainConfig};
+use daso::util::stats::max_abs_diff;
+
+fn engine() -> Option<Engine> {
+    match Engine::load("artifacts") {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e:#}) — run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn quick_cfg(nodes: usize, gpn: usize, epochs: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::quick(nodes, gpn, epochs);
+    cfg.train_samples = 1024;
+    cfg.val_samples = 256;
+    cfg.base_lr = 0.05;
+    cfg.lr_scale = (nodes * gpn) as f64;
+    cfg
+}
+
+fn daso_strategy(epochs: usize, gpn: usize) -> Daso {
+    Daso::new(
+        DasoConfig {
+            total_epochs: epochs,
+            warmup_epochs: 1,
+            cooldown_epochs: 1,
+            ..DasoConfig::new(epochs)
+        },
+        gpn,
+    )
+}
+
+#[test]
+fn daso_trains_mlp_to_high_accuracy() {
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let cfg = quick_cfg(2, 4, 8);
+    let (tr, va) = daso::data::for_model(&rt.spec, cfg.train_samples, cfg.val_samples, 42).unwrap();
+    let mut strat = daso_strategy(cfg.epochs, cfg.gpus_per_node);
+    let report = train(&rt, &cfg, &*tr, &*va, &mut strat).unwrap();
+    assert!(
+        report.final_metric > 0.9,
+        "DASO failed to learn: {}",
+        report.summary_line()
+    );
+    // training loss must have decreased substantially
+    let first = report.records.first().unwrap().train_loss;
+    let last = report.records.last().unwrap().train_loss;
+    assert!(last < first * 0.5, "loss {first} -> {last}");
+    // comm accounting: warm-up/cool-down blocking + cycling non-blocking
+    assert!(report.comm.blocking_syncs > 0);
+    assert!(report.comm.nonblocking_syncs > 0);
+    assert!(report.comm.bytes_inter > 0);
+}
+
+#[test]
+fn daso_matches_synchronous_baseline_quality() {
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let cfg = quick_cfg(2, 2, 8);
+    let (tr, va) = daso::data::for_model(&rt.spec, cfg.train_samples, cfg.val_samples, 1).unwrap();
+
+    let mut d = daso_strategy(cfg.epochs, cfg.gpus_per_node);
+    let daso_rep = train(&rt, &cfg, &*tr, &*va, &mut d).unwrap();
+
+    let mut h = Horovod::new(HorovodConfig::default());
+    let hv_rep = train(&rt, &cfg, &*tr, &*va, &mut h).unwrap();
+
+    // paper claim: similar accuracy at moderate scale
+    assert!(
+        (daso_rep.final_metric - hv_rep.final_metric).abs() < 0.1,
+        "daso {} vs horovod {}",
+        daso_rep.final_metric,
+        hv_rep.final_metric
+    );
+    // and both learn
+    assert!(daso_rep.final_metric > 0.85);
+    assert!(hv_rep.final_metric > 0.85);
+}
+
+#[test]
+fn daso_saves_inter_node_bytes_vs_horovod() {
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let cfg = quick_cfg(2, 4, 6);
+    let (tr, va) = daso::data::for_model(&rt.spec, cfg.train_samples, cfg.val_samples, 5).unwrap();
+
+    let mut d = daso_strategy(cfg.epochs, cfg.gpus_per_node);
+    let daso_rep = train(&rt, &cfg, &*tr, &*va, &mut d).unwrap();
+    let mut h = Horovod::new(HorovodConfig::default());
+    let hv_rep = train(&rt, &cfg, &*tr, &*va, &mut h).unwrap();
+
+    // the paper's core communication claim: hierarchical + selective sync
+    // moves far fewer bytes across the inter-node tier
+    assert!(
+        daso_rep.comm.bytes_inter < hv_rep.comm.bytes_inter / 2,
+        "daso {} bytes vs horovod {}",
+        daso_rep.comm.bytes_inter,
+        hv_rep.comm.bytes_inter
+    );
+    // and finishes sooner on the virtual clock
+    assert!(
+        daso_rep.total_sim_time_s <= hv_rep.total_sim_time_s,
+        "daso {}s vs horovod {}s",
+        daso_rep.total_sim_time_s,
+        hv_rep.total_sim_time_s
+    );
+}
+
+#[test]
+fn training_is_deterministic_for_fixed_seed() {
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let cfg = quick_cfg(1, 4, 3);
+    let (tr, va) = daso::data::for_model(&rt.spec, cfg.train_samples, cfg.val_samples, 9).unwrap();
+
+    let run = || {
+        let mut s = daso_strategy(cfg.epochs, cfg.gpus_per_node);
+        train(&rt, &cfg, &*tr, &*va, &mut s).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.final_metric, b.final_metric);
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.train_loss, rb.train_loss, "epoch {}", ra.epoch);
+    }
+}
+
+#[test]
+fn local_only_workers_diverge_from_each_other() {
+    // sanity for the simulation itself: without communication, replicas
+    // drift apart (this is what synchronization prevents)
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let cfg = quick_cfg(1, 2, 2);
+    let (tr, _va) = daso::data::for_model(&rt.spec, cfg.train_samples, cfg.val_samples, 11).unwrap();
+
+    let topo = cfg.topology();
+    let mut cluster = daso::cluster::ClusterState::new(topo, &rt, tr.len(), cfg.seed).unwrap();
+    let mut strat = LocalOnly::new();
+    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); 2];
+    let orders: Vec<Vec<usize>> = cluster
+        .workers
+        .iter()
+        .map(|w| w.shard.epoch_order(0))
+        .collect();
+    for step in 0..4 {
+        for w in 0..2 {
+            let idx = &orders[w][step * rt.spec.batch..(step + 1) * rt.spec.batch];
+            let (x, y) = tr.batch(idx);
+            let (_, g) = rt.grad(&cluster.workers[w].params, &x, &y).unwrap();
+            grads[w] = g;
+        }
+        let mut ctx = daso::trainer::StepCtx {
+            rt: &rt,
+            cluster: &mut cluster,
+            fabric: &cfg.fabric,
+            grads: &mut grads,
+            lr: 0.05,
+            epoch: 0,
+            global_batch: step + 1,
+        };
+        daso::trainer::Strategy::apply(&mut strat, &mut ctx).unwrap();
+    }
+    let diff = max_abs_diff(&cluster.workers[0].params, &cluster.workers[1].params);
+    assert!(diff > 1e-4, "replicas should drift without sync: {diff}");
+}
+
+#[test]
+fn daso_preserves_node_identical_invariant() {
+    // within a node, local gradient averaging keeps replicas bit-identical
+    let Some(engine) = engine() else { return };
+    let rt = engine.model("mlp").unwrap();
+    let cfg = quick_cfg(2, 2, 2);
+    let (tr, va) = daso::data::for_model(&rt.spec, cfg.train_samples, cfg.val_samples, 3).unwrap();
+    let topo = cfg.topology();
+    let mut cluster = daso::cluster::ClusterState::new(topo, &rt, tr.len(), cfg.seed).unwrap();
+    let mut strat = daso_strategy(cfg.epochs, cfg.gpus_per_node);
+    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); 4];
+    daso::trainer::Strategy::on_epoch_start(&mut strat, 1); // cycling phase
+    let orders: Vec<Vec<usize>> = cluster
+        .workers
+        .iter()
+        .map(|w| w.shard.epoch_order(0))
+        .collect();
+    for step in 0..6 {
+        for w in 0..4 {
+            let idx = &orders[w][step * rt.spec.batch..(step + 1) * rt.spec.batch];
+            let (x, y) = tr.batch(idx);
+            let (_, g) = rt.grad(&cluster.workers[w].params, &x, &y).unwrap();
+            grads[w] = g;
+        }
+        let mut ctx = daso::trainer::StepCtx {
+            rt: &rt,
+            cluster: &mut cluster,
+            fabric: &cfg.fabric,
+            grads: &mut grads,
+            lr: 0.05,
+            epoch: 1,
+            global_batch: step + 1,
+        };
+        daso::trainer::Strategy::apply(&mut strat, &mut ctx).unwrap();
+        assert!(
+            ctx.cluster.check_node_identical(),
+            "node-identical invariant broken at step {step}"
+        );
+    }
+    let _ = va;
+}
