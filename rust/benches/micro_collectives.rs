@@ -1,6 +1,7 @@
 //! Micro-bench: the real-buffer collectives (the hot path of every
 //! simulated synchronization step) across buffer sizes and wire formats.
 //! `cargo bench --bench micro_collectives`
+//! `DASO_BENCH_QUICK=1` runs a reduced configuration (the CI smoke job).
 
 use daso::bench_support::Bench;
 use daso::comm::{naive_mean, ring_allreduce_mean, sum_buffers, Wire};
@@ -18,27 +19,28 @@ fn make_bufs(n_participants: usize, len: usize) -> Vec<Vec<f32>> {
 }
 
 fn main() {
-    println!("== collectives micro-bench ==");
-    let bench = Bench::new(2, 8);
+    let quick = std::env::var("DASO_BENCH_QUICK").is_ok();
+    println!("== collectives micro-bench{} ==", if quick { " (quick)" } else { "" });
+    let bench = if quick { Bench::new(1, 3) } else { Bench::new(2, 8) };
+    let lens: &[usize] = if quick { &[100_000] } else { &[100_000, 1_000_000, 4_000_000] };
+    let part_counts: &[usize] = if quick { &[4] } else { &[4, 8] };
 
-    for &len in &[100_000usize, 1_000_000, 4_000_000] {
-        for &parts in &[4usize, 8] {
+    for &len in lens {
+        for &parts in part_counts {
             for wire in [Wire::F32, Wire::F16, Wire::Bf16] {
                 let base = make_bufs(parts, len);
-                bench.run(
-                    &format!("ring_allreduce p={parts} n={len} {wire:?}"),
-                    || {
-                        let mut bufs = base.clone();
-                        let mut refs: Vec<&mut Vec<f32>> = bufs.iter_mut().collect();
-                        ring_allreduce_mean(&mut refs, wire);
-                        std::hint::black_box(&bufs);
-                    },
-                );
+                bench.run(&format!("ring_allreduce p={parts} n={len} {wire:?}"), || {
+                    let mut bufs = base.clone();
+                    let mut refs: Vec<&mut Vec<f32>> = bufs.iter_mut().collect();
+                    ring_allreduce_mean(&mut refs, wire);
+                    std::hint::black_box(&bufs);
+                });
             }
         }
     }
 
-    for &len in &[1_000_000usize, 4_000_000] {
+    let mean_lens: &[usize] = if quick { &[1_000_000] } else { &[1_000_000, 4_000_000] };
+    for &len in mean_lens {
         let base = make_bufs(4, len);
         bench.run(&format!("naive_mean p=4 n={len}"), || {
             let refs: Vec<&Vec<f32>> = base.iter().collect();

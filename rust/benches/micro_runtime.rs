@@ -1,22 +1,24 @@
-//! Micro-bench: PJRT executable latency per artifact kind and model —
+//! Micro-bench: runtime entry-point latency per artifact kind and model —
 //! the per-step cost floor of the whole system (L3's hot path is
 //! grad -> avg -> update [-> blend]).
-//! `cargo bench --bench micro_runtime`
+//!
+//! Uses the PJRT artifact engine when available, the native reference
+//! backend otherwise (which is what the CI smoke job measures).
+//! `cargo bench --bench micro_runtime` (`DASO_BENCH_QUICK=1` for CI).
 
 use daso::bench_support::Bench;
 use daso::runtime::Engine;
 use daso::util::rng::Rng;
 
 fn main() {
-    let engine = match Engine::load("artifacts") {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("SKIP: artifacts not built ({e:#}) — run `make artifacts`");
-            return;
-        }
-    };
-    println!("== runtime micro-bench ({}) ==", engine.platform());
-    let bench = Bench::new(2, 8);
+    let engine = Engine::auto("artifacts");
+    let quick = std::env::var("DASO_BENCH_QUICK").is_ok();
+    println!(
+        "== runtime micro-bench ({}{}) ==",
+        engine.platform(),
+        if quick { ", quick" } else { "" }
+    );
+    let bench = if quick { Bench::new(1, 3) } else { Bench::new(2, 8) };
     let mut rng = Rng::new(3);
 
     for name in engine.manifest.models.keys().cloned().collect::<Vec<_>>() {

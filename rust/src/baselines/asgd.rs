@@ -5,9 +5,11 @@
 //! computing on older pulls, gradients are *stale* — the classic ASGD
 //! trade-off DASO's Eq. (1) is designed to tame in a different regime.
 
+use std::sync::{Arc, Mutex};
+
 use anyhow::Result;
 
-use crate::trainer::strategy::{CommStats, StepCtx, Strategy};
+use crate::trainer::strategy::{CommStats, RankCtx, RankStrategy, StepCtx, Strategy};
 
 pub struct AsgdServer {
     params: Option<Vec<f32>>,
@@ -82,5 +84,94 @@ impl Strategy for AsgdServer {
 
     fn state_desc(&self) -> String {
         format!("server_steps={}", self.server_steps)
+    }
+}
+
+#[derive(Default)]
+struct ServerState {
+    params: Option<Vec<f32>>,
+    momentum: Vec<f32>,
+    server_steps: u64,
+    /// when the server's NIC is next free (virtual time) — pushes queue
+    server_free_at: f64,
+}
+
+/// The central parameter server shared by all `AsgdRank` replicas in the
+/// threaded executor: a mutex guards the server state, so pushes apply in
+/// real arrival order — genuine (nondeterministic) ASGD staleness, unlike
+/// the serial executor's fixed worker order.
+#[derive(Clone, Default)]
+pub struct AsgdShared {
+    inner: Arc<Mutex<ServerState>>,
+}
+
+impl AsgdShared {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Per-rank ASGD worker for the threaded executor.
+pub struct AsgdRank {
+    shared: AsgdShared,
+    stats: CommStats,
+}
+
+impl AsgdRank {
+    pub fn new(shared: AsgdShared) -> Self {
+        Self { shared, stats: CommStats::default() }
+    }
+}
+
+impl RankStrategy for AsgdRank {
+    fn name(&self) -> &'static str {
+        "asgd"
+    }
+
+    fn on_batch(&mut self, ctx: &mut RankCtx) -> Result<()> {
+        let n = ctx.rt.spec.n_params;
+        let bytes = n * 4;
+        // see `AsgdServer`: scale the step down so the effective
+        // per-round learning rate matches synchronous training
+        let lr = ctx.lr / ctx.topo.world() as f32;
+
+        let mut server = self.shared.inner.lock().unwrap();
+        if server.params.is_none() {
+            // first worker to arrive seeds the server with the shared init
+            server.params = Some(ctx.worker.params.clone());
+            server.momentum = vec![0.0; n];
+        }
+        let ServerState { params, momentum, server_steps, server_free_at } = &mut *server;
+        let params = params.as_mut().unwrap();
+        ctx.rt.update(params, momentum, ctx.grad, lr)?;
+        *server_steps += 1;
+
+        // the server's NIC serializes: each push+pull queues behind the
+        // previous one. Real arrival order decides the queue here, so cap
+        // the modeled backlog at one cluster-wide round — OS scheduling
+        // skew between threads must not teleport a worker's virtual clock
+        // past what the serial per-round contention model allows.
+        let push_pull = 2.0 * ctx.fabric.inter.transfer_time(bytes);
+        let backlog_cap = ctx.worker.clock + push_pull * ctx.topo.world() as f64;
+        let start = ctx.worker.clock.max((*server_free_at).min(backlog_cap));
+        ctx.worker.wait_until(start);
+        ctx.worker.advance_clock(push_pull);
+        *server_free_at = ctx.worker.clock;
+        ctx.worker.bytes_sent_inter += 2 * bytes as u64;
+        self.stats.bytes_inter += 2 * bytes as u64;
+
+        // pull: the worker adopts the *current* server state
+        ctx.worker.params.copy_from_slice(params);
+        drop(server);
+        self.stats.global_syncs += 1;
+        Ok(())
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        self.stats.clone()
+    }
+
+    fn state_desc(&self) -> String {
+        format!("server_steps={}", self.shared.inner.lock().unwrap().server_steps)
     }
 }

@@ -8,8 +8,8 @@
 use anyhow::Result;
 
 use crate::comm::cost::{cast_time, fused_allreduce_time, DEVICE_MEM_BW};
-use crate::comm::{ring_allreduce_mean, Wire};
-use crate::trainer::strategy::{CommStats, StepCtx, Strategy};
+use crate::comm::{ring_allreduce_mean, Payload, Wire};
+use crate::trainer::strategy::{CommStats, RankCtx, RankStrategy, StepCtx, Strategy};
 
 #[derive(Debug, Clone)]
 pub struct HorovodConfig {
@@ -46,8 +46,12 @@ impl Strategy for Horovod {
         let wire_bytes = n * self.cfg.wire.bytes_per_elem();
 
         if world > 1 {
-            // blocking collective: everyone waits for the slowest
+            // blocking collective: everyone waits for the slowest (account
+            // the waits before the barrier levels the clocks)
             let before = ctx.cluster.makespan();
+            for w in &ctx.cluster.workers {
+                self.stats.comm_wait_s += (before - w.clock).max(0.0);
+            }
             ctx.cluster.barrier();
             let mut bufs: Vec<&mut Vec<f32>> = ctx.grads.iter_mut().collect();
             ring_allreduce_mean(&mut bufs, self.cfg.wire);
@@ -67,8 +71,6 @@ impl Strategy for Horovod {
             let ring_dt =
                 fused_allreduce_time(world, wire_bytes, self.cfg.fusion_bucket_bytes, link);
             for w in &mut ctx.cluster.workers {
-                let wait = (before - w.clock).max(0.0);
-                self.stats.comm_wait_s += wait;
                 w.advance_clock(cast_dt + ring_dt);
                 if ctx.cluster.topo.nodes > 1 {
                     w.bytes_sent_inter += wire_bytes as u64;
@@ -88,6 +90,81 @@ impl Strategy for Horovod {
                 .update(&mut worker.params, &mut worker.momentum, &ctx.grads[w], ctx.lr)?;
         }
         Ok(())
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        self.stats.clone()
+    }
+
+    fn state_desc(&self) -> String {
+        format!("wire={:?} bucket={}MiB", self.cfg.wire, self.cfg.fusion_bucket_bytes >> 20)
+    }
+}
+
+/// Per-rank Horovod for the threaded executor: one flat world allreduce
+/// per batch, rendezvous over channels. Bit-identical to the serial
+/// strategy (the reduction runs on rank-ordered buffers with the same
+/// ring kernel at the same wire format).
+pub struct HorovodRank {
+    cfg: HorovodConfig,
+    stats: CommStats,
+}
+
+impl HorovodRank {
+    pub fn new(cfg: HorovodConfig) -> Self {
+        Self { cfg, stats: CommStats::default() }
+    }
+}
+
+impl RankStrategy for HorovodRank {
+    fn name(&self) -> &'static str {
+        "horovod"
+    }
+
+    fn on_batch(&mut self, ctx: &mut RankCtx) -> Result<()> {
+        let world = ctx.topo.world();
+        let n = ctx.rt.spec.n_params;
+        let wire_bytes = n * self.cfg.wire.bytes_per_elem();
+
+        if world > 1 {
+            // blocking collective: everyone waits for the slowest
+            let wire = self.cfg.wire;
+            let payload = Payload::F32(std::mem::take(ctx.grad));
+            let (out, clocks) = ctx.comms.world.exchange(payload, ctx.worker.clock, |bufs| {
+                let mut refs: Vec<&mut Vec<f32>> =
+                    bufs.iter_mut().map(|b| b.as_f32_mut()).collect();
+                ring_allreduce_mean(&mut refs, wire);
+                Ok(())
+            })?;
+            *ctx.grad = out.into_f32();
+
+            let link = if ctx.topo.nodes > 1 { &ctx.fabric.inter } else { &ctx.fabric.intra };
+            let cast_dt = if self.cfg.wire.bytes_per_elem() < 4 {
+                2.0 * cast_time(n * 4, DEVICE_MEM_BW)
+            } else {
+                0.0
+            };
+            let ring_dt =
+                fused_allreduce_time(world, wire_bytes, self.cfg.fusion_bucket_bytes, link);
+            let before = clocks.iter().fold(0.0, |a, &b| f64::max(a, b));
+            // same wait_until + advance_clock sequence as the serial
+            // strategy — clock arithmetic must associate identically for
+            // the bit-identity contract to cover sim times
+            self.stats.comm_wait_s += ctx.worker.wait_until(before);
+            ctx.worker.advance_clock(cast_dt + ring_dt);
+            if ctx.topo.nodes > 1 {
+                ctx.worker.bytes_sent_inter += wire_bytes as u64;
+            } else {
+                ctx.worker.bytes_sent_intra += wire_bytes as u64;
+            }
+            self.stats.bytes_inter += wire_bytes as u64;
+            self.stats.global_syncs += 1;
+            self.stats.blocking_syncs += 1;
+        }
+
+        // local optimizer step with the averaged gradients
+        let worker = &mut *ctx.worker;
+        ctx.rt.update(&mut worker.params, &mut worker.momentum, ctx.grad, ctx.lr)
     }
 
     fn comm_stats(&self) -> CommStats {

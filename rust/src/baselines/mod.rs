@@ -6,6 +6,6 @@ pub mod asgd;
 pub mod horovod;
 pub mod serial;
 
-pub use asgd::AsgdServer;
-pub use horovod::{Horovod, HorovodConfig};
-pub use serial::LocalOnly;
+pub use asgd::{AsgdRank, AsgdServer, AsgdShared};
+pub use horovod::{Horovod, HorovodConfig, HorovodRank};
+pub use serial::{LocalOnly, LocalOnlyRank};

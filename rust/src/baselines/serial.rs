@@ -2,7 +2,7 @@
 
 use anyhow::Result;
 
-use crate::trainer::strategy::{CommStats, StepCtx, Strategy};
+use crate::trainer::strategy::{CommStats, RankCtx, RankStrategy, StepCtx, Strategy};
 
 /// No communication at all: every worker trains its own replica on its
 /// own shard. With world = 1 this is plain serial SGD (the ground-truth
@@ -36,6 +36,35 @@ impl Strategy for LocalOnly {
                 .update(&mut worker.params, &mut worker.momentum, &ctx.grads[w], ctx.lr)?;
         }
         Ok(())
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        self.stats.clone()
+    }
+}
+
+/// Per-rank no-communication strategy for the threaded executor: workers
+/// run embarrassingly parallel (the only rendezvous left is the trainer's
+/// epoch bookkeeping).
+#[derive(Default)]
+pub struct LocalOnlyRank {
+    stats: CommStats,
+}
+
+impl LocalOnlyRank {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl RankStrategy for LocalOnlyRank {
+    fn name(&self) -> &'static str {
+        "local_only"
+    }
+
+    fn on_batch(&mut self, ctx: &mut RankCtx) -> Result<()> {
+        let worker = &mut *ctx.worker;
+        ctx.rt.update(&mut worker.params, &mut worker.momentum, ctx.grad, ctx.lr)
     }
 
     fn comm_stats(&self) -> CommStats {

@@ -106,6 +106,9 @@ COMMANDS:
     train       run one training job
                   --model mlp|resnet|segnet|transformer   (default mlp)
                   --strategy daso|horovod|asgd|local_only (default daso)
+                  --executor serial|threaded (default serial; threaded runs
+                              one OS thread per simulated GPU with
+                              channel-based collectives)
                   --config <file.json>      JSON config (see config module)
                   --set key=value           override (repeatable)
                   --out <dir>               write run.csv / run.json

@@ -1,0 +1,393 @@
+//! Cluster executors: how the simulated GPUs actually run.
+//!
+//! - **serial** (`trainer::train`): the seed's reference path — one OS
+//!   thread walks all workers in lockstep with virtual clocks. Fully
+//!   deterministic and bit-reproducible; DASO's "non-blocking" sync is
+//!   bookkeeping only.
+//! - **threaded** (`train_threaded`): every worker is a real OS thread;
+//!   collectives are channel rendezvous (comm::channels) over the
+//!   two-tier communicator set, and DASO's cycling global sync is a real
+//!   in-flight exchange — the rotating group's snapshots travel through
+//!   an [`crate::comm::AsyncGroup`] mailbox while training continues, and
+//!   the stale blend (Eq. 1) consumes whatever has actually arrived W
+//!   batches later.
+//!
+//! For blocking strategies (Horovod, DASO warm-up/cool-down, local-only)
+//! the two executors produce bit-identical parameters and loss records:
+//! reductions run on gathered buffers in rank order with the same kernels,
+//! and epoch bookkeeping replicates the serial summation order. The
+//! threaded path requires the native backend (`ModelRuntime` is only
+//! `Sync` without the `pjrt` feature, whose client handles are Rc-based).
+
+use anyhow::{bail, Result};
+
+/// Which executor drives the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutorKind {
+    Serial,
+    Threaded,
+}
+
+impl ExecutorKind {
+    pub fn parse(s: &str) -> Result<ExecutorKind> {
+        Ok(match s {
+            "serial" => ExecutorKind::Serial,
+            "threaded" | "threads" => ExecutorKind::Threaded,
+            other => bail!("unknown executor {other:?} (serial|threaded)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecutorKind::Serial => "serial",
+            ExecutorKind::Threaded => "threaded",
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use threaded::train_threaded;
+
+/// The threaded executor needs a `Sync` runtime; the PJRT backend's
+/// Rc-based client handles are not. With `--features pjrt`, fall back to
+/// `--executor serial`.
+#[cfg(feature = "pjrt")]
+pub fn train_threaded(
+    _rt: &crate::runtime::ModelRuntime,
+    _cfg: &crate::trainer::TrainConfig,
+    _train_data: &dyn crate::data::Dataset,
+    _val_data: &dyn crate::data::Dataset,
+    _factory: &crate::trainer::strategy::RankStrategyFactory,
+) -> Result<crate::trainer::RunReport> {
+    bail!(
+        "the threaded executor requires the thread-safe native backend; \
+         the PJRT client (Rc-based xla bindings) is not Sync — \
+         run with --executor serial or build without --features pjrt"
+    )
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod threaded {
+    use std::time::Instant;
+
+    use anyhow::{anyhow, ensure, Result};
+
+    use crate::cluster::{ClusterState, Worker};
+    use crate::comm::channels::{build_comms, GroupComm, Payload, RankComms};
+    use crate::comm::naive_mean;
+    use crate::data::shard::Shard;
+    use crate::data::Dataset;
+    use crate::optim::LrSchedule;
+    use crate::runtime::ModelRuntime;
+    use crate::trainer::loop_::{EpochRecord, RunReport, TrainConfig};
+    use crate::trainer::metrics::evaluate;
+    use crate::trainer::strategy::{CommStats, RankCtx, RankStrategy, RankStrategyFactory};
+
+    /// What rank 0 (and only rank 0) assembles during the run.
+    struct ZeroOut {
+        records: Vec<EpochRecord>,
+        final_metric: f64,
+        final_val_loss: f64,
+    }
+
+    struct RankOutput {
+        worker: Worker,
+        stats: CommStats,
+        name: &'static str,
+        zero: Option<ZeroOut>,
+    }
+
+    /// Train with one OS thread per simulated GPU. Mirrors
+    /// `trainer::train`'s configuration and report; see the module docs
+    /// for the determinism contract.
+    pub fn train_threaded(
+        rt: &ModelRuntime,
+        cfg: &TrainConfig,
+        train_data: &dyn Dataset,
+        val_data: &dyn Dataset,
+        factory: &RankStrategyFactory,
+    ) -> Result<RunReport> {
+        let topo = cfg.topology();
+        let world = topo.world();
+        let batch = rt.spec.batch;
+        let steps_per_epoch =
+            crate::data::shard::lockstep_batches_per_epoch(train_data.len(), world, batch);
+        ensure!(
+            steps_per_epoch > 0,
+            "shard too small: {} samples / {} workers < batch {}",
+            train_data.len(),
+            world,
+            batch
+        );
+        let init = rt.init_params()?;
+        let lr_proto = LrSchedule::new(
+            cfg.base_lr,
+            cfg.lr_scale,
+            cfg.lr_warmup_epochs,
+            cfg.lr_decay,
+            cfg.lr_patience,
+        );
+
+        let wall_start = Instant::now();
+        let comms = build_comms(&topo);
+        let results: Vec<Result<RankOutput>> = std::thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .enumerate()
+                .map(|(rank, comm)| {
+                    let init = init.clone();
+                    let lr_sched = lr_proto.clone();
+                    s.spawn(move || {
+                        rank_main(
+                            rank,
+                            rt,
+                            cfg,
+                            train_data,
+                            val_data,
+                            comm,
+                            factory(rank),
+                            init,
+                            lr_sched,
+                            steps_per_epoch,
+                        )
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(rank, h)| {
+                    h.join().unwrap_or_else(|_| Err(anyhow!("worker thread {rank} panicked")))
+                })
+                .collect()
+        });
+
+        let mut workers = Vec::with_capacity(world);
+        let mut comm = CommStats::default();
+        let mut strategy_name = "";
+        let mut zero: Option<ZeroOut> = None;
+        for (rank, result) in results.into_iter().enumerate() {
+            let out = result?;
+            // byte/wait counters are per-rank and add up; event counters
+            // are schedule-level and identical on every rank — take rank 0's
+            comm.bytes_inter += out.stats.bytes_inter;
+            comm.bytes_intra += out.stats.bytes_intra;
+            comm.comm_wait_s += out.stats.comm_wait_s;
+            if rank == 0 {
+                comm.global_syncs = out.stats.global_syncs;
+                comm.blocking_syncs = out.stats.blocking_syncs;
+                comm.nonblocking_syncs = out.stats.nonblocking_syncs;
+                comm.local_syncs = out.stats.local_syncs;
+                strategy_name = out.name;
+                zero = out.zero;
+            }
+            workers.push(out.worker);
+        }
+        let cluster = ClusterState::from_workers(topo, workers);
+        let zero = zero.expect("rank 0 must report");
+        let final_metric = zero.final_metric;
+        let best_metric =
+            zero.records.iter().filter_map(|r| r.metric).fold(final_metric, f64::max);
+
+        Ok(RunReport {
+            strategy: strategy_name.to_string(),
+            model: rt.spec.name.clone(),
+            world,
+            records: zero.records,
+            final_metric,
+            final_val_loss: zero.final_val_loss,
+            best_metric,
+            total_sim_time_s: cluster.makespan(),
+            total_wall_s: wall_start.elapsed().as_secs_f64(),
+            comm,
+            final_params: cluster.workers.iter().map(|w| w.params.clone()).collect(),
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn rank_main(
+        rank: usize,
+        rt: &ModelRuntime,
+        cfg: &TrainConfig,
+        train_data: &dyn Dataset,
+        val_data: &dyn Dataset,
+        comms: RankComms,
+        mut strategy: Box<dyn RankStrategy>,
+        init: Vec<f32>,
+        mut lr_sched: LrSchedule,
+        steps_per_epoch: usize,
+    ) -> Result<RankOutput> {
+        let topo = cfg.topology();
+        let batch = rt.spec.batch;
+        let mut worker = Worker::new(
+            topo.rank_of(rank),
+            init,
+            Shard::new(train_data.len(), topo.world(), rank, cfg.seed),
+        );
+        let wall_start = Instant::now();
+        let mut records = Vec::new();
+        let mut grad: Vec<f32> = Vec::new();
+        let mut global_batch = 0usize;
+
+        for epoch in 0..cfg.epochs {
+            strategy.on_epoch_start(epoch);
+            let lr = lr_sched.lr() as f32;
+            let order = worker.shard.epoch_order(epoch);
+            let mut step_losses = Vec::with_capacity(steps_per_epoch);
+
+            for step in 0..steps_per_epoch {
+                let idx = &order[step * batch..(step + 1) * batch];
+                let (x, y) = train_data.batch(idx);
+                let (loss, g) = rt.grad(&worker.params, &x, &y)?;
+                grad = g;
+                worker.advance_clock(cfg.compute_time_s);
+                worker.batches_done += 1;
+                step_losses.push(loss);
+                global_batch += 1;
+                let mut ctx = RankCtx {
+                    rt,
+                    topo,
+                    fabric: &cfg.fabric,
+                    comms: &comms,
+                    worker: &mut worker,
+                    grad: &mut grad,
+                    lr,
+                    epoch,
+                    global_batch,
+                };
+                strategy.on_batch(&mut ctx)?;
+            }
+
+            // epoch bookkeeping (not modeled communication: clocks are
+            // exchanged for reporting but never advanced here)
+            let (train_loss, clocks) =
+                reduce_epoch_loss(&comms.world, &step_losses, worker.clock)?;
+            lr_sched.on_epoch_end(train_loss);
+            strategy.on_epoch_end(epoch, train_loss);
+
+            let do_eval = cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0;
+            let (metric, val_loss) = if do_eval {
+                let consensus = consensus_params(&comms.world, &worker.params, worker.clock)?;
+                // every rank evaluates the same consensus redundantly:
+                // it keeps the threads in phase, so no peer sits blocked
+                // in the next collective (against its rendezvous timeout)
+                // while a single rank walks the whole validation set
+                let acc = evaluate(rt, &consensus, val_data, epoch)?;
+                (Some(acc.value()), Some(acc.mean_loss()))
+            } else {
+                (None, None)
+            };
+
+            if rank == 0 {
+                let rec = EpochRecord {
+                    epoch,
+                    train_loss,
+                    lr: lr as f64,
+                    metric,
+                    val_loss,
+                    sim_time_s: clocks.iter().fold(0.0, |a, &b| f64::max(a, b)),
+                    wall_time_s: wall_start.elapsed().as_secs_f64(),
+                    strategy_state: strategy.state_desc(),
+                };
+                if cfg.verbose {
+                    eprintln!(
+                        "[{}/threaded] epoch {:>3} loss {:.4} lr {:.5} metric {} sim {:.1}s {}",
+                        strategy.name(),
+                        epoch,
+                        rec.train_loss,
+                        rec.lr,
+                        rec.metric.map_or("-".into(), |m| format!("{m:.4}")),
+                        rec.sim_time_s,
+                        rec.strategy_state
+                    );
+                }
+                records.push(rec);
+            }
+        }
+
+        // flush in-flight state, then the final consensus evaluation
+        {
+            let mut ctx = RankCtx {
+                rt,
+                topo,
+                fabric: &cfg.fabric,
+                comms: &comms,
+                worker: &mut worker,
+                grad: &mut grad,
+                lr: lr_sched.lr() as f32,
+                epoch: cfg.epochs,
+                global_batch,
+            };
+            strategy.finalize(&mut ctx)?;
+        }
+        let consensus = consensus_params(&comms.world, &worker.params, worker.clock)?;
+        // final consensus eval on every rank (in-phase, see above); this
+        // is the last act of each thread, so stragglers cost nothing
+        let acc = evaluate(rt, &consensus, val_data, cfg.epochs)?;
+        let zero = if rank == 0 {
+            Some(ZeroOut { records, final_metric: acc.value(), final_val_loss: acc.mean_loss() })
+        } else {
+            None
+        };
+        Ok(RankOutput { worker, stats: strategy.comm_stats(), name: strategy.name(), zero })
+    }
+
+    /// Cluster-mean training loss, reduced in the serial executor's exact
+    /// summation order (step-major, then rank) so records are bit-equal.
+    fn reduce_epoch_loss(
+        world: &GroupComm,
+        step_losses: &[f32],
+        clock: f64,
+    ) -> Result<(f64, Vec<f64>)> {
+        let payload = Payload::F64(step_losses.iter().map(|&l| l as f64).collect());
+        let (out, clocks) = world.exchange(payload, clock, |bufs| {
+            let steps = bufs[0].as_f64().len();
+            let mut sum = 0.0f64;
+            for step in 0..steps {
+                for b in bufs.iter() {
+                    sum += b.as_f64()[step];
+                }
+            }
+            let mean = sum / (bufs.len() * steps) as f64;
+            for b in bufs.iter_mut() {
+                *b = Payload::F64(vec![mean]);
+            }
+            Ok(())
+        })?;
+        Ok((out.into_f64()[0], clocks))
+    }
+
+    /// Mean of all replicas' parameters, in rank order — identical to the
+    /// serial executor's `eval_consensus` basis.
+    fn consensus_params(world: &GroupComm, params: &[f32], clock: f64) -> Result<Vec<f32>> {
+        let (out, _) = world.exchange(Payload::F32(params.to_vec()), clock, |bufs| {
+            let refs: Vec<&Vec<f32>> = bufs.iter().map(|b| b.as_f32()).collect();
+            let mean = naive_mean(&refs);
+            for b in bufs.iter_mut() {
+                *b = Payload::F32(mean.clone());
+            }
+            Ok(())
+        })?;
+        Ok(out.into_f32())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executor_kind_parses() {
+        assert_eq!(ExecutorKind::parse("serial").unwrap(), ExecutorKind::Serial);
+        assert_eq!(ExecutorKind::parse("threaded").unwrap(), ExecutorKind::Threaded);
+        assert_eq!(ExecutorKind::parse("threads").unwrap(), ExecutorKind::Threaded);
+        assert!(ExecutorKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn executor_kind_roundtrip() {
+        for k in [ExecutorKind::Serial, ExecutorKind::Threaded] {
+            assert_eq!(ExecutorKind::parse(k.name()).unwrap(), k);
+        }
+    }
+}

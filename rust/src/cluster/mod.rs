@@ -1,10 +1,16 @@
 //! Simulated cluster: each "GPU" is a worker owning a private parameter /
 //! momentum buffer and a virtual clock; the real model math runs through
-//! the shared PJRT executables. The physical JUWELS-Booster testbed is
-//! replaced by this substrate (see DESIGN.md "Substitutions") — the
-//! *decisions* (which buffers average when, how many bytes cross which
-//! tier) are identical to the paper's.
+//! the shared runtime. The physical JUWELS-Booster testbed is replaced by
+//! this substrate (see DESIGN.md "Substitutions") — the *decisions*
+//! (which buffers average when, how many bytes cross which tier) are
+//! identical to the paper's.
+//!
+//! Two executors drive the workers: the serial reference walk
+//! (`trainer::train`) and the thread-per-worker executor with
+//! channel-based collectives (`executor::train_threaded`).
 
+pub mod executor;
 pub mod worker;
 
+pub use executor::{train_threaded, ExecutorKind};
 pub use worker::{ClusterState, Worker};

@@ -22,6 +22,22 @@ pub struct Worker {
 }
 
 impl Worker {
+    /// A fresh replica at rank `rank` holding `params` (momentum zeroed)
+    /// and owning `shard`.
+    pub fn new(rank: Rank, params: Vec<f32>, shard: Shard) -> Worker {
+        let n = params.len();
+        Worker {
+            rank,
+            params,
+            momentum: vec![0.0; n],
+            clock: 0.0,
+            shard,
+            batches_done: 0,
+            bytes_sent_intra: 0,
+            bytes_sent_inter: 0,
+        }
+    }
+
     pub fn advance_clock(&mut self, dt: f64) {
         debug_assert!(dt >= 0.0, "negative clock step {dt}");
         self.clock += dt;
@@ -52,23 +68,24 @@ impl ClusterState {
         seed: u64,
     ) -> Result<ClusterState> {
         let init = rt.init_params()?;
-        let n = rt.spec.n_params;
         let workers = (0..topo.world())
             .map(|g| {
-                let rank = topo.rank_of(g);
-                Worker {
-                    rank,
-                    params: init.clone(),
-                    momentum: vec![0.0; n],
-                    clock: 0.0,
-                    shard: Shard::new(dataset_len, topo.world(), g, seed),
-                    batches_done: 0,
-                    bytes_sent_intra: 0,
-                    bytes_sent_inter: 0,
-                }
+                Worker::new(
+                    topo.rank_of(g),
+                    init.clone(),
+                    Shard::new(dataset_len, topo.world(), g, seed),
+                )
             })
             .collect();
         Ok(ClusterState { topo, workers })
+    }
+
+    /// Reassemble a cluster from workers handed back by the threaded
+    /// executor (must be in rank order and cover the topology).
+    pub fn from_workers(topo: Topology, workers: Vec<Worker>) -> ClusterState {
+        assert_eq!(workers.len(), topo.world(), "worker count must match topology");
+        debug_assert!(workers.iter().enumerate().all(|(i, w)| w.rank.global == i));
+        ClusterState { topo, workers }
     }
 
     pub fn world(&self) -> usize {

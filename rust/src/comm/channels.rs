@@ -1,0 +1,539 @@
+//! Channel-based collectives for the threaded executor.
+//!
+//! Every logical communicator (the node-local network, one global group
+//! per local id, the whole world) is a [`GroupComm`]: a gather/scatter
+//! rendezvous over `std::sync::mpsc` channels. Member 0 acts as the
+//! leader; the others send their contribution (plus virtual clock) to the
+//! leader, which assembles the buffers **in member order**, applies the
+//! reduction, and scatters the per-member results back. Because the
+//! reduction runs on the gathered buffers in the same order and with the
+//! same kernels (`ring_allreduce_mean`, the Pallas-equivalent `avg`) as
+//! the serial executor, blocking collectives are bit-identical between
+//! `--executor serial` and `--executor threaded` regardless of thread
+//! scheduling.
+//!
+//! DASO's non-blocking global sync uses [`AsyncGroup`] instead: a
+//! mutex+condvar mailbox where the rotating group's members deposit
+//! parameter snapshots and pick up the completed sum W batches later —
+//! a real in-flight exchange, training continues while peers contribute.
+//!
+//! Rendezvous ordering is deadlock-free as long as all members of a group
+//! issue the same sequence of collectives on it (the lockstep schedule
+//! every strategy derives deterministically from batch counters); a
+//! member cannot race ahead because it blocks on the leader's scatter,
+//! and the leader only scatters after the full gather.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::topology::Topology;
+
+/// Bound on how long any rendezvous waits for its peers. A healthy
+/// collective round is bounded by one batch of compute (well under a
+/// minute even for artifact-scale models); if a companion worker thread
+/// dies mid-run, surviving members would otherwise block forever (the
+/// leader's gather only errors once *every* sender is dropped, and the
+/// async mailbox's condvar has no other wake-up). Kept shorter than the
+/// test watchdogs so the per-rank root-cause error surfaces first.
+const PEER_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Collective payload: parameter/gradient buffers travel as f32, epoch
+/// bookkeeping (loss sums) as f64.
+#[derive(Debug, Clone, Default)]
+pub enum Payload {
+    #[default]
+    Empty,
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+impl Payload {
+    pub fn as_f32(&self) -> &Vec<f32> {
+        match self {
+            Payload::F32(v) => v,
+            other => panic!("payload type mismatch: expected f32, got {other:?}"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut Vec<f32> {
+        match self {
+            Payload::F32(v) => v,
+            other => panic!("payload type mismatch: expected f32, got {other:?}"),
+        }
+    }
+
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            Payload::F32(v) => v,
+            other => panic!("payload type mismatch: expected f32, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> &Vec<f64> {
+        match self {
+            Payload::F64(v) => v,
+            other => panic!("payload type mismatch: expected f64, got {other:?}"),
+        }
+    }
+
+    pub fn into_f64(self) -> Vec<f64> {
+        match self {
+            Payload::F64(v) => v,
+            other => panic!("payload type mismatch: expected f64, got {other:?}"),
+        }
+    }
+}
+
+/// Error for a rendezvous whose counterpart died or stalled past the
+/// timeout.
+fn chan_err() -> anyhow::Error {
+    anyhow!("collective peer missing (companion worker thread died or stalled)")
+}
+
+struct GatherMsg {
+    index: usize,
+    payload: Payload,
+    clock: f64,
+}
+
+struct ScatterMsg {
+    payload: Payload,
+    clocks: Vec<f64>,
+}
+
+enum Role {
+    /// Single-member group: every collective is the identity.
+    Solo,
+    Leader {
+        gather_rx: Receiver<GatherMsg>,
+        result_txs: Vec<Option<Sender<ScatterMsg>>>,
+    },
+    Member {
+        gather_tx: Sender<GatherMsg>,
+        result_rx: Receiver<ScatterMsg>,
+    },
+}
+
+/// One member's handle on a rendezvous communicator.
+pub struct GroupComm {
+    size: usize,
+    index: usize,
+    role: Role,
+}
+
+impl GroupComm {
+    /// Build handles for a `size`-member group (member 0 is the leader).
+    pub fn group(size: usize) -> Vec<GroupComm> {
+        assert!(size >= 1);
+        if size == 1 {
+            return vec![GroupComm { size: 1, index: 0, role: Role::Solo }];
+        }
+        let (gather_tx, gather_rx) = channel::<GatherMsg>();
+        // the leader keeps its own result in place, so index 0 has no channel
+        let mut result_txs: Vec<Option<Sender<ScatterMsg>>> = vec![None];
+        let mut result_rxs: Vec<Receiver<ScatterMsg>> = Vec::with_capacity(size - 1);
+        for _ in 1..size {
+            let (tx, rx) = channel::<ScatterMsg>();
+            result_txs.push(Some(tx));
+            result_rxs.push(rx);
+        }
+        let mut members = Vec::with_capacity(size);
+        members.push(GroupComm { size, index: 0, role: Role::Leader { gather_rx, result_txs } });
+        for (i, result_rx) in result_rxs.into_iter().enumerate() {
+            members.push(GroupComm {
+                size,
+                index: i + 1,
+                role: Role::Member { gather_tx: gather_tx.clone(), result_rx },
+            });
+        }
+        members
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    /// One rendezvous round: contribute `payload` + `clock`, block until
+    /// every member has arrived, return this member's reduced payload and
+    /// the clocks of all members (in member order). `reduce` runs once,
+    /// on the leader, over the gathered payloads in member order; every
+    /// member must pass an equivalent closure.
+    pub fn exchange<F>(
+        &self,
+        payload: Payload,
+        clock: f64,
+        reduce: F,
+    ) -> Result<(Payload, Vec<f64>)>
+    where
+        F: FnOnce(&mut [Payload]) -> Result<()>,
+    {
+        match &self.role {
+            Role::Solo => {
+                let mut bufs = [payload];
+                reduce(&mut bufs)?;
+                let [payload] = bufs;
+                Ok((payload, vec![clock]))
+            }
+            Role::Member { gather_tx, result_rx } => {
+                gather_tx
+                    .send(GatherMsg { index: self.index, payload, clock })
+                    .map_err(|_| chan_err())?;
+                let msg = result_rx.recv_timeout(PEER_TIMEOUT).map_err(|_| chan_err())?;
+                Ok((msg.payload, msg.clocks))
+            }
+            Role::Leader { gather_rx, result_txs } => {
+                let mut bufs: Vec<Payload> = (0..self.size).map(|_| Payload::Empty).collect();
+                let mut clocks = vec![0.0f64; self.size];
+                bufs[self.index] = payload;
+                clocks[self.index] = clock;
+                for _ in 0..self.size - 1 {
+                    let msg = gather_rx.recv_timeout(PEER_TIMEOUT).map_err(|_| chan_err())?;
+                    bufs[msg.index] = msg.payload;
+                    clocks[msg.index] = msg.clock;
+                }
+                reduce(&mut bufs)?;
+                for (i, tx) in result_txs.iter().enumerate() {
+                    if let Some(tx) = tx {
+                        let payload = std::mem::take(&mut bufs[i]);
+                        let msg = ScatterMsg { payload, clocks: clocks.clone() };
+                        tx.send(msg).map_err(|_| chan_err())?;
+                    }
+                }
+                let own = std::mem::take(&mut bufs[self.index]);
+                Ok((own, clocks))
+            }
+        }
+    }
+
+    /// Barrier: rendezvous with no data; returns all members' clocks.
+    pub fn barrier(&self, clock: f64) -> Result<Vec<f64>> {
+        let (_, clocks) = self.exchange(Payload::Empty, clock, |_| Ok(()))?;
+        Ok(clocks)
+    }
+}
+
+struct AsyncRound {
+    slots: Vec<Option<Vec<f32>>>,
+    clocks: Vec<f64>,
+    arrived: usize,
+    /// (element-wise sum over all members' snapshots, virtual finish time)
+    ready: Option<(Arc<Vec<f32>>, f64)>,
+    collected: usize,
+}
+
+impl AsyncRound {
+    fn new(size: usize) -> AsyncRound {
+        AsyncRound {
+            slots: (0..size).map(|_| None).collect(),
+            clocks: vec![0.0; size],
+            arrived: 0,
+            ready: None,
+            collected: 0,
+        }
+    }
+}
+
+#[derive(Default)]
+struct AsyncState {
+    rounds: BTreeMap<u64, AsyncRound>,
+    next_send: Vec<u64>,
+    next_recv: Vec<u64>,
+}
+
+struct AsyncShared {
+    state: Mutex<AsyncState>,
+    cv: Condvar,
+}
+
+/// Mailbox for DASO's non-blocking global synchronization: each member of
+/// the rotating group deposits a parameter snapshot (`contribute`),
+/// training continues, and W batches later `collect` picks up the
+/// completed sum — blocking only if some peer has genuinely not sent yet.
+/// Rounds are sequence-numbered per member, so a fast member may start
+/// round k+1 before a slow one has collected round k.
+pub struct AsyncGroup {
+    size: usize,
+    index: usize,
+    shared: Arc<AsyncShared>,
+}
+
+impl AsyncGroup {
+    pub fn group(size: usize) -> Vec<AsyncGroup> {
+        assert!(size >= 1);
+        let shared = Arc::new(AsyncShared {
+            state: Mutex::new(AsyncState {
+                rounds: BTreeMap::new(),
+                next_send: vec![0; size],
+                next_recv: vec![0; size],
+            }),
+            cv: Condvar::new(),
+        });
+        (0..size)
+            .map(|index| AsyncGroup { size, index, shared: shared.clone() })
+            .collect()
+    }
+
+    /// Deposit this member's snapshot for its next round. `wire_dt` is
+    /// the modeled allreduce time; when the last member arrives the sum
+    /// is formed (f32, member order — matching the serial executor's
+    /// `sum_buffers`) and the round's virtual finish time becomes
+    /// `max(member clocks) + wire_dt`.
+    pub fn contribute(&self, snapshot: Vec<f32>, clock: f64, wire_dt: f64) {
+        let mut st = self.shared.state.lock().unwrap();
+        let seq = st.next_send[self.index];
+        st.next_send[self.index] += 1;
+        let size = self.size;
+        let round = st.rounds.entry(seq).or_insert_with(|| AsyncRound::new(size));
+        round.slots[self.index] = Some(snapshot);
+        round.clocks[self.index] = clock;
+        round.arrived += 1;
+        if round.arrived == size {
+            let len = round.slots[0].as_ref().map_or(0, |s| s.len());
+            let mut sum = vec![0.0f32; len];
+            for slot in &mut round.slots {
+                let buf = slot.take().expect("all members arrived");
+                for (o, v) in sum.iter_mut().zip(buf) {
+                    *o += v;
+                }
+            }
+            let start = round.clocks.iter().fold(0.0f64, |a, &b| a.max(b));
+            round.ready = Some((Arc::new(sum), start + wire_dt));
+            self.shared.cv.notify_all();
+        }
+    }
+
+    /// Pick up this member's next completed round, blocking until every
+    /// peer has contributed (bounded by [`PEER_TIMEOUT`]). Returns the
+    /// snapshot sum and the virtual time at which the exchanged data is
+    /// fully received.
+    pub fn collect(&self) -> Result<(Arc<Vec<f32>>, f64)> {
+        let mut st = self.shared.state.lock().unwrap();
+        let seq = st.next_recv[self.index];
+        st.next_recv[self.index] += 1;
+        let deadline = Instant::now() + PEER_TIMEOUT;
+        loop {
+            if let Some(round) = st.rounds.get_mut(&seq) {
+                if let Some((sum, finish)) = round.ready.clone() {
+                    round.collected += 1;
+                    if round.collected == self.size {
+                        st.rounds.remove(&seq);
+                    }
+                    return Ok((sum, finish));
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(chan_err());
+            }
+            st = self.shared.cv.wait_timeout(st, deadline - now).unwrap().0;
+        }
+    }
+}
+
+/// All communicator handles for one rank in the threaded executor.
+pub struct RankComms {
+    /// every rank in the cluster (epoch bookkeeping, Horovod's flat ring)
+    pub world: GroupComm,
+    /// this rank's node-local network (members ordered by local id)
+    pub node: GroupComm,
+    /// this rank's global group — same local id on every node (members
+    /// ordered by node id); carries DASO's blocking global sync
+    pub global: GroupComm,
+    /// non-blocking mailbox for the same global group
+    pub global_async: AsyncGroup,
+}
+
+/// Build the two-tier communicator set for every rank of `topo`.
+pub fn build_comms(topo: &Topology) -> Vec<RankComms> {
+    let world = GroupComm::group(topo.world());
+    let mut nodes: Vec<Option<GroupComm>> = (0..topo.world()).map(|_| None).collect();
+    for node in 0..topo.nodes {
+        let handles = GroupComm::group(topo.gpus_per_node);
+        for (handle, r) in handles.into_iter().zip(topo.node_ranks(node)) {
+            nodes[r] = Some(handle);
+        }
+    }
+    let mut globals: Vec<Option<(GroupComm, AsyncGroup)>> =
+        (0..topo.world()).map(|_| None).collect();
+    for g in 0..topo.n_groups() {
+        let handles = GroupComm::group(topo.nodes);
+        let asyncs = AsyncGroup::group(topo.nodes);
+        for ((handle, mailbox), r) in handles.into_iter().zip(asyncs).zip(topo.group_members(g)) {
+            globals[r] = Some((handle, mailbox));
+        }
+    }
+    world
+        .into_iter()
+        .zip(nodes)
+        .zip(globals)
+        .map(|((world, node), global)| {
+            let (global, global_async) = global.expect("groups cover the world");
+            RankComms { world, node: node.expect("nodes cover the world"), global, global_async }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::collectives::{naive_mean, ring_allreduce_mean, Wire};
+
+    fn spawn_members<F, T>(handles: Vec<GroupComm>, f: F) -> Vec<T>
+    where
+        F: Fn(usize, GroupComm) -> T + Send + Sync,
+        T: Send,
+    {
+        std::thread::scope(|s| {
+            let joins: Vec<_> = handles
+                .into_iter()
+                .enumerate()
+                .map(|(i, h)| s.spawn(|| f(i, h)))
+                .collect();
+            joins.into_iter().map(|j| j.join().expect("member thread")).collect()
+        })
+    }
+
+    #[test]
+    fn exchange_matches_serial_ring() {
+        let n = 5;
+        let inputs: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32 + 0.5; 97]).collect();
+        // serial oracle
+        let mut expect = inputs.clone();
+        let mut refs: Vec<&mut Vec<f32>> = expect.iter_mut().collect();
+        ring_allreduce_mean(&mut refs, Wire::F32);
+
+        let handles = GroupComm::group(n);
+        let inputs_ref = &inputs;
+        let outs = spawn_members(handles, move |i, comm| {
+            let (out, clocks) = comm
+                .exchange(Payload::F32(inputs_ref[i].clone()), i as f64, |bufs| {
+                    let mut refs: Vec<&mut Vec<f32>> =
+                        bufs.iter_mut().map(|b| b.as_f32_mut()).collect();
+                    ring_allreduce_mean(&mut refs, Wire::F32);
+                    Ok(())
+                })
+                .unwrap();
+            (out.into_f32(), clocks)
+        });
+        for (i, (out, clocks)) in outs.iter().enumerate() {
+            assert_eq!(out, &expect[i], "member {i}");
+            assert_eq!(clocks.len(), n);
+            let tmax = clocks.iter().fold(0.0f64, |a, &b| a.max(b));
+            assert_eq!(tmax, (n - 1) as f64);
+        }
+    }
+
+    #[test]
+    fn exchange_repeats_many_rounds_without_mixing() {
+        let n = 4;
+        let rounds = 50;
+        let handles = GroupComm::group(n);
+        let outs = spawn_members(handles, move |i, comm| {
+            let mut got = Vec::new();
+            for r in 0..rounds {
+                let payload = vec![(i + r) as f32];
+                let (out, _) = comm
+                    .exchange(Payload::F32(payload), 0.0, |bufs| {
+                        let refs: Vec<&Vec<f32>> = bufs.iter().map(|b| b.as_f32()).collect();
+                        let mean = naive_mean(&refs);
+                        for b in bufs.iter_mut() {
+                            *b.as_f32_mut() = mean.clone();
+                        }
+                        Ok(())
+                    })
+                    .unwrap();
+                got.push(out.into_f32()[0]);
+            }
+            got
+        });
+        for r in 0..rounds {
+            let expect = (0..n).map(|i| (i + r) as f32).sum::<f32>() / n as f32;
+            for out in &outs {
+                assert_eq!(out[r], expect, "round {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn solo_group_is_identity() {
+        let mut handles = GroupComm::group(1);
+        let comm = handles.pop().unwrap();
+        let (out, clocks) = comm.exchange(Payload::F32(vec![3.0]), 7.0, |_| Ok(())).unwrap();
+        assert_eq!(out.into_f32(), vec![3.0]);
+        assert_eq!(clocks, vec![7.0]);
+    }
+
+    #[test]
+    fn async_group_sums_in_member_order() {
+        let n = 3;
+        let mailboxes = AsyncGroup::group(n);
+        let outs = std::thread::scope(|s| {
+            let joins: Vec<_> = mailboxes
+                .into_iter()
+                .enumerate()
+                .map(|(i, mb)| {
+                    s.spawn(move || {
+                        mb.contribute(vec![i as f32, 1.0], i as f64, 0.25);
+                        mb.collect().unwrap()
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect::<Vec<_>>()
+        });
+        for (sum, finish) in outs {
+            assert_eq!(*sum, vec![3.0, 3.0]);
+            assert_eq!(finish, 2.25); // max clock 2.0 + wire 0.25
+        }
+    }
+
+    #[test]
+    fn async_group_pipelines_overlapping_rounds() {
+        let n = 2;
+        let mailboxes = AsyncGroup::group(n);
+        let outs = std::thread::scope(|s| {
+            let joins: Vec<_> = mailboxes
+                .into_iter()
+                .enumerate()
+                .map(|(i, mb)| {
+                    s.spawn(move || {
+                        // send two rounds back-to-back before collecting
+                        mb.contribute(vec![1.0 + i as f32], 0.0, 0.0);
+                        mb.contribute(vec![10.0 + i as f32], 0.0, 0.0);
+                        let (a, _) = mb.collect().unwrap();
+                        let (b, _) = mb.collect().unwrap();
+                        (a[0], b[0])
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect::<Vec<_>>()
+        });
+        for (a, b) in outs {
+            assert_eq!(a, 3.0);
+            assert_eq!(b, 21.0);
+        }
+    }
+
+    #[test]
+    fn build_comms_assigns_consistent_indices() {
+        let topo = Topology::new(3, 4);
+        let comms = build_comms(&topo);
+        assert_eq!(comms.len(), 12);
+        for (r, c) in comms.iter().enumerate() {
+            let rank = topo.rank_of(r);
+            assert_eq!(c.world.index(), r);
+            assert_eq!(c.world.size(), 12);
+            assert_eq!(c.node.index(), rank.local);
+            assert_eq!(c.node.size(), 4);
+            assert_eq!(c.global.index(), rank.node);
+            assert_eq!(c.global.size(), 3);
+        }
+    }
+}

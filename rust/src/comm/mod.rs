@@ -1,13 +1,16 @@
 //! Communication substrate: hierarchical topology + groups (paper Fig 1),
 //! a two-tier fabric model, real-buffer collectives (the NCCL/MPI
-//! stand-in), and the alpha-beta cost model used for clock accounting and
+//! stand-in), channel-based rendezvous communicators for the threaded
+//! executor, and the alpha-beta cost model used for clock accounting and
 //! the strong-scaling projector.
 
+pub mod channels;
 pub mod collectives;
 pub mod cost;
 pub mod link;
 pub mod topology;
 
+pub use channels::{build_comms, AsyncGroup, GroupComm, Payload, RankComms};
 pub use collectives::{broadcast, naive_mean, ring_allreduce_mean, sum_buffers, Wire};
 pub use link::{Fabric, Link};
 pub use topology::{GroupRotation, Rank, Topology};

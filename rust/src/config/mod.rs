@@ -7,8 +7,10 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::cluster::ExecutorKind;
 use crate::comm::Fabric;
 use crate::daso::DasoConfig;
+use crate::trainer::strategy::RankStrategyFactory;
 use crate::trainer::TrainConfig;
 use crate::util::json::Value;
 
@@ -47,6 +49,7 @@ impl StrategyKind {
 pub struct RunSpec {
     pub model: String,
     pub strategy: StrategyKind,
+    pub executor: ExecutorKind,
     pub artifacts_dir: String,
     pub out_dir: Option<String>,
     pub train: TrainConfig,
@@ -60,6 +63,7 @@ impl RunSpec {
         RunSpec {
             model: model.to_string(),
             strategy: StrategyKind::Daso,
+            executor: ExecutorKind::Serial,
             artifacts_dir: "artifacts".to_string(),
             out_dir: None,
             train,
@@ -107,6 +111,7 @@ impl RunSpec {
         match key {
             "model" => self.model = as_str()?.to_string(),
             "strategy" => self.strategy = StrategyKind::parse(as_str()?)?,
+            "executor" => self.executor = ExecutorKind::parse(as_str()?)?,
             "artifacts_dir" => self.artifacts_dir = as_str()?.to_string(),
             "out_dir" => self.out_dir = Some(as_str()?.to_string()),
 
@@ -146,7 +151,7 @@ impl RunSpec {
         Ok(())
     }
 
-    /// Construct the configured strategy object.
+    /// Construct the configured strategy object (serial executor).
     pub fn build_strategy(&self) -> Box<dyn crate::trainer::Strategy> {
         match self.strategy {
             StrategyKind::Daso => Box::new(crate::daso::Daso::new(
@@ -158,6 +163,31 @@ impl RunSpec {
             )),
             StrategyKind::Asgd => Box::new(crate::baselines::AsgdServer::new()),
             StrategyKind::LocalOnly => Box::new(crate::baselines::LocalOnly::new()),
+        }
+    }
+
+    /// Construct the per-rank strategy factory (threaded executor). Each
+    /// worker thread gets its own replica; ASGD replicas share one
+    /// parameter server.
+    pub fn build_rank_strategies(&self) -> RankStrategyFactory {
+        match self.strategy {
+            StrategyKind::Daso => {
+                let cfg = DasoConfig { total_epochs: self.train.epochs, ..self.daso.clone() };
+                let n_groups = self.train.gpus_per_node;
+                Box::new(move |_rank| Box::new(crate::daso::DasoRank::new(cfg.clone(), n_groups)))
+            }
+            StrategyKind::Horovod => Box::new(|_rank| {
+                Box::new(crate::baselines::HorovodRank::new(
+                    crate::baselines::HorovodConfig::default(),
+                ))
+            }),
+            StrategyKind::Asgd => {
+                let shared = crate::baselines::AsgdShared::new();
+                Box::new(move |_rank| Box::new(crate::baselines::AsgdRank::new(shared.clone())))
+            }
+            StrategyKind::LocalOnly => {
+                Box::new(|_rank| Box::new(crate::baselines::LocalOnlyRank::new()))
+            }
         }
     }
 
@@ -237,6 +267,25 @@ mod tests {
         assert!(!s.daso.kernel_local_avg);
         assert_eq!(s.train.fabric.inter.bandwidth_bps, 1e9);
         assert!(s.load_file("/nonexistent/cfg.json").is_err());
+    }
+
+    #[test]
+    fn executor_override() {
+        let mut s = RunSpec::default_for("mlp");
+        assert_eq!(s.executor, ExecutorKind::Serial);
+        s.set("executor=threaded").unwrap();
+        assert_eq!(s.executor, ExecutorKind::Threaded);
+        assert!(s.set("executor=bogus").is_err());
+    }
+
+    #[test]
+    fn rank_factory_names_match() {
+        for kind in ["daso", "horovod", "asgd", "local_only"] {
+            let mut s = RunSpec::default_for("mlp");
+            s.set(&format!("strategy={kind}")).unwrap();
+            let factory = s.build_rank_strategies();
+            assert_eq!(factory(0).name(), kind);
+        }
     }
 
     #[test]

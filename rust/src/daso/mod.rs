@@ -9,5 +9,5 @@ pub mod optimizer;
 pub mod phase;
 
 pub use cycler::Cycler;
-pub use optimizer::{Daso, DasoConfig};
+pub use optimizer::{Daso, DasoConfig, DasoRank};
 pub use phase::{Phase, PhaseSchedule};

@@ -21,8 +21,8 @@
 use anyhow::Result;
 
 use crate::comm::cost::{cast_time, ring_allreduce_time, tree_broadcast_time, DEVICE_MEM_BW};
-use crate::comm::{ring_allreduce_mean, sum_buffers, GroupRotation, Wire};
-use crate::trainer::strategy::{CommStats, StepCtx, Strategy};
+use crate::comm::{ring_allreduce_mean, sum_buffers, GroupRotation, Payload, Wire};
+use crate::trainer::strategy::{CommStats, RankCtx, RankStrategy, StepCtx, Strategy};
 
 use super::cycler::Cycler;
 use super::phase::{Phase, PhaseSchedule};
@@ -342,6 +342,290 @@ impl Strategy for Daso {
     }
 
     fn finalize(&mut self, ctx: &mut StepCtx) -> Result<()> {
+        if self.inflight.is_some() {
+            self.complete_nonblocking(ctx)?;
+        }
+        Ok(())
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        self.stats.clone()
+    }
+
+    fn state_desc(&self) -> String {
+        format!(
+            "phase={:?} B={} W={} next_group={}",
+            self.phase(),
+            self.cycler.b,
+            self.cycler.w,
+            self.rotation.peek()
+        )
+    }
+}
+
+/// Non-blocking sync bookkeeping as replicated on every rank: all ranks
+/// track the schedule (to join the completion's node broadcast at the
+/// right batch); only the rotating group's members touch the mailbox.
+struct InflightRank {
+    start_batch: usize,
+    wait: usize,
+    group: usize,
+}
+
+/// Per-rank DASO replica for the threaded executor. Phase schedule, group
+/// rotation and B/W cycling are derived from batch counters and the
+/// cluster-mean epoch loss — both replicated-deterministic — so every
+/// rank makes the same schedule decisions without any extra
+/// coordination, exactly like real DPNN processes do.
+pub struct DasoRank {
+    pub cfg: DasoConfig,
+    pub cycler: Cycler,
+    schedule: PhaseSchedule,
+    rotation: GroupRotation,
+    inflight: Option<InflightRank>,
+    epoch: usize,
+    stats: CommStats,
+}
+
+impl DasoRank {
+    pub fn new(cfg: DasoConfig, n_groups: usize) -> Self {
+        let schedule =
+            PhaseSchedule::new(cfg.total_epochs, cfg.warmup_epochs, cfg.cooldown_epochs);
+        Self {
+            cycler: Cycler::new(cfg.b_initial, cfg.plateau_patience),
+            rotation: GroupRotation::new(n_groups),
+            inflight: None,
+            epoch: 0,
+            stats: CommStats::default(),
+            cfg,
+            schedule,
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.schedule.phase(self.epoch)
+    }
+
+    /// Step 1: node-local gradient averaging over the intra tier.
+    fn local_sync(&mut self, ctx: &mut RankCtx) -> Result<()> {
+        let gpn = ctx.topo.gpus_per_node;
+        let n = ctx.rt.spec.n_params;
+        let bytes = n * Wire::F32.bytes_per_elem();
+        if gpn > 1 {
+            let use_kernel = self.cfg.kernel_local_avg && gpn == ctx.rt.gpus_per_node;
+            let rt = ctx.rt;
+            let payload = Payload::F32(std::mem::take(ctx.grad));
+            let (out, clocks) = ctx.comms.node.exchange(payload, ctx.worker.clock, |bufs| {
+                if use_kernel {
+                    // Pallas local_avg semantics: stack grads, one fused mean
+                    let mut stacked = Vec::with_capacity(bufs.len() * n);
+                    for b in bufs.iter() {
+                        stacked.extend_from_slice(b.as_f32());
+                    }
+                    let mean = rt.avg(&stacked)?;
+                    for b in bufs.iter_mut() {
+                        b.as_f32_mut().copy_from_slice(&mean);
+                    }
+                } else {
+                    let mut refs: Vec<&mut Vec<f32>> =
+                        bufs.iter_mut().map(|b| b.as_f32_mut()).collect();
+                    ring_allreduce_mean(&mut refs, Wire::F32);
+                }
+                Ok(())
+            })?;
+            *ctx.grad = out.into_f32();
+            // the collective blocks the node until all members arrive;
+            // mirror the serial node_barrier + advance_clock FP sequence
+            let t = clocks.iter().fold(0.0, |a, &b| f64::max(a, b));
+            let dt = ring_allreduce_time(gpn, bytes, &ctx.fabric.intra);
+            ctx.worker.wait_until(t);
+            ctx.worker.advance_clock(dt);
+            ctx.worker.bytes_sent_intra += bytes as u64;
+        }
+        self.stats.local_syncs += 1;
+        self.stats.bytes_intra += bytes as u64;
+        Ok(())
+    }
+
+    /// Local optimizer step (fused-SGD semantics).
+    fn local_update(&mut self, ctx: &mut RankCtx) -> Result<()> {
+        let worker = &mut *ctx.worker;
+        ctx.rt.update(&mut worker.params, &mut worker.momentum, ctx.grad, ctx.lr)
+    }
+
+    /// Blocking global sync: the rotating group averages parameters over
+    /// the inter tier (bf16 wire), then broadcasts node-locally.
+    fn blocking_global_sync(&mut self, ctx: &mut RankCtx) -> Result<()> {
+        if ctx.topo.nodes <= 1 {
+            // a group of one: nothing crosses the inter tier
+            return Ok(());
+        }
+        let n = ctx.rt.spec.n_params;
+        let group = self.rotation.advance();
+        let wire_bytes = n * Wire::Bf16.bytes_per_elem();
+        let cast_dt = 2.0 * cast_time(n * 4, DEVICE_MEM_BW); // pack + unpack
+        if ctx.worker.rank.local == group {
+            let payload = Payload::F32(std::mem::take(&mut ctx.worker.params));
+            let (out, clocks) = ctx.comms.global.exchange(payload, ctx.worker.clock, |bufs| {
+                let mut refs: Vec<&mut Vec<f32>> =
+                    bufs.iter_mut().map(|b| b.as_f32_mut()).collect();
+                ring_allreduce_mean(&mut refs, Wire::Bf16);
+                Ok(())
+            })?;
+            ctx.worker.params = out.into_f32();
+            // serial does ranks_barrier then advance(cast + ring): keep
+            // the identical FP operation order
+            let t = clocks.iter().fold(0.0, |a, &b| f64::max(a, b));
+            let ring_dt = ring_allreduce_time(ctx.topo.nodes, wire_bytes, &ctx.fabric.inter);
+            ctx.worker.wait_until(t);
+            ctx.worker.advance_clock(cast_dt + ring_dt);
+            ctx.worker.bytes_sent_inter += wire_bytes as u64;
+            self.stats.bytes_inter += wire_bytes as u64;
+        }
+        self.node_broadcast(ctx, group)?;
+        self.stats.global_syncs += 1;
+        self.stats.blocking_syncs += 1;
+        Ok(())
+    }
+
+    /// Node-local broadcast from the node's member of `group` (paper
+    /// Fig. 4). Every rank of every node participates.
+    fn node_broadcast(&mut self, ctx: &mut RankCtx, group: usize) -> Result<()> {
+        let gpn = ctx.topo.gpus_per_node;
+        let n = ctx.rt.spec.n_params;
+        let bytes = n * 4;
+        if gpn > 1 {
+            let dt = tree_broadcast_time(gpn, bytes, &ctx.fabric.intra);
+            // only the source member's payload carries data; receivers
+            // contribute Empty so the broadcast costs one clone per
+            // destination instead of a full gather of identical copies
+            let payload = if ctx.worker.rank.local == group {
+                Payload::F32(ctx.worker.params.clone())
+            } else {
+                Payload::Empty
+            };
+            let (out, clocks) = ctx.comms.node.exchange(payload, ctx.worker.clock, |bufs| {
+                let src = bufs[group].as_f32().clone();
+                for (i, b) in bufs.iter_mut().enumerate() {
+                    if i != group {
+                        *b = Payload::F32(src.clone());
+                    }
+                }
+                Ok(())
+            })?;
+            ctx.worker.params = out.into_f32();
+            // receivers must also wait for the source to be ready (same
+            // wait_until + advance sequence as serial local_broadcast)
+            let src_clock = clocks[group];
+            ctx.worker.wait_until(src_clock);
+            ctx.worker.advance_clock(dt);
+        }
+        ctx.worker.bytes_sent_intra += bytes as u64;
+        self.stats.bytes_intra += bytes as u64;
+        Ok(())
+    }
+
+    /// Start a non-blocking global sync: the rotating group's members
+    /// deposit parameter snapshots in the mailbox (uncast — casting would
+    /// delay the send) and training continues immediately.
+    fn start_nonblocking(&mut self, ctx: &mut RankCtx) {
+        if ctx.topo.nodes <= 1 {
+            return;
+        }
+        let n = ctx.rt.spec.n_params;
+        let bytes = n * 4;
+        let group = self.rotation.advance();
+        if ctx.worker.rank.local == group {
+            let wire_dt = ring_allreduce_time(ctx.topo.nodes, bytes, &ctx.fabric.inter);
+            ctx.comms.global_async.contribute(
+                ctx.worker.params.clone(),
+                ctx.worker.clock,
+                wire_dt,
+            );
+            // the async send itself only costs the launch latency
+            ctx.worker.advance_clock(ctx.fabric.inter.latency_s);
+            ctx.worker.bytes_sent_inter += bytes as u64;
+            self.stats.bytes_inter += bytes as u64;
+        }
+        self.inflight = Some(InflightRank {
+            start_batch: ctx.global_batch,
+            wait: self.cycler.w,
+            group,
+        });
+    }
+
+    /// Complete an in-flight sync: members pick up whatever has actually
+    /// arrived, Eq. (1)-blend it into their parameters, then everyone
+    /// joins the node-local broadcast.
+    fn complete_nonblocking(&mut self, ctx: &mut RankCtx) -> Result<()> {
+        let inflight = self.inflight.take().expect("no inflight sync");
+        let s = (ctx.global_batch - inflight.start_batch) as f32;
+        let p = ctx.topo.nodes as f32; // participants in the exchange
+        if ctx.worker.rank.local == inflight.group {
+            let (sum, finish_time) = ctx.comms.global_async.collect()?;
+            // wait for the data if it has not arrived yet
+            let waited = ctx.worker.wait_until(finish_time);
+            self.stats.comm_wait_s += waited;
+            let blended = if self.cfg.staleness_blend {
+                ctx.rt.blend(&ctx.worker.params, &sum, s, p)?
+            } else {
+                // ablation: adopt the stale average outright
+                sum.iter().map(|v| v / p).collect()
+            };
+            ctx.worker.params = blended;
+        }
+        self.node_broadcast(ctx, inflight.group)?;
+        self.stats.global_syncs += 1;
+        self.stats.nonblocking_syncs += 1;
+        Ok(())
+    }
+}
+
+impl RankStrategy for DasoRank {
+    fn name(&self) -> &'static str {
+        "daso"
+    }
+
+    fn on_epoch_start(&mut self, epoch: usize) {
+        self.epoch = epoch;
+    }
+
+    fn on_batch(&mut self, ctx: &mut RankCtx) -> Result<()> {
+        // 1. local sync + local optimizer step — every batch, every phase
+        self.local_sync(ctx)?;
+        self.local_update(ctx)?;
+
+        match self.phase() {
+            Phase::Warmup | Phase::Cooldown => {
+                // flush any sync left in flight from the cycling phase
+                if self.inflight.is_some() {
+                    self.complete_nonblocking(ctx)?;
+                }
+                self.blocking_global_sync(ctx)?;
+            }
+            Phase::Cycling => {
+                if let Some(inf) = &self.inflight {
+                    if ctx.global_batch >= inf.start_batch + inf.wait {
+                        self.complete_nonblocking(ctx)?;
+                    }
+                }
+                if self.inflight.is_none() && ctx.global_batch % self.cycler.b.max(1) == 0 {
+                    self.start_nonblocking(ctx);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn on_epoch_end(&mut self, epoch: usize, train_loss: f64) {
+        // B/W cycling is only active during the cycling phase; every rank
+        // observes the same cluster-mean loss, so replicas stay in lockstep
+        if self.schedule.phase(epoch) == Phase::Cycling {
+            self.cycler.observe_loss(train_loss);
+        }
+    }
+
+    fn finalize(&mut self, ctx: &mut RankCtx) -> Result<()> {
         if self.inflight.is_some() {
             self.complete_nonblocking(ctx)?;
         }

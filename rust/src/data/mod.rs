@@ -12,8 +12,9 @@ pub mod shard;
 
 use crate::runtime::Batch;
 
-/// A deterministic, index-addressable dataset.
-pub trait Dataset {
+/// A deterministic, index-addressable dataset. `Send + Sync` so the
+/// threaded executor's worker threads can share one instance.
+pub trait Dataset: Send + Sync {
     /// Total number of samples.
     fn len(&self) -> usize;
 
@@ -31,7 +32,7 @@ pub trait Dataset {
 /// splits share the generative structure (cluster centres, class
 /// colours, the Markov chain) but see disjoint samples.
 pub struct SplitView {
-    inner: std::rc::Rc<dyn Dataset>,
+    inner: std::sync::Arc<dyn Dataset>,
     offset: usize,
     len: usize,
 }
@@ -63,28 +64,28 @@ pub fn for_model(
     seed: u64,
 ) -> anyhow::Result<(Box<dyn Dataset>, Box<dyn Dataset>)> {
     let total = train_samples + val_samples;
-    let universe: std::rc::Rc<dyn Dataset> = match spec.name.as_str() {
-        "mlp" => std::rc::Rc::new(classification::VectorClusters::new(
+    let universe: std::sync::Arc<dyn Dataset> = match spec.name.as_str() {
+        "mlp" => std::sync::Arc::new(classification::VectorClusters::new(
             total,
             spec.x_shape[1],
             spec.hyper_usize("n_classes").unwrap_or(10),
             seed,
         )),
-        "resnet" => std::rc::Rc::new(classification::SyntheticImages::new(
+        "resnet" => std::sync::Arc::new(classification::SyntheticImages::new(
             total,
             spec.x_shape[1],
             spec.x_shape[3],
             spec.hyper_usize("n_classes").unwrap_or(10),
             seed,
         )),
-        "segnet" => std::rc::Rc::new(segmentation::SyntheticScenes::new(
+        "segnet" => std::sync::Arc::new(segmentation::SyntheticScenes::new(
             total,
             spec.x_shape[1],
             spec.x_shape[3],
             spec.hyper_usize("n_classes").unwrap_or(8),
             seed,
         )),
-        "transformer" => std::rc::Rc::new(lm::MarkovCorpus::new(
+        "transformer" => std::sync::Arc::new(lm::MarkovCorpus::new(
             total,
             spec.x_shape[1],
             spec.hyper_usize("vocab").unwrap_or(512),

@@ -53,6 +53,17 @@ impl Shard {
     }
 }
 
+/// Lockstep steps per epoch across all `world` shards of `dataset_len`
+/// samples at local batch size `batch`: the smallest shard bounds the
+/// epoch. Both executors derive their step count from this one function,
+/// so they can never diverge (the bit-identity contract depends on it).
+pub fn lockstep_batches_per_epoch(dataset_len: usize, world: usize, batch: usize) -> usize {
+    (0..world)
+        .map(|rank| Shard::new(dataset_len, world, rank, 0).batches_per_epoch(batch))
+        .min()
+        .unwrap_or(0)
+}
+
 /// Iterator over one epoch's batches for one worker.
 pub struct EpochBatches {
     order: Vec<usize>,
@@ -124,6 +135,20 @@ mod tests {
         assert_eq!(s0, shard.raw_indices().to_vec());
         assert_ne!(e0, e1, "epochs should reshuffle");
         assert_eq!(shard.epoch_order(0), e0, "same epoch must be deterministic");
+    }
+
+    #[test]
+    fn prop_lockstep_steps_match_min_shard() {
+        run_prop("lockstep-steps", 50, |g| {
+            let len = g.usize_in(1, 500);
+            let world = g.usize_in(1, 16);
+            let batch = g.usize_in(1, 16);
+            let expect = (0..world)
+                .map(|r| Shard::new(len, world, r, 9).batches_per_epoch(batch))
+                .min()
+                .unwrap();
+            assert_eq!(lockstep_batches_per_epoch(len, world, batch), expect);
+        });
     }
 
     #[test]

@@ -6,26 +6,31 @@
 //!
 //! Three layers, Python never on the request path:
 //! - **L3 (this crate)**: the coordinator — simulated multi-node
-//!   multi-GPU cluster, hierarchical communication, the DASO optimizer
-//!   state machine, baselines, trainer, strong-scaling projector, CLI.
-//! - **L2**: JAX models AOT-lowered to HLO text by `make artifacts`.
+//!   multi-GPU cluster (serial or thread-per-worker executor),
+//!   hierarchical communication, the DASO optimizer state machine,
+//!   baselines, trainer, strong-scaling projector, CLI.
+//! - **L2**: JAX models AOT-lowered to HLO text by `make artifacts`
+//!   (`--features pjrt`), or the built-in native reference backend.
 //! - **L1**: Pallas kernels (fused matmul, fused SGD, Eq.-1 blend, local
 //!   average) baked into those artifacts.
 //!
 //! Quick usage (mirrors the paper's Listing-1 four-call API):
 //!
-//! ```no_run
+//! ```
 //! use daso::prelude::*;
 //!
-//! let engine = Engine::load("artifacts")?;            // 1. runtime
-//! let rt = engine.model("mlp")?;                      // 2. model artifacts
-//! let cfg = TrainConfig::quick(2, 4, 10);             //    2 nodes x 4 GPUs
+//! let engine = Engine::native();                      // 1. runtime
+//! let rt = engine.model("mlp")?;                      // 2. model
+//! let cfg = TrainConfig::quick(2, 4, 4);              //    2 nodes x 4 GPUs
 //! let (train_d, val_d) = daso::data::for_model(&rt.spec, 2048, 512, 42)?;
 //! let mut opt = Daso::new(DasoConfig::new(cfg.epochs), cfg.gpus_per_node);
 //! let report = train(&rt, &cfg, &*train_d, &*val_d, &mut opt)?; // 3+4
 //! println!("{}", report.summary_line());
 //! # Ok::<(), anyhow::Error>(())
 //! ```
+
+// Paper constants and test vectors are written at full printed precision.
+#![allow(clippy::excessive_precision)]
 
 pub mod baselines;
 pub mod bench_support;
@@ -45,9 +50,10 @@ pub mod util;
 /// Convenient re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::baselines::{AsgdServer, Horovod, HorovodConfig, LocalOnly};
+    pub use crate::cluster::{train_threaded, ExecutorKind};
     pub use crate::comm::{Fabric, Link, Topology, Wire};
-    pub use crate::daso::{Daso, DasoConfig, Phase};
+    pub use crate::daso::{Daso, DasoConfig, DasoRank, Phase};
     pub use crate::runtime::{Batch, Engine, Metric, ModelRuntime};
     pub use crate::simtime::Workload;
-    pub use crate::trainer::{train, RunReport, Strategy, TrainConfig};
+    pub use crate::trainer::{train, RankStrategy, RunReport, Strategy, TrainConfig};
 }

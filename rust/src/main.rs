@@ -52,6 +52,9 @@ fn build_spec(args: &Args) -> Result<RunSpec> {
     if let Some(strategy) = args.get("strategy") {
         spec.set(&format!("strategy={strategy}"))?;
     }
+    if let Some(executor) = args.get("executor") {
+        spec.set(&format!("executor={executor}"))?;
+    }
     if let Some(artifacts) = args.get("artifacts") {
         spec.artifacts_dir = artifacts.to_string();
     }
@@ -64,9 +67,28 @@ fn build_spec(args: &Args) -> Result<RunSpec> {
     Ok(spec)
 }
 
+/// Dispatch one run to the spec's executor.
+fn run_spec(
+    spec: &RunSpec,
+    rt: &daso::runtime::ModelRuntime,
+    train_d: &dyn daso::data::Dataset,
+    val_d: &dyn daso::data::Dataset,
+) -> Result<daso::trainer::RunReport> {
+    match spec.executor {
+        daso::cluster::ExecutorKind::Serial => {
+            let mut strategy = spec.build_strategy();
+            train(rt, &spec.train, train_d, val_d, strategy.as_mut())
+        }
+        daso::cluster::ExecutorKind::Threaded => {
+            let factory = spec.build_rank_strategies();
+            daso::cluster::train_threaded(rt, &spec.train, train_d, val_d, &factory)
+        }
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let spec = build_spec(args)?;
-    let engine = Engine::load(&spec.artifacts_dir)?;
+    let engine = Engine::auto(&spec.artifacts_dir);
     let rt = engine.model(&spec.model)?;
     let (train_d, val_d) = daso::data::for_model(
         &rt.spec,
@@ -74,16 +96,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         spec.train.val_samples,
         spec.train.seed,
     )?;
-    let mut strategy = spec.build_strategy();
     eprintln!(
-        "training {} with {} on {}x{} simulated GPUs ({} epochs)",
+        "training {} with {} on {}x{} simulated GPUs ({} epochs, {} executor)",
         spec.model,
         spec.strategy.name(),
         spec.train.nodes,
         spec.train.gpus_per_node,
-        spec.train.epochs
+        spec.train.epochs,
+        spec.executor.name()
     );
-    let report = train(&rt, &spec.train, &*train_d, &*val_d, strategy.as_mut())?;
+    let report = run_spec(&spec, &rt, &*train_d, &*val_d)?;
     println!("{}", report.summary_line());
     println!("{}", runlog::report_json(&report).to_string_pretty());
     if let Some(dir) = &spec.out_dir {
@@ -100,7 +122,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// the quickest way to see the paper's trade-offs side by side.
 fn cmd_sweep(args: &Args) -> Result<()> {
     let base = build_spec(args)?;
-    let engine = Engine::load(&base.artifacts_dir)?;
+    let engine = Engine::auto(&base.artifacts_dir);
     let rt = engine.model(&base.model)?;
     let (train_d, val_d) = daso::data::for_model(
         &rt.spec,
@@ -112,8 +134,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     for kind in ["daso", "horovod", "asgd", "local_only"] {
         let mut spec = base.clone();
         spec.set(&format!("strategy={kind}"))?;
-        let mut strategy = spec.build_strategy();
-        let report = train(&rt, &spec.train, &*train_d, &*val_d, strategy.as_mut())?;
+        let report = run_spec(&spec, &rt, &*train_d, &*val_d)?;
         eprintln!("{}", report.summary_line());
         rows.push(vec![
             kind.to_string(),
@@ -149,12 +170,12 @@ fn cmd_figures(args: &Args) -> Result<()> {
             &figures::fig8(full_nodes),
         ),
         7 => {
-            let engine = Engine::load(args.get("artifacts").unwrap_or("artifacts"))?;
+            let engine = Engine::auto(args.get("artifacts").unwrap_or("artifacts"));
             let rows = figures::fig7(&engine, quick)?;
             figures::print_accuracy("Fig. 7 — top-1 accuracy vs scale", "top-1", &rows);
         }
         9 => {
-            let engine = Engine::load(args.get("artifacts").unwrap_or("artifacts"))?;
+            let engine = Engine::auto(args.get("artifacts").unwrap_or("artifacts"));
             let rows = figures::fig9(&engine, quick)?;
             figures::print_accuracy("Fig. 9 — IOU vs scale", "IOU", &rows);
         }
@@ -185,7 +206,7 @@ fn cmd_project(args: &Args) -> Result<()> {
 
 fn cmd_selfcheck(args: &Args) -> Result<()> {
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
-    let engine = Engine::load(artifacts)?;
+    let engine = Engine::auto(artifacts);
     println!("platform: {}", engine.platform());
     let names: Vec<String> = engine.manifest.models.keys().cloned().collect();
     let mut failures = 0;
@@ -227,7 +248,13 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
 
 fn cmd_info(args: &Args) -> Result<()> {
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
-    let manifest = daso::runtime::Manifest::load(artifacts)?;
+    let manifest = match daso::runtime::Manifest::load(artifacts) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("using native manifest ({e:#})");
+            daso::runtime::native::native_manifest()
+        }
+    };
     println!("artifacts: {:?}", manifest.root);
     println!("gpus_per_node (avg artifact): {}", manifest.gpus_per_node);
     for (name, m) in &manifest.models {

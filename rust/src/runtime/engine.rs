@@ -1,19 +1,23 @@
-//! PJRT execution engine: loads HLO-text artifacts, compiles them once,
-//! and exposes typed entry points for the five per-model executables.
+//! Execution engine: typed entry points for the five per-model
+//! executables, dispatching to one of two backends:
 //!
-//! This is the only module that touches the `xla` crate's execution API;
-//! everything above it deals in `Vec<f32>` / `Batch`. Python is never on
-//! this path — artifacts were lowered once by `make artifacts`.
+//! - **native** (always available): the pure-rust reference model in
+//!   [`super::native`]. `Send + Sync`, so the threaded executor can share
+//!   one runtime across all worker threads.
+//! - **pjrt** (`--features pjrt` + `make artifacts`): HLO-text artifacts
+//!   compiled and executed through the `xla` crate's PJRT client
+//!   ([`super::pjrt`]). Python is never on this path — artifacts were
+//!   lowered once by `make artifacts`.
 
-use std::cell::RefCell;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use super::buffers::{scalar_f32, to_f32_vec, Batch};
-use super::manifest::{Manifest, ModelSpec};
+use super::buffers::Batch;
+use super::manifest::Manifest;
+use super::native::{self, NativeMlp};
 
 /// Cumulative execution counters (per executable kind), for the perf pass.
 #[derive(Debug, Default, Clone)]
@@ -46,122 +50,121 @@ pub struct RuntimeStats {
     pub avg: ExecStats,
 }
 
-/// The PJRT client; create once per process, share across model runtimes.
+enum EngineBackend {
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtClient),
+}
+
+/// The engine owns the manifest and the backend client; create once per
+/// process, share across model runtimes.
 pub struct Engine {
-    client: xla::PjRtClient,
     pub manifest: Manifest,
+    backend: EngineBackend,
 }
 
 impl Engine {
-    /// Load the manifest and create the CPU PJRT client.
+    /// The built-in native reference backend — no artifacts required.
+    pub fn native() -> Engine {
+        Engine { manifest: native::native_manifest(), backend: EngineBackend::Native }
+    }
+
+    /// Load a PJRT artifact set (requires the `pjrt` feature).
+    #[cfg(feature = "pjrt")]
     pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        use anyhow::Context;
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, manifest })
+        Ok(Engine { manifest, backend: EngineBackend::Pjrt(client) })
+    }
+
+    /// Load a PJRT artifact set (requires the `pjrt` feature).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        anyhow::bail!(
+            "artifact runtime for {:?} needs the `pjrt` cargo feature (see rust/Cargo.toml); \
+             use Engine::native() for the built-in reference backend",
+            artifacts_dir.as_ref()
+        )
+    }
+
+    /// Artifact engine when available, native reference backend otherwise.
+    pub fn auto(artifacts_dir: impl AsRef<Path>) -> Engine {
+        match Engine::load(artifacts_dir) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("using native reference backend ({e:#})");
+                Engine::native()
+            }
+        }
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            EngineBackend::Native => "native-host".to_string(),
+            #[cfg(feature = "pjrt")]
+            EngineBackend::Pjrt(client) => client.platform_name(),
+        }
     }
 
-    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compiling {path:?}"))
-    }
-
-    /// Compile the full executable set for one model.
+    /// Build the runtime for one model.
     pub fn model(&self, name: &str) -> Result<ModelRuntime> {
         let spec = self.manifest.model(name)?.clone();
+        let backend = match &self.backend {
+            EngineBackend::Native => ModelBackend::Native(NativeMlp),
+            #[cfg(feature = "pjrt")]
+            EngineBackend::Pjrt(client) => {
+                ModelBackend::Pjrt(super::pjrt::PjrtModel::compile(client, &spec)?)
+            }
+        };
         Ok(ModelRuntime {
-            grad: self.compile(&spec.grad_path)?,
-            update: self.compile(&spec.update_path)?,
-            eval: self.compile(&spec.eval_path)?,
-            blend: self.compile(&spec.blend_path)?,
-            avg: self.compile(&spec.avg_path)?,
-            gpus_per_node: self.manifest.gpus_per_node,
-            client: self.client.clone(),
             spec,
-            stats: Rc::new(RefCell::new(RuntimeStats::default())),
+            gpus_per_node: self.manifest.gpus_per_node,
+            backend,
+            stats: Arc::new(Mutex::new(RuntimeStats::default())),
         })
     }
 }
 
-/// Compiled executables + metadata for one model. The executables are
-/// shared (one compile) across all simulated GPUs; each worker owns only
-/// its parameter/momentum buffers.
+enum ModelBackend {
+    Native(NativeMlp),
+    #[cfg(feature = "pjrt")]
+    Pjrt(super::pjrt::PjrtModel),
+}
+
+/// Compiled entry points + metadata for one model. One runtime is shared
+/// across all simulated GPUs; each worker owns only its parameter and
+/// momentum buffers. With the native backend this type is `Sync`, which
+/// the threaded executor relies on.
 pub struct ModelRuntime {
-    pub spec: ModelSpec,
+    pub spec: super::manifest::ModelSpec,
     pub gpus_per_node: usize,
-    grad: xla::PjRtLoadedExecutable,
-    update: xla::PjRtLoadedExecutable,
-    eval: xla::PjRtLoadedExecutable,
-    blend: xla::PjRtLoadedExecutable,
-    avg: xla::PjRtLoadedExecutable,
-    client: xla::PjRtClient,
-    stats: Rc<RefCell<RuntimeStats>>,
+    backend: ModelBackend,
+    stats: Arc<Mutex<RuntimeStats>>,
 }
 
 impl ModelRuntime {
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
     }
 
-    /// Upload a host f32 slice directly to a device buffer (one copy —
-    /// skips the Literal intermediate the naive path pays; see
-    /// EXPERIMENTS.md section Perf).
-    fn up_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .context("host->device f32")
-    }
-
-    fn up_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .context("host->device i32")
-    }
-
-    fn up_batch(&self, batch: &Batch, dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        match batch {
-            Batch::F32(v) => self.up_f32(v, dims),
-            Batch::I32(v) => self.up_i32(v, dims),
-        }
-    }
-
-    fn run_b(
-        exe: &xla::PjRtLoadedExecutable,
-        args: &[xla::PjRtBuffer],
-    ) -> Result<Vec<xla::Literal>> {
-        let result = exe.execute_b::<xla::PjRtBuffer>(args).context("PJRT execute_b")?;
-        let lit = result[0][0].to_literal_sync().context("fetch result")?;
-        lit.to_tuple().context("untuple result")
+    fn record(&self, pick: impl FnOnce(&mut RuntimeStats) -> &mut ExecStats, dt: f64) {
+        pick(&mut self.stats.lock().unwrap()).record(dt);
     }
 
     /// (params, x, y) -> (loss, grads)
     pub fn grad(&self, params: &[f32], x: &Batch, y: &[i32]) -> Result<(f32, Vec<f32>)> {
         let t = Instant::now();
-        let args = [
-            self.up_f32(params, &[self.spec.n_params])?,
-            self.up_batch(x, &self.spec.x_shape)?,
-            self.up_i32(y, &self.spec.y_shape)?,
-        ];
-        let out = Self::run_b(&self.grad, &args)?;
-        anyhow::ensure!(out.len() == 2, "grad returned {} outputs", out.len());
-        let loss = scalar_f32(&out[0])?;
-        let grads = to_f32_vec(&out[1])?;
-        self.stats.borrow_mut().grad.record(t.elapsed().as_secs_f64());
-        Ok((loss, grads))
+        let out = match &self.backend {
+            ModelBackend::Native(m) => m.grad(params, x, y)?,
+            #[cfg(feature = "pjrt")]
+            ModelBackend::Pjrt(m) => m.grad(params, x, y)?,
+        };
+        self.record(|s| &mut s.grad, t.elapsed().as_secs_f64());
+        Ok(out)
     }
 
-    /// (params, momentum, grads, lr) -> (params', momentum')
-    /// This is the fused-SGD Pallas kernel (momentum/weight-decay baked at
-    /// artifact build time; see manifest mu/wd). Results are copied into
-    /// the existing `params`/`momentum` allocations (no new Vecs on the
-    /// per-step hot path).
+    /// (params, momentum, grads, lr) -> updated in place (fused SGD).
     pub fn update(
         &self,
         params: &mut Vec<f32>,
@@ -170,91 +173,120 @@ impl ModelRuntime {
         lr: f32,
     ) -> Result<()> {
         let t = Instant::now();
-        let n = self.spec.n_params;
-        let args = [
-            self.up_f32(params, &[n])?,
-            self.up_f32(momentum, &[n])?,
-            self.up_f32(grads, &[n])?,
-            self.up_f32(&[lr], &[1])?,
-        ];
-        let out = Self::run_b(&self.update, &args)?;
-        anyhow::ensure!(out.len() == 2, "update returned {} outputs", out.len());
-        out[0].copy_raw_to(params.as_mut_slice()).context("read params'")?;
-        out[1].copy_raw_to(momentum.as_mut_slice()).context("read momentum'")?;
-        self.stats.borrow_mut().update.record(t.elapsed().as_secs_f64());
+        match &self.backend {
+            ModelBackend::Native(m) => m.update(params, momentum, grads, lr),
+            #[cfg(feature = "pjrt")]
+            ModelBackend::Pjrt(m) => m.update(params, momentum, grads, lr)?,
+        }
+        self.record(|s| &mut s.update, t.elapsed().as_secs_f64());
         Ok(())
     }
 
     /// (params, x, y) -> (aux, loss_sum)
     pub fn eval(&self, params: &[f32], x: &Batch, y: &[i32]) -> Result<(Vec<f32>, f32)> {
         let t = Instant::now();
-        let args = [
-            self.up_f32(params, &[self.spec.n_params])?,
-            self.up_batch(x, &self.spec.x_shape)?,
-            self.up_i32(y, &self.spec.y_shape)?,
-        ];
-        let out = Self::run_b(&self.eval, &args)?;
-        anyhow::ensure!(out.len() == 2, "eval returned {} outputs", out.len());
-        let aux = to_f32_vec(&out[0])?;
-        let loss_sum = scalar_f32(&out[1])?;
-        self.stats.borrow_mut().eval.record(t.elapsed().as_secs_f64());
-        Ok((aux, loss_sum))
+        let out = match &self.backend {
+            ModelBackend::Native(m) => m.eval(params, x, y)?,
+            #[cfg(feature = "pjrt")]
+            ModelBackend::Pjrt(m) => m.eval(params, x, y)?,
+        };
+        self.record(|s| &mut s.eval, t.elapsed().as_secs_f64());
+        Ok(out)
     }
 
     /// DASO Eq. (1): (x_local, global_sum, s, p) -> blended params.
     pub fn blend(&self, x_local: &[f32], global_sum: &[f32], s: f32, p: f32) -> Result<Vec<f32>> {
         let t = Instant::now();
-        let n = self.spec.n_params;
-        let args = [
-            self.up_f32(x_local, &[n])?,
-            self.up_f32(global_sum, &[n])?,
-            self.up_f32(&[s], &[1])?,
-            self.up_f32(&[p], &[1])?,
-        ];
-        let out = Self::run_b(&self.blend, &args)?;
-        let blended = to_f32_vec(&out[0])?;
-        self.stats.borrow_mut().blend.record(t.elapsed().as_secs_f64());
-        Ok(blended)
+        let out = match &self.backend {
+            ModelBackend::Native(_) => native::blend(x_local, global_sum, s, p),
+            #[cfg(feature = "pjrt")]
+            ModelBackend::Pjrt(m) => m.blend(x_local, global_sum, s, p)?,
+        };
+        self.record(|s| &mut s.blend, t.elapsed().as_secs_f64());
+        Ok(out)
     }
 
-    /// Node-local gradient average (the Pallas local_avg kernel):
-    /// `stacked` is G contiguous gradient vectors; returns their mean.
+    /// Node-local gradient average: `stacked` is G contiguous gradient
+    /// vectors; returns their mean.
     pub fn avg(&self, stacked: &[f32]) -> Result<Vec<f32>> {
         let t = Instant::now();
-        let g = self.gpus_per_node;
-        let n = self.spec.n_params;
-        anyhow::ensure!(stacked.len() == g * n, "avg expects {}x{} elems", g, n);
-        let args = [self.up_f32(stacked, &[g, n])?];
-        let out = Self::run_b(&self.avg, &args)?;
-        let mean = to_f32_vec(&out[0])?;
-        self.stats.borrow_mut().avg.record(t.elapsed().as_secs_f64());
-        Ok(mean)
-    }
-
-    /// Initial parameters as written by aot.py (identical on every worker,
-    /// matching the paper's "identical copy" data-parallel setup).
-    pub fn init_params(&self) -> Result<Vec<f32>> {
-        let params = super::manifest::read_f32_bin(&self.spec.init_path)?;
-        anyhow::ensure!(
-            params.len() == self.spec.n_params,
-            "init params length {} != n_params {}",
-            params.len(),
-            self.spec.n_params
-        );
-        Ok(params)
-    }
-
-    /// Load the self-check probe batch.
-    pub fn probe_batch(&self) -> Result<(Batch, Vec<i32>)> {
-        let x = match self.spec.x_dtype {
-            super::manifest::XDtype::F32 => {
-                Batch::F32(super::manifest::read_f32_bin(&self.spec.selfcheck.probe_x)?)
-            }
-            super::manifest::XDtype::I32 => {
-                Batch::I32(super::manifest::read_i32_bin(&self.spec.selfcheck.probe_x)?)
-            }
+        let out = match &self.backend {
+            ModelBackend::Native(_) => native::avg(stacked, self.spec.n_params)?,
+            #[cfg(feature = "pjrt")]
+            ModelBackend::Pjrt(m) => m.avg(stacked, self.gpus_per_node)?,
         };
-        let y = super::manifest::read_i32_bin(&self.spec.selfcheck.probe_y)?;
-        Ok((x, y))
+        self.record(|s| &mut s.avg, t.elapsed().as_secs_f64());
+        Ok(out)
+    }
+
+    /// Initial parameters (identical on every worker, matching the
+    /// paper's "identical copy" data-parallel setup).
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        match &self.backend {
+            ModelBackend::Native(m) => Ok(m.init_params()),
+            #[cfg(feature = "pjrt")]
+            ModelBackend::Pjrt(_) => {
+                let params = super::manifest::read_f32_bin(&self.spec.init_path)?;
+                anyhow::ensure!(
+                    params.len() == self.spec.n_params,
+                    "init params length {} != n_params {}",
+                    params.len(),
+                    self.spec.n_params
+                );
+                Ok(params)
+            }
+        }
+    }
+
+    /// The self-check probe batch.
+    pub fn probe_batch(&self) -> Result<(Batch, Vec<i32>)> {
+        match &self.backend {
+            ModelBackend::Native(m) => Ok(m.probe_batch()),
+            #[cfg(feature = "pjrt")]
+            ModelBackend::Pjrt(_) => {
+                let x = match self.spec.x_dtype {
+                    super::manifest::XDtype::F32 => Batch::F32(super::manifest::read_f32_bin(
+                        &self.spec.selfcheck.probe_x,
+                    )?),
+                    super::manifest::XDtype::I32 => Batch::I32(super::manifest::read_i32_bin(
+                        &self.spec.selfcheck.probe_x,
+                    )?),
+                };
+                let y = super::manifest::read_i32_bin(&self.spec.selfcheck.probe_y)?;
+                Ok((x, y))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_engine_serves_mlp() {
+        let engine = Engine::native();
+        assert_eq!(engine.platform(), "native-host");
+        let rt = engine.model("mlp").unwrap();
+        assert_eq!(rt.spec.n_params, crate::runtime::native::N_PARAMS);
+        let params = rt.init_params().unwrap();
+        let (x, y) = rt.probe_batch().unwrap();
+        let (loss, grads) = rt.grad(&params, &x, &y).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(grads.len(), rt.spec.n_params);
+        assert!(rt.stats().grad.calls == 1);
+    }
+
+    #[test]
+    fn native_engine_rejects_unknown_models() {
+        let engine = Engine::native();
+        assert!(engine.model("resnet").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn load_without_pjrt_feature_explains_itself() {
+        let err = Engine::load("artifacts").unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"));
     }
 }

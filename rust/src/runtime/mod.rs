@@ -1,10 +1,16 @@
-//! Runtime layer: the `xla` crate (PJRT C API) wrapped behind typed entry
-//! points. `HloModuleProto::from_text_file` -> `compile` once ->
-//! `execute` on the hot path. See DESIGN.md for the artifact interface.
+//! Runtime layer: typed entry points for the five per-model executables
+//! (grad / update / eval / blend / avg) behind a backend switch — the
+//! pure-rust native reference model (always available, `Sync`, used by
+//! CI and the threaded executor) or the PJRT-compiled JAX/Pallas
+//! artifacts (`--features pjrt`). See DESIGN.md for the artifact
+//! interface.
 
 pub mod buffers;
 pub mod engine;
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use buffers::Batch;
 pub use engine::{Engine, ModelRuntime, RuntimeStats};

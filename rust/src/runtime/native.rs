@@ -1,0 +1,384 @@
+//! Native reference backend: a pure-rust implementation of the five
+//! per-model entry points (grad / update / eval / blend / avg) for a
+//! small MLP classifier, numerically equivalent to what the AOT-lowered
+//! JAX/Pallas artifacts compute for the `mlp` model.
+//!
+//! This backend exists so the full training stack — cluster, collectives,
+//! DASO state machine, both executors — runs (and is CI-testable) in
+//! environments without the XLA/PJRT toolchain or prebuilt artifacts.
+//! It is `Send + Sync` (plain data, no FFI handles), which is what allows
+//! the threaded executor to share one runtime across worker threads.
+
+use std::path::PathBuf;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::classification::VectorClusters;
+use crate::data::Dataset;
+use crate::util::json::{num, obj};
+use crate::util::rng::Rng;
+use crate::util::stats::l2_norm;
+
+use super::buffers::Batch;
+use super::manifest::{Manifest, Metric, ModelSpec, SelfCheck, XDtype};
+
+/// Input feature dimension of the native MLP.
+pub const DIM: usize = 16;
+/// Hidden width.
+pub const HIDDEN: usize = 32;
+/// Number of classes.
+pub const CLASSES: usize = 10;
+/// Per-GPU batch size.
+pub const BATCH: usize = 32;
+/// GPUs per node baked into the native manifest (matches the default
+/// shape-specialization of the Pallas `local_avg` artifact).
+pub const GPUS_PER_NODE: usize = 4;
+
+const MU: f32 = 0.9;
+const WD: f32 = 5e-4;
+const INIT_SEED: u64 = 0xDA50_1217;
+const PROBE_SEED: u64 = 0xBEEF;
+
+/// Total parameter count: W1 [HIDDEN x DIM], b1, W2 [CLASSES x HIDDEN], b2.
+pub const N_PARAMS: usize = HIDDEN * DIM + HIDDEN + CLASSES * HIDDEN + CLASSES;
+
+/// The native model: one-hidden-layer ReLU MLP with softmax cross-entropy.
+#[derive(Debug, Clone, Default)]
+pub struct NativeMlp;
+
+/// Parameter views in artifact layout order.
+struct Split<'a> {
+    w1: &'a [f32],
+    b1: &'a [f32],
+    w2: &'a [f32],
+    b2: &'a [f32],
+}
+
+fn split(params: &[f32]) -> Split<'_> {
+    let (w1, rest) = params.split_at(HIDDEN * DIM);
+    let (b1, rest) = rest.split_at(HIDDEN);
+    let (w2, b2) = rest.split_at(CLASSES * HIDDEN);
+    Split { w1, b1, w2, b2 }
+}
+
+impl NativeMlp {
+    /// Deterministic He-style initial parameters (the artifact's
+    /// `init.bin` equivalent; identical on every call and every worker).
+    pub fn init_params(&self) -> Vec<f32> {
+        let mut rng = Rng::new(INIT_SEED);
+        let mut params = vec![0.0f32; N_PARAMS];
+        let w1_std = (2.0 / DIM as f32).sqrt();
+        let w2_std = (2.0 / HIDDEN as f32).sqrt();
+        rng.fill_normal(&mut params[..HIDDEN * DIM], w1_std);
+        let w2_start = HIDDEN * DIM + HIDDEN;
+        rng.fill_normal(&mut params[w2_start..w2_start + CLASSES * HIDDEN], w2_std);
+        params
+    }
+
+    /// The self-check probe batch (deterministic synthetic clusters).
+    pub fn probe_batch(&self) -> (Batch, Vec<i32>) {
+        let data = VectorClusters::new(BATCH, DIM, CLASSES, PROBE_SEED);
+        let indices: Vec<usize> = (0..BATCH).collect();
+        data.batch(&indices)
+    }
+
+    /// (params, x, y) -> (mean loss, grads) — forward-backward pass.
+    pub fn grad(&self, params: &[f32], x: &Batch, y: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let x = x.as_f32().context("native mlp expects f32 features")?;
+        let b = y.len();
+        ensure!(b > 0, "empty batch");
+        ensure!(x.len() == b * DIM, "x len {} != {}x{}", x.len(), b, DIM);
+        ensure!(params.len() == N_PARAMS, "params len {} != {N_PARAMS}", params.len());
+
+        let p = split(params);
+        let mut grads = vec![0.0f32; N_PARAMS];
+        let inv_b = 1.0 / b as f32;
+        let mut z1 = [0.0f32; HIDDEN];
+        let mut a1 = [0.0f32; HIDDEN];
+        let mut z2 = [0.0f32; CLASSES];
+        let mut loss_sum = 0.0f32;
+
+        for i in 0..b {
+            let xi = &x[i * DIM..(i + 1) * DIM];
+            let yi = y[i] as usize;
+            ensure!(yi < CLASSES, "label {yi} out of range");
+            forward(&p, xi, &mut z1, &mut a1, &mut z2);
+
+            // softmax cross-entropy (max-shifted) and dL/dz2, scaled 1/B
+            let zmax = z2.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let mut esum = 0.0f32;
+            let mut sm = [0.0f32; CLASSES];
+            for (s, &z) in sm.iter_mut().zip(z2.iter()) {
+                *s = (z - zmax).exp();
+                esum += *s;
+            }
+            loss_sum += esum.ln() + zmax - z2[yi];
+            let mut dz2 = [0.0f32; CLASSES];
+            for c in 0..CLASSES {
+                let mut d = sm[c] / esum;
+                if c == yi {
+                    d -= 1.0;
+                }
+                dz2[c] = d * inv_b;
+            }
+
+            // backprop: layer 2, then through ReLU into layer 1
+            let w2_off = HIDDEN * DIM + HIDDEN;
+            let b2_off = w2_off + CLASSES * HIDDEN;
+            let mut da1 = [0.0f32; HIDDEN];
+            for c in 0..CLASSES {
+                grads[b2_off + c] += dz2[c];
+                let row = &mut grads[w2_off + c * HIDDEN..w2_off + (c + 1) * HIDDEN];
+                for h in 0..HIDDEN {
+                    row[h] += dz2[c] * a1[h];
+                    da1[h] += p.w2[c * HIDDEN + h] * dz2[c];
+                }
+            }
+            let b1_off = HIDDEN * DIM;
+            for h in 0..HIDDEN {
+                if z1[h] <= 0.0 {
+                    continue;
+                }
+                grads[b1_off + h] += da1[h];
+                let row = &mut grads[h * DIM..(h + 1) * DIM];
+                for (g, &xv) in row.iter_mut().zip(xi) {
+                    *g += da1[h] * xv;
+                }
+            }
+        }
+        Ok((loss_sum * inv_b, grads))
+    }
+
+    /// Fused SGD with momentum and weight decay (the `update` artifact):
+    /// g' = g + wd p ; m' = mu m + g' ; p' = p - lr m'.
+    pub fn update(&self, params: &mut [f32], momentum: &mut [f32], grads: &[f32], lr: f32) {
+        for ((pv, mv), g) in params.iter_mut().zip(momentum.iter_mut()).zip(grads) {
+            let g = g + WD * *pv;
+            *mv = MU * *mv + g;
+            *pv -= lr * *mv;
+        }
+    }
+
+    /// (params, x, y) -> (aux = [correct count], summed loss).
+    pub fn eval(&self, params: &[f32], x: &Batch, y: &[i32]) -> Result<(Vec<f32>, f32)> {
+        let x = x.as_f32().context("native mlp expects f32 features")?;
+        let b = y.len();
+        ensure!(x.len() == b * DIM, "x len {} != {}x{}", x.len(), b, DIM);
+        let p = split(params);
+        let mut z1 = [0.0f32; HIDDEN];
+        let mut a1 = [0.0f32; HIDDEN];
+        let mut z2 = [0.0f32; CLASSES];
+        let mut correct = 0u32;
+        let mut loss_sum = 0.0f32;
+        for i in 0..b {
+            let xi = &x[i * DIM..(i + 1) * DIM];
+            forward(&p, xi, &mut z1, &mut a1, &mut z2);
+            let zmax = z2.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let esum: f32 = z2.iter().map(|&z| (z - zmax).exp()).sum();
+            loss_sum += esum.ln() + zmax - z2[y[i] as usize];
+            let pred = z2
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(c, _)| c)
+                .unwrap();
+            if pred as i32 == y[i] {
+                correct += 1;
+            }
+        }
+        Ok((vec![correct as f32], loss_sum))
+    }
+}
+
+fn forward(p: &Split<'_>, xi: &[f32], z1: &mut [f32], a1: &mut [f32], z2: &mut [f32]) {
+    for h in 0..HIDDEN {
+        let mut z = p.b1[h];
+        for (w, &xv) in p.w1[h * DIM..(h + 1) * DIM].iter().zip(xi) {
+            z += w * xv;
+        }
+        z1[h] = z;
+        a1[h] = z.max(0.0);
+    }
+    for c in 0..CLASSES {
+        let mut z = p.b2[c];
+        for (w, &av) in p.w2[c * HIDDEN..(c + 1) * HIDDEN].iter().zip(a1.iter()) {
+            z += w * av;
+        }
+        z2[c] = z;
+    }
+}
+
+/// DASO Eq. (1): blended = (2 S x_local + global_sum) / (2 S + P).
+/// Closed form of the `blend` artifact, backend-independent.
+pub fn blend(x_local: &[f32], global_sum: &[f32], s: f32, p: f32) -> Vec<f32> {
+    let denom = 2.0 * s + p;
+    x_local
+        .iter()
+        .zip(global_sum)
+        .map(|(xl, gs)| (2.0 * s * xl + gs) / denom)
+        .collect()
+}
+
+/// Node-local gradient average (the `local_avg` artifact): `stacked` is
+/// G contiguous vectors of length `n`; returns their element-wise mean
+/// with f32 accumulation in stack order (matching the kernel).
+pub fn avg(stacked: &[f32], n: usize) -> Result<Vec<f32>> {
+    ensure!(n > 0 && stacked.len() % n == 0, "avg expects a multiple of {n} elems");
+    let g = stacked.len() / n;
+    let mut out = vec![0.0f32; n];
+    for chunk in stacked.chunks_exact(n) {
+        for (o, &v) in out.iter_mut().zip(chunk) {
+            *o += v;
+        }
+    }
+    let inv = 1.0 / g as f32;
+    for o in &mut out {
+        *o *= inv;
+    }
+    Ok(out)
+}
+
+/// Build the native manifest: one `mlp` model whose self-check values are
+/// computed by the backend itself (a determinism probe, not a
+/// cross-language parity probe — that needs the PJRT artifacts).
+pub fn native_manifest() -> Manifest {
+    let model = NativeMlp;
+    let params = model.init_params();
+    let (x, y) = model.probe_batch();
+    let (loss, grads) = model.grad(&params, &x, &y).expect("native probe grad");
+    let (aux, loss_sum) = model.eval(&params, &x, &y).expect("native probe eval");
+    let spec = ModelSpec {
+        name: "mlp".to_string(),
+        n_params: N_PARAMS,
+        batch: BATCH,
+        x_shape: vec![BATCH, DIM],
+        x_dtype: XDtype::F32,
+        y_shape: vec![BATCH],
+        aux_len: 1,
+        metric: Metric::Top1,
+        mu: MU,
+        wd: WD,
+        grad_path: PathBuf::new(),
+        update_path: PathBuf::new(),
+        eval_path: PathBuf::new(),
+        blend_path: PathBuf::new(),
+        avg_path: PathBuf::new(),
+        init_path: PathBuf::new(),
+        selfcheck: SelfCheck {
+            loss,
+            grad_l2: l2_norm(&grads),
+            grad_head: grads[..8].to_vec(),
+            aux,
+            loss_sum,
+            probe_x: PathBuf::new(),
+            probe_y: PathBuf::new(),
+        },
+        hyper: obj(vec![("n_classes", num(CLASSES as f64))]),
+    };
+    let mut models = std::collections::BTreeMap::new();
+    models.insert("mlp".to_string(), spec);
+    Manifest { root: PathBuf::from("<native>"), gpus_per_node: GPUS_PER_NODE, models }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::max_abs_diff;
+
+    #[test]
+    fn init_is_deterministic_and_sized() {
+        let m = NativeMlp;
+        let a = m.init_params();
+        let b = m.init_params();
+        assert_eq!(a.len(), N_PARAMS);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn grad_is_deterministic() {
+        let m = NativeMlp;
+        let p = m.init_params();
+        let (x, y) = m.probe_batch();
+        let (l1, g1) = m.grad(&p, &x, &y).unwrap();
+        let (l2, g2) = m.grad(&p, &x, &y).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let m = NativeMlp;
+        let mut params = m.init_params();
+        let (x, y) = m.probe_batch();
+        let (_, grads) = m.grad(&params, &x, &y).unwrap();
+        // spot-check a few coordinates across all four parameter blocks
+        for &i in &[0usize, 7, HIDDEN * DIM + 3, HIDDEN * DIM + HIDDEN + 11, N_PARAMS - 1] {
+            let eps = 1e-3f32;
+            let orig = params[i];
+            params[i] = orig + eps;
+            let (lp, _) = m.grad(&params, &x, &y).unwrap();
+            params[i] = orig - eps;
+            let (lm, _) = m.grad(&params, &x, &y).unwrap();
+            params[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grads[i]).abs() < 2e-2 * grads[i].abs().max(0.05),
+                "param {i}: fd {fd} vs analytic {}",
+                grads[i]
+            );
+        }
+    }
+
+    #[test]
+    fn update_matches_host_reference() {
+        let m = NativeMlp;
+        let mut rng = Rng::new(3);
+        let mut params = vec![0.0f32; N_PARAMS];
+        let mut momentum = vec![0.0f32; N_PARAMS];
+        let mut grads = vec![0.0f32; N_PARAMS];
+        rng.fill_normal(&mut params, 1.0);
+        rng.fill_normal(&mut momentum, 0.5);
+        rng.fill_normal(&mut grads, 0.1);
+        let lr = 0.05f32;
+        let mut p_ref = params.clone();
+        let mut m_ref = momentum.clone();
+        for i in 0..N_PARAMS {
+            let g = grads[i] + WD * p_ref[i];
+            m_ref[i] = MU * m_ref[i] + g;
+            p_ref[i] -= lr * m_ref[i];
+        }
+        m.update(&mut params, &mut momentum, &grads, lr);
+        assert!(max_abs_diff(&params, &p_ref) == 0.0);
+        assert!(max_abs_diff(&momentum, &m_ref) == 0.0);
+    }
+
+    #[test]
+    fn blend_consensus_is_fixed_point() {
+        let mut rng = Rng::new(21);
+        let mut x = vec![0.0f32; 100];
+        rng.fill_normal(&mut x, 1.0);
+        let p = 8.0f32;
+        let gsum: Vec<f32> = x.iter().map(|v| v * p).collect();
+        let out = blend(&x, &gsum, 4.0, p);
+        for (o, xv) in out.iter().zip(&x) {
+            assert!((o - xv).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn avg_matches_mean() {
+        let stacked = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // G=3, n=2
+        let mean = avg(&stacked, 2).unwrap();
+        assert_eq!(mean, vec![3.0, 4.0]);
+        assert!(avg(&stacked, 4).is_err());
+    }
+
+    #[test]
+    fn native_manifest_is_self_consistent() {
+        let manifest = native_manifest();
+        let spec = manifest.model("mlp").unwrap();
+        assert_eq!(spec.n_params, N_PARAMS);
+        assert_eq!(spec.selfcheck.grad_head.len(), 8);
+        assert!(spec.selfcheck.loss > 0.0);
+    }
+}

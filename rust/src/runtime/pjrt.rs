@@ -1,0 +1,152 @@
+//! PJRT execution of the HLO-text artifacts through the `xla` crate
+//! (`--features pjrt`): `HloModuleProto::from_text_file` -> `compile`
+//! once -> `execute` on the hot path. This is the only module that
+//! touches the `xla` execution API.
+//!
+//! The PJRT client handles are `Rc`-based and therefore not `Sync`; the
+//! threaded executor requires the native backend (see cluster::executor).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::buffers::Batch;
+use super::manifest::ModelSpec;
+
+/// Compiled executable set for one model.
+pub struct PjrtModel {
+    spec: ModelSpec,
+    grad: xla::PjRtLoadedExecutable,
+    update: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    blend: xla::PjRtLoadedExecutable,
+    avg: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {path:?}"))
+}
+
+/// Literal -> Vec<f32> (must be f32-typed).
+fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal to f32 vec")
+}
+
+/// First element of an f32 literal (rank-1 `[1]` scalars).
+fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = to_f32_vec(lit)?;
+    v.first().copied().context("empty scalar literal")
+}
+
+impl PjrtModel {
+    /// Compile the full executable set for one model.
+    pub fn compile(client: &xla::PjRtClient, spec: &ModelSpec) -> Result<PjrtModel> {
+        Ok(PjrtModel {
+            grad: compile(client, &spec.grad_path)?,
+            update: compile(client, &spec.update_path)?,
+            eval: compile(client, &spec.eval_path)?,
+            blend: compile(client, &spec.blend_path)?,
+            avg: compile(client, &spec.avg_path)?,
+            client: client.clone(),
+            spec: spec.clone(),
+        })
+    }
+
+    /// Upload a host f32 slice directly to a device buffer (one copy —
+    /// skips the Literal intermediate the naive path pays).
+    fn up_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).context("host->device f32")
+    }
+
+    fn up_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).context("host->device i32")
+    }
+
+    fn up_batch(&self, batch: &Batch, dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        match batch {
+            Batch::F32(v) => self.up_f32(v, dims),
+            Batch::I32(v) => self.up_i32(v, dims),
+        }
+    }
+
+    fn run_b(
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute_b::<xla::PjRtBuffer>(args).context("PJRT execute_b")?;
+        let lit = result[0][0].to_literal_sync().context("fetch result")?;
+        lit.to_tuple().context("untuple result")
+    }
+
+    pub fn grad(&self, params: &[f32], x: &Batch, y: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let args = [
+            self.up_f32(params, &[self.spec.n_params])?,
+            self.up_batch(x, &self.spec.x_shape)?,
+            self.up_i32(y, &self.spec.y_shape)?,
+        ];
+        let out = Self::run_b(&self.grad, &args)?;
+        anyhow::ensure!(out.len() == 2, "grad returned {} outputs", out.len());
+        Ok((scalar_f32(&out[0])?, to_f32_vec(&out[1])?))
+    }
+
+    pub fn update(
+        &self,
+        params: &mut Vec<f32>,
+        momentum: &mut Vec<f32>,
+        grads: &[f32],
+        lr: f32,
+    ) -> Result<()> {
+        let n = self.spec.n_params;
+        let args = [
+            self.up_f32(params, &[n])?,
+            self.up_f32(momentum, &[n])?,
+            self.up_f32(grads, &[n])?,
+            self.up_f32(&[lr], &[1])?,
+        ];
+        let out = Self::run_b(&self.update, &args)?;
+        anyhow::ensure!(out.len() == 2, "update returned {} outputs", out.len());
+        out[0].copy_raw_to(params.as_mut_slice()).context("read params'")?;
+        out[1].copy_raw_to(momentum.as_mut_slice()).context("read momentum'")?;
+        Ok(())
+    }
+
+    pub fn eval(&self, params: &[f32], x: &Batch, y: &[i32]) -> Result<(Vec<f32>, f32)> {
+        let args = [
+            self.up_f32(params, &[self.spec.n_params])?,
+            self.up_batch(x, &self.spec.x_shape)?,
+            self.up_i32(y, &self.spec.y_shape)?,
+        ];
+        let out = Self::run_b(&self.eval, &args)?;
+        anyhow::ensure!(out.len() == 2, "eval returned {} outputs", out.len());
+        Ok((to_f32_vec(&out[0])?, scalar_f32(&out[1])?))
+    }
+
+    pub fn blend(&self, x_local: &[f32], global_sum: &[f32], s: f32, p: f32) -> Result<Vec<f32>> {
+        let n = self.spec.n_params;
+        let args = [
+            self.up_f32(x_local, &[n])?,
+            self.up_f32(global_sum, &[n])?,
+            self.up_f32(&[s], &[1])?,
+            self.up_f32(&[p], &[1])?,
+        ];
+        let out = Self::run_b(&self.blend, &args)?;
+        to_f32_vec(&out[0])
+    }
+
+    pub fn avg(&self, stacked: &[f32], gpus_per_node: usize) -> Result<Vec<f32>> {
+        let n = self.spec.n_params;
+        anyhow::ensure!(
+            stacked.len() == gpus_per_node * n,
+            "avg expects {}x{} elems",
+            gpus_per_node,
+            n
+        );
+        let args = [self.up_f32(stacked, &[gpus_per_node, n])?];
+        let out = Self::run_b(&self.avg, &args)?;
+        to_f32_vec(&out[0])
+    }
+}

@@ -100,6 +100,7 @@ mod tests {
             total_sim_time_s: 1.0,
             total_wall_s: 0.2,
             comm: CommStats::default(),
+            final_params: vec![vec![0.0; 4]; 4],
         }
     }
 

@@ -94,6 +94,9 @@ pub struct RunReport {
     pub total_sim_time_s: f64,
     pub total_wall_s: f64,
     pub comm: super::strategy::CommStats,
+    /// final per-worker parameter replicas (rank order) — the basis of
+    /// the serial-vs-threaded determinism tests
+    pub final_params: Vec<Vec<f32>>,
 }
 
 impl RunReport {
@@ -133,7 +136,8 @@ pub fn train(
     );
 
     let batch = rt.spec.batch;
-    let steps_per_epoch = cluster.workers[0].shard.batches_per_epoch(batch);
+    let steps_per_epoch =
+        crate::data::shard::lockstep_batches_per_epoch(train_data.len(), world, batch);
     anyhow::ensure!(
         steps_per_epoch > 0,
         "shard too small: {} samples / {} workers < batch {}",
@@ -251,6 +255,7 @@ pub fn train(
         total_sim_time_s: cluster.makespan(),
         total_wall_s: wall_start.elapsed().as_secs_f64(),
         comm: strategy.comm_stats(),
+        final_params: cluster.workers.iter().map(|w| w.params.clone()).collect(),
     })
 }
 

@@ -10,4 +10,4 @@ pub mod strategy;
 
 pub use loop_::{train, EpochRecord, RunReport, TrainConfig};
 pub use metrics::{evaluate, MetricAccum};
-pub use strategy::{CommStats, StepCtx, Strategy};
+pub use strategy::{CommStats, RankCtx, RankStrategy, RankStrategyFactory, StepCtx, Strategy};

@@ -1,14 +1,16 @@
-//! The synchronization-strategy interface: DASO and every baseline
-//! implement `Strategy`. The trainer computes per-worker gradients (the
-//! forward-backward pass through the PJRT grad executable), then hands
-//! the round to the strategy, which owns all communication and parameter
-//! updates — mirroring how a DPNN optimizer wraps the local optimizer in
-//! the paper's Listing 1.
+//! The synchronization-strategy interfaces: DASO and every baseline
+//! implement `Strategy` (the serial executor's cluster-global view) and
+//! `RankStrategy` (the threaded executor's per-worker view). The trainer
+//! computes per-worker gradients (the forward-backward pass through the
+//! runtime), then hands the round to the strategy, which owns all
+//! communication and parameter updates — mirroring how a DPNN optimizer
+//! wraps the local optimizer in the paper's Listing 1.
 
 use anyhow::Result;
 
-use crate::cluster::ClusterState;
-use crate::comm::Fabric;
+use crate::cluster::{ClusterState, Worker};
+use crate::comm::channels::RankComms;
+use crate::comm::{Fabric, Topology};
 use crate::runtime::ModelRuntime;
 
 /// Cumulative communication accounting for a run.
@@ -24,7 +26,8 @@ pub struct CommStats {
     pub comm_wait_s: f64,
 }
 
-/// One training round (each worker has done one forward-backward pass).
+/// One training round (each worker has done one forward-backward pass) as
+/// seen by the serial executor: the whole cluster at once.
 pub struct StepCtx<'a> {
     pub rt: &'a ModelRuntime,
     pub cluster: &'a mut ClusterState,
@@ -62,3 +65,57 @@ pub trait Strategy {
         String::new()
     }
 }
+
+/// One training round as seen by one worker thread in the threaded
+/// executor: this rank's state plus its communicator handles. All
+/// cross-worker data movement goes through `comms`.
+pub struct RankCtx<'a> {
+    pub rt: &'a ModelRuntime,
+    pub topo: Topology,
+    pub fabric: &'a Fabric,
+    pub comms: &'a RankComms,
+    pub worker: &'a mut Worker,
+    /// this rank's gradient for the round
+    pub grad: &'a mut Vec<f32>,
+    pub lr: f32,
+    pub epoch: usize,
+    pub global_batch: usize,
+}
+
+/// Per-rank strategy state machine. Every rank runs its own replica;
+/// schedule decisions (phases, group rotation, B/W cycling) must be
+/// derived from replicated-deterministic inputs (batch counters, epoch
+/// losses) so all replicas stay in lockstep — that is what makes the
+/// rendezvous collectives deadlock-free and, for the blocking
+/// strategies, bit-identical to the serial executor.
+pub trait RankStrategy {
+    fn name(&self) -> &'static str;
+
+    /// This rank's communication + parameter update for one round.
+    fn on_batch(&mut self, ctx: &mut RankCtx) -> Result<()>;
+
+    fn on_epoch_start(&mut self, _epoch: usize) {}
+
+    /// Called once per epoch with the cluster-mean training loss (the
+    /// same value on every rank).
+    fn on_epoch_end(&mut self, _epoch: usize, _train_loss: f64) {}
+
+    /// Flush any in-flight state (end of training).
+    fn finalize(&mut self, _ctx: &mut RankCtx) -> Result<()> {
+        Ok(())
+    }
+
+    /// This rank's communication counters. Event counts (syncs) are
+    /// schedule-level and identical across ranks; byte/wait counters are
+    /// per-rank and summed by the executor.
+    fn comm_stats(&self) -> CommStats;
+
+    fn state_desc(&self) -> String {
+        String::new()
+    }
+}
+
+/// Constructor for per-rank strategy replicas (one call per spawned
+/// worker thread). Shared state (e.g. the ASGD parameter server) is
+/// captured in the closure.
+pub type RankStrategyFactory = Box<dyn Fn(usize) -> Box<dyn RankStrategy> + Send + Sync>;

@@ -1,0 +1,219 @@
+//! Serial-vs-threaded executor contract tests (native backend, so they
+//! always run):
+//!
+//! - blocking strategies (Horovod, all-blocking DASO, local-only) must
+//!   produce bit-identical parameters and loss records on both executors;
+//! - threaded DASO cycling must complete without deadlock at 4 nodes x
+//!   4 GPUs (watchdog-guarded);
+//! - the shared-server threaded ASGD must train.
+
+#![cfg(not(feature = "pjrt"))]
+
+use std::time::Duration;
+
+use daso::baselines::{
+    AsgdRank, AsgdServer, AsgdShared, Horovod, HorovodConfig, HorovodRank, LocalOnly,
+    LocalOnlyRank,
+};
+use daso::cluster::train_threaded;
+use daso::daso::{Daso, DasoConfig, DasoRank};
+use daso::runtime::Engine;
+use daso::trainer::strategy::RankStrategyFactory;
+use daso::trainer::{train, RunReport, Strategy, TrainConfig};
+
+fn cfg(nodes: usize, gpn: usize, epochs: usize) -> TrainConfig {
+    let mut c = TrainConfig::quick(nodes, gpn, epochs);
+    c.train_samples = 1024;
+    c.val_samples = 256;
+    c.lr_scale = (nodes * gpn) as f64;
+    c
+}
+
+fn run_serial(c: &TrainConfig, strategy: &mut dyn Strategy, seed: u64) -> RunReport {
+    let engine = Engine::native();
+    let rt = engine.model("mlp").unwrap();
+    let (tr, va) = daso::data::for_model(&rt.spec, c.train_samples, c.val_samples, seed).unwrap();
+    train(&rt, c, &*tr, &*va, strategy).unwrap()
+}
+
+fn run_threaded(c: &TrainConfig, factory: RankStrategyFactory, seed: u64) -> RunReport {
+    let engine = Engine::native();
+    let rt = engine.model("mlp").unwrap();
+    let (tr, va) = daso::data::for_model(&rt.spec, c.train_samples, c.val_samples, seed).unwrap();
+    train_threaded(&rt, c, &*tr, &*va, &factory).unwrap()
+}
+
+fn horovod_factory() -> RankStrategyFactory {
+    Box::new(|_| Box::new(HorovodRank::new(HorovodConfig::default())))
+}
+
+fn daso_factory(cfg: DasoConfig, n_groups: usize) -> RankStrategyFactory {
+    Box::new(move |_| Box::new(DasoRank::new(cfg.clone(), n_groups)))
+}
+
+/// Deadlock guard: run `f` on a helper thread and panic if it does not
+/// finish in time (a hung rendezvous would otherwise stall CI forever).
+fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    let out = rx
+        .recv_timeout(Duration::from_secs(secs))
+        .unwrap_or_else(|_| panic!("timed out after {secs}s — executor deadlock?"));
+    handle.join().expect("runner thread panicked");
+    out
+}
+
+fn assert_identical(serial: &RunReport, threaded: &RunReport) {
+    assert_eq!(serial.final_params.len(), threaded.final_params.len());
+    for (w, (a, b)) in serial.final_params.iter().zip(&threaded.final_params).enumerate() {
+        assert_eq!(a, b, "worker {w} parameters diverged between executors");
+    }
+    for (a, b) in serial.records.iter().zip(&threaded.records) {
+        assert_eq!(a.train_loss, b.train_loss, "epoch {} loss diverged", a.epoch);
+        assert_eq!(a.lr, b.lr, "epoch {} lr diverged", a.epoch);
+        assert_eq!(a.sim_time_s, b.sim_time_s, "epoch {} sim time diverged", a.epoch);
+    }
+    assert_eq!(serial.final_metric, threaded.final_metric);
+    assert_eq!(serial.comm.global_syncs, threaded.comm.global_syncs);
+    assert_eq!(serial.comm.blocking_syncs, threaded.comm.blocking_syncs);
+}
+
+#[test]
+fn horovod_threaded_matches_serial_bitwise() {
+    let c = cfg(2, 2, 4);
+    let serial = run_serial(&c, &mut Horovod::new(HorovodConfig::default()), 7);
+    let threaded = with_timeout(120, {
+        let c = c.clone();
+        move || run_threaded(&c, horovod_factory(), 7)
+    });
+    assert_identical(&serial, &threaded);
+    assert!(serial.comm.blocking_syncs > 0);
+}
+
+#[test]
+fn daso_warmup_threaded_matches_serial_bitwise() {
+    // warm-up + cool-down covering the whole run: every global sync is
+    // blocking — the regime where the two executors must agree exactly
+    let c = cfg(2, 2, 4);
+    let daso_cfg = DasoConfig {
+        total_epochs: 4,
+        warmup_epochs: 2,
+        cooldown_epochs: 2,
+        ..DasoConfig::new(4)
+    };
+    let serial = run_serial(&c, &mut Daso::new(daso_cfg.clone(), c.gpus_per_node), 11);
+    let threaded = with_timeout(120, {
+        let c = c.clone();
+        let factory = daso_factory(daso_cfg, c.gpus_per_node);
+        move || run_threaded(&c, factory, 11)
+    });
+    assert_identical(&serial, &threaded);
+    assert_eq!(threaded.comm.nonblocking_syncs, 0);
+    assert!(threaded.comm.blocking_syncs > 0);
+}
+
+#[test]
+fn local_only_threaded_matches_serial_bitwise() {
+    let c = cfg(1, 4, 3);
+    let serial = run_serial(&c, &mut LocalOnly::new(), 3);
+    let threaded = with_timeout(120, {
+        let c = c.clone();
+        move || run_threaded(&c, Box::new(|_| Box::new(LocalOnlyRank::new())), 3)
+    });
+    assert_identical(&serial, &threaded);
+}
+
+#[test]
+fn daso_cycling_threaded_4x4_completes_without_deadlock() {
+    // the stress case: 16 real threads, rotating non-blocking global
+    // syncs in flight across the mailbox, node broadcasts interleaving
+    let mut c = cfg(4, 4, 3);
+    c.train_samples = 2048;
+    let daso_cfg = DasoConfig {
+        total_epochs: 3,
+        warmup_epochs: 1,
+        cooldown_epochs: 0,
+        ..DasoConfig::new(3)
+    };
+    let report = with_timeout(180, {
+        let c = c.clone();
+        let factory = daso_factory(daso_cfg, 4);
+        move || run_threaded(&c, factory, 5)
+    });
+    assert_eq!(report.world, 16);
+    assert_eq!(report.records.len(), 3);
+    assert!(
+        report.comm.nonblocking_syncs > 0,
+        "cycling phase must issue non-blocking syncs: {:?}",
+        report.comm
+    );
+    assert!(report.final_metric > 0.5, "{}", report.summary_line());
+    // every worker ends with finite parameters
+    for params in &report.final_params {
+        assert!(params.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn daso_cycling_threaded_learns_and_saves_inter_bytes() {
+    let c = cfg(2, 4, 6);
+    let daso_cfg = DasoConfig {
+        total_epochs: 6,
+        warmup_epochs: 1,
+        cooldown_epochs: 1,
+        ..DasoConfig::new(6)
+    };
+    let daso = with_timeout(180, {
+        let c = c.clone();
+        let factory = daso_factory(daso_cfg, 4);
+        move || run_threaded(&c, factory, 9)
+    });
+    let horovod = with_timeout(180, {
+        let c = c.clone();
+        move || run_threaded(&c, horovod_factory(), 9)
+    });
+    assert!(daso.final_metric > 0.85, "{}", daso.summary_line());
+    assert!(
+        daso.comm.bytes_inter < horovod.comm.bytes_inter / 2,
+        "daso {} bytes vs horovod {}",
+        daso.comm.bytes_inter,
+        horovod.comm.bytes_inter
+    );
+}
+
+#[test]
+fn asgd_threaded_shared_server_trains() {
+    let c = cfg(2, 2, 6);
+    let serial = run_serial(&c, &mut AsgdServer::new(), 13);
+    let threaded = with_timeout(120, {
+        let c = c.clone();
+        let shared = AsgdShared::new();
+        let factory: RankStrategyFactory =
+            Box::new(move |_| Box::new(AsgdRank::new(shared.clone())));
+        move || run_threaded(&c, factory, 13)
+    });
+    // push order is nondeterministic, so no bitwise claim — but the
+    // shared server must train to comparable quality and move real bytes
+    assert!(threaded.final_metric > 0.85, "{}", threaded.summary_line());
+    assert!((threaded.final_metric - serial.final_metric).abs() < 0.1);
+    assert!(threaded.comm.bytes_inter > 0);
+}
+
+#[test]
+fn threaded_is_deterministic_across_runs_for_blocking_strategies() {
+    let c = cfg(2, 2, 3);
+    let run = || {
+        with_timeout(120, {
+            let c = c.clone();
+            move || run_threaded(&c, horovod_factory(), 21)
+        })
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.final_params, b.final_params);
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.train_loss, rb.train_loss);
+    }
+}

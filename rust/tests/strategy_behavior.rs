@@ -1,6 +1,8 @@
 //! Behavioural tests of the synchronization strategies beyond the core
 //! DASO path: baseline equivalences, wire-format effects, phase-schedule
-//! edge cases. Requires `make artifacts`.
+//! edge cases. Runs against the native reference backend; the
+//! transformer smoke test additionally needs PJRT artifacts and skips
+//! with a message when they are unavailable.
 
 use daso::baselines::{AsgdServer, Horovod, HorovodConfig, LocalOnly};
 use daso::comm::Wire;
@@ -9,10 +11,18 @@ use daso::runtime::Engine;
 use daso::trainer::{train, TrainConfig};
 
 fn engine() -> Option<Engine> {
+    Some(Engine::native())
+}
+
+/// PJRT artifact engine for models beyond the native `mlp`.
+fn artifact_engine() -> Option<Engine> {
     match Engine::load("artifacts") {
         Ok(e) => Some(e),
         Err(e) => {
-            eprintln!("SKIP: artifacts not built ({e:#}) — run `make artifacts`");
+            eprintln!(
+                "SKIP: artifact runtime unavailable ({e:#}) — \
+                 build with --features pjrt and run `make artifacts`"
+            );
             None
         }
     }
@@ -141,7 +151,7 @@ fn daso_nonblocking_overlap_reduces_wait() {
 fn transformer_short_daso_run_learns() {
     // full-stack smoke on the LM: a few steps must reduce the loss from
     // ~ln(vocab) toward the chain's entropy floor
-    let Some(engine) = engine() else { return };
+    let Some(engine) = artifact_engine() else { return };
     let rt = engine.model("transformer").unwrap();
     let mut c = cfg(1, 2, 2);
     c.train_samples = 256;

@@ -1,5 +1,6 @@
 //! End-to-end integration over the full stack: data -> cluster -> grad
-//! artifacts -> strategies -> metrics. Requires `make artifacts`.
+//! runtime -> strategies -> metrics. Runs against the native reference
+//! backend, so no artifacts are required.
 
 use daso::baselines::{Horovod, HorovodConfig, LocalOnly};
 use daso::daso::{Daso, DasoConfig};
@@ -8,13 +9,7 @@ use daso::trainer::{train, TrainConfig};
 use daso::util::stats::max_abs_diff;
 
 fn engine() -> Option<Engine> {
-    match Engine::load("artifacts") {
-        Ok(e) => Some(e),
-        Err(e) => {
-            eprintln!("SKIP: artifacts not built ({e:#}) — run `make artifacts`");
-            None
-        }
-    }
+    Some(Engine::native())
 }
 
 fn quick_cfg(nodes: usize, gpn: usize, epochs: usize) -> TrainConfig {
@@ -141,7 +136,8 @@ fn local_only_workers_diverge_from_each_other() {
     let Some(engine) = engine() else { return };
     let rt = engine.model("mlp").unwrap();
     let cfg = quick_cfg(1, 2, 2);
-    let (tr, _va) = daso::data::for_model(&rt.spec, cfg.train_samples, cfg.val_samples, 11).unwrap();
+    let (tr, _va) =
+        daso::data::for_model(&rt.spec, cfg.train_samples, cfg.val_samples, 11).unwrap();
 
     let topo = cfg.topology();
     let mut cluster = daso::cluster::ClusterState::new(topo, &rt, tr.len(), cfg.seed).unwrap();
