@@ -3,7 +3,7 @@
 //! `cargo bench --bench micro_collectives`
 //! `DASO_BENCH_QUICK=1` runs a reduced configuration (the CI smoke job).
 
-use daso::bench_support::Bench;
+use daso::bench_support::{write_bench_json, Bench};
 use daso::comm::{naive_mean, ring_allreduce_mean, sum_buffers, Wire};
 use daso::util::rng::Rng;
 
@@ -24,17 +24,18 @@ fn main() {
     let bench = if quick { Bench::new(1, 3) } else { Bench::new(2, 8) };
     let lens: &[usize] = if quick { &[100_000] } else { &[100_000, 1_000_000, 4_000_000] };
     let part_counts: &[usize] = if quick { &[4] } else { &[4, 8] };
+    let mut results = Vec::new();
 
     for &len in lens {
         for &parts in part_counts {
             for wire in [Wire::F32, Wire::F16, Wire::Bf16] {
                 let base = make_bufs(parts, len);
-                bench.run(&format!("ring_allreduce p={parts} n={len} {wire:?}"), || {
+                results.push(bench.run(&format!("ring_allreduce p={parts} n={len} {wire:?}"), || {
                     let mut bufs = base.clone();
                     let mut refs: Vec<&mut Vec<f32>> = bufs.iter_mut().collect();
                     ring_allreduce_mean(&mut refs, wire);
                     std::hint::black_box(&bufs);
-                });
+                }));
             }
         }
     }
@@ -42,14 +43,15 @@ fn main() {
     let mean_lens: &[usize] = if quick { &[1_000_000] } else { &[1_000_000, 4_000_000] };
     for &len in mean_lens {
         let base = make_bufs(4, len);
-        bench.run(&format!("naive_mean p=4 n={len}"), || {
+        results.push(bench.run(&format!("naive_mean p=4 n={len}"), || {
             let refs: Vec<&Vec<f32>> = base.iter().collect();
             std::hint::black_box(naive_mean(&refs));
-        });
-        bench.run(&format!("sum_buffers p=4 n={len}"), || {
+        }));
+        results.push(bench.run(&format!("sum_buffers p=4 n={len}"), || {
             let refs: Vec<&Vec<f32>> = base.iter().collect();
             std::hint::black_box(sum_buffers(&refs));
-        });
+        }));
     }
+    write_bench_json("micro_collectives", &results).expect("bench artifact");
     println!("micro_collectives OK");
 }

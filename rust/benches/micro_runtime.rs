@@ -6,7 +6,7 @@
 //! backend otherwise (which is what the CI smoke job measures).
 //! `cargo bench --bench micro_runtime` (`DASO_BENCH_QUICK=1` for CI).
 
-use daso::bench_support::Bench;
+use daso::bench_support::{write_bench_json, Bench};
 use daso::runtime::Engine;
 use daso::util::rng::Rng;
 
@@ -20,6 +20,7 @@ fn main() {
     );
     let bench = if quick { Bench::new(1, 3) } else { Bench::new(2, 8) };
     let mut rng = Rng::new(3);
+    let mut results = Vec::new();
 
     for name in engine.manifest.models.keys().cloned().collect::<Vec<_>>() {
         let rt = engine.model(&name).unwrap();
@@ -27,31 +28,32 @@ fn main() {
         let params = rt.init_params().unwrap();
         let (x, y) = rt.probe_batch().unwrap();
 
-        bench.run(&format!("{name}/grad (n={n})"), || {
+        results.push(bench.run(&format!("{name}/grad (n={n})"), || {
             std::hint::black_box(rt.grad(&params, &x, &y).unwrap());
-        });
-        bench.run(&format!("{name}/eval"), || {
+        }));
+        results.push(bench.run(&format!("{name}/eval"), || {
             std::hint::black_box(rt.eval(&params, &x, &y).unwrap());
-        });
+        }));
 
         let mut p = params.clone();
         let mut m = vec![0.0f32; n];
         let mut g = vec![0.0f32; n];
         rng.fill_normal(&mut g, 0.01);
-        bench.run(&format!("{name}/update (fused SGD)"), || {
+        results.push(bench.run(&format!("{name}/update (fused SGD)"), || {
             rt.update(&mut p, &mut m, &g, 1e-3).unwrap();
-        });
+        }));
 
         let gsum: Vec<f32> = params.iter().map(|v| v * 4.0).collect();
-        bench.run(&format!("{name}/blend (Eq. 1)"), || {
+        results.push(bench.run(&format!("{name}/blend (Eq. 1)"), || {
             std::hint::black_box(rt.blend(&params, &gsum, 1.0, 4.0).unwrap());
-        });
+        }));
 
         let gpn = rt.gpus_per_node;
         let stacked: Vec<f32> = (0..gpn).flat_map(|_| params.clone()).collect();
-        bench.run(&format!("{name}/avg (local, G={gpn})"), || {
+        results.push(bench.run(&format!("{name}/avg (local, G={gpn})"), || {
             std::hint::black_box(rt.avg(&stacked).unwrap());
-        });
+        }));
     }
+    write_bench_json("micro_runtime", &results).expect("bench artifact");
     println!("micro_runtime OK");
 }

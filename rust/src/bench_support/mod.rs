@@ -2,10 +2,18 @@
 //!
 //! `cargo bench` targets are `harness = false` binaries that call
 //! [`Bench::run`] for micro measurements (warmup + timed iterations,
-//! mean/p50/p99) and print the paper-figure tables.
+//! mean/p50/p99), print the paper-figure tables, and emit
+//! machine-readable `BENCH_<name>.json` artifacts
+//! ([`write_bench_json`]) so the perf trajectory is diffable across
+//! commits (CI uploads them from the bench smoke job).
 
-use std::time::Instant;
+use std::path::{Path, PathBuf};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Value};
+use crate::util::sha::sha256_hex;
 use crate::util::stats::{mean, percentile, std_dev};
 
 pub struct Bench {
@@ -84,6 +92,72 @@ impl Bench {
     }
 }
 
+/// Schema identifier for machine-readable bench artifacts (bump on any
+/// layout change).
+pub const BENCH_SCHEMA: &str = "daso-bench/1";
+
+/// Serialize bench results as a `daso-bench/1` artifact: schema version,
+/// commit + environment fingerprint, per-result stats, and a sha256 over
+/// the canonical (compact) results array — the manifest idiom, so a
+/// result file is verifiable against the bytes it summarizes.
+pub fn bench_json(name: &str, results: &[BenchResult]) -> Value {
+    let results_json = arr(
+        results
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("name", s(&r.name)),
+                    ("iters", num(r.iters as f64)),
+                    ("mean_s", num(r.mean_s)),
+                    ("std_s", num(r.std_s)),
+                    ("p50_s", num(r.p50_s)),
+                    ("p99_s", num(r.p99_s)),
+                ])
+            })
+            .collect(),
+    );
+    let results_sha = sha256_hex(results_json.to_string_compact().as_bytes());
+    let commit = std::env::var("GITHUB_SHA").unwrap_or_else(|_| "unknown".into());
+    let created = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    obj(vec![
+        ("schema", s(BENCH_SCHEMA)),
+        ("bench", s(name)),
+        ("commit", s(&commit)),
+        ("created_unix", num(created)),
+        (
+            "env",
+            obj(vec![
+                ("quick", Value::Bool(std::env::var("DASO_BENCH_QUICK").is_ok())),
+                ("os", s(std::env::consts::OS)),
+                ("arch", s(std::env::consts::ARCH)),
+            ]),
+        ),
+        ("results", results_json),
+        ("results_sha256", s(&results_sha)),
+    ])
+}
+
+/// Write `BENCH_<name>.json` under `dir`; returns the path written.
+pub fn write_bench_json_to(dir: &Path, name: &str, results: &[BenchResult]) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    let path = dir.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, bench_json(name, results).to_string_pretty())
+        .with_context(|| format!("writing {path:?}"))?;
+    Ok(path)
+}
+
+/// Write the bench artifact to `DASO_BENCH_OUT` (default: the current
+/// directory) and print where it went.
+pub fn write_bench_json(name: &str, results: &[BenchResult]) -> Result<PathBuf> {
+    let dir = std::env::var("DASO_BENCH_OUT").unwrap_or_else(|_| ".".into());
+    let path = write_bench_json_to(Path::new(&dir), name, results)?;
+    println!("wrote {}", path.display());
+    Ok(path)
+}
+
 /// Print a markdown-style table (used by the figure benches).
 pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     println!("\n## {title}\n");
@@ -111,6 +185,33 @@ mod tests {
         });
         assert!(r.mean_s >= 0.0);
         assert!(r.p99_s >= r.p50_s);
+    }
+
+    #[test]
+    fn bench_json_artifact_roundtrips_and_verifies() {
+        let results = vec![BenchResult {
+            name: "probe".into(),
+            iters: 5,
+            mean_s: 0.25,
+            std_s: 0.01,
+            p50_s: 0.24,
+            p99_s: 0.3,
+        }];
+        let dir = std::env::temp_dir().join(format!("daso_bench_json_{}", std::process::id()));
+        let path = write_bench_json_to(&dir, "unit_probe", &results).unwrap();
+        assert!(path.file_name().unwrap().to_str().unwrap() == "BENCH_unit_probe.json");
+        let v = Value::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.req_str("schema").unwrap(), BENCH_SCHEMA);
+        assert_eq!(v.req_str("bench").unwrap(), "unit_probe");
+        let rows = v.req_arr("results").unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].req_str("name").unwrap(), "probe");
+        assert_eq!(rows[0].req_f64("mean_s").unwrap(), 0.25);
+        // the recorded sha must match a recomputation over the results
+        let recomputed =
+            sha256_hex(arr(rows.to_vec()).to_string_compact().as_bytes());
+        assert_eq!(v.req_str("results_sha256").unwrap(), recomputed);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

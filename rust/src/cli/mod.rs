@@ -106,12 +106,25 @@ COMMANDS:
     train       run one training job
                   --model mlp|resnet|segnet|transformer   (default mlp)
                   --strategy daso|horovod|asgd|local_only (default daso)
-                  --executor serial|threaded (default serial; threaded runs
-                              one OS thread per simulated GPU with
-                              channel-based collectives)
+                  --executor serial|threaded|multiprocess (default serial;
+                              threaded runs one OS thread per simulated GPU
+                              with channel collectives; multiprocess joins a
+                              TCP launch via DASO_COORD_ADDR/DASO_NODE_ID)
+                  --transport channels|tcp  override the executor-implied
+                              transport (validation only)
                   --config <file.json>      JSON config (see config module)
-                  --set key=value           override (repeatable)
+                  --set key=value           override (repeatable; e.g.
+                              comm_timeout_ms=... bounds rendezvous waits)
                   --out <dir>               write run.csv / run.json
+    launch      spawn a multi-process run on this machine: one process per
+                node over the TCP loopback transport, this process is node 0
+                  --nodes N                 node processes (default: the
+                                            config's nodes)
+                  --workers-per-node M      worker threads per node (default:
+                                            the config's gpus_per_node)
+                  --bind host:port          coordinator listen address
+                                            (default 127.0.0.1:0 = free port)
+                  plus all train flags (--model, --strategy, --set, --out)
     sweep       run daso/horovod/asgd/local_only on one model, compare
                   (same flags as train)
     figures     regenerate a paper figure
@@ -128,7 +141,7 @@ COMMANDS:
 pub fn known_command(cmd: &str) -> bool {
     matches!(
         cmd,
-        "train" | "sweep" | "figures" | "project" | "selfcheck" | "info" | "help"
+        "train" | "launch" | "sweep" | "figures" | "project" | "selfcheck" | "info" | "help"
     )
 }
 

@@ -11,13 +11,22 @@
 //!   an [`crate::comm::AsyncGroup`] mailbox while training continues, and
 //!   the stale blend (Eq. 1) consumes whatever has actually arrived W
 //!   batches later.
+//! - **multiprocess** (`train_multiprocess` / `daso launch`): each OS
+//!   process hosts one node's workers on threads, and every communicator
+//!   that spans nodes rides the TCP transport
+//!   (`comm::transport::tcp`) — the paper's two-tier topology made
+//!   literal: fast in-process node-local sync, real sockets for the
+//!   global network.
 //!
-//! For blocking strategies (Horovod, DASO warm-up/cool-down, local-only)
-//! the two executors produce bit-identical parameters and loss records:
-//! reductions run on gathered buffers in rank order with the same kernels,
-//! and epoch bookkeeping replicates the serial summation order. The
-//! threaded path requires the native backend (`ModelRuntime` is only
-//! `Sync` without the `pjrt` feature, whose client handles are Rc-based).
+//! All three drivers share `rank_main` per worker; the threaded and
+//! multiprocess executors differ only in which [`Transport`] wires the
+//! communicators. For blocking strategies (Horovod, DASO
+//! warm-up/cool-down, local-only) every executor produces bit-identical
+//! parameters and loss records: reductions run on gathered buffers in
+//! rank order with the same kernels, and epoch bookkeeping replicates
+//! the serial summation order. The threaded paths require the native
+//! backend (`ModelRuntime` is only `Sync` without the `pjrt` feature,
+//! whose client handles are Rc-based).
 
 use anyhow::{bail, Result};
 
@@ -26,6 +35,8 @@ use anyhow::{bail, Result};
 pub enum ExecutorKind {
     Serial,
     Threaded,
+    /// One process per node over the TCP transport (`daso launch`).
+    Multiprocess,
 }
 
 impl ExecutorKind {
@@ -33,7 +44,10 @@ impl ExecutorKind {
         Ok(match s {
             "serial" => ExecutorKind::Serial,
             "threaded" | "threads" => ExecutorKind::Threaded,
-            other => bail!("unknown executor {other:?} (serial|threaded)"),
+            "multiprocess" | "multi-process" | "mp" => ExecutorKind::Multiprocess,
+            other => {
+                bail!("unknown executor {other:?} (valid values: serial, threaded, multiprocess)")
+            }
         })
     }
 
@@ -41,40 +55,77 @@ impl ExecutorKind {
         match self {
             ExecutorKind::Serial => "serial",
             ExecutorKind::Threaded => "threaded",
+            ExecutorKind::Multiprocess => "multiprocess",
         }
     }
 }
 
 #[cfg(not(feature = "pjrt"))]
-pub use threaded::train_threaded;
+pub use threaded::{train_coordinator, train_multiprocess, train_threaded, train_with_transport};
 
-/// The threaded executor needs a `Sync` runtime; the PJRT backend's
+/// The threaded executors need a `Sync` runtime; the PJRT backend's
 /// Rc-based client handles are not. With `--features pjrt`, fall back to
 /// `--executor serial`.
 #[cfg(feature = "pjrt")]
-pub fn train_threaded(
-    _rt: &crate::runtime::ModelRuntime,
-    _cfg: &crate::trainer::TrainConfig,
-    _train_data: &dyn crate::data::Dataset,
-    _val_data: &dyn crate::data::Dataset,
-    _factory: &crate::trainer::strategy::RankStrategyFactory,
-) -> Result<crate::trainer::RunReport> {
-    bail!(
-        "the threaded executor requires the thread-safe native backend; \
-         the PJRT client (Rc-based xla bindings) is not Sync — \
-         run with --executor serial or build without --features pjrt"
-    )
+mod pjrt_stubs {
+    use anyhow::{bail, Result};
+
+    fn no_threaded<T>() -> Result<T> {
+        bail!(
+            "the threaded/multiprocess executors require the thread-safe native backend; \
+             the PJRT client (Rc-based xla bindings) is not Sync — \
+             run with --executor serial or build without --features pjrt"
+        )
+    }
+
+    pub fn train_threaded(
+        _rt: &crate::runtime::ModelRuntime,
+        _cfg: &crate::trainer::TrainConfig,
+        _train_data: &dyn crate::data::Dataset,
+        _val_data: &dyn crate::data::Dataset,
+        _factory: &crate::trainer::strategy::RankStrategyFactory,
+    ) -> Result<crate::trainer::RunReport> {
+        no_threaded()
+    }
+
+    pub fn train_multiprocess(
+        _rt: &crate::runtime::ModelRuntime,
+        _cfg: &crate::trainer::TrainConfig,
+        _train_data: &dyn crate::data::Dataset,
+        _val_data: &dyn crate::data::Dataset,
+        _factory: &crate::trainer::strategy::RankStrategyFactory,
+        _role: &crate::comm::transport::tcp::TcpRole,
+    ) -> Result<Option<crate::trainer::RunReport>> {
+        no_threaded()
+    }
+
+    pub fn train_coordinator(
+        _rt: &crate::runtime::ModelRuntime,
+        _cfg: &crate::trainer::TrainConfig,
+        _train_data: &dyn crate::data::Dataset,
+        _val_data: &dyn crate::data::Dataset,
+        _factory: &crate::trainer::strategy::RankStrategyFactory,
+        _listener: std::net::TcpListener,
+    ) -> Result<crate::trainer::RunReport> {
+        no_threaded()
+    }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_stubs::{train_coordinator, train_multiprocess, train_threaded};
 
 #[cfg(not(feature = "pjrt"))]
 mod threaded {
-    use std::time::Instant;
+    use std::net::TcpListener;
+    use std::time::{Duration, Instant};
 
     use anyhow::{anyhow, ensure, Result};
 
-    use crate::cluster::{ClusterState, Worker};
-    use crate::comm::channels::{build_comms, GroupComm, Payload, RankComms};
+    use crate::cluster::Worker;
+    use crate::comm::channels::{GroupComm, Payload, RankComms};
     use crate::comm::naive_mean;
+    use crate::comm::transport::tcp::{TcpRole, TcpTransport};
+    use crate::comm::transport::{ChannelTransport, Transport, Wiring};
     use crate::data::shard::Shard;
     use crate::data::Dataset;
     use crate::optim::LrSchedule;
@@ -97,9 +148,9 @@ mod threaded {
         zero: Option<ZeroOut>,
     }
 
-    /// Train with one OS thread per simulated GPU. Mirrors
-    /// `trainer::train`'s configuration and report; see the module docs
-    /// for the determinism contract.
+    /// Train with one OS thread per simulated GPU, all in this process.
+    /// Mirrors `trainer::train`'s configuration and report; see the
+    /// module docs for the determinism contract.
     pub fn train_threaded(
         rt: &ModelRuntime,
         cfg: &TrainConfig,
@@ -107,6 +158,64 @@ mod threaded {
         val_data: &dyn Dataset,
         factory: &RankStrategyFactory,
     ) -> Result<RunReport> {
+        let mut transport =
+            ChannelTransport::new(cfg.topology(), Duration::from_millis(cfg.comm_timeout_ms));
+        let report = train_with_transport(rt, cfg, train_data, val_data, factory, &mut transport)?;
+        Ok(report.expect("the single-process transport hosts rank 0"))
+    }
+
+    /// Train this process's share of a multi-process launch, joining the
+    /// cluster through the env-described TCP role. Returns the report on
+    /// the coordinator (node 0) and `None` on peers.
+    pub fn train_multiprocess(
+        rt: &ModelRuntime,
+        cfg: &TrainConfig,
+        train_data: &dyn Dataset,
+        val_data: &dyn Dataset,
+        factory: &RankStrategyFactory,
+        role: &TcpRole,
+    ) -> Result<Option<RunReport>> {
+        let topo = cfg.topology();
+        ensure!(
+            role.node < topo.nodes,
+            "node id {} out of range for a {}-node launch",
+            role.node,
+            topo.nodes
+        );
+        let timeout = Duration::from_millis(cfg.comm_timeout_ms);
+        let mut transport = TcpTransport::from_role(topo, role, timeout)?;
+        train_with_transport(rt, cfg, train_data, val_data, factory, &mut transport)
+    }
+
+    /// Coordinator entry for `daso launch`: the launcher binds the
+    /// listener before spawning peers, then trains as node 0 itself.
+    pub fn train_coordinator(
+        rt: &ModelRuntime,
+        cfg: &TrainConfig,
+        train_data: &dyn Dataset,
+        val_data: &dyn Dataset,
+        factory: &RankStrategyFactory,
+        listener: TcpListener,
+    ) -> Result<RunReport> {
+        let timeout = Duration::from_millis(cfg.comm_timeout_ms);
+        let mut transport = TcpTransport::coordinator(cfg.topology(), listener, timeout);
+        let report = train_with_transport(rt, cfg, train_data, val_data, factory, &mut transport)?;
+        Ok(report.expect("the coordinator hosts rank 0"))
+    }
+
+    /// The shared driver: spawn one worker thread per rank hosted by
+    /// `transport`, then aggregate the run report across processes over
+    /// the transport's control group (an identity step for
+    /// single-process transports). Returns `Some(report)` iff this
+    /// process hosts rank 0.
+    pub fn train_with_transport(
+        rt: &ModelRuntime,
+        cfg: &TrainConfig,
+        train_data: &dyn Dataset,
+        val_data: &dyn Dataset,
+        factory: &RankStrategyFactory,
+        transport: &mut dyn Transport,
+    ) -> Result<Option<RunReport>> {
         let topo = cfg.topology();
         let world = topo.world();
         let batch = rt.spec.batch;
@@ -120,6 +229,7 @@ mod threaded {
             batch
         );
         let init = rt.init_params()?;
+        let n_params = init.len();
         let lr_proto = LrSchedule::new(
             cfg.base_lr,
             cfg.lr_scale,
@@ -129,12 +239,19 @@ mod threaded {
         );
 
         let wall_start = Instant::now();
-        let comms = build_comms(&topo);
+        let Wiring { rank_comms, control } = transport.connect()?;
+        let hosted = transport.hosted_ranks();
+        ensure!(
+            rank_comms.len() == hosted.len(),
+            "transport wired {} communicators for {} hosted ranks",
+            rank_comms.len(),
+            hosted.len()
+        );
         let results: Vec<Result<RankOutput>> = std::thread::scope(|s| {
-            let handles: Vec<_> = comms
+            let handles: Vec<_> = rank_comms
                 .into_iter()
-                .enumerate()
-                .map(|(rank, comm)| {
+                .zip(hosted.iter().copied())
+                .map(|(comm, rank)| {
                     let init = init.clone();
                     let lr_sched = lr_proto.clone();
                     s.spawn(move || {
@@ -155,21 +272,23 @@ mod threaded {
                 .collect();
             handles
                 .into_iter()
-                .enumerate()
-                .map(|(rank, h)| {
+                .zip(hosted.iter().copied())
+                .map(|(h, rank)| {
                     h.join().unwrap_or_else(|_| Err(anyhow!("worker thread {rank} panicked")))
                 })
                 .collect()
         });
 
-        let mut workers = Vec::with_capacity(world);
+        // local aggregation, in hosted-rank order: byte/wait counters
+        // are per-rank and add up; event counters are schedule-level and
+        // identical on every rank — take rank 0's
         let mut comm = CommStats::default();
         let mut strategy_name = "";
         let mut zero: Option<ZeroOut> = None;
-        for (rank, result) in results.into_iter().enumerate() {
+        let mut local_params: Vec<f32> = Vec::with_capacity(hosted.len() * n_params);
+        let mut local_max_clock = 0.0f64;
+        for (rank, result) in hosted.iter().copied().zip(results) {
             let out = result?;
-            // byte/wait counters are per-rank and add up; event counters
-            // are schedule-level and identical on every rank — take rank 0's
             comm.bytes_inter += out.stats.bytes_inter;
             comm.bytes_intra += out.stats.bytes_intra;
             comm.comm_wait_s += out.stats.comm_wait_s;
@@ -181,15 +300,65 @@ mod threaded {
                 strategy_name = out.name;
                 zero = out.zero;
             }
-            workers.push(out.worker);
+            local_max_clock = f64::max(local_max_clock, out.worker.clock);
+            local_params.extend_from_slice(&out.worker.params);
         }
-        let cluster = ClusterState::from_workers(topo, workers);
-        let zero = zero.expect("rank 0 must report");
+
+        // cross-process aggregation over the control group (node order;
+        // identity when the control group is solo): summed stat
+        // counters + cluster makespan, then the full parameter set
+        let stats = vec![comm.bytes_inter as f64, comm.bytes_intra as f64, comm.comm_wait_s];
+        let (stats_out, clocks) =
+            control.exchange(Payload::F64(stats), local_max_clock, |bufs| {
+                let mut total = vec![0.0f64; 3];
+                for b in bufs.iter() {
+                    for (t, v) in total.iter_mut().zip(b.as_f64()) {
+                        *t += *v;
+                    }
+                }
+                bufs[0] = Payload::F64(total);
+                for b in bufs.iter_mut().skip(1) {
+                    *b = Payload::Empty;
+                }
+                Ok(())
+            })?;
+        let (params_out, _) = control.exchange(Payload::F32(local_params), 0.0, |bufs| {
+            let mut all = Vec::new();
+            for b in bufs.iter() {
+                all.extend_from_slice(b.as_f32());
+            }
+            bufs[0] = Payload::F32(all);
+            for b in bufs.iter_mut().skip(1) {
+                *b = Payload::Empty;
+            }
+            Ok(())
+        })?;
+
+        let Some(zero) = zero else {
+            // peer process: rank 0 lives on the coordinator, which owns
+            // the report — this process's workers were folded in above
+            return Ok(None);
+        };
+        let totals = stats_out.into_f64();
+        comm.bytes_inter = totals[0] as u64;
+        comm.bytes_intra = totals[1] as u64;
+        comm.comm_wait_s = totals[2];
+        let makespan = clocks.iter().fold(0.0f64, |a, &b| a.max(b));
+        let all_params = params_out.into_f32();
+        ensure!(
+            all_params.len() == world * n_params,
+            "gathered {} parameter values, expected {} workers x {}",
+            all_params.len(),
+            world,
+            n_params
+        );
+        let final_params: Vec<Vec<f32>> =
+            all_params.chunks_exact(n_params).map(|c| c.to_vec()).collect();
         let final_metric = zero.final_metric;
         let best_metric =
             zero.records.iter().filter_map(|r| r.metric).fold(final_metric, f64::max);
 
-        Ok(RunReport {
+        Ok(Some(RunReport {
             strategy: strategy_name.to_string(),
             model: rt.spec.name.clone(),
             world,
@@ -197,11 +366,11 @@ mod threaded {
             final_metric,
             final_val_loss: zero.final_val_loss,
             best_metric,
-            total_sim_time_s: cluster.makespan(),
+            total_sim_time_s: makespan,
             total_wall_s: wall_start.elapsed().as_secs_f64(),
             comm,
-            final_params: cluster.workers.iter().map(|w| w.params.clone()).collect(),
-        })
+            final_params,
+        }))
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -381,12 +550,23 @@ mod tests {
         assert_eq!(ExecutorKind::parse("serial").unwrap(), ExecutorKind::Serial);
         assert_eq!(ExecutorKind::parse("threaded").unwrap(), ExecutorKind::Threaded);
         assert_eq!(ExecutorKind::parse("threads").unwrap(), ExecutorKind::Threaded);
+        assert_eq!(ExecutorKind::parse("multiprocess").unwrap(), ExecutorKind::Multiprocess);
+        assert_eq!(ExecutorKind::parse("multi-process").unwrap(), ExecutorKind::Multiprocess);
+        assert_eq!(ExecutorKind::parse("mp").unwrap(), ExecutorKind::Multiprocess);
         assert!(ExecutorKind::parse("gpu").is_err());
     }
 
     #[test]
+    fn executor_parse_error_enumerates_valid_values() {
+        let err = ExecutorKind::parse("gpu").unwrap_err().to_string();
+        for expect in ["serial", "threaded", "multiprocess", "gpu"] {
+            assert!(err.contains(expect), "error should mention {expect}: {err}");
+        }
+    }
+
+    #[test]
     fn executor_kind_roundtrip() {
-        for k in [ExecutorKind::Serial, ExecutorKind::Threaded] {
+        for k in [ExecutorKind::Serial, ExecutorKind::Threaded, ExecutorKind::Multiprocess] {
             assert_eq!(ExecutorKind::parse(k.name()).unwrap(), k);
         }
     }

@@ -1,0 +1,122 @@
+//! Self-spawning multi-process launcher (`daso launch`).
+//!
+//! The launcher process binds the coordinator listener *before* spawning
+//! anything, so the advertised `DASO_COORD_ADDR` can never race a peer's
+//! connect. It then re-executes its own binary once per peer node with
+//! the training flags forwarded (`daso train --executor multiprocess
+//! ...`) and the role injected through the environment
+//! (`DASO_COORD_ADDR`, `DASO_NODE_ID`), and finally trains as node 0
+//! itself through the already-bound listener. Peers print no report;
+//! the coordinator assembles the cluster-wide one over the control
+//! group.
+
+use std::net::{SocketAddr, TcpListener};
+use std::process::{Child, Command, Stdio};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::comm::transport::tcp::{ENV_COORD_ADDR, ENV_NODE_ID};
+
+/// A bound coordinator listener plus the topology of the launch.
+pub struct Launcher {
+    pub nodes: usize,
+    pub workers_per_node: usize,
+    listener: TcpListener,
+    addr: SocketAddr,
+}
+
+impl Launcher {
+    /// Bind the coordinator address (use port 0 to let the OS pick).
+    pub fn bind(bind: &str, nodes: usize, workers_per_node: usize) -> Result<Launcher> {
+        ensure!(nodes >= 1, "--nodes must be at least 1");
+        ensure!(workers_per_node >= 1, "--workers-per-node must be at least 1");
+        let listener = TcpListener::bind(bind)
+            .with_context(|| format!("binding launch coordinator on {bind}"))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        Ok(Launcher { nodes, workers_per_node, listener, addr })
+    }
+
+    /// The address peers must dial (resolved, so port 0 works).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Spawn the peer processes (node ids `1..nodes`) by re-executing
+    /// this binary with `train_args` and the env handshake. Stderr is
+    /// inherited so peer diagnostics interleave with the coordinator's.
+    pub fn spawn_peers(&self, train_args: &[String]) -> Result<Vec<(usize, Child)>> {
+        let exe = std::env::current_exe().context("locating the daso binary")?;
+        let mut children: Vec<(usize, Child)> = Vec::with_capacity(self.nodes.saturating_sub(1));
+        for node in 1..self.nodes {
+            let spawned = Command::new(&exe)
+                .args(train_args)
+                .env(ENV_COORD_ADDR, self.addr.to_string())
+                .env(ENV_NODE_ID, node.to_string())
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .with_context(|| format!("spawning peer process for node {node}"));
+            match spawned {
+                Ok(child) => children.push((node, child)),
+                Err(e) => {
+                    // dropping a Child does not terminate it: reap the
+                    // peers we already started before surfacing the error
+                    kill_peers(&mut children);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(children)
+    }
+
+    /// Hand the pre-bound listener to the coordinator transport.
+    pub fn into_listener(self) -> TcpListener {
+        self.listener
+    }
+}
+
+/// Reap peer processes; a non-zero exit from any of them fails the
+/// launch with the offending node named.
+pub fn wait_peers(children: Vec<(usize, Child)>) -> Result<()> {
+    let mut failures = Vec::new();
+    for (node, mut child) in children {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => failures.push(format!("node {node} exited with {status}")),
+            Err(e) => failures.push(format!("node {node} unreapable: {e}")),
+        }
+    }
+    if !failures.is_empty() {
+        bail!("peer process failure: {}", failures.join("; "));
+    }
+    Ok(())
+}
+
+/// Kill peer processes after a coordinator-side failure (best effort —
+/// a peer may already be gone).
+pub fn kill_peers(children: &mut [(usize, Child)]) {
+    for (_, child) in children.iter_mut() {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_resolves_ephemeral_port() {
+        let l = Launcher::bind("127.0.0.1:0", 2, 2).unwrap();
+        assert_ne!(l.addr().port(), 0);
+        assert_eq!(l.nodes, 2);
+        assert_eq!(l.workers_per_node, 2);
+    }
+
+    #[test]
+    fn bind_rejects_degenerate_shapes() {
+        assert!(Launcher::bind("127.0.0.1:0", 0, 1).is_err());
+        assert!(Launcher::bind("127.0.0.1:0", 1, 0).is_err());
+    }
+}

@@ -5,12 +5,21 @@
 //! (which buffers average when, how many bytes cross which tier) are
 //! identical to the paper's.
 //!
-//! Two executors drive the workers: the serial reference walk
-//! (`trainer::train`) and the thread-per-worker executor with
-//! channel-based collectives (`executor::train_threaded`).
+//! Three executors drive the workers: the serial reference walk
+//! (`trainer::train`), the thread-per-worker executor with channel-based
+//! collectives (`executor::train_threaded`), and the multi-process
+//! executor where each process hosts one node and the global tier rides
+//! the TCP transport (`executor::train_multiprocess`, spawned by
+//! `launch`).
 
 pub mod executor;
+pub mod launch;
 pub mod worker;
 
-pub use executor::{train_threaded, ExecutorKind};
+pub use executor::{
+    train_coordinator, train_multiprocess, train_threaded, ExecutorKind,
+};
 pub use worker::{ClusterState, Worker};
+
+#[cfg(not(feature = "pjrt"))]
+pub use executor::train_with_transport;

@@ -1,45 +1,50 @@
-//! Channel-based collectives for the threaded executor.
+//! Channel-based collectives for the threaded executor — and the
+//! process-local half of the multi-process TCP transport.
 //!
 //! Every logical communicator (the node-local network, one global group
 //! per local id, the whole world) is a [`GroupComm`]: a gather/scatter
-//! rendezvous over `std::sync::mpsc` channels. Member 0 acts as the
-//! leader; the others send their contribution (plus virtual clock) to the
-//! leader, which assembles the buffers **in member order**, applies the
-//! reduction, and scatters the per-member results back. Because the
-//! reduction runs on the gathered buffers in the same order and with the
-//! same kernels (`ring_allreduce_mean`, the Pallas-equivalent `avg`) as
-//! the serial executor, blocking collectives are bit-identical between
-//! `--executor serial` and `--executor threaded` regardless of thread
-//! scheduling.
+//! rendezvous. Member 0 acts as the leader; the others send their
+//! contribution (plus virtual clock) to the leader, which assembles the
+//! buffers **in member order**, applies the reduction, and scatters the
+//! per-member results back. Because the reduction runs on the gathered
+//! buffers in the same order and with the same kernels
+//! (`ring_allreduce_mean`, the Pallas-equivalent `avg`) as the serial
+//! executor, blocking collectives are bit-identical between `--executor
+//! serial`, `--executor threaded` and `--executor multiprocess`
+//! regardless of thread scheduling or which process a member lives in.
+//!
+//! The member↔leader hops are abstracted behind [`GatherSender`] /
+//! [`ScatterSender`] sinks: in-process members use `std::sync::mpsc`
+//! channels, members in peer processes use serialized frames on a TCP
+//! link (`comm::transport::tcp`). The leader-side rendezvous logic — and
+//! therefore the reduction order — is byte-for-byte the same either way.
 //!
 //! DASO's non-blocking global sync uses [`AsyncGroup`] instead: a
 //! mutex+condvar mailbox where the rotating group's members deposit
 //! parameter snapshots and pick up the completed sum W batches later —
 //! a real in-flight exchange, training continues while peers contribute.
+//! Remote members contribute/collect through sequence-numbered mailbox
+//! frames on the same TCP link.
 //!
 //! Rendezvous ordering is deadlock-free as long as all members of a group
 //! issue the same sequence of collectives on it (the lockstep schedule
 //! every strategy derives deterministically from batch counters); a
 //! member cannot race ahead because it blocks on the leader's scatter,
-//! and the leader only scatters after the full gather.
+//! and the leader only scatters after the full gather. Every wait is
+//! bounded by the communicator's timeout (`DASO_COMM_TIMEOUT_MS` /
+//! `train.comm_timeout_ms`, default 60 s), so a dead companion thread or
+//! peer process surfaces as an error instead of a hang.
 
+use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use super::topology::Topology;
-
-/// Bound on how long any rendezvous waits for its peers. A healthy
-/// collective round is bounded by one batch of compute (well under a
-/// minute even for artifact-scale models); if a companion worker thread
-/// dies mid-run, surviving members would otherwise block forever (the
-/// leader's gather only errors once *every* sender is dropped, and the
-/// async mailbox's condvar has no other wake-up). Kept shorter than the
-/// test watchdogs so the per-rank root-cause error surfaces first.
-const PEER_TIMEOUT: Duration = Duration::from_secs(60);
+use super::transport::default_comm_timeout;
 
 /// Collective payload: parameter/gradient buffers travel as f32, epoch
 /// bookkeeping (loss sums) as f64.
@@ -91,18 +96,34 @@ impl Payload {
 /// Error for a rendezvous whose counterpart died or stalled past the
 /// timeout.
 fn chan_err() -> anyhow::Error {
-    anyhow!("collective peer missing (companion worker thread died or stalled)")
+    anyhow!("collective peer missing (companion worker thread or peer process died or stalled)")
 }
 
-struct GatherMsg {
-    index: usize,
-    payload: Payload,
-    clock: f64,
+/// One member's contribution on its way to the group leader.
+pub(crate) struct GatherMsg {
+    pub(crate) index: usize,
+    pub(crate) payload: Payload,
+    pub(crate) clock: f64,
 }
 
-struct ScatterMsg {
-    payload: Payload,
-    clocks: Vec<f64>,
+/// The leader's reduced result for one member.
+pub(crate) struct ScatterMsg {
+    pub(crate) payload: Payload,
+    pub(crate) clocks: Vec<f64>,
+}
+
+/// Sink carrying a member's contribution to the leader: an in-process
+/// channel, or a serialized frame on a peer link (`transport::tcp`).
+pub(crate) type GatherSender = Box<dyn Fn(GatherMsg) -> Result<()> + Send>;
+/// Sink carrying the leader's scatter result back to one member.
+pub(crate) type ScatterSender = Box<dyn Fn(ScatterMsg) -> Result<()> + Send>;
+
+fn local_gather_tx(tx: Sender<GatherMsg>) -> GatherSender {
+    Box::new(move |m| tx.send(m).map_err(|_| chan_err()))
+}
+
+fn local_scatter_tx(tx: Sender<ScatterMsg>) -> ScatterSender {
+    Box::new(move |m| tx.send(m).map_err(|_| chan_err()))
 }
 
 enum Role {
@@ -110,10 +131,10 @@ enum Role {
     Solo,
     Leader {
         gather_rx: Receiver<GatherMsg>,
-        result_txs: Vec<Option<Sender<ScatterMsg>>>,
+        result_txs: Vec<Option<ScatterSender>>,
     },
     Member {
-        gather_tx: Sender<GatherMsg>,
+        gather_tx: GatherSender,
         result_rx: Receiver<ScatterMsg>,
     },
 }
@@ -122,35 +143,107 @@ enum Role {
 pub struct GroupComm {
     size: usize,
     index: usize,
+    timeout: Duration,
     role: Role,
 }
 
 impl GroupComm {
-    /// Build handles for a `size`-member group (member 0 is the leader).
+    /// Build handles for a `size`-member group (member 0 is the leader)
+    /// with the environment-default peer timeout.
     pub fn group(size: usize) -> Vec<GroupComm> {
+        Self::group_with_timeout(size, default_comm_timeout())
+    }
+
+    /// Build handles for a `size`-member group bounding every rendezvous
+    /// wait by `timeout`.
+    pub fn group_with_timeout(size: usize, timeout: Duration) -> Vec<GroupComm> {
         assert!(size >= 1);
         if size == 1 {
-            return vec![GroupComm { size: 1, index: 0, role: Role::Solo }];
+            return vec![GroupComm { size: 1, index: 0, timeout, role: Role::Solo }];
         }
         let (gather_tx, gather_rx) = channel::<GatherMsg>();
-        // the leader keeps its own result in place, so index 0 has no channel
-        let mut result_txs: Vec<Option<Sender<ScatterMsg>>> = vec![None];
+        // the leader keeps its own result in place, so index 0 has no sink
+        let mut result_txs: Vec<Option<ScatterSender>> = vec![None];
         let mut result_rxs: Vec<Receiver<ScatterMsg>> = Vec::with_capacity(size - 1);
         for _ in 1..size {
             let (tx, rx) = channel::<ScatterMsg>();
-            result_txs.push(Some(tx));
+            result_txs.push(Some(local_scatter_tx(tx)));
             result_rxs.push(rx);
         }
         let mut members = Vec::with_capacity(size);
-        members.push(GroupComm { size, index: 0, role: Role::Leader { gather_rx, result_txs } });
+        members.push(GroupComm {
+            size,
+            index: 0,
+            timeout,
+            role: Role::Leader { gather_rx, result_txs },
+        });
         for (i, result_rx) in result_rxs.into_iter().enumerate() {
             members.push(GroupComm {
                 size,
                 index: i + 1,
-                role: Role::Member { gather_tx: gather_tx.clone(), result_rx },
+                timeout,
+                role: Role::Member { gather_tx: local_gather_tx(gather_tx.clone()), result_rx },
             });
         }
         members
+    }
+
+    /// Leader-side wiring for a group whose members span processes.
+    /// `local` lists the member indices hosted in this process (must
+    /// start with 0 — the leader always lives in the coordinator);
+    /// `remote` maps every other member to the sink that reaches its
+    /// process. Returns the local handles (in `local` order) plus the
+    /// gather port the connection demux feeds remote contributions into.
+    pub(crate) fn assemble_spanning(
+        size: usize,
+        local: &[usize],
+        remote: BTreeMap<usize, ScatterSender>,
+        timeout: Duration,
+    ) -> (Vec<GroupComm>, Sender<GatherMsg>) {
+        assert_eq!(local.first(), Some(&0), "the group leader must be hosted locally");
+        assert_eq!(local.len() + remote.len(), size, "members must cover the group");
+        let (gather_tx, gather_rx) = channel::<GatherMsg>();
+        let mut result_txs: Vec<Option<ScatterSender>> = (0..size).map(|_| None).collect();
+        for (m, tx) in remote {
+            assert!(m > 0 && m < size && !local.contains(&m), "bad remote member {m}");
+            result_txs[m] = Some(tx);
+        }
+        let mut local_rxs = Vec::new();
+        for &m in &local[1..] {
+            let (tx, rx) = channel::<ScatterMsg>();
+            result_txs[m] = Some(local_scatter_tx(tx));
+            local_rxs.push((m, rx));
+        }
+        let mut members = Vec::with_capacity(local.len());
+        members.push(GroupComm {
+            size,
+            index: 0,
+            timeout,
+            role: Role::Leader { gather_rx, result_txs },
+        });
+        for (m, result_rx) in local_rxs {
+            members.push(GroupComm {
+                size,
+                index: m,
+                timeout,
+                role: Role::Member { gather_tx: local_gather_tx(gather_tx.clone()), result_rx },
+            });
+        }
+        (members, gather_tx)
+    }
+
+    /// A member of a spanning group hosted in a peer process:
+    /// contributions leave through `gather_tx` (the serialized link),
+    /// results arrive on `result_rx` (fed by the peer's demux reader).
+    pub(crate) fn remote_member(
+        size: usize,
+        index: usize,
+        gather_tx: GatherSender,
+        result_rx: Receiver<ScatterMsg>,
+        timeout: Duration,
+    ) -> GroupComm {
+        assert!(index > 0 && index < size, "remote member index out of range");
+        GroupComm { size, index, timeout, role: Role::Member { gather_tx, result_rx } }
     }
 
     pub fn size(&self) -> usize {
@@ -183,19 +276,35 @@ impl GroupComm {
                 Ok((payload, vec![clock]))
             }
             Role::Member { gather_tx, result_rx } => {
-                gather_tx
-                    .send(GatherMsg { index: self.index, payload, clock })
-                    .map_err(|_| chan_err())?;
-                let msg = result_rx.recv_timeout(PEER_TIMEOUT).map_err(|_| chan_err())?;
+                gather_tx(GatherMsg { index: self.index, payload, clock })?;
+                let msg = result_rx.recv_timeout(self.timeout).map_err(|_| chan_err())?;
                 Ok((msg.payload, msg.clocks))
             }
             Role::Leader { gather_rx, result_txs } => {
                 let mut bufs: Vec<Payload> = (0..self.size).map(|_| Payload::Empty).collect();
                 let mut clocks = vec![0.0f64; self.size];
+                // legit payloads can be Empty (broadcast receivers), so
+                // slot occupancy is tracked separately — a corrupt or
+                // mis-mapped index from a remote frame must error, not
+                // panic the leader or corrupt the reduction
+                let mut filled = vec![false; self.size];
                 bufs[self.index] = payload;
                 clocks[self.index] = clock;
+                filled[self.index] = true;
                 for _ in 0..self.size - 1 {
-                    let msg = gather_rx.recv_timeout(PEER_TIMEOUT).map_err(|_| chan_err())?;
+                    let msg = gather_rx.recv_timeout(self.timeout).map_err(|_| chan_err())?;
+                    ensure!(
+                        msg.index < self.size,
+                        "rendezvous contribution from out-of-range member {} (group size {})",
+                        msg.index,
+                        self.size
+                    );
+                    ensure!(
+                        !filled[msg.index],
+                        "duplicate rendezvous contribution from member {}",
+                        msg.index
+                    );
+                    filled[msg.index] = true;
                     bufs[msg.index] = msg.payload;
                     clocks[msg.index] = msg.clock;
                 }
@@ -203,8 +312,7 @@ impl GroupComm {
                 for (i, tx) in result_txs.iter().enumerate() {
                     if let Some(tx) = tx {
                         let payload = std::mem::take(&mut bufs[i]);
-                        let msg = ScatterMsg { payload, clocks: clocks.clone() };
-                        tx.send(msg).map_err(|_| chan_err())?;
+                        tx(ScatterMsg { payload, clocks: clocks.clone() })?;
                     }
                 }
                 let own = std::mem::take(&mut bufs[self.index]);
@@ -248,9 +356,122 @@ struct AsyncState {
     next_recv: Vec<u64>,
 }
 
+/// A completed round on its way to a remote member, as
+/// `(seq, snapshot sum, virtual finish time)`.
+pub(crate) type AsyncResultSender = Box<dyn Fn(u64, Arc<Vec<f32>>, f64) -> Result<()> + Send + Sync>;
+
+/// A remote member's contribution (member + per-member seq are assigned
+/// on the sending side and verified against the aggregator's counters).
+pub(crate) struct AsyncSendMsg {
+    pub(crate) member: usize,
+    pub(crate) seq: u64,
+    pub(crate) snapshot: Vec<f32>,
+    pub(crate) clock: f64,
+    pub(crate) wire_dt: f64,
+}
+
+/// Sink carrying a remote member's contribution to the aggregator.
+pub(crate) type AsyncSendSender = Box<dyn Fn(AsyncSendMsg) -> Result<()> + Send>;
+
+/// A completed round delivered to a remote member.
+pub(crate) struct AsyncResultMsg {
+    pub(crate) seq: u64,
+    pub(crate) sum: Arc<Vec<f32>>,
+    pub(crate) finish: f64,
+}
+
 struct AsyncShared {
     state: Mutex<AsyncState>,
     cv: Condvar,
+    /// result sinks for members hosted in peer processes; completed
+    /// rounds are pushed to them eagerly (they never collect locally)
+    remote: BTreeMap<usize, AsyncResultSender>,
+    /// how many members collect in this process (round garbage bound)
+    local_collectors: usize,
+    size: usize,
+}
+
+impl AsyncShared {
+    /// Record one member's snapshot for its next round; on the round's
+    /// completion form the sum (member order, matching the serial
+    /// executor's `sum_buffers`), push it to remote members and wake
+    /// local collectors. `expect_seq` cross-checks a sequence number
+    /// carried over the wire against this aggregator's counter.
+    fn deposit(
+        &self,
+        member: usize,
+        expect_seq: Option<u64>,
+        snapshot: Vec<f32>,
+        clock: f64,
+        wire_dt: f64,
+    ) -> Result<()> {
+        ensure!(
+            member < self.size,
+            "async contribution from out-of-range member {member} (group size {})",
+            self.size
+        );
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let seq = st.next_send[member];
+        if let Some(e) = expect_seq {
+            ensure!(
+                e == seq,
+                "async mailbox: out-of-order seq {e} from member {member} (expected {seq})"
+            );
+        }
+        st.next_send[member] += 1;
+        let mut done: Option<(Arc<Vec<f32>>, f64)> = None;
+        {
+            let round = st.rounds.entry(seq).or_insert_with(|| AsyncRound::new(self.size));
+            ensure!(round.slots[member].is_none(), "member {member} contributed twice to {seq}");
+            round.slots[member] = Some(snapshot);
+            round.clocks[member] = clock;
+            round.arrived += 1;
+            if round.arrived == self.size {
+                let len = round.slots[0].as_ref().map_or(0, |s| s.len());
+                let mut sum = vec![0.0f32; len];
+                for slot in &mut round.slots {
+                    let buf = slot.take().expect("all members arrived");
+                    for (o, v) in sum.iter_mut().zip(buf) {
+                        *o += v;
+                    }
+                }
+                let start = round.clocks.iter().fold(0.0f64, |a, &b| a.max(b));
+                let sum = Arc::new(sum);
+                round.ready = Some((sum.clone(), start + wire_dt));
+                done = Some((sum, start + wire_dt));
+            }
+        }
+        if done.is_some() && self.local_collectors == 0 {
+            st.rounds.remove(&seq);
+        }
+        drop(guard);
+        if let Some((sum, finish)) = done {
+            self.cv.notify_all();
+            for (m, send) in &self.remote {
+                if let Err(e) = send(seq, sum.clone(), finish) {
+                    eprintln!("warning: async result for round {seq} undeliverable to member {m}: {e:#}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+enum AsyncInner {
+    /// In-process aggregation (threaded executor, and the coordinator
+    /// side of a spanning group).
+    Shared(Arc<AsyncShared>),
+    /// A member hosted in a peer process: contributions leave as frames,
+    /// results arrive on a channel fed by the peer's demux reader.
+    Remote {
+        send: AsyncSendSender,
+        result_rx: Receiver<AsyncResultMsg>,
+        /// results that arrived ahead of the seq this member collects next
+        pending: RefCell<BTreeMap<u64, AsyncResultMsg>>,
+        next_send: Cell<u64>,
+        next_recv: Cell<u64>,
+    },
 }
 
 /// Mailbox for DASO's non-blocking global synchronization: each member of
@@ -262,12 +483,49 @@ struct AsyncShared {
 pub struct AsyncGroup {
     size: usize,
     index: usize,
+    timeout: Duration,
+    inner: AsyncInner,
+}
+
+/// Demux-side handle routing remote contributions into the coordinator's
+/// aggregation state.
+#[derive(Clone)]
+pub(crate) struct AsyncInjector {
     shared: Arc<AsyncShared>,
 }
 
+impl AsyncInjector {
+    pub(crate) fn inject(&self, msg: AsyncSendMsg) -> Result<()> {
+        self.shared.deposit(msg.member, Some(msg.seq), msg.snapshot, msg.clock, msg.wire_dt)
+    }
+}
+
 impl AsyncGroup {
+    /// In-process mailbox group with the environment-default timeout.
     pub fn group(size: usize) -> Vec<AsyncGroup> {
+        Self::group_with_timeout(size, default_comm_timeout())
+    }
+
+    /// In-process mailbox group bounding every `collect` by `timeout`.
+    pub fn group_with_timeout(size: usize, timeout: Duration) -> Vec<AsyncGroup> {
+        let (members, _) =
+            Self::assemble_spanning(size, &(0..size).collect::<Vec<_>>(), BTreeMap::new(), timeout);
+        members
+    }
+
+    /// Coordinator-side wiring for a mailbox group spanning processes:
+    /// `local` members aggregate in-process, `remote` members receive
+    /// completed rounds through their sinks. Returns the local handles
+    /// (in `local` order) plus the injector the demux feeds remote
+    /// contributions into.
+    pub(crate) fn assemble_spanning(
+        size: usize,
+        local: &[usize],
+        remote: BTreeMap<usize, AsyncResultSender>,
+        timeout: Duration,
+    ) -> (Vec<AsyncGroup>, AsyncInjector) {
         assert!(size >= 1);
+        assert_eq!(local.len() + remote.len(), size, "members must cover the group");
         let shared = Arc::new(AsyncShared {
             state: Mutex::new(AsyncState {
                 rounds: BTreeMap::new(),
@@ -275,65 +533,119 @@ impl AsyncGroup {
                 next_recv: vec![0; size],
             }),
             cv: Condvar::new(),
+            remote,
+            local_collectors: local.len(),
+            size,
         });
-        (0..size)
-            .map(|index| AsyncGroup { size, index, shared: shared.clone() })
-            .collect()
+        let members = local
+            .iter()
+            .map(|&index| AsyncGroup {
+                size,
+                index,
+                timeout,
+                inner: AsyncInner::Shared(shared.clone()),
+            })
+            .collect();
+        (members, AsyncInjector { shared })
+    }
+
+    /// A mailbox member hosted in a peer process.
+    pub(crate) fn remote_member(
+        size: usize,
+        index: usize,
+        send: AsyncSendSender,
+        result_rx: Receiver<AsyncResultMsg>,
+        timeout: Duration,
+    ) -> AsyncGroup {
+        AsyncGroup {
+            size,
+            index,
+            timeout,
+            inner: AsyncInner::Remote {
+                send,
+                result_rx,
+                pending: RefCell::new(BTreeMap::new()),
+                next_send: Cell::new(0),
+                next_recv: Cell::new(0),
+            },
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
     }
 
     /// Deposit this member's snapshot for its next round. `wire_dt` is
     /// the modeled allreduce time; when the last member arrives the sum
     /// is formed (f32, member order — matching the serial executor's
     /// `sum_buffers`) and the round's virtual finish time becomes
-    /// `max(member clocks) + wire_dt`.
-    pub fn contribute(&self, snapshot: Vec<f32>, clock: f64, wire_dt: f64) {
-        let mut st = self.shared.state.lock().unwrap();
-        let seq = st.next_send[self.index];
-        st.next_send[self.index] += 1;
-        let size = self.size;
-        let round = st.rounds.entry(seq).or_insert_with(|| AsyncRound::new(size));
-        round.slots[self.index] = Some(snapshot);
-        round.clocks[self.index] = clock;
-        round.arrived += 1;
-        if round.arrived == size {
-            let len = round.slots[0].as_ref().map_or(0, |s| s.len());
-            let mut sum = vec![0.0f32; len];
-            for slot in &mut round.slots {
-                let buf = slot.take().expect("all members arrived");
-                for (o, v) in sum.iter_mut().zip(buf) {
-                    *o += v;
-                }
+    /// `max(member clocks) + wire_dt`. Errors surface an unreachable
+    /// aggregator (dead coordinator process).
+    pub fn contribute(&self, snapshot: Vec<f32>, clock: f64, wire_dt: f64) -> Result<()> {
+        match &self.inner {
+            AsyncInner::Shared(shared) => {
+                shared.deposit(self.index, None, snapshot, clock, wire_dt)
             }
-            let start = round.clocks.iter().fold(0.0f64, |a, &b| a.max(b));
-            round.ready = Some((Arc::new(sum), start + wire_dt));
-            self.shared.cv.notify_all();
+            AsyncInner::Remote { send, next_send, .. } => {
+                let seq = next_send.get();
+                next_send.set(seq + 1);
+                send(AsyncSendMsg { member: self.index, seq, snapshot, clock, wire_dt })
+            }
         }
     }
 
     /// Pick up this member's next completed round, blocking until every
-    /// peer has contributed (bounded by [`PEER_TIMEOUT`]). Returns the
-    /// snapshot sum and the virtual time at which the exchanged data is
-    /// fully received.
+    /// peer has contributed (bounded by the communicator timeout).
+    /// Returns the snapshot sum and the virtual time at which the
+    /// exchanged data is fully received.
     pub fn collect(&self) -> Result<(Arc<Vec<f32>>, f64)> {
-        let mut st = self.shared.state.lock().unwrap();
-        let seq = st.next_recv[self.index];
-        st.next_recv[self.index] += 1;
-        let deadline = Instant::now() + PEER_TIMEOUT;
-        loop {
-            if let Some(round) = st.rounds.get_mut(&seq) {
-                if let Some((sum, finish)) = round.ready.clone() {
-                    round.collected += 1;
-                    if round.collected == self.size {
-                        st.rounds.remove(&seq);
+        match &self.inner {
+            AsyncInner::Shared(shared) => {
+                let mut st = shared.state.lock().unwrap();
+                let seq = st.next_recv[self.index];
+                st.next_recv[self.index] += 1;
+                let deadline = Instant::now() + self.timeout;
+                loop {
+                    if let Some(round) = st.rounds.get_mut(&seq) {
+                        if let Some((sum, finish)) = round.ready.clone() {
+                            round.collected += 1;
+                            if round.collected == shared.local_collectors {
+                                st.rounds.remove(&seq);
+                            }
+                            return Ok((sum, finish));
+                        }
                     }
-                    return Ok((sum, finish));
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Err(chan_err());
+                    }
+                    st = shared.cv.wait_timeout(st, deadline - now).unwrap().0;
                 }
             }
-            let now = Instant::now();
-            if now >= deadline {
-                return Err(chan_err());
+            AsyncInner::Remote { result_rx, pending, next_recv, .. } => {
+                let seq = next_recv.get();
+                next_recv.set(seq + 1);
+                if let Some(msg) = pending.borrow_mut().remove(&seq) {
+                    return Ok((msg.sum, msg.finish));
+                }
+                let deadline = Instant::now() + self.timeout;
+                loop {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Err(chan_err());
+                    }
+                    match result_rx.recv_timeout(deadline - now) {
+                        Ok(msg) if msg.seq == seq => return Ok((msg.sum, msg.finish)),
+                        // results can overtake each other across rounds
+                        // when the aggregator completes several rounds
+                        // back-to-back; park the early ones
+                        Ok(msg) => {
+                            pending.borrow_mut().insert(msg.seq, msg);
+                        }
+                        Err(_) => return Err(chan_err()),
+                    }
+                }
             }
-            st = self.shared.cv.wait_timeout(st, deadline - now).unwrap().0;
         }
     }
 }
@@ -351,12 +663,13 @@ pub struct RankComms {
     pub global_async: AsyncGroup,
 }
 
-/// Build the two-tier communicator set for every rank of `topo`.
-pub fn build_comms(topo: &Topology) -> Vec<RankComms> {
-    let world = GroupComm::group(topo.world());
+/// Build the two-tier communicator set for every rank of `topo`, all in
+/// this process (the `channels` transport).
+pub fn build_comms(topo: &Topology, timeout: Duration) -> Vec<RankComms> {
+    let world = GroupComm::group_with_timeout(topo.world(), timeout);
     let mut nodes: Vec<Option<GroupComm>> = (0..topo.world()).map(|_| None).collect();
     for node in 0..topo.nodes {
-        let handles = GroupComm::group(topo.gpus_per_node);
+        let handles = GroupComm::group_with_timeout(topo.gpus_per_node, timeout);
         for (handle, r) in handles.into_iter().zip(topo.node_ranks(node)) {
             nodes[r] = Some(handle);
         }
@@ -364,8 +677,8 @@ pub fn build_comms(topo: &Topology) -> Vec<RankComms> {
     let mut globals: Vec<Option<(GroupComm, AsyncGroup)>> =
         (0..topo.world()).map(|_| None).collect();
     for g in 0..topo.n_groups() {
-        let handles = GroupComm::group(topo.nodes);
-        let asyncs = AsyncGroup::group(topo.nodes);
+        let handles = GroupComm::group_with_timeout(topo.nodes, timeout);
+        let asyncs = AsyncGroup::group_with_timeout(topo.nodes, timeout);
         for ((handle, mailbox), r) in handles.into_iter().zip(asyncs).zip(topo.group_members(g)) {
             globals[r] = Some((handle, mailbox));
         }
@@ -472,6 +785,27 @@ mod tests {
     }
 
     #[test]
+    fn member_times_out_when_leader_stalls() {
+        // leader exists but never joins the rendezvous: the member's
+        // bounded wait must surface an error, not hang
+        let mut handles = GroupComm::group_with_timeout(2, Duration::from_millis(50));
+        let member = handles.pop().unwrap();
+        let _leader = handles.pop().unwrap(); // kept alive, never exchanging
+        let err = member.exchange(Payload::F32(vec![1.0]), 0.0, |_| Ok(())).unwrap_err();
+        assert!(err.to_string().contains("collective peer missing"), "{err:#}");
+    }
+
+    #[test]
+    fn leader_errors_fast_when_member_dropped() {
+        let mut handles = GroupComm::group_with_timeout(2, Duration::from_millis(50));
+        let member = handles.pop().unwrap();
+        let leader = handles.pop().unwrap();
+        drop(member); // companion died before contributing
+        let err = leader.exchange(Payload::F32(vec![1.0]), 0.0, |_| Ok(())).unwrap_err();
+        assert!(err.to_string().contains("collective peer missing"), "{err:#}");
+    }
+
+    #[test]
     fn async_group_sums_in_member_order() {
         let n = 3;
         let mailboxes = AsyncGroup::group(n);
@@ -481,7 +815,7 @@ mod tests {
                 .enumerate()
                 .map(|(i, mb)| {
                     s.spawn(move || {
-                        mb.contribute(vec![i as f32, 1.0], i as f64, 0.25);
+                        mb.contribute(vec![i as f32, 1.0], i as f64, 0.25).unwrap();
                         mb.collect().unwrap()
                     })
                 })
@@ -505,8 +839,8 @@ mod tests {
                 .map(|(i, mb)| {
                     s.spawn(move || {
                         // send two rounds back-to-back before collecting
-                        mb.contribute(vec![1.0 + i as f32], 0.0, 0.0);
-                        mb.contribute(vec![10.0 + i as f32], 0.0, 0.0);
+                        mb.contribute(vec![1.0 + i as f32], 0.0, 0.0).unwrap();
+                        mb.contribute(vec![10.0 + i as f32], 0.0, 0.0).unwrap();
                         let (a, _) = mb.collect().unwrap();
                         let (b, _) = mb.collect().unwrap();
                         (a[0], b[0])
@@ -522,9 +856,86 @@ mod tests {
     }
 
     #[test]
+    fn async_out_of_order_contributions_resolve_by_seq() {
+        // member 2 races two rounds ahead before members 0/1 send their
+        // first snapshot — rounds must still pair by sequence number,
+        // never by arrival order (contribute never blocks, so a single
+        // thread can drive the interleaving deterministically)
+        let g = AsyncGroup::group(3);
+        g[2].contribute(vec![20.0], 2.0, 0.5).unwrap(); // seq 0
+        g[2].contribute(vec![21.0], 3.0, 0.5).unwrap(); // seq 1
+        g[0].contribute(vec![0.0], 0.0, 0.5).unwrap(); // seq 0
+        g[1].contribute(vec![10.0], 1.0, 0.5).unwrap(); // seq 0 -> round 0 done
+        let (sum0, finish0) = g[2].collect().unwrap();
+        assert_eq!(*sum0, vec![30.0]);
+        assert_eq!(finish0, 2.5); // max(0,1,2) + 0.5
+        g[0].contribute(vec![1.0], 4.0, 0.5).unwrap(); // seq 1
+        g[1].contribute(vec![11.0], 5.0, 0.5).unwrap(); // seq 1 -> round 1 done
+        for mb in &g[..2] {
+            let (sum, finish) = mb.collect().unwrap();
+            assert_eq!(*sum, vec![30.0]);
+            assert_eq!(finish, 2.5);
+        }
+        for mb in &g {
+            let (sum, finish) = mb.collect().unwrap();
+            assert_eq!(*sum, vec![32.0], "round 1 sum");
+            assert_eq!(finish, 5.5); // max(3,4,5) + 0.5
+        }
+    }
+
+    #[test]
+    fn async_collect_survives_wait_change_midflight() {
+        // models the cycler changing W between send and receive: one
+        // member drains eagerly (short W), the other hoards three rounds
+        // and collects late (long W) — per-round sums must be identical
+        let rounds = 3usize;
+        let mailboxes = AsyncGroup::group(2);
+        let outs = std::thread::scope(|s| {
+            let joins: Vec<_> = mailboxes
+                .into_iter()
+                .enumerate()
+                .map(|(i, mb)| {
+                    s.spawn(move || {
+                        let mut got = Vec::new();
+                        if i == 0 {
+                            for r in 0..rounds {
+                                mb.contribute(vec![r as f32], 0.0, 0.0).unwrap();
+                                got.push(mb.collect().unwrap().0[0]);
+                            }
+                        } else {
+                            for r in 0..rounds {
+                                mb.contribute(vec![10.0 * r as f32], 0.0, 0.0).unwrap();
+                            }
+                            for _ in 0..rounds {
+                                got.push(mb.collect().unwrap().0[0]);
+                            }
+                        }
+                        got
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect::<Vec<_>>()
+        });
+        for out in outs {
+            assert_eq!(out, vec![0.0, 11.0, 22.0]);
+        }
+    }
+
+    #[test]
+    fn async_sender_dropped_before_collect_times_out() {
+        let mut g = AsyncGroup::group_with_timeout(2, Duration::from_millis(50));
+        let dead = g.pop().unwrap();
+        let live = g.pop().unwrap();
+        drop(dead); // peer dies without ever contributing
+        live.contribute(vec![1.0], 0.0, 0.0).unwrap();
+        let err = live.collect().unwrap_err();
+        assert!(err.to_string().contains("collective peer missing"), "{err:#}");
+    }
+
+    #[test]
     fn build_comms_assigns_consistent_indices() {
         let topo = Topology::new(3, 4);
-        let comms = build_comms(&topo);
+        let comms = build_comms(&topo, Duration::from_secs(60));
         assert_eq!(comms.len(), 12);
         for (r, c) in comms.iter().enumerate() {
             let rank = topo.rank_of(r);

@@ -1,16 +1,22 @@
 //! Communication substrate: hierarchical topology + groups (paper Fig 1),
 //! a two-tier fabric model, real-buffer collectives (the NCCL/MPI
 //! stand-in), channel-based rendezvous communicators for the threaded
-//! executor, and the alpha-beta cost model used for clock accounting and
-//! the strong-scaling projector.
+//! executor, the pluggable transport layer (in-process channels or
+//! multi-process TCP), and the alpha-beta cost model used for clock
+//! accounting and the strong-scaling projector.
 
 pub mod channels;
 pub mod collectives;
 pub mod cost;
 pub mod link;
 pub mod topology;
+pub mod transport;
 
 pub use channels::{build_comms, AsyncGroup, GroupComm, Payload, RankComms};
 pub use collectives::{broadcast, naive_mean, ring_allreduce_mean, sum_buffers, Wire};
 pub use link::{Fabric, Link};
 pub use topology::{GroupRotation, Rank, Topology};
+pub use transport::{
+    default_comm_timeout, default_comm_timeout_ms, ChannelTransport, Transport, TransportKind,
+    Wiring,
+};

@@ -1,0 +1,172 @@
+//! Transport abstraction for the rendezvous collectives.
+//!
+//! A [`Transport`] wires up the two-tier communicator set
+//! ([`RankComms`]) for the worker ranks hosted in this process, plus a
+//! process-level control group used for report aggregation. Two
+//! backends:
+//!
+//! - [`ChannelTransport`] — the whole cluster lives in one process; all
+//!   communicators are `std::sync::mpsc` channels (`comm::channels`).
+//!   This is what `--executor threaded` uses.
+//! - [`tcp::TcpTransport`] — each process hosts one node's workers on
+//!   threads; the global tier crosses process boundaries as
+//!   length-prefixed binary frames over TCP ([`wire`]). This is what
+//!   `--executor multiprocess` and `daso launch` use.
+//!
+//! The leader-side rendezvous logic is shared (`comm::channels`), so the
+//! reduction order — and therefore bit-identity with the serial executor
+//! for blocking strategies — is independent of the transport.
+
+pub mod tcp;
+pub mod wire;
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::channels::{build_comms, GroupComm, RankComms};
+use super::topology::Topology;
+
+/// Default bound on rendezvous/mailbox waits when the config does not
+/// set one: `DASO_COMM_TIMEOUT_MS` in the environment, else 60 s.
+pub fn default_comm_timeout_ms() -> u64 {
+    std::env::var("DASO_COMM_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(60_000)
+        .max(1)
+}
+
+/// [`default_comm_timeout_ms`] as a `Duration`.
+pub fn default_comm_timeout() -> Duration {
+    Duration::from_millis(default_comm_timeout_ms())
+}
+
+/// Which transport carries the rendezvous collectives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process mpsc channels (single-process executors).
+    Channels,
+    /// Length-prefixed binary frames over TCP sockets (multi-process).
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        Ok(match s {
+            "channels" | "channel" | "inproc" => TransportKind::Channels,
+            "tcp" | "socket" => TransportKind::Tcp,
+            other => bail!("unknown transport {other:?} (valid values: channels, tcp)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Channels => "channels",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// A connected communication fabric for one process: communicator
+/// handles for every rank this process hosts, plus the process-level
+/// control group (member index = node id; solo for single-process
+/// transports) used to assemble the run report across processes.
+pub struct Wiring {
+    /// communicators for [`Transport::hosted_ranks`], in the same order
+    pub rank_comms: Vec<RankComms>,
+    /// one member handle per process, leader = the coordinator
+    pub control: GroupComm,
+}
+
+/// How worker ranks reach each other: the trait the cluster executors
+/// drive, with the in-process channel backend and the TCP backend behind
+/// it. `connect` performs whatever handshake the backend needs and may
+/// only be called once.
+pub trait Transport {
+    fn kind(&self) -> TransportKind;
+
+    /// This process's node id (0 = the coordinator).
+    fn node(&self) -> usize;
+
+    /// Global ranks whose workers run in this process, ascending.
+    fn hosted_ranks(&self) -> Vec<usize>;
+
+    /// Establish the fabric for the hosted ranks.
+    fn connect(&mut self) -> Result<Wiring>;
+}
+
+/// Single-process backend: every rank lives here, all communicators are
+/// in-process channels, the control group is solo.
+pub struct ChannelTransport {
+    topo: Topology,
+    timeout: Duration,
+}
+
+impl ChannelTransport {
+    pub fn new(topo: Topology, timeout: Duration) -> ChannelTransport {
+        ChannelTransport { topo, timeout }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Channels
+    }
+
+    fn node(&self) -> usize {
+        0
+    }
+
+    fn hosted_ranks(&self) -> Vec<usize> {
+        self.topo.all_ranks()
+    }
+
+    fn connect(&mut self) -> Result<Wiring> {
+        let rank_comms = build_comms(&self.topo, self.timeout);
+        let control = GroupComm::group_with_timeout(1, self.timeout)
+            .pop()
+            .expect("solo control group");
+        Ok(Wiring { rank_comms, control })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_parses_and_roundtrips() {
+        for k in [TransportKind::Channels, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(k.name()).unwrap(), k);
+        }
+        assert_eq!(TransportKind::parse("inproc").unwrap(), TransportKind::Channels);
+        assert_eq!(TransportKind::parse("socket").unwrap(), TransportKind::Tcp);
+    }
+
+    #[test]
+    fn transport_parse_error_enumerates_valid_values() {
+        let err = TransportKind::parse("rdma").unwrap_err().to_string();
+        assert!(err.contains("channels"), "{err}");
+        assert!(err.contains("tcp"), "{err}");
+        assert!(err.contains("rdma"), "{err}");
+    }
+
+    #[test]
+    fn channel_transport_hosts_the_whole_world() {
+        let topo = Topology::new(2, 3);
+        let mut t = ChannelTransport::new(topo, Duration::from_secs(5));
+        assert_eq!(t.kind(), TransportKind::Channels);
+        assert_eq!(t.node(), 0);
+        assert_eq!(t.hosted_ranks(), (0..6).collect::<Vec<_>>());
+        let fabric = t.connect().unwrap();
+        assert_eq!(fabric.rank_comms.len(), 6);
+        assert_eq!(fabric.control.size(), 1);
+    }
+
+    #[test]
+    fn default_timeout_is_positive() {
+        assert!(default_comm_timeout_ms() >= 1);
+        assert!(default_comm_timeout() >= Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,764 @@
+//! Multi-process TCP backend: each process hosts one node's workers;
+//! the global tier crosses process boundaries as [`wire`] frames.
+//!
+//! Topology-to-socket mapping (a literal rendering of the paper's
+//! two-tier network): node-local communicators stay in-process
+//! (`comm::channels`), while every communicator that spans nodes — the
+//! world group, the per-local-id global groups, their non-blocking
+//! mailboxes and the report-aggregation control group — routes through
+//! the **coordinator** (node 0), which hosts every spanning group's
+//! leader. Peers connect to `DASO_COORD_ADDR` in a star; one demux
+//! thread per connection dispatches incoming frames to the right
+//! communicator by a deterministic comm id, so no id negotiation is
+//! needed beyond the HELLO/WELCOME topology check.
+//!
+//! Because member 0 of every spanning group (rank 0 for the world, node
+//! 0 for global groups) lives on the coordinator, the leader-side
+//! gather/reduce/scatter logic — and hence the reduction order — is the
+//! shared `comm::channels` code. Blocking strategies therefore stay
+//! bit-identical to `--executor serial`/`threaded` across processes.
+//!
+//! Failure semantics: every rendezvous wait is bounded by the
+//! communicator timeout. A peer that dies mid-run surfaces as a
+//! "collective peer missing" error on whoever waits for it (its demux
+//! reader sees EOF and exits; pending receivers disconnect or time
+//! out) — never as a hang. Handshake problems (wrong protocol version,
+//! mismatched topology, duplicate node ids) fail the launch outright.
+
+use std::collections::BTreeMap;
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::comm::channels::{
+    AsyncGroup, AsyncInjector, AsyncResultMsg, AsyncResultSender, AsyncSendMsg, AsyncSendSender,
+    GatherMsg, GatherSender, GroupComm, RankComms, ScatterMsg, ScatterSender,
+};
+use crate::comm::topology::Topology;
+
+use super::wire::{read_frame, write_async_sum, write_frame, Frame, PROTOCOL_VERSION};
+use super::{Transport, TransportKind, Wiring};
+
+/// Environment variable carrying the coordinator's listen address.
+pub const ENV_COORD_ADDR: &str = "DASO_COORD_ADDR";
+/// Environment variable carrying this process's node id (0 = coordinator).
+pub const ENV_NODE_ID: &str = "DASO_NODE_ID";
+
+/// Deterministic comm-id scheme shared by both sides of every link.
+fn world_comm_id() -> u32 {
+    0
+}
+
+fn global_comm_id(g: usize) -> u32 {
+    1 + g as u32
+}
+
+fn async_comm_id(g: usize, gpn: usize) -> u32 {
+    1 + (gpn + g) as u32
+}
+
+fn control_comm_id(gpn: usize) -> u32 {
+    1 + 2 * gpn as u32
+}
+
+/// This process's place in a multi-process launch, from the
+/// `DASO_COORD_ADDR` / `DASO_NODE_ID` handshake environment.
+#[derive(Debug, Clone)]
+pub struct TcpRole {
+    pub node: usize,
+    pub addr: String,
+}
+
+impl TcpRole {
+    pub fn from_env() -> Result<TcpRole> {
+        let addr = std::env::var(ENV_COORD_ADDR).map_err(|_| {
+            anyhow!(
+                "{ENV_COORD_ADDR} must be set for --executor multiprocess \
+                 (use `daso launch` to spawn and wire the whole job)"
+            )
+        })?;
+        let node = match std::env::var(ENV_NODE_ID) {
+            Ok(v) => v
+                .parse::<usize>()
+                .map_err(|_| anyhow!("{ENV_NODE_ID} must be an integer, got {v:?}"))?,
+            Err(_) => 0,
+        };
+        Ok(TcpRole { node, addr })
+    }
+}
+
+/// Shared write half of one peer connection; frames are written whole
+/// under the lock so concurrent member threads cannot interleave bytes.
+#[derive(Clone)]
+struct PeerLink {
+    writer: Arc<Mutex<TcpStream>>,
+}
+
+impl PeerLink {
+    fn new(stream: TcpStream) -> PeerLink {
+        PeerLink { writer: Arc::new(Mutex::new(stream)) }
+    }
+
+    fn send(&self, frame: &Frame) -> Result<()> {
+        let mut w = self.writer.lock().unwrap();
+        write_frame(&mut *w, frame)
+    }
+
+    fn send_async_sum(&self, comm: u32, member: u32, seq: u64, finish: f64, sum: &[f32]) -> Result<()> {
+        let mut w = self.writer.lock().unwrap();
+        write_async_sum(&mut *w, comm, member, seq, finish, sum)
+    }
+}
+
+enum Mode {
+    Coordinator { listener: TcpListener },
+    Peer { addr: String },
+    Connected,
+}
+
+/// TCP transport for one process of a `nodes`-process launch. The
+/// coordinator (node 0) owns the listener and hosts every spanning
+/// group's leader; peers dial in and host plain members.
+pub struct TcpTransport {
+    topo: Topology,
+    node: usize,
+    timeout: Duration,
+    mode: Mode,
+}
+
+impl TcpTransport {
+    /// Node-0 side, around an already-bound listener (the launcher binds
+    /// before spawning peers so the advertised address is never racy).
+    pub fn coordinator(topo: Topology, listener: TcpListener, timeout: Duration) -> TcpTransport {
+        TcpTransport { topo, node: 0, timeout, mode: Mode::Coordinator { listener } }
+    }
+
+    /// Peer side for `node` (1-based among nodes), dialing `addr` with
+    /// retries until the coordinator is up or the timeout expires.
+    pub fn peer(topo: Topology, node: usize, addr: &str, timeout: Duration) -> Result<TcpTransport> {
+        ensure!(
+            node >= 1 && node < topo.nodes,
+            "peer node id {node} out of range 1..{}",
+            topo.nodes
+        );
+        Ok(TcpTransport { topo, node, timeout, mode: Mode::Peer { addr: addr.to_string() } })
+    }
+
+    /// Build from the env handshake: node 0 binds the advertised
+    /// address, everyone else dials it.
+    pub fn from_role(topo: Topology, role: &TcpRole, timeout: Duration) -> Result<TcpTransport> {
+        if role.node == 0 {
+            let listener = TcpListener::bind(&role.addr)
+                .with_context(|| format!("binding coordinator listener on {}", role.addr))?;
+            Ok(TcpTransport::coordinator(topo, listener, timeout))
+        } else {
+            TcpTransport::peer(topo, role.node, &role.addr, timeout)
+        }
+    }
+
+    fn connect_coordinator(&self, listener: TcpListener) -> Result<Wiring> {
+        let topo = self.topo;
+        let (nodes, gpn, world) = (topo.nodes, topo.gpus_per_node, topo.world());
+        let timeout = self.timeout;
+        let deadline = Instant::now() + timeout;
+        listener.set_nonblocking(true).context("making listener pollable")?;
+
+        let mut writers: Vec<Option<PeerLink>> = (0..nodes).map(|_| None).collect();
+        let mut readers: Vec<Option<TcpStream>> = (0..nodes).map(|_| None).collect();
+        let mut pending = nodes - 1;
+        while pending > 0 {
+            match listener.accept() {
+                Ok((stream, peer_addr)) => {
+                    stream.set_nonblocking(false).context("stream to blocking mode")?;
+                    stream.set_nodelay(true).ok();
+                    // writes stay bounded for the whole run: a wedged
+                    // peer must surface as an error, never a hang
+                    stream.set_write_timeout(Some(timeout)).ok();
+                    // cap the HELLO wait per connection: a port scanner
+                    // or stray client that connects and sends nothing
+                    // (or garbage) is dropped and the accept loop keeps
+                    // waiting for real peers instead of failing the run
+                    let remaining = deadline
+                        .saturating_duration_since(Instant::now())
+                        .min(Duration::from_secs(5))
+                        .max(Duration::from_millis(1));
+                    stream.set_read_timeout(Some(remaining)).ok();
+                    let mut reader =
+                        stream.try_clone().context("cloning peer stream for the demux")?;
+                    let hello = match read_frame(&mut reader) {
+                        Ok(frame) => frame,
+                        Err(e) => {
+                            eprintln!(
+                                "transport: dropping connection from {peer_addr} \
+                                 (no valid HELLO: {e:#})"
+                            );
+                            continue;
+                        }
+                    };
+                    let node = match hello {
+                        Frame::Hello { version, node, nodes: n, gpus_per_node: g } => {
+                            ensure!(
+                                version == PROTOCOL_VERSION,
+                                "peer {peer_addr} speaks wire protocol {version}, \
+                                 this build speaks {PROTOCOL_VERSION}"
+                            );
+                            ensure!(
+                                n as usize == nodes && g as usize == gpn,
+                                "peer {peer_addr} was launched for a {n}x{g} cluster, \
+                                 the coordinator expects {nodes}x{gpn}"
+                            );
+                            let node = node as usize;
+                            ensure!(
+                                node >= 1 && node < nodes,
+                                "peer node id {node} out of range 1..{nodes}"
+                            );
+                            ensure!(writers[node].is_none(), "duplicate peer for node {node}");
+                            node
+                        }
+                        other => {
+                            eprintln!(
+                                "transport: dropping connection from {peer_addr} \
+                                 (expected HELLO, got {})",
+                                other.name()
+                            );
+                            continue;
+                        }
+                    };
+                    let mut writer = stream;
+                    write_frame(
+                        &mut writer,
+                        &Frame::Welcome {
+                            version: PROTOCOL_VERSION,
+                            nodes: nodes as u32,
+                            gpus_per_node: gpn as u32,
+                        },
+                    )?;
+                    reader.set_read_timeout(None).ok();
+                    writers[node] = Some(PeerLink::new(writer));
+                    readers[node] = Some(reader);
+                    pending -= 1;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "timed out after {timeout:?} waiting for {pending} peer \
+                             process(es) to connect — launch them with --executor \
+                             multiprocess and {ENV_COORD_ADDR} pointing here"
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(anyhow!(e).context("accepting peer connection")),
+            }
+        }
+
+        let link_to = |node: usize| writers[node].clone().expect("peer link");
+        let scatter_to = |node: usize, comm: u32, member: usize| -> ScatterSender {
+            let link = link_to(node);
+            Box::new(move |msg: ScatterMsg| {
+                link.send(&Frame::Scatter {
+                    comm,
+                    member: member as u32,
+                    clocks: msg.clocks,
+                    payload: msg.payload,
+                })
+            })
+        };
+
+        let mut gather_ports: BTreeMap<u32, Sender<GatherMsg>> = BTreeMap::new();
+        let mut async_injectors: BTreeMap<u32, AsyncInjector> = BTreeMap::new();
+
+        // world group: members are global ranks, local = node 0's ranks
+        let world_local: Vec<usize> = (0..gpn).collect();
+        let mut remote: BTreeMap<usize, ScatterSender> = BTreeMap::new();
+        for r in gpn..world {
+            remote.insert(r, scatter_to(topo.rank_of(r).node, world_comm_id(), r));
+        }
+        let (world_handles, world_port) =
+            GroupComm::assemble_spanning(world, &world_local, remote, timeout);
+        gather_ports.insert(world_comm_id(), world_port);
+
+        // one global (blocking + mailbox) group per local id; members
+        // are node ids, the coordinator hosts member 0
+        let mut global_handles = Vec::with_capacity(gpn);
+        let mut async_handles = Vec::with_capacity(gpn);
+        for g in 0..gpn {
+            let mut remote: BTreeMap<usize, ScatterSender> = BTreeMap::new();
+            for nd in 1..nodes {
+                remote.insert(nd, scatter_to(nd, global_comm_id(g), nd));
+            }
+            let (mut handles, port) = GroupComm::assemble_spanning(nodes, &[0], remote, timeout);
+            gather_ports.insert(global_comm_id(g), port);
+            global_handles.push(handles.pop().expect("global leader handle"));
+
+            let mut remote: BTreeMap<usize, AsyncResultSender> = BTreeMap::new();
+            for nd in 1..nodes {
+                let link = link_to(nd);
+                let comm = async_comm_id(g, gpn);
+                remote.insert(
+                    nd,
+                    Box::new(move |seq, sum: Arc<Vec<f32>>, finish| {
+                        link.send_async_sum(comm, nd as u32, seq, finish, &sum)
+                    }),
+                );
+            }
+            let (mut handles, injector) =
+                AsyncGroup::assemble_spanning(nodes, &[0], remote, timeout);
+            async_injectors.insert(async_comm_id(g, gpn), injector);
+            async_handles.push(handles.pop().expect("local mailbox handle"));
+        }
+
+        // control group: one member per process, for report aggregation
+        let mut remote: BTreeMap<usize, ScatterSender> = BTreeMap::new();
+        for nd in 1..nodes {
+            remote.insert(nd, scatter_to(nd, control_comm_id(gpn), nd));
+        }
+        let (mut handles, port) = GroupComm::assemble_spanning(nodes, &[0], remote, timeout);
+        gather_ports.insert(control_comm_id(gpn), port);
+        let control = handles.pop().expect("control leader handle");
+
+        let gather_ports = Arc::new(gather_ports);
+        let async_injectors = Arc::new(async_injectors);
+        for (nd, reader) in readers.iter_mut().enumerate() {
+            if let Some(reader) = reader.take() {
+                let ports = gather_ports.clone();
+                let injectors = async_injectors.clone();
+                std::thread::Builder::new()
+                    .name(format!("daso-demux-node{nd}"))
+                    .spawn(move || coordinator_demux(reader, ports, injectors, nd))
+                    .context("spawning demux thread")?;
+            }
+        }
+
+        let node_handles = GroupComm::group_with_timeout(gpn, timeout);
+        let rank_comms = world_handles
+            .into_iter()
+            .zip(node_handles)
+            .zip(global_handles)
+            .zip(async_handles)
+            .map(|(((world, node), global), global_async)| RankComms {
+                world,
+                node,
+                global,
+                global_async,
+            })
+            .collect();
+        Ok(Wiring { rank_comms, control })
+    }
+
+    fn connect_peer(&self, addr: &str) -> Result<Wiring> {
+        let topo = self.topo;
+        let node = self.node;
+        let (nodes, gpn) = (topo.nodes, topo.gpus_per_node);
+        let timeout = self.timeout;
+        let deadline = Instant::now() + timeout;
+
+        // resolve once; connect attempts are individually bounded so a
+        // blackholed address (dropped SYNs) cannot stall past the
+        // configured timeout the way the OS connect default would
+        let coord: SocketAddr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving coordinator address {addr}"))?
+            .next()
+            .ok_or_else(|| anyhow!("coordinator address {addr} resolved to nothing"))?;
+        // the coordinator may still be binding: retry transient refusals
+        // until the deadline, but surface permanent failures (bad
+        // address, unroutable network) immediately
+        let stream = loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                bail!("timed out after {timeout:?} connecting to coordinator at {addr}");
+            }
+            let attempt = remaining.min(Duration::from_secs(5)).max(Duration::from_millis(1));
+            match TcpStream::connect_timeout(&coord, attempt) {
+                Ok(s) => break s,
+                Err(e) => {
+                    let transient = matches!(
+                        e.kind(),
+                        ErrorKind::ConnectionRefused
+                            | ErrorKind::ConnectionReset
+                            | ErrorKind::ConnectionAborted
+                            | ErrorKind::TimedOut
+                            | ErrorKind::WouldBlock
+                            | ErrorKind::Interrupted
+                    );
+                    if !transient || Instant::now() >= deadline {
+                        return Err(anyhow!(e).context(format!(
+                            "connecting to coordinator at {addr} \
+                             (is the rank-0 process up?)"
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        };
+        stream.set_nodelay(true).ok();
+        // writes stay bounded for the whole run: a wedged coordinator
+        // must surface as an error, never a hang
+        stream.set_write_timeout(Some(timeout)).ok();
+        let remaining =
+            deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(1));
+        stream.set_read_timeout(Some(remaining)).ok();
+        let mut reader = stream.try_clone().context("cloning stream for the demux")?;
+        let mut writer = stream;
+        write_frame(
+            &mut writer,
+            &Frame::Hello {
+                version: PROTOCOL_VERSION,
+                node: node as u32,
+                nodes: nodes as u32,
+                gpus_per_node: gpn as u32,
+            },
+        )?;
+        match read_frame(&mut reader)
+            .context("waiting for coordinator WELCOME (topology mismatch or dead coordinator?)")?
+        {
+            Frame::Welcome { version, nodes: n, gpus_per_node: g } => {
+                ensure!(
+                    version == PROTOCOL_VERSION && n as usize == nodes && g as usize == gpn,
+                    "coordinator runs wire protocol {version} on a {n}x{g} cluster; \
+                     this peer expects protocol {PROTOCOL_VERSION} on {nodes}x{gpn}"
+                );
+            }
+            other => bail!("expected WELCOME, got {}", other.name()),
+        }
+        reader.set_read_timeout(None).ok();
+        let link = PeerLink::new(writer);
+
+        let gather_via = |comm: u32| -> GatherSender {
+            let link = link.clone();
+            Box::new(move |m: GatherMsg| {
+                link.send(&Frame::Gather {
+                    comm,
+                    member: m.index as u32,
+                    clock: m.clock,
+                    payload: m.payload,
+                })
+            })
+        };
+
+        let mut scatter_ports: BTreeMap<(u32, u32), Sender<ScatterMsg>> = BTreeMap::new();
+        let mut async_ports: BTreeMap<(u32, u32), Sender<AsyncResultMsg>> = BTreeMap::new();
+
+        let node_handles = GroupComm::group_with_timeout(gpn, timeout);
+        let mut rank_comms = Vec::with_capacity(gpn);
+        for (l, node_comm) in node_handles.into_iter().enumerate() {
+            let r = topo.rank(node, l).global;
+
+            let (tx, rx) = channel();
+            scatter_ports.insert((world_comm_id(), r as u32), tx);
+            let world = GroupComm::remote_member(
+                topo.world(),
+                r,
+                gather_via(world_comm_id()),
+                rx,
+                timeout,
+            );
+
+            let (tx, rx) = channel();
+            scatter_ports.insert((global_comm_id(l), node as u32), tx);
+            let global =
+                GroupComm::remote_member(nodes, node, gather_via(global_comm_id(l)), rx, timeout);
+
+            let (tx, rx) = channel();
+            async_ports.insert((async_comm_id(l, gpn), node as u32), tx);
+            let send: AsyncSendSender = {
+                let link = link.clone();
+                let comm = async_comm_id(l, gpn);
+                Box::new(move |m: AsyncSendMsg| {
+                    link.send(&Frame::AsyncPut {
+                        comm,
+                        member: m.member as u32,
+                        seq: m.seq,
+                        clock: m.clock,
+                        wire_dt: m.wire_dt,
+                        snapshot: m.snapshot,
+                    })
+                })
+            };
+            let global_async = AsyncGroup::remote_member(nodes, node, send, rx, timeout);
+
+            rank_comms.push(RankComms { world, node: node_comm, global, global_async });
+        }
+
+        let (tx, rx) = channel();
+        scatter_ports.insert((control_comm_id(gpn), node as u32), tx);
+        let control =
+            GroupComm::remote_member(nodes, node, gather_via(control_comm_id(gpn)), rx, timeout);
+
+        std::thread::Builder::new()
+            .name(format!("daso-demux-peer{node}"))
+            .spawn(move || peer_demux(reader, scatter_ports, async_ports, node))
+            .context("spawning demux thread")?;
+        Ok(Wiring { rank_comms, control })
+    }
+}
+
+impl Transport for TcpTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Tcp
+    }
+
+    fn node(&self) -> usize {
+        self.node
+    }
+
+    fn hosted_ranks(&self) -> Vec<usize> {
+        self.topo.node_ranks(self.node)
+    }
+
+    fn connect(&mut self) -> Result<Wiring> {
+        match std::mem::replace(&mut self.mode, Mode::Connected) {
+            Mode::Coordinator { listener } => self.connect_coordinator(listener),
+            Mode::Peer { addr } => self.connect_peer(&addr),
+            Mode::Connected => bail!("transport already connected"),
+        }
+    }
+}
+
+/// Coordinator-side demux: route one peer's incoming frames to the
+/// spanning groups' leaders. Exits on EOF (peer finished or died);
+/// anyone still waiting on that peer times out with a root-cause error.
+fn coordinator_demux(
+    mut stream: TcpStream,
+    ports: Arc<BTreeMap<u32, Sender<GatherMsg>>>,
+    injectors: Arc<BTreeMap<u32, AsyncInjector>>,
+    node: usize,
+) {
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return,
+        };
+        let res: Result<()> = match frame {
+            Frame::Gather { comm, member, clock, payload } => ports
+                .get(&comm)
+                .ok_or_else(|| anyhow!("unknown comm id {comm}"))
+                .and_then(|p| {
+                    p.send(GatherMsg { index: member as usize, payload, clock })
+                        .map_err(|_| anyhow!("comm {comm} is no longer receiving"))
+                }),
+            Frame::AsyncPut { comm, member, seq, clock, wire_dt, snapshot } => injectors
+                .get(&comm)
+                .ok_or_else(|| anyhow!("unknown mailbox id {comm}"))
+                .and_then(|inj| {
+                    inj.inject(AsyncSendMsg { member: member as usize, seq, snapshot, clock, wire_dt })
+                }),
+            other => Err(anyhow!("unexpected frame on coordinator link: {}", other.name())),
+        };
+        if let Err(e) = res {
+            eprintln!("transport demux (node {node}): {e:#}");
+            return;
+        }
+    }
+}
+
+/// Peer-side demux: route the coordinator's frames to this process's
+/// member handles. Exits on EOF; receivers then disconnect immediately.
+fn peer_demux(
+    mut stream: TcpStream,
+    scatter_ports: BTreeMap<(u32, u32), Sender<ScatterMsg>>,
+    async_ports: BTreeMap<(u32, u32), Sender<AsyncResultMsg>>,
+    node: usize,
+) {
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return,
+        };
+        let res: Result<()> = match frame {
+            Frame::Scatter { comm, member, clocks, payload } => scatter_ports
+                .get(&(comm, member))
+                .ok_or_else(|| anyhow!("unknown scatter target {comm}/{member}"))
+                .and_then(|p| {
+                    p.send(ScatterMsg { payload, clocks })
+                        .map_err(|_| anyhow!("rank for comm {comm} is gone"))
+                }),
+            Frame::AsyncSum { comm, member, seq, finish, sum } => async_ports
+                .get(&(comm, member))
+                .ok_or_else(|| anyhow!("unknown mailbox target {comm}/{member}"))
+                .and_then(|p| {
+                    p.send(AsyncResultMsg { seq, sum: Arc::new(sum), finish })
+                        .map_err(|_| anyhow!("mailbox for comm {comm} is gone"))
+                }),
+            other => Err(anyhow!("unexpected frame on peer link: {}", other.name())),
+        };
+        if let Err(e) = res {
+            eprintln!("transport demux (peer node {node}): {e:#}");
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::channels::Payload;
+    use crate::comm::naive_mean;
+
+    fn mean_reduce(bufs: &mut [Payload]) -> Result<()> {
+        let refs: Vec<&Vec<f32>> = bufs.iter().map(|b| b.as_f32()).collect();
+        let mean = naive_mean(&refs);
+        for b in bufs.iter_mut() {
+            *b = Payload::F32(mean.clone());
+        }
+        Ok(())
+    }
+
+    /// Drive one process's hosted ranks through a fixed schedule (world
+    /// mean, global-group mean, one async round); returns per-rank
+    /// results in hosted order.
+    fn drive(rank_comms: Vec<RankComms>, topo: Topology, node: usize) -> Vec<(f32, f32, f32)> {
+        std::thread::scope(|s| {
+            let joins: Vec<_> = rank_comms
+                .into_iter()
+                .zip(topo.node_ranks(node))
+                .map(|(comms, r)| {
+                    s.spawn(move || {
+                        let rank = topo.rank_of(r);
+                        let (w, clocks) = comms
+                            .world
+                            .exchange(Payload::F32(vec![(r + 1) as f32]), r as f64, mean_reduce)
+                            .unwrap();
+                        assert_eq!(clocks.len(), topo.world());
+                        let (g, _) = comms
+                            .global
+                            .exchange(
+                                Payload::F32(vec![(10 * rank.node + rank.local) as f32]),
+                                0.0,
+                                mean_reduce,
+                            )
+                            .unwrap();
+                        comms.global_async.contribute(vec![r as f32], 0.0, 0.5).unwrap();
+                        let (sum, finish) = comms.global_async.collect().unwrap();
+                        assert_eq!(finish, 0.5);
+                        (w.into_f32()[0], g.into_f32()[0], sum[0])
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().expect("rank thread")).collect()
+        })
+    }
+
+    fn control_sum(control: &GroupComm, node: usize) -> Payload {
+        let (out, _) = control
+            .exchange(Payload::F64(vec![node as f64 + 1.0]), 0.0, |bufs| {
+                let total: f64 = bufs.iter().map(|b| b.as_f64().iter().sum::<f64>()).sum();
+                bufs[0] = Payload::F64(vec![total]);
+                for b in bufs.iter_mut().skip(1) {
+                    *b = Payload::Empty;
+                }
+                Ok(())
+            })
+            .unwrap();
+        out
+    }
+
+    #[test]
+    fn tcp_transport_collectives_roundtrip() {
+        let topo = Topology::new(2, 2);
+        let timeout = Duration::from_secs(30);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+
+        let peer = std::thread::spawn(move || {
+            let mut t = TcpTransport::peer(topo, 1, &addr, timeout).unwrap();
+            assert_eq!(t.hosted_ranks(), vec![2, 3]);
+            let Wiring { rank_comms, control } = t.connect().unwrap();
+            let outs = drive(rank_comms, topo, 1);
+            let ctl = control_sum(&control, 1);
+            (outs, ctl)
+        });
+
+        let mut t = TcpTransport::coordinator(topo, listener, timeout);
+        assert_eq!(t.kind(), TransportKind::Tcp);
+        assert_eq!(t.hosted_ranks(), vec![0, 1]);
+        let Wiring { rank_comms, control } = t.connect().unwrap();
+        let outs = drive(rank_comms, topo, 0);
+        let ctl = control_sum(&control, 0);
+
+        // world mean over ranks: (1+2+3+4)/4; global group l mean over
+        // nodes: (l + 10+l)/2; async sum for group l: l + (l+2)
+        for (l, &(w, g, a)) in outs.iter().enumerate() {
+            assert_eq!(w, 2.5);
+            assert_eq!(g, 5.0 + l as f32);
+            assert_eq!(a, 2.0 * l as f32 + 2.0);
+        }
+        assert_eq!(ctl.into_f64(), vec![3.0], "control leader sums node contributions");
+
+        let (peer_outs, peer_ctl) = peer.join().expect("peer thread");
+        for (l, &(w, g, a)) in peer_outs.iter().enumerate() {
+            assert_eq!(w, 2.5);
+            assert_eq!(g, 5.0 + l as f32);
+            assert_eq!(a, 2.0 * l as f32 + 2.0);
+        }
+        assert!(matches!(peer_ctl, Payload::Empty), "non-leader gets an empty control result");
+    }
+
+    #[test]
+    fn coordinator_connect_times_out_without_peers() {
+        let topo = Topology::new(2, 1);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut t = TcpTransport::coordinator(topo, listener, Duration::from_millis(200));
+        let err = t.connect().unwrap_err().to_string();
+        assert!(err.contains("waiting for 1 peer"), "{err}");
+    }
+
+    #[test]
+    fn handshake_rejects_topology_mismatch() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let coord = std::thread::spawn(move || {
+            let mut t =
+                TcpTransport::coordinator(Topology::new(2, 2), listener, Duration::from_secs(10));
+            t.connect().map(|_| ())
+        });
+        let mut p =
+            TcpTransport::peer(Topology::new(2, 3), 1, &addr, Duration::from_secs(10)).unwrap();
+        let peer_result = p.connect().map(|_| ());
+        let coord_result = coord.join().expect("coordinator thread");
+        let cerr = coord_result.unwrap_err().to_string();
+        assert!(cerr.contains("2x3"), "{cerr}");
+        assert!(peer_result.is_err(), "peer must not come up against a mismatched coordinator");
+    }
+
+    #[test]
+    fn peer_connect_times_out_without_coordinator() {
+        // bind+drop to get an address nothing listens on
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let topo = Topology::new(2, 1);
+        let mut p = TcpTransport::peer(topo, 1, &addr, Duration::from_millis(200)).unwrap();
+        assert!(p.connect().is_err());
+    }
+
+    #[test]
+    fn comm_ids_are_disjoint() {
+        for gpn in 1..6 {
+            let mut ids = vec![world_comm_id(), control_comm_id(gpn)];
+            for g in 0..gpn {
+                ids.push(global_comm_id(g));
+                ids.push(async_comm_id(g, gpn));
+            }
+            let n = ids.len();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), n, "comm ids collide for gpn={gpn}");
+        }
+    }
+
+    #[test]
+    fn role_from_env_requires_addr() {
+        // NB: tests run multi-threaded in one process — only read env
+        // here, never set it
+        if std::env::var(ENV_COORD_ADDR).is_err() {
+            assert!(TcpRole::from_env().is_err());
+        }
+    }
+}

@@ -1,0 +1,485 @@
+//! Length-prefixed binary wire format for the TCP transport.
+//!
+//! Every frame is `[u32 LE body length][body]`; the body starts with a
+//! one-byte message tag. Multi-byte integers and floats are
+//! little-endian, so f32/f64 buffers cross the wire losslessly — the
+//! bit-identity contract of the blocking strategies survives the
+//! process boundary. Collective payloads are tagged
+//! (empty/f32/f64) + length + raw elements; the mailbox messages carry
+//! per-member sequence numbers so overlapping non-blocking rounds pair
+//! up correctly on both sides.
+//!
+//! The format is symmetric (both directions use the same framing) and
+//! versioned through the HELLO/WELCOME handshake, which also carries the
+//! topology so a mis-launched peer fails fast instead of corrupting a
+//! rendezvous.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::comm::channels::Payload;
+
+/// Bumped on any change to the framing or message layout.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Upper bound on a frame body (sanity check against corrupt length
+/// prefixes; generously above any model's parameter buffer).
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+const TAG_HELLO: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_GATHER: u8 = 3;
+const TAG_SCATTER: u8 = 4;
+const TAG_ASYNC_PUT: u8 = 5;
+const TAG_ASYNC_SUM: u8 = 6;
+
+const PAYLOAD_EMPTY: u8 = 0;
+const PAYLOAD_F32: u8 = 1;
+const PAYLOAD_F64: u8 = 2;
+
+/// One transport message.
+#[derive(Debug)]
+pub enum Frame {
+    /// Peer -> coordinator: identify and verify the launch topology.
+    Hello { version: u32, node: u32, nodes: u32, gpus_per_node: u32 },
+    /// Coordinator -> peer: handshake accepted.
+    Welcome { version: u32, nodes: u32, gpus_per_node: u32 },
+    /// Member -> leader: one rendezvous contribution.
+    Gather { comm: u32, member: u32, clock: f64, payload: Payload },
+    /// Leader -> member: the reduced result + all members' clocks.
+    Scatter { comm: u32, member: u32, clocks: Vec<f64>, payload: Payload },
+    /// Member -> aggregator: non-blocking mailbox deposit.
+    AsyncPut { comm: u32, member: u32, seq: u64, clock: f64, wire_dt: f64, snapshot: Vec<f32> },
+    /// Aggregator -> member: a completed mailbox round.
+    AsyncSum { comm: u32, member: u32, seq: u64, finish: f64, sum: Vec<f32> },
+}
+
+impl Frame {
+    /// Tag name for diagnostics (payload contents elided).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "HELLO",
+            Frame::Welcome { .. } => "WELCOME",
+            Frame::Gather { .. } => "GATHER",
+            Frame::Scatter { .. } => "SCATTER",
+            Frame::AsyncPut { .. } => "ASYNC_PUT",
+            Frame::AsyncSum { .. } => "ASYNC_SUM",
+        }
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32_slice(out: &mut Vec<u8>, v: &[f32]) {
+    put_u64(out, v.len() as u64);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f64_slice(out: &mut Vec<u8>, v: &[f64]) {
+    put_u64(out, v.len() as u64);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_payload(out: &mut Vec<u8>, p: &Payload) {
+    match p {
+        Payload::Empty => out.push(PAYLOAD_EMPTY),
+        Payload::F32(v) => {
+            out.push(PAYLOAD_F32);
+            put_f32_slice(out, v);
+        }
+        Payload::F64(v) => {
+            out.push(PAYLOAD_F64);
+            put_f64_slice(out, v);
+        }
+    }
+}
+
+/// Bounds-checked little-endian reader over a frame body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "truncated frame body");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn len_prefix(&mut self) -> Result<usize> {
+        let n = self.u64()? as usize;
+        // cap the count before multiplying so element-size math cannot
+        // overflow; take() bounds-checks the actual bytes
+        ensure!(n <= MAX_FRAME_BYTES / 4, "implausible element count {n}");
+        Ok(n)
+    }
+
+    fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_prefix()?;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f64_vec(&mut self) -> Result<Vec<f64>> {
+        let n = self.len_prefix()?;
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn payload(&mut self) -> Result<Payload> {
+        Ok(match self.u8()? {
+            PAYLOAD_EMPTY => Payload::Empty,
+            PAYLOAD_F32 => Payload::F32(self.f32_vec()?),
+            PAYLOAD_F64 => Payload::F64(self.f64_vec()?),
+            other => bail!("unknown payload kind {other}"),
+        })
+    }
+
+    fn finish(&self) -> Result<()> {
+        ensure!(self.pos == self.buf.len(), "trailing bytes in frame body");
+        Ok(())
+    }
+}
+
+fn payload_wire_len(p: &Payload) -> usize {
+    1 + match p {
+        Payload::Empty => 0,
+        Payload::F32(v) => 8 + v.len() * 4,
+        Payload::F64(v) => 8 + v.len() * 8,
+    }
+}
+
+/// Exact body length for a frame — parameter-sized buffers ride the hot
+/// collective path, so the encoder must not grow geometrically.
+fn body_len(frame: &Frame) -> usize {
+    match frame {
+        Frame::Hello { .. } => 17,
+        Frame::Welcome { .. } => 13,
+        Frame::Gather { payload, .. } => 17 + payload_wire_len(payload),
+        Frame::Scatter { clocks, payload, .. } => {
+            17 + clocks.len() * 8 + payload_wire_len(payload)
+        }
+        Frame::AsyncPut { snapshot, .. } => 41 + snapshot.len() * 4,
+        Frame::AsyncSum { sum, .. } => 33 + sum.len() * 4,
+    }
+}
+
+/// Serialize a frame body (without the length prefix).
+pub fn encode_body(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::with_capacity(body_len(frame));
+    match frame {
+        Frame::Hello { version, node, nodes, gpus_per_node } => {
+            out.push(TAG_HELLO);
+            put_u32(&mut out, *version);
+            put_u32(&mut out, *node);
+            put_u32(&mut out, *nodes);
+            put_u32(&mut out, *gpus_per_node);
+        }
+        Frame::Welcome { version, nodes, gpus_per_node } => {
+            out.push(TAG_WELCOME);
+            put_u32(&mut out, *version);
+            put_u32(&mut out, *nodes);
+            put_u32(&mut out, *gpus_per_node);
+        }
+        Frame::Gather { comm, member, clock, payload } => {
+            out.push(TAG_GATHER);
+            put_u32(&mut out, *comm);
+            put_u32(&mut out, *member);
+            put_f64(&mut out, *clock);
+            put_payload(&mut out, payload);
+        }
+        Frame::Scatter { comm, member, clocks, payload } => {
+            out.push(TAG_SCATTER);
+            put_u32(&mut out, *comm);
+            put_u32(&mut out, *member);
+            put_f64_slice(&mut out, clocks);
+            put_payload(&mut out, payload);
+        }
+        Frame::AsyncPut { comm, member, seq, clock, wire_dt, snapshot } => {
+            out.push(TAG_ASYNC_PUT);
+            put_u32(&mut out, *comm);
+            put_u32(&mut out, *member);
+            put_u64(&mut out, *seq);
+            put_f64(&mut out, *clock);
+            put_f64(&mut out, *wire_dt);
+            put_f32_slice(&mut out, snapshot);
+        }
+        Frame::AsyncSum { comm, member, seq, finish, sum } => {
+            out.push(TAG_ASYNC_SUM);
+            put_u32(&mut out, *comm);
+            put_u32(&mut out, *member);
+            put_u64(&mut out, *seq);
+            put_f64(&mut out, *finish);
+            put_f32_slice(&mut out, sum);
+        }
+    }
+    out
+}
+
+/// Parse a frame body produced by [`encode_body`].
+pub fn decode_body(body: &[u8]) -> Result<Frame> {
+    let mut c = Cursor::new(body);
+    let frame = match c.u8().context("empty frame body")? {
+        TAG_HELLO => Frame::Hello {
+            version: c.u32()?,
+            node: c.u32()?,
+            nodes: c.u32()?,
+            gpus_per_node: c.u32()?,
+        },
+        TAG_WELCOME => {
+            Frame::Welcome { version: c.u32()?, nodes: c.u32()?, gpus_per_node: c.u32()? }
+        }
+        TAG_GATHER => Frame::Gather {
+            comm: c.u32()?,
+            member: c.u32()?,
+            clock: c.f64()?,
+            payload: c.payload()?,
+        },
+        TAG_SCATTER => Frame::Scatter {
+            comm: c.u32()?,
+            member: c.u32()?,
+            clocks: c.f64_vec()?,
+            payload: c.payload()?,
+        },
+        TAG_ASYNC_PUT => Frame::AsyncPut {
+            comm: c.u32()?,
+            member: c.u32()?,
+            seq: c.u64()?,
+            clock: c.f64()?,
+            wire_dt: c.f64()?,
+            snapshot: c.f32_vec()?,
+        },
+        TAG_ASYNC_SUM => Frame::AsyncSum {
+            comm: c.u32()?,
+            member: c.u32()?,
+            seq: c.u64()?,
+            finish: c.f64()?,
+            sum: c.f32_vec()?,
+        },
+        other => bail!("unknown frame tag {other}"),
+    };
+    c.finish()?;
+    Ok(frame)
+}
+
+fn write_body<W: Write>(w: &mut W, body: &[u8]) -> Result<()> {
+    ensure!(body.len() <= MAX_FRAME_BYTES, "frame body too large ({} bytes)", body.len());
+    w.write_all(&(body.len() as u32).to_le_bytes()).context("writing frame length")?;
+    w.write_all(body).context("writing frame body")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    write_body(w, &encode_body(frame))
+}
+
+/// Encode + write an `AsyncSum` frame from a borrowed sum buffer —
+/// avoids cloning a params-sized vector per remote member on the
+/// completed-round fan-out path.
+pub fn write_async_sum<W: Write>(
+    w: &mut W,
+    comm: u32,
+    member: u32,
+    seq: u64,
+    finish: f64,
+    sum: &[f32],
+) -> Result<()> {
+    let mut body = Vec::with_capacity(33 + sum.len() * 4);
+    body.push(TAG_ASYNC_SUM);
+    put_u32(&mut body, comm);
+    put_u32(&mut body, member);
+    put_u64(&mut body, seq);
+    put_f64(&mut body, finish);
+    put_f32_slice(&mut body, sum);
+    write_body(w, &body)
+}
+
+/// Read one length-prefixed frame (blocking; EOF and oversized lengths
+/// are errors).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len).context("reading frame length (peer closed?)")?;
+    let len = u32::from_le_bytes(len) as usize;
+    ensure!(len <= MAX_FRAME_BYTES, "implausible frame length {len}");
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("reading frame body")?;
+    decode_body(&body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let mut r = &buf[..];
+        let back = read_frame(&mut r).unwrap();
+        assert!(r.is_empty(), "reader must consume the whole frame");
+        back
+    }
+
+    #[test]
+    fn hello_welcome_roundtrip() {
+        match roundtrip(Frame::Hello { version: 1, node: 3, nodes: 4, gpus_per_node: 2 }) {
+            Frame::Hello { version: 1, node: 3, nodes: 4, gpus_per_node: 2 } => {}
+            other => panic!("bad roundtrip: {other:?}"),
+        }
+        match roundtrip(Frame::Welcome { version: 1, nodes: 4, gpus_per_node: 2 }) {
+            Frame::Welcome { version: 1, nodes: 4, gpus_per_node: 2 } => {}
+            other => panic!("bad roundtrip: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_bit_exact() {
+        let vals = vec![1.5f32, -0.0, f32::MIN_POSITIVE, 3.0e-39, 1.0e20];
+        match roundtrip(Frame::Gather {
+            comm: 7,
+            member: 2,
+            clock: 1.25e-9,
+            payload: Payload::F32(vals.clone()),
+        }) {
+            Frame::Gather { comm: 7, member: 2, clock, payload: Payload::F32(v) } => {
+                assert_eq!(clock.to_bits(), 1.25e-9f64.to_bits());
+                assert_eq!(
+                    v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    vals.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                );
+            }
+            other => panic!("bad roundtrip: {other:?}"),
+        }
+        match roundtrip(Frame::Scatter {
+            comm: 0,
+            member: 9,
+            clocks: vec![0.0, 4.5, -1.0],
+            payload: Payload::F64(vec![2.0, 3.5]),
+        }) {
+            Frame::Scatter { comm: 0, member: 9, clocks, payload: Payload::F64(v) } => {
+                assert_eq!(clocks, vec![0.0, 4.5, -1.0]);
+                assert_eq!(v, vec![2.0, 3.5]);
+            }
+            other => panic!("bad roundtrip: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_payload_roundtrip() {
+        match roundtrip(Frame::Gather {
+            comm: 1,
+            member: 0,
+            clock: 0.0,
+            payload: Payload::Empty,
+        }) {
+            Frame::Gather { payload: Payload::Empty, .. } => {}
+            other => panic!("bad roundtrip: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn async_frames_roundtrip() {
+        match roundtrip(Frame::AsyncPut {
+            comm: 5,
+            member: 1,
+            seq: 42,
+            clock: 7.0,
+            wire_dt: 0.25,
+            snapshot: vec![1.0, 2.0],
+        }) {
+            Frame::AsyncPut { comm: 5, member: 1, seq: 42, clock, wire_dt, snapshot } => {
+                assert_eq!(clock, 7.0);
+                assert_eq!(wire_dt, 0.25);
+                assert_eq!(snapshot, vec![1.0, 2.0]);
+            }
+            other => panic!("bad roundtrip: {other:?}"),
+        }
+        match roundtrip(Frame::AsyncSum {
+            comm: 6,
+            member: 2,
+            seq: 3,
+            finish: 9.5,
+            sum: vec![4.0],
+        }) {
+            Frame::AsyncSum { comm: 6, member: 2, seq: 3, finish, sum } => {
+                assert_eq!(finish, 9.5);
+                assert_eq!(sum, vec![4.0]);
+            }
+            other => panic!("bad roundtrip: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn write_async_sum_matches_frame_encoding() {
+        let mut via_frame = Vec::new();
+        write_frame(
+            &mut via_frame,
+            &Frame::AsyncSum { comm: 9, member: 1, seq: 7, finish: 2.5, sum: vec![1.0, -2.0] },
+        )
+        .unwrap();
+        let mut via_slice = Vec::new();
+        write_async_sum(&mut via_slice, 9, 1, 7, 2.5, &[1.0, -2.0]).unwrap();
+        assert_eq!(via_frame, via_slice);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode_body(&[]).is_err());
+        assert!(decode_body(&[99]).is_err());
+        // truncated gather
+        let body = encode_body(&Frame::Gather {
+            comm: 1,
+            member: 1,
+            clock: 0.0,
+            payload: Payload::F32(vec![1.0; 16]),
+        });
+        assert!(decode_body(&body[..body.len() - 3]).is_err());
+        // trailing junk
+        let mut long = body.clone();
+        long.push(0);
+        assert!(decode_body(&long).is_err());
+        // oversized length prefix
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 16]);
+        assert!(read_frame(&mut &buf[..]).is_err());
+    }
+}

@@ -8,7 +8,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cluster::ExecutorKind;
-use crate::comm::Fabric;
+use crate::comm::{Fabric, TransportKind};
 use crate::daso::DasoConfig;
 use crate::trainer::strategy::RankStrategyFactory;
 use crate::trainer::TrainConfig;
@@ -50,6 +50,9 @@ pub struct RunSpec {
     pub model: String,
     pub strategy: StrategyKind,
     pub executor: ExecutorKind,
+    /// explicit transport override (`transport=channels|tcp`); when
+    /// unset the executor implies it — see [`RunSpec::resolved_transport`]
+    pub transport: Option<TransportKind>,
     pub artifacts_dir: String,
     pub out_dir: Option<String>,
     pub train: TrainConfig,
@@ -64,6 +67,7 @@ impl RunSpec {
             model: model.to_string(),
             strategy: StrategyKind::Daso,
             executor: ExecutorKind::Serial,
+            transport: None,
             artifacts_dir: "artifacts".to_string(),
             out_dir: None,
             train,
@@ -112,6 +116,7 @@ impl RunSpec {
             "model" => self.model = as_str()?.to_string(),
             "strategy" => self.strategy = StrategyKind::parse(as_str()?)?,
             "executor" => self.executor = ExecutorKind::parse(as_str()?)?,
+            "transport" => self.transport = Some(TransportKind::parse(as_str()?)?),
             "artifacts_dir" => self.artifacts_dir = as_str()?.to_string(),
             "out_dir" => self.out_dir = Some(as_str()?.to_string()),
 
@@ -133,6 +138,9 @@ impl RunSpec {
             "train.compute_time_s" => self.train.compute_time_s = as_f64()?,
             "train.eval_every" => self.train.eval_every = as_usize()?,
             "train.verbose" | "verbose" => self.train.verbose = as_bool()?,
+            "train.comm_timeout_ms" | "comm_timeout_ms" => {
+                self.train.comm_timeout_ms = (as_f64()? as u64).max(1)
+            }
 
             "daso.b_initial" => self.daso.b_initial = as_usize()?,
             "daso.warmup_epochs" => self.daso.warmup_epochs = as_usize()?,
@@ -149,6 +157,32 @@ impl RunSpec {
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
+    }
+
+    /// The transport implied by the executor, validated against an
+    /// explicit `transport=` override.
+    pub fn resolved_transport(&self) -> Result<TransportKind> {
+        let implied = match self.executor {
+            ExecutorKind::Serial | ExecutorKind::Threaded => TransportKind::Channels,
+            ExecutorKind::Multiprocess => TransportKind::Tcp,
+        };
+        match self.transport {
+            None => Ok(implied),
+            Some(t) if t == implied => Ok(t),
+            Some(t) => {
+                let hint = match t {
+                    TransportKind::Tcp => "use --executor multiprocess for tcp",
+                    TransportKind::Channels => "use --executor serial|threaded for channels",
+                };
+                bail!(
+                    "transport {:?} is incompatible with --executor {} (which implies {:?}); \
+                     {hint}",
+                    t.name(),
+                    self.executor.name(),
+                    implied.name()
+                )
+            }
+        }
     }
 
     /// Construct the configured strategy object (serial executor).
@@ -275,7 +309,38 @@ mod tests {
         assert_eq!(s.executor, ExecutorKind::Serial);
         s.set("executor=threaded").unwrap();
         assert_eq!(s.executor, ExecutorKind::Threaded);
+        s.set("executor=multiprocess").unwrap();
+        assert_eq!(s.executor, ExecutorKind::Multiprocess);
         assert!(s.set("executor=bogus").is_err());
+    }
+
+    #[test]
+    fn comm_timeout_override() {
+        let mut s = RunSpec::default_for("mlp");
+        assert!(s.train.comm_timeout_ms >= 1);
+        s.set("comm_timeout_ms=1500").unwrap();
+        assert_eq!(s.train.comm_timeout_ms, 1500);
+        s.set("train.comm_timeout_ms=2500").unwrap();
+        assert_eq!(s.train.comm_timeout_ms, 2500);
+        s.set("comm_timeout_ms=0").unwrap();
+        assert_eq!(s.train.comm_timeout_ms, 1, "zero timeout is clamped");
+    }
+
+    #[test]
+    fn transport_override_and_resolution() {
+        let mut s = RunSpec::default_for("mlp");
+        // implied by the executor when unset
+        assert_eq!(s.resolved_transport().unwrap(), TransportKind::Channels);
+        s.set("executor=multiprocess").unwrap();
+        assert_eq!(s.resolved_transport().unwrap(), TransportKind::Tcp);
+        // explicit + consistent
+        s.set("transport=tcp").unwrap();
+        assert_eq!(s.resolved_transport().unwrap(), TransportKind::Tcp);
+        // explicit + contradictory
+        s.set("executor=threaded").unwrap();
+        let err = s.resolved_transport().unwrap_err().to_string();
+        assert!(err.contains("tcp"), "{err}");
+        assert!(s.set("transport=rdma").is_err());
     }
 
     #[test]

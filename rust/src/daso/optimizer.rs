@@ -528,9 +528,9 @@ impl DasoRank {
     /// Start a non-blocking global sync: the rotating group's members
     /// deposit parameter snapshots in the mailbox (uncast — casting would
     /// delay the send) and training continues immediately.
-    fn start_nonblocking(&mut self, ctx: &mut RankCtx) {
+    fn start_nonblocking(&mut self, ctx: &mut RankCtx) -> Result<()> {
         if ctx.topo.nodes <= 1 {
-            return;
+            return Ok(());
         }
         let n = ctx.rt.spec.n_params;
         let bytes = n * 4;
@@ -541,7 +541,7 @@ impl DasoRank {
                 ctx.worker.params.clone(),
                 ctx.worker.clock,
                 wire_dt,
-            );
+            )?;
             // the async send itself only costs the launch latency
             ctx.worker.advance_clock(ctx.fabric.inter.latency_s);
             ctx.worker.bytes_sent_inter += bytes as u64;
@@ -552,6 +552,7 @@ impl DasoRank {
             wait: self.cycler.w,
             group,
         });
+        Ok(())
     }
 
     /// Complete an in-flight sync: members pick up whatever has actually
@@ -610,7 +611,7 @@ impl RankStrategy for DasoRank {
                     }
                 }
                 if self.inflight.is_none() && ctx.global_batch % self.cycler.b.max(1) == 0 {
-                    self.start_nonblocking(ctx);
+                    self.start_nonblocking(ctx)?;
                 }
             }
         }

@@ -50,8 +50,8 @@ pub mod util;
 /// Convenient re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::baselines::{AsgdServer, Horovod, HorovodConfig, LocalOnly};
-    pub use crate::cluster::{train_threaded, ExecutorKind};
-    pub use crate::comm::{Fabric, Link, Topology, Wire};
+    pub use crate::cluster::{train_multiprocess, train_threaded, ExecutorKind};
+    pub use crate::comm::{Fabric, Link, Topology, TransportKind, Wire};
     pub use crate::daso::{Daso, DasoConfig, DasoRank, Phase};
     pub use crate::runtime::{Batch, Engine, Metric, ModelRuntime};
     pub use crate::simtime::Workload;

@@ -20,6 +20,7 @@ fn main() {
     };
     let result = match args.command.as_str() {
         "train" => cmd_train(&args),
+        "launch" => cmd_launch(&args),
         "sweep" => cmd_sweep(&args),
         "figures" => cmd_figures(&args),
         "project" => cmd_project(&args),
@@ -55,6 +56,9 @@ fn build_spec(args: &Args) -> Result<RunSpec> {
     if let Some(executor) = args.get("executor") {
         spec.set(&format!("executor={executor}"))?;
     }
+    if let Some(transport) = args.get("transport") {
+        spec.set(&format!("transport={transport}"))?;
+    }
     if let Some(artifacts) = args.get("artifacts") {
         spec.artifacts_dir = artifacts.to_string();
     }
@@ -67,23 +71,44 @@ fn build_spec(args: &Args) -> Result<RunSpec> {
     Ok(spec)
 }
 
-/// Dispatch one run to the spec's executor.
+/// Dispatch one run to the spec's executor. Returns `None` when this
+/// process is a multiprocess peer (the coordinator owns the report).
 fn run_spec(
     spec: &RunSpec,
     rt: &daso::runtime::ModelRuntime,
     train_d: &dyn daso::data::Dataset,
     val_d: &dyn daso::data::Dataset,
-) -> Result<daso::trainer::RunReport> {
+) -> Result<Option<daso::trainer::RunReport>> {
+    spec.resolved_transport()?;
     match spec.executor {
         daso::cluster::ExecutorKind::Serial => {
             let mut strategy = spec.build_strategy();
-            train(rt, &spec.train, train_d, val_d, strategy.as_mut())
+            train(rt, &spec.train, train_d, val_d, strategy.as_mut()).map(Some)
         }
         daso::cluster::ExecutorKind::Threaded => {
             let factory = spec.build_rank_strategies();
-            daso::cluster::train_threaded(rt, &spec.train, train_d, val_d, &factory)
+            daso::cluster::train_threaded(rt, &spec.train, train_d, val_d, &factory).map(Some)
+        }
+        daso::cluster::ExecutorKind::Multiprocess => {
+            let role = daso::comm::transport::tcp::TcpRole::from_env()?;
+            let factory = spec.build_rank_strategies();
+            daso::cluster::train_multiprocess(rt, &spec.train, train_d, val_d, &factory, &role)
         }
     }
+}
+
+/// Print the summary + JSON and write the optional output files.
+fn emit_report(spec: &RunSpec, report: &daso::trainer::RunReport) -> Result<()> {
+    println!("{}", report.summary_line());
+    println!("{}", runlog::report_json(report).to_string_pretty());
+    if let Some(dir) = &spec.out_dir {
+        let base = std::path::Path::new(dir);
+        let tag = format!("{}_{}", spec.model, spec.strategy.name());
+        runlog::write_csv(report, &base.join(format!("{tag}.csv")))?;
+        runlog::write_json(report, &base.join(format!("{tag}.json")))?;
+        eprintln!("wrote {dir}/{tag}.{{csv,json}}");
+    }
+    Ok(())
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -105,23 +130,109 @@ fn cmd_train(args: &Args) -> Result<()> {
         spec.train.epochs,
         spec.executor.name()
     );
-    let report = run_spec(&spec, &rt, &*train_d, &*val_d)?;
-    println!("{}", report.summary_line());
-    println!("{}", runlog::report_json(&report).to_string_pretty());
-    if let Some(dir) = &spec.out_dir {
-        let base = std::path::Path::new(dir);
-        let tag = format!("{}_{}", spec.model, spec.strategy.name());
-        runlog::write_csv(&report, &base.join(format!("{tag}.csv")))?;
-        runlog::write_json(&report, &base.join(format!("{tag}.json")))?;
-        eprintln!("wrote {dir}/{tag}.{{csv,json}}");
+    match run_spec(&spec, &rt, &*train_d, &*val_d)? {
+        Some(report) => emit_report(&spec, &report)?,
+        None => eprintln!("peer node finished (the coordinator prints the report)"),
     }
     Ok(())
+}
+
+/// Spawn a full multi-process run on this machine: bind the coordinator
+/// listener, re-exec this binary once per peer node with the training
+/// flags forwarded, then train as node 0 through the TCP transport.
+fn cmd_launch(args: &Args) -> Result<()> {
+    let bind = args.get("bind").unwrap_or("127.0.0.1:0");
+    let mut spec = build_spec(args)?;
+    spec.executor = daso::cluster::ExecutorKind::Multiprocess;
+    // topology precedence: --nodes/--workers-per-node flags beat
+    // --set/--config, which beat the spec defaults
+    if let Some(n) = args.get_usize("nodes")? {
+        spec.train.nodes = n;
+    }
+    let wpn_flag = match args.get_usize("workers-per-node")? {
+        Some(v) => Some(v),
+        None => args.get_usize("gpn")?,
+    };
+    if let Some(w) = wpn_flag {
+        spec.train.gpus_per_node = w;
+    }
+    let (nodes, wpn) = (spec.train.nodes, spec.train.gpus_per_node);
+    spec.resolved_transport()?;
+
+    let launcher = daso::cluster::launch::Launcher::bind(bind, nodes, wpn)?;
+    let addr = launcher.addr();
+
+    // reconstruct the peer command line: forward the run-defining flags,
+    // then force executor + topology last so children cannot diverge
+    let mut train_args: Vec<String> = vec!["train".into()];
+    for key in ["model", "strategy", "config", "artifacts"] {
+        if let Some(v) = args.get(key) {
+            train_args.push(format!("--{key}"));
+            train_args.push(v.to_string());
+        }
+    }
+    for v in args.get_all("set") {
+        train_args.push("--set".into());
+        train_args.push(v.to_string());
+    }
+    // forced as trailing --set entries: build_spec applies --set
+    // overrides last, so a forwarded `--set executor=...` (or topology
+    // key) cannot make a child diverge from the launch
+    for forced in [
+        "executor=multiprocess".to_string(),
+        format!("nodes={nodes}"),
+        format!("gpus_per_node={wpn}"),
+    ] {
+        train_args.push("--set".into());
+        train_args.push(forced);
+    }
+
+    let engine = Engine::auto(&spec.artifacts_dir);
+    let rt = engine.model(&spec.model)?;
+    let (train_d, val_d) = daso::data::for_model(
+        &rt.spec,
+        spec.train.train_samples,
+        spec.train.val_samples,
+        spec.train.seed,
+    )?;
+    eprintln!(
+        "launching {} with {}: {} node process(es) x {} workers over tcp on {addr}",
+        spec.model,
+        spec.strategy.name(),
+        nodes,
+        wpn
+    );
+    let mut children = launcher.spawn_peers(&train_args)?;
+    let factory = spec.build_rank_strategies();
+    let listener = launcher.into_listener();
+    let report = match daso::cluster::train_coordinator(
+        &rt,
+        &spec.train,
+        &*train_d,
+        &*val_d,
+        &factory,
+        listener,
+    ) {
+        Ok(report) => report,
+        Err(e) => {
+            daso::cluster::launch::kill_peers(&mut children);
+            return Err(e);
+        }
+    };
+    daso::cluster::launch::wait_peers(children)?;
+    emit_report(&spec, &report)
 }
 
 /// Run every strategy on the same model/config and print a comparison —
 /// the quickest way to see the paper's trade-offs side by side.
 fn cmd_sweep(args: &Args) -> Result<()> {
     let base = build_spec(args)?;
+    if base.executor == daso::cluster::ExecutorKind::Multiprocess {
+        bail!(
+            "sweep drives several runs in one process; use --executor serial|threaded, \
+             or `daso launch` once per strategy"
+        );
+    }
     let engine = Engine::auto(&base.artifacts_dir);
     let rt = engine.model(&base.model)?;
     let (train_d, val_d) = daso::data::for_model(
@@ -134,7 +245,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     for kind in ["daso", "horovod", "asgd", "local_only"] {
         let mut spec = base.clone();
         spec.set(&format!("strategy={kind}"))?;
-        let report = run_spec(&spec, &rt, &*train_d, &*val_d)?;
+        let report = run_spec(&spec, &rt, &*train_d, &*val_d)?
+            .expect("single-process executors always report");
         eprintln!("{}", report.summary_line());
         rows.push(vec![
             kind.to_string(),

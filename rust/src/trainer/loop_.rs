@@ -39,6 +39,11 @@ pub struct TrainConfig {
     pub fabric: Fabric,
     /// print per-epoch progress lines
     pub verbose: bool,
+    /// bound on rendezvous/mailbox waits in the threaded and
+    /// multiprocess executors (default: `DASO_COMM_TIMEOUT_MS` env or
+    /// 60 s) — a dead companion thread or peer process surfaces as an
+    /// error instead of a hang
+    pub comm_timeout_ms: u64,
 }
 
 impl TrainConfig {
@@ -59,6 +64,7 @@ impl TrainConfig {
             eval_every: 0,
             fabric: Fabric::juwels_like(),
             verbose: false,
+            comm_timeout_ms: crate::comm::default_comm_timeout_ms(),
         }
     }
 

@@ -1,9 +1,11 @@
 //! Substrate utilities built from scratch for the offline environment:
-//! PRNG, half-precision wire formats, JSON, statistics, and a minimal
-//! property-testing harness (no rand/serde/proptest crates available).
+//! PRNG, half-precision wire formats, JSON, SHA-256, statistics, and a
+//! minimal property-testing harness (no rand/serde/proptest crates
+//! available).
 
 pub mod half;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sha;
 pub mod stats;

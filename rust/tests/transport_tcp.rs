@@ -1,0 +1,255 @@
+//! Multi-process TCP transport contract tests (native backend):
+//!
+//! - a 2-process x 2-worker Horovod run over TCP loopback must produce
+//!   bit-identical final parameters and records to `--executor serial`
+//!   with the same 4 workers (the acceptance criterion of the transport
+//!   subsystem; this is the CI tcp-smoke job);
+//! - DASO's cycling (non-blocking mailbox) must train across processes;
+//! - a missing peer process must surface as a bounded error, not a hang;
+//! - `daso launch` must work end-to-end through the real binary.
+//!
+//! The test process itself acts as the coordinator (node 0) through the
+//! library API; peers are real `daso` child processes joined through the
+//! `DASO_COORD_ADDR` / `DASO_NODE_ID` env handshake.
+
+#![cfg(not(feature = "pjrt"))]
+
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use daso::cluster::train_with_transport;
+use daso::comm::transport::tcp::{TcpTransport, ENV_COORD_ADDR, ENV_NODE_ID};
+use daso::config::RunSpec;
+use daso::runtime::Engine;
+use daso::trainer::{train, RunReport};
+
+/// The shared run shape: 2 nodes x 2 workers, small but long enough to
+/// cross several collective rounds per epoch.
+const SETS: &[&str] = &[
+    "nodes=2",
+    "gpus_per_node=2",
+    "epochs=3",
+    "train.train_samples=1024",
+    "train.val_samples=256",
+    "train.lr_scale=4",
+];
+
+fn spec_with_sets(strategy: &str) -> RunSpec {
+    let mut s = RunSpec::default_for("mlp");
+    for set in SETS {
+        s.set(set).unwrap();
+    }
+    s.set(&format!("strategy={strategy}")).unwrap();
+    s
+}
+
+/// Deadlock guard: run `f` on a helper thread and panic if it does not
+/// finish in time (a hung handshake would otherwise stall CI forever).
+/// A panic inside `f` is resumed as-is so CI shows the real assertion
+/// failure, not a bogus "deadlock" label.
+fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    use std::sync::mpsc::RecvTimeoutError;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(out) => {
+            handle.join().expect("runner thread panicked after reporting");
+            out
+        }
+        Err(RecvTimeoutError::Disconnected) => match handle.join() {
+            Err(panic) => std::panic::resume_unwind(panic),
+            Ok(_) => unreachable!("runner dropped the channel without sending"),
+        },
+        Err(RecvTimeoutError::Timeout) => {
+            panic!("timed out after {secs}s — transport deadlock?")
+        }
+    }
+}
+
+fn serial_report(strategy: &str) -> RunReport {
+    let spec = spec_with_sets(strategy);
+    let engine = Engine::native();
+    let rt = engine.model("mlp").unwrap();
+    let (tr, va) = daso::data::for_model(
+        &rt.spec,
+        spec.train.train_samples,
+        spec.train.val_samples,
+        spec.train.seed,
+    )
+    .unwrap();
+    let mut strategy = spec.build_strategy();
+    train(&rt, &spec.train, &*tr, &*va, strategy.as_mut()).unwrap()
+}
+
+/// Spawn the node-1 peer as a real `daso` process with the same run
+/// shape, joined through the env handshake.
+fn spawn_peer(addr: &str, strategy: &str) -> Child {
+    let exe = env!("CARGO_BIN_EXE_daso");
+    let mut args = vec![
+        "train".to_string(),
+        "--model".into(),
+        "mlp".into(),
+        "--strategy".into(),
+        strategy.into(),
+        "--executor".into(),
+        "multiprocess".into(),
+    ];
+    for set in SETS {
+        args.push("--set".into());
+        args.push(set.to_string());
+    }
+    Command::new(exe)
+        .args(&args)
+        .env(ENV_COORD_ADDR, addr)
+        .env(ENV_NODE_ID, "1")
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawning the peer daso process")
+}
+
+/// Run the 2x2 cluster: this process as coordinator (library API), one
+/// child process as node 1 (binary + env handshake).
+fn multiprocess_report(strategy: &str) -> RunReport {
+    let spec = spec_with_sets(strategy);
+    let engine = Engine::native();
+    let rt = engine.model("mlp").unwrap();
+    let (tr, va) = daso::data::for_model(
+        &rt.spec,
+        spec.train.train_samples,
+        spec.train.val_samples,
+        spec.train.seed,
+    )
+    .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut child = spawn_peer(&addr, strategy);
+    let factory = spec.build_rank_strategies();
+    let mut transport =
+        TcpTransport::coordinator(spec.train.topology(), listener, Duration::from_secs(60));
+    let result = train_with_transport(&rt, &spec.train, &*tr, &*va, &factory, &mut transport);
+    let report = match result {
+        Ok(r) => r.expect("the coordinator hosts rank 0 and owns the report"),
+        Err(e) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            panic!("coordinator failed: {e:#}");
+        }
+    };
+    let status = child.wait().expect("reaping the peer process");
+    assert!(status.success(), "peer process exited with {status}");
+    report
+}
+
+#[test]
+fn multiprocess_horovod_matches_serial_bitwise() {
+    with_timeout(240, || {
+        let serial = serial_report("horovod");
+        let multi = multiprocess_report("horovod");
+        assert_eq!(serial.world, multi.world);
+        assert_eq!(serial.final_params.len(), multi.final_params.len());
+        for (w, (a, b)) in serial.final_params.iter().zip(&multi.final_params).enumerate() {
+            assert_eq!(a, b, "worker {w} parameters diverged between serial and tcp");
+        }
+        for (a, b) in serial.records.iter().zip(&multi.records) {
+            assert_eq!(a.train_loss, b.train_loss, "epoch {} loss diverged", a.epoch);
+            assert_eq!(a.lr, b.lr, "epoch {} lr diverged", a.epoch);
+            assert_eq!(a.sim_time_s, b.sim_time_s, "epoch {} sim time diverged", a.epoch);
+        }
+        assert_eq!(serial.final_metric, multi.final_metric);
+        assert_eq!(serial.comm.global_syncs, multi.comm.global_syncs);
+        assert_eq!(serial.comm.blocking_syncs, multi.comm.blocking_syncs);
+        assert!(multi.comm.blocking_syncs > 0);
+    });
+}
+
+#[test]
+fn multiprocess_daso_cycling_trains_over_tcp() {
+    with_timeout(240, || {
+        let multi = multiprocess_report("daso");
+        assert_eq!(multi.world, 4);
+        assert_eq!(multi.records.len(), 3);
+        assert!(
+            multi.comm.nonblocking_syncs > 0,
+            "the cycling phase must exercise the async mailbox over tcp: {:?}",
+            multi.comm
+        );
+        assert!(multi.final_metric > 0.5, "{}", multi.summary_line());
+        for params in &multi.final_params {
+            assert!(params.iter().all(|v| v.is_finite()));
+        }
+    });
+}
+
+#[test]
+fn multiprocess_missing_peer_is_a_bounded_error() {
+    with_timeout(60, || {
+        let mut spec = spec_with_sets("horovod");
+        spec.set("comm_timeout_ms=500").unwrap();
+        let engine = Engine::native();
+        let rt = engine.model("mlp").unwrap();
+        let (tr, va) = daso::data::for_model(
+            &rt.spec,
+            spec.train.train_samples,
+            spec.train.val_samples,
+            spec.train.seed,
+        )
+        .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let factory = spec.build_rank_strategies();
+        let mut transport = TcpTransport::coordinator(
+            spec.train.topology(),
+            listener,
+            Duration::from_millis(500),
+        );
+        let err = train_with_transport(&rt, &spec.train, &*tr, &*va, &factory, &mut transport)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("peer"), "root cause should name the missing peer: {err}");
+    });
+}
+
+#[test]
+fn launch_cli_end_to_end() {
+    with_timeout(240, || {
+        let exe = env!("CARGO_BIN_EXE_daso");
+        let out_dir = std::env::temp_dir().join(format!("daso_launch_e2e_{}", std::process::id()));
+        let output = Command::new(exe)
+            .args([
+                "launch",
+                "--nodes",
+                "2",
+                "--workers-per-node",
+                "2",
+                "--model",
+                "mlp",
+                "--strategy",
+                "horovod",
+                "--set",
+                "epochs=2",
+                "--set",
+                "train.train_samples=512",
+                "--set",
+                "train.val_samples=128",
+                "--out",
+            ])
+            .arg(&out_dir)
+            .output()
+            .expect("running daso launch");
+        assert!(
+            output.status.success(),
+            "daso launch failed\nstderr: {}",
+            String::from_utf8_lossy(&output.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&output.stdout);
+        assert!(stdout.contains("world=4"), "summary should report 4 workers: {stdout}");
+        let json = std::fs::read_to_string(out_dir.join("mlp_horovod.json"))
+            .expect("launch writes the run json on the coordinator");
+        assert!(json.contains("\"final_metric\""), "{json}");
+        std::fs::remove_dir_all(&out_dir).ok();
+    });
+}
