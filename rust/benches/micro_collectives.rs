@@ -4,6 +4,8 @@
 //! `DASO_BENCH_QUICK=1` runs a reduced configuration (the CI smoke job).
 
 use daso::bench_support::{write_bench_json, Bench};
+use daso::comm::channels::Payload;
+use daso::comm::transport::wire::{decode_body, encode_body, Frame};
 use daso::comm::{naive_mean, ring_allreduce_mean, sum_buffers, Wire};
 use daso::util::rng::Rng;
 
@@ -51,6 +53,39 @@ fn main() {
             let refs: Vec<&Vec<f32>> = base.iter().collect();
             std::hint::black_box(sum_buffers(&refs));
         }));
+    }
+
+    // frame encode/decode: the TCP transport's per-collective cost. The
+    // f32 rows exercise the bulk little-endian copies; the bf16/f16 rows
+    // the cast-at-the-frame-boundary path. bytes_on_wire records the
+    // encoded body size per wire mode (the compression-ratio trajectory).
+    let frame_lens: &[usize] = if quick { &[1_000_000] } else { &[1_000_000, 4_000_000] };
+    for &len in frame_lens {
+        let payload = make_bufs(1, len).pop().unwrap();
+        for wire in [Wire::F32, Wire::Bf16, Wire::F16] {
+            let frame = Frame::Gather {
+                comm: 1,
+                member: 0,
+                clock: 0.0,
+                payload: Payload::F32(payload.clone()),
+            };
+            let body = encode_body(&frame, wire);
+            let bytes_on_wire = body.len() as u64;
+            results.push(
+                bench
+                    .run(&format!("wire_encode n={len} {}", wire.name()), || {
+                        std::hint::black_box(encode_body(&frame, wire));
+                    })
+                    .with_bytes_on_wire(bytes_on_wire),
+            );
+            results.push(
+                bench
+                    .run(&format!("wire_decode n={len} {}", wire.name()), || {
+                        std::hint::black_box(decode_body(&body).expect("valid body"));
+                    })
+                    .with_bytes_on_wire(bytes_on_wire),
+            );
+        }
     }
     write_bench_json("micro_collectives", &results).expect("bench artifact");
     println!("micro_collectives OK");

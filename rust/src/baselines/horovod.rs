@@ -44,6 +44,14 @@ impl Strategy for Horovod {
         let world = ctx.cluster.world();
         let n = ctx.rt.spec.n_params;
         let wire_bytes = n * self.cfg.wire.bytes_per_elem();
+        // the flat ring spans nodes, so its frames take the transport
+        // wire's cast (ctx.global_wire is already resolved to F32 on
+        // single-node topologies); the counters report the true frame
+        // bytes, while the cost model keeps charging the paper's f16
+        // packaging either way
+        let multi_node = ctx.cluster.topo.nodes > 1;
+        let transport_wire = ctx.global_wire;
+        let frame_bytes = n * transport_wire.bytes_per_elem();
 
         if world > 1 {
             // blocking collective: everyone waits for the slowest (account
@@ -54,15 +62,19 @@ impl Strategy for Horovod {
             }
             ctx.cluster.barrier();
             let mut bufs: Vec<&mut Vec<f32>> = ctx.grads.iter_mut().collect();
+            // transport packaging: mirror GroupComm's cast roundtrips on
+            // both legs of the exchange (no-ops at the default f32 wire)
+            for b in bufs.iter_mut() {
+                transport_wire.quantize(b);
+            }
             ring_allreduce_mean(&mut bufs, self.cfg.wire);
+            for b in bufs.iter_mut() {
+                transport_wire.quantize(b);
+            }
 
             // flat ring spans nodes: inter-node tier is the bottleneck
             // (single-node runs ride the intra tier)
-            let link = if ctx.cluster.topo.nodes > 1 {
-                &ctx.fabric.inter
-            } else {
-                &ctx.fabric.intra
-            };
+            let link = if multi_node { &ctx.fabric.inter } else { &ctx.fabric.intra };
             let cast_dt = if self.cfg.wire.bytes_per_elem() < 4 {
                 2.0 * cast_time(n * 4, DEVICE_MEM_BW)
             } else {
@@ -72,13 +84,19 @@ impl Strategy for Horovod {
                 fused_allreduce_time(world, wire_bytes, self.cfg.fusion_bucket_bytes, link);
             for w in &mut ctx.cluster.workers {
                 w.advance_clock(cast_dt + ring_dt);
-                if ctx.cluster.topo.nodes > 1 {
-                    w.bytes_sent_inter += wire_bytes as u64;
+                if multi_node {
+                    w.bytes_sent_inter += frame_bytes as u64;
                 } else {
                     w.bytes_sent_intra += wire_bytes as u64;
                 }
             }
-            self.stats.bytes_inter += (world * wire_bytes) as u64;
+            // a single-node ring never touches the inter tier: its bytes
+            // belong to the intra counter, matching the per-worker split
+            if multi_node {
+                self.stats.bytes_inter += (world * frame_bytes) as u64;
+            } else {
+                self.stats.bytes_intra += (world * wire_bytes) as u64;
+            }
             self.stats.global_syncs += 1;
             self.stats.blocking_syncs += 1;
         }
@@ -125,6 +143,12 @@ impl RankStrategy for HorovodRank {
         let world = ctx.topo.world();
         let n = ctx.rt.spec.n_params;
         let wire_bytes = n * self.cfg.wire.bytes_per_elem();
+        // the world communicator applies the transport wire's cast
+        // (ctx.global_wire is already resolved to F32 on single-node
+        // topologies); count the true frame bytes — the cost model keeps
+        // the paper's f16 packaging
+        let multi_node = ctx.topo.nodes > 1;
+        let frame_bytes = n * ctx.global_wire.bytes_per_elem();
 
         if world > 1 {
             // blocking collective: everyone waits for the slowest
@@ -138,7 +162,7 @@ impl RankStrategy for HorovodRank {
             })?;
             *ctx.grad = out.into_f32();
 
-            let link = if ctx.topo.nodes > 1 { &ctx.fabric.inter } else { &ctx.fabric.intra };
+            let link = if multi_node { &ctx.fabric.inter } else { &ctx.fabric.intra };
             let cast_dt = if self.cfg.wire.bytes_per_elem() < 4 {
                 2.0 * cast_time(n * 4, DEVICE_MEM_BW)
             } else {
@@ -152,12 +176,14 @@ impl RankStrategy for HorovodRank {
             // the bit-identity contract to cover sim times
             self.stats.comm_wait_s += ctx.worker.wait_until(before);
             ctx.worker.advance_clock(cast_dt + ring_dt);
-            if ctx.topo.nodes > 1 {
-                ctx.worker.bytes_sent_inter += wire_bytes as u64;
+            if multi_node {
+                ctx.worker.bytes_sent_inter += frame_bytes as u64;
+                self.stats.bytes_inter += frame_bytes as u64;
             } else {
+                // single-node rings never touch the inter tier
                 ctx.worker.bytes_sent_intra += wire_bytes as u64;
+                self.stats.bytes_intra += wire_bytes as u64;
             }
-            self.stats.bytes_inter += wire_bytes as u64;
             self.stats.global_syncs += 1;
             self.stats.blocking_syncs += 1;
         }

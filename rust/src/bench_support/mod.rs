@@ -29,9 +29,19 @@ pub struct BenchResult {
     pub std_s: f64,
     pub p50_s: f64,
     pub p99_s: f64,
+    /// bytes one payload of the measured operation occupies on the wire
+    /// (None for benches without a wire leg) — lets the perf trajectory
+    /// capture compression ratios alongside timings
+    pub bytes_on_wire: Option<u64>,
 }
 
 impl BenchResult {
+    /// Annotate this result with its payload's bytes-on-wire.
+    pub fn with_bytes_on_wire(mut self, bytes: u64) -> BenchResult {
+        self.bytes_on_wire = Some(bytes);
+        self
+    }
+
     pub fn row(&self) -> String {
         format!(
             "{:<40} {:>8} iters  mean {:>10}  p50 {:>10}  p99 {:>10}  (+/- {:>9})",
@@ -86,6 +96,7 @@ impl Bench {
             std_s: std_dev(&samples),
             p50_s: percentile(&samples, 50.0),
             p99_s: percentile(&samples, 99.0),
+            bytes_on_wire: None,
         };
         println!("{}", result.row());
         result
@@ -93,10 +104,11 @@ impl Bench {
 }
 
 /// Schema identifier for machine-readable bench artifacts (bump on any
-/// layout change).
-pub const BENCH_SCHEMA: &str = "daso-bench/1";
+/// layout change). Version 2 adds the optional per-result
+/// `bytes_on_wire` field (wire-compression trajectory).
+pub const BENCH_SCHEMA: &str = "daso-bench/2";
 
-/// Serialize bench results as a `daso-bench/1` artifact: schema version,
+/// Serialize bench results as a `daso-bench/2` artifact: schema version,
 /// commit + environment fingerprint, per-result stats, and a sha256 over
 /// the canonical (compact) results array — the manifest idiom, so a
 /// result file is verifiable against the bytes it summarizes.
@@ -105,14 +117,18 @@ pub fn bench_json(name: &str, results: &[BenchResult]) -> Value {
         results
             .iter()
             .map(|r| {
-                obj(vec![
+                let mut fields = vec![
                     ("name", s(&r.name)),
                     ("iters", num(r.iters as f64)),
                     ("mean_s", num(r.mean_s)),
                     ("std_s", num(r.std_s)),
                     ("p50_s", num(r.p50_s)),
                     ("p99_s", num(r.p99_s)),
-                ])
+                ];
+                if let Some(b) = r.bytes_on_wire {
+                    fields.push(("bytes_on_wire", num(b as f64)));
+                }
+                obj(fields)
             })
             .collect(),
     );
@@ -189,14 +205,27 @@ mod tests {
 
     #[test]
     fn bench_json_artifact_roundtrips_and_verifies() {
-        let results = vec![BenchResult {
-            name: "probe".into(),
-            iters: 5,
-            mean_s: 0.25,
-            std_s: 0.01,
-            p50_s: 0.24,
-            p99_s: 0.3,
-        }];
+        let results = vec![
+            BenchResult {
+                name: "probe".into(),
+                iters: 5,
+                mean_s: 0.25,
+                std_s: 0.01,
+                p50_s: 0.24,
+                p99_s: 0.3,
+                bytes_on_wire: None,
+            },
+            BenchResult {
+                name: "wire-probe".into(),
+                iters: 5,
+                mean_s: 0.5,
+                std_s: 0.02,
+                p50_s: 0.5,
+                p99_s: 0.6,
+                bytes_on_wire: None,
+            }
+            .with_bytes_on_wire(2048),
+        ];
         let dir = std::env::temp_dir().join(format!("daso_bench_json_{}", std::process::id()));
         let path = write_bench_json_to(&dir, "unit_probe", &results).unwrap();
         assert!(path.file_name().unwrap().to_str().unwrap() == "BENCH_unit_probe.json");
@@ -204,9 +233,11 @@ mod tests {
         assert_eq!(v.req_str("schema").unwrap(), BENCH_SCHEMA);
         assert_eq!(v.req_str("bench").unwrap(), "unit_probe");
         let rows = v.req_arr("results").unwrap();
-        assert_eq!(rows.len(), 1);
+        assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].req_str("name").unwrap(), "probe");
         assert_eq!(rows[0].req_f64("mean_s").unwrap(), 0.25);
+        assert!(rows[0].req_f64("bytes_on_wire").is_err(), "absent when not annotated");
+        assert_eq!(rows[1].req_f64("bytes_on_wire").unwrap(), 2048.0);
         // the recorded sha must match a recomputation over the results
         let recomputed =
             sha256_hex(arr(rows.to_vec()).to_string_compact().as_bytes());

@@ -112,6 +112,11 @@ COMMANDS:
                               TCP launch via DASO_COORD_ADDR/DASO_NODE_ID)
                   --transport channels|tcp  override the executor-implied
                               transport (validation only)
+                  --wire f32|bf16|f16       wire format for the global
+                              (inter-node) tier's parameter frames
+                              (default f32 or DASO_GLOBAL_WIRE; bf16/f16
+                              halve bytes on the wire and are negotiated
+                              in the multiprocess handshake)
                   --config <file.json>      JSON config (see config module)
                   --set key=value           override (repeatable; e.g.
                               comm_timeout_ms=... bounds rendezvous waits)

@@ -158,8 +158,11 @@ mod threaded {
         val_data: &dyn Dataset,
         factory: &RankStrategyFactory,
     ) -> Result<RunReport> {
-        let mut transport =
-            ChannelTransport::new(cfg.topology(), Duration::from_millis(cfg.comm_timeout_ms));
+        let mut transport = ChannelTransport::new(
+            cfg.topology(),
+            Duration::from_millis(cfg.comm_timeout_ms),
+            cfg.global_wire,
+        );
         let report = train_with_transport(rt, cfg, train_data, val_data, factory, &mut transport)?;
         Ok(report.expect("the single-process transport hosts rank 0"))
     }
@@ -183,7 +186,7 @@ mod threaded {
             topo.nodes
         );
         let timeout = Duration::from_millis(cfg.comm_timeout_ms);
-        let mut transport = TcpTransport::from_role(topo, role, timeout)?;
+        let mut transport = TcpTransport::from_role(topo, role, timeout, cfg.global_wire)?;
         train_with_transport(rt, cfg, train_data, val_data, factory, &mut transport)
     }
 
@@ -198,7 +201,8 @@ mod threaded {
         listener: TcpListener,
     ) -> Result<RunReport> {
         let timeout = Duration::from_millis(cfg.comm_timeout_ms);
-        let mut transport = TcpTransport::coordinator(cfg.topology(), listener, timeout);
+        let mut transport =
+            TcpTransport::coordinator(cfg.topology(), listener, timeout, cfg.global_wire);
         let report = train_with_transport(rt, cfg, train_data, val_data, factory, &mut transport)?;
         Ok(report.expect("the coordinator hosts rank 0"))
     }
@@ -388,6 +392,14 @@ mod threaded {
     ) -> Result<RankOutput> {
         let topo = cfg.topology();
         let batch = rt.spec.batch;
+        // effective wire, resolved once: single-node topologies have no
+        // inter tier (the transports wire their communicators with the
+        // same rule, and the serial trainer resolves identically)
+        let global_wire = if topo.nodes > 1 {
+            cfg.global_wire
+        } else {
+            crate::comm::Wire::F32
+        };
         let mut worker = Worker::new(
             topo.rank_of(rank),
             init,
@@ -423,6 +435,7 @@ mod threaded {
                     lr,
                     epoch,
                     global_batch,
+                    global_wire,
                 };
                 strategy.on_batch(&mut ctx)?;
             }
@@ -486,6 +499,7 @@ mod threaded {
                 lr: lr_sched.lr() as f32,
                 epoch: cfg.epochs,
                 global_batch,
+                global_wire,
             };
             strategy.finalize(&mut ctx)?;
         }

@@ -43,6 +43,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Result};
 
+use super::collectives::Wire;
 use super::topology::Topology;
 use super::transport::default_comm_timeout;
 
@@ -89,6 +90,14 @@ impl Payload {
         match self {
             Payload::F64(v) => v,
             other => panic!("payload type mismatch: expected f64, got {other:?}"),
+        }
+    }
+
+    /// Apply `wire`'s cast roundtrip to an f32 payload. Bookkeeping f64
+    /// and empty payloads are never compressed; `Wire::F32` is a no-op.
+    pub fn quantize(&mut self, wire: Wire) {
+        if let Payload::F32(v) = self {
+            wire.quantize(v);
         }
     }
 }
@@ -144,6 +153,11 @@ pub struct GroupComm {
     size: usize,
     index: usize,
     timeout: Duration,
+    /// wire packaging for f32 payloads: every contribution is cast at
+    /// the member boundary and the reduced result again on the way back
+    /// — the same roundtrip on every transport, so channels and tcp
+    /// stay bit-identical at every wire setting
+    wire: Wire,
     role: Role,
 }
 
@@ -155,11 +169,17 @@ impl GroupComm {
     }
 
     /// Build handles for a `size`-member group bounding every rendezvous
-    /// wait by `timeout`.
+    /// wait by `timeout` (uncompressed f32 wire).
     pub fn group_with_timeout(size: usize, timeout: Duration) -> Vec<GroupComm> {
+        Self::group_with_wire(size, timeout, Wire::F32)
+    }
+
+    /// Build handles for a `size`-member group whose f32 payloads are
+    /// packaged as `wire` on both legs of the rendezvous.
+    pub fn group_with_wire(size: usize, timeout: Duration, wire: Wire) -> Vec<GroupComm> {
         assert!(size >= 1);
         if size == 1 {
-            return vec![GroupComm { size: 1, index: 0, timeout, role: Role::Solo }];
+            return vec![GroupComm { size: 1, index: 0, timeout, wire, role: Role::Solo }];
         }
         let (gather_tx, gather_rx) = channel::<GatherMsg>();
         // the leader keeps its own result in place, so index 0 has no sink
@@ -175,6 +195,7 @@ impl GroupComm {
             size,
             index: 0,
             timeout,
+            wire,
             role: Role::Leader { gather_rx, result_txs },
         });
         for (i, result_rx) in result_rxs.into_iter().enumerate() {
@@ -182,6 +203,7 @@ impl GroupComm {
                 size,
                 index: i + 1,
                 timeout,
+                wire,
                 role: Role::Member { gather_tx: local_gather_tx(gather_tx.clone()), result_rx },
             });
         }
@@ -199,6 +221,7 @@ impl GroupComm {
         local: &[usize],
         remote: BTreeMap<usize, ScatterSender>,
         timeout: Duration,
+        wire: Wire,
     ) -> (Vec<GroupComm>, Sender<GatherMsg>) {
         assert_eq!(local.first(), Some(&0), "the group leader must be hosted locally");
         assert_eq!(local.len() + remote.len(), size, "members must cover the group");
@@ -219,6 +242,7 @@ impl GroupComm {
             size,
             index: 0,
             timeout,
+            wire,
             role: Role::Leader { gather_rx, result_txs },
         });
         for (m, result_rx) in local_rxs {
@@ -226,6 +250,7 @@ impl GroupComm {
                 size,
                 index: m,
                 timeout,
+                wire,
                 role: Role::Member { gather_tx: local_gather_tx(gather_tx.clone()), result_rx },
             });
         }
@@ -241,9 +266,10 @@ impl GroupComm {
         gather_tx: GatherSender,
         result_rx: Receiver<ScatterMsg>,
         timeout: Duration,
+        wire: Wire,
     ) -> GroupComm {
         assert!(index > 0 && index < size, "remote member index out of range");
-        GroupComm { size, index, timeout, role: Role::Member { gather_tx, result_rx } }
+        GroupComm { size, index, timeout, wire, role: Role::Member { gather_tx, result_rx } }
     }
 
     pub fn size(&self) -> usize {
@@ -261,18 +287,24 @@ impl GroupComm {
     /// member must pass an equivalent closure.
     pub fn exchange<F>(
         &self,
-        payload: Payload,
+        mut payload: Payload,
         clock: f64,
         reduce: F,
     ) -> Result<(Payload, Vec<f64>)>
     where
         F: FnOnce(&mut [Payload]) -> Result<()>,
     {
+        // wire packaging: cast this member's contribution at the
+        // boundary. Remote contributions were cast on their side (and
+        // crossed the socket losslessly), so the leader reduces over
+        // uniformly quantized buffers on every transport.
+        payload.quantize(self.wire);
         match &self.role {
             Role::Solo => {
                 let mut bufs = [payload];
                 reduce(&mut bufs)?;
-                let [payload] = bufs;
+                let [mut payload] = bufs;
+                payload.quantize(self.wire);
                 Ok((payload, vec![clock]))
             }
             Role::Member { gather_tx, result_rx } => {
@@ -309,6 +341,12 @@ impl GroupComm {
                     clocks[msg.index] = msg.clock;
                 }
                 reduce(&mut bufs)?;
+                // cast the reduced results for the return leg — one
+                // roundtrip per member, identical for local and remote
+                // members (remote frames then encode the cast exactly)
+                for b in bufs.iter_mut() {
+                    b.quantize(self.wire);
+                }
                 for (i, tx) in result_txs.iter().enumerate() {
                     if let Some(tx) = tx {
                         let payload = std::mem::take(&mut bufs[i]);
@@ -389,6 +427,9 @@ struct AsyncShared {
     /// how many members collect in this process (round garbage bound)
     local_collectors: usize,
     size: usize,
+    /// wire packaging: snapshots are cast at `contribute`, the completed
+    /// sum again before delivery — same roundtrip on every transport
+    wire: Wire,
 }
 
 impl AsyncShared {
@@ -436,6 +477,9 @@ impl AsyncShared {
                         *o += v;
                     }
                 }
+                // return-leg packaging: the sum travels in the wire
+                // format (remote frames then encode the cast exactly)
+                self.wire.quantize(&mut sum);
                 let start = round.clocks.iter().fold(0.0f64, |a, &b| a.max(b));
                 let sum = Arc::new(sum);
                 round.ready = Some((sum.clone(), start + wire_dt));
@@ -484,6 +528,7 @@ pub struct AsyncGroup {
     size: usize,
     index: usize,
     timeout: Duration,
+    wire: Wire,
     inner: AsyncInner,
 }
 
@@ -506,10 +551,22 @@ impl AsyncGroup {
         Self::group_with_timeout(size, default_comm_timeout())
     }
 
-    /// In-process mailbox group bounding every `collect` by `timeout`.
+    /// In-process mailbox group bounding every `collect` by `timeout`
+    /// (uncompressed f32 wire).
     pub fn group_with_timeout(size: usize, timeout: Duration) -> Vec<AsyncGroup> {
-        let (members, _) =
-            Self::assemble_spanning(size, &(0..size).collect::<Vec<_>>(), BTreeMap::new(), timeout);
+        Self::group_with_wire(size, timeout, Wire::F32)
+    }
+
+    /// In-process mailbox group whose snapshots and sums are packaged as
+    /// `wire`.
+    pub fn group_with_wire(size: usize, timeout: Duration, wire: Wire) -> Vec<AsyncGroup> {
+        let (members, _) = Self::assemble_spanning(
+            size,
+            &(0..size).collect::<Vec<_>>(),
+            BTreeMap::new(),
+            timeout,
+            wire,
+        );
         members
     }
 
@@ -523,6 +580,7 @@ impl AsyncGroup {
         local: &[usize],
         remote: BTreeMap<usize, AsyncResultSender>,
         timeout: Duration,
+        wire: Wire,
     ) -> (Vec<AsyncGroup>, AsyncInjector) {
         assert!(size >= 1);
         assert_eq!(local.len() + remote.len(), size, "members must cover the group");
@@ -536,6 +594,7 @@ impl AsyncGroup {
             remote,
             local_collectors: local.len(),
             size,
+            wire,
         });
         let members = local
             .iter()
@@ -543,6 +602,7 @@ impl AsyncGroup {
                 size,
                 index,
                 timeout,
+                wire,
                 inner: AsyncInner::Shared(shared.clone()),
             })
             .collect();
@@ -556,11 +616,13 @@ impl AsyncGroup {
         send: AsyncSendSender,
         result_rx: Receiver<AsyncResultMsg>,
         timeout: Duration,
+        wire: Wire,
     ) -> AsyncGroup {
         AsyncGroup {
             size,
             index,
             timeout,
+            wire,
             inner: AsyncInner::Remote {
                 send,
                 result_rx,
@@ -581,7 +643,10 @@ impl AsyncGroup {
     /// `sum_buffers`) and the round's virtual finish time becomes
     /// `max(member clocks) + wire_dt`. Errors surface an unreachable
     /// aggregator (dead coordinator process).
-    pub fn contribute(&self, snapshot: Vec<f32>, clock: f64, wire_dt: f64) -> Result<()> {
+    pub fn contribute(&self, mut snapshot: Vec<f32>, clock: f64, wire_dt: f64) -> Result<()> {
+        // wire packaging: cast the snapshot at the member boundary (the
+        // remote frame then encodes the cast exactly)
+        self.wire.quantize(&mut snapshot);
         match &self.inner {
             AsyncInner::Shared(shared) => {
                 shared.deposit(self.index, None, snapshot, clock, wire_dt)
@@ -664,9 +729,14 @@ pub struct RankComms {
 }
 
 /// Build the two-tier communicator set for every rank of `topo`, all in
-/// this process (the `channels` transport).
-pub fn build_comms(topo: &Topology, timeout: Duration) -> Vec<RankComms> {
-    let world = GroupComm::group_with_timeout(topo.world(), timeout);
+/// this process (the `channels` transport). `wire` packages the f32
+/// payloads of every communicator that crosses the node boundary (the
+/// world group and the global groups + mailboxes); node-local
+/// communicators always ride uncompressed f32.
+pub fn build_comms(topo: &Topology, timeout: Duration, wire: Wire) -> Vec<RankComms> {
+    // single-node topologies have no inter tier: nothing to compress
+    let global_wire = if topo.nodes > 1 { wire } else { Wire::F32 };
+    let world = GroupComm::group_with_wire(topo.world(), timeout, global_wire);
     let mut nodes: Vec<Option<GroupComm>> = (0..topo.world()).map(|_| None).collect();
     for node in 0..topo.nodes {
         let handles = GroupComm::group_with_timeout(topo.gpus_per_node, timeout);
@@ -677,8 +747,8 @@ pub fn build_comms(topo: &Topology, timeout: Duration) -> Vec<RankComms> {
     let mut globals: Vec<Option<(GroupComm, AsyncGroup)>> =
         (0..topo.world()).map(|_| None).collect();
     for g in 0..topo.n_groups() {
-        let handles = GroupComm::group_with_timeout(topo.nodes, timeout);
-        let asyncs = AsyncGroup::group_with_timeout(topo.nodes, timeout);
+        let handles = GroupComm::group_with_wire(topo.nodes, timeout, global_wire);
+        let asyncs = AsyncGroup::group_with_wire(topo.nodes, timeout, global_wire);
         for ((handle, mailbox), r) in handles.into_iter().zip(asyncs).zip(topo.group_members(g)) {
             globals[r] = Some((handle, mailbox));
         }
@@ -933,9 +1003,80 @@ mod tests {
     }
 
     #[test]
+    fn wired_group_quantizes_both_legs() {
+        // bf16 wire: contributions are cast before the reduce, the mean
+        // again on the way back — on every member, local or remote
+        let n = 3;
+        let handles = GroupComm::group_with_wire(n, default_comm_timeout(), Wire::Bf16);
+        // member i contributes raw * (i + 1): none bf16-representable,
+        // and the mean of the quantized inputs is not bf16-representable
+        // either, so both casts are observable
+        let raw = 1.2345678f32;
+        let outs = spawn_members(handles, move |i, comm| {
+            let (out, _) = comm
+                .exchange(Payload::F32(vec![raw * (i + 1) as f32]), 0.0, |bufs| {
+                    let refs: Vec<&Vec<f32>> = bufs.iter().map(|b| b.as_f32()).collect();
+                    let mean = naive_mean(&refs);
+                    for b in bufs.iter_mut() {
+                        *b = Payload::F32(mean.clone());
+                    }
+                    Ok(())
+                })
+                .unwrap();
+            out.into_f32()[0]
+        });
+        // serial-mirror oracle: quantize each contribution, mean, then
+        // quantize the result
+        let quantized: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                let mut v = vec![raw * (i + 1) as f32];
+                Wire::Bf16.quantize(&mut v);
+                v
+            })
+            .collect();
+        let mut expect = naive_mean(&quantized.iter().collect::<Vec<_>>());
+        Wire::Bf16.quantize(&mut expect);
+        for out in outs {
+            assert_eq!(out.to_bits(), expect[0].to_bits());
+        }
+    }
+
+    #[test]
+    fn wired_async_group_quantizes_snapshots_and_sum() {
+        let g = AsyncGroup::group_with_wire(2, default_comm_timeout(), Wire::Bf16);
+        let raw = 1.2345678f32;
+        g[0].contribute(vec![raw], 0.0, 0.0).unwrap();
+        g[1].contribute(vec![raw], 0.0, 0.0).unwrap();
+        let mut q = vec![raw];
+        Wire::Bf16.quantize(&mut q);
+        let mut expect = vec![q[0] + q[0]];
+        Wire::Bf16.quantize(&mut expect);
+        for mb in &g {
+            let (sum, _) = mb.collect().unwrap();
+            assert_eq!(sum[0].to_bits(), expect[0].to_bits());
+        }
+    }
+
+    #[test]
+    fn f32_wire_is_the_identity() {
+        // the default wire must not perturb a single bit
+        let handles = GroupComm::group_with_wire(2, default_comm_timeout(), Wire::F32);
+        let vals = [1.2345678f32, 3.0e-39];
+        let outs = spawn_members(handles, move |i, comm| {
+            let (out, _) = comm
+                .exchange(Payload::F32(vec![vals[i]]), 0.0, |_| Ok(()))
+                .unwrap();
+            out.into_f32()[0]
+        });
+        for (i, out) in outs.iter().enumerate() {
+            assert_eq!(out.to_bits(), vals[i].to_bits());
+        }
+    }
+
+    #[test]
     fn build_comms_assigns_consistent_indices() {
         let topo = Topology::new(3, 4);
-        let comms = build_comms(&topo, Duration::from_secs(60));
+        let comms = build_comms(&topo, Duration::from_secs(60), Wire::F32);
         assert_eq!(comms.len(), 12);
         for (r, c) in comms.iter().enumerate() {
             let rank = topo.rank_of(r);

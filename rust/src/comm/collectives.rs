@@ -6,9 +6,13 @@
 //! order matches hardware collectives, not a naive serial sum), and the
 //! wire-format wrappers apply the paper's 16-bit compression exactly.
 
+use anyhow::{bail, Result};
+
 use crate::util::half;
 
-/// Wire format for a collective (the paper's message packaging).
+/// Wire format for a collective (the paper's message packaging) — and,
+/// since the transport grew payload compression, for the physical frames
+/// of the global tier (`--wire f32|bf16|f16`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Wire {
     F32,
@@ -19,6 +23,23 @@ pub enum Wire {
 }
 
 impl Wire {
+    pub fn parse(s: &str) -> Result<Wire> {
+        Ok(match s {
+            "f32" | "fp32" | "float32" => Wire::F32,
+            "f16" | "fp16" | "half" => Wire::F16,
+            "bf16" | "bfloat16" => Wire::Bf16,
+            other => bail!("unknown wire format {other:?} (valid values: f32, bf16, f16)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Wire::F32 => "f32",
+            Wire::F16 => "f16",
+            Wire::Bf16 => "bf16",
+        }
+    }
+
     pub fn bytes_per_elem(&self) -> usize {
         match self {
             Wire::F32 => 4,
@@ -33,6 +54,19 @@ impl Wire {
             Wire::F16 => half::roundtrip_f16(buf),
             Wire::Bf16 => half::roundtrip_bf16(buf),
         }
+    }
+
+    /// Quantized copies of each buffer — the serial executors' mirror of
+    /// the communicator layer casting every contribution at the member
+    /// boundary. Callers keep a zero-copy path for `Wire::F32`.
+    pub fn quantized_copies(&self, bufs: &[&Vec<f32>]) -> Vec<Vec<f32>> {
+        bufs.iter()
+            .map(|b| {
+                let mut v = (*b).clone();
+                self.quantize(&mut v);
+                v
+            })
+            .collect()
     }
 }
 
@@ -225,5 +259,18 @@ mod tests {
         assert_eq!(Wire::F32.bytes_per_elem(), 4);
         assert_eq!(Wire::F16.bytes_per_elem(), 2);
         assert_eq!(Wire::Bf16.bytes_per_elem(), 2);
+    }
+
+    #[test]
+    fn wire_parse_roundtrips_and_rejects() {
+        for w in [Wire::F32, Wire::F16, Wire::Bf16] {
+            assert_eq!(Wire::parse(w.name()).unwrap(), w);
+        }
+        assert_eq!(Wire::parse("bfloat16").unwrap(), Wire::Bf16);
+        assert_eq!(Wire::parse("fp16").unwrap(), Wire::F16);
+        let err = Wire::parse("int8").unwrap_err().to_string();
+        for expect in ["f32", "bf16", "f16", "int8"] {
+            assert!(err.contains(expect), "{err}");
+        }
     }
 }

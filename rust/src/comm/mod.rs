@@ -17,6 +17,6 @@ pub use collectives::{broadcast, naive_mean, ring_allreduce_mean, sum_buffers, W
 pub use link::{Fabric, Link};
 pub use topology::{GroupRotation, Rank, Topology};
 pub use transport::{
-    default_comm_timeout, default_comm_timeout_ms, ChannelTransport, Transport, TransportKind,
-    Wiring,
+    default_comm_timeout, default_comm_timeout_ms, default_global_wire, ChannelTransport,
+    Transport, TransportKind, Wiring,
 };

@@ -25,6 +25,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use super::channels::{build_comms, GroupComm, RankComms};
+use super::collectives::Wire;
 use super::topology::Topology;
 
 /// Default bound on rendezvous/mailbox waits when the config does not
@@ -40,6 +41,24 @@ pub fn default_comm_timeout_ms() -> u64 {
 /// [`default_comm_timeout_ms`] as a `Duration`.
 pub fn default_comm_timeout() -> Duration {
     Duration::from_millis(default_comm_timeout_ms())
+}
+
+/// Default wire format for the global tier when the config does not set
+/// one: `DASO_GLOBAL_WIRE` in the environment (`f32|bf16|f16`), else
+/// uncompressed f32. A value that does not parse is *warned about* and
+/// ignored (this runs during default construction, which cannot fail) —
+/// a typo must not silently ship full-width frames unnoticed.
+pub fn default_global_wire() -> Wire {
+    match std::env::var("DASO_GLOBAL_WIRE") {
+        Ok(v) => match Wire::parse(&v) {
+            Ok(w) => w,
+            Err(e) => {
+                eprintln!("warning: ignoring DASO_GLOBAL_WIRE: {e:#}");
+                Wire::F32
+            }
+        },
+        Err(_) => Wire::F32,
+    }
 }
 
 /// Which transport carries the rendezvous collectives.
@@ -101,11 +120,12 @@ pub trait Transport {
 pub struct ChannelTransport {
     topo: Topology,
     timeout: Duration,
+    wire: Wire,
 }
 
 impl ChannelTransport {
-    pub fn new(topo: Topology, timeout: Duration) -> ChannelTransport {
-        ChannelTransport { topo, timeout }
+    pub fn new(topo: Topology, timeout: Duration, wire: Wire) -> ChannelTransport {
+        ChannelTransport { topo, timeout, wire }
     }
 }
 
@@ -123,7 +143,9 @@ impl Transport for ChannelTransport {
     }
 
     fn connect(&mut self) -> Result<Wiring> {
-        let rank_comms = build_comms(&self.topo, self.timeout);
+        let rank_comms = build_comms(&self.topo, self.timeout, self.wire);
+        // the control group is report plumbing, not the training fabric:
+        // it always rides uncompressed f32
         let control = GroupComm::group_with_timeout(1, self.timeout)
             .pop()
             .expect("solo control group");
@@ -153,9 +175,18 @@ mod tests {
     }
 
     #[test]
+    fn default_global_wire_is_f32() {
+        // only assert when the env does not override (tests run
+        // multi-threaded in one process: never set env here)
+        if std::env::var("DASO_GLOBAL_WIRE").is_err() {
+            assert_eq!(default_global_wire(), Wire::F32);
+        }
+    }
+
+    #[test]
     fn channel_transport_hosts_the_whole_world() {
         let topo = Topology::new(2, 3);
-        let mut t = ChannelTransport::new(topo, Duration::from_secs(5));
+        let mut t = ChannelTransport::new(topo, Duration::from_secs(5), Wire::F32);
         assert_eq!(t.kind(), TransportKind::Channels);
         assert_eq!(t.node(), 0);
         assert_eq!(t.hosted_ranks(), (0..6).collect::<Vec<_>>());

@@ -38,6 +38,7 @@ use crate::comm::channels::{
     AsyncGroup, AsyncInjector, AsyncResultMsg, AsyncResultSender, AsyncSendMsg, AsyncSendSender,
     GatherMsg, GatherSender, GroupComm, RankComms, ScatterMsg, ScatterSender,
 };
+use crate::comm::collectives::Wire;
 use crate::comm::topology::Topology;
 
 use super::wire::{read_frame, write_async_sum, write_frame, Frame, PROTOCOL_VERSION};
@@ -103,14 +104,25 @@ impl PeerLink {
         PeerLink { writer: Arc::new(Mutex::new(stream)) }
     }
 
-    fn send(&self, frame: &Frame) -> Result<()> {
+    /// Write one frame, encoding f32 payloads as `wire` — the negotiated
+    /// global wire for collective frames, `Wire::F32` for the control
+    /// group's report plumbing.
+    fn send(&self, frame: &Frame, wire: Wire) -> Result<()> {
         let mut w = self.writer.lock().unwrap();
-        write_frame(&mut *w, frame)
+        write_frame(&mut *w, frame, wire)
     }
 
-    fn send_async_sum(&self, comm: u32, member: u32, seq: u64, finish: f64, sum: &[f32]) -> Result<()> {
+    fn send_async_sum(
+        &self,
+        comm: u32,
+        member: u32,
+        seq: u64,
+        finish: f64,
+        sum: &[f32],
+        wire: Wire,
+    ) -> Result<()> {
         let mut w = self.writer.lock().unwrap();
-        write_async_sum(&mut *w, comm, member, seq, finish, sum)
+        write_async_sum(&mut *w, comm, member, seq, finish, sum, wire)
     }
 }
 
@@ -127,42 +139,64 @@ pub struct TcpTransport {
     topo: Topology,
     node: usize,
     timeout: Duration,
+    /// wire format for the global tier's f32 payloads, verified against
+    /// every peer in the HELLO/WELCOME handshake
+    wire: Wire,
     mode: Mode,
 }
 
 impl TcpTransport {
     /// Node-0 side, around an already-bound listener (the launcher binds
     /// before spawning peers so the advertised address is never racy).
-    pub fn coordinator(topo: Topology, listener: TcpListener, timeout: Duration) -> TcpTransport {
-        TcpTransport { topo, node: 0, timeout, mode: Mode::Coordinator { listener } }
+    pub fn coordinator(
+        topo: Topology,
+        listener: TcpListener,
+        timeout: Duration,
+        wire: Wire,
+    ) -> TcpTransport {
+        TcpTransport { topo, node: 0, timeout, wire, mode: Mode::Coordinator { listener } }
     }
 
     /// Peer side for `node` (1-based among nodes), dialing `addr` with
     /// retries until the coordinator is up or the timeout expires.
-    pub fn peer(topo: Topology, node: usize, addr: &str, timeout: Duration) -> Result<TcpTransport> {
+    pub fn peer(
+        topo: Topology,
+        node: usize,
+        addr: &str,
+        timeout: Duration,
+        wire: Wire,
+    ) -> Result<TcpTransport> {
         ensure!(
             node >= 1 && node < topo.nodes,
             "peer node id {node} out of range 1..{}",
             topo.nodes
         );
-        Ok(TcpTransport { topo, node, timeout, mode: Mode::Peer { addr: addr.to_string() } })
+        Ok(TcpTransport { topo, node, timeout, wire, mode: Mode::Peer { addr: addr.to_string() } })
     }
 
     /// Build from the env handshake: node 0 binds the advertised
     /// address, everyone else dials it.
-    pub fn from_role(topo: Topology, role: &TcpRole, timeout: Duration) -> Result<TcpTransport> {
+    pub fn from_role(
+        topo: Topology,
+        role: &TcpRole,
+        timeout: Duration,
+        wire: Wire,
+    ) -> Result<TcpTransport> {
         if role.node == 0 {
             let listener = TcpListener::bind(&role.addr)
                 .with_context(|| format!("binding coordinator listener on {}", role.addr))?;
-            Ok(TcpTransport::coordinator(topo, listener, timeout))
+            Ok(TcpTransport::coordinator(topo, listener, timeout, wire))
         } else {
-            TcpTransport::peer(topo, role.node, &role.addr, timeout)
+            TcpTransport::peer(topo, role.node, &role.addr, timeout, wire)
         }
     }
 
     fn connect_coordinator(&self, listener: TcpListener) -> Result<Wiring> {
         let topo = self.topo;
         let (nodes, gpn, world) = (topo.nodes, topo.gpus_per_node, topo.world());
+        // a 1-node launch has no inter tier: nothing to compress (same
+        // rule as the channels transport, so executors stay bit-identical)
+        let wire = if nodes > 1 { self.wire } else { Wire::F32 };
         let timeout = self.timeout;
         let deadline = Instant::now() + timeout;
         listener.set_nonblocking(true).context("making listener pollable")?;
@@ -200,7 +234,7 @@ impl TcpTransport {
                         }
                     };
                     let node = match hello {
-                        Frame::Hello { version, node, nodes: n, gpus_per_node: g } => {
+                        Frame::Hello { version, node, nodes: n, gpus_per_node: g, wire: w } => {
                             ensure!(
                                 version == PROTOCOL_VERSION,
                                 "peer {peer_addr} speaks wire protocol {version}, \
@@ -210,6 +244,13 @@ impl TcpTransport {
                                 n as usize == nodes && g as usize == gpn,
                                 "peer {peer_addr} was launched for a {n}x{g} cluster, \
                                  the coordinator expects {nodes}x{gpn}"
+                            );
+                            ensure!(
+                                w == wire,
+                                "peer {peer_addr} was launched with --wire {}, \
+                                 the coordinator expects --wire {}",
+                                w.name(),
+                                wire.name()
                             );
                             let node = node as usize;
                             ensure!(
@@ -235,7 +276,9 @@ impl TcpTransport {
                             version: PROTOCOL_VERSION,
                             nodes: nodes as u32,
                             gpus_per_node: gpn as u32,
+                            wire,
                         },
+                        wire,
                     )?;
                     reader.set_read_timeout(None).ok();
                     writers[node] = Some(PeerLink::new(writer));
@@ -257,15 +300,20 @@ impl TcpTransport {
         }
 
         let link_to = |node: usize| writers[node].clone().expect("peer link");
-        let scatter_to = |node: usize, comm: u32, member: usize| -> ScatterSender {
+        // collective frames ride the negotiated wire; the control group's
+        // report frames always ride f32 (they are not the training fabric)
+        let scatter_to = |node: usize, comm: u32, member: usize, wire: Wire| -> ScatterSender {
             let link = link_to(node);
             Box::new(move |msg: ScatterMsg| {
-                link.send(&Frame::Scatter {
-                    comm,
-                    member: member as u32,
-                    clocks: msg.clocks,
-                    payload: msg.payload,
-                })
+                link.send(
+                    &Frame::Scatter {
+                        comm,
+                        member: member as u32,
+                        clocks: msg.clocks,
+                        payload: msg.payload,
+                    },
+                    wire,
+                )
             })
         };
 
@@ -276,10 +324,10 @@ impl TcpTransport {
         let world_local: Vec<usize> = (0..gpn).collect();
         let mut remote: BTreeMap<usize, ScatterSender> = BTreeMap::new();
         for r in gpn..world {
-            remote.insert(r, scatter_to(topo.rank_of(r).node, world_comm_id(), r));
+            remote.insert(r, scatter_to(topo.rank_of(r).node, world_comm_id(), r, wire));
         }
         let (world_handles, world_port) =
-            GroupComm::assemble_spanning(world, &world_local, remote, timeout);
+            GroupComm::assemble_spanning(world, &world_local, remote, timeout, wire);
         gather_ports.insert(world_comm_id(), world_port);
 
         // one global (blocking + mailbox) group per local id; members
@@ -289,9 +337,10 @@ impl TcpTransport {
         for g in 0..gpn {
             let mut remote: BTreeMap<usize, ScatterSender> = BTreeMap::new();
             for nd in 1..nodes {
-                remote.insert(nd, scatter_to(nd, global_comm_id(g), nd));
+                remote.insert(nd, scatter_to(nd, global_comm_id(g), nd, wire));
             }
-            let (mut handles, port) = GroupComm::assemble_spanning(nodes, &[0], remote, timeout);
+            let (mut handles, port) =
+                GroupComm::assemble_spanning(nodes, &[0], remote, timeout, wire);
             gather_ports.insert(global_comm_id(g), port);
             global_handles.push(handles.pop().expect("global leader handle"));
 
@@ -302,12 +351,12 @@ impl TcpTransport {
                 remote.insert(
                     nd,
                     Box::new(move |seq, sum: Arc<Vec<f32>>, finish| {
-                        link.send_async_sum(comm, nd as u32, seq, finish, &sum)
+                        link.send_async_sum(comm, nd as u32, seq, finish, &sum, wire)
                     }),
                 );
             }
             let (mut handles, injector) =
-                AsyncGroup::assemble_spanning(nodes, &[0], remote, timeout);
+                AsyncGroup::assemble_spanning(nodes, &[0], remote, timeout, wire);
             async_injectors.insert(async_comm_id(g, gpn), injector);
             async_handles.push(handles.pop().expect("local mailbox handle"));
         }
@@ -315,9 +364,10 @@ impl TcpTransport {
         // control group: one member per process, for report aggregation
         let mut remote: BTreeMap<usize, ScatterSender> = BTreeMap::new();
         for nd in 1..nodes {
-            remote.insert(nd, scatter_to(nd, control_comm_id(gpn), nd));
+            remote.insert(nd, scatter_to(nd, control_comm_id(gpn), nd, Wire::F32));
         }
-        let (mut handles, port) = GroupComm::assemble_spanning(nodes, &[0], remote, timeout);
+        let (mut handles, port) =
+            GroupComm::assemble_spanning(nodes, &[0], remote, timeout, Wire::F32);
         gather_ports.insert(control_comm_id(gpn), port);
         let control = handles.pop().expect("control leader handle");
 
@@ -354,6 +404,7 @@ impl TcpTransport {
         let topo = self.topo;
         let node = self.node;
         let (nodes, gpn) = (topo.nodes, topo.gpus_per_node);
+        let wire = self.wire;
         let timeout = self.timeout;
         let deadline = Instant::now() + timeout;
 
@@ -412,16 +463,24 @@ impl TcpTransport {
                 node: node as u32,
                 nodes: nodes as u32,
                 gpus_per_node: gpn as u32,
+                wire,
             },
+            wire,
         )?;
         match read_frame(&mut reader)
             .context("waiting for coordinator WELCOME (topology mismatch or dead coordinator?)")?
         {
-            Frame::Welcome { version, nodes: n, gpus_per_node: g } => {
+            Frame::Welcome { version, nodes: n, gpus_per_node: g, wire: w } => {
                 ensure!(
                     version == PROTOCOL_VERSION && n as usize == nodes && g as usize == gpn,
                     "coordinator runs wire protocol {version} on a {n}x{g} cluster; \
                      this peer expects protocol {PROTOCOL_VERSION} on {nodes}x{gpn}"
+                );
+                ensure!(
+                    w == wire,
+                    "coordinator runs --wire {}, this peer was launched with --wire {}",
+                    w.name(),
+                    wire.name()
                 );
             }
             other => bail!("expected WELCOME, got {}", other.name()),
@@ -429,15 +488,18 @@ impl TcpTransport {
         reader.set_read_timeout(None).ok();
         let link = PeerLink::new(writer);
 
-        let gather_via = |comm: u32| -> GatherSender {
+        let gather_via = |comm: u32, wire: Wire| -> GatherSender {
             let link = link.clone();
             Box::new(move |m: GatherMsg| {
-                link.send(&Frame::Gather {
-                    comm,
-                    member: m.index as u32,
-                    clock: m.clock,
-                    payload: m.payload,
-                })
+                link.send(
+                    &Frame::Gather {
+                        comm,
+                        member: m.index as u32,
+                        clock: m.clock,
+                        payload: m.payload,
+                    },
+                    wire,
+                )
             })
         };
 
@@ -454,15 +516,22 @@ impl TcpTransport {
             let world = GroupComm::remote_member(
                 topo.world(),
                 r,
-                gather_via(world_comm_id()),
+                gather_via(world_comm_id(), wire),
                 rx,
                 timeout,
+                wire,
             );
 
             let (tx, rx) = channel();
             scatter_ports.insert((global_comm_id(l), node as u32), tx);
-            let global =
-                GroupComm::remote_member(nodes, node, gather_via(global_comm_id(l)), rx, timeout);
+            let global = GroupComm::remote_member(
+                nodes,
+                node,
+                gather_via(global_comm_id(l), wire),
+                rx,
+                timeout,
+                wire,
+            );
 
             let (tx, rx) = channel();
             async_ports.insert((async_comm_id(l, gpn), node as u32), tx);
@@ -470,25 +539,34 @@ impl TcpTransport {
                 let link = link.clone();
                 let comm = async_comm_id(l, gpn);
                 Box::new(move |m: AsyncSendMsg| {
-                    link.send(&Frame::AsyncPut {
-                        comm,
-                        member: m.member as u32,
-                        seq: m.seq,
-                        clock: m.clock,
-                        wire_dt: m.wire_dt,
-                        snapshot: m.snapshot,
-                    })
+                    link.send(
+                        &Frame::AsyncPut {
+                            comm,
+                            member: m.member as u32,
+                            seq: m.seq,
+                            clock: m.clock,
+                            wire_dt: m.wire_dt,
+                            snapshot: m.snapshot,
+                        },
+                        wire,
+                    )
                 })
             };
-            let global_async = AsyncGroup::remote_member(nodes, node, send, rx, timeout);
+            let global_async = AsyncGroup::remote_member(nodes, node, send, rx, timeout, wire);
 
             rank_comms.push(RankComms { world, node: node_comm, global, global_async });
         }
 
         let (tx, rx) = channel();
         scatter_ports.insert((control_comm_id(gpn), node as u32), tx);
-        let control =
-            GroupComm::remote_member(nodes, node, gather_via(control_comm_id(gpn)), rx, timeout);
+        let control = GroupComm::remote_member(
+            nodes,
+            node,
+            gather_via(control_comm_id(gpn), Wire::F32),
+            rx,
+            timeout,
+            Wire::F32,
+        );
 
         std::thread::Builder::new()
             .name(format!("daso-demux-peer{node}"))
@@ -666,7 +744,7 @@ mod tests {
         let addr = listener.local_addr().unwrap().to_string();
 
         let peer = std::thread::spawn(move || {
-            let mut t = TcpTransport::peer(topo, 1, &addr, timeout).unwrap();
+            let mut t = TcpTransport::peer(topo, 1, &addr, timeout, Wire::F32).unwrap();
             assert_eq!(t.hosted_ranks(), vec![2, 3]);
             let Wiring { rank_comms, control } = t.connect().unwrap();
             let outs = drive(rank_comms, topo, 1);
@@ -674,7 +752,7 @@ mod tests {
             (outs, ctl)
         });
 
-        let mut t = TcpTransport::coordinator(topo, listener, timeout);
+        let mut t = TcpTransport::coordinator(topo, listener, timeout, Wire::F32);
         assert_eq!(t.kind(), TransportKind::Tcp);
         assert_eq!(t.hosted_ranks(), vec![0, 1]);
         let Wiring { rank_comms, control } = t.connect().unwrap();
@@ -700,10 +778,49 @@ mod tests {
     }
 
     #[test]
+    fn tcp_transport_collectives_roundtrip_bf16_wire() {
+        // same schedule over a bf16-negotiated link: every value in the
+        // fixed schedule is bf16-representable, so results must be exact
+        // even though payloads physically cross as 16-bit codes
+        let topo = Topology::new(2, 2);
+        let timeout = Duration::from_secs(30);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+
+        let peer = std::thread::spawn(move || {
+            let mut t = TcpTransport::peer(topo, 1, &addr, timeout, Wire::Bf16).unwrap();
+            let Wiring { rank_comms, control } = t.connect().unwrap();
+            let outs = drive(rank_comms, topo, 1);
+            let ctl = control_sum(&control, 1);
+            (outs, ctl)
+        });
+
+        let mut t = TcpTransport::coordinator(topo, listener, timeout, Wire::Bf16);
+        let Wiring { rank_comms, control } = t.connect().unwrap();
+        let outs = drive(rank_comms, topo, 0);
+        let ctl = control_sum(&control, 0);
+
+        for (l, &(w, g, a)) in outs.iter().enumerate() {
+            assert_eq!(w, 2.5);
+            assert_eq!(g, 5.0 + l as f32);
+            assert_eq!(a, 2.0 * l as f32 + 2.0);
+        }
+        // the control group's f64 report frames are never compressed
+        assert_eq!(ctl.into_f64(), vec![3.0]);
+        let (peer_outs, _) = peer.join().expect("peer thread");
+        for (l, &(w, g, a)) in peer_outs.iter().enumerate() {
+            assert_eq!(w, 2.5);
+            assert_eq!(g, 5.0 + l as f32);
+            assert_eq!(a, 2.0 * l as f32 + 2.0);
+        }
+    }
+
+    #[test]
     fn coordinator_connect_times_out_without_peers() {
         let topo = Topology::new(2, 1);
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let mut t = TcpTransport::coordinator(topo, listener, Duration::from_millis(200));
+        let mut t =
+            TcpTransport::coordinator(topo, listener, Duration::from_millis(200), Wire::F32);
         let err = t.connect().unwrap_err().to_string();
         assert!(err.contains("waiting for 1 peer"), "{err}");
     }
@@ -713,17 +830,82 @@ mod tests {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let coord = std::thread::spawn(move || {
-            let mut t =
-                TcpTransport::coordinator(Topology::new(2, 2), listener, Duration::from_secs(10));
+            let mut t = TcpTransport::coordinator(
+                Topology::new(2, 2),
+                listener,
+                Duration::from_secs(10),
+                Wire::F32,
+            );
             t.connect().map(|_| ())
         });
         let mut p =
-            TcpTransport::peer(Topology::new(2, 3), 1, &addr, Duration::from_secs(10)).unwrap();
+            TcpTransport::peer(Topology::new(2, 3), 1, &addr, Duration::from_secs(10), Wire::F32)
+                .unwrap();
         let peer_result = p.connect().map(|_| ());
         let coord_result = coord.join().expect("coordinator thread");
         let cerr = coord_result.unwrap_err().to_string();
         assert!(cerr.contains("2x3"), "{cerr}");
         assert!(peer_result.is_err(), "peer must not come up against a mismatched coordinator");
+    }
+
+    #[test]
+    fn handshake_rejects_wire_mismatch() {
+        // same topology, different --wire: both sides must fail fast
+        // instead of silently mixing f32 and bf16 frames
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let coord = std::thread::spawn(move || {
+            let mut t = TcpTransport::coordinator(
+                Topology::new(2, 2),
+                listener,
+                Duration::from_secs(10),
+                Wire::Bf16,
+            );
+            t.connect().map(|_| ())
+        });
+        let mut p =
+            TcpTransport::peer(Topology::new(2, 2), 1, &addr, Duration::from_secs(10), Wire::F32)
+                .unwrap();
+        let peer_result = p.connect().map(|_| ());
+        let cerr = coord.join().expect("coordinator thread").unwrap_err().to_string();
+        assert!(cerr.contains("--wire f32"), "{cerr}");
+        assert!(cerr.contains("--wire bf16"), "{cerr}");
+        assert!(peer_result.is_err(), "peer must not come up against a mismatched wire");
+    }
+
+    #[test]
+    fn handshake_rejects_version_1_peer() {
+        // a protocol-1 peer (17-byte HELLO, no wire field) against a
+        // version-2 coordinator must produce a clear version error — not
+        // corrupt a rendezvous, not hang
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let coord = std::thread::spawn(move || {
+            let mut t = TcpTransport::coordinator(
+                Topology::new(2, 2),
+                listener,
+                Duration::from_secs(10),
+                Wire::F32,
+            );
+            t.connect().map(|_| ())
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        // hand-crafted v1 HELLO: [len=17][tag=1][version=1][node=1][nodes=2][gpn=2]
+        let mut body = vec![1u8];
+        for v in [1u32, 1, 2, 2] {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&body);
+        use std::io::Write as _;
+        stream.write_all(&frame).unwrap();
+        stream.flush().unwrap();
+        let cerr = coord.join().expect("coordinator thread").unwrap_err().to_string();
+        assert!(
+            cerr.contains("protocol 1") && cerr.contains("2"),
+            "error should name both protocol versions: {cerr}"
+        );
+        drop(stream);
     }
 
     #[test]
@@ -734,7 +916,8 @@ mod tests {
             l.local_addr().unwrap().to_string()
         };
         let topo = Topology::new(2, 1);
-        let mut p = TcpTransport::peer(topo, 1, &addr, Duration::from_millis(200)).unwrap();
+        let mut p =
+            TcpTransport::peer(topo, 1, &addr, Duration::from_millis(200), Wire::F32).unwrap();
         assert!(p.connect().is_err());
     }
 

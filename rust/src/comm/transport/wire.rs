@@ -5,9 +5,20 @@
 //! little-endian, so f32/f64 buffers cross the wire losslessly — the
 //! bit-identity contract of the blocking strategies survives the
 //! process boundary. Collective payloads are tagged
-//! (empty/f32/f64) + length + raw elements; the mailbox messages carry
-//! per-member sequence numbers so overlapping non-blocking rounds pair
-//! up correctly on both sides.
+//! (empty/f32/f64/bf16/f16) + length + raw elements; the mailbox
+//! messages carry per-member sequence numbers so overlapping
+//! non-blocking rounds pair up correctly on both sides.
+//!
+//! **Wire compression** (protocol 2): f32 payloads can be cast to
+//! bfloat16 or IEEE fp16 at the frame boundary (`PAYLOAD_BF16` /
+//! `PAYLOAD_F16`), halving the bytes a parameter buffer occupies on the
+//! global tier — the paper's bf16 packaging made physical. The encoder
+//! casts with the `util::half` kernels; because the communicator layer
+//! quantizes values with the same kernels before they reach the frame
+//! boundary, the cast is exact and the decode reproduces bit-identical
+//! f32s on the far side. The wire format is negotiated in the
+//! HELLO/WELCOME handshake (both sides must be launched with the same
+//! `--wire`), so mismatched peers fail fast.
 //!
 //! The format is symmetric (both directions use the same framing) and
 //! versioned through the HELLO/WELCOME handshake, which also carries the
@@ -19,9 +30,13 @@ use std::io::{Read, Write};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::comm::channels::Payload;
+use crate::comm::Wire;
+use crate::util::half;
 
 /// Bumped on any change to the framing or message layout.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// Version 2: compressed payload kinds + the negotiated wire format in
+/// HELLO/WELCOME.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Upper bound on a frame body (sanity check against corrupt length
 /// prefixes; generously above any model's parameter buffer).
@@ -37,14 +52,35 @@ const TAG_ASYNC_SUM: u8 = 6;
 const PAYLOAD_EMPTY: u8 = 0;
 const PAYLOAD_F32: u8 = 1;
 const PAYLOAD_F64: u8 = 2;
+const PAYLOAD_BF16: u8 = 3;
+const PAYLOAD_F16: u8 = 4;
+
+/// Handshake code for a [`Wire`] format (u8 on the wire).
+fn wire_code(w: Wire) -> u8 {
+    match w {
+        Wire::F32 => 0,
+        Wire::Bf16 => 1,
+        Wire::F16 => 2,
+    }
+}
+
+fn wire_from_code(c: u8) -> Result<Wire> {
+    Ok(match c {
+        0 => Wire::F32,
+        1 => Wire::Bf16,
+        2 => Wire::F16,
+        other => bail!("unknown wire-format code {other}"),
+    })
+}
 
 /// One transport message.
 #[derive(Debug)]
 pub enum Frame {
-    /// Peer -> coordinator: identify and verify the launch topology.
-    Hello { version: u32, node: u32, nodes: u32, gpus_per_node: u32 },
+    /// Peer -> coordinator: identify and verify the launch topology +
+    /// wire format.
+    Hello { version: u32, node: u32, nodes: u32, gpus_per_node: u32, wire: Wire },
     /// Coordinator -> peer: handshake accepted.
-    Welcome { version: u32, nodes: u32, gpus_per_node: u32 },
+    Welcome { version: u32, nodes: u32, gpus_per_node: u32, wire: Wire },
     /// Member -> leader: one rendezvous contribution.
     Gather { comm: u32, member: u32, clock: f64, payload: Payload },
     /// Leader -> member: the reduced result + all members' clocks.
@@ -83,6 +119,15 @@ fn put_f64(out: &mut Vec<u8>, v: f64) {
 
 fn put_f32_slice(out: &mut Vec<u8>, v: &[f32]) {
     put_u64(out, v.len() as u64);
+    // bulk copy on the hot collective path: on little-endian targets an
+    // f32 buffer's bytes are already the wire representation
+    #[cfg(target_endian = "little")]
+    {
+        let bytes =
+            unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 4) };
+        out.extend_from_slice(bytes);
+    }
+    #[cfg(not(target_endian = "little"))]
     for x in v {
         out.extend_from_slice(&x.to_le_bytes());
     }
@@ -90,18 +135,54 @@ fn put_f32_slice(out: &mut Vec<u8>, v: &[f32]) {
 
 fn put_f64_slice(out: &mut Vec<u8>, v: &[f64]) {
     put_u64(out, v.len() as u64);
+    #[cfg(target_endian = "little")]
+    {
+        let bytes =
+            unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 8) };
+        out.extend_from_slice(bytes);
+    }
+    #[cfg(not(target_endian = "little"))]
     for x in v {
         out.extend_from_slice(&x.to_le_bytes());
     }
 }
 
-fn put_payload(out: &mut Vec<u8>, p: &Payload) {
-    match p {
-        Payload::Empty => out.push(PAYLOAD_EMPTY),
-        Payload::F32(v) => {
+/// Append `v` as 16-bit codes (length prefix + one `enc(x)` per element).
+fn put_u16_slice_with(out: &mut Vec<u8>, v: &[f32], enc: fn(f32) -> u16) {
+    put_u64(out, v.len() as u64);
+    let start = out.len();
+    out.resize(start + v.len() * 2, 0);
+    for (c, x) in out[start..].chunks_exact_mut(2).zip(v) {
+        c.copy_from_slice(&enc(*x).to_le_bytes());
+    }
+}
+
+/// Append an f32 buffer as a tagged payload in the negotiated wire
+/// format — the cast-at-the-frame-boundary step. Values already
+/// quantized by the communicator layer cross losslessly.
+fn put_f32_payload(out: &mut Vec<u8>, v: &[f32], wire: Wire) {
+    match wire {
+        Wire::F32 => {
             out.push(PAYLOAD_F32);
             put_f32_slice(out, v);
         }
+        Wire::Bf16 => {
+            out.push(PAYLOAD_BF16);
+            put_u16_slice_with(out, v, half::f32_to_bf16);
+        }
+        Wire::F16 => {
+            out.push(PAYLOAD_F16);
+            put_u16_slice_with(out, v, half::f32_to_f16);
+        }
+    }
+}
+
+fn put_payload(out: &mut Vec<u8>, p: &Payload, wire: Wire) {
+    match p {
+        Payload::Empty => out.push(PAYLOAD_EMPTY),
+        Payload::F32(v) => put_f32_payload(out, v, wire),
+        // f64 payloads are bookkeeping (loss sums, stat counters), never
+        // parameter-sized: they ride uncompressed at any wire setting
         Payload::F64(v) => {
             out.push(PAYLOAD_F64);
             put_f64_slice(out, v);
@@ -154,13 +235,38 @@ impl<'a> Cursor<'a> {
     fn f32_vec(&mut self) -> Result<Vec<f32>> {
         let n = self.len_prefix()?;
         let raw = self.take(n * 4)?;
-        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        let mut out = vec![0.0f32; n];
+        // bulk decode mirrors the bulk encode above
+        #[cfg(target_endian = "little")]
+        unsafe {
+            std::ptr::copy_nonoverlapping(raw.as_ptr(), out.as_mut_ptr().cast::<u8>(), n * 4);
+        }
+        #[cfg(not(target_endian = "little"))]
+        for (o, c) in out.iter_mut().zip(raw.chunks_exact(4)) {
+            *o = f32::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(out)
     }
 
     fn f64_vec(&mut self) -> Result<Vec<f64>> {
         let n = self.len_prefix()?;
         let raw = self.take(n * 8)?;
-        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+        let mut out = vec![0.0f64; n];
+        #[cfg(target_endian = "little")]
+        unsafe {
+            std::ptr::copy_nonoverlapping(raw.as_ptr(), out.as_mut_ptr().cast::<u8>(), n * 8);
+        }
+        #[cfg(not(target_endian = "little"))]
+        for (o, c) in out.iter_mut().zip(raw.chunks_exact(8)) {
+            *o = f64::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(out)
+    }
+
+    fn f32_vec_from_u16(&mut self, dec: fn(u16) -> f32) -> Result<Vec<f32>> {
+        let n = self.len_prefix()?;
+        let raw = self.take(n * 2)?;
+        Ok(raw.chunks_exact(2).map(|c| dec(u16::from_le_bytes([c[0], c[1]]))).collect())
     }
 
     fn payload(&mut self) -> Result<Payload> {
@@ -168,8 +274,18 @@ impl<'a> Cursor<'a> {
             PAYLOAD_EMPTY => Payload::Empty,
             PAYLOAD_F32 => Payload::F32(self.f32_vec()?),
             PAYLOAD_F64 => Payload::F64(self.f64_vec()?),
+            PAYLOAD_BF16 => Payload::F32(self.f32_vec_from_u16(half::bf16_to_f32)?),
+            PAYLOAD_F16 => Payload::F32(self.f32_vec_from_u16(half::f16_to_f32)?),
             other => bail!("unknown payload kind {other}"),
         })
+    }
+
+    /// A payload that must decode to an f32 buffer (mailbox frames).
+    fn f32_payload(&mut self) -> Result<Vec<f32>> {
+        match self.payload()? {
+            Payload::F32(v) => Ok(v),
+            other => bail!("expected an f32 payload, got {other:?}"),
+        }
     }
 
     fn finish(&self) -> Result<()> {
@@ -178,59 +294,67 @@ impl<'a> Cursor<'a> {
     }
 }
 
-fn payload_wire_len(p: &Payload) -> usize {
-    1 + match p {
-        Payload::Empty => 0,
-        Payload::F32(v) => 8 + v.len() * 4,
-        Payload::F64(v) => 8 + v.len() * 8,
+fn f32_payload_wire_len(n: usize, wire: Wire) -> usize {
+    1 + 8 + n * wire.bytes_per_elem()
+}
+
+fn payload_wire_len(p: &Payload, wire: Wire) -> usize {
+    match p {
+        Payload::Empty => 1,
+        Payload::F32(v) => f32_payload_wire_len(v.len(), wire),
+        Payload::F64(v) => 1 + 8 + v.len() * 8,
     }
 }
 
 /// Exact body length for a frame — parameter-sized buffers ride the hot
 /// collective path, so the encoder must not grow geometrically.
-fn body_len(frame: &Frame) -> usize {
+fn body_len(frame: &Frame, wire: Wire) -> usize {
     match frame {
-        Frame::Hello { .. } => 17,
-        Frame::Welcome { .. } => 13,
-        Frame::Gather { payload, .. } => 17 + payload_wire_len(payload),
+        Frame::Hello { .. } => 18,
+        Frame::Welcome { .. } => 14,
+        Frame::Gather { payload, .. } => 17 + payload_wire_len(payload, wire),
         Frame::Scatter { clocks, payload, .. } => {
-            17 + clocks.len() * 8 + payload_wire_len(payload)
+            17 + clocks.len() * 8 + payload_wire_len(payload, wire)
         }
-        Frame::AsyncPut { snapshot, .. } => 41 + snapshot.len() * 4,
-        Frame::AsyncSum { sum, .. } => 33 + sum.len() * 4,
+        Frame::AsyncPut { snapshot, .. } => 33 + f32_payload_wire_len(snapshot.len(), wire),
+        Frame::AsyncSum { sum, .. } => 25 + f32_payload_wire_len(sum.len(), wire),
     }
 }
 
-/// Serialize a frame body (without the length prefix).
-pub fn encode_body(frame: &Frame) -> Vec<u8> {
-    let mut out = Vec::with_capacity(body_len(frame));
+/// Serialize a frame body (without the length prefix). `wire` selects
+/// the payload encoding for f32 buffers; handshake frames carry their
+/// own wire field and are unaffected.
+pub fn encode_body(frame: &Frame, wire: Wire) -> Vec<u8> {
+    let mut out = Vec::with_capacity(body_len(frame, wire));
     match frame {
-        Frame::Hello { version, node, nodes, gpus_per_node } => {
+        Frame::Hello { version, node, nodes, gpus_per_node, wire: hello_wire } => {
             out.push(TAG_HELLO);
             put_u32(&mut out, *version);
             put_u32(&mut out, *node);
             put_u32(&mut out, *nodes);
             put_u32(&mut out, *gpus_per_node);
+            out.push(wire_code(*hello_wire));
         }
-        Frame::Welcome { version, nodes, gpus_per_node } => {
+        Frame::Welcome { version, nodes, gpus_per_node, wire: welcome_wire } => {
             out.push(TAG_WELCOME);
             put_u32(&mut out, *version);
             put_u32(&mut out, *nodes);
             put_u32(&mut out, *gpus_per_node);
+            out.push(wire_code(*welcome_wire));
         }
         Frame::Gather { comm, member, clock, payload } => {
             out.push(TAG_GATHER);
             put_u32(&mut out, *comm);
             put_u32(&mut out, *member);
             put_f64(&mut out, *clock);
-            put_payload(&mut out, payload);
+            put_payload(&mut out, payload, wire);
         }
         Frame::Scatter { comm, member, clocks, payload } => {
             out.push(TAG_SCATTER);
             put_u32(&mut out, *comm);
             put_u32(&mut out, *member);
             put_f64_slice(&mut out, clocks);
-            put_payload(&mut out, payload);
+            put_payload(&mut out, payload, wire);
         }
         Frame::AsyncPut { comm, member, seq, clock, wire_dt, snapshot } => {
             out.push(TAG_ASYNC_PUT);
@@ -239,7 +363,7 @@ pub fn encode_body(frame: &Frame) -> Vec<u8> {
             put_u64(&mut out, *seq);
             put_f64(&mut out, *clock);
             put_f64(&mut out, *wire_dt);
-            put_f32_slice(&mut out, snapshot);
+            put_f32_payload(&mut out, snapshot, wire);
         }
         Frame::AsyncSum { comm, member, seq, finish, sum } => {
             out.push(TAG_ASYNC_SUM);
@@ -247,24 +371,34 @@ pub fn encode_body(frame: &Frame) -> Vec<u8> {
             put_u32(&mut out, *member);
             put_u64(&mut out, *seq);
             put_f64(&mut out, *finish);
-            put_f32_slice(&mut out, sum);
+            put_f32_payload(&mut out, sum, wire);
         }
     }
     out
 }
 
-/// Parse a frame body produced by [`encode_body`].
+/// Parse a frame body produced by [`encode_body`]. No wire parameter:
+/// payload kinds are self-describing on the wire.
 pub fn decode_body(body: &[u8]) -> Result<Frame> {
     let mut c = Cursor::new(body);
     let frame = match c.u8().context("empty frame body")? {
-        TAG_HELLO => Frame::Hello {
-            version: c.u32()?,
-            node: c.u32()?,
-            nodes: c.u32()?,
-            gpus_per_node: c.u32()?,
-        },
+        TAG_HELLO => {
+            let version = c.u32()?;
+            let node = c.u32()?;
+            let nodes = c.u32()?;
+            let gpus_per_node = c.u32()?;
+            // protocol 1 had no wire byte; default it so a v1 HELLO still
+            // parses and the handshake can report the version mismatch
+            // instead of a decode error
+            let wire = if version >= 2 { wire_from_code(c.u8()?)? } else { Wire::F32 };
+            Frame::Hello { version, node, nodes, gpus_per_node, wire }
+        }
         TAG_WELCOME => {
-            Frame::Welcome { version: c.u32()?, nodes: c.u32()?, gpus_per_node: c.u32()? }
+            let version = c.u32()?;
+            let nodes = c.u32()?;
+            let gpus_per_node = c.u32()?;
+            let wire = if version >= 2 { wire_from_code(c.u8()?)? } else { Wire::F32 };
+            Frame::Welcome { version, nodes, gpus_per_node, wire }
         }
         TAG_GATHER => Frame::Gather {
             comm: c.u32()?,
@@ -284,14 +418,14 @@ pub fn decode_body(body: &[u8]) -> Result<Frame> {
             seq: c.u64()?,
             clock: c.f64()?,
             wire_dt: c.f64()?,
-            snapshot: c.f32_vec()?,
+            snapshot: c.f32_payload()?,
         },
         TAG_ASYNC_SUM => Frame::AsyncSum {
             comm: c.u32()?,
             member: c.u32()?,
             seq: c.u64()?,
             finish: c.f64()?,
-            sum: c.f32_vec()?,
+            sum: c.f32_payload()?,
         },
         other => bail!("unknown frame tag {other}"),
     };
@@ -307,9 +441,9 @@ fn write_body<W: Write>(w: &mut W, body: &[u8]) -> Result<()> {
     Ok(())
 }
 
-/// Write one length-prefixed frame.
-pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
-    write_body(w, &encode_body(frame))
+/// Write one length-prefixed frame, encoding f32 payloads in `wire`.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame, wire: Wire) -> Result<()> {
+    write_body(w, &encode_body(frame, wire))
 }
 
 /// Encode + write an `AsyncSum` frame from a borrowed sum buffer —
@@ -322,14 +456,15 @@ pub fn write_async_sum<W: Write>(
     seq: u64,
     finish: f64,
     sum: &[f32],
+    wire: Wire,
 ) -> Result<()> {
-    let mut body = Vec::with_capacity(33 + sum.len() * 4);
+    let mut body = Vec::with_capacity(25 + f32_payload_wire_len(sum.len(), wire));
     body.push(TAG_ASYNC_SUM);
     put_u32(&mut body, comm);
     put_u32(&mut body, member);
     put_u64(&mut body, seq);
     put_f64(&mut body, finish);
-    put_f32_slice(&mut body, sum);
+    put_f32_payload(&mut body, sum, wire);
     write_body(w, &body)
 }
 
@@ -349,24 +484,55 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
 mod tests {
     use super::*;
 
-    fn roundtrip(frame: Frame) -> Frame {
+    fn roundtrip_wire(frame: Frame, wire: Wire) -> Frame {
         let mut buf = Vec::new();
-        write_frame(&mut buf, &frame).unwrap();
+        write_frame(&mut buf, &frame, wire).unwrap();
         let mut r = &buf[..];
         let back = read_frame(&mut r).unwrap();
         assert!(r.is_empty(), "reader must consume the whole frame");
         back
     }
 
+    fn roundtrip(frame: Frame) -> Frame {
+        roundtrip_wire(frame, Wire::F32)
+    }
+
     #[test]
     fn hello_welcome_roundtrip() {
-        match roundtrip(Frame::Hello { version: 1, node: 3, nodes: 4, gpus_per_node: 2 }) {
-            Frame::Hello { version: 1, node: 3, nodes: 4, gpus_per_node: 2 } => {}
+        match roundtrip(Frame::Hello {
+            version: 2,
+            node: 3,
+            nodes: 4,
+            gpus_per_node: 2,
+            wire: Wire::Bf16,
+        }) {
+            Frame::Hello { version: 2, node: 3, nodes: 4, gpus_per_node: 2, wire: Wire::Bf16 } => {
+            }
             other => panic!("bad roundtrip: {other:?}"),
         }
-        match roundtrip(Frame::Welcome { version: 1, nodes: 4, gpus_per_node: 2 }) {
-            Frame::Welcome { version: 1, nodes: 4, gpus_per_node: 2 } => {}
+        match roundtrip(Frame::Welcome {
+            version: 2,
+            nodes: 4,
+            gpus_per_node: 2,
+            wire: Wire::F16,
+        }) {
+            Frame::Welcome { version: 2, nodes: 4, gpus_per_node: 2, wire: Wire::F16 } => {}
             other => panic!("bad roundtrip: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn version_1_hello_still_parses_with_f32_wire() {
+        // a protocol-1 peer's HELLO has no wire byte; decoding must
+        // surface the version (for the handshake's mismatch error), not
+        // fail as a truncated body
+        let mut body = vec![1u8]; // TAG_HELLO
+        for v in [1u32, 3, 4, 2] {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        match decode_body(&body).unwrap() {
+            Frame::Hello { version: 1, node: 3, nodes: 4, gpus_per_node: 2, wire: Wire::F32 } => {}
+            other => panic!("v1 hello decoded as {other:?}"),
         }
     }
 
@@ -403,6 +569,78 @@ mod tests {
     }
 
     #[test]
+    fn compressed_payloads_roundtrip_prequantized_bit_exact() {
+        use crate::util::half::{roundtrip_bf16, roundtrip_f16};
+        // the communicator layer quantizes before the frame boundary, so
+        // the physical cast must be lossless for pre-quantized buffers
+        let mut bf = vec![1.2345678f32, -3.25, 0.0, 1e-3, 700.0];
+        roundtrip_bf16(&mut bf);
+        match roundtrip_wire(
+            Frame::Gather { comm: 1, member: 0, clock: 0.0, payload: Payload::F32(bf.clone()) },
+            Wire::Bf16,
+        ) {
+            Frame::Gather { payload: Payload::F32(v), .. } => {
+                assert_eq!(
+                    v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    bf.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                );
+            }
+            other => panic!("bad roundtrip: {other:?}"),
+        }
+        let mut f16 = vec![0.5f32, -2.0, 1e-3, 42.0];
+        roundtrip_f16(&mut f16);
+        match roundtrip_wire(
+            Frame::Scatter {
+                comm: 2,
+                member: 1,
+                clocks: vec![1.0],
+                payload: Payload::F32(f16.clone()),
+            },
+            Wire::F16,
+        ) {
+            Frame::Scatter { payload: Payload::F32(v), .. } => assert_eq!(v, f16),
+            other => panic!("bad roundtrip: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn compressed_payloads_quantize_unprepared_values() {
+        // a raw f32 that is not bf16-representable comes back quantized —
+        // the frame boundary is where the cast physically happens
+        let raw = vec![1.2345678f32];
+        match roundtrip_wire(
+            Frame::Gather { comm: 1, member: 0, clock: 0.0, payload: Payload::F32(raw.clone()) },
+            Wire::Bf16,
+        ) {
+            Frame::Gather { payload: Payload::F32(v), .. } => {
+                assert_ne!(v[0].to_bits(), raw[0].to_bits());
+                let mut q = raw.clone();
+                crate::util::half::roundtrip_bf16(&mut q);
+                assert_eq!(v[0].to_bits(), q[0].to_bits());
+            }
+            other => panic!("bad roundtrip: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn compressed_frames_halve_payload_bytes() {
+        let vals = vec![1.0f32; 1000];
+        let frame = |payload| Frame::Gather { comm: 0, member: 0, clock: 0.0, payload };
+        let f32_len = encode_body(&frame(Payload::F32(vals.clone())), Wire::F32).len();
+        let bf16_len = encode_body(&frame(Payload::F32(vals.clone())), Wire::Bf16).len();
+        let f16_len = encode_body(&frame(Payload::F32(vals.clone())), Wire::F16).len();
+        assert_eq!(f32_len, 17 + 1 + 8 + 4000);
+        assert_eq!(bf16_len, 17 + 1 + 8 + 2000);
+        assert_eq!(f16_len, bf16_len);
+        // f64 bookkeeping payloads are never compressed
+        let f64_frame = frame(Payload::F64(vec![1.0f64; 10]));
+        assert_eq!(
+            encode_body(&f64_frame, Wire::Bf16).len(),
+            encode_body(&f64_frame, Wire::F32).len()
+        );
+    }
+
+    #[test]
     fn empty_payload_roundtrip() {
         match roundtrip(Frame::Gather {
             comm: 1,
@@ -417,47 +655,59 @@ mod tests {
 
     #[test]
     fn async_frames_roundtrip() {
-        match roundtrip(Frame::AsyncPut {
-            comm: 5,
-            member: 1,
-            seq: 42,
-            clock: 7.0,
-            wire_dt: 0.25,
-            snapshot: vec![1.0, 2.0],
-        }) {
-            Frame::AsyncPut { comm: 5, member: 1, seq: 42, clock, wire_dt, snapshot } => {
-                assert_eq!(clock, 7.0);
-                assert_eq!(wire_dt, 0.25);
-                assert_eq!(snapshot, vec![1.0, 2.0]);
+        for wire in [Wire::F32, Wire::Bf16, Wire::F16] {
+            match roundtrip_wire(
+                Frame::AsyncPut {
+                    comm: 5,
+                    member: 1,
+                    seq: 42,
+                    clock: 7.0,
+                    wire_dt: 0.25,
+                    snapshot: vec![1.0, 2.0],
+                },
+                wire,
+            ) {
+                Frame::AsyncPut { comm: 5, member: 1, seq: 42, clock, wire_dt, snapshot } => {
+                    assert_eq!(clock, 7.0);
+                    assert_eq!(wire_dt, 0.25);
+                    // 1.0 / 2.0 are exactly representable at every wire
+                    assert_eq!(snapshot, vec![1.0, 2.0]);
+                }
+                other => panic!("bad roundtrip: {other:?}"),
             }
-            other => panic!("bad roundtrip: {other:?}"),
-        }
-        match roundtrip(Frame::AsyncSum {
-            comm: 6,
-            member: 2,
-            seq: 3,
-            finish: 9.5,
-            sum: vec![4.0],
-        }) {
-            Frame::AsyncSum { comm: 6, member: 2, seq: 3, finish, sum } => {
-                assert_eq!(finish, 9.5);
-                assert_eq!(sum, vec![4.0]);
+            match roundtrip_wire(
+                Frame::AsyncSum { comm: 6, member: 2, seq: 3, finish: 9.5, sum: vec![4.0] },
+                wire,
+            ) {
+                Frame::AsyncSum { comm: 6, member: 2, seq: 3, finish, sum } => {
+                    assert_eq!(finish, 9.5);
+                    assert_eq!(sum, vec![4.0]);
+                }
+                other => panic!("bad roundtrip: {other:?}"),
             }
-            other => panic!("bad roundtrip: {other:?}"),
         }
     }
 
     #[test]
     fn write_async_sum_matches_frame_encoding() {
-        let mut via_frame = Vec::new();
-        write_frame(
-            &mut via_frame,
-            &Frame::AsyncSum { comm: 9, member: 1, seq: 7, finish: 2.5, sum: vec![1.0, -2.0] },
-        )
-        .unwrap();
-        let mut via_slice = Vec::new();
-        write_async_sum(&mut via_slice, 9, 1, 7, 2.5, &[1.0, -2.0]).unwrap();
-        assert_eq!(via_frame, via_slice);
+        for wire in [Wire::F32, Wire::Bf16, Wire::F16] {
+            let mut via_frame = Vec::new();
+            write_frame(
+                &mut via_frame,
+                &Frame::AsyncSum {
+                    comm: 9,
+                    member: 1,
+                    seq: 7,
+                    finish: 2.5,
+                    sum: vec![1.0, -2.0],
+                },
+                wire,
+            )
+            .unwrap();
+            let mut via_slice = Vec::new();
+            write_async_sum(&mut via_slice, 9, 1, 7, 2.5, &[1.0, -2.0], wire).unwrap();
+            assert_eq!(via_frame, via_slice);
+        }
     }
 
     #[test]
@@ -465,12 +715,15 @@ mod tests {
         assert!(decode_body(&[]).is_err());
         assert!(decode_body(&[99]).is_err());
         // truncated gather
-        let body = encode_body(&Frame::Gather {
-            comm: 1,
-            member: 1,
-            clock: 0.0,
-            payload: Payload::F32(vec![1.0; 16]),
-        });
+        let body = encode_body(
+            &Frame::Gather {
+                comm: 1,
+                member: 1,
+                clock: 0.0,
+                payload: Payload::F32(vec![1.0; 16]),
+            },
+            Wire::F32,
+        );
         assert!(decode_body(&body[..body.len() - 3]).is_err());
         // trailing junk
         let mut long = body.clone();
@@ -481,5 +734,12 @@ mod tests {
         buf.extend_from_slice(&(u32::MAX).to_le_bytes());
         buf.extend_from_slice(&[0u8; 16]);
         assert!(read_frame(&mut &buf[..]).is_err());
+        // unknown wire code in a v2 hello
+        let mut hello = vec![1u8];
+        for v in [2u32, 1, 2, 2] {
+            hello.extend_from_slice(&v.to_le_bytes());
+        }
+        hello.push(9); // bogus wire code
+        assert!(decode_body(&hello).is_err());
     }
 }

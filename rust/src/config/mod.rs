@@ -8,7 +8,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cluster::ExecutorKind;
-use crate::comm::{Fabric, TransportKind};
+use crate::comm::{Fabric, TransportKind, Wire};
 use crate::daso::DasoConfig;
 use crate::trainer::strategy::RankStrategyFactory;
 use crate::trainer::TrainConfig;
@@ -140,6 +140,9 @@ impl RunSpec {
             "train.verbose" | "verbose" => self.train.verbose = as_bool()?,
             "train.comm_timeout_ms" | "comm_timeout_ms" => {
                 self.train.comm_timeout_ms = (as_f64()? as u64).max(1)
+            }
+            "train.global_wire" | "global_wire" | "wire" => {
+                self.train.global_wire = Wire::parse(as_str()?)?
             }
 
             "daso.b_initial" => self.daso.b_initial = as_usize()?,
@@ -324,6 +327,22 @@ mod tests {
         assert_eq!(s.train.comm_timeout_ms, 2500);
         s.set("comm_timeout_ms=0").unwrap();
         assert_eq!(s.train.comm_timeout_ms, 1, "zero timeout is clamped");
+    }
+
+    #[test]
+    fn global_wire_override() {
+        let mut s = RunSpec::default_for("mlp");
+        // only assert the default when the env does not override it
+        if std::env::var("DASO_GLOBAL_WIRE").is_err() {
+            assert_eq!(s.train.global_wire, Wire::F32);
+        }
+        s.set("wire=bf16").unwrap();
+        assert_eq!(s.train.global_wire, Wire::Bf16);
+        s.set("global_wire=f16").unwrap();
+        assert_eq!(s.train.global_wire, Wire::F16);
+        s.set("train.global_wire=f32").unwrap();
+        assert_eq!(s.train.global_wire, Wire::F32);
+        assert!(s.set("wire=int8").is_err());
     }
 
     #[test]

@@ -13,10 +13,14 @@
 //!     tier, packaged as bf16 (Fig. 3), then broadcast node-locally
 //!     (Fig. 4).
 //!   - **Cycling** (non-blocking, every B batches): the group sends its
-//!     parameters (uncast — casting would delay the send, section 3) and
-//!     training continues; W batches later the stale sum arrives and is
-//!     blended via Eq. (1), then broadcast node-locally. B and W follow
-//!     the plateau-driven `Cycler`.
+//!     parameters and training continues; W batches later the stale sum
+//!     arrives and is blended via Eq. (1), then broadcast node-locally.
+//!     B and W follow the plateau-driven `Cycler`. The paper sends these
+//!     uncast (casting would delay the send, section 3) and the clock
+//!     model charges no cast time accordingly; with a compressed
+//!     transport wire (`--wire bf16|f16`) the snapshots and sums still
+//!     take the physical frame cast, modeled as overlapped with the
+//!     send.
 
 use anyhow::Result;
 
@@ -173,9 +177,12 @@ impl Daso {
         let group = self.rotation.advance();
         let members = topo.group_members(group);
 
-        // bf16 packaging: cast cost on each member, halves wire bytes
+        // bf16 packaging: cast cost on each member, halves wire bytes in
+        // the cost model; the byte counters report the *true* frame
+        // bytes of the configured transport wire
         let bytes_f32 = n * 4;
         let wire_bytes = n * Wire::Bf16.bytes_per_elem();
+        let frame_bytes = n * ctx.global_wire.bytes_per_elem();
         let cast_dt = 2.0 * cast_time(bytes_f32, DEVICE_MEM_BW); // pack + unpack
         ctx.cluster.ranks_barrier(&members);
         {
@@ -185,14 +192,24 @@ impl Daso {
                 .iter()
                 .map(|&r| unsafe { &mut (*ptr.add(r)).params })
                 .collect();
+            // transport packaging: mirror GroupComm's cast roundtrips —
+            // each contribution at the member boundary, the reduced
+            // result on the way back — so serial == threaded == tcp at
+            // every wire setting (no-ops at the default f32 wire)
+            for b in bufs.iter_mut() {
+                ctx.global_wire.quantize(b);
+            }
             ring_allreduce_mean(&mut bufs, Wire::Bf16);
+            for b in bufs.iter_mut() {
+                ctx.global_wire.quantize(b);
+            }
         }
         let ring_dt = ring_allreduce_time(members.len(), wire_bytes, &ctx.fabric.inter);
         for &r in &members {
             ctx.cluster.workers[r].advance_clock(cast_dt + ring_dt);
-            ctx.cluster.workers[r].bytes_sent_inter += wire_bytes as u64;
+            ctx.cluster.workers[r].bytes_sent_inter += frame_bytes as u64;
         }
-        self.stats.bytes_inter += (members.len() * wire_bytes) as u64;
+        self.stats.bytes_inter += (members.len() * frame_bytes) as u64;
 
         self.local_broadcast(ctx, group)?;
         self.stats.global_syncs += 1;
@@ -228,7 +245,9 @@ impl Daso {
     }
 
     /// Start a non-blocking global sync: snapshot + "send" the rotating
-    /// group's parameters. No cast (paper: casting delays the send).
+    /// group's parameters. The clock charges no cast time (paper:
+    /// casting delays the send), but a compressed transport wire still
+    /// casts the snapshots/sum at the frame boundary.
     fn start_nonblocking(&mut self, ctx: &mut StepCtx) {
         let topo = ctx.cluster.topo;
         if topo.nodes <= 1 {
@@ -236,14 +255,23 @@ impl Daso {
         }
         let n = ctx.rt.spec.n_params;
         let bytes = n * 4;
+        let frame_bytes = n * ctx.global_wire.bytes_per_elem();
         let group = self.rotation.advance();
         let members = topo.group_members(group);
 
-        let bufs: Vec<&Vec<f32>> = members
-            .iter()
-            .map(|&r| &ctx.cluster.workers[r].params)
-            .collect();
-        let sum = sum_buffers(&bufs);
+        // transport packaging: mirror AsyncGroup — snapshots are cast at
+        // contribute, the completed sum again before delivery. At the
+        // default f32 wire this is the zero-copy reference path.
+        let bufs: Vec<&Vec<f32>> =
+            members.iter().map(|&r| &ctx.cluster.workers[r].params).collect();
+        let sum = if ctx.global_wire == Wire::F32 {
+            sum_buffers(&bufs)
+        } else {
+            let quantized = ctx.global_wire.quantized_copies(&bufs);
+            let mut sum = sum_buffers(&quantized.iter().collect::<Vec<_>>());
+            ctx.global_wire.quantize(&mut sum);
+            sum
+        };
 
         let send_start = members
             .iter()
@@ -254,9 +282,9 @@ impl Daso {
         // the async send itself only costs the launch latency
         for &r in &members {
             ctx.cluster.workers[r].advance_clock(ctx.fabric.inter.latency_s);
-            ctx.cluster.workers[r].bytes_sent_inter += bytes as u64;
+            ctx.cluster.workers[r].bytes_sent_inter += frame_bytes as u64;
         }
-        self.stats.bytes_inter += (members.len() * bytes) as u64;
+        self.stats.bytes_inter += (members.len() * frame_bytes) as u64;
         self.inflight = Some(Inflight {
             start_batch: ctx.global_batch,
             wait: self.cycler.w,
@@ -462,7 +490,11 @@ impl DasoRank {
         }
         let n = ctx.rt.spec.n_params;
         let group = self.rotation.advance();
+        // the cost model charges the paper's bf16 packaging; the byte
+        // counters report the true frame bytes of the transport wire
+        // (the global communicator applies the matching cast roundtrips)
         let wire_bytes = n * Wire::Bf16.bytes_per_elem();
+        let frame_bytes = n * ctx.global_wire.bytes_per_elem();
         let cast_dt = 2.0 * cast_time(n * 4, DEVICE_MEM_BW); // pack + unpack
         if ctx.worker.rank.local == group {
             let payload = Payload::F32(std::mem::take(&mut ctx.worker.params));
@@ -479,8 +511,8 @@ impl DasoRank {
             let ring_dt = ring_allreduce_time(ctx.topo.nodes, wire_bytes, &ctx.fabric.inter);
             ctx.worker.wait_until(t);
             ctx.worker.advance_clock(cast_dt + ring_dt);
-            ctx.worker.bytes_sent_inter += wire_bytes as u64;
-            self.stats.bytes_inter += wire_bytes as u64;
+            ctx.worker.bytes_sent_inter += frame_bytes as u64;
+            self.stats.bytes_inter += frame_bytes as u64;
         }
         self.node_broadcast(ctx, group)?;
         self.stats.global_syncs += 1;
@@ -526,14 +558,17 @@ impl DasoRank {
     }
 
     /// Start a non-blocking global sync: the rotating group's members
-    /// deposit parameter snapshots in the mailbox (uncast — casting would
-    /// delay the send) and training continues immediately.
+    /// deposit parameter snapshots in the mailbox and training continues
+    /// immediately. The clock charges no cast time (paper: casting would
+    /// delay the send), though a compressed transport wire still casts
+    /// the snapshot at the mailbox/frame boundary.
     fn start_nonblocking(&mut self, ctx: &mut RankCtx) -> Result<()> {
         if ctx.topo.nodes <= 1 {
             return Ok(());
         }
         let n = ctx.rt.spec.n_params;
         let bytes = n * 4;
+        let frame_bytes = n * ctx.global_wire.bytes_per_elem();
         let group = self.rotation.advance();
         if ctx.worker.rank.local == group {
             let wire_dt = ring_allreduce_time(ctx.topo.nodes, bytes, &ctx.fabric.inter);
@@ -544,8 +579,8 @@ impl DasoRank {
             )?;
             // the async send itself only costs the launch latency
             ctx.worker.advance_clock(ctx.fabric.inter.latency_s);
-            ctx.worker.bytes_sent_inter += bytes as u64;
-            self.stats.bytes_inter += bytes as u64;
+            ctx.worker.bytes_sent_inter += frame_bytes as u64;
+            self.stats.bytes_inter += frame_bytes as u64;
         }
         self.inflight = Some(InflightRank {
             start_batch: ctx.global_batch,

@@ -59,6 +59,9 @@ fn build_spec(args: &Args) -> Result<RunSpec> {
     if let Some(transport) = args.get("transport") {
         spec.set(&format!("transport={transport}"))?;
     }
+    if let Some(wire) = args.get("wire") {
+        spec.set(&format!("global_wire={wire}"))?;
+    }
     if let Some(artifacts) = args.get("artifacts") {
         spec.artifacts_dir = artifacts.to_string();
     }
@@ -177,11 +180,15 @@ fn cmd_launch(args: &Args) -> Result<()> {
     }
     // forced as trailing --set entries: build_spec applies --set
     // overrides last, so a forwarded `--set executor=...` (or topology
-    // key) cannot make a child diverge from the launch
+    // key) cannot make a child diverge from the launch. The resolved
+    // wire format is forced too (covering --wire, config files and
+    // DASO_GLOBAL_WIRE on the launcher side); the HELLO/WELCOME
+    // handshake double-checks it.
     for forced in [
         "executor=multiprocess".to_string(),
         format!("nodes={nodes}"),
         format!("gpus_per_node={wpn}"),
+        format!("global_wire={}", spec.train.global_wire.name()),
     ] {
         train_args.push("--set".into());
         train_args.push(forced);

@@ -8,7 +8,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::cluster::ClusterState;
-use crate::comm::{naive_mean, Fabric, Topology};
+use crate::comm::{naive_mean, Fabric, Topology, Wire};
 use crate::data::Dataset;
 use crate::optim::LrSchedule;
 use crate::runtime::ModelRuntime;
@@ -44,6 +44,14 @@ pub struct TrainConfig {
     /// 60 s) — a dead companion thread or peer process surfaces as an
     /// error instead of a hang
     pub comm_timeout_ms: u64,
+    /// wire packaging for the global (inter-node) tier's f32 payloads
+    /// (`--wire f32|bf16|f16`, `DASO_GLOBAL_WIRE`; default f32).
+    /// bf16/f16 halve the bytes parameter frames occupy on the wire —
+    /// the paper's 16-bit packaging made physical — at the cost of the
+    /// corresponding cast roundtrip on every global collective. Applied
+    /// identically by every executor, so blocking strategies stay
+    /// bit-identical serial == threaded == tcp at every setting.
+    pub global_wire: Wire,
 }
 
 impl TrainConfig {
@@ -65,6 +73,7 @@ impl TrainConfig {
             fabric: Fabric::juwels_like(),
             verbose: false,
             comm_timeout_ms: crate::comm::default_comm_timeout_ms(),
+            global_wire: crate::comm::default_global_wire(),
         }
     }
 
@@ -156,6 +165,10 @@ pub fn train(
     let mut records = Vec::with_capacity(cfg.epochs);
     let mut global_batch = 0usize;
     let mut grads: Vec<Vec<f32>> = vec![Vec::new(); world];
+    // resolve the effective wire once: single-node topologies have no
+    // inter tier, so there is nothing to compress (the same rule every
+    // transport applies when wiring its communicators)
+    let global_wire = if topo.nodes > 1 { cfg.global_wire } else { Wire::F32 };
 
     for epoch in 0..cfg.epochs {
         strategy.on_epoch_start(epoch);
@@ -189,6 +202,7 @@ pub fn train(
                 lr,
                 epoch,
                 global_batch,
+                global_wire,
             };
             strategy.apply(&mut ctx)?;
         }
@@ -199,7 +213,7 @@ pub fn train(
 
         let do_eval = cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0;
         let (metric, val_loss) = if do_eval {
-            let acc = eval_consensus(rt, &cluster, val_data, epoch)?;
+            let acc = eval_consensus(rt, &cluster, val_data, epoch, global_wire)?;
             (Some(acc.value()), Some(acc.mean_loss()))
         } else {
             (None, None)
@@ -240,10 +254,11 @@ pub fn train(
             lr: lr_sched.lr() as f32,
             epoch: cfg.epochs,
             global_batch,
+            global_wire,
         };
         strategy.finalize(&mut ctx)?;
     }
-    let final_acc = eval_consensus(rt, &cluster, val_data, cfg.epochs)?;
+    let final_acc = eval_consensus(rt, &cluster, val_data, cfg.epochs, global_wire)?;
     let final_metric = final_acc.value();
     let best_metric = records
         .iter()
@@ -267,13 +282,28 @@ pub fn train(
 
 /// Evaluate the consensus model: the mean of all replicas' parameters
 /// (what extracting the trained network from the DPNN would produce).
+///
+/// Mirrors the threaded executors' world-group exchange: the
+/// contributions and the mean cross the global tier, so they take the
+/// wire-format cast on both legs — the same roundtrips
+/// `GroupComm::exchange` applies, keeping the consensus bit-identical
+/// across executors at every wire setting. `wire` is the *resolved*
+/// wire (the caller passes `Wire::F32` on single-node topologies, where
+/// there is no inter tier).
 fn eval_consensus(
     rt: &ModelRuntime,
     cluster: &ClusterState,
     val: &dyn Dataset,
     epoch: usize,
+    wire: Wire,
 ) -> Result<MetricAccum> {
     let bufs: Vec<&Vec<f32>> = cluster.workers.iter().map(|w| &w.params).collect();
-    let consensus = naive_mean(&bufs);
+    let mut consensus = if wire == Wire::F32 {
+        naive_mean(&bufs)
+    } else {
+        let quantized = wire.quantized_copies(&bufs);
+        naive_mean(&quantized.iter().collect::<Vec<_>>())
+    };
+    wire.quantize(&mut consensus);
     evaluate(rt, &consensus, val, epoch)
 }

@@ -10,7 +10,7 @@ use anyhow::Result;
 
 use crate::cluster::{ClusterState, Worker};
 use crate::comm::channels::RankComms;
-use crate::comm::{Fabric, Topology};
+use crate::comm::{Fabric, Topology, Wire};
 use crate::runtime::ModelRuntime;
 
 /// Cumulative communication accounting for a run.
@@ -39,6 +39,13 @@ pub struct StepCtx<'a> {
     pub epoch: usize,
     /// monotone batch counter across the whole run
     pub global_batch: usize,
+    /// transport packaging for the global tier's f32 payloads, already
+    /// resolved by the executor (`Wire::F32` on single-node topologies —
+    /// there is no inter tier): the serial executor mirrors the
+    /// communicator layer's cast roundtrips with this, so it stays
+    /// bit-identical to threaded/tcp at every wire setting (and it sizes
+    /// the true-frame-byte counters)
+    pub global_wire: Wire,
 }
 
 pub trait Strategy {
@@ -80,6 +87,11 @@ pub struct RankCtx<'a> {
     pub lr: f32,
     pub epoch: usize,
     pub global_batch: usize,
+    /// transport packaging for the global tier, already resolved by the
+    /// executor (`Wire::F32` on single-node topologies). The
+    /// communicators in `comms` apply the matching casts; strategies use
+    /// this to count the true bytes their frames occupy on the wire.
+    pub global_wire: Wire,
 }
 
 /// Per-rank strategy state machine. Every rank runs its own replica;

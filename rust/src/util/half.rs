@@ -14,10 +14,8 @@ pub fn f32_to_bf16(x: f32) -> u16 {
         // quiet NaN, preserve sign
         return ((bits >> 16) as u16) | 0x0040;
     }
-    let round_bit = 0x0000_8000u32;
     let lsb = (bits >> 16) & 1;
     let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
-    let _ = round_bit;
     (rounded >> 16) as u16
 }
 
@@ -77,15 +75,12 @@ pub fn f16_to_f32(h: u16) -> f32 {
             if frac == 0 {
                 sign
             } else {
-                // subnormal: normalize
-                let mut e = 127 - 15 - 10;
-                let mut f = frac;
-                while f & 0x0400 == 0 {
-                    f <<= 1;
-                    e -= 1;
-                }
-                f &= 0x03FF;
-                sign | (((e + 10) as u32) << 23) | (f << 13)
+                // subnormal: value = frac * 2^-24. With frac's leading one
+                // at bit p (0..=9) the value is 1.m * 2^(p-24), so the
+                // biased f32 exponent is p - 24 + 127 = p + 103.
+                let p = 31 - frac.leading_zeros();
+                let mantissa = (frac << (23 - p)) & 0x007F_FFFF;
+                sign | ((p + 103) << 23) | mantissa
             }
         }
         0x1F => sign | 0x7F80_0000 | (frac << 13),
@@ -153,10 +148,49 @@ mod tests {
     }
 
     #[test]
-    fn f16_subnormals() {
-        let tiny = 1e-7f32; // below f16 normal range
-        let rt = f16_to_f32(f32_to_f16(tiny));
-        assert!(rt >= 0.0 && rt < 1e-6);
+    fn f16_subnormals_decode_exactly() {
+        // exact expected values so the decode bias can never regress
+        // silently: one ulp is 2^-24, the largest subnormal is
+        // 1023 * 2^-24, and the smallest normal is 2^-14
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f16_to_f32(0x0002), 2.0f32.powi(-23));
+        assert_eq!(f16_to_f32(0x0200), 2.0f32.powi(-15));
+        assert_eq!(f16_to_f32(0x03FF), 1023.0 * 2.0f32.powi(-24));
+        assert_eq!(f16_to_f32(0x0400), 2.0f32.powi(-14));
+        assert_eq!(f16_to_f32(0x8001), -(2.0f32.powi(-24)));
+        // encoding the halfway-rounded neighborhood lands on the ulp
+        assert_eq!(f32_to_f16(2.0f32.powi(-24)), 0x0001);
+        assert_eq!(f32_to_f16(1023.0 * 2.0f32.powi(-24)), 0x03FF);
+    }
+
+    #[test]
+    fn f16_all_65536_patterns_roundtrip_and_are_monotone() {
+        // decode -> encode must be the identity for every non-NaN bit
+        // pattern (f32 holds all f16 values exactly), and decoding must
+        // be strictly monotone across the subnormal/normal boundary
+        let mut prev: Option<f32> = None;
+        for h in 0u16..=u16::MAX {
+            let f = f16_to_f32(h);
+            let exp = (h >> 10) & 0x1F;
+            let frac = h & 0x03FF;
+            if exp == 0x1F && frac != 0 {
+                assert!(f.is_nan(), "{h:#06x} must decode to NaN");
+                continue;
+            }
+            assert_eq!(
+                f32_to_f16(f),
+                h,
+                "{h:#06x} decoded to {f:e} which re-encodes differently"
+            );
+            // strict monotonicity over positive finite patterns
+            // (0x0000..=0x7C00 order f16 values ascending)
+            if h <= 0x7C00 {
+                if let Some(p) = prev {
+                    assert!(p < f, "decode not strictly increasing at {h:#06x}");
+                }
+                prev = Some(f);
+            }
+        }
     }
 
     #[test]

@@ -93,6 +93,45 @@ fn horovod_threaded_matches_serial_bitwise() {
 }
 
 #[test]
+fn horovod_threaded_matches_serial_bitwise_on_compressed_wires() {
+    // the wire-compression seam (GroupComm cast roundtrips vs the serial
+    // executor's mirrored quantize calls) must preserve bit-identity at
+    // every wire setting, not just the default f32
+    for wire in [daso::comm::Wire::Bf16, daso::comm::Wire::F16] {
+        let mut c = cfg(2, 2, 3);
+        c.global_wire = wire;
+        let serial = run_serial(&c, &mut Horovod::new(HorovodConfig::default()), 17);
+        let threaded = with_timeout(120, {
+            let c = c.clone();
+            move || run_threaded(&c, horovod_factory(), 17)
+        });
+        assert_identical(&serial, &threaded);
+        assert!(serial.comm.blocking_syncs > 0);
+        assert!(serial.final_metric > 0.8, "{}", serial.summary_line());
+    }
+}
+
+#[test]
+fn daso_warmup_threaded_matches_serial_bitwise_on_bf16_wire() {
+    let mut c = cfg(2, 2, 4);
+    c.global_wire = daso::comm::Wire::Bf16;
+    let daso_cfg = DasoConfig {
+        total_epochs: 4,
+        warmup_epochs: 2,
+        cooldown_epochs: 2,
+        ..DasoConfig::new(4)
+    };
+    let serial = run_serial(&c, &mut Daso::new(daso_cfg.clone(), c.gpus_per_node), 19);
+    let threaded = with_timeout(120, {
+        let c = c.clone();
+        let factory = daso_factory(daso_cfg, c.gpus_per_node);
+        move || run_threaded(&c, factory, 19)
+    });
+    assert_identical(&serial, &threaded);
+    assert!(threaded.comm.blocking_syncs > 0);
+}
+
+#[test]
 fn daso_warmup_threaded_matches_serial_bitwise() {
     // warm-up + cool-down covering the whole run: every global sync is
     // blocking — the regime where the two executors must agree exactly

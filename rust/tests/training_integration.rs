@@ -163,6 +163,7 @@ fn local_only_workers_diverge_from_each_other() {
             lr: 0.05,
             epoch: 0,
             global_batch: step + 1,
+            global_wire: daso::comm::Wire::F32,
         };
         daso::trainer::Strategy::apply(&mut strat, &mut ctx).unwrap();
     }
@@ -202,6 +203,7 @@ fn daso_preserves_node_identical_invariant() {
             lr: 0.05,
             epoch: 1,
             global_batch: step + 1,
+            global_wire: daso::comm::Wire::F32,
         };
         daso::trainer::Strategy::apply(&mut strat, &mut ctx).unwrap();
         assert!(

@@ -36,8 +36,12 @@ const SETS: &[&str] = &[
 ];
 
 fn spec_with_sets(strategy: &str) -> RunSpec {
+    spec_with_extra(strategy, &[])
+}
+
+fn spec_with_extra(strategy: &str, extra: &[&str]) -> RunSpec {
     let mut s = RunSpec::default_for("mlp");
-    for set in SETS {
+    for set in SETS.iter().chain(extra) {
         s.set(set).unwrap();
     }
     s.set(&format!("strategy={strategy}")).unwrap();
@@ -70,7 +74,11 @@ fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'st
 }
 
 fn serial_report(strategy: &str) -> RunReport {
-    let spec = spec_with_sets(strategy);
+    serial_report_with(strategy, &[])
+}
+
+fn serial_report_with(strategy: &str, extra: &[&str]) -> RunReport {
+    let spec = spec_with_extra(strategy, extra);
     let engine = Engine::native();
     let rt = engine.model("mlp").unwrap();
     let (tr, va) = daso::data::for_model(
@@ -86,7 +94,7 @@ fn serial_report(strategy: &str) -> RunReport {
 
 /// Spawn the node-1 peer as a real `daso` process with the same run
 /// shape, joined through the env handshake.
-fn spawn_peer(addr: &str, strategy: &str) -> Child {
+fn spawn_peer(addr: &str, strategy: &str, extra: &[&str]) -> Child {
     let exe = env!("CARGO_BIN_EXE_daso");
     let mut args = vec![
         "train".to_string(),
@@ -97,7 +105,7 @@ fn spawn_peer(addr: &str, strategy: &str) -> Child {
         "--executor".into(),
         "multiprocess".into(),
     ];
-    for set in SETS {
+    for set in SETS.iter().chain(extra) {
         args.push("--set".into());
         args.push(set.to_string());
     }
@@ -115,7 +123,11 @@ fn spawn_peer(addr: &str, strategy: &str) -> Child {
 /// Run the 2x2 cluster: this process as coordinator (library API), one
 /// child process as node 1 (binary + env handshake).
 fn multiprocess_report(strategy: &str) -> RunReport {
-    let spec = spec_with_sets(strategy);
+    multiprocess_report_with(strategy, &[])
+}
+
+fn multiprocess_report_with(strategy: &str, extra: &[&str]) -> RunReport {
+    let spec = spec_with_extra(strategy, extra);
     let engine = Engine::native();
     let rt = engine.model("mlp").unwrap();
     let (tr, va) = daso::data::for_model(
@@ -127,10 +139,14 @@ fn multiprocess_report(strategy: &str) -> RunReport {
     .unwrap();
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let mut child = spawn_peer(&addr, strategy);
+    let mut child = spawn_peer(&addr, strategy, extra);
     let factory = spec.build_rank_strategies();
-    let mut transport =
-        TcpTransport::coordinator(spec.train.topology(), listener, Duration::from_secs(60));
+    let mut transport = TcpTransport::coordinator(
+        spec.train.topology(),
+        listener,
+        Duration::from_secs(60),
+        spec.train.global_wire,
+    );
     let result = train_with_transport(&rt, &spec.train, &*tr, &*va, &factory, &mut transport);
     let report = match result {
         Ok(r) => r.expect("the coordinator hosts rank 0 and owns the report"),
@@ -185,6 +201,61 @@ fn multiprocess_daso_cycling_trains_over_tcp() {
     });
 }
 
+/// Bitwise comparison of two reports (the serial == tcp contract).
+fn assert_reports_identical(serial: &RunReport, multi: &RunReport, label: &str) {
+    assert_eq!(serial.final_params.len(), multi.final_params.len());
+    for (w, (a, b)) in serial.final_params.iter().zip(&multi.final_params).enumerate() {
+        assert_eq!(a, b, "[{label}] worker {w} parameters diverged between serial and tcp");
+    }
+    for (a, b) in serial.records.iter().zip(&multi.records) {
+        assert_eq!(a.train_loss, b.train_loss, "[{label}] epoch {} loss diverged", a.epoch);
+        assert_eq!(a.sim_time_s, b.sim_time_s, "[{label}] epoch {} sim time diverged", a.epoch);
+    }
+    assert_eq!(serial.final_metric, multi.final_metric, "[{label}] final metric diverged");
+    assert_eq!(serial.comm.bytes_inter, multi.comm.bytes_inter, "[{label}] byte counters");
+}
+
+#[test]
+fn compressed_wire_halves_global_bytes_and_keeps_parity() {
+    // the tentpole acceptance: with --wire bf16 the global tier's frame
+    // bytes are exactly half the f32 baseline (counters report true
+    // frame bytes), while the blocking strategy stays bit-identical
+    // serial == tcp at every wire setting
+    with_timeout(360, || {
+        let f32_run = multiprocess_report_with("horovod", &[]);
+        let bf16_run = multiprocess_report_with("horovod", &["global_wire=bf16"]);
+        assert!(bf16_run.comm.bytes_inter > 0);
+        assert_eq!(
+            f32_run.comm.bytes_inter,
+            2 * bf16_run.comm.bytes_inter,
+            "bf16 frames must occupy exactly half the f32 baseline's bytes"
+        );
+        let serial_bf16 = serial_report_with("horovod", &["global_wire=bf16"]);
+        assert_reports_identical(&serial_bf16, &bf16_run, "bf16");
+        // the compressed run must still train
+        assert!(bf16_run.final_metric > 0.8, "{}", bf16_run.summary_line());
+
+        let f16_run = multiprocess_report_with("horovod", &["global_wire=f16"]);
+        let serial_f16 = serial_report_with("horovod", &["global_wire=f16"]);
+        assert_reports_identical(&serial_f16, &f16_run, "f16");
+        assert_eq!(f16_run.comm.bytes_inter, bf16_run.comm.bytes_inter);
+    });
+}
+
+#[test]
+fn multiprocess_daso_cycling_trains_over_bf16_wire() {
+    // DASO's async mailbox frames (snapshots + sums) also ride the
+    // compressed wire; cycling must still train across processes
+    with_timeout(240, || {
+        let multi = multiprocess_report_with("daso", &["global_wire=bf16"]);
+        assert!(multi.comm.nonblocking_syncs > 0, "{:?}", multi.comm);
+        assert!(multi.final_metric > 0.5, "{}", multi.summary_line());
+        for params in &multi.final_params {
+            assert!(params.iter().all(|v| v.is_finite()));
+        }
+    });
+}
+
 #[test]
 fn multiprocess_missing_peer_is_a_bounded_error() {
     with_timeout(60, || {
@@ -205,6 +276,7 @@ fn multiprocess_missing_peer_is_a_bounded_error() {
             spec.train.topology(),
             listener,
             Duration::from_millis(500),
+            spec.train.global_wire,
         );
         let err = train_with_transport(&rt, &spec.train, &*tr, &*va, &factory, &mut transport)
             .unwrap_err()
