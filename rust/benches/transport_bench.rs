@@ -1,0 +1,133 @@
+//! Transport bench: star vs mesh leader placement over a real loopback
+//! `daso launch` (3 node processes x 2 workers, DASO blocking phases so
+//! the rotating global groups dominate the traffic).
+//!
+//! Measures wall time per launch and reads the per-process
+//! `wire_bytes_by_node` out of the emitted run report — the rank-0
+//! entry is the coordinator hot-spot the mesh placement exists to
+//! shrink. Emits `BENCH_transport.json` (schema daso-bench/2): one
+//! result per (placement, node) annotated with that node's actual bytes
+//! on the wire, so the perf trajectory captures the hot-spot shrink
+//! alongside the timing.
+//!
+//! `DASO_BENCH_QUICK=1` runs a reduced configuration (the CI smoke job).
+
+use std::process::Command;
+
+use daso::bench_support::{write_bench_json, Bench, BenchResult};
+use daso::util::json::Value;
+
+struct LaunchOutcome {
+    wire_bytes_by_node: Vec<u64>,
+}
+
+/// Run one `daso launch` through the real binary and parse the run json.
+fn launch(placement: &str, epochs: usize, samples: usize, out_dir: &std::path::Path) -> LaunchOutcome {
+    let exe = env!("CARGO_BIN_EXE_daso");
+    let output = Command::new(exe)
+        .args([
+            "launch",
+            "--nodes",
+            "3",
+            "--workers-per-node",
+            "2",
+            "--model",
+            "mlp",
+            "--strategy",
+            "daso",
+            "--set",
+            &format!("leader_placement={placement}"),
+            "--set",
+            &format!("epochs={epochs}"),
+            "--set",
+            &format!("train.train_samples={samples}"),
+            "--set",
+            "train.val_samples=128",
+            "--set",
+            // all-blocking phases: the rotating groups sync every batch,
+            // so leader placement dominates the wire-byte distribution
+            "daso.warmup_epochs=1",
+            "--set",
+            "daso.cooldown_epochs=1",
+            "--out",
+        ])
+        .arg(out_dir)
+        .output()
+        .expect("running daso launch");
+    assert!(
+        output.status.success(),
+        "daso launch ({placement}) failed\nstderr: {}",
+        String::from_utf8_lossy(&output.stderr)
+    );
+    let json = std::fs::read_to_string(out_dir.join("mlp_daso.json"))
+        .expect("launch writes the run json");
+    let v = Value::parse(&json).expect("parsing run json");
+    let wire_bytes_by_node: Vec<u64> = v
+        .get_path("comm.wire_bytes_by_node")
+        .and_then(|a| a.as_arr())
+        .expect("run json carries wire_bytes_by_node")
+        .iter()
+        .map(|b| b.as_f64().expect("byte counts are numbers") as u64)
+        .collect();
+    assert_eq!(wire_bytes_by_node.len(), 3, "one entry per node process");
+    LaunchOutcome { wire_bytes_by_node }
+}
+
+fn main() {
+    let quick = std::env::var("DASO_BENCH_QUICK").is_ok();
+    let (epochs, samples) = if quick { (2, 768) } else { (2, 1536) };
+    let bench = if quick { Bench::new(0, 2) } else { Bench::new(1, 3) };
+    println!(
+        "== transport bench: star vs mesh leader placement (3 procs x 2 workers{}) ==",
+        if quick { ", quick" } else { "" }
+    );
+
+    let out_root =
+        std::env::temp_dir().join(format!("daso_transport_bench_{}", std::process::id()));
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut bytes_by_placement: Vec<(String, Vec<u64>)> = Vec::new();
+    for placement in ["star", "mesh"] {
+        let out_dir = out_root.join(placement);
+        let mut last: Option<LaunchOutcome> = None;
+        let timing = bench.run(&format!("launch_3x2_daso/{placement}"), || {
+            last = Some(launch(placement, epochs, samples, &out_dir));
+        });
+        let outcome = last.expect("bench ran at least once");
+        // per-node wire bytes ride along as one annotated result each,
+        // so the artifact captures the whole load distribution
+        for (node, &bytes) in outcome.wire_bytes_by_node.iter().enumerate() {
+            results.push(
+                BenchResult {
+                    name: format!("launch_3x2_daso/{placement}/node{node}_wire_bytes"),
+                    ..timing.clone()
+                }
+                .with_bytes_on_wire(bytes),
+            );
+        }
+        results.push(timing.with_bytes_on_wire(outcome.wire_bytes_by_node[0]));
+        bytes_by_placement.push((placement.to_string(), outcome.wire_bytes_by_node));
+    }
+    std::fs::remove_dir_all(&out_root).ok();
+
+    let star = &bytes_by_placement[0].1;
+    let mesh = &bytes_by_placement[1].1;
+    println!("\nper-node wire bytes (actual frames written):");
+    println!("  star: {star:?}");
+    println!("  mesh: {mesh:?}");
+    println!(
+        "  rank-0 hot-spot: {} -> {} bytes ({:+.1}%)",
+        star[0],
+        mesh[0],
+        100.0 * (mesh[0] as f64 - star[0] as f64) / star[0] as f64
+    );
+    // the decentralization claim, checked where the numbers are made:
+    // rank 0 must write strictly fewer bytes under mesh placement
+    assert!(
+        mesh[0] < star[0],
+        "mesh rank-0 bytes {} must be strictly below the star baseline {}",
+        mesh[0],
+        star[0]
+    );
+
+    write_bench_json("transport", &results).expect("bench artifact");
+}

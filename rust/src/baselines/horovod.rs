@@ -46,9 +46,12 @@ impl Strategy for Horovod {
         let wire_bytes = n * self.cfg.wire.bytes_per_elem();
         // the flat ring spans nodes, so its frames take the transport
         // wire's cast (ctx.global_wire is already resolved to F32 on
-        // single-node topologies); the counters report the true frame
-        // bytes, while the cost model keeps charging the paper's f16
-        // packaging either way
+        // single-node topologies). Multi-node clock charges are
+        // wire-aware: ring time on the configured wire's frame bytes
+        // (matching the byte counters) and cast cost only when that wire
+        // compresses; single-node rings keep charging the strategy's own
+        // f16 packaging on the intra tier (no transport wire exists
+        // there).
         let multi_node = ctx.cluster.topo.nodes > 1;
         let transport_wire = ctx.global_wire;
         let frame_bytes = n * transport_wire.bytes_per_elem();
@@ -75,13 +78,15 @@ impl Strategy for Horovod {
             // flat ring spans nodes: inter-node tier is the bottleneck
             // (single-node runs ride the intra tier)
             let link = if multi_node { &ctx.fabric.inter } else { &ctx.fabric.intra };
-            let cast_dt = if self.cfg.wire.bytes_per_elem() < 4 {
+            let charged_wire = if multi_node { transport_wire } else { self.cfg.wire };
+            let charged_bytes = if multi_node { frame_bytes } else { wire_bytes };
+            let cast_dt = if charged_wire.bytes_per_elem() < 4 {
                 2.0 * cast_time(n * 4, DEVICE_MEM_BW)
             } else {
                 0.0
             };
             let ring_dt =
-                fused_allreduce_time(world, wire_bytes, self.cfg.fusion_bucket_bytes, link);
+                fused_allreduce_time(world, charged_bytes, self.cfg.fusion_bucket_bytes, link);
             for w in &mut ctx.cluster.workers {
                 w.advance_clock(cast_dt + ring_dt);
                 if multi_node {
@@ -145,8 +150,9 @@ impl RankStrategy for HorovodRank {
         let wire_bytes = n * self.cfg.wire.bytes_per_elem();
         // the world communicator applies the transport wire's cast
         // (ctx.global_wire is already resolved to F32 on single-node
-        // topologies); count the true frame bytes — the cost model keeps
-        // the paper's f16 packaging
+        // topologies); clock charges are wire-aware, mirroring the
+        // serial strategy's expressions exactly (the bit-identity
+        // contract covers sim times)
         let multi_node = ctx.topo.nodes > 1;
         let frame_bytes = n * ctx.global_wire.bytes_per_elem();
 
@@ -163,13 +169,15 @@ impl RankStrategy for HorovodRank {
             *ctx.grad = out.into_f32();
 
             let link = if multi_node { &ctx.fabric.inter } else { &ctx.fabric.intra };
-            let cast_dt = if self.cfg.wire.bytes_per_elem() < 4 {
+            let charged_wire = if multi_node { ctx.global_wire } else { self.cfg.wire };
+            let charged_bytes = if multi_node { frame_bytes } else { wire_bytes };
+            let cast_dt = if charged_wire.bytes_per_elem() < 4 {
                 2.0 * cast_time(n * 4, DEVICE_MEM_BW)
             } else {
                 0.0
             };
             let ring_dt =
-                fused_allreduce_time(world, wire_bytes, self.cfg.fusion_bucket_bytes, link);
+                fused_allreduce_time(world, charged_bytes, self.cfg.fusion_bucket_bytes, link);
             let before = clocks.iter().fold(0.0, |a, &b| f64::max(a, b));
             // same wait_until + advance_clock sequence as the serial
             // strategy — clock arithmetic must associate identically for

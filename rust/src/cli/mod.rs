@@ -118,11 +118,22 @@ COMMANDS:
                               halve bytes on the wire and are negotiated
                               in the multiprocess handshake)
                   --config <file.json>      JSON config (see config module)
-                  --set key=value           override (repeatable; e.g.
-                              comm_timeout_ms=... bounds rendezvous waits)
+                  --set key=value           override (repeatable); notable keys:
+                              comm_timeout_ms=N bounds rendezvous waits;
+                              leader_placement=star|mesh places spanning-
+                              group leaders — default mesh puts group g's
+                              leader on node g%nodes, star keeps every
+                              leader on the rank-0 coordinator, the
+                              pre-mesh baseline;
+                              pipeline_chunk_elems=N splits f32 frames
+                              above N elements into pipelined chunks,
+                              default 65536 or DASO_PIPELINE_CHUNK_ELEMS,
+                              0 disables
                   --out <dir>               write run.csv / run.json
     launch      spawn a multi-process run on this machine: one process per
                 node over the TCP loopback transport, this process is node 0
+                (peers mesh directly with each other; the coordinator only
+                brokers the address book)
                   --nodes N                 node processes (default: the
                                             config's nodes)
                   --workers-per-node M      worker threads per node (default:

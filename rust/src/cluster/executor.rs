@@ -124,7 +124,7 @@ mod threaded {
     use crate::cluster::Worker;
     use crate::comm::channels::{GroupComm, Payload, RankComms};
     use crate::comm::naive_mean;
-    use crate::comm::transport::tcp::{TcpRole, TcpTransport};
+    use crate::comm::transport::tcp::{TcpRole, TcpTransport, TcpTuning};
     use crate::comm::transport::{ChannelTransport, Transport, Wiring};
     use crate::data::shard::Shard;
     use crate::data::Dataset;
@@ -162,9 +162,17 @@ mod threaded {
             cfg.topology(),
             Duration::from_millis(cfg.comm_timeout_ms),
             cfg.global_wire,
+            cfg.leader_placement,
         );
         let report = train_with_transport(rt, cfg, train_data, val_data, factory, &mut transport)?;
         Ok(report.expect("the single-process transport hosts rank 0"))
+    }
+
+    /// The TCP transport knobs a [`TrainConfig`] resolves to.
+    fn tcp_tuning(cfg: &TrainConfig) -> TcpTuning {
+        TcpTuning::new(Duration::from_millis(cfg.comm_timeout_ms), cfg.global_wire)
+            .with_placement(cfg.leader_placement)
+            .with_chunk_elems(cfg.pipeline_chunk_elems)
     }
 
     /// Train this process's share of a multi-process launch, joining the
@@ -185,8 +193,7 @@ mod threaded {
             role.node,
             topo.nodes
         );
-        let timeout = Duration::from_millis(cfg.comm_timeout_ms);
-        let mut transport = TcpTransport::from_role(topo, role, timeout, cfg.global_wire)?;
+        let mut transport = TcpTransport::from_role(topo, role, tcp_tuning(cfg))?;
         train_with_transport(rt, cfg, train_data, val_data, factory, &mut transport)
     }
 
@@ -200,9 +207,7 @@ mod threaded {
         factory: &RankStrategyFactory,
         listener: TcpListener,
     ) -> Result<RunReport> {
-        let timeout = Duration::from_millis(cfg.comm_timeout_ms);
-        let mut transport =
-            TcpTransport::coordinator(cfg.topology(), listener, timeout, cfg.global_wire);
+        let mut transport = TcpTransport::coordinator(cfg.topology(), listener, tcp_tuning(cfg));
         let report = train_with_transport(rt, cfg, train_data, val_data, factory, &mut transport)?;
         Ok(report.expect("the coordinator hosts rank 0"))
     }
@@ -243,7 +248,7 @@ mod threaded {
         );
 
         let wall_start = Instant::now();
-        let Wiring { rank_comms, control } = transport.connect()?;
+        let Wiring { rank_comms, control, wire_bytes } = transport.connect()?;
         let hosted = transport.hosted_ranks();
         ensure!(
             rank_comms.len() == hosted.len(),
@@ -310,16 +315,30 @@ mod threaded {
 
         // cross-process aggregation over the control group (node order;
         // identity when the control group is solo): summed stat
-        // counters + cluster makespan, then the full parameter set
-        let stats = vec![comm.bytes_inter as f64, comm.bytes_intra as f64, comm.comm_wait_s];
+        // counters + this process's transport-level wire bytes (kept
+        // per-node — the hot-spot metric) + cluster makespan, then the
+        // full parameter set. SUMMED_STATS ties the contribution layout
+        // to the reduce closure and the unpacking below.
+        const SUMMED_STATS: usize = 3;
+        let stats = vec![
+            comm.bytes_inter as f64,
+            comm.bytes_intra as f64,
+            comm.comm_wait_s,
+            wire_bytes.sent() as f64,
+        ];
+        debug_assert_eq!(stats.len(), SUMMED_STATS + 1);
         let (stats_out, clocks) =
             control.exchange(Payload::F64(stats), local_max_clock, |bufs| {
-                let mut total = vec![0.0f64; 3];
+                let mut total = vec![0.0f64; SUMMED_STATS];
+                let mut per_node = Vec::with_capacity(bufs.len());
                 for b in bufs.iter() {
-                    for (t, v) in total.iter_mut().zip(b.as_f64()) {
+                    let vals = b.as_f64();
+                    for (t, v) in total.iter_mut().zip(vals) {
                         *t += *v;
                     }
+                    per_node.push(vals[SUMMED_STATS]);
                 }
+                total.extend(per_node);
                 bufs[0] = Payload::F64(total);
                 for b in bufs.iter_mut().skip(1) {
                     *b = Payload::Empty;
@@ -347,6 +366,7 @@ mod threaded {
         comm.bytes_inter = totals[0] as u64;
         comm.bytes_intra = totals[1] as u64;
         comm.comm_wait_s = totals[2];
+        comm.wire_bytes_by_node = totals[SUMMED_STATS..].iter().map(|&v| v as u64).collect();
         let makespan = clocks.iter().fold(0.0f64, |a, &b| a.max(b));
         let all_params = params_out.into_f32();
         ensure!(
@@ -392,14 +412,9 @@ mod threaded {
     ) -> Result<RankOutput> {
         let topo = cfg.topology();
         let batch = rt.spec.batch;
-        // effective wire, resolved once: single-node topologies have no
-        // inter tier (the transports wire their communicators with the
-        // same rule, and the serial trainer resolves identically)
-        let global_wire = if topo.nodes > 1 {
-            cfg.global_wire
-        } else {
-            crate::comm::Wire::F32
-        };
+        // effective wire, resolved once through the same rule the
+        // transports and the serial trainer use
+        let global_wire = topo.resolve_global_wire(cfg.global_wire);
         let mut worker = Worker::new(
             topo.rank_of(rank),
             init,

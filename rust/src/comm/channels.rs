@@ -3,15 +3,17 @@
 //!
 //! Every logical communicator (the node-local network, one global group
 //! per local id, the whole world) is a [`GroupComm`]: a gather/scatter
-//! rendezvous. Member 0 acts as the leader; the others send their
-//! contribution (plus virtual clock) to the leader, which assembles the
-//! buffers **in member order**, applies the reduction, and scatters the
-//! per-member results back. Because the reduction runs on the gathered
-//! buffers in the same order and with the same kernels
-//! (`ring_allreduce_mean`, the Pallas-equivalent `avg`) as the serial
-//! executor, blocking collectives are bit-identical between `--executor
-//! serial`, `--executor threaded` and `--executor multiprocess`
-//! regardless of thread scheduling or which process a member lives in.
+//! rendezvous. One member — the **leader**, member 0 by default but any
+//! member index (the transports place global-group leaders by
+//! `Topology::leader_node`) — receives the others' contributions (plus
+//! virtual clocks), assembles the buffers **in member order**, applies
+//! the reduction, and scatters the per-member results back. Because the
+//! reduction runs on the gathered buffers in the same order and with the
+//! same kernels (`ring_allreduce_mean`, the Pallas-equivalent `avg`) as
+//! the serial executor, blocking collectives are bit-identical between
+//! `--executor serial`, `--executor threaded` and `--executor
+//! multiprocess` regardless of thread scheduling, which process a member
+//! lives in, or which member hosts the leader.
 //!
 //! The member↔leader hops are abstracted behind [`GatherSender`] /
 //! [`ScatterSender`] sinks: in-process members use `std::sync::mpsc`
@@ -44,7 +46,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, ensure, Result};
 
 use super::collectives::Wire;
-use super::topology::Topology;
+use super::topology::{LeaderPlacement, Topology};
 use super::transport::default_comm_timeout;
 
 /// Collective payload: parameter/gradient buffers travel as f32, epoch
@@ -175,60 +177,57 @@ impl GroupComm {
     }
 
     /// Build handles for a `size`-member group whose f32 payloads are
-    /// packaged as `wire` on both legs of the rendezvous.
+    /// packaged as `wire` on both legs of the rendezvous (leader at
+    /// member 0).
     pub fn group_with_wire(size: usize, timeout: Duration, wire: Wire) -> Vec<GroupComm> {
-        assert!(size >= 1);
+        Self::group_with_leader(size, 0, timeout, wire)
+    }
+
+    /// Build handles for a `size`-member group whose leader lives at
+    /// member index `leader` (the transports' shared placement seam).
+    /// Returned handles are in member-index order; the reduction runs on
+    /// the gathered buffers in member order regardless of `leader`, so
+    /// results are independent of the placement.
+    pub fn group_with_leader(
+        size: usize,
+        leader: usize,
+        timeout: Duration,
+        wire: Wire,
+    ) -> Vec<GroupComm> {
+        assert!(size >= 1 && leader < size);
         if size == 1 {
             return vec![GroupComm { size: 1, index: 0, timeout, wire, role: Role::Solo }];
         }
-        let (gather_tx, gather_rx) = channel::<GatherMsg>();
-        // the leader keeps its own result in place, so index 0 has no sink
-        let mut result_txs: Vec<Option<ScatterSender>> = vec![None];
-        let mut result_rxs: Vec<Receiver<ScatterMsg>> = Vec::with_capacity(size - 1);
-        for _ in 1..size {
-            let (tx, rx) = channel::<ScatterMsg>();
-            result_txs.push(Some(local_scatter_tx(tx)));
-            result_rxs.push(rx);
-        }
-        let mut members = Vec::with_capacity(size);
-        members.push(GroupComm {
-            size,
-            index: 0,
-            timeout,
-            wire,
-            role: Role::Leader { gather_rx, result_txs },
-        });
-        for (i, result_rx) in result_rxs.into_iter().enumerate() {
-            members.push(GroupComm {
-                size,
-                index: i + 1,
-                timeout,
-                wire,
-                role: Role::Member { gather_tx: local_gather_tx(gather_tx.clone()), result_rx },
-            });
-        }
+        let local: Vec<usize> =
+            std::iter::once(leader).chain((0..size).filter(|&m| m != leader)).collect();
+        let (mut members, _) =
+            Self::assemble_spanning(size, leader, &local, BTreeMap::new(), timeout, wire);
+        members.sort_by_key(|m| m.index);
         members
     }
 
     /// Leader-side wiring for a group whose members span processes.
     /// `local` lists the member indices hosted in this process (must
-    /// start with 0 — the leader always lives in the coordinator);
-    /// `remote` maps every other member to the sink that reaches its
-    /// process. Returns the local handles (in `local` order) plus the
-    /// gather port the connection demux feeds remote contributions into.
+    /// start with `leader` — the leader always lives in the assembling
+    /// process); `remote` maps every other member to the sink that
+    /// reaches its process. Returns the local handles (in `local` order)
+    /// plus the gather port the connection demux feeds remote
+    /// contributions into.
     pub(crate) fn assemble_spanning(
         size: usize,
+        leader: usize,
         local: &[usize],
         remote: BTreeMap<usize, ScatterSender>,
         timeout: Duration,
         wire: Wire,
     ) -> (Vec<GroupComm>, Sender<GatherMsg>) {
-        assert_eq!(local.first(), Some(&0), "the group leader must be hosted locally");
+        assert!(leader < size, "leader index out of range");
+        assert_eq!(local.first(), Some(&leader), "the group leader must be hosted locally");
         assert_eq!(local.len() + remote.len(), size, "members must cover the group");
         let (gather_tx, gather_rx) = channel::<GatherMsg>();
         let mut result_txs: Vec<Option<ScatterSender>> = (0..size).map(|_| None).collect();
         for (m, tx) in remote {
-            assert!(m > 0 && m < size && !local.contains(&m), "bad remote member {m}");
+            assert!(m != leader && m < size && !local.contains(&m), "bad remote member {m}");
             result_txs[m] = Some(tx);
         }
         let mut local_rxs = Vec::new();
@@ -240,7 +239,7 @@ impl GroupComm {
         let mut members = Vec::with_capacity(local.len());
         members.push(GroupComm {
             size,
-            index: 0,
+            index: leader,
             timeout,
             wire,
             role: Role::Leader { gather_rx, result_txs },
@@ -257,9 +256,12 @@ impl GroupComm {
         (members, gather_tx)
     }
 
-    /// A member of a spanning group hosted in a peer process:
-    /// contributions leave through `gather_tx` (the serialized link),
-    /// results arrive on `result_rx` (fed by the peer's demux reader).
+    /// A member of a spanning group hosted away from its leader's
+    /// process: contributions leave through `gather_tx` (the serialized
+    /// link), results arrive on `result_rx` (fed by the process's demux
+    /// reader). Any index but the leader's — with mesh placement the
+    /// coordinator itself holds remote-member handles (including index
+    /// 0) for groups led elsewhere.
     pub(crate) fn remote_member(
         size: usize,
         index: usize,
@@ -268,7 +270,7 @@ impl GroupComm {
         timeout: Duration,
         wire: Wire,
     ) -> GroupComm {
-        assert!(index > 0 && index < size, "remote member index out of range");
+        assert!(index < size, "remote member index out of range");
         GroupComm { size, index, timeout, wire, role: Role::Member { gather_tx, result_rx } }
     }
 
@@ -732,10 +734,19 @@ pub struct RankComms {
 /// this process (the `channels` transport). `wire` packages the f32
 /// payloads of every communicator that crosses the node boundary (the
 /// world group and the global groups + mailboxes); node-local
-/// communicators always ride uncompressed f32.
-pub fn build_comms(topo: &Topology, timeout: Duration, wire: Wire) -> Vec<RankComms> {
-    // single-node topologies have no inter tier: nothing to compress
-    let global_wire = if topo.nodes > 1 { wire } else { Wire::F32 };
+/// communicators always ride uncompressed f32. `placement` picks which
+/// member hosts each global group's leader — the same seam the TCP
+/// transport places its leaders by, so both backends share the
+/// placement logic (for an in-process fabric the choice is
+/// load-neutral, and the reduction is member-ordered either way, so
+/// results are identical).
+pub fn build_comms(
+    topo: &Topology,
+    timeout: Duration,
+    wire: Wire,
+    placement: LeaderPlacement,
+) -> Vec<RankComms> {
+    let global_wire = topo.resolve_global_wire(wire);
     let world = GroupComm::group_with_wire(topo.world(), timeout, global_wire);
     let mut nodes: Vec<Option<GroupComm>> = (0..topo.world()).map(|_| None).collect();
     for node in 0..topo.nodes {
@@ -747,7 +758,8 @@ pub fn build_comms(topo: &Topology, timeout: Duration, wire: Wire) -> Vec<RankCo
     let mut globals: Vec<Option<(GroupComm, AsyncGroup)>> =
         (0..topo.world()).map(|_| None).collect();
     for g in 0..topo.n_groups() {
-        let handles = GroupComm::group_with_wire(topo.nodes, timeout, global_wire);
+        let leader = placement.leader_node(topo, g);
+        let handles = GroupComm::group_with_leader(topo.nodes, leader, timeout, global_wire);
         let asyncs = AsyncGroup::group_with_wire(topo.nodes, timeout, global_wire);
         for ((handle, mailbox), r) in handles.into_iter().zip(asyncs).zip(topo.group_members(g)) {
             globals[r] = Some((handle, mailbox));
@@ -1074,9 +1086,47 @@ mod tests {
     }
 
     #[test]
+    fn leader_placement_does_not_change_results() {
+        // the reduction is member-ordered regardless of which member
+        // hosts the leader: same inputs, bit-identical outputs for every
+        // leader index
+        let n = 4;
+        let inputs: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32 * 1.25 + 0.1; 33]).collect();
+        let run = |leader: usize| {
+            let handles = GroupComm::group_with_leader(n, leader, default_comm_timeout(), Wire::F32);
+            // handles come back in member-index order with the leader at
+            // its own index
+            for (i, h) in handles.iter().enumerate() {
+                assert_eq!(h.index(), i);
+            }
+            let inputs_ref = &inputs;
+            spawn_members(handles, move |i, comm| {
+                let (out, clocks) = comm
+                    .exchange(Payload::F32(inputs_ref[i].clone()), i as f64, |bufs| {
+                        let mut refs: Vec<&mut Vec<f32>> =
+                            bufs.iter_mut().map(|b| b.as_f32_mut()).collect();
+                        ring_allreduce_mean(&mut refs, Wire::F32);
+                        Ok(())
+                    })
+                    .unwrap();
+                (out.into_f32(), clocks)
+            })
+        };
+        let base = run(0);
+        for leader in 1..n {
+            let moved = run(leader);
+            for (i, ((a, ca), (b, cb))) in base.iter().zip(&moved).enumerate() {
+                assert_eq!(a, b, "member {i} diverged with leader {leader}");
+                assert_eq!(ca, cb, "member {i} clocks diverged with leader {leader}");
+            }
+        }
+    }
+
+    #[test]
     fn build_comms_assigns_consistent_indices() {
         let topo = Topology::new(3, 4);
-        let comms = build_comms(&topo, Duration::from_secs(60), Wire::F32);
+        let comms =
+            build_comms(&topo, Duration::from_secs(60), Wire::F32, LeaderPlacement::Mesh);
         assert_eq!(comms.len(), 12);
         for (r, c) in comms.iter().enumerate() {
             let rank = topo.rank_of(r);

@@ -6,6 +6,16 @@
 //! within one group (one GPU per node), cutting inter-node traffic by a
 //! factor of `gpus_per_node`. The syncing group rotates to overlap
 //! communication with computation.
+//!
+//! Each spanning group also has a deterministic **leader node**
+//! ([`Topology::leader_node`]): the process that hosts the group's
+//! rendezvous leader (gather/reduce/scatter) and async aggregator.
+//! Spreading the leaders round-robin across nodes (`g % nodes`, the
+//! paper's one-root-per-node layout) is what removes the rank-0
+//! coordinator hot-spot in the TCP transport; [`LeaderPlacement::Star`]
+//! keeps every leader on node 0 as the measurable baseline.
+
+use anyhow::{bail, Result};
 
 /// A worker's global rank plus its (node, local) coordinates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -64,13 +74,71 @@ impl Topology {
         self.gpus_per_node
     }
 
+    /// The node that hosts global group `g`'s leader (and async
+    /// aggregator): round-robin over nodes, so when `n_groups <= nodes`
+    /// no node hosts two leaders and in general no node hosts more than
+    /// `ceil(n_groups / nodes)`.
+    pub fn leader_node(&self, g: usize) -> usize {
+        debug_assert!(g < self.gpus_per_node);
+        g % self.nodes
+    }
+
     /// Inter-node traffic reduction factor vs flat all-GPU communication.
     pub fn traffic_reduction(&self) -> usize {
         self.gpus_per_node
     }
 
+    /// The effective global-tier wire format: a single-node topology has
+    /// no inter tier, so there is nothing to compress. Every executor
+    /// and transport resolves the configured wire through this one rule
+    /// — the serial == threaded == tcp bit-identity contract depends on
+    /// them agreeing.
+    pub fn resolve_global_wire(&self, wire: crate::comm::Wire) -> crate::comm::Wire {
+        if self.nodes > 1 {
+            wire
+        } else {
+            crate::comm::Wire::F32
+        }
+    }
+
     pub fn all_ranks(&self) -> Vec<usize> {
         (0..self.world()).collect()
+    }
+}
+
+/// Where spanning-group leaders live in a multi-process launch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeaderPlacement {
+    /// Every leader on node 0 (the pre-mesh coordinator hot-spot; kept
+    /// as the measurable baseline for the transport benches).
+    Star,
+    /// Group `g`'s leader on [`Topology::leader_node`]`(g)` — the
+    /// default, spreading the reduce load across nodes.
+    Mesh,
+}
+
+impl LeaderPlacement {
+    pub fn parse(s: &str) -> Result<LeaderPlacement> {
+        Ok(match s {
+            "star" | "coordinator" => LeaderPlacement::Star,
+            "mesh" | "distributed" => LeaderPlacement::Mesh,
+            other => bail!("unknown leader placement {other:?} (valid values: star, mesh)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LeaderPlacement::Star => "star",
+            LeaderPlacement::Mesh => "mesh",
+        }
+    }
+
+    /// The node hosting global group `g`'s leader under this placement.
+    pub fn leader_node(&self, topo: &Topology, g: usize) -> usize {
+        match self {
+            LeaderPlacement::Star => 0,
+            LeaderPlacement::Mesh => topo.leader_node(g),
+        }
     }
 }
 
@@ -153,6 +221,67 @@ mod tests {
             }
             assert!(seen.iter().all(|&s| s));
         });
+    }
+
+    #[test]
+    fn global_wire_resolves_to_f32_on_single_node() {
+        use crate::comm::Wire;
+        assert_eq!(Topology::new(1, 4).resolve_global_wire(Wire::Bf16), Wire::F32);
+        assert_eq!(Topology::new(2, 4).resolve_global_wire(Wire::Bf16), Wire::Bf16);
+        assert_eq!(Topology::new(2, 4).resolve_global_wire(Wire::F32), Wire::F32);
+    }
+
+    #[test]
+    fn leader_nodes_spread_without_collisions() {
+        // when groups <= nodes, no node hosts two global leaders
+        for nodes in 1..8 {
+            for gpn in 1..=nodes {
+                let t = Topology::new(nodes, gpn);
+                let mut hosts = vec![0usize; nodes];
+                for g in 0..t.n_groups() {
+                    hosts[t.leader_node(g)] += 1;
+                }
+                assert!(
+                    hosts.iter().all(|&h| h <= 1),
+                    "{nodes}x{gpn}: a node hosts two leaders: {hosts:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_leader_load_is_balanced() {
+        // in general no node hosts more than ceil(n_groups / nodes)
+        run_prop("leader-balance", 50, |gen| {
+            let t = Topology::new(gen.usize_in(1, 8), gen.usize_in(1, 8));
+            let bound = t.n_groups().div_ceil(t.nodes);
+            let mut hosts = vec![0usize; t.nodes];
+            for g in 0..t.n_groups() {
+                let l = t.leader_node(g);
+                assert!(l < t.nodes);
+                hosts[l] += 1;
+            }
+            assert!(
+                hosts.iter().all(|&h| h <= bound),
+                "leader load {hosts:?} exceeds ceil bound {bound}"
+            );
+        });
+    }
+
+    #[test]
+    fn placement_parse_and_leader_selection() {
+        assert_eq!(LeaderPlacement::parse("star").unwrap(), LeaderPlacement::Star);
+        assert_eq!(LeaderPlacement::parse("mesh").unwrap(), LeaderPlacement::Mesh);
+        let err = LeaderPlacement::parse("ring").unwrap_err().to_string();
+        assert!(err.contains("star") && err.contains("mesh"), "{err}");
+        for p in [LeaderPlacement::Star, LeaderPlacement::Mesh] {
+            assert_eq!(LeaderPlacement::parse(p.name()).unwrap(), p);
+        }
+        let t = Topology::new(3, 4);
+        for g in 0..4 {
+            assert_eq!(LeaderPlacement::Star.leader_node(&t, g), 0);
+            assert_eq!(LeaderPlacement::Mesh.leader_node(&t, g), g % 3);
+        }
     }
 
     #[test]

@@ -10,23 +10,29 @@
 //!   This is what `--executor threaded` uses.
 //! - [`tcp::TcpTransport`] — each process hosts one node's workers on
 //!   threads; the global tier crosses process boundaries as
-//!   length-prefixed binary frames over TCP ([`wire`]). This is what
-//!   `--executor multiprocess` and `daso launch` use.
+//!   length-prefixed binary frames over TCP ([`wire`]) on a full peer
+//!   mesh, with spanning-group leaders distributed by
+//!   [`LeaderPlacement`]. This is what `--executor multiprocess` and
+//!   `daso launch` use.
 //!
-//! The leader-side rendezvous logic is shared (`comm::channels`), so the
-//! reduction order — and therefore bit-identity with the serial executor
-//! for blocking strategies — is independent of the transport.
+//! The leader-side rendezvous logic is shared (`comm::channels`) and
+//! both backends place leaders through the same `Topology::leader_node`
+//! seam, so the reduction order — and therefore bit-identity with the
+//! serial executor for blocking strategies — is independent of the
+//! transport and the placement.
 
 pub mod tcp;
 pub mod wire;
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use super::channels::{build_comms, GroupComm, RankComms};
 use super::collectives::Wire;
-use super::topology::Topology;
+use super::topology::{LeaderPlacement, Topology};
 
 /// Default bound on rendezvous/mailbox waits when the config does not
 /// set one: `DASO_COMM_TIMEOUT_MS` in the environment, else 60 s.
@@ -58,6 +64,48 @@ pub fn default_global_wire() -> Wire {
             }
         },
         Err(_) => Wire::F32,
+    }
+}
+
+/// Default element-count threshold above which the TCP transport splits
+/// an f32 payload into pipelined chunk frames: `DASO_PIPELINE_CHUNK_ELEMS`
+/// in the environment, else 64Ki elements (256 KiB at f32). `0` disables
+/// chunking. A value that does not parse is warned about and ignored.
+pub fn default_pipeline_chunk_elems() -> usize {
+    match std::env::var("DASO_PIPELINE_CHUNK_ELEMS") {
+        Ok(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!(
+                    "warning: ignoring DASO_PIPELINE_CHUNK_ELEMS={v:?} (not an integer)"
+                );
+                DEFAULT_PIPELINE_CHUNK_ELEMS
+            }
+        },
+        Err(_) => DEFAULT_PIPELINE_CHUNK_ELEMS,
+    }
+}
+
+/// Built-in chunk threshold when neither the config nor the environment
+/// overrides it.
+pub const DEFAULT_PIPELINE_CHUNK_ELEMS: usize = 1 << 16;
+
+/// Bytes this process actually wrote to inter-node links (frame bytes
+/// including headers and chunk framing) — the transport-level counter
+/// behind the per-node hot-spot metric in run reports, as opposed to the
+/// strategies' modeled per-rank byte counters.
+#[derive(Debug, Default)]
+pub struct WireBytes {
+    sent: AtomicU64,
+}
+
+impl WireBytes {
+    pub fn add_sent(&self, bytes: u64) {
+        self.sent.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn sent(&self) -> u64 {
+        self.sent.load(Ordering::Relaxed)
     }
 }
 
@@ -96,6 +144,9 @@ pub struct Wiring {
     pub rank_comms: Vec<RankComms>,
     /// one member handle per process, leader = the coordinator
     pub control: GroupComm,
+    /// actual bytes this process writes to inter-node links (always 0
+    /// for single-process transports)
+    pub wire_bytes: Arc<WireBytes>,
 }
 
 /// How worker ranks reach each other: the trait the cluster executors
@@ -116,16 +167,25 @@ pub trait Transport {
 }
 
 /// Single-process backend: every rank lives here, all communicators are
-/// in-process channels, the control group is solo.
+/// in-process channels, the control group is solo. `placement` picks the
+/// global-group leader members through the same `Topology::leader_node`
+/// seam the TCP transport uses (load-neutral in one process, but it
+/// keeps the placement logic shared and the results provably identical).
 pub struct ChannelTransport {
     topo: Topology,
     timeout: Duration,
     wire: Wire,
+    placement: LeaderPlacement,
 }
 
 impl ChannelTransport {
-    pub fn new(topo: Topology, timeout: Duration, wire: Wire) -> ChannelTransport {
-        ChannelTransport { topo, timeout, wire }
+    pub fn new(
+        topo: Topology,
+        timeout: Duration,
+        wire: Wire,
+        placement: LeaderPlacement,
+    ) -> ChannelTransport {
+        ChannelTransport { topo, timeout, wire, placement }
     }
 }
 
@@ -143,13 +203,13 @@ impl Transport for ChannelTransport {
     }
 
     fn connect(&mut self) -> Result<Wiring> {
-        let rank_comms = build_comms(&self.topo, self.timeout, self.wire);
+        let rank_comms = build_comms(&self.topo, self.timeout, self.wire, self.placement);
         // the control group is report plumbing, not the training fabric:
         // it always rides uncompressed f32
         let control = GroupComm::group_with_timeout(1, self.timeout)
             .pop()
             .expect("solo control group");
-        Ok(Wiring { rank_comms, control })
+        Ok(Wiring { rank_comms, control, wire_bytes: Arc::new(WireBytes::default()) })
     }
 }
 
@@ -186,13 +246,27 @@ mod tests {
     #[test]
     fn channel_transport_hosts_the_whole_world() {
         let topo = Topology::new(2, 3);
-        let mut t = ChannelTransport::new(topo, Duration::from_secs(5), Wire::F32);
+        let mut t =
+            ChannelTransport::new(topo, Duration::from_secs(5), Wire::F32, LeaderPlacement::Mesh);
         assert_eq!(t.kind(), TransportKind::Channels);
         assert_eq!(t.node(), 0);
         assert_eq!(t.hosted_ranks(), (0..6).collect::<Vec<_>>());
         let fabric = t.connect().unwrap();
         assert_eq!(fabric.rank_comms.len(), 6);
         assert_eq!(fabric.control.size(), 1);
+        assert_eq!(fabric.wire_bytes.sent(), 0, "in-process fabric never touches a socket");
+    }
+
+    #[test]
+    fn default_chunk_threshold_is_sane() {
+        // only assert when the env does not override
+        if std::env::var("DASO_PIPELINE_CHUNK_ELEMS").is_err() {
+            assert_eq!(default_pipeline_chunk_elems(), DEFAULT_PIPELINE_CHUNK_ELEMS);
+        }
+        let wb = WireBytes::default();
+        wb.add_sent(5);
+        wb.add_sent(7);
+        assert_eq!(wb.sent(), 12);
     }
 
     #[test]

@@ -1,29 +1,46 @@
 //! Multi-process TCP backend: each process hosts one node's workers;
-//! the global tier crosses process boundaries as [`wire`] frames.
+//! the global tier crosses process boundaries as [`wire`] frames over a
+//! **full peer mesh** with distributed leader placement.
 //!
 //! Topology-to-socket mapping (a literal rendering of the paper's
 //! two-tier network): node-local communicators stay in-process
-//! (`comm::channels`), while every communicator that spans nodes — the
-//! world group, the per-local-id global groups, their non-blocking
-//! mailboxes and the report-aggregation control group — routes through
-//! the **coordinator** (node 0), which hosts every spanning group's
-//! leader. Peers connect to `DASO_COORD_ADDR` in a star; one demux
-//! thread per connection dispatches incoming frames to the right
-//! communicator by a deterministic comm id, so no id negotiation is
-//! needed beyond the HELLO/WELCOME topology check.
+//! (`comm::channels`), while every communicator that spans nodes routes
+//! point-to-point between the processes that host its members. The
+//! coordinator (node 0) still brokers the rendezvous — peers dial
+//! `DASO_COORD_ADDR`, HELLO carries each peer's own mesh listen address,
+//! and WELCOME hands everyone the assembled address book — but after the
+//! mesh phase (peers dial each other directly, deduplicated by node-id
+//! order so each pair gets exactly one link) the coordinator is just
+//! another node.
 //!
-//! Because member 0 of every spanning group (rank 0 for the world, node
-//! 0 for global groups) lives on the coordinator, the leader-side
-//! gather/reduce/scatter logic — and hence the reduction order — is the
-//! shared `comm::channels` code. Blocking strategies therefore stay
-//! bit-identical to `--executor serial`/`threaded` across processes.
+//! **Leader placement**: global group `g`'s rendezvous leader and async
+//! aggregator live on `Topology::leader_node(g)` (`g % nodes` — the
+//! paper's one-root-per-node layout), so the reduce load of the rotating
+//! global groups spreads across processes instead of serializing through
+//! rank 0. `LeaderPlacement::Star` restores the old everything-on-node-0
+//! routing as a measurable baseline. The world group (rank 0) and the
+//! report-aggregation control group keep their leaders on node 0 — rank
+//! 0 owns the run report by definition.
+//!
+//! **Chunked pipelining**: f32 payloads above `pipeline_chunk_elems`
+//! split into sequence-tagged sub-frames at the link layer
+//! (`CHUNK_BEGIN`/`CHUNK_DATA`), so the wire cast (bf16/f16), the socket
+//! transfer and the far side's decode + accumulation overlap instead of
+//! serializing whole-tensor frames. Reassembly is exact concatenation —
+//! chunking never changes a delivered bit, at any `--wire` setting.
+//!
+//! Because the leader-side gather/reduce/scatter logic is the shared
+//! `comm::channels` code and reductions run on member-ordered buffers,
+//! blocking strategies stay bit-identical to `--executor
+//! serial`/`threaded` across processes, placements and chunk sizes.
 //!
 //! Failure semantics: every rendezvous wait is bounded by the
 //! communicator timeout. A peer that dies mid-run surfaces as a
 //! "collective peer missing" error on whoever waits for it (its demux
 //! reader sees EOF and exits; pending receivers disconnect or time
 //! out) — never as a hang. Handshake problems (wrong protocol version,
-//! mismatched topology, duplicate node ids) fail the launch outright.
+//! mismatched topology/wire/placement, duplicate node ids, a mesh peer
+//! holding a different address book) fail the launch outright.
 
 use std::collections::BTreeMap;
 use std::io::ErrorKind;
@@ -39,17 +56,20 @@ use crate::comm::channels::{
     GatherMsg, GatherSender, GroupComm, RankComms, ScatterMsg, ScatterSender,
 };
 use crate::comm::collectives::Wire;
-use crate::comm::topology::Topology;
+use crate::comm::topology::{LeaderPlacement, Topology};
 
-use super::wire::{read_frame, write_async_sum, write_frame, Frame, PROTOCOL_VERSION};
-use super::{Transport, TransportKind, Wiring};
+use super::wire::{
+    book_digest, read_frame, read_message, write_async_sum_pipelined, write_frame,
+    write_frame_pipelined, Frame, PROTOCOL_VERSION,
+};
+use super::{default_pipeline_chunk_elems, Transport, TransportKind, WireBytes, Wiring};
 
 /// Environment variable carrying the coordinator's listen address.
 pub const ENV_COORD_ADDR: &str = "DASO_COORD_ADDR";
 /// Environment variable carrying this process's node id (0 = coordinator).
 pub const ENV_NODE_ID: &str = "DASO_NODE_ID";
 
-/// Deterministic comm-id scheme shared by both sides of every link.
+/// Deterministic comm-id scheme shared by every process of a launch.
 fn world_comm_id() -> u32 {
     0
 }
@@ -92,16 +112,69 @@ impl TcpRole {
     }
 }
 
-/// Shared write half of one peer connection; frames are written whole
-/// under the lock so concurrent member threads cannot interleave bytes.
+/// Everything about a TCP transport that is not the topology or the
+/// process role: rendezvous timeout, negotiated wire format, leader
+/// placement and the chunked-pipelining threshold.
+#[derive(Debug, Clone, Copy)]
+pub struct TcpTuning {
+    pub timeout: Duration,
+    /// wire format for the global tier's f32 payloads, verified against
+    /// every peer in the HELLO/WELCOME handshake
+    pub wire: Wire,
+    /// where spanning-group leaders live, verified in the handshake (a
+    /// placement mismatch would deadlock, so it fails fast instead)
+    pub placement: LeaderPlacement,
+    /// split f32 payloads above this many elements into pipelined chunk
+    /// frames (0 disables chunking)
+    pub chunk_elems: usize,
+}
+
+impl TcpTuning {
+    /// Mesh placement + environment-default chunk threshold.
+    pub fn new(timeout: Duration, wire: Wire) -> TcpTuning {
+        TcpTuning {
+            timeout,
+            wire,
+            placement: LeaderPlacement::Mesh,
+            chunk_elems: default_pipeline_chunk_elems(),
+        }
+    }
+
+    pub fn with_placement(mut self, placement: LeaderPlacement) -> TcpTuning {
+        self.placement = placement;
+        self
+    }
+
+    pub fn with_chunk_elems(mut self, chunk_elems: usize) -> TcpTuning {
+        self.chunk_elems = chunk_elems;
+        self
+    }
+}
+
+/// Shared write half of one peer connection. Frames are written whole
+/// (or, for chunked payloads, as one contiguous CHUNK sequence) under
+/// the lock so concurrent member threads cannot interleave bytes; the
+/// per-link scratch buffer is reused across frames, so a send is one
+/// encode into warm memory plus one buffered `write_all` per frame.
 #[derive(Clone)]
 struct PeerLink {
-    writer: Arc<Mutex<TcpStream>>,
+    writer: Arc<Mutex<LinkWriter>>,
+    counters: Arc<WireBytes>,
+    chunk_elems: usize,
+}
+
+struct LinkWriter {
+    stream: TcpStream,
+    scratch: Vec<u8>,
 }
 
 impl PeerLink {
-    fn new(stream: TcpStream) -> PeerLink {
-        PeerLink { writer: Arc::new(Mutex::new(stream)) }
+    fn new(stream: TcpStream, counters: Arc<WireBytes>, chunk_elems: usize) -> PeerLink {
+        PeerLink {
+            writer: Arc::new(Mutex::new(LinkWriter { stream, scratch: Vec::new() })),
+            counters,
+            chunk_elems,
+        }
     }
 
     /// Write one frame, encoding f32 payloads as `wire` — the negotiated
@@ -109,7 +182,10 @@ impl PeerLink {
     /// group's report plumbing.
     fn send(&self, frame: &Frame, wire: Wire) -> Result<()> {
         let mut w = self.writer.lock().unwrap();
-        write_frame(&mut *w, frame, wire)
+        let LinkWriter { stream, scratch } = &mut *w;
+        let bytes = write_frame_pipelined(stream, frame, wire, self.chunk_elems, scratch)?;
+        self.counters.add_sent(bytes);
+        Ok(())
     }
 
     fn send_async_sum(
@@ -122,7 +198,20 @@ impl PeerLink {
         wire: Wire,
     ) -> Result<()> {
         let mut w = self.writer.lock().unwrap();
-        write_async_sum(&mut *w, comm, member, seq, finish, sum, wire)
+        let LinkWriter { stream, scratch } = &mut *w;
+        let bytes = write_async_sum_pipelined(
+            stream,
+            comm,
+            member,
+            seq,
+            finish,
+            sum,
+            wire,
+            self.chunk_elems,
+            scratch,
+        )?;
+        self.counters.add_sent(bytes);
+        Ok(())
     }
 }
 
@@ -133,76 +222,61 @@ enum Mode {
 }
 
 /// TCP transport for one process of a `nodes`-process launch. The
-/// coordinator (node 0) owns the listener and hosts every spanning
-/// group's leader; peers dial in and host plain members.
+/// coordinator (node 0) owns the rendezvous listener and brokers the
+/// address book; after the mesh phase every pair of processes shares
+/// exactly one direct link and each spanning group's leader lives on its
+/// placement node.
 pub struct TcpTransport {
     topo: Topology,
     node: usize,
-    timeout: Duration,
-    /// wire format for the global tier's f32 payloads, verified against
-    /// every peer in the HELLO/WELCOME handshake
-    wire: Wire,
+    tuning: TcpTuning,
     mode: Mode,
 }
 
 impl TcpTransport {
     /// Node-0 side, around an already-bound listener (the launcher binds
     /// before spawning peers so the advertised address is never racy).
-    pub fn coordinator(
-        topo: Topology,
-        listener: TcpListener,
-        timeout: Duration,
-        wire: Wire,
-    ) -> TcpTransport {
-        TcpTransport { topo, node: 0, timeout, wire, mode: Mode::Coordinator { listener } }
+    pub fn coordinator(topo: Topology, listener: TcpListener, tuning: TcpTuning) -> TcpTransport {
+        TcpTransport { topo, node: 0, tuning, mode: Mode::Coordinator { listener } }
     }
 
     /// Peer side for `node` (1-based among nodes), dialing `addr` with
     /// retries until the coordinator is up or the timeout expires.
-    pub fn peer(
-        topo: Topology,
-        node: usize,
-        addr: &str,
-        timeout: Duration,
-        wire: Wire,
-    ) -> Result<TcpTransport> {
+    pub fn peer(topo: Topology, node: usize, addr: &str, tuning: TcpTuning) -> Result<TcpTransport> {
         ensure!(
             node >= 1 && node < topo.nodes,
             "peer node id {node} out of range 1..{}",
             topo.nodes
         );
-        Ok(TcpTransport { topo, node, timeout, wire, mode: Mode::Peer { addr: addr.to_string() } })
+        Ok(TcpTransport { topo, node, tuning, mode: Mode::Peer { addr: addr.to_string() } })
     }
 
     /// Build from the env handshake: node 0 binds the advertised
     /// address, everyone else dials it.
-    pub fn from_role(
-        topo: Topology,
-        role: &TcpRole,
-        timeout: Duration,
-        wire: Wire,
-    ) -> Result<TcpTransport> {
+    pub fn from_role(topo: Topology, role: &TcpRole, tuning: TcpTuning) -> Result<TcpTransport> {
         if role.node == 0 {
             let listener = TcpListener::bind(&role.addr)
                 .with_context(|| format!("binding coordinator listener on {}", role.addr))?;
-            Ok(TcpTransport::coordinator(topo, listener, timeout, wire))
+            Ok(TcpTransport::coordinator(topo, listener, tuning))
         } else {
-            TcpTransport::peer(topo, role.node, &role.addr, timeout, wire)
+            TcpTransport::peer(topo, role.node, &role.addr, tuning)
         }
     }
 
     fn connect_coordinator(&self, listener: TcpListener) -> Result<Wiring> {
         let topo = self.topo;
-        let (nodes, gpn, world) = (topo.nodes, topo.gpus_per_node, topo.world());
-        // a 1-node launch has no inter tier: nothing to compress (same
-        // rule as the channels transport, so executors stay bit-identical)
-        let wire = if nodes > 1 { self.wire } else { Wire::F32 };
-        let timeout = self.timeout;
+        let (nodes, gpn) = (topo.nodes, topo.gpus_per_node);
+        let wire = topo.resolve_global_wire(self.tuning.wire);
+        let placement = self.tuning.placement;
+        let timeout = self.tuning.timeout;
         let deadline = Instant::now() + timeout;
         listener.set_nonblocking(true).context("making listener pollable")?;
 
-        let mut writers: Vec<Option<PeerLink>> = (0..nodes).map(|_| None).collect();
+        let counters = Arc::new(WireBytes::default());
+        let mut links: Vec<Option<PeerLink>> = (0..nodes).map(|_| None).collect();
         let mut readers: Vec<Option<TcpStream>> = (0..nodes).map(|_| None).collect();
+        let mut mesh_addrs: Vec<Option<String>> = (0..nodes).map(|_| None).collect();
+        let mut writers: Vec<Option<TcpStream>> = (0..nodes).map(|_| None).collect();
         let mut pending = nodes - 1;
         while pending > 0 {
             match listener.accept() {
@@ -234,7 +308,15 @@ impl TcpTransport {
                         }
                     };
                     let node = match hello {
-                        Frame::Hello { version, node, nodes: n, gpus_per_node: g, wire: w } => {
+                        Frame::Hello {
+                            version,
+                            node,
+                            nodes: n,
+                            gpus_per_node: g,
+                            wire: w,
+                            placement: p,
+                            mesh_addr,
+                        } => {
                             ensure!(
                                 version == PROTOCOL_VERSION,
                                 "peer {peer_addr} speaks wire protocol {version}, \
@@ -252,12 +334,24 @@ impl TcpTransport {
                                 w.name(),
                                 wire.name()
                             );
+                            ensure!(
+                                p == placement,
+                                "peer {peer_addr} was launched with leader_placement={}, \
+                                 the coordinator expects leader_placement={}",
+                                p.name(),
+                                placement.name()
+                            );
+                            ensure!(
+                                !mesh_addr.is_empty(),
+                                "peer {peer_addr} advertised no mesh listen address"
+                            );
                             let node = node as usize;
                             ensure!(
                                 node >= 1 && node < nodes,
                                 "peer node id {node} out of range 1..{nodes}"
                             );
                             ensure!(writers[node].is_none(), "duplicate peer for node {node}");
+                            mesh_addrs[node] = Some(mesh_addr);
                             node
                         }
                         other => {
@@ -269,19 +363,8 @@ impl TcpTransport {
                             continue;
                         }
                     };
-                    let mut writer = stream;
-                    write_frame(
-                        &mut writer,
-                        &Frame::Welcome {
-                            version: PROTOCOL_VERSION,
-                            nodes: nodes as u32,
-                            gpus_per_node: gpn as u32,
-                            wire,
-                        },
-                        wire,
-                    )?;
                     reader.set_read_timeout(None).ok();
-                    writers[node] = Some(PeerLink::new(writer));
+                    writers[node] = Some(stream);
                     readers[node] = Some(reader);
                     pending -= 1;
                 }
@@ -299,154 +382,52 @@ impl TcpTransport {
             }
         }
 
-        let link_to = |node: usize| writers[node].clone().expect("peer link");
-        // collective frames ride the negotiated wire; the control group's
-        // report frames always ride f32 (they are not the training fabric)
-        let scatter_to = |node: usize, comm: u32, member: usize, wire: Wire| -> ScatterSender {
-            let link = link_to(node);
-            Box::new(move |msg: ScatterMsg| {
-                link.send(
-                    &Frame::Scatter {
-                        comm,
-                        member: member as u32,
-                        clocks: msg.clocks,
-                        payload: msg.payload,
-                    },
+        // every peer is in: assemble the address book (node 0's entry is
+        // its own listener address — peers never dial it again, but the
+        // digest every process verifies covers the whole book) and hand
+        // it out in the WELCOMEs; peers then mesh among themselves
+        let mut book: Vec<String> =
+            vec![listener.local_addr().context("resolving coordinator address")?.to_string()];
+        for addr in mesh_addrs.into_iter().skip(1) {
+            book.push(addr.expect("all peers advertised a mesh address"));
+        }
+        for (node, writer) in writers.iter_mut().enumerate().skip(1) {
+            let writer = writer.as_mut().expect("all peers connected");
+            write_frame(
+                writer,
+                &Frame::Welcome {
+                    version: PROTOCOL_VERSION,
+                    nodes: nodes as u32,
+                    gpus_per_node: gpn as u32,
                     wire,
-                )
-            })
-        };
-
-        let mut gather_ports: BTreeMap<u32, Sender<GatherMsg>> = BTreeMap::new();
-        let mut async_injectors: BTreeMap<u32, AsyncInjector> = BTreeMap::new();
-
-        // world group: members are global ranks, local = node 0's ranks
-        let world_local: Vec<usize> = (0..gpn).collect();
-        let mut remote: BTreeMap<usize, ScatterSender> = BTreeMap::new();
-        for r in gpn..world {
-            remote.insert(r, scatter_to(topo.rank_of(r).node, world_comm_id(), r, wire));
+                    placement,
+                    book: book.clone(),
+                },
+                wire,
+            )
+            .with_context(|| format!("sending WELCOME to node {node}"))?;
         }
-        let (world_handles, world_port) =
-            GroupComm::assemble_spanning(world, &world_local, remote, timeout, wire);
-        gather_ports.insert(world_comm_id(), world_port);
-
-        // one global (blocking + mailbox) group per local id; members
-        // are node ids, the coordinator hosts member 0
-        let mut global_handles = Vec::with_capacity(gpn);
-        let mut async_handles = Vec::with_capacity(gpn);
-        for g in 0..gpn {
-            let mut remote: BTreeMap<usize, ScatterSender> = BTreeMap::new();
-            for nd in 1..nodes {
-                remote.insert(nd, scatter_to(nd, global_comm_id(g), nd, wire));
-            }
-            let (mut handles, port) =
-                GroupComm::assemble_spanning(nodes, &[0], remote, timeout, wire);
-            gather_ports.insert(global_comm_id(g), port);
-            global_handles.push(handles.pop().expect("global leader handle"));
-
-            let mut remote: BTreeMap<usize, AsyncResultSender> = BTreeMap::new();
-            for nd in 1..nodes {
-                let link = link_to(nd);
-                let comm = async_comm_id(g, gpn);
-                remote.insert(
-                    nd,
-                    Box::new(move |seq, sum: Arc<Vec<f32>>, finish| {
-                        link.send_async_sum(comm, nd as u32, seq, finish, &sum, wire)
-                    }),
-                );
-            }
-            let (mut handles, injector) =
-                AsyncGroup::assemble_spanning(nodes, &[0], remote, timeout, wire);
-            async_injectors.insert(async_comm_id(g, gpn), injector);
-            async_handles.push(handles.pop().expect("local mailbox handle"));
-        }
-
-        // control group: one member per process, for report aggregation
-        let mut remote: BTreeMap<usize, ScatterSender> = BTreeMap::new();
-        for nd in 1..nodes {
-            remote.insert(nd, scatter_to(nd, control_comm_id(gpn), nd, Wire::F32));
-        }
-        let (mut handles, port) =
-            GroupComm::assemble_spanning(nodes, &[0], remote, timeout, Wire::F32);
-        gather_ports.insert(control_comm_id(gpn), port);
-        let control = handles.pop().expect("control leader handle");
-
-        let gather_ports = Arc::new(gather_ports);
-        let async_injectors = Arc::new(async_injectors);
-        for (nd, reader) in readers.iter_mut().enumerate() {
-            if let Some(reader) = reader.take() {
-                let ports = gather_ports.clone();
-                let injectors = async_injectors.clone();
-                std::thread::Builder::new()
-                    .name(format!("daso-demux-node{nd}"))
-                    .spawn(move || coordinator_demux(reader, ports, injectors, nd))
-                    .context("spawning demux thread")?;
+        for (node, writer) in writers.into_iter().enumerate() {
+            if let Some(stream) = writer {
+                links[node] = Some(PeerLink::new(stream, counters.clone(), self.tuning.chunk_elems));
             }
         }
 
-        let node_handles = GroupComm::group_with_timeout(gpn, timeout);
-        let rank_comms = world_handles
-            .into_iter()
-            .zip(node_handles)
-            .zip(global_handles)
-            .zip(async_handles)
-            .map(|(((world, node), global), global_async)| RankComms {
-                world,
-                node,
-                global,
-                global_async,
-            })
-            .collect();
-        Ok(Wiring { rank_comms, control })
+        build_wiring(topo, 0, links, readers, timeout, wire, placement, counters)
     }
 
     fn connect_peer(&self, addr: &str) -> Result<Wiring> {
         let topo = self.topo;
-        let node = self.node;
+        let me = self.node;
         let (nodes, gpn) = (topo.nodes, topo.gpus_per_node);
-        let wire = self.wire;
-        let timeout = self.timeout;
+        let wire = self.tuning.wire;
+        let placement = self.tuning.placement;
+        let timeout = self.tuning.timeout;
+        let chunk_elems = self.tuning.chunk_elems;
         let deadline = Instant::now() + timeout;
 
-        // resolve once; connect attempts are individually bounded so a
-        // blackholed address (dropped SYNs) cannot stall past the
-        // configured timeout the way the OS connect default would
-        let coord: SocketAddr = addr
-            .to_socket_addrs()
-            .with_context(|| format!("resolving coordinator address {addr}"))?
-            .next()
-            .ok_or_else(|| anyhow!("coordinator address {addr} resolved to nothing"))?;
-        // the coordinator may still be binding: retry transient refusals
-        // until the deadline, but surface permanent failures (bad
-        // address, unroutable network) immediately
-        let stream = loop {
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            if remaining.is_zero() {
-                bail!("timed out after {timeout:?} connecting to coordinator at {addr}");
-            }
-            let attempt = remaining.min(Duration::from_secs(5)).max(Duration::from_millis(1));
-            match TcpStream::connect_timeout(&coord, attempt) {
-                Ok(s) => break s,
-                Err(e) => {
-                    let transient = matches!(
-                        e.kind(),
-                        ErrorKind::ConnectionRefused
-                            | ErrorKind::ConnectionReset
-                            | ErrorKind::ConnectionAborted
-                            | ErrorKind::TimedOut
-                            | ErrorKind::WouldBlock
-                            | ErrorKind::Interrupted
-                    );
-                    if !transient || Instant::now() >= deadline {
-                        return Err(anyhow!(e).context(format!(
-                            "connecting to coordinator at {addr} \
-                             (is the rank-0 process up?)"
-                        )));
-                    }
-                    std::thread::sleep(Duration::from_millis(50));
-                }
-            }
-        };
+        let stream = dial_with_retry(addr, deadline, "coordinator")
+            .with_context(|| format!("connecting to coordinator at {addr} (is the rank-0 process up?)"))?;
         stream.set_nodelay(true).ok();
         // writes stay bounded for the whole run: a wedged coordinator
         // must surface as an error, never a hang
@@ -454,23 +435,35 @@ impl TcpTransport {
         let remaining =
             deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(1));
         stream.set_read_timeout(Some(remaining)).ok();
+
+        // bind this peer's mesh listener on the interface that reaches
+        // the coordinator *before* advertising it, so a dialing peer can
+        // never race the bind
+        let local_ip = stream.local_addr().context("resolving local address")?.ip();
+        let mesh_listener = TcpListener::bind((local_ip, 0))
+            .with_context(|| format!("binding mesh listener on {local_ip}"))?;
+        let mesh_addr =
+            mesh_listener.local_addr().context("resolving mesh listener address")?.to_string();
+
         let mut reader = stream.try_clone().context("cloning stream for the demux")?;
         let mut writer = stream;
         write_frame(
             &mut writer,
             &Frame::Hello {
                 version: PROTOCOL_VERSION,
-                node: node as u32,
+                node: me as u32,
                 nodes: nodes as u32,
                 gpus_per_node: gpn as u32,
                 wire,
+                placement,
+                mesh_addr: mesh_addr.clone(),
             },
             wire,
         )?;
-        match read_frame(&mut reader)
+        let book = match read_frame(&mut reader)
             .context("waiting for coordinator WELCOME (topology mismatch or dead coordinator?)")?
         {
-            Frame::Welcome { version, nodes: n, gpus_per_node: g, wire: w } => {
+            Frame::Welcome { version, nodes: n, gpus_per_node: g, wire: w, placement: p, book } => {
                 ensure!(
                     version == PROTOCOL_VERSION && n as usize == nodes && g as usize == gpn,
                     "coordinator runs wire protocol {version} on a {n}x{g} cluster; \
@@ -482,62 +475,427 @@ impl TcpTransport {
                     w.name(),
                     wire.name()
                 );
+                ensure!(
+                    p == placement,
+                    "coordinator runs leader_placement={}, this peer was launched with \
+                     leader_placement={}",
+                    p.name(),
+                    placement.name()
+                );
+                ensure!(
+                    book.len() == nodes,
+                    "address book mismatch: coordinator sent {} entries for a {nodes}-node \
+                     launch",
+                    book.len()
+                );
+                ensure!(
+                    book[me] == mesh_addr,
+                    "address book mismatch: the coordinator recorded {} for node {me}, \
+                     this peer listens on {mesh_addr}",
+                    book[me]
+                );
+                book
             }
             other => bail!("expected WELCOME, got {}", other.name()),
-        }
+        };
         reader.set_read_timeout(None).ok();
-        let link = PeerLink::new(writer);
 
-        let gather_via = |comm: u32, wire: Wire| -> GatherSender {
-            let link = link.clone();
-            Box::new(move |m: GatherMsg| {
-                link.send(
-                    &Frame::Gather {
-                        comm,
-                        member: m.index as u32,
-                        clock: m.clock,
-                        payload: m.payload,
+        let counters = Arc::new(WireBytes::default());
+        let mut links: Vec<Option<PeerLink>> = (0..nodes).map(|_| None).collect();
+        let mut readers: Vec<Option<TcpStream>> = (0..nodes).map(|_| None).collect();
+        links[0] = Some(PeerLink::new(writer, counters.clone(), chunk_elems));
+        readers[0] = Some(reader);
+
+        // mesh phase: the address book is identical on every process by
+        // construction (one coordinator broadcast); its digest is the
+        // launch's fingerprint on every peer-to-peer link
+        let digest = book_digest(&book);
+        // dedup by node-id order: this node dials every lower-numbered
+        // peer (each pair gets exactly one link); higher-numbered peers
+        // dial us. The wait order is acyclic — node j only blocks on
+        // i < j — so the mesh can never deadlock.
+        for target in 1..me {
+            let stream = dial_mesh_link(topo, wire, me, target, &book[target], digest, deadline)?;
+            // run-long bound: the handshake's tighter write deadline must
+            // not linger on the established link
+            stream.set_write_timeout(Some(timeout)).ok();
+            let reader =
+                stream.try_clone().context("cloning mesh stream for the demux")?;
+            links[target] = Some(PeerLink::new(stream, counters.clone(), chunk_elems));
+            readers[target] = Some(reader);
+        }
+        for (node, stream) in accept_mesh_links(&mesh_listener, topo, wire, me, digest, deadline)? {
+            stream.set_write_timeout(Some(timeout)).ok();
+            let reader =
+                stream.try_clone().context("cloning mesh stream for the demux")?;
+            links[node] = Some(PeerLink::new(stream, counters.clone(), chunk_elems));
+            readers[node] = Some(reader);
+        }
+
+        build_wiring(topo, me, links, readers, timeout, wire, placement, counters)
+    }
+}
+
+/// Dial `addr` until `deadline`, retrying transient refusals (the target
+/// may still be binding) but surfacing permanent failures immediately.
+/// Connect attempts are individually bounded so a blackholed address
+/// (dropped SYNs) cannot stall past the configured timeout.
+fn dial_with_retry(addr: &str, deadline: Instant, what: &str) -> Result<TcpStream> {
+    let target: SocketAddr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {what} address {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow!("{what} address {addr} resolved to nothing"))?;
+    loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            bail!("timed out connecting to {what} at {addr}");
+        }
+        let attempt = remaining.min(Duration::from_secs(5)).max(Duration::from_millis(1));
+        match TcpStream::connect_timeout(&target, attempt) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                let transient = matches!(
+                    e.kind(),
+                    ErrorKind::ConnectionRefused
+                        | ErrorKind::ConnectionReset
+                        | ErrorKind::ConnectionAborted
+                        | ErrorKind::TimedOut
+                        | ErrorKind::WouldBlock
+                        | ErrorKind::Interrupted
+                );
+                if !transient || Instant::now() >= deadline {
+                    return Err(anyhow!(e).context(format!("connecting to {what} at {addr}")));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Dialer side of one mesh link: node `me` dials lower-numbered `target`
+/// and both sides verify protocol, launch shape and the address-book
+/// digest before the link carries a single collective frame.
+fn dial_mesh_link(
+    topo: Topology,
+    wire: Wire,
+    me: usize,
+    target: usize,
+    addr: &str,
+    digest: u64,
+    deadline: Instant,
+) -> Result<TcpStream> {
+    let stream = dial_with_retry(addr, deadline, "mesh peer")
+        .with_context(|| format!("dialing mesh link to node {target}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_write_timeout(Some(deadline.saturating_duration_since(Instant::now()))).ok();
+    let remaining =
+        deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(1));
+    stream.set_read_timeout(Some(remaining)).ok();
+    let mut reader = stream.try_clone().context("cloning mesh stream")?;
+    let mut writer = stream;
+    write_frame(
+        &mut writer,
+        &Frame::MeshHello {
+            version: PROTOCOL_VERSION,
+            node: me as u32,
+            nodes: topo.nodes as u32,
+            gpus_per_node: topo.gpus_per_node as u32,
+            wire,
+            book_digest: digest,
+        },
+        wire,
+    )?;
+    match read_frame(&mut reader)
+        .with_context(|| format!("waiting for MESH_WELCOME from node {target}"))?
+    {
+        Frame::MeshWelcome { version, node, book_digest: d } => {
+            ensure!(
+                version == PROTOCOL_VERSION,
+                "mesh peer at {addr} speaks wire protocol {version}, \
+                 this build speaks {PROTOCOL_VERSION}"
+            );
+            ensure!(
+                node as usize == target,
+                "mesh address book mismatch: the book maps node {target} to {addr}, \
+                 but the process there identifies as node {node}"
+            );
+            ensure!(
+                d == digest,
+                "mesh address book mismatch: node {node} holds a different rendezvous \
+                 address book (digest {d:#018x}, expected {digest:#018x}) — \
+                 is it from another launch?"
+            );
+        }
+        other => bail!("expected MESH_WELCOME from node {target}, got {}", other.name()),
+    }
+    writer.set_read_timeout(None).ok();
+    Ok(writer)
+}
+
+/// Acceptor side of the mesh phase: node `me` accepts exactly one link
+/// from every higher-numbered node, validating each MESH_HELLO against
+/// the launch shape and the address-book digest. Duplicate dials for an
+/// already-linked node fail the launch (a stray process is wired into
+/// some cluster — silently dropping it would strand that cluster).
+fn accept_mesh_links(
+    listener: &TcpListener,
+    topo: Topology,
+    wire: Wire,
+    me: usize,
+    digest: u64,
+    deadline: Instant,
+) -> Result<Vec<(usize, TcpStream)>> {
+    let nodes = topo.nodes;
+    let expected: usize = nodes - 1 - me;
+    let mut links: Vec<(usize, TcpStream)> = Vec::with_capacity(expected);
+    if expected == 0 {
+        return Ok(links);
+    }
+    listener.set_nonblocking(true).context("making mesh listener pollable")?;
+    let mut taken = vec![false; nodes];
+    while links.len() < expected {
+        match listener.accept() {
+            Ok((stream, peer_addr)) => {
+                stream.set_nonblocking(false).context("mesh stream to blocking mode")?;
+                stream.set_nodelay(true).ok();
+                stream
+                    .set_write_timeout(Some(deadline.saturating_duration_since(Instant::now())))
+                    .ok();
+                let remaining = deadline
+                    .saturating_duration_since(Instant::now())
+                    .min(Duration::from_secs(5))
+                    .max(Duration::from_millis(1));
+                stream.set_read_timeout(Some(remaining)).ok();
+                let mut reader = stream.try_clone().context("cloning mesh stream")?;
+                let hello = match read_frame(&mut reader) {
+                    Ok(frame) => frame,
+                    Err(e) => {
+                        eprintln!(
+                            "transport: dropping mesh connection from {peer_addr} \
+                             (no valid MESH_HELLO: {e:#})"
+                        );
+                        continue;
+                    }
+                };
+                let node = match hello {
+                    Frame::MeshHello {
+                        version,
+                        node,
+                        nodes: n,
+                        gpus_per_node: g,
+                        wire: w,
+                        book_digest: d,
+                    } => {
+                        ensure!(
+                            version == PROTOCOL_VERSION,
+                            "mesh peer {peer_addr} speaks wire protocol {version}, \
+                             this build speaks {PROTOCOL_VERSION}"
+                        );
+                        ensure!(
+                            n as usize == nodes && g as usize == topo.gpus_per_node,
+                            "mesh peer {peer_addr} was launched for a {n}x{g} cluster, \
+                             node {me} expects {nodes}x{}",
+                            topo.gpus_per_node
+                        );
+                        ensure!(
+                            w == wire,
+                            "mesh peer {peer_addr} was launched with --wire {}, \
+                             node {me} expects --wire {}",
+                            w.name(),
+                            wire.name()
+                        );
+                        ensure!(
+                            d == digest,
+                            "mesh address book mismatch: node {node} at {peer_addr} holds a \
+                             different rendezvous address book (digest {d:#018x}, expected \
+                             {digest:#018x}) — is it from another launch?"
+                        );
+                        let node = node as usize;
+                        ensure!(
+                            node > me && node < nodes,
+                            "mesh dial from node {node} violates the node-id dedup order \
+                             (only nodes {}..{nodes} dial node {me})",
+                            me + 1
+                        );
+                        ensure!(!taken[node], "duplicate mesh link for node {node}");
+                        taken[node] = true;
+                        node
+                    }
+                    other => {
+                        eprintln!(
+                            "transport: dropping mesh connection from {peer_addr} \
+                             (expected MESH_HELLO, got {})",
+                            other.name()
+                        );
+                        continue;
+                    }
+                };
+                let mut writer = stream;
+                write_frame(
+                    &mut writer,
+                    &Frame::MeshWelcome {
+                        version: PROTOCOL_VERSION,
+                        node: me as u32,
+                        book_digest: digest,
                     },
+                    wire,
+                )?;
+                reader.set_read_timeout(None).ok();
+                drop(reader);
+                writer.set_read_timeout(None).ok();
+                links.push((node, writer));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "timed out waiting for {} mesh link(s) into node {me}",
+                        expected - links.len()
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(anyhow!(e).context("accepting mesh connection")),
+        }
+    }
+    Ok(links)
+}
+
+/// Routing tables for one process's incoming frames, shared by every
+/// link's demux thread: leader-side gather ports and async injectors for
+/// the groups this process leads, member-side scatter/async-sum ports
+/// for the groups it joins remotely.
+#[derive(Default)]
+struct Routes {
+    gathers: BTreeMap<u32, Sender<GatherMsg>>,
+    injectors: BTreeMap<u32, AsyncInjector>,
+    scatters: BTreeMap<(u32, u32), Sender<ScatterMsg>>,
+    async_sums: BTreeMap<(u32, u32), Sender<AsyncResultMsg>>,
+}
+
+/// Wire up this process's side of every spanning communicator, given
+/// one established link per other node. Group `g`'s leader handles live
+/// on `placement.leader_node(g)`; the world and control groups keep
+/// their leaders on node 0 (rank 0 owns the run report). Spawns one
+/// demux thread per link.
+#[allow(clippy::too_many_arguments)]
+fn build_wiring(
+    topo: Topology,
+    me: usize,
+    links: Vec<Option<PeerLink>>,
+    mut readers: Vec<Option<TcpStream>>,
+    timeout: Duration,
+    wire: Wire,
+    placement: LeaderPlacement,
+    counters: Arc<WireBytes>,
+) -> Result<Wiring> {
+    let (nodes, gpn, world) = (topo.nodes, topo.gpus_per_node, topo.world());
+    let link = |q: usize| links[q].clone().expect("peer link");
+    // collective frames ride the negotiated wire; the control group's
+    // report frames always ride f32 (they are not the training fabric)
+    let scatter_to = |q: usize, comm: u32, member: usize, wire: Wire| -> ScatterSender {
+        let link = link(q);
+        Box::new(move |msg: ScatterMsg| {
+            link.send(
+                &Frame::Scatter {
+                    comm,
+                    member: member as u32,
+                    clocks: msg.clocks,
+                    payload: msg.payload,
+                },
+                wire,
+            )
+        })
+    };
+    let gather_via = |q: usize, comm: u32, wire: Wire| -> GatherSender {
+        let link = link(q);
+        Box::new(move |m: GatherMsg| {
+            link.send(
+                &Frame::Gather { comm, member: m.index as u32, clock: m.clock, payload: m.payload },
+                wire,
+            )
+        })
+    };
+
+    let mut routes = Routes::default();
+
+    // world group: members are global ranks, the leader is rank 0 (node 0)
+    let world_handles: Vec<GroupComm> = if me == 0 {
+        let local = topo.node_ranks(0);
+        let mut remote: BTreeMap<usize, ScatterSender> = BTreeMap::new();
+        for r in gpn..world {
+            remote.insert(r, scatter_to(topo.rank_of(r).node, world_comm_id(), r, wire));
+        }
+        let (handles, port) =
+            GroupComm::assemble_spanning(world, 0, &local, remote, timeout, wire);
+        routes.gathers.insert(world_comm_id(), port);
+        handles
+    } else {
+        topo.node_ranks(me)
+            .into_iter()
+            .map(|r| {
+                let (tx, rx) = channel();
+                routes.scatters.insert((world_comm_id(), r as u32), tx);
+                GroupComm::remote_member(
+                    world,
+                    r,
+                    gather_via(0, world_comm_id(), wire),
+                    rx,
+                    timeout,
                     wire,
                 )
             })
-        };
+            .collect()
+    };
 
-        let mut scatter_ports: BTreeMap<(u32, u32), Sender<ScatterMsg>> = BTreeMap::new();
-        let mut async_ports: BTreeMap<(u32, u32), Sender<AsyncResultMsg>> = BTreeMap::new();
+    // one global (blocking + mailbox) group per local id; members are
+    // node ids, the leader/aggregator lives on the placement node
+    let mut global_handles = Vec::with_capacity(gpn);
+    let mut async_handles = Vec::with_capacity(gpn);
+    for g in 0..gpn {
+        let leader = placement.leader_node(&topo, g);
+        if me == leader {
+            let mut remote: BTreeMap<usize, ScatterSender> = BTreeMap::new();
+            for q in (0..nodes).filter(|&q| q != me) {
+                remote.insert(q, scatter_to(q, global_comm_id(g), q, wire));
+            }
+            let (mut handles, port) =
+                GroupComm::assemble_spanning(nodes, leader, &[leader], remote, timeout, wire);
+            routes.gathers.insert(global_comm_id(g), port);
+            global_handles.push(handles.pop().expect("global leader handle"));
 
-        let node_handles = GroupComm::group_with_timeout(gpn, timeout);
-        let mut rank_comms = Vec::with_capacity(gpn);
-        for (l, node_comm) in node_handles.into_iter().enumerate() {
-            let r = topo.rank(node, l).global;
-
+            let mut remote: BTreeMap<usize, AsyncResultSender> = BTreeMap::new();
+            for q in (0..nodes).filter(|&q| q != me) {
+                let link = link(q);
+                let comm = async_comm_id(g, gpn);
+                remote.insert(
+                    q,
+                    Box::new(move |seq, sum: Arc<Vec<f32>>, finish| {
+                        link.send_async_sum(comm, q as u32, seq, finish, &sum, wire)
+                    }),
+                );
+            }
+            let (mut handles, injector) =
+                AsyncGroup::assemble_spanning(nodes, &[me], remote, timeout, wire);
+            routes.injectors.insert(async_comm_id(g, gpn), injector);
+            async_handles.push(handles.pop().expect("local mailbox handle"));
+        } else {
             let (tx, rx) = channel();
-            scatter_ports.insert((world_comm_id(), r as u32), tx);
-            let world = GroupComm::remote_member(
-                topo.world(),
-                r,
-                gather_via(world_comm_id(), wire),
-                rx,
-                timeout,
-                wire,
-            );
-
-            let (tx, rx) = channel();
-            scatter_ports.insert((global_comm_id(l), node as u32), tx);
-            let global = GroupComm::remote_member(
+            routes.scatters.insert((global_comm_id(g), me as u32), tx);
+            global_handles.push(GroupComm::remote_member(
                 nodes,
-                node,
-                gather_via(global_comm_id(l), wire),
+                me,
+                gather_via(leader, global_comm_id(g), wire),
                 rx,
                 timeout,
                 wire,
-            );
+            ));
 
             let (tx, rx) = channel();
-            async_ports.insert((async_comm_id(l, gpn), node as u32), tx);
+            routes.async_sums.insert((async_comm_id(g, gpn), me as u32), tx);
             let send: AsyncSendSender = {
-                let link = link.clone();
-                let comm = async_comm_id(l, gpn);
+                let link = link(leader);
+                let comm = async_comm_id(g, gpn);
                 Box::new(move |m: AsyncSendMsg| {
                     link.send(
                         &Frame::AsyncPut {
@@ -552,27 +910,116 @@ impl TcpTransport {
                     )
                 })
             };
-            let global_async = AsyncGroup::remote_member(nodes, node, send, rx, timeout, wire);
-
-            rank_comms.push(RankComms { world, node: node_comm, global, global_async });
+            async_handles.push(AsyncGroup::remote_member(nodes, me, send, rx, timeout, wire));
         }
+    }
 
+    // control group: one member per process, led by the coordinator
+    // (rank 0 assembles the run report); always uncompressed f32
+    let control = if me == 0 {
+        let mut remote: BTreeMap<usize, ScatterSender> = BTreeMap::new();
+        for q in 1..nodes {
+            remote.insert(q, scatter_to(q, control_comm_id(gpn), q, Wire::F32));
+        }
+        let (mut handles, port) =
+            GroupComm::assemble_spanning(nodes, 0, &[0], remote, timeout, Wire::F32);
+        routes.gathers.insert(control_comm_id(gpn), port);
+        handles.pop().expect("control leader handle")
+    } else {
         let (tx, rx) = channel();
-        scatter_ports.insert((control_comm_id(gpn), node as u32), tx);
-        let control = GroupComm::remote_member(
+        routes.scatters.insert((control_comm_id(gpn), me as u32), tx);
+        GroupComm::remote_member(
             nodes,
-            node,
-            gather_via(control_comm_id(gpn), Wire::F32),
+            me,
+            gather_via(0, control_comm_id(gpn), Wire::F32),
             rx,
             timeout,
             Wire::F32,
-        );
+        )
+    };
 
-        std::thread::Builder::new()
-            .name(format!("daso-demux-peer{node}"))
-            .spawn(move || peer_demux(reader, scatter_ports, async_ports, node))
-            .context("spawning demux thread")?;
-        Ok(Wiring { rank_comms, control })
+    let routes = Arc::new(routes);
+    for (q, reader) in readers.iter_mut().enumerate() {
+        if let Some(reader) = reader.take() {
+            let routes = routes.clone();
+            std::thread::Builder::new()
+                .name(format!("daso-demux-n{me}-from{q}"))
+                .spawn(move || link_demux(reader, routes, q, me))
+                .context("spawning demux thread")?;
+        }
+    }
+
+    let node_handles = GroupComm::group_with_timeout(gpn, timeout);
+    let rank_comms = world_handles
+        .into_iter()
+        .zip(node_handles)
+        .zip(global_handles)
+        .zip(async_handles)
+        .map(|(((world, node), global), global_async)| RankComms {
+            world,
+            node,
+            global,
+            global_async,
+        })
+        .collect();
+    Ok(Wiring { rank_comms, control, wire_bytes: counters })
+}
+
+/// Per-link demux: route one peer's incoming frames (leader-bound
+/// gathers/deposits and member-bound scatters/sums alike — with mesh
+/// placement every process plays both roles) to the right communicator
+/// by comm id. Exits on EOF (peer finished or died); anyone still
+/// waiting on that peer times out with a root-cause error.
+fn link_demux(mut stream: TcpStream, routes: Arc<Routes>, from: usize, me: usize) {
+    loop {
+        let frame = match read_message(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return,
+        };
+        let res: Result<()> = match frame {
+            Frame::Gather { comm, member, clock, payload } => routes
+                .gathers
+                .get(&comm)
+                .ok_or_else(|| anyhow!("this process leads no comm id {comm}"))
+                .and_then(|p| {
+                    p.send(GatherMsg { index: member as usize, payload, clock })
+                        .map_err(|_| anyhow!("comm {comm} is no longer receiving"))
+                }),
+            Frame::AsyncPut { comm, member, seq, clock, wire_dt, snapshot } => routes
+                .injectors
+                .get(&comm)
+                .ok_or_else(|| anyhow!("this process aggregates no mailbox id {comm}"))
+                .and_then(|inj| {
+                    inj.inject(AsyncSendMsg {
+                        member: member as usize,
+                        seq,
+                        snapshot,
+                        clock,
+                        wire_dt,
+                    })
+                }),
+            Frame::Scatter { comm, member, clocks, payload } => routes
+                .scatters
+                .get(&(comm, member))
+                .ok_or_else(|| anyhow!("unknown scatter target {comm}/{member}"))
+                .and_then(|p| {
+                    p.send(ScatterMsg { payload, clocks })
+                        .map_err(|_| anyhow!("rank for comm {comm} is gone"))
+                }),
+            Frame::AsyncSum { comm, member, seq, finish, sum } => routes
+                .async_sums
+                .get(&(comm, member))
+                .ok_or_else(|| anyhow!("unknown mailbox target {comm}/{member}"))
+                .and_then(|p| {
+                    p.send(AsyncResultMsg { seq, sum: Arc::new(sum), finish })
+                        .map_err(|_| anyhow!("mailbox for comm {comm} is gone"))
+                }),
+            other => Err(anyhow!("unexpected frame on an established link: {}", other.name())),
+        };
+        if let Err(e) = res {
+            eprintln!("transport demux (node {me} <- node {from}): {e:#}");
+            return;
+        }
     }
 }
 
@@ -598,85 +1045,15 @@ impl Transport for TcpTransport {
     }
 }
 
-/// Coordinator-side demux: route one peer's incoming frames to the
-/// spanning groups' leaders. Exits on EOF (peer finished or died);
-/// anyone still waiting on that peer times out with a root-cause error.
-fn coordinator_demux(
-    mut stream: TcpStream,
-    ports: Arc<BTreeMap<u32, Sender<GatherMsg>>>,
-    injectors: Arc<BTreeMap<u32, AsyncInjector>>,
-    node: usize,
-) {
-    loop {
-        let frame = match read_frame(&mut stream) {
-            Ok(f) => f,
-            Err(_) => return,
-        };
-        let res: Result<()> = match frame {
-            Frame::Gather { comm, member, clock, payload } => ports
-                .get(&comm)
-                .ok_or_else(|| anyhow!("unknown comm id {comm}"))
-                .and_then(|p| {
-                    p.send(GatherMsg { index: member as usize, payload, clock })
-                        .map_err(|_| anyhow!("comm {comm} is no longer receiving"))
-                }),
-            Frame::AsyncPut { comm, member, seq, clock, wire_dt, snapshot } => injectors
-                .get(&comm)
-                .ok_or_else(|| anyhow!("unknown mailbox id {comm}"))
-                .and_then(|inj| {
-                    inj.inject(AsyncSendMsg { member: member as usize, seq, snapshot, clock, wire_dt })
-                }),
-            other => Err(anyhow!("unexpected frame on coordinator link: {}", other.name())),
-        };
-        if let Err(e) = res {
-            eprintln!("transport demux (node {node}): {e:#}");
-            return;
-        }
-    }
-}
-
-/// Peer-side demux: route the coordinator's frames to this process's
-/// member handles. Exits on EOF; receivers then disconnect immediately.
-fn peer_demux(
-    mut stream: TcpStream,
-    scatter_ports: BTreeMap<(u32, u32), Sender<ScatterMsg>>,
-    async_ports: BTreeMap<(u32, u32), Sender<AsyncResultMsg>>,
-    node: usize,
-) {
-    loop {
-        let frame = match read_frame(&mut stream) {
-            Ok(f) => f,
-            Err(_) => return,
-        };
-        let res: Result<()> = match frame {
-            Frame::Scatter { comm, member, clocks, payload } => scatter_ports
-                .get(&(comm, member))
-                .ok_or_else(|| anyhow!("unknown scatter target {comm}/{member}"))
-                .and_then(|p| {
-                    p.send(ScatterMsg { payload, clocks })
-                        .map_err(|_| anyhow!("rank for comm {comm} is gone"))
-                }),
-            Frame::AsyncSum { comm, member, seq, finish, sum } => async_ports
-                .get(&(comm, member))
-                .ok_or_else(|| anyhow!("unknown mailbox target {comm}/{member}"))
-                .and_then(|p| {
-                    p.send(AsyncResultMsg { seq, sum: Arc::new(sum), finish })
-                        .map_err(|_| anyhow!("mailbox for comm {comm} is gone"))
-                }),
-            other => Err(anyhow!("unexpected frame on peer link: {}", other.name())),
-        };
-        if let Err(e) = res {
-            eprintln!("transport demux (peer node {node}): {e:#}");
-            return;
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::comm::channels::Payload;
     use crate::comm::naive_mean;
+
+    fn tuning(timeout: Duration, wire: Wire) -> TcpTuning {
+        TcpTuning::new(timeout, wire)
+    }
 
     fn mean_reduce(bufs: &mut [Payload]) -> Result<()> {
         let refs: Vec<&Vec<f32>> = bufs.iter().map(|b| b.as_f32()).collect();
@@ -736,45 +1113,67 @@ mod tests {
         out
     }
 
-    #[test]
-    fn tcp_transport_collectives_roundtrip() {
-        let topo = Topology::new(2, 2);
-        let timeout = Duration::from_secs(30);
+    /// Expected `drive` outputs for one node of a `topo` cluster: world
+    /// mean over ranks, global group `l` mean over nodes, async sum for
+    /// group `l`.
+    fn check_drive(outs: &[(f32, f32, f32)], topo: Topology, node: usize) {
+        let world_mean =
+            (1..=topo.world()).map(|r| r as f32).sum::<f32>() / topo.world() as f32;
+        for (l, &(w, g, a)) in outs.iter().enumerate() {
+            assert_eq!(w, world_mean, "node {node} world result");
+            let expect_g = (0..topo.nodes).map(|n| (10 * n + l) as f32).sum::<f32>()
+                / topo.nodes as f32;
+            assert_eq!(g, expect_g, "node {node} group {l} result");
+            let expect_a: f32 =
+                (0..topo.nodes).map(|n| topo.rank(n, l).global as f32).sum();
+            assert_eq!(a, expect_a, "node {node} async group {l} result");
+        }
+    }
+
+    /// Run the full schedule over a real loopback cluster: this thread is
+    /// the coordinator, one thread per peer node. Exercises the mesh
+    /// handshake (every pair of nodes links directly) whenever nodes > 2.
+    fn roundtrip_cluster(topo: Topology, t: TcpTuning) -> u64 {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
 
-        let peer = std::thread::spawn(move || {
-            let mut t = TcpTransport::peer(topo, 1, &addr, timeout, Wire::F32).unwrap();
-            assert_eq!(t.hosted_ranks(), vec![2, 3]);
-            let Wiring { rank_comms, control } = t.connect().unwrap();
-            let outs = drive(rank_comms, topo, 1);
-            let ctl = control_sum(&control, 1);
-            (outs, ctl)
-        });
+        let peers: Vec<_> = (1..topo.nodes)
+            .map(|node| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut p = TcpTransport::peer(topo, node, &addr, t).unwrap();
+                    assert_eq!(p.hosted_ranks(), topo.node_ranks(node));
+                    let Wiring { rank_comms, control, wire_bytes } = p.connect().unwrap();
+                    let outs = drive(rank_comms, topo, node);
+                    check_drive(&outs, topo, node);
+                    let ctl = control_sum(&control, node);
+                    assert!(
+                        matches!(ctl, Payload::Empty),
+                        "non-leader gets an empty control result"
+                    );
+                    assert!(wire_bytes.sent() > 0, "peers write frames on the mesh");
+                })
+            })
+            .collect();
 
-        let mut t = TcpTransport::coordinator(topo, listener, timeout, Wire::F32);
-        assert_eq!(t.kind(), TransportKind::Tcp);
-        assert_eq!(t.hosted_ranks(), vec![0, 1]);
-        let Wiring { rank_comms, control } = t.connect().unwrap();
+        let mut c = TcpTransport::coordinator(topo, listener, t);
+        assert_eq!(c.kind(), TransportKind::Tcp);
+        assert_eq!(c.hosted_ranks(), topo.node_ranks(0));
+        let Wiring { rank_comms, control, wire_bytes } = c.connect().unwrap();
         let outs = drive(rank_comms, topo, 0);
+        check_drive(&outs, topo, 0);
         let ctl = control_sum(&control, 0);
-
-        // world mean over ranks: (1+2+3+4)/4; global group l mean over
-        // nodes: (l + 10+l)/2; async sum for group l: l + (l+2)
-        for (l, &(w, g, a)) in outs.iter().enumerate() {
-            assert_eq!(w, 2.5);
-            assert_eq!(g, 5.0 + l as f32);
-            assert_eq!(a, 2.0 * l as f32 + 2.0);
+        let expect: f64 = (1..=topo.nodes).map(|n| n as f64).sum();
+        assert_eq!(ctl.into_f64(), vec![expect], "control leader sums node contributions");
+        for p in peers {
+            p.join().expect("peer thread");
         }
-        assert_eq!(ctl.into_f64(), vec![3.0], "control leader sums node contributions");
+        wire_bytes.sent()
+    }
 
-        let (peer_outs, peer_ctl) = peer.join().expect("peer thread");
-        for (l, &(w, g, a)) in peer_outs.iter().enumerate() {
-            assert_eq!(w, 2.5);
-            assert_eq!(g, 5.0 + l as f32);
-            assert_eq!(a, 2.0 * l as f32 + 2.0);
-        }
-        assert!(matches!(peer_ctl, Payload::Empty), "non-leader gets an empty control result");
+    #[test]
+    fn tcp_transport_collectives_roundtrip() {
+        roundtrip_cluster(Topology::new(2, 2), tuning(Duration::from_secs(30), Wire::F32));
     }
 
     #[test]
@@ -782,45 +1181,66 @@ mod tests {
         // same schedule over a bf16-negotiated link: every value in the
         // fixed schedule is bf16-representable, so results must be exact
         // even though payloads physically cross as 16-bit codes
+        roundtrip_cluster(Topology::new(2, 2), tuning(Duration::from_secs(30), Wire::Bf16));
+    }
+
+    #[test]
+    fn mesh_roundtrip_with_leaders_on_every_node() {
+        // 3 nodes x 3 locals: with mesh placement group g's leader lives
+        // on node g, so every process leads one group, joins the others
+        // remotely, and every pair of processes holds a direct link
+        roundtrip_cluster(Topology::new(3, 3), tuning(Duration::from_secs(30), Wire::F32));
+    }
+
+    #[test]
+    fn mesh_roundtrip_star_placement_still_works() {
+        // the star baseline must stay functional (it anchors the
+        // transport bench) even though mesh is the default
+        roundtrip_cluster(
+            Topology::new(3, 2),
+            tuning(Duration::from_secs(30), Wire::F32).with_placement(LeaderPlacement::Star),
+        );
+    }
+
+    #[test]
+    fn chunked_pipeline_roundtrip_matches_unchunked() {
+        // tiny chunk threshold so the 1-element schedule frames stay
+        // whole but a separate big-payload exchange fragments; results
+        // must be bit-identical to the unchunked run
         let topo = Topology::new(2, 2);
-        let timeout = Duration::from_secs(30);
+        let t = tuning(Duration::from_secs(30), Wire::Bf16).with_chunk_elems(8);
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-
+        fn big_exchange(comms: &RankComms, node: usize) -> Vec<f32> {
+            let payload: Vec<f32> = (0..37).map(|i| (i + 100 * node) as f32).collect();
+            let (out, _) =
+                comms.global.exchange(Payload::F32(payload), 0.0, mean_reduce).unwrap();
+            out.into_f32()
+        }
         let peer = std::thread::spawn(move || {
-            let mut t = TcpTransport::peer(topo, 1, &addr, timeout, Wire::Bf16).unwrap();
-            let Wiring { rank_comms, control } = t.connect().unwrap();
-            let outs = drive(rank_comms, topo, 1);
-            let ctl = control_sum(&control, 1);
-            (outs, ctl)
+            let mut p = TcpTransport::peer(topo, 1, &addr, t).unwrap();
+            let Wiring { rank_comms, .. } = p.connect().unwrap();
+            big_exchange(&rank_comms[0], 1)
         });
-
-        let mut t = TcpTransport::coordinator(topo, listener, timeout, Wire::Bf16);
-        let Wiring { rank_comms, control } = t.connect().unwrap();
-        let outs = drive(rank_comms, topo, 0);
-        let ctl = control_sum(&control, 0);
-
-        for (l, &(w, g, a)) in outs.iter().enumerate() {
-            assert_eq!(w, 2.5);
-            assert_eq!(g, 5.0 + l as f32);
-            assert_eq!(a, 2.0 * l as f32 + 2.0);
-        }
-        // the control group's f64 report frames are never compressed
-        assert_eq!(ctl.into_f64(), vec![3.0]);
-        let (peer_outs, _) = peer.join().expect("peer thread");
-        for (l, &(w, g, a)) in peer_outs.iter().enumerate() {
-            assert_eq!(w, 2.5);
-            assert_eq!(g, 5.0 + l as f32);
-            assert_eq!(a, 2.0 * l as f32 + 2.0);
-        }
+        let mut c = TcpTransport::coordinator(topo, listener, t);
+        let Wiring { rank_comms, wire_bytes, .. } = c.connect().unwrap();
+        let coord_out = big_exchange(&rank_comms[0], 0);
+        let peer_out = peer.join().expect("peer thread");
+        let expect: Vec<f32> = (0..37).map(|i| (i + 50) as f32).collect();
+        assert_eq!(coord_out, expect, "mean of node payloads (bf16-exact integers)");
+        assert_eq!(peer_out, expect);
+        assert!(wire_bytes.sent() > 0);
     }
 
     #[test]
     fn coordinator_connect_times_out_without_peers() {
         let topo = Topology::new(2, 1);
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let mut t =
-            TcpTransport::coordinator(topo, listener, Duration::from_millis(200), Wire::F32);
+        let mut t = TcpTransport::coordinator(
+            topo,
+            listener,
+            tuning(Duration::from_millis(200), Wire::F32),
+        );
         let err = t.connect().unwrap_err().to_string();
         assert!(err.contains("waiting for 1 peer"), "{err}");
     }
@@ -833,14 +1253,17 @@ mod tests {
             let mut t = TcpTransport::coordinator(
                 Topology::new(2, 2),
                 listener,
-                Duration::from_secs(10),
-                Wire::F32,
+                tuning(Duration::from_secs(10), Wire::F32),
             );
             t.connect().map(|_| ())
         });
-        let mut p =
-            TcpTransport::peer(Topology::new(2, 3), 1, &addr, Duration::from_secs(10), Wire::F32)
-                .unwrap();
+        let mut p = TcpTransport::peer(
+            Topology::new(2, 3),
+            1,
+            &addr,
+            tuning(Duration::from_secs(10), Wire::F32),
+        )
+        .unwrap();
         let peer_result = p.connect().map(|_| ());
         let coord_result = coord.join().expect("coordinator thread");
         let cerr = coord_result.unwrap_err().to_string();
@@ -858,14 +1281,17 @@ mod tests {
             let mut t = TcpTransport::coordinator(
                 Topology::new(2, 2),
                 listener,
-                Duration::from_secs(10),
-                Wire::Bf16,
+                tuning(Duration::from_secs(10), Wire::Bf16),
             );
             t.connect().map(|_| ())
         });
-        let mut p =
-            TcpTransport::peer(Topology::new(2, 2), 1, &addr, Duration::from_secs(10), Wire::F32)
-                .unwrap();
+        let mut p = TcpTransport::peer(
+            Topology::new(2, 2),
+            1,
+            &addr,
+            tuning(Duration::from_secs(10), Wire::F32),
+        )
+        .unwrap();
         let peer_result = p.connect().map(|_| ());
         let cerr = coord.join().expect("coordinator thread").unwrap_err().to_string();
         assert!(cerr.contains("--wire f32"), "{cerr}");
@@ -874,9 +1300,38 @@ mod tests {
     }
 
     #[test]
+    fn handshake_rejects_placement_mismatch() {
+        // a star peer against a mesh coordinator would compute different
+        // leader nodes and deadlock; the handshake must fail fast naming
+        // both placements
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let coord = std::thread::spawn(move || {
+            let mut t = TcpTransport::coordinator(
+                Topology::new(2, 2),
+                listener,
+                tuning(Duration::from_secs(10), Wire::F32),
+            );
+            t.connect().map(|_| ())
+        });
+        let mut p = TcpTransport::peer(
+            Topology::new(2, 2),
+            1,
+            &addr,
+            tuning(Duration::from_secs(10), Wire::F32).with_placement(LeaderPlacement::Star),
+        )
+        .unwrap();
+        let peer_result = p.connect().map(|_| ());
+        let cerr = coord.join().expect("coordinator thread").unwrap_err().to_string();
+        assert!(cerr.contains("leader_placement=star"), "{cerr}");
+        assert!(cerr.contains("leader_placement=mesh"), "{cerr}");
+        assert!(peer_result.is_err());
+    }
+
+    #[test]
     fn handshake_rejects_version_1_peer() {
         // a protocol-1 peer (17-byte HELLO, no wire field) against a
-        // version-2 coordinator must produce a clear version error — not
+        // version-3 coordinator must produce a clear version error — not
         // corrupt a rendezvous, not hang
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -884,8 +1339,7 @@ mod tests {
             let mut t = TcpTransport::coordinator(
                 Topology::new(2, 2),
                 listener,
-                Duration::from_secs(10),
-                Wire::F32,
+                tuning(Duration::from_secs(10), Wire::F32),
             );
             t.connect().map(|_| ())
         });
@@ -902,10 +1356,119 @@ mod tests {
         stream.flush().unwrap();
         let cerr = coord.join().expect("coordinator thread").unwrap_err().to_string();
         assert!(
-            cerr.contains("protocol 1") && cerr.contains("2"),
+            cerr.contains("protocol 1") && cerr.contains("3"),
             "error should name both protocol versions: {cerr}"
         );
         drop(stream);
+    }
+
+    /// Dial a mesh listener by hand with a crafted MESH_HELLO and return
+    /// the acceptor's outcome.
+    fn mesh_accept_one(
+        hello: Frame,
+        digest: u64,
+    ) -> (Result<Vec<(usize, TcpStream)>>, Result<Frame>) {
+        let topo = Topology::new(3, 2);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let dialer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(5))).ok();
+            write_frame(&mut s, &hello, Wire::F32).unwrap();
+            read_frame(&mut s)
+        });
+        let accepted = accept_mesh_links(
+            &listener,
+            topo,
+            Wire::F32,
+            1,
+            digest,
+            Instant::now() + Duration::from_secs(5),
+        );
+        (accepted, dialer.join().expect("dialer thread"))
+    }
+
+    #[test]
+    fn mesh_accept_rejects_mismatched_address_book() {
+        let digest = book_digest(&["a:1".into(), "b:2".into(), "c:3".into()]);
+        let wrong = book_digest(&["a:1".into(), "b:2".into(), "d:4".into()]);
+        assert_ne!(digest, wrong);
+        let (accepted, _) = mesh_accept_one(
+            Frame::MeshHello {
+                version: PROTOCOL_VERSION,
+                node: 2,
+                nodes: 3,
+                gpus_per_node: 2,
+                wire: Wire::F32,
+                book_digest: wrong,
+            },
+            digest,
+        );
+        let err = accepted.unwrap_err().to_string();
+        assert!(err.contains("mesh address book mismatch"), "{err}");
+        assert!(err.contains("another launch"), "{err}");
+    }
+
+    #[test]
+    fn mesh_accept_rejects_duplicate_and_out_of_order_dials() {
+        // a dial from a lower-numbered node violates the dedup order (it
+        // should be accepting our dial, not dialing us)
+        let digest = 7u64;
+        let (accepted, _) = mesh_accept_one(
+            Frame::MeshHello {
+                version: PROTOCOL_VERSION,
+                node: 0,
+                nodes: 3,
+                gpus_per_node: 2,
+                wire: Wire::F32,
+                book_digest: digest,
+            },
+            digest,
+        );
+        let err = accepted.unwrap_err().to_string();
+        assert!(err.contains("dedup order"), "{err}");
+
+        // two dials claiming the same node id while the acceptor still
+        // waits for node 3: the second must fail the launch with a named
+        // error
+        let topo = Topology::new(4, 2);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let hello = move || Frame::MeshHello {
+            version: PROTOCOL_VERSION,
+            node: 2,
+            nodes: 4,
+            gpus_per_node: 2,
+            wire: Wire::F32,
+            book_digest: digest,
+        };
+        let d1 = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(5))).ok();
+            write_frame(&mut s, &hello(), Wire::F32).unwrap();
+            let _ = read_frame(&mut s);
+            // keep the stream open until the acceptor is done
+            std::thread::sleep(Duration::from_millis(500));
+        });
+        let d2 = std::thread::spawn(move || {
+            // second dial, same claimed node id
+            std::thread::sleep(Duration::from_millis(100));
+            let mut s = TcpStream::connect(addr).unwrap();
+            write_frame(&mut s, &hello(), Wire::F32).unwrap();
+            std::thread::sleep(Duration::from_millis(500));
+        });
+        let accepted = accept_mesh_links(
+            &listener,
+            topo,
+            Wire::F32,
+            1,
+            digest,
+            Instant::now() + Duration::from_secs(5),
+        );
+        let err = accepted.unwrap_err().to_string();
+        assert!(err.contains("duplicate mesh link for node 2"), "{err}");
+        d1.join().unwrap();
+        d2.join().unwrap();
     }
 
     #[test]
@@ -917,7 +1480,8 @@ mod tests {
         };
         let topo = Topology::new(2, 1);
         let mut p =
-            TcpTransport::peer(topo, 1, &addr, Duration::from_millis(200), Wire::F32).unwrap();
+            TcpTransport::peer(topo, 1, &addr, tuning(Duration::from_millis(200), Wire::F32))
+                .unwrap();
         assert!(p.connect().is_err());
     }
 

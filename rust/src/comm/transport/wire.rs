@@ -20,6 +20,26 @@
 //! HELLO/WELCOME handshake (both sides must be launched with the same
 //! `--wire`), so mismatched peers fail fast.
 //!
+//! **Peer mesh** (protocol 3): the coordinator still brokers
+//! HELLO/WELCOME, but a v3 HELLO advertises the peer's own mesh listen
+//! address and WELCOME hands every peer the full address book (plus the
+//! negotiated leader placement). Peers then dial each other directly —
+//! `MESH_HELLO`/`MESH_WELCOME` carry a digest of the address book so a
+//! stray process from another launch (or a peer handed a different
+//! book) fails fast with a named error instead of corrupting a
+//! rendezvous.
+//!
+//! **Chunked pipelining** (protocol 3): an f32 payload larger than the
+//! configured `pipeline_chunk_elems` threshold is split at the link
+//! layer into a `CHUNK_BEGIN` header (the original frame with an empty
+//! payload slot) followed by sequence-tagged `CHUNK_DATA` sub-frames.
+//! The sender casts + writes one chunk at a time and the receiver
+//! decodes + accumulates chunks as they arrive, so the wire cast, the
+//! socket transfer and the leader-side assembly overlap instead of
+//! serializing whole-tensor frames. Reassembly is exact concatenation
+//! (each chunk takes the same per-element cast a whole frame would), so
+//! chunking never changes a single bit of the delivered payload.
+//!
 //! The format is symmetric (both directions use the same framing) and
 //! versioned through the HELLO/WELCOME handshake, which also carries the
 //! topology so a mis-launched peer fails fast instead of corrupting a
@@ -30,13 +50,18 @@ use std::io::{Read, Write};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::comm::channels::Payload;
+use crate::comm::topology::LeaderPlacement;
 use crate::comm::Wire;
 use crate::util::half;
+use crate::util::sha::sha256;
 
 /// Bumped on any change to the framing or message layout.
 /// Version 2: compressed payload kinds + the negotiated wire format in
-/// HELLO/WELCOME.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// HELLO/WELCOME. Version 3: mesh address book (HELLO/WELCOME grow the
+/// peer listen address / the address book + leader placement),
+/// MESH_HELLO/MESH_WELCOME peer links, and CHUNK_BEGIN/CHUNK_DATA
+/// payload fragmentation.
+pub const PROTOCOL_VERSION: u32 = 3;
 
 /// Upper bound on a frame body (sanity check against corrupt length
 /// prefixes; generously above any model's parameter buffer).
@@ -48,6 +73,10 @@ const TAG_GATHER: u8 = 3;
 const TAG_SCATTER: u8 = 4;
 const TAG_ASYNC_PUT: u8 = 5;
 const TAG_ASYNC_SUM: u8 = 6;
+const TAG_MESH_HELLO: u8 = 7;
+const TAG_MESH_WELCOME: u8 = 8;
+const TAG_CHUNK_BEGIN: u8 = 9;
+const TAG_CHUNK_DATA: u8 = 10;
 
 const PAYLOAD_EMPTY: u8 = 0;
 const PAYLOAD_F32: u8 = 1;
@@ -73,14 +102,84 @@ fn wire_from_code(c: u8) -> Result<Wire> {
     })
 }
 
+/// Handshake code for a [`LeaderPlacement`] (u8 on the wire).
+fn placement_code(p: LeaderPlacement) -> u8 {
+    match p {
+        LeaderPlacement::Star => 0,
+        LeaderPlacement::Mesh => 1,
+    }
+}
+
+fn placement_from_code(c: u8) -> Result<LeaderPlacement> {
+    Ok(match c {
+        0 => LeaderPlacement::Star,
+        1 => LeaderPlacement::Mesh,
+        other => bail!("unknown leader-placement code {other}"),
+    })
+}
+
+/// The f32 payload kind `wire` produces on the wire.
+fn f32_payload_kind(wire: Wire) -> u8 {
+    match wire {
+        Wire::F32 => PAYLOAD_F32,
+        Wire::Bf16 => PAYLOAD_BF16,
+        Wire::F16 => PAYLOAD_F16,
+    }
+}
+
+/// Fingerprint of a rendezvous address book (truncated sha256): every
+/// process of a launch must hold the same book, and a mesh link between
+/// processes holding different books is an error, not a silent
+/// mis-wiring.
+pub fn book_digest(book: &[String]) -> u64 {
+    let mut bytes = Vec::new();
+    for entry in book {
+        bytes.extend_from_slice(&(entry.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(entry.as_bytes());
+    }
+    let d = sha256(&bytes);
+    u64::from_le_bytes(d[..8].try_into().unwrap())
+}
+
 /// One transport message.
 #[derive(Debug)]
 pub enum Frame {
     /// Peer -> coordinator: identify and verify the launch topology +
-    /// wire format.
-    Hello { version: u32, node: u32, nodes: u32, gpus_per_node: u32, wire: Wire },
-    /// Coordinator -> peer: handshake accepted.
-    Welcome { version: u32, nodes: u32, gpus_per_node: u32, wire: Wire },
+    /// wire format + leader placement; `mesh_addr` is the peer's own
+    /// listen address for the mesh phase (v3+, empty before).
+    Hello {
+        version: u32,
+        node: u32,
+        nodes: u32,
+        gpus_per_node: u32,
+        wire: Wire,
+        placement: LeaderPlacement,
+        mesh_addr: String,
+    },
+    /// Coordinator -> peer: handshake accepted; `book[n]` is node `n`'s
+    /// dialable address (v3+, empty before) — the peer mesh's address
+    /// book, identical on every process of the launch.
+    Welcome {
+        version: u32,
+        nodes: u32,
+        gpus_per_node: u32,
+        wire: Wire,
+        placement: LeaderPlacement,
+        book: Vec<String>,
+    },
+    /// Dialing peer -> listening peer on a direct mesh link: identify
+    /// and verify launch membership (`book_digest` fingerprints the
+    /// address book both sides must share).
+    MeshHello {
+        version: u32,
+        node: u32,
+        nodes: u32,
+        gpus_per_node: u32,
+        wire: Wire,
+        book_digest: u64,
+    },
+    /// Listening peer -> dialing peer: mesh link accepted.
+    MeshWelcome { version: u32, node: u32, book_digest: u64 },
     /// Member -> leader: one rendezvous contribution.
     Gather { comm: u32, member: u32, clock: f64, payload: Payload },
     /// Leader -> member: the reduced result + all members' clocks.
@@ -89,6 +188,16 @@ pub enum Frame {
     AsyncPut { comm: u32, member: u32, seq: u64, clock: f64, wire_dt: f64, snapshot: Vec<f32> },
     /// Aggregator -> member: a completed mailbox round.
     AsyncSum { comm: u32, member: u32, seq: u64, finish: f64, sum: Vec<f32> },
+    /// Link-layer fragmentation header: the next `n_chunks` frames on
+    /// this link are `ChunkData` sub-frames carrying `total_elems`
+    /// wire-encoded f32 elements (payload kind `kind`) belonging to the
+    /// frame serialized in `header` (with its payload slot empty).
+    /// Assembled transparently by [`read_message`]; never crosses the
+    /// demux boundary.
+    ChunkBegin { kind: u8, n_chunks: u32, total_elems: u64, header: Vec<u8> },
+    /// One sequence-tagged slice of a chunked payload (raw wire-encoded
+    /// elements; the element width is implied by the header's `kind`).
+    ChunkData { seq: u32, n_chunks: u32, data: Vec<u8> },
 }
 
 impl Frame {
@@ -97,16 +206,25 @@ impl Frame {
         match self {
             Frame::Hello { .. } => "HELLO",
             Frame::Welcome { .. } => "WELCOME",
+            Frame::MeshHello { .. } => "MESH_HELLO",
+            Frame::MeshWelcome { .. } => "MESH_WELCOME",
             Frame::Gather { .. } => "GATHER",
             Frame::Scatter { .. } => "SCATTER",
             Frame::AsyncPut { .. } => "ASYNC_PUT",
             Frame::AsyncSum { .. } => "ASYNC_SUM",
+            Frame::ChunkBegin { .. } => "CHUNK_BEGIN",
+            Frame::ChunkData { .. } => "CHUNK_DATA",
         }
     }
 }
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
 }
 
 fn put_u64(out: &mut Vec<u8>, v: u64) {
@@ -119,18 +237,7 @@ fn put_f64(out: &mut Vec<u8>, v: f64) {
 
 fn put_f32_slice(out: &mut Vec<u8>, v: &[f32]) {
     put_u64(out, v.len() as u64);
-    // bulk copy on the hot collective path: on little-endian targets an
-    // f32 buffer's bytes are already the wire representation
-    #[cfg(target_endian = "little")]
-    {
-        let bytes =
-            unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 4) };
-        out.extend_from_slice(bytes);
-    }
-    #[cfg(not(target_endian = "little"))]
-    for x in v {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
+    put_f32_elems(out, v);
 }
 
 fn put_f64_slice(out: &mut Vec<u8>, v: &[f64]) {
@@ -150,11 +257,73 @@ fn put_f64_slice(out: &mut Vec<u8>, v: &[f64]) {
 /// Append `v` as 16-bit codes (length prefix + one `enc(x)` per element).
 fn put_u16_slice_with(out: &mut Vec<u8>, v: &[f32], enc: fn(f32) -> u16) {
     put_u64(out, v.len() as u64);
+    put_u16_elems_with(out, v, enc);
+}
+
+/// Raw 16-bit codes with no length prefix (chunk bodies carry the
+/// element count in their header).
+fn put_u16_elems_with(out: &mut Vec<u8>, v: &[f32], enc: fn(f32) -> u16) {
     let start = out.len();
     out.resize(start + v.len() * 2, 0);
     for (c, x) in out[start..].chunks_exact_mut(2).zip(v) {
         c.copy_from_slice(&enc(*x).to_le_bytes());
     }
+}
+
+/// Raw f32 LE bytes with no length prefix — bulk copy on the hot
+/// collective path: on little-endian targets an f32 buffer's bytes are
+/// already the wire representation.
+fn put_f32_elems(out: &mut Vec<u8>, v: &[f32]) {
+    #[cfg(target_endian = "little")]
+    {
+        let bytes = unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 4) };
+        out.extend_from_slice(bytes);
+    }
+    #[cfg(not(target_endian = "little"))]
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Append `v` wire-encoded with no length prefix (one chunk body).
+fn put_wire_elems(out: &mut Vec<u8>, v: &[f32], wire: Wire) {
+    match wire {
+        Wire::F32 => put_f32_elems(out, v),
+        Wire::Bf16 => put_u16_elems_with(out, v, half::f32_to_bf16),
+        Wire::F16 => put_u16_elems_with(out, v, half::f32_to_f16),
+    }
+}
+
+/// Decode raw wire-encoded elements (a chunk body) onto the end of
+/// `out` — the receive-side accumulation step of the chunked pipeline.
+fn append_wire_elems(kind: u8, raw: &[u8], out: &mut Vec<f32>) -> Result<()> {
+    match kind {
+        PAYLOAD_F32 => {
+            ensure!(raw.len() % 4 == 0, "chunk body not a whole number of f32s");
+            let n = raw.len() / 4;
+            let start = out.len();
+            out.resize(start + n, 0.0);
+            #[cfg(target_endian = "little")]
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    raw.as_ptr(),
+                    out[start..].as_mut_ptr().cast::<u8>(),
+                    n * 4,
+                );
+            }
+            #[cfg(not(target_endian = "little"))]
+            for (o, c) in out[start..].iter_mut().zip(raw.chunks_exact(4)) {
+                *o = f32::from_le_bytes(c.try_into().unwrap());
+            }
+        }
+        PAYLOAD_BF16 | PAYLOAD_F16 => {
+            ensure!(raw.len() % 2 == 0, "chunk body not a whole number of 16-bit codes");
+            let dec = if kind == PAYLOAD_BF16 { half::bf16_to_f32 } else { half::f16_to_f32 };
+            out.extend(raw.chunks_exact(2).map(|c| dec(u16::from_le_bytes([c[0], c[1]]))));
+        }
+        other => bail!("payload kind {other} cannot be chunked"),
+    }
+    Ok(())
 }
 
 /// Append an f32 buffer as a tagged payload in the negotiated wire
@@ -222,6 +391,19 @@ impl<'a> Cursor<'a> {
 
     fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        ensure!(n <= MAX_FRAME_BYTES, "implausible string length {n}");
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| anyhow::anyhow!("non-utf8 string in frame"))
     }
 
     fn len_prefix(&mut self) -> Result<usize> {
@@ -310,14 +492,26 @@ fn payload_wire_len(p: &Payload, wire: Wire) -> usize {
 /// collective path, so the encoder must not grow geometrically.
 fn body_len(frame: &Frame, wire: Wire) -> usize {
     match frame {
-        Frame::Hello { .. } => 18,
-        Frame::Welcome { .. } => 14,
+        Frame::Hello { version, mesh_addr, .. } => match version {
+            0 | 1 => 17,
+            2 => 18,
+            _ => 19 + 4 + mesh_addr.len(),
+        },
+        Frame::Welcome { version, book, .. } => match version {
+            0 | 1 => 13,
+            2 => 14,
+            _ => 15 + 4 + book.iter().map(|e| 4 + e.len()).sum::<usize>(),
+        },
+        Frame::MeshHello { .. } => 26,
+        Frame::MeshWelcome { .. } => 17,
         Frame::Gather { payload, .. } => 17 + payload_wire_len(payload, wire),
         Frame::Scatter { clocks, payload, .. } => {
             17 + clocks.len() * 8 + payload_wire_len(payload, wire)
         }
         Frame::AsyncPut { snapshot, .. } => 33 + f32_payload_wire_len(snapshot.len(), wire),
         Frame::AsyncSum { sum, .. } => 25 + f32_payload_wire_len(sum.len(), wire),
+        Frame::ChunkBegin { header, .. } => 18 + header.len(),
+        Frame::ChunkData { data, .. } => 9 + data.len(),
     }
 }
 
@@ -326,55 +520,109 @@ fn body_len(frame: &Frame, wire: Wire) -> usize {
 /// own wire field and are unaffected.
 pub fn encode_body(frame: &Frame, wire: Wire) -> Vec<u8> {
     let mut out = Vec::with_capacity(body_len(frame, wire));
+    encode_body_to(&mut out, frame, wire);
+    out
+}
+
+/// Append a frame body to `out` (the buffer-reusing encoder behind
+/// [`encode_body`] and the per-link scratch write path).
+fn encode_body_to(out: &mut Vec<u8>, frame: &Frame, wire: Wire) {
+    out.reserve(body_len(frame, wire));
     match frame {
-        Frame::Hello { version, node, nodes, gpus_per_node, wire: hello_wire } => {
+        Frame::Hello { version, node, nodes, gpus_per_node, wire: hello_wire, placement, mesh_addr } => {
             out.push(TAG_HELLO);
-            put_u32(&mut out, *version);
-            put_u32(&mut out, *node);
-            put_u32(&mut out, *nodes);
-            put_u32(&mut out, *gpus_per_node);
-            out.push(wire_code(*hello_wire));
+            put_u32(out, *version);
+            put_u32(out, *node);
+            put_u32(out, *nodes);
+            put_u32(out, *gpus_per_node);
+            // pre-v2 frames had no wire byte, pre-v3 none of the mesh
+            // fields: encode what the stated version can carry, so
+            // compatibility tests can produce old-version bytes
+            if *version >= 2 {
+                out.push(wire_code(*hello_wire));
+            }
+            if *version >= 3 {
+                out.push(placement_code(*placement));
+                put_str(out, mesh_addr);
+            }
         }
-        Frame::Welcome { version, nodes, gpus_per_node, wire: welcome_wire } => {
+        Frame::Welcome { version, nodes, gpus_per_node, wire: welcome_wire, placement, book } => {
             out.push(TAG_WELCOME);
-            put_u32(&mut out, *version);
-            put_u32(&mut out, *nodes);
-            put_u32(&mut out, *gpus_per_node);
-            out.push(wire_code(*welcome_wire));
+            put_u32(out, *version);
+            put_u32(out, *nodes);
+            put_u32(out, *gpus_per_node);
+            if *version >= 2 {
+                out.push(wire_code(*welcome_wire));
+            }
+            if *version >= 3 {
+                out.push(placement_code(*placement));
+                put_u32(out, book.len() as u32);
+                for entry in book {
+                    put_str(out, entry);
+                }
+            }
+        }
+        Frame::MeshHello { version, node, nodes, gpus_per_node, wire: hello_wire, book_digest } => {
+            out.push(TAG_MESH_HELLO);
+            put_u32(out, *version);
+            put_u32(out, *node);
+            put_u32(out, *nodes);
+            put_u32(out, *gpus_per_node);
+            out.push(wire_code(*hello_wire));
+            put_u64(out, *book_digest);
+        }
+        Frame::MeshWelcome { version, node, book_digest } => {
+            out.push(TAG_MESH_WELCOME);
+            put_u32(out, *version);
+            put_u32(out, *node);
+            put_u64(out, *book_digest);
         }
         Frame::Gather { comm, member, clock, payload } => {
             out.push(TAG_GATHER);
-            put_u32(&mut out, *comm);
-            put_u32(&mut out, *member);
-            put_f64(&mut out, *clock);
-            put_payload(&mut out, payload, wire);
+            put_u32(out, *comm);
+            put_u32(out, *member);
+            put_f64(out, *clock);
+            put_payload(out, payload, wire);
         }
         Frame::Scatter { comm, member, clocks, payload } => {
             out.push(TAG_SCATTER);
-            put_u32(&mut out, *comm);
-            put_u32(&mut out, *member);
-            put_f64_slice(&mut out, clocks);
-            put_payload(&mut out, payload, wire);
+            put_u32(out, *comm);
+            put_u32(out, *member);
+            put_f64_slice(out, clocks);
+            put_payload(out, payload, wire);
         }
         Frame::AsyncPut { comm, member, seq, clock, wire_dt, snapshot } => {
             out.push(TAG_ASYNC_PUT);
-            put_u32(&mut out, *comm);
-            put_u32(&mut out, *member);
-            put_u64(&mut out, *seq);
-            put_f64(&mut out, *clock);
-            put_f64(&mut out, *wire_dt);
-            put_f32_payload(&mut out, snapshot, wire);
+            put_u32(out, *comm);
+            put_u32(out, *member);
+            put_u64(out, *seq);
+            put_f64(out, *clock);
+            put_f64(out, *wire_dt);
+            put_f32_payload(out, snapshot, wire);
         }
         Frame::AsyncSum { comm, member, seq, finish, sum } => {
             out.push(TAG_ASYNC_SUM);
-            put_u32(&mut out, *comm);
-            put_u32(&mut out, *member);
-            put_u64(&mut out, *seq);
-            put_f64(&mut out, *finish);
-            put_f32_payload(&mut out, sum, wire);
+            put_u32(out, *comm);
+            put_u32(out, *member);
+            put_u64(out, *seq);
+            put_f64(out, *finish);
+            put_f32_payload(out, sum, wire);
+        }
+        Frame::ChunkBegin { kind, n_chunks, total_elems, header } => {
+            out.push(TAG_CHUNK_BEGIN);
+            out.push(*kind);
+            put_u32(out, *n_chunks);
+            put_u64(out, *total_elems);
+            put_u32(out, header.len() as u32);
+            out.extend_from_slice(header);
+        }
+        Frame::ChunkData { seq, n_chunks, data } => {
+            out.push(TAG_CHUNK_DATA);
+            put_u32(out, *seq);
+            put_u32(out, *n_chunks);
+            out.extend_from_slice(data);
         }
     }
-    out
 }
 
 /// Parse a frame body produced by [`encode_body`]. No wire parameter:
@@ -387,19 +635,49 @@ pub fn decode_body(body: &[u8]) -> Result<Frame> {
             let node = c.u32()?;
             let nodes = c.u32()?;
             let gpus_per_node = c.u32()?;
-            // protocol 1 had no wire byte; default it so a v1 HELLO still
-            // parses and the handshake can report the version mismatch
-            // instead of a decode error
+            // protocol 1 had no wire byte, protocols 1-2 no mesh fields;
+            // default them so an old HELLO still parses and the handshake
+            // can report the version mismatch instead of a decode error
             let wire = if version >= 2 { wire_from_code(c.u8()?)? } else { Wire::F32 };
-            Frame::Hello { version, node, nodes, gpus_per_node, wire }
+            let (placement, mesh_addr) = if version >= 3 {
+                (placement_from_code(c.u8()?)?, c.string()?)
+            } else {
+                (LeaderPlacement::Star, String::new())
+            };
+            Frame::Hello { version, node, nodes, gpus_per_node, wire, placement, mesh_addr }
         }
         TAG_WELCOME => {
             let version = c.u32()?;
             let nodes = c.u32()?;
             let gpus_per_node = c.u32()?;
             let wire = if version >= 2 { wire_from_code(c.u8()?)? } else { Wire::F32 };
-            Frame::Welcome { version, nodes, gpus_per_node, wire }
+            let (placement, book) = if version >= 3 {
+                let placement = placement_from_code(c.u8()?)?;
+                let n = c.u32()? as usize;
+                ensure!(n <= 1 << 20, "implausible address-book size {n}");
+                let mut book = Vec::with_capacity(n);
+                for _ in 0..n {
+                    book.push(c.string()?);
+                }
+                (placement, book)
+            } else {
+                (LeaderPlacement::Star, Vec::new())
+            };
+            Frame::Welcome { version, nodes, gpus_per_node, wire, placement, book }
         }
+        TAG_MESH_HELLO => Frame::MeshHello {
+            version: c.u32()?,
+            node: c.u32()?,
+            nodes: c.u32()?,
+            gpus_per_node: c.u32()?,
+            wire: wire_from_code(c.u8()?)?,
+            book_digest: c.u64()?,
+        },
+        TAG_MESH_WELCOME => Frame::MeshWelcome {
+            version: c.u32()?,
+            node: c.u32()?,
+            book_digest: c.u64()?,
+        },
         TAG_GATHER => Frame::Gather {
             comm: c.u32()?,
             member: c.u32()?,
@@ -427,6 +705,20 @@ pub fn decode_body(body: &[u8]) -> Result<Frame> {
             finish: c.f64()?,
             sum: c.f32_payload()?,
         },
+        TAG_CHUNK_BEGIN => {
+            let kind = c.u8()?;
+            let n_chunks = c.u32()?;
+            let total_elems = c.u64()?;
+            let header_len = c.u32()? as usize;
+            let header = c.take(header_len)?.to_vec();
+            Frame::ChunkBegin { kind, n_chunks, total_elems, header }
+        }
+        TAG_CHUNK_DATA => {
+            let seq = c.u32()?;
+            let n_chunks = c.u32()?;
+            let data = c.rest().to_vec();
+            Frame::ChunkData { seq, n_chunks, data }
+        }
         other => bail!("unknown frame tag {other}"),
     };
     c.finish()?;
@@ -446,9 +738,194 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &Frame, wire: Wire) -> Result<()>
     write_body(w, &encode_body(frame, wire))
 }
 
-/// Encode + write an `AsyncSum` frame from a borrowed sum buffer —
-/// avoids cloning a params-sized vector per remote member on the
-/// completed-round fan-out path.
+/// Finish a scratch buffer started with a 4-byte length placeholder and
+/// issue it as one buffered write.
+fn flush_scratch<W: Write>(w: &mut W, scratch: &mut Vec<u8>) -> Result<u64> {
+    let body_len = scratch.len() - 4;
+    ensure!(body_len <= MAX_FRAME_BYTES, "frame body too large ({body_len} bytes)");
+    scratch[..4].copy_from_slice(&(body_len as u32).to_le_bytes());
+    w.write_all(scratch).context("writing frame")?;
+    w.flush().context("flushing frame")?;
+    Ok(scratch.len() as u64)
+}
+
+fn begin_scratch(scratch: &mut Vec<u8>) {
+    scratch.clear();
+    scratch.extend_from_slice(&[0u8; 4]);
+}
+
+/// The f32 payload of a frame eligible for link-layer chunking, if any
+/// (`Empty` and f64 bookkeeping payloads never chunk).
+fn chunkable_payload(frame: &Frame) -> Option<&[f32]> {
+    match frame {
+        Frame::Gather { payload: Payload::F32(v), .. }
+        | Frame::Scatter { payload: Payload::F32(v), .. } => Some(v),
+        Frame::AsyncPut { snapshot, .. } => Some(snapshot),
+        Frame::AsyncSum { sum, .. } => Some(sum),
+        _ => None,
+    }
+}
+
+/// The frame with its chunkable payload slot emptied (the CHUNK_BEGIN
+/// header); clocks and scalar fields are preserved.
+fn header_only(frame: &Frame) -> Frame {
+    match frame {
+        Frame::Gather { comm, member, clock, .. } => {
+            Frame::Gather { comm: *comm, member: *member, clock: *clock, payload: Payload::Empty }
+        }
+        Frame::Scatter { comm, member, clocks, .. } => Frame::Scatter {
+            comm: *comm,
+            member: *member,
+            clocks: clocks.clone(),
+            payload: Payload::Empty,
+        },
+        Frame::AsyncPut { comm, member, seq, clock, wire_dt, .. } => Frame::AsyncPut {
+            comm: *comm,
+            member: *member,
+            seq: *seq,
+            clock: *clock,
+            wire_dt: *wire_dt,
+            snapshot: Vec::new(),
+        },
+        Frame::AsyncSum { comm, member, seq, finish, .. } => Frame::AsyncSum {
+            comm: *comm,
+            member: *member,
+            seq: *seq,
+            finish: *finish,
+            sum: Vec::new(),
+        },
+        other => unreachable!("{} frames are never chunked", other.name()),
+    }
+}
+
+/// Splice a reassembled chunked payload back into its header frame.
+fn set_f32_payload(frame: &mut Frame, data: Vec<f32>) -> Result<()> {
+    match frame {
+        Frame::Gather { payload, .. } | Frame::Scatter { payload, .. } => {
+            ensure!(
+                matches!(payload, Payload::Empty),
+                "chunked header already carries a payload"
+            );
+            *payload = Payload::F32(data);
+        }
+        Frame::AsyncPut { snapshot, .. } => {
+            ensure!(snapshot.is_empty(), "chunked header already carries a payload");
+            *snapshot = data;
+        }
+        Frame::AsyncSum { sum, .. } => {
+            ensure!(sum.is_empty(), "chunked header already carries a payload");
+            *sum = data;
+        }
+        other => bail!("frame {} cannot carry a chunked payload", other.name()),
+    }
+    Ok(())
+}
+
+/// Write `header` (its payload slot empty) + `data` as a CHUNK_BEGIN /
+/// CHUNK_DATA sequence: each chunk is cast to `wire` and written as its
+/// own sub-frame, so the wire cast of chunk `k+1` overlaps with the
+/// socket transfer (and far-side decode) of chunk `k`. All frames are
+/// encoded into `scratch` (one buffered write per frame, no per-frame
+/// allocation). Returns bytes written.
+fn write_chunked<W: Write>(
+    w: &mut W,
+    header: &Frame,
+    data: &[f32],
+    wire: Wire,
+    chunk_elems: usize,
+    scratch: &mut Vec<u8>,
+) -> Result<u64> {
+    let n_chunks = data.len().div_ceil(chunk_elems);
+    ensure!(n_chunks <= u32::MAX as usize, "payload needs too many chunks");
+    // same sender-side bound the unchunked path enforces per frame
+    // (wire bytes, so bf16/f16 keep their full payload range): an
+    // oversized payload must fail fast locally, not kill the far side's
+    // demux with an 'implausible element count' mid-sequence
+    ensure!(
+        data.len().saturating_mul(wire.bytes_per_elem()) <= MAX_FRAME_BYTES,
+        "frame body too large ({} elements chunked at {})",
+        data.len(),
+        wire.name()
+    );
+    let mut written = 0u64;
+    begin_scratch(scratch);
+    scratch.push(TAG_CHUNK_BEGIN);
+    scratch.push(f32_payload_kind(wire));
+    put_u32(scratch, n_chunks as u32);
+    put_u64(scratch, data.len() as u64);
+    // encode the nested header straight into scratch behind a patched
+    // length prefix — no per-send allocation for the header body
+    let len_pos = scratch.len();
+    scratch.extend_from_slice(&[0u8; 4]);
+    let header_start = scratch.len();
+    encode_body_to(scratch, header, wire);
+    let header_len = (scratch.len() - header_start) as u32;
+    scratch[len_pos..len_pos + 4].copy_from_slice(&header_len.to_le_bytes());
+    written += flush_scratch(w, scratch)?;
+    for (seq, slice) in data.chunks(chunk_elems).enumerate() {
+        begin_scratch(scratch);
+        scratch.push(TAG_CHUNK_DATA);
+        put_u32(scratch, seq as u32);
+        put_u32(scratch, n_chunks as u32);
+        put_wire_elems(scratch, slice, wire);
+        written += flush_scratch(w, scratch)?;
+    }
+    Ok(written)
+}
+
+/// Write one frame through the per-link scratch buffer, splitting f32
+/// payloads larger than `chunk_elems` into the pipelined chunk sequence
+/// (`chunk_elems == 0` disables chunking). Returns bytes written.
+pub fn write_frame_pipelined<W: Write>(
+    w: &mut W,
+    frame: &Frame,
+    wire: Wire,
+    chunk_elems: usize,
+    scratch: &mut Vec<u8>,
+) -> Result<u64> {
+    if chunk_elems > 0 {
+        if let Some(data) = chunkable_payload(frame) {
+            if data.len() > chunk_elems {
+                return write_chunked(w, &header_only(frame), data, wire, chunk_elems, scratch);
+            }
+        }
+    }
+    begin_scratch(scratch);
+    encode_body_to(scratch, frame, wire);
+    flush_scratch(w, scratch)
+}
+
+/// [`write_frame_pipelined`] for an `AsyncSum` from a borrowed sum
+/// buffer — avoids cloning a params-sized vector per remote member on
+/// the completed-round fan-out path.
+#[allow(clippy::too_many_arguments)]
+pub fn write_async_sum_pipelined<W: Write>(
+    w: &mut W,
+    comm: u32,
+    member: u32,
+    seq: u64,
+    finish: f64,
+    sum: &[f32],
+    wire: Wire,
+    chunk_elems: usize,
+    scratch: &mut Vec<u8>,
+) -> Result<u64> {
+    let header = Frame::AsyncSum { comm, member, seq, finish, sum: Vec::new() };
+    if chunk_elems > 0 && sum.len() > chunk_elems {
+        return write_chunked(w, &header, sum, wire, chunk_elems, scratch);
+    }
+    begin_scratch(scratch);
+    scratch.push(TAG_ASYNC_SUM);
+    put_u32(scratch, comm);
+    put_u32(scratch, member);
+    put_u64(scratch, seq);
+    put_f64(scratch, finish);
+    put_f32_payload(scratch, sum, wire);
+    flush_scratch(w, scratch)
+}
+
+/// Encode + write an `AsyncSum` frame from a borrowed sum buffer (the
+/// unchunked, unbuffered variant kept for tests and compatibility).
 pub fn write_async_sum<W: Write>(
     w: &mut W,
     comm: u32,
@@ -458,25 +935,97 @@ pub fn write_async_sum<W: Write>(
     sum: &[f32],
     wire: Wire,
 ) -> Result<()> {
-    let mut body = Vec::with_capacity(25 + f32_payload_wire_len(sum.len(), wire));
-    body.push(TAG_ASYNC_SUM);
-    put_u32(&mut body, comm);
-    put_u32(&mut body, member);
-    put_u64(&mut body, seq);
-    put_f64(&mut body, finish);
-    put_f32_payload(&mut body, sum, wire);
-    write_body(w, &body)
+    let mut scratch = Vec::with_capacity(29 + f32_payload_wire_len(sum.len(), wire));
+    write_async_sum_pipelined(w, comm, member, seq, finish, sum, wire, 0, &mut scratch)
+        .map(|_| ())
+}
+
+/// Bytes per wire-encoded element for a chunkable payload kind.
+fn chunk_elem_width(kind: u8) -> Result<usize> {
+    Ok(match kind {
+        PAYLOAD_F32 => 4,
+        PAYLOAD_BF16 | PAYLOAD_F16 => 2,
+        other => bail!("payload kind {other} cannot be chunked"),
+    })
+}
+
+/// Read one logical message: a plain frame, or a CHUNK_BEGIN header
+/// whose sub-frames are read, decoded and accumulated into the
+/// reassembled payload before the completed frame is returned. Chunked
+/// sequences are contiguous on a link (the sender writes them under one
+/// lock), so any interleaving is a protocol error. Chunk bodies are
+/// parsed in place from a reused buffer — one decode pass per chunk, no
+/// intermediate copy on the hot receive path.
+pub fn read_message<R: Read>(r: &mut R) -> Result<Frame> {
+    match read_frame(r)? {
+        Frame::ChunkBegin { kind, n_chunks, total_elems, header } => {
+            let width = chunk_elem_width(kind)?;
+            let total_elems = total_elems as usize;
+            ensure!(
+                total_elems.saturating_mul(width) <= MAX_FRAME_BYTES,
+                "implausible chunked element count {total_elems}"
+            );
+            // the header's element count is an unverified promise until
+            // the bytes actually arrive: cap the upfront allocation (Vec
+            // growth amortizes the rest) and bound the accumulation per
+            // chunk so a corrupt sequence errors out instead of growing
+            // past the frame-size contract
+            let mut data = Vec::with_capacity(total_elems.min(1 << 20));
+            let mut body = Vec::new();
+            for expect in 0..n_chunks {
+                read_body_into(r, &mut body)?;
+                if body.first() != Some(&TAG_CHUNK_DATA) {
+                    let name = decode_body(&body).map(|f| f.name()).unwrap_or("unknown frame");
+                    bail!("expected CHUNK_DATA {expect}/{n_chunks}, got {name}");
+                }
+                let mut c = Cursor::new(&body);
+                c.u8()?; // tag
+                let seq = c.u32()?;
+                let total = c.u32()?;
+                ensure!(
+                    seq == expect && total == n_chunks,
+                    "chunked transfer out of sequence \
+                     (chunk {seq}/{total}, expected {expect}/{n_chunks})"
+                );
+                append_wire_elems(kind, c.rest(), &mut data)?;
+                ensure!(
+                    data.len() <= total_elems,
+                    "chunked payload overran its header \
+                     ({} elements after chunk {expect}, promised {total_elems})",
+                    data.len()
+                );
+            }
+            ensure!(
+                data.len() == total_elems,
+                "chunked payload reassembled to {} elements, header promised {total_elems}",
+                data.len()
+            );
+            let mut frame = decode_body(&header).context("decoding chunked frame header")?;
+            set_f32_payload(&mut frame, data)?;
+            Ok(frame)
+        }
+        frame => Ok(frame),
+    }
+}
+
+/// Read one length-prefixed frame body into `buf` (reused across the
+/// chunks of a transfer; EOF and oversized lengths are errors).
+fn read_body_into<R: Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<()> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len).context("reading frame length (peer closed?)")?;
+    let len = u32::from_le_bytes(len) as usize;
+    ensure!(len <= MAX_FRAME_BYTES, "implausible frame length {len}");
+    buf.clear();
+    buf.resize(len, 0);
+    r.read_exact(buf).context("reading frame body")?;
+    Ok(())
 }
 
 /// Read one length-prefixed frame (blocking; EOF and oversized lengths
 /// are errors).
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
-    let mut len = [0u8; 4];
-    r.read_exact(&mut len).context("reading frame length (peer closed?)")?;
-    let len = u32::from_le_bytes(len) as usize;
-    ensure!(len <= MAX_FRAME_BYTES, "implausible frame length {len}");
-    let mut body = vec![0u8; len];
-    r.read_exact(&mut body).context("reading frame body")?;
+    let mut body = Vec::new();
+    read_body_into(r, &mut body)?;
     decode_body(&body)
 }
 
@@ -500,39 +1049,118 @@ mod tests {
     #[test]
     fn hello_welcome_roundtrip() {
         match roundtrip(Frame::Hello {
-            version: 2,
+            version: 3,
             node: 3,
             nodes: 4,
             gpus_per_node: 2,
             wire: Wire::Bf16,
+            placement: LeaderPlacement::Mesh,
+            mesh_addr: "127.0.0.1:4567".into(),
         }) {
-            Frame::Hello { version: 2, node: 3, nodes: 4, gpus_per_node: 2, wire: Wire::Bf16 } => {
-            }
+            Frame::Hello {
+                version: 3,
+                node: 3,
+                nodes: 4,
+                gpus_per_node: 2,
+                wire: Wire::Bf16,
+                placement: LeaderPlacement::Mesh,
+                mesh_addr,
+            } => assert_eq!(mesh_addr, "127.0.0.1:4567"),
             other => panic!("bad roundtrip: {other:?}"),
         }
         match roundtrip(Frame::Welcome {
-            version: 2,
+            version: 3,
             nodes: 4,
             gpus_per_node: 2,
             wire: Wire::F16,
+            placement: LeaderPlacement::Star,
+            book: vec!["a:1".into(), "b:2".into()],
         }) {
-            Frame::Welcome { version: 2, nodes: 4, gpus_per_node: 2, wire: Wire::F16 } => {}
+            Frame::Welcome {
+                version: 3,
+                nodes: 4,
+                gpus_per_node: 2,
+                wire: Wire::F16,
+                placement: LeaderPlacement::Star,
+                book,
+            } => assert_eq!(book, vec!["a:1".to_string(), "b:2".to_string()]),
             other => panic!("bad roundtrip: {other:?}"),
         }
     }
 
     #[test]
-    fn version_1_hello_still_parses_with_f32_wire() {
-        // a protocol-1 peer's HELLO has no wire byte; decoding must
-        // surface the version (for the handshake's mismatch error), not
-        // fail as a truncated body
+    fn mesh_frames_roundtrip() {
+        match roundtrip(Frame::MeshHello {
+            version: 3,
+            node: 2,
+            nodes: 4,
+            gpus_per_node: 3,
+            wire: Wire::Bf16,
+            book_digest: 0xdead_beef_cafe_f00d,
+        }) {
+            Frame::MeshHello {
+                version: 3,
+                node: 2,
+                nodes: 4,
+                gpus_per_node: 3,
+                wire: Wire::Bf16,
+                book_digest: 0xdead_beef_cafe_f00d,
+            } => {}
+            other => panic!("bad roundtrip: {other:?}"),
+        }
+        match roundtrip(Frame::MeshWelcome { version: 3, node: 1, book_digest: 42 }) {
+            Frame::MeshWelcome { version: 3, node: 1, book_digest: 42 } => {}
+            other => panic!("bad roundtrip: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn book_digest_is_order_and_content_sensitive() {
+        let a = vec!["127.0.0.1:1".to_string(), "127.0.0.1:2".to_string()];
+        let mut b = a.clone();
+        b.swap(0, 1);
+        assert_eq!(book_digest(&a), book_digest(&a));
+        assert_ne!(book_digest(&a), book_digest(&b));
+        assert_ne!(book_digest(&a), book_digest(&a[..1].to_vec()));
+        // length-prefixed hashing: ["ab",""] must differ from ["a","b"]
+        let c = vec!["ab".to_string(), String::new()];
+        let d = vec!["a".to_string(), "b".to_string()];
+        assert_ne!(book_digest(&c), book_digest(&d));
+    }
+
+    #[test]
+    fn old_version_hellos_still_parse() {
+        // a protocol-1 peer's HELLO has no wire byte, a protocol-2 one no
+        // mesh fields; decoding must surface the version (for the
+        // handshake's mismatch error), not fail as a truncated body
         let mut body = vec![1u8]; // TAG_HELLO
         for v in [1u32, 3, 4, 2] {
             body.extend_from_slice(&v.to_le_bytes());
         }
         match decode_body(&body).unwrap() {
-            Frame::Hello { version: 1, node: 3, nodes: 4, gpus_per_node: 2, wire: Wire::F32 } => {}
+            Frame::Hello {
+                version: 1, node: 3, nodes: 4, gpus_per_node: 2, wire: Wire::F32, ..
+            } => {}
             other => panic!("v1 hello decoded as {other:?}"),
+        }
+        let v2 = encode_body(
+            &Frame::Hello {
+                version: 2,
+                node: 1,
+                nodes: 2,
+                gpus_per_node: 2,
+                wire: Wire::Bf16,
+                placement: LeaderPlacement::Mesh,
+                mesh_addr: "ignored-below-v3".into(),
+            },
+            Wire::F32,
+        );
+        assert_eq!(v2.len(), 18, "v2 hello must not carry the mesh fields");
+        match decode_body(&v2).unwrap() {
+            Frame::Hello { version: 2, wire: Wire::Bf16, mesh_addr, .. } => {
+                assert!(mesh_addr.is_empty());
+            }
+            other => panic!("v2 hello decoded as {other:?}"),
         }
     }
 
@@ -708,6 +1336,124 @@ mod tests {
             write_async_sum(&mut via_slice, 9, 1, 7, 2.5, &[1.0, -2.0], wire).unwrap();
             assert_eq!(via_frame, via_slice);
         }
+    }
+
+    /// Payload values straddling the chunk threshold in every wire
+    /// format must reassemble bit-identically to the unchunked frame.
+    #[test]
+    fn chunked_payload_parity_straddles_threshold() {
+        let chunk = 8usize;
+        for wire in [Wire::F32, Wire::Bf16, Wire::F16] {
+            for len in [chunk - 1, chunk, chunk + 1, 2 * chunk, 2 * chunk + 3] {
+                let mut vals: Vec<f32> = (0..len).map(|i| i as f32 * 0.37 - 1.0).collect();
+                // pre-quantize so the cast is exact and bit-comparable
+                wire.quantize(&mut vals);
+                let frame = Frame::Gather {
+                    comm: 3,
+                    member: 1,
+                    clock: 2.5,
+                    payload: Payload::F32(vals.clone()),
+                };
+                let mut chunked = Vec::new();
+                let mut scratch = Vec::new();
+                let bytes =
+                    write_frame_pipelined(&mut chunked, &frame, wire, chunk, &mut scratch)
+                        .unwrap();
+                assert_eq!(bytes as usize, chunked.len());
+                let mut r = &chunked[..];
+                let back = read_message(&mut r).unwrap();
+                assert!(r.is_empty(), "reader must consume the whole sequence");
+                match back {
+                    Frame::Gather { comm: 3, member: 1, clock, payload: Payload::F32(v) } => {
+                        assert_eq!(clock, 2.5);
+                        assert_eq!(
+                            v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                            vals.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                            "wire {} len {len} diverged through chunking",
+                            wire.name()
+                        );
+                    }
+                    other => panic!("bad reassembly: {other:?}"),
+                }
+                // payloads at or under the threshold must stay unchunked
+                if len <= chunk {
+                    let whole = {
+                        let mut buf = Vec::new();
+                        write_frame(&mut buf, &frame, wire).unwrap();
+                        buf
+                    };
+                    assert_eq!(chunked, whole, "len {len} must not be chunked");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_async_frames_reassemble() {
+        let sum: Vec<f32> = (0..37).map(|i| i as f32).collect();
+        let mut buf = Vec::new();
+        let mut scratch = Vec::new();
+        write_async_sum_pipelined(&mut buf, 9, 2, 7, 1.5, &sum, Wire::F32, 10, &mut scratch)
+            .unwrap();
+        match read_message(&mut &buf[..]).unwrap() {
+            Frame::AsyncSum { comm: 9, member: 2, seq: 7, finish, sum: got } => {
+                assert_eq!(finish, 1.5);
+                assert_eq!(got, sum);
+            }
+            other => panic!("bad reassembly: {other:?}"),
+        }
+        let frame = Frame::AsyncPut {
+            comm: 4,
+            member: 0,
+            seq: 11,
+            clock: 3.0,
+            wire_dt: 0.5,
+            snapshot: sum.clone(),
+        };
+        let mut buf = Vec::new();
+        write_frame_pipelined(&mut buf, &frame, Wire::Bf16, 10, &mut scratch).unwrap();
+        match read_message(&mut &buf[..]).unwrap() {
+            Frame::AsyncPut { comm: 4, seq: 11, snapshot, .. } => {
+                // 0..37 are bf16-representable integers
+                assert_eq!(snapshot, sum);
+            }
+            other => panic!("bad reassembly: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chunked_transfer_rejects_out_of_sequence_and_foreign_frames() {
+        let vals: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let frame =
+            Frame::Gather { comm: 1, member: 0, clock: 0.0, payload: Payload::F32(vals) };
+        let mut buf = Vec::new();
+        let mut scratch = Vec::new();
+        write_frame_pipelined(&mut buf, &frame, Wire::F32, 8, &mut scratch).unwrap();
+        // split the byte stream back into its frames
+        let mut frames: Vec<Vec<u8>> = Vec::new();
+        let mut rest = &buf[..];
+        while !rest.is_empty() {
+            let len = u32::from_le_bytes(rest[..4].try_into().unwrap()) as usize;
+            frames.push(rest[..4 + len].to_vec());
+            rest = &rest[4 + len..];
+        }
+        assert_eq!(frames.len(), 5, "header + 4 chunks");
+        // drop chunk 1: chunk 2 arrives with the wrong seq
+        let reordered: Vec<u8> =
+            [&frames[0][..], &frames[1][..], &frames[3][..]].concat();
+        let err = read_message(&mut &reordered[..]).unwrap_err().to_string();
+        assert!(err.contains("out of sequence"), "{err}");
+        // a foreign frame interleaved mid-transfer is a protocol error
+        let mut welcome = Vec::new();
+        write_frame(
+            &mut welcome,
+            &Frame::MeshWelcome { version: 3, node: 1, book_digest: 0 },
+            Wire::F32,
+        )
+        .unwrap();
+        let interleaved: Vec<u8> = [&frames[0][..], &welcome[..]].concat();
+        let err = read_message(&mut &interleaved[..]).unwrap_err().to_string();
+        assert!(err.contains("expected CHUNK_DATA"), "{err}");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cluster::ExecutorKind;
-use crate::comm::{Fabric, TransportKind, Wire};
+use crate::comm::{Fabric, LeaderPlacement, TransportKind, Wire};
 use crate::daso::DasoConfig;
 use crate::trainer::strategy::RankStrategyFactory;
 use crate::trainer::TrainConfig;
@@ -143,6 +143,12 @@ impl RunSpec {
             }
             "train.global_wire" | "global_wire" | "wire" => {
                 self.train.global_wire = Wire::parse(as_str()?)?
+            }
+            "train.leader_placement" | "leader_placement" | "placement" => {
+                self.train.leader_placement = LeaderPlacement::parse(as_str()?)?
+            }
+            "train.pipeline_chunk_elems" | "pipeline_chunk_elems" | "chunk_elems" => {
+                self.train.pipeline_chunk_elems = as_usize()?
             }
 
             "daso.b_initial" => self.daso.b_initial = as_usize()?,
@@ -343,6 +349,22 @@ mod tests {
         s.set("train.global_wire=f32").unwrap();
         assert_eq!(s.train.global_wire, Wire::F32);
         assert!(s.set("wire=int8").is_err());
+    }
+
+    #[test]
+    fn leader_placement_and_chunk_overrides() {
+        let mut s = RunSpec::default_for("mlp");
+        assert_eq!(s.train.leader_placement, LeaderPlacement::Mesh, "mesh is the default");
+        s.set("leader_placement=star").unwrap();
+        assert_eq!(s.train.leader_placement, LeaderPlacement::Star);
+        s.set("train.leader_placement=mesh").unwrap();
+        assert_eq!(s.train.leader_placement, LeaderPlacement::Mesh);
+        assert!(s.set("placement=ring").is_err());
+
+        s.set("pipeline_chunk_elems=1024").unwrap();
+        assert_eq!(s.train.pipeline_chunk_elems, 1024);
+        s.set("train.pipeline_chunk_elems=0").unwrap();
+        assert_eq!(s.train.pipeline_chunk_elems, 0, "zero disables chunking");
     }
 
     #[test]

@@ -16,11 +16,19 @@
 //!     parameters and training continues; W batches later the stale sum
 //!     arrives and is blended via Eq. (1), then broadcast node-locally.
 //!     B and W follow the plateau-driven `Cycler`. The paper sends these
-//!     uncast (casting would delay the send, section 3) and the clock
-//!     model charges no cast time accordingly; with a compressed
-//!     transport wire (`--wire bf16|f16`) the snapshots and sums still
-//!     take the physical frame cast, modeled as overlapped with the
-//!     send.
+//!     uncast (casting would delay the send, section 3), which is
+//!     exactly the default `--wire f32`; the clock charges only the
+//!     launch latency for the send and sizes the in-flight window by the
+//!     configured wire's frame bytes.
+//!
+//! The virtual clock is **wire-aware** (`--wire f32|bf16|f16`): ring
+//! times are charged on the bytes the configured wire actually puts on
+//! the inter-node fabric (matching the byte counters), and the
+//! pack/unpack cast cost is only charged when the wire compresses. The
+//! paper's fixed-bf16 packaging of blocking syncs is preserved
+//! numerically (the reduction still pre-casts contributions to bf16, a
+//! property of the algorithm), but its *cost* follows the transport you
+//! configured, so `--wire` shows up in sim-time projections.
 
 use anyhow::Result;
 
@@ -177,13 +185,17 @@ impl Daso {
         let group = self.rotation.advance();
         let members = topo.group_members(group);
 
-        // bf16 packaging: cast cost on each member, halves wire bytes in
-        // the cost model; the byte counters report the *true* frame
-        // bytes of the configured transport wire
-        let bytes_f32 = n * 4;
-        let wire_bytes = n * Wire::Bf16.bytes_per_elem();
+        // wire-aware clock charges: the ring time is paid on the bytes
+        // the *configured* wire actually puts on the fabric (matching
+        // the byte counters), and the pack+unpack cast is only paid when
+        // the wire compresses — so `--wire f32|bf16|f16` shows up in
+        // sim-time projections, not just in byte counts
         let frame_bytes = n * ctx.global_wire.bytes_per_elem();
-        let cast_dt = 2.0 * cast_time(bytes_f32, DEVICE_MEM_BW); // pack + unpack
+        let cast_dt = if ctx.global_wire.bytes_per_elem() < 4 {
+            2.0 * cast_time(n * 4, DEVICE_MEM_BW) // pack + unpack
+        } else {
+            0.0
+        };
         ctx.cluster.ranks_barrier(&members);
         {
             let workers = &mut ctx.cluster.workers;
@@ -204,7 +216,7 @@ impl Daso {
                 ctx.global_wire.quantize(b);
             }
         }
-        let ring_dt = ring_allreduce_time(members.len(), wire_bytes, &ctx.fabric.inter);
+        let ring_dt = ring_allreduce_time(members.len(), frame_bytes, &ctx.fabric.inter);
         for &r in &members {
             ctx.cluster.workers[r].advance_clock(cast_dt + ring_dt);
             ctx.cluster.workers[r].bytes_sent_inter += frame_bytes as u64;
@@ -254,7 +266,6 @@ impl Daso {
             return;
         }
         let n = ctx.rt.spec.n_params;
-        let bytes = n * 4;
         let frame_bytes = n * ctx.global_wire.bytes_per_elem();
         let group = self.rotation.advance();
         let members = topo.group_members(group);
@@ -277,8 +288,11 @@ impl Daso {
             .iter()
             .map(|&r| ctx.cluster.workers[r].clock)
             .fold(0.0, f64::max);
+        // wire-aware: the in-flight exchange moves the configured wire's
+        // frame bytes (the paper sends uncast — f32 — which is exactly
+        // the default wire; a compressed wire shrinks the window)
         let finish_time =
-            send_start + ring_allreduce_time(members.len(), bytes, &ctx.fabric.inter);
+            send_start + ring_allreduce_time(members.len(), frame_bytes, &ctx.fabric.inter);
         // the async send itself only costs the launch latency
         for &r in &members {
             ctx.cluster.workers[r].advance_clock(ctx.fabric.inter.latency_s);
@@ -490,12 +504,16 @@ impl DasoRank {
         }
         let n = ctx.rt.spec.n_params;
         let group = self.rotation.advance();
-        // the cost model charges the paper's bf16 packaging; the byte
-        // counters report the true frame bytes of the transport wire
-        // (the global communicator applies the matching cast roundtrips)
-        let wire_bytes = n * Wire::Bf16.bytes_per_elem();
+        // wire-aware clock charges, mirroring the serial strategy's
+        // expressions exactly (the bit-identity contract covers sim
+        // times): ring time on the configured wire's frame bytes, cast
+        // only when the wire compresses
         let frame_bytes = n * ctx.global_wire.bytes_per_elem();
-        let cast_dt = 2.0 * cast_time(n * 4, DEVICE_MEM_BW); // pack + unpack
+        let cast_dt = if ctx.global_wire.bytes_per_elem() < 4 {
+            2.0 * cast_time(n * 4, DEVICE_MEM_BW) // pack + unpack
+        } else {
+            0.0
+        };
         if ctx.worker.rank.local == group {
             let payload = Payload::F32(std::mem::take(&mut ctx.worker.params));
             let (out, clocks) = ctx.comms.global.exchange(payload, ctx.worker.clock, |bufs| {
@@ -508,7 +526,7 @@ impl DasoRank {
             // serial does ranks_barrier then advance(cast + ring): keep
             // the identical FP operation order
             let t = clocks.iter().fold(0.0, |a, &b| f64::max(a, b));
-            let ring_dt = ring_allreduce_time(ctx.topo.nodes, wire_bytes, &ctx.fabric.inter);
+            let ring_dt = ring_allreduce_time(ctx.topo.nodes, frame_bytes, &ctx.fabric.inter);
             ctx.worker.wait_until(t);
             ctx.worker.advance_clock(cast_dt + ring_dt);
             ctx.worker.bytes_sent_inter += frame_bytes as u64;
@@ -567,11 +585,12 @@ impl DasoRank {
             return Ok(());
         }
         let n = ctx.rt.spec.n_params;
-        let bytes = n * 4;
         let frame_bytes = n * ctx.global_wire.bytes_per_elem();
         let group = self.rotation.advance();
         if ctx.worker.rank.local == group {
-            let wire_dt = ring_allreduce_time(ctx.topo.nodes, bytes, &ctx.fabric.inter);
+            // wire-aware: the in-flight window shrinks with a compressed
+            // wire (same expression as the serial strategy)
+            let wire_dt = ring_allreduce_time(ctx.topo.nodes, frame_bytes, &ctx.fabric.inter);
             ctx.comms.global_async.contribute(
                 ctx.worker.params.clone(),
                 ctx.worker.clock,

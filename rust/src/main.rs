@@ -189,6 +189,8 @@ fn cmd_launch(args: &Args) -> Result<()> {
         format!("nodes={nodes}"),
         format!("gpus_per_node={wpn}"),
         format!("global_wire={}", spec.train.global_wire.name()),
+        format!("leader_placement={}", spec.train.leader_placement.name()),
+        format!("pipeline_chunk_elems={}", spec.train.pipeline_chunk_elems),
     ] {
         train_args.push("--set".into());
         train_args.push(forced);

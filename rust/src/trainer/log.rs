@@ -56,6 +56,18 @@ pub fn report_json(report: &RunReport) -> Value {
                 ("bytes_inter", num(report.comm.bytes_inter as f64)),
                 ("bytes_intra", num(report.comm.bytes_intra as f64)),
                 ("comm_wait_s", num(report.comm.comm_wait_s)),
+                // transport-level bytes each process wrote to inter-node
+                // links (node order; empty for single-process runs) —
+                // the leader-placement hot-spot metric
+                (
+                    "wire_bytes_by_node",
+                    arr(report
+                        .comm
+                        .wire_bytes_by_node
+                        .iter()
+                        .map(|&b| num(b as f64))
+                        .collect()),
+                ),
             ]),
         ),
         (

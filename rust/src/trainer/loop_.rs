@@ -8,7 +8,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::cluster::ClusterState;
-use crate::comm::{naive_mean, Fabric, Topology, Wire};
+use crate::comm::{naive_mean, Fabric, LeaderPlacement, Topology, Wire};
 use crate::data::Dataset;
 use crate::optim::LrSchedule;
 use crate::runtime::ModelRuntime;
@@ -52,6 +52,17 @@ pub struct TrainConfig {
     /// identically by every executor, so blocking strategies stay
     /// bit-identical serial == threaded == tcp at every setting.
     pub global_wire: Wire,
+    /// where spanning-group leaders live in the transports
+    /// (`leader_placement=star|mesh`; default mesh): mesh spreads global
+    /// group `g`'s leader to node `g % nodes`, star keeps every leader
+    /// on the rank-0 coordinator (the pre-mesh hot-spot, kept as the
+    /// measurable baseline). Results are bit-identical either way.
+    pub leader_placement: LeaderPlacement,
+    /// element-count threshold above which the TCP transport splits f32
+    /// payload frames into pipelined chunks (`pipeline_chunk_elems`,
+    /// `DASO_PIPELINE_CHUNK_ELEMS`; 0 disables). Chunk reassembly is
+    /// exact, so the setting never changes results.
+    pub pipeline_chunk_elems: usize,
 }
 
 impl TrainConfig {
@@ -74,6 +85,8 @@ impl TrainConfig {
             verbose: false,
             comm_timeout_ms: crate::comm::default_comm_timeout_ms(),
             global_wire: crate::comm::default_global_wire(),
+            leader_placement: LeaderPlacement::Mesh,
+            pipeline_chunk_elems: crate::comm::default_pipeline_chunk_elems(),
         }
     }
 
@@ -165,10 +178,9 @@ pub fn train(
     let mut records = Vec::with_capacity(cfg.epochs);
     let mut global_batch = 0usize;
     let mut grads: Vec<Vec<f32>> = vec![Vec::new(); world];
-    // resolve the effective wire once: single-node topologies have no
-    // inter tier, so there is nothing to compress (the same rule every
-    // transport applies when wiring its communicators)
-    let global_wire = if topo.nodes > 1 { cfg.global_wire } else { Wire::F32 };
+    // resolve the effective wire once, through the same rule every
+    // transport applies when wiring its communicators
+    let global_wire = topo.resolve_global_wire(cfg.global_wire);
 
     for epoch in 0..cfg.epochs {
         strategy.on_epoch_start(epoch);

@@ -24,6 +24,12 @@ pub struct CommStats {
     pub bytes_intra: u64,
     /// virtual seconds spent blocked on communication (summed over workers)
     pub comm_wait_s: f64,
+    /// actual bytes each process wrote to inter-node links, indexed by
+    /// node id (transport-level accounting from the transport-backed
+    /// executors; empty for serial runs, all-zero for single-process
+    /// transports). This is the hot-spot metric: under star placement
+    /// node 0 dominates, under mesh the load spreads.
+    pub wire_bytes_by_node: Vec<u64>,
 }
 
 /// One training round (each worker has done one forward-backward pass) as

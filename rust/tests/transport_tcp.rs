@@ -4,6 +4,12 @@
 //!   bit-identical final parameters and records to `--executor serial`
 //!   with the same 4 workers (the acceptance criterion of the transport
 //!   subsystem; this is the CI tcp-smoke job);
+//! - a 3-process DASO run (mesh leader placement: leaders on distinct
+//!   nodes, direct peer links) must stay bit-identical to serial, and
+//!   chunked pipelining must not move a bit at any wire setting;
+//! - star vs mesh placement must produce identical results while mesh
+//!   strictly shrinks rank 0's actual wire bytes (the decentralization
+//!   acceptance criterion);
 //! - DASO's cycling (non-blocking mailbox) must train across processes;
 //! - a missing peer process must surface as a bounded error, not a hang;
 //! - `daso launch` must work end-to-end through the real binary.
@@ -19,7 +25,7 @@ use std::process::{Child, Command, Stdio};
 use std::time::Duration;
 
 use daso::cluster::train_with_transport;
-use daso::comm::transport::tcp::{TcpTransport, ENV_COORD_ADDR, ENV_NODE_ID};
+use daso::comm::transport::tcp::{TcpTransport, TcpTuning, ENV_COORD_ADDR, ENV_NODE_ID};
 use daso::config::RunSpec;
 use daso::runtime::Engine;
 use daso::trainer::{train, RunReport};
@@ -92,9 +98,9 @@ fn serial_report_with(strategy: &str, extra: &[&str]) -> RunReport {
     train(&rt, &spec.train, &*tr, &*va, strategy.as_mut()).unwrap()
 }
 
-/// Spawn the node-1 peer as a real `daso` process with the same run
+/// Spawn the peer for `node` as a real `daso` process with the same run
 /// shape, joined through the env handshake.
-fn spawn_peer(addr: &str, strategy: &str, extra: &[&str]) -> Child {
+fn spawn_peer(addr: &str, node: usize, strategy: &str, extra: &[&str]) -> Child {
     let exe = env!("CARGO_BIN_EXE_daso");
     let mut args = vec![
         "train".to_string(),
@@ -112,7 +118,7 @@ fn spawn_peer(addr: &str, strategy: &str, extra: &[&str]) -> Child {
     Command::new(exe)
         .args(&args)
         .env(ENV_COORD_ADDR, addr)
-        .env(ENV_NODE_ID, "1")
+        .env(ENV_NODE_ID, node.to_string())
         .stdin(Stdio::null())
         .stdout(Stdio::null())
         .stderr(Stdio::inherit())
@@ -126,6 +132,10 @@ fn multiprocess_report(strategy: &str) -> RunReport {
     multiprocess_report_with(strategy, &[])
 }
 
+/// Run an n-node cluster: this process as coordinator (library API),
+/// `nodes - 1` child `daso` processes joined through the env handshake.
+/// The node count comes from the spec (SETS default = 2; override with
+/// an extra `nodes=N`).
 fn multiprocess_report_with(strategy: &str, extra: &[&str]) -> RunReport {
     let spec = spec_with_extra(strategy, extra);
     let engine = Engine::native();
@@ -139,25 +149,29 @@ fn multiprocess_report_with(strategy: &str, extra: &[&str]) -> RunReport {
     .unwrap();
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let mut child = spawn_peer(&addr, strategy, extra);
+    let mut children: Vec<Child> = (1..spec.train.nodes)
+        .map(|node| spawn_peer(&addr, node, strategy, extra))
+        .collect();
     let factory = spec.build_rank_strategies();
-    let mut transport = TcpTransport::coordinator(
-        spec.train.topology(),
-        listener,
-        Duration::from_secs(60),
-        spec.train.global_wire,
-    );
+    let tuning = TcpTuning::new(Duration::from_secs(60), spec.train.global_wire)
+        .with_placement(spec.train.leader_placement)
+        .with_chunk_elems(spec.train.pipeline_chunk_elems);
+    let mut transport = TcpTransport::coordinator(spec.train.topology(), listener, tuning);
     let result = train_with_transport(&rt, &spec.train, &*tr, &*va, &factory, &mut transport);
     let report = match result {
         Ok(r) => r.expect("the coordinator hosts rank 0 and owns the report"),
         Err(e) => {
-            let _ = child.kill();
-            let _ = child.wait();
+            for child in &mut children {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
             panic!("coordinator failed: {e:#}");
         }
     };
-    let status = child.wait().expect("reaping the peer process");
-    assert!(status.success(), "peer process exited with {status}");
+    for (node, mut child) in children.into_iter().enumerate() {
+        let status = child.wait().expect("reaping the peer process");
+        assert!(status.success(), "peer process for node {} exited with {status}", node + 1);
+    }
     report
 }
 
@@ -257,6 +271,88 @@ fn multiprocess_daso_cycling_trains_over_bf16_wire() {
 }
 
 #[test]
+fn mesh_3_nodes_matches_serial_bitwise() {
+    // 3 processes so mesh placement actually lands leaders on distinct
+    // nodes (group 0 -> node 0, group 1 -> node 1) and peers hold direct
+    // links: DASO's blocking phases must stay bit-identical to serial
+    // (warmup+cooldown covers the whole run — cycling's in-flight
+    // semantics are intentionally not bit-comparable to serial)
+    with_timeout(240, || {
+        let extra = &[
+            "nodes=3",
+            "train.train_samples=1536",
+            "daso.warmup_epochs=2",
+            "daso.cooldown_epochs=1",
+        ];
+        let serial = serial_report_with("daso", extra);
+        let multi = multiprocess_report_with("daso", extra);
+        assert_eq!(multi.world, 6);
+        assert_reports_identical(&serial, &multi, "mesh-3n");
+        // the transport reports per-node wire bytes, and with mesh
+        // placement node 0 is not the only process writing frames
+        assert_eq!(multi.comm.wire_bytes_by_node.len(), 3);
+        assert!(multi.comm.wire_bytes_by_node.iter().all(|&b| b > 0), "{:?}", multi.comm);
+    });
+}
+
+#[test]
+fn chunked_pipeline_matches_serial_bitwise() {
+    // a chunk threshold far below the model's parameter count forces
+    // every global frame through the pipelined chunk path, including the
+    // bf16 wire cast per chunk — results must not move by a single bit
+    with_timeout(240, || {
+        for wire_extra in [&[][..], &["global_wire=bf16"][..]] {
+            let mut extra = vec!["pipeline_chunk_elems=64"];
+            extra.extend_from_slice(wire_extra);
+            let serial = serial_report_with("horovod", &extra);
+            let multi = multiprocess_report_with("horovod", &extra);
+            let label = if wire_extra.is_empty() { "chunked-f32" } else { "chunked-bf16" };
+            assert_reports_identical(&serial, &multi, label);
+        }
+    });
+}
+
+#[test]
+fn mesh_placement_shrinks_rank0_hot_spot() {
+    // the decentralization acceptance: same 3-node DASO run under star
+    // and mesh placement — identical results, but node 0 writes strictly
+    // fewer bytes once the rotating groups' leaders spread out
+    with_timeout(360, || {
+        let base: &[&str] = &["nodes=3", "epochs=2"];
+        let star = multiprocess_report_with(
+            "daso",
+            &[base, &["leader_placement=star"][..]].concat(),
+        );
+        let mesh = multiprocess_report_with(
+            "daso",
+            &[base, &["leader_placement=mesh"][..]].concat(),
+        );
+        // placement must not change results — only who hosts the reduce
+        assert_eq!(star.final_metric, mesh.final_metric);
+        for (a, b) in star.final_params.iter().zip(&mesh.final_params) {
+            assert_eq!(a, b, "placement changed training results");
+        }
+        let (star_bytes, mesh_bytes) =
+            (&star.comm.wire_bytes_by_node, &mesh.comm.wire_bytes_by_node);
+        assert_eq!(star_bytes.len(), 3);
+        assert_eq!(mesh_bytes.len(), 3);
+        // under star routing node 0 is the hot-spot: it scatters every
+        // spanning group's results to everyone
+        assert!(
+            star_bytes[0] > star_bytes[1] && star_bytes[0] > star_bytes[2],
+            "star should concentrate load on node 0: {star_bytes:?}"
+        );
+        // mesh placement strictly shrinks node 0's share
+        assert!(
+            mesh_bytes[0] < star_bytes[0],
+            "mesh rank-0 bytes {} must be strictly below the star baseline {}",
+            mesh_bytes[0],
+            star_bytes[0]
+        );
+    });
+}
+
+#[test]
 fn multiprocess_missing_peer_is_a_bounded_error() {
     with_timeout(60, || {
         let mut spec = spec_with_sets("horovod");
@@ -275,8 +371,7 @@ fn multiprocess_missing_peer_is_a_bounded_error() {
         let mut transport = TcpTransport::coordinator(
             spec.train.topology(),
             listener,
-            Duration::from_millis(500),
-            spec.train.global_wire,
+            TcpTuning::new(Duration::from_millis(500), spec.train.global_wire),
         );
         let err = train_with_transport(&rt, &spec.train, &*tr, &*va, &factory, &mut transport)
             .unwrap_err()
