@@ -1,14 +1,22 @@
-//! Transport bench: star vs mesh leader placement over a real loopback
-//! `daso launch` (3 node processes x 2 workers, DASO blocking phases so
-//! the rotating global groups dominate the traffic).
+//! Transport bench over real loopback `daso launch`es (3 node
+//! processes x 2 workers, DASO blocking phases so the rotating global
+//! groups dominate the traffic), two comparisons:
 //!
-//! Measures wall time per launch and reads the per-process
-//! `wire_bytes_by_node` out of the emitted run report — the rank-0
-//! entry is the coordinator hot-spot the mesh placement exists to
-//! shrink. Emits `BENCH_transport.json` (schema daso-bench/2): one
-//! result per (placement, node) annotated with that node's actual bytes
-//! on the wire, so the perf trajectory captures the hot-spot shrink
-//! alongside the timing.
+//! - **star vs mesh leader placement** (both tcp): the rank-0 entry of
+//!   `wire_bytes_by_node` is the coordinator hot-spot the mesh
+//!   placement exists to shrink.
+//! - **tcp-mesh vs shm vs hybrid transports** (all mesh placement):
+//!   `wire_bytes_shm_by_node` shows the node-local tier moving onto the
+//!   shared-memory rings — under hybrid the per-node bytes left on TCP
+//!   collapse to the control-group trickle, and under shm every frame
+//!   rides a ring.
+//!
+//! Measures wall time per launch and reads the per-process byte
+//! counters out of the emitted run report. Emits `BENCH_transport.json`
+//! (schema daso-bench/2): one result per (config, node) annotated with
+//! that node's actual bytes on the wire, so the perf trajectory
+//! captures the hot-spot shrink and the shm migration alongside the
+//! timings.
 //!
 //! `DASO_BENCH_QUICK=1` runs a reduced configuration (the CI smoke job).
 
@@ -19,10 +27,17 @@ use daso::util::json::Value;
 
 struct LaunchOutcome {
     wire_bytes_by_node: Vec<u64>,
+    wire_bytes_shm_by_node: Vec<u64>,
 }
 
 /// Run one `daso launch` through the real binary and parse the run json.
-fn launch(placement: &str, epochs: usize, samples: usize, out_dir: &std::path::Path) -> LaunchOutcome {
+fn launch(
+    placement: &str,
+    transport: &str,
+    epochs: usize,
+    samples: usize,
+    out_dir: &std::path::Path,
+) -> LaunchOutcome {
     let exe = env!("CARGO_BIN_EXE_daso");
     let output = Command::new(exe)
         .args([
@@ -35,6 +50,8 @@ fn launch(placement: &str, epochs: usize, samples: usize, out_dir: &std::path::P
             "mlp",
             "--strategy",
             "daso",
+            "--transport",
+            transport,
             "--set",
             &format!("leader_placement={placement}"),
             "--set",
@@ -56,21 +73,25 @@ fn launch(placement: &str, epochs: usize, samples: usize, out_dir: &std::path::P
         .expect("running daso launch");
     assert!(
         output.status.success(),
-        "daso launch ({placement}) failed\nstderr: {}",
+        "daso launch ({placement}/{transport}) failed\nstderr: {}",
         String::from_utf8_lossy(&output.stderr)
     );
     let json = std::fs::read_to_string(out_dir.join("mlp_daso.json"))
         .expect("launch writes the run json");
     let v = Value::parse(&json).expect("parsing run json");
-    let wire_bytes_by_node: Vec<u64> = v
-        .get_path("comm.wire_bytes_by_node")
-        .and_then(|a| a.as_arr())
-        .expect("run json carries wire_bytes_by_node")
-        .iter()
-        .map(|b| b.as_f64().expect("byte counts are numbers") as u64)
-        .collect();
+    let bytes_at = |path: &str| -> Vec<u64> {
+        v.get_path(path)
+            .and_then(|a| a.as_arr())
+            .unwrap_or_else(|| panic!("run json carries {path}"))
+            .iter()
+            .map(|b| b.as_f64().expect("byte counts are numbers") as u64)
+            .collect()
+    };
+    let wire_bytes_by_node = bytes_at("comm.wire_bytes_by_node");
+    let wire_bytes_shm_by_node = bytes_at("comm.wire_bytes_shm_by_node");
     assert_eq!(wire_bytes_by_node.len(), 3, "one entry per node process");
-    LaunchOutcome { wire_bytes_by_node }
+    assert_eq!(wire_bytes_shm_by_node.len(), 3);
+    LaunchOutcome { wire_bytes_by_node, wire_bytes_shm_by_node }
 }
 
 fn main() {
@@ -78,56 +99,112 @@ fn main() {
     let (epochs, samples) = if quick { (2, 768) } else { (2, 1536) };
     let bench = if quick { Bench::new(0, 2) } else { Bench::new(1, 3) };
     println!(
-        "== transport bench: star vs mesh leader placement (3 procs x 2 workers{}) ==",
+        "== transport bench: star vs mesh placement, tcp vs shm vs hybrid links \
+         (3 procs x 2 workers{}) ==",
         if quick { ", quick" } else { "" }
     );
 
     let out_root =
         std::env::temp_dir().join(format!("daso_transport_bench_{}", std::process::id()));
+    // (label, placement, transport): the mesh/tcp row doubles as the
+    // placement comparison's subject and the transport comparison's
+    // baseline
+    let configs: &[(&str, &str, &str)] = &[
+        ("star", "star", "tcp"),
+        ("mesh", "mesh", "tcp"),
+        ("shm", "mesh", "shm"),
+        ("hybrid", "mesh", "hybrid"),
+    ];
     let mut results: Vec<BenchResult> = Vec::new();
-    let mut bytes_by_placement: Vec<(String, Vec<u64>)> = Vec::new();
-    for placement in ["star", "mesh"] {
-        let out_dir = out_root.join(placement);
+    let mut outcomes: Vec<(String, LaunchOutcome)> = Vec::new();
+    for (label, placement, transport) in configs {
+        let out_dir = out_root.join(label);
         let mut last: Option<LaunchOutcome> = None;
-        let timing = bench.run(&format!("launch_3x2_daso/{placement}"), || {
-            last = Some(launch(placement, epochs, samples, &out_dir));
+        let timing = bench.run(&format!("launch_3x2_daso/{label}"), || {
+            last = Some(launch(placement, transport, epochs, samples, &out_dir));
         });
         let outcome = last.expect("bench ran at least once");
-        // per-node wire bytes ride along as one annotated result each,
-        // so the artifact captures the whole load distribution
+        // per-node byte counters ride along as annotated results, so
+        // the artifact captures the whole load distribution and the
+        // shm migration
         for (node, &bytes) in outcome.wire_bytes_by_node.iter().enumerate() {
             results.push(
                 BenchResult {
-                    name: format!("launch_3x2_daso/{placement}/node{node}_wire_bytes"),
+                    name: format!("launch_3x2_daso/{label}/node{node}_wire_bytes"),
+                    ..timing.clone()
+                }
+                .with_bytes_on_wire(bytes),
+            );
+        }
+        for (node, &bytes) in outcome.wire_bytes_shm_by_node.iter().enumerate() {
+            results.push(
+                BenchResult {
+                    name: format!("launch_3x2_daso/{label}/node{node}_shm_bytes"),
                     ..timing.clone()
                 }
                 .with_bytes_on_wire(bytes),
             );
         }
         results.push(timing.with_bytes_on_wire(outcome.wire_bytes_by_node[0]));
-        bytes_by_placement.push((placement.to_string(), outcome.wire_bytes_by_node));
+        outcomes.push((label.to_string(), outcome));
     }
     std::fs::remove_dir_all(&out_root).ok();
 
-    let star = &bytes_by_placement[0].1;
-    let mesh = &bytes_by_placement[1].1;
+    fn by_label<'a>(outcomes: &'a [(String, LaunchOutcome)], l: &str) -> &'a LaunchOutcome {
+        &outcomes.iter().find(|(label, _)| label == l).expect("config ran").1
+    }
+    let (star, mesh, shm, hybrid) = (
+        by_label(&outcomes, "star"),
+        by_label(&outcomes, "mesh"),
+        by_label(&outcomes, "shm"),
+        by_label(&outcomes, "hybrid"),
+    );
     println!("\nper-node wire bytes (actual frames written):");
-    println!("  star: {star:?}");
-    println!("  mesh: {mesh:?}");
+    println!("  star/tcp   : {:?}", star.wire_bytes_by_node);
+    println!("  mesh/tcp   : {:?}", mesh.wire_bytes_by_node);
+    println!("  mesh/shm   : {:?} (shm {:?})", shm.wire_bytes_by_node, shm.wire_bytes_shm_by_node);
+    println!(
+        "  mesh/hybrid: {:?} (shm {:?})",
+        hybrid.wire_bytes_by_node, hybrid.wire_bytes_shm_by_node
+    );
     println!(
         "  rank-0 hot-spot: {} -> {} bytes ({:+.1}%)",
-        star[0],
-        mesh[0],
-        100.0 * (mesh[0] as f64 - star[0] as f64) / star[0] as f64
+        star.wire_bytes_by_node[0],
+        mesh.wire_bytes_by_node[0],
+        100.0 * (mesh.wire_bytes_by_node[0] as f64 - star.wire_bytes_by_node[0] as f64)
+            / star.wire_bytes_by_node[0] as f64
     );
+
     // the decentralization claim, checked where the numbers are made:
     // rank 0 must write strictly fewer bytes under mesh placement
     assert!(
-        mesh[0] < star[0],
+        mesh.wire_bytes_by_node[0] < star.wire_bytes_by_node[0],
         "mesh rank-0 bytes {} must be strictly below the star baseline {}",
-        mesh[0],
-        star[0]
+        mesh.wire_bytes_by_node[0],
+        star.wire_bytes_by_node[0]
     );
+    // the shm claim: every frame of a pure-shm launch rides a ring...
+    for node in 0..3 {
+        assert!(shm.wire_bytes_shm_by_node[node] > 0, "shm node {node} wrote no ring bytes");
+        assert_eq!(
+            shm.wire_bytes_shm_by_node[node], shm.wire_bytes_by_node[node],
+            "--transport shm must carry all of node {node}'s bytes on rings"
+        );
+    }
+    // ...and under hybrid the node-local tier leaves the TCP counters:
+    // what stays on sockets (total - shm, the control-group trickle) is
+    // strictly below the all-tcp baseline on every node
+    for node in 0..3 {
+        assert!(hybrid.wire_bytes_shm_by_node[node] > 0, "hybrid node {node} used no rings");
+        let hybrid_tcp =
+            hybrid.wire_bytes_by_node[node] - hybrid.wire_bytes_shm_by_node[node];
+        assert!(
+            hybrid_tcp < mesh.wire_bytes_by_node[node],
+            "hybrid node {node} kept {hybrid_tcp} bytes on tcp, not below the all-tcp \
+             baseline {}",
+            mesh.wire_bytes_by_node[node]
+        );
+    }
 
     write_bench_json("transport", &results).expect("bench artifact");
 }

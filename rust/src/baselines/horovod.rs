@@ -8,6 +8,7 @@
 use anyhow::Result;
 
 use crate::comm::cost::{cast_time, fused_allreduce_time, DEVICE_MEM_BW};
+use crate::comm::transport::wire::roundtrip_inplace;
 use crate::comm::{ring_allreduce_mean, Payload, Wire};
 use crate::trainer::strategy::{CommStats, RankCtx, RankStrategy, StepCtx, Strategy};
 
@@ -65,15 +66,11 @@ impl Strategy for Horovod {
             }
             ctx.cluster.barrier();
             let mut bufs: Vec<&mut Vec<f32>> = ctx.grads.iter_mut().collect();
-            // transport packaging: mirror GroupComm's cast roundtrips on
-            // both legs of the exchange (no-ops at the default f32 wire)
-            for b in bufs.iter_mut() {
-                transport_wire.quantize(b);
-            }
-            ring_allreduce_mean(&mut bufs, self.cfg.wire);
-            for b in bufs.iter_mut() {
-                transport_wire.quantize(b);
-            }
+            // transport packaging: the shared wire::roundtrip helper
+            // mirrors GroupComm's casts on both legs of the exchange
+            // (no-ops at the default f32 wire)
+            let ring_wire = self.cfg.wire;
+            roundtrip_inplace(transport_wire, &mut bufs, |b| ring_allreduce_mean(b, ring_wire));
 
             // flat ring spans nodes: inter-node tier is the bottleneck
             // (single-node runs ride the intra tier)

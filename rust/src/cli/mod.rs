@@ -110,8 +110,14 @@ COMMANDS:
                               threaded runs one OS thread per simulated GPU
                               with channel collectives; multiprocess joins a
                               TCP launch via DASO_COORD_ADDR/DASO_NODE_ID)
-                  --transport channels|tcp  override the executor-implied
-                              transport (validation only)
+                  --transport channels|tcp|shm|hybrid  link medium for the
+                              multiprocess executor (default tcp or
+                              DASO_TRANSPORT; shm rides every peer link on
+                              shared-memory rings, hybrid keeps the TCP
+                              mesh for control/cross-host links while
+                              node-local links use rings; negotiated in
+                              the handshake). Single-process executors
+                              always use in-process channels.
                   --wire f32|bf16|f16       wire format for the global
                               (inter-node) tier's parameter frames
                               (default f32 or DASO_GLOBAL_WIRE; bf16/f16

@@ -95,10 +95,12 @@ mod pjrt_stubs {
         _val_data: &dyn crate::data::Dataset,
         _factory: &crate::trainer::strategy::RankStrategyFactory,
         _role: &crate::comm::transport::tcp::TcpRole,
+        _kind: crate::comm::TransportKind,
     ) -> Result<Option<crate::trainer::RunReport>> {
         no_threaded()
     }
 
+    #[allow(clippy::too_many_arguments)]
     pub fn train_coordinator(
         _rt: &crate::runtime::ModelRuntime,
         _cfg: &crate::trainer::TrainConfig,
@@ -106,6 +108,8 @@ mod pjrt_stubs {
         _val_data: &dyn crate::data::Dataset,
         _factory: &crate::trainer::strategy::RankStrategyFactory,
         _listener: std::net::TcpListener,
+        _kind: crate::comm::TransportKind,
+        _shm_dir: Option<std::path::PathBuf>,
     ) -> Result<crate::trainer::RunReport> {
         no_threaded()
     }
@@ -125,7 +129,7 @@ mod threaded {
     use crate::comm::channels::{GroupComm, Payload, RankComms};
     use crate::comm::naive_mean;
     use crate::comm::transport::tcp::{TcpRole, TcpTransport, TcpTuning};
-    use crate::comm::transport::{ChannelTransport, Transport, Wiring};
+    use crate::comm::transport::{ChannelTransport, Transport, TransportKind, Wiring};
     use crate::data::shard::Shard;
     use crate::data::Dataset;
     use crate::optim::LrSchedule;
@@ -168,11 +172,13 @@ mod threaded {
         Ok(report.expect("the single-process transport hosts rank 0"))
     }
 
-    /// The TCP transport knobs a [`TrainConfig`] resolves to.
-    fn tcp_tuning(cfg: &TrainConfig) -> TcpTuning {
+    /// The multiprocess transport knobs a [`TrainConfig`] resolves to.
+    /// `kind` is the resolved link medium (`--transport tcp|shm|hybrid`).
+    fn tcp_tuning(cfg: &TrainConfig, kind: TransportKind) -> TcpTuning {
         TcpTuning::new(Duration::from_millis(cfg.comm_timeout_ms), cfg.global_wire)
             .with_placement(cfg.leader_placement)
             .with_chunk_elems(cfg.pipeline_chunk_elems)
+            .with_transport(kind)
     }
 
     /// Train this process's share of a multi-process launch, joining the
@@ -185,6 +191,7 @@ mod threaded {
         val_data: &dyn Dataset,
         factory: &RankStrategyFactory,
         role: &TcpRole,
+        kind: TransportKind,
     ) -> Result<Option<RunReport>> {
         let topo = cfg.topology();
         ensure!(
@@ -193,12 +200,16 @@ mod threaded {
             role.node,
             topo.nodes
         );
-        let mut transport = TcpTransport::from_role(topo, role, tcp_tuning(cfg))?;
+        let mut transport = TcpTransport::from_role(topo, role, tcp_tuning(cfg, kind))?;
         train_with_transport(rt, cfg, train_data, val_data, factory, &mut transport)
     }
 
     /// Coordinator entry for `daso launch`: the launcher binds the
     /// listener before spawning peers, then trains as node 0 itself.
+    /// `shm_dir` is the launcher-created segment directory for
+    /// shm-backed transports (the launcher keeps cleanup ownership;
+    /// `None` makes the coordinator create and own one).
+    #[allow(clippy::too_many_arguments)]
     pub fn train_coordinator(
         rt: &ModelRuntime,
         cfg: &TrainConfig,
@@ -206,8 +217,14 @@ mod threaded {
         val_data: &dyn Dataset,
         factory: &RankStrategyFactory,
         listener: TcpListener,
+        kind: TransportKind,
+        shm_dir: Option<std::path::PathBuf>,
     ) -> Result<RunReport> {
-        let mut transport = TcpTransport::coordinator(cfg.topology(), listener, tcp_tuning(cfg));
+        let mut transport = TcpTransport::coordinator(
+            cfg.topology(),
+            listener,
+            tcp_tuning(cfg, kind).with_shm_dir(shm_dir),
+        );
         let report = train_with_transport(rt, cfg, train_data, val_data, factory, &mut transport)?;
         Ok(report.expect("the coordinator hosts rank 0"))
     }
@@ -316,27 +333,31 @@ mod threaded {
         // cross-process aggregation over the control group (node order;
         // identity when the control group is solo): summed stat
         // counters + this process's transport-level wire bytes (kept
-        // per-node — the hot-spot metric) + cluster makespan, then the
-        // full parameter set. SUMMED_STATS ties the contribution layout
+        // per-node — the hot-spot metric — split by link class and by
+        // the shm medium) + cluster makespan, then the full parameter
+        // set. SUMMED_STATS/PER_NODE_STATS tie the contribution layout
         // to the reduce closure and the unpacking below.
         const SUMMED_STATS: usize = 3;
+        const PER_NODE_STATS: usize = 3;
         let stats = vec![
             comm.bytes_inter as f64,
             comm.bytes_intra as f64,
             comm.comm_wait_s,
-            wire_bytes.sent() as f64,
+            wire_bytes.sent_intra() as f64,
+            wire_bytes.sent_inter() as f64,
+            wire_bytes.sent_shm() as f64,
         ];
-        debug_assert_eq!(stats.len(), SUMMED_STATS + 1);
+        debug_assert_eq!(stats.len(), SUMMED_STATS + PER_NODE_STATS);
         let (stats_out, clocks) =
             control.exchange(Payload::F64(stats), local_max_clock, |bufs| {
                 let mut total = vec![0.0f64; SUMMED_STATS];
-                let mut per_node = Vec::with_capacity(bufs.len());
+                let mut per_node = Vec::with_capacity(bufs.len() * PER_NODE_STATS);
                 for b in bufs.iter() {
                     let vals = b.as_f64();
                     for (t, v) in total.iter_mut().zip(vals) {
                         *t += *v;
                     }
-                    per_node.push(vals[SUMMED_STATS]);
+                    per_node.extend_from_slice(&vals[SUMMED_STATS..]);
                 }
                 total.extend(per_node);
                 bufs[0] = Payload::F64(total);
@@ -366,7 +387,11 @@ mod threaded {
         comm.bytes_inter = totals[0] as u64;
         comm.bytes_intra = totals[1] as u64;
         comm.comm_wait_s = totals[2];
-        comm.wire_bytes_by_node = totals[SUMMED_STATS..].iter().map(|&v| v as u64).collect();
+        // per-node triples in node order: (intra-class, inter-class, shm)
+        let per_node: Vec<&[f64]> = totals[SUMMED_STATS..].chunks_exact(PER_NODE_STATS).collect();
+        comm.wire_bytes_by_node = per_node.iter().map(|t| (t[0] + t[1]) as u64).collect();
+        comm.wire_bytes_intra_by_node = per_node.iter().map(|t| t[0] as u64).collect();
+        comm.wire_bytes_shm_by_node = per_node.iter().map(|t| t[2] as u64).collect();
         let makespan = clocks.iter().fold(0.0f64, |a, &b| a.max(b));
         let all_params = params_out.into_f32();
         ensure!(

@@ -2,43 +2,84 @@
 //!
 //! The launcher process binds the coordinator listener *before* spawning
 //! anything, so the advertised `DASO_COORD_ADDR` can never race a peer's
-//! connect. It then re-executes its own binary once per peer node with
-//! the training flags forwarded (`daso train --executor multiprocess
-//! ...`) and the role injected through the environment
-//! (`DASO_COORD_ADDR`, `DASO_NODE_ID`), and finally trains as node 0
-//! itself through the already-bound listener. Peers print no report;
-//! the coordinator assembles the cluster-wide one over the control
-//! group.
+//! connect. For shm-backed transports it also creates the shared-memory
+//! segment directory up front — and keeps cleanup ownership, so the
+//! segments are reaped on every exit path (success, coordinator error,
+//! peer failure) and nothing leaks under `/dev/shm`. It then re-executes
+//! its own binary once per peer node with the training flags forwarded
+//! (`daso train --executor multiprocess ...`) and the role injected
+//! through the environment (`DASO_COORD_ADDR`, `DASO_NODE_ID`), and
+//! finally trains as node 0 itself through the already-bound listener.
+//! Peers print no report; the coordinator assembles the cluster-wide one
+//! over the control group.
+//!
+//! A **watchdog thread** ([`spawn_watchdog`]) polls the peer processes
+//! while the launch comes up: a peer that dies before the handshake
+//! (bad flags, missing artifacts, a crash in its own setup) would
+//! otherwise leave the coordinator waiting out the full
+//! `comm_timeout_ms`. The watchdog reaps the dead child immediately and
+//! delivers an `ABORT` frame to the rendezvous listener, so the
+//! coordinator fails fast with the dead node named — and the launcher's
+//! teardown (kill remaining peers, drop the segment dir) runs right
+//! away instead of after the timeout.
 
-use std::net::{SocketAddr, TcpListener};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::comm::transport::shm::{default_ring_bytes, SegmentDir};
 use crate::comm::transport::tcp::{ENV_COORD_ADDR, ENV_NODE_ID};
+use crate::comm::transport::wire::{write_frame, Frame};
+use crate::comm::{TransportKind, Wire};
 
-/// A bound coordinator listener plus the topology of the launch.
+/// A bound coordinator listener plus the topology of the launch — and,
+/// for shm-backed transports, the owned segment directory.
 pub struct Launcher {
     pub nodes: usize,
     pub workers_per_node: usize,
     listener: TcpListener,
     addr: SocketAddr,
+    shm_dir: Option<SegmentDir>,
 }
 
 impl Launcher {
-    /// Bind the coordinator address (use port 0 to let the OS pick).
-    pub fn bind(bind: &str, nodes: usize, workers_per_node: usize) -> Result<Launcher> {
+    /// Bind the coordinator address (use port 0 to let the OS pick) and,
+    /// when `transport` rides shared memory, create the launch's segment
+    /// directory — before anything is spawned, so peers can never race
+    /// the create.
+    pub fn bind(
+        bind: &str,
+        nodes: usize,
+        workers_per_node: usize,
+        transport: TransportKind,
+    ) -> Result<Launcher> {
         ensure!(nodes >= 1, "--nodes must be at least 1");
         ensure!(workers_per_node >= 1, "--workers-per-node must be at least 1");
         let listener = TcpListener::bind(bind)
             .with_context(|| format!("binding launch coordinator on {bind}"))?;
         let addr = listener.local_addr().context("resolving bound address")?;
-        Ok(Launcher { nodes, workers_per_node, listener, addr })
+        let shm_dir = if transport.uses_shm() {
+            Some(SegmentDir::create(nodes, default_ring_bytes())?)
+        } else {
+            None
+        };
+        Ok(Launcher { nodes, workers_per_node, listener, addr, shm_dir })
     }
 
     /// The address peers must dial (resolved, so port 0 works).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The launcher-owned shm segment directory, if the transport uses
+    /// one.
+    pub fn shm_dir(&self) -> Option<&std::path::Path> {
+        self.shm_dir.as_ref().map(|d| d.path())
     }
 
     /// Spawn the peer processes (node ids `1..nodes`) by re-executing
@@ -70,10 +111,59 @@ impl Launcher {
         Ok(children)
     }
 
-    /// Hand the pre-bound listener to the coordinator transport.
-    pub fn into_listener(self) -> TcpListener {
-        self.listener
+    /// Hand the pre-bound listener (and the segment-dir guard, which the
+    /// caller must keep alive for the whole run) to the coordinator.
+    pub fn into_parts(self) -> (TcpListener, Option<SegmentDir>) {
+        (self.listener, self.shm_dir)
     }
+}
+
+/// Watch the peer processes while the launch comes up: a child that
+/// exits with a failure status is reaped immediately and reported to
+/// the coordinator's rendezvous listener as an `ABORT` frame, so a
+/// pre-handshake death fails the launch with a named, bounded error
+/// instead of waiting out `comm_timeout_ms`. Set `done` (and join) once
+/// the run finished to stop the polling.
+pub fn spawn_watchdog(
+    children: Arc<Mutex<Vec<(usize, Child)>>>,
+    coord: SocketAddr,
+    done: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("daso-launch-watchdog".into())
+        .spawn(move || {
+            while !done.load(Ordering::Acquire) {
+                let mut failed: Option<(usize, String)> = None;
+                {
+                    let mut kids = children.lock().unwrap();
+                    for (node, child) in kids.iter_mut() {
+                        if let Ok(Some(status)) = child.try_wait() {
+                            if !status.success() {
+                                failed = Some((*node, status.to_string()));
+                                break;
+                            }
+                        }
+                    }
+                }
+                if let Some((node, status)) = failed {
+                    let reason = format!(
+                        "peer process for node {node} exited with {status} before the \
+                         launch came up"
+                    );
+                    eprintln!("launch watchdog: {reason}");
+                    // best effort: the listener may already be done
+                    // accepting (post-handshake), in which case the
+                    // regular EOF path reports the death instead
+                    if let Ok(mut s) = TcpStream::connect_timeout(&coord, Duration::from_secs(2))
+                    {
+                        let _ = write_frame(&mut s, &Frame::Abort { reason }, Wire::F32);
+                    }
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        })
+        .expect("spawning the launch watchdog thread")
 }
 
 /// Reap peer processes; a non-zero exit from any of them fails the
@@ -108,15 +198,73 @@ mod tests {
 
     #[test]
     fn bind_resolves_ephemeral_port() {
-        let l = Launcher::bind("127.0.0.1:0", 2, 2).unwrap();
+        let l = Launcher::bind("127.0.0.1:0", 2, 2, TransportKind::Tcp).unwrap();
         assert_ne!(l.addr().port(), 0);
         assert_eq!(l.nodes, 2);
         assert_eq!(l.workers_per_node, 2);
+        assert!(l.shm_dir().is_none(), "tcp launches create no segments");
     }
 
     #[test]
     fn bind_rejects_degenerate_shapes() {
-        assert!(Launcher::bind("127.0.0.1:0", 0, 1).is_err());
-        assert!(Launcher::bind("127.0.0.1:0", 1, 0).is_err());
+        assert!(Launcher::bind("127.0.0.1:0", 0, 1, TransportKind::Tcp).is_err());
+        assert!(Launcher::bind("127.0.0.1:0", 1, 0, TransportKind::Tcp).is_err());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn shm_launcher_owns_segment_cleanup_on_every_path() {
+        let l = Launcher::bind("127.0.0.1:0", 3, 2, TransportKind::Hybrid).unwrap();
+        let dir = l.shm_dir().expect("hybrid launches create segments").to_path_buf();
+        assert!(dir.is_dir());
+        assert!(dir.join("ring-0-to-1").exists(), "rings exist before any peer spawns");
+        assert!(dir.join("ring-2-to-1").exists());
+        // dropping the launcher without ever spawning (a failure path)
+        // must reap the segments
+        drop(l);
+        assert!(!dir.exists(), "launcher drop must remove the segment dir");
+
+        // the into_parts flow hands the guard to the caller: cleanup
+        // follows the guard, not the launcher
+        let l = Launcher::bind("127.0.0.1:0", 2, 1, TransportKind::Shm).unwrap();
+        let (listener, guard) = l.into_parts();
+        let dir = guard.as_ref().unwrap().path().to_path_buf();
+        assert!(dir.is_dir());
+        drop(listener);
+        drop(guard);
+        assert!(!dir.exists());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn watchdog_reports_dead_peer_before_the_comm_timeout() {
+        // a fake "peer" that exits non-zero immediately
+        let child = Command::new("false")
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn();
+        let Ok(child) = child else {
+            return; // sandboxed environments may forbid spawning
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let children = Arc::new(Mutex::new(vec![(1usize, child)]));
+        let done = Arc::new(AtomicBool::new(false));
+        let handle = spawn_watchdog(children.clone(), addr, done.clone());
+        // the watchdog must dial in and deliver the ABORT within its
+        // polling cadence — read it straight off the listener
+        listener.set_nonblocking(false).unwrap();
+        let (mut conn, _) = listener.accept().expect("watchdog dials the coordinator");
+        match crate::comm::transport::wire::read_frame(&mut conn).unwrap() {
+            Frame::Abort { reason } => {
+                assert!(reason.contains("node 1"), "{reason}");
+                assert!(reason.contains("exited"), "{reason}");
+            }
+            other => panic!("expected ABORT, got {}", other.name()),
+        }
+        done.store(true, Ordering::Release);
+        handle.join().unwrap();
+        kill_peers(&mut children.lock().unwrap());
     }
 }

@@ -735,11 +735,15 @@ pub struct RankComms {
 /// payloads of every communicator that crosses the node boundary (the
 /// world group and the global groups + mailboxes); node-local
 /// communicators always ride uncompressed f32. `placement` picks which
-/// member hosts each global group's leader — the same seam the TCP
-/// transport places its leaders by, so both backends share the
-/// placement logic (for an in-process fabric the choice is
+/// member hosts each global group's leader — the same seam the
+/// multiprocess transport places its leaders by, so both backends share
+/// the placement logic (for an in-process fabric the choice is
 /// load-neutral, and the reduction is member-ordered either way, so
-/// results are identical).
+/// results are identical). The in-process fabric has no physical links,
+/// so the `topology::LinkClass` routing the multiprocess transports
+/// apply per process pair (node-local links on shm rings under
+/// `--transport hybrid`) has no analogue here — member hops are mpsc
+/// sends either way.
 pub fn build_comms(
     topo: &Topology,
     timeout: Duration,
@@ -1037,17 +1041,15 @@ mod tests {
                 .unwrap();
             out.into_f32()[0]
         });
-        // serial-mirror oracle: quantize each contribution, mean, then
-        // quantize the result
-        let quantized: Vec<Vec<f32>> = (0..n)
-            .map(|i| {
-                let mut v = vec![raw * (i + 1) as f32];
-                Wire::Bf16.quantize(&mut v);
-                v
-            })
-            .collect();
-        let mut expect = naive_mean(&quantized.iter().collect::<Vec<_>>());
-        Wire::Bf16.quantize(&mut expect);
+        // serial-mirror oracle — the shared wire::roundtrip helper the
+        // serial executor uses, so the communicator's two-leg cast and
+        // the serial mirror can only drift together (never apart)
+        let inputs: Vec<Vec<f32>> = (0..n).map(|i| vec![raw * (i + 1) as f32]).collect();
+        let expect = crate::comm::transport::wire::roundtrip_combine(
+            Wire::Bf16,
+            &inputs.iter().collect::<Vec<_>>(),
+            naive_mean,
+        );
         for out in outs {
             assert_eq!(out.to_bits(), expect[0].to_bits());
         }

@@ -15,8 +15,9 @@ pub mod transport;
 pub use channels::{build_comms, AsyncGroup, GroupComm, Payload, RankComms};
 pub use collectives::{broadcast, naive_mean, ring_allreduce_mean, sum_buffers, Wire};
 pub use link::{Fabric, Link};
-pub use topology::{GroupRotation, LeaderPlacement, Rank, Topology};
+pub use topology::{GroupRotation, LeaderPlacement, LinkClass, Rank, Topology};
 pub use transport::{
     default_comm_timeout, default_comm_timeout_ms, default_global_wire,
-    default_pipeline_chunk_elems, ChannelTransport, Transport, TransportKind, WireBytes, Wiring,
+    default_pipeline_chunk_elems, default_transport, ChannelTransport, Transport, TransportKind,
+    WireBytes, Wiring,
 };

@@ -106,6 +106,31 @@ impl Topology {
     }
 }
 
+/// Physical class of the link between two node processes — the routing
+/// seam the hybrid transport (and the per-class wire-byte accounting)
+/// hangs off. Spanning communicators don't pick a medium themselves:
+/// each member-to-leader hop rides whatever link connects the two
+/// processes, and the link's class decides that medium (node-local
+/// links can ride shared-memory rings, global links ride sockets).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Both processes share a physical host (the paper's fast
+    /// node-local tier): eligible for the shm ring transport.
+    NodeLocal,
+    /// The processes sit on different hosts (the slow global tier):
+    /// always a socket link.
+    Global,
+}
+
+impl LinkClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkClass::NodeLocal => "node-local",
+            LinkClass::Global => "global",
+        }
+    }
+}
+
 /// Where spanning-group leaders live in a multi-process launch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LeaderPlacement {

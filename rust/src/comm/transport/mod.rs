@@ -10,10 +10,14 @@
 //!   This is what `--executor threaded` uses.
 //! - [`tcp::TcpTransport`] — each process hosts one node's workers on
 //!   threads; the global tier crosses process boundaries as
-//!   length-prefixed binary frames over TCP ([`wire`]) on a full peer
-//!   mesh, with spanning-group leaders distributed by
-//!   [`LeaderPlacement`]. This is what `--executor multiprocess` and
-//!   `daso launch` use.
+//!   length-prefixed binary frames ([`wire`]) on a full peer mesh, with
+//!   spanning-group leaders distributed by [`LeaderPlacement`]. This is
+//!   what `--executor multiprocess` and `daso launch` use. The mesh's
+//!   links come in three flavors (`--transport tcp|shm|hybrid`): plain
+//!   sockets, shared-memory rings ([`shm`]) for every link, or the
+//!   hybrid split that rides node-local-class links
+//!   ([`LinkClass::NodeLocal`], same-host peers) on rings while the TCP
+//!   mesh keeps the control group and any cross-host links.
 //!
 //! The leader-side rendezvous logic is shared (`comm::channels`) and
 //! both backends place leaders through the same `Topology::leader_node`
@@ -21,6 +25,7 @@
 //! serial executor for blocking strategies — is independent of the
 //! transport and the placement.
 
+pub mod shm;
 pub mod tcp;
 pub mod wire;
 
@@ -32,7 +37,7 @@ use anyhow::{bail, Result};
 
 use super::channels::{build_comms, GroupComm, RankComms};
 use super::collectives::Wire;
-use super::topology::{LeaderPlacement, Topology};
+use super::topology::{LeaderPlacement, LinkClass, Topology};
 
 /// Default bound on rendezvous/mailbox waits when the config does not
 /// set one: `DASO_COMM_TIMEOUT_MS` in the environment, else 60 s.
@@ -90,22 +95,50 @@ pub fn default_pipeline_chunk_elems() -> usize {
 /// overrides it.
 pub const DEFAULT_PIPELINE_CHUNK_ELEMS: usize = 1 << 16;
 
-/// Bytes this process actually wrote to inter-node links (frame bytes
-/// including headers and chunk framing) — the transport-level counter
-/// behind the per-node hot-spot metric in run reports, as opposed to the
-/// strategies' modeled per-rank byte counters.
+/// Bytes this process actually wrote to its peer links (frame bytes
+/// including headers and chunk framing) — the transport-level counters
+/// behind the per-node hot-spot metric in run reports, as opposed to
+/// the strategies' modeled per-rank byte counters. Split two ways:
+/// by the link's physical class (node-local vs global — same-host vs
+/// cross-host) and by whether the bytes rode a shared-memory ring
+/// instead of a socket, so a hybrid run shows the node-local tier
+/// leaving the TCP counters.
 #[derive(Debug, Default)]
 pub struct WireBytes {
-    sent: AtomicU64,
+    intra: AtomicU64,
+    inter: AtomicU64,
+    shm: AtomicU64,
 }
 
 impl WireBytes {
-    pub fn add_sent(&self, bytes: u64) {
-        self.sent.fetch_add(bytes, Ordering::Relaxed);
+    pub fn add_sent(&self, class: LinkClass, via_shm: bool, bytes: u64) {
+        match class {
+            LinkClass::NodeLocal => self.intra.fetch_add(bytes, Ordering::Relaxed),
+            LinkClass::Global => self.inter.fetch_add(bytes, Ordering::Relaxed),
+        };
+        if via_shm {
+            self.shm.fetch_add(bytes, Ordering::Relaxed);
+        }
     }
 
+    /// Total bytes written to peer links (either class, either medium).
     pub fn sent(&self) -> u64 {
-        self.sent.load(Ordering::Relaxed)
+        self.sent_intra() + self.sent_inter()
+    }
+
+    /// Bytes written on node-local-class links (same-host peers).
+    pub fn sent_intra(&self) -> u64 {
+        self.intra.load(Ordering::Relaxed)
+    }
+
+    /// Bytes written on global-class links (cross-host peers).
+    pub fn sent_inter(&self) -> u64 {
+        self.inter.load(Ordering::Relaxed)
+    }
+
+    /// Bytes physically carried by shared-memory rings (0 on tcp runs).
+    pub fn sent_shm(&self) -> u64 {
+        self.shm.load(Ordering::Relaxed)
     }
 }
 
@@ -116,6 +149,13 @@ pub enum TransportKind {
     Channels,
     /// Length-prefixed binary frames over TCP sockets (multi-process).
     Tcp,
+    /// Every peer link is a pair of shared-memory rings; sockets only
+    /// broker the rendezvous (multi-process, single host).
+    Shm,
+    /// Node-local-class links carry the collective frames on shm rings
+    /// while the TCP peer mesh stays up for the control group and any
+    /// cross-host links (multi-process).
+    Hybrid,
 }
 
 impl TransportKind {
@@ -123,7 +163,11 @@ impl TransportKind {
         Ok(match s {
             "channels" | "channel" | "inproc" => TransportKind::Channels,
             "tcp" | "socket" => TransportKind::Tcp,
-            other => bail!("unknown transport {other:?} (valid values: channels, tcp)"),
+            "shm" | "shared-memory" | "shared_memory" => TransportKind::Shm,
+            "hybrid" | "shm+tcp" => TransportKind::Hybrid,
+            other => {
+                bail!("unknown transport {other:?} (valid values: channels, tcp, shm, hybrid)")
+            }
         })
     }
 
@@ -131,7 +175,31 @@ impl TransportKind {
         match self {
             TransportKind::Channels => "channels",
             TransportKind::Tcp => "tcp",
+            TransportKind::Shm => "shm",
+            TransportKind::Hybrid => "hybrid",
         }
+    }
+
+    /// Does this transport attach shared-memory ring segments?
+    pub fn uses_shm(&self) -> bool {
+        matches!(self, TransportKind::Shm | TransportKind::Hybrid)
+    }
+}
+
+/// Default transport for multi-process launches when neither the config
+/// nor the CLI picks one: `DASO_TRANSPORT` in the environment
+/// (`tcp|shm|hybrid`), else plain TCP. A value that does not parse is
+/// warned about and ignored, like the other environment defaults.
+pub fn default_transport() -> TransportKind {
+    match std::env::var("DASO_TRANSPORT") {
+        Ok(v) => match TransportKind::parse(&v) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("warning: ignoring DASO_TRANSPORT: {e:#}");
+                TransportKind::Tcp
+            }
+        },
+        Err(_) => TransportKind::Tcp,
     }
 }
 
@@ -219,19 +287,36 @@ mod tests {
 
     #[test]
     fn transport_kind_parses_and_roundtrips() {
-        for k in [TransportKind::Channels, TransportKind::Tcp] {
+        for k in
+            [TransportKind::Channels, TransportKind::Tcp, TransportKind::Shm, TransportKind::Hybrid]
+        {
             assert_eq!(TransportKind::parse(k.name()).unwrap(), k);
         }
         assert_eq!(TransportKind::parse("inproc").unwrap(), TransportKind::Channels);
         assert_eq!(TransportKind::parse("socket").unwrap(), TransportKind::Tcp);
+        assert_eq!(TransportKind::parse("shared-memory").unwrap(), TransportKind::Shm);
+        assert_eq!(TransportKind::parse("shm+tcp").unwrap(), TransportKind::Hybrid);
+        assert!(!TransportKind::Tcp.uses_shm());
+        assert!(!TransportKind::Channels.uses_shm());
+        assert!(TransportKind::Shm.uses_shm());
+        assert!(TransportKind::Hybrid.uses_shm());
     }
 
     #[test]
     fn transport_parse_error_enumerates_valid_values() {
         let err = TransportKind::parse("rdma").unwrap_err().to_string();
-        assert!(err.contains("channels"), "{err}");
-        assert!(err.contains("tcp"), "{err}");
-        assert!(err.contains("rdma"), "{err}");
+        for expect in ["channels", "tcp", "shm", "hybrid", "rdma"] {
+            assert!(err.contains(expect), "error should mention {expect}: {err}");
+        }
+    }
+
+    #[test]
+    fn default_transport_is_tcp_without_env() {
+        // only assert when the env does not override (tests run
+        // multi-threaded in one process: never set env here)
+        if std::env::var("DASO_TRANSPORT").is_err() {
+            assert_eq!(default_transport(), TransportKind::Tcp);
+        }
     }
 
     #[test]
@@ -264,9 +349,13 @@ mod tests {
             assert_eq!(default_pipeline_chunk_elems(), DEFAULT_PIPELINE_CHUNK_ELEMS);
         }
         let wb = WireBytes::default();
-        wb.add_sent(5);
-        wb.add_sent(7);
-        assert_eq!(wb.sent(), 12);
+        wb.add_sent(LinkClass::NodeLocal, true, 5);
+        wb.add_sent(LinkClass::Global, false, 7);
+        wb.add_sent(LinkClass::NodeLocal, false, 3);
+        assert_eq!(wb.sent(), 15);
+        assert_eq!(wb.sent_intra(), 8);
+        assert_eq!(wb.sent_inter(), 7);
+        assert_eq!(wb.sent_shm(), 5, "only ring-carried bytes count as shm");
     }
 
     #[test]

@@ -1,0 +1,756 @@
+//! Shared-memory node-local links: memory-mapped single-producer /
+//! single-consumer byte rings, one pair of rings per process pair.
+//!
+//! The multiprocess transport's node-local tier should not pay socket
+//! and kernel-copy overhead for processes that share a host. This
+//! module provides the physical link: a file in `/dev/shm` (tmpfs) is
+//! mapped by both processes, and a lock-free SPSC ring inside it
+//! carries the *same length-prefixed [`super::wire`] frames* the TCP
+//! links carry — [`RingProducer`] implements `io::Write` and
+//! [`RingConsumer`] implements `io::Read`, so the frame encoding,
+//! chunked pipelining and bf16/f16 wire casts work unchanged on shm
+//! links. One segment per *directed* pair: the link between nodes `i`
+//! and `j` is the ring `i -> j` plus the ring `j -> i`.
+//!
+//! Ring layout (all offsets 8-byte aligned; head and tail live on
+//! separate cache lines so the producer and consumer never false-share):
+//!
+//! ```text
+//!   [magic u64][capacity u64] .. [head u64][producer_closed u64]
+//!   .. [tail u64][consumer_closed u64] .. [data; capacity]
+//! ```
+//!
+//! `head`/`tail` are monotone byte counters (position = counter %
+//! capacity): the producer publishes bytes with a release store of
+//! `head`, the consumer acquires `head` before reading and publishes
+//! consumption with a release store of `tail` — the classic SPSC
+//! contract, valid across processes because both map the same pages.
+//! A dropped producer sets `producer_closed`, which the consumer
+//! surfaces as EOF once the ring drains (mirroring TCP's
+//! close-delivers-then-FIN semantics); a dropped consumer surfaces as
+//! `BrokenPipe` on the producer. Every blocking wait is bounded by an
+//! optional timeout, so a wedged or absent peer is an error, never a
+//! hang. A process killed without running drops cannot set its closed
+//! flag (there is no kernel to deliver an EOF, unlike a torn TCP
+//! socket) — the producer therefore advertises its pid in the header
+//! and an unbounded consumer probes its liveness through procfs after
+//! sustained idleness, so even a timeout-less demux read terminates
+//! when the peer is SIGKILLed; rendezvous-layer waits stay bounded by
+//! the communicator timeouts regardless.
+//!
+//! Segment files are created **by the launcher** (or by the
+//! coordinator transport when there is no launcher) *before* any path
+//! is advertised, so attach can never race create. [`SegmentDir`] owns
+//! cleanup: the creating process removes the whole directory on drop —
+//! including every failure path — so no files leak under `/dev/shm`.
+//! Unlinking while peers still hold mappings is safe on unix.
+
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+#[cfg(unix)]
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Identifies a daso shm ring segment (native-endian on both sides of
+/// the link — the two mappers share a host by construction).
+#[cfg(unix)]
+const MAGIC: u64 = 0x4441_534f_5348_4d31; // "DASOSHM1"
+
+#[cfg(unix)]
+const HDR_MAGIC: usize = 0;
+#[cfg(unix)]
+const HDR_CAPACITY: usize = 8;
+/// Producer cache line: write position + closed flag + producer pid.
+#[cfg(unix)]
+const HDR_HEAD: usize = 64;
+#[cfg(unix)]
+const HDR_PROD_CLOSED: usize = 72;
+#[cfg(unix)]
+const HDR_PROD_PID: usize = 80;
+/// Consumer cache line: read position + closed flag.
+#[cfg(unix)]
+const HDR_TAIL: usize = 128;
+#[cfg(unix)]
+const HDR_CONS_CLOSED: usize = 136;
+/// Data starts on its own cache line after the header fields.
+pub const HEADER_BYTES: usize = 192;
+
+/// Built-in per-ring data capacity when the environment does not
+/// override it (1 MiB: large frames stream through in pieces, and the
+/// chunked pipeline overlaps the pieces anyway).
+pub const DEFAULT_RING_BYTES: usize = 1 << 20;
+
+/// Per-ring data capacity: `DASO_SHM_RING_BYTES` in the environment,
+/// else [`DEFAULT_RING_BYTES`]. A value that does not parse is warned
+/// about and ignored; tiny values are clamped to one cache line.
+pub fn default_ring_bytes() -> usize {
+    match std::env::var("DASO_SHM_RING_BYTES") {
+        Ok(v) => match v.parse::<usize>() {
+            Ok(n) => n.max(64),
+            Err(_) => {
+                eprintln!("warning: ignoring DASO_SHM_RING_BYTES={v:?} (not an integer)");
+                DEFAULT_RING_BYTES
+            }
+        },
+        Err(_) => DEFAULT_RING_BYTES,
+    }
+}
+
+/// Where segment directories live: tmpfs when the host has it (real
+/// shared memory, zero disk traffic), the system temp dir otherwise.
+pub fn shm_base_dir() -> PathBuf {
+    let dev_shm = Path::new("/dev/shm");
+    if dev_shm.is_dir() {
+        dev_shm.to_path_buf()
+    } else {
+        std::env::temp_dir()
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const PROT_WRITE: c_int = 2;
+    pub const MAP_SHARED: c_int = 1;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            length: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, length: usize) -> c_int;
+    }
+
+    pub fn map_failed(p: *mut c_void) -> bool {
+        p as usize == usize::MAX || p.is_null()
+    }
+}
+
+/// One mapped ring segment. Both halves of a link hold their own
+/// `Segment` (their own mapping of the shared file).
+#[cfg(unix)]
+pub struct Segment {
+    ptr: *mut u8,
+    len: usize,
+    capacity: usize,
+}
+
+// The raw pointer targets a MAP_SHARED region; all cross-thread (and
+// cross-process) access goes through the atomics below with the SPSC
+// publication protocol.
+#[cfg(unix)]
+unsafe impl Send for Segment {}
+#[cfg(unix)]
+unsafe impl Sync for Segment {}
+
+#[cfg(unix)]
+impl Segment {
+    /// Create (and header-initialize) a ring file. Fails if the file
+    /// already exists — segment names are launch-unique, so an existing
+    /// file means a collision or a leak, not a ring of ours.
+    pub fn create_file(path: &Path, capacity: usize) -> Result<()> {
+        ensure!(capacity >= 64, "ring capacity {capacity} is too small to carry a frame prefix");
+        let mut f = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(path)
+            .with_context(|| format!("creating shm ring {path:?}"))?;
+        f.set_len((HEADER_BYTES + capacity) as u64)
+            .with_context(|| format!("sizing shm ring {path:?}"))?;
+        // magic + capacity up front; head/tail/closed start zeroed by
+        // set_len. Native endianness: both mappers share the host.
+        let mut header = [0u8; 16];
+        header[..8].copy_from_slice(&MAGIC.to_ne_bytes());
+        header[8..].copy_from_slice(&(capacity as u64).to_ne_bytes());
+        f.write_all(&header).with_context(|| format!("initializing shm ring {path:?}"))?;
+        Ok(())
+    }
+
+    /// Map an existing ring file created by [`Segment::create_file`].
+    pub fn open(path: &Path) -> Result<Segment> {
+        use std::os::fd::AsRawFd;
+        let f = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening shm ring {path:?}"))?;
+        let len = f.metadata().with_context(|| format!("stat {path:?}"))?.len() as usize;
+        ensure!(len > HEADER_BYTES, "shm ring {path:?} is truncated ({len} bytes)");
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if sys::map_failed(ptr.cast()) {
+            bail!("mmap of shm ring {path:?} failed: {}", io::Error::last_os_error());
+        }
+        // the segment drops (and unmaps) if any validation below fails
+        let mut seg = Segment { ptr: ptr.cast::<u8>(), len, capacity: 0 };
+        ensure!(
+            seg.atomic(HDR_MAGIC).load(Ordering::Relaxed) == MAGIC,
+            "{path:?} is not a daso shm ring (bad magic)"
+        );
+        let capacity = seg.atomic(HDR_CAPACITY).load(Ordering::Relaxed) as usize;
+        ensure!(
+            HEADER_BYTES + capacity == len,
+            "shm ring {path:?} header capacity {capacity} disagrees with file size {len}"
+        );
+        seg.capacity = capacity;
+        Ok(seg)
+    }
+
+    fn atomic(&self, off: usize) -> &AtomicU64 {
+        debug_assert!(off + 8 <= self.len && off % 8 == 0);
+        // mmap returns page-aligned memory and every header offset is
+        // 8-byte aligned, so the cast is sound
+        unsafe { &*(self.ptr.add(off) as *const AtomicU64) }
+    }
+
+    fn data(&self) -> *mut u8 {
+        unsafe { self.ptr.add(HEADER_BYTES) }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Segment {
+    fn drop(&mut self) {
+        unsafe {
+            sys::munmap(self.ptr.cast(), self.len);
+        }
+    }
+}
+
+/// Bounded wait helper: spin briefly, then sleep in small slices until
+/// the deadline (None = wait forever, the demux readers' mode).
+#[cfg(unix)]
+fn backoff(spins: &mut u32, deadline: Option<Instant>, what: &str) -> io::Result<()> {
+    if let Some(d) = deadline {
+        if Instant::now() >= d {
+            return Err(io::Error::new(
+                io::ErrorKind::TimedOut,
+                format!("shm ring {what} timed out (peer wedged or gone?)"),
+            ));
+        }
+    }
+    if *spins < 512 {
+        *spins += 1;
+        std::hint::spin_loop();
+    } else {
+        // escalate while idle: short sleeps keep latency low during
+        // active collective phases (each read/write call starts a fresh
+        // spin phase), the 1 ms cap keeps a long-idle demux thread
+        // near-free instead of waking 20k times a second for the whole
+        // run
+        let us = if *spins < 4096 { 50 } else { 1000 };
+        *spins = spins.wrapping_add(1);
+        std::thread::sleep(Duration::from_micros(us));
+    }
+    Ok(())
+}
+
+/// Is the process with this pid still alive? Checked through procfs, so
+/// it only yields a verdict where `/proc` exists (linux — the primary
+/// shm host); elsewhere we conservatively assume alive and fall back to
+/// the communicator-layer timeouts.
+#[cfg(unix)]
+fn proc_alive(pid: u64) -> bool {
+    if !Path::new("/proc/self").exists() {
+        return true;
+    }
+    Path::new(&format!("/proc/{pid}")).exists()
+}
+
+/// Write half of one directed ring. Exactly one producer per ring.
+#[cfg(unix)]
+pub struct RingProducer {
+    seg: Segment,
+    timeout: Option<Duration>,
+}
+
+#[cfg(unix)]
+impl RingProducer {
+    pub fn new(seg: Segment, timeout: Option<Duration>) -> RingProducer {
+        // advertise the producer's pid so a consumer can tell a killed
+        // peer (no Drop, no closed flag) from a merely idle one
+        seg.atomic(HDR_PROD_PID).store(std::process::id() as u64, Ordering::Release);
+        RingProducer { seg, timeout }
+    }
+
+    pub fn open(path: &Path, timeout: Option<Duration>) -> Result<RingProducer> {
+        Ok(RingProducer::new(Segment::open(path)?, timeout))
+    }
+
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) {
+        self.timeout = timeout;
+    }
+}
+
+#[cfg(unix)]
+impl Write for RingProducer {
+    /// Copy as much of `buf` as currently fits and publish it; blocks
+    /// (bounded) only while the ring is completely full. `write_all`
+    /// therefore streams frames of any size through a fixed ring.
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let cap = self.seg.capacity;
+        let head = self.seg.atomic(HDR_HEAD).load(Ordering::Relaxed);
+        let deadline = self.timeout.map(|t| Instant::now() + t);
+        let mut spins = 0u32;
+        loop {
+            if self.seg.atomic(HDR_CONS_CLOSED).load(Ordering::Acquire) != 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::BrokenPipe,
+                    "shm ring consumer detached (peer closed)",
+                ));
+            }
+            let tail = self.seg.atomic(HDR_TAIL).load(Ordering::Acquire);
+            let free = cap - (head - tail) as usize;
+            if free > 0 {
+                let n = free.min(buf.len());
+                // modulo in u64: truncating the monotone counter first
+                // would mis-index non-power-of-two rings past 4 GiB on
+                // 32-bit hosts
+                let at = (head % cap as u64) as usize;
+                let first = n.min(cap - at);
+                unsafe {
+                    std::ptr::copy_nonoverlapping(buf.as_ptr(), self.seg.data().add(at), first);
+                    std::ptr::copy_nonoverlapping(
+                        buf.as_ptr().add(first),
+                        self.seg.data(),
+                        n - first,
+                    );
+                }
+                self.seg.atomic(HDR_HEAD).store(head + n as u64, Ordering::Release);
+                return Ok(n);
+            }
+            backoff(&mut spins, deadline, "write")?;
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(unix)]
+impl Drop for RingProducer {
+    fn drop(&mut self) {
+        // clean-shutdown signal: the consumer drains, then sees EOF
+        self.seg.atomic(HDR_PROD_CLOSED).store(1, Ordering::Release);
+    }
+}
+
+/// Read half of one directed ring. Exactly one consumer per ring.
+#[cfg(unix)]
+pub struct RingConsumer {
+    seg: Segment,
+    timeout: Option<Duration>,
+}
+
+#[cfg(unix)]
+impl RingConsumer {
+    pub fn new(seg: Segment, timeout: Option<Duration>) -> RingConsumer {
+        RingConsumer { seg, timeout }
+    }
+
+    pub fn open(path: &Path, timeout: Option<Duration>) -> Result<RingConsumer> {
+        Ok(RingConsumer::new(Segment::open(path)?, timeout))
+    }
+
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) {
+        self.timeout = timeout;
+    }
+}
+
+#[cfg(unix)]
+impl Read for RingConsumer {
+    /// Return whatever is available (blocking, bounded, while empty);
+    /// `Ok(0)` = EOF, only after the producer closed *and* the ring
+    /// drained — no published byte is ever lost.
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let cap = self.seg.capacity;
+        let tail = self.seg.atomic(HDR_TAIL).load(Ordering::Relaxed);
+        let deadline = self.timeout.map(|t| Instant::now() + t);
+        let mut spins = 0u32;
+        loop {
+            let head = self.seg.atomic(HDR_HEAD).load(Ordering::Acquire);
+            let avail = (head - tail) as usize;
+            if avail > 0 {
+                let n = avail.min(buf.len());
+                // modulo in u64, mirroring the producer
+                let at = (tail % cap as u64) as usize;
+                let first = n.min(cap - at);
+                unsafe {
+                    std::ptr::copy_nonoverlapping(self.seg.data().add(at), buf.as_mut_ptr(), first);
+                    std::ptr::copy_nonoverlapping(
+                        self.seg.data(),
+                        buf.as_mut_ptr().add(first),
+                        n - first,
+                    );
+                }
+                self.seg.atomic(HDR_TAIL).store(tail + n as u64, Ordering::Release);
+                return Ok(n);
+            }
+            if self.seg.atomic(HDR_PROD_CLOSED).load(Ordering::Acquire) != 0 {
+                // the closed flag is stored after the producer's final
+                // head publish; acquiring it makes that publish visible,
+                // so re-read head once — a frame racing the close must
+                // be delivered, not dropped
+                let head = self.seg.atomic(HDR_HEAD).load(Ordering::Acquire);
+                if head == tail {
+                    return Ok(0);
+                }
+                continue;
+            }
+            // a peer killed without running drops (SIGKILL, OOM, crash)
+            // never sets its closed flag — unlike a TCP socket there is
+            // no kernel to deliver EOF. Probe the producer's liveness
+            // (roughly once a second, only after sustained idleness) so
+            // an unbounded demux read still terminates.
+            if spins >= 4096 && spins % 1024 == 0 {
+                let pid = self.seg.atomic(HDR_PROD_PID).load(Ordering::Acquire);
+                if pid != 0 && !proc_alive(pid) {
+                    return Err(io::Error::new(
+                        io::ErrorKind::BrokenPipe,
+                        format!("shm ring producer (pid {pid}) died without closing"),
+                    ));
+                }
+            }
+            backoff(&mut spins, deadline, "read")?;
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for RingConsumer {
+    fn drop(&mut self) {
+        self.seg.atomic(HDR_CONS_CLOSED).store(1, Ordering::Release);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Non-unix stubs: the types exist (so the transport compiles
+// everywhere) but can never be constructed — selecting the shm/hybrid
+// transport on such a host fails with a named error at open time.
+
+#[cfg(not(unix))]
+pub struct Segment(std::convert::Infallible);
+
+#[cfg(not(unix))]
+impl Segment {
+    pub fn create_file(_path: &Path, _capacity: usize) -> Result<()> {
+        bail!("the shm transport requires a unix host (memory-mapped /dev/shm segments)")
+    }
+
+    pub fn open(_path: &Path) -> Result<Segment> {
+        bail!("the shm transport requires a unix host (memory-mapped /dev/shm segments)")
+    }
+}
+
+#[cfg(not(unix))]
+pub struct RingProducer(std::convert::Infallible);
+
+#[cfg(not(unix))]
+impl RingProducer {
+    pub fn open(_path: &Path, _timeout: Option<Duration>) -> Result<RingProducer> {
+        bail!("the shm transport requires a unix host")
+    }
+
+    pub fn set_timeout(&mut self, _timeout: Option<Duration>) {
+        match self.0 {}
+    }
+}
+
+#[cfg(not(unix))]
+impl Write for RingProducer {
+    fn write(&mut self, _buf: &[u8]) -> io::Result<usize> {
+        match self.0 {}
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self.0 {}
+    }
+}
+
+#[cfg(not(unix))]
+pub struct RingConsumer(std::convert::Infallible);
+
+#[cfg(not(unix))]
+impl RingConsumer {
+    pub fn open(_path: &Path, _timeout: Option<Duration>) -> Result<RingConsumer> {
+        bail!("the shm transport requires a unix host")
+    }
+
+    pub fn set_timeout(&mut self, _timeout: Option<Duration>) {
+        match self.0 {}
+    }
+}
+
+#[cfg(not(unix))]
+impl Read for RingConsumer {
+    fn read(&mut self, _buf: &mut [u8]) -> io::Result<usize> {
+        match self.0 {}
+    }
+}
+
+// ---------------------------------------------------------------------
+
+/// Monotone suffix so one process can create several launch dirs.
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A launch's segment directory: one ring file per directed node pair.
+/// The creating process (`owned = true`) removes the whole directory on
+/// drop; attachers never delete. Creation happens strictly before the
+/// path is advertised (launcher env / WELCOME frame), so an attach can
+/// never race the create.
+#[derive(Debug)]
+pub struct SegmentDir {
+    path: PathBuf,
+    owned: bool,
+}
+
+impl SegmentDir {
+    /// Create a fresh directory with all `nodes * (nodes - 1)` ring
+    /// files sized `ring_bytes`. On any partial failure the directory
+    /// is removed before the error surfaces.
+    pub fn create(nodes: usize, ring_bytes: usize) -> Result<SegmentDir> {
+        ensure!(nodes >= 1, "a launch needs at least one node");
+        let seq = DIR_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path =
+            shm_base_dir().join(format!("daso-shm-{}-{}", std::process::id(), seq));
+        std::fs::create_dir(&path).with_context(|| format!("creating segment dir {path:?}"))?;
+        let dir = SegmentDir { path, owned: true };
+        for from in 0..nodes {
+            for to in 0..nodes {
+                if from != to {
+                    // on error the dir drop removes the partial segment set
+                    Segment::create_file(&dir.ring(from, to), ring_bytes)?;
+                }
+            }
+        }
+        Ok(dir)
+    }
+
+    /// Attach to a directory created elsewhere (no cleanup ownership).
+    pub fn attach(path: PathBuf) -> Result<SegmentDir> {
+        ensure!(path.is_dir(), "shm segment dir {path:?} does not exist (launcher gone?)");
+        Ok(SegmentDir { path, owned: false })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The ring carrying bytes from node `from` to node `to`.
+    pub fn ring(&self, from: usize, to: usize) -> PathBuf {
+        self.path.join(format!("ring-{from}-to-{to}"))
+    }
+}
+
+impl Drop for SegmentDir {
+    fn drop(&mut self) {
+        if self.owned {
+            if let Err(e) = std::fs::remove_dir_all(&self.path) {
+                if e.kind() != io::ErrorKind::NotFound {
+                    eprintln!("warning: could not remove shm segment dir {:?}: {e}", self.path);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use crate::comm::channels::Payload;
+    use crate::comm::transport::wire::{read_message, write_frame, write_frame_pipelined, Frame};
+    use crate::comm::Wire;
+
+    fn pair(capacity: usize) -> (RingProducer, RingConsumer, SegmentDir) {
+        let dir = SegmentDir::create(2, capacity).unwrap();
+        let path = dir.ring(0, 1);
+        let p = RingProducer::open(&path, Some(Duration::from_secs(5))).unwrap();
+        let c = RingConsumer::open(&path, Some(Duration::from_secs(5))).unwrap();
+        (p, c, dir)
+    }
+
+    #[test]
+    fn ring_streams_bytes_across_threads_with_wraparound() {
+        // capacity far below the payload so every frame wraps many times
+        let (mut p, mut c, _dir) = pair(256);
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i * 7) as u8).collect();
+        let expect = data.clone();
+        let writer = std::thread::spawn(move || {
+            p.write_all(&data).unwrap();
+            p.flush().unwrap();
+        });
+        let mut got = vec![0u8; expect.len()];
+        c.read_exact(&mut got).unwrap();
+        writer.join().unwrap();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn frames_cross_the_ring_bit_exact_including_chunked() {
+        let (mut p, mut c, _dir) = pair(512);
+        let mut vals: Vec<f32> = (0..1000).map(|i| i as f32 * 0.37 - 12.0).collect();
+        Wire::Bf16.quantize(&mut vals);
+        let frame =
+            Frame::Gather { comm: 3, member: 1, clock: 2.5, payload: Payload::F32(vals.clone()) };
+        let reader = std::thread::spawn(move || {
+            let out = read_message(&mut c).unwrap();
+            (out, c)
+        });
+        let mut scratch = Vec::new();
+        // chunked (threshold below the payload) through a ring smaller
+        // than one chunk: write_all streams each sub-frame through
+        write_frame_pipelined(&mut p, &frame, Wire::Bf16, 64, &mut scratch).unwrap();
+        let (out, _c) = reader.join().unwrap();
+        match out {
+            Frame::Gather { comm: 3, member: 1, clock, payload: Payload::F32(v) } => {
+                assert_eq!(clock, 2.5);
+                assert_eq!(
+                    v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    vals.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                );
+            }
+            other => panic!("bad frame over shm: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dropped_producer_is_eof_after_drain() {
+        let (mut p, mut c, _dir) = pair(1024);
+        write_frame(&mut p, &Frame::MeshWelcome { version: 4, node: 1, book_digest: 7 }, Wire::F32)
+            .unwrap();
+        drop(p);
+        // the buffered frame still arrives...
+        match read_message(&mut c).unwrap() {
+            Frame::MeshWelcome { node: 1, book_digest: 7, .. } => {}
+            other => panic!("bad frame: {other:?}"),
+        }
+        // ...then EOF surfaces as the same named error the TCP path gives
+        let err = read_message(&mut c).unwrap_err().to_string();
+        assert!(err.contains("peer closed"), "{err}");
+    }
+
+    #[test]
+    fn full_ring_with_stalled_consumer_times_out() {
+        let (mut p, _c, _dir) = pair(64);
+        p.set_timeout(Some(Duration::from_millis(50)));
+        let big = vec![0u8; 1024];
+        let err = p.write_all(&big).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::TimedOut, "{err}");
+    }
+
+    #[test]
+    fn dropped_consumer_is_broken_pipe() {
+        let (mut p, c, _dir) = pair(64);
+        drop(c);
+        let big = vec![0u8; 1024];
+        let err = p.write_all(&big).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe, "{err}");
+    }
+
+    #[test]
+    fn empty_ring_read_times_out_bounded() {
+        let (_p, mut c, _dir) = pair(64);
+        c.set_timeout(Some(Duration::from_millis(50)));
+        let mut buf = [0u8; 4];
+        let err = c.read_exact(&mut buf).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::TimedOut, "{err}");
+    }
+
+    #[test]
+    fn garbage_on_the_ring_is_a_named_error_not_a_panic() {
+        // a corrupt length prefix must fail decode exactly like tcp
+        let (mut p, mut c, _dir) = pair(1024);
+        p.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        p.write_all(&[0u8; 32]).unwrap();
+        let err = read_message(&mut c).unwrap_err().to_string();
+        assert!(err.contains("implausible frame length"), "{err}");
+        // and a bogus tag inside a plausible frame is a named error too
+        let (mut p2, mut c2, _dir2) = pair(1024);
+        p2.write_all(&4u32.to_le_bytes()).unwrap();
+        p2.write_all(&[99u8, 0, 0, 0]).unwrap();
+        let err = read_message(&mut c2).unwrap_err().to_string();
+        assert!(err.contains("unknown frame tag"), "{err}");
+    }
+
+    #[test]
+    fn consumer_detects_a_killed_producer_without_close_flag() {
+        if !Path::new("/proc/self").exists() {
+            return; // liveness probe needs procfs
+        }
+        let dir = SegmentDir::create(2, 256).unwrap();
+        let path = dir.ring(0, 1);
+        // simulate a SIGKILLed peer: the producer attached (pid in the
+        // header) but its Drop never ran, so the closed flag stays 0
+        let p = RingProducer::open(&path, None).unwrap();
+        std::mem::forget(p);
+        let mut c = RingConsumer::open(&path, None).unwrap();
+        // overwrite the advertised pid with one that cannot be running
+        // (far beyond linux's default pid_max)
+        c.seg.atomic(HDR_PROD_PID).store(u32::MAX as u64, Ordering::Release);
+        let start = Instant::now();
+        let mut buf = [0u8; 4];
+        let err = c.read_exact(&mut buf).unwrap_err();
+        assert!(err.to_string().contains("died without closing"), "{err}");
+        assert!(
+            start.elapsed() < Duration::from_secs(30),
+            "liveness probe must terminate an unbounded read promptly"
+        );
+    }
+
+    #[test]
+    fn segment_open_rejects_foreign_and_truncated_files() {
+        let dir = SegmentDir::create(1, 64).unwrap();
+        let bogus = dir.path().join("not-a-ring");
+        std::fs::write(&bogus, b"hello world, definitely not a ring header").unwrap();
+        let err = Segment::open(&bogus).unwrap_err().to_string();
+        assert!(err.contains("truncated") || err.contains("bad magic"), "{err}");
+        let tiny = dir.path().join("tiny");
+        std::fs::write(&tiny, b"x").unwrap();
+        let err = Segment::open(&tiny).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn segment_dir_creates_full_mesh_and_cleans_up_on_drop() {
+        let dir = SegmentDir::create(3, 128).unwrap();
+        let path = dir.path().to_path_buf();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(dir.ring(i, j).exists(), i != j, "ring {i}->{j}");
+            }
+        }
+        // attaching takes no ownership: dropping the attachment must
+        // leave the files alone, dropping the creator must remove them
+        let attached = SegmentDir::attach(path.clone()).unwrap();
+        drop(attached);
+        assert!(path.is_dir(), "attach must not own cleanup");
+        drop(dir);
+        assert!(!path.exists(), "creator drop must remove the segment dir");
+        assert!(SegmentDir::attach(path).is_err(), "attach to a removed dir is a named error");
+    }
+}

@@ -1,6 +1,16 @@
-//! Multi-process TCP backend: each process hosts one node's workers;
-//! the global tier crosses process boundaries as [`wire`] frames over a
-//! **full peer mesh** with distributed leader placement.
+//! Multi-process backend: each process hosts one node's workers; the
+//! global tier crosses process boundaries as [`wire`] frames over a
+//! **full peer mesh** with distributed leader placement. The mesh's
+//! links come in three media (`--transport tcp|shm|hybrid`, negotiated
+//! in the handshake): plain sockets, shared-memory rings
+//! ([`super::shm`]) on every link, or the hybrid split — node-local
+//! class links (co-hosted processes, as read off the address book)
+//! carry the collective frames on rings while the TCP mesh keeps the
+//! control group and any cross-host links. The ring links speak the
+//! same frame encoding through the same `PeerLink`/demux machinery, so
+//! chunked pipelining, the bf16/f16 wire casts and the comm-id routing
+//! work unchanged; per-link byte counters split intra/inter link class
+//! and the shm medium for the run report.
 //!
 //! Topology-to-socket mapping (a literal rendering of the paper's
 //! two-tier network): node-local communicators stay in-process
@@ -43,8 +53,9 @@
 //! holding a different address book) fail the launch outright.
 
 use std::collections::BTreeMap;
-use std::io::ErrorKind;
+use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -56,8 +67,9 @@ use crate::comm::channels::{
     GatherMsg, GatherSender, GroupComm, RankComms, ScatterMsg, ScatterSender,
 };
 use crate::comm::collectives::Wire;
-use crate::comm::topology::{LeaderPlacement, Topology};
+use crate::comm::topology::{LeaderPlacement, LinkClass, Topology};
 
+use super::shm;
 use super::wire::{
     book_digest, read_frame, read_message, write_async_sum_pipelined, write_frame,
     write_frame_pipelined, Frame, PROTOCOL_VERSION,
@@ -112,10 +124,11 @@ impl TcpRole {
     }
 }
 
-/// Everything about a TCP transport that is not the topology or the
-/// process role: rendezvous timeout, negotiated wire format, leader
-/// placement and the chunked-pipelining threshold.
-#[derive(Debug, Clone, Copy)]
+/// Everything about a multiprocess transport that is not the topology
+/// or the process role: rendezvous timeout, negotiated wire format,
+/// leader placement, the chunked-pipelining threshold, and which link
+/// medium carries the frames (`--transport tcp|shm|hybrid`).
+#[derive(Debug, Clone)]
 pub struct TcpTuning {
     pub timeout: Duration,
     /// wire format for the global tier's f32 payloads, verified against
@@ -127,16 +140,28 @@ pub struct TcpTuning {
     /// split f32 payloads above this many elements into pipelined chunk
     /// frames (0 disables chunking)
     pub chunk_elems: usize,
+    /// link medium: plain sockets, shm rings, or the hybrid split;
+    /// verified in the handshake (a mismatch would strand frames on a
+    /// medium the peer never reads, so it fails fast instead)
+    pub transport: TransportKind,
+    /// launcher-created shm segment directory (coordinator side; the
+    /// launcher keeps cleanup ownership). `None` makes the coordinator
+    /// create — and own — its own directory when the transport needs
+    /// one. Peers always learn the directory from WELCOME.
+    pub shm_dir: Option<PathBuf>,
 }
 
 impl TcpTuning {
-    /// Mesh placement + environment-default chunk threshold.
+    /// Mesh placement, plain TCP links, environment-default chunk
+    /// threshold.
     pub fn new(timeout: Duration, wire: Wire) -> TcpTuning {
         TcpTuning {
             timeout,
             wire,
             placement: LeaderPlacement::Mesh,
             chunk_elems: default_pipeline_chunk_elems(),
+            transport: TransportKind::Tcp,
+            shm_dir: None,
         }
     }
 
@@ -149,31 +174,119 @@ impl TcpTuning {
         self.chunk_elems = chunk_elems;
         self
     }
+
+    pub fn with_transport(mut self, transport: TransportKind) -> TcpTuning {
+        self.transport = transport;
+        self
+    }
+
+    pub fn with_shm_dir(mut self, shm_dir: Option<PathBuf>) -> TcpTuning {
+        self.shm_dir = shm_dir;
+        self
+    }
 }
 
-/// Shared write half of one peer connection. Frames are written whole
-/// (or, for chunked payloads, as one contiguous CHUNK sequence) under
-/// the lock so concurrent member threads cannot interleave bytes; the
+/// Write half of one peer link: a socket, or the producer side of a
+/// shared-memory ring. Both carry the same length-prefixed frames.
+enum LinkWrite {
+    Tcp(TcpStream),
+    Shm(shm::RingProducer),
+}
+
+impl Write for LinkWrite {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            LinkWrite::Tcp(s) => s.write(buf),
+            LinkWrite::Shm(r) => r.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            LinkWrite::Tcp(s) => s.flush(),
+            LinkWrite::Shm(r) => r.flush(),
+        }
+    }
+}
+
+/// Read half of one peer link, for the demux threads.
+enum LinkRead {
+    Tcp(TcpStream),
+    Shm(shm::RingConsumer),
+}
+
+impl LinkRead {
+    fn medium(&self) -> &'static str {
+        match self {
+            LinkRead::Tcp(_) => "tcp",
+            LinkRead::Shm(_) => "shm",
+        }
+    }
+}
+
+impl Read for LinkRead {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            LinkRead::Tcp(s) => s.read(buf),
+            LinkRead::Shm(r) => r.read(buf),
+        }
+    }
+}
+
+/// Shared write half of one peer link. Frames are written whole (or,
+/// for chunked payloads, as one contiguous CHUNK sequence) under the
+/// lock so concurrent member threads cannot interleave bytes; the
 /// per-link scratch buffer is reused across frames, so a send is one
-/// encode into warm memory plus one buffered `write_all` per frame.
+/// encode into warm memory plus one buffered `write_all` per frame
+/// (socket links) or one ring copy (shm links). Every send is counted
+/// against the link's physical class and medium — the run report's
+/// per-node intra/inter/shm split.
 #[derive(Clone)]
 struct PeerLink {
     writer: Arc<Mutex<LinkWriter>>,
     counters: Arc<WireBytes>,
     chunk_elems: usize,
+    class: LinkClass,
+    via_shm: bool,
 }
 
 struct LinkWriter {
-    stream: TcpStream,
+    stream: LinkWrite,
     scratch: Vec<u8>,
 }
 
 impl PeerLink {
-    fn new(stream: TcpStream, counters: Arc<WireBytes>, chunk_elems: usize) -> PeerLink {
+    fn tcp(
+        stream: TcpStream,
+        counters: Arc<WireBytes>,
+        chunk_elems: usize,
+        class: LinkClass,
+    ) -> PeerLink {
+        PeerLink::new(LinkWrite::Tcp(stream), counters, chunk_elems, class, false)
+    }
+
+    fn ring(
+        producer: shm::RingProducer,
+        counters: Arc<WireBytes>,
+        chunk_elems: usize,
+    ) -> PeerLink {
+        // rings only exist between co-hosted processes by construction
+        PeerLink::new(LinkWrite::Shm(producer), counters, chunk_elems, LinkClass::NodeLocal, true)
+    }
+
+    fn new(
+        stream: LinkWrite,
+        counters: Arc<WireBytes>,
+        chunk_elems: usize,
+        class: LinkClass,
+        via_shm: bool,
+    ) -> PeerLink {
         PeerLink {
             writer: Arc::new(Mutex::new(LinkWriter { stream, scratch: Vec::new() })),
             counters,
             chunk_elems,
+            class,
+            via_shm,
         }
     }
 
@@ -184,7 +297,7 @@ impl PeerLink {
         let mut w = self.writer.lock().unwrap();
         let LinkWriter { stream, scratch } = &mut *w;
         let bytes = write_frame_pipelined(stream, frame, wire, self.chunk_elems, scratch)?;
-        self.counters.add_sent(bytes);
+        self.counters.add_sent(self.class, self.via_shm, bytes);
         Ok(())
     }
 
@@ -210,8 +323,25 @@ impl PeerLink {
             self.chunk_elems,
             scratch,
         )?;
-        self.counters.add_sent(bytes);
+        self.counters.add_sent(self.class, self.via_shm, bytes);
         Ok(())
+    }
+}
+
+/// The host part of a book entry (`"ip:port"` — also handles the
+/// bracketed v6 form, which keeps its brackets on both sides of the
+/// comparison).
+fn host_of(addr: &str) -> &str {
+    addr.rsplit_once(':').map(|(h, _)| h).unwrap_or(addr)
+}
+
+/// Physical class of the link between nodes `a` and `b`, read off the
+/// rendezvous address book: same host => node-local (shm-eligible).
+fn link_class(book: &[String], a: usize, b: usize) -> LinkClass {
+    if host_of(&book[a]) == host_of(&book[b]) {
+        LinkClass::NodeLocal
+    } else {
+        LinkClass::Global
     }
 }
 
@@ -231,13 +361,17 @@ pub struct TcpTransport {
     node: usize,
     tuning: TcpTuning,
     mode: Mode,
+    /// coordinator-created shm segment dir (owned => removed on drop;
+    /// a launcher-provided dir is attached unowned — the launcher keeps
+    /// cleanup). Held on the transport so the segments outlive the run.
+    cleanup: Option<shm::SegmentDir>,
 }
 
 impl TcpTransport {
     /// Node-0 side, around an already-bound listener (the launcher binds
     /// before spawning peers so the advertised address is never racy).
     pub fn coordinator(topo: Topology, listener: TcpListener, tuning: TcpTuning) -> TcpTransport {
-        TcpTransport { topo, node: 0, tuning, mode: Mode::Coordinator { listener } }
+        TcpTransport { topo, node: 0, tuning, mode: Mode::Coordinator { listener }, cleanup: None }
     }
 
     /// Peer side for `node` (1-based among nodes), dialing `addr` with
@@ -248,7 +382,13 @@ impl TcpTransport {
             "peer node id {node} out of range 1..{}",
             topo.nodes
         );
-        Ok(TcpTransport { topo, node, tuning, mode: Mode::Peer { addr: addr.to_string() } })
+        Ok(TcpTransport {
+            topo,
+            node,
+            tuning,
+            mode: Mode::Peer { addr: addr.to_string() },
+            cleanup: None,
+        })
     }
 
     /// Build from the env handshake: node 0 binds the advertised
@@ -263,20 +403,26 @@ impl TcpTransport {
         }
     }
 
-    fn connect_coordinator(&self, listener: TcpListener) -> Result<Wiring> {
+    fn connect_coordinator(&mut self, listener: TcpListener) -> Result<Wiring> {
         let topo = self.topo;
         let (nodes, gpn) = (topo.nodes, topo.gpus_per_node);
         let wire = topo.resolve_global_wire(self.tuning.wire);
         let placement = self.tuning.placement;
+        let transport = self.tuning.transport;
         let timeout = self.tuning.timeout;
+        let chunk_elems = self.tuning.chunk_elems;
         let deadline = Instant::now() + timeout;
         listener.set_nonblocking(true).context("making listener pollable")?;
 
         let counters = Arc::new(WireBytes::default());
-        let mut links: Vec<Option<PeerLink>> = (0..nodes).map(|_| None).collect();
         let mut readers: Vec<Option<TcpStream>> = (0..nodes).map(|_| None).collect();
         let mut mesh_addrs: Vec<Option<String>> = (0..nodes).map(|_| None).collect();
         let mut writers: Vec<Option<TcpStream>> = (0..nodes).map(|_| None).collect();
+        // the coordinator's address as peers actually reach it: a
+        // wildcard bind (0.0.0.0) must not end up in the book, or the
+        // host comparison behind LinkClass would misclassify every
+        // coordinator link
+        let mut coord_ip: Option<std::net::IpAddr> = None;
         let mut pending = nodes - 1;
         while pending > 0 {
             match listener.accept() {
@@ -308,6 +454,9 @@ impl TcpTransport {
                         }
                     };
                     let node = match hello {
+                        Frame::Abort { reason } => {
+                            bail!("launch aborted: {reason}");
+                        }
                         Frame::Hello {
                             version,
                             node,
@@ -315,6 +464,7 @@ impl TcpTransport {
                             gpus_per_node: g,
                             wire: w,
                             placement: p,
+                            transport: t,
                             mesh_addr,
                         } => {
                             ensure!(
@@ -342,6 +492,13 @@ impl TcpTransport {
                                 placement.name()
                             );
                             ensure!(
+                                t == transport,
+                                "peer {peer_addr} was launched with --transport {}, \
+                                 the coordinator expects --transport {}",
+                                t.name(),
+                                transport.name()
+                            );
+                            ensure!(
                                 !mesh_addr.is_empty(),
                                 "peer {peer_addr} advertised no mesh listen address"
                             );
@@ -364,6 +521,9 @@ impl TcpTransport {
                         }
                     };
                     reader.set_read_timeout(None).ok();
+                    if coord_ip.is_none() {
+                        coord_ip = stream.local_addr().ok().map(|a| a.ip());
+                    }
                     writers[node] = Some(stream);
                     readers[node] = Some(reader);
                     pending -= 1;
@@ -386,11 +546,41 @@ impl TcpTransport {
         // its own listener address — peers never dial it again, but the
         // digest every process verifies covers the whole book) and hand
         // it out in the WELCOMEs; peers then mesh among themselves
-        let mut book: Vec<String> =
-            vec![listener.local_addr().context("resolving coordinator address")?.to_string()];
+        let mut coord_addr = listener.local_addr().context("resolving coordinator address")?;
+        if coord_addr.ip().is_unspecified() {
+            // substitute the interface address the peers actually
+            // dialed, so the book's host part is comparable to theirs
+            if let Some(ip) = coord_ip {
+                coord_addr.set_ip(ip);
+            }
+        }
+        let mut book: Vec<String> = vec![coord_addr.to_string()];
         for addr in mesh_addrs.into_iter().skip(1) {
             book.push(addr.expect("all peers advertised a mesh address"));
         }
+
+        // shm segments must exist before any path is advertised: attach
+        // the launcher-created directory, or create (and own) one now —
+        // peers only learn the path from WELCOME, so attach cannot race
+        let shm_segments: Option<shm::SegmentDir> = if transport.uses_shm() {
+            ensure!(
+                (1..nodes).all(|q| link_class(&book, 0, q) == LinkClass::NodeLocal)
+                    || transport == TransportKind::Hybrid,
+                "--transport shm requires every node process on one host \
+                 (use --transport hybrid for multi-host launches)"
+            );
+            Some(match self.tuning.shm_dir.clone() {
+                Some(path) => shm::SegmentDir::attach(path)?,
+                None => shm::SegmentDir::create(nodes, shm::default_ring_bytes())?,
+            })
+        } else {
+            None
+        };
+        let shm_dir_str = shm_segments
+            .as_ref()
+            .map(|d| d.path().to_string_lossy().into_owned())
+            .unwrap_or_default();
+
         for (node, writer) in writers.iter_mut().enumerate().skip(1) {
             let writer = writer.as_mut().expect("all peers connected");
             write_frame(
@@ -401,19 +591,62 @@ impl TcpTransport {
                     gpus_per_node: gpn as u32,
                     wire,
                     placement,
+                    transport,
+                    shm_dir: shm_dir_str.clone(),
                     book: book.clone(),
                 },
                 wire,
             )
             .with_context(|| format!("sending WELCOME to node {node}"))?;
         }
-        for (node, writer) in writers.into_iter().enumerate() {
-            if let Some(stream) = writer {
-                links[node] = Some(PeerLink::new(stream, counters.clone(), self.tuning.chunk_elems));
+
+        // route the links: tcp handshake connections become the socket
+        // links (all traffic for --transport tcp, control-group traffic
+        // for hybrid, nothing for shm — their job ends at WELCOME);
+        // ring pairs carry the collective frames wherever they exist
+        let mut data_links: Vec<Option<PeerLink>> = (0..nodes).map(|_| None).collect();
+        let mut ctrl_links: Vec<Option<PeerLink>> = (0..nodes).map(|_| None).collect();
+        let mut link_readers: Vec<(usize, LinkRead)> = Vec::new();
+        if transport != TransportKind::Shm {
+            for (node, writer) in writers.into_iter().enumerate() {
+                if let Some(stream) = writer {
+                    let link = PeerLink::tcp(
+                        stream,
+                        counters.clone(),
+                        chunk_elems,
+                        link_class(&book, 0, node),
+                    );
+                    ctrl_links[node] = Some(link.clone());
+                    data_links[node] = Some(link);
+                }
+            }
+            for (node, reader) in readers.iter_mut().enumerate() {
+                if let Some(stream) = reader.take() {
+                    link_readers.push((node, LinkRead::Tcp(stream)));
+                }
             }
         }
+        if let Some(dir) = &shm_segments {
+            let digest = book_digest(&book);
+            for q in 1..nodes {
+                if transport == TransportKind::Hybrid
+                    && link_class(&book, 0, q) != LinkClass::NodeLocal
+                {
+                    continue; // cross-host link: stays on the socket
+                }
+                let (producer, consumer) =
+                    ring_link(dir, topo, wire, 0, q, digest, timeout, deadline)?;
+                let link = PeerLink::ring(producer, counters.clone(), chunk_elems);
+                if transport == TransportKind::Shm {
+                    ctrl_links[q] = Some(link.clone());
+                }
+                data_links[q] = Some(link);
+                link_readers.push((q, LinkRead::Shm(consumer)));
+            }
+        }
+        self.cleanup = shm_segments;
 
-        build_wiring(topo, 0, links, readers, timeout, wire, placement, counters)
+        build_wiring(topo, 0, data_links, ctrl_links, link_readers, timeout, wire, placement, counters)
     }
 
     fn connect_peer(&self, addr: &str) -> Result<Wiring> {
@@ -422,6 +655,7 @@ impl TcpTransport {
         let (nodes, gpn) = (topo.nodes, topo.gpus_per_node);
         let wire = self.tuning.wire;
         let placement = self.tuning.placement;
+        let transport = self.tuning.transport;
         let timeout = self.tuning.timeout;
         let chunk_elems = self.tuning.chunk_elems;
         let deadline = Instant::now() + timeout;
@@ -456,14 +690,24 @@ impl TcpTransport {
                 gpus_per_node: gpn as u32,
                 wire,
                 placement,
+                transport,
                 mesh_addr: mesh_addr.clone(),
             },
             wire,
         )?;
-        let book = match read_frame(&mut reader)
+        let (book, shm_dir) = match read_frame(&mut reader)
             .context("waiting for coordinator WELCOME (topology mismatch or dead coordinator?)")?
         {
-            Frame::Welcome { version, nodes: n, gpus_per_node: g, wire: w, placement: p, book } => {
+            Frame::Welcome {
+                version,
+                nodes: n,
+                gpus_per_node: g,
+                wire: w,
+                placement: p,
+                transport: t,
+                shm_dir,
+                book,
+            } => {
                 ensure!(
                     version == PROTOCOL_VERSION && n as usize == nodes && g as usize == gpn,
                     "coordinator runs wire protocol {version} on a {n}x{g} cluster; \
@@ -483,6 +727,18 @@ impl TcpTransport {
                     placement.name()
                 );
                 ensure!(
+                    t == transport,
+                    "coordinator runs --transport {}, this peer was launched with \
+                     --transport {}",
+                    t.name(),
+                    transport.name()
+                );
+                ensure!(
+                    !transport.uses_shm() || !shm_dir.is_empty(),
+                    "coordinator advertised no shm segment directory for --transport {}",
+                    transport.name()
+                );
+                ensure!(
                     book.len() == nodes,
                     "address book mismatch: coordinator sent {} entries for a {nodes}-node \
                      launch",
@@ -494,46 +750,202 @@ impl TcpTransport {
                      this peer listens on {mesh_addr}",
                     book[me]
                 );
-                book
+                (book, shm_dir)
             }
             other => bail!("expected WELCOME, got {}", other.name()),
         };
         reader.set_read_timeout(None).ok();
 
         let counters = Arc::new(WireBytes::default());
-        let mut links: Vec<Option<PeerLink>> = (0..nodes).map(|_| None).collect();
-        let mut readers: Vec<Option<TcpStream>> = (0..nodes).map(|_| None).collect();
-        links[0] = Some(PeerLink::new(writer, counters.clone(), chunk_elems));
-        readers[0] = Some(reader);
-
-        // mesh phase: the address book is identical on every process by
-        // construction (one coordinator broadcast); its digest is the
-        // launch's fingerprint on every peer-to-peer link
+        let mut data_links: Vec<Option<PeerLink>> = (0..nodes).map(|_| None).collect();
+        let mut ctrl_links: Vec<Option<PeerLink>> = (0..nodes).map(|_| None).collect();
+        let mut link_readers: Vec<(usize, LinkRead)> = Vec::new();
+        // the address book is identical on every process by construction
+        // (one coordinator broadcast); its digest is the launch's
+        // fingerprint on every peer-to-peer link, socket or ring
         let digest = book_digest(&book);
-        // dedup by node-id order: this node dials every lower-numbered
-        // peer (each pair gets exactly one link); higher-numbered peers
-        // dial us. The wait order is acyclic — node j only blocks on
-        // i < j — so the mesh can never deadlock.
-        for target in 1..me {
-            let stream = dial_mesh_link(topo, wire, me, target, &book[target], digest, deadline)?;
-            // run-long bound: the handshake's tighter write deadline must
-            // not linger on the established link
-            stream.set_write_timeout(Some(timeout)).ok();
-            let reader =
-                stream.try_clone().context("cloning mesh stream for the demux")?;
-            links[target] = Some(PeerLink::new(stream, counters.clone(), chunk_elems));
-            readers[target] = Some(reader);
-        }
-        for (node, stream) in accept_mesh_links(&mesh_listener, topo, wire, me, digest, deadline)? {
-            stream.set_write_timeout(Some(timeout)).ok();
-            let reader =
-                stream.try_clone().context("cloning mesh stream for the demux")?;
-            links[node] = Some(PeerLink::new(stream, counters.clone(), chunk_elems));
-            readers[node] = Some(reader);
+
+        if transport != TransportKind::Shm {
+            let link = PeerLink::tcp(writer, counters.clone(), chunk_elems, link_class(&book, me, 0));
+            ctrl_links[0] = Some(link.clone());
+            data_links[0] = Some(link);
+            link_readers.push((0, LinkRead::Tcp(reader)));
+
+            // socket mesh phase, dedup by node-id order: this node dials
+            // every lower-numbered peer (each pair gets exactly one
+            // link); higher-numbered peers dial us. The wait order is
+            // acyclic — node j only blocks on i < j — so the mesh can
+            // never deadlock.
+            for target in 1..me {
+                let stream =
+                    dial_mesh_link(topo, wire, me, target, &book[target], digest, deadline)?;
+                // run-long bound: the handshake's tighter write deadline
+                // must not linger on the established link
+                stream.set_write_timeout(Some(timeout)).ok();
+                let tcp_reader =
+                    stream.try_clone().context("cloning mesh stream for the demux")?;
+                let link =
+                    PeerLink::tcp(stream, counters.clone(), chunk_elems, link_class(&book, me, target));
+                ctrl_links[target] = Some(link.clone());
+                data_links[target] = Some(link);
+                link_readers.push((target, LinkRead::Tcp(tcp_reader)));
+            }
+            for (node, stream) in
+                accept_mesh_links(&mesh_listener, topo, wire, me, digest, deadline)?
+            {
+                stream.set_write_timeout(Some(timeout)).ok();
+                let tcp_reader =
+                    stream.try_clone().context("cloning mesh stream for the demux")?;
+                let link =
+                    PeerLink::tcp(stream, counters.clone(), chunk_elems, link_class(&book, me, node));
+                ctrl_links[node] = Some(link.clone());
+                data_links[node] = Some(link);
+                link_readers.push((node, LinkRead::Tcp(tcp_reader)));
+            }
         }
 
-        build_wiring(topo, me, links, readers, timeout, wire, placement, counters)
+        // ring phase: attach this launch's segment pairs and handshake
+        // on the rings themselves (same MESH_HELLO/MESH_WELCOME frames,
+        // same dedup order — the higher node speaks first). Collective
+        // frames for node-local pairs move onto the rings; for
+        // --transport shm everything does, and the rendezvous socket's
+        // job ended at WELCOME.
+        if transport.uses_shm() {
+            // only the pairs this process actually rides on rings; a
+            // hybrid peer with no node-local links (a lone process on a
+            // remote host) must not attach — the segment dir only exists
+            // on the coordinator's host
+            let ring_peers: Vec<usize> = (0..nodes)
+                .filter(|&q| q != me)
+                .filter(|&q| {
+                    transport == TransportKind::Shm
+                        || link_class(&book, me, q) == LinkClass::NodeLocal
+                })
+                .collect();
+            if !ring_peers.is_empty() {
+                let dir = shm::SegmentDir::attach(PathBuf::from(&shm_dir))?;
+                for other in ring_peers {
+                    let (producer, consumer) =
+                        ring_link(&dir, topo, wire, me, other, digest, timeout, deadline)?;
+                    let link = PeerLink::ring(producer, counters.clone(), chunk_elems);
+                    if transport == TransportKind::Shm {
+                        ctrl_links[other] = Some(link.clone());
+                    }
+                    data_links[other] = Some(link);
+                    link_readers.push((other, LinkRead::Shm(consumer)));
+                }
+            }
+        }
+
+        build_wiring(topo, me, data_links, ctrl_links, link_readers, timeout, wire, placement, counters)
     }
+}
+
+/// Establish one shm ring link between `me` and `other`: open the pair
+/// of directed rings and run the MESH_HELLO/MESH_WELCOME handshake over
+/// them — the higher-numbered node speaks first (the same dedup order
+/// as the socket mesh, so the wait graph stays acyclic; the coordinator,
+/// node 0, only ever accepts). The book digest fingerprints the launch:
+/// a ring file from another launch (or a mis-mapped segment) fails with
+/// a named error before a single collective frame rides it.
+#[allow(clippy::too_many_arguments)]
+fn ring_link(
+    dir: &shm::SegmentDir,
+    topo: Topology,
+    wire: Wire,
+    me: usize,
+    other: usize,
+    digest: u64,
+    timeout: Duration,
+    deadline: Instant,
+) -> Result<(shm::RingProducer, shm::RingConsumer)> {
+    let remaining =
+        deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(1));
+    let mut producer = shm::RingProducer::open(&dir.ring(me, other), Some(timeout))?;
+    let mut consumer = shm::RingConsumer::open(&dir.ring(other, me), Some(remaining))?;
+    if other < me {
+        write_frame(
+            &mut producer,
+            &Frame::MeshHello {
+                version: PROTOCOL_VERSION,
+                node: me as u32,
+                nodes: topo.nodes as u32,
+                gpus_per_node: topo.gpus_per_node as u32,
+                wire,
+                book_digest: digest,
+            },
+            wire,
+        )
+        .with_context(|| format!("writing MESH_HELLO on the ring to node {other}"))?;
+        match read_frame(&mut consumer)
+            .with_context(|| format!("waiting for MESH_WELCOME on the ring from node {other}"))?
+        {
+            Frame::MeshWelcome { version, node, book_digest: d } => {
+                ensure!(
+                    version == PROTOCOL_VERSION,
+                    "shm ring peer speaks wire protocol {version}, this build speaks \
+                     {PROTOCOL_VERSION}"
+                );
+                ensure!(
+                    node as usize == other,
+                    "shm segment mismatch: the ring for node {other} answered as node {node}"
+                );
+                ensure!(
+                    d == digest,
+                    "shm segment mismatch: node {node} holds a different rendezvous address \
+                     book (digest {d:#018x}, expected {digest:#018x}) — is it from another \
+                     launch?"
+                );
+            }
+            frame => bail!("expected MESH_WELCOME on the ring from node {other}, got {}", frame.name()),
+        }
+    } else {
+        match read_frame(&mut consumer)
+            .with_context(|| format!("waiting for MESH_HELLO on the ring from node {other}"))?
+        {
+            Frame::MeshHello { version, node, nodes: n, gpus_per_node: g, wire: w, book_digest: d } => {
+                ensure!(
+                    version == PROTOCOL_VERSION,
+                    "shm ring peer speaks wire protocol {version}, this build speaks \
+                     {PROTOCOL_VERSION}"
+                );
+                ensure!(
+                    n as usize == topo.nodes && g as usize == topo.gpus_per_node,
+                    "shm ring peer was launched for a {n}x{g} cluster, node {me} expects \
+                     {}x{}",
+                    topo.nodes,
+                    topo.gpus_per_node
+                );
+                ensure!(
+                    w == wire,
+                    "shm ring peer was launched with --wire {}, node {me} expects --wire {}",
+                    w.name(),
+                    wire.name()
+                );
+                ensure!(
+                    node as usize == other,
+                    "shm segment mismatch: the ring for node {other} spoke as node {node}"
+                );
+                ensure!(
+                    d == digest,
+                    "shm segment mismatch: node {node} holds a different rendezvous address \
+                     book (digest {d:#018x}, expected {digest:#018x}) — is it from another \
+                     launch?"
+                );
+            }
+            frame => bail!("expected MESH_HELLO on the ring from node {other}, got {}", frame.name()),
+        }
+        write_frame(
+            &mut producer,
+            &Frame::MeshWelcome { version: PROTOCOL_VERSION, node: me as u32, book_digest: digest },
+            wire,
+        )
+        .with_context(|| format!("writing MESH_WELCOME on the ring to node {other}"))?;
+    }
+    // established: reads block indefinitely (EOF via the producer-closed
+    // flag); writes stay bounded by the communicator timeout
+    consumer.set_timeout(None);
+    Ok((producer, consumer))
 }
 
 /// Dial `addr` until `deadline`, retrying transient refusals (the target
@@ -774,27 +1186,32 @@ struct Routes {
 }
 
 /// Wire up this process's side of every spanning communicator, given
-/// one established link per other node. Group `g`'s leader handles live
-/// on `placement.leader_node(g)`; the world and control groups keep
-/// their leaders on node 0 (rank 0 owns the run report). Spawns one
-/// demux thread per link.
+/// one established *data* link per other node (socket or shm ring —
+/// the collective fabric) plus a *control* link (the report plumbing:
+/// the same object for tcp/shm, the socket link under hybrid so the
+/// control group stays on the TCP mesh). Group `g`'s leader handles
+/// live on `placement.leader_node(g)`; the world and control groups
+/// keep their leaders on node 0 (rank 0 owns the run report). Spawns
+/// one demux thread per read half — under hybrid a peer pair has two
+/// (socket + ring), both feeding the same comm-id routing table.
 #[allow(clippy::too_many_arguments)]
 fn build_wiring(
     topo: Topology,
     me: usize,
-    links: Vec<Option<PeerLink>>,
-    mut readers: Vec<Option<TcpStream>>,
+    data_links: Vec<Option<PeerLink>>,
+    ctrl_links: Vec<Option<PeerLink>>,
+    readers: Vec<(usize, LinkRead)>,
     timeout: Duration,
     wire: Wire,
     placement: LeaderPlacement,
     counters: Arc<WireBytes>,
 ) -> Result<Wiring> {
     let (nodes, gpn, world) = (topo.nodes, topo.gpus_per_node, topo.world());
-    let link = |q: usize| links[q].clone().expect("peer link");
+    let link = |q: usize| data_links[q].clone().expect("peer data link");
+    let ctrl = |q: usize| ctrl_links[q].clone().expect("peer control link");
     // collective frames ride the negotiated wire; the control group's
     // report frames always ride f32 (they are not the training fabric)
-    let scatter_to = |q: usize, comm: u32, member: usize, wire: Wire| -> ScatterSender {
-        let link = link(q);
+    let scatter_via = |link: PeerLink, comm: u32, member: usize, wire: Wire| -> ScatterSender {
         Box::new(move |msg: ScatterMsg| {
             link.send(
                 &Frame::Scatter {
@@ -807,8 +1224,7 @@ fn build_wiring(
             )
         })
     };
-    let gather_via = |q: usize, comm: u32, wire: Wire| -> GatherSender {
-        let link = link(q);
+    let gather_via = |link: PeerLink, comm: u32, wire: Wire| -> GatherSender {
         Box::new(move |m: GatherMsg| {
             link.send(
                 &Frame::Gather { comm, member: m.index as u32, clock: m.clock, payload: m.payload },
@@ -824,7 +1240,7 @@ fn build_wiring(
         let local = topo.node_ranks(0);
         let mut remote: BTreeMap<usize, ScatterSender> = BTreeMap::new();
         for r in gpn..world {
-            remote.insert(r, scatter_to(topo.rank_of(r).node, world_comm_id(), r, wire));
+            remote.insert(r, scatter_via(link(topo.rank_of(r).node), world_comm_id(), r, wire));
         }
         let (handles, port) =
             GroupComm::assemble_spanning(world, 0, &local, remote, timeout, wire);
@@ -839,7 +1255,7 @@ fn build_wiring(
                 GroupComm::remote_member(
                     world,
                     r,
-                    gather_via(0, world_comm_id(), wire),
+                    gather_via(link(0), world_comm_id(), wire),
                     rx,
                     timeout,
                     wire,
@@ -857,7 +1273,7 @@ fn build_wiring(
         if me == leader {
             let mut remote: BTreeMap<usize, ScatterSender> = BTreeMap::new();
             for q in (0..nodes).filter(|&q| q != me) {
-                remote.insert(q, scatter_to(q, global_comm_id(g), q, wire));
+                remote.insert(q, scatter_via(link(q), global_comm_id(g), q, wire));
             }
             let (mut handles, port) =
                 GroupComm::assemble_spanning(nodes, leader, &[leader], remote, timeout, wire);
@@ -885,7 +1301,7 @@ fn build_wiring(
             global_handles.push(GroupComm::remote_member(
                 nodes,
                 me,
-                gather_via(leader, global_comm_id(g), wire),
+                gather_via(link(leader), global_comm_id(g), wire),
                 rx,
                 timeout,
                 wire,
@@ -915,11 +1331,13 @@ fn build_wiring(
     }
 
     // control group: one member per process, led by the coordinator
-    // (rank 0 assembles the run report); always uncompressed f32
+    // (rank 0 assembles the run report); always uncompressed f32, and
+    // always on the control link — under hybrid that keeps the report
+    // plumbing on the TCP mesh while the collective fabric rides shm
     let control = if me == 0 {
         let mut remote: BTreeMap<usize, ScatterSender> = BTreeMap::new();
         for q in 1..nodes {
-            remote.insert(q, scatter_to(q, control_comm_id(gpn), q, Wire::F32));
+            remote.insert(q, scatter_via(ctrl(q), control_comm_id(gpn), q, Wire::F32));
         }
         let (mut handles, port) =
             GroupComm::assemble_spanning(nodes, 0, &[0], remote, timeout, Wire::F32);
@@ -931,7 +1349,7 @@ fn build_wiring(
         GroupComm::remote_member(
             nodes,
             me,
-            gather_via(0, control_comm_id(gpn), Wire::F32),
+            gather_via(ctrl(0), control_comm_id(gpn), Wire::F32),
             rx,
             timeout,
             Wire::F32,
@@ -939,14 +1357,13 @@ fn build_wiring(
     };
 
     let routes = Arc::new(routes);
-    for (q, reader) in readers.iter_mut().enumerate() {
-        if let Some(reader) = reader.take() {
-            let routes = routes.clone();
-            std::thread::Builder::new()
-                .name(format!("daso-demux-n{me}-from{q}"))
-                .spawn(move || link_demux(reader, routes, q, me))
-                .context("spawning demux thread")?;
-        }
+    for (q, reader) in readers {
+        let routes = routes.clone();
+        let medium = reader.medium();
+        std::thread::Builder::new()
+            .name(format!("daso-demux-n{me}-{medium}-from{q}"))
+            .spawn(move || link_demux(reader, routes, q, me))
+            .context("spawning demux thread")?;
     }
 
     let node_handles = GroupComm::group_with_timeout(gpn, timeout);
@@ -968,9 +1385,11 @@ fn build_wiring(
 /// Per-link demux: route one peer's incoming frames (leader-bound
 /// gathers/deposits and member-bound scatters/sums alike — with mesh
 /// placement every process plays both roles) to the right communicator
-/// by comm id. Exits on EOF (peer finished or died); anyone still
-/// waiting on that peer times out with a root-cause error.
-fn link_demux(mut stream: TcpStream, routes: Arc<Routes>, from: usize, me: usize) {
+/// by comm id, whatever medium the link rides. Exits on EOF (peer
+/// finished or died — a ring surfaces EOF through its producer-closed
+/// flag); anyone still waiting on that peer times out with a
+/// root-cause error.
+fn link_demux(mut stream: LinkRead, routes: Arc<Routes>, from: usize, me: usize) {
     loop {
         let frame = match read_message(&mut stream) {
             Ok(f) => f,
@@ -1025,7 +1444,7 @@ fn link_demux(mut stream: TcpStream, routes: Arc<Routes>, from: usize, me: usize
 
 impl Transport for TcpTransport {
     fn kind(&self) -> TransportKind {
-        TransportKind::Tcp
+        self.tuning.transport
     }
 
     fn node(&self) -> usize {
@@ -1132,14 +1551,17 @@ mod tests {
 
     /// Run the full schedule over a real loopback cluster: this thread is
     /// the coordinator, one thread per peer node. Exercises the mesh
-    /// handshake (every pair of nodes links directly) whenever nodes > 2.
-    fn roundtrip_cluster(topo: Topology, t: TcpTuning) -> u64 {
+    /// handshake (every pair of nodes links directly) whenever nodes > 2,
+    /// and — for shm/hybrid tunings — the ring attach + ring handshake.
+    /// Returns the coordinator's byte counters.
+    fn roundtrip_cluster(topo: Topology, t: TcpTuning) -> Arc<WireBytes> {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
 
         let peers: Vec<_> = (1..topo.nodes)
             .map(|node| {
                 let addr = addr.clone();
+                let t = t.clone();
                 std::thread::spawn(move || {
                     let mut p = TcpTransport::peer(topo, node, &addr, t).unwrap();
                     assert_eq!(p.hosted_ranks(), topo.node_ranks(node));
@@ -1156,8 +1578,9 @@ mod tests {
             })
             .collect();
 
+        let kind = t.transport;
         let mut c = TcpTransport::coordinator(topo, listener, t);
-        assert_eq!(c.kind(), TransportKind::Tcp);
+        assert_eq!(c.kind(), kind);
         assert_eq!(c.hosted_ranks(), topo.node_ranks(0));
         let Wiring { rank_comms, control, wire_bytes } = c.connect().unwrap();
         let outs = drive(rank_comms, topo, 0);
@@ -1168,12 +1591,15 @@ mod tests {
         for p in peers {
             p.join().expect("peer thread");
         }
-        wire_bytes.sent()
+        wire_bytes
     }
 
     #[test]
     fn tcp_transport_collectives_roundtrip() {
-        roundtrip_cluster(Topology::new(2, 2), tuning(Duration::from_secs(30), Wire::F32));
+        let wb = roundtrip_cluster(Topology::new(2, 2), tuning(Duration::from_secs(30), Wire::F32));
+        assert!(wb.sent() > 0);
+        assert_eq!(wb.sent_shm(), 0, "plain tcp never touches a ring");
+        assert_eq!(wb.sent_inter(), 0, "loopback links are node-local class");
     }
 
     #[test]
@@ -1217,8 +1643,9 @@ mod tests {
                 comms.global.exchange(Payload::F32(payload), 0.0, mean_reduce).unwrap();
             out.into_f32()
         }
+        let peer_t = t.clone();
         let peer = std::thread::spawn(move || {
-            let mut p = TcpTransport::peer(topo, 1, &addr, t).unwrap();
+            let mut p = TcpTransport::peer(topo, 1, &addr, peer_t).unwrap();
             let Wiring { rank_comms, .. } = p.connect().unwrap();
             big_exchange(&rank_comms[0], 1)
         });
@@ -1356,10 +1783,194 @@ mod tests {
         stream.flush().unwrap();
         let cerr = coord.join().expect("coordinator thread").unwrap_err().to_string();
         assert!(
-            cerr.contains("protocol 1") && cerr.contains("3"),
+            cerr.contains("protocol 1") && cerr.contains("4"),
             "error should name both protocol versions: {cerr}"
         );
         drop(stream);
+    }
+
+    #[test]
+    fn handshake_rejects_transport_mismatch() {
+        // a tcp peer against a hybrid coordinator would strand every
+        // collective frame on a medium the other side never reads; the
+        // handshake must fail fast naming both transports
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let coord = std::thread::spawn(move || {
+            let mut t = TcpTransport::coordinator(
+                Topology::new(2, 2),
+                listener,
+                tuning(Duration::from_secs(10), Wire::F32)
+                    .with_transport(TransportKind::Hybrid),
+            );
+            t.connect().map(|_| ())
+        });
+        let mut p = TcpTransport::peer(
+            Topology::new(2, 2),
+            1,
+            &addr,
+            tuning(Duration::from_secs(10), Wire::F32),
+        )
+        .unwrap();
+        let peer_result = p.connect().map(|_| ());
+        let cerr = coord.join().expect("coordinator thread").unwrap_err().to_string();
+        assert!(cerr.contains("--transport tcp"), "{cerr}");
+        assert!(cerr.contains("--transport hybrid"), "{cerr}");
+        assert!(peer_result.is_err(), "peer must not come up against a mismatched transport");
+    }
+
+    #[test]
+    fn abort_frame_fails_the_coordinator_fast() {
+        // the launcher watchdog's dying-peer signal: one ABORT frame on
+        // the rendezvous listener must fail the launch with the named
+        // root cause well before the communicator timeout
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let coord = std::thread::spawn(move || {
+            let mut t = TcpTransport::coordinator(
+                Topology::new(2, 2),
+                listener,
+                tuning(Duration::from_secs(60), Wire::F32),
+            );
+            t.connect().map(|_| ())
+        });
+        let started = Instant::now();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        write_frame(
+            &mut stream,
+            &Frame::Abort { reason: "peer process for node 1 exited with exit status: 1".into() },
+            Wire::F32,
+        )
+        .unwrap();
+        let cerr = coord.join().expect("coordinator thread").unwrap_err().to_string();
+        assert!(cerr.contains("launch aborted"), "{cerr}");
+        assert!(cerr.contains("node 1"), "{cerr}");
+        assert!(
+            started.elapsed() < Duration::from_secs(30),
+            "abort must beat the communicator timeout"
+        );
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn shm_transport_collectives_roundtrip() {
+        // 3x3 so every process leads one group and all three ring pairs
+        // (0-1, 0-2, 1-2) carry collective traffic
+        let wb = roundtrip_cluster(
+            Topology::new(3, 3),
+            tuning(Duration::from_secs(30), Wire::F32).with_transport(TransportKind::Shm),
+        );
+        assert!(wb.sent() > 0);
+        assert_eq!(wb.sent(), wb.sent_shm(), "--transport shm carries every frame on rings");
+        assert_eq!(wb.sent_inter(), 0, "loopback links are all node-local class");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn shm_transport_roundtrip_bf16_wire() {
+        // the negotiated wire casts are applied by the same frame
+        // encoder on rings as on sockets
+        let wb = roundtrip_cluster(
+            Topology::new(2, 2),
+            tuning(Duration::from_secs(30), Wire::Bf16).with_transport(TransportKind::Shm),
+        );
+        assert_eq!(wb.sent(), wb.sent_shm());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn hybrid_transport_splits_collectives_from_control() {
+        let wb = roundtrip_cluster(
+            Topology::new(3, 2),
+            tuning(Duration::from_secs(30), Wire::F32).with_transport(TransportKind::Hybrid),
+        );
+        assert!(wb.sent_shm() > 0, "collective frames ride the rings");
+        assert!(
+            wb.sent() > wb.sent_shm(),
+            "the control group stays on the tcp mesh ({} total vs {} shm)",
+            wb.sent(),
+            wb.sent_shm()
+        );
+        assert_eq!(wb.sent_inter(), 0, "loopback links are all node-local class");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn shm_coordinator_uses_launcher_dir_without_owning_cleanup() {
+        // the launcher pre-creates the segments and keeps cleanup
+        // ownership: the coordinator must attach (not create) and must
+        // not delete them when the transport drops
+        let topo = Topology::new(2, 1);
+        let launcher_dir = shm::SegmentDir::create(2, 1 << 16).unwrap();
+        let dir_path = launcher_dir.path().to_path_buf();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = tuning(Duration::from_secs(30), Wire::F32)
+            .with_transport(TransportKind::Shm)
+            .with_shm_dir(Some(dir_path.clone()));
+        let peer_t = t.clone().with_shm_dir(None);
+        let peer = std::thread::spawn(move || {
+            let mut p = TcpTransport::peer(topo, 1, &addr, peer_t).unwrap();
+            let Wiring { rank_comms, .. } = p.connect().unwrap();
+            drive(rank_comms, topo, 1)
+        });
+        {
+            let mut c = TcpTransport::coordinator(topo, listener, t);
+            let Wiring { rank_comms, .. } = c.connect().unwrap();
+            let outs = drive(rank_comms, topo, 0);
+            check_drive(&outs, topo, 0);
+            peer.join().expect("peer thread");
+        } // coordinator transport drops here
+        assert!(dir_path.is_dir(), "coordinator must not reap the launcher's segments");
+        drop(launcher_dir);
+        assert!(!dir_path.exists(), "launcher drop reaps the segments");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn ring_link_rejects_wrong_digest_and_mismapped_node() {
+        let topo = Topology::new(3, 2);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        // digest mismatch: dialer holds a different address book
+        let dir = shm::SegmentDir::create(3, 1 << 14).unwrap();
+        let dir_path = dir.path().to_path_buf();
+        let dialer = std::thread::spawn(move || {
+            let attached = shm::SegmentDir::attach(dir_path).unwrap();
+            ring_link(&attached, topo, Wire::F32, 2, 1, 0xbad, Duration::from_secs(5), deadline)
+                .map(|_| ())
+        });
+        let err = ring_link(&dir, topo, Wire::F32, 1, 2, 0x600d, Duration::from_secs(5), deadline)
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("shm segment mismatch"), "{err}");
+        assert!(err.contains("another launch"), "{err}");
+        assert!(dialer.join().unwrap().is_err(), "dialer never gets its MESH_WELCOME");
+
+        // a mis-mapped segment: the ring supposedly from node 2 carries
+        // a hello identifying as node 9
+        let dir2 = shm::SegmentDir::create(3, 1 << 14).unwrap();
+        let mut rogue =
+            shm::RingProducer::open(&dir2.ring(2, 1), Some(Duration::from_secs(5))).unwrap();
+        write_frame(
+            &mut rogue,
+            &Frame::MeshHello {
+                version: PROTOCOL_VERSION,
+                node: 9,
+                nodes: 3,
+                gpus_per_node: 2,
+                wire: Wire::F32,
+                book_digest: 0x600d,
+            },
+            Wire::F32,
+        )
+        .unwrap();
+        rogue.flush().unwrap();
+        let err = ring_link(&dir2, topo, Wire::F32, 1, 2, 0x600d, Duration::from_secs(5), deadline)
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("spoke as node 9"), "{err}");
     }
 
     /// Dial a mesh listener by hand with a crafted MESH_HELLO and return

@@ -55,13 +55,17 @@ use crate::comm::Wire;
 use crate::util::half;
 use crate::util::sha::sha256;
 
+use super::TransportKind;
+
 /// Bumped on any change to the framing or message layout.
 /// Version 2: compressed payload kinds + the negotiated wire format in
 /// HELLO/WELCOME. Version 3: mesh address book (HELLO/WELCOME grow the
 /// peer listen address / the address book + leader placement),
 /// MESH_HELLO/MESH_WELCOME peer links, and CHUNK_BEGIN/CHUNK_DATA
-/// payload fragmentation.
-pub const PROTOCOL_VERSION: u32 = 3;
+/// payload fragmentation. Version 4: the negotiated transport kind
+/// (tcp|shm|hybrid) in HELLO/WELCOME, the shm segment directory in
+/// WELCOME, and the ABORT frame (launcher watchdog -> coordinator).
+pub const PROTOCOL_VERSION: u32 = 4;
 
 /// Upper bound on a frame body (sanity check against corrupt length
 /// prefixes; generously above any model's parameter buffer).
@@ -77,6 +81,7 @@ const TAG_MESH_HELLO: u8 = 7;
 const TAG_MESH_WELCOME: u8 = 8;
 const TAG_CHUNK_BEGIN: u8 = 9;
 const TAG_CHUNK_DATA: u8 = 10;
+const TAG_ABORT: u8 = 11;
 
 const PAYLOAD_EMPTY: u8 = 0;
 const PAYLOAD_F32: u8 = 1;
@@ -118,6 +123,27 @@ fn placement_from_code(c: u8) -> Result<LeaderPlacement> {
     })
 }
 
+/// Handshake code for a [`TransportKind`] (u8 on the wire). `channels`
+/// never handshakes — it has a code only so the mapping is total.
+fn transport_code(t: TransportKind) -> u8 {
+    match t {
+        TransportKind::Tcp => 0,
+        TransportKind::Shm => 1,
+        TransportKind::Hybrid => 2,
+        TransportKind::Channels => 3,
+    }
+}
+
+fn transport_from_code(c: u8) -> Result<TransportKind> {
+    Ok(match c {
+        0 => TransportKind::Tcp,
+        1 => TransportKind::Shm,
+        2 => TransportKind::Hybrid,
+        3 => TransportKind::Channels,
+        other => bail!("unknown transport code {other}"),
+    })
+}
+
 /// The f32 payload kind `wire` produces on the wire.
 fn f32_payload_kind(wire: Wire) -> u8 {
     match wire {
@@ -141,12 +167,55 @@ pub fn book_digest(book: &[String]) -> u64 {
     u64::from_le_bytes(d[..8].try_into().unwrap())
 }
 
+/// The wire-cast roundtrip every transport applies around a
+/// member-ordered reduction: each contribution is quantized at the
+/// member boundary (what the frame encoder would physically do on the
+/// way to the leader), the reduction runs over the uniformly quantized
+/// buffers, and the result is quantized again for the return leg. The
+/// communicator layer (`GroupComm`/`AsyncGroup`) applies exactly these
+/// two casts per payload on channels, tcp and shm alike; the serial
+/// executor calls this helper so its mirror can never drift from the
+/// transports' semantics — the serial == threaded == tcp == shm ==
+/// hybrid bit-identity contract hangs on this one pattern. A no-op at
+/// `Wire::F32`; `Wire::quantize` is idempotent, so pre-quantized
+/// buffers cross unchanged.
+pub fn roundtrip_inplace<'b, F>(wire: Wire, bufs: &mut [&'b mut Vec<f32>], reduce: F)
+where
+    F: FnOnce(&mut [&'b mut Vec<f32>]),
+{
+    for b in bufs.iter_mut() {
+        wire.quantize(b);
+    }
+    reduce(&mut *bufs);
+    for b in bufs.iter_mut() {
+        wire.quantize(b);
+    }
+}
+
+/// [`roundtrip_inplace`] for reductions that combine the contributions
+/// into one fresh buffer (DASO's non-blocking snapshot sum, the
+/// consensus mean): quantized copies in, combined result quantized on
+/// the way out. Keeps the zero-copy path at the default f32 wire.
+pub fn roundtrip_combine<F>(wire: Wire, bufs: &[&Vec<f32>], combine: F) -> Vec<f32>
+where
+    F: FnOnce(&[&Vec<f32>]) -> Vec<f32>,
+{
+    let mut out = if wire == Wire::F32 {
+        combine(bufs)
+    } else {
+        let quantized = wire.quantized_copies(bufs);
+        combine(&quantized.iter().collect::<Vec<_>>())
+    };
+    wire.quantize(&mut out);
+    out
+}
+
 /// One transport message.
 #[derive(Debug)]
 pub enum Frame {
     /// Peer -> coordinator: identify and verify the launch topology +
-    /// wire format + leader placement; `mesh_addr` is the peer's own
-    /// listen address for the mesh phase (v3+, empty before).
+    /// wire format + leader placement + transport; `mesh_addr` is the
+    /// peer's own listen address for the mesh phase (v3+, empty before).
     Hello {
         version: u32,
         node: u32,
@@ -154,17 +223,22 @@ pub enum Frame {
         gpus_per_node: u32,
         wire: Wire,
         placement: LeaderPlacement,
+        transport: TransportKind,
         mesh_addr: String,
     },
     /// Coordinator -> peer: handshake accepted; `book[n]` is node `n`'s
     /// dialable address (v3+, empty before) — the peer mesh's address
-    /// book, identical on every process of the launch.
+    /// book, identical on every process of the launch. `shm_dir` (v4+)
+    /// is the launch's segment directory when the negotiated transport
+    /// carries node-local links on shm rings (empty for tcp).
     Welcome {
         version: u32,
         nodes: u32,
         gpus_per_node: u32,
         wire: Wire,
         placement: LeaderPlacement,
+        transport: TransportKind,
+        shm_dir: String,
         book: Vec<String>,
     },
     /// Dialing peer -> listening peer on a direct mesh link: identify
@@ -198,6 +272,10 @@ pub enum Frame {
     /// One sequence-tagged slice of a chunked payload (raw wire-encoded
     /// elements; the element width is implied by the header's `kind`).
     ChunkData { seq: u32, n_chunks: u32, data: Vec<u8> },
+    /// Launcher watchdog -> coordinator rendezvous listener: a peer
+    /// process died before the handshake came up — fail the launch now
+    /// with a named root cause instead of waiting out `comm_timeout_ms`.
+    Abort { reason: String },
 }
 
 impl Frame {
@@ -214,6 +292,7 @@ impl Frame {
             Frame::AsyncSum { .. } => "ASYNC_SUM",
             Frame::ChunkBegin { .. } => "CHUNK_BEGIN",
             Frame::ChunkData { .. } => "CHUNK_DATA",
+            Frame::Abort { .. } => "ABORT",
         }
     }
 }
@@ -495,13 +574,18 @@ fn body_len(frame: &Frame, wire: Wire) -> usize {
         Frame::Hello { version, mesh_addr, .. } => match version {
             0 | 1 => 17,
             2 => 18,
-            _ => 19 + 4 + mesh_addr.len(),
+            3 => 19 + 4 + mesh_addr.len(),
+            _ => 20 + 4 + mesh_addr.len(),
         },
-        Frame::Welcome { version, book, .. } => match version {
-            0 | 1 => 13,
-            2 => 14,
-            _ => 15 + 4 + book.iter().map(|e| 4 + e.len()).sum::<usize>(),
-        },
+        Frame::Welcome { version, book, shm_dir, .. } => {
+            let book_len = 4 + book.iter().map(|e| 4 + e.len()).sum::<usize>();
+            match version {
+                0 | 1 => 13,
+                2 => 14,
+                3 => 15 + book_len,
+                _ => 16 + 4 + shm_dir.len() + book_len,
+            }
+        }
         Frame::MeshHello { .. } => 26,
         Frame::MeshWelcome { .. } => 17,
         Frame::Gather { payload, .. } => 17 + payload_wire_len(payload, wire),
@@ -512,6 +596,7 @@ fn body_len(frame: &Frame, wire: Wire) -> usize {
         Frame::AsyncSum { sum, .. } => 25 + f32_payload_wire_len(sum.len(), wire),
         Frame::ChunkBegin { header, .. } => 18 + header.len(),
         Frame::ChunkData { data, .. } => 9 + data.len(),
+        Frame::Abort { reason } => 5 + reason.len(),
     }
 }
 
@@ -529,24 +614,48 @@ pub fn encode_body(frame: &Frame, wire: Wire) -> Vec<u8> {
 fn encode_body_to(out: &mut Vec<u8>, frame: &Frame, wire: Wire) {
     out.reserve(body_len(frame, wire));
     match frame {
-        Frame::Hello { version, node, nodes, gpus_per_node, wire: hello_wire, placement, mesh_addr } => {
+        Frame::Hello {
+            version,
+            node,
+            nodes,
+            gpus_per_node,
+            wire: hello_wire,
+            placement,
+            transport,
+            mesh_addr,
+        } => {
             out.push(TAG_HELLO);
             put_u32(out, *version);
             put_u32(out, *node);
             put_u32(out, *nodes);
             put_u32(out, *gpus_per_node);
             // pre-v2 frames had no wire byte, pre-v3 none of the mesh
-            // fields: encode what the stated version can carry, so
-            // compatibility tests can produce old-version bytes
+            // fields, pre-v4 no transport byte: encode what the stated
+            // version can carry, so compatibility tests can produce
+            // old-version bytes
             if *version >= 2 {
                 out.push(wire_code(*hello_wire));
             }
             if *version >= 3 {
                 out.push(placement_code(*placement));
+            }
+            if *version >= 4 {
+                out.push(transport_code(*transport));
+            }
+            if *version >= 3 {
                 put_str(out, mesh_addr);
             }
         }
-        Frame::Welcome { version, nodes, gpus_per_node, wire: welcome_wire, placement, book } => {
+        Frame::Welcome {
+            version,
+            nodes,
+            gpus_per_node,
+            wire: welcome_wire,
+            placement,
+            transport,
+            shm_dir,
+            book,
+        } => {
             out.push(TAG_WELCOME);
             put_u32(out, *version);
             put_u32(out, *nodes);
@@ -556,6 +665,12 @@ fn encode_body_to(out: &mut Vec<u8>, frame: &Frame, wire: Wire) {
             }
             if *version >= 3 {
                 out.push(placement_code(*placement));
+            }
+            if *version >= 4 {
+                out.push(transport_code(*transport));
+                put_str(out, shm_dir);
+            }
+            if *version >= 3 {
                 put_u32(out, book.len() as u32);
                 for entry in book {
                     put_str(out, entry);
@@ -622,6 +737,10 @@ fn encode_body_to(out: &mut Vec<u8>, frame: &Frame, wire: Wire) {
             put_u32(out, *n_chunks);
             out.extend_from_slice(data);
         }
+        Frame::Abort { reason } => {
+            out.push(TAG_ABORT);
+            put_str(out, reason);
+        }
     }
 }
 
@@ -635,35 +754,60 @@ pub fn decode_body(body: &[u8]) -> Result<Frame> {
             let node = c.u32()?;
             let nodes = c.u32()?;
             let gpus_per_node = c.u32()?;
-            // protocol 1 had no wire byte, protocols 1-2 no mesh fields;
-            // default them so an old HELLO still parses and the handshake
-            // can report the version mismatch instead of a decode error
+            // protocol 1 had no wire byte, protocols 1-2 no mesh fields,
+            // protocols 1-3 no transport byte; default them so an old
+            // HELLO still parses and the handshake can report the
+            // version mismatch instead of a decode error
             let wire = if version >= 2 { wire_from_code(c.u8()?)? } else { Wire::F32 };
-            let (placement, mesh_addr) = if version >= 3 {
-                (placement_from_code(c.u8()?)?, c.string()?)
-            } else {
-                (LeaderPlacement::Star, String::new())
-            };
-            Frame::Hello { version, node, nodes, gpus_per_node, wire, placement, mesh_addr }
+            let placement =
+                if version >= 3 { placement_from_code(c.u8()?)? } else { LeaderPlacement::Star };
+            let transport =
+                if version >= 4 { transport_from_code(c.u8()?)? } else { TransportKind::Tcp };
+            let mesh_addr = if version >= 3 { c.string()? } else { String::new() };
+            Frame::Hello {
+                version,
+                node,
+                nodes,
+                gpus_per_node,
+                wire,
+                placement,
+                transport,
+                mesh_addr,
+            }
         }
         TAG_WELCOME => {
             let version = c.u32()?;
             let nodes = c.u32()?;
             let gpus_per_node = c.u32()?;
             let wire = if version >= 2 { wire_from_code(c.u8()?)? } else { Wire::F32 };
-            let (placement, book) = if version >= 3 {
-                let placement = placement_from_code(c.u8()?)?;
+            let placement =
+                if version >= 3 { placement_from_code(c.u8()?)? } else { LeaderPlacement::Star };
+            let (transport, shm_dir) = if version >= 4 {
+                (transport_from_code(c.u8()?)?, c.string()?)
+            } else {
+                (TransportKind::Tcp, String::new())
+            };
+            let book = if version >= 3 {
                 let n = c.u32()? as usize;
                 ensure!(n <= 1 << 20, "implausible address-book size {n}");
                 let mut book = Vec::with_capacity(n);
                 for _ in 0..n {
                     book.push(c.string()?);
                 }
-                (placement, book)
+                book
             } else {
-                (LeaderPlacement::Star, Vec::new())
+                Vec::new()
             };
-            Frame::Welcome { version, nodes, gpus_per_node, wire, placement, book }
+            Frame::Welcome {
+                version,
+                nodes,
+                gpus_per_node,
+                wire,
+                placement,
+                transport,
+                shm_dir,
+                book,
+            }
         }
         TAG_MESH_HELLO => Frame::MeshHello {
             version: c.u32()?,
@@ -719,6 +863,7 @@ pub fn decode_body(body: &[u8]) -> Result<Frame> {
             let data = c.rest().to_vec();
             Frame::ChunkData { seq, n_chunks, data }
         }
+        TAG_ABORT => Frame::Abort { reason: c.string()? },
         other => bail!("unknown frame tag {other}"),
     };
     c.finish()?;
@@ -1049,41 +1194,58 @@ mod tests {
     #[test]
     fn hello_welcome_roundtrip() {
         match roundtrip(Frame::Hello {
-            version: 3,
+            version: 4,
             node: 3,
             nodes: 4,
             gpus_per_node: 2,
             wire: Wire::Bf16,
             placement: LeaderPlacement::Mesh,
+            transport: TransportKind::Hybrid,
             mesh_addr: "127.0.0.1:4567".into(),
         }) {
             Frame::Hello {
-                version: 3,
+                version: 4,
                 node: 3,
                 nodes: 4,
                 gpus_per_node: 2,
                 wire: Wire::Bf16,
                 placement: LeaderPlacement::Mesh,
+                transport: TransportKind::Hybrid,
                 mesh_addr,
             } => assert_eq!(mesh_addr, "127.0.0.1:4567"),
             other => panic!("bad roundtrip: {other:?}"),
         }
         match roundtrip(Frame::Welcome {
-            version: 3,
+            version: 4,
             nodes: 4,
             gpus_per_node: 2,
             wire: Wire::F16,
             placement: LeaderPlacement::Star,
+            transport: TransportKind::Shm,
+            shm_dir: "/dev/shm/daso-shm-1-0".into(),
             book: vec!["a:1".into(), "b:2".into()],
         }) {
             Frame::Welcome {
-                version: 3,
+                version: 4,
                 nodes: 4,
                 gpus_per_node: 2,
                 wire: Wire::F16,
                 placement: LeaderPlacement::Star,
+                transport: TransportKind::Shm,
+                shm_dir,
                 book,
-            } => assert_eq!(book, vec!["a:1".to_string(), "b:2".to_string()]),
+            } => {
+                assert_eq!(shm_dir, "/dev/shm/daso-shm-1-0");
+                assert_eq!(book, vec!["a:1".to_string(), "b:2".to_string()]);
+            }
+            other => panic!("bad roundtrip: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn abort_roundtrip() {
+        match roundtrip(Frame::Abort { reason: "node 2 exited with status 1".into() }) {
+            Frame::Abort { reason } => assert_eq!(reason, "node 2 exited with status 1"),
             other => panic!("bad roundtrip: {other:?}"),
         }
     }
@@ -1151,16 +1313,39 @@ mod tests {
                 gpus_per_node: 2,
                 wire: Wire::Bf16,
                 placement: LeaderPlacement::Mesh,
+                transport: TransportKind::Hybrid,
                 mesh_addr: "ignored-below-v3".into(),
             },
             Wire::F32,
         );
         assert_eq!(v2.len(), 18, "v2 hello must not carry the mesh fields");
         match decode_body(&v2).unwrap() {
-            Frame::Hello { version: 2, wire: Wire::Bf16, mesh_addr, .. } => {
+            Frame::Hello { version: 2, wire: Wire::Bf16, mesh_addr, transport, .. } => {
                 assert!(mesh_addr.is_empty());
+                assert_eq!(transport, TransportKind::Tcp, "pre-v4 peers are tcp by definition");
             }
             other => panic!("v2 hello decoded as {other:?}"),
+        }
+        // a v3 hello has the mesh fields but no transport byte
+        let v3 = encode_body(
+            &Frame::Hello {
+                version: 3,
+                node: 1,
+                nodes: 2,
+                gpus_per_node: 2,
+                wire: Wire::F32,
+                placement: LeaderPlacement::Mesh,
+                transport: TransportKind::Shm,
+                mesh_addr: "a:1".into(),
+            },
+            Wire::F32,
+        );
+        assert_eq!(v3.len(), 19 + 4 + 3, "v3 hello must not carry the transport byte");
+        match decode_body(&v3).unwrap() {
+            Frame::Hello { version: 3, transport: TransportKind::Tcp, mesh_addr, .. } => {
+                assert_eq!(mesh_addr, "a:1");
+            }
+            other => panic!("v3 hello decoded as {other:?}"),
         }
     }
 
@@ -1454,6 +1639,125 @@ mod tests {
         let interleaved: Vec<u8> = [&frames[0][..], &welcome[..]].concat();
         let err = read_message(&mut &interleaved[..]).unwrap_err().to_string();
         assert!(err.contains("expected CHUNK_DATA"), "{err}");
+    }
+
+    #[test]
+    fn truncated_chunk_sequences_are_named_errors() {
+        let vals: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let frame =
+            Frame::Gather { comm: 1, member: 0, clock: 0.0, payload: Payload::F32(vals) };
+        let mut buf = Vec::new();
+        let mut scratch = Vec::new();
+        write_frame_pipelined(&mut buf, &frame, Wire::F32, 16, &mut scratch).unwrap();
+        // cut the stream mid-way through a CHUNK_DATA body: the reader
+        // must surface a named decode error, never panic or hang
+        for cut in [buf.len() - 7, buf.len() / 2, 2] {
+            let err = read_message(&mut &buf[..cut]).unwrap_err().to_string();
+            assert!(
+                err.contains("reading frame") || err.contains("truncated"),
+                "cut at {cut}: {err}"
+            );
+        }
+        // a CHUNK_BEGIN whose promised sub-frames never arrive is a
+        // bounded read error too (EOF mid-sequence)
+        let header_len = 4 + u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        let err = read_message(&mut &buf[..header_len]).unwrap_err().to_string();
+        assert!(err.contains("reading frame length"), "{err}");
+    }
+
+    #[test]
+    fn chunk_begin_with_bogus_kind_or_count_is_rejected() {
+        // an f64 (or unknown) payload kind can never be chunked
+        for kind in [PAYLOAD_F64, PAYLOAD_EMPTY, 77] {
+            let mut buf = Vec::new();
+            write_frame(
+                &mut buf,
+                &Frame::ChunkBegin { kind, n_chunks: 1, total_elems: 8, header: vec![] },
+                Wire::F32,
+            )
+            .unwrap();
+            let err = read_message(&mut &buf[..]).unwrap_err().to_string();
+            assert!(err.contains("cannot be chunked"), "kind {kind}: {err}");
+        }
+        // an element count past the frame-size contract is rejected
+        // before any allocation happens
+        let mut buf = Vec::new();
+        write_frame(
+            &mut buf,
+            &Frame::ChunkBegin {
+                kind: PAYLOAD_F32,
+                n_chunks: 1,
+                total_elems: u64::MAX / 2,
+                header: vec![],
+            },
+            Wire::F32,
+        )
+        .unwrap();
+        let err = read_message(&mut &buf[..]).unwrap_err().to_string();
+        assert!(err.contains("implausible chunked element count"), "{err}");
+    }
+
+    #[test]
+    fn garbage_payload_tag_is_a_named_error() {
+        // a GATHER whose payload kind byte is junk: named error, no panic
+        let mut body = vec![3u8]; // TAG_GATHER
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.extend_from_slice(&0f64.to_le_bytes());
+        body.push(99); // bogus payload kind
+        let err = decode_body(&body).unwrap_err().to_string();
+        assert!(err.contains("unknown payload kind 99"), "{err}");
+    }
+
+    #[test]
+    fn roundtrip_helpers_match_the_communicator_casts() {
+        use crate::comm::naive_mean;
+        // the serial executor's mirror must equal the two-leg cast the
+        // communicator layer applies: quantize every contribution, run
+        // the member-ordered reduction, quantize the result
+        let raw = [1.2345678f32, -0.7654321, 3.1415926];
+        let inputs: Vec<Vec<f32>> = raw.iter().map(|&x| vec![x, 2.0 * x]).collect();
+        for wire in [Wire::F32, Wire::Bf16, Wire::F16] {
+            // oracle: the casts spelled out by hand
+            let mut oracle: Vec<Vec<f32>> = inputs.clone();
+            for b in oracle.iter_mut() {
+                wire.quantize(b);
+            }
+            let mut mean = naive_mean(&oracle.iter().collect::<Vec<_>>());
+            wire.quantize(&mut mean);
+
+            let mut bufs = inputs.clone();
+            let mut refs: Vec<&mut Vec<f32>> = bufs.iter_mut().collect();
+            roundtrip_inplace(wire, &mut refs, |b| {
+                let m = naive_mean(&b.iter().map(|v| &**v).collect::<Vec<_>>());
+                for v in b.iter_mut() {
+                    **v = m.clone();
+                }
+            });
+            for (i, b) in bufs.iter().enumerate() {
+                assert_eq!(
+                    b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    mean.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "inplace member {i} at {}",
+                    wire.name()
+                );
+            }
+
+            let combined = roundtrip_combine(wire, &inputs.iter().collect::<Vec<_>>(), naive_mean);
+            assert_eq!(
+                combined.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                mean.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "combine at {}",
+                wire.name()
+            );
+        }
+        // the default wire is the identity on both helpers
+        let keep = vec![3.0e-39f32, 1.2345678];
+        let out = roundtrip_combine(Wire::F32, &[&keep], |b| b[0].clone());
+        assert_eq!(
+            out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            keep.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -50,8 +50,10 @@ pub struct RunSpec {
     pub model: String,
     pub strategy: StrategyKind,
     pub executor: ExecutorKind,
-    /// explicit transport override (`transport=channels|tcp`); when
-    /// unset the executor implies it — see [`RunSpec::resolved_transport`]
+    /// explicit transport override (`transport=channels|tcp|shm|hybrid`);
+    /// when unset the executor implies it (multiprocess: the
+    /// `DASO_TRANSPORT` env default, else tcp) — see
+    /// [`RunSpec::resolved_transport`]
     pub transport: Option<TransportKind>,
     pub artifacts_dir: String,
     pub out_dir: Option<String>,
@@ -169,27 +171,36 @@ impl RunSpec {
     }
 
     /// The transport implied by the executor, validated against an
-    /// explicit `transport=` override.
+    /// explicit `transport=` override. Single-process executors always
+    /// ride in-process channels; multiprocess launches default to the
+    /// `DASO_TRANSPORT` environment value (else tcp) and accept any of
+    /// tcp, shm or hybrid.
     pub fn resolved_transport(&self) -> Result<TransportKind> {
-        let implied = match self.executor {
-            ExecutorKind::Serial | ExecutorKind::Threaded => TransportKind::Channels,
-            ExecutorKind::Multiprocess => TransportKind::Tcp,
-        };
-        match self.transport {
-            None => Ok(implied),
-            Some(t) if t == implied => Ok(t),
-            Some(t) => {
-                let hint = match t {
-                    TransportKind::Tcp => "use --executor multiprocess for tcp",
-                    TransportKind::Channels => "use --executor serial|threaded for channels",
-                };
-                bail!(
-                    "transport {:?} is incompatible with --executor {} (which implies {:?}); \
-                     {hint}",
+        match self.executor {
+            ExecutorKind::Serial | ExecutorKind::Threaded => match self.transport {
+                None | Some(TransportKind::Channels) => Ok(TransportKind::Channels),
+                Some(t) => bail!(
+                    "transport {:?} is incompatible with --executor {} (single-process \
+                     executors use in-process channels); use --executor multiprocess or \
+                     `daso launch` for {}",
                     t.name(),
                     self.executor.name(),
-                    implied.name()
-                )
+                    t.name()
+                ),
+            },
+            ExecutorKind::Multiprocess => {
+                let t = match self.transport {
+                    Some(t) => t,
+                    None => crate::comm::default_transport(),
+                };
+                if t == TransportKind::Channels {
+                    bail!(
+                        "transport \"channels\" is single-process; --executor multiprocess \
+                         needs tcp, shm or hybrid (use --executor serial|threaded for \
+                         channels)"
+                    );
+                }
+                Ok(t)
             }
         }
     }
@@ -373,14 +384,32 @@ mod tests {
         // implied by the executor when unset
         assert_eq!(s.resolved_transport().unwrap(), TransportKind::Channels);
         s.set("executor=multiprocess").unwrap();
-        assert_eq!(s.resolved_transport().unwrap(), TransportKind::Tcp);
+        if std::env::var("DASO_TRANSPORT").is_err() {
+            assert_eq!(s.resolved_transport().unwrap(), TransportKind::Tcp);
+        }
         // explicit + consistent
         s.set("transport=tcp").unwrap();
         assert_eq!(s.resolved_transport().unwrap(), TransportKind::Tcp);
+        // shm and hybrid are multiprocess transports
+        s.set("transport=shm").unwrap();
+        assert_eq!(s.resolved_transport().unwrap(), TransportKind::Shm);
+        s.set("transport=hybrid").unwrap();
+        assert_eq!(s.resolved_transport().unwrap(), TransportKind::Hybrid);
         // explicit + contradictory
         s.set("executor=threaded").unwrap();
         let err = s.resolved_transport().unwrap_err().to_string();
+        assert!(err.contains("hybrid"), "{err}");
+        assert!(err.contains("multiprocess"), "{err}");
+        s.set("transport=tcp").unwrap();
+        let err = s.resolved_transport().unwrap_err().to_string();
         assert!(err.contains("tcp"), "{err}");
+        // channels is explicitly fine on single-process executors...
+        s.set("transport=channels").unwrap();
+        assert_eq!(s.resolved_transport().unwrap(), TransportKind::Channels);
+        // ...and explicitly wrong on multiprocess
+        s.set("executor=multiprocess").unwrap();
+        let err = s.resolved_transport().unwrap_err().to_string();
+        assert!(err.contains("channels"), "{err}");
         assert!(s.set("transport=rdma").is_err());
     }
 

@@ -33,6 +33,7 @@
 use anyhow::Result;
 
 use crate::comm::cost::{cast_time, ring_allreduce_time, tree_broadcast_time, DEVICE_MEM_BW};
+use crate::comm::transport::wire::{roundtrip_combine, roundtrip_inplace};
 use crate::comm::{ring_allreduce_mean, sum_buffers, GroupRotation, Payload, Wire};
 use crate::trainer::strategy::{CommStats, RankCtx, RankStrategy, StepCtx, Strategy};
 
@@ -204,17 +205,14 @@ impl Daso {
                 .iter()
                 .map(|&r| unsafe { &mut (*ptr.add(r)).params })
                 .collect();
-            // transport packaging: mirror GroupComm's cast roundtrips —
-            // each contribution at the member boundary, the reduced
-            // result on the way back — so serial == threaded == tcp at
-            // every wire setting (no-ops at the default f32 wire)
-            for b in bufs.iter_mut() {
-                ctx.global_wire.quantize(b);
-            }
-            ring_allreduce_mean(&mut bufs, Wire::Bf16);
-            for b in bufs.iter_mut() {
-                ctx.global_wire.quantize(b);
-            }
+            // transport packaging: the shared wire::roundtrip helper
+            // mirrors GroupComm's casts — each contribution at the
+            // member boundary, the reduced result on the way back — so
+            // serial == threaded == tcp == shm == hybrid at every wire
+            // setting (no-ops at the default f32 wire)
+            roundtrip_inplace(ctx.global_wire, &mut bufs, |b| {
+                ring_allreduce_mean(b, Wire::Bf16)
+            });
         }
         let ring_dt = ring_allreduce_time(members.len(), frame_bytes, &ctx.fabric.inter);
         for &r in &members {
@@ -270,19 +268,13 @@ impl Daso {
         let group = self.rotation.advance();
         let members = topo.group_members(group);
 
-        // transport packaging: mirror AsyncGroup — snapshots are cast at
-        // contribute, the completed sum again before delivery. At the
-        // default f32 wire this is the zero-copy reference path.
+        // transport packaging: the shared wire::roundtrip helper
+        // mirrors AsyncGroup — snapshots are cast at contribute, the
+        // completed sum again before delivery. At the default f32 wire
+        // this is the zero-copy reference path.
         let bufs: Vec<&Vec<f32>> =
             members.iter().map(|&r| &ctx.cluster.workers[r].params).collect();
-        let sum = if ctx.global_wire == Wire::F32 {
-            sum_buffers(&bufs)
-        } else {
-            let quantized = ctx.global_wire.quantized_copies(&bufs);
-            let mut sum = sum_buffers(&quantized.iter().collect::<Vec<_>>());
-            ctx.global_wire.quantize(&mut sum);
-            sum
-        };
+        let sum = roundtrip_combine(ctx.global_wire, &bufs, sum_buffers);
 
         let send_start = members
             .iter()

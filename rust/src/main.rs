@@ -82,7 +82,7 @@ fn run_spec(
     train_d: &dyn daso::data::Dataset,
     val_d: &dyn daso::data::Dataset,
 ) -> Result<Option<daso::trainer::RunReport>> {
-    spec.resolved_transport()?;
+    let transport = spec.resolved_transport()?;
     match spec.executor {
         daso::cluster::ExecutorKind::Serial => {
             let mut strategy = spec.build_strategy();
@@ -95,7 +95,15 @@ fn run_spec(
         daso::cluster::ExecutorKind::Multiprocess => {
             let role = daso::comm::transport::tcp::TcpRole::from_env()?;
             let factory = spec.build_rank_strategies();
-            daso::cluster::train_multiprocess(rt, &spec.train, train_d, val_d, &factory, &role)
+            daso::cluster::train_multiprocess(
+                rt,
+                &spec.train,
+                train_d,
+                val_d,
+                &factory,
+                &role,
+                transport,
+            )
         }
     }
 }
@@ -160,9 +168,12 @@ fn cmd_launch(args: &Args) -> Result<()> {
         spec.train.gpus_per_node = w;
     }
     let (nodes, wpn) = (spec.train.nodes, spec.train.gpus_per_node);
-    spec.resolved_transport()?;
+    let transport = spec.resolved_transport()?;
 
-    let launcher = daso::cluster::launch::Launcher::bind(bind, nodes, wpn)?;
+    // binds the listener AND (for shm-backed transports) creates the
+    // segment directory — the launcher keeps cleanup ownership of the
+    // segments through `shm_guard` below, so every exit path reaps them
+    let launcher = daso::cluster::launch::Launcher::bind(bind, nodes, wpn, transport)?;
     let addr = launcher.addr();
 
     // reconstruct the peer command line: forward the run-defining flags,
@@ -191,6 +202,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
         format!("global_wire={}", spec.train.global_wire.name()),
         format!("leader_placement={}", spec.train.leader_placement.name()),
         format!("pipeline_chunk_elems={}", spec.train.pipeline_chunk_elems),
+        format!("transport={}", transport.name()),
     ] {
         train_args.push("--set".into());
         train_args.push(forced);
@@ -205,30 +217,50 @@ fn cmd_launch(args: &Args) -> Result<()> {
         spec.train.seed,
     )?;
     eprintln!(
-        "launching {} with {}: {} node process(es) x {} workers over tcp on {addr}",
+        "launching {} with {}: {} node process(es) x {} workers over {} on {addr}",
         spec.model,
         spec.strategy.name(),
         nodes,
-        wpn
+        wpn,
+        transport.name()
     );
-    let mut children = launcher.spawn_peers(&train_args)?;
+    let children = launcher.spawn_peers(&train_args)?;
     let factory = spec.build_rank_strategies();
-    let listener = launcher.into_listener();
-    let report = match daso::cluster::train_coordinator(
+    let (listener, shm_guard) = launcher.into_parts();
+    let shm_dir = shm_guard.as_ref().map(|d| d.path().to_path_buf());
+
+    // watchdog: a peer dying before the handshake aborts the rendezvous
+    // with a named error instead of waiting out comm_timeout_ms; the
+    // shm segments are reaped by shm_guard on every path below
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+    let children = Arc::new(Mutex::new(children));
+    let done = Arc::new(AtomicBool::new(false));
+    let watchdog = daso::cluster::launch::spawn_watchdog(children.clone(), addr, done.clone());
+
+    let result = daso::cluster::train_coordinator(
         &rt,
         &spec.train,
         &*train_d,
         &*val_d,
         &factory,
         listener,
-    ) {
+        transport,
+        shm_dir,
+    );
+    done.store(true, Ordering::Release);
+    let _ = watchdog.join();
+    let kids = std::mem::take(&mut *children.lock().unwrap());
+    let report = match result {
         Ok(report) => report,
         Err(e) => {
-            daso::cluster::launch::kill_peers(&mut children);
+            let mut kids = kids;
+            daso::cluster::launch::kill_peers(&mut kids);
             return Err(e);
         }
     };
-    daso::cluster::launch::wait_peers(children)?;
+    daso::cluster::launch::wait_peers(kids)?;
+    drop(shm_guard);
     emit_report(&spec, &report)
 }
 

@@ -56,7 +56,7 @@ pub fn report_json(report: &RunReport) -> Value {
                 ("bytes_inter", num(report.comm.bytes_inter as f64)),
                 ("bytes_intra", num(report.comm.bytes_intra as f64)),
                 ("comm_wait_s", num(report.comm.comm_wait_s)),
-                // transport-level bytes each process wrote to inter-node
+                // transport-level bytes each process wrote to its peer
                 // links (node order; empty for single-process runs) —
                 // the leader-placement hot-spot metric
                 (
@@ -64,6 +64,29 @@ pub fn report_json(report: &RunReport) -> Value {
                     arr(report
                         .comm
                         .wire_bytes_by_node
+                        .iter()
+                        .map(|&b| num(b as f64))
+                        .collect()),
+                ),
+                // the node-local-class share of the above (links between
+                // co-hosted processes; the rest crossed hosts)
+                (
+                    "wire_bytes_intra_by_node",
+                    arr(report
+                        .comm
+                        .wire_bytes_intra_by_node
+                        .iter()
+                        .map(|&b| num(b as f64))
+                        .collect()),
+                ),
+                // bytes physically carried on shared-memory rings
+                // (all-zero under --transport tcp; under hybrid this is
+                // the node-local tier that left the TCP counters)
+                (
+                    "wire_bytes_shm_by_node",
+                    arr(report
+                        .comm
+                        .wire_bytes_shm_by_node
                         .iter()
                         .map(|&b| num(b as f64))
                         .collect()),

@@ -295,13 +295,13 @@ pub fn train(
 /// Evaluate the consensus model: the mean of all replicas' parameters
 /// (what extracting the trained network from the DPNN would produce).
 ///
-/// Mirrors the threaded executors' world-group exchange: the
-/// contributions and the mean cross the global tier, so they take the
-/// wire-format cast on both legs — the same roundtrips
-/// `GroupComm::exchange` applies, keeping the consensus bit-identical
-/// across executors at every wire setting. `wire` is the *resolved*
-/// wire (the caller passes `Wire::F32` on single-node topologies, where
-/// there is no inter tier).
+/// Mirrors the threaded executors' world-group exchange through the
+/// shared `wire::roundtrip` helper: the contributions and the mean
+/// cross the global tier, so they take the wire-format cast on both
+/// legs — the same roundtrips `GroupComm::exchange` applies, keeping
+/// the consensus bit-identical across executors at every wire setting.
+/// `wire` is the *resolved* wire (the caller passes `Wire::F32` on
+/// single-node topologies, where there is no inter tier).
 fn eval_consensus(
     rt: &ModelRuntime,
     cluster: &ClusterState,
@@ -310,12 +310,6 @@ fn eval_consensus(
     wire: Wire,
 ) -> Result<MetricAccum> {
     let bufs: Vec<&Vec<f32>> = cluster.workers.iter().map(|w| &w.params).collect();
-    let mut consensus = if wire == Wire::F32 {
-        naive_mean(&bufs)
-    } else {
-        let quantized = wire.quantized_copies(&bufs);
-        naive_mean(&quantized.iter().collect::<Vec<_>>())
-    };
-    wire.quantize(&mut consensus);
+    let consensus = crate::comm::transport::wire::roundtrip_combine(wire, &bufs, naive_mean);
     evaluate(rt, &consensus, val, epoch)
 }

@@ -24,12 +24,20 @@ pub struct CommStats {
     pub bytes_intra: u64,
     /// virtual seconds spent blocked on communication (summed over workers)
     pub comm_wait_s: f64,
-    /// actual bytes each process wrote to inter-node links, indexed by
+    /// actual bytes each process wrote to its peer links, indexed by
     /// node id (transport-level accounting from the transport-backed
     /// executors; empty for serial runs, all-zero for single-process
     /// transports). This is the hot-spot metric: under star placement
     /// node 0 dominates, under mesh the load spreads.
     pub wire_bytes_by_node: Vec<u64>,
+    /// the node-local-class share of `wire_bytes_by_node`: bytes on
+    /// links between co-hosted processes (all of them for loopback
+    /// launches; the inter-host share is the difference).
+    pub wire_bytes_intra_by_node: Vec<u64>,
+    /// bytes physically carried by shared-memory rings, indexed by node
+    /// id (all-zero for `--transport tcp`; under `hybrid` this is the
+    /// node-local tier that left the TCP counters).
+    pub wire_bytes_shm_by_node: Vec<u64>,
 }
 
 /// One training round (each worker has done one forward-backward pass) as

@@ -1,0 +1,341 @@
+//! Shared-memory / hybrid transport contract tests (native backend):
+//!
+//! - a 3-process Horovod run over `--transport hybrid` (and `shm`) must
+//!   produce bit-identical final parameters and records to `--executor
+//!   serial` AND to the tcp transport at every `--wire f32|bf16|f16` —
+//!   the acceptance criterion of the shm subsystem (CI-enforced);
+//! - run reports must show the node-local tier carried on shm links:
+//!   `wire_bytes_shm_by_node` > 0 on every node, with only the
+//!   control-group trickle left on TCP under hybrid, and everything on
+//!   rings under shm;
+//! - a missing peer must stay a bounded error (never a hang) when rings
+//!   are in play;
+//! - `daso launch --transport hybrid` must work end-to-end through the
+//!   real binary and tear its segments down (no files leaked under
+//!   /dev/shm, including for the failure paths exercised in CI).
+//!
+//! The test process itself acts as the coordinator (node 0) through the
+//! library API; peers are real `daso` child processes joined through the
+//! `DASO_COORD_ADDR` / `DASO_NODE_ID` env handshake.
+
+#![cfg(all(not(feature = "pjrt"), unix))]
+
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use daso::cluster::train_with_transport;
+use daso::comm::transport::tcp::{TcpTransport, TcpTuning, ENV_COORD_ADDR, ENV_NODE_ID};
+use daso::comm::TransportKind;
+use daso::config::RunSpec;
+use daso::runtime::Engine;
+use daso::trainer::{train, RunReport};
+
+/// The shared run shape: 3 nodes x 2 workers (so mesh leaders land on
+/// distinct processes and every ring pair carries traffic), small but
+/// long enough to cross several collective rounds per epoch.
+const SETS: &[&str] = &[
+    "nodes=3",
+    "gpus_per_node=2",
+    "epochs=2",
+    "train.train_samples=768",
+    "train.val_samples=128",
+    "train.lr_scale=6",
+];
+
+fn spec_with_extra(strategy: &str, extra: &[&str]) -> RunSpec {
+    let mut s = RunSpec::default_for("mlp");
+    for set in SETS.iter().chain(extra) {
+        s.set(set).unwrap();
+    }
+    s.set(&format!("strategy={strategy}")).unwrap();
+    s
+}
+
+/// Deadlock guard: run `f` on a helper thread and panic if it does not
+/// finish in time (a hung handshake would otherwise stall CI forever).
+fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    use std::sync::mpsc::RecvTimeoutError;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(out) => {
+            handle.join().expect("runner thread panicked after reporting");
+            out
+        }
+        Err(RecvTimeoutError::Disconnected) => match handle.join() {
+            Err(panic) => std::panic::resume_unwind(panic),
+            Ok(_) => unreachable!("runner dropped the channel without sending"),
+        },
+        Err(RecvTimeoutError::Timeout) => {
+            panic!("timed out after {secs}s — transport deadlock?")
+        }
+    }
+}
+
+fn serial_report_with(strategy: &str, extra: &[&str]) -> RunReport {
+    let spec = spec_with_extra(strategy, extra);
+    let engine = Engine::native();
+    let rt = engine.model("mlp").unwrap();
+    let (tr, va) = daso::data::for_model(
+        &rt.spec,
+        spec.train.train_samples,
+        spec.train.val_samples,
+        spec.train.seed,
+    )
+    .unwrap();
+    let mut strategy = spec.build_strategy();
+    train(&rt, &spec.train, &*tr, &*va, strategy.as_mut()).unwrap()
+}
+
+/// Spawn the peer for `node` as a real `daso` process with the same run
+/// shape and transport, joined through the env handshake.
+fn spawn_peer(addr: &str, node: usize, strategy: &str, transport: &str, extra: &[&str]) -> Child {
+    let exe = env!("CARGO_BIN_EXE_daso");
+    let mut args = vec![
+        "train".to_string(),
+        "--model".into(),
+        "mlp".into(),
+        "--strategy".into(),
+        strategy.into(),
+        "--executor".into(),
+        "multiprocess".into(),
+        "--transport".into(),
+        transport.into(),
+    ];
+    for set in SETS.iter().chain(extra) {
+        args.push("--set".into());
+        args.push(set.to_string());
+    }
+    Command::new(exe)
+        .args(&args)
+        .env(ENV_COORD_ADDR, addr)
+        .env(ENV_NODE_ID, node.to_string())
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawning the peer daso process")
+}
+
+/// Run the 3-node cluster over `transport`: this process as coordinator
+/// (library API), two child `daso` processes joined through the env
+/// handshake. The coordinator creates — and owns — the shm segment dir
+/// when the transport needs one.
+fn multiprocess_report(strategy: &str, transport: TransportKind, extra: &[&str]) -> RunReport {
+    let spec = spec_with_extra(strategy, extra);
+    let engine = Engine::native();
+    let rt = engine.model("mlp").unwrap();
+    let (tr, va) = daso::data::for_model(
+        &rt.spec,
+        spec.train.train_samples,
+        spec.train.val_samples,
+        spec.train.seed,
+    )
+    .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut children: Vec<Child> = (1..spec.train.nodes)
+        .map(|node| spawn_peer(&addr, node, strategy, transport.name(), extra))
+        .collect();
+    let factory = spec.build_rank_strategies();
+    let tuning = TcpTuning::new(Duration::from_secs(60), spec.train.global_wire)
+        .with_placement(spec.train.leader_placement)
+        .with_chunk_elems(spec.train.pipeline_chunk_elems)
+        .with_transport(transport);
+    let mut tp = TcpTransport::coordinator(spec.train.topology(), listener, tuning);
+    let result = train_with_transport(&rt, &spec.train, &*tr, &*va, &factory, &mut tp);
+    let report = match result {
+        Ok(r) => r.expect("the coordinator hosts rank 0 and owns the report"),
+        Err(e) => {
+            for child in &mut children {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            panic!("coordinator failed: {e:#}");
+        }
+    };
+    for (node, mut child) in children.into_iter().enumerate() {
+        let status = child.wait().expect("reaping the peer process");
+        assert!(status.success(), "peer process for node {} exited with {status}", node + 1);
+    }
+    report
+}
+
+/// Bitwise comparison of two reports (the serial == shm/hybrid contract).
+fn assert_reports_identical(serial: &RunReport, multi: &RunReport, label: &str) {
+    assert_eq!(serial.final_params.len(), multi.final_params.len());
+    for (w, (a, b)) in serial.final_params.iter().zip(&multi.final_params).enumerate() {
+        assert_eq!(a, b, "[{label}] worker {w} parameters diverged");
+    }
+    for (a, b) in serial.records.iter().zip(&multi.records) {
+        assert_eq!(a.train_loss, b.train_loss, "[{label}] epoch {} loss diverged", a.epoch);
+        assert_eq!(a.sim_time_s, b.sim_time_s, "[{label}] epoch {} sim time diverged", a.epoch);
+    }
+    assert_eq!(serial.final_metric, multi.final_metric, "[{label}] final metric diverged");
+    assert_eq!(serial.comm.bytes_inter, multi.comm.bytes_inter, "[{label}] byte counters");
+}
+
+#[test]
+fn hybrid_matches_serial_and_tcp_bitwise_at_every_wire() {
+    // the acceptance criterion: a 3-process hybrid launch must be
+    // bit-identical to serial AND to the tcp transport at every --wire
+    with_timeout(600, || {
+        for wire in ["f32", "bf16", "f16"] {
+            let extra = [format!("global_wire={wire}")];
+            let extra: Vec<&str> = extra.iter().map(|s| s.as_str()).collect();
+            let serial = serial_report_with("horovod", &extra);
+            let tcp = multiprocess_report("horovod", TransportKind::Tcp, &extra);
+            let hybrid = multiprocess_report("horovod", TransportKind::Hybrid, &extra);
+            assert_reports_identical(&serial, &tcp, &format!("tcp/{wire}"));
+            assert_reports_identical(&serial, &hybrid, &format!("hybrid/{wire}"));
+            assert!(hybrid.final_metric > 0.5, "{}", hybrid.summary_line());
+        }
+    });
+}
+
+#[test]
+fn shm_matches_serial_bitwise_and_rides_rings_only() {
+    with_timeout(360, || {
+        for wire in ["f32", "bf16"] {
+            let extra = [format!("global_wire={wire}")];
+            let extra: Vec<&str> = extra.iter().map(|s| s.as_str()).collect();
+            let serial = serial_report_with("horovod", &extra);
+            let shm = multiprocess_report("horovod", TransportKind::Shm, &extra);
+            assert_reports_identical(&serial, &shm, &format!("shm/{wire}"));
+            // every frame of a pure-shm launch rides a ring
+            assert_eq!(shm.comm.wire_bytes_shm_by_node.len(), 3);
+            for (node, (&total, &on_shm)) in shm
+                .comm
+                .wire_bytes_by_node
+                .iter()
+                .zip(&shm.comm.wire_bytes_shm_by_node)
+                .enumerate()
+            {
+                assert!(on_shm > 0, "node {node} wrote no ring bytes");
+                assert_eq!(total, on_shm, "node {node} put bytes on a socket under shm");
+            }
+        }
+    });
+}
+
+#[test]
+fn hybrid_daso_moves_node_local_bytes_off_tcp() {
+    // DASO's rotating groups over hybrid: the collective tier rides
+    // rings, only the control-group report plumbing stays on the TCP
+    // mesh — and the split is visible in the run report, per node
+    with_timeout(360, || {
+        let extra = ["daso.warmup_epochs=1", "daso.cooldown_epochs=1"];
+        let tcp = multiprocess_report("daso", TransportKind::Tcp, &extra);
+        let hybrid = multiprocess_report("daso", TransportKind::Hybrid, &extra);
+        assert!(hybrid.comm.blocking_syncs > 0, "blocking phases must run: {:?}", hybrid.comm);
+        assert_eq!(tcp.comm.wire_bytes_shm_by_node, vec![0, 0, 0], "tcp runs use no rings");
+        assert_eq!(hybrid.comm.wire_bytes_shm_by_node.len(), 3);
+        for node in 0..3 {
+            let on_shm = hybrid.comm.wire_bytes_shm_by_node[node];
+            let total = hybrid.comm.wire_bytes_by_node[node];
+            assert!(on_shm > 0, "node {node} used no rings: {:?}", hybrid.comm);
+            // the node-local tier left the TCP counters: what remains on
+            // sockets is strictly below the all-tcp baseline
+            assert!(
+                total - on_shm < tcp.comm.wire_bytes_by_node[node],
+                "node {node} kept {} bytes on tcp (all-tcp baseline {})",
+                total - on_shm,
+                tcp.comm.wire_bytes_by_node[node]
+            );
+            // loopback links are all node-local class
+            assert_eq!(total, hybrid.comm.wire_bytes_intra_by_node[node]);
+        }
+    });
+}
+
+#[test]
+fn missing_peer_is_a_bounded_error_with_rings() {
+    with_timeout(60, || {
+        let mut spec = spec_with_extra("horovod", &[]);
+        spec.set("comm_timeout_ms=500").unwrap();
+        let engine = Engine::native();
+        let rt = engine.model("mlp").unwrap();
+        let (tr, va) = daso::data::for_model(
+            &rt.spec,
+            spec.train.train_samples,
+            spec.train.val_samples,
+            spec.train.seed,
+        )
+        .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let factory = spec.build_rank_strategies();
+        let mut tp = TcpTransport::coordinator(
+            spec.train.topology(),
+            listener,
+            TcpTuning::new(Duration::from_millis(500), spec.train.global_wire)
+                .with_transport(TransportKind::Hybrid),
+        );
+        let err = train_with_transport(&rt, &spec.train, &*tr, &*va, &factory, &mut tp)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("peer"), "root cause should name the missing peers: {err}");
+    });
+}
+
+#[test]
+fn launch_cli_hybrid_end_to_end_with_clean_teardown() {
+    with_timeout(300, || {
+        let exe = env!("CARGO_BIN_EXE_daso");
+        let out_dir =
+            std::env::temp_dir().join(format!("daso_launch_shm_e2e_{}", std::process::id()));
+        let child = Command::new(exe)
+            .args([
+                "launch",
+                "--nodes",
+                "2",
+                "--workers-per-node",
+                "2",
+                "--model",
+                "mlp",
+                "--strategy",
+                "horovod",
+                "--transport",
+                "hybrid",
+                "--set",
+                "epochs=2",
+                "--set",
+                "train.train_samples=512",
+                "--set",
+                "train.val_samples=128",
+                "--out",
+            ])
+            .arg(&out_dir)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .expect("spawning daso launch");
+        let pid = child.id();
+        let output = child.wait_with_output().expect("running daso launch");
+        assert!(
+            output.status.success(),
+            "daso launch failed\nstderr: {}",
+            String::from_utf8_lossy(&output.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&output.stdout);
+        assert!(stdout.contains("world=4"), "summary should report 4 workers: {stdout}");
+        let json = std::fs::read_to_string(out_dir.join("mlp_horovod.json"))
+            .expect("launch writes the run json on the coordinator");
+        assert!(json.contains("\"wire_bytes_shm_by_node\""), "{json}");
+        // clean teardown: the launcher (that child process) created the
+        // segment dir under its own pid and must have removed it
+        let base = daso::comm::transport::shm::shm_base_dir();
+        let leaked: Vec<String> = std::fs::read_dir(&base)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .map(|e| e.file_name().to_string_lossy().into_owned())
+                    .filter(|n| n.starts_with(&format!("daso-shm-{pid}-")))
+                    .collect()
+            })
+            .unwrap_or_default();
+        assert!(leaked.is_empty(), "launch leaked shm segments: {leaked:?}");
+        std::fs::remove_dir_all(&out_dir).ok();
+    });
+}
