@@ -1,0 +1,150 @@
+#!/usr/bin/env python3
+"""Chaos smoke: SIGKILL a random peer of a live elastic launch.
+
+Drives `daso launch` (3 node processes x 2 workers by default) with
+checkpointing on, waits until the first full checkpoint generation is on
+disk, then SIGKILLs one randomly chosen non-coordinator peer process.
+The launch must regroup onto the survivors and finish with exit code 0;
+the emitted run JSON is then checked by `check_run_json.py chaos`.
+
+Peers are found through /proc: direct children of the launch process
+whose environment carries DASO_NODE_ID >= 1, so the kill can never hit
+an unrelated process.
+"""
+
+import argparse
+import os
+import random
+import shutil
+import signal
+import subprocess
+import sys
+import time
+
+
+def ppid_of(pid):
+    with open(f"/proc/{pid}/stat") as f:
+        stat = f.read()
+    # field 4, after the parenthesised comm (which may contain spaces)
+    return int(stat.rsplit(")", 1)[1].split()[1])
+
+
+def peers_of(launch_pid):
+    """node id -> pid for every live peer child of the launch process."""
+    peers = {}
+    for entry in os.listdir("/proc"):
+        if not entry.isdigit():
+            continue
+        pid = int(entry)
+        try:
+            if ppid_of(pid) != launch_pid:
+                continue
+            with open(f"/proc/{pid}/environ", "rb") as f:
+                environ = f.read().split(b"\0")
+        except (OSError, ValueError):
+            continue  # raced a process exit
+        for kv in environ:
+            if kv.startswith(b"DASO_NODE_ID="):
+                node = int(kv.split(b"=", 1)[1])
+                if node >= 1:
+                    peers[node] = pid
+    return peers
+
+
+def first_full_generation(ckpt_dir, world):
+    """True once some generation directory holds all `world` rank files."""
+    try:
+        gens = os.listdir(ckpt_dir)
+    except OSError:
+        return False
+    for gen in gens:
+        path = os.path.join(ckpt_dir, gen)
+        try:
+            files = [f for f in os.listdir(path) if f.endswith(".ckpt")]
+        except OSError:
+            continue
+        if len(files) >= world:
+            return True
+    return False
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--bin", default="./target/release/daso")
+    parser.add_argument("--nodes", type=int, default=3)
+    parser.add_argument("--workers", type=int, default=2)
+    parser.add_argument("--epochs", type=int, default=8)
+    parser.add_argument("--checkpoint-every", type=int, default=2)
+    parser.add_argument("--out-dir", default="/tmp/daso_chaos")
+    parser.add_argument("--ckpt-dir", default="/tmp/daso_chaos_ckpt")
+    parser.add_argument("--timeout", type=int, default=300, help="whole-run bound, seconds")
+    parser.add_argument("--seed", type=int, default=None, help="fix the victim choice")
+    args = parser.parse_args()
+
+    rng = random.Random(args.seed)
+    for d in (args.out_dir, args.ckpt_dir):
+        shutil.rmtree(d, ignore_errors=True)
+    os.makedirs(args.out_dir)
+
+    cmd = [
+        args.bin, "launch",
+        "--nodes", str(args.nodes),
+        "--workers-per-node", str(args.workers),
+        "--model", "mlp",
+        "--strategy", "daso",
+        "--checkpoint-dir", args.ckpt_dir,
+        "--set", f"epochs={args.epochs}",
+        "--set", f"checkpoint_every_epochs={args.checkpoint_every}",
+        "--set", "daso.warmup_epochs=1",
+        "--set", "daso.cooldown_epochs=1",
+        "--set", "train.train_samples=768",
+        "--set", "train.val_samples=128",
+        "--out", args.out_dir,
+    ]
+    print("+", " ".join(cmd), flush=True)
+    log_path = os.path.join(args.out_dir, "launch.log")
+    deadline = time.monotonic() + args.timeout
+    with open(log_path, "wb") as log:
+        proc = subprocess.Popen(cmd, stdout=log, stderr=subprocess.STDOUT)
+        try:
+            # let the cluster write one full snapshot before pulling a node
+            world = args.nodes * args.workers
+            while not first_full_generation(args.ckpt_dir, world):
+                if proc.poll() is not None:
+                    sys.exit(f"launch exited ({proc.returncode}) before the first "
+                             f"checkpoint generation — see {log_path}")
+                if time.monotonic() > deadline:
+                    proc.kill()
+                    sys.exit(f"no checkpoint generation after {args.timeout}s — see {log_path}")
+                time.sleep(0.05)
+
+            peers = peers_of(proc.pid)
+            if not peers:
+                proc.kill()
+                sys.exit("checkpoint exists but no live peer process was found under /proc")
+            victim_node = rng.choice(sorted(peers))
+            victim_pid = peers[victim_node]
+            print(f"first checkpoint is down; SIGKILLing node {victim_node} "
+                  f"(pid {victim_pid}) of peers {sorted(peers)}", flush=True)
+            os.kill(victim_pid, signal.SIGKILL)
+
+            rc = proc.wait(timeout=max(1, deadline - time.monotonic()))
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            sys.exit(f"launch did not finish within {args.timeout}s after the kill — "
+                     f"see {log_path}")
+        except BaseException:
+            proc.kill()
+            raise
+
+    sys.stdout.write(open(log_path).read())
+    if rc != 0:
+        sys.exit(f"launch exited {rc} — the survivors must complete the run")
+    report = os.path.join(args.out_dir, "mlp_daso.json")
+    if not os.path.exists(report):
+        sys.exit(f"launch succeeded but wrote no run JSON at {report}")
+    print(f"chaos smoke: run completed on the survivors; report at {report}")
+
+
+if __name__ == "__main__":
+    main()

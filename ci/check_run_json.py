@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Assertions over `daso` run-JSON artifacts, driven by the CI smoke jobs.
+
+Subcommands:
+  hot-spot       star vs mesh leader placement: rank 0 must stop being the
+                 wire-byte hot-spot under mesh
+  hybrid-parity  tcp vs hybrid transport: identical results, node-local
+                 bytes migrated onto shm rings
+  chaos          elastic launch after a SIGKILLed peer: the run must have
+                 completed on the survivors with the regroup recorded
+
+Each subcommand exits non-zero with a readable message on the first
+violated assertion, so the workflow step fails with the reason in the log.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def check(cond, message):
+    if not cond:
+        sys.exit(f"FAIL: {message}")
+
+
+def cmd_hot_spot(args):
+    star = load(args.star)["comm"]["wire_bytes_by_node"]
+    mesh = load(args.mesh)["comm"]["wire_bytes_by_node"]
+    print("star per-node wire bytes:", star)
+    print("mesh per-node wire bytes:", mesh)
+    check(len(star) == len(mesh) == args.nodes, "one entry per node process")
+    check(star[0] > max(star[1:]), f"star baseline should peak on rank 0: {star}")
+    check(mesh[0] < star[0], f"mesh rank-0 bytes {mesh[0]} not below star baseline {star[0]}")
+    print(f"rank-0 hot-spot shrank by {100 * (star[0] - mesh[0]) / star[0]:.1f}%")
+
+
+def cmd_hybrid_parity(args):
+    tcp = load(args.tcp)
+    hyb = load(args.hybrid)
+    check(
+        tcp["final_metric"] == hyb["final_metric"],
+        f"final metric diverged: {tcp['final_metric']} vs {hyb['final_metric']}",
+    )
+    check(tcp["loss_curve"] == hyb["loss_curve"], "loss curves diverged")
+    check(
+        tcp["comm"]["bytes_inter"] == hyb["comm"]["bytes_inter"],
+        "inter-node byte accounting diverged",
+    )
+    shm = hyb["comm"]["wire_bytes_shm_by_node"]
+    total = hyb["comm"]["wire_bytes_by_node"]
+    base = tcp["comm"]["wire_bytes_by_node"]
+    print("tcp per-node wire bytes   :", base)
+    print("hybrid per-node wire bytes:", total, "of which shm:", shm)
+    check(
+        len(shm) == args.nodes and all(b > 0 for b in shm),
+        f"node-local bytes must ride shm: {shm}",
+    )
+    check(
+        all(b == 0 for b in tcp["comm"]["wire_bytes_shm_by_node"]),
+        "tcp runs must not touch rings",
+    )
+    left_on_tcp = [t - s for t, s in zip(total, shm)]
+    check(
+        all(l < b for l, b in zip(left_on_tcp, base)),
+        f"hybrid left {left_on_tcp} on tcp, baseline {base}",
+    )
+    print("hybrid parity ok; bytes left on tcp:", left_on_tcp)
+
+
+def cmd_chaos(args):
+    report = load(args.report)
+    regroups = report.get("regroups", [])
+    print("regroups:", regroups)
+    check(len(regroups) >= 1, "the launch must record at least one regroup event")
+    first = regroups[0]
+    check(
+        1 <= first["lost_node"] < args.nodes,
+        f"lost node {first['lost_node']} must be a non-coordinator peer of the "
+        f"{args.nodes}-node launch",
+    )
+    check(
+        first["nodes"] == args.nodes - len(regroups),
+        f"survivor topology {first['nodes']} nodes, expected {args.nodes - len(regroups)}",
+    )
+    check(
+        first["gpus_per_node"] == args.workers,
+        f"workers per node changed across the regroup: {first['gpus_per_node']}",
+    )
+    check(
+        first["resume_epoch"] >= 1,
+        f"the survivors must resume from a real snapshot, got epoch {first['resume_epoch']}",
+    )
+    check(
+        report["epochs"] == args.epochs,
+        f"the resumed run must still cover all {args.epochs} epochs, got {report['epochs']}",
+    )
+    final_world = (args.nodes - len(regroups)) * args.workers
+    check(
+        report["world"] == final_world,
+        f"final world {report['world']}, expected {final_world} after the regroup",
+    )
+    curve = report["loss_curve"]
+    check(
+        all(isinstance(v, (int, float)) and v == v for v in curve),
+        f"loss curve must be finite across the regroup: {curve}",
+    )
+    check(
+        curve[-1] < curve[0],
+        f"training must still make progress across the regroup: {curve}",
+    )
+    print(
+        f"chaos ok: lost node {first['lost_node']}, resumed at epoch "
+        f"{first['resume_epoch']} on {first['nodes']}x{first['gpus_per_node']}, "
+        f"finished {report['epochs']} epochs"
+    )
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    sub = parser.add_subparsers(dest="command", required=True)
+
+    p = sub.add_parser("hot-spot", help="star vs mesh rank-0 hot-spot assertion")
+    p.add_argument("--star", required=True, help="run JSON of the star-placement launch")
+    p.add_argument("--mesh", required=True, help="run JSON of the mesh-placement launch")
+    p.add_argument("--nodes", type=int, default=3)
+    p.set_defaults(func=cmd_hot_spot)
+
+    p = sub.add_parser("hybrid-parity", help="tcp vs hybrid parity + shm byte migration")
+    p.add_argument("--tcp", required=True, help="run JSON of the tcp launch")
+    p.add_argument("--hybrid", required=True, help="run JSON of the hybrid launch")
+    p.add_argument("--nodes", type=int, default=2)
+    p.set_defaults(func=cmd_hybrid_parity)
+
+    p = sub.add_parser("chaos", help="peer-death regroup assertions")
+    p.add_argument("--report", required=True, help="run JSON of the elastic launch")
+    p.add_argument("--nodes", type=int, required=True, help="node count at launch")
+    p.add_argument("--workers", type=int, required=True, help="workers per node")
+    p.add_argument("--epochs", type=int, required=True, help="configured epoch count")
+    p.set_defaults(func=cmd_chaos)
+
+    args = parser.parse_args()
+    args.func(args)
+
+
+if __name__ == "__main__":
+    main()

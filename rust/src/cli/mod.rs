@@ -123,6 +123,15 @@ COMMANDS:
                               (default f32 or DASO_GLOBAL_WIRE; bf16/f16
                               halve bytes on the wire and are negotiated
                               in the multiprocess handshake)
+                  --checkpoint-dir <dir>    cut a versioned, sha256-
+                              fingerprinted cluster snapshot into <dir>
+                              every checkpoint_every_epochs epochs
+                              (params, optimizer + DASO cycler state,
+                              virtual clocks, shard cursors)
+                  --resume                  continue from the newest usable
+                              checkpoint generation in --checkpoint-dir
+                              (strategy=daso only); the continuation is
+                              bit-identical to an uninterrupted run
                   --config <file.json>      JSON config (see config module)
                   --set key=value           override (repeatable); notable keys:
                               comm_timeout_ms=N bounds rendezvous waits;
@@ -134,12 +143,30 @@ COMMANDS:
                               pipeline_chunk_elems=N splits f32 frames
                               above N elements into pipelined chunks,
                               default 65536 or DASO_PIPELINE_CHUNK_ELEMS,
-                              0 disables
+                              0 disables;
+                              checkpoint_every_epochs=K snapshot cadence
+                              (0 = off; any K>0 also quiesces in-flight
+                              DASO syncs at those epochs so resumed and
+                              uninterrupted runs match bit for bit);
+                              stop_after_epochs=K clean deterministic
+                              stop after K epochs (resume-parity tests);
+                              straggler_node=I straggler_factor=F slow
+                              node I's simulated compute by F;
+                              daso.absorb_stragglers=true lets the
+                              cycler stretch B/W while epoch-end clock
+                              skew stays above daso.absorb_threshold for
+                              daso.absorb_patience epochs
                   --out <dir>               write run.csv / run.json
     launch      spawn a multi-process run on this machine: one process per
                 node over the TCP loopback transport, this process is node 0
                 (peers mesh directly with each other; the coordinator only
-                brokers the address book)
+                brokers the address book). With --checkpoint-dir and
+                checkpoint_every_epochs set the launch is *elastic*: when a
+                peer process dies the survivors reload the newest snapshot,
+                re-deal the dead node's data shards, re-rendezvous under a
+                bumped launch generation (stale processes are refused at
+                the handshake) and continue; each regroup is recorded in
+                the run JSON
                   --nodes N                 node processes (default: the
                                             config's nodes)
                   --workers-per-node M      worker threads per node (default:

@@ -1,0 +1,915 @@
+//! Versioned, fingerprinted cluster checkpoints — the substrate of the
+//! elastic fault-tolerance path.
+//!
+//! A checkpoint *generation* is one directory `gen-<epochs>[-r<k>]`
+//! under the run's `--checkpoint-dir`, holding one `rank-<r>.ckpt` file
+//! per worker. Every executor writes the same format: the serial
+//! reference loop writes all ranks itself, each multiprocess node
+//! process writes the ranks it hosts — so a serial run can resume a
+//! multiprocess checkpoint and vice versa. Files are written atomically
+//! (tmp + rename) and a generation only *counts* once every rank file
+//! decodes and agrees, so a reader can never see a half-written
+//! snapshot: it simply skips the incomplete generation and takes the
+//! previous one.
+//!
+//! Each file is `[magic][format version][sha256(payload)][payload]`.
+//! The payload opens with a [`RunFingerprint`] — model, strategy,
+//! topology, epoch budget, seed and wire — so a checkpoint can never be
+//! silently restored into a different experiment. The `-r<k>` suffix is
+//! the elastic-relaunch *attempt*: after a peer dies, the launch
+//! supervisor rewrites the survivors' newest complete generation for
+//! the shrunken topology ([`rewrite_for_survivors`]) and bumps the
+//! attempt so the rewrite outranks the generation it came from.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::comm::Topology;
+use crate::trainer::loop_::{EpochRecord, TrainConfig};
+use crate::util::sha::sha256;
+
+/// File magic — 8 bytes so the header stays 8-byte aligned.
+pub const MAGIC: &[u8; 8] = b"DASOCKPT";
+/// On-disk format version; bumped on any layout change.
+pub const CHECKPOINT_VERSION: u32 = 1;
+/// Header = magic + version + payload digest.
+const HEADER_LEN: usize = 8 + 4 + 32;
+/// Complete generations kept on disk (older ones are pruned).
+pub const KEEP_GENERATIONS: usize = 2;
+
+// ---------------------------------------------------------------------
+// little-endian blob codec (the wire module's helpers are private, and
+// checkpoints deliberately do not share the frame format)
+
+/// Append-only little-endian serializer for checkpoint payloads and
+/// strategy state blobs.
+#[derive(Default)]
+pub struct BlobWriter {
+    buf: Vec<u8>,
+}
+
+impl BlobWriter {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.buf.push(1);
+                self.put_f64(x);
+            }
+            None => self.buf.push(0),
+        }
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.put_u32(b.len() as u32);
+        self.buf.extend_from_slice(b);
+    }
+
+    /// f32 buffers are stored bit-exactly (`to_le_bytes` of the raw
+    /// bits) — resume must reproduce the uninterrupted run to the bit.
+    pub fn put_f32_slice(&mut self, v: &[f32]) {
+        self.put_u32(v.len() as u32);
+        self.buf.reserve(v.len() * 4);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Cursor over a blob; every read fails with a named "truncated
+/// checkpoint" error instead of panicking on short input.
+pub struct BlobReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BlobReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        Self { data, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.data.len(),
+            "truncated checkpoint: wanted {} bytes at offset {}, only {} available",
+            n,
+            self.pos,
+            self.data.len() - self.pos
+        );
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn opt_f64(&mut self) -> Result<Option<f64>> {
+        match self.take(1)?[0] {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64()?)),
+            t => bail!("truncated checkpoint: invalid option tag {t}"),
+        }
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).context("truncated checkpoint: invalid utf-8 string")
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn done(&self) -> Result<()> {
+        ensure!(
+            self.pos == self.data.len(),
+            "checkpoint has {} trailing bytes",
+            self.data.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// checkpoint model
+
+/// Identity of a run. A checkpoint restores only into a run with the
+/// identical fingerprint — resuming a different model, strategy,
+/// topology, epoch budget, seed or wire would silently corrupt results.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunFingerprint {
+    pub model: String,
+    pub strategy: String,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub total_epochs: usize,
+    pub seed: u64,
+    /// resolved global wire name (f32 on single-node topologies)
+    pub wire: String,
+}
+
+impl RunFingerprint {
+    pub fn world(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{}/{} {}x{} epochs={} seed={} wire={}",
+            self.model,
+            self.strategy,
+            self.nodes,
+            self.gpus_per_node,
+            self.total_epochs,
+            self.seed,
+            self.wire
+        )
+    }
+}
+
+/// The expected fingerprint of the run asking to resume.
+pub fn run_fingerprint(model: &str, strategy: &str, cfg: &TrainConfig) -> RunFingerprint {
+    RunFingerprint {
+        model: model.to_string(),
+        strategy: strategy.to_string(),
+        nodes: cfg.nodes,
+        gpus_per_node: cfg.gpus_per_node,
+        total_epochs: cfg.epochs,
+        seed: cfg.seed,
+        wire: cfg.topology().resolve_global_wire(cfg.global_wire).name().to_string(),
+    }
+}
+
+/// One rank's full resumable state: worker buffers and counters, the LR
+/// schedule position, the strategy's opaque state blob, and (rank 0
+/// only) the per-epoch records accumulated so far.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankCheckpoint {
+    pub fp: RunFingerprint,
+    pub rank: usize,
+    /// epochs fully completed — resume starts at this epoch index
+    pub epochs_done: usize,
+    /// monotone batch counter at the snapshot (schedule input)
+    pub global_batch: usize,
+    /// wall seconds consumed before the snapshot (reporting only)
+    pub wall_s: f64,
+    // LR schedule position
+    pub lr_epoch: usize,
+    pub lr_factor: f64,
+    pub lr_best: f64,
+    pub lr_stale: usize,
+    /// `Strategy::save_state` blob (cycler/rotation/phase for DASO)
+    pub strategy_blob: Vec<u8>,
+    // worker state
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+    pub clock: f64,
+    pub batches_done: usize,
+    pub bytes_sent_intra: u64,
+    pub bytes_sent_inter: u64,
+    /// per-epoch records so far (rank 0 only, empty elsewhere)
+    pub records: Vec<EpochRecord>,
+}
+
+impl RankCheckpoint {
+    /// Serialize to the on-disk file bytes (header + fingerprinted
+    /// payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = BlobWriter::new();
+        w.put_str(&self.fp.model);
+        w.put_str(&self.fp.strategy);
+        w.put_u64(self.fp.nodes as u64);
+        w.put_u64(self.fp.gpus_per_node as u64);
+        w.put_u64(self.fp.total_epochs as u64);
+        w.put_u64(self.fp.seed);
+        w.put_str(&self.fp.wire);
+        w.put_u64(self.rank as u64);
+        w.put_u64(self.epochs_done as u64);
+        w.put_u64(self.global_batch as u64);
+        w.put_f64(self.wall_s);
+        w.put_u64(self.lr_epoch as u64);
+        w.put_f64(self.lr_factor);
+        w.put_f64(self.lr_best);
+        w.put_u64(self.lr_stale as u64);
+        w.put_bytes(&self.strategy_blob);
+        w.put_f32_slice(&self.params);
+        w.put_f32_slice(&self.momentum);
+        w.put_f64(self.clock);
+        w.put_u64(self.batches_done as u64);
+        w.put_u64(self.bytes_sent_intra);
+        w.put_u64(self.bytes_sent_inter);
+        w.put_u32(self.records.len() as u32);
+        for r in &self.records {
+            w.put_u64(r.epoch as u64);
+            w.put_f64(r.train_loss);
+            w.put_f64(r.lr);
+            w.put_opt_f64(r.metric);
+            w.put_opt_f64(r.val_loss);
+            w.put_f64(r.sim_time_s);
+            w.put_f64(r.wall_time_s);
+            w.put_str(&r.strategy_state);
+        }
+        let payload = w.finish();
+
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&CHECKPOINT_VERSION.to_le_bytes());
+        out.extend_from_slice(&sha256(&payload));
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Decode file bytes; every failure mode has a named error (bad
+    /// magic, unknown format version, truncation, digest mismatch).
+    pub fn decode(bytes: &[u8]) -> Result<RankCheckpoint> {
+        ensure!(
+            bytes.len() >= 8,
+            "truncated checkpoint: {} bytes is shorter than the file magic",
+            bytes.len()
+        );
+        ensure!(&bytes[..8] == MAGIC, "not a DASO checkpoint (bad magic)");
+        ensure!(
+            bytes.len() >= 12,
+            "truncated checkpoint: header cut inside the format version"
+        );
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        ensure!(
+            version == CHECKPOINT_VERSION,
+            "checkpoint format version {version}, this build reads {CHECKPOINT_VERSION}"
+        );
+        ensure!(
+            bytes.len() >= HEADER_LEN,
+            "truncated checkpoint: header cut inside the payload digest"
+        );
+        let digest: [u8; 32] = bytes[12..HEADER_LEN].try_into().unwrap();
+        let payload = &bytes[HEADER_LEN..];
+        ensure!(
+            sha256(payload) == digest,
+            "checkpoint digest mismatch — file is corrupted or truncated"
+        );
+
+        let mut r = BlobReader::new(payload);
+        let fp = RunFingerprint {
+            model: r.str()?,
+            strategy: r.str()?,
+            nodes: r.usize()?,
+            gpus_per_node: r.usize()?,
+            total_epochs: r.usize()?,
+            seed: r.u64()?,
+            wire: r.str()?,
+        };
+        let rank = r.usize()?;
+        let epochs_done = r.usize()?;
+        let global_batch = r.usize()?;
+        let wall_s = r.f64()?;
+        let lr_epoch = r.usize()?;
+        let lr_factor = r.f64()?;
+        let lr_best = r.f64()?;
+        let lr_stale = r.usize()?;
+        let strategy_blob = r.bytes()?;
+        let params = r.f32_vec()?;
+        let momentum = r.f32_vec()?;
+        let clock = r.f64()?;
+        let batches_done = r.usize()?;
+        let bytes_sent_intra = r.u64()?;
+        let bytes_sent_inter = r.u64()?;
+        let n_records = r.u32()? as usize;
+        let mut records = Vec::with_capacity(n_records);
+        for _ in 0..n_records {
+            records.push(EpochRecord {
+                epoch: r.usize()?,
+                train_loss: r.f64()?,
+                lr: r.f64()?,
+                metric: r.opt_f64()?,
+                val_loss: r.opt_f64()?,
+                sim_time_s: r.f64()?,
+                wall_time_s: r.f64()?,
+                strategy_state: r.str()?,
+            });
+        }
+        r.done()?;
+        Ok(RankCheckpoint {
+            fp,
+            rank,
+            epochs_done,
+            global_batch,
+            wall_s,
+            lr_epoch,
+            lr_factor,
+            lr_best,
+            lr_stale,
+            strategy_blob,
+            params,
+            momentum,
+            clock,
+            batches_done,
+            bytes_sent_intra,
+            bytes_sent_inter,
+            records,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// generation directories
+
+fn gen_dir_name(epochs_done: usize, attempt: u64) -> String {
+    if attempt == 0 {
+        format!("gen-{epochs_done:06}")
+    } else {
+        format!("gen-{epochs_done:06}-r{attempt}")
+    }
+}
+
+/// Parse a generation directory name into its `(epochs_done, attempt)`
+/// ordering key; `None` for unrelated directory entries.
+fn parse_gen_name(name: &str) -> Option<(usize, u64)> {
+    let rest = name.strip_prefix("gen-")?;
+    match rest.split_once("-r") {
+        Some((e, a)) => Some((e.parse().ok()?, a.parse().ok()?)),
+        None => Some((rest.parse().ok()?, 0)),
+    }
+}
+
+fn rank_file(gen: &Path, rank: usize) -> PathBuf {
+    gen.join(format!("rank-{rank}.ckpt"))
+}
+
+/// All generation directories under `dir`, newest first by
+/// `(epochs_done, attempt)`.
+fn list_generations(dir: &Path) -> Result<Vec<(usize, u64, PathBuf)>> {
+    let mut gens = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(gens),
+        Err(e) => return Err(e).with_context(|| format!("listing checkpoint dir {dir:?}")),
+    };
+    for entry in entries {
+        let entry = entry?;
+        if let Some((epochs, attempt)) = entry.file_name().to_str().and_then(parse_gen_name) {
+            if entry.path().is_dir() {
+                gens.push((epochs, attempt, entry.path()));
+            }
+        }
+    }
+    gens.sort_by(|a, b| (b.0, b.1).cmp(&(a.0, a.1)));
+    Ok(gens)
+}
+
+/// Atomically write one rank's file into the generation directory
+/// (tmp + rename; concurrent node processes write disjoint ranks into
+/// the same directory).
+pub fn write_rank(
+    dir: &Path,
+    epochs_done: usize,
+    attempt: u64,
+    ck: &RankCheckpoint,
+) -> Result<PathBuf> {
+    let gen = dir.join(gen_dir_name(epochs_done, attempt));
+    std::fs::create_dir_all(&gen).with_context(|| format!("creating {gen:?}"))?;
+    let path = rank_file(&gen, ck.rank);
+    let tmp = gen.join(format!("rank-{}.ckpt.tmp-{}", ck.rank, std::process::id()));
+    std::fs::write(&tmp, ck.encode()).with_context(|| format!("writing {tmp:?}"))?;
+    std::fs::rename(&tmp, &path).with_context(|| format!("publishing {path:?}"))?;
+    Ok(path)
+}
+
+/// Delete all but the newest `keep` generations. Call from one process
+/// only (rank 0's) after publishing its files.
+pub fn prune(dir: &Path, keep: usize) -> Result<()> {
+    for (_, _, path) in list_generations(dir)?.into_iter().skip(keep) {
+        std::fs::remove_dir_all(&path).with_context(|| format!("pruning {path:?}"))?;
+    }
+    Ok(())
+}
+
+/// A complete, fingerprint-matched generation loaded from disk.
+#[derive(Debug, Clone)]
+pub struct LoadedCheckpoint {
+    pub dir: PathBuf,
+    pub epochs_done: usize,
+    pub attempt: u64,
+    /// one entry per rank, indexed by rank id
+    pub ranks: Vec<RankCheckpoint>,
+}
+
+/// Find and load the newest *usable* generation: every rank file of the
+/// expected world decodes, all agree on `(epochs_done, global_batch)`,
+/// and the fingerprint matches `fp`. Incomplete or corrupt generations
+/// (a snapshot interrupted by the very crash being recovered from) are
+/// skipped; generations for a *different* fingerprint are skipped too
+/// (after a regroup the directory legitimately holds snapshots of the
+/// previous, wider world). Returns `Ok(None)` when the directory holds
+/// no generations at all; fails with a named error when generations
+/// exist but none is usable.
+pub fn load_latest(dir: &Path, fp: &RunFingerprint) -> Result<Option<LoadedCheckpoint>> {
+    let gens = list_generations(dir)?;
+    if gens.is_empty() {
+        return Ok(None);
+    }
+    let mut skip_reasons: Vec<String> = Vec::new();
+    'gens: for (epochs_done, attempt, path) in &gens {
+        let mut ranks = Vec::with_capacity(fp.world());
+        for rank in 0..fp.world() {
+            let file = rank_file(path, rank);
+            let bytes = match std::fs::read(&file) {
+                Ok(b) => b,
+                Err(e) => {
+                    skip_reasons.push(format!("{path:?}: rank {rank}: {e}"));
+                    continue 'gens;
+                }
+            };
+            let ck = match RankCheckpoint::decode(&bytes) {
+                Ok(c) => c,
+                Err(e) => {
+                    skip_reasons.push(format!("{file:?}: {e:#}"));
+                    continue 'gens;
+                }
+            };
+            if ck.fp != *fp {
+                skip_reasons.push(format!(
+                    "{file:?}: fingerprint mismatch: checkpoint was cut for [{}], this run is [{}]",
+                    ck.fp.describe(),
+                    fp.describe()
+                ));
+                continue 'gens;
+            }
+            let first_epochs = ranks.first().map_or(ck.epochs_done, |f| f.epochs_done);
+            let first_batch = ranks.first().map_or(ck.global_batch, |f| f.global_batch);
+            if ck.rank != rank
+                || ck.epochs_done != *epochs_done
+                || ck.epochs_done != first_epochs
+                || ck.global_batch != first_batch
+            {
+                skip_reasons.push(format!("{file:?}: inconsistent with its generation"));
+                continue 'gens;
+            }
+            ranks.push(ck);
+        }
+        return Ok(Some(LoadedCheckpoint {
+            dir: path.clone(),
+            epochs_done: *epochs_done,
+            attempt: *attempt,
+            ranks,
+        }));
+    }
+    bail!(
+        "no usable checkpoint generation in {dir:?} ({} candidate(s) skipped):\n  {}",
+        gens.len(),
+        skip_reasons.join("\n  ")
+    )
+}
+
+/// Rewrite a loaded generation for the world that survives `dead_node`:
+/// drop the dead node's ranks, renumber the survivors' node ids
+/// (order-preserving, coordinator stays node 0) and stamp the new
+/// fingerprint. The caller publishes the result as attempt
+/// `loaded.attempt + 1` so it outranks its source generation; data
+/// re-sharding is implicit — shards are re-dealt from the new world
+/// size when the survivors resume.
+pub fn rewrite_for_survivors(
+    loaded: &LoadedCheckpoint,
+    dead_node: usize,
+    new_fp: &RunFingerprint,
+) -> Result<Vec<RankCheckpoint>> {
+    let old_fp = &loaded.ranks[0].fp;
+    ensure!(
+        dead_node != 0,
+        "cannot regroup away node 0 — the coordinator owns the rendezvous"
+    );
+    ensure!(
+        dead_node < old_fp.nodes,
+        "dead node {dead_node} out of range for a {}-node checkpoint",
+        old_fp.nodes
+    );
+    ensure!(
+        new_fp.nodes == old_fp.nodes - 1 && new_fp.gpus_per_node == old_fp.gpus_per_node,
+        "survivor fingerprint {}x{} does not match a {}x{} checkpoint minus one node",
+        new_fp.nodes,
+        new_fp.gpus_per_node,
+        old_fp.nodes,
+        old_fp.gpus_per_node
+    );
+    let old_topo = Topology::new(old_fp.nodes, old_fp.gpus_per_node);
+    let new_topo = Topology::new(new_fp.nodes, new_fp.gpus_per_node);
+    let mut out = Vec::with_capacity(new_fp.world());
+    let mut new_node = 0usize;
+    for node in 0..old_fp.nodes {
+        if node == dead_node {
+            continue;
+        }
+        for local in 0..old_fp.gpus_per_node {
+            let mut ck = loaded.ranks[old_topo.rank(node, local).global].clone();
+            ck.fp = new_fp.clone();
+            ck.rank = new_topo.rank(new_node, local).global;
+            out.push(ck);
+        }
+        new_node += 1;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    fn test_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("daso_ckpt_{}_{}", name, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn fp(nodes: usize, gpn: usize) -> RunFingerprint {
+        RunFingerprint {
+            model: "mlp".into(),
+            strategy: "daso".into(),
+            nodes,
+            gpus_per_node: gpn,
+            total_epochs: 8,
+            seed: 42,
+            wire: "f32".into(),
+        }
+    }
+
+    fn sample(rank: usize, fp: RunFingerprint) -> RankCheckpoint {
+        RankCheckpoint {
+            fp,
+            rank,
+            epochs_done: 4,
+            global_batch: 128,
+            wall_s: 1.25,
+            lr_epoch: 4,
+            lr_factor: 0.5,
+            lr_best: 0.9,
+            lr_stale: 2,
+            strategy_blob: vec![1, 2, 3, 4],
+            params: vec![0.5, -1.5, 3.25, f32::MIN_POSITIVE],
+            momentum: vec![0.0, -0.0, 1e-30, 2.0],
+            clock: 17.5,
+            batches_done: 32,
+            bytes_sent_intra: 1000,
+            bytes_sent_inter: 2000,
+            records: vec![EpochRecord {
+                epoch: 0,
+                train_loss: 2.0,
+                lr: 0.1,
+                metric: Some(0.5),
+                val_loss: None,
+                sim_time_s: 1.0,
+                wall_time_s: 0.2,
+                strategy_state: "B=4 W=1".into(),
+            }],
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_bit_exact() {
+        run_prop("checkpoint-roundtrip", 30, |g| {
+            let n = g.usize_in(1, 64);
+            let ck = RankCheckpoint {
+                fp: RunFingerprint {
+                    model: "mlp".into(),
+                    strategy: "daso".into(),
+                    nodes: g.usize_in(1, 4),
+                    gpus_per_node: g.usize_in(1, 4),
+                    total_epochs: g.usize_in(1, 50),
+                    seed: g.usize_in(0, 1 << 20) as u64,
+                    wire: (*g.pick(&["f32", "bf16", "f16"])).to_string(),
+                },
+                rank: g.usize_in(0, 15),
+                epochs_done: g.usize_in(0, 100),
+                global_batch: g.usize_in(0, 100_000),
+                wall_s: g.f32_in(0.0, 1e4) as f64,
+                lr_epoch: g.usize_in(0, 100),
+                lr_factor: g.f32_in(0.0, 1.0) as f64,
+                lr_best: if g.bool() { f64::INFINITY } else { g.f32_in(0.0, 10.0) as f64 },
+                lr_stale: g.usize_in(0, 10),
+                strategy_blob: (0..g.usize_in(0, 64)).map(|i| i as u8).collect(),
+                params: g.vec_normal(n, 1.0),
+                momentum: g.vec_normal(n, 0.1),
+                clock: g.f32_in(0.0, 1e6) as f64,
+                batches_done: g.usize_in(0, 10_000),
+                bytes_sent_intra: g.usize_in(0, 1 << 30) as u64,
+                bytes_sent_inter: g.usize_in(0, 1 << 30) as u64,
+                records: (0..g.usize_in(0, 5))
+                    .map(|e| EpochRecord {
+                        epoch: e,
+                        train_loss: g.f32_in(0.0, 5.0) as f64,
+                        lr: g.f32_in(0.0, 1.0) as f64,
+                        metric: if g.bool() { Some(g.f32_in(0.0, 1.0) as f64) } else { None },
+                        val_loss: if g.bool() { Some(g.f32_in(0.0, 5.0) as f64) } else { None },
+                        sim_time_s: g.f32_in(0.0, 100.0) as f64,
+                        wall_time_s: g.f32_in(0.0, 100.0) as f64,
+                        strategy_state: format!("B={} W={}", g.usize_in(1, 8), g.usize_in(1, 4)),
+                    })
+                    .collect(),
+            };
+            let back = RankCheckpoint::decode(&ck.encode()).unwrap();
+            assert_eq!(back, ck);
+            // parameter buffers must survive bit-exactly, not just by value
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&back.params), bits(&ck.params));
+            assert_eq!(bits(&back.momentum), bits(&ck.momentum));
+        });
+    }
+
+    #[test]
+    fn negative_zero_and_specials_roundtrip_bitwise() {
+        let mut ck = sample(0, fp(2, 2));
+        ck.params = vec![-0.0, f32::INFINITY, f32::NEG_INFINITY, f32::NAN, 1e-40];
+        let back = RankCheckpoint::decode(&ck.encode()).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.params), bits(&ck.params));
+    }
+
+    #[test]
+    fn truncation_names_the_failure() {
+        let bytes = sample(0, fp(2, 2)).encode();
+        // header cuts
+        for cut in [0, 4, 8, 11, 20, HEADER_LEN - 1] {
+            let err = RankCheckpoint::decode(&bytes[..cut]).unwrap_err().to_string();
+            assert!(err.contains("truncated checkpoint"), "cut {cut}: {err}");
+        }
+        // payload cuts are caught by the digest before field parsing
+        for cut in [HEADER_LEN, HEADER_LEN + 10, bytes.len() - 1] {
+            let err = RankCheckpoint::decode(&bytes[..cut]).unwrap_err().to_string();
+            assert!(err.contains("digest mismatch"), "cut {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn corruption_names_the_failure() {
+        let mut bytes = sample(0, fp(2, 2)).encode();
+        let mid = HEADER_LEN + (bytes.len() - HEADER_LEN) / 2;
+        bytes[mid] ^= 0x40;
+        let err = RankCheckpoint::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("digest mismatch"), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_and_version_name_the_failure() {
+        let mut bytes = sample(0, fp(2, 2)).encode();
+        let err = RankCheckpoint::decode(b"JUNKJUNKJUNK").unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+        // a future format version must be refused by name, not misparsed
+        bytes[8] = (CHECKPOINT_VERSION + 1) as u8;
+        let err = RankCheckpoint::decode(&bytes).unwrap_err().to_string();
+        assert!(
+            err.contains(&format!(
+                "checkpoint format version {}, this build reads {}",
+                CHECKPOINT_VERSION + 1,
+                CHECKPOINT_VERSION
+            )),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn generation_names_order_by_epoch_then_attempt() {
+        assert_eq!(parse_gen_name("gen-000004"), Some((4, 0)));
+        assert_eq!(parse_gen_name("gen-000004-r2"), Some((4, 2)));
+        assert_eq!(parse_gen_name("gen-junk"), None);
+        assert_eq!(parse_gen_name("other"), None);
+        assert_eq!(parse_gen_name(&gen_dir_name(12, 0)), Some((12, 0)));
+        assert_eq!(parse_gen_name(&gen_dir_name(12, 3)), Some((12, 3)));
+        // the elastic rewrite (same epoch, bumped attempt) outranks its
+        // source; later epochs outrank any attempt
+        let mut keys = [(4usize, 1u64), (4, 0), (6, 0), (2, 0)];
+        keys.sort_by(|a, b| b.cmp(a));
+        assert_eq!(keys, [(6, 0), (4, 1), (4, 0), (2, 0)]);
+    }
+
+    #[test]
+    fn load_latest_skips_incomplete_and_mismatched_generations() {
+        let dir = test_dir("scan");
+        let f = fp(2, 1);
+        // complete generation at epoch 2
+        for rank in 0..2 {
+            let mut ck = sample(rank, f.clone());
+            ck.epochs_done = 2;
+            write_rank(&dir, 2, 0, &ck).unwrap();
+        }
+        // incomplete generation at epoch 4 (rank 1 missing — the crash
+        // interrupted the snapshot)
+        let mut ck = sample(0, f.clone());
+        ck.epochs_done = 4;
+        write_rank(&dir, 4, 0, &ck).unwrap();
+        // stale generation at epoch 6 from a different (wider) world
+        for rank in 0..3 {
+            let mut ck = sample(rank, fp(3, 1));
+            ck.epochs_done = 6;
+            write_rank(&dir, 6, 0, &ck).unwrap();
+        }
+        let loaded = load_latest(&dir, &f).unwrap().expect("a usable generation");
+        assert_eq!(loaded.epochs_done, 2);
+        assert_eq!(loaded.attempt, 0);
+        assert_eq!(loaded.ranks.len(), 2);
+        assert_eq!(loaded.ranks[1].rank, 1);
+
+        // empty dir: no checkpoint is not an error
+        let empty = test_dir("scan_empty");
+        assert!(load_latest(&empty, &f).unwrap().is_none());
+
+        // generations exist but none usable: named error listing why
+        let err = load_latest(&dir, &fp(5, 1)).unwrap_err().to_string();
+        assert!(err.contains("no usable checkpoint generation"), "{err}");
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&empty);
+    }
+
+    #[test]
+    fn corrupt_rank_file_fails_over_to_previous_generation() {
+        let dir = test_dir("corrupt");
+        let f = fp(1, 2);
+        for rank in 0..2 {
+            let mut ck = sample(rank, f.clone());
+            ck.epochs_done = 2;
+            write_rank(&dir, 2, 0, &ck).unwrap();
+            ck.epochs_done = 4;
+            write_rank(&dir, 4, 0, &ck).unwrap();
+        }
+        // flip a payload byte in the newest generation's rank-1 file
+        let victim = dir.join(gen_dir_name(4, 0)).join("rank-1.ckpt");
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&victim, bytes).unwrap();
+        let loaded = load_latest(&dir, &f).unwrap().expect("previous generation");
+        assert_eq!(loaded.epochs_done, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prune_keeps_newest_generations() {
+        let dir = test_dir("prune");
+        let f = fp(1, 1);
+        for epoch in [2usize, 4, 6] {
+            let mut ck = sample(0, f.clone());
+            ck.epochs_done = epoch;
+            write_rank(&dir, epoch, 0, &ck).unwrap();
+        }
+        prune(&dir, 2).unwrap();
+        let names: Vec<_> = list_generations(&dir).unwrap().into_iter().map(|g| g.0).collect();
+        assert_eq!(names, vec![6, 4]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rewrite_drops_dead_node_and_renumbers() {
+        let old = fp(3, 2);
+        let new = RunFingerprint { nodes: 2, ..old.clone() };
+        let ranks: Vec<_> = (0..6)
+            .map(|r| {
+                let mut ck = sample(r, old.clone());
+                // tag each rank's params so renumbering is observable
+                ck.params = vec![r as f32];
+                ck
+            })
+            .collect();
+        let loaded = LoadedCheckpoint {
+            dir: PathBuf::from("/nonexistent"),
+            epochs_done: 4,
+            attempt: 0,
+            ranks,
+        };
+        let out = rewrite_for_survivors(&loaded, 1, &new).unwrap();
+        assert_eq!(out.len(), 4);
+        for (i, ck) in out.iter().enumerate() {
+            assert_eq!(ck.rank, i, "survivor ranks are dense and renumbered");
+            assert_eq!(ck.fp, new);
+        }
+        // node 0 (ranks 0,1) keeps its state; node 2 (old ranks 4,5)
+        // becomes node 1 (new ranks 2,3); node 1's state is gone
+        assert_eq!(out[0].params, vec![0.0]);
+        assert_eq!(out[1].params, vec![1.0]);
+        assert_eq!(out[2].params, vec![4.0]);
+        assert_eq!(out[3].params, vec![5.0]);
+
+        let err = rewrite_for_survivors(&loaded, 0, &new).unwrap_err().to_string();
+        assert!(err.contains("node 0"), "{err}");
+    }
+
+    #[test]
+    fn rewritten_generation_outranks_its_source() {
+        let dir = test_dir("rewrite_rank");
+        let old = fp(2, 1);
+        let new = RunFingerprint { nodes: 1, ..old.clone() };
+        for rank in 0..2 {
+            let mut ck = sample(rank, old.clone());
+            ck.epochs_done = 4;
+            write_rank(&dir, 4, 0, &ck).unwrap();
+        }
+        let loaded = load_latest(&dir, &old).unwrap().unwrap();
+        for ck in rewrite_for_survivors(&loaded, 1, &new).unwrap() {
+            write_rank(&dir, loaded.epochs_done, loaded.attempt + 1, &ck).unwrap();
+        }
+        let resumed = load_latest(&dir, &new).unwrap().unwrap();
+        assert_eq!((resumed.epochs_done, resumed.attempt), (4, 1));
+        assert_eq!(resumed.ranks.len(), 1);
+        // the old-world generation is still the newest for the old fp
+        let old_view = load_latest(&dir, &old).unwrap().unwrap();
+        assert_eq!((old_view.epochs_done, old_view.attempt), (4, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

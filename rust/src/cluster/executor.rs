@@ -121,11 +121,12 @@ pub use pjrt_stubs::{train_coordinator, train_multiprocess, train_threaded};
 #[cfg(not(feature = "pjrt"))]
 mod threaded {
     use std::net::TcpListener;
+    use std::path::Path;
     use std::time::{Duration, Instant};
 
     use anyhow::{anyhow, ensure, Result};
 
-    use crate::cluster::Worker;
+    use crate::cluster::{checkpoint, Worker};
     use crate::comm::channels::{GroupComm, Payload, RankComms};
     use crate::comm::naive_mean;
     use crate::comm::transport::tcp::{TcpRole, TcpTransport, TcpTuning};
@@ -143,6 +144,9 @@ mod threaded {
         records: Vec<EpochRecord>,
         final_metric: f64,
         final_val_loss: f64,
+        /// wall seconds inherited from the checkpoint this run resumed
+        /// from (zero for a fresh run)
+        wall_offset: f64,
     }
 
     struct RankOutput {
@@ -179,6 +183,7 @@ mod threaded {
             .with_placement(cfg.leader_placement)
             .with_chunk_elems(cfg.pipeline_chunk_elems)
             .with_transport(kind)
+            .with_generation(cfg.launch_generation)
     }
 
     /// Train this process's share of a multi-process launch, joining the
@@ -416,9 +421,10 @@ mod threaded {
             final_val_loss: zero.final_val_loss,
             best_metric,
             total_sim_time_s: makespan,
-            total_wall_s: wall_start.elapsed().as_secs_f64(),
+            total_wall_s: zero.wall_offset + wall_start.elapsed().as_secs_f64(),
             comm,
             final_params,
+            regroups: vec![],
         }))
     }
 
@@ -449,8 +455,49 @@ mod threaded {
         let mut records = Vec::new();
         let mut grad: Vec<f32> = Vec::new();
         let mut global_batch = 0usize;
+        let mut start_epoch = 0usize;
+        let mut wall_offset = 0.0f64;
 
-        for epoch in 0..cfg.epochs {
+        // checkpoint identity; a snapshot restores only into the
+        // identical run. Every rank loads the generation independently
+        // (same directory, same newest-complete selection) and restores
+        // its own slice — the deterministic analogue of each process
+        // reading its own shard of a sharded snapshot.
+        let fp = checkpoint::run_fingerprint(&rt.spec.name, strategy.name(), cfg);
+        if cfg.resume {
+            ensure!(
+                !cfg.checkpoint_dir.is_empty(),
+                "--resume needs --checkpoint-dir (config key checkpoint_dir)"
+            );
+            let loaded = checkpoint::load_latest(Path::new(&cfg.checkpoint_dir), &fp)?
+                .ok_or_else(|| {
+                    anyhow!("--resume: no checkpoint generations in {:?}", cfg.checkpoint_dir)
+                })?;
+            let ck = &loaded.ranks[rank];
+            worker.params = ck.params.clone();
+            worker.momentum = ck.momentum.clone();
+            worker.clock = ck.clock;
+            worker.batches_done = ck.batches_done;
+            worker.bytes_sent_intra = ck.bytes_sent_intra;
+            worker.bytes_sent_inter = ck.bytes_sent_inter;
+            lr_sched.restore(ck.lr_epoch, ck.lr_factor, ck.lr_best, ck.lr_stale);
+            strategy.load_state(&ck.strategy_blob)?;
+            global_batch = ck.global_batch;
+            start_epoch = loaded.epochs_done;
+            wall_offset = ck.wall_s;
+            if rank == 0 {
+                records = ck.records.clone();
+                if cfg.verbose {
+                    eprintln!(
+                        "[{}/threaded] resumed from {:?} at epoch {start_epoch}",
+                        strategy.name(),
+                        loaded.dir
+                    );
+                }
+            }
+        }
+
+        for epoch in start_epoch..cfg.epochs {
             strategy.on_epoch_start(epoch);
             let lr = lr_sched.lr() as f32;
             let order = worker.shard.epoch_order(epoch);
@@ -461,7 +508,7 @@ mod threaded {
                 let (x, y) = train_data.batch(idx);
                 let (loss, g) = rt.grad(&worker.params, &x, &y)?;
                 grad = g;
-                worker.advance_clock(cfg.compute_time_s);
+                worker.advance_clock(cfg.compute_time_for(worker.rank.node));
                 worker.batches_done += 1;
                 step_losses.push(loss);
                 global_batch += 1;
@@ -486,6 +533,31 @@ mod threaded {
                 reduce_epoch_loss(&comms.world, &step_losses, worker.clock)?;
             lr_sched.on_epoch_end(train_loss);
             strategy.on_epoch_end(epoch, train_loss);
+            // the same rank-ordered clock vector on every rank, so the
+            // straggler-absorption boost moves in lockstep
+            strategy.observe_epoch_clocks(epoch, &clocks);
+
+            // quiesce in-flight syncs at checkpoint epochs — collective,
+            // and on *every* run with checkpointing configured (whether
+            // or not files are written), so interrupted+resumed and
+            // uninterrupted runs see bit-identical schedules
+            let at_checkpoint = cfg.checkpoint_every_epochs > 0
+                && (epoch + 1) % cfg.checkpoint_every_epochs == 0;
+            if at_checkpoint {
+                let mut ctx = RankCtx {
+                    rt,
+                    topo,
+                    fabric: &cfg.fabric,
+                    comms: &comms,
+                    worker: &mut worker,
+                    grad: &mut grad,
+                    lr,
+                    epoch,
+                    global_batch,
+                    global_wire,
+                };
+                strategy.quiesce(&mut ctx)?;
+            }
 
             let do_eval = cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0;
             let (metric, val_loss) = if do_eval {
@@ -508,7 +580,7 @@ mod threaded {
                     metric,
                     val_loss,
                     sim_time_s: clocks.iter().fold(0.0, |a, &b| f64::max(a, b)),
-                    wall_time_s: wall_start.elapsed().as_secs_f64(),
+                    wall_time_s: wall_offset + wall_start.elapsed().as_secs_f64(),
                     strategy_state: strategy.state_desc(),
                 };
                 if cfg.verbose {
@@ -524,6 +596,43 @@ mod threaded {
                     );
                 }
                 records.push(rec);
+            }
+
+            if at_checkpoint && !cfg.checkpoint_dir.is_empty() {
+                let dir = Path::new(&cfg.checkpoint_dir);
+                let (lr_epoch, lr_factor, lr_best, lr_stale) = lr_sched.state();
+                let ck = checkpoint::RankCheckpoint {
+                    fp: fp.clone(),
+                    rank,
+                    epochs_done: epoch + 1,
+                    global_batch,
+                    wall_s: wall_offset + wall_start.elapsed().as_secs_f64(),
+                    lr_epoch,
+                    lr_factor,
+                    lr_best,
+                    lr_stale,
+                    strategy_blob: strategy.save_state(),
+                    params: worker.params.clone(),
+                    momentum: worker.momentum.clone(),
+                    clock: worker.clock,
+                    batches_done: worker.batches_done,
+                    bytes_sent_intra: worker.bytes_sent_intra,
+                    bytes_sent_inter: worker.bytes_sent_inter,
+                    records: if rank == 0 { records.clone() } else { Vec::new() },
+                };
+                checkpoint::write_rank(dir, epoch + 1, 0, &ck)?;
+                if rank == 0 {
+                    checkpoint::prune(dir, checkpoint::KEEP_GENERATIONS)?;
+                }
+            }
+
+            // the deterministic-interruption knob behind the
+            // resume-parity tests: every rank breaks at the same epoch
+            if cfg.stop_after_epochs > 0
+                && epoch + 1 >= cfg.stop_after_epochs
+                && epoch + 1 < cfg.epochs
+            {
+                break;
             }
         }
 
@@ -548,7 +657,12 @@ mod threaded {
         // is the last act of each thread, so stragglers cost nothing
         let acc = evaluate(rt, &consensus, val_data, cfg.epochs)?;
         let zero = if rank == 0 {
-            Some(ZeroOut { records, final_metric: acc.value(), final_val_loss: acc.mean_loss() })
+            Some(ZeroOut {
+                records,
+                final_metric: acc.value(),
+                final_val_loss: acc.mean_loss(),
+                wall_offset,
+            })
         } else {
             None
         };

@@ -25,7 +25,7 @@
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::process::{Child, Command, Stdio};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -118,16 +118,20 @@ impl Launcher {
     }
 }
 
-/// Watch the peer processes while the launch comes up: a child that
-/// exits with a failure status is reaped immediately and reported to
-/// the coordinator's rendezvous listener as an `ABORT` frame, so a
-/// pre-handshake death fails the launch with a named, bounded error
-/// instead of waiting out `comm_timeout_ms`. Set `done` (and join) once
-/// the run finished to stop the polling.
+/// Watch the peer processes for the whole run: a child that exits with
+/// a failure status is reaped immediately, recorded in `first_dead`
+/// (the node id; stays -1 while everyone lives — the elastic
+/// supervisor's regroup signal), and reported to the coordinator's
+/// rendezvous listener as an `ABORT` frame, so a pre-handshake death
+/// fails the launch with a named, bounded error instead of waiting out
+/// `comm_timeout_ms`. A post-handshake death surfaces through the
+/// transport's EOF path instead; `first_dead` still names the corpse.
+/// Set `done` (and join) once the run finished to stop the polling.
 pub fn spawn_watchdog(
     children: Arc<Mutex<Vec<(usize, Child)>>>,
     coord: SocketAddr,
     done: Arc<AtomicBool>,
+    first_dead: Arc<AtomicI64>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name("daso-launch-watchdog".into())
@@ -151,6 +155,7 @@ pub fn spawn_watchdog(
                          launch came up"
                     );
                     eprintln!("launch watchdog: {reason}");
+                    first_dead.store(node as i64, Ordering::Release);
                     // best effort: the listener may already be done
                     // accepting (post-handshake), in which case the
                     // regular EOF path reports the death instead
@@ -251,7 +256,8 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let children = Arc::new(Mutex::new(vec![(1usize, child)]));
         let done = Arc::new(AtomicBool::new(false));
-        let handle = spawn_watchdog(children.clone(), addr, done.clone());
+        let first_dead = Arc::new(AtomicI64::new(-1));
+        let handle = spawn_watchdog(children.clone(), addr, done.clone(), first_dead.clone());
         // the watchdog must dial in and deliver the ABORT within its
         // polling cadence — read it straight off the listener
         listener.set_nonblocking(false).unwrap();
@@ -265,6 +271,11 @@ mod tests {
         }
         done.store(true, Ordering::Release);
         handle.join().unwrap();
+        assert_eq!(
+            first_dead.load(Ordering::Acquire),
+            1,
+            "the watchdog must record which node died first"
+        );
         kill_peers(&mut children.lock().unwrap());
     }
 }

@@ -12,6 +12,7 @@
 //! the TCP transport (`executor::train_multiprocess`, spawned by
 //! `launch`).
 
+pub mod checkpoint;
 pub mod executor;
 pub mod launch;
 pub mod worker;

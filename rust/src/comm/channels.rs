@@ -398,7 +398,8 @@ struct AsyncState {
 
 /// A completed round on its way to a remote member, as
 /// `(seq, snapshot sum, virtual finish time)`.
-pub(crate) type AsyncResultSender = Box<dyn Fn(u64, Arc<Vec<f32>>, f64) -> Result<()> + Send + Sync>;
+pub(crate) type AsyncResultSender =
+    Box<dyn Fn(u64, Arc<Vec<f32>>, f64) -> Result<()> + Send + Sync>;
 
 /// A remote member's contribution (member + per-member seq are assigned
 /// on the sending side and verified against the aggregator's counters).
@@ -496,7 +497,7 @@ impl AsyncShared {
             self.cv.notify_all();
             for (m, send) in &self.remote {
                 if let Err(e) = send(seq, sum.clone(), finish) {
-                    eprintln!("warning: async result for round {seq} undeliverable to member {m}: {e:#}");
+                    eprintln!("warning: async round {seq} undeliverable to member {m}: {e:#}");
                 }
             }
         }
@@ -1095,7 +1096,8 @@ mod tests {
         let n = 4;
         let inputs: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32 * 1.25 + 0.1; 33]).collect();
         let run = |leader: usize| {
-            let handles = GroupComm::group_with_leader(n, leader, default_comm_timeout(), Wire::F32);
+            let handles =
+                GroupComm::group_with_leader(n, leader, default_comm_timeout(), Wire::F32);
             // handles come back in member-index order with the leader at
             // its own index
             for (i, h) in handles.iter().enumerate() {

@@ -190,6 +190,13 @@ impl GroupRotation {
     pub fn peek(&self) -> usize {
         self.next
     }
+
+    /// Reposition the rotation — the checkpoint-resume path. The value
+    /// is folded into range so a snapshot from a wider world restores
+    /// cleanly after a regroup shrinks `n_groups`.
+    pub fn set_next(&mut self, next: usize) {
+        self.next = next % self.n_groups;
+    }
 }
 
 #[cfg(test)]

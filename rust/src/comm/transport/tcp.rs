@@ -149,6 +149,10 @@ pub struct TcpTuning {
     /// create — and own — its own directory when the transport needs
     /// one. Peers always learn the directory from WELCOME.
     pub shm_dir: Option<PathBuf>,
+    /// elastic launch attempt, verified in the handshake: a stale
+    /// process left over from a previous attempt re-dialing the (new)
+    /// rendezvous is rejected by name instead of corrupting the regroup
+    pub generation: u64,
 }
 
 impl TcpTuning {
@@ -162,6 +166,7 @@ impl TcpTuning {
             chunk_elems: default_pipeline_chunk_elems(),
             transport: TransportKind::Tcp,
             shm_dir: None,
+            generation: 0,
         }
     }
 
@@ -182,6 +187,11 @@ impl TcpTuning {
 
     pub fn with_shm_dir(mut self, shm_dir: Option<PathBuf>) -> TcpTuning {
         self.shm_dir = shm_dir;
+        self
+    }
+
+    pub fn with_generation(mut self, generation: u64) -> TcpTuning {
+        self.generation = generation;
         self
     }
 }
@@ -376,7 +386,12 @@ impl TcpTransport {
 
     /// Peer side for `node` (1-based among nodes), dialing `addr` with
     /// retries until the coordinator is up or the timeout expires.
-    pub fn peer(topo: Topology, node: usize, addr: &str, tuning: TcpTuning) -> Result<TcpTransport> {
+    pub fn peer(
+        topo: Topology,
+        node: usize,
+        addr: &str,
+        tuning: TcpTuning,
+    ) -> Result<TcpTransport> {
         ensure!(
             node >= 1 && node < topo.nodes,
             "peer node id {node} out of range 1..{}",
@@ -411,6 +426,7 @@ impl TcpTransport {
         let transport = self.tuning.transport;
         let timeout = self.tuning.timeout;
         let chunk_elems = self.tuning.chunk_elems;
+        let generation = self.tuning.generation;
         let deadline = Instant::now() + timeout;
         listener.set_nonblocking(true).context("making listener pollable")?;
 
@@ -466,11 +482,18 @@ impl TcpTransport {
                             placement: p,
                             transport: t,
                             mesh_addr,
+                            generation: peer_gen,
                         } => {
                             ensure!(
                                 version == PROTOCOL_VERSION,
                                 "peer {peer_addr} speaks wire protocol {version}, \
                                  this build speaks {PROTOCOL_VERSION}"
+                            );
+                            ensure!(
+                                peer_gen == generation,
+                                "peer {peer_addr} belongs to launch generation {peer_gen}, \
+                                 this rendezvous is generation {generation} — a stale \
+                                 process from a previous elastic attempt is re-dialing"
                             );
                             ensure!(
                                 n as usize == nodes && g as usize == gpn,
@@ -594,6 +617,7 @@ impl TcpTransport {
                     transport,
                     shm_dir: shm_dir_str.clone(),
                     book: book.clone(),
+                    generation,
                 },
                 wire,
             )
@@ -646,7 +670,17 @@ impl TcpTransport {
         }
         self.cleanup = shm_segments;
 
-        build_wiring(topo, 0, data_links, ctrl_links, link_readers, timeout, wire, placement, counters)
+        build_wiring(
+            topo,
+            0,
+            data_links,
+            ctrl_links,
+            link_readers,
+            timeout,
+            wire,
+            placement,
+            counters,
+        )
     }
 
     fn connect_peer(&self, addr: &str) -> Result<Wiring> {
@@ -658,10 +692,12 @@ impl TcpTransport {
         let transport = self.tuning.transport;
         let timeout = self.tuning.timeout;
         let chunk_elems = self.tuning.chunk_elems;
+        let generation = self.tuning.generation;
         let deadline = Instant::now() + timeout;
 
-        let stream = dial_with_retry(addr, deadline, "coordinator")
-            .with_context(|| format!("connecting to coordinator at {addr} (is the rank-0 process up?)"))?;
+        let stream = dial_with_retry(addr, deadline, "coordinator").with_context(|| {
+            format!("connecting to coordinator at {addr} (is the rank-0 process up?)")
+        })?;
         stream.set_nodelay(true).ok();
         // writes stay bounded for the whole run: a wedged coordinator
         // must surface as an error, never a hang
@@ -692,6 +728,7 @@ impl TcpTransport {
                 placement,
                 transport,
                 mesh_addr: mesh_addr.clone(),
+                generation,
             },
             wire,
         )?;
@@ -707,11 +744,18 @@ impl TcpTransport {
                 transport: t,
                 shm_dir,
                 book,
+                generation: coord_gen,
             } => {
                 ensure!(
                     version == PROTOCOL_VERSION && n as usize == nodes && g as usize == gpn,
                     "coordinator runs wire protocol {version} on a {n}x{g} cluster; \
                      this peer expects protocol {PROTOCOL_VERSION} on {nodes}x{gpn}"
+                );
+                ensure!(
+                    coord_gen == generation,
+                    "coordinator runs launch generation {coord_gen}, this peer was \
+                     spawned for generation {generation} — it is stale after an \
+                     elastic regroup and must not rejoin"
                 );
                 ensure!(
                     w == wire,
@@ -766,7 +810,12 @@ impl TcpTransport {
         let digest = book_digest(&book);
 
         if transport != TransportKind::Shm {
-            let link = PeerLink::tcp(writer, counters.clone(), chunk_elems, link_class(&book, me, 0));
+            let link = PeerLink::tcp(
+                writer,
+                counters.clone(),
+                chunk_elems,
+                link_class(&book, me, 0),
+            );
             ctrl_links[0] = Some(link.clone());
             data_links[0] = Some(link);
             link_readers.push((0, LinkRead::Tcp(reader)));
@@ -784,8 +833,12 @@ impl TcpTransport {
                 stream.set_write_timeout(Some(timeout)).ok();
                 let tcp_reader =
                     stream.try_clone().context("cloning mesh stream for the demux")?;
-                let link =
-                    PeerLink::tcp(stream, counters.clone(), chunk_elems, link_class(&book, me, target));
+                let link = PeerLink::tcp(
+                    stream,
+                    counters.clone(),
+                    chunk_elems,
+                    link_class(&book, me, target),
+                );
                 ctrl_links[target] = Some(link.clone());
                 data_links[target] = Some(link);
                 link_readers.push((target, LinkRead::Tcp(tcp_reader)));
@@ -796,8 +849,12 @@ impl TcpTransport {
                 stream.set_write_timeout(Some(timeout)).ok();
                 let tcp_reader =
                     stream.try_clone().context("cloning mesh stream for the demux")?;
-                let link =
-                    PeerLink::tcp(stream, counters.clone(), chunk_elems, link_class(&book, me, node));
+                let link = PeerLink::tcp(
+                    stream,
+                    counters.clone(),
+                    chunk_elems,
+                    link_class(&book, me, node),
+                );
                 ctrl_links[node] = Some(link.clone());
                 data_links[node] = Some(link);
                 link_readers.push((node, LinkRead::Tcp(tcp_reader)));
@@ -837,7 +894,17 @@ impl TcpTransport {
             }
         }
 
-        build_wiring(topo, me, data_links, ctrl_links, link_readers, timeout, wire, placement, counters)
+        build_wiring(
+            topo,
+            me,
+            data_links,
+            ctrl_links,
+            link_readers,
+            timeout,
+            wire,
+            placement,
+            counters,
+        )
     }
 }
 
@@ -897,13 +964,23 @@ fn ring_link(
                      launch?"
                 );
             }
-            frame => bail!("expected MESH_WELCOME on the ring from node {other}, got {}", frame.name()),
+            frame => bail!(
+                "expected MESH_WELCOME on the ring from node {other}, got {}",
+                frame.name()
+            ),
         }
     } else {
         match read_frame(&mut consumer)
             .with_context(|| format!("waiting for MESH_HELLO on the ring from node {other}"))?
         {
-            Frame::MeshHello { version, node, nodes: n, gpus_per_node: g, wire: w, book_digest: d } => {
+            Frame::MeshHello {
+                version,
+                node,
+                nodes: n,
+                gpus_per_node: g,
+                wire: w,
+                book_digest: d,
+            } => {
                 ensure!(
                     version == PROTOCOL_VERSION,
                     "shm ring peer speaks wire protocol {version}, this build speaks \
@@ -933,7 +1010,10 @@ fn ring_link(
                      launch?"
                 );
             }
-            frame => bail!("expected MESH_HELLO on the ring from node {other}, got {}", frame.name()),
+            frame => bail!(
+                "expected MESH_HELLO on the ring from node {other}, got {}",
+                frame.name()
+            ),
         }
         write_frame(
             &mut producer,

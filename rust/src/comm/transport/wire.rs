@@ -65,7 +65,7 @@ use super::TransportKind;
 /// payload fragmentation. Version 4: the negotiated transport kind
 /// (tcp|shm|hybrid) in HELLO/WELCOME, the shm segment directory in
 /// WELCOME, and the ABORT frame (launcher watchdog -> coordinator).
-pub const PROTOCOL_VERSION: u32 = 4;
+pub const PROTOCOL_VERSION: u32 = 5;
 
 /// Upper bound on a frame body (sanity check against corrupt length
 /// prefixes; generously above any model's parameter buffer).
@@ -216,6 +216,9 @@ pub enum Frame {
     /// Peer -> coordinator: identify and verify the launch topology +
     /// wire format + leader placement + transport; `mesh_addr` is the
     /// peer's own listen address for the mesh phase (v3+, empty before).
+    /// `generation` (v5+, 0 before) is the elastic launch attempt the
+    /// peer was spawned for — the coordinator rejects a stale process
+    /// from a previous attempt re-dialing a regrouped rendezvous.
     Hello {
         version: u32,
         node: u32,
@@ -225,6 +228,7 @@ pub enum Frame {
         placement: LeaderPlacement,
         transport: TransportKind,
         mesh_addr: String,
+        generation: u64,
     },
     /// Coordinator -> peer: handshake accepted; `book[n]` is node `n`'s
     /// dialable address (v3+, empty before) — the peer mesh's address
@@ -240,6 +244,9 @@ pub enum Frame {
         transport: TransportKind,
         shm_dir: String,
         book: Vec<String>,
+        /// elastic launch attempt (v5+, 0 before) — peers cross-check
+        /// it against their spawn-time generation
+        generation: u64,
     },
     /// Dialing peer -> listening peer on a direct mesh link: identify
     /// and verify launch membership (`book_digest` fingerprints the
@@ -575,7 +582,8 @@ fn body_len(frame: &Frame, wire: Wire) -> usize {
             0 | 1 => 17,
             2 => 18,
             3 => 19 + 4 + mesh_addr.len(),
-            _ => 20 + 4 + mesh_addr.len(),
+            4 => 20 + 4 + mesh_addr.len(),
+            _ => 28 + 4 + mesh_addr.len(),
         },
         Frame::Welcome { version, book, shm_dir, .. } => {
             let book_len = 4 + book.iter().map(|e| 4 + e.len()).sum::<usize>();
@@ -583,7 +591,8 @@ fn body_len(frame: &Frame, wire: Wire) -> usize {
                 0 | 1 => 13,
                 2 => 14,
                 3 => 15 + book_len,
-                _ => 16 + 4 + shm_dir.len() + book_len,
+                4 => 16 + 4 + shm_dir.len() + book_len,
+                _ => 24 + 4 + shm_dir.len() + book_len,
             }
         }
         Frame::MeshHello { .. } => 26,
@@ -623,6 +632,7 @@ fn encode_body_to(out: &mut Vec<u8>, frame: &Frame, wire: Wire) {
             placement,
             transport,
             mesh_addr,
+            generation,
         } => {
             out.push(TAG_HELLO);
             put_u32(out, *version);
@@ -630,9 +640,9 @@ fn encode_body_to(out: &mut Vec<u8>, frame: &Frame, wire: Wire) {
             put_u32(out, *nodes);
             put_u32(out, *gpus_per_node);
             // pre-v2 frames had no wire byte, pre-v3 none of the mesh
-            // fields, pre-v4 no transport byte: encode what the stated
-            // version can carry, so compatibility tests can produce
-            // old-version bytes
+            // fields, pre-v4 no transport byte, pre-v5 no generation:
+            // encode what the stated version can carry, so compatibility
+            // tests can produce old-version bytes
             if *version >= 2 {
                 out.push(wire_code(*hello_wire));
             }
@@ -645,6 +655,9 @@ fn encode_body_to(out: &mut Vec<u8>, frame: &Frame, wire: Wire) {
             if *version >= 3 {
                 put_str(out, mesh_addr);
             }
+            if *version >= 5 {
+                put_u64(out, *generation);
+            }
         }
         Frame::Welcome {
             version,
@@ -655,6 +668,7 @@ fn encode_body_to(out: &mut Vec<u8>, frame: &Frame, wire: Wire) {
             transport,
             shm_dir,
             book,
+            generation,
         } => {
             out.push(TAG_WELCOME);
             put_u32(out, *version);
@@ -675,6 +689,9 @@ fn encode_body_to(out: &mut Vec<u8>, frame: &Frame, wire: Wire) {
                 for entry in book {
                     put_str(out, entry);
                 }
+            }
+            if *version >= 5 {
+                put_u64(out, *generation);
             }
         }
         Frame::MeshHello { version, node, nodes, gpus_per_node, wire: hello_wire, book_digest } => {
@@ -764,6 +781,7 @@ pub fn decode_body(body: &[u8]) -> Result<Frame> {
             let transport =
                 if version >= 4 { transport_from_code(c.u8()?)? } else { TransportKind::Tcp };
             let mesh_addr = if version >= 3 { c.string()? } else { String::new() };
+            let generation = if version >= 5 { c.u64()? } else { 0 };
             Frame::Hello {
                 version,
                 node,
@@ -773,6 +791,7 @@ pub fn decode_body(body: &[u8]) -> Result<Frame> {
                 placement,
                 transport,
                 mesh_addr,
+                generation,
             }
         }
         TAG_WELCOME => {
@@ -798,6 +817,7 @@ pub fn decode_body(body: &[u8]) -> Result<Frame> {
             } else {
                 Vec::new()
             };
+            let generation = if version >= 5 { c.u64()? } else { 0 };
             Frame::Welcome {
                 version,
                 nodes,
@@ -807,6 +827,7 @@ pub fn decode_body(body: &[u8]) -> Result<Frame> {
                 transport,
                 shm_dir,
                 book,
+                generation,
             }
         }
         TAG_MESH_HELLO => Frame::MeshHello {
@@ -1194,7 +1215,7 @@ mod tests {
     #[test]
     fn hello_welcome_roundtrip() {
         match roundtrip(Frame::Hello {
-            version: 4,
+            version: 5,
             node: 3,
             nodes: 4,
             gpus_per_node: 2,
@@ -1202,9 +1223,10 @@ mod tests {
             placement: LeaderPlacement::Mesh,
             transport: TransportKind::Hybrid,
             mesh_addr: "127.0.0.1:4567".into(),
+            generation: 7,
         }) {
             Frame::Hello {
-                version: 4,
+                version: 5,
                 node: 3,
                 nodes: 4,
                 gpus_per_node: 2,
@@ -1212,11 +1234,12 @@ mod tests {
                 placement: LeaderPlacement::Mesh,
                 transport: TransportKind::Hybrid,
                 mesh_addr,
+                generation: 7,
             } => assert_eq!(mesh_addr, "127.0.0.1:4567"),
             other => panic!("bad roundtrip: {other:?}"),
         }
         match roundtrip(Frame::Welcome {
-            version: 4,
+            version: 5,
             nodes: 4,
             gpus_per_node: 2,
             wire: Wire::F16,
@@ -1224,9 +1247,10 @@ mod tests {
             transport: TransportKind::Shm,
             shm_dir: "/dev/shm/daso-shm-1-0".into(),
             book: vec!["a:1".into(), "b:2".into()],
+            generation: 3,
         }) {
             Frame::Welcome {
-                version: 4,
+                version: 5,
                 nodes: 4,
                 gpus_per_node: 2,
                 wire: Wire::F16,
@@ -1234,11 +1258,56 @@ mod tests {
                 transport: TransportKind::Shm,
                 shm_dir,
                 book,
+                generation: 3,
             } => {
                 assert_eq!(shm_dir, "/dev/shm/daso-shm-1-0");
                 assert_eq!(book, vec!["a:1".to_string(), "b:2".to_string()]);
             }
             other => panic!("bad roundtrip: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v4_handshakes_default_generation_zero() {
+        // a v4 process knows nothing of elastic generations: its frames
+        // carry no generation field and must decode to generation 0
+        let hello = encode_body(
+            &Frame::Hello {
+                version: 4,
+                node: 3,
+                nodes: 4,
+                gpus_per_node: 2,
+                wire: Wire::Bf16,
+                placement: LeaderPlacement::Mesh,
+                transport: TransportKind::Hybrid,
+                mesh_addr: "a:1".into(),
+                generation: 9, // must not be encoded below v5
+            },
+            Wire::F32,
+        );
+        assert_eq!(hello.len(), 20 + 4 + 3, "v4 hello must not carry the generation");
+        match decode_body(&hello).unwrap() {
+            Frame::Hello { version: 4, generation: 0, .. } => {}
+            other => panic!("v4 hello decoded as {other:?}"),
+        }
+        let welcome = encode_body(
+            &Frame::Welcome {
+                version: 4,
+                nodes: 2,
+                gpus_per_node: 2,
+                wire: Wire::F32,
+                placement: LeaderPlacement::Mesh,
+                transport: TransportKind::Tcp,
+                shm_dir: String::new(),
+                book: vec!["a:1".into()],
+                generation: 9,
+            },
+            Wire::F32,
+        );
+        assert_eq!(welcome.len(), 16 + 4 + 4 + 4 + 3, "v4 welcome must not carry the generation");
+        match decode_body(&welcome).unwrap() {
+            Frame::Welcome { version: 4, generation: 0, .. } => {}
+            other => panic!("v4 welcome decoded as {other:?}"),
         }
     }
 
@@ -1315,6 +1384,7 @@ mod tests {
                 placement: LeaderPlacement::Mesh,
                 transport: TransportKind::Hybrid,
                 mesh_addr: "ignored-below-v3".into(),
+                generation: 0,
             },
             Wire::F32,
         );
@@ -1337,6 +1407,7 @@ mod tests {
                 placement: LeaderPlacement::Mesh,
                 transport: TransportKind::Shm,
                 mesh_addr: "a:1".into(),
+                generation: 0,
             },
             Wire::F32,
         );

@@ -152,6 +152,25 @@ impl RunSpec {
             "train.pipeline_chunk_elems" | "pipeline_chunk_elems" | "chunk_elems" => {
                 self.train.pipeline_chunk_elems = as_usize()?
             }
+            "train.checkpoint_dir" | "checkpoint_dir" => {
+                self.train.checkpoint_dir = as_str()?.to_string()
+            }
+            "train.checkpoint_every_epochs" | "checkpoint_every_epochs" => {
+                self.train.checkpoint_every_epochs = as_usize()?
+            }
+            "train.resume" | "resume" => self.train.resume = as_bool()?,
+            "train.stop_after_epochs" | "stop_after_epochs" => {
+                self.train.stop_after_epochs = as_usize()?
+            }
+            "train.straggler_node" | "straggler_node" => {
+                self.train.straggler_node = as_f64()? as i64
+            }
+            "train.straggler_factor" | "straggler_factor" => {
+                self.train.straggler_factor = as_f64()?
+            }
+            "train.generation" | "generation" => {
+                self.train.launch_generation = as_f64()? as u64
+            }
 
             "daso.b_initial" => self.daso.b_initial = as_usize()?,
             "daso.warmup_epochs" => self.daso.warmup_epochs = as_usize()?,
@@ -159,6 +178,9 @@ impl RunSpec {
             "daso.plateau_patience" => self.daso.plateau_patience = as_usize()?,
             "daso.kernel_local_avg" => self.daso.kernel_local_avg = as_bool()?,
             "daso.staleness_blend" => self.daso.staleness_blend = as_bool()?,
+            "daso.absorb_stragglers" => self.daso.absorb_stragglers = as_bool()?,
+            "daso.absorb_threshold" => self.daso.absorb_threshold = as_f64()?,
+            "daso.absorb_patience" => self.daso.absorb_patience = as_usize()?,
 
             "fabric.intra_latency_s" => self.train.fabric.intra.latency_s = as_f64()?,
             "fabric.intra_bandwidth" => self.train.fabric.intra.bandwidth_bps = as_f64()?,
@@ -166,6 +188,23 @@ impl RunSpec {
             "fabric.inter_bandwidth" => self.train.fabric.inter.bandwidth_bps = as_f64()?,
 
             other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Cross-key consistency checks that no single `set_value` arm can
+    /// enforce (the keys may arrive in any order). Called once after all
+    /// overrides are applied.
+    pub fn validate(&self) -> Result<()> {
+        if self.train.resume && self.strategy != StrategyKind::Daso {
+            bail!(
+                "--resume restores DASO cycler/rotation state and is only supported with \
+                 strategy=daso (got strategy={})",
+                self.strategy.name()
+            );
+        }
+        if self.train.resume && self.train.checkpoint_dir.is_empty() {
+            bail!("--resume needs --checkpoint-dir (config key checkpoint_dir)");
         }
         Ok(())
     }
@@ -430,6 +469,53 @@ mod tests {
             s.set(&format!("strategy={kind}")).unwrap();
             assert_eq!(s.build_strategy().name(), kind);
         }
+    }
+
+    #[test]
+    fn checkpoint_and_straggler_overrides() {
+        let mut s = RunSpec::default_for("mlp");
+        assert!(s.train.checkpoint_dir.is_empty());
+        assert_eq!(s.train.checkpoint_every_epochs, 0);
+        assert!(!s.train.resume);
+        s.set("checkpoint_dir=/tmp/ck").unwrap();
+        s.set("checkpoint_every_epochs=2").unwrap();
+        s.set("resume=true").unwrap();
+        s.set("stop_after_epochs=4").unwrap();
+        s.set("generation=3").unwrap();
+        assert_eq!(s.train.checkpoint_dir, "/tmp/ck");
+        assert_eq!(s.train.checkpoint_every_epochs, 2);
+        assert!(s.train.resume);
+        assert_eq!(s.train.stop_after_epochs, 4);
+        assert_eq!(s.train.launch_generation, 3);
+
+        assert_eq!(s.train.straggler_node, -1, "straggler injection is off by default");
+        s.set("straggler_node=1").unwrap();
+        s.set("straggler_factor=2.5").unwrap();
+        assert_eq!(s.train.straggler_node, 1);
+        assert_eq!(s.train.straggler_factor, 2.5);
+
+        assert!(!s.daso.absorb_stragglers);
+        s.set("daso.absorb_stragglers=true").unwrap();
+        s.set("daso.absorb_threshold=0.4").unwrap();
+        s.set("daso.absorb_patience=3").unwrap();
+        assert!(s.daso.absorb_stragglers);
+        assert_eq!(s.daso.absorb_threshold, 0.4);
+        assert_eq!(s.daso.absorb_patience, 3);
+    }
+
+    #[test]
+    fn validate_gates_resume() {
+        let mut s = RunSpec::default_for("mlp");
+        s.validate().unwrap();
+        s.set("resume=true").unwrap();
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("checkpoint-dir"), "{err}");
+        s.set("checkpoint_dir=/tmp/ck").unwrap();
+        s.validate().unwrap();
+        s.set("strategy=horovod").unwrap();
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("strategy=daso"), "{err}");
+        assert!(err.contains("horovod"), "{err}");
     }
 
     #[test]

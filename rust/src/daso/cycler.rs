@@ -10,6 +10,10 @@
 
 use crate::optim::PlateauDetector;
 
+/// Cap on straggler-absorption doublings of the effective sync period
+/// (2^4 = at most 16x fewer global syncs than the loss-driven B asks).
+const MAX_BOOST: u32 = 4;
+
 #[derive(Debug, Clone)]
 pub struct Cycler {
     b_init: usize,
@@ -19,6 +23,27 @@ pub struct Cycler {
     detector: PlateauDetector,
     pub reductions: u64,
     pub resets: u64,
+    /// Straggler-absorption widening applied *on top of* the loss-driven
+    /// B/W: each unit doubles the effective sync period. Kept out of the
+    /// public `b`/`w` so the paper's plateau cycle (and its invariants)
+    /// are untouched; read the widened pair via [`Cycler::effective`].
+    boost: u32,
+    /// Consecutive clock-skew observations in one direction (positive =
+    /// high skew, negative = calm); a boost step needs a full streak.
+    streak: i64,
+}
+
+/// Snapshot of the cycler's mutable state, for checkpoint/restore.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CyclerState {
+    pub b: usize,
+    pub w: usize,
+    pub det_best: f64,
+    pub det_stale: usize,
+    pub reductions: u64,
+    pub resets: u64,
+    pub boost: u32,
+    pub streak: i64,
 }
 
 impl Cycler {
@@ -33,6 +58,8 @@ impl Cycler {
             detector: PlateauDetector::new(plateau_patience, 0.005),
             reductions: 0,
             resets: 0,
+            boost: 0,
+            streak: 0,
         }
     }
 
@@ -57,6 +84,66 @@ impl Cycler {
 
     pub fn initial(&self) -> (usize, usize) {
         (self.b_init, self.w_init)
+    }
+
+    /// Feed one epoch's clock-skew verdict (`high` = the slowest node
+    /// lags the fastest beyond the absorption threshold). After
+    /// `patience` consecutive high epochs the effective sync period
+    /// doubles — the straggler gates the world less often instead of
+    /// stalling it; after `patience` consecutive calm epochs one
+    /// doubling is undone.
+    pub fn observe_skew(&mut self, high: bool, patience: usize) {
+        let patience = patience.max(1) as i64;
+        if high {
+            self.streak = if self.streak > 0 { self.streak + 1 } else { 1 };
+        } else {
+            self.streak = if self.streak < 0 { self.streak - 1 } else { -1 };
+        }
+        if self.streak >= patience {
+            self.streak = 0;
+            self.boost = (self.boost + 1).min(MAX_BOOST);
+        } else if self.streak <= -patience {
+            self.streak = 0;
+            self.boost = self.boost.saturating_sub(1);
+        }
+    }
+
+    /// The `(B, W)` actually used by the sync trigger: the loss-driven
+    /// pair widened by the current straggler boost (both scale, so the
+    /// overlap fraction W/B of the paper's cycle is preserved).
+    pub fn effective(&self) -> (usize, usize) {
+        let m = 1usize << self.boost;
+        (self.b.saturating_mul(m), self.w.saturating_mul(m))
+    }
+
+    pub fn boost(&self) -> u32 {
+        self.boost
+    }
+
+    /// Full mutable state, for checkpointing.
+    pub fn state(&self) -> CyclerState {
+        let (det_best, det_stale) = self.detector.state();
+        CyclerState {
+            b: self.b,
+            w: self.w,
+            det_best,
+            det_stale,
+            reductions: self.reductions,
+            resets: self.resets,
+            boost: self.boost,
+            streak: self.streak,
+        }
+    }
+
+    /// Restore a snapshot captured by [`Cycler::state`].
+    pub fn restore(&mut self, s: &CyclerState) {
+        self.b = s.b;
+        self.w = s.w;
+        self.detector.restore(s.det_best, s.det_stale);
+        self.reductions = s.reductions;
+        self.resets = s.resets;
+        self.boost = s.boost;
+        self.streak = s.streak;
     }
 }
 
@@ -116,6 +203,61 @@ mod tests {
             c.observe_loss(10.0 * 0.9f64.powi(i));
         }
         assert_eq!((c.b, c.w), (8, 2));
+    }
+
+    #[test]
+    fn skew_boost_widens_effective_only() {
+        let mut c = Cycler::new(4, 2);
+        assert_eq!(c.effective(), (4, 1));
+        c.observe_skew(true, 2);
+        assert_eq!(c.effective(), (4, 1), "one high epoch is not a streak");
+        c.observe_skew(true, 2);
+        assert_eq!(c.effective(), (8, 2), "streak of 2 doubles the period");
+        assert_eq!((c.b, c.w), (4, 1), "loss-driven pair is untouched");
+        // calm epochs unwind the boost at the same patience
+        c.observe_skew(false, 2);
+        assert_eq!(c.effective(), (8, 2));
+        c.observe_skew(false, 2);
+        assert_eq!(c.effective(), (4, 1));
+        // and never below the loss-driven pair
+        c.observe_skew(false, 1);
+        assert_eq!(c.effective(), (4, 1));
+    }
+
+    #[test]
+    fn skew_boost_is_capped() {
+        let mut c = Cycler::new(2, 2);
+        for _ in 0..100 {
+            c.observe_skew(true, 1);
+        }
+        assert_eq!(c.effective(), (2 << 4, 1 << 4), "boost capped at 4 doublings");
+    }
+
+    #[test]
+    fn mixed_skew_never_boosts() {
+        let mut c = Cycler::new(4, 2);
+        for i in 0..50 {
+            c.observe_skew(i % 2 == 0, 2);
+            assert_eq!(c.effective(), (4, 1), "alternating skew is not a streak");
+        }
+    }
+
+    #[test]
+    fn state_roundtrip() {
+        let mut c = Cycler::new(8, 1);
+        plateau(&mut c);
+        c.observe_skew(true, 1);
+        c.observe_loss(0.5);
+        let snap = c.state();
+        let mut fresh = Cycler::new(8, 1);
+        fresh.restore(&snap);
+        assert_eq!(fresh.state(), snap);
+        assert_eq!((fresh.b, fresh.w), (c.b, c.w));
+        assert_eq!(fresh.effective(), c.effective());
+        // both continue identically
+        c.observe_loss(0.5);
+        fresh.observe_loss(0.5);
+        assert_eq!(fresh.state(), c.state());
     }
 
     #[test]

@@ -30,14 +30,15 @@
 //! property of the algorithm), but its *cost* follows the transport you
 //! configured, so `--wire` shows up in sim-time projections.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
+use crate::cluster::checkpoint::{BlobReader, BlobWriter};
 use crate::comm::cost::{cast_time, ring_allreduce_time, tree_broadcast_time, DEVICE_MEM_BW};
 use crate::comm::transport::wire::{roundtrip_combine, roundtrip_inplace};
 use crate::comm::{ring_allreduce_mean, sum_buffers, GroupRotation, Payload, Wire};
 use crate::trainer::strategy::{CommStats, RankCtx, RankStrategy, StepCtx, Strategy};
 
-use super::cycler::Cycler;
+use super::cycler::{Cycler, CyclerState};
 use super::phase::{Phase, PhaseSchedule};
 
 /// Configuration for the DASO optimizer.
@@ -60,6 +61,17 @@ pub struct DasoConfig {
     /// average matters (the 2S local weighting was "found experimentally",
     /// section 3).
     pub staleness_blend: bool,
+    /// widen the effective (B, W) when the epoch-end virtual clocks show
+    /// a persistent straggler, so the whole cluster syncs less often
+    /// instead of repeatedly blocking on the slow node (straggler
+    /// absorption). The loss-driven cycler state is untouched; the boost
+    /// layers on top and unwinds when the skew clears.
+    pub absorb_stragglers: bool,
+    /// relative clock skew `(max - min) / max` above which an epoch
+    /// counts toward the straggler streak
+    pub absorb_threshold: f64,
+    /// consecutive high-skew (or calm) epochs before the boost moves
+    pub absorb_patience: usize,
 }
 
 impl DasoConfig {
@@ -72,7 +84,95 @@ impl DasoConfig {
             plateau_patience: 5,
             kernel_local_avg: true,
             staleness_blend: true,
+            absorb_stragglers: false,
+            absorb_threshold: 0.5,
+            absorb_patience: 2,
         }
+    }
+}
+
+/// Version tag on the DASO strategy checkpoint blob.
+const STATE_BLOB_VERSION: u32 = 1;
+
+/// Serialize the resumable schedule state shared by [`Daso`] and
+/// [`DasoRank`]: epoch, rotation position, full cycler state, and the
+/// scalar comm counters (the per-node wire-byte vectors are
+/// transport-level and reset per launch attempt, so they stay out).
+/// Callers quiesce first — an in-flight sync is never checkpointed.
+fn encode_daso_state(
+    epoch: usize,
+    next_group: usize,
+    cycler: &Cycler,
+    stats: &CommStats,
+) -> Vec<u8> {
+    let s = cycler.state();
+    let mut w = BlobWriter::new();
+    w.put_u32(STATE_BLOB_VERSION);
+    w.put_u64(epoch as u64);
+    w.put_u64(next_group as u64);
+    w.put_u64(s.b as u64);
+    w.put_u64(s.w as u64);
+    w.put_f64(s.det_best);
+    w.put_u64(s.det_stale as u64);
+    w.put_u64(s.reductions);
+    w.put_u64(s.resets);
+    w.put_u32(s.boost);
+    w.put_i64(s.streak);
+    w.put_u64(stats.global_syncs);
+    w.put_u64(stats.blocking_syncs);
+    w.put_u64(stats.nonblocking_syncs);
+    w.put_u64(stats.local_syncs);
+    w.put_u64(stats.bytes_inter);
+    w.put_u64(stats.bytes_intra);
+    w.put_f64(stats.comm_wait_s);
+    w.finish()
+}
+
+fn decode_daso_state(blob: &[u8]) -> Result<(usize, usize, CyclerState, CommStats)> {
+    let mut r = BlobReader::new(blob);
+    let v = r.u32()?;
+    ensure!(
+        v == STATE_BLOB_VERSION,
+        "daso strategy blob version {v}, this build reads {STATE_BLOB_VERSION}"
+    );
+    let epoch = r.usize()?;
+    let next_group = r.usize()?;
+    let cycler = CyclerState {
+        b: r.usize()?,
+        w: r.usize()?,
+        det_best: r.f64()?,
+        det_stale: r.usize()?,
+        reductions: r.u64()?,
+        resets: r.u64()?,
+        boost: r.u32()?,
+        streak: r.i64()?,
+    };
+    let stats = CommStats {
+        global_syncs: r.u64()?,
+        blocking_syncs: r.u64()?,
+        nonblocking_syncs: r.u64()?,
+        local_syncs: r.u64()?,
+        bytes_inter: r.u64()?,
+        bytes_intra: r.u64()?,
+        comm_wait_s: r.f64()?,
+        ..CommStats::default()
+    };
+    r.done()?;
+    Ok((epoch, next_group, cycler, stats))
+}
+
+/// Relative spread of the epoch-end clocks: `(max - min) / max`. Zero
+/// for an empty or single-entry vector — no cluster, no straggler.
+fn clock_skew(clocks: &[f64]) -> f64 {
+    if clocks.len() < 2 {
+        return 0.0;
+    }
+    let max = clocks.iter().fold(f64::MIN, |a, &b| a.max(b));
+    let min = clocks.iter().fold(f64::MAX, |a, &b| a.min(b));
+    if max > 0.0 {
+        (max - min) / max
+    } else {
+        0.0
     }
 }
 
@@ -293,7 +393,7 @@ impl Daso {
         self.stats.bytes_inter += (members.len() * frame_bytes) as u64;
         self.inflight = Some(Inflight {
             start_batch: ctx.global_batch,
-            wait: self.cycler.w,
+            wait: self.cycler.effective().1,
             group,
             sum,
             finish_time,
@@ -359,7 +459,7 @@ impl Strategy for Daso {
                     }
                 }
                 if self.inflight.is_none()
-                    && ctx.global_batch % self.cycler.b.max(1) == 0
+                    && ctx.global_batch % self.cycler.effective().0.max(1) == 0
                 {
                     self.start_nonblocking(ctx);
                 }
@@ -382,18 +482,52 @@ impl Strategy for Daso {
         Ok(())
     }
 
+    fn quiesce(&mut self, ctx: &mut StepCtx) -> Result<()> {
+        if self.inflight.is_some() {
+            self.complete_nonblocking(ctx)?;
+        }
+        Ok(())
+    }
+
+    fn observe_epoch_clocks(&mut self, epoch: usize, clocks: &[f64]) {
+        if !self.cfg.absorb_stragglers || self.schedule.phase(epoch) != Phase::Cycling {
+            return;
+        }
+        let high = clock_skew(clocks) > self.cfg.absorb_threshold;
+        self.cycler.observe_skew(high, self.cfg.absorb_patience);
+    }
+
+    fn save_state(&self) -> Vec<u8> {
+        debug_assert!(self.inflight.is_none(), "checkpoint cut with a sync in flight");
+        encode_daso_state(self.epoch, self.rotation.peek(), &self.cycler, &self.stats)
+    }
+
+    fn load_state(&mut self, blob: &[u8]) -> Result<()> {
+        let (epoch, next_group, cycler, stats) = decode_daso_state(blob)?;
+        self.epoch = epoch;
+        self.rotation.set_next(next_group);
+        self.cycler.restore(&cycler);
+        self.stats = stats;
+        self.inflight = None;
+        Ok(())
+    }
+
     fn comm_stats(&self) -> CommStats {
         self.stats.clone()
     }
 
     fn state_desc(&self) -> String {
-        format!(
+        let mut s = format!(
             "phase={:?} B={} W={} next_group={}",
             self.phase(),
             self.cycler.b,
             self.cycler.w,
             self.rotation.peek()
-        )
+        );
+        if self.cycler.boost() > 0 {
+            s.push_str(&format!(" boost={}", self.cycler.boost()));
+        }
+        s
     }
 }
 
@@ -595,7 +729,7 @@ impl DasoRank {
         }
         self.inflight = Some(InflightRank {
             start_batch: ctx.global_batch,
-            wait: self.cycler.w,
+            wait: self.cycler.effective().1,
             group,
         });
         Ok(())
@@ -656,7 +790,9 @@ impl RankStrategy for DasoRank {
                         self.complete_nonblocking(ctx)?;
                     }
                 }
-                if self.inflight.is_none() && ctx.global_batch % self.cycler.b.max(1) == 0 {
+                if self.inflight.is_none()
+                    && ctx.global_batch % self.cycler.effective().0.max(1) == 0
+                {
                     self.start_nonblocking(ctx)?;
                 }
             }
@@ -679,17 +815,53 @@ impl RankStrategy for DasoRank {
         Ok(())
     }
 
+    fn quiesce(&mut self, ctx: &mut RankCtx) -> Result<()> {
+        if self.inflight.is_some() {
+            self.complete_nonblocking(ctx)?;
+        }
+        Ok(())
+    }
+
+    fn observe_epoch_clocks(&mut self, epoch: usize, clocks: &[f64]) {
+        // every rank sees the same clock vector (from the epoch-loss
+        // reduction), so the boost moves in lockstep across replicas
+        if !self.cfg.absorb_stragglers || self.schedule.phase(epoch) != Phase::Cycling {
+            return;
+        }
+        let high = clock_skew(clocks) > self.cfg.absorb_threshold;
+        self.cycler.observe_skew(high, self.cfg.absorb_patience);
+    }
+
+    fn save_state(&self) -> Vec<u8> {
+        debug_assert!(self.inflight.is_none(), "checkpoint cut with a sync in flight");
+        encode_daso_state(self.epoch, self.rotation.peek(), &self.cycler, &self.stats)
+    }
+
+    fn load_state(&mut self, blob: &[u8]) -> Result<()> {
+        let (epoch, next_group, cycler, stats) = decode_daso_state(blob)?;
+        self.epoch = epoch;
+        self.rotation.set_next(next_group);
+        self.cycler.restore(&cycler);
+        self.stats = stats;
+        self.inflight = None;
+        Ok(())
+    }
+
     fn comm_stats(&self) -> CommStats {
         self.stats.clone()
     }
 
     fn state_desc(&self) -> String {
-        format!(
+        let mut s = format!(
             "phase={:?} B={} W={} next_group={}",
             self.phase(),
             self.cycler.b,
             self.cycler.w,
             self.rotation.peek()
-        )
+        );
+        if self.cycler.boost() > 0 {
+            s.push_str(&format!(" boost={}", self.cycler.boost()));
+        }
+        s
     }
 }

@@ -1,6 +1,6 @@
 //! `daso` — leader entrypoint / CLI for the DASO reproduction.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use daso::cli::{Args, HELP};
 use daso::config::RunSpec;
@@ -68,9 +68,16 @@ fn build_spec(args: &Args) -> Result<RunSpec> {
     if let Some(out) = args.get("out") {
         spec.out_dir = Some(out.to_string());
     }
+    if let Some(dir) = args.get("checkpoint-dir") {
+        spec.set(&format!("checkpoint_dir={dir}"))?;
+    }
+    if args.get_bool("resume") {
+        spec.train.resume = true;
+    }
     for assignment in args.get_all("set") {
         spec.set(assignment)?;
     }
+    spec.validate()?;
     Ok(spec)
 }
 
@@ -151,6 +158,16 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// Spawn a full multi-process run on this machine: bind the coordinator
 /// listener, re-exec this binary once per peer node with the training
 /// flags forwarded, then train as node 0 through the TCP transport.
+///
+/// The launch is an *elastic supervisor loop*: each pass is one attempt.
+/// When a peer process dies mid-run (the watchdog names the corpse) and
+/// checkpointing is configured, the supervisor rewrites the newest
+/// snapshot for the surviving topology, re-deals the dead node's data
+/// shards (implicit in the smaller world), bumps the launch generation
+/// (the HELLO/WELCOME handshake refuses stale processes) and relaunches
+/// on the survivors with `--resume` forced. Every regroup is recorded in
+/// the final report's `regroups` list. Any other failure — or a death
+/// with no usable checkpoint — surfaces as the attempt's error.
 fn cmd_launch(args: &Args) -> Result<()> {
     let bind = args.get("bind").unwrap_or("127.0.0.1:0");
     let mut spec = build_spec(args)?;
@@ -167,45 +184,21 @@ fn cmd_launch(args: &Args) -> Result<()> {
     if let Some(w) = wpn_flag {
         spec.train.gpus_per_node = w;
     }
-    let (nodes, wpn) = (spec.train.nodes, spec.train.gpus_per_node);
     let transport = spec.resolved_transport()?;
 
-    // binds the listener AND (for shm-backed transports) creates the
-    // segment directory — the launcher keeps cleanup ownership of the
-    // segments through `shm_guard` below, so every exit path reaps them
-    let launcher = daso::cluster::launch::Launcher::bind(bind, nodes, wpn, transport)?;
-    let addr = launcher.addr();
-
-    // reconstruct the peer command line: forward the run-defining flags,
-    // then force executor + topology last so children cannot diverge
-    let mut train_args: Vec<String> = vec!["train".into()];
+    // base peer command line: the run-defining flags plus user
+    // overrides; launch_attempt appends the per-attempt forced entries
+    // (executor, topology, resume/generation) after these
+    let mut base_args: Vec<String> = vec!["train".into()];
     for key in ["model", "strategy", "config", "artifacts"] {
         if let Some(v) = args.get(key) {
-            train_args.push(format!("--{key}"));
-            train_args.push(v.to_string());
+            base_args.push(format!("--{key}"));
+            base_args.push(v.to_string());
         }
     }
     for v in args.get_all("set") {
-        train_args.push("--set".into());
-        train_args.push(v.to_string());
-    }
-    // forced as trailing --set entries: build_spec applies --set
-    // overrides last, so a forwarded `--set executor=...` (or topology
-    // key) cannot make a child diverge from the launch. The resolved
-    // wire format is forced too (covering --wire, config files and
-    // DASO_GLOBAL_WIRE on the launcher side); the HELLO/WELCOME
-    // handshake double-checks it.
-    for forced in [
-        "executor=multiprocess".to_string(),
-        format!("nodes={nodes}"),
-        format!("gpus_per_node={wpn}"),
-        format!("global_wire={}", spec.train.global_wire.name()),
-        format!("leader_placement={}", spec.train.leader_placement.name()),
-        format!("pipeline_chunk_elems={}", spec.train.pipeline_chunk_elems),
-        format!("transport={}", transport.name()),
-    ] {
-        train_args.push("--set".into());
-        train_args.push(forced);
+        base_args.push("--set".into());
+        base_args.push(v.to_string());
     }
 
     let engine = Engine::auto(&spec.artifacts_dir);
@@ -216,33 +209,117 @@ fn cmd_launch(args: &Args) -> Result<()> {
         spec.train.val_samples,
         spec.train.seed,
     )?;
-    eprintln!(
-        "launching {} with {}: {} node process(es) x {} workers over {} on {addr}",
-        spec.model,
-        spec.strategy.name(),
-        nodes,
-        wpn,
-        transport.name()
-    );
+
+    let mut regroups: Vec<daso::trainer::RegroupEvent> = Vec::new();
+    let mut report = loop {
+        eprintln!(
+            "launching {} with {}: {} node process(es) x {} workers over {} (generation {})",
+            spec.model,
+            spec.strategy.name(),
+            spec.train.nodes,
+            spec.train.gpus_per_node,
+            transport.name(),
+            spec.train.launch_generation,
+        );
+        let (result, dead) =
+            launch_attempt(&spec, bind, transport, &base_args, &rt, &*train_d, &*val_d)?;
+        match result {
+            Ok(report) => break report,
+            Err(e) if dead > 0 => {
+                let dead = dead as usize;
+                eprintln!("launch: node {dead} died mid-run ({e:#}); regrouping onto survivors");
+                let resume_epoch = regroup_onto_survivors(&mut spec, &rt.spec.name, dead)
+                    .with_context(|| format!("cannot regroup after losing node {dead}"))?;
+                regroups.push(daso::trainer::RegroupEvent {
+                    resume_epoch,
+                    lost_node: dead,
+                    nodes: spec.train.nodes,
+                    gpus_per_node: spec.train.gpus_per_node,
+                });
+            }
+            Err(e) => return Err(e),
+        }
+    };
+    report.regroups = regroups;
+    emit_report(&spec, &report)
+}
+
+/// One launch attempt: bind, spawn peers, train as node 0, tear down.
+/// Returns the attempt's outcome plus the watchdog's first-dead node id
+/// (-1 when no peer died before/while the coordinator failed); a death
+/// noticed only after a successful run is reported as a plain error,
+/// never as a regroup signal.
+fn launch_attempt(
+    spec: &RunSpec,
+    bind: &str,
+    transport: daso::comm::TransportKind,
+    base_args: &[String],
+    rt: &daso::runtime::ModelRuntime,
+    train_d: &dyn daso::data::Dataset,
+    val_d: &dyn daso::data::Dataset,
+) -> Result<(Result<daso::trainer::RunReport>, i64)> {
+    use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+    use std::sync::{Arc, Mutex};
+
+    let (nodes, wpn) = (spec.train.nodes, spec.train.gpus_per_node);
+    // binds the listener AND (for shm-backed transports) creates the
+    // segment directory — the launcher keeps cleanup ownership of the
+    // segments through `shm_guard` below, so every exit path reaps them
+    let launcher = daso::cluster::launch::Launcher::bind(bind, nodes, wpn, transport)?;
+    let addr = launcher.addr();
+
+    // forced as trailing --set entries: build_spec applies --set
+    // overrides last, so a forwarded `--set executor=...` (or topology
+    // key) cannot make a child diverge from the launch. The resolved
+    // wire format is forced too (covering --wire, config files and
+    // DASO_GLOBAL_WIRE on the launcher side); the HELLO/WELCOME
+    // handshake double-checks it, and the generation stamp makes peers
+    // of a previous elastic attempt unable to rejoin this one.
+    let mut train_args: Vec<String> = base_args.to_vec();
+    for forced in [
+        "executor=multiprocess".to_string(),
+        format!("nodes={nodes}"),
+        format!("gpus_per_node={wpn}"),
+        format!("global_wire={}", spec.train.global_wire.name()),
+        format!("leader_placement={}", spec.train.leader_placement.name()),
+        format!("pipeline_chunk_elems={}", spec.train.pipeline_chunk_elems),
+        format!("transport={}", transport.name()),
+        format!("checkpoint_dir={}", spec.train.checkpoint_dir),
+        format!("checkpoint_every_epochs={}", spec.train.checkpoint_every_epochs),
+        format!("resume={}", spec.train.resume),
+        format!("stop_after_epochs={}", spec.train.stop_after_epochs),
+        format!("straggler_node={}", spec.train.straggler_node),
+        format!("straggler_factor={}", spec.train.straggler_factor),
+        format!("generation={}", spec.train.launch_generation),
+    ] {
+        train_args.push("--set".into());
+        train_args.push(forced);
+    }
+
     let children = launcher.spawn_peers(&train_args)?;
     let factory = spec.build_rank_strategies();
     let (listener, shm_guard) = launcher.into_parts();
     let shm_dir = shm_guard.as_ref().map(|d| d.path().to_path_buf());
 
     // watchdog: a peer dying before the handshake aborts the rendezvous
-    // with a named error instead of waiting out comm_timeout_ms; the
-    // shm segments are reaped by shm_guard on every path below
-    use std::sync::atomic::{AtomicBool, Ordering};
-    use std::sync::{Arc, Mutex};
+    // with a named error instead of waiting out comm_timeout_ms, and
+    // records the first corpse for the elastic supervisor; the shm
+    // segments are reaped by shm_guard on every path below
     let children = Arc::new(Mutex::new(children));
     let done = Arc::new(AtomicBool::new(false));
-    let watchdog = daso::cluster::launch::spawn_watchdog(children.clone(), addr, done.clone());
+    let first_dead = Arc::new(AtomicI64::new(-1));
+    let watchdog = daso::cluster::launch::spawn_watchdog(
+        children.clone(),
+        addr,
+        done.clone(),
+        first_dead.clone(),
+    );
 
     let result = daso::cluster::train_coordinator(
-        &rt,
+        rt,
         &spec.train,
-        &*train_d,
-        &*val_d,
+        train_d,
+        val_d,
         &factory,
         listener,
         transport,
@@ -250,18 +327,61 @@ fn cmd_launch(args: &Args) -> Result<()> {
     );
     done.store(true, Ordering::Release);
     let _ = watchdog.join();
-    let kids = std::mem::take(&mut *children.lock().unwrap());
-    let report = match result {
-        Ok(report) => report,
+    let mut kids = std::mem::take(&mut *children.lock().unwrap());
+    let outcome = match result {
+        Ok(report) => match daso::cluster::launch::wait_peers(kids) {
+            Ok(()) => Ok(report),
+            // the run completed; a peer failing on its way out is not a
+            // regroup signal
+            Err(e) => return Ok((Err(e), -1)),
+        },
         Err(e) => {
-            let mut kids = kids;
             daso::cluster::launch::kill_peers(&mut kids);
-            return Err(e);
+            Err(e)
         }
     };
-    daso::cluster::launch::wait_peers(kids)?;
+    let dead = if outcome.is_err() { first_dead.load(Ordering::Acquire) } else { -1 };
     drop(shm_guard);
-    emit_report(&spec, &report)
+    Ok((outcome, dead))
+}
+
+/// Rewrite the newest checkpoint generation for the world that survives
+/// `dead_node` and point `spec` at the new topology: one node fewer,
+/// `--resume` forced, launch generation bumped past the source
+/// snapshot's attempt. Returns the epoch training resumes at.
+fn regroup_onto_survivors(spec: &mut RunSpec, model_name: &str, dead_node: usize) -> Result<usize> {
+    use daso::cluster::checkpoint;
+
+    ensure!(
+        !spec.train.checkpoint_dir.is_empty() && spec.train.checkpoint_every_epochs > 0,
+        "elastic regroup needs --checkpoint-dir and --set checkpoint_every_epochs=K"
+    );
+    ensure!(
+        spec.strategy == daso::config::StrategyKind::Daso,
+        "elastic regroup resumes from checkpoints, which only strategy=daso supports"
+    );
+    let dir = std::path::Path::new(&spec.train.checkpoint_dir);
+    let old_fp = checkpoint::run_fingerprint(model_name, spec.strategy.name(), &spec.train);
+    let loaded = checkpoint::load_latest(dir, &old_fp)?.ok_or_else(|| {
+        anyhow!("no checkpoint generations in {dir:?} — the run died before the first snapshot")
+    })?;
+    let mut survivor_train = spec.train.clone();
+    survivor_train.nodes -= 1;
+    let new_fp = checkpoint::run_fingerprint(model_name, spec.strategy.name(), &survivor_train);
+    let rewritten = checkpoint::rewrite_for_survivors(&loaded, dead_node, &new_fp)?;
+    let attempt = loaded.attempt + 1;
+    for ck in &rewritten {
+        checkpoint::write_rank(dir, loaded.epochs_done, attempt, ck)?;
+    }
+    eprintln!(
+        "regroup: rewrote epoch-{} snapshot for {} survivor node(s) (attempt {attempt})",
+        loaded.epochs_done,
+        survivor_train.nodes
+    );
+    spec.train.nodes -= 1;
+    spec.train.resume = true;
+    spec.train.launch_generation = attempt;
+    Ok(loaded.epochs_done)
 }
 
 /// Run every strategy on the same model/config and print a comparison —

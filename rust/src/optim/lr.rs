@@ -68,6 +68,20 @@ impl LrSchedule {
     pub fn epoch(&self) -> usize {
         self.epoch
     }
+
+    /// Schedule position for checkpointing: `(epoch, current_factor,
+    /// detector best, detector stale)`.
+    pub fn state(&self) -> (usize, f64, f64, usize) {
+        let (best, stale) = self.detector.state();
+        (self.epoch, self.current_factor, best, stale)
+    }
+
+    /// Restore a position captured by [`LrSchedule::state`].
+    pub fn restore(&mut self, epoch: usize, current_factor: f64, best: f64, stale: usize) {
+        self.epoch = epoch;
+        self.current_factor = current_factor;
+        self.detector.restore(best, stale);
+    }
 }
 
 #[cfg(test)]

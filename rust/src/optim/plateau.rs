@@ -48,6 +48,18 @@ impl PlateauDetector {
         self.best = f64::INFINITY;
         self.stale = 0;
     }
+
+    /// Internal `(best, stale)` counters, for checkpointing.
+    pub fn state(&self) -> (f64, usize) {
+        (self.best, self.stale)
+    }
+
+    /// Restore counters captured by [`PlateauDetector::state`] — the
+    /// resume path must not re-arm an almost-fired plateau.
+    pub fn restore(&mut self, best: f64, stale: usize) {
+        self.best = best;
+        self.stale = stale;
+    }
 }
 
 #[cfg(test)]

@@ -97,6 +97,24 @@ pub fn report_json(report: &RunReport) -> Value {
             "loss_curve",
             arr(report.records.iter().map(|r| num(r.train_loss)).collect()),
         ),
+        // one entry per degraded-mode regroup the supervisor performed:
+        // which node died, which epoch the survivors resumed from, and
+        // the shrunken topology they resumed with
+        (
+            "regroups",
+            arr(report
+                .regroups
+                .iter()
+                .map(|e| {
+                    obj(vec![
+                        ("resume_epoch", num(e.resume_epoch as f64)),
+                        ("lost_node", num(e.lost_node as f64)),
+                        ("nodes", num(e.nodes as f64)),
+                        ("gpus_per_node", num(e.gpus_per_node as f64)),
+                    ])
+                })
+                .collect()),
+        ),
     ])
 }
 
@@ -136,6 +154,7 @@ mod tests {
             total_wall_s: 0.2,
             comm: CommStats::default(),
             final_params: vec![vec![0.0; 4]; 4],
+            regroups: vec![],
         }
     }
 

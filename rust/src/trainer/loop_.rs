@@ -3,11 +3,12 @@
 //! then the strategy performs communication + updates. Virtual clocks
 //! model the paper's testbed timing; wall-clock measures this machine.
 
+use std::path::Path;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, ensure, Result};
 
-use crate::cluster::ClusterState;
+use crate::cluster::{checkpoint, ClusterState};
 use crate::comm::{naive_mean, Fabric, LeaderPlacement, Topology, Wire};
 use crate::data::Dataset;
 use crate::optim::LrSchedule;
@@ -63,6 +64,30 @@ pub struct TrainConfig {
     /// `DASO_PIPELINE_CHUNK_ELEMS`; 0 disables). Chunk reassembly is
     /// exact, so the setting never changes results.
     pub pipeline_chunk_elems: usize,
+    /// directory for cluster checkpoints (`--checkpoint-dir`, config key
+    /// `checkpoint_dir`; empty = no snapshots are written)
+    pub checkpoint_dir: String,
+    /// cut a checkpoint every k epochs (`checkpoint_every_epochs`; 0 =
+    /// off). Any run with this set also *quiesces* in-flight DASO syncs
+    /// at those epochs — whether or not it writes files — so a resumed
+    /// run and an uninterrupted one see bit-identical schedules.
+    pub checkpoint_every_epochs: usize,
+    /// resume from the newest usable checkpoint generation in
+    /// `checkpoint_dir` (`--resume`, config key `resume`)
+    pub resume: bool,
+    /// cleanly stop after k total epochs (`stop_after_epochs`; 0 = run
+    /// to `epochs`) — the deterministic-interruption knob behind the
+    /// resume-parity tests
+    pub stop_after_epochs: usize,
+    /// simulated straggler: node whose per-batch compute time is
+    /// multiplied by `straggler_factor` (`straggler_node`; -1 = none).
+    /// Affects virtual clocks only, never the math — the knob behind
+    /// the straggler-absorption tests.
+    pub straggler_node: i64,
+    pub straggler_factor: f64,
+    /// elastic relaunch attempt, forced to children by `daso launch` on
+    /// every regroup; the handshake rejects peers from another attempt
+    pub launch_generation: u64,
 }
 
 impl TrainConfig {
@@ -87,6 +112,24 @@ impl TrainConfig {
             global_wire: crate::comm::default_global_wire(),
             leader_placement: LeaderPlacement::Mesh,
             pipeline_chunk_elems: crate::comm::default_pipeline_chunk_elems(),
+            checkpoint_dir: String::new(),
+            checkpoint_every_epochs: 0,
+            resume: false,
+            stop_after_epochs: 0,
+            straggler_node: -1,
+            straggler_factor: 1.0,
+            launch_generation: 0,
+        }
+    }
+
+    /// Per-batch compute time for a worker on `node` (the straggler
+    /// knob multiplies one node's compute; identical expression in
+    /// every executor so virtual clocks stay bit-identical).
+    pub fn compute_time_for(&self, node: usize) -> f64 {
+        if self.straggler_node >= 0 && node == self.straggler_node as usize {
+            self.compute_time_s * self.straggler_factor
+        } else {
+            self.compute_time_s
         }
     }
 
@@ -95,7 +138,7 @@ impl TrainConfig {
     }
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct EpochRecord {
     pub epoch: usize,
     pub train_loss: f64,
@@ -109,12 +152,28 @@ pub struct EpochRecord {
     pub strategy_state: String,
 }
 
+/// One elastic-regroup event: a peer died mid-run and the survivors
+/// re-rendezvoused and continued (recorded in the run JSON).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegroupEvent {
+    /// epoch index training resumed at after the regroup
+    pub resume_epoch: usize,
+    /// node id that died, in the failed attempt's numbering
+    pub lost_node: usize,
+    /// surviving topology
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+}
+
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub strategy: String,
     pub model: String,
     pub world: usize,
     pub records: Vec<EpochRecord>,
+    /// elastic-regroup events survived during the run (injected by the
+    /// launch supervisor; empty for undisturbed runs)
+    pub regroups: Vec<RegroupEvent>,
     pub final_metric: f64,
     pub final_val_loss: f64,
     /// best validation metric over the run (the paper reports max IOU)
@@ -177,12 +236,49 @@ pub fn train(
     let wall_start = Instant::now();
     let mut records = Vec::with_capacity(cfg.epochs);
     let mut global_batch = 0usize;
+    let mut start_epoch = 0usize;
+    let mut wall_offset = 0.0f64;
     let mut grads: Vec<Vec<f32>> = vec![Vec::new(); world];
     // resolve the effective wire once, through the same rule every
     // transport applies when wiring its communicators
     let global_wire = topo.resolve_global_wire(cfg.global_wire);
 
-    for epoch in 0..cfg.epochs {
+    // checkpoint identity; a snapshot restores only into the identical run
+    let fp = checkpoint::run_fingerprint(&rt.spec.name, strategy.name(), cfg);
+    if cfg.resume {
+        ensure!(
+            !cfg.checkpoint_dir.is_empty(),
+            "--resume needs --checkpoint-dir (config key checkpoint_dir)"
+        );
+        let loaded = checkpoint::load_latest(Path::new(&cfg.checkpoint_dir), &fp)?
+            .ok_or_else(|| {
+                anyhow!("--resume: no checkpoint generations in {:?}", cfg.checkpoint_dir)
+            })?;
+        for (w, ck) in cluster.workers.iter_mut().zip(&loaded.ranks) {
+            w.params = ck.params.clone();
+            w.momentum = ck.momentum.clone();
+            w.clock = ck.clock;
+            w.batches_done = ck.batches_done;
+            w.bytes_sent_intra = ck.bytes_sent_intra;
+            w.bytes_sent_inter = ck.bytes_sent_inter;
+        }
+        let head = &loaded.ranks[0];
+        lr_sched.restore(head.lr_epoch, head.lr_factor, head.lr_best, head.lr_stale);
+        strategy.load_state(&head.strategy_blob)?;
+        records = head.records.clone();
+        global_batch = head.global_batch;
+        start_epoch = loaded.epochs_done;
+        wall_offset = head.wall_s;
+        if cfg.verbose {
+            eprintln!(
+                "[{}] resumed from {:?} at epoch {start_epoch}",
+                strategy.name(),
+                loaded.dir
+            );
+        }
+    }
+
+    for epoch in start_epoch..cfg.epochs {
         strategy.on_epoch_start(epoch);
         let lr = lr_sched.lr() as f32;
         let mut loss_sum = 0.0f64;
@@ -202,7 +298,7 @@ pub fn train(
                 loss_sum += loss as f64;
                 grads[w] = g;
                 let worker = &mut cluster.workers[w];
-                worker.advance_clock(cfg.compute_time_s);
+                worker.advance_clock(cfg.compute_time_for(worker.rank.node));
                 worker.batches_done += 1;
             }
             global_batch += 1;
@@ -220,8 +316,33 @@ pub fn train(
         }
 
         let train_loss = loss_sum / (world * steps_per_epoch) as f64;
+        // straggler signal: the epoch-end clock vector (rank order) —
+        // the same values every rank of the threaded/multiprocess
+        // executors learns from the epoch-loss reduction
+        let clocks: Vec<f64> = cluster.workers.iter().map(|w| w.clock).collect();
         lr_sched.on_epoch_end(train_loss);
         strategy.on_epoch_end(epoch, train_loss);
+        strategy.observe_epoch_clocks(epoch, &clocks);
+
+        // quiesce in-flight syncs at checkpoint epochs — on *every* run
+        // with checkpointing configured, whether or not this run writes
+        // files, so an interrupted+resumed run and an uninterrupted one
+        // see bit-identical schedules
+        let at_checkpoint =
+            cfg.checkpoint_every_epochs > 0 && (epoch + 1) % cfg.checkpoint_every_epochs == 0;
+        if at_checkpoint {
+            let mut ctx = StepCtx {
+                rt,
+                cluster: &mut cluster,
+                fabric: &cfg.fabric,
+                grads: &mut grads,
+                lr,
+                epoch,
+                global_batch,
+                global_wire,
+            };
+            strategy.quiesce(&mut ctx)?;
+        }
 
         let do_eval = cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0;
         let (metric, val_loss) = if do_eval {
@@ -238,7 +359,7 @@ pub fn train(
             metric,
             val_loss,
             sim_time_s: cluster.makespan(),
-            wall_time_s: wall_start.elapsed().as_secs_f64(),
+            wall_time_s: wall_offset + wall_start.elapsed().as_secs_f64(),
             strategy_state: strategy.state_desc(),
         };
         if cfg.verbose {
@@ -254,6 +375,53 @@ pub fn train(
             );
         }
         records.push(rec);
+
+        if at_checkpoint && !cfg.checkpoint_dir.is_empty() {
+            let dir = Path::new(&cfg.checkpoint_dir);
+            let wall_s = wall_offset + wall_start.elapsed().as_secs_f64();
+            let (lr_epoch, lr_factor, lr_best, lr_stale) = lr_sched.state();
+            let blob = strategy.save_state();
+            for w in &cluster.workers {
+                let ck = checkpoint::RankCheckpoint {
+                    fp: fp.clone(),
+                    rank: w.rank.global,
+                    epochs_done: epoch + 1,
+                    global_batch,
+                    wall_s,
+                    lr_epoch,
+                    lr_factor,
+                    lr_best,
+                    lr_stale,
+                    strategy_blob: blob.clone(),
+                    params: w.params.clone(),
+                    momentum: w.momentum.clone(),
+                    clock: w.clock,
+                    batches_done: w.batches_done,
+                    bytes_sent_intra: w.bytes_sent_intra,
+                    bytes_sent_inter: w.bytes_sent_inter,
+                    records: if w.rank.global == 0 { records.clone() } else { Vec::new() },
+                };
+                checkpoint::write_rank(dir, epoch + 1, 0, &ck)?;
+            }
+            checkpoint::prune(dir, checkpoint::KEEP_GENERATIONS)?;
+        }
+
+        // the deterministic-interruption knob: exit cleanly mid-run so
+        // the resume-parity tests can interrupt without killing anything
+        if cfg.stop_after_epochs > 0
+            && epoch + 1 >= cfg.stop_after_epochs
+            && epoch + 1 < cfg.epochs
+        {
+            if cfg.verbose {
+                eprintln!(
+                    "[{}] stopping after epoch {} (stop_after_epochs={})",
+                    strategy.name(),
+                    epoch,
+                    cfg.stop_after_epochs
+                );
+            }
+            break;
+        }
     }
 
     // flush in-flight state, final consensus evaluation
@@ -286,9 +454,10 @@ pub fn train(
         final_val_loss: final_acc.mean_loss(),
         best_metric,
         total_sim_time_s: cluster.makespan(),
-        total_wall_s: wall_start.elapsed().as_secs_f64(),
+        total_wall_s: wall_offset + wall_start.elapsed().as_secs_f64(),
         comm: strategy.comm_stats(),
         final_params: cluster.workers.iter().map(|w| w.params.clone()).collect(),
+        regroups: vec![],
     })
 }
 

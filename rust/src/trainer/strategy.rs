@@ -6,7 +6,7 @@
 //! communication and parameter updates — mirroring how a DPNN optimizer
 //! wraps the local optimizer in the paper's Listing 1.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::cluster::{ClusterState, Worker};
 use crate::comm::channels::RankComms;
@@ -85,6 +85,38 @@ pub trait Strategy {
     fn state_desc(&self) -> String {
         String::new()
     }
+
+    /// Complete (don't abandon) any in-flight communication so the
+    /// cluster state is fully settled — called before a checkpoint is
+    /// cut. Unlike `finalize`, training continues afterwards. Run at the
+    /// same epochs on *every* run with checkpointing enabled, so a
+    /// resumed run and an uninterrupted one see identical schedules.
+    fn quiesce(&mut self, _ctx: &mut StepCtx) -> Result<()> {
+        Ok(())
+    }
+
+    /// Per-worker epoch-end virtual clocks (rank order, the same vector
+    /// on every rank) — the straggler signal. Default: ignore.
+    fn observe_epoch_clocks(&mut self, _epoch: usize, _clocks: &[f64]) {}
+
+    /// Serialize resumable internal state as an opaque blob for the
+    /// checkpoint. Default: stateless.
+    fn save_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore a blob captured by `save_state`. The default rejects
+    /// non-empty blobs so a stateful strategy can never silently resume
+    /// without its state.
+    fn load_state(&mut self, blob: &[u8]) -> Result<()> {
+        ensure!(
+            blob.is_empty(),
+            "strategy {:?} cannot restore checkpoint state ({} bytes)",
+            self.name(),
+            blob.len()
+        );
+        Ok(())
+    }
 }
 
 /// One training round as seen by one worker thread in the threaded
@@ -138,6 +170,35 @@ pub trait RankStrategy {
 
     fn state_desc(&self) -> String {
         String::new()
+    }
+
+    /// Complete any in-flight communication before a checkpoint is cut
+    /// (see `Strategy::quiesce`). Collective: every rank must call it at
+    /// the same point or the rendezvous deadlocks — the executor calls
+    /// it at epoch boundaries, from replicated-deterministic config.
+    fn quiesce(&mut self, _ctx: &mut RankCtx) -> Result<()> {
+        Ok(())
+    }
+
+    /// Per-worker epoch-end virtual clocks (rank order; identical on
+    /// every rank, taken from the epoch-loss reduction) — the straggler
+    /// signal. Default: ignore.
+    fn observe_epoch_clocks(&mut self, _epoch: usize, _clocks: &[f64]) {}
+
+    /// Serialize resumable internal state as an opaque blob (see
+    /// `Strategy::save_state`).
+    fn save_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    fn load_state(&mut self, blob: &[u8]) -> Result<()> {
+        ensure!(
+            blob.is_empty(),
+            "strategy {:?} cannot restore checkpoint state ({} bytes)",
+            self.name(),
+            blob.len()
+        );
+        Ok(())
     }
 }
 

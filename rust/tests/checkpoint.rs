@@ -1,0 +1,429 @@
+//! Checkpoint/restore contract tests (native backend, so they always
+//! run):
+//!
+//! - a run interrupted at a checkpoint boundary (`stop_after_epochs`)
+//!   and resumed with `--resume` must be **bit-identical** to the same
+//!   run left uninterrupted — final parameters, loss records and sim
+//!   times — on the serial, threaded and multiprocess executors, and at
+//!   compressed wire settings, not just f32;
+//! - tampered checkpoint files (truncated, bit-flipped, wrong format
+//!   version) must fail decode with named errors, end to end through
+//!   files written by a real run;
+//! - `--resume` against an empty checkpoint directory must be a named
+//!   error, not a silent cold start;
+//! - straggler absorption must cut the global sync count when one node
+//!   runs slow and `daso.absorb_stragglers` is on.
+
+#![cfg(not(feature = "pjrt"))]
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use daso::cluster::checkpoint::RankCheckpoint;
+use daso::cluster::{train_threaded, train_with_transport};
+use daso::comm::transport::tcp::{TcpTransport, TcpTuning, ENV_COORD_ADDR, ENV_NODE_ID};
+use daso::config::RunSpec;
+use daso::runtime::Engine;
+use daso::trainer::{train, RunReport};
+
+/// The shared run shape: 2 nodes x 2 workers, 6 epochs with a snapshot
+/// every 2 — long enough for the DASO cycler to leave warm-up and have
+/// non-blocking syncs in flight across checkpoint boundaries.
+const SETS: &[&str] = &[
+    "nodes=2",
+    "gpus_per_node=2",
+    "epochs=6",
+    "train.train_samples=1024",
+    "train.val_samples=256",
+    "train.lr_scale=4",
+    "daso.warmup_epochs=1",
+    "daso.cooldown_epochs=1",
+    "checkpoint_every_epochs=2",
+];
+
+fn spec_with(extra: &[String]) -> RunSpec {
+    let mut s = RunSpec::default_for("mlp");
+    for set in SETS {
+        s.set(set).unwrap();
+    }
+    for set in extra {
+        s.set(set).unwrap();
+    }
+    s.validate().unwrap();
+    s
+}
+
+fn strs(v: &[&str]) -> Vec<String> {
+    v.iter().map(|s| s.to_string()).collect()
+}
+
+/// A fresh, empty checkpoint directory unique to this test + process.
+fn ckpt_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("daso_ckpt_it_{}_{}", name, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Deadlock guard: run `f` on a helper thread and panic if it does not
+/// finish in time; a panic inside `f` is resumed as-is so CI shows the
+/// real assertion failure.
+fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    use std::sync::mpsc::RecvTimeoutError;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(out) => {
+            handle.join().expect("runner thread panicked after reporting");
+            out
+        }
+        Err(RecvTimeoutError::Disconnected) => match handle.join() {
+            Err(panic) => std::panic::resume_unwind(panic),
+            Ok(_) => unreachable!("runner dropped the channel without sending"),
+        },
+        Err(RecvTimeoutError::Timeout) => panic!("timed out after {secs}s — resume deadlock?"),
+    }
+}
+
+fn run_serial(spec: &RunSpec) -> RunReport {
+    let engine = Engine::native();
+    let rt = engine.model("mlp").unwrap();
+    let (tr, va) = daso::data::for_model(
+        &rt.spec,
+        spec.train.train_samples,
+        spec.train.val_samples,
+        spec.train.seed,
+    )
+    .unwrap();
+    let mut strategy = spec.build_strategy();
+    train(&rt, &spec.train, &*tr, &*va, strategy.as_mut()).unwrap()
+}
+
+fn run_threaded_spec(spec: &RunSpec) -> RunReport {
+    let engine = Engine::native();
+    let rt = engine.model("mlp").unwrap();
+    let (tr, va) = daso::data::for_model(
+        &rt.spec,
+        spec.train.train_samples,
+        spec.train.val_samples,
+        spec.train.seed,
+    )
+    .unwrap();
+    let factory = spec.build_rank_strategies();
+    train_threaded(&rt, &spec.train, &*tr, &*va, &factory).unwrap()
+}
+
+/// Everything that must not move a bit across an interrupt + resume.
+/// Wall time legitimately differs (real clocks), so it is excluded.
+fn assert_identical(uninterrupted: &RunReport, resumed: &RunReport) {
+    assert_eq!(uninterrupted.final_params.len(), resumed.final_params.len());
+    for (w, (a, b)) in uninterrupted.final_params.iter().zip(&resumed.final_params).enumerate() {
+        assert_eq!(a, b, "worker {w} parameters diverged after resume");
+    }
+    assert_eq!(uninterrupted.records.len(), resumed.records.len());
+    for (a, b) in uninterrupted.records.iter().zip(&resumed.records) {
+        assert_eq!(a.train_loss, b.train_loss, "epoch {} loss diverged", a.epoch);
+        assert_eq!(a.lr, b.lr, "epoch {} lr diverged", a.epoch);
+        assert_eq!(a.sim_time_s, b.sim_time_s, "epoch {} sim time diverged", a.epoch);
+        assert_eq!(
+            a.strategy_state, b.strategy_state,
+            "epoch {} strategy state diverged",
+            a.epoch
+        );
+    }
+    assert_eq!(uninterrupted.final_metric, resumed.final_metric);
+    assert_eq!(uninterrupted.final_val_loss, resumed.final_val_loss);
+}
+
+/// Interrupt-at-epoch-2 + resume on the serial executor, at every wire
+/// setting: the resumed run must be indistinguishable from one that
+/// never stopped. The uninterrupted baseline checkpoints into its own
+/// directory so both runs see the identical quiesce schedule.
+#[test]
+fn serial_resume_is_bit_identical_across_wires() {
+    for wire in ["f32", "bf16", "f16"] {
+        let base_dir = ckpt_dir(&format!("serial_base_{wire}"));
+        let resume_dir = ckpt_dir(&format!("serial_resume_{wire}"));
+        let wire_set = format!("wire={wire}");
+
+        let base_spec = spec_with(&[
+            wire_set.clone(),
+            format!("checkpoint_dir={}", base_dir.display()),
+        ]);
+        let uninterrupted = run_serial(&base_spec);
+
+        let stop_spec = spec_with(&[
+            wire_set.clone(),
+            format!("checkpoint_dir={}", resume_dir.display()),
+            "stop_after_epochs=2".to_string(),
+        ]);
+        let partial = run_serial(&stop_spec);
+        assert_eq!(partial.records.len(), 2, "stop_after_epochs must stop after 2 epochs");
+
+        let resume_spec = spec_with(&[
+            wire_set,
+            format!("checkpoint_dir={}", resume_dir.display()),
+            "resume=true".to_string(),
+        ]);
+        let resumed = run_serial(&resume_spec);
+        assert_identical(&uninterrupted, &resumed);
+
+        let _ = std::fs::remove_dir_all(&base_dir);
+        let _ = std::fs::remove_dir_all(&resume_dir);
+    }
+}
+
+/// The same contract on the threaded executor (one OS thread per
+/// simulated GPU, channel collectives), in the all-blocking DASO regime
+/// where thread scheduling cannot reorder results.
+#[test]
+fn threaded_resume_is_bit_identical() {
+    let base_dir = ckpt_dir("threaded_base");
+    let resume_dir = ckpt_dir("threaded_resume");
+    let blocking = strs(&["daso.warmup_epochs=3", "daso.cooldown_epochs=3"]);
+
+    let uninterrupted = with_timeout(180, {
+        let mut extra = blocking.clone();
+        extra.push(format!("checkpoint_dir={}", base_dir.display()));
+        let spec = spec_with(&extra);
+        move || run_threaded_spec(&spec)
+    });
+    let partial = with_timeout(180, {
+        let mut extra = blocking.clone();
+        extra.push(format!("checkpoint_dir={}", resume_dir.display()));
+        extra.push("stop_after_epochs=4".to_string());
+        let spec = spec_with(&extra);
+        move || run_threaded_spec(&spec)
+    });
+    assert_eq!(partial.records.len(), 4);
+    let resumed = with_timeout(180, {
+        let mut extra = blocking;
+        extra.push(format!("checkpoint_dir={}", resume_dir.display()));
+        extra.push("resume=true".to_string());
+        let spec = spec_with(&extra);
+        move || run_threaded_spec(&spec)
+    });
+    assert_identical(&uninterrupted, &resumed);
+
+    let _ = std::fs::remove_dir_all(&base_dir);
+    let _ = std::fs::remove_dir_all(&resume_dir);
+}
+
+/// Spawn the peer for `node` as a real `daso` process with the same run
+/// shape, joined through the env handshake.
+fn spawn_peer(addr: &str, node: usize, extra: &[String]) -> Child {
+    let exe = env!("CARGO_BIN_EXE_daso");
+    let mut args = vec![
+        "train".to_string(),
+        "--model".into(),
+        "mlp".into(),
+        "--strategy".into(),
+        "daso".into(),
+        "--executor".into(),
+        "multiprocess".into(),
+    ];
+    for set in SETS.iter().map(|s| s.to_string()).chain(extra.iter().cloned()) {
+        args.push("--set".into());
+        args.push(set);
+    }
+    Command::new(exe)
+        .args(&args)
+        .env(ENV_COORD_ADDR, addr)
+        .env(ENV_NODE_ID, node.to_string())
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawning the peer daso process")
+}
+
+/// Run the 2x2 cluster over TCP loopback: this process as coordinator
+/// (library API), one child `daso` process as node 1.
+fn multiprocess_report(extra: &[String]) -> RunReport {
+    let mut spec = RunSpec::default_for("mlp");
+    for set in SETS.iter().map(|s| s.to_string()).chain(extra.iter().cloned()) {
+        spec.set(&set).unwrap();
+    }
+    spec.validate().unwrap();
+    let engine = Engine::native();
+    let rt = engine.model("mlp").unwrap();
+    let (tr, va) = daso::data::for_model(
+        &rt.spec,
+        spec.train.train_samples,
+        spec.train.val_samples,
+        spec.train.seed,
+    )
+    .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut children: Vec<Child> = (1..spec.train.nodes)
+        .map(|node| spawn_peer(&addr, node, extra))
+        .collect();
+    let factory = spec.build_rank_strategies();
+    let tuning = TcpTuning::new(Duration::from_secs(60), spec.train.global_wire)
+        .with_placement(spec.train.leader_placement)
+        .with_chunk_elems(spec.train.pipeline_chunk_elems)
+        .with_generation(spec.train.launch_generation);
+    let mut transport = TcpTransport::coordinator(spec.train.topology(), listener, tuning);
+    let result = train_with_transport(&rt, &spec.train, &*tr, &*va, &factory, &mut transport);
+    let report = match result {
+        Ok(r) => r.expect("the coordinator hosts rank 0 and owns the report"),
+        Err(e) => {
+            for child in &mut children {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            panic!("coordinator failed: {e:#}");
+        }
+    };
+    for (node, mut child) in children.into_iter().enumerate() {
+        let status = child.wait().expect("reaping the peer process");
+        assert!(status.success(), "peer process for node {} exited with {status}", node + 1);
+    }
+    report
+}
+
+/// Interrupt + resume across real processes: every rank restores its own
+/// slice of the snapshot independently and the continuation must still
+/// be bit-identical to the uninterrupted multiprocess run.
+#[test]
+fn multiprocess_resume_is_bit_identical() {
+    with_timeout(300, || {
+        let base_dir = ckpt_dir("mp_base");
+        let resume_dir = ckpt_dir("mp_resume");
+
+        let uninterrupted =
+            multiprocess_report(&[format!("checkpoint_dir={}", base_dir.display())]);
+        let partial = multiprocess_report(&[
+            format!("checkpoint_dir={}", resume_dir.display()),
+            "stop_after_epochs=2".to_string(),
+        ]);
+        assert_eq!(partial.records.len(), 2);
+        let resumed = multiprocess_report(&[
+            format!("checkpoint_dir={}", resume_dir.display()),
+            "resume=true".to_string(),
+        ]);
+        assert_identical(&uninterrupted, &resumed);
+
+        let _ = std::fs::remove_dir_all(&base_dir);
+        let _ = std::fs::remove_dir_all(&resume_dir);
+    });
+}
+
+/// Find the rank files a real serial run wrote (newest generation).
+fn written_rank_files(dir: &std::path::Path) -> Vec<PathBuf> {
+    let mut gens: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.is_dir())
+        .collect();
+    gens.sort();
+    let newest = gens.last().expect("the run must write at least one generation");
+    let mut files: Vec<PathBuf> = std::fs::read_dir(newest)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().map_or(false, |e| e == "ckpt"))
+        .collect();
+    files.sort();
+    files
+}
+
+/// Files written by a real run must decode; tampered copies must fail
+/// with the named truncation / corruption / version errors.
+#[test]
+fn tampered_checkpoint_files_fail_with_named_errors() {
+    let dir = ckpt_dir("tamper");
+    let spec = spec_with(&[format!("checkpoint_dir={}", dir.display())]);
+    run_serial(&spec);
+
+    let files = written_rank_files(&dir);
+    assert_eq!(files.len(), 4, "one file per rank of the 2x2 world");
+    let bytes = std::fs::read(&files[0]).unwrap();
+    RankCheckpoint::decode(&bytes).expect("an untouched file decodes");
+
+    let truncated = &bytes[..bytes.len() / 2];
+    let err = RankCheckpoint::decode(truncated).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "{err}");
+
+    let mut flipped = bytes.clone();
+    let last = flipped.len() - 1;
+    flipped[last] ^= 0x40;
+    let err = format!("{:#}", RankCheckpoint::decode(&flipped).unwrap_err());
+    assert!(err.contains("corrupted") || err.contains("truncated"), "{err}");
+
+    let mut wrong_version = bytes.clone();
+    wrong_version[8] = 0xEE; // the little-endian version u32 after the magic
+    let err = format!("{:#}", RankCheckpoint::decode(&wrong_version).unwrap_err());
+    assert!(err.contains("version"), "{err}");
+
+    let mut bad_magic = bytes;
+    bad_magic[0] = b'X';
+    let err = format!("{:#}", RankCheckpoint::decode(&bad_magic).unwrap_err());
+    assert!(err.contains("magic"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `--resume` with nothing on disk is a hard, named error — silently
+/// cold-starting would corrupt the elastic supervisor's epoch math.
+#[test]
+fn resume_from_empty_dir_is_a_named_error() {
+    let dir = ckpt_dir("empty_resume");
+    let spec = spec_with(&[
+        format!("checkpoint_dir={}", dir.display()),
+        "resume=true".to_string(),
+    ]);
+    let engine = Engine::native();
+    let rt = engine.model("mlp").unwrap();
+    let (tr, va) = daso::data::for_model(
+        &rt.spec,
+        spec.train.train_samples,
+        spec.train.val_samples,
+        spec.train.seed,
+    )
+    .unwrap();
+    let mut strategy = spec.build_strategy();
+    let err = train(&rt, &spec.train, &*tr, &*va, strategy.as_mut())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no checkpoint generations"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A 3x-slow node with absorption on must stretch the cycler's
+/// effective B and cut global syncs relative to the same run with
+/// absorption off — the straggler stops dictating the sync rate.
+#[test]
+fn straggler_absorption_cuts_global_syncs() {
+    let mut straggler = strs(&[
+        "epochs=8",
+        "daso.warmup_epochs=1",
+        "daso.cooldown_epochs=1",
+        "straggler_node=1",
+        "straggler_factor=3",
+    ]);
+    let without = run_serial(&spec_with(&straggler));
+    straggler.push("daso.absorb_stragglers=true".to_string());
+    let with_absorb = run_serial(&spec_with(&straggler));
+    assert!(
+        with_absorb
+            .records
+            .iter()
+            .any(|r| r.strategy_state.contains("boost=")),
+        "sustained clock skew must engage the absorption boost: {:?}",
+        with_absorb.records.iter().map(|r| r.strategy_state.clone()).collect::<Vec<_>>()
+    );
+    assert!(
+        with_absorb.comm.global_syncs < without.comm.global_syncs,
+        "absorption must reduce global syncs: {} vs {}",
+        with_absorb.comm.global_syncs,
+        without.comm.global_syncs
+    );
+    for params in &with_absorb.final_params {
+        assert!(params.iter().all(|v| v.is_finite()));
+    }
+}
