@@ -100,6 +100,9 @@ def main():
         "--set", "train.train_samples=768",
         "--set", "train.val_samples=128",
         "--out", args.out_dir,
+        # traced: the post-regroup trace + manifest must record the
+        # shrunk world (checked by check_run_json.py chaos)
+        "--trace-out", os.path.join(args.out_dir, "trace.json"),
     ]
     print("+", " ".join(cmd), flush=True)
     log_path = os.path.join(args.out_dir, "launch.log")
@@ -143,6 +146,10 @@ def main():
     report = os.path.join(args.out_dir, "mlp_daso.json")
     if not os.path.exists(report):
         sys.exit(f"launch succeeded but wrote no run JSON at {report}")
+    for extra in ("trace.json", "mlp_daso.manifest.json"):
+        path = os.path.join(args.out_dir, extra)
+        if not os.path.exists(path):
+            sys.exit(f"launch succeeded but wrote no {extra} at {path}")
     print(f"chaos smoke: run completed on the survivors; report at {report}")
 
 

@@ -6,16 +6,34 @@ Subcommands:
                  wire-byte hot-spot under mesh
   hybrid-parity  tcp vs hybrid transport: identical results, node-local
                  bytes migrated onto shm rings
+  parity         two run JSONs must agree bit-for-bit on results (used to
+                 prove tracing only observes: traced vs untraced launches)
   chaos          elastic launch after a SIGKILLed peer: the run must have
-                 completed on the survivors with the regroup recorded
+                 completed on the survivors with the regroup recorded;
+                 optionally cross-checks the sealed manifest and the trace
+                 metadata against the shrunk world
+  manifest       verify a hash-sealed run manifest offline: canonical-JSON
+                 self-hash plus per-artifact sha256 + byte counts
+  obs            a traced run's JSON must carry per-phase latency summaries
+                 (and, when given, the Chrome trace must have per-node
+                 process lanes)
+  straggler      the per-phase virtual-clock histograms must single out the
+                 configured straggler node
+  bench-doctor   rewrite mean_s in a daso-bench artifact and reseal its
+                 results_sha256 (CI's injected-regression probe; also a
+                 cross-language check that this canonicalizer matches the
+                 Rust one, since `daso bench compare` must accept the file)
 
 Each subcommand exits non-zero with a readable message on the first
 violated assertion, so the workflow step fails with the reason in the log.
 """
 
 import argparse
+import hashlib
 import json
+import os
 import sys
+from decimal import Decimal
 
 
 def load(path):
@@ -26,6 +44,80 @@ def load(path):
 def check(cond, message):
     if not cond:
         sys.exit(f"FAIL: {message}")
+
+
+# ---------------------------------------------------------------------
+# canonical JSON — must match rust/src/util/json.rs `to_string_compact`
+# (sorted keys via BTreeMap, compact separators, Rust f64 Display)
+# ---------------------------------------------------------------------
+
+
+def _canonical_num(n):
+    f = float(n)
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    # Rust's f64 Display prints the shortest round-trip decimal and never
+    # uses scientific notation; Python's repr is also shortest round-trip
+    # but switches to e-notation outside [1e-4, 1e16) — expand it, and
+    # drop the trailing ".0" repr keeps on whole floats >= 1e15.
+    s = format(Decimal(repr(f)), "f")
+    if "." in s:
+        s = s.rstrip("0").rstrip(".")
+    return s
+
+
+def _canonical_str(s):
+    out = ['"']
+    for c in s:
+        if c == '"':
+            out.append('\\"')
+        elif c == "\\":
+            out.append("\\\\")
+        elif c == "\n":
+            out.append("\\n")
+        elif c == "\r":
+            out.append("\\r")
+        elif c == "\t":
+            out.append("\\t")
+        elif ord(c) < 0x20:
+            out.append("\\u%04x" % ord(c))
+        else:
+            out.append(c)
+    out.append('"')
+    return "".join(out)
+
+
+def canonical(v):
+    if v is None:
+        return "null"
+    if v is True:
+        return "true"
+    if v is False:
+        return "false"
+    if isinstance(v, (int, float)):
+        return _canonical_num(v)
+    if isinstance(v, str):
+        return _canonical_str(v)
+    if isinstance(v, list):
+        return "[" + ",".join(canonical(x) for x in v) + "]"
+    if isinstance(v, dict):
+        return "{" + ",".join(
+            _canonical_str(k) + ":" + canonical(val) for k, val in sorted(v.items())
+        ) + "}"
+    sys.exit(f"FAIL: cannot canonicalize {type(v)}")
+
+
+def sha256_hex(data):
+    return hashlib.sha256(data).hexdigest()
+
+
+def canonical_sha256(v):
+    return sha256_hex(canonical(v).encode("utf-8"))
+
+
+# ---------------------------------------------------------------------
+# subcommands
+# ---------------------------------------------------------------------
 
 
 def cmd_hot_spot(args):
@@ -72,6 +164,19 @@ def cmd_hybrid_parity(args):
     print("hybrid parity ok; bytes left on tcp:", left_on_tcp)
 
 
+def cmd_parity(args):
+    a = load(args.a)
+    b = load(args.b)
+    for key in ("final_metric", "final_val_loss", "loss_curve", "world", "epochs"):
+        check(a[key] == b[key], f"{key} diverged: {a[key]} vs {b[key]}")
+    check(
+        a["comm"]["bytes_inter"] == b["comm"]["bytes_inter"]
+        and a["comm"]["global_syncs"] == b["comm"]["global_syncs"],
+        "comm accounting diverged",
+    )
+    print(f"parity ok: {args.a} == {args.b} on results and comm accounting")
+
+
 def cmd_chaos(args):
     report = load(args.report)
     regroups = report.get("regroups", [])
@@ -113,11 +218,200 @@ def cmd_chaos(args):
         curve[-1] < curve[0],
         f"training must still make progress across the regroup: {curve}",
     )
+    if args.manifest:
+        manifest = load(args.manifest)
+        verify_manifest(manifest, roots=[os.path.dirname(args.manifest) or ".", *args.root])
+        check(
+            manifest["world"] == final_world,
+            f"manifest world {manifest['world']} must record the shrunk world {final_world}",
+        )
+        check(
+            manifest["config"]["nodes"] == args.nodes - len(regroups),
+            f"manifest config.nodes {manifest['config']['nodes']} must be the survivor "
+            f"count {args.nodes - len(regroups)}",
+        )
+        check(
+            manifest["regroups"] == regroups,
+            f"manifest regroups {manifest['regroups']} must mirror the run JSON's "
+            f"{regroups} (resume epoch included)",
+        )
+        print("chaos manifest ok: shrunk world + regroups sealed")
+    if args.trace:
+        trace = load(args.trace)
+        md = trace.get("metadata", {})
+        check(
+            md.get("nodes") == args.nodes - len(regroups),
+            f"trace metadata nodes {md.get('nodes')} must be the survivor count",
+        )
+        check(
+            md.get("regroups") == len(regroups),
+            f"trace metadata regroups {md.get('regroups')} != {len(regroups)}",
+        )
+        check(
+            md.get("generation", 0) >= 1,
+            "the post-regroup trace must carry a bumped launch generation",
+        )
+        xs = [e for e in trace["traceEvents"] if e.get("ph") == "X"]
+        check(len(xs) > 0, "the post-regroup trace must contain duration events")
+        print(f"chaos trace ok: {len(xs)} events, shrunk world in metadata")
     print(
         f"chaos ok: lost node {first['lost_node']}, resumed at epoch "
         f"{first['resume_epoch']} on {first['nodes']}x{first['gpus_per_node']}, "
         f"finished {report['epochs']} epochs"
     )
+
+
+def verify_manifest(manifest, roots):
+    check(
+        manifest.get("kind") == "daso-run-manifest",
+        f"not a run manifest: kind={manifest.get('kind')!r}",
+    )
+    check(
+        str(manifest.get("schema_version", "")).startswith("1."),
+        f"unsupported manifest schema {manifest.get('schema_version')!r}",
+    )
+    claimed = manifest.get("manifest_sha256")
+    check(bool(claimed), "manifest carries no manifest_sha256 seal")
+    unsealed = {k: v for k, v in manifest.items() if k != "manifest_sha256"}
+    actual = canonical_sha256(unsealed)
+    check(
+        claimed == actual,
+        f"manifest self-hash mismatch: claimed {claimed}, recomputed {actual}",
+    )
+    for art in manifest.get("artifacts", []):
+        rel, want_sha, want_bytes = art["path"], art["sha256"], art["bytes"]
+        resolved = None
+        for root in roots:
+            candidate = os.path.join(root, rel)
+            if os.path.exists(candidate):
+                resolved = candidate
+                break
+        check(resolved is not None, f"artifact {rel} not found under any of {roots}")
+        with open(resolved, "rb") as f:
+            data = f.read()
+        check(
+            len(data) == want_bytes,
+            f"artifact {rel}: {len(data)} bytes on disk, manifest says {want_bytes}",
+        )
+        got = sha256_hex(data)
+        check(
+            got == want_sha,
+            f"artifact {rel}: sha256 {got} does not match manifest {want_sha}",
+        )
+    print(
+        f"manifest ok: self-hash verified, {len(manifest.get('artifacts', []))} "
+        f"artifact(s) match on sha256 + size"
+    )
+
+
+def cmd_manifest(args):
+    manifest = load(args.manifest)
+    roots = [os.path.dirname(args.manifest) or ".", *args.root]
+    verify_manifest(manifest, roots)
+    for key in ("run_id", "git_commit", "config", "env", "world"):
+        check(key in manifest, f"manifest is missing {key}")
+    check(len(manifest.get("artifacts", [])) >= args.min_artifacts,
+          f"expected at least {args.min_artifacts} artifacts, "
+          f"got {len(manifest.get('artifacts', []))}")
+
+
+def cmd_obs(args):
+    report = load(args.report)
+    check("provenance" in report, "traced run JSON must carry a provenance section")
+    prov = report["provenance"]
+    for key in ("config", "env", "git_commit", "run_id"):
+        check(key in prov, f"provenance is missing {key}")
+    for kv in args.expect_env:
+        k, _, want = kv.partition("=")
+        got = prov["env"].get(k)
+        check(
+            str(got) == want,
+            f"provenance env.{k} = {got!r}, expected {want!r}",
+        )
+    phases = report.get("phases", {})
+    check(bool(phases), "traced run JSON must carry a phases section")
+    for name in args.expect_phase:
+        check(name in phases, f"phase {name} missing; have {sorted(phases)}")
+        rows = phases[name]
+        check(bool(rows), f"phase {name} has no per-node rows")
+        for node, row in rows.items():
+            check(row["count"] > 0, f"phase {name} node {node} recorded no events")
+            check(
+                row["max_ms"] >= row["p95_ms"] >= 0 and row["p50_ms"] >= 0,
+                f"phase {name} node {node} has inconsistent quantiles: {row}",
+            )
+    check("histograms" in report, "traced run JSON must carry raw histograms")
+    if args.trace:
+        trace = load(args.trace)
+        evs = trace["traceEvents"]
+        pids = sorted({e["pid"] for e in evs if e.get("ph") == "X"})
+        check(
+            len(pids) >= args.min_nodes,
+            f"trace covers process lanes {pids}, expected >= {args.min_nodes} nodes",
+        )
+        check(
+            any(e.get("ph") == "M" and e.get("name") == "process_name" for e in evs),
+            "trace is missing process_name metadata",
+        )
+        check(
+            any(e.get("ph") == "M" and e.get("name") == "thread_name" for e in evs),
+            "trace is missing thread_name metadata",
+        )
+        check("metadata" in trace and "world" in trace["metadata"],
+              "trace metadata must be self-describing (world)")
+        print(f"trace ok: {len(evs)} events across node lanes {pids}")
+    print(f"obs ok: phases {sorted(phases)} with per-node quantiles")
+
+
+def cmd_straggler(args):
+    report = load(args.report)
+    phases = report.get("phases", {})
+    for needed in ("epoch.wait.virtual", "epoch.compute.virtual"):
+        check(needed in phases, f"phase {needed} missing; have {sorted(phases)}")
+    waits = {int(k): v["mean_ms"] for k, v in phases["epoch.wait.virtual"].items()}
+    computes = {int(k): v["mean_ms"] for k, v in phases["epoch.compute.virtual"].items()}
+    print("virtual wait   (mean ms by node):", dict(sorted(waits.items())))
+    print("virtual compute(mean ms by node):", dict(sorted(computes.items())))
+    check(len(waits) == args.nodes, f"expected {args.nodes} wait rows, got {sorted(waits)}")
+    s = args.straggler
+    check(s in waits, f"straggler node {s} absent from wait rows {sorted(waits)}")
+    other_waits = [m for n, m in waits.items() if n != s]
+    # each step's blocking sync idles every worker until the slowest
+    # node finishes, so the straggler itself waits ~zero — the minimum
+    # outlier — while every other node waits (factor - 1) x compute
+    check(
+        waits[s] <= 0.5 * min(other_waits),
+        f"straggler node {s} wait {waits[s]:.3f} ms is not the outlier minimum "
+        f"(others: {other_waits})",
+    )
+    other_computes = [m for n, m in computes.items() if n != s]
+    check(
+        computes[s] > max(other_computes),
+        f"straggler node {s} compute {computes[s]:.3f} ms should exceed "
+        f"every other node ({other_computes})",
+    )
+    print(
+        f"straggler ok: node {s} wait {waits[s]:.3f} ms vs others "
+        f">= {min(other_waits):.3f} ms; compute x{computes[s] / max(other_computes):.2f}"
+    )
+
+
+def cmd_bench_doctor(args):
+    bench = load(args.inp)
+    results = bench["results"]
+    touched = 0
+    for row in results:
+        if args.name and row["name"] != args.name:
+            continue
+        if "/" in row["name"] and args.name is None and row["name"].count("/") > 1:
+            continue  # leave per-node byte rows alone by default
+        row["mean_s"] = row["mean_s"] * args.scale_mean
+        touched += 1
+    check(touched > 0, f"no bench rows matched {args.name!r}")
+    bench["results_sha256"] = canonical_sha256(results)
+    with open(args.out, "w") as f:
+        json.dump(bench, f, indent=2)
+    print(f"doctored {touched} row(s) x{args.scale_mean} -> {args.out}")
 
 
 def main():
@@ -136,12 +430,52 @@ def main():
     p.add_argument("--nodes", type=int, default=2)
     p.set_defaults(func=cmd_hybrid_parity)
 
+    p = sub.add_parser("parity", help="two run JSONs must agree on results")
+    p.add_argument("--a", required=True)
+    p.add_argument("--b", required=True)
+    p.set_defaults(func=cmd_parity)
+
     p = sub.add_parser("chaos", help="peer-death regroup assertions")
     p.add_argument("--report", required=True, help="run JSON of the elastic launch")
     p.add_argument("--nodes", type=int, required=True, help="node count at launch")
     p.add_argument("--workers", type=int, required=True, help="workers per node")
     p.add_argument("--epochs", type=int, required=True, help="configured epoch count")
+    p.add_argument("--manifest", help="sealed manifest of the same run (optional)")
+    p.add_argument("--trace", help="Chrome trace of the same run (optional)")
+    p.add_argument("--root", action="append", default=[],
+                   help="extra artifact root for manifest verification (repeatable)")
     p.set_defaults(func=cmd_chaos)
+
+    p = sub.add_parser("manifest", help="verify a hash-sealed run manifest offline")
+    p.add_argument("--manifest", required=True)
+    p.add_argument("--root", action="append", default=[],
+                   help="extra artifact root (e.g. the checkpoint dir; repeatable)")
+    p.add_argument("--min-artifacts", type=int, default=2)
+    p.set_defaults(func=cmd_manifest)
+
+    p = sub.add_parser("obs", help="per-phase summaries + trace lane assertions")
+    p.add_argument("--report", required=True, help="run JSON of a traced run")
+    p.add_argument("--trace", help="Chrome trace JSON (optional)")
+    p.add_argument("--expect-phase", action="append", default=[],
+                   help="phase name that must appear (repeatable)")
+    p.add_argument("--expect-env", action="append", default=[],
+                   help="key=value that provenance.env must carry (repeatable)")
+    p.add_argument("--min-nodes", type=int, default=2,
+                   help="minimum distinct node pids the trace must cover")
+    p.set_defaults(func=cmd_obs)
+
+    p = sub.add_parser("straggler", help="virtual-clock histograms single out the straggler")
+    p.add_argument("--report", required=True, help="run JSON of the straggler launch")
+    p.add_argument("--nodes", type=int, required=True)
+    p.add_argument("--straggler", type=int, required=True)
+    p.set_defaults(func=cmd_straggler)
+
+    p = sub.add_parser("bench-doctor", help="inject a mean_s regression and reseal")
+    p.add_argument("--in", dest="inp", required=True)
+    p.add_argument("--out", required=True)
+    p.add_argument("--scale-mean", type=float, default=1000.0)
+    p.add_argument("--name", help="only touch this row (default: top-level timing rows)")
+    p.set_defaults(func=cmd_bench_doctor)
 
     args = parser.parse_args()
     args.func(args)

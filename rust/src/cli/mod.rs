@@ -156,7 +156,23 @@ COMMANDS:
                               cycler stretch B/W while epoch-end clock
                               skew stays above daso.absorb_threshold for
                               daso.absorb_patience epochs
-                  --out <dir>               write run.csv / run.json
+                  --out <dir>               write run.csv / run.json (with
+                              provenance: resolved config, env, commit) and
+                              a hash-sealed <tag>.manifest.json covering
+                              every artifact (sha256 each + canonical-JSON
+                              self-hash; verify offline with
+                              `python3 ci/check_run_json.py manifest ...`)
+                  --trace-out <file.json>   record per-phase spans (compute,
+                              sync wait, encode, link read/write, ring
+                              waits, rendezvous, checkpoint) and write a
+                              Chrome trace-event JSON — one process row
+                              per node, one lane per thread — viewable in
+                              Perfetto (ui.perfetto.dev) or
+                              chrome://tracing. Tracing only observes:
+                              results stay bit-identical. Implies
+                              --set trace=true; with --out the run JSON
+                              also gains per-phase p50/p95 latency
+                              summaries and raw log2 histograms
     launch      spawn a multi-process run on this machine: one process per
                 node over the TCP loopback transport, this process is node 0
                 (peers mesh directly with each other; the coordinator only
@@ -173,9 +189,21 @@ COMMANDS:
                                             the config's gpus_per_node)
                   --bind host:port          coordinator listen address
                                             (default 127.0.0.1:0 = free port)
-                  plus all train flags (--model, --strategy, --set, --out)
+                  plus all train flags (--model, --strategy, --set, --out,
+                  --trace-out — tracing is forced onto every node process
+                  and gathered to node 0, so the trace shows all lanes)
     sweep       run daso/horovod/asgd/local_only on one model, compare
                   (same flags as train)
+    bench       perf-contract tooling for BENCH_*.json artifacts
+                  compare --baseline <file> --candidate <file>
+                          [--tolerance X] [--bytes-tolerance Y]
+                  verifies both files' results_sha256, then fails (exit 1)
+                  if any baseline row is missing from the candidate, its
+                  mean_s exceeds baseline x tolerance (default 1.0 — the
+                  committed baselines are generous ceilings), or its
+                  bytes_on_wire exceeds baseline x bytes-tolerance
+                  (default 1.05; only checked where the baseline records
+                  bytes). Extra candidate rows are ignored.
     figures     regenerate a paper figure
                   --fig 6|7|8|9   --quick   (7/9 train for real; 6/8 project)
     project     strong-scaling time projection
@@ -190,7 +218,8 @@ COMMANDS:
 pub fn known_command(cmd: &str) -> bool {
     matches!(
         cmd,
-        "train" | "launch" | "sweep" | "figures" | "project" | "selfcheck" | "info" | "help"
+        "train" | "launch" | "bench" | "sweep" | "figures" | "project" | "selfcheck" | "info"
+            | "help"
     )
 }
 

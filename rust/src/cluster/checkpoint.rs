@@ -454,6 +454,23 @@ fn list_generations(dir: &Path) -> Result<Vec<(usize, u64, PathBuf)>> {
     Ok(gens)
 }
 
+/// Rank files of the newest generation (sorted), for run-manifest
+/// hashing — the snapshot a `--resume` of this run would read. Empty
+/// when the directory holds no generations.
+pub fn newest_generation_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let Some((_, _, gen)) = list_generations(dir)?.into_iter().next() else {
+        return Ok(Vec::new());
+    };
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&gen)
+        .with_context(|| format!("listing generation {gen:?}"))?
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|e| e == "ckpt"))
+        .collect();
+    files.sort();
+    Ok(files)
+}
+
 /// Atomically write one rank's file into the generation directory
 /// (tmp + rename; concurrent node processes write disjoint ranks into
 /// the same directory).
@@ -463,11 +480,14 @@ pub fn write_rank(
     attempt: u64,
     ck: &RankCheckpoint,
 ) -> Result<PathBuf> {
+    let mut sp = crate::obs::span(crate::obs::phase::CHECKPOINT_WRITE);
     let gen = dir.join(gen_dir_name(epochs_done, attempt));
     std::fs::create_dir_all(&gen).with_context(|| format!("creating {gen:?}"))?;
     let path = rank_file(&gen, ck.rank);
     let tmp = gen.join(format!("rank-{}.ckpt.tmp-{}", ck.rank, std::process::id()));
-    std::fs::write(&tmp, ck.encode()).with_context(|| format!("writing {tmp:?}"))?;
+    let encoded = ck.encode();
+    sp.add_bytes(encoded.len() as u64);
+    std::fs::write(&tmp, encoded).with_context(|| format!("writing {tmp:?}"))?;
     std::fs::rename(&tmp, &path).with_context(|| format!("publishing {path:?}"))?;
     Ok(path)
 }

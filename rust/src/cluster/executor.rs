@@ -269,6 +269,11 @@ mod threaded {
             cfg.lr_patience,
         );
 
+        if cfg.trace {
+            // before connect(), so handshake/link spans are captured too
+            crate::obs::enable();
+        }
+
         let wall_start = Instant::now();
         let Wiring { rank_comms, control, wire_bytes } = transport.connect()?;
         let hosted = transport.hosted_ranks();
@@ -383,6 +388,36 @@ mod threaded {
             Ok(())
         })?;
 
+        // observability gather: each process drains its recorder and
+        // ships the encoded blob to rank 0 over the same control group
+        // (symmetric — cfg.trace is forced identically to every launch
+        // child, so all processes agree on whether this exchange runs).
+        // Tracing only observes: this happens after training finished.
+        let obs_gather = if cfg.trace {
+            let node = hosted.first().map(|&r| topo.rank_of(r).node).unwrap_or(0);
+            let local = crate::obs::local_report(node as i64);
+            let blob = crate::obs::encode_report(&local);
+            let (out, _) = control.exchange(Payload::F64(blob), 0.0, |bufs| {
+                // frame: [n_blobs, len_0..len_{n-1}, blob_0.., blob_{n-1}..]
+                let mut framed = Vec::new();
+                framed.push(bufs.len() as f64);
+                for b in bufs.iter() {
+                    framed.push(b.as_f64().len() as f64);
+                }
+                for b in bufs.iter() {
+                    framed.extend_from_slice(b.as_f64());
+                }
+                bufs[0] = Payload::F64(framed);
+                for b in bufs.iter_mut().skip(1) {
+                    *b = Payload::Empty;
+                }
+                Ok(())
+            })?;
+            Some(out)
+        } else {
+            None
+        };
+
         let Some(zero) = zero else {
             // peer process: rank 0 lives on the coordinator, which owns
             // the report — this process's workers were folded in above
@@ -408,6 +443,33 @@ mod threaded {
         );
         let final_params: Vec<Vec<f32>> =
             all_params.chunks_exact(n_params).map(|c| c.to_vec()).collect();
+        let obs = match obs_gather {
+            Some(out) => {
+                let framed = out.into_f64();
+                ensure!(!framed.is_empty(), "obs gather returned an empty frame");
+                let n_blobs = framed[0] as usize;
+                ensure!(
+                    framed.len() > n_blobs,
+                    "obs gather frame too short for {n_blobs} blob headers"
+                );
+                let lens: Vec<usize> =
+                    framed[1..1 + n_blobs].iter().map(|&l| l as usize).collect();
+                let mut pos = 1 + n_blobs;
+                let mut reports = Vec::with_capacity(n_blobs);
+                for len in lens {
+                    ensure!(
+                        pos + len <= framed.len(),
+                        "obs gather frame truncated ({} of {} values)",
+                        framed.len(),
+                        pos + len
+                    );
+                    reports.push(crate::obs::decode_report(&framed[pos..pos + len])?);
+                    pos += len;
+                }
+                crate::obs::merge_reports(reports)
+            }
+            None => Default::default(),
+        };
         let final_metric = zero.final_metric;
         let best_metric =
             zero.records.iter().filter_map(|r| r.metric).fold(final_metric, f64::max);
@@ -425,6 +487,7 @@ mod threaded {
             comm,
             final_params,
             regroups: vec![],
+            obs,
         }))
     }
 
@@ -451,6 +514,12 @@ mod threaded {
             init,
             Shard::new(train_data.len(), topo.world(), rank, cfg.seed),
         );
+        if cfg.trace {
+            crate::obs::set_thread_meta(
+                worker.rank.node as i32,
+                &format!("n{} rank{}", worker.rank.node, rank),
+            );
+        }
         let wall_start = Instant::now();
         let mut records = Vec::new();
         let mut grad: Vec<f32> = Vec::new();
@@ -506,7 +575,10 @@ mod threaded {
             for step in 0..steps_per_epoch {
                 let idx = &order[step * batch..(step + 1) * batch];
                 let (x, y) = train_data.batch(idx);
-                let (loss, g) = rt.grad(&worker.params, &x, &y)?;
+                let (loss, g) = {
+                    let _sp = crate::obs::span(crate::obs::phase::COMPUTE);
+                    rt.grad(&worker.params, &x, &y)?
+                };
                 grad = g;
                 worker.advance_clock(cfg.compute_time_for(worker.rank.node));
                 worker.batches_done += 1;
@@ -524,6 +596,7 @@ mod threaded {
                     global_batch,
                     global_wire,
                 };
+                let _sp = crate::obs::span(crate::obs::phase::SYNC);
                 strategy.on_batch(&mut ctx)?;
             }
 
@@ -531,6 +604,24 @@ mod threaded {
             // exchanged for reporting but never advanced here)
             let (train_loss, clocks) =
                 reduce_epoch_loss(&comms.world, &step_losses, worker.clock)?;
+            if cfg.trace {
+                // virtual-clock events: deterministic per-step sync-skew
+                // wait, identical to the serial trainer's (see there for
+                // the rationale) so traces agree across executors
+                let node = worker.rank.node;
+                let max_ct =
+                    (0..cfg.nodes).map(|n| cfg.compute_time_for(n)).fold(0.0, f64::max);
+                crate::obs::event_virtual(
+                    crate::obs::phase::EPOCH_COMPUTE_VIRTUAL,
+                    steps_per_epoch as f64 * cfg.compute_time_for(node),
+                    node as i32,
+                );
+                crate::obs::event_virtual(
+                    crate::obs::phase::EPOCH_WAIT_VIRTUAL,
+                    steps_per_epoch as f64 * (max_ct - cfg.compute_time_for(node)),
+                    node as i32,
+                );
+            }
             lr_sched.on_epoch_end(train_loss);
             strategy.on_epoch_end(epoch, train_loss);
             // the same rank-ordered clock vector on every rank, so the
@@ -556,11 +647,13 @@ mod threaded {
                     global_batch,
                     global_wire,
                 };
+                let _sp = crate::obs::span(crate::obs::phase::CHECKPOINT_QUIESCE);
                 strategy.quiesce(&mut ctx)?;
             }
 
             let do_eval = cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0;
             let (metric, val_loss) = if do_eval {
+                let _sp = crate::obs::span(crate::obs::phase::EVAL);
                 let consensus = consensus_params(&comms.world, &worker.params, worker.clock)?;
                 // every rank evaluates the same consensus redundantly:
                 // it keeps the threads in phase, so no peer sits blocked
@@ -652,10 +745,14 @@ mod threaded {
             };
             strategy.finalize(&mut ctx)?;
         }
-        let consensus = consensus_params(&comms.world, &worker.params, worker.clock)?;
-        // final consensus eval on every rank (in-phase, see above); this
-        // is the last act of each thread, so stragglers cost nothing
-        let acc = evaluate(rt, &consensus, val_data, cfg.epochs)?;
+        let acc = {
+            let _sp = crate::obs::span(crate::obs::phase::EVAL);
+            let consensus = consensus_params(&comms.world, &worker.params, worker.clock)?;
+            // final consensus eval on every rank (in-phase, see above);
+            // this is the last act of each thread, so stragglers cost
+            // nothing
+            evaluate(rt, &consensus, val_data, cfg.epochs)?
+        };
         let zero = if rank == 0 {
             Some(ZeroOut {
                 records,

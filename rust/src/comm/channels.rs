@@ -311,10 +311,12 @@ impl GroupComm {
             }
             Role::Member { gather_tx, result_rx } => {
                 gather_tx(GatherMsg { index: self.index, payload, clock })?;
+                let _sp = crate::obs::span(crate::obs::phase::RENDEZVOUS_WAIT);
                 let msg = result_rx.recv_timeout(self.timeout).map_err(|_| chan_err())?;
                 Ok((msg.payload, msg.clocks))
             }
             Role::Leader { gather_rx, result_txs } => {
+                let gather_sp = crate::obs::span(crate::obs::phase::RENDEZVOUS_GATHER);
                 let mut bufs: Vec<Payload> = (0..self.size).map(|_| Payload::Empty).collect();
                 let mut clocks = vec![0.0f64; self.size];
                 // legit payloads can be Empty (broadcast receivers), so
@@ -342,6 +344,7 @@ impl GroupComm {
                     bufs[msg.index] = msg.payload;
                     clocks[msg.index] = msg.clock;
                 }
+                drop(gather_sp);
                 reduce(&mut bufs)?;
                 // cast the reduced results for the return leg — one
                 // roundtrip per member, identical for local and remote
@@ -454,6 +457,7 @@ impl AsyncShared {
             "async contribution from out-of-range member {member} (group size {})",
             self.size
         );
+        let _sp = crate::obs::span(crate::obs::phase::ASYNC_DEPOSIT);
         let mut guard = self.state.lock().unwrap();
         let st = &mut *guard;
         let seq = st.next_send[member];
@@ -667,6 +671,7 @@ impl AsyncGroup {
     /// Returns the snapshot sum and the virtual time at which the
     /// exchanged data is fully received.
     pub fn collect(&self) -> Result<(Arc<Vec<f32>>, f64)> {
+        let _sp = crate::obs::span(crate::obs::phase::ASYNC_COLLECT);
         match &self.inner {
             AsyncInner::Shared(shared) => {
                 let mut st = shared.state.lock().unwrap();

@@ -313,6 +313,7 @@ impl Write for RingProducer {
         let head = self.seg.atomic(HDR_HEAD).load(Ordering::Relaxed);
         let deadline = self.timeout.map(|t| Instant::now() + t);
         let mut spins = 0u32;
+        let mut wait_start: Option<Instant> = None;
         loop {
             if self.seg.atomic(HDR_CONS_CLOSED).load(Ordering::Acquire) != 0 {
                 return Err(io::Error::new(
@@ -323,6 +324,14 @@ impl Write for RingProducer {
             let tail = self.seg.atomic(HDR_TAIL).load(Ordering::Acquire);
             let free = cap - (head - tail) as usize;
             if free > 0 {
+                if let Some(t0) = wait_start {
+                    crate::obs::event_ns(
+                        crate::obs::phase::RING_WAIT_WRITE,
+                        t0.elapsed().as_nanos() as u64,
+                        0,
+                        -1,
+                    );
+                }
                 let n = free.min(buf.len());
                 // modulo in u64: truncating the monotone counter first
                 // would mis-index non-power-of-two rings past 4 GiB on
@@ -339,6 +348,9 @@ impl Write for RingProducer {
                 }
                 self.seg.atomic(HDR_HEAD).store(head + n as u64, Ordering::Release);
                 return Ok(n);
+            }
+            if wait_start.is_none() && crate::obs::is_enabled() {
+                wait_start = Some(Instant::now());
             }
             backoff(&mut spins, deadline, "write")?;
         }
@@ -392,10 +404,19 @@ impl Read for RingConsumer {
         let tail = self.seg.atomic(HDR_TAIL).load(Ordering::Relaxed);
         let deadline = self.timeout.map(|t| Instant::now() + t);
         let mut spins = 0u32;
+        let mut wait_start: Option<Instant> = None;
         loop {
             let head = self.seg.atomic(HDR_HEAD).load(Ordering::Acquire);
             let avail = (head - tail) as usize;
             if avail > 0 {
+                if let Some(t0) = wait_start {
+                    crate::obs::event_ns(
+                        crate::obs::phase::RING_WAIT_READ,
+                        t0.elapsed().as_nanos() as u64,
+                        0,
+                        -1,
+                    );
+                }
                 let n = avail.min(buf.len());
                 // modulo in u64, mirroring the producer
                 let at = (tail % cap as u64) as usize;
@@ -435,6 +456,9 @@ impl Read for RingConsumer {
                         format!("shm ring producer (pid {pid}) died without closing"),
                     ));
                 }
+            }
+            if wait_start.is_none() && crate::obs::is_enabled() {
+                wait_start = Some(Instant::now());
             }
             backoff(&mut spins, deadline, "read")?;
         }

@@ -304,10 +304,12 @@ impl PeerLink {
     /// global wire for collective frames, `Wire::F32` for the control
     /// group's report plumbing.
     fn send(&self, frame: &Frame, wire: Wire) -> Result<()> {
+        let mut sp = crate::obs::span(crate::obs::phase::LINK_SEND);
         let mut w = self.writer.lock().unwrap();
         let LinkWriter { stream, scratch } = &mut *w;
         let bytes = write_frame_pipelined(stream, frame, wire, self.chunk_elems, scratch)?;
         self.counters.add_sent(self.class, self.via_shm, bytes);
+        sp.add_bytes(bytes);
         Ok(())
     }
 
@@ -320,6 +322,7 @@ impl PeerLink {
         sum: &[f32],
         wire: Wire,
     ) -> Result<()> {
+        let mut sp = crate::obs::span(crate::obs::phase::LINK_SEND);
         let mut w = self.writer.lock().unwrap();
         let LinkWriter { stream, scratch } = &mut *w;
         let bytes = write_async_sum_pipelined(
@@ -334,6 +337,7 @@ impl PeerLink {
             scratch,
         )?;
         self.counters.add_sent(self.class, self.via_shm, bytes);
+        sp.add_bytes(bytes);
         Ok(())
     }
 }
@@ -1470,10 +1474,14 @@ fn build_wiring(
 /// flag); anyone still waiting on that peer times out with a
 /// root-cause error.
 fn link_demux(mut stream: LinkRead, routes: Arc<Routes>, from: usize, me: usize) {
+    crate::obs::set_thread_meta(me as i32, &format!("demux n{me}<-n{from}"));
     loop {
-        let frame = match read_message(&mut stream) {
-            Ok(f) => f,
-            Err(_) => return,
+        let frame = {
+            let _sp = crate::obs::span_n(crate::obs::phase::LINK_READ, me as i32);
+            match read_message(&mut stream) {
+                Ok(f) => f,
+                Err(_) => return,
+            }
         };
         let res: Result<()> = match frame {
             Frame::Gather { comm, member, clock, payload } => routes

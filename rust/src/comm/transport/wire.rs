@@ -1033,7 +1033,11 @@ fn write_chunked<W: Write>(
         scratch.push(TAG_CHUNK_DATA);
         put_u32(scratch, seq as u32);
         put_u32(scratch, n_chunks as u32);
-        put_wire_elems(scratch, slice, wire);
+        {
+            let mut sp = crate::obs::span(crate::obs::phase::WIRE_ENCODE);
+            sp.add_bytes((slice.len() * wire.bytes_per_elem()) as u64);
+            put_wire_elems(scratch, slice, wire);
+        }
         written += flush_scratch(w, scratch)?;
     }
     Ok(written)
@@ -1057,7 +1061,10 @@ pub fn write_frame_pipelined<W: Write>(
         }
     }
     begin_scratch(scratch);
-    encode_body_to(scratch, frame, wire);
+    {
+        let _sp = crate::obs::span(crate::obs::phase::WIRE_ENCODE);
+        encode_body_to(scratch, frame, wire);
+    }
     flush_scratch(w, scratch)
 }
 
@@ -1086,7 +1093,10 @@ pub fn write_async_sum_pipelined<W: Write>(
     put_u32(scratch, member);
     put_u64(scratch, seq);
     put_f64(scratch, finish);
-    put_f32_payload(scratch, sum, wire);
+    {
+        let _sp = crate::obs::span(crate::obs::phase::WIRE_ENCODE);
+        put_f32_payload(scratch, sum, wire);
+    }
     flush_scratch(w, scratch)
 }
 
@@ -1131,6 +1141,8 @@ pub fn read_message<R: Read>(r: &mut R) -> Result<Frame> {
                 total_elems.saturating_mul(width) <= MAX_FRAME_BYTES,
                 "implausible chunked element count {total_elems}"
             );
+            let mut reassemble_sp = crate::obs::span(crate::obs::phase::LINK_REASSEMBLE);
+            reassemble_sp.add_bytes((total_elems * width) as u64);
             // the header's element count is an unverified promise until
             // the bytes actually arrive: cap the upfront allocation (Vec
             // growth amortizes the rest) and bound the accumulation per

@@ -57,6 +57,9 @@ pub struct RunSpec {
     pub transport: Option<TransportKind>,
     pub artifacts_dir: String,
     pub out_dir: Option<String>,
+    /// where to write the Chrome trace-event JSON (`--trace-out`);
+    /// setting it also flips `train.trace` on
+    pub trace_out: Option<String>,
     pub train: TrainConfig,
     pub daso: DasoConfig,
 }
@@ -72,6 +75,7 @@ impl RunSpec {
             transport: None,
             artifacts_dir: "artifacts".to_string(),
             out_dir: None,
+            trace_out: None,
             train,
             daso,
         }
@@ -121,6 +125,11 @@ impl RunSpec {
             "transport" => self.transport = Some(TransportKind::parse(as_str()?)?),
             "artifacts_dir" => self.artifacts_dir = as_str()?.to_string(),
             "out_dir" => self.out_dir = Some(as_str()?.to_string()),
+            "trace_out" => {
+                self.trace_out = Some(as_str()?.to_string());
+                self.train.trace = true;
+            }
+            "train.trace" | "trace" => self.train.trace = as_bool()?,
 
             "train.nodes" | "nodes" => self.train.nodes = as_usize()?,
             "train.gpus_per_node" | "gpus_per_node" => self.train.gpus_per_node = as_usize()?,
@@ -287,6 +296,70 @@ impl RunSpec {
     /// Default fabric matches the paper's testbed.
     pub fn default_fabric() -> Fabric {
         Fabric::juwels_like()
+    }
+
+    /// The fully resolved configuration as JSON — the provenance block
+    /// mirrored into run.json and sealed into the run manifest. Every
+    /// key here round-trips through [`RunSpec::set_value`], so a
+    /// recorded config can reconstruct the run.
+    pub fn to_json(&self) -> Value {
+        use crate::util::json::{num, obj, s};
+        let transport = match self.resolved_transport() {
+            Ok(t) => t.name().to_string(),
+            Err(_) => self.transport.map(|t| t.name().to_string()).unwrap_or_default(),
+        };
+        obj(vec![
+            ("model", s(&self.model)),
+            ("strategy", s(self.strategy.name())),
+            ("executor", s(self.executor.name())),
+            ("transport", s(&transport)),
+            ("artifacts_dir", s(&self.artifacts_dir)),
+            ("nodes", num(self.train.nodes as f64)),
+            ("gpus_per_node", num(self.train.gpus_per_node as f64)),
+            ("epochs", num(self.train.epochs as f64)),
+            ("train.train_samples", num(self.train.train_samples as f64)),
+            ("train.val_samples", num(self.train.val_samples as f64)),
+            ("seed", num(self.train.seed as f64)),
+            ("train.base_lr", num(self.train.base_lr)),
+            ("train.lr_scale", num(self.train.lr_scale)),
+            ("train.compute_time_s", num(self.train.compute_time_s)),
+            ("wire", s(self.train.global_wire.name())),
+            ("placement", s(self.train.leader_placement.name())),
+            ("chunk_elems", num(self.train.pipeline_chunk_elems as f64)),
+            ("comm_timeout_ms", num(self.train.comm_timeout_ms as f64)),
+            ("checkpoint_dir", s(&self.train.checkpoint_dir)),
+            ("checkpoint_every_epochs", num(self.train.checkpoint_every_epochs as f64)),
+            ("straggler_node", num(self.train.straggler_node as f64)),
+            ("straggler_factor", num(self.train.straggler_factor)),
+            ("generation", num(self.train.launch_generation as f64)),
+            ("trace", Value::Bool(self.train.trace)),
+            ("daso.b_initial", num(self.daso.b_initial as f64)),
+            ("daso.warmup_epochs", num(self.daso.warmup_epochs as f64)),
+            ("daso.cooldown_epochs", num(self.daso.cooldown_epochs as f64)),
+            ("fabric.intra_latency_s", num(self.train.fabric.intra.latency_s)),
+            ("fabric.intra_bandwidth", num(self.train.fabric.intra.bandwidth_bps)),
+            ("fabric.inter_latency_s", num(self.train.fabric.inter.latency_s)),
+            ("fabric.inter_bandwidth", num(self.train.fabric.inter.bandwidth_bps)),
+        ])
+    }
+
+    /// The compact environment summary (`nodes/gpus_per_node/transport/
+    /// wire/executor`) the CI checks assert on.
+    pub fn env_json(&self) -> Value {
+        use crate::util::json::{num, obj, s};
+        let transport = match self.resolved_transport() {
+            Ok(t) => t.name().to_string(),
+            Err(_) => self.transport.map(|t| t.name().to_string()).unwrap_or_default(),
+        };
+        obj(vec![
+            ("nodes", num(self.train.nodes as f64)),
+            ("gpus_per_node", num(self.train.gpus_per_node as f64)),
+            ("transport", s(&transport)),
+            ("wire", s(self.train.global_wire.name())),
+            ("executor", s(self.executor.name())),
+            ("os", s(std::env::consts::OS)),
+            ("arch", s(std::env::consts::ARCH)),
+        ])
     }
 }
 
@@ -516,6 +589,36 @@ mod tests {
         let err = s.validate().unwrap_err().to_string();
         assert!(err.contains("strategy=daso"), "{err}");
         assert!(err.contains("horovod"), "{err}");
+    }
+
+    #[test]
+    fn trace_overrides() {
+        let mut s = RunSpec::default_for("mlp");
+        assert!(!s.train.trace, "tracing is off by default");
+        assert!(s.trace_out.is_none());
+        s.set("trace=true").unwrap();
+        assert!(s.train.trace);
+        s.set("trace=false").unwrap();
+        s.set("trace_out=/tmp/trace.json").unwrap();
+        assert_eq!(s.trace_out.as_deref(), Some("/tmp/trace.json"));
+        assert!(s.train.trace, "trace_out implies tracing");
+    }
+
+    #[test]
+    fn provenance_json_reflects_resolved_config() {
+        let mut s = RunSpec::default_for("mlp");
+        s.set("nodes=3").unwrap();
+        s.set("wire=bf16").unwrap();
+        s.set("straggler_node=1").unwrap();
+        let cfg = s.to_json();
+        assert_eq!(cfg.req_f64("nodes").unwrap(), 3.0);
+        assert_eq!(cfg.req_str("wire").unwrap(), "bf16");
+        assert_eq!(cfg.req_str("transport").unwrap(), "channels");
+        assert_eq!(cfg.req_f64("straggler_node").unwrap(), 1.0);
+        let env = s.env_json();
+        assert_eq!(env.req_f64("nodes").unwrap(), 3.0);
+        assert_eq!(env.req_str("executor").unwrap(), "serial");
+        assert_eq!(env.req_str("wire").unwrap(), "bf16");
     }
 
     #[test]

@@ -41,6 +41,7 @@ pub mod config;
 pub mod daso;
 pub mod data;
 pub mod figures;
+pub mod obs;
 pub mod optim;
 pub mod runtime;
 pub mod simtime;

@@ -21,6 +21,7 @@ fn main() {
     let result = match args.command.as_str() {
         "train" => cmd_train(&args),
         "launch" => cmd_launch(&args),
+        "bench" => cmd_bench(&args),
         "sweep" => cmd_sweep(&args),
         "figures" => cmd_figures(&args),
         "project" => cmd_project(&args),
@@ -67,6 +68,9 @@ fn build_spec(args: &Args) -> Result<RunSpec> {
     }
     if let Some(out) = args.get("out") {
         spec.out_dir = Some(out.to_string());
+    }
+    if let Some(path) = args.get("trace-out") {
+        spec.set(&format!("trace_out={path}"))?;
     }
     if let Some(dir) = args.get("checkpoint-dir") {
         spec.set(&format!("checkpoint_dir={dir}"))?;
@@ -115,18 +119,157 @@ fn run_spec(
     }
 }
 
-/// Print the summary + JSON and write the optional output files.
+/// Print the summary + JSON and write the optional output files: run
+/// CSV/JSON (with provenance and, when traced, per-phase latency
+/// summaries), the Chrome trace, and a hash-sealed manifest covering
+/// every artifact the run produced.
 fn emit_report(spec: &RunSpec, report: &daso::trainer::RunReport) -> Result<()> {
+    use daso::util::json::{arr, num, obj, s};
+
     println!("{}", report.summary_line());
-    println!("{}", runlog::report_json(report).to_string_pretty());
+    let tag = format!("{}_{}", spec.model, spec.strategy.name());
+    let created_unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let run_id = format!("{tag}-{created_unix}");
+    let git_commit = daso::obs::manifest::git_commit();
+    let provenance = obj(vec![
+        ("run_id", s(&run_id)),
+        ("created_unix", num(created_unix as f64)),
+        ("git_commit", s(&git_commit)),
+        ("config", spec.to_json()),
+        ("env", spec.env_json()),
+    ]);
+    println!("{}", runlog::report_json_full(report, Some(&provenance)).to_string_pretty());
+
+    // trace file: an explicit --trace-out path wins; a traced run with
+    // --out but no explicit path lands next to the run JSON
+    let trace_path = match (&spec.trace_out, &spec.out_dir) {
+        (Some(p), _) => Some(std::path::PathBuf::from(p)),
+        (None, Some(dir)) if report.obs.enabled => {
+            Some(std::path::Path::new(dir).join(format!("{tag}.trace.json")))
+        }
+        _ => None,
+    };
+    let mut trace_written: Option<std::path::PathBuf> = None;
+    if let Some(path) = trace_path {
+        if report.obs.enabled {
+            let meta = obj(vec![
+                ("run_id", s(&run_id)),
+                ("world", num(report.world as f64)),
+                ("nodes", num(spec.train.nodes as f64)),
+                ("gpus_per_node", num(spec.train.gpus_per_node as f64)),
+                ("generation", num(spec.train.launch_generation as f64)),
+                ("regroups", num(report.regroups.len() as f64)),
+                ("git_commit", s(&git_commit)),
+            ]);
+            daso::obs::trace::write_chrome_trace(&path, &report.obs, meta)?;
+            eprintln!("wrote trace {}", path.display());
+            trace_written = Some(path);
+        } else {
+            eprintln!("--trace-out set but the run recorded no trace; nothing written");
+        }
+    }
+
     if let Some(dir) = &spec.out_dir {
         let base = std::path::Path::new(dir);
-        let tag = format!("{}_{}", spec.model, spec.strategy.name());
-        runlog::write_csv(report, &base.join(format!("{tag}.csv")))?;
-        runlog::write_json(report, &base.join(format!("{tag}.json")))?;
+        let csv_path = base.join(format!("{tag}.csv"));
+        let json_path = base.join(format!("{tag}.json"));
+        runlog::write_csv(report, &csv_path)?;
+        runlog::write_json_full(report, Some(&provenance), &json_path)?;
         eprintln!("wrote {dir}/{tag}.{{csv,json}}");
+
+        let mut artifacts = vec![
+            (format!("{tag}.json"), json_path),
+            (format!("{tag}.csv"), csv_path),
+        ];
+        if let Some(tp) = &trace_written {
+            let rel = tp
+                .file_name()
+                .map(|f| f.to_string_lossy().into_owned())
+                .unwrap_or_else(|| tp.display().to_string());
+            artifacts.push((rel, tp.clone()));
+        }
+        if !spec.train.checkpoint_dir.is_empty() {
+            let ckpt_dir = std::path::Path::new(&spec.train.checkpoint_dir);
+            for f in daso::cluster::checkpoint::newest_generation_files(ckpt_dir)? {
+                // record as "<generation>/<rank file>" so the manifest
+                // names the snapshot a resume of this run would read
+                let comps: Vec<String> =
+                    f.iter().map(|c| c.to_string_lossy().into_owned()).collect();
+                let rel = comps[comps.len().saturating_sub(2)..].join("/");
+                artifacts.push((rel, f));
+            }
+        }
+        let regroups_json = arr(report
+            .regroups
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("resume_epoch", num(e.resume_epoch as f64)),
+                    ("lost_node", num(e.lost_node as f64)),
+                    ("nodes", num(e.nodes as f64)),
+                    ("gpus_per_node", num(e.gpus_per_node as f64)),
+                ])
+            })
+            .collect());
+        let manifest = daso::obs::manifest::build(
+            &run_id,
+            created_unix,
+            &git_commit,
+            spec.to_json(),
+            spec.env_json(),
+            report.world,
+            regroups_json,
+            &artifacts,
+        )?;
+        let mpath = base.join(format!("{tag}.manifest.json"));
+        std::fs::write(&mpath, manifest.to_string_pretty())
+            .with_context(|| format!("write {mpath:?}"))?;
+        eprintln!("wrote manifest {}", mpath.display());
     }
     Ok(())
+}
+
+/// `daso bench compare`: gate a freshly emitted BENCH artifact against
+/// a committed baseline contract. Exits non-zero on any regression —
+/// CI's perf gate.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let sub = args.positional.first().map(|s| s.as_str());
+    if sub != Some("compare") {
+        bail!("unknown bench subcommand {sub:?}; supported: compare");
+    }
+    let load = |key: &str| -> Result<daso::util::json::Value> {
+        let path = args.require(key)?;
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        daso::util::json::Value::parse(&text).with_context(|| format!("parsing {path}"))
+    };
+    let f64_flag = |key: &str, default: f64| -> Result<f64> {
+        match args.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    };
+    let time_tol = f64_flag("tolerance", 1.0)?;
+    let bytes_tol = f64_flag("bytes-tolerance", 1.05)?;
+    let baseline = daso::obs::compare::load_bench(&load("baseline")?, "baseline")?;
+    let candidate = daso::obs::compare::load_bench(&load("candidate")?, "candidate")?;
+    let regressions = daso::obs::compare::compare(&baseline, &candidate, time_tol, bytes_tol);
+    if regressions.is_empty() {
+        println!(
+            "bench compare: {} baseline row(s) within tolerance (time x{time_tol}, bytes x{bytes_tol})",
+            baseline.len()
+        );
+        Ok(())
+    } else {
+        for r in &regressions {
+            eprintln!("REGRESSION: {r}");
+        }
+        bail!("{} bench regression(s) against the baseline", regressions.len());
+    }
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -291,6 +434,9 @@ fn launch_attempt(
         format!("straggler_node={}", spec.train.straggler_node),
         format!("straggler_factor={}", spec.train.straggler_factor),
         format!("generation={}", spec.train.launch_generation),
+        // tracing must be symmetric: every process records and joins
+        // the obs gather, or no process does
+        format!("trace={}", spec.train.trace),
     ] {
         train_args.push("--set".into());
         train_args.push(forced);

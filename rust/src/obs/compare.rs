@@ -1,0 +1,158 @@
+//! `daso bench compare` — turn BENCH_*.json from logs into a perf
+//! contract.
+//!
+//! A baseline file (committed under `ci/baselines/`) lists the bench
+//! rows that must exist and the ceilings they must stay under. The
+//! candidate is a freshly emitted `BENCH_<name>.json`. Comparison
+//! rules:
+//!
+//! - both files' `results_sha256` must verify (tamper/corruption gate),
+//! - every baseline row must exist in the candidate (coverage gate),
+//! - `mean_s` must stay within `time_tolerance` × baseline (wall-clock
+//!   gate — baselines carry generous ceilings because CI runners are
+//!   noisy),
+//! - `bytes_on_wire`, when the baseline records it, must stay within
+//!   `bytes_tolerance` × baseline (bytes are deterministic for a fixed
+//!   config, so this tolerance can be tight).
+//!
+//! Extra candidate rows are fine; the contract is one-directional.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{arr, Value};
+use crate::util::sha::sha256_hex;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRow {
+    pub mean_s: f64,
+    pub p99_s: f64,
+    pub bytes_on_wire: Option<u64>,
+}
+
+/// Parse a `daso-bench/*` artifact into name → row, verifying its
+/// `results_sha256` against a canonical recomputation first.
+pub fn load_bench(v: &Value, what: &str) -> Result<BTreeMap<String, BenchRow>> {
+    let schema = v.req_str("schema")?;
+    if !schema.starts_with("daso-bench/") {
+        bail!("{what}: schema {schema:?} is not a daso-bench artifact");
+    }
+    let rows = v.req_arr("results")?;
+    let recomputed = sha256_hex(arr(rows.to_vec()).to_string_compact().as_bytes());
+    let claimed = v.req_str("results_sha256")?;
+    if claimed != recomputed {
+        bail!("{what}: results_sha256 mismatch (claimed {claimed}, actual {recomputed})");
+    }
+    let mut out = BTreeMap::new();
+    for row in rows {
+        out.insert(
+            row.req_str("name")?.to_string(),
+            BenchRow {
+                mean_s: row.req_f64("mean_s")?,
+                p99_s: row.req_f64("p99_s")?,
+                bytes_on_wire: row.get("bytes_on_wire").and_then(|b| b.as_f64()).map(|b| b as u64),
+            },
+        );
+    }
+    Ok(out)
+}
+
+/// Compare candidate rows against the baseline contract. Returns
+/// human-readable regression messages; empty means the gate passes.
+pub fn compare(
+    baseline: &BTreeMap<String, BenchRow>,
+    candidate: &BTreeMap<String, BenchRow>,
+    time_tolerance: f64,
+    bytes_tolerance: f64,
+) -> Vec<String> {
+    let mut regressions = Vec::new();
+    for (name, base) in baseline {
+        let Some(cand) = candidate.get(name) else {
+            regressions.push(format!("{name}: missing from candidate (coverage regression)"));
+            continue;
+        };
+        let time_limit = base.mean_s * time_tolerance;
+        if cand.mean_s > time_limit {
+            regressions.push(format!(
+                "{name}: mean_s {:.4} exceeds {:.4} (baseline {:.4} x tolerance {})",
+                cand.mean_s, time_limit, base.mean_s, time_tolerance
+            ));
+        }
+        if let Some(base_bytes) = base.bytes_on_wire {
+            let bytes_limit = (base_bytes as f64 * bytes_tolerance) as u64;
+            match cand.bytes_on_wire {
+                None => regressions.push(format!(
+                    "{name}: baseline records bytes_on_wire but candidate does not"
+                )),
+                Some(b) if b > bytes_limit => regressions.push(format!(
+                    "{name}: bytes_on_wire {b} exceeds {bytes_limit} (baseline {base_bytes} x tolerance {bytes_tolerance})"
+                )),
+                Some(_) => {}
+            }
+        }
+    }
+    regressions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_support::{bench_json, BenchResult};
+
+    fn mk(name: &str, mean_s: f64, bytes: Option<u64>) -> BenchResult {
+        BenchResult {
+            name: name.into(),
+            iters: 2,
+            mean_s,
+            std_s: 0.0,
+            p50_s: mean_s,
+            p99_s: mean_s,
+            bytes_on_wire: bytes,
+        }
+    }
+
+    #[test]
+    fn load_verifies_results_sha() {
+        let v = bench_json("t", &[mk("a", 1.0, Some(100))]);
+        let rows = load_bench(&v, "candidate").unwrap();
+        assert_eq!(rows["a"].bytes_on_wire, Some(100));
+        // corrupt one value: the sha gate trips
+        let text = v.to_string_compact().replace("\"mean_s\":1", "\"mean_s\":2");
+        let corrupted = Value::parse(&text).unwrap();
+        assert!(load_bench(&corrupted, "candidate").is_err());
+    }
+
+    #[test]
+    fn compare_passes_within_tolerance() {
+        let base = load_bench(&bench_json("t", &[mk("a", 10.0, Some(1000))]), "base").unwrap();
+        let cand = load_bench(&bench_json("t", &[mk("a", 3.0, Some(1000))]), "cand").unwrap();
+        assert!(compare(&base, &cand, 1.0, 1.05).is_empty());
+    }
+
+    #[test]
+    fn compare_flags_time_bytes_and_coverage_regressions() {
+        let base = load_bench(
+            &bench_json("t", &[mk("a", 1.0, Some(1000)), mk("gone", 1.0, None)]),
+            "base",
+        )
+        .unwrap();
+        let cand = load_bench(&bench_json("t", &[mk("a", 5.0, Some(2000))]), "cand").unwrap();
+        let regs = compare(&base, &cand, 2.0, 1.05);
+        assert_eq!(regs.len(), 3, "time + bytes + missing row: {regs:?}");
+        assert!(regs.iter().any(|r| r.contains("mean_s")));
+        assert!(regs.iter().any(|r| r.contains("bytes_on_wire")));
+        assert!(regs.iter().any(|r| r.contains("missing")));
+    }
+
+    #[test]
+    fn extra_candidate_rows_are_not_regressions() {
+        let base = load_bench(&bench_json("t", &[mk("a", 1.0, None)]), "base").unwrap();
+        let cand = load_bench(
+            &bench_json("t", &[mk("a", 0.5, None), mk("new_row", 99.0, Some(1))]),
+            "cand",
+        )
+        .unwrap();
+        assert!(compare(&base, &cand, 2.0, 1.05).is_empty());
+    }
+}

@@ -1,0 +1,164 @@
+//! Hash-sealed run manifests.
+//!
+//! Every run that writes artifacts also writes `<tag>.manifest.json`:
+//! a versioned record of what was run (resolved config, env, git
+//! commit, world shape, regroups) and what it produced (per-artifact
+//! sha256 + byte size), sealed with a canonical-JSON self-hash so the
+//! whole bundle verifies offline:
+//!
+//! 1. remove the `manifest_sha256` field,
+//! 2. serialize the rest as canonical JSON (sorted keys — `Value::Obj`
+//!    is a BTreeMap — and compact separators),
+//! 3. sha256 the UTF-8 bytes; that hex digest is `manifest_sha256`.
+//!
+//! `ci/check_run_json.py manifest` re-derives the same digest in
+//! Python, so a manifest plus its artifacts is checkable with no Rust
+//! toolchain present.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Value};
+use crate::util::sha::sha256_hex;
+
+pub const MANIFEST_SCHEMA_VERSION: &str = "1.0.0";
+pub const MANIFEST_KIND: &str = "daso-run-manifest";
+
+/// One artifact entry: relative path (as recorded), sha256 of the file
+/// bytes, and the byte count.
+pub fn artifact_entry(rel: &str, file: &Path) -> Result<Value> {
+    let bytes = std::fs::read(file)
+        .with_context(|| format!("manifest: reading artifact {}", file.display()))?;
+    Ok(obj(vec![
+        ("path", s(rel)),
+        ("sha256", s(&sha256_hex(&bytes))),
+        ("bytes", num(bytes.len() as f64)),
+    ]))
+}
+
+/// Canonical self-hash of a manifest object: the sha256 of its compact
+/// sorted-key serialization with `manifest_sha256` removed.
+pub fn self_hash(manifest: &Value) -> Result<String> {
+    let Value::Obj(fields) = manifest else {
+        bail!("manifest must be a JSON object");
+    };
+    let mut unsealed = fields.clone();
+    unsealed.remove("manifest_sha256");
+    Ok(sha256_hex(Value::Obj(unsealed).to_string_compact().as_bytes()))
+}
+
+/// Seal a manifest: compute the self-hash and store it under
+/// `manifest_sha256`.
+pub fn seal(fields: BTreeMap<String, Value>) -> Result<Value> {
+    let unsealed = Value::Obj(fields);
+    let hash = self_hash(&unsealed)?;
+    let Value::Obj(mut fields) = unsealed else { unreachable!() };
+    fields.insert("manifest_sha256".to_string(), s(&hash));
+    Ok(Value::Obj(fields))
+}
+
+/// Verify a sealed manifest's self-hash.
+pub fn verify(manifest: &Value) -> Result<()> {
+    let claimed = manifest.req_str("manifest_sha256")?;
+    let actual = self_hash(manifest)?;
+    if claimed != actual {
+        bail!("manifest self-hash mismatch: claimed {claimed}, actual {actual}");
+    }
+    Ok(())
+}
+
+/// Build + seal the standard run manifest. `artifacts` pairs a
+/// recorded relative path with the file to hash; missing files are an
+/// error (the caller only lists what it wrote).
+#[allow(clippy::too_many_arguments)]
+pub fn build(
+    run_id: &str,
+    created_unix: u64,
+    git_commit: &str,
+    config: Value,
+    env: Value,
+    world: usize,
+    regroups: Value,
+    artifacts: &[(String, std::path::PathBuf)],
+) -> Result<Value> {
+    let mut entries = Vec::with_capacity(artifacts.len());
+    for (rel, file) in artifacts {
+        entries.push(artifact_entry(rel, file)?);
+    }
+    let fields: BTreeMap<String, Value> = [
+        ("schema_version".to_string(), s(MANIFEST_SCHEMA_VERSION)),
+        ("kind".to_string(), s(MANIFEST_KIND)),
+        ("run_id".to_string(), s(run_id)),
+        ("created_unix".to_string(), num(created_unix as f64)),
+        ("git_commit".to_string(), s(git_commit)),
+        ("config".to_string(), config),
+        ("env".to_string(), env),
+        ("world".to_string(), num(world as f64)),
+        ("regroups".to_string(), regroups),
+        ("artifacts".to_string(), arr(entries)),
+    ]
+    .into_iter()
+    .collect();
+    seal(fields)
+}
+
+/// The git commit this binary should stamp into artifacts: CI exports
+/// `GITHUB_SHA`; elsewhere "unknown" (same idiom as BENCH emission).
+pub fn git_commit() -> String {
+    std::env::var("GITHUB_SHA").unwrap_or_else(|_| "unknown".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_manifest(dir: &Path) -> Value {
+        let art = dir.join("run.json");
+        std::fs::write(&art, b"{\"ok\":true}").unwrap();
+        build(
+            "test-run",
+            1_700_000_000,
+            "deadbeef",
+            obj(vec![("model", s("mlp")), ("lr", num(0.05))]),
+            obj(vec![("nodes", num(3.0))]),
+            6,
+            arr(vec![]),
+            &[("run.json".to_string(), art)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn seal_then_verify_roundtrips() {
+        let dir = std::env::temp_dir().join(format!("daso_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = demo_manifest(&dir);
+        verify(&m).unwrap();
+        // the self-hash covers every field: perturbing one breaks it
+        let Value::Obj(mut fields) = m.clone() else { unreachable!() };
+        fields.insert("world".to_string(), num(5.0));
+        assert!(verify(&Value::Obj(fields)).is_err());
+        // and re-serializing through the parser is stable
+        let reparsed = Value::parse(&m.to_string_pretty()).unwrap();
+        verify(&reparsed).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn artifact_hash_matches_file_bytes() {
+        let dir = std::env::temp_dir().join(format!("daso_manifest_art_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = demo_manifest(&dir);
+        let arts = m.req_arr("artifacts").unwrap();
+        assert_eq!(arts.len(), 1);
+        assert_eq!(arts[0].req_str("path").unwrap(), "run.json");
+        assert_eq!(
+            arts[0].req_str("sha256").unwrap(),
+            sha256_hex(b"{\"ok\":true}"),
+        );
+        assert_eq!(arts[0].req_usize("bytes").unwrap(), 11);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,819 @@
+//! obs — runtime observability: per-thread span recording, log-bucketed
+//! latency/byte histograms, Chrome-trace emission, hash-sealed run
+//! manifests and the bench-compare perf gate.
+//!
+//! The recorder is built for hot paths: a single relaxed atomic load
+//! gates every probe, so a run without `--trace-out` pays one branch per
+//! call site and allocates nothing. When tracing is on, each thread
+//! appends into its own registered buffer (the only cross-thread
+//! synchronization is the buffer's own uncontended mutex, taken by the
+//! collector exactly once at drain time), timestamps come from one
+//! process-wide monotonic epoch, and every event carries the node it
+//! describes so multi-process gathers can interleave lanes.
+//!
+//! Tracing only *observes*: no probe feeds back into training math,
+//! schedules or wire traffic, so the five-way bit-identity
+//! (serial == threaded == tcp == shm == hybrid at every `--wire`) holds
+//! with tracing enabled — CI runs the parity suites with `--trace-out`
+//! set to enforce exactly that.
+
+pub mod compare;
+pub mod manifest;
+pub mod trace;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+/// Canonical phase names. Constants (not ad-hoc literals) so the
+/// serial/threaded/multiprocess executors and the transports can only
+/// agree: the trace-parity tests compare these exact strings across
+/// executors.
+pub mod phase {
+    /// real forward-backward time of one batch on one worker
+    pub const COMPUTE: &str = "trainer.compute";
+    /// real time inside the strategy's per-batch communication + update
+    pub const SYNC: &str = "trainer.sync";
+    /// consensus evaluation (validation walks)
+    pub const EVAL: &str = "trainer.eval";
+    /// virtual (modeled) per-epoch compute time of one node's worker
+    pub const EPOCH_COMPUTE_VIRTUAL: &str = "epoch.compute.virtual";
+    /// virtual per-epoch sync-skew wait: what a blocking per-step sync
+    /// idles this node for, given the configured compute rates — the
+    /// straggler signal (the slow node's near-zero wait is the outlier)
+    pub const EPOCH_WAIT_VIRTUAL: &str = "epoch.wait.virtual";
+    /// member blocked on the leader's scatter result
+    pub const RENDEZVOUS_WAIT: &str = "rendezvous.wait";
+    /// leader blocked collecting the members' contributions
+    pub const RENDEZVOUS_GATHER: &str = "rendezvous.gather";
+    /// async-aggregator service time for one deposited snapshot
+    pub const ASYNC_DEPOSIT: &str = "async.deposit";
+    /// member blocked picking up a completed async round
+    pub const ASYNC_COLLECT: &str = "async.collect";
+    /// one frame encoded + written to a peer link (under the link lock)
+    pub const LINK_SEND: &str = "link.send";
+    /// demux reader blocked in / reading one message off a link
+    pub const LINK_READ: &str = "link.read";
+    /// reassembling one chunk-pipelined frame on the read side
+    pub const LINK_REASSEMBLE: &str = "link.reassemble";
+    /// casting/encoding an f32 payload into the wire scratch buffer
+    pub const WIRE_ENCODE: &str = "wire.encode";
+    /// shm ring producer stalled on a full ring
+    pub const RING_WAIT_WRITE: &str = "ring.wait.write";
+    /// shm ring consumer stalled on an empty ring
+    pub const RING_WAIT_READ: &str = "ring.wait.read";
+    /// one rank checkpoint encoded + written to disk
+    pub const CHECKPOINT_WRITE: &str = "checkpoint.write";
+    /// quiescing in-flight DASO syncs at a checkpoint epoch
+    pub const CHECKPOINT_QUIESCE: &str = "checkpoint.quiesce";
+}
+
+// ---------------------------------------------------------------------
+// recorder
+// ---------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_LANE: AtomicU32 = AtomicU32::new(0);
+
+/// Per-thread event cap: a runaway probe degrades to counting drops
+/// instead of exhausting memory.
+const MAX_THREAD_EVENTS: usize = 1 << 18;
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Turn the recorder on (idempotent). The process's trace epoch is
+/// pinned on first enable.
+pub fn enable() {
+    epoch();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// The one load every probe pays when tracing is off.
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// One recorded event. `node < 0` means "not attributed yet" — the
+/// drain/gather layer substitutes the recording process's node id.
+#[derive(Debug, Clone, Copy)]
+struct RawEvent {
+    phase: &'static str,
+    node: i32,
+    lane: u32,
+    start_ns: u64,
+    dur_ns: u64,
+    bytes: u64,
+}
+
+struct ThreadBuf {
+    label: String,
+    node: i32,
+    lane: u32,
+    events: Vec<RawEvent>,
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<Mutex<ThreadBuf>>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<Mutex<ThreadBuf>>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static TL_BUF: RefCell<Option<Arc<Mutex<ThreadBuf>>>> = const { RefCell::new(None) };
+}
+
+fn thread_buf() -> Arc<Mutex<ThreadBuf>> {
+    TL_BUF.with(|tl| {
+        let mut slot = tl.borrow_mut();
+        if let Some(buf) = slot.as_ref() {
+            return buf.clone();
+        }
+        let lane = NEXT_LANE.fetch_add(1, Ordering::Relaxed);
+        let label = std::thread::current()
+            .name()
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("thread-{lane}"));
+        let buf = Arc::new(Mutex::new(ThreadBuf { label, node: -1, lane, events: Vec::new() }));
+        registry().lock().unwrap().push(buf.clone());
+        *slot = Some(buf.clone());
+        buf
+    })
+}
+
+/// Attribute this thread's future events to `node` and name its trace
+/// lane. No-op while tracing is off (the disabled path must not touch
+/// the registry).
+pub fn set_thread_meta(node: i32, label: &str) {
+    if !is_enabled() {
+        return;
+    }
+    let buf = thread_buf();
+    let mut b = buf.lock().unwrap();
+    b.node = node;
+    b.label = label.to_string();
+}
+
+fn push_event(ev: RawEvent) {
+    let buf = thread_buf();
+    let mut b = buf.lock().unwrap();
+    if b.events.len() >= MAX_THREAD_EVENTS {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    let mut ev = ev;
+    ev.lane = b.lane;
+    if ev.node < 0 {
+        ev.node = b.node;
+    }
+    b.events.push(ev);
+}
+
+/// RAII span: opens at construction, records its wall duration on drop.
+/// When tracing is off it is inert (no clock read, no allocation).
+pub struct Span {
+    phase: &'static str,
+    start: Option<Instant>,
+    bytes: u64,
+    node: i32,
+}
+
+impl Span {
+    /// Attach a byte count (payload size) to the span.
+    pub fn add_bytes(&mut self, n: u64) {
+        self.bytes += n;
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            let e = epoch();
+            let start_ns = t0.saturating_duration_since(e).as_nanos() as u64;
+            let dur_ns = t0.elapsed().as_nanos() as u64;
+            push_event(RawEvent {
+                phase: self.phase,
+                node: self.node,
+                lane: 0,
+                start_ns,
+                dur_ns,
+                bytes: self.bytes,
+            });
+        }
+    }
+}
+
+/// Open a span attributed to the recording thread's node.
+#[inline]
+pub fn span(phase: &'static str) -> Span {
+    span_n(phase, -1)
+}
+
+/// Open a span explicitly attributed to `node` (the serial executor
+/// walks every node's workers on one thread).
+#[inline]
+pub fn span_n(phase: &'static str, node: i32) -> Span {
+    let start = if is_enabled() { Some(Instant::now()) } else { None };
+    Span { phase, start, bytes: 0, node }
+}
+
+/// Record a completed wall-time event of `dur_ns` ending now.
+pub fn event_ns(phase: &'static str, dur_ns: u64, bytes: u64, node: i32) {
+    if !is_enabled() {
+        return;
+    }
+    let now_ns = epoch().elapsed().as_nanos() as u64;
+    push_event(RawEvent {
+        phase,
+        node,
+        lane: 0,
+        start_ns: now_ns.saturating_sub(dur_ns),
+        dur_ns,
+        bytes,
+    });
+}
+
+/// Record an event measured on the *virtual* clock (modeled seconds).
+/// Placed at the current wall instant so it still lands in a lane; its
+/// duration is the modeled one — the straggler histograms read these.
+pub fn event_virtual(phase: &'static str, dur_s: f64, node: i32) {
+    if !is_enabled() {
+        return;
+    }
+    event_ns(phase, (dur_s.max(0.0) * 1e9) as u64, 0, node);
+}
+
+// ---------------------------------------------------------------------
+// drained events + histograms
+// ---------------------------------------------------------------------
+
+/// An event after draining: owned phase name (decoded events come from
+/// other processes, where `&'static` doesn't reach).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventOut {
+    pub phase: String,
+    pub node: i64,
+    pub lane: u32,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub bytes: u64,
+}
+
+/// One trace lane's identity (Chrome trace `tid` naming).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneInfo {
+    pub node: i64,
+    pub lane: u32,
+    pub label: String,
+}
+
+/// Take every registered thread's events (buffers stay registered; live
+/// threads keep recording into them afterwards). Events and lanes with
+/// unattributed nodes get `default_node`.
+pub fn drain(default_node: i64) -> (Vec<EventOut>, Vec<LaneInfo>, u64) {
+    let bufs: Vec<Arc<Mutex<ThreadBuf>>> = registry().lock().unwrap().clone();
+    let mut events = Vec::new();
+    let mut lanes = Vec::new();
+    for buf in bufs {
+        let mut b = buf.lock().unwrap();
+        let taken = std::mem::take(&mut b.events);
+        if taken.is_empty() {
+            continue;
+        }
+        let lane_node = if b.node < 0 { default_node } else { b.node as i64 };
+        lanes.push(LaneInfo { node: lane_node, lane: b.lane, label: b.label.clone() });
+        for ev in taken {
+            events.push(EventOut {
+                phase: ev.phase.to_string(),
+                node: if ev.node < 0 { default_node } else { ev.node as i64 },
+                lane: ev.lane,
+                start_ns: ev.start_ns,
+                dur_ns: ev.dur_ns,
+                bytes: ev.bytes,
+            });
+        }
+    }
+    events.sort_by_key(|e| (e.node, e.lane, e.start_ns));
+    lanes.sort_by_key(|l| (l.node, l.lane));
+    (events, lanes, DROPPED.swap(0, Ordering::Relaxed))
+}
+
+/// Test hook: clear all recorded state and disable the recorder.
+pub fn reset_for_tests() {
+    disable();
+    for buf in registry().lock().unwrap().iter() {
+        buf.lock().unwrap().events.clear();
+    }
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+/// How many events are currently sitting in thread buffers (test hook
+/// for the disabled-mode zero-recording check).
+pub fn pending_events() -> usize {
+    registry().lock().unwrap().iter().map(|b| b.lock().unwrap().events.len()).sum()
+}
+
+/// Log2-bucketed duration histogram. Bucket `i` counts durations with
+/// `floor(log2(ns)) == i` (zero-duration events land in bucket 0), so
+/// merge order can never change a bucket count — merging per-thread or
+/// per-node histograms in any association yields identical totals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hist {
+    pub count: u64,
+    pub sum_ns: f64,
+    pub max_ns: u64,
+    pub bytes: u64,
+    pub buckets: Vec<u64>,
+}
+
+pub const HIST_BUCKETS: usize = 64;
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { count: 0, sum_ns: 0.0, max_ns: 0, bytes: 0, buckets: vec![0; HIST_BUCKETS] }
+    }
+}
+
+fn bucket_of(dur_ns: u64) -> usize {
+    if dur_ns == 0 {
+        0
+    } else {
+        (63 - dur_ns.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+impl Hist {
+    pub fn add(&mut self, dur_ns: u64, bytes: u64) {
+        self.count += 1;
+        self.sum_ns += dur_ns as f64;
+        self.max_ns = self.max_ns.max(dur_ns);
+        self.bytes += bytes;
+        self.buckets[bucket_of(dur_ns)] += 1;
+    }
+
+    pub fn merge(&mut self, other: &Hist) {
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+        self.bytes += other.bytes;
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += *b;
+        }
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns / self.count as f64
+        }
+    }
+
+    /// Approximate quantile (ns): the geometric midpoint of the bucket
+    /// where the cumulative count crosses `q`. Log-bucket resolution,
+    /// so within a factor of sqrt(2) of the true value — the p50/p95
+    /// the run JSON reports.
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                // geometric midpoint of [2^i, 2^(i+1))
+                return 2f64.powf(i as f64 + 0.5).min(self.max_ns as f64);
+            }
+        }
+        self.max_ns as f64
+    }
+}
+
+/// Everything one run observed, after gathering: per-(phase, node)
+/// histograms over *all* events, plus a (possibly capped) event list
+/// for the Chrome trace and the lane name table.
+#[derive(Debug, Clone, Default)]
+pub struct ObsReport {
+    pub enabled: bool,
+    /// phase -> node -> histogram (histograms cover every event, even
+    /// when the trace event list below was capped)
+    pub phases: BTreeMap<String, BTreeMap<i64, Hist>>,
+    pub events: Vec<EventOut>,
+    pub lanes: Vec<LaneInfo>,
+    pub dropped: u64,
+}
+
+/// Per-process cap on trace events shipped over the control group; the
+/// histograms are computed before capping, so they always cover the
+/// full run.
+pub const MAX_TRACE_EVENTS_PER_NODE: usize = 20_000;
+
+pub fn hist_from_events(events: &[EventOut]) -> BTreeMap<String, BTreeMap<i64, Hist>> {
+    let mut phases: BTreeMap<String, BTreeMap<i64, Hist>> = BTreeMap::new();
+    for ev in events {
+        phases
+            .entry(ev.phase.clone())
+            .or_default()
+            .entry(ev.node)
+            .or_default()
+            .add(ev.dur_ns, ev.bytes);
+    }
+    phases
+}
+
+/// Drain this process's recorder into a node-attributed report.
+pub fn local_report(node: i64) -> ObsReport {
+    let (mut events, lanes, mut dropped) = drain(node);
+    let phases = hist_from_events(&events);
+    if events.len() > MAX_TRACE_EVENTS_PER_NODE {
+        dropped += (events.len() - MAX_TRACE_EVENTS_PER_NODE) as u64;
+        events.truncate(MAX_TRACE_EVENTS_PER_NODE);
+    }
+    ObsReport { enabled: true, phases, events, lanes, dropped }
+}
+
+/// Merge per-node reports (rank 0 after the gather).
+pub fn merge_reports(reports: impl IntoIterator<Item = ObsReport>) -> ObsReport {
+    let mut out = ObsReport { enabled: true, ..Default::default() };
+    for rep in reports {
+        for (phase, nodes) in rep.phases {
+            let slot = out.phases.entry(phase).or_default();
+            for (node, hist) in nodes {
+                slot.entry(node).or_default().merge(&hist);
+            }
+        }
+        out.events.extend(rep.events);
+        out.lanes.extend(rep.lanes);
+        out.dropped += rep.dropped;
+    }
+    out.events.sort_by_key(|e| (e.node, e.lane, e.start_ns));
+    out.lanes.sort_by_key(|l| (l.node, l.lane));
+    out.lanes.dedup();
+    out
+}
+
+// ---------------------------------------------------------------------
+// control-group gather encoding
+// ---------------------------------------------------------------------
+
+/// Wire format version of the f64 gather blob below.
+const OBS_BLOB_FORMAT: f64 = 1.0;
+
+/// Encode one process's report as a flat f64 vector so it can ride the
+/// existing control-group exchange (Payload::F64) to rank 0. Layout:
+/// `[format, dropped, name table, lane table, events, hist rows]`, all
+/// lengths self-describing. u64 values survive f64 (< 2^53).
+pub fn encode_report(rep: &ObsReport) -> Vec<f64> {
+    let mut names: Vec<&str> = Vec::new();
+    let mut name_idx: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut phase_names: Vec<&str> = rep.events.iter().map(|e| e.phase.as_str()).collect();
+    phase_names.extend(rep.phases.keys().map(|s| s.as_str()));
+    for p in phase_names {
+        if !name_idx.contains_key(p) {
+            name_idx.insert(p, names.len());
+            names.push(p);
+        }
+    }
+
+    let mut out = Vec::new();
+    out.push(OBS_BLOB_FORMAT);
+    out.push(rep.dropped as f64);
+    out.push(names.len() as f64);
+    for name in &names {
+        out.push(name.len() as f64);
+        out.extend(name.bytes().map(|b| b as f64));
+    }
+    out.push(rep.lanes.len() as f64);
+    for lane in &rep.lanes {
+        out.push(lane.node as f64);
+        out.push(lane.lane as f64);
+        out.push(lane.label.len() as f64);
+        out.extend(lane.label.bytes().map(|b| b as f64));
+    }
+    out.push(rep.events.len() as f64);
+    for ev in &rep.events {
+        out.push(name_idx[ev.phase.as_str()] as f64);
+        out.push(ev.node as f64);
+        out.push(ev.lane as f64);
+        out.push(ev.start_ns as f64);
+        out.push(ev.dur_ns as f64);
+        out.push(ev.bytes as f64);
+    }
+    let n_rows: usize = rep.phases.values().map(|m| m.len()).sum();
+    out.push(n_rows as f64);
+    for (phase, nodes) in &rep.phases {
+        for (node, h) in nodes {
+            out.push(name_idx[phase.as_str()] as f64);
+            out.push(*node as f64);
+            out.push(h.count as f64);
+            out.push(h.sum_ns);
+            out.push(h.max_ns as f64);
+            out.push(h.bytes as f64);
+            let nz: Vec<(usize, u64)> = h
+                .buckets
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(|(i, &c)| (i, c))
+                .collect();
+            out.push(nz.len() as f64);
+            for (i, c) in nz {
+                out.push(i as f64);
+                out.push(c as f64);
+            }
+        }
+    }
+    out
+}
+
+pub fn decode_report(blob: &[f64]) -> Result<ObsReport> {
+    struct Cur<'a> {
+        b: &'a [f64],
+        pos: usize,
+    }
+    impl Cur<'_> {
+        fn next(&mut self) -> Result<f64> {
+            let v = *self.b.get(self.pos).ok_or_else(|| {
+                anyhow::anyhow!("obs blob truncated at {} of {}", self.pos, self.b.len())
+            })?;
+            self.pos += 1;
+            Ok(v)
+        }
+        fn next_usize(&mut self) -> Result<usize> {
+            Ok(self.next()? as usize)
+        }
+        fn next_u64(&mut self) -> Result<u64> {
+            Ok(self.next()? as u64)
+        }
+        fn string(&mut self) -> Result<String> {
+            let len = self.next_usize()?;
+            ensure!(len <= 4096, "obs blob: implausible string length {len}");
+            let mut bytes = Vec::with_capacity(len);
+            for _ in 0..len {
+                bytes.push(self.next()? as u8);
+            }
+            Ok(String::from_utf8_lossy(&bytes).into_owned())
+        }
+    }
+    let mut c = Cur { b: blob, pos: 0 };
+    let format = c.next()?;
+    if format != OBS_BLOB_FORMAT {
+        bail!("obs blob format {format} (expected {OBS_BLOB_FORMAT})");
+    }
+    let dropped = c.next_u64()?;
+    let n_names = c.next_usize()?;
+    let mut names = Vec::with_capacity(n_names);
+    for _ in 0..n_names {
+        names.push(c.string()?);
+    }
+    let name_at = |i: usize| -> Result<&String> {
+        names.get(i).ok_or_else(|| anyhow::anyhow!("obs blob: name index {i} out of range"))
+    };
+    let n_lanes = c.next_usize()?;
+    let mut lanes = Vec::with_capacity(n_lanes);
+    for _ in 0..n_lanes {
+        let node = c.next()? as i64;
+        let lane = c.next()? as u32;
+        let label = c.string()?;
+        lanes.push(LaneInfo { node, lane, label });
+    }
+    let n_events = c.next_usize()?;
+    let mut events = Vec::with_capacity(n_events);
+    for _ in 0..n_events {
+        let phase = name_at(c.next_usize()?)?.clone();
+        let node = c.next()? as i64;
+        let lane = c.next()? as u32;
+        let start_ns = c.next_u64()?;
+        let dur_ns = c.next_u64()?;
+        let bytes = c.next_u64()?;
+        events.push(EventOut { phase, node, lane, start_ns, dur_ns, bytes });
+    }
+    let n_rows = c.next_usize()?;
+    let mut phases: BTreeMap<String, BTreeMap<i64, Hist>> = BTreeMap::new();
+    for _ in 0..n_rows {
+        let phase = name_at(c.next_usize()?)?.clone();
+        let node = c.next()? as i64;
+        let mut h = Hist {
+            count: c.next_u64()?,
+            sum_ns: c.next()?,
+            max_ns: c.next_u64()?,
+            bytes: c.next_u64()?,
+            ..Default::default()
+        };
+        let nz = c.next_usize()?;
+        for _ in 0..nz {
+            let i = c.next_usize()?;
+            ensure!(i < HIST_BUCKETS, "obs blob: bucket index {i} out of range");
+            h.buckets[i] = c.next_u64()?;
+        }
+        phases.entry(phase).or_default().insert(node, h);
+    }
+    ensure!(c.pos == blob.len(), "obs blob: {} trailing values", blob.len() - c.pos);
+    Ok(ObsReport { enabled: true, phases, events, lanes, dropped })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// obs state is process-global; tests that flip it serialize here.
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_mode_records_nothing() {
+        let _g = test_lock();
+        reset_for_tests();
+        assert!(!is_enabled());
+        let before = pending_events();
+        {
+            let mut s = span("test.disabled.phase");
+            s.add_bytes(100);
+        }
+        event_ns("test.disabled.phase", 123, 0, 0);
+        event_virtual("test.disabled.phase", 1.0, 0);
+        set_thread_meta(7, "should-not-register");
+        assert_eq!(pending_events(), before, "disabled probes must record nothing");
+        let (events, _, _) = drain(0);
+        assert!(!events.iter().any(|e| e.phase == "test.disabled.phase"));
+    }
+
+    #[test]
+    fn spans_record_nesting_and_order() {
+        let _g = test_lock();
+        reset_for_tests();
+        enable();
+        set_thread_meta(3, "test-lane");
+        {
+            let _outer = span("test.outer");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            {
+                let _inner = span("test.inner");
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        let (events, lanes, _) = drain(0);
+        let outer = events.iter().find(|e| e.phase == "test.outer").expect("outer span");
+        let inner = events.iter().find(|e| e.phase == "test.inner").expect("inner span");
+        assert_eq!(outer.node, 3);
+        assert_eq!(inner.node, 3);
+        // inner drops first, so it is recorded first; the outer span
+        // opened earlier and fully contains it
+        assert!(outer.start_ns <= inner.start_ns, "outer opens before inner");
+        assert!(
+            outer.start_ns + outer.dur_ns >= inner.start_ns + inner.dur_ns,
+            "outer closes after inner"
+        );
+        assert!(outer.dur_ns >= inner.dur_ns);
+        assert!(lanes.iter().any(|l| l.label == "test-lane" && l.node == 3));
+        reset_for_tests();
+    }
+
+    #[test]
+    fn spans_across_threads_get_distinct_lanes() {
+        let _g = test_lock();
+        reset_for_tests();
+        enable();
+        std::thread::scope(|s| {
+            for i in 0..3 {
+                s.spawn(move || {
+                    set_thread_meta(i, &format!("worker-{i}"));
+                    let _sp = span("test.threaded");
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                });
+            }
+        });
+        let (events, _, _) = drain(0);
+        let mine: Vec<_> = events.iter().filter(|e| e.phase == "test.threaded").collect();
+        assert_eq!(mine.len(), 3);
+        let lanes: std::collections::BTreeSet<u32> = mine.iter().map(|e| e.lane).collect();
+        assert_eq!(lanes.len(), 3, "each thread gets its own lane");
+        let nodes: std::collections::BTreeSet<i64> = mine.iter().map(|e| e.node).collect();
+        assert_eq!(nodes, [0i64, 1, 2].into_iter().collect());
+        reset_for_tests();
+    }
+
+    #[test]
+    fn hist_merge_is_associative_and_matches_single_recorder() {
+        // merge of per-thread bucket sets == one recorder seeing all
+        let durs: Vec<u64> = (0..1000u64).map(|i| (i * 2654435761) % 5_000_000).collect();
+        let mut reference = Hist::default();
+        for &d in &durs {
+            reference.add(d, d / 7);
+        }
+        // split into 3 "threads", merge in two different associations
+        let parts: Vec<Hist> = durs
+            .chunks(durs.len() / 3 + 1)
+            .map(|chunk| {
+                let mut h = Hist::default();
+                for &d in chunk {
+                    h.add(d, d / 7);
+                }
+                h
+            })
+            .collect();
+        let mut left = Hist::default();
+        for p in &parts {
+            left.merge(p);
+        }
+        let mut right = Hist::default();
+        let mut tail = parts[1].clone();
+        tail.merge(&parts[2]);
+        right.merge(&parts[0]);
+        right.merge(&tail);
+        assert_eq!(left, reference);
+        assert_eq!(right, reference);
+        assert_eq!(left.count, 1000);
+        assert!(left.quantile_ns(0.5) <= left.quantile_ns(0.95));
+        assert!(left.quantile_ns(0.95) <= left.max_ns as f64);
+    }
+
+    #[test]
+    fn hist_buckets_are_log2() {
+        let mut h = Hist::default();
+        h.add(0, 0);
+        h.add(1, 0);
+        h.add(2, 0);
+        h.add(3, 0);
+        h.add(1024, 0);
+        assert_eq!(h.buckets[0], 2); // 0 and 1
+        assert_eq!(h.buckets[1], 2); // 2 and 3
+        assert_eq!(h.buckets[10], 1); // 1024
+        assert_eq!(h.count, 5);
+        assert_eq!(h.max_ns, 1024);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut phases: BTreeMap<String, BTreeMap<i64, Hist>> = BTreeMap::new();
+        let mut h = Hist::default();
+        h.add(1500, 64);
+        h.add(3000, 64);
+        phases.entry("test.phase".into()).or_default().insert(2, h);
+        let rep = ObsReport {
+            enabled: true,
+            phases,
+            events: vec![EventOut {
+                phase: "test.phase".into(),
+                node: 2,
+                lane: 5,
+                start_ns: 1_000_000,
+                dur_ns: 1500,
+                bytes: 64,
+            }],
+            lanes: vec![LaneInfo { node: 2, lane: 5, label: "n2w0".into() }],
+            dropped: 3,
+        };
+        let blob = encode_report(&rep);
+        let back = decode_report(&blob).unwrap();
+        assert_eq!(back.events, rep.events);
+        assert_eq!(back.lanes, rep.lanes);
+        assert_eq!(back.dropped, 3);
+        assert_eq!(back.phases["test.phase"][&2], rep.phases["test.phase"][&2]);
+        // truncation is an error, not garbage
+        assert!(decode_report(&blob[..blob.len() - 1]).is_err());
+        assert!(decode_report(&[99.0]).is_err());
+    }
+
+    #[test]
+    fn merge_reports_combines_nodes() {
+        let mk = |node: i64, dur: u64| {
+            let mut phases: BTreeMap<String, BTreeMap<i64, Hist>> = BTreeMap::new();
+            let mut h = Hist::default();
+            h.add(dur, 0);
+            phases.entry("test.m".into()).or_default().insert(node, h);
+            ObsReport {
+                enabled: true,
+                phases,
+                events: vec![EventOut {
+                    phase: "test.m".into(),
+                    node,
+                    lane: node as u32,
+                    start_ns: 0,
+                    dur_ns: dur,
+                    bytes: 0,
+                }],
+                lanes: vec![LaneInfo { node, lane: node as u32, label: format!("n{node}") }],
+                dropped: 0,
+            }
+        };
+        let merged = merge_reports([mk(0, 100), mk(1, 200)]);
+        assert_eq!(merged.phases["test.m"].len(), 2);
+        assert_eq!(merged.events.len(), 2);
+        assert_eq!(merged.lanes.len(), 2);
+    }
+}

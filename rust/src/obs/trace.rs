@@ -1,0 +1,120 @@
+//! Chrome trace-event JSON emission.
+//!
+//! Rank 0 turns the gathered [`ObsReport`](super::ObsReport) into the
+//! Trace Event Format understood by Perfetto (<https://ui.perfetto.dev>)
+//! and chrome://tracing: complete duration events (`ph:"X"`) with
+//! `pid` = node and `tid` = recorder lane, so every node gets its own
+//! process row and every worker/demux/aggregator thread its own lane.
+//! Timestamps are microseconds since each process's trace epoch —
+//! lanes within a node are mutually ordered; cross-node skew is
+//! whatever the launch skew was.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Value};
+
+use super::ObsReport;
+
+/// Build the trace JSON: `{"traceEvents": [...], "metadata": {...}}`.
+/// `metadata` should carry the run context (world, nodes, regroups) so
+/// a trace file is self-describing — the chaos gate reads the shrunk
+/// world out of it.
+pub fn chrome_trace(rep: &ObsReport, metadata: Value) -> Value {
+    let mut events = Vec::with_capacity(rep.events.len() + rep.lanes.len() + 8);
+    let nodes: BTreeSet<i64> = rep
+        .events
+        .iter()
+        .map(|e| e.node)
+        .chain(rep.lanes.iter().map(|l| l.node))
+        .collect();
+    for node in &nodes {
+        events.push(obj(vec![
+            ("ph", s("M")),
+            ("name", s("process_name")),
+            ("pid", num(*node as f64)),
+            ("args", obj(vec![("name", s(&format!("node {node}")))])),
+        ]));
+    }
+    for lane in &rep.lanes {
+        events.push(obj(vec![
+            ("ph", s("M")),
+            ("name", s("thread_name")),
+            ("pid", num(lane.node as f64)),
+            ("tid", num(lane.lane as f64)),
+            ("args", obj(vec![("name", s(&lane.label))])),
+        ]));
+    }
+    for ev in &rep.events {
+        events.push(obj(vec![
+            ("ph", s("X")),
+            ("name", s(&ev.phase)),
+            ("cat", s("daso")),
+            ("pid", num(ev.node as f64)),
+            ("tid", num(ev.lane as f64)),
+            ("ts", num(ev.start_ns as f64 / 1000.0)),
+            ("dur", num(ev.dur_ns as f64 / 1000.0)),
+            ("args", obj(vec![("bytes", num(ev.bytes as f64))])),
+        ]));
+    }
+    obj(vec![
+        ("traceEvents", arr(events)),
+        ("metadata", metadata),
+        ("displayTimeUnit", s("ms")),
+    ])
+}
+
+pub fn write_chrome_trace(path: &Path, rep: &ObsReport, metadata: Value) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating trace dir {}", parent.display()))?;
+        }
+    }
+    let v = chrome_trace(rep, metadata);
+    std::fs::write(path, v.to_string_compact())
+        .with_context(|| format!("writing trace {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{EventOut, Hist, LaneInfo};
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn trace_has_lane_metadata_and_duration_events() {
+        let mut phases: BTreeMap<String, BTreeMap<i64, Hist>> = BTreeMap::new();
+        let mut h = Hist::default();
+        h.add(2000, 0);
+        phases.entry("trainer.compute".into()).or_default().insert(1, h);
+        let rep = ObsReport {
+            enabled: true,
+            phases,
+            events: vec![EventOut {
+                phase: "trainer.compute".into(),
+                node: 1,
+                lane: 4,
+                start_ns: 5000,
+                dur_ns: 2000,
+                bytes: 0,
+            }],
+            lanes: vec![LaneInfo { node: 1, lane: 4, label: "n1w0".into() }],
+            dropped: 0,
+        };
+        let meta = obj(vec![("world", num(6.0))]);
+        let v = chrome_trace(&rep, meta);
+        let evs = v.req_arr("traceEvents").unwrap();
+        // process_name + thread_name + one X event
+        assert_eq!(evs.len(), 3);
+        let x = evs.iter().find(|e| e.req_str("ph").unwrap() == "X").unwrap();
+        assert_eq!(x.req_str("name").unwrap(), "trainer.compute");
+        assert_eq!(x.req_f64("pid").unwrap(), 1.0);
+        assert_eq!(x.req_f64("tid").unwrap(), 4.0);
+        assert_eq!(x.req_f64("ts").unwrap(), 5.0);
+        assert_eq!(x.req_f64("dur").unwrap(), 2.0);
+        assert_eq!(v.req("metadata").unwrap().req_f64("world").unwrap(), 6.0);
+    }
+}

@@ -1,6 +1,7 @@
 //! Run-log output: CSV per-epoch records and a JSON run summary, written
 //! under `runs/` so every experiment in EXPERIMENTS.md is regenerable.
 
+use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::Path;
 
@@ -126,6 +127,85 @@ pub fn write_json(report: &RunReport, path: &Path) -> Result<()> {
         .with_context(|| format!("write {path:?}"))
 }
 
+/// Per-phase latency summaries (ms) from the merged observability
+/// report: `phase -> node (string key) -> {count, bytes, mean_ms,
+/// p50_ms, p95_ms, max_ms}`. Quantiles are log-bucket approximate
+/// (within sqrt(2)); `count` and `bytes` are exact.
+fn phases_json(rep: &crate::obs::ObsReport) -> Value {
+    let mut phases = BTreeMap::new();
+    for (phase, nodes) in &rep.phases {
+        let mut per_node = BTreeMap::new();
+        for (node, h) in nodes {
+            per_node.insert(
+                node.to_string(),
+                obj(vec![
+                    ("count", num(h.count as f64)),
+                    ("bytes", num(h.bytes as f64)),
+                    ("mean_ms", num(h.mean_ns() / 1e6)),
+                    ("p50_ms", num(h.quantile_ns(0.50) / 1e6)),
+                    ("p95_ms", num(h.quantile_ns(0.95) / 1e6)),
+                    ("max_ms", num(h.max_ns as f64 / 1e6)),
+                ]),
+            );
+        }
+        phases.insert(phase.clone(), Value::Obj(per_node));
+    }
+    Value::Obj(phases)
+}
+
+/// Raw log2-bucket histograms for offline analysis: `phase -> node ->
+/// [[bucket_index, count], ...]` (nonzero buckets only; bucket `i`
+/// covers durations in `[2^i, 2^(i+1))` ns).
+fn histograms_json(rep: &crate::obs::ObsReport) -> Value {
+    let mut phases = BTreeMap::new();
+    for (phase, nodes) in &rep.phases {
+        let mut per_node = BTreeMap::new();
+        for (node, h) in nodes {
+            let rows = h
+                .buckets
+                .iter()
+                .enumerate()
+                .filter(|&(_, &c)| c > 0)
+                .map(|(i, &c)| arr(vec![num(i as f64), num(c as f64)]))
+                .collect();
+            per_node.insert(node.to_string(), arr(rows));
+        }
+        phases.insert(phase.clone(), Value::Obj(per_node));
+    }
+    Value::Obj(phases)
+}
+
+/// Full run summary: the base [`report_json`] plus a `provenance`
+/// section (resolved config, env, commit — supplied by the caller so
+/// this module stays config-agnostic) and, when the run was traced,
+/// `phases` + `histograms` sections from the gathered obs report.
+pub fn report_json_full(report: &RunReport, provenance: Option<&Value>) -> Value {
+    let mut v = report_json(report);
+    if let Value::Obj(map) = &mut v {
+        if let Some(p) = provenance {
+            map.insert("provenance".into(), p.clone());
+        }
+        if report.obs.enabled {
+            map.insert("phases".into(), phases_json(&report.obs));
+            map.insert("histograms".into(), histograms_json(&report.obs));
+            map.insert("obs_dropped".into(), num(report.obs.dropped as f64));
+        }
+    }
+    v
+}
+
+pub fn write_json_full(
+    report: &RunReport,
+    provenance: Option<&Value>,
+    path: &Path,
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, report_json_full(report, provenance).to_string_pretty())
+        .with_context(|| format!("write {path:?}"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,12 +235,15 @@ mod tests {
             comm: CommStats::default(),
             final_params: vec![vec![0.0; 4]; 4],
             regroups: vec![],
+            obs: Default::default(),
         }
     }
 
     #[test]
     fn csv_and_json_roundtrip() {
-        let dir = std::env::temp_dir().join("daso_log_test");
+        // unique per-process dir: parallel checkouts running this test
+        // against the same tmpdir must not race on one fixed path
+        let dir = std::env::temp_dir().join(format!("daso_log_test_{}", std::process::id()));
         let report = fake_report();
         write_csv(&report, &dir.join("run.csv")).unwrap();
         write_json(&report, &dir.join("run.json")).unwrap();
@@ -171,5 +254,46 @@ mod tests {
         let v = Value::parse(&json).unwrap();
         assert_eq!(v.req_str("strategy").unwrap(), "daso");
         assert_eq!(v.req_usize("world").unwrap(), 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn full_json_carries_provenance_and_phases() {
+        let mut report = fake_report();
+        let mut h = crate::obs::Hist::default();
+        h.add(1_500, 32);
+        h.add(3_000, 32);
+        report.obs.enabled = true;
+        report
+            .obs
+            .phases
+            .entry("trainer.compute".into())
+            .or_default()
+            .insert(1, h);
+        let prov = obj(vec![("git_commit", s("abc123"))]);
+        let v = report_json_full(&report, Some(&prov));
+        assert_eq!(
+            v.get("provenance").and_then(|p| p.get("git_commit")).and_then(|x| x.as_str()),
+            Some("abc123")
+        );
+        let row = v
+            .get("phases")
+            .and_then(|p| p.get("trainer.compute"))
+            .and_then(|p| p.get("1"))
+            .expect("per-node phase row");
+        assert_eq!(row.req_usize("count").unwrap(), 2);
+        assert!(row.req_f64("p95_ms").unwrap() > 0.0);
+        // histograms mirror the same phase/node keys with raw buckets
+        let buckets = v
+            .get("histograms")
+            .and_then(|p| p.get("trainer.compute"))
+            .and_then(|p| p.get("1"))
+            .and_then(|x| x.as_arr().map(|a| a.len()))
+            .unwrap();
+        assert!(buckets >= 1);
+        // untraced reports stay schema-identical to the base summary
+        let plain = report_json_full(&fake_report(), None);
+        assert!(plain.get("phases").is_none());
+        assert!(plain.get("provenance").is_none());
     }
 }

@@ -88,6 +88,12 @@ pub struct TrainConfig {
     /// elastic relaunch attempt, forced to children by `daso launch` on
     /// every regroup; the handshake rejects peers from another attempt
     pub launch_generation: u64,
+    /// record per-phase spans/histograms into the obs subsystem
+    /// (`--trace-out`, config key `trace`). Tracing only observes —
+    /// results stay bit-identical with it on or off — and is excluded
+    /// from the checkpoint fingerprint, so traced runs resume untraced
+    /// snapshots and vice versa.
+    pub trace: bool,
 }
 
 impl TrainConfig {
@@ -119,6 +125,7 @@ impl TrainConfig {
             straggler_node: -1,
             straggler_factor: 1.0,
             launch_generation: 0,
+            trace: false,
         }
     }
 
@@ -184,6 +191,9 @@ pub struct RunReport {
     /// final per-worker parameter replicas (rank order) — the basis of
     /// the serial-vs-threaded determinism tests
     pub final_params: Vec<Vec<f32>>,
+    /// gathered observability data (per-phase histograms + trace
+    /// events); default/empty when the run was not traced
+    pub obs: crate::obs::ObsReport,
 }
 
 impl RunReport {
@@ -232,6 +242,11 @@ pub fn train(
         world,
         batch
     );
+
+    if cfg.trace {
+        crate::obs::enable();
+        crate::obs::set_thread_meta(0, "serial-trainer");
+    }
 
     let wall_start = Instant::now();
     let mut records = Vec::with_capacity(cfg.epochs);
@@ -294,7 +309,11 @@ pub fn train(
             for w in 0..world {
                 let idx = &orders[w][step * batch..(step + 1) * batch];
                 let (x, y) = train_data.batch(idx);
-                let (loss, g) = rt.grad(&cluster.workers[w].params, &x, &y)?;
+                let node = cluster.workers[w].rank.node;
+                let (loss, g) = {
+                    let _sp = crate::obs::span_n(crate::obs::phase::COMPUTE, node as i32);
+                    rt.grad(&cluster.workers[w].params, &x, &y)?
+                };
                 loss_sum += loss as f64;
                 grads[w] = g;
                 let worker = &mut cluster.workers[w];
@@ -312,6 +331,7 @@ pub fn train(
                 global_batch,
                 global_wire,
             };
+            let _sp = crate::obs::span(crate::obs::phase::SYNC);
             strategy.apply(&mut ctx)?;
         }
 
@@ -320,6 +340,31 @@ pub fn train(
         // the same values every rank of the threaded/multiprocess
         // executors learns from the epoch-loss reduction
         let clocks: Vec<f64> = cluster.workers.iter().map(|w| w.clock).collect();
+        if cfg.trace {
+            // deterministic virtual-clock events: the straggler signal
+            // lives on the modeled clocks (wall time is unaffected by
+            // straggler_factor), so these — not wall spans — are what
+            // the straggler histograms read. Wait is the per-step skew
+            // a blocking sync imposes: every step each worker idles
+            // until the slowest node's batch lands, so the straggler
+            // itself (the largest compute time) waits exactly zero —
+            // the near-zero minimum outlier CI asserts on.
+            let max_ct =
+                (0..cfg.nodes).map(|n| cfg.compute_time_for(n)).fold(0.0, f64::max);
+            for w in cluster.workers.iter() {
+                let node = w.rank.node;
+                crate::obs::event_virtual(
+                    crate::obs::phase::EPOCH_COMPUTE_VIRTUAL,
+                    steps_per_epoch as f64 * cfg.compute_time_for(node),
+                    node as i32,
+                );
+                crate::obs::event_virtual(
+                    crate::obs::phase::EPOCH_WAIT_VIRTUAL,
+                    steps_per_epoch as f64 * (max_ct - cfg.compute_time_for(node)),
+                    node as i32,
+                );
+            }
+        }
         lr_sched.on_epoch_end(train_loss);
         strategy.on_epoch_end(epoch, train_loss);
         strategy.observe_epoch_clocks(epoch, &clocks);
@@ -341,11 +386,13 @@ pub fn train(
                 global_batch,
                 global_wire,
             };
+            let _sp = crate::obs::span(crate::obs::phase::CHECKPOINT_QUIESCE);
             strategy.quiesce(&mut ctx)?;
         }
 
         let do_eval = cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0;
         let (metric, val_loss) = if do_eval {
+            let _sp = crate::obs::span(crate::obs::phase::EVAL);
             let acc = eval_consensus(rt, &cluster, val_data, epoch, global_wire)?;
             (Some(acc.value()), Some(acc.mean_loss()))
         } else {
@@ -438,12 +485,17 @@ pub fn train(
         };
         strategy.finalize(&mut ctx)?;
     }
-    let final_acc = eval_consensus(rt, &cluster, val_data, cfg.epochs, global_wire)?;
+    let final_acc = {
+        let _sp = crate::obs::span(crate::obs::phase::EVAL);
+        eval_consensus(rt, &cluster, val_data, cfg.epochs, global_wire)?
+    };
     let final_metric = final_acc.value();
     let best_metric = records
         .iter()
         .filter_map(|r| r.metric)
         .fold(final_metric, f64::max);
+
+    let obs = if cfg.trace { crate::obs::local_report(0) } else { Default::default() };
 
     Ok(RunReport {
         strategy: strategy.name().to_string(),
@@ -458,6 +510,7 @@ pub fn train(
         comm: strategy.comm_stats(),
         final_params: cluster.workers.iter().map(|w| w.params.clone()).collect(),
         regroups: vec![],
+        obs,
     })
 }
 

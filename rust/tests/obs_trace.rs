@@ -1,0 +1,178 @@
+//! Observability contract tests:
+//!
+//! - tracing only observes: traced runs are bit-identical to untraced
+//!   runs, serial and threaded, at every wire format;
+//! - the gathered obs report covers the core phases (compute, sync,
+//!   rendezvous) with per-node histograms;
+//! - the deterministic virtual-clock phases expose a simulated
+//!   straggler: the slow node's `epoch.wait.virtual` is the near-zero
+//!   minimum outlier (the assertion CI makes against the run JSON).
+//!
+//! The obs recorder is process-global, so every test here serializes
+//! on one lock and resets the recorder before running.
+
+#![cfg(not(feature = "pjrt"))]
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use daso::baselines::{Horovod, HorovodConfig, HorovodRank};
+use daso::cluster::train_threaded;
+use daso::runtime::Engine;
+use daso::trainer::strategy::RankStrategyFactory;
+use daso::trainer::{train, RunReport, TrainConfig};
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn obs_guard() -> std::sync::MutexGuard<'static, ()> {
+    let g = OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    daso::obs::reset_for_tests();
+    g
+}
+
+fn cfg(nodes: usize, gpn: usize, epochs: usize) -> TrainConfig {
+    let mut c = TrainConfig::quick(nodes, gpn, epochs);
+    c.train_samples = 1024;
+    c.val_samples = 256;
+    c.lr_scale = (nodes * gpn) as f64;
+    c
+}
+
+fn run_serial(c: &TrainConfig, seed: u64) -> RunReport {
+    let engine = Engine::native();
+    let rt = engine.model("mlp").unwrap();
+    let (tr, va) = daso::data::for_model(&rt.spec, c.train_samples, c.val_samples, seed).unwrap();
+    train(&rt, c, &*tr, &*va, &mut Horovod::new(HorovodConfig::default())).unwrap()
+}
+
+fn run_threaded(c: &TrainConfig, seed: u64) -> RunReport {
+    let engine = Engine::native();
+    let rt = engine.model("mlp").unwrap();
+    let (tr, va) = daso::data::for_model(&rt.spec, c.train_samples, c.val_samples, seed).unwrap();
+    let factory: RankStrategyFactory =
+        Box::new(|_| Box::new(HorovodRank::new(HorovodConfig::default())));
+    train_threaded(&rt, c, &*tr, &*va, &factory).unwrap()
+}
+
+/// Deadlock guard for the threaded executor (mirrors executor_threaded).
+fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    let out = rx
+        .recv_timeout(Duration::from_secs(secs))
+        .unwrap_or_else(|_| panic!("timed out after {secs}s — executor deadlock?"));
+    handle.join().expect("runner thread panicked");
+    out
+}
+
+fn assert_bit_identical(a: &RunReport, b: &RunReport) {
+    assert_eq!(a.final_params, b.final_params, "parameters diverged");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.train_loss, rb.train_loss, "epoch {} loss diverged", ra.epoch);
+    }
+    assert_eq!(a.final_metric, b.final_metric);
+}
+
+#[test]
+fn tracing_only_observes_serial() {
+    let _g = obs_guard();
+    let c = cfg(2, 2, 3);
+    let plain = run_serial(&c, 11);
+    let mut traced_cfg = c.clone();
+    traced_cfg.trace = true;
+    let traced = run_serial(&traced_cfg, 11);
+    assert_bit_identical(&plain, &traced);
+    assert!(!plain.obs.enabled, "untraced run must carry no obs report");
+    assert!(traced.obs.enabled);
+    for phase in ["trainer.compute", "trainer.sync", "trainer.eval"] {
+        assert!(traced.obs.phases.contains_key(phase), "missing phase {phase}");
+    }
+    let compute = &traced.obs.phases["trainer.compute"];
+    assert_eq!(compute.len(), 2, "one histogram per node");
+    for (node, h) in compute {
+        assert!(h.count > 0, "node {node} recorded no compute spans");
+        assert!(h.quantile_ns(0.95) >= h.quantile_ns(0.50));
+    }
+}
+
+#[test]
+fn traced_threaded_matches_untraced_serial_on_every_wire() {
+    let _g = obs_guard();
+    for wire in [daso::comm::Wire::F32, daso::comm::Wire::Bf16, daso::comm::Wire::F16] {
+        let mut c = cfg(2, 2, 3);
+        c.global_wire = wire;
+        let serial = run_serial(&c, 17);
+        let mut tc = c.clone();
+        tc.trace = true;
+        let traced = with_timeout(120, move || run_threaded(&tc, 17));
+        assert_bit_identical(&serial, &traced);
+        assert!(traced.obs.enabled);
+        // threaded workers record through GroupComm, so rendezvous
+        // phases must appear alongside the trainer phases
+        for phase in ["trainer.compute", "trainer.sync", "rendezvous.wait"] {
+            assert!(
+                traced.obs.phases.contains_key(phase),
+                "missing phase {phase} at wire {wire:?}: have {:?}",
+                traced.obs.phases.keys().collect::<Vec<_>>()
+            );
+        }
+        // every node shows up as a lane owner in the event stream
+        let nodes: std::collections::BTreeSet<i64> =
+            traced.obs.lanes.iter().map(|l| l.node).collect();
+        assert!(nodes.contains(&0) && nodes.contains(&1), "lanes: {:?}", traced.obs.lanes);
+        daso::obs::reset_for_tests();
+    }
+}
+
+#[test]
+fn virtual_wait_phase_singles_out_the_straggler() {
+    let _g = obs_guard();
+    let mut c = cfg(3, 2, 3);
+    c.trace = true;
+    c.straggler_node = 1;
+    c.straggler_factor = 4.0;
+    let report = run_serial(&c, 23);
+    let waits = &report.obs.phases["epoch.wait.virtual"];
+    assert_eq!(waits.len(), 3, "one wait histogram per node");
+    // every step the blocking sync idles each worker until the slowest
+    // node's batch lands, so the straggler itself waits zero — the
+    // near-zero minimum — while the other nodes each wait
+    // (factor - 1) x compute per step
+    let mean = |n: i64| waits[&n].mean_ns();
+    assert!(
+        mean(1) < 0.5 * mean(0).min(mean(2)),
+        "straggler wait {} vs others {} / {}",
+        mean(1),
+        mean(0),
+        mean(2)
+    );
+    // and its virtual compute is the maximum
+    let computes = &report.obs.phases["epoch.compute.virtual"];
+    let cmean = |n: i64| computes[&n].mean_ns();
+    assert!(cmean(1) > 3.0 * cmean(0), "straggler compute not the outlier");
+}
+
+#[test]
+fn trace_json_has_per_node_lanes() {
+    let _g = obs_guard();
+    let mut c = cfg(2, 2, 2);
+    c.trace = true;
+    let traced = with_timeout(120, move || run_threaded(&c, 29));
+    let v = daso::obs::trace::chrome_trace(
+        &traced.obs,
+        daso::util::json::obj(vec![("world", daso::util::json::num(4.0))]),
+    );
+    let evs = v.req_arr("traceEvents").unwrap();
+    let pids: std::collections::BTreeSet<i64> = evs
+        .iter()
+        .filter(|e| e.req_str("ph").unwrap() == "X")
+        .map(|e| e.req_f64("pid").unwrap() as i64)
+        .collect();
+    assert!(pids.contains(&0) && pids.contains(&1), "X-event pids: {pids:?}");
+    assert!(
+        evs.iter().any(|e| e.req_str("ph").unwrap() == "M"),
+        "metadata events missing"
+    );
+}
