@@ -1,0 +1,734 @@
+//! The repo-invariant checks.
+//!
+//! Each check is named, reports `file:line`, and is proven live by the
+//! doctored-tree self-test (`doctor::run` seeds one violation per check
+//! and asserts it fires). Checks operate on the lexical views produced
+//! by `scan` — see that module for what "code" vs "comments" means.
+
+use crate::scan::{has_word, is_ident, line_of, Scanned};
+use crate::Finding;
+use std::collections::BTreeSet;
+
+pub const CHECK_SAFETY: &str = "safety-comments";
+pub const CHECK_ORDERING: &str = "atomic-ordering";
+pub const CHECK_ERRORS: &str = "named-errors";
+pub const CHECK_FORWARDING: &str = "config-forwarding";
+
+/// In-source annotation that justifies an `Ordering::Relaxed` outside
+/// the ring protocol words: `// audit: allow(atomic-ordering): why`.
+pub const ORDERING_ALLOW: &str = "audit: allow(atomic-ordering)";
+/// In-source annotation for a deliberate bare error wrap.
+pub const ERRORS_ALLOW: &str = "audit: allow(named-errors)";
+
+pub const CONFIG_FILE: &str = "src/config/mod.rs";
+pub const LAUNCH_FILE: &str = "src/cluster/launch.rs";
+
+/// Ring protocol words in `shm.rs`: the SPSC publish/drain/close
+/// handshake is correct only under release/acquire, so `Relaxed` on
+/// any of these is a finding with **no** annotation escape.
+const RING_WORDS: [&str; 4] = ["HDR_HEAD", "HDR_TAIL", "HDR_PROD_CLOSED", "HDR_CONS_CLOSED"];
+
+/// Config keys that legitimately do NOT appear in the launcher's
+/// forced child `--set` list (`cluster::launch::forced_child_sets`),
+/// with the reason. Everything else registered in `set_value` must be
+/// forced, so a child can never resolve a key differently from the
+/// coordinator. Keyed by the arm's canonical (first) alias.
+pub const LOCAL_ONLY_KEYS: &[(&str, &str)] = &[
+    ("model", "forwarded verbatim via the dedicated --model child flag"),
+    ("strategy", "forwarded verbatim via the dedicated --strategy child flag"),
+    ("artifacts_dir", "forwarded verbatim via the dedicated --artifacts child flag"),
+    ("out_dir", "coordinator-only: children never write run reports"),
+    (
+        "trace_out",
+        "coordinator-only trace destination; recording itself rides the forced trace= entry",
+    ),
+    ("train.epochs", "launcher never resolves it; --set/--config passthrough delivers it unchanged"),
+    (
+        "train.train_samples",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "train.val_samples",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    ("train.seed", "launcher never resolves it; --set/--config passthrough delivers it unchanged"),
+    (
+        "train.base_lr",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "train.lr_scale",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "train.lr_warmup_epochs",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "train.lr_decay",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "train.lr_patience",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "train.compute_time_s",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "train.eval_every",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "train.verbose",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "train.comm_timeout_ms",
+        "passthrough + DASO_COMM_TIMEOUT_MS env, both inherited identically by children",
+    ),
+    (
+        "daso.b_initial",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "daso.warmup_epochs",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "daso.cooldown_epochs",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "daso.plateau_patience",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "daso.kernel_local_avg",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "daso.staleness_blend",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "daso.absorb_stragglers",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "daso.absorb_threshold",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "daso.absorb_patience",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "fabric.intra_latency_s",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "fabric.intra_bandwidth",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "fabric.inter_latency_s",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+    (
+        "fabric.inter_bandwidth",
+        "launcher never resolves it; --set/--config passthrough delivers it unchanged",
+    ),
+];
+
+// ---------------------------------------------------------------------------
+// safety-comments
+// ---------------------------------------------------------------------------
+
+/// Every line with an `unsafe` token must have a `SAFETY:` comment on
+/// the same line or in the comment block directly above (blank and
+/// attribute lines are skipped).
+pub fn check_safety(rel: &str, sc: &Scanned, out: &mut Vec<Finding>) {
+    let code = sc.code_lines();
+    let comments = sc.comment_lines();
+    for (idx, line) in code.iter().enumerate() {
+        if !has_word(line, "unsafe") {
+            continue;
+        }
+        if comment_above_contains(idx, &code, &comments, "SAFETY:") {
+            continue;
+        }
+        out.push(Finding::new(
+            CHECK_SAFETY,
+            rel,
+            idx + 1,
+            "`unsafe` without a `// SAFETY:` comment on the same or preceding lines".to_string(),
+        ));
+    }
+}
+
+/// Does the comment on line `idx`, or in the contiguous comment block
+/// directly above it (skipping blanks and attributes), contain `needle`?
+fn comment_above_contains(idx: usize, code: &[&str], comments: &[&str], needle: &str) -> bool {
+    if comments[idx].contains(needle) {
+        return true;
+    }
+    let stop = idx.saturating_sub(12);
+    let mut j = idx;
+    while j > stop {
+        j -= 1;
+        if comments[j].contains(needle) {
+            return true;
+        }
+        let c = code[j].trim();
+        if !c.is_empty() && !c.starts_with("#[") && !c.starts_with("#!") {
+            return false;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// atomic-ordering
+// ---------------------------------------------------------------------------
+
+/// `Ordering::Relaxed` is a finding unless annotated with
+/// [`ORDERING_ALLOW`]; on the shm ring protocol words there is no
+/// annotation escape at all.
+pub fn check_ordering(rel: &str, sc: &Scanned, out: &mut Vec<Finding>) {
+    let is_ring = rel.ends_with("comm/transport/shm.rs");
+    let code = sc.code_lines();
+    let comments = sc.comment_lines();
+    for (idx, line) in code.iter().enumerate() {
+        if !line.contains("Ordering::Relaxed") {
+            continue;
+        }
+        if is_ring && RING_WORDS.iter().any(|w| line.contains(w)) {
+            out.push(Finding::new(
+                CHECK_ORDERING,
+                rel,
+                idx + 1,
+                "ring head/tail/closed atomic uses Ordering::Relaxed; the SPSC publish \
+                 protocol requires release/acquire and this rule has no allow-annotation"
+                    .to_string(),
+            ));
+            continue;
+        }
+        if comment_above_contains(idx, &code, &comments, ORDERING_ALLOW) {
+            continue;
+        }
+        out.push(Finding::new(
+            CHECK_ORDERING,
+            rel,
+            idx + 1,
+            format!("Ordering::Relaxed without a `// {ORDERING_ALLOW}: <reason>` annotation"),
+        ));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// named-errors
+// ---------------------------------------------------------------------------
+
+fn error_scope(rel: &str) -> bool {
+    rel.contains("comm/transport/")
+        || rel.ends_with("cluster/checkpoint.rs")
+        || rel.ends_with("cluster/launch.rs")
+}
+
+/// `anyhow!` / `bail!` in the transport, checkpoint, and launch paths
+/// must carry a named message: a string literal with at least three
+/// letters outside `{}` placeholders, or a bare value wrap immediately
+/// given `.context(...)`.
+pub fn check_errors(rel: &str, sc: &Scanned, out: &mut Vec<Finding>) {
+    if !error_scope(rel) {
+        return;
+    }
+    let code_lines = sc.code_lines();
+    let comment_lines = sc.comment_lines();
+    for mac in ["anyhow!(", "bail!("] {
+        let positions: Vec<usize> = sc.code.match_indices(mac).map(|(p, _)| p).collect();
+        for pos in positions {
+            if pos > 0 && is_ident(sc.code.as_bytes()[pos - 1]) {
+                continue;
+            }
+            let open = pos + mac.len() - 1;
+            inspect_error_call(rel, sc, &code_lines, &comment_lines, pos, open, out);
+        }
+    }
+}
+
+fn inspect_error_call(
+    rel: &str,
+    sc: &Scanned,
+    code_lines: &[&str],
+    comment_lines: &[&str],
+    pos: usize,
+    open: usize,
+    out: &mut Vec<Finding>,
+) {
+    let bytes = sc.code.as_bytes();
+    let line = line_of(&sc.code, pos);
+    let mut k = open + 1;
+    while k < bytes.len() && bytes[k].is_ascii_whitespace() {
+        k += 1;
+    }
+    if k < bytes.len() && bytes[k] == b'"' {
+        // Literal message: read its text from the strings view (the
+        // code view blanks literal contents but keeps the quotes).
+        let mut close = k + 1;
+        while close < bytes.len() && bytes[close] != b'"' {
+            close += 1;
+        }
+        if close >= bytes.len() {
+            return;
+        }
+        let msg = &sc.code_with_strings[k + 1..close];
+        if !named_message(msg) {
+            out.push(Finding::new(
+                CHECK_ERRORS,
+                rel,
+                line,
+                format!(
+                    "bare error message {:?}: needs at least 3 letters outside {{}} placeholders \
+                     so failures in the transport/checkpoint paths stay greppable",
+                    msg
+                ),
+            ));
+        }
+        return;
+    }
+    // Non-literal first argument, e.g. `anyhow!(err)`: fine only when
+    // immediately contextualized or explicitly annotated.
+    let Some(close) = match_paren(bytes, open) else {
+        return;
+    };
+    let mut t = close + 1;
+    while t < bytes.len() && bytes[t].is_ascii_whitespace() {
+        t += 1;
+    }
+    let rest = &sc.code[t.min(sc.code.len())..];
+    if rest.starts_with(".context(") || rest.starts_with(".with_context(") {
+        return;
+    }
+    if comment_above_contains(line - 1, code_lines, comment_lines, ERRORS_ALLOW) {
+        return;
+    }
+    out.push(Finding::new(
+        CHECK_ERRORS,
+        rel,
+        line,
+        "error constructor wraps a value without naming the failed operation; add a message \
+         or chain `.context(...)`"
+            .to_string(),
+    ));
+}
+
+/// Strip `{}`/`{name:spec}` placeholders (and `{{` escapes) and require
+/// at least three letters of actual message text.
+fn named_message(msg: &str) -> bool {
+    let mut letters = 0usize;
+    let mut chars = msg.chars().peekable();
+    while let Some(c) = chars.next() {
+        if c == '{' {
+            if chars.peek() == Some(&'{') {
+                chars.next();
+                continue;
+            }
+            for d in chars.by_ref() {
+                if d == '}' {
+                    break;
+                }
+            }
+            continue;
+        }
+        if c.is_ascii_alphabetic() {
+            letters += 1;
+        }
+    }
+    letters >= 3
+}
+
+/// Offset of the `)` matching the `(` at `open` (string/comment
+/// contents are already blanked in the code view, so counting is safe).
+fn match_paren(code: &[u8], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, &c) in code.iter().enumerate().skip(open) {
+        if c == b'(' {
+            depth += 1;
+        } else if c == b')' {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// config-forwarding
+// ---------------------------------------------------------------------------
+
+/// One `set_value` match arm: all its string-literal aliases, with the
+/// first alias as the canonical name.
+#[derive(Debug, Clone)]
+pub struct KeyGroup {
+    pub canonical: String,
+    pub aliases: Vec<String>,
+    pub line: usize,
+}
+
+/// Parse the key registry out of `config/mod.rs`: the string-literal
+/// patterns of `set_value`'s `match key` arms.
+pub fn config_key_groups(sc: &Scanned) -> Vec<KeyGroup> {
+    let code = sc.code_lines();
+    let strings = sc.string_lines();
+    let mut start = None;
+    let mut saw_fn = false;
+    for (idx, line) in code.iter().enumerate() {
+        if line.contains("fn set_value") {
+            saw_fn = true;
+        }
+        if saw_fn && line.contains("match key") {
+            start = Some(idx);
+            break;
+        }
+    }
+    let Some(start) = start else {
+        return Vec::new();
+    };
+    let mut groups = Vec::new();
+    let mut depth: i64 = 0;
+    for idx in start..code.len() {
+        let line = code[idx];
+        if depth > 0 && line.trim_start().starts_with('"') {
+            if let Some(arrow) = line.find("=>") {
+                let lits =
+                    quoted_strings(&line.as_bytes()[..arrow], &strings[idx].as_bytes()[..arrow]);
+                if !lits.is_empty() {
+                    groups.push(KeyGroup {
+                        canonical: lits[0].clone(),
+                        aliases: lits,
+                        line: idx + 1,
+                    });
+                }
+            }
+        }
+        depth += brace_delta(line);
+        if idx > start && depth <= 0 {
+            break;
+        }
+    }
+    groups
+}
+
+/// Keys the launcher force-appends to every child's argv: string
+/// literals of the form `"key=..."` inside
+/// `cluster::launch::forced_child_sets`.
+pub fn forced_child_keys(sc: &Scanned) -> Vec<(String, usize)> {
+    let code = sc.code_lines();
+    let strings = sc.string_lines();
+    let mut out = Vec::new();
+    let mut idx = 0usize;
+    while idx < code.len() && !code[idx].contains("fn forced_child_sets") {
+        idx += 1;
+    }
+    if idx >= code.len() {
+        return out;
+    }
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    for j in idx..code.len() {
+        let line = code[j];
+        if opened && depth > 0 {
+            for lit in quoted_strings(line.as_bytes(), strings[j].as_bytes()) {
+                if let Some(eq) = lit.find('=') {
+                    let key = &lit[..eq];
+                    let is_key = !key.is_empty()
+                        && key.bytes().all(|c| c.is_ascii_lowercase() || c == b'_' || c == b'.');
+                    if is_key {
+                        out.push((key.to_string(), j + 1));
+                    }
+                }
+            }
+        }
+        depth += brace_delta(line);
+        if depth > 0 {
+            opened = true;
+        }
+        if opened && depth <= 0 {
+            break;
+        }
+    }
+    out
+}
+
+/// Every registered config key must be forced to children or
+/// explicitly allowlisted as local-only; every forced key must be a
+/// registered key.
+pub fn check_forwarding(config_sc: &Scanned, launch_sc: &Scanned, out: &mut Vec<Finding>) {
+    let groups = config_key_groups(config_sc);
+    let forced = forced_child_keys(launch_sc);
+    if groups.is_empty() {
+        out.push(Finding::new(
+            CHECK_FORWARDING,
+            CONFIG_FILE,
+            1,
+            "could not locate the set_value key registry (fn set_value / match key)".to_string(),
+        ));
+        return;
+    }
+    if forced.is_empty() {
+        out.push(Finding::new(
+            CHECK_FORWARDING,
+            LAUNCH_FILE,
+            1,
+            "could not locate the forced child --set list (fn forced_child_sets)".to_string(),
+        ));
+        return;
+    }
+    let forced_names: BTreeSet<&str> = forced.iter().map(|(k, _)| k.as_str()).collect();
+    for g in &groups {
+        let is_forced = g.aliases.iter().any(|a| forced_names.contains(a.as_str()));
+        let allowed = LOCAL_ONLY_KEYS
+            .iter()
+            .any(|(k, _)| g.aliases.iter().any(|a| a == k));
+        if !is_forced && !allowed {
+            out.push(Finding::new(
+                CHECK_FORWARDING,
+                CONFIG_FILE,
+                g.line,
+                format!(
+                    "config key `{}` is neither in the launcher's forced child --set list \
+                     (cluster/launch.rs fn forced_child_sets) nor in the audit's local-only \
+                     allowlist (audit/src/checks.rs LOCAL_ONLY_KEYS)",
+                    g.canonical
+                ),
+            ));
+        }
+    }
+    let alias_set: BTreeSet<&str> = groups
+        .iter()
+        .flat_map(|g| g.aliases.iter().map(|a| a.as_str()))
+        .collect();
+    for (k, line) in &forced {
+        if !alias_set.contains(k.as_str()) {
+            out.push(Finding::new(
+                CHECK_FORWARDING,
+                LAUNCH_FILE,
+                *line,
+                format!("forced child --set key `{k}` is not registered in config set_value"),
+            ));
+        }
+    }
+}
+
+fn quoted_strings(code_part: &[u8], str_part: &[u8]) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < code_part.len() {
+        if code_part[i] == b'"' {
+            let mut j = i + 1;
+            while j < code_part.len() && code_part[j] != b'"' {
+                j += 1;
+            }
+            if j < code_part.len() {
+                out.push(String::from_utf8_lossy(&str_part[i + 1..j]).into_owned());
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn brace_delta(code_line: &str) -> i64 {
+    let mut d = 0i64;
+    for c in code_line.bytes() {
+        if c == b'{' {
+            d += 1;
+        } else if c == b'}' {
+            d -= 1;
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::scan;
+
+    #[test]
+    fn safety_comment_is_required_and_detected() {
+        let src = "\
+fn a(p: *const u8) -> u8 {\n\
+    // SAFETY: pointer is valid for one byte.\n\
+    unsafe { *p }\n\
+}\n\
+fn b(p: *const u8) -> u8 {\n\
+    unsafe { *p }\n\
+}\n";
+        let sc = scan(src);
+        let mut out = Vec::new();
+        check_safety("src/x.rs", &sc, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 6);
+        assert_eq!(out[0].check, CHECK_SAFETY);
+    }
+
+    #[test]
+    fn safety_comment_skips_attributes_and_blanks() {
+        let src = "\
+// SAFETY: fine.\n\
+#[allow(dead_code)]\n\
+\n\
+unsafe fn f() {}\n";
+        let sc = scan(src);
+        let mut out = Vec::new();
+        check_safety("src/x.rs", &sc, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn unsafe_in_strings_and_comments_is_ignored() {
+        let src = "let s = \"unsafe\"; // unsafe in a comment is fine\n";
+        let sc = scan(src);
+        let mut out = Vec::new();
+        check_safety("src/x.rs", &sc, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn relaxed_needs_annotation_outside_ring() {
+        let src = "\
+// audit: allow(atomic-ordering): monotone counter, no ordering needed.\n\
+let a = X.load(Ordering::Relaxed);\n\
+let b = Y.load(Ordering::Relaxed);\n";
+        let sc = scan(src);
+        let mut out = Vec::new();
+        check_ordering("src/obs/mod.rs", &sc, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 3);
+    }
+
+    #[test]
+    fn ring_words_have_no_annotation_escape() {
+        let src = "\
+// audit: allow(atomic-ordering): nice try.\n\
+let h = seg.atomic(HDR_HEAD).load(Ordering::Relaxed);\n";
+        let sc = scan(src);
+        let mut out = Vec::new();
+        check_ordering("src/comm/transport/shm.rs", &sc, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+    }
+
+    #[test]
+    fn bare_error_messages_are_flagged() {
+        let src = "\
+fn f() -> anyhow::Result<()> {\n\
+    bail!(\"{}\", 1);\n\
+}\n";
+        let sc = scan(src);
+        let mut out = Vec::new();
+        check_errors("src/comm/transport/tcp.rs", &sc, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 2);
+    }
+
+    #[test]
+    fn named_messages_and_context_wraps_pass() {
+        let src = "\
+fn f() -> anyhow::Result<()> {\n\
+    bail!(\"connecting to {addr} refused\");\n\
+}\n\
+fn g(e: std::io::Error) -> anyhow::Error {\n\
+    anyhow!(e).context(\"accepting peer connection\")\n\
+}\n";
+        let sc = scan(src);
+        let mut out = Vec::new();
+        check_errors("src/comm/transport/tcp.rs", &sc, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn bare_wrap_without_context_is_flagged() {
+        let src = "\
+fn g(e: std::io::Error) -> anyhow::Error {\n\
+    anyhow!(e)\n\
+}\n";
+        let sc = scan(src);
+        let mut out = Vec::new();
+        check_errors("src/comm/transport/tcp.rs", &sc, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+    }
+
+    #[test]
+    fn out_of_scope_files_are_not_error_checked() {
+        let src = "fn f() { bail!(\"{}\", 1); }\n";
+        let sc = scan(src);
+        let mut out = Vec::new();
+        check_errors("src/trainer/mod.rs", &sc, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn placeholder_stripping() {
+        assert!(!named_message("{}"));
+        assert!(!named_message("{e:?}"));
+        assert!(!named_message("x{a}y"));
+        assert!(named_message("bad frame {tag}"));
+        assert!(named_message("{{literal braces}} ok"));
+    }
+
+    const CONFIG_SNIPPET: &str = "\
+impl RunSpec {\n\
+    fn set_value(&mut self, key: &str, raw: &str) -> Result<()> {\n\
+        match key {\n\
+            \"model\" => self.model = raw.into(),\n\
+            \"train.nodes\" | \"nodes\" => {\n\
+                self.train.nodes = raw.parse()?;\n\
+            }\n\
+            \"train.secret\" => self.train.secret = raw.into(),\n\
+            other => bail!(\"unknown config key {other:?}\"),\n\
+        }\n\
+        Ok(())\n\
+    }\n\
+}\n";
+
+    const LAUNCH_SNIPPET: &str = "\
+pub fn forced_child_sets(nodes: usize) -> Vec<String> {\n\
+    let mut v = vec![\"executor=multiprocess\".to_string()];\n\
+    v.push(format!(\"nodes={nodes}\"));\n\
+    v\n\
+}\n";
+
+    #[test]
+    fn key_groups_and_forced_keys_parse() {
+        let groups = config_key_groups(&scan(CONFIG_SNIPPET));
+        let names: Vec<&str> = groups.iter().map(|g| g.canonical.as_str()).collect();
+        assert_eq!(names, ["model", "train.nodes", "train.secret"]);
+        assert_eq!(groups[1].aliases, ["train.nodes", "nodes"]);
+        let forced = forced_child_keys(&scan(LAUNCH_SNIPPET));
+        let keys: Vec<&str> = forced.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["executor", "nodes"]);
+    }
+
+    #[test]
+    fn unforwarded_key_is_flagged() {
+        let mut out = Vec::new();
+        check_forwarding(&scan(CONFIG_SNIPPET), &scan(LAUNCH_SNIPPET), &mut out);
+        // `train.secret` is neither forced nor allowlisted; `model` is
+        // allowlisted, `nodes` is forced, `executor` is registered in
+        // the real tree but not in this snippet.
+        let secret: Vec<&Finding> = out
+            .iter()
+            .filter(|f| f.message.contains("train.secret"))
+            .collect();
+        assert_eq!(secret.len(), 1, "{out:?}");
+        assert_eq!(secret[0].file, CONFIG_FILE);
+    }
+}

@@ -1,0 +1,218 @@
+//! Doctored-tree self-test (`daso audit --doctor`).
+//!
+//! A static analyzer that silently stops matching is worse than none,
+//! so — mirroring the `bench-doctor` pattern used by the perf gate —
+//! this module copies the audited tree into a scratch directory, seeds
+//! exactly one violation per check, re-runs the full audit, and
+//! asserts every check fires and names the seeded `file:line`. CI runs
+//! this as a negative test next to the green `daso audit` run.
+
+use crate::{checks, protocol, run_all};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+const SHM_FILE: &str = "src/comm/transport/shm.rs";
+const TCP_FILE: &str = "src/comm/transport/tcp.rs";
+
+struct Seed {
+    check: &'static str,
+    /// File the seeded violation must be reported in.
+    expect_file: &'static str,
+    /// File the seed text is planted in.
+    plant_file: &'static str,
+    /// `None`: append `text` to the file. `Some(anchor)`: insert
+    /// `text` right after the first occurrence of `anchor`.
+    anchor: Option<&'static str>,
+    text: &'static str,
+}
+
+/// One seeded violation per check. All seeds are lexical — the
+/// doctored tree is audited, never compiled.
+const SEEDS: [Seed; 5] = [
+    Seed {
+        check: checks::CHECK_SAFETY,
+        expect_file: SHM_FILE,
+        plant_file: SHM_FILE,
+        anchor: None,
+        text: "\nfn audit_doctor_undocumented(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n",
+    },
+    Seed {
+        check: checks::CHECK_ORDERING,
+        expect_file: SHM_FILE,
+        plant_file: SHM_FILE,
+        anchor: None,
+        text: "\nfn audit_doctor_relaxed(seg: &Segment) -> u64 {\n    \
+               seg.atomic(HDR_HEAD).load(Ordering::Relaxed)\n}\n",
+    },
+    Seed {
+        check: checks::CHECK_FORWARDING,
+        expect_file: checks::CONFIG_FILE,
+        plant_file: checks::CONFIG_FILE,
+        anchor: Some("match key {"),
+        text: "\n            \"doctor.unforwarded\" => self.model = as_str()?.to_string(),",
+    },
+    Seed {
+        check: protocol::CHECK_PROTOCOL,
+        expect_file: protocol::WIRE_FILE,
+        plant_file: protocol::WIRE_FILE,
+        anchor: None,
+        text: "\nconst TAG_AUDIT_DOCTOR: u8 = 251;\n",
+    },
+    Seed {
+        check: checks::CHECK_ERRORS,
+        expect_file: TCP_FILE,
+        plant_file: TCP_FILE,
+        anchor: None,
+        text: "\nfn audit_doctor_bare_error() -> anyhow::Error {\n    \
+               anyhow::anyhow!(\"{}\", 0)\n}\n",
+    },
+];
+
+fn copy_rs_tree(from: &Path, to: &Path) -> Result<(), String> {
+    fs::create_dir_all(to).map_err(|e| format!("creating {}: {e}", to.display()))?;
+    let entries = fs::read_dir(from).map_err(|e| format!("reading {}: {e}", from.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("reading {}: {e}", from.display()))?;
+        let path = entry.path();
+        let dest = to.join(entry.file_name());
+        if path.is_dir() {
+            copy_rs_tree(&path, &dest)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            fs::copy(&path, &dest).map_err(|e| format!("copying {}: {e}", path.display()))?;
+        }
+    }
+    Ok(())
+}
+
+fn plant(root: &Path, seed: &Seed) -> Result<(), String> {
+    let path = root.join(seed.plant_file);
+    let mut text = match fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => return Err(format!("reading {}: {e}", path.display())),
+    };
+    match seed.anchor {
+        None => text.push_str(seed.text),
+        Some(anchor) => {
+            let Some(at) = text.find(anchor) else {
+                return Err(format!(
+                    "doctor anchor {anchor:?} not found in {}; the seed for check `{}` needs \
+                     updating",
+                    path.display(),
+                    seed.check
+                ));
+            };
+            text.insert_str(at + anchor.len(), seed.text);
+        }
+    }
+    fs::write(&path, text).map_err(|e| format!("writing {}: {e}", path.display()))
+}
+
+/// Copy the tree at `root`, seed one violation per check, re-run the
+/// audit, and require every check to fire at the seeded file. Returns
+/// a per-check report line on success.
+pub fn run(root: &Path) -> Result<Vec<String>, String> {
+    let name = format!("daso-audit-doctor-{}", std::process::id());
+    let scratch: PathBuf = std::env::temp_dir().join(name);
+    if scratch.exists() {
+        fs::remove_dir_all(&scratch).ok();
+    }
+    let result = run_in(root, &scratch);
+    fs::remove_dir_all(&scratch).ok();
+    result
+}
+
+fn run_in(root: &Path, scratch: &Path) -> Result<Vec<String>, String> {
+    copy_rs_tree(&root.join("src"), &scratch.join("src"))?;
+    let lock = root.join(protocol::LOCK_FILE);
+    if lock.is_file() {
+        let dest = scratch.join(protocol::LOCK_FILE);
+        if let Some(dir) = dest.parent() {
+            fs::create_dir_all(dir).map_err(|e| format!("creating {}: {e}", dir.display()))?;
+        }
+        fs::copy(&lock, &dest).map_err(|e| format!("copying {}: {e}", lock.display()))?;
+    }
+    for seed in &SEEDS {
+        plant(scratch, seed)?;
+    }
+    let findings = run_all(scratch)?;
+    let mut report = Vec::new();
+    let mut missing = Vec::new();
+    for seed in &SEEDS {
+        let hit = findings
+            .iter()
+            .find(|f| f.check == seed.check && f.file.ends_with(seed.expect_file) && f.line > 0);
+        match hit {
+            Some(f) => report.push(format!(
+                "check `{}` fired at {}:{} on the seeded violation",
+                seed.check, f.file, f.line
+            )),
+            None => missing.push(seed.check),
+        }
+    }
+    if missing.is_empty() {
+        Ok(report)
+    } else {
+        Err(format!(
+            "audit doctor: check(s) did not fire on seeded violations: {}",
+            missing.join(", ")
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a miniature source tree that satisfies every check, then
+    /// prove the doctor can seed and catch all five violations in it.
+    #[test]
+    fn doctor_fires_every_check_on_a_synthetic_tree() {
+        let name = format!("daso-audit-doctor-test-{}", std::process::id());
+        let base = std::env::temp_dir().join(name);
+        fs::remove_dir_all(&base).ok();
+        let root = base.join("tree");
+        fs::create_dir_all(root.join("src/comm/transport")).unwrap();
+        fs::create_dir_all(root.join("src/config")).unwrap();
+        fs::create_dir_all(root.join("src/cluster")).unwrap();
+        fs::write(
+            root.join("src/comm/transport/shm.rs"),
+            "pub struct Segment;\nconst HDR_HEAD: usize = 64;\n",
+        )
+        .unwrap();
+        fs::write(root.join("src/comm/transport/tcp.rs"), "fn ok() {}\n").unwrap();
+        fs::write(
+            root.join("src/comm/transport/wire.rs"),
+            "pub const PROTOCOL_VERSION: u32 = 5;\n\
+             const TAG_HELLO: u8 = 1;\n\
+             pub enum Frame {\n    Hello { version: u32 },\n}\n",
+        )
+        .unwrap();
+        fs::write(
+            root.join("src/config/mod.rs"),
+            "impl Spec {\n    fn set_value(&mut self, key: &str) {\n        match key {\n\
+                         \"model\" => self.model = as_str()?.to_string(),\n\
+                         \"nodes\" => self.nodes = 1,\n\
+                     }\n    }\n}\n",
+        )
+        .unwrap();
+        fs::write(
+            root.join("src/cluster/launch.rs"),
+            "pub fn forced_child_sets() -> Vec<String> {\n\
+                 vec![\"nodes=1\".to_string()]\n}\n",
+        )
+        .unwrap();
+        // Lock the synthetic wire surface so protocol-lock is green
+        // before doctoring.
+        let wire = fs::read_to_string(root.join("src/comm/transport/wire.rs")).unwrap();
+        let surface = protocol::extract_surface(&crate::scan::scan(&wire)).unwrap();
+        protocol::write_lock(&root, &surface).unwrap();
+
+        let clean = run_all(&root).unwrap();
+        assert!(clean.is_empty(), "synthetic tree not clean: {clean:?}");
+
+        let scratch = base.join("scratch");
+        let report = run_in(&root, &scratch).unwrap();
+        assert_eq!(report.len(), SEEDS.len(), "{report:?}");
+        fs::remove_dir_all(&base).ok();
+    }
+}

@@ -1,0 +1,230 @@
+//! `daso-audit`: repo-invariant static analyzer behind `daso audit`.
+//!
+//! The conventions that keep the daso stack coherent — `// SAFETY:`
+//! comments on every `unsafe`, release/acquire on the shm ring
+//! protocol, launcher forwarding of every config key, protocol-version
+//! bumps on wire-surface changes, named errors in the transport and
+//! checkpoint paths — used to live in CHANGES.md prose and reviewer
+//! memory. This crate turns them into named, `file:line`-reporting
+//! checks:
+//!
+//! | check             | invariant                                           |
+//! |-------------------|-----------------------------------------------------|
+//! | safety-comments   | every `unsafe` carries a `// SAFETY:` comment       |
+//! | atomic-ordering   | no `Ordering::Relaxed` on ring head/tail/closed;    |
+//! |                   | elsewhere only with an `audit: allow` justification |
+//! | config-forwarding | every `set_value` key is launcher-forced or         |
+//! |                   | explicitly local-only                               |
+//! | protocol-lock     | TAG_*/PAYLOAD_*/`enum Frame` changes require a      |
+//! |                   | PROTOCOL_VERSION bump (fingerprint lock)            |
+//! | named-errors      | transport/checkpoint `anyhow!`/`bail!` name the     |
+//! |                   | failed operation                                    |
+//!
+//! `doctor::run` is the self-test: it copies the tree, seeds one
+//! violation per check, and asserts each check fires.
+
+pub mod checks;
+pub mod doctor;
+pub mod protocol;
+pub mod scan;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One audit finding, anchored to a repo-relative `file:line`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub check: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(check: &'static str, file: &str, line: usize, message: String) -> Self {
+        Finding { check, file: file.to_string(), line, message }
+    }
+}
+
+/// Names of every check, in report order.
+pub const ALL_CHECKS: [&str; 5] = [
+    checks::CHECK_SAFETY,
+    checks::CHECK_ORDERING,
+    checks::CHECK_FORWARDING,
+    protocol::CHECK_PROTOCOL,
+    checks::CHECK_ERRORS,
+];
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = fs::read_dir(dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("reading {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+/// Run every check over the source tree rooted at `root` (the `rust/`
+/// directory: expects `root/src`, and audits `root/audit/src` too when
+/// present). Returns findings sorted by file, line, check.
+pub fn run_all(root: &Path) -> Result<Vec<Finding>, String> {
+    let src = root.join("src");
+    if !src.is_dir() {
+        return Err(format!(
+            "{} does not look like the daso source tree (no src/ directory); \
+             pass --root or run from the rust/ directory",
+            root.display()
+        ));
+    }
+    let mut files = Vec::new();
+    walk_rs(&src, &mut files)?;
+    let audit_src = root.join("audit").join("src");
+    if audit_src.is_dir() {
+        walk_rs(&audit_src, &mut files)?;
+    }
+    files.sort();
+
+    let mut findings = Vec::new();
+    let mut config_sc = None;
+    let mut launch_sc = None;
+    let mut wire_sc = None;
+    for path in &files {
+        let rel = rel_path(root, path);
+        let text = match fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => return Err(format!("reading {}: {e}", path.display())),
+        };
+        let sc = scan::scan(&text);
+        checks::check_safety(&rel, &sc, &mut findings);
+        checks::check_ordering(&rel, &sc, &mut findings);
+        checks::check_errors(&rel, &sc, &mut findings);
+        if rel.ends_with(checks::CONFIG_FILE) {
+            config_sc = Some(sc);
+        } else if rel.ends_with(checks::LAUNCH_FILE) {
+            launch_sc = Some(sc);
+        } else if rel.ends_with(protocol::WIRE_FILE) {
+            wire_sc = Some(sc);
+        }
+    }
+    match (&config_sc, &launch_sc) {
+        (Some(c), Some(l)) => checks::check_forwarding(c, l, &mut findings),
+        _ => findings.push(Finding::new(
+            checks::CHECK_FORWARDING,
+            checks::CONFIG_FILE,
+            1,
+            "config/mod.rs or cluster/launch.rs missing from the tree".to_string(),
+        )),
+    }
+    match &wire_sc {
+        Some(w) => protocol::check_protocol(root, w, &mut findings),
+        None => findings.push(Finding::new(
+            protocol::CHECK_PROTOCOL,
+            protocol::WIRE_FILE,
+            1,
+            "comm/transport/wire.rs missing from the tree".to_string(),
+        )),
+    }
+    findings.sort_by(|a, b| {
+        let ka = (a.file.as_str(), a.line, a.check);
+        let kb = (b.file.as_str(), b.line, b.check);
+        ka.cmp(&kb)
+    });
+    Ok(findings)
+}
+
+/// Human-readable report.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut s = String::new();
+    for f in findings {
+        s.push_str(&format!("{}:{} [{}] {}\n", f.file, f.line, f.check, f.message));
+    }
+    if findings.is_empty() {
+        s.push_str(&format!("daso audit: clean ({} checks)\n", ALL_CHECKS.len()));
+    } else {
+        s.push_str(&format!("daso audit: {} finding(s)\n", findings.len()));
+    }
+    s
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Machine-readable report (`daso audit --json`), used as a CI
+/// artifact on failure.
+pub fn render_json(findings: &[Finding]) -> String {
+    let mut s = String::from("{\"schema\":\"daso-audit/1\",\"count\":");
+    s.push_str(&findings.len().to_string());
+    s.push_str(",\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"check\":\"{}\",\"file\":\"{}\",\"line\":{},\"message\":\"{}\"}}",
+            json_escape(f.check),
+            json_escape(&f.file),
+            f.line,
+            json_escape(&f.message)
+        ));
+    }
+    s.push_str("]}");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_report_escapes_and_counts() {
+        let findings = vec![Finding::new("named-errors", "src/a.rs", 3, "bad \"msg\"".into())];
+        let j = render_json(&findings);
+        assert!(j.contains("\"count\":1"), "{j}");
+        assert!(j.contains("bad \\\"msg\\\""), "{j}");
+        assert!(j.starts_with("{\"schema\":\"daso-audit/1\""), "{j}");
+        let empty = render_json(&[]);
+        assert!(empty.contains("\"count\":0"), "{empty}");
+        assert!(empty.ends_with("\"findings\":[]}"), "{empty}");
+    }
+
+    #[test]
+    fn text_report_names_file_line_check() {
+        let findings = vec![Finding::new("safety-comments", "src/a.rs", 7, "msg".into())];
+        let t = render_text(&findings);
+        assert!(t.contains("src/a.rs:7 [safety-comments] msg"), "{t}");
+        assert!(render_text(&[]).contains("clean"));
+    }
+
+    #[test]
+    fn run_all_rejects_non_source_roots() {
+        let dir = std::env::temp_dir().join(format!("daso-audit-empty-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(run_all(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,359 @@
+//! Rust-aware lexical scanner.
+//!
+//! Every check in this crate runs over token text, not raw bytes: a
+//! `// SAFETY:` inside a string literal must not count as a comment,
+//! an `unsafe` inside a doc comment must not count as code, and a
+//! `(` inside an error message must not unbalance paren matching.
+//! `scan` classifies every byte of a source file into three parallel
+//! views of identical length (newlines preserved in all three, so
+//! line numbers and byte offsets align across views):
+//!
+//! - `code`: comments blanked, string/char-literal *contents* blanked
+//!   (delimiting quotes kept) — use for token and structure searches.
+//! - `code_with_strings`: comments blanked, string literals kept
+//!   verbatim — use to read literal text at offsets found in `code`.
+//! - `comments`: only comment text kept — use for `SAFETY:` and
+//!   `audit: allow(...)` annotations.
+//!
+//! Handled: `//` and nested `/* */` comments, `"..."` with escapes,
+//! byte strings `b"..."`, raw strings `r"..."`/`r#"..."#`/`br#"..."#`,
+//! char literals (incl. escaped and multi-byte), and the char-literal
+//! vs lifetime ambiguity (`'a'` vs `&'a str`).
+
+pub struct Scanned {
+    pub code: String,
+    pub code_with_strings: String,
+    pub comments: String,
+}
+
+impl Scanned {
+    pub fn code_lines(&self) -> Vec<&str> {
+        self.code.split('\n').collect()
+    }
+
+    pub fn string_lines(&self) -> Vec<&str> {
+        self.code_with_strings.split('\n').collect()
+    }
+
+    pub fn comment_lines(&self) -> Vec<&str> {
+        self.comments.split('\n').collect()
+    }
+}
+
+pub(crate) fn is_ident(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// UTF-8 sequence length implied by a leading byte (1 for ASCII).
+fn utf8_len(first: u8) -> usize {
+    if first >= 0xF0 {
+        4
+    } else if first >= 0xE0 {
+        3
+    } else if first >= 0x80 {
+        2
+    } else {
+        1
+    }
+}
+
+pub fn scan(src: &str) -> Scanned {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut code = vec![b' '; n];
+    let mut strs = vec![b' '; n];
+    let mut comments = vec![b' '; n];
+    for (i, &c) in b.iter().enumerate() {
+        if c == b'\n' {
+            code[i] = b'\n';
+            strs[i] = b'\n';
+            comments[i] = b'\n';
+        }
+    }
+
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        let prev_ident = i > 0 && is_ident(b[i - 1]);
+
+        // Line comment (covers `//`, `///`, `//!`).
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            while i < n && b[i] != b'\n' {
+                comments[i] = b[i];
+                i += 1;
+            }
+            continue;
+        }
+
+        // Block comment, nested.
+        if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 0usize;
+            while i < n {
+                if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    comments[i] = b'/';
+                    comments[i + 1] = b'*';
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    comments[i] = b'*';
+                    comments[i + 1] = b'/';
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    if b[i] != b'\n' {
+                        comments[i] = b[i];
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+
+        // Raw string: r"..." / r#"..."# / br#"..."#.
+        if !prev_ident && (c == b'r' || c == b'b') {
+            let mut j = i + 1;
+            let mut is_raw = c == b'r';
+            if c == b'b' && b.get(j) == Some(&b'r') {
+                is_raw = true;
+                j += 1;
+            }
+            if is_raw {
+                let mut hashes = 0usize;
+                while b.get(j) == Some(&b'#') {
+                    hashes += 1;
+                    j += 1;
+                }
+                if b.get(j) == Some(&b'"') {
+                    for (k, &byte) in b.iter().enumerate().take(j + 1).skip(i) {
+                        code[k] = byte;
+                        strs[k] = byte;
+                    }
+                    let mut k = j + 1;
+                    while k < n {
+                        if b[k] == b'"' {
+                            let mut h = 0usize;
+                            while h < hashes && b.get(k + 1 + h) == Some(&b'#') {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                code[k] = b'"';
+                                strs[k] = b'"';
+                                for m in 0..hashes {
+                                    code[k + 1 + m] = b'#';
+                                    strs[k + 1 + m] = b'#';
+                                }
+                                k += 1 + hashes;
+                                break;
+                            }
+                        }
+                        if b[k] != b'\n' {
+                            strs[k] = b[k];
+                        }
+                        k += 1;
+                    }
+                    i = k;
+                    continue;
+                }
+            }
+        }
+
+        // Normal or byte string: "..." / b"...".
+        if c == b'"' || (!prev_ident && c == b'b' && b.get(i + 1) == Some(&b'"')) {
+            if c == b'b' {
+                code[i] = b'b';
+                strs[i] = b'b';
+                i += 1;
+            }
+            code[i] = b'"';
+            strs[i] = b'"';
+            let mut k = i + 1;
+            while k < n {
+                if b[k] == b'\\' && k + 1 < n {
+                    strs[k] = b'\\';
+                    if b[k + 1] != b'\n' {
+                        strs[k + 1] = b[k + 1];
+                    }
+                    k += 2;
+                    continue;
+                }
+                if b[k] == b'"' {
+                    code[k] = b'"';
+                    strs[k] = b'"';
+                    k += 1;
+                    break;
+                }
+                if b[k] != b'\n' {
+                    strs[k] = b[k];
+                }
+                k += 1;
+            }
+            i = k;
+            continue;
+        }
+
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            if b.get(i + 1) == Some(&b'\\') {
+                // Escaped char literal: '\n', '\'', '\u{1F600}', ...
+                code[i] = b'\'';
+                strs[i] = b'\'';
+                let mut k = i + 3;
+                while k < n && b[k] != b'\'' {
+                    if b[k] != b'\n' {
+                        strs[k] = b[k];
+                    }
+                    k += 1;
+                }
+                if i + 2 < n && b[i + 2] != b'\n' {
+                    strs[i + 1] = b'\\';
+                    strs[i + 2] = b[i + 2];
+                }
+                if k < n {
+                    code[k] = b'\'';
+                    strs[k] = b'\'';
+                    k += 1;
+                }
+                i = k;
+                continue;
+            }
+            let first = b.get(i + 1).copied().unwrap_or(0);
+            let close = i + 1 + utf8_len(first);
+            if first != b'\'' && first != 0 && b.get(close) == Some(&b'\'') {
+                // Plain char literal: 'a', 'é'.
+                code[i] = b'\'';
+                strs[i] = b'\'';
+                for k in (i + 1)..close {
+                    if b[k] != b'\n' {
+                        strs[k] = b[k];
+                    }
+                }
+                code[close] = b'\'';
+                strs[close] = b'\'';
+                i = close + 1;
+                continue;
+            }
+            // Lifetime (or stray quote): plain code.
+            code[i] = b'\'';
+            strs[i] = b'\'';
+            i += 1;
+            continue;
+        }
+
+        code[i] = c;
+        strs[i] = c;
+        i += 1;
+    }
+
+    Scanned {
+        code: String::from_utf8_lossy(&code).into_owned(),
+        code_with_strings: String::from_utf8_lossy(&strs).into_owned(),
+        comments: String::from_utf8_lossy(&comments).into_owned(),
+    }
+}
+
+/// 1-based line number of a byte offset within `text`.
+pub fn line_of(text: &str, offset: usize) -> usize {
+    text.as_bytes()[..offset.min(text.len())]
+        .iter()
+        .filter(|&&c| c == b'\n')
+        .count()
+        + 1
+}
+
+/// Does `line` contain `word` delimited by non-identifier characters?
+pub fn has_word(line: &str, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = line[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident(bytes[at - 1]);
+        let end = at + word.len();
+        let after_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_stripped_from_code() {
+        let s = scan("let x = 1; // unsafe here\n/* also unsafe */ let y = 2;\n");
+        assert!(!s.code.contains("unsafe"));
+        assert!(s.comments.contains("unsafe here"));
+        assert!(s.comments.contains("also unsafe"));
+        assert!(s.code.contains("let y = 2;"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let s = scan("a /* one /* two */ still */ b\n");
+        assert!(s.code.contains('a'));
+        assert!(s.code.contains('b'));
+        assert!(!s.code.contains("still"));
+        assert!(s.comments.contains("still"));
+    }
+
+    #[test]
+    fn string_contents_blank_in_code_kept_in_strings() {
+        let s = scan("bail!(\"no // comment unsafe {x}\");\n");
+        assert!(!s.code.contains("unsafe"));
+        assert!(s.comments.trim().is_empty());
+        assert!(s.code_with_strings.contains("no // comment unsafe {x}"));
+        assert!(s.code.contains("bail!(\""));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let s = scan("let a = r#\"quote \" inside\"#; let b = \"esc \\\" quote\";\n");
+        assert!(!s.code.contains("inside"));
+        assert!(!s.code.contains("esc"));
+        assert!(s.code_with_strings.contains("quote \" inside"));
+        assert!(s.code_with_strings.contains("esc \\\" quote"));
+        assert!(s.code.contains("let b = "));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let s = scan("fn f<'a>(x: &'a str) -> char { let c = ')'; c }\n");
+        // The paren inside the char literal must not appear in `code`.
+        let opens = s.code.matches('(').count();
+        let closes = s.code.matches(')').count();
+        assert_eq!(opens, closes);
+        assert!(s.code.contains("<'a>"));
+        assert!(s.code_with_strings.contains("')'"));
+    }
+
+    #[test]
+    fn views_have_identical_line_counts() {
+        let src = "let s = \"multi\nline\";\n// tail\n";
+        let s = scan(src);
+        assert_eq!(s.code.split('\n').count(), src.split('\n').count());
+        assert_eq!(s.code_with_strings.split('\n').count(), src.split('\n').count());
+        assert_eq!(s.comments.split('\n').count(), src.split('\n').count());
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("unsafe { x }", "unsafe"));
+        assert!(!has_word("not_unsafe()", "unsafe"));
+        assert!(!has_word("unsafely()", "unsafe"));
+        assert!(has_word("let a = unsafe{", "unsafe"));
+    }
+
+    #[test]
+    fn line_of_offsets() {
+        let t = "a\nb\nc";
+        assert_eq!(line_of(t, 0), 1);
+        assert_eq!(line_of(t, 2), 2);
+        assert_eq!(line_of(t, 4), 3);
+    }
+}

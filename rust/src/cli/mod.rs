@@ -1,7 +1,8 @@
 //! Hand-rolled CLI (clap is unavailable offline).
 //!
 //! `daso <command> [--flag value] [--flag=value] [positional...]`
-//! Commands: train, figures, project, selfcheck, info, help.
+//! Commands: train, launch, bench, audit, sweep, figures, project,
+//! selfcheck, info, help.
 
 use std::collections::BTreeMap;
 
@@ -204,6 +205,19 @@ COMMANDS:
                   bytes_on_wire exceeds baseline x bytes-tolerance
                   (default 1.05; only checked where the baseline records
                   bytes). Extra candidate rows are ignored.
+    audit       repo-invariant static analysis (CI's `analysis` gate):
+                  SAFETY comments on every unsafe, release/acquire on
+                  the shm ring protocol, launcher forwarding of every
+                  config key, wire-surface changes locked to
+                  PROTOCOL_VERSION, named transport/checkpoint errors.
+                  Exits non-zero with file:line findings.
+                  --root <dir>    the rust/ tree to audit (default:
+                              auto-detect . or rust/)
+                  --json          machine-readable findings report
+                  --doctor        copy the tree, seed one violation per
+                              check, and prove every check fires
+                  --update-protocol-lock  regenerate audit/protocol.lock
+                              after a deliberate PROTOCOL_VERSION bump
     figures     regenerate a paper figure
                   --fig 6|7|8|9   --quick   (7/9 train for real; 6/8 project)
     project     strong-scaling time projection
@@ -218,8 +232,8 @@ COMMANDS:
 pub fn known_command(cmd: &str) -> bool {
     matches!(
         cmd,
-        "train" | "launch" | "bench" | "sweep" | "figures" | "project" | "selfcheck" | "info"
-            | "help"
+        "train" | "launch" | "bench" | "audit" | "sweep" | "figures" | "project" | "selfcheck"
+            | "info" | "help"
     )
 }
 

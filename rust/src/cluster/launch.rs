@@ -32,10 +32,67 @@ use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::cli::Args;
 use crate::comm::transport::shm::{default_ring_bytes, SegmentDir};
 use crate::comm::transport::tcp::{ENV_COORD_ADDR, ENV_NODE_ID};
 use crate::comm::transport::wire::{write_frame, Frame};
 use crate::comm::{TransportKind, Wire};
+use crate::config::RunSpec;
+
+/// The run-defining flags a child re-receives verbatim: the base peer
+/// command line (`daso train ...`), before the forced `--set` entries
+/// from [`forced_child_sets`] are appended. Split out of the launch
+/// path so the forwarding parity test can rebuild a child's argv
+/// exactly.
+pub fn base_child_args(args: &Args) -> Vec<String> {
+    let mut base: Vec<String> = vec!["train".into()];
+    for key in ["model", "strategy", "config", "artifacts"] {
+        if let Some(v) = args.get(key) {
+            base.push(format!("--{key}"));
+            base.push(v.to_string());
+        }
+    }
+    for v in args.get_all("set") {
+        base.push("--set".into());
+        base.push(v.to_string());
+    }
+    base
+}
+
+/// The `--set` entries force-appended to every child's argv, after the
+/// base args: `RunSpec::from_args` applies `--set` overrides last, so a
+/// forwarded user `--set executor=...` (or topology key) cannot make a
+/// child diverge from the launch. The resolved wire format is forced
+/// too (covering `--wire`, config files and `DASO_GLOBAL_WIRE` on the
+/// launcher side); the HELLO/WELCOME handshake double-checks it, and
+/// the generation stamp makes peers of a previous elastic attempt
+/// unable to rejoin this one.
+///
+/// `daso audit`'s config-forwarding check parses this list: every key
+/// registered in `config::RunSpec::set_value` must appear here or in
+/// the audit's explicit local-only allowlist, so a new config key can
+/// never silently diverge between coordinator and children.
+pub fn forced_child_sets(spec: &RunSpec, transport: TransportKind) -> Vec<String> {
+    vec![
+        "executor=multiprocess".to_string(),
+        format!("nodes={}", spec.train.nodes),
+        format!("gpus_per_node={}", spec.train.gpus_per_node),
+        format!("global_wire={}", spec.train.global_wire.name()),
+        format!("leader_placement={}", spec.train.leader_placement.name()),
+        format!("pipeline_chunk_elems={}", spec.train.pipeline_chunk_elems),
+        format!("transport={}", transport.name()),
+        format!("checkpoint_dir={}", spec.train.checkpoint_dir),
+        format!("checkpoint_every_epochs={}", spec.train.checkpoint_every_epochs),
+        format!("resume={}", spec.train.resume),
+        format!("stop_after_epochs={}", spec.train.stop_after_epochs),
+        format!("straggler_node={}", spec.train.straggler_node),
+        format!("straggler_factor={}", spec.train.straggler_factor),
+        format!("generation={}", spec.train.launch_generation),
+        // tracing must be symmetric: every process records and joins
+        // the obs gather, or no process does
+        format!("trace={}", spec.train.trace),
+    ]
+}
 
 /// A bound coordinator listener plus the topology of the launch — and,
 /// for shm-backed transports, the owned segment directory.

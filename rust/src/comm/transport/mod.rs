@@ -113,10 +113,14 @@ pub struct WireBytes {
 impl WireBytes {
     pub fn add_sent(&self, class: LinkClass, via_shm: bool, bytes: u64) {
         match class {
+            // audit: allow(atomic-ordering): best-effort accounting
+            // counter, read only by end-of-run reports.
             LinkClass::NodeLocal => self.intra.fetch_add(bytes, Ordering::Relaxed),
+            // audit: allow(atomic-ordering): same best-effort counter.
             LinkClass::Global => self.inter.fetch_add(bytes, Ordering::Relaxed),
         };
         if via_shm {
+            // audit: allow(atomic-ordering): same best-effort counter.
             self.shm.fetch_add(bytes, Ordering::Relaxed);
         }
     }
@@ -128,16 +132,19 @@ impl WireBytes {
 
     /// Bytes written on node-local-class links (same-host peers).
     pub fn sent_intra(&self) -> u64 {
+        // audit: allow(atomic-ordering): report-time counter read.
         self.intra.load(Ordering::Relaxed)
     }
 
     /// Bytes written on global-class links (cross-host peers).
     pub fn sent_inter(&self) -> u64 {
+        // audit: allow(atomic-ordering): report-time counter read.
         self.inter.load(Ordering::Relaxed)
     }
 
     /// Bytes physically carried by shared-memory rings (0 on tcp runs).
     pub fn sent_shm(&self) -> u64 {
+        // audit: allow(atomic-ordering): report-time counter read.
         self.shm.load(Ordering::Relaxed)
     }
 }

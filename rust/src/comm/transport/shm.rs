@@ -44,36 +44,54 @@
 //! cleanup: the creating process removes the whole directory on drop —
 //! including every failure path — so no files leak under `/dev/shm`.
 //! Unlinking while peers still hold mappings is safe on unix.
+//!
+//! ## Verification
+//!
+//! The ring protocol is machine-checked three ways on top of the unit
+//! tests (see `.github/workflows/ci.yml`, `analysis` job):
+//!
+//! - **loom** (`tests/ring_loom.rs`, built with `RUSTFLAGS="--cfg
+//!   loom"`): exhaustively model-checks write-wrap, drain-then-EOF,
+//!   the close-vs-publish race and consumer-drop `BrokenPipe` over a
+//!   [`Segment::in_memory_pair`]. Under `cfg(loom)` the atomics below
+//!   are loom's and [`backoff`] yields to the model scheduler instead
+//!   of sleeping.
+//! - **Miri** interprets the in-memory ring tests (no mmap, no foreign
+//!   calls), catching UB in the raw-pointer data paths.
+//! - **ThreadSanitizer** runs the same tests (and the threaded
+//!   executor parity suite) compiled with `-Zsanitizer=thread`.
+//!
+//! `daso audit` statically refuses `Ordering::Relaxed` on any
+//! head/tail/closed access in this file — the SPSC publication
+//! protocol is release/acquire everywhere, with no exceptions.
 
 use std::io::{self, Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[cfg(loom)]
+use loom::sync::atomic::{AtomicU64, Ordering};
+#[cfg(not(loom))]
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
-#[cfg(unix)]
-use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
 /// Identifies a daso shm ring segment (native-endian on both sides of
 /// the link — the two mappers share a host by construction).
-#[cfg(unix)]
+#[cfg(all(unix, not(loom)))]
 const MAGIC: u64 = 0x4441_534f_5348_4d31; // "DASOSHM1"
 
-#[cfg(unix)]
+#[cfg(all(unix, not(loom)))]
 const HDR_MAGIC: usize = 0;
-#[cfg(unix)]
+#[cfg(all(unix, not(loom)))]
 const HDR_CAPACITY: usize = 8;
 /// Producer cache line: write position + closed flag + producer pid.
-#[cfg(unix)]
 const HDR_HEAD: usize = 64;
-#[cfg(unix)]
 const HDR_PROD_CLOSED: usize = 72;
-#[cfg(unix)]
 const HDR_PROD_PID: usize = 80;
 /// Consumer cache line: read position + closed flag.
-#[cfg(unix)]
 const HDR_TAIL: usize = 128;
-#[cfg(unix)]
 const HDR_CONS_CLOSED: usize = 136;
 /// Data starts on its own cache line after the header fields.
 pub const HEADER_BYTES: usize = 192;
@@ -82,6 +100,22 @@ pub const HEADER_BYTES: usize = 192;
 /// override it (1 MiB: large frames stream through in pieces, and the
 /// chunked pipeline overlaps the pieces anyway).
 pub const DEFAULT_RING_BYTES: usize = 1 << 20;
+
+/// Spin/sleep escalation thresholds for [`backoff`]. Named consts (not
+/// magic numbers) so the verification builds can retune them: under
+/// loom/Miri there is no wall clock worth spinning against, so
+/// `backoff` yields to the scheduler instead and the liveness probe is
+/// compiled out.
+#[cfg(not(any(loom, miri)))]
+const SPIN_FAST_ITERS: u32 = 512;
+/// Spin count after which waits escalate from 50 us to 1 ms sleeps and
+/// the idle consumer starts liveness-probing the producer.
+#[cfg(not(any(loom, miri)))]
+const SPIN_SLEEP_ESCALATE: u32 = 4096;
+/// How often (in backoff iterations) the idle consumer re-probes
+/// producer liveness once past [`SPIN_SLEEP_ESCALATE`].
+#[cfg(not(any(loom, miri)))]
+const PROBE_EVERY: u32 = 1024;
 
 /// Per-ring data capacity: `DASO_SHM_RING_BYTES` in the environment,
 /// else [`DEFAULT_RING_BYTES`]. A value that does not parse is warned
@@ -110,7 +144,7 @@ pub fn shm_base_dir() -> PathBuf {
     }
 }
 
-#[cfg(unix)]
+#[cfg(all(unix, not(loom)))]
 mod sys {
     use std::os::raw::{c_int, c_void};
 
@@ -135,28 +169,87 @@ mod sys {
     }
 }
 
-/// One mapped ring segment. Both halves of a link hold their own
-/// `Segment` (their own mapping of the shared file).
-#[cfg(unix)]
-pub struct Segment {
-    ptr: *mut u8,
+/// Heap-allocated ring storage shared by the two [`Segment`] halves of
+/// an in-memory pair. Same header atomics as the mapped layout, just
+/// as struct fields instead of offsets into a page — which is what
+/// lets loom swap in its model-checked atomics and lets Miri interpret
+/// the ring without foreign `mmap` calls.
+struct HeapSegment {
+    head: AtomicU64,
+    prod_closed: AtomicU64,
+    prod_pid: AtomicU64,
+    tail: AtomicU64,
+    cons_closed: AtomicU64,
+    data: *mut u8,
     len: usize,
+}
+
+// SAFETY: `data` is a uniquely-owned heap allocation freed exactly once
+// in Drop; all cross-thread access to it is mediated by the SPSC
+// release/acquire protocol on the atomics above.
+unsafe impl Send for HeapSegment {}
+// SAFETY: same protocol — the producer only writes `[tail, head + free)`
+// regions it owns, the consumer only reads published `[tail, head)`.
+unsafe impl Sync for HeapSegment {}
+
+impl HeapSegment {
+    fn new(capacity: usize) -> Arc<HeapSegment> {
+        let data = Box::into_raw(vec![0u8; capacity].into_boxed_slice()) as *mut u8;
+        Arc::new(HeapSegment {
+            head: AtomicU64::new(0),
+            prod_closed: AtomicU64::new(0),
+            prod_pid: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            cons_closed: AtomicU64::new(0),
+            data,
+            len: capacity,
+        })
+    }
+}
+
+impl Drop for HeapSegment {
+    fn drop(&mut self) {
+        // SAFETY: `data` came from Box::into_raw of a boxed slice of
+        // exactly `len` bytes in `new` and is reconstructed (and freed)
+        // exactly once here.
+        unsafe {
+            drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(self.data, self.len)));
+        }
+    }
+}
+
+/// Physical storage behind a [`Segment`].
+enum Backing {
+    /// A `MAP_SHARED` mapping of a segment file — the real transport.
+    #[cfg(all(unix, not(loom)))]
+    Mapped { ptr: *mut u8, len: usize },
+    /// Process-private heap ring ([`Segment::in_memory_pair`]): used by
+    /// the loom/Miri/TSan verification builds and available on every
+    /// platform.
+    Heap(Arc<HeapSegment>),
+}
+
+/// One ring segment. Both halves of a link hold their own `Segment`
+/// (their own mapping of the shared file, or a clone of the shared
+/// heap ring).
+pub struct Segment {
+    backing: Backing,
     capacity: usize,
 }
 
-// The raw pointer targets a MAP_SHARED region; all cross-thread (and
-// cross-process) access goes through the atomics below with the SPSC
-// publication protocol.
-#[cfg(unix)]
+// SAFETY: the mapped variant's raw pointer targets a MAP_SHARED region
+// whose cross-thread (and cross-process) access goes through the header
+// atomics with the SPSC publication protocol; the heap variant is
+// Send/Sync by the `HeapSegment` argument above.
 unsafe impl Send for Segment {}
-#[cfg(unix)]
+// SAFETY: as for Send — all shared access is mediated by the protocol.
 unsafe impl Sync for Segment {}
 
-#[cfg(unix)]
 impl Segment {
     /// Create (and header-initialize) a ring file. Fails if the file
     /// already exists — segment names are launch-unique, so an existing
     /// file means a collision or a leak, not a ring of ours.
+    #[cfg(all(unix, not(loom)))]
     pub fn create_file(path: &Path, capacity: usize) -> Result<()> {
         ensure!(capacity >= 64, "ring capacity {capacity} is too small to carry a frame prefix");
         let mut f = std::fs::OpenOptions::new()
@@ -176,7 +269,13 @@ impl Segment {
         Ok(())
     }
 
+    #[cfg(any(not(unix), loom))]
+    pub fn create_file(_path: &Path, _capacity: usize) -> Result<()> {
+        bail!("the shm transport requires a unix host (memory-mapped /dev/shm segments)")
+    }
+
     /// Map an existing ring file created by [`Segment::create_file`].
+    #[cfg(all(unix, not(loom)))]
     pub fn open(path: &Path) -> Result<Segment> {
         use std::os::fd::AsRawFd;
         let f = std::fs::OpenOptions::new()
@@ -186,6 +285,8 @@ impl Segment {
             .with_context(|| format!("opening shm ring {path:?}"))?;
         let len = f.metadata().with_context(|| format!("stat {path:?}"))?.len() as usize;
         ensure!(len > HEADER_BYTES, "shm ring {path:?} is truncated ({len} bytes)");
+        // SAFETY: mapping a freshly opened fd with a length taken from
+        // its own metadata; MAP_FAILED is checked right below.
         let ptr = unsafe {
             sys::mmap(
                 std::ptr::null_mut(),
@@ -200,11 +301,15 @@ impl Segment {
             bail!("mmap of shm ring {path:?} failed: {}", io::Error::last_os_error());
         }
         // the segment drops (and unmaps) if any validation below fails
-        let mut seg = Segment { ptr: ptr.cast::<u8>(), len, capacity: 0 };
-        ensure!(
-            seg.atomic(HDR_MAGIC).load(Ordering::Relaxed) == MAGIC,
-            "{path:?} is not a daso shm ring (bad magic)"
-        );
+        let mut seg =
+            Segment { backing: Backing::Mapped { ptr: ptr.cast::<u8>(), len }, capacity: 0 };
+        // audit: allow(atomic-ordering): single-threaded header
+        // validation at attach time, before any cross-process protocol
+        // runs on this mapping.
+        let magic = seg.atomic(HDR_MAGIC).load(Ordering::Relaxed);
+        ensure!(magic == MAGIC, "{path:?} is not a daso shm ring (bad magic)");
+        // audit: allow(atomic-ordering): same single-threaded attach
+        // validation as the magic check above.
         let capacity = seg.atomic(HDR_CAPACITY).load(Ordering::Relaxed) as usize;
         ensure!(
             HEADER_BYTES + capacity == len,
@@ -214,30 +319,81 @@ impl Segment {
         Ok(seg)
     }
 
+    #[cfg(any(not(unix), loom))]
+    pub fn open(_path: &Path) -> Result<Segment> {
+        bail!("the shm transport requires a unix host (memory-mapped /dev/shm segments)")
+    }
+
+    /// A connected pair of `Segment` halves over one process-private
+    /// heap ring — the mmap-free constructor the loom/Miri/TSan builds
+    /// drive the full producer/consumer protocol through. Works on
+    /// every platform.
+    pub fn in_memory_pair(capacity: usize) -> (Segment, Segment) {
+        assert!(capacity > 0, "in-memory ring needs a nonzero capacity");
+        let heap = HeapSegment::new(capacity);
+        let a = Segment { backing: Backing::Heap(Arc::clone(&heap)), capacity };
+        let b = Segment { backing: Backing::Heap(heap), capacity };
+        (a, b)
+    }
+
     fn atomic(&self, off: usize) -> &AtomicU64 {
-        debug_assert!(off + 8 <= self.len && off % 8 == 0);
-        // mmap returns page-aligned memory and every header offset is
-        // 8-byte aligned, so the cast is sound
-        unsafe { &*(self.ptr.add(off) as *const AtomicU64) }
+        match &self.backing {
+            #[cfg(all(unix, not(loom)))]
+            Backing::Mapped { ptr, len } => {
+                debug_assert!(off + 8 <= *len && off % 8 == 0);
+                // SAFETY: mmap returns page-aligned memory, every
+                // header offset is 8-byte aligned and in-bounds
+                // (debug-asserted), and concurrent cross-process access
+                // is exactly what the atomic type is for.
+                unsafe { &*(ptr.add(off) as *const AtomicU64) }
+            }
+            Backing::Heap(h) => match off {
+                HDR_HEAD => &h.head,
+                HDR_PROD_CLOSED => &h.prod_closed,
+                HDR_PROD_PID => &h.prod_pid,
+                HDR_TAIL => &h.tail,
+                HDR_CONS_CLOSED => &h.cons_closed,
+                other => unreachable!("no heap-backed atomic at header offset {other}"),
+            },
+        }
     }
 
     fn data(&self) -> *mut u8 {
-        unsafe { self.ptr.add(HEADER_BYTES) }
+        match &self.backing {
+            #[cfg(all(unix, not(loom)))]
+            Backing::Mapped { ptr, .. } => {
+                // SAFETY: open() validated the mapping is
+                // HEADER_BYTES + capacity long, so the data region
+                // starts in-bounds.
+                unsafe { ptr.add(HEADER_BYTES) }
+            }
+            Backing::Heap(h) => h.data,
+        }
     }
 }
 
-#[cfg(unix)]
 impl Drop for Segment {
     fn drop(&mut self) {
-        unsafe {
-            sys::munmap(self.ptr.cast(), self.len);
+        match &self.backing {
+            #[cfg(all(unix, not(loom)))]
+            Backing::Mapped { ptr, len } => {
+                let p: *mut u8 = *ptr;
+                // SAFETY: `ptr`/`len` describe the live mapping
+                // established in open(); it is unmapped exactly once
+                // here.
+                unsafe {
+                    sys::munmap(p.cast(), *len);
+                }
+            }
+            Backing::Heap(_) => {}
         }
     }
 }
 
 /// Bounded wait helper: spin briefly, then sleep in small slices until
-/// the deadline (None = wait forever, the demux readers' mode).
-#[cfg(unix)]
+/// the deadline (None = wait forever, the demux readers' mode). Under
+/// loom/Miri the wait yields to the scheduler instead — model checking
+/// and interpretation must never depend on wall-clock sleeps.
 fn backoff(spins: &mut u32, deadline: Option<Instant>, what: &str) -> io::Result<()> {
     if let Some(d) = deadline {
         if Instant::now() >= d {
@@ -247,18 +403,31 @@ fn backoff(spins: &mut u32, deadline: Option<Instant>, what: &str) -> io::Result
             ));
         }
     }
-    if *spins < 512 {
-        *spins += 1;
-        std::hint::spin_loop();
-    } else {
-        // escalate while idle: short sleeps keep latency low during
-        // active collective phases (each read/write call starts a fresh
-        // spin phase), the 1 ms cap keeps a long-idle demux thread
-        // near-free instead of waking 20k times a second for the whole
-        // run
-        let us = if *spins < 4096 { 50 } else { 1000 };
+    #[cfg(loom)]
+    {
         *spins = spins.wrapping_add(1);
-        std::thread::sleep(Duration::from_micros(us));
+        loom::thread::yield_now();
+    }
+    #[cfg(all(miri, not(loom)))]
+    {
+        *spins = spins.wrapping_add(1);
+        std::thread::yield_now();
+    }
+    #[cfg(not(any(loom, miri)))]
+    {
+        if *spins < SPIN_FAST_ITERS {
+            *spins += 1;
+            std::hint::spin_loop();
+        } else {
+            // escalate while idle: short sleeps keep latency low during
+            // active collective phases (each read/write call starts a
+            // fresh spin phase), the 1 ms cap keeps a long-idle demux
+            // thread near-free instead of waking 20k times a second for
+            // the whole run
+            let us = if *spins < SPIN_SLEEP_ESCALATE { 50 } else { 1000 };
+            *spins = spins.wrapping_add(1);
+            std::thread::sleep(Duration::from_micros(us));
+        }
     }
     Ok(())
 }
@@ -267,7 +436,7 @@ fn backoff(spins: &mut u32, deadline: Option<Instant>, what: &str) -> io::Result
 /// it only yields a verdict where `/proc` exists (linux — the primary
 /// shm host); elsewhere we conservatively assume alive and fall back to
 /// the communicator-layer timeouts.
-#[cfg(unix)]
+#[cfg(not(any(loom, miri)))]
 fn proc_alive(pid: u64) -> bool {
     if !Path::new("/proc/self").exists() {
         return true;
@@ -276,13 +445,11 @@ fn proc_alive(pid: u64) -> bool {
 }
 
 /// Write half of one directed ring. Exactly one producer per ring.
-#[cfg(unix)]
 pub struct RingProducer {
     seg: Segment,
     timeout: Option<Duration>,
 }
 
-#[cfg(unix)]
 impl RingProducer {
     pub fn new(seg: Segment, timeout: Option<Duration>) -> RingProducer {
         // advertise the producer's pid so a consumer can tell a killed
@@ -300,7 +467,6 @@ impl RingProducer {
     }
 }
 
-#[cfg(unix)]
 impl Write for RingProducer {
     /// Copy as much of `buf` as currently fits and publish it; blocks
     /// (bounded) only while the ring is completely full. `write_all`
@@ -310,7 +476,10 @@ impl Write for RingProducer {
             return Ok(0);
         }
         let cap = self.seg.capacity;
-        let head = self.seg.atomic(HDR_HEAD).load(Ordering::Relaxed);
+        // Acquire keeps the ring protocol uniformly release/acquire
+        // (enforced by `daso audit`); the producer is the only writer
+        // of head, so this mainly documents intent.
+        let head = self.seg.atomic(HDR_HEAD).load(Ordering::Acquire);
         let deadline = self.timeout.map(|t| Instant::now() + t);
         let mut spins = 0u32;
         let mut wait_start: Option<Instant> = None;
@@ -338,6 +507,12 @@ impl Write for RingProducer {
                 // 32-bit hosts
                 let at = (head % cap as u64) as usize;
                 let first = n.min(cap - at);
+                // SAFETY: `at < cap`, `first <= cap - at` and
+                // `n - first <= at` keep both copies inside the
+                // `cap`-byte data region; `buf` holds at least `n`
+                // readable bytes; the target `[head, head + n)` region
+                // is unpublished, so the consumer does not touch it
+                // until the release store of head below.
                 unsafe {
                     std::ptr::copy_nonoverlapping(buf.as_ptr(), self.seg.data().add(at), first);
                     std::ptr::copy_nonoverlapping(
@@ -361,7 +536,6 @@ impl Write for RingProducer {
     }
 }
 
-#[cfg(unix)]
 impl Drop for RingProducer {
     fn drop(&mut self) {
         // clean-shutdown signal: the consumer drains, then sees EOF
@@ -370,13 +544,11 @@ impl Drop for RingProducer {
 }
 
 /// Read half of one directed ring. Exactly one consumer per ring.
-#[cfg(unix)]
 pub struct RingConsumer {
     seg: Segment,
     timeout: Option<Duration>,
 }
 
-#[cfg(unix)]
 impl RingConsumer {
     pub fn new(seg: Segment, timeout: Option<Duration>) -> RingConsumer {
         RingConsumer { seg, timeout }
@@ -391,7 +563,6 @@ impl RingConsumer {
     }
 }
 
-#[cfg(unix)]
 impl Read for RingConsumer {
     /// Return whatever is available (blocking, bounded, while empty);
     /// `Ok(0)` = EOF, only after the producer closed *and* the ring
@@ -401,7 +572,9 @@ impl Read for RingConsumer {
             return Ok(0);
         }
         let cap = self.seg.capacity;
-        let tail = self.seg.atomic(HDR_TAIL).load(Ordering::Relaxed);
+        // Acquire for the same audit-enforced uniformity as the
+        // producer's head load; the consumer is the only writer of tail.
+        let tail = self.seg.atomic(HDR_TAIL).load(Ordering::Acquire);
         let deadline = self.timeout.map(|t| Instant::now() + t);
         let mut spins = 0u32;
         let mut wait_start: Option<Instant> = None;
@@ -421,6 +594,12 @@ impl Read for RingConsumer {
                 // modulo in u64, mirroring the producer
                 let at = (tail % cap as u64) as usize;
                 let first = n.min(cap - at);
+                // SAFETY: `at < cap`, `first <= cap - at` and
+                // `n - first <= at` keep both copies inside the
+                // `cap`-byte data region; `buf` holds at least `n`
+                // writable bytes; the source `[tail, tail + n)` region
+                // was published by the producer's release store of
+                // head, which the acquire load above synchronized with.
                 unsafe {
                     std::ptr::copy_nonoverlapping(self.seg.data().add(at), buf.as_mut_ptr(), first);
                     std::ptr::copy_nonoverlapping(
@@ -447,8 +626,11 @@ impl Read for RingConsumer {
             // never sets its closed flag — unlike a TCP socket there is
             // no kernel to deliver EOF. Probe the producer's liveness
             // (roughly once a second, only after sustained idleness) so
-            // an unbounded demux read still terminates.
-            if spins >= 4096 && spins % 1024 == 0 {
+            // an unbounded demux read still terminates. The probe is a
+            // wall-clock heuristic, so the loom/Miri builds compile it
+            // out.
+            #[cfg(not(any(loom, miri)))]
+            if spins >= SPIN_SLEEP_ESCALATE && spins % PROBE_EVERY == 0 {
                 let pid = self.seg.atomic(HDR_PROD_PID).load(Ordering::Acquire);
                 if pid != 0 && !proc_alive(pid) {
                     return Err(io::Error::new(
@@ -465,7 +647,6 @@ impl Read for RingConsumer {
     }
 }
 
-#[cfg(unix)]
 impl Drop for RingConsumer {
     fn drop(&mut self) {
         self.seg.atomic(HDR_CONS_CLOSED).store(1, Ordering::Release);
@@ -473,74 +654,11 @@ impl Drop for RingConsumer {
 }
 
 // ---------------------------------------------------------------------
-// Non-unix stubs: the types exist (so the transport compiles
-// everywhere) but can never be constructed — selecting the shm/hybrid
-// transport on such a host fails with a named error at open time.
-
-#[cfg(not(unix))]
-pub struct Segment(std::convert::Infallible);
-
-#[cfg(not(unix))]
-impl Segment {
-    pub fn create_file(_path: &Path, _capacity: usize) -> Result<()> {
-        bail!("the shm transport requires a unix host (memory-mapped /dev/shm segments)")
-    }
-
-    pub fn open(_path: &Path) -> Result<Segment> {
-        bail!("the shm transport requires a unix host (memory-mapped /dev/shm segments)")
-    }
-}
-
-#[cfg(not(unix))]
-pub struct RingProducer(std::convert::Infallible);
-
-#[cfg(not(unix))]
-impl RingProducer {
-    pub fn open(_path: &Path, _timeout: Option<Duration>) -> Result<RingProducer> {
-        bail!("the shm transport requires a unix host")
-    }
-
-    pub fn set_timeout(&mut self, _timeout: Option<Duration>) {
-        match self.0 {}
-    }
-}
-
-#[cfg(not(unix))]
-impl Write for RingProducer {
-    fn write(&mut self, _buf: &[u8]) -> io::Result<usize> {
-        match self.0 {}
-    }
-
-    fn flush(&mut self) -> io::Result<()> {
-        match self.0 {}
-    }
-}
-
-#[cfg(not(unix))]
-pub struct RingConsumer(std::convert::Infallible);
-
-#[cfg(not(unix))]
-impl RingConsumer {
-    pub fn open(_path: &Path, _timeout: Option<Duration>) -> Result<RingConsumer> {
-        bail!("the shm transport requires a unix host")
-    }
-
-    pub fn set_timeout(&mut self, _timeout: Option<Duration>) {
-        match self.0 {}
-    }
-}
-
-#[cfg(not(unix))]
-impl Read for RingConsumer {
-    fn read(&mut self, _buf: &mut [u8]) -> io::Result<usize> {
-        match self.0 {}
-    }
-}
-
-// ---------------------------------------------------------------------
 
 /// Monotone suffix so one process can create several launch dirs.
-static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+/// Deliberately std (not loom) — it is process bookkeeping, not part of
+/// the modeled ring protocol.
+static DIR_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
 
 /// A launch's segment directory: one ring file per directed node pair.
 /// The creating process (`owned = true`) removes the whole directory on
@@ -559,9 +677,10 @@ impl SegmentDir {
     /// is removed before the error surfaces.
     pub fn create(nodes: usize, ring_bytes: usize) -> Result<SegmentDir> {
         ensure!(nodes >= 1, "a launch needs at least one node");
-        let seq = DIR_SEQ.fetch_add(1, Ordering::Relaxed);
-        let path =
-            shm_base_dir().join(format!("daso-shm-{}-{}", std::process::id(), seq));
+        // audit: allow(atomic-ordering): process-local monotone name
+        // counter; no memory is published under it.
+        let seq = DIR_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let path = shm_base_dir().join(format!("daso-shm-{}-{}", std::process::id(), seq));
         std::fs::create_dir(&path).with_context(|| format!("creating segment dir {path:?}"))?;
         let dir = SegmentDir { path, owned: true };
         for from in 0..nodes {
@@ -603,14 +722,23 @@ impl Drop for SegmentDir {
     }
 }
 
-#[cfg(all(test, unix))]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use crate::comm::channels::Payload;
     use crate::comm::transport::wire::{read_message, write_frame, write_frame_pipelined, Frame};
     use crate::comm::Wire;
 
-    fn pair(capacity: usize) -> (RingProducer, RingConsumer, SegmentDir) {
+    /// In-memory pair: runs on every platform and under Miri/TSan.
+    fn mem_pair(capacity: usize) -> (RingProducer, RingConsumer) {
+        let (sp, sc) = Segment::in_memory_pair(capacity);
+        let p = RingProducer::new(sp, Some(Duration::from_secs(5)));
+        let c = RingConsumer::new(sc, Some(Duration::from_secs(5)));
+        (p, c)
+    }
+
+    #[cfg(all(unix, not(miri)))]
+    fn file_pair(capacity: usize) -> (RingProducer, RingConsumer, SegmentDir) {
         let dir = SegmentDir::create(2, capacity).unwrap();
         let path = dir.ring(0, 1);
         let p = RingProducer::open(&path, Some(Duration::from_secs(5))).unwrap();
@@ -621,8 +749,9 @@ mod tests {
     #[test]
     fn ring_streams_bytes_across_threads_with_wraparound() {
         // capacity far below the payload so every frame wraps many times
-        let (mut p, mut c, _dir) = pair(256);
-        let data: Vec<u8> = (0..100_000u32).map(|i| (i * 7) as u8).collect();
+        let (mut p, mut c) = mem_pair(256);
+        let total: usize = if cfg!(miri) { 20_000 } else { 100_000 };
+        let data: Vec<u8> = (0..total as u32).map(|i| (i * 7) as u8).collect();
         let expect = data.clone();
         let writer = std::thread::spawn(move || {
             p.write_all(&data).unwrap();
@@ -634,9 +763,24 @@ mod tests {
         assert_eq!(got, expect);
     }
 
+    #[cfg(all(unix, not(miri)))]
+    #[test]
+    fn mapped_ring_streams_bytes_with_wraparound() {
+        let (mut p, mut c, _dir) = file_pair(256);
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i * 7) as u8).collect();
+        let expect = data.clone();
+        let writer = std::thread::spawn(move || {
+            p.write_all(&data).unwrap();
+        });
+        let mut got = vec![0u8; expect.len()];
+        c.read_exact(&mut got).unwrap();
+        writer.join().unwrap();
+        assert_eq!(got, expect);
+    }
+
     #[test]
     fn frames_cross_the_ring_bit_exact_including_chunked() {
-        let (mut p, mut c, _dir) = pair(512);
+        let (mut p, mut c) = mem_pair(512);
         let mut vals: Vec<f32> = (0..1000).map(|i| i as f32 * 0.37 - 12.0).collect();
         Wire::Bf16.quantize(&mut vals);
         let frame =
@@ -664,7 +808,7 @@ mod tests {
 
     #[test]
     fn dropped_producer_is_eof_after_drain() {
-        let (mut p, mut c, _dir) = pair(1024);
+        let (mut p, mut c) = mem_pair(1024);
         write_frame(&mut p, &Frame::MeshWelcome { version: 4, node: 1, book_digest: 7 }, Wire::F32)
             .unwrap();
         drop(p);
@@ -678,9 +822,28 @@ mod tests {
         assert!(err.contains("peer closed"), "{err}");
     }
 
+    /// The close-vs-publish race, std-thread smoke edition (the loom
+    /// build in tests/ring_loom.rs checks it exhaustively): a producer
+    /// that writes and immediately drops must never lose the bytes to
+    /// an early EOF.
+    #[test]
+    fn close_vs_publish_never_drops_the_final_bytes() {
+        for round in 0..16u8 {
+            let (mut p, mut c) = mem_pair(8);
+            let t = std::thread::spawn(move || {
+                p.write_all(&[round; 5]).unwrap();
+                // p drops here: the closed flag follows the publish
+            });
+            let mut got = Vec::new();
+            c.read_to_end(&mut got).unwrap();
+            t.join().unwrap();
+            assert_eq!(got, vec![round; 5]);
+        }
+    }
+
     #[test]
     fn full_ring_with_stalled_consumer_times_out() {
-        let (mut p, _c, _dir) = pair(64);
+        let (mut p, _c) = mem_pair(64);
         p.set_timeout(Some(Duration::from_millis(50)));
         let big = vec![0u8; 1024];
         let err = p.write_all(&big).unwrap_err();
@@ -689,7 +852,7 @@ mod tests {
 
     #[test]
     fn dropped_consumer_is_broken_pipe() {
-        let (mut p, c, _dir) = pair(64);
+        let (mut p, c) = mem_pair(64);
         drop(c);
         let big = vec![0u8; 1024];
         let err = p.write_all(&big).unwrap_err();
@@ -698,7 +861,7 @@ mod tests {
 
     #[test]
     fn empty_ring_read_times_out_bounded() {
-        let (_p, mut c, _dir) = pair(64);
+        let (_p, mut c) = mem_pair(64);
         c.set_timeout(Some(Duration::from_millis(50)));
         let mut buf = [0u8; 4];
         let err = c.read_exact(&mut buf).unwrap_err();
@@ -708,19 +871,20 @@ mod tests {
     #[test]
     fn garbage_on_the_ring_is_a_named_error_not_a_panic() {
         // a corrupt length prefix must fail decode exactly like tcp
-        let (mut p, mut c, _dir) = pair(1024);
+        let (mut p, mut c) = mem_pair(1024);
         p.write_all(&u32::MAX.to_le_bytes()).unwrap();
         p.write_all(&[0u8; 32]).unwrap();
         let err = read_message(&mut c).unwrap_err().to_string();
         assert!(err.contains("implausible frame length"), "{err}");
         // and a bogus tag inside a plausible frame is a named error too
-        let (mut p2, mut c2, _dir2) = pair(1024);
+        let (mut p2, mut c2) = mem_pair(1024);
         p2.write_all(&4u32.to_le_bytes()).unwrap();
         p2.write_all(&[99u8, 0, 0, 0]).unwrap();
         let err = read_message(&mut c2).unwrap_err().to_string();
         assert!(err.contains("unknown frame tag"), "{err}");
     }
 
+    #[cfg(all(unix, not(miri)))]
     #[test]
     fn consumer_detects_a_killed_producer_without_close_flag() {
         if !Path::new("/proc/self").exists() {
@@ -746,6 +910,7 @@ mod tests {
         );
     }
 
+    #[cfg(all(unix, not(miri)))]
     #[test]
     fn segment_open_rejects_foreign_and_truncated_files() {
         let dir = SegmentDir::create(1, 64).unwrap();
@@ -759,6 +924,7 @@ mod tests {
         assert!(err.contains("truncated"), "{err}");
     }
 
+    #[cfg(all(unix, not(miri)))]
     #[test]
     fn segment_dir_creates_full_mesh_and_cleans_up_on_drop() {
         let dir = SegmentDir::create(3, 128).unwrap();

@@ -330,8 +330,9 @@ fn put_f64_slice(out: &mut Vec<u8>, v: &[f64]) {
     put_u64(out, v.len() as u64);
     #[cfg(target_endian = "little")]
     {
-        let bytes =
-            unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 8) };
+        // SAFETY: any f64 slice is valid to view as initialized bytes;
+        // the length is exactly the slice's size in bytes.
+        let bytes = unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 8) };
         out.extend_from_slice(bytes);
     }
     #[cfg(not(target_endian = "little"))]
@@ -362,6 +363,8 @@ fn put_u16_elems_with(out: &mut Vec<u8>, v: &[f32], enc: fn(f32) -> u16) {
 fn put_f32_elems(out: &mut Vec<u8>, v: &[f32]) {
     #[cfg(target_endian = "little")]
     {
+        // SAFETY: any f32 slice is valid to view as initialized bytes;
+        // the length is exactly the slice's size in bytes.
         let bytes = unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 4) };
         out.extend_from_slice(bytes);
     }
@@ -389,6 +392,9 @@ fn append_wire_elems(kind: u8, raw: &[u8], out: &mut Vec<f32>) -> Result<()> {
             let n = raw.len() / 4;
             let start = out.len();
             out.resize(start + n, 0.0);
+            // SAFETY: `out[start..]` holds exactly `n` freshly resized
+            // f32s (`n * 4` writable bytes), `raw` holds `n * 4`
+            // readable bytes, and the two buffers never alias.
             #[cfg(target_endian = "little")]
             unsafe {
                 std::ptr::copy_nonoverlapping(
@@ -505,6 +511,9 @@ impl<'a> Cursor<'a> {
         let raw = self.take(n * 4)?;
         let mut out = vec![0.0f32; n];
         // bulk decode mirrors the bulk encode above
+        // SAFETY: `out` holds exactly `n` f32s (`n * 4` writable
+        // bytes), `take` guaranteed `raw` holds `n * 4` readable
+        // bytes, and the buffers never alias.
         #[cfg(target_endian = "little")]
         unsafe {
             std::ptr::copy_nonoverlapping(raw.as_ptr(), out.as_mut_ptr().cast::<u8>(), n * 4);
@@ -520,6 +529,9 @@ impl<'a> Cursor<'a> {
         let n = self.len_prefix()?;
         let raw = self.take(n * 8)?;
         let mut out = vec![0.0f64; n];
+        // SAFETY: `out` holds exactly `n` f64s (`n * 8` writable
+        // bytes), `take` guaranteed `raw` holds `n * 8` readable
+        // bytes, and the buffers never alias.
         #[cfg(target_endian = "little")]
         unsafe {
             std::ptr::copy_nonoverlapping(raw.as_ptr(), out.as_mut_ptr().cast::<u8>(), n * 8);

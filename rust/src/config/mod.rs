@@ -65,6 +65,54 @@ pub struct RunSpec {
 }
 
 impl RunSpec {
+    /// Build a run spec from parsed CLI args — the one path `daso
+    /// train`, `daso launch` and every launched child process all go
+    /// through, so a forwarded flag can never be interpreted
+    /// differently by a child. The launch-forwarding parity test
+    /// drives this from a reconstructed child argv and compares specs.
+    pub fn from_args(args: &crate::cli::Args) -> Result<RunSpec> {
+        let model = args.get("model").unwrap_or("mlp");
+        let mut spec = RunSpec::default_for(model);
+        if let Some(path) = args.get("config") {
+            spec.load_file(path)?;
+        }
+        if let Some(model) = args.get("model") {
+            spec.model = model.to_string();
+        }
+        if let Some(strategy) = args.get("strategy") {
+            spec.set(&format!("strategy={strategy}"))?;
+        }
+        if let Some(executor) = args.get("executor") {
+            spec.set(&format!("executor={executor}"))?;
+        }
+        if let Some(transport) = args.get("transport") {
+            spec.set(&format!("transport={transport}"))?;
+        }
+        if let Some(wire) = args.get("wire") {
+            spec.set(&format!("global_wire={wire}"))?;
+        }
+        if let Some(artifacts) = args.get("artifacts") {
+            spec.artifacts_dir = artifacts.to_string();
+        }
+        if let Some(out) = args.get("out") {
+            spec.out_dir = Some(out.to_string());
+        }
+        if let Some(path) = args.get("trace-out") {
+            spec.set(&format!("trace_out={path}"))?;
+        }
+        if let Some(dir) = args.get("checkpoint-dir") {
+            spec.set(&format!("checkpoint_dir={dir}"))?;
+        }
+        if args.get_bool("resume") {
+            spec.train.resume = true;
+        }
+        for assignment in args.get_all("set") {
+            spec.set(assignment)?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
     pub fn default_for(model: &str) -> RunSpec {
         let train = TrainConfig::quick(2, 4, 12);
         let daso = DasoConfig::new(train.epochs);

@@ -246,9 +246,11 @@ impl Daso {
                 }
             } else {
                 let mut grouped: Vec<&mut Vec<f32>> = Vec::with_capacity(ranks.len());
-                // safety: ranks are disjoint indices into ctx.grads
                 let grads_ptr = ctx.grads.as_mut_ptr();
                 for &r in &ranks {
+                    // SAFETY: `ranks` are disjoint in-bounds indices
+                    // into ctx.grads, so every &mut aliases a distinct
+                    // element and none outlives this block.
                     grouped.push(unsafe { &mut *grads_ptr.add(r) });
                 }
                 ring_allreduce_mean(&mut grouped, Wire::F32);
@@ -303,6 +305,9 @@ impl Daso {
             let ptr = workers.as_mut_ptr();
             let mut bufs: Vec<&mut Vec<f32>> = members
                 .iter()
+                // SAFETY: `members` are distinct in-bounds ranks, so
+                // every &mut params aliases a distinct worker and none
+                // outlives this block.
                 .map(|&r| unsafe { &mut (*ptr.add(r)).params })
                 .collect();
             // transport packaging: the shared wire::roundtrip helper

@@ -22,6 +22,7 @@ fn main() {
         "train" => cmd_train(&args),
         "launch" => cmd_launch(&args),
         "bench" => cmd_bench(&args),
+        "audit" => cmd_audit(&args),
         "sweep" => cmd_sweep(&args),
         "figures" => cmd_figures(&args),
         "project" => cmd_project(&args),
@@ -42,47 +43,11 @@ fn main() {
     }
 }
 
+/// Flag parsing lives in `RunSpec::from_args` (shared with the
+/// launch-forwarding parity test); this alias keeps the call sites
+/// short.
 fn build_spec(args: &Args) -> Result<RunSpec> {
-    let model = args.get("model").unwrap_or("mlp");
-    let mut spec = RunSpec::default_for(model);
-    if let Some(path) = args.get("config") {
-        spec.load_file(path)?;
-    }
-    if let Some(model) = args.get("model") {
-        spec.model = model.to_string();
-    }
-    if let Some(strategy) = args.get("strategy") {
-        spec.set(&format!("strategy={strategy}"))?;
-    }
-    if let Some(executor) = args.get("executor") {
-        spec.set(&format!("executor={executor}"))?;
-    }
-    if let Some(transport) = args.get("transport") {
-        spec.set(&format!("transport={transport}"))?;
-    }
-    if let Some(wire) = args.get("wire") {
-        spec.set(&format!("global_wire={wire}"))?;
-    }
-    if let Some(artifacts) = args.get("artifacts") {
-        spec.artifacts_dir = artifacts.to_string();
-    }
-    if let Some(out) = args.get("out") {
-        spec.out_dir = Some(out.to_string());
-    }
-    if let Some(path) = args.get("trace-out") {
-        spec.set(&format!("trace_out={path}"))?;
-    }
-    if let Some(dir) = args.get("checkpoint-dir") {
-        spec.set(&format!("checkpoint_dir={dir}"))?;
-    }
-    if args.get_bool("resume") {
-        spec.train.resume = true;
-    }
-    for assignment in args.get_all("set") {
-        spec.set(assignment)?;
-    }
-    spec.validate()?;
-    Ok(spec)
+    RunSpec::from_args(args)
 }
 
 /// Dispatch one run to the spec's executor. Returns `None` when this
@@ -272,6 +237,56 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
 }
 
+/// `daso audit`: run the repo-invariant static analyzer (crate
+/// `daso-audit`) over the source tree and exit non-zero on findings.
+/// `--doctor` proves every check fires on a doctored copy of the tree;
+/// `--update-protocol-lock` regenerates `audit/protocol.lock` after a
+/// deliberate wire-surface change.
+fn cmd_audit(args: &Args) -> Result<()> {
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        // auto-detect: run from rust/ or from the repo root
+        None if std::path::Path::new("src/config/mod.rs").is_file() => {
+            std::path::PathBuf::from(".")
+        }
+        None => std::path::PathBuf::from("rust"),
+    };
+    if args.get_bool("doctor") {
+        let report = daso_audit::doctor::run(&root).map_err(|e| anyhow!("{e}"))?;
+        for line in &report {
+            println!("{line}");
+        }
+        println!("daso audit --doctor: all {} checks fire", daso_audit::ALL_CHECKS.len());
+        return Ok(());
+    }
+    if args.get_bool("update-protocol-lock") {
+        let wire_path = root.join(daso_audit::protocol::WIRE_FILE);
+        let text = std::fs::read_to_string(&wire_path)
+            .with_context(|| format!("reading {}", wire_path.display()))?;
+        let surface = daso_audit::protocol::extract_surface(&daso_audit::scan::scan(&text))
+            .ok_or_else(|| {
+                anyhow!("could not parse the protocol surface in {}", wire_path.display())
+            })?;
+        daso_audit::protocol::write_lock(&root, &surface).map_err(|e| anyhow!("{e}"))?;
+        println!(
+            "wrote {} (version {}, fingerprint {})",
+            root.join(daso_audit::protocol::LOCK_FILE).display(),
+            surface.version,
+            surface.fingerprint
+        );
+    }
+    let findings = daso_audit::run_all(&root).map_err(|e| anyhow!("{e}"))?;
+    if args.get_bool("json") {
+        println!("{}", daso_audit::render_json(&findings));
+    } else {
+        print!("{}", daso_audit::render_text(&findings));
+    }
+    if !findings.is_empty() {
+        bail!("daso audit: {} finding(s)", findings.len());
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let spec = build_spec(args)?;
     let engine = Engine::auto(&spec.artifacts_dir);
@@ -332,17 +347,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
     // base peer command line: the run-defining flags plus user
     // overrides; launch_attempt appends the per-attempt forced entries
     // (executor, topology, resume/generation) after these
-    let mut base_args: Vec<String> = vec!["train".into()];
-    for key in ["model", "strategy", "config", "artifacts"] {
-        if let Some(v) = args.get(key) {
-            base_args.push(format!("--{key}"));
-            base_args.push(v.to_string());
-        }
-    }
-    for v in args.get_all("set") {
-        base_args.push("--set".into());
-        base_args.push(v.to_string());
-    }
+    let base_args = daso::cluster::launch::base_child_args(args);
 
     let engine = Engine::auto(&spec.artifacts_dir);
     let rt = engine.model(&spec.model)?;
@@ -411,33 +416,10 @@ fn launch_attempt(
     let launcher = daso::cluster::launch::Launcher::bind(bind, nodes, wpn, transport)?;
     let addr = launcher.addr();
 
-    // forced as trailing --set entries: build_spec applies --set
-    // overrides last, so a forwarded `--set executor=...` (or topology
-    // key) cannot make a child diverge from the launch. The resolved
-    // wire format is forced too (covering --wire, config files and
-    // DASO_GLOBAL_WIRE on the launcher side); the HELLO/WELCOME
-    // handshake double-checks it, and the generation stamp makes peers
-    // of a previous elastic attempt unable to rejoin this one.
+    // forced as trailing --set entries (see launch::forced_child_sets
+    // for why the forced list wins over anything a user forwarded)
     let mut train_args: Vec<String> = base_args.to_vec();
-    for forced in [
-        "executor=multiprocess".to_string(),
-        format!("nodes={nodes}"),
-        format!("gpus_per_node={wpn}"),
-        format!("global_wire={}", spec.train.global_wire.name()),
-        format!("leader_placement={}", spec.train.leader_placement.name()),
-        format!("pipeline_chunk_elems={}", spec.train.pipeline_chunk_elems),
-        format!("transport={}", transport.name()),
-        format!("checkpoint_dir={}", spec.train.checkpoint_dir),
-        format!("checkpoint_every_epochs={}", spec.train.checkpoint_every_epochs),
-        format!("resume={}", spec.train.resume),
-        format!("stop_after_epochs={}", spec.train.stop_after_epochs),
-        format!("straggler_node={}", spec.train.straggler_node),
-        format!("straggler_factor={}", spec.train.straggler_factor),
-        format!("generation={}", spec.train.launch_generation),
-        // tracing must be symmetric: every process records and joins
-        // the obs gather, or no process does
-        format!("trace={}", spec.train.trace),
-    ] {
+    for forced in daso::cluster::launch::forced_child_sets(spec, transport) {
         train_args.push("--set".into());
         train_args.push(forced);
     }

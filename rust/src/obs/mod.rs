@@ -103,6 +103,9 @@ pub fn disable() {
 /// The one load every probe pays when tracing is off.
 #[inline]
 pub fn is_enabled() -> bool {
+    // audit: allow(atomic-ordering): intentionally the cheapest
+    // possible probe on the hot path; enable/disable use SeqCst and a
+    // stale read only mis-skips one event at the toggle edge.
     ENABLED.load(Ordering::Relaxed)
 }
 
@@ -140,6 +143,8 @@ fn thread_buf() -> Arc<Mutex<ThreadBuf>> {
         if let Some(buf) = slot.as_ref() {
             return buf.clone();
         }
+        // audit: allow(atomic-ordering): monotone lane-id counter; no
+        // memory is published under it.
         let lane = NEXT_LANE.fetch_add(1, Ordering::Relaxed);
         let label = std::thread::current()
             .name()
@@ -169,6 +174,8 @@ fn push_event(ev: RawEvent) {
     let buf = thread_buf();
     let mut b = buf.lock().unwrap();
     if b.events.len() >= MAX_THREAD_EVENTS {
+        // audit: allow(atomic-ordering): best-effort drop counter read
+        // only at drain time, with no ordering dependence.
         DROPPED.fetch_add(1, Ordering::Relaxed);
         return;
     }
@@ -306,6 +313,8 @@ pub fn drain(default_node: i64) -> (Vec<EventOut>, Vec<LaneInfo>, u64) {
     }
     events.sort_by_key(|e| (e.node, e.lane, e.start_ns));
     lanes.sort_by_key(|l| (l.node, l.lane));
+    // audit: allow(atomic-ordering): best-effort drop counter; drain
+    // happens after the phases being counted have quiesced.
     (events, lanes, DROPPED.swap(0, Ordering::Relaxed))
 }
 
@@ -315,6 +324,7 @@ pub fn reset_for_tests() {
     for buf in registry().lock().unwrap().iter() {
         buf.lock().unwrap().events.clear();
     }
+    // audit: allow(atomic-ordering): single-threaded test hook.
     DROPPED.store(0, Ordering::Relaxed);
 }
 

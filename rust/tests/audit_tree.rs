@@ -1,0 +1,46 @@
+//! The audit gate, turned on itself: the committed tree must be
+//! finding-free, the committed protocol lock must match the live wire
+//! surface, and the doctored-tree self-test must prove every check
+//! still fires. Integration tests run with the package root (`rust/`)
+//! as the working directory, which is exactly the tree `daso audit`
+//! expects.
+
+use std::path::Path;
+
+#[test]
+fn the_committed_tree_is_audit_clean() {
+    let findings = daso_audit::run_all(Path::new(".")).unwrap();
+    assert!(
+        findings.is_empty(),
+        "`daso audit` has findings on the committed tree:\n{}",
+        daso_audit::render_text(&findings)
+    );
+}
+
+#[test]
+fn the_protocol_lock_matches_the_live_wire_surface() {
+    let src = std::fs::read_to_string(daso_audit::protocol::WIRE_FILE).unwrap();
+    let surface = daso_audit::protocol::extract_surface(&daso_audit::scan::scan(&src))
+        .expect("wire.rs protocol surface must be parseable");
+    let lock = daso_audit::protocol::read_lock(Path::new("."))
+        .unwrap()
+        .expect("audit/protocol.lock must be committed");
+    assert_eq!(
+        (lock.version, lock.fingerprint.as_str()),
+        (surface.version, surface.fingerprint.as_str()),
+        "wire surface drifted from audit/protocol.lock — bump PROTOCOL_VERSION and run \
+         `daso audit --update-protocol-lock`"
+    );
+}
+
+#[test]
+fn the_doctor_proves_every_check_fires_on_this_tree() {
+    let report = daso_audit::doctor::run(Path::new(".")).unwrap();
+    assert_eq!(report.len(), daso_audit::ALL_CHECKS.len(), "{report:?}");
+    for check in daso_audit::ALL_CHECKS {
+        assert!(
+            report.iter().any(|line| line.contains(&format!("`{check}`"))),
+            "no doctor report line for check `{check}`: {report:?}"
+        );
+    }
+}

@@ -1,0 +1,163 @@
+//! Launcher key-forwarding parity: every config key a user can set on
+//! `daso launch` must reach the spawned children so that the child's
+//! resolved `RunSpec` equals the coordinator's — otherwise a key
+//! silently diverges between processes (the bug class `daso audit`'s
+//! config-forwarding check guards statically; this test proves it
+//! end-to-end through the real argv construction).
+//!
+//! The key list is not hand-maintained: it is parsed out of the real
+//! `src/config/mod.rs` by the audit crate's registry parser, and the
+//! sample table below panics on any key it has never heard of — adding
+//! a config key without deciding its forwarding story fails this test.
+
+use daso::cli::Args;
+use daso::cluster::launch::{base_child_args, forced_child_sets};
+use daso::cluster::ExecutorKind;
+use daso::config::RunSpec;
+
+/// A `--set` sample for every registered config key. `None` means the
+/// key is exercised through a dedicated launch flag instead (and, for
+/// forwardable keys, must then be covered by `forced_child_sets`).
+fn sample_for(key: &str) -> Option<String> {
+    let v = match key {
+        "model" => "resnet",
+        // --resume restores DASO state, so the strategy sample must be
+        // daso for validate() to accept the combination
+        "strategy" => "daso",
+        // the launcher forces executor=multiprocess over this
+        "executor" => "serial",
+        "transport" => "hybrid",
+        "artifacts_dir" => "arts",
+        // coordinator-only, exercised via --out / --trace-out below
+        "out_dir" | "trace_out" => return None,
+        // exercised via the --trace-out side effect + forced trace=
+        "train.trace" => return None,
+        // exercised via --nodes / --workers-per-node / --wire /
+        // --checkpoint-dir / --resume launch flags + the forced list
+        "train.nodes" | "train.gpus_per_node" | "train.global_wire" | "train.checkpoint_dir"
+        | "train.resume" => return None,
+        "train.epochs" => "4",
+        "train.train_samples" => "64",
+        "train.val_samples" => "32",
+        "train.seed" => "7",
+        "train.base_lr" => "0.05",
+        "train.lr_scale" => "1.5",
+        "train.lr_warmup_epochs" => "1",
+        "train.lr_decay" => "0.5",
+        "train.lr_patience" => "2",
+        "train.compute_time_s" => "0.25",
+        "train.eval_every" => "2",
+        "train.verbose" => "false",
+        "train.comm_timeout_ms" => "1234",
+        "train.leader_placement" => "star",
+        "train.pipeline_chunk_elems" => "1024",
+        "train.checkpoint_every_epochs" => "2",
+        "train.stop_after_epochs" => "3",
+        "train.straggler_node" => "1",
+        "train.straggler_factor" => "1.5",
+        "train.generation" => "2",
+        "daso.b_initial" => "2",
+        "daso.warmup_epochs" => "1",
+        "daso.cooldown_epochs" => "1",
+        "daso.plateau_patience" => "2",
+        "daso.kernel_local_avg" => "false",
+        "daso.staleness_blend" => "true",
+        "daso.absorb_stragglers" => "true",
+        "daso.absorb_threshold" => "0.5",
+        "daso.absorb_patience" => "2",
+        "fabric.intra_latency_s" => "0.00001",
+        "fabric.intra_bandwidth" => "1e10",
+        "fabric.inter_latency_s" => "0.0001",
+        "fabric.inter_bandwidth" => "1e9",
+        other => panic!(
+            "config key `{other}` has no forwarding sample in launch_forwarding.rs; \
+             decide whether it is forced, flag-carried or local-only and add it here"
+        ),
+    };
+    Some(format!("{key}={v}"))
+}
+
+#[test]
+fn every_config_key_round_trips_to_children() {
+    // enumerate the real key registry (the same parse `daso audit` uses)
+    let src = std::fs::read_to_string("src/config/mod.rs").unwrap();
+    let groups = daso_audit::checks::config_key_groups(&daso_audit::scan::scan(&src));
+    assert!(groups.len() >= 40, "config key registry parse broke: {} groups", groups.len());
+
+    let mut argv: Vec<String> = [
+        "launch",
+        "--nodes",
+        "3",
+        "--workers-per-node",
+        "2",
+        "--wire",
+        "bf16",
+        "--checkpoint-dir",
+        "ckpts",
+        "--resume",
+        "--out",
+        "outs",
+        "--trace-out",
+        "trace.json",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    for g in &groups {
+        if let Some(assignment) = sample_for(&g.canonical) {
+            argv.push("--set".into());
+            argv.push(assignment);
+        }
+    }
+    let parent_args = Args::parse(argv).unwrap();
+
+    // what cmd_launch computes before spawning peers
+    let mut parent = RunSpec::from_args(&parent_args).unwrap();
+    parent.executor = ExecutorKind::Multiprocess;
+    if let Some(n) = parent_args.get_usize("nodes").unwrap() {
+        parent.train.nodes = n;
+    }
+    if let Some(w) = parent_args.get_usize("workers-per-node").unwrap() {
+        parent.train.gpus_per_node = w;
+    }
+    let transport = parent.resolved_transport().unwrap();
+    parent.transport = Some(transport);
+
+    // the exact argv the launcher hands each child process
+    let mut child_argv = base_child_args(&parent_args);
+    for forced in forced_child_sets(&parent, transport) {
+        child_argv.push("--set".into());
+        child_argv.push(forced);
+    }
+    let child_args = Args::parse(child_argv).unwrap();
+    assert_eq!(child_args.command, "train");
+    let child = RunSpec::from_args(&child_args).unwrap();
+
+    // coordinator-only surface: children neither write run reports nor
+    // own the trace file (their spans ship to node 0 in the obs gather)
+    parent.out_dir = None;
+    parent.trace_out = None;
+
+    assert_eq!(
+        format!("{parent:#?}"),
+        format!("{child:#?}"),
+        "a config key diverged between the launch coordinator and its children"
+    );
+}
+
+#[test]
+fn forced_entries_track_the_spec_not_the_defaults() {
+    let args = Args::parse(
+        ["launch", "--set", "stop_after_epochs=9", "--set", "straggler_factor=2.5"]
+            .iter()
+            .map(|s| s.to_string()),
+    )
+    .unwrap();
+    let mut spec = RunSpec::from_args(&args).unwrap();
+    spec.executor = ExecutorKind::Multiprocess;
+    let forced = forced_child_sets(&spec, daso::comm::TransportKind::Tcp);
+    assert!(forced.contains(&"stop_after_epochs=9".to_string()), "{forced:?}");
+    assert!(forced.contains(&"straggler_factor=2.5".to_string()), "{forced:?}");
+    assert!(forced.contains(&"executor=multiprocess".to_string()), "{forced:?}");
+    assert!(forced.contains(&"transport=tcp".to_string()), "{forced:?}");
+}

@@ -1,0 +1,99 @@
+//! Exhaustive model checking of the shm SPSC ring protocol with loom.
+//!
+//! Built and run only by CI's `analysis` job:
+//!
+//! ```text
+//! sed -i 's/^# \[target/[target/; s/^# loom = /loom = /' Cargo.toml
+//! RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 LOOM_MAX_BRANCHES=100000 \
+//!     cargo test --release --test ring_loom
+//! ```
+//!
+//! Under `cfg(loom)` the ring's atomics are loom's and its backoff
+//! yields to the model scheduler, so `loom::model` explores every
+//! reachable interleaving (bounded by `LOOM_MAX_PREEMPTIONS`) of the
+//! release/acquire publication protocol: write-wrap, drain-then-EOF,
+//! the close-vs-publish race, and consumer-drop `BrokenPipe`. These are
+//! the races a timing-based unit test can only sample.
+#![cfg(loom)]
+
+use std::io::{Read, Write};
+
+use daso::comm::transport::shm::{RingConsumer, RingProducer, Segment};
+
+fn pair(capacity: usize) -> (RingProducer, RingConsumer) {
+    let (sp, sc) = Segment::in_memory_pair(capacity);
+    (RingProducer::new(sp, None), RingConsumer::new(sc, None))
+}
+
+/// Bytes published across a wrap arrive in order, bit-exact, in every
+/// interleaving.
+#[test]
+fn loom_write_wrap_preserves_order() {
+    loom::model(|| {
+        let (mut p, mut c) = pair(4);
+        let t = loom::thread::spawn(move || {
+            // 6 bytes through a 4-byte ring: the second write must
+            // block until the consumer frees space, and the copy wraps
+            p.write_all(&[1, 2, 3, 4, 5, 6]).unwrap();
+        });
+        let mut got = [0u8; 6];
+        c.read_exact(&mut got).unwrap();
+        t.join().unwrap();
+        assert_eq!(got, [1, 2, 3, 4, 5, 6]);
+    });
+}
+
+/// The close-vs-publish race: a producer that publishes and
+/// immediately drops must never lose the final bytes to an early EOF.
+/// This is the exact schedule the consumer's re-read-head-after-close
+/// step exists for.
+#[test]
+fn loom_close_vs_publish_never_drops_bytes() {
+    loom::model(|| {
+        let (mut p, mut c) = pair(8);
+        let t = loom::thread::spawn(move || {
+            p.write_all(&[7, 8, 9]).unwrap();
+            // p drops here: the closed-flag store races the consumer's
+            // emptiness check
+        });
+        let mut got = Vec::new();
+        c.read_to_end(&mut got).unwrap();
+        t.join().unwrap();
+        assert_eq!(got, vec![7, 8, 9]);
+    });
+}
+
+/// Drain-then-EOF with a wrap: everything published before the close
+/// arrives (across a wrap boundary), then exactly EOF — never a lost
+/// byte, never a phantom one.
+#[test]
+fn loom_drain_then_eof_across_wrap() {
+    loom::model(|| {
+        let (mut p, mut c) = pair(2);
+        let t = loom::thread::spawn(move || {
+            p.write_all(&[10, 11, 12]).unwrap();
+        });
+        let mut got = Vec::new();
+        c.read_to_end(&mut got).unwrap();
+        t.join().unwrap();
+        assert_eq!(got, vec![10, 11, 12]);
+    });
+}
+
+/// A dropped consumer surfaces as `BrokenPipe` on an over-capacity
+/// write in every interleaving — the producer can never block forever
+/// on a peer that is gone.
+#[test]
+fn loom_consumer_drop_is_broken_pipe() {
+    loom::model(|| {
+        let (mut p, c) = pair(2);
+        let t = loom::thread::spawn(move || {
+            drop(c);
+        });
+        // 5 bytes cannot fit in a 2-byte ring with no consumer: this
+        // must end in BrokenPipe (a prefix may be accepted first)
+        let err = p.write_all(&[0u8; 5]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::BrokenPipe, "{err}");
+        t.join().unwrap();
+    });
+}
