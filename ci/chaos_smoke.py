@@ -1,15 +1,30 @@
 #!/usr/bin/env python3
-"""Chaos smoke: SIGKILL a random peer of a live elastic launch.
+"""Chaos smoke: SIGKILL processes of a live elastic launch, then prove
+the run healed.
 
 Drives `daso launch` (3 node processes x 2 workers by default) with
 checkpointing on, waits until the first full checkpoint generation is on
-disk, then SIGKILLs one randomly chosen non-coordinator peer process.
-The launch must regroup onto the survivors and finish with exit code 0;
-the emitted run JSON is then checked by `check_run_json.py chaos`.
+disk, then SIGKILLs the victim(s) selected by `--kill`:
 
-Peers are found through /proc: direct children of the launch process
-whose environment carries DASO_NODE_ID >= 1, so the kill can never hit
-an unrelated process.
+  peer         one randomly chosen non-coordinator node process
+  coordinator  the node-0 child (the supervisor parent must survive it)
+  two-peers    two distinct peers, back-to-back (one regroup, two losses)
+
+The launch must shrink onto the survivors, run the interlude, grow back
+to full strength via rejoin, and finish with exit code 0. After every
+run this script asserts no `daso-shm-*` segment directory leaked under
+the shm base dir (tmpfs), across all of `--transport tcp|shm|hybrid`.
+
+Unless `--skip-control` is given, it then replays the `rejoin-snapshot-*`
+control copy the supervisor set aside — an uninterrupted resume from the
+exact grown snapshot the rejoin attempt started from — and requires the
+chaos run's results to be bit-identical to that clean continuation
+(`check_run_json.py parity`).
+
+Victims are found through /proc: direct children of the launch process
+whose environment carries DASO_NODE_ID, so the kill can never hit an
+unrelated process. Deeper semantic assertions over the emitted run JSON
+(lost_nodes, rejoins, restored world) live in `check_run_json.py chaos`.
 """
 
 import argparse
@@ -29,9 +44,10 @@ def ppid_of(pid):
     return int(stat.rsplit(")", 1)[1].split()[1])
 
 
-def peers_of(launch_pid):
-    """node id -> pid for every live peer child of the launch process."""
-    peers = {}
+def node_children_of(launch_pid):
+    """node id -> pid for every live node child of the launch process
+    (node 0 included — the coordinator is just another child)."""
+    nodes = {}
     for entry in os.listdir("/proc"):
         if not entry.isdigit():
             continue
@@ -45,10 +61,8 @@ def peers_of(launch_pid):
             continue  # raced a process exit
         for kv in environ:
             if kv.startswith(b"DASO_NODE_ID="):
-                node = int(kv.split(b"=", 1)[1])
-                if node >= 1:
-                    peers[node] = pid
-    return peers
+                nodes[int(kv.split(b"=", 1)[1])] = pid
+    return nodes
 
 
 def first_full_generation(ckpt_dir, world):
@@ -68,6 +82,166 @@ def first_full_generation(ckpt_dir, world):
     return False
 
 
+def shm_base_dir():
+    # mirrors rust/src/comm/transport/shm.rs shm_base_dir()
+    return "/dev/shm" if os.path.isdir("/dev/shm") else "/tmp"
+
+
+def shm_segment_dirs():
+    base = shm_base_dir()
+    try:
+        return {e for e in os.listdir(base) if e.startswith("daso-shm-")}
+    except OSError:
+        return set()
+
+
+def assert_shm_clean(before, what):
+    leaked = sorted(shm_segment_dirs() - before)
+    if leaked:
+        sys.exit(
+            f"FAIL: {what} leaked shm segment dir(s) under {shm_base_dir()}: {leaked}"
+        )
+    print(f"shm clean after {what}: no daso-shm-* leftovers")
+
+
+def launch_cmd(args, ckpt_dir, out_dir):
+    return [
+        args.bin, "launch",
+        "--nodes", str(args.nodes),
+        "--workers-per-node", str(args.workers),
+        "--transport", args.transport,
+        "--model", "mlp",
+        "--strategy", "daso",
+        "--checkpoint-dir", ckpt_dir,
+        "--set", f"epochs={args.epochs}",
+        "--set", f"checkpoint_every_epochs={args.checkpoint_every}",
+        "--set", "daso.warmup_epochs=1",
+        "--set", "daso.cooldown_epochs=1",
+        "--set", "train.train_samples=768",
+        "--set", "train.val_samples=128",
+        "--out", out_dir,
+        # traced: the healed trace + manifest must record the restored
+        # world (checked by check_run_json.py chaos)
+        "--trace-out", os.path.join(out_dir, "trace.json"),
+    ]
+
+
+def run_to_completion(cmd, log_path, deadline, proc=None):
+    """Wait out a launch (spawning it first unless `proc` is given)."""
+    with open(log_path, "ab") as log:
+        if proc is None:
+            print("+", " ".join(cmd), flush=True)
+            proc = subprocess.Popen(cmd, stdout=log, stderr=subprocess.STDOUT)
+        try:
+            rc = proc.wait(timeout=max(1, deadline - time.monotonic()))
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            sys.exit(f"launch did not finish before the deadline — see {log_path}")
+        except BaseException:
+            proc.kill()
+            raise
+    return rc
+
+
+def pick_victims(args, rng, nodes):
+    peers = sorted(n for n in nodes if n >= 1)
+    if args.kill == "coordinator":
+        if 0 not in nodes:
+            sys.exit("no node-0 child found under /proc — the coordinator must "
+                     "be a child of the launch process")
+        return [0]
+    if args.kill == "two-peers":
+        if len(peers) < 2 or args.nodes < 3:
+            sys.exit(f"two-peers mode needs >= 2 live peers of a >= 3 node "
+                     f"launch, have peers {peers}")
+        return rng.sample(peers, 2)
+    if not peers:
+        sys.exit("checkpoint exists but no live peer process was found under /proc")
+    return [rng.choice(peers)]
+
+
+def chaos_run(args, deadline, shm_before):
+    ckpt_dir, out_dir = args.ckpt_dir, args.out_dir
+    cmd = launch_cmd(args, ckpt_dir, out_dir)
+    print("+", " ".join(cmd), flush=True)
+    log_path = os.path.join(out_dir, "launch.log")
+    rng = random.Random(args.seed)
+    with open(log_path, "wb") as log:
+        proc = subprocess.Popen(cmd, stdout=log, stderr=subprocess.STDOUT)
+    try:
+        # let the cluster write one full snapshot before pulling nodes
+        world = args.nodes * args.workers
+        while not first_full_generation(ckpt_dir, world):
+            if proc.poll() is not None:
+                sys.exit(f"launch exited ({proc.returncode}) before the first "
+                         f"checkpoint generation — see {log_path}")
+            if time.monotonic() > deadline:
+                proc.kill()
+                sys.exit(f"no checkpoint generation before the deadline — see {log_path}")
+            time.sleep(0.05)
+
+        nodes = node_children_of(proc.pid)
+        victims = pick_victims(args, rng, nodes)
+        for v in victims:
+            print(f"first checkpoint is down; SIGKILLing node {v} "
+                  f"(pid {nodes[v]}) of {sorted(nodes)}", flush=True)
+            os.kill(nodes[v], signal.SIGKILL)
+    except BaseException:
+        proc.kill()
+        raise
+
+    rc = run_to_completion(None, log_path, deadline, proc=proc)
+    sys.stdout.write(open(log_path).read())
+    if rc != 0:
+        sys.exit(f"launch exited {rc} — the run must heal and complete "
+                 f"(kill={args.kill}, transport={args.transport})")
+    report = os.path.join(out_dir, "mlp_daso.json")
+    for needed in (report, os.path.join(out_dir, "trace.json"),
+                   os.path.join(out_dir, "mlp_daso.manifest.json")):
+        if not os.path.exists(needed):
+            sys.exit(f"launch succeeded but wrote no {needed}")
+    assert_shm_clean(shm_before, f"the {args.kill}-kill {args.transport} run")
+    print(f"chaos smoke: killed node(s) {victims}, run healed; report at {report}")
+    return report
+
+
+def control_run(args, chaos_report, deadline, shm_before):
+    """Uninterrupted resume from the rejoin control snapshot: must be
+    bit-identical to the chaos run that actually regrouped + rejoined."""
+    snapshots = sorted(e for e in os.listdir(args.ckpt_dir)
+                       if e.startswith("rejoin-snapshot-"))
+    if not snapshots:
+        sys.exit(f"no rejoin-snapshot-* control copy in {args.ckpt_dir} — "
+                 "the supervisor must set one aside at every rejoin")
+    newest = snapshots[-1]
+    gen_name = newest[len("rejoin-snapshot-"):]
+    control_ckpt = os.path.join(args.out_dir, "control_ckpt")
+    control_out = os.path.join(args.out_dir, "control_out")
+    for d in (control_ckpt, control_out):
+        shutil.rmtree(d, ignore_errors=True)
+        os.makedirs(d)
+    shutil.copytree(os.path.join(args.ckpt_dir, newest),
+                    os.path.join(control_ckpt, gen_name))
+    print(f"control: resuming clean from {newest} as {gen_name}", flush=True)
+
+    cmd = launch_cmd(args, control_ckpt, control_out) + ["--resume"]
+    rc = run_to_completion(cmd, os.path.join(control_out, "launch.log"), deadline)
+    if rc != 0:
+        sys.exit(f"control resume exited {rc} — see {control_out}/launch.log")
+    control_report = os.path.join(control_out, "mlp_daso.json")
+    assert_shm_clean(shm_before, "the control resume")
+
+    checker = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "check_run_json.py")
+    subprocess.run(
+        [sys.executable, checker, "parity", "--a", chaos_report,
+         "--b", control_report],
+        check=True,
+    )
+    print("rejoin bit-identity ok: chaos run == uninterrupted control "
+          f"from {gen_name}")
+
+
 def main():
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--bin", default="./target/release/daso")
@@ -75,82 +249,29 @@ def main():
     parser.add_argument("--workers", type=int, default=2)
     parser.add_argument("--epochs", type=int, default=8)
     parser.add_argument("--checkpoint-every", type=int, default=2)
+    parser.add_argument("--transport", choices=("tcp", "shm", "hybrid"),
+                        default="tcp")
+    parser.add_argument("--kill", choices=("peer", "coordinator", "two-peers"),
+                        default="peer")
     parser.add_argument("--out-dir", default="/tmp/daso_chaos")
     parser.add_argument("--ckpt-dir", default="/tmp/daso_chaos_ckpt")
-    parser.add_argument("--timeout", type=int, default=300, help="whole-run bound, seconds")
-    parser.add_argument("--seed", type=int, default=None, help="fix the victim choice")
+    parser.add_argument("--timeout", type=int, default=420,
+                        help="whole-script bound, seconds (chaos + control)")
+    parser.add_argument("--seed", type=int, default=None,
+                        help="fix the victim choice")
+    parser.add_argument("--skip-control", action="store_true",
+                        help="skip the rejoin bit-identity control resume")
     args = parser.parse_args()
 
-    rng = random.Random(args.seed)
     for d in (args.out_dir, args.ckpt_dir):
         shutil.rmtree(d, ignore_errors=True)
     os.makedirs(args.out_dir)
 
-    cmd = [
-        args.bin, "launch",
-        "--nodes", str(args.nodes),
-        "--workers-per-node", str(args.workers),
-        "--model", "mlp",
-        "--strategy", "daso",
-        "--checkpoint-dir", args.ckpt_dir,
-        "--set", f"epochs={args.epochs}",
-        "--set", f"checkpoint_every_epochs={args.checkpoint_every}",
-        "--set", "daso.warmup_epochs=1",
-        "--set", "daso.cooldown_epochs=1",
-        "--set", "train.train_samples=768",
-        "--set", "train.val_samples=128",
-        "--out", args.out_dir,
-        # traced: the post-regroup trace + manifest must record the
-        # shrunk world (checked by check_run_json.py chaos)
-        "--trace-out", os.path.join(args.out_dir, "trace.json"),
-    ]
-    print("+", " ".join(cmd), flush=True)
-    log_path = os.path.join(args.out_dir, "launch.log")
     deadline = time.monotonic() + args.timeout
-    with open(log_path, "wb") as log:
-        proc = subprocess.Popen(cmd, stdout=log, stderr=subprocess.STDOUT)
-        try:
-            # let the cluster write one full snapshot before pulling a node
-            world = args.nodes * args.workers
-            while not first_full_generation(args.ckpt_dir, world):
-                if proc.poll() is not None:
-                    sys.exit(f"launch exited ({proc.returncode}) before the first "
-                             f"checkpoint generation — see {log_path}")
-                if time.monotonic() > deadline:
-                    proc.kill()
-                    sys.exit(f"no checkpoint generation after {args.timeout}s — see {log_path}")
-                time.sleep(0.05)
-
-            peers = peers_of(proc.pid)
-            if not peers:
-                proc.kill()
-                sys.exit("checkpoint exists but no live peer process was found under /proc")
-            victim_node = rng.choice(sorted(peers))
-            victim_pid = peers[victim_node]
-            print(f"first checkpoint is down; SIGKILLing node {victim_node} "
-                  f"(pid {victim_pid}) of peers {sorted(peers)}", flush=True)
-            os.kill(victim_pid, signal.SIGKILL)
-
-            rc = proc.wait(timeout=max(1, deadline - time.monotonic()))
-        except subprocess.TimeoutExpired:
-            proc.kill()
-            sys.exit(f"launch did not finish within {args.timeout}s after the kill — "
-                     f"see {log_path}")
-        except BaseException:
-            proc.kill()
-            raise
-
-    sys.stdout.write(open(log_path).read())
-    if rc != 0:
-        sys.exit(f"launch exited {rc} — the survivors must complete the run")
-    report = os.path.join(args.out_dir, "mlp_daso.json")
-    if not os.path.exists(report):
-        sys.exit(f"launch succeeded but wrote no run JSON at {report}")
-    for extra in ("trace.json", "mlp_daso.manifest.json"):
-        path = os.path.join(args.out_dir, extra)
-        if not os.path.exists(path):
-            sys.exit(f"launch succeeded but wrote no {extra} at {path}")
-    print(f"chaos smoke: run completed on the survivors; report at {report}")
+    shm_before = shm_segment_dirs()
+    report = chaos_run(args, deadline, shm_before)
+    if not args.skip_control:
+        control_run(args, report, deadline, shm_before)
 
 
 if __name__ == "__main__":

@@ -8,10 +8,16 @@ Subcommands:
                  bytes migrated onto shm rings
   parity         two run JSONs must agree bit-for-bit on results (used to
                  prove tracing only observes: traced vs untraced launches)
-  chaos          elastic launch after a SIGKILLed peer: the run must have
-                 completed on the survivors with the regroup recorded;
-                 optionally cross-checks the sealed manifest and the trace
-                 metadata against the shrunk world
+  chaos          elastic launch after SIGKILLed node process(es): the run
+                 must have shrunk onto the survivors (regroup recorded,
+                 with the lost node ids — node 0 included when the
+                 coordinator was the victim), then grown back to full
+                 strength (rejoin recorded); optionally cross-checks the
+                 sealed manifest and the trace metadata against the
+                 restored world
+  warnings       assert over the run JSON's named degradation warnings
+                 (e.g. a hybrid shm→tcp fallback must be recorded, or a
+                 clean run must record none)
   manifest       verify a hash-sealed run manifest offline: canonical-JSON
                  self-hash plus per-artifact sha256 + byte counts
   obs            a traced run's JSON must carry per-phase latency summaries
@@ -180,85 +186,156 @@ def cmd_parity(args):
 def cmd_chaos(args):
     report = load(args.report)
     regroups = report.get("regroups", [])
+    rejoins = report.get("rejoins", [])
     print("regroups:", regroups)
+    print("rejoins:", rejoins)
     check(len(regroups) >= 1, "the launch must record at least one regroup event")
-    first = regroups[0]
+    lost = [n for e in regroups for n in e["lost_nodes"]]
+    check(len(lost) == len(set(lost)), f"a node id can only be lost once: {lost}")
+    expect_lost = 2 if args.kill == "two-peers" else 1
     check(
-        1 <= first["lost_node"] < args.nodes,
-        f"lost node {first['lost_node']} must be a non-coordinator peer of the "
-        f"{args.nodes}-node launch",
+        len(lost) == expect_lost,
+        f"kill mode {args.kill} loses {expect_lost} node(s), recorded {lost}",
+    )
+    if args.kill == "coordinator":
+        check(0 in lost, f"the coordinator kill must record node 0 in lost_nodes: {lost}")
+    else:
+        check(
+            all(1 <= n < args.nodes for n in lost),
+            f"lost nodes {lost} must be non-coordinator peers of the "
+            f"{args.nodes}-node launch",
+        )
+    world = args.nodes
+    for e in regroups:
+        world -= len(e["lost_nodes"])
+        check(
+            e["nodes"] == world,
+            f"survivor topology {e['nodes']} nodes, expected {world}",
+        )
+        check(
+            e["gpus_per_node"] == args.workers,
+            f"workers per node changed across the regroup: {e['gpus_per_node']}",
+        )
+        check(
+            e["resume_epoch"] >= 1,
+            f"the survivors must resume from a real snapshot, got epoch "
+            f"{e['resume_epoch']}",
+        )
+    check(len(rejoins) >= 1, "the interlude must be followed by an elastic rejoin")
+    last = rejoins[-1]
+    check(
+        last["nodes"] == args.nodes,
+        f"the rejoin must restore the full {args.nodes}-node world, got {last['nodes']}",
     )
     check(
-        first["nodes"] == args.nodes - len(regroups),
-        f"survivor topology {first['nodes']} nodes, expected {args.nodes - len(regroups)}",
+        last["gpus_per_node"] == args.workers,
+        f"workers per node changed across the rejoin: {last['gpus_per_node']}",
+    )
+    joined = [n for e in rejoins for n in e["joined_nodes"]]
+    check(
+        len(joined) == expect_lost and all(0 <= n < args.nodes for n in joined),
+        f"the rejoin(s) must grow {expect_lost} node slot(s) back in, got {joined}",
     )
     check(
-        first["gpus_per_node"] == args.workers,
-        f"workers per node changed across the regroup: {first['gpus_per_node']}",
-    )
-    check(
-        first["resume_epoch"] >= 1,
-        f"the survivors must resume from a real snapshot, got epoch {first['resume_epoch']}",
+        last["resume_epoch"] > regroups[0]["resume_epoch"],
+        f"the rejoin resumes from the interlude's snapshot, which must be newer "
+        f"than the regroup's: {last['resume_epoch']} vs {regroups[0]['resume_epoch']}",
     )
     check(
         report["epochs"] == args.epochs,
-        f"the resumed run must still cover all {args.epochs} epochs, got {report['epochs']}",
+        f"the healed run must still cover all {args.epochs} epochs, got {report['epochs']}",
     )
-    final_world = (args.nodes - len(regroups)) * args.workers
+    final_world = args.nodes * args.workers
     check(
         report["world"] == final_world,
-        f"final world {report['world']}, expected {final_world} after the regroup",
+        f"final world {report['world']}, expected the restored {final_world}",
     )
     curve = report["loss_curve"]
     check(
         all(isinstance(v, (int, float)) and v == v for v in curve),
-        f"loss curve must be finite across the regroup: {curve}",
+        f"loss curve must be finite across regroup + rejoin: {curve}",
     )
     check(
         curve[-1] < curve[0],
-        f"training must still make progress across the regroup: {curve}",
+        f"training must still make progress across regroup + rejoin: {curve}",
     )
+    attempts = len(regroups) + len(rejoins)
     if args.manifest:
         manifest = load(args.manifest)
         verify_manifest(manifest, roots=[os.path.dirname(args.manifest) or ".", *args.root])
         check(
             manifest["world"] == final_world,
-            f"manifest world {manifest['world']} must record the shrunk world {final_world}",
+            f"manifest world {manifest['world']} must record the restored "
+            f"world {final_world}",
         )
         check(
-            manifest["config"]["nodes"] == args.nodes - len(regroups),
-            f"manifest config.nodes {manifest['config']['nodes']} must be the survivor "
-            f"count {args.nodes - len(regroups)}",
+            manifest["config"]["nodes"] == args.nodes,
+            f"manifest config.nodes {manifest['config']['nodes']} must be the "
+            f"restored node count {args.nodes}",
         )
         check(
             manifest["regroups"] == regroups,
             f"manifest regroups {manifest['regroups']} must mirror the run JSON's "
             f"{regroups} (resume epoch included)",
         )
-        print("chaos manifest ok: shrunk world + regroups sealed")
+        check(
+            manifest["rejoins"] == rejoins,
+            f"manifest rejoins {manifest['rejoins']} must mirror the run JSON's "
+            f"{rejoins}",
+        )
+        check(
+            isinstance(manifest.get("warnings"), list),
+            "the sealed manifest must carry the warnings array",
+        )
+        print("chaos manifest ok: restored world + regroups + rejoins sealed")
     if args.trace:
         trace = load(args.trace)
         md = trace.get("metadata", {})
         check(
-            md.get("nodes") == args.nodes - len(regroups),
-            f"trace metadata nodes {md.get('nodes')} must be the survivor count",
+            md.get("nodes") == args.nodes,
+            f"trace metadata nodes {md.get('nodes')} must be the restored count "
+            f"{args.nodes}",
         )
         check(
             md.get("regroups") == len(regroups),
             f"trace metadata regroups {md.get('regroups')} != {len(regroups)}",
         )
         check(
-            md.get("generation", 0) >= 1,
-            "the post-regroup trace must carry a bumped launch generation",
+            md.get("rejoins") == len(rejoins),
+            f"trace metadata rejoins {md.get('rejoins')} != {len(rejoins)}",
+        )
+        check(
+            md.get("generation", 0) == attempts,
+            f"the healed trace must carry launch generation {attempts} "
+            f"(one bump per regroup/rejoin), got {md.get('generation')}",
         )
         xs = [e for e in trace["traceEvents"] if e.get("ph") == "X"]
-        check(len(xs) > 0, "the post-regroup trace must contain duration events")
-        print(f"chaos trace ok: {len(xs)} events, shrunk world in metadata")
+        check(len(xs) > 0, "the healed trace must contain duration events")
+        print(f"chaos trace ok: {len(xs)} events, restored world in metadata")
     print(
-        f"chaos ok: lost node {first['lost_node']}, resumed at epoch "
-        f"{first['resume_epoch']} on {first['nodes']}x{first['gpus_per_node']}, "
-        f"finished {report['epochs']} epochs"
+        f"chaos ok ({args.kill}): lost node(s) {lost}, regrouped at epoch "
+        f"{regroups[0]['resume_epoch']}, rejoined {joined} at epoch "
+        f"{last['resume_epoch']}, finished {report['epochs']} epochs on "
+        f"{last['nodes']}x{last['gpus_per_node']}"
     )
+
+
+def cmd_warnings(args):
+    report = load(args.report)
+    warnings = report.get("warnings", [])
+    check(
+        isinstance(warnings, list) and all(isinstance(w, str) for w in warnings),
+        f"warnings must be an array of strings, got {warnings!r}",
+    )
+    print("warnings:", warnings)
+    if args.expect_empty:
+        check(not warnings, f"expected a clean run with no warnings, got {warnings}")
+    for sub in args.expect_substr:
+        check(
+            any(sub in w for w in warnings),
+            f"no recorded warning mentions {sub!r}: {warnings}",
+        )
+    print(f"warnings ok: {len(warnings)} recorded, expectations met")
 
 
 def verify_manifest(manifest, roots):
@@ -435,16 +512,26 @@ def main():
     p.add_argument("--b", required=True)
     p.set_defaults(func=cmd_parity)
 
-    p = sub.add_parser("chaos", help="peer-death regroup assertions")
+    p = sub.add_parser("chaos", help="node-death regroup + rejoin assertions")
     p.add_argument("--report", required=True, help="run JSON of the elastic launch")
     p.add_argument("--nodes", type=int, required=True, help="node count at launch")
     p.add_argument("--workers", type=int, required=True, help="workers per node")
     p.add_argument("--epochs", type=int, required=True, help="configured epoch count")
+    p.add_argument("--kill", choices=("peer", "coordinator", "two-peers"),
+                   default="peer", help="which kill the chaos smoke performed")
     p.add_argument("--manifest", help="sealed manifest of the same run (optional)")
     p.add_argument("--trace", help="Chrome trace of the same run (optional)")
     p.add_argument("--root", action="append", default=[],
                    help="extra artifact root for manifest verification (repeatable)")
     p.set_defaults(func=cmd_chaos)
+
+    p = sub.add_parser("warnings", help="named degradation-warning assertions")
+    p.add_argument("--report", required=True, help="run JSON to inspect")
+    p.add_argument("--expect-substr", action="append", default=[],
+                   help="substring some warning must contain (repeatable)")
+    p.add_argument("--expect-empty", action="store_true",
+                   help="require the warnings array to be empty")
+    p.set_defaults(func=cmd_warnings)
 
     p = sub.add_parser("manifest", help="verify a hash-sealed run manifest offline")
     p.add_argument("--manifest", required=True)

@@ -174,16 +174,29 @@ COMMANDS:
                               --set trace=true; with --out the run JSON
                               also gains per-phase p50/p95 latency
                               summaries and raw log2 histograms
-    launch      spawn a multi-process run on this machine: one process per
-                node over the TCP loopback transport, this process is node 0
-                (peers mesh directly with each other; the coordinator only
-                brokers the address book). With --checkpoint-dir and
-                checkpoint_every_epochs set the launch is *elastic*: when a
-                peer process dies the survivors reload the newest snapshot,
-                re-deal the dead node's data shards, re-rendezvous under a
-                bumped launch generation (stale processes are refused at
-                the handshake) and continue; each regroup is recorded in
-                the run JSON
+    launch      spawn a multi-process run on this machine: a thin supervisor
+                parent that runs one child process per node — node 0 (the
+                rendezvous coordinator) is just another child, so killing it
+                is survivable (peers mesh directly with each other; the
+                coordinator only brokers the address book). With
+                --checkpoint-dir and checkpoint_every_epochs set the launch
+                is *elastic*: when a node process suffers a fail-stop death
+                (signal-killed; node 0 included) the survivors reload the
+                newest snapshot, re-deal the dead nodes' data shards,
+                re-rendezvous under a bumped launch generation (stale
+                processes are refused at the handshake) and continue shrunk
+                for one checkpoint interlude — then the supervisor grows the
+                interlude's snapshot back to full strength and relaunches,
+                with the restarted nodes presenting the REJOIN handshake.
+                Regroups and rejoins are recorded in the run JSON
+                (regroups[] / rejoins[]), and every rejoin sets aside a
+                rejoin-snapshot-<gen> control copy for bit-identity replay.
+                --set fault_plan=SPEC[,SPEC...] injects deterministic,
+                seeded network faults for testing (delay:FROM-TO:EVERY:MS,
+                trunc:FROM-TO:NTH, drop:FROM-TO:COUNT, flap:FROM-TO:COUNT,
+                shmfail:FROM-TO); faults perturb timing and connectivity
+                only — results stay bit-identical, and graceful
+                degradations land in run-JSON warnings[]
                   --nodes N                 node processes (default: the
                                             config's nodes)
                   --workers-per-node M      worker threads per node (default:

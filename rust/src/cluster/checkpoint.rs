@@ -411,7 +411,11 @@ impl RankCheckpoint {
 // ---------------------------------------------------------------------
 // generation directories
 
-fn gen_dir_name(epochs_done: usize, attempt: u64) -> String {
+/// Directory name of the generation `(epochs_done, attempt)` writes
+/// into — public so the elastic supervisor can copy a grown rejoin
+/// snapshot aside (under a non-`gen-` name, invisible to scanning) for
+/// the CI bit-identity control run.
+pub fn gen_dir_name(epochs_done: usize, attempt: u64) -> String {
     if attempt == 0 {
         format!("gen-{epochs_done:06}")
     } else {
@@ -578,31 +582,98 @@ pub fn load_latest(dir: &Path, fp: &RunFingerprint) -> Result<Option<LoadedCheck
     )
 }
 
-/// Rewrite a loaded generation for the world that survives `dead_node`:
-/// drop the dead node's ranks, renumber the survivors' node ids
-/// (order-preserving, coordinator stays node 0) and stamp the new
-/// fingerprint. The caller publishes the result as attempt
-/// `loaded.attempt + 1` so it outranks its source generation; data
-/// re-sharding is implicit — shards are re-dealt from the new world
-/// size when the survivors resume.
+/// Rewrite a loaded generation for the world that survives the
+/// `dead_nodes` set: drop every dead node's ranks in one pass (the
+/// watchdog accumulates concurrent deaths into a single set, so one
+/// rewrite handles them all), renumber the survivors' node ids
+/// (order-preserving — when node 0 is among the dead, the lowest
+/// surviving node becomes the new coordinator) and stamp the new
+/// fingerprint. Rank-0 records must survive the renumbering: if the old
+/// rank 0 died, the new rank 0 inherits the record history from
+/// whichever old rank carried it. The caller publishes the result as
+/// attempt `loaded.attempt + 1` so it outranks its source generation;
+/// data re-sharding is implicit — shards are re-dealt from the new
+/// world size when the survivors resume.
 pub fn rewrite_for_survivors(
     loaded: &LoadedCheckpoint,
-    dead_node: usize,
+    dead_nodes: &std::collections::BTreeSet<usize>,
+    new_fp: &RunFingerprint,
+) -> Result<Vec<RankCheckpoint>> {
+    let old_fp = &loaded.ranks[0].fp;
+    ensure!(!dead_nodes.is_empty(), "a regroup needs at least one dead node");
+    for &dead in dead_nodes {
+        ensure!(
+            dead < old_fp.nodes,
+            "dead node {dead} out of range for a {}-node checkpoint",
+            old_fp.nodes
+        );
+    }
+    ensure!(
+        dead_nodes.len() < old_fp.nodes,
+        "every node of the {}-node checkpoint died — nothing survives to regroup onto",
+        old_fp.nodes
+    );
+    ensure!(
+        new_fp.nodes == old_fp.nodes - dead_nodes.len()
+            && new_fp.gpus_per_node == old_fp.gpus_per_node,
+        "survivor fingerprint {}x{} does not match a {}x{} checkpoint minus {} node(s)",
+        new_fp.nodes,
+        new_fp.gpus_per_node,
+        old_fp.nodes,
+        old_fp.gpus_per_node,
+        dead_nodes.len()
+    );
+    // the record history lives on exactly one old rank; carry it over
+    // even when that rank's node died (it is run history, not state)
+    let records = loaded
+        .ranks
+        .iter()
+        .find(|ck| !ck.records.is_empty())
+        .map(|ck| ck.records.clone())
+        .unwrap_or_default();
+    let old_topo = Topology::new(old_fp.nodes, old_fp.gpus_per_node);
+    let new_topo = Topology::new(new_fp.nodes, new_fp.gpus_per_node);
+    let mut out = Vec::with_capacity(new_fp.world());
+    let mut new_node = 0usize;
+    for node in 0..old_fp.nodes {
+        if dead_nodes.contains(&node) {
+            continue;
+        }
+        for local in 0..old_fp.gpus_per_node {
+            let mut ck = loaded.ranks[old_topo.rank(node, local).global].clone();
+            ck.fp = new_fp.clone();
+            ck.rank = new_topo.rank(new_node, local).global;
+            ck.records = if ck.rank == 0 { records.clone() } else { Vec::new() };
+            out.push(ck);
+        }
+        new_node += 1;
+    }
+    Ok(out)
+}
+
+/// Rewrite a loaded generation for a world *grown back* to
+/// `new_fp.nodes` after a regroup shrank it: existing nodes keep their
+/// state and rank layout, and each rejoining node's per-local-rank
+/// state is seeded from node 0's corresponding local rank (a
+/// deterministic bootstrap — the CI control run resumes the identical
+/// snapshot, so the continuation stays bit-identical by construction).
+/// Record history stays on rank 0 only. The caller publishes the result
+/// as attempt `loaded.attempt + 1`, and the relaunch hands the first
+/// rejoining node id to the handshake via the `rejoin_from` config key.
+pub fn rewrite_for_rejoin(
+    loaded: &LoadedCheckpoint,
     new_fp: &RunFingerprint,
 ) -> Result<Vec<RankCheckpoint>> {
     let old_fp = &loaded.ranks[0].fp;
     ensure!(
-        dead_node != 0,
-        "cannot regroup away node 0 — the coordinator owns the rendezvous"
-    );
-    ensure!(
-        dead_node < old_fp.nodes,
-        "dead node {dead_node} out of range for a {}-node checkpoint",
+        new_fp.nodes > old_fp.nodes,
+        "rejoin target {} node(s) does not grow the {}-node checkpoint",
+        new_fp.nodes,
         old_fp.nodes
     );
     ensure!(
-        new_fp.nodes == old_fp.nodes - 1 && new_fp.gpus_per_node == old_fp.gpus_per_node,
-        "survivor fingerprint {}x{} does not match a {}x{} checkpoint minus one node",
+        new_fp.gpus_per_node == old_fp.gpus_per_node,
+        "rejoin fingerprint {}x{} changes gpus_per_node of a {}x{} checkpoint",
         new_fp.nodes,
         new_fp.gpus_per_node,
         old_fp.nodes,
@@ -611,18 +682,17 @@ pub fn rewrite_for_survivors(
     let old_topo = Topology::new(old_fp.nodes, old_fp.gpus_per_node);
     let new_topo = Topology::new(new_fp.nodes, new_fp.gpus_per_node);
     let mut out = Vec::with_capacity(new_fp.world());
-    let mut new_node = 0usize;
-    for node in 0..old_fp.nodes {
-        if node == dead_node {
-            continue;
-        }
-        for local in 0..old_fp.gpus_per_node {
-            let mut ck = loaded.ranks[old_topo.rank(node, local).global].clone();
+    for node in 0..new_fp.nodes {
+        let src_node = if node < old_fp.nodes { node } else { 0 };
+        for local in 0..new_fp.gpus_per_node {
+            let mut ck = loaded.ranks[old_topo.rank(src_node, local).global].clone();
             ck.fp = new_fp.clone();
-            ck.rank = new_topo.rank(new_node, local).global;
+            ck.rank = new_topo.rank(node, local).global;
+            if ck.rank != 0 {
+                ck.records = Vec::new();
+            }
             out.push(ck);
         }
-        new_node += 1;
     }
     Ok(out)
 }
@@ -893,7 +963,8 @@ mod tests {
             attempt: 0,
             ranks,
         };
-        let out = rewrite_for_survivors(&loaded, 1, &new).unwrap();
+        let out =
+            rewrite_for_survivors(&loaded, &std::collections::BTreeSet::from([1]), &new).unwrap();
         assert_eq!(out.len(), 4);
         for (i, ck) in out.iter().enumerate() {
             assert_eq!(ck.rank, i, "survivor ranks are dense and renumbered");
@@ -906,8 +977,90 @@ mod tests {
         assert_eq!(out[2].params, vec![4.0]);
         assert_eq!(out[3].params, vec![5.0]);
 
-        let err = rewrite_for_survivors(&loaded, 0, &new).unwrap_err().to_string();
-        assert!(err.contains("node 0"), "{err}");
+        // node 0 is regroupable too: the supervisor restarts the
+        // coordinator like any peer, so the lowest survivor takes over
+        let out =
+            rewrite_for_survivors(&loaded, &std::collections::BTreeSet::from([0]), &new).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].params, vec![2.0], "old node 1 becomes the new coordinator");
+        assert_eq!(out[3].params, vec![5.0]);
+        assert!(
+            !out[0].records.is_empty(),
+            "the record history must survive losing the rank that carried it"
+        );
+        assert!(out[1].records.is_empty(), "records live on rank 0 only");
+
+        // an empty death set and a full one are both named errors
+        let err = rewrite_for_survivors(&loaded, &std::collections::BTreeSet::new(), &new)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("at least one dead node"), "{err}");
+        let all = std::collections::BTreeSet::from([0, 1, 2]);
+        let gone = RunFingerprint { nodes: 0, ..old.clone() };
+        let err = rewrite_for_survivors(&loaded, &all, &gone).unwrap_err().to_string();
+        assert!(err.contains("nothing survives"), "{err}");
+    }
+
+    #[test]
+    fn rewrite_drops_concurrent_deaths_in_one_pass() {
+        let old = fp(4, 1);
+        let new = RunFingerprint { nodes: 2, ..old.clone() };
+        let ranks: Vec<_> = (0..4)
+            .map(|r| {
+                let mut ck = sample(r, old.clone());
+                ck.params = vec![r as f32];
+                if r != 0 {
+                    ck.records = Vec::new();
+                }
+                ck
+            })
+            .collect();
+        let loaded =
+            LoadedCheckpoint { dir: PathBuf::from("/nonexistent"), epochs_done: 4, attempt: 0, ranks };
+        let out =
+            rewrite_for_survivors(&loaded, &std::collections::BTreeSet::from([1, 3]), &new)
+                .unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].params, vec![0.0]);
+        assert_eq!(out[1].params, vec![2.0], "node 2 renumbers to node 1 past both corpses");
+    }
+
+    #[test]
+    fn rejoin_grows_the_world_back_from_node_zero_state() {
+        let old = fp(2, 2);
+        let new = RunFingerprint { nodes: 3, ..old.clone() };
+        let ranks: Vec<_> = (0..4)
+            .map(|r| {
+                let mut ck = sample(r, old.clone());
+                ck.params = vec![r as f32];
+                if r != 0 {
+                    ck.records = Vec::new();
+                }
+                ck
+            })
+            .collect();
+        let loaded =
+            LoadedCheckpoint { dir: PathBuf::from("/nonexistent"), epochs_done: 4, attempt: 1, ranks };
+        let out = rewrite_for_rejoin(&loaded, &new).unwrap();
+        assert_eq!(out.len(), 6);
+        for (i, ck) in out.iter().enumerate() {
+            assert_eq!(ck.rank, i);
+            assert_eq!(ck.fp, new);
+        }
+        // surviving nodes keep their state; the rejoining node 2 is
+        // seeded from node 0's per-local-rank state
+        assert_eq!(out[0].params, vec![0.0]);
+        assert_eq!(out[3].params, vec![3.0]);
+        assert_eq!(out[4].params, vec![0.0], "rejoiner local 0 seeds from node 0 local 0");
+        assert_eq!(out[5].params, vec![1.0], "rejoiner local 1 seeds from node 0 local 1");
+        assert!(!out[0].records.is_empty());
+        assert!(out[4].records.is_empty(), "rejoiners carry no record history");
+
+        // shrinking or reshaping through the rejoin path is refused
+        let same = RunFingerprint { nodes: 2, ..old.clone() };
+        assert!(rewrite_for_rejoin(&loaded, &same).is_err());
+        let reshaped = RunFingerprint { nodes: 3, gpus_per_node: 1, ..old.clone() };
+        assert!(rewrite_for_rejoin(&loaded, &reshaped).is_err());
     }
 
     #[test]
@@ -921,7 +1074,7 @@ mod tests {
             write_rank(&dir, 4, 0, &ck).unwrap();
         }
         let loaded = load_latest(&dir, &old).unwrap().unwrap();
-        for ck in rewrite_for_survivors(&loaded, 1, &new).unwrap() {
+        for ck in rewrite_for_survivors(&loaded, &std::collections::BTreeSet::from([1]), &new).unwrap() {
             write_rank(&dir, loaded.epochs_done, loaded.attempt + 1, &ck).unwrap();
         }
         let resumed = load_latest(&dir, &new).unwrap().unwrap();

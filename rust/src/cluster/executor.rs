@@ -178,12 +178,18 @@ mod threaded {
 
     /// The multiprocess transport knobs a [`TrainConfig`] resolves to.
     /// `kind` is the resolved link medium (`--transport tcp|shm|hybrid`).
-    fn tcp_tuning(cfg: &TrainConfig, kind: TransportKind) -> TcpTuning {
-        TcpTuning::new(Duration::from_millis(cfg.comm_timeout_ms), cfg.global_wire)
+    /// Fails fast on a malformed `fault_plan` (validation also catches
+    /// it at config time; this guards direct callers).
+    fn tcp_tuning(cfg: &TrainConfig, kind: TransportKind) -> Result<TcpTuning> {
+        let faults =
+            crate::comm::transport::faults::FaultPlan::parse(&cfg.fault_plan, cfg.seed)?;
+        Ok(TcpTuning::new(Duration::from_millis(cfg.comm_timeout_ms), cfg.global_wire)
             .with_placement(cfg.leader_placement)
             .with_chunk_elems(cfg.pipeline_chunk_elems)
             .with_transport(kind)
             .with_generation(cfg.launch_generation)
+            .with_faults(std::sync::Arc::new(faults))
+            .with_rejoin_from(cfg.rejoin_from))
     }
 
     /// Train this process's share of a multi-process launch, joining the
@@ -205,8 +211,26 @@ mod threaded {
             role.node,
             topo.nodes
         );
-        let mut transport = TcpTransport::from_role(topo, role, tcp_tuning(cfg, kind))?;
-        train_with_transport(rt, cfg, train_data, val_data, factory, &mut transport)
+        let mut tuning = tcp_tuning(cfg, kind)?;
+        if role.node == 0 {
+            // the launch supervisor owns the shm segment directory and
+            // hands it to its node-0 child through the environment; an
+            // unset/empty var means the coordinator creates its own
+            if let Ok(dir) = std::env::var(crate::comm::transport::tcp::ENV_SHM_DIR) {
+                if !dir.is_empty() {
+                    tuning = tuning.with_shm_dir(Some(std::path::PathBuf::from(dir)));
+                }
+            }
+        }
+        let mut transport = TcpTransport::from_role(topo, role, tuning)?;
+        let report = train_with_transport(rt, cfg, train_data, val_data, factory, &mut transport)?;
+        Ok(report.map(|mut r| {
+            // surface this process's degradation warnings (hybrid
+            // shm→tcp fallbacks) in the run JSON; peers print theirs to
+            // stderr, only the coordinator's land in the report
+            r.warnings = crate::comm::transport::faults::drain_warnings();
+            r
+        }))
     }
 
     /// Coordinator entry for `daso launch`: the launcher binds the
@@ -228,10 +252,12 @@ mod threaded {
         let mut transport = TcpTransport::coordinator(
             cfg.topology(),
             listener,
-            tcp_tuning(cfg, kind).with_shm_dir(shm_dir),
+            tcp_tuning(cfg, kind)?.with_shm_dir(shm_dir),
         );
         let report = train_with_transport(rt, cfg, train_data, val_data, factory, &mut transport)?;
-        Ok(report.expect("the coordinator hosts rank 0"))
+        let mut report = report.expect("the coordinator hosts rank 0");
+        report.warnings = crate::comm::transport::faults::drain_warnings();
+        Ok(report)
     }
 
     /// The shared driver: spawn one worker thread per rank hosted by
@@ -487,6 +513,8 @@ mod threaded {
             comm,
             final_params,
             regroups: vec![],
+            rejoins: vec![],
+            warnings: vec![],
             obs,
         }))
     }

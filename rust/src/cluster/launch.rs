@@ -1,40 +1,52 @@
 //! Self-spawning multi-process launcher (`daso launch`).
 //!
-//! The launcher process binds the coordinator listener *before* spawning
-//! anything, so the advertised `DASO_COORD_ADDR` can never race a peer's
-//! connect. For shm-backed transports it also creates the shared-memory
-//! segment directory up front — and keeps cleanup ownership, so the
-//! segments are reaped on every exit path (success, coordinator error,
-//! peer failure) and nothing leaks under `/dev/shm`. It then re-executes
-//! its own binary once per peer node with the training flags forwarded
-//! (`daso train --executor multiprocess ...`) and the role injected
-//! through the environment (`DASO_COORD_ADDR`, `DASO_NODE_ID`), and
-//! finally trains as node 0 itself through the already-bound listener.
-//! Peers print no report; the coordinator assembles the cluster-wide one
-//! over the control group.
+//! The launcher is a thin, unsurvivable-by-design **supervisor**: it
+//! never trains in-process. Node 0 is just another child — spawned with
+//! `DASO_NODE_ID=0` and a bind address (`DASO_COORD_ADDR`, port 0
+//! allowed), it binds the rendezvous listener itself and publishes the
+//! resolved address through the `DASO_ADDR_FILE` handshake file
+//! (tmp + rename, so the supervisor never reads a partial write). The
+//! supervisor waits for that file, then re-executes its own binary once
+//! per peer node with the training flags forwarded (`daso train
+//! --executor multiprocess ...`) and the role injected through the
+//! environment. Because the coordinator is a child like any other, a
+//! SIGKILLed node 0 is regrouped and restarted from the newest snapshot
+//! exactly like a dead peer. Peers print no report; node 0 assembles
+//! the cluster-wide one over the control group.
 //!
-//! A **watchdog thread** ([`spawn_watchdog`]) polls the peer processes
-//! while the launch comes up: a peer that dies before the handshake
-//! (bad flags, missing artifacts, a crash in its own setup) would
-//! otherwise leave the coordinator waiting out the full
-//! `comm_timeout_ms`. The watchdog reaps the dead child immediately and
-//! delivers an `ABORT` frame to the rendezvous listener, so the
-//! coordinator fails fast with the dead node named — and the launcher's
-//! teardown (kill remaining peers, drop the segment dir) runs right
-//! away instead of after the timeout.
+//! For shm-backed transports the supervisor creates the shared-memory
+//! segment directory up front — and keeps cleanup ownership, so the
+//! segments are reaped on every exit path (success, coordinator death,
+//! peer failure) and nothing leaks under `/dev/shm`; the node-0 child
+//! attaches it through `DASO_SHM_DIR` without taking ownership. Every
+//! elastic attempt gets a *fresh* segment directory: a SIGKILL lands
+//! mid-frame, and a regrouped world must never read the corpse's
+//! half-written ring state.
+//!
+//! A **watchdog thread** ([`spawn_watchdog`]) polls every child for the
+//! whole run: a child that dies before the handshake (bad flags,
+//! missing artifacts, a crash in its own setup) would otherwise leave
+//! the coordinator waiting out the full `comm_timeout_ms`. The watchdog
+//! records each death in a shared death set (the elastic supervisor's
+//! regroup signal — concurrent multi-node deaths all land in one set,
+//! so one regroup pass drops them all) and delivers an `ABORT` frame to
+//! the rendezvous listener per death, so the launch fails fast with the
+//! dead node named.
 
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::collections::BTreeSet;
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
-use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::cli::Args;
 use crate::comm::transport::shm::{default_ring_bytes, SegmentDir};
-use crate::comm::transport::tcp::{ENV_COORD_ADDR, ENV_NODE_ID};
+use crate::comm::transport::tcp::{ENV_ADDR_FILE, ENV_COORD_ADDR, ENV_NODE_ID, ENV_SHM_DIR};
 use crate::comm::transport::wire::{write_frame, Frame};
 use crate::comm::{TransportKind, Wire};
 use crate::config::RunSpec;
@@ -88,28 +100,41 @@ pub fn forced_child_sets(spec: &RunSpec, transport: TransportKind) -> Vec<String
         format!("straggler_node={}", spec.train.straggler_node),
         format!("straggler_factor={}", spec.train.straggler_factor),
         format!("generation={}", spec.train.launch_generation),
+        // the fault plan must be symmetric: both ends of a link consult
+        // the same plan, so injected shm failures degrade both sides
+        format!("fault_plan={}", spec.train.fault_plan),
+        format!("rejoin_from={}", spec.train.rejoin_from),
+        // event history rides to node 0 so the final run JSON reports
+        // every shrink/regrow survived (peers ignore it)
+        format!("regroup_log={}", spec.train.regroup_log),
+        format!("rejoin_log={}", spec.train.rejoin_log),
         // tracing must be symmetric: every process records and joins
         // the obs gather, or no process does
         format!("trace={}", spec.train.trace),
     ]
 }
 
-/// A bound coordinator listener plus the topology of the launch — and,
-/// for shm-backed transports, the owned segment directory.
+/// Monotone per-process counter naming the supervisor's address files —
+/// two launches in one test process must never share a handshake file.
+static ADDR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// The supervisor's per-launch state: target topology, the coordinator
+/// bind address forwarded to node 0, the owned shm segment directory
+/// (shm-backed transports only) and the address handshake file.
 pub struct Launcher {
     pub nodes: usize,
     pub workers_per_node: usize,
-    listener: TcpListener,
-    addr: SocketAddr,
+    bind: String,
+    shm: bool,
     shm_dir: Option<SegmentDir>,
+    addr_file: PathBuf,
 }
 
 impl Launcher {
-    /// Bind the coordinator address (use port 0 to let the OS pick) and,
-    /// when `transport` rides shared memory, create the launch's segment
-    /// directory — before anything is spawned, so peers can never race
-    /// the create.
-    pub fn bind(
+    /// Validate the launch shape and, when `transport` rides shared
+    /// memory, create the first attempt's segment directory — before
+    /// anything is spawned, so children can never race the create.
+    pub fn prepare(
         bind: &str,
         nodes: usize,
         workers_per_node: usize,
@@ -117,38 +142,110 @@ impl Launcher {
     ) -> Result<Launcher> {
         ensure!(nodes >= 1, "--nodes must be at least 1");
         ensure!(workers_per_node >= 1, "--workers-per-node must be at least 1");
-        let listener = TcpListener::bind(bind)
-            .with_context(|| format!("binding launch coordinator on {bind}"))?;
-        let addr = listener.local_addr().context("resolving bound address")?;
-        let shm_dir = if transport.uses_shm() {
-            Some(SegmentDir::create(nodes, default_ring_bytes())?)
-        } else {
-            None
-        };
-        Ok(Launcher { nodes, workers_per_node, listener, addr, shm_dir })
-    }
-
-    /// The address peers must dial (resolved, so port 0 works).
-    pub fn addr(&self) -> SocketAddr {
-        self.addr
+        let shm = transport.uses_shm();
+        let shm_dir =
+            if shm { Some(SegmentDir::create(nodes, default_ring_bytes())?) } else { None };
+        // audit: allow(atomic-ordering): process-local monotone name
+        // counter; no memory is published under it.
+        let seq = ADDR_SEQ.fetch_add(1, Ordering::Relaxed);
+        let addr_file = std::env::temp_dir()
+            .join(format!("daso-launch-{}-{}.addr", std::process::id(), seq));
+        let _ = std::fs::remove_file(&addr_file);
+        Ok(Launcher {
+            nodes,
+            workers_per_node,
+            bind: bind.to_string(),
+            shm,
+            shm_dir,
+            addr_file,
+        })
     }
 
     /// The launcher-owned shm segment directory, if the transport uses
     /// one.
-    pub fn shm_dir(&self) -> Option<&std::path::Path> {
+    pub fn shm_dir(&self) -> Option<&Path> {
         self.shm_dir.as_ref().map(|d| d.path())
     }
 
-    /// Spawn the peer processes (node ids `1..nodes`) by re-executing
-    /// this binary with `train_args` and the env handshake. Stderr is
-    /// inherited so peer diagnostics interleave with the coordinator's.
-    pub fn spawn_peers(&self, train_args: &[String]) -> Result<Vec<(usize, Child)>> {
+    /// Reset per-attempt state before an elastic relaunch: remove the
+    /// previous attempt's address file and replace the shm segment
+    /// directory wholesale (the old one — possibly holding a killed
+    /// process's half-written ring frames — is reaped here, which is
+    /// what keeps `/dev/shm` clean across kill→regroup→rejoin cycles).
+    pub fn reset_for_attempt(&mut self) -> Result<()> {
+        let _ = std::fs::remove_file(&self.addr_file);
+        if self.shm {
+            self.shm_dir = None; // reap the previous attempt's segments first
+            self.shm_dir = Some(SegmentDir::create(self.nodes, default_ring_bytes())?);
+        }
+        Ok(())
+    }
+
+    /// Spawn the coordinator (node 0) as a child: it binds the
+    /// rendezvous listener itself and publishes the resolved address
+    /// through the handshake file. Stdout is inherited — node 0 prints
+    /// the run report for the whole launch.
+    pub fn spawn_node0(&self, train_args: &[String]) -> Result<Child> {
         let exe = std::env::current_exe().context("locating the daso binary")?;
-        let mut children: Vec<(usize, Child)> = Vec::with_capacity(self.nodes.saturating_sub(1));
-        for node in 1..self.nodes {
+        let mut cmd = Command::new(&exe);
+        cmd.args(train_args)
+            .env(ENV_COORD_ADDR, &self.bind)
+            .env(ENV_NODE_ID, "0")
+            .env(ENV_ADDR_FILE, &self.addr_file)
+            .stdin(Stdio::null())
+            .stdout(Stdio::inherit())
+            .stderr(Stdio::inherit());
+        if let Some(dir) = self.shm_dir() {
+            cmd.env(ENV_SHM_DIR, dir);
+        }
+        cmd.spawn().context("spawning the coordinator process (node 0)")
+    }
+
+    /// Wait for node 0 to publish its resolved listener address. The
+    /// rename-into-place protocol means a read can only ever see the
+    /// complete address; a coordinator that dies before publishing (bad
+    /// flags, bind failure) surfaces as a named error immediately.
+    pub fn wait_addr_file(&self, node0: &mut Child, timeout: Duration) -> Result<SocketAddr> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Ok(text) = std::fs::read_to_string(&self.addr_file) {
+                return text.trim().parse().with_context(|| {
+                    format!("parsing coordinator address {:?} from {:?}", text, self.addr_file)
+                });
+            }
+            if let Ok(Some(status)) = node0.try_wait() {
+                bail!(
+                    "coordinator process (node 0) exited with {status} before \
+                     publishing its address"
+                );
+            }
+            ensure!(
+                Instant::now() < deadline,
+                "coordinator did not publish its address within {:?} (file {:?})",
+                timeout,
+                self.addr_file
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Spawn the peer processes (node ids `1..nodes` — `nodes` is the
+    /// *attempt's* world size, which a regrouped attempt shrinks below
+    /// the launch target) by re-executing this binary with `train_args`
+    /// and the env handshake. Stderr is inherited so peer diagnostics
+    /// interleave with the coordinator's.
+    pub fn spawn_peers(
+        &self,
+        nodes: usize,
+        train_args: &[String],
+        addr: SocketAddr,
+    ) -> Result<Vec<(usize, Child)>> {
+        let exe = std::env::current_exe().context("locating the daso binary")?;
+        let mut children: Vec<(usize, Child)> = Vec::with_capacity(nodes.saturating_sub(1));
+        for node in 1..nodes {
             let spawned = Command::new(&exe)
                 .args(train_args)
-                .env(ENV_COORD_ADDR, self.addr.to_string())
+                .env(ENV_COORD_ADDR, addr.to_string())
                 .env(ENV_NODE_ID, node.to_string())
                 .stdin(Stdio::null())
                 .stdout(Stdio::null())
@@ -167,60 +264,92 @@ impl Launcher {
         }
         Ok(children)
     }
+}
 
-    /// Hand the pre-bound listener (and the segment-dir guard, which the
-    /// caller must keep alive for the whole run) to the coordinator.
-    pub fn into_parts(self) -> (TcpListener, Option<SegmentDir>) {
-        (self.listener, self.shm_dir)
+impl Drop for Launcher {
+    fn drop(&mut self) {
+        // the segment dir guard reaps itself; only the handshake file
+        // needs an explicit sweep
+        let _ = std::fs::remove_file(&self.addr_file);
     }
 }
 
-/// Watch the peer processes for the whole run: a child that exits with
-/// a failure status is reaped immediately, recorded in `first_dead`
-/// (the node id; stays -1 while everyone lives — the elastic
-/// supervisor's regroup signal), and reported to the coordinator's
-/// rendezvous listener as an `ABORT` frame, so a pre-handshake death
-/// fails the launch with a named, bounded error instead of waiting out
-/// `comm_timeout_ms`. A post-handshake death surfaces through the
-/// transport's EOF path instead; `first_dead` still names the corpse.
-/// Set `done` (and join) once the run finished to stop the polling.
+/// A *fail-stop* death: the process was terminated by a signal (the
+/// chaos harness's SIGKILL, an OOM kill) rather than exiting with an
+/// error code of its own. Only these are regroup candidates — a process
+/// that exits non-zero had the chance to report (bad flags, or a
+/// casualty of some *other* node's death tearing its links down), and
+/// treating those as deaths would cascade: one SIGKILL makes every
+/// survivor of the attempt exit non-zero, and a regroup would then try
+/// to drop the whole world.
+pub fn is_fail_stop(status: &std::process::ExitStatus) -> bool {
+    #[cfg(unix)]
+    {
+        use std::os::unix::process::ExitStatusExt;
+        status.signal().is_some()
+    }
+    #[cfg(not(unix))]
+    {
+        false
+    }
+}
+
+/// Watch the child processes (node 0 included) for the whole run: a
+/// child that exits with a failure status is reaped immediately and
+/// reported to the coordinator's rendezvous listener as an `ABORT`
+/// frame, so a pre-handshake death fails the launch with a named,
+/// bounded error instead of waiting out `comm_timeout_ms` (a
+/// post-handshake death surfaces through the transport's EOF path
+/// instead). Fail-stop deaths ([`is_fail_stop`]) are additionally
+/// recorded in the shared `deaths` set — the elastic supervisor's
+/// regroup signal. The watchdog keeps polling after a death:
+/// concurrent deaths accumulate in the same set, so one regroup pass
+/// drops them all. Set `done` (and join) once the attempt finished to
+/// stop the polling.
 pub fn spawn_watchdog(
     children: Arc<Mutex<Vec<(usize, Child)>>>,
     coord: SocketAddr,
     done: Arc<AtomicBool>,
-    first_dead: Arc<AtomicI64>,
+    deaths: Arc<Mutex<BTreeSet<usize>>>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name("daso-launch-watchdog".into())
         .spawn(move || {
+            let mut reported: BTreeSet<usize> = BTreeSet::new();
             while !done.load(Ordering::Acquire) {
-                let mut failed: Option<(usize, String)> = None;
+                let mut fresh: Vec<(usize, String, bool)> = Vec::new();
                 {
                     let mut kids = children.lock().unwrap();
                     for (node, child) in kids.iter_mut() {
+                        if reported.contains(node) {
+                            continue;
+                        }
                         if let Ok(Some(status)) = child.try_wait() {
                             if !status.success() {
-                                failed = Some((*node, status.to_string()));
-                                break;
+                                fresh.push((*node, status.to_string(), is_fail_stop(&status)));
                             }
                         }
                     }
                 }
-                if let Some((node, status)) = failed {
+                for (node, status, fail_stop) in fresh {
+                    reported.insert(node);
                     let reason = format!(
-                        "peer process for node {node} exited with {status} before the \
-                         launch came up"
+                        "process for node {node} exited with {status} before the \
+                         attempt finished"
                     );
                     eprintln!("launch watchdog: {reason}");
-                    first_dead.store(node as i64, Ordering::Release);
+                    if fail_stop {
+                        deaths.lock().unwrap().insert(node);
+                    }
                     // best effort: the listener may already be done
                     // accepting (post-handshake), in which case the
-                    // regular EOF path reports the death instead
+                    // regular EOF path reports the death instead — and
+                    // if node 0 itself is the corpse there is nothing
+                    // left to dial
                     if let Ok(mut s) = TcpStream::connect_timeout(&coord, Duration::from_secs(2))
                     {
                         let _ = write_frame(&mut s, &Frame::Abort { reason }, Wire::F32);
                     }
-                    return;
                 }
                 std::thread::sleep(Duration::from_millis(100));
             }
@@ -257,64 +386,105 @@ pub fn kill_peers(children: &mut [(usize, Child)]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::net::TcpListener;
 
     #[test]
-    fn bind_resolves_ephemeral_port() {
-        let l = Launcher::bind("127.0.0.1:0", 2, 2, TransportKind::Tcp).unwrap();
-        assert_ne!(l.addr().port(), 0);
-        assert_eq!(l.nodes, 2);
-        assert_eq!(l.workers_per_node, 2);
-        assert!(l.shm_dir().is_none(), "tcp launches create no segments");
+    fn prepare_rejects_degenerate_shapes() {
+        assert!(Launcher::prepare("127.0.0.1:0", 0, 1, TransportKind::Tcp).is_err());
+        assert!(Launcher::prepare("127.0.0.1:0", 1, 0, TransportKind::Tcp).is_err());
     }
 
     #[test]
-    fn bind_rejects_degenerate_shapes() {
-        assert!(Launcher::bind("127.0.0.1:0", 0, 1, TransportKind::Tcp).is_err());
-        assert!(Launcher::bind("127.0.0.1:0", 1, 0, TransportKind::Tcp).is_err());
+    fn prepare_gives_each_launch_a_private_addr_file() {
+        let a = Launcher::prepare("127.0.0.1:0", 2, 2, TransportKind::Tcp).unwrap();
+        let b = Launcher::prepare("127.0.0.1:0", 2, 2, TransportKind::Tcp).unwrap();
+        assert_ne!(a.addr_file, b.addr_file);
+        assert!(a.shm_dir().is_none(), "tcp launches create no segments");
+        assert_eq!(a.nodes, 2);
+        assert_eq!(a.workers_per_node, 2);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn addr_file_handshake_round_trips_and_names_a_dead_coordinator() {
+        let l = Launcher::prepare("127.0.0.1:0", 2, 1, TransportKind::Tcp).unwrap();
+        // a live stand-in "coordinator" that publishes nothing itself
+        let child = Command::new("sleep").arg("5").stdin(Stdio::null()).spawn();
+        let Ok(mut child) = child else {
+            return; // sandboxed environments may forbid spawning
+        };
+        // publish the address the way from_role does: tmp + rename
+        let tmp = l.addr_file.with_extension("addr.tmp");
+        std::fs::write(&tmp, "127.0.0.1:7171").unwrap();
+        std::fs::rename(&tmp, &l.addr_file).unwrap();
+        let addr = l.wait_addr_file(&mut child, Duration::from_secs(5)).unwrap();
+        assert_eq!(addr.port(), 7171);
+        let _ = child.kill();
+        let _ = child.wait();
+
+        // a coordinator that dies before publishing must surface as a
+        // named error, not a timeout
+        let l = Launcher::prepare("127.0.0.1:0", 2, 1, TransportKind::Tcp).unwrap();
+        let mut dead = Command::new("false").stdin(Stdio::null()).spawn().unwrap();
+        let err = l
+            .wait_addr_file(&mut dead, Duration::from_secs(5))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("node 0"), "{err}");
+        assert!(err.contains("before"), "{err}");
     }
 
     #[cfg(unix)]
     #[test]
     fn shm_launcher_owns_segment_cleanup_on_every_path() {
-        let l = Launcher::bind("127.0.0.1:0", 3, 2, TransportKind::Hybrid).unwrap();
+        let mut l = Launcher::prepare("127.0.0.1:0", 3, 2, TransportKind::Hybrid).unwrap();
         let dir = l.shm_dir().expect("hybrid launches create segments").to_path_buf();
         assert!(dir.is_dir());
-        assert!(dir.join("ring-0-to-1").exists(), "rings exist before any peer spawns");
+        assert!(dir.join("ring-0-to-1").exists(), "rings exist before any child spawns");
         assert!(dir.join("ring-2-to-1").exists());
-        // dropping the launcher without ever spawning (a failure path)
-        // must reap the segments
-        drop(l);
-        assert!(!dir.exists(), "launcher drop must remove the segment dir");
 
-        // the into_parts flow hands the guard to the caller: cleanup
-        // follows the guard, not the launcher
-        let l = Launcher::bind("127.0.0.1:0", 2, 1, TransportKind::Shm).unwrap();
-        let (listener, guard) = l.into_parts();
-        let dir = guard.as_ref().unwrap().path().to_path_buf();
-        assert!(dir.is_dir());
-        drop(listener);
-        drop(guard);
-        assert!(!dir.exists());
+        // every elastic attempt gets fresh segments; the previous
+        // attempt's (possibly corpse-scribbled) dir is reaped in place
+        l.reset_for_attempt().unwrap();
+        let dir2 = l.shm_dir().unwrap().to_path_buf();
+        assert_ne!(dir, dir2, "an attempt must not reuse the previous rings");
+        assert!(!dir.exists(), "reset must reap the previous attempt's segments");
+        assert!(dir2.join("ring-0-to-1").exists());
+
+        // dropping the launcher without ever spawning (a failure path)
+        // must reap the segments too
+        drop(l);
+        assert!(!dir2.exists(), "launcher drop must remove the segment dir");
+    }
+
+    /// Spawn a long-lived stand-in child and SIGKILL it, producing the
+    /// fail-stop corpse the chaos harness produces.
+    #[cfg(unix)]
+    fn spawn_corpse() -> std::io::Result<Child> {
+        let mut child = Command::new("sleep")
+            .arg("30")
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()?;
+        child.kill()?;
+        Ok(child)
     }
 
     #[cfg(unix)]
     #[test]
     fn watchdog_reports_dead_peer_before_the_comm_timeout() {
-        // a fake "peer" that exits non-zero immediately
-        let child = Command::new("false")
-            .stdin(Stdio::null())
-            .stdout(Stdio::null())
-            .stderr(Stdio::null())
-            .spawn();
-        let Ok(child) = child else {
+        // a fake "peer" killed by a signal, the way the chaos harness
+        // kills one
+        let Ok(child) = spawn_corpse() else {
             return; // sandboxed environments may forbid spawning
         };
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let children = Arc::new(Mutex::new(vec![(1usize, child)]));
         let done = Arc::new(AtomicBool::new(false));
-        let first_dead = Arc::new(AtomicI64::new(-1));
-        let handle = spawn_watchdog(children.clone(), addr, done.clone(), first_dead.clone());
+        let deaths = Arc::new(Mutex::new(BTreeSet::new()));
+        let handle = spawn_watchdog(children.clone(), addr, done.clone(), deaths.clone());
         // the watchdog must dial in and deliver the ABORT within its
         // polling cadence — read it straight off the listener
         listener.set_nonblocking(false).unwrap();
@@ -329,9 +499,87 @@ mod tests {
         done.store(true, Ordering::Release);
         handle.join().unwrap();
         assert_eq!(
-            first_dead.load(Ordering::Acquire),
-            1,
-            "the watchdog must record which node died first"
+            deaths.lock().unwrap().iter().copied().collect::<Vec<_>>(),
+            vec![1],
+            "the watchdog must record which node died"
+        );
+        kill_peers(&mut children.lock().unwrap());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn watchdog_accumulates_concurrent_deaths_in_one_set() {
+        // two fake peers die at once: both must land in the death set
+        // (the single-death early-return bug this test pins down) and
+        // each must get its own ABORT delivery
+        let (Ok(c1), Ok(c2)) = (spawn_corpse(), spawn_corpse()) else {
+            return; // sandboxed environments may forbid spawning
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let children = Arc::new(Mutex::new(vec![(1usize, c1), (2usize, c2)]));
+        let done = Arc::new(AtomicBool::new(false));
+        let deaths = Arc::new(Mutex::new(BTreeSet::new()));
+        let handle = spawn_watchdog(children.clone(), addr, done.clone(), deaths.clone());
+        listener.set_nonblocking(false).unwrap();
+        let mut named = BTreeSet::new();
+        for _ in 0..2 {
+            let (mut conn, _) = listener.accept().expect("watchdog dials per death");
+            match crate::comm::transport::wire::read_frame(&mut conn).unwrap() {
+                Frame::Abort { reason } => {
+                    if reason.contains("node 1") {
+                        named.insert(1usize);
+                    }
+                    if reason.contains("node 2") {
+                        named.insert(2usize);
+                    }
+                }
+                other => panic!("expected ABORT, got {}", other.name()),
+            }
+        }
+        done.store(true, Ordering::Release);
+        handle.join().unwrap();
+        assert_eq!(named.into_iter().collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(
+            deaths.lock().unwrap().iter().copied().collect::<Vec<_>>(),
+            vec![1, 2],
+            "both concurrent deaths must land in the shared set"
+        );
+        kill_peers(&mut children.lock().unwrap());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn error_exit_aborts_the_attempt_but_is_not_a_death() {
+        // a child exiting with an error *code* (bad flags, or a
+        // casualty of another node's death) must still fast-fail the
+        // attempt via ABORT, but must NOT be a regroup candidate —
+        // else one SIGKILL cascades into dropping every survivor
+        let child = Command::new("false")
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn();
+        let Ok(child) = child else {
+            return; // sandboxed environments may forbid spawning
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let children = Arc::new(Mutex::new(vec![(2usize, child)]));
+        let done = Arc::new(AtomicBool::new(false));
+        let deaths = Arc::new(Mutex::new(BTreeSet::new()));
+        let handle = spawn_watchdog(children.clone(), addr, done.clone(), deaths.clone());
+        listener.set_nonblocking(false).unwrap();
+        let (mut conn, _) = listener.accept().expect("watchdog dials the coordinator");
+        match crate::comm::transport::wire::read_frame(&mut conn).unwrap() {
+            Frame::Abort { reason } => assert!(reason.contains("node 2"), "{reason}"),
+            other => panic!("expected ABORT, got {}", other.name()),
+        }
+        done.store(true, Ordering::Release);
+        handle.join().unwrap();
+        assert!(
+            deaths.lock().unwrap().is_empty(),
+            "an error exit is not a fail-stop death"
         );
         kill_peers(&mut children.lock().unwrap());
     }

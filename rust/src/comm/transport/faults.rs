@@ -1,0 +1,456 @@
+//! Deterministic network fault injection for the TCP/shm transport.
+//!
+//! A fault plan is a comma-separated list of link-scoped fault specs,
+//! seeded from the run config (`--set fault_plan=...`), so the injected
+//! schedule is a pure function of the plan string — the same plan
+//! replays the same faults on every run, which is what lets the chaos
+//! CI assert a fault-injected run stays bit-identical to a clean one:
+//! every fault here perturbs *timing and connectivity*, never payload
+//! bytes.
+//!
+//! Spec grammar (`FROM`/`TO` are node ids; delay/trunc/drop/flap are
+//! directional sender→receiver, shmfail is symmetric on the pair):
+//!
+//! - `delay:FROM-TO:EVERY:MS` — every `EVERY`th frame written on the
+//!   link sleeps `MS` milliseconds before hitting the wire.
+//! - `trunc:FROM-TO:NTH` — the `NTH`th frame written on the link is
+//!   torn in two: a partial write, a flush, a pause, then the rest —
+//!   the receiver sees a mid-frame truncation it must reassemble.
+//! - `drop:FROM-TO:COUNT` — the first `COUNT` rendezvous dials from
+//!   `FROM` to `TO` fail with a named connection-drop error (the
+//!   bounded backoff retry then re-dials).
+//! - `flap:FROM-TO:COUNT` — the first `COUNT` mesh-link dials from
+//!   `FROM` to `TO` fail the same way (a link that flaps during mesh
+//!   establishment).
+//! - `shmfail:FROM-TO` — the shm ring handshake for the pair is forced
+//!   to fail; under `hybrid` the pair degrades to its TCP link with a
+//!   named warning, under pure `shm` the launch fails fast.
+//!
+//! The module also owns the bounded exponential-backoff retry helper
+//! the dial paths use (seeded jitter, named error when the budget is
+//! exhausted) and the process-global warnings collector the run report
+//! drains (graceful-degradation events land in run-JSON, not just on
+//! stderr).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// One parsed fault spec, scoped to a link.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Action {
+    Delay { every: u64, ms: u64 },
+    Trunc { nth: u64 },
+    Drop { count: u32 },
+    Flap { count: u32 },
+    ShmFail,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Rule {
+    from: u32,
+    to: u32,
+    action: Action,
+}
+
+/// A parsed, seeded fault plan. Empty (the default) injects nothing and
+/// costs nothing on the frame path.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    rules: Vec<Rule>,
+    seed: u64,
+}
+
+fn parse_link(spec: &str, part: &str) -> Result<(u32, u32)> {
+    let (a, b) = part
+        .split_once('-')
+        .with_context(|| format!("fault spec {spec:?}: link must be FROM-TO, got {part:?}"))?;
+    let from = a
+        .parse::<u32>()
+        .with_context(|| format!("fault spec {spec:?}: bad FROM node id {a:?}"))?;
+    let to = b
+        .parse::<u32>()
+        .with_context(|| format!("fault spec {spec:?}: bad TO node id {b:?}"))?;
+    ensure!(from != to, "fault spec {spec:?} targets a self-link ({from}-{to})");
+    Ok((from, to))
+}
+
+fn parse_count(spec: &str, part: &str, what: &str) -> Result<u64> {
+    let n = part
+        .parse::<u64>()
+        .with_context(|| format!("fault spec {spec:?}: bad {what} {part:?}"))?;
+    ensure!(n >= 1, "fault spec {spec:?}: {what} must be at least 1");
+    Ok(n)
+}
+
+impl FaultPlan {
+    /// Parse a plan string. The empty string (and whitespace) is the
+    /// empty plan; malformed specs are named errors so a typo fails the
+    /// launch instead of silently injecting nothing.
+    pub fn parse(plan: &str, seed: u64) -> Result<FaultPlan> {
+        let mut rules = Vec::new();
+        for spec in plan.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let parts: Vec<&str> = spec.split(':').collect();
+            let action = match parts[0] {
+                "delay" => {
+                    ensure!(
+                        parts.len() == 4,
+                        "fault spec {spec:?}: delay takes delay:FROM-TO:EVERY:MS"
+                    );
+                    Action::Delay {
+                        every: parse_count(spec, parts[2], "frame interval")?,
+                        ms: parse_count(spec, parts[3], "delay milliseconds")?,
+                    }
+                }
+                "trunc" => {
+                    ensure!(
+                        parts.len() == 3,
+                        "fault spec {spec:?}: trunc takes trunc:FROM-TO:NTH"
+                    );
+                    Action::Trunc { nth: parse_count(spec, parts[2], "frame number")? }
+                }
+                "drop" => {
+                    ensure!(
+                        parts.len() == 3,
+                        "fault spec {spec:?}: drop takes drop:FROM-TO:COUNT"
+                    );
+                    Action::Drop { count: parse_count(spec, parts[2], "drop count")? as u32 }
+                }
+                "flap" => {
+                    ensure!(
+                        parts.len() == 3,
+                        "fault spec {spec:?}: flap takes flap:FROM-TO:COUNT"
+                    );
+                    Action::Flap { count: parse_count(spec, parts[2], "flap count")? as u32 }
+                }
+                "shmfail" => {
+                    ensure!(
+                        parts.len() == 2,
+                        "fault spec {spec:?}: shmfail takes shmfail:FROM-TO"
+                    );
+                    Action::ShmFail
+                }
+                other => bail!(
+                    "unknown fault kind {other:?} in spec {spec:?} \
+                     (valid kinds: delay, trunc, drop, flap, shmfail)"
+                ),
+            };
+            let (from, to) = parse_link(spec, parts[1])?;
+            rules.push(Rule { from, to, action });
+        }
+        Ok(FaultPlan { rules, seed })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// The seed the plan was parsed with (feeds the backoff jitter).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Frame-path fault state for the directional link `from`→`to`, or
+    /// `None` when no delay/trunc rule targets it (clean links carry no
+    /// per-frame bookkeeping at all).
+    pub fn link_faults(&self, from: usize, to: usize) -> Option<Arc<LinkFaults>> {
+        let mut delay_every = 0u64;
+        let mut delay = Duration::ZERO;
+        let mut trunc_nth = 0u64;
+        for r in &self.rules {
+            if (r.from as usize, r.to as usize) != (from, to) {
+                continue;
+            }
+            match r.action {
+                Action::Delay { every, ms } => {
+                    delay_every = every;
+                    delay = Duration::from_millis(ms);
+                }
+                Action::Trunc { nth } => trunc_nth = nth,
+                _ => {}
+            }
+        }
+        if delay_every == 0 && trunc_nth == 0 {
+            return None;
+        }
+        Some(Arc::new(LinkFaults {
+            delay_every,
+            delay,
+            trunc_nth,
+            frames: AtomicU64::new(0),
+        }))
+    }
+
+    /// Injected failures for rendezvous dials `from`→`to`.
+    pub fn dial_drops(&self, from: usize, to: usize) -> u32 {
+        self.rules
+            .iter()
+            .filter_map(|r| match r.action {
+                Action::Drop { count }
+                    if (r.from as usize, r.to as usize) == (from, to) =>
+                {
+                    Some(count)
+                }
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Injected failures for mesh-link dials `from`→`to`.
+    pub fn mesh_flaps(&self, from: usize, to: usize) -> u32 {
+        self.rules
+            .iter()
+            .filter_map(|r| match r.action {
+                Action::Flap { count }
+                    if (r.from as usize, r.to as usize) == (from, to) =>
+                {
+                    Some(count)
+                }
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Is the shm ring handshake for the (undirected) pair forced to
+    /// fail? Both ends of the pair see the same answer, so the hybrid
+    /// fallback is symmetric.
+    pub fn shm_fails(&self, a: usize, b: usize) -> bool {
+        let key = (a.min(b), a.max(b));
+        self.rules.iter().any(|r| {
+            r.action == Action::ShmFail
+                && ((r.from as usize).min(r.to as usize), (r.from as usize).max(r.to as usize))
+                    == key
+        })
+    }
+}
+
+/// What the frame path does to the next frame on a faulted link.
+#[derive(Debug, PartialEq, Eq)]
+pub struct FrameFault {
+    /// Sleep this long before writing the frame.
+    pub delay: Option<Duration>,
+    /// Write the frame torn in two (partial write + flush + pause +
+    /// rest) — the bytes are unchanged, only the packetization is.
+    pub tear: bool,
+}
+
+/// Per-link frame-path fault state. The counter only advances under the
+/// link's writer lock, so the schedule is a deterministic function of
+/// the frame sequence number.
+#[derive(Debug)]
+pub struct LinkFaults {
+    delay_every: u64,
+    delay: Duration,
+    trunc_nth: u64,
+    frames: AtomicU64,
+}
+
+impl LinkFaults {
+    /// Advance the link's frame counter and report what (if anything)
+    /// to inject on this frame. Frames are numbered from 1.
+    pub fn next_frame(&self) -> FrameFault {
+        // audit: allow(atomic-ordering): the counter is only advanced
+        // under the link's writer mutex; the atomic is for Sync, not
+        // for cross-thread ordering.
+        let n = self.frames.fetch_add(1, Ordering::Relaxed) + 1;
+        FrameFault {
+            delay: (self.delay_every > 0 && n % self.delay_every == 0).then_some(self.delay),
+            tear: self.trunc_nth > 0 && n == self.trunc_nth,
+        }
+    }
+}
+
+fn xorshift(s: &mut u64) -> u64 {
+    *s ^= *s << 13;
+    *s ^= *s >> 7;
+    *s ^= *s << 17;
+    *s
+}
+
+/// Run `op` up to `attempts` times with bounded exponential backoff and
+/// seeded jitter between tries. `what` names the link/endpoint being
+/// re-established so a run that exhausts the budget dies with the dead
+/// link in the error, not a bare timeout. `op` receives the attempt
+/// number (0-based) — the fault layer uses it to count injected
+/// failures down.
+pub fn retry_with_backoff<T>(
+    what: &str,
+    attempts: u32,
+    base: Duration,
+    cap: Duration,
+    seed: u64,
+    mut op: impl FnMut(u32) -> Result<T>,
+) -> Result<T> {
+    ensure!(attempts >= 1, "retry budget for {what} must allow at least one attempt");
+    let mut rng = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1;
+    let mut last = None;
+    for attempt in 0..attempts {
+        match op(attempt) {
+            Ok(v) => return Ok(v),
+            Err(e) => last = Some(e),
+        }
+        if attempt + 1 < attempts {
+            let exp = base.saturating_mul(1u32 << attempt.min(16)).min(cap);
+            // jitter in [0, exp/2], deterministic from the seed
+            let jitter_ms = xorshift(&mut rng) % (exp.as_millis() as u64 / 2 + 1);
+            std::thread::sleep(exp + Duration::from_millis(jitter_ms));
+        }
+    }
+    let cause = last.expect("at least one attempt ran");
+    Err(cause.context(format!("retry budget exhausted after {attempts} attempts {what}")))
+}
+
+/// Default dial retry budget (attempts) for rendezvous and mesh links.
+pub const DIAL_ATTEMPTS: u32 = 4;
+/// First backoff step between dial attempts.
+pub const DIAL_BACKOFF_BASE: Duration = Duration::from_millis(25);
+/// Upper bound on a single backoff step.
+pub const DIAL_BACKOFF_CAP: Duration = Duration::from_millis(400);
+
+static WARNINGS: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+/// Record a graceful-degradation event (e.g. a hybrid shm→tcp
+/// fallback). Printed to stderr immediately and drained into the run
+/// report's `warnings` array by the coordinator at the end of the run.
+pub fn record_warning(msg: String) {
+    eprintln!("warning: {msg}");
+    WARNINGS.lock().unwrap_or_else(|e| e.into_inner()).push(msg);
+}
+
+/// Take every warning recorded in this process so far.
+pub fn drain_warnings() -> Vec<String> {
+    std::mem::take(&mut *WARNINGS.lock().unwrap_or_else(|e| e.into_inner()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_whitespace_plans_inject_nothing() {
+        for plan in ["", "  ", " , "] {
+            let p = FaultPlan::parse(plan, 7).unwrap();
+            assert!(p.is_empty(), "{plan:?}");
+            assert!(p.link_faults(0, 1).is_none());
+            assert_eq!(p.dial_drops(1, 0), 0);
+            assert_eq!(p.mesh_flaps(2, 1), 0);
+            assert!(!p.shm_fails(0, 1));
+        }
+    }
+
+    #[test]
+    fn full_plan_parses_and_scopes_to_links() {
+        let p = FaultPlan::parse(
+            "delay:0-1:3:5, trunc:1-0:2, drop:1-0:2, flap:2-1:1, shmfail:0-2",
+            42,
+        )
+        .unwrap();
+        assert!(!p.is_empty());
+        let lf = p.link_faults(0, 1).expect("delay rule targets 0->1");
+        assert_eq!(lf.next_frame(), FrameFault { delay: None, tear: false });
+        assert_eq!(lf.next_frame(), FrameFault { delay: None, tear: false });
+        assert_eq!(
+            lf.next_frame(),
+            FrameFault { delay: Some(Duration::from_millis(5)), tear: false }
+        );
+        // the reverse direction only has the trunc rule
+        let rev = p.link_faults(1, 0).expect("trunc rule targets 1->0");
+        assert_eq!(rev.next_frame(), FrameFault { delay: None, tear: false });
+        assert_eq!(rev.next_frame(), FrameFault { delay: None, tear: true });
+        assert_eq!(rev.next_frame(), FrameFault { delay: None, tear: false });
+        // untouched links carry no state at all
+        assert!(p.link_faults(1, 2).is_none());
+        assert_eq!(p.dial_drops(1, 0), 2);
+        assert_eq!(p.dial_drops(0, 1), 0, "drop is directional");
+        assert_eq!(p.mesh_flaps(2, 1), 1);
+        assert_eq!(p.mesh_flaps(1, 2), 0, "flap is directional");
+        assert!(p.shm_fails(0, 2));
+        assert!(p.shm_fails(2, 0), "shmfail is symmetric on the pair");
+        assert!(!p.shm_fails(0, 1));
+    }
+
+    #[test]
+    fn same_plan_and_seed_replay_the_same_schedule() {
+        let schedule = |p: &FaultPlan| {
+            let lf = p.link_faults(0, 1).unwrap();
+            (0..20).map(|_| lf.next_frame()).collect::<Vec<_>>()
+        };
+        let a = FaultPlan::parse("delay:0-1:4:2,trunc:0-1:7", 99).unwrap();
+        let b = FaultPlan::parse("delay:0-1:4:2,trunc:0-1:7", 99).unwrap();
+        assert_eq!(schedule(&a), schedule(&b), "fault schedules must replay deterministically");
+    }
+
+    #[test]
+    fn bad_specs_are_named_errors() {
+        for (plan, expect) in [
+            ("zap:0-1:3", "unknown fault kind"),
+            ("delay:0-1:3", "delay takes"),
+            ("delay:0-1:0:5", "must be at least 1"),
+            ("trunc:01:2", "link must be FROM-TO"),
+            ("drop:x-1:2", "bad FROM node id"),
+            ("flap:1-y:2", "bad TO node id"),
+            ("shmfail:1-1", "self-link"),
+            ("trunc:0-1:2:9", "trunc takes"),
+        ] {
+            let err = FaultPlan::parse(plan, 0).unwrap_err();
+            assert!(
+                format!("{err:#}").contains(expect),
+                "plan {plan:?} should fail with {expect:?}, got: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn retry_succeeds_after_transient_failures() {
+        let mut failures = 2;
+        let got = retry_with_backoff(
+            "re-dialing the mesh link to node 2",
+            4,
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+            7,
+            |attempt| {
+                if failures > 0 {
+                    failures -= 1;
+                    bail!("injected connection drop on attempt {attempt}");
+                }
+                Ok(attempt)
+            },
+        )
+        .unwrap();
+        assert_eq!(got, 2, "two failures then success on the third attempt");
+    }
+
+    #[test]
+    fn exhausted_retry_budget_names_the_dead_link() {
+        let err = retry_with_backoff::<()>(
+            "dialing mesh link 1-3",
+            3,
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+            7,
+            |_| bail!("connection refused"),
+        )
+        .unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("mesh link 1-3"), "{chain}");
+        assert!(chain.contains("retry budget exhausted after 3 attempts"), "{chain}");
+        assert!(chain.contains("connection refused"), "root cause must survive: {chain}");
+    }
+
+    #[test]
+    fn warnings_drain_once() {
+        record_warning("hybrid: ring link 0-1 unavailable (test)".into());
+        let drained = drain_warnings();
+        assert!(
+            drained.iter().any(|w| w.contains("ring link 0-1")),
+            "recorded warning must drain: {drained:?}"
+        );
+        assert!(
+            drain_warnings().iter().all(|w| !w.contains("(test)")),
+            "draining empties the collector"
+        );
+    }
+}

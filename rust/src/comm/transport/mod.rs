@@ -25,6 +25,7 @@
 //! serial executor for blocking strategies — is independent of the
 //! transport and the placement.
 
+pub mod faults;
 pub mod shm;
 pub mod tcp;
 pub mod wire;

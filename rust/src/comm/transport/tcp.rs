@@ -69,6 +69,7 @@ use crate::comm::channels::{
 use crate::comm::collectives::Wire;
 use crate::comm::topology::{LeaderPlacement, LinkClass, Topology};
 
+use super::faults::{self, FaultPlan, LinkFaults};
 use super::shm;
 use super::wire::{
     book_digest, read_frame, read_message, write_async_sum_pipelined, write_frame,
@@ -80,6 +81,17 @@ use super::{default_pipeline_chunk_elems, Transport, TransportKind, WireBytes, W
 pub const ENV_COORD_ADDR: &str = "DASO_COORD_ADDR";
 /// Environment variable carrying this process's node id (0 = coordinator).
 pub const ENV_NODE_ID: &str = "DASO_NODE_ID";
+/// Environment variable naming a file the node-0 child publishes its
+/// resolved rendezvous listener address into (written tmp + rename, so
+/// the supervisor never reads a partial address). This is what lets the
+/// supervisor bind node 0 on port 0 and still hand every peer the real
+/// address.
+pub const ENV_ADDR_FILE: &str = "DASO_ADDR_FILE";
+/// Environment variable handing the supervisor-owned shm segment
+/// directory to the node-0 child. The child attaches it without taking
+/// cleanup ownership — the supervisor reaps the segments on every exit
+/// path, including a SIGKILLed coordinator.
+pub const ENV_SHM_DIR: &str = "DASO_SHM_DIR";
 
 /// Deterministic comm-id scheme shared by every process of a launch.
 fn world_comm_id() -> u32 {
@@ -153,6 +165,13 @@ pub struct TcpTuning {
     /// process left over from a previous attempt re-dialing the (new)
     /// rendezvous is rejected by name instead of corrupting the regroup
     pub generation: u64,
+    /// seeded network fault plan (`--set fault_plan=...`); the empty
+    /// plan injects nothing and adds no per-frame bookkeeping
+    pub faults: Arc<FaultPlan>,
+    /// first node id rejoining after an elastic regroup (-1 = nobody);
+    /// verified in the handshake so a node that should present a REJOIN
+    /// but does not (or vice versa) fails by name
+    pub rejoin_from: i64,
 }
 
 impl TcpTuning {
@@ -167,6 +186,8 @@ impl TcpTuning {
             transport: TransportKind::Tcp,
             shm_dir: None,
             generation: 0,
+            faults: Arc::new(FaultPlan::default()),
+            rejoin_from: -1,
         }
     }
 
@@ -192,6 +213,16 @@ impl TcpTuning {
 
     pub fn with_generation(mut self, generation: u64) -> TcpTuning {
         self.generation = generation;
+        self
+    }
+
+    pub fn with_faults(mut self, faults: Arc<FaultPlan>) -> TcpTuning {
+        self.faults = faults;
+        self
+    }
+
+    pub fn with_rejoin_from(mut self, rejoin_from: i64) -> TcpTuning {
+        self.rejoin_from = rejoin_from;
         self
     }
 }
@@ -258,6 +289,9 @@ struct PeerLink {
     chunk_elems: usize,
     class: LinkClass,
     via_shm: bool,
+    /// injected fault schedule for this directional link (`None` for
+    /// clean links — the overwhelmingly common case pays nothing)
+    faults: Option<Arc<LinkFaults>>,
 }
 
 struct LinkWriter {
@@ -297,6 +331,28 @@ impl PeerLink {
             chunk_elems,
             class,
             via_shm,
+            faults: None,
+        }
+    }
+
+    fn with_faults(mut self, faults: Option<Arc<LinkFaults>>) -> PeerLink {
+        self.faults = faults;
+        self
+    }
+
+    /// Consult the link's fault schedule for the next frame: sleeps out
+    /// an injected delay here (under the writer lock, so the frame
+    /// counter is a deterministic function of the link's frame
+    /// sequence), returns whether the frame must be written torn.
+    fn next_fault_tear(&self) -> bool {
+        match self.faults.as_ref().map(|f| f.next_frame()) {
+            Some(fault) => {
+                if let Some(pause) = fault.delay {
+                    std::thread::sleep(pause);
+                }
+                fault.tear
+            }
+            None => false,
         }
     }
 
@@ -307,7 +363,12 @@ impl PeerLink {
         let mut sp = crate::obs::span(crate::obs::phase::LINK_SEND);
         let mut w = self.writer.lock().unwrap();
         let LinkWriter { stream, scratch } = &mut *w;
-        let bytes = write_frame_pipelined(stream, frame, wire, self.chunk_elems, scratch)?;
+        let bytes = if self.next_fault_tear() {
+            let mut torn = TearWriter { inner: stream, armed: true };
+            write_frame_pipelined(&mut torn, frame, wire, self.chunk_elems, scratch)?
+        } else {
+            write_frame_pipelined(stream, frame, wire, self.chunk_elems, scratch)?
+        };
         self.counters.add_sent(self.class, self.via_shm, bytes);
         sp.add_bytes(bytes);
         Ok(())
@@ -325,20 +386,64 @@ impl PeerLink {
         let mut sp = crate::obs::span(crate::obs::phase::LINK_SEND);
         let mut w = self.writer.lock().unwrap();
         let LinkWriter { stream, scratch } = &mut *w;
-        let bytes = write_async_sum_pipelined(
-            stream,
-            comm,
-            member,
-            seq,
-            finish,
-            sum,
-            wire,
-            self.chunk_elems,
-            scratch,
-        )?;
+        let bytes = if self.next_fault_tear() {
+            let mut torn = TearWriter { inner: stream, armed: true };
+            write_async_sum_pipelined(
+                &mut torn,
+                comm,
+                member,
+                seq,
+                finish,
+                sum,
+                wire,
+                self.chunk_elems,
+                scratch,
+            )?
+        } else {
+            write_async_sum_pipelined(
+                stream,
+                comm,
+                member,
+                seq,
+                finish,
+                sum,
+                wire,
+                self.chunk_elems,
+                scratch,
+            )?
+        };
         self.counters.add_sent(self.class, self.via_shm, bytes);
         sp.add_bytes(bytes);
         Ok(())
+    }
+}
+
+/// Write adapter that tears the first buffered write in two — a partial
+/// write, a flush, a pause, then the rest — so the receiver observes a
+/// mid-frame truncation it must reassemble. The byte sequence is
+/// unchanged: fault injection perturbs packetization and timing, never
+/// payloads, which is what keeps fault-injected runs bit-identical.
+struct TearWriter<'a> {
+    inner: &'a mut LinkWrite,
+    armed: bool,
+}
+
+impl Write for TearWriter<'_> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.armed && buf.len() >= 2 {
+            self.armed = false;
+            let cut = buf.len() / 2;
+            self.inner.write_all(&buf[..cut])?;
+            self.inner.flush()?;
+            std::thread::sleep(Duration::from_millis(2));
+            self.inner.write_all(&buf[cut..])?;
+            return Ok(buf.len());
+        }
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
     }
 }
 
@@ -416,6 +521,14 @@ impl TcpTransport {
         if role.node == 0 {
             let listener = TcpListener::bind(&role.addr)
                 .with_context(|| format!("binding coordinator listener on {}", role.addr))?;
+            if let Ok(path) = std::env::var(ENV_ADDR_FILE) {
+                let addr = listener.local_addr().context("resolving coordinator address")?;
+                let tmp = format!("{path}.tmp");
+                std::fs::write(&tmp, addr.to_string())
+                    .with_context(|| format!("writing coordinator address file {tmp}"))?;
+                std::fs::rename(&tmp, &path)
+                    .with_context(|| format!("publishing coordinator address file {path}"))?;
+            }
             Ok(TcpTransport::coordinator(topo, listener, tuning))
         } else {
             TcpTransport::peer(topo, role.node, &role.addr, tuning)
@@ -431,6 +544,8 @@ impl TcpTransport {
         let timeout = self.tuning.timeout;
         let chunk_elems = self.tuning.chunk_elems;
         let generation = self.tuning.generation;
+        let fault_plan = self.tuning.faults.clone();
+        let rejoin_from = self.tuning.rejoin_from;
         let deadline = Instant::now() + timeout;
         listener.set_nonblocking(true).context("making listener pollable")?;
 
@@ -487,6 +602,7 @@ impl TcpTransport {
                             transport: t,
                             mesh_addr,
                             generation: peer_gen,
+                            rejoin,
                         } => {
                             ensure!(
                                 version == PROTOCOL_VERSION,
@@ -533,6 +649,14 @@ impl TcpTransport {
                             ensure!(
                                 node >= 1 && node < nodes,
                                 "peer node id {node} out of range 1..{nodes}"
+                            );
+                            let expect_rejoin = rejoin_from >= 0 && node as i64 >= rejoin_from;
+                            ensure!(
+                                rejoin == expect_rejoin,
+                                "peer {peer_addr} (node {node}) presented rejoin={rejoin} but \
+                                 this attempt expects rejoin={expect_rejoin} — a process from \
+                                 another elastic attempt is dialing, or a restarted node lost \
+                                 its rejoin marker"
                             );
                             ensure!(writers[node].is_none(), "duplicate peer for node {node}");
                             mesh_addrs[node] = Some(mesh_addr);
@@ -596,10 +720,26 @@ impl TcpTransport {
                 "--transport shm requires every node process on one host \
                  (use --transport hybrid for multi-host launches)"
             );
-            Some(match self.tuning.shm_dir.clone() {
-                Some(path) => shm::SegmentDir::attach(path)?,
-                None => shm::SegmentDir::create(nodes, shm::default_ring_bytes())?,
-            })
+            let attached = match self.tuning.shm_dir.clone() {
+                Some(path) => shm::SegmentDir::attach(path),
+                None => shm::SegmentDir::create(nodes, shm::default_ring_bytes()),
+            };
+            match attached {
+                Ok(dir) => Some(dir),
+                Err(e) if transport == TransportKind::Hybrid => {
+                    // graceful degradation: the socket mesh already
+                    // carries every link, so a hybrid run survives a
+                    // missing or corrupt segment directory on tcp alone
+                    // (WELCOME advertises no shm path, so every peer
+                    // skips its ring phase the same way)
+                    faults::record_warning(format!(
+                        "hybrid: coordinator could not attach shm segments ({e:#}); \
+                         all collective traffic stays on tcp"
+                    ));
+                    None
+                }
+                Err(e) => return Err(e.context("preparing shm segment directory")),
+            }
         } else {
             None
         };
@@ -643,7 +783,8 @@ impl TcpTransport {
                         counters.clone(),
                         chunk_elems,
                         link_class(&book, 0, node),
-                    );
+                    )
+                    .with_faults(fault_plan.link_faults(0, node));
                     ctrl_links[node] = Some(link.clone());
                     data_links[node] = Some(link);
                 }
@@ -656,20 +797,64 @@ impl TcpTransport {
         }
         if let Some(dir) = &shm_segments {
             let digest = book_digest(&book);
+            // the whole plan's injected ring failures are checked (and,
+            // for peer-peer pairs, recorded) here: run-JSON warnings are
+            // drained from this process, and a forced ring failure with
+            // no tcp fallback must fail the launch by name before any
+            // peer wedges in its own ring phase
+            for a in 0..nodes {
+                for b in (a + 1)..nodes {
+                    if !fault_plan.shm_fails(a, b) {
+                        continue;
+                    }
+                    ensure!(
+                        transport == TransportKind::Hybrid,
+                        "fault plan forces the shm ring {a}-{b} to fail and --transport shm \
+                         has no tcp link to fall back to"
+                    );
+                    if a != 0 && link_class(&book, a, b) == LinkClass::NodeLocal {
+                        faults::record_warning(format!(
+                            "hybrid: injected shm ring failure for pair {a}-{b}; \
+                             the pair stays on its tcp link"
+                        ));
+                    }
+                }
+            }
             for q in 1..nodes {
                 if transport == TransportKind::Hybrid
                     && link_class(&book, 0, q) != LinkClass::NodeLocal
                 {
                     continue; // cross-host link: stays on the socket
                 }
-                let (producer, consumer) =
-                    ring_link(dir, topo, wire, 0, q, digest, timeout, deadline)?;
-                let link = PeerLink::ring(producer, counters.clone(), chunk_elems);
-                if transport == TransportKind::Shm {
-                    ctrl_links[q] = Some(link.clone());
+                if fault_plan.shm_fails(0, q) {
+                    faults::record_warning(format!(
+                        "hybrid: injected shm ring failure for pair 0-{q}; \
+                         the pair stays on its tcp link"
+                    ));
+                    continue;
                 }
-                data_links[q] = Some(link);
-                link_readers.push((q, LinkRead::Shm(consumer)));
+                match ring_link(dir, topo, wire, 0, q, digest, timeout, deadline) {
+                    Ok((producer, consumer)) => {
+                        let link = PeerLink::ring(producer, counters.clone(), chunk_elems)
+                            .with_faults(fault_plan.link_faults(0, q));
+                        if transport == TransportKind::Shm {
+                            ctrl_links[q] = Some(link.clone());
+                        }
+                        data_links[q] = Some(link);
+                        link_readers.push((q, LinkRead::Shm(consumer)));
+                    }
+                    Err(e) if transport == TransportKind::Hybrid => {
+                        // the peer's matching ring wait is deadline-bound;
+                        // when it times out it degrades to tcp the same way
+                        faults::record_warning(format!(
+                            "hybrid: shm ring handshake with node {q} failed ({e:#}); \
+                             the pair stays on its tcp link"
+                        ));
+                    }
+                    Err(e) => {
+                        return Err(e.context(format!("establishing the shm ring to node {q}")))
+                    }
+                }
             }
         }
         self.cleanup = shm_segments;
@@ -697,9 +882,25 @@ impl TcpTransport {
         let timeout = self.tuning.timeout;
         let chunk_elems = self.tuning.chunk_elems;
         let generation = self.tuning.generation;
+        let fault_plan = self.tuning.faults.clone();
+        let rejoin_from = self.tuning.rejoin_from;
         let deadline = Instant::now() + timeout;
 
-        let stream = dial_with_retry(addr, deadline, "coordinator").with_context(|| {
+        let drops = fault_plan.dial_drops(me, 0);
+        let stream = faults::retry_with_backoff(
+            &format!("connecting node {me} to the coordinator at {addr}"),
+            faults::DIAL_ATTEMPTS,
+            faults::DIAL_BACKOFF_BASE,
+            faults::DIAL_BACKOFF_CAP,
+            fault_plan.seed() ^ me as u64,
+            |attempt| {
+                if attempt < drops {
+                    bail!("injected connection drop on dial attempt {attempt}");
+                }
+                dial_with_retry(addr, deadline, "coordinator")
+            },
+        )
+        .with_context(|| {
             format!("connecting to coordinator at {addr} (is the rank-0 process up?)")
         })?;
         stream.set_nodelay(true).ok();
@@ -733,6 +934,7 @@ impl TcpTransport {
                 transport,
                 mesh_addr: mesh_addr.clone(),
                 generation,
+                rejoin: rejoin_from >= 0 && me as i64 >= rejoin_from,
             },
             wire,
         )?;
@@ -781,8 +983,11 @@ impl TcpTransport {
                     t.name(),
                     transport.name()
                 );
+                // hybrid tolerates a missing segment directory (the
+                // coordinator degraded to tcp and advertised no path);
+                // pure shm has no other medium, so it must fail by name
                 ensure!(
-                    !transport.uses_shm() || !shm_dir.is_empty(),
+                    transport != TransportKind::Shm || !shm_dir.is_empty(),
                     "coordinator advertised no shm segment directory for --transport {}",
                     transport.name()
                 );
@@ -819,7 +1024,8 @@ impl TcpTransport {
                 counters.clone(),
                 chunk_elems,
                 link_class(&book, me, 0),
-            );
+            )
+            .with_faults(fault_plan.link_faults(me, 0));
             ctrl_links[0] = Some(link.clone());
             data_links[0] = Some(link);
             link_readers.push((0, LinkRead::Tcp(reader)));
@@ -830,8 +1036,27 @@ impl TcpTransport {
             // acyclic — node j only blocks on i < j — so the mesh can
             // never deadlock.
             for target in 1..me {
-                let stream =
-                    dial_mesh_link(topo, wire, me, target, &book[target], digest, deadline)?;
+                let flaps = fault_plan.mesh_flaps(me, target);
+                let stream = faults::retry_with_backoff(
+                    &format!("dialing mesh link {me}-{target}"),
+                    faults::DIAL_ATTEMPTS,
+                    faults::DIAL_BACKOFF_BASE,
+                    faults::DIAL_BACKOFF_CAP,
+                    fault_plan.seed() ^ (((me as u64) << 32) | target as u64),
+                    |attempt| {
+                        if attempt < flaps {
+                            // a flap: the connection comes up and dies
+                            // before the handshake; the acceptor drops
+                            // the dead stream and keeps waiting
+                            if let Ok(s) = dial_with_retry(&book[target], deadline, "mesh peer")
+                            {
+                                drop(s);
+                            }
+                            bail!("injected link flap on mesh dial attempt {attempt}");
+                        }
+                        dial_mesh_link(topo, wire, me, target, &book[target], digest, deadline)
+                    },
+                )?;
                 // run-long bound: the handshake's tighter write deadline
                 // must not linger on the established link
                 stream.set_write_timeout(Some(timeout)).ok();
@@ -842,7 +1067,8 @@ impl TcpTransport {
                     counters.clone(),
                     chunk_elems,
                     link_class(&book, me, target),
-                );
+                )
+                .with_faults(fault_plan.link_faults(me, target));
                 ctrl_links[target] = Some(link.clone());
                 data_links[target] = Some(link);
                 link_readers.push((target, LinkRead::Tcp(tcp_reader)));
@@ -858,7 +1084,8 @@ impl TcpTransport {
                     counters.clone(),
                     chunk_elems,
                     link_class(&book, me, node),
-                );
+                )
+                .with_faults(fault_plan.link_faults(me, node));
                 ctrl_links[node] = Some(link.clone());
                 data_links[node] = Some(link);
                 link_readers.push((node, LinkRead::Tcp(tcp_reader)));
@@ -871,7 +1098,7 @@ impl TcpTransport {
         // frames for node-local pairs move onto the rings; for
         // --transport shm everything does, and the rendezvous socket's
         // job ended at WELCOME.
-        if transport.uses_shm() {
+        if transport.uses_shm() && !shm_dir.is_empty() {
             // only the pairs this process actually rides on rings; a
             // hybrid peer with no node-local links (a lone process on a
             // remote host) must not attach — the segment dir only exists
@@ -884,16 +1111,57 @@ impl TcpTransport {
                 })
                 .collect();
             if !ring_peers.is_empty() {
-                let dir = shm::SegmentDir::attach(PathBuf::from(&shm_dir))?;
-                for other in ring_peers {
-                    let (producer, consumer) =
-                        ring_link(&dir, topo, wire, me, other, digest, timeout, deadline)?;
-                    let link = PeerLink::ring(producer, counters.clone(), chunk_elems);
-                    if transport == TransportKind::Shm {
-                        ctrl_links[other] = Some(link.clone());
+                match shm::SegmentDir::attach(PathBuf::from(&shm_dir)) {
+                    Ok(dir) => {
+                        for other in ring_peers {
+                            if fault_plan.shm_fails(me, other) {
+                                // both ends of the pair consult the same
+                                // plan, so the skip is symmetric
+                                ensure!(
+                                    transport == TransportKind::Hybrid,
+                                    "fault plan forces the shm ring {me}-{other} to fail and \
+                                     --transport shm has no tcp link to fall back to"
+                                );
+                                faults::record_warning(format!(
+                                    "hybrid: injected shm ring failure for pair {me}-{other}; \
+                                     the pair stays on its tcp link"
+                                ));
+                                continue;
+                            }
+                            match ring_link(
+                                &dir, topo, wire, me, other, digest, timeout, deadline,
+                            ) {
+                                Ok((producer, consumer)) => {
+                                    let link =
+                                        PeerLink::ring(producer, counters.clone(), chunk_elems)
+                                            .with_faults(fault_plan.link_faults(me, other));
+                                    if transport == TransportKind::Shm {
+                                        ctrl_links[other] = Some(link.clone());
+                                    }
+                                    data_links[other] = Some(link);
+                                    link_readers.push((other, LinkRead::Shm(consumer)));
+                                }
+                                Err(e) if transport == TransportKind::Hybrid => {
+                                    faults::record_warning(format!(
+                                        "hybrid: shm ring handshake with node {other} failed \
+                                         ({e:#}); the pair stays on its tcp link"
+                                    ));
+                                }
+                                Err(e) => {
+                                    return Err(e.context(format!(
+                                        "establishing the shm ring to node {other}"
+                                    )))
+                                }
+                            }
+                        }
                     }
-                    data_links[other] = Some(link);
-                    link_readers.push((other, LinkRead::Shm(consumer)));
+                    Err(e) if transport == TransportKind::Hybrid => {
+                        faults::record_warning(format!(
+                            "hybrid: node {me} could not attach shm segments ({e:#}); \
+                             its collective traffic stays on tcp"
+                        ));
+                    }
+                    Err(e) => return Err(e.context("attaching shm segment directory")),
                 }
             }
         }
@@ -1846,7 +2114,7 @@ mod tests {
     #[test]
     fn handshake_rejects_version_1_peer() {
         // a protocol-1 peer (17-byte HELLO, no wire field) against a
-        // version-3 coordinator must produce a clear version error — not
+        // current coordinator must produce a clear version error — not
         // corrupt a rendezvous, not hang
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -1871,7 +2139,7 @@ mod tests {
         stream.flush().unwrap();
         let cerr = coord.join().expect("coordinator thread").unwrap_err().to_string();
         assert!(
-            cerr.contains("protocol 1") && cerr.contains("4"),
+            cerr.contains("protocol 1") && cerr.contains(&PROTOCOL_VERSION.to_string()),
             "error should name both protocol versions: {cerr}"
         );
         drop(stream);
@@ -2206,5 +2474,125 @@ mod tests {
         if std::env::var(ENV_COORD_ADDR).is_err() {
             assert!(TcpRole::from_env().is_err());
         }
+    }
+
+    #[test]
+    fn fault_injected_roundtrip_is_bit_identical() {
+        // delays, one torn frame in each direction of the 0-1 link, two
+        // dropped rendezvous dials and one mesh flap: `check_drive`
+        // asserts the exact clean-run values, so passing = the injected
+        // faults never changed a delivered bit, at either wire format
+        for wire in [Wire::F32, Wire::Bf16] {
+            let plan = FaultPlan::parse(
+                "delay:0-1:2:1,trunc:1-0:1,trunc:0-1:2,drop:1-0:2,flap:2-1:1",
+                42,
+            )
+            .unwrap();
+            roundtrip_cluster(
+                Topology::new(3, 2),
+                tuning(Duration::from_secs(30), wire).with_faults(Arc::new(plan)),
+            );
+        }
+    }
+
+    #[test]
+    fn exhausted_dial_budget_is_a_named_error() {
+        // more injected drops than the retry budget: the peer must die
+        // with an error naming the budget, the endpoint and the root
+        // cause — never silently hang waiting for a rendezvous
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let plan = FaultPlan::parse("drop:1-0:9", 7).unwrap();
+        let topo = Topology::new(2, 1);
+        let mut p = TcpTransport::peer(
+            topo,
+            1,
+            &addr,
+            tuning(Duration::from_secs(5), Wire::F32).with_faults(Arc::new(plan)),
+        )
+        .unwrap();
+        let err = format!("{:#}", p.connect().unwrap_err());
+        assert!(err.contains("retry budget exhausted"), "{err}");
+        assert!(err.contains("coordinator"), "{err}");
+        assert!(err.contains("injected connection drop"), "{err}");
+    }
+
+    #[test]
+    fn rejoining_world_connects_with_the_rejoin_handshake() {
+        // every process agrees nodes >= 2 are rejoining: the REJOIN
+        // hello must be accepted and the grown world must train
+        roundtrip_cluster(
+            Topology::new(3, 2),
+            tuning(Duration::from_secs(30), Wire::F32).with_rejoin_from(2),
+        );
+    }
+
+    #[test]
+    fn handshake_rejects_missing_rejoin_marker() {
+        // the coordinator expects node 1 to present REJOIN after a
+        // regroup; a restart that lost the marker is rejected by name
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let coord = std::thread::spawn(move || {
+            let mut t = TcpTransport::coordinator(
+                Topology::new(2, 1),
+                listener,
+                tuning(Duration::from_secs(10), Wire::F32).with_rejoin_from(1),
+            );
+            t.connect().map(|_| ())
+        });
+        let mut p = TcpTransport::peer(
+            Topology::new(2, 1),
+            1,
+            &addr,
+            tuning(Duration::from_secs(10), Wire::F32),
+        )
+        .unwrap();
+        let peer_result = p.connect().map(|_| ());
+        let cerr = coord.join().expect("coordinator thread").unwrap_err().to_string();
+        assert!(cerr.contains("rejoin"), "{cerr}");
+        assert!(peer_result.is_err(), "peer must not come up without its rejoin marker");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn hybrid_degrades_to_tcp_when_every_ring_is_forced_down() {
+        // shmfail on every pair: the run must complete entirely on the
+        // socket mesh (zero ring bytes) with bit-identical results —
+        // the graceful-degradation path of the fault layer
+        let plan = FaultPlan::parse("shmfail:0-1,shmfail:0-2,shmfail:1-2", 1).unwrap();
+        let wb = roundtrip_cluster(
+            Topology::new(3, 2),
+            tuning(Duration::from_secs(30), Wire::F32)
+                .with_transport(TransportKind::Hybrid)
+                .with_faults(Arc::new(plan)),
+        );
+        assert_eq!(wb.sent_shm(), 0, "every pair degraded to its tcp link");
+        assert!(wb.sent() > 0);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn pure_shm_fails_fast_on_a_forced_ring_failure() {
+        // no tcp link to fall back to: the coordinator must fail the
+        // launch by name instead of letting peers wedge in ring waits
+        let topo = Topology::new(2, 1);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let plan = Arc::new(FaultPlan::parse("shmfail:0-1", 1).unwrap());
+        let t = tuning(Duration::from_secs(5), Wire::F32)
+            .with_transport(TransportKind::Shm)
+            .with_faults(plan);
+        let peer_t = t.clone();
+        let peer = std::thread::spawn(move || {
+            let mut p = TcpTransport::peer(topo, 1, &addr, peer_t).unwrap();
+            p.connect().map(|_| ())
+        });
+        let mut c = TcpTransport::coordinator(topo, listener, t);
+        let cerr = c.connect().map(|_| ()).unwrap_err().to_string();
+        assert!(cerr.contains("no tcp link to fall back to"), "{cerr}");
+        assert!(peer.join().expect("peer thread").is_err());
     }
 }

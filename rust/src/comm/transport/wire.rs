@@ -65,7 +65,13 @@ use super::TransportKind;
 /// payload fragmentation. Version 4: the negotiated transport kind
 /// (tcp|shm|hybrid) in HELLO/WELCOME, the shm segment directory in
 /// WELCOME, and the ABORT frame (launcher watchdog -> coordinator).
-pub const PROTOCOL_VERSION: u32 = 5;
+/// Version 5: the elastic launch generation in HELLO/WELCOME (stale
+/// processes from a previous regroup attempt fail fast). Version 6: the
+/// REJOIN flag in HELLO — a node restarted by the supervisor after a
+/// regroup announces it is re-entering a grown world, and the
+/// coordinator cross-checks the flag against the attempt's expected
+/// rejoin set.
+pub const PROTOCOL_VERSION: u32 = 6;
 
 /// Upper bound on a frame body (sanity check against corrupt length
 /// prefixes; generously above any model's parameter buffer).
@@ -219,6 +225,9 @@ pub enum Frame {
     /// `generation` (v5+, 0 before) is the elastic launch attempt the
     /// peer was spawned for — the coordinator rejects a stale process
     /// from a previous attempt re-dialing a regrouped rendezvous.
+    /// `rejoin` (v6+, false before) marks a node the supervisor
+    /// restarted into a grown world after a regroup; the coordinator
+    /// cross-checks it against the attempt's expected rejoin set.
     Hello {
         version: u32,
         node: u32,
@@ -229,6 +238,7 @@ pub enum Frame {
         transport: TransportKind,
         mesh_addr: String,
         generation: u64,
+        rejoin: bool,
     },
     /// Coordinator -> peer: handshake accepted; `book[n]` is node `n`'s
     /// dialable address (v3+, empty before) — the peer mesh's address
@@ -595,7 +605,8 @@ fn body_len(frame: &Frame, wire: Wire) -> usize {
             2 => 18,
             3 => 19 + 4 + mesh_addr.len(),
             4 => 20 + 4 + mesh_addr.len(),
-            _ => 28 + 4 + mesh_addr.len(),
+            5 => 28 + 4 + mesh_addr.len(),
+            _ => 29 + 4 + mesh_addr.len(),
         },
         Frame::Welcome { version, book, shm_dir, .. } => {
             let book_len = 4 + book.iter().map(|e| 4 + e.len()).sum::<usize>();
@@ -645,6 +656,7 @@ fn encode_body_to(out: &mut Vec<u8>, frame: &Frame, wire: Wire) {
             transport,
             mesh_addr,
             generation,
+            rejoin,
         } => {
             out.push(TAG_HELLO);
             put_u32(out, *version);
@@ -652,9 +664,9 @@ fn encode_body_to(out: &mut Vec<u8>, frame: &Frame, wire: Wire) {
             put_u32(out, *nodes);
             put_u32(out, *gpus_per_node);
             // pre-v2 frames had no wire byte, pre-v3 none of the mesh
-            // fields, pre-v4 no transport byte, pre-v5 no generation:
-            // encode what the stated version can carry, so compatibility
-            // tests can produce old-version bytes
+            // fields, pre-v4 no transport byte, pre-v5 no generation,
+            // pre-v6 no rejoin flag: encode what the stated version can
+            // carry, so compatibility tests can produce old-version bytes
             if *version >= 2 {
                 out.push(wire_code(*hello_wire));
             }
@@ -669,6 +681,9 @@ fn encode_body_to(out: &mut Vec<u8>, frame: &Frame, wire: Wire) {
             }
             if *version >= 5 {
                 put_u64(out, *generation);
+            }
+            if *version >= 6 {
+                out.push(u8::from(*rejoin));
             }
         }
         Frame::Welcome {
@@ -794,6 +809,7 @@ pub fn decode_body(body: &[u8]) -> Result<Frame> {
                 if version >= 4 { transport_from_code(c.u8()?)? } else { TransportKind::Tcp };
             let mesh_addr = if version >= 3 { c.string()? } else { String::new() };
             let generation = if version >= 5 { c.u64()? } else { 0 };
+            let rejoin = if version >= 6 { c.u8()? != 0 } else { false };
             Frame::Hello {
                 version,
                 node,
@@ -804,6 +820,7 @@ pub fn decode_body(body: &[u8]) -> Result<Frame> {
                 transport,
                 mesh_addr,
                 generation,
+                rejoin,
             }
         }
         TAG_WELCOME => {
@@ -1239,7 +1256,7 @@ mod tests {
     #[test]
     fn hello_welcome_roundtrip() {
         match roundtrip(Frame::Hello {
-            version: 5,
+            version: 6,
             node: 3,
             nodes: 4,
             gpus_per_node: 2,
@@ -1248,9 +1265,10 @@ mod tests {
             transport: TransportKind::Hybrid,
             mesh_addr: "127.0.0.1:4567".into(),
             generation: 7,
+            rejoin: true,
         }) {
             Frame::Hello {
-                version: 5,
+                version: 6,
                 node: 3,
                 nodes: 4,
                 gpus_per_node: 2,
@@ -1259,11 +1277,12 @@ mod tests {
                 transport: TransportKind::Hybrid,
                 mesh_addr,
                 generation: 7,
+                rejoin: true,
             } => assert_eq!(mesh_addr, "127.0.0.1:4567"),
             other => panic!("bad roundtrip: {other:?}"),
         }
         match roundtrip(Frame::Welcome {
-            version: 5,
+            version: 6,
             nodes: 4,
             gpus_per_node: 2,
             wire: Wire::F16,
@@ -1274,7 +1293,7 @@ mod tests {
             generation: 3,
         }) {
             Frame::Welcome {
-                version: 5,
+                version: 6,
                 nodes: 4,
                 gpus_per_node: 2,
                 wire: Wire::F16,
@@ -1306,12 +1325,13 @@ mod tests {
                 transport: TransportKind::Hybrid,
                 mesh_addr: "a:1".into(),
                 generation: 9, // must not be encoded below v5
+                rejoin: true,  // must not be encoded below v6
             },
             Wire::F32,
         );
         assert_eq!(hello.len(), 20 + 4 + 3, "v4 hello must not carry the generation");
         match decode_body(&hello).unwrap() {
-            Frame::Hello { version: 4, generation: 0, .. } => {}
+            Frame::Hello { version: 4, generation: 0, rejoin: false, .. } => {}
             other => panic!("v4 hello decoded as {other:?}"),
         }
         let welcome = encode_body(
@@ -1332,6 +1352,53 @@ mod tests {
         match decode_body(&welcome).unwrap() {
             Frame::Welcome { version: 4, generation: 0, .. } => {}
             other => panic!("v4 welcome decoded as {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v5_hellos_default_rejoin_false() {
+        // a v5 process predates elastic rejoin: its HELLO carries the
+        // generation but no rejoin byte, and must decode to rejoin=false
+        let hello = encode_body(
+            &Frame::Hello {
+                version: 5,
+                node: 1,
+                nodes: 3,
+                gpus_per_node: 2,
+                wire: Wire::F32,
+                placement: LeaderPlacement::Mesh,
+                transport: TransportKind::Tcp,
+                mesh_addr: "a:1".into(),
+                generation: 2,
+                rejoin: true, // must not be encoded below v6
+            },
+            Wire::F32,
+        );
+        assert_eq!(hello.len(), 28 + 4 + 3, "v5 hello must not carry the rejoin flag");
+        match decode_body(&hello).unwrap() {
+            Frame::Hello { version: 5, generation: 2, rejoin: false, .. } => {}
+            other => panic!("v5 hello decoded as {other:?}"),
+        }
+        // a v6 hello is exactly one rejoin byte longer
+        let v6 = encode_body(
+            &Frame::Hello {
+                version: 6,
+                node: 1,
+                nodes: 3,
+                gpus_per_node: 2,
+                wire: Wire::F32,
+                placement: LeaderPlacement::Mesh,
+                transport: TransportKind::Tcp,
+                mesh_addr: "a:1".into(),
+                generation: 2,
+                rejoin: true,
+            },
+            Wire::F32,
+        );
+        assert_eq!(v6.len(), 29 + 4 + 3, "v6 hello carries exactly one rejoin byte");
+        match decode_body(&v6).unwrap() {
+            Frame::Hello { version: 6, generation: 2, rejoin: true, .. } => {}
+            other => panic!("v6 hello decoded as {other:?}"),
         }
     }
 
@@ -1409,6 +1476,7 @@ mod tests {
                 transport: TransportKind::Hybrid,
                 mesh_addr: "ignored-below-v3".into(),
                 generation: 0,
+                rejoin: false,
             },
             Wire::F32,
         );
@@ -1432,6 +1500,7 @@ mod tests {
                 transport: TransportKind::Shm,
                 mesh_addr: "a:1".into(),
                 generation: 0,
+                rejoin: false,
             },
             Wire::F32,
         );

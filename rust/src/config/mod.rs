@@ -228,6 +228,16 @@ impl RunSpec {
             "train.generation" | "generation" => {
                 self.train.launch_generation = as_f64()? as u64
             }
+            "train.fault_plan" | "fault_plan" => {
+                self.train.fault_plan = as_str()?.to_string()
+            }
+            "train.rejoin_from" | "rejoin_from" => self.train.rejoin_from = as_f64()? as i64,
+            "train.regroup_log" | "regroup_log" => {
+                self.train.regroup_log = as_str()?.to_string()
+            }
+            "train.rejoin_log" | "rejoin_log" => {
+                self.train.rejoin_log = as_str()?.to_string()
+            }
 
             "daso.b_initial" => self.daso.b_initial = as_usize()?,
             "daso.warmup_epochs" => self.daso.warmup_epochs = as_usize()?,
@@ -263,6 +273,13 @@ impl RunSpec {
         if self.train.resume && self.train.checkpoint_dir.is_empty() {
             bail!("--resume needs --checkpoint-dir (config key checkpoint_dir)");
         }
+        // a malformed fault plan must fail the launch up front (a typo
+        // that silently injected nothing would fake chaos coverage)
+        crate::comm::transport::faults::FaultPlan::parse(
+            &self.train.fault_plan,
+            self.train.seed,
+        )
+        .context("config key fault_plan")?;
         Ok(())
     }
 
@@ -380,6 +397,10 @@ impl RunSpec {
             ("straggler_node", num(self.train.straggler_node as f64)),
             ("straggler_factor", num(self.train.straggler_factor)),
             ("generation", num(self.train.launch_generation as f64)),
+            ("fault_plan", s(&self.train.fault_plan)),
+            ("rejoin_from", num(self.train.rejoin_from as f64)),
+            ("regroup_log", s(&self.train.regroup_log)),
+            ("rejoin_log", s(&self.train.rejoin_log)),
             ("trace", Value::Bool(self.train.trace)),
             ("daso.b_initial", num(self.daso.b_initial as f64)),
             ("daso.warmup_epochs", num(self.daso.warmup_epochs as f64)),
@@ -622,6 +643,26 @@ mod tests {
         assert!(s.daso.absorb_stragglers);
         assert_eq!(s.daso.absorb_threshold, 0.4);
         assert_eq!(s.daso.absorb_patience, 3);
+    }
+
+    #[test]
+    fn fault_and_rejoin_overrides() {
+        let mut s = RunSpec::default_for("mlp");
+        assert!(s.train.fault_plan.is_empty(), "no faults by default");
+        assert_eq!(s.train.rejoin_from, -1, "nobody rejoins by default");
+        s.set("fault_plan=delay:0-1:3:5,drop:1-0:2").unwrap();
+        s.set("rejoin_from=2").unwrap();
+        s.set("regroup_log=2:1:2:2").unwrap();
+        s.set("rejoin_log=4:2:3:2").unwrap();
+        assert_eq!(s.train.fault_plan, "delay:0-1:3:5,drop:1-0:2");
+        assert_eq!(s.train.rejoin_from, 2);
+        assert_eq!(s.train.regroup_log, "2:1:2:2");
+        assert_eq!(s.train.rejoin_log, "4:2:3:2");
+        s.validate().unwrap();
+        s.set("fault_plan=zap:0-1:3").unwrap();
+        let err = format!("{:#}", s.validate().unwrap_err());
+        assert!(err.contains("fault_plan"), "{err}");
+        assert!(err.contains("unknown fault kind"), "{err}");
     }
 
     #[test]

@@ -127,6 +127,7 @@ fn emit_report(spec: &RunSpec, report: &daso::trainer::RunReport) -> Result<()> 
                 ("gpus_per_node", num(spec.train.gpus_per_node as f64)),
                 ("generation", num(spec.train.launch_generation as f64)),
                 ("regroups", num(report.regroups.len() as f64)),
+                ("rejoins", num(report.rejoins.len() as f64)),
                 ("git_commit", s(&git_commit)),
             ]);
             daso::obs::trace::write_chrome_trace(&path, &report.obs, meta)?;
@@ -167,18 +168,33 @@ fn emit_report(spec: &RunSpec, report: &daso::trainer::RunReport) -> Result<()> 
                 artifacts.push((rel, f));
             }
         }
+        let node_list =
+            |ids: &[usize]| arr(ids.iter().map(|n| num(*n as f64)).collect());
         let regroups_json = arr(report
             .regroups
             .iter()
             .map(|e| {
                 obj(vec![
                     ("resume_epoch", num(e.resume_epoch as f64)),
-                    ("lost_node", num(e.lost_node as f64)),
+                    ("lost_nodes", node_list(&e.lost_nodes)),
                     ("nodes", num(e.nodes as f64)),
                     ("gpus_per_node", num(e.gpus_per_node as f64)),
                 ])
             })
             .collect());
+        let rejoins_json = arr(report
+            .rejoins
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("resume_epoch", num(e.resume_epoch as f64)),
+                    ("joined_nodes", node_list(&e.joined_nodes)),
+                    ("nodes", num(e.nodes as f64)),
+                    ("gpus_per_node", num(e.gpus_per_node as f64)),
+                ])
+            })
+            .collect());
+        let warnings_json = arr(report.warnings.iter().map(|w| s(w)).collect());
         let manifest = daso::obs::manifest::build(
             &run_id,
             created_unix,
@@ -187,6 +203,8 @@ fn emit_report(spec: &RunSpec, report: &daso::trainer::RunReport) -> Result<()> 
             spec.env_json(),
             report.world,
             regroups_json,
+            rejoins_json,
+            warnings_json,
             &artifacts,
         )?;
         let mpath = base.join(format!("{tag}.manifest.json"));
@@ -307,25 +325,41 @@ fn cmd_train(args: &Args) -> Result<()> {
         spec.executor.name()
     );
     match run_spec(&spec, &rt, &*train_d, &*val_d)? {
-        Some(report) => emit_report(&spec, &report)?,
+        Some(mut report) => {
+            // under `daso launch` the supervisor forwards the elastic
+            // event history as encoded config strings; fold it into the
+            // report this (coordinator) process emits
+            report.regroups =
+                daso::trainer::RegroupEvent::decode_log(&spec.train.regroup_log)
+                    .context("config key regroup_log")?;
+            report.rejoins = daso::trainer::RejoinEvent::decode_log(&spec.train.rejoin_log)
+                .context("config key rejoin_log")?;
+            emit_report(&spec, &report)?;
+        }
         None => eprintln!("peer node finished (the coordinator prints the report)"),
     }
     Ok(())
 }
 
-/// Spawn a full multi-process run on this machine: bind the coordinator
-/// listener, re-exec this binary once per peer node with the training
-/// flags forwarded, then train as node 0 through the TCP transport.
+/// Spawn a full multi-process run on this machine. `daso launch` is a
+/// thin *elastic supervisor*: it re-execs this binary once per node —
+/// node 0 (the coordinator, which binds the rendezvous listener,
+/// publishes its resolved address through a private file, and emits the
+/// run report) is just another child, so a SIGKILLed coordinator is
+/// survivable like any peer.
 ///
-/// The launch is an *elastic supervisor loop*: each pass is one attempt.
-/// When a peer process dies mid-run (the watchdog names the corpse) and
-/// checkpointing is configured, the supervisor rewrites the newest
-/// snapshot for the surviving topology, re-deals the dead node's data
-/// shards (implicit in the smaller world), bumps the launch generation
-/// (the HELLO/WELCOME handshake refuses stale processes) and relaunches
-/// on the survivors with `--resume` forced. Every regroup is recorded in
-/// the final report's `regroups` list. Any other failure — or a death
-/// with no usable checkpoint — surfaces as the attempt's error.
+/// Each pass of the loop is one attempt. When a process is fail-stop
+/// killed mid-run (the watchdog accumulates every corpse in one death
+/// set) and checkpointing is configured, the supervisor rewrites the
+/// newest snapshot for the surviving topology, bumps the launch
+/// generation (the HELLO/WELCOME handshake refuses stale processes) and
+/// relaunches on the survivors with `--resume` forced. The shrunk world
+/// then runs only to its next snapshot: the supervisor grows that
+/// snapshot back to the launch topology (new nodes bootstrap from node
+/// 0's state, re-admitted through the REJOIN handshake) and relaunches
+/// at full strength. Every transition is recorded in the final report's
+/// `regroups`/`rejoins` lists. Any other failure — or a death with no
+/// usable checkpoint — surfaces as the attempt's error.
 fn cmd_launch(args: &Args) -> Result<()> {
     let bind = args.get("bind").unwrap_or("127.0.0.1:0");
     let mut spec = build_spec(args)?;
@@ -344,22 +378,45 @@ fn cmd_launch(args: &Args) -> Result<()> {
     }
     let transport = spec.resolved_transport()?;
 
-    // base peer command line: the run-defining flags plus user
+    // base child command line: the run-defining flags plus user
     // overrides; launch_attempt appends the per-attempt forced entries
-    // (executor, topology, resume/generation) after these
+    // (executor, topology, resume/generation, fault/event state) after
+    // these. The report-writing flags ride only on node 0's argv: the
+    // coordinator child owns the report.
     let base_args = daso::cluster::launch::base_child_args(args);
+    let mut node0_extra: Vec<String> = Vec::new();
+    if let Some(dir) = &spec.out_dir {
+        node0_extra.push("--out".into());
+        node0_extra.push(dir.clone());
+    }
+    if let Some(path) = &spec.trace_out {
+        node0_extra.push("--trace-out".into());
+        node0_extra.push(path.clone());
+    }
 
+    // the engine is consulted only for the canonical model name that
+    // keys checkpoint fingerprints during regroup/rejoin rewrites (and
+    // to fail fast on a bad --model before spawning anything)
     let engine = Engine::auto(&spec.artifacts_dir);
-    let rt = engine.model(&spec.model)?;
-    let (train_d, val_d) = daso::data::for_model(
-        &rt.spec,
-        spec.train.train_samples,
-        spec.train.val_samples,
-        spec.train.seed,
+    let model_name = engine.model(&spec.model)?.spec.name.clone();
+
+    let target_nodes = spec.train.nodes;
+    let user_stop = spec.train.stop_after_epochs;
+    let mut pending_rejoin = false;
+    let mut regroups: Vec<daso::trainer::RegroupEvent> = Vec::new();
+    let mut rejoins: Vec<daso::trainer::RejoinEvent> = Vec::new();
+    let mut launcher = daso::cluster::launch::Launcher::prepare(
+        bind,
+        spec.train.nodes,
+        spec.train.gpus_per_node,
+        transport,
     )?;
 
-    let mut regroups: Vec<daso::trainer::RegroupEvent> = Vec::new();
-    let mut report = loop {
+    loop {
+        // forward the elastic event history so the coordinator child
+        // can fold it into the report it emits
+        spec.train.regroup_log = daso::trainer::RegroupEvent::encode_log(&regroups);
+        spec.train.rejoin_log = daso::trainer::RejoinEvent::encode_log(&rejoins);
         eprintln!(
             "launching {} with {}: {} node process(es) x {} workers over {} (generation {})",
             spec.model,
@@ -369,52 +426,74 @@ fn cmd_launch(args: &Args) -> Result<()> {
             transport.name(),
             spec.train.launch_generation,
         );
-        let (result, dead) =
-            launch_attempt(&spec, bind, transport, &base_args, &rt, &*train_d, &*val_d)?;
-        match result {
-            Ok(report) => break report,
-            Err(e) if dead > 0 => {
-                let dead = dead as usize;
-                eprintln!("launch: node {dead} died mid-run ({e:#}); regrouping onto survivors");
-                let resume_epoch = regroup_onto_survivors(&mut spec, &rt.spec.name, dead)
-                    .with_context(|| format!("cannot regroup after losing node {dead}"))?;
+        let (outcome, deaths) =
+            launch_attempt(&launcher, &spec, transport, &base_args, &node0_extra)?;
+        match outcome {
+            Ok(()) => {
+                if !pending_rejoin {
+                    return Ok(());
+                }
+                // the shrunk interlude ran to its scheduled stop: grow
+                // the newest snapshot back and relaunch at full strength
+                pending_rejoin = false;
+                let ev = rejoin_from_snapshot(&mut spec, &model_name, target_nodes)?;
+                rejoins.push(ev);
+                spec.train.stop_after_epochs = user_stop;
+            }
+            Err(e) if !deaths.is_empty() => {
+                let lost: Vec<usize> = deaths.iter().copied().collect();
+                eprintln!(
+                    "launch: node(s) {lost:?} died mid-run ({e:#}); regrouping onto survivors"
+                );
+                let resume_epoch = regroup_onto_survivors(&mut spec, &model_name, &deaths)
+                    .with_context(|| format!("cannot regroup after losing node(s) {lost:?}"))?;
                 regroups.push(daso::trainer::RegroupEvent {
                     resume_epoch,
-                    lost_node: dead,
+                    lost_nodes: lost,
                     nodes: spec.train.nodes,
                     gpus_per_node: spec.train.gpus_per_node,
                 });
+                // schedule the rejoin: run the shrunk world just far
+                // enough to cut its next snapshot, then grow back —
+                // unless the run (or the user's own stop) ends first,
+                // in which case the shrunk world finishes the job
+                let interlude_stop = resume_epoch + spec.train.checkpoint_every_epochs;
+                if interlude_stop < spec.train.epochs
+                    && (user_stop == 0 || interlude_stop < user_stop)
+                {
+                    spec.train.stop_after_epochs = interlude_stop;
+                    pending_rejoin = true;
+                } else {
+                    spec.train.stop_after_epochs = user_stop;
+                    pending_rejoin = false;
+                }
             }
             Err(e) => return Err(e),
         }
-    };
-    report.regroups = regroups;
-    emit_report(&spec, &report)
+        // fresh addr file and (for shm transports) fresh ring segments:
+        // a SIGKILL mid-frame leaves the old rings corpse-scribbled
+        launcher.reset_for_attempt()?;
+    }
 }
 
-/// One launch attempt: bind, spawn peers, train as node 0, tear down.
-/// Returns the attempt's outcome plus the watchdog's first-dead node id
-/// (-1 when no peer died before/while the coordinator failed); a death
-/// noticed only after a successful run is reported as a plain error,
-/// never as a regroup signal.
+/// One supervised launch attempt: spawn node 0 (the coordinator child),
+/// wait for the address it publishes, spawn the peers against it, and
+/// babysit the lot with the watchdog. The coordinator child's exit
+/// status is the attempt's outcome — it emits the report itself.
+/// Returns the outcome plus the set of fail-stop deaths (signal-killed
+/// processes) the attempt suffered; an error paired with a non-empty
+/// death set is the supervisor's regroup signal.
 fn launch_attempt(
+    launcher: &daso::cluster::launch::Launcher,
     spec: &RunSpec,
-    bind: &str,
     transport: daso::comm::TransportKind,
     base_args: &[String],
-    rt: &daso::runtime::ModelRuntime,
-    train_d: &dyn daso::data::Dataset,
-    val_d: &dyn daso::data::Dataset,
-) -> Result<(Result<daso::trainer::RunReport>, i64)> {
-    use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+    node0_extra: &[String],
+) -> Result<(Result<()>, std::collections::BTreeSet<usize>)> {
+    use std::collections::BTreeSet;
+    use std::sync::atomic::{AtomicBool, Ordering};
     use std::sync::{Arc, Mutex};
-
-    let (nodes, wpn) = (spec.train.nodes, spec.train.gpus_per_node);
-    // binds the listener AND (for shm-backed transports) creates the
-    // segment directory — the launcher keeps cleanup ownership of the
-    // segments through `shm_guard` below, so every exit path reaps them
-    let launcher = daso::cluster::launch::Launcher::bind(bind, nodes, wpn, transport)?;
-    let addr = launcher.addr();
+    use std::time::Duration;
 
     // forced as trailing --set entries (see launch::forced_child_sets
     // for why the forced list wins over anything a user forwarded)
@@ -423,61 +502,109 @@ fn launch_attempt(
         train_args.push("--set".into());
         train_args.push(forced);
     }
+    let mut node0_args = train_args.clone();
+    node0_args.extend(node0_extra.iter().cloned());
 
-    let children = launcher.spawn_peers(&train_args)?;
-    let factory = spec.build_rank_strategies();
-    let (listener, shm_guard) = launcher.into_parts();
-    let shm_dir = shm_guard.as_ref().map(|d| d.path().to_path_buf());
+    let mut node0 = launcher.spawn_node0(&node0_args)?;
+    let addr = match launcher.wait_addr_file(&mut node0, Duration::from_secs(30)) {
+        Ok(a) => a,
+        Err(e) => {
+            // the only regroupable pre-rendezvous failure is the
+            // coordinator itself being fail-stop killed before it
+            // published; anything else (bad flags, bind failure) is a
+            // hard error for the supervisor to surface
+            let mut deaths = BTreeSet::new();
+            if let Ok(Some(status)) = node0.try_wait() {
+                if daso::cluster::launch::is_fail_stop(&status) {
+                    deaths.insert(0usize);
+                }
+            }
+            let _ = node0.kill();
+            let _ = node0.wait();
+            return Ok((Err(e), deaths));
+        }
+    };
+    let peers = match launcher.spawn_peers(spec.train.nodes, &train_args, addr) {
+        Ok(p) => p,
+        Err(e) => {
+            let _ = node0.kill();
+            let _ = node0.wait();
+            return Err(e);
+        }
+    };
+    let mut kids: Vec<(usize, std::process::Child)> = vec![(0, node0)];
+    kids.extend(peers);
 
-    // watchdog: a peer dying before the handshake aborts the rendezvous
-    // with a named error instead of waiting out comm_timeout_ms, and
-    // records the first corpse for the elastic supervisor; the shm
-    // segments are reaped by shm_guard on every path below
-    let children = Arc::new(Mutex::new(children));
+    // watchdog: a child dying before the handshake aborts the
+    // rendezvous with a named error instead of waiting out
+    // comm_timeout_ms, and every fail-stop corpse lands in the shared
+    // death set for the elastic supervisor
+    let children = Arc::new(Mutex::new(kids));
     let done = Arc::new(AtomicBool::new(false));
-    let first_dead = Arc::new(AtomicI64::new(-1));
+    let deaths = Arc::new(Mutex::new(BTreeSet::new()));
     let watchdog = daso::cluster::launch::spawn_watchdog(
         children.clone(),
         addr,
         done.clone(),
-        first_dead.clone(),
+        deaths.clone(),
     );
 
-    let result = daso::cluster::train_coordinator(
-        rt,
-        &spec.train,
-        train_d,
-        val_d,
-        &factory,
-        listener,
-        transport,
-        shm_dir,
-    );
+    // the attempt is over when the coordinator child exits: success
+    // means it trained to its stop and emitted the report
+    let node0_status = loop {
+        {
+            let mut kids = children.lock().unwrap();
+            let node0 = kids
+                .iter_mut()
+                .find(|(n, _)| *n == 0)
+                .map(|(_, c)| c)
+                .expect("node 0 is tracked");
+            match node0.try_wait() {
+                Ok(Some(status)) => break Ok(status),
+                Ok(None) => {}
+                Err(e) => break Err(anyhow!("waiting on the coordinator process: {e}")),
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
     done.store(true, Ordering::Release);
     let _ = watchdog.join();
     let mut kids = std::mem::take(&mut *children.lock().unwrap());
-    let outcome = match result {
-        Ok(report) => match daso::cluster::launch::wait_peers(kids) {
-            Ok(()) => Ok(report),
-            // the run completed; a peer failing on its way out is not a
-            // regroup signal
-            Err(e) => return Ok((Err(e), -1)),
-        },
-        Err(e) => {
-            daso::cluster::launch::kill_peers(&mut kids);
-            Err(e)
+    let node0_status = node0_status?;
+
+    let outcome = if node0_status.success() {
+        // reap the peers; one failing on its way out after a clean run
+        // is a plain error, never a regroup signal
+        kids.retain(|(n, _)| *n != 0);
+        daso::cluster::launch::wait_peers(kids)
+    } else {
+        // sweep for corpses the watchdog's polling cadence missed —
+        // BEFORE kill_peers puts the survivors down with its own
+        // signals, which must not read as deaths
+        for (node, child) in kids.iter_mut() {
+            if let Ok(Some(status)) = child.try_wait() {
+                if daso::cluster::launch::is_fail_stop(&status) {
+                    deaths.lock().unwrap().insert(*node);
+                }
+            }
         }
+        daso::cluster::launch::kill_peers(&mut kids);
+        Err(anyhow!("coordinator process (node 0) exited with {node0_status}"))
     };
-    let dead = if outcome.is_err() { first_dead.load(Ordering::Acquire) } else { -1 };
-    drop(shm_guard);
-    Ok((outcome, dead))
+    let deaths = if outcome.is_err() {
+        std::mem::take(&mut *deaths.lock().unwrap())
+    } else {
+        BTreeSet::new()
+    };
+    Ok((outcome, deaths))
 }
 
-/// Rewrite the newest checkpoint generation for the world that survives
-/// `dead_node` and point `spec` at the new topology: one node fewer,
-/// `--resume` forced, launch generation bumped past the source
-/// snapshot's attempt. Returns the epoch training resumes at.
-fn regroup_onto_survivors(spec: &mut RunSpec, model_name: &str, dead_node: usize) -> Result<usize> {
+/// Shared preconditions for any elastic snapshot rewrite, then the
+/// newest usable generation.
+fn load_newest_for_rewrite(
+    spec: &RunSpec,
+    model_name: &str,
+) -> Result<daso::cluster::checkpoint::LoadedCheckpoint> {
     use daso::cluster::checkpoint;
 
     ensure!(
@@ -489,14 +616,36 @@ fn regroup_onto_survivors(spec: &mut RunSpec, model_name: &str, dead_node: usize
         "elastic regroup resumes from checkpoints, which only strategy=daso supports"
     );
     let dir = std::path::Path::new(&spec.train.checkpoint_dir);
-    let old_fp = checkpoint::run_fingerprint(model_name, spec.strategy.name(), &spec.train);
-    let loaded = checkpoint::load_latest(dir, &old_fp)?.ok_or_else(|| {
+    let fp = checkpoint::run_fingerprint(model_name, spec.strategy.name(), &spec.train);
+    checkpoint::load_latest(dir, &fp)?.ok_or_else(|| {
         anyhow!("no checkpoint generations in {dir:?} — the run died before the first snapshot")
-    })?;
+    })
+}
+
+/// Rewrite the newest checkpoint generation for the world that survives
+/// `dead_nodes` and point `spec` at the new topology: the dead nodes
+/// dropped and the survivors renumbered (losing node 0 is survivable —
+/// the lowest survivor becomes the coordinator), `--resume` forced,
+/// launch generation bumped past the source snapshot's attempt. Returns
+/// the epoch training resumes at.
+fn regroup_onto_survivors(
+    spec: &mut RunSpec,
+    model_name: &str,
+    dead_nodes: &std::collections::BTreeSet<usize>,
+) -> Result<usize> {
+    use daso::cluster::checkpoint;
+
+    ensure!(
+        dead_nodes.len() < spec.train.nodes,
+        "all {} node(s) died; nothing survives to regroup onto",
+        spec.train.nodes
+    );
+    let loaded = load_newest_for_rewrite(spec, model_name)?;
+    let dir = std::path::Path::new(&spec.train.checkpoint_dir);
     let mut survivor_train = spec.train.clone();
-    survivor_train.nodes -= 1;
+    survivor_train.nodes -= dead_nodes.len();
     let new_fp = checkpoint::run_fingerprint(model_name, spec.strategy.name(), &survivor_train);
-    let rewritten = checkpoint::rewrite_for_survivors(&loaded, dead_node, &new_fp)?;
+    let rewritten = checkpoint::rewrite_for_survivors(&loaded, dead_nodes, &new_fp)?;
     let attempt = loaded.attempt + 1;
     for ck in &rewritten {
         checkpoint::write_rank(dir, loaded.epochs_done, attempt, ck)?;
@@ -506,10 +655,72 @@ fn regroup_onto_survivors(spec: &mut RunSpec, model_name: &str, dead_node: usize
         loaded.epochs_done,
         survivor_train.nodes
     );
-    spec.train.nodes -= 1;
+    spec.train.nodes = survivor_train.nodes;
     spec.train.resume = true;
     spec.train.launch_generation = attempt;
+    spec.train.rejoin_from = -1;
     Ok(loaded.epochs_done)
+}
+
+/// Grow the newest (shrunk-world) snapshot back to `target_nodes` and
+/// point `spec` at the full topology: the new nodes bootstrap from node
+/// 0's state, present the REJOIN handshake (`rejoin_from` marks the
+/// first rejoining node id), and the launch generation bumps past the
+/// interlude's attempt. The grown generation is also copied aside as
+/// `rejoin-snapshot-<gen>` — a non-`gen-` name invisible to generation
+/// scanning — so CI can replay an uninterrupted control run from the
+/// identical state and assert bit-identical continuation.
+fn rejoin_from_snapshot(
+    spec: &mut RunSpec,
+    model_name: &str,
+    target_nodes: usize,
+) -> Result<daso::trainer::RejoinEvent> {
+    use daso::cluster::checkpoint;
+
+    let shrunk_nodes = spec.train.nodes;
+    ensure!(
+        target_nodes > shrunk_nodes,
+        "rejoin must grow the world: {shrunk_nodes} -> {target_nodes} node(s)"
+    );
+    let loaded = load_newest_for_rewrite(spec, model_name)
+        .context("the interlude cut no usable snapshot to rejoin from")?;
+    let dir = std::path::Path::new(&spec.train.checkpoint_dir);
+    let mut grown_train = spec.train.clone();
+    grown_train.nodes = target_nodes;
+    let new_fp = checkpoint::run_fingerprint(model_name, spec.strategy.name(), &grown_train);
+    let rewritten = checkpoint::rewrite_for_rejoin(&loaded, &new_fp)?;
+    let attempt = loaded.attempt + 1;
+    for ck in &rewritten {
+        checkpoint::write_rank(dir, loaded.epochs_done, attempt, ck)?;
+    }
+    let gen_name = checkpoint::gen_dir_name(loaded.epochs_done, attempt);
+    let control = dir.join(format!("rejoin-snapshot-{gen_name}"));
+    std::fs::create_dir_all(&control)
+        .with_context(|| format!("create control snapshot dir {control:?}"))?;
+    for entry in std::fs::read_dir(dir.join(&gen_name))
+        .with_context(|| format!("reading grown generation {gen_name}"))?
+    {
+        let entry = entry?;
+        std::fs::copy(entry.path(), control.join(entry.file_name()))
+            .with_context(|| format!("copying {:?} into {control:?}", entry.path()))?;
+    }
+    eprintln!(
+        "rejoin: grew epoch-{} snapshot {} -> {} node(s) (attempt {attempt}; control copy {})",
+        loaded.epochs_done,
+        shrunk_nodes,
+        target_nodes,
+        control.display()
+    );
+    spec.train.nodes = target_nodes;
+    spec.train.resume = true;
+    spec.train.launch_generation = attempt;
+    spec.train.rejoin_from = shrunk_nodes as i64;
+    Ok(daso::trainer::RejoinEvent {
+        resume_epoch: loaded.epochs_done,
+        joined_nodes: (shrunk_nodes..target_nodes).collect(),
+        nodes: target_nodes,
+        gpus_per_node: spec.train.gpus_per_node,
+    })
 }
 
 /// Run every strategy on the same model/config and print a comparison —

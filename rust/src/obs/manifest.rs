@@ -23,7 +23,7 @@ use anyhow::{bail, Context, Result};
 use crate::util::json::{arr, num, obj, s, Value};
 use crate::util::sha::sha256_hex;
 
-pub const MANIFEST_SCHEMA_VERSION: &str = "1.0.0";
+pub const MANIFEST_SCHEMA_VERSION: &str = "1.1.0";
 pub const MANIFEST_KIND: &str = "daso-run-manifest";
 
 /// One artifact entry: relative path (as recorded), sha256 of the file
@@ -81,6 +81,8 @@ pub fn build(
     env: Value,
     world: usize,
     regroups: Value,
+    rejoins: Value,
+    warnings: Value,
     artifacts: &[(String, std::path::PathBuf)],
 ) -> Result<Value> {
     let mut entries = Vec::with_capacity(artifacts.len());
@@ -97,6 +99,8 @@ pub fn build(
         ("env".to_string(), env),
         ("world".to_string(), num(world as f64)),
         ("regroups".to_string(), regroups),
+        ("rejoins".to_string(), rejoins),
+        ("warnings".to_string(), warnings),
         ("artifacts".to_string(), arr(entries)),
     ]
     .into_iter()
@@ -124,6 +128,8 @@ mod tests {
             obj(vec![("model", s("mlp")), ("lr", num(0.05))]),
             obj(vec![("nodes", num(3.0))]),
             6,
+            arr(vec![]),
+            arr(vec![]),
             arr(vec![]),
             &[("run.json".to_string(), art)],
         )

@@ -99,8 +99,9 @@ pub fn report_json(report: &RunReport) -> Value {
             arr(report.records.iter().map(|r| num(r.train_loss)).collect()),
         ),
         // one entry per degraded-mode regroup the supervisor performed:
-        // which node died, which epoch the survivors resumed from, and
-        // the shrunken topology they resumed with
+        // which node(s) died (possibly node 0 — the coordinator is
+        // survivable), which epoch the survivors resumed from, and the
+        // shrunken topology they resumed with
         (
             "regroups",
             arr(report
@@ -109,12 +110,41 @@ pub fn report_json(report: &RunReport) -> Value {
                 .map(|e| {
                     obj(vec![
                         ("resume_epoch", num(e.resume_epoch as f64)),
-                        ("lost_node", num(e.lost_node as f64)),
+                        (
+                            "lost_nodes",
+                            arr(e.lost_nodes.iter().map(|&n| num(n as f64)).collect()),
+                        ),
                         ("nodes", num(e.nodes as f64)),
                         ("gpus_per_node", num(e.gpus_per_node as f64)),
                     ])
                 })
                 .collect()),
+        ),
+        // one entry per elastic rejoin: which node ids were grown back
+        // in, from which snapshot epoch, restoring which topology
+        (
+            "rejoins",
+            arr(report
+                .rejoins
+                .iter()
+                .map(|e| {
+                    obj(vec![
+                        ("resume_epoch", num(e.resume_epoch as f64)),
+                        (
+                            "joined_nodes",
+                            arr(e.joined_nodes.iter().map(|&n| num(n as f64)).collect()),
+                        ),
+                        ("nodes", num(e.nodes as f64)),
+                        ("gpus_per_node", num(e.gpus_per_node as f64)),
+                    ])
+                })
+                .collect()),
+        ),
+        // named degradation warnings (e.g. a hybrid run falling back to
+        // TCP after a failed shm attach) — empty on a clean run
+        (
+            "warnings",
+            arr(report.warnings.iter().map(|w| s(w)).collect()),
         ),
     ])
 }
@@ -235,6 +265,8 @@ mod tests {
             comm: CommStats::default(),
             final_params: vec![vec![0.0; 4]; 4],
             regroups: vec![],
+            rejoins: vec![],
+            warnings: vec![],
             obs: Default::default(),
         }
     }
@@ -254,6 +286,9 @@ mod tests {
         let v = Value::parse(&json).unwrap();
         assert_eq!(v.req_str("strategy").unwrap(), "daso");
         assert_eq!(v.req_usize("world").unwrap(), 4);
+        assert!(v.req_arr("regroups").unwrap().is_empty());
+        assert!(v.req_arr("rejoins").unwrap().is_empty());
+        assert!(v.req_arr("warnings").unwrap().is_empty());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -88,6 +88,23 @@ pub struct TrainConfig {
     /// elastic relaunch attempt, forced to children by `daso launch` on
     /// every regroup; the handshake rejects peers from another attempt
     pub launch_generation: u64,
+    /// deterministic network fault plan (`fault_plan`; empty = no
+    /// faults). Comma-separated specs seeded from `seed`, e.g.
+    /// `delay:0-1:3:5,drop:1-0:2,flap:2-1:1,trunc:0-1:2,shmfail:0-1`.
+    /// Injected faults delay/tear/re-dial but never corrupt payloads,
+    /// so a faulted run stays bit-identical to a clean one.
+    pub fault_plan: String,
+    /// first node id that is *rejoining* this attempt (`rejoin_from`;
+    /// -1 = nobody). Nodes >= this id present the v6 REJOIN handshake
+    /// marker and the coordinator rejects mismatches.
+    pub rejoin_from: i64,
+    /// encoded regroup history forwarded by the launch supervisor
+    /// (`regroup_log`; events `resume:lost+lost:nodes:gpn` joined by
+    /// `;`) so the final run JSON reports every shrink survived
+    pub regroup_log: String,
+    /// encoded rejoin history forwarded by the launch supervisor
+    /// (`rejoin_log`; same shape as `regroup_log` with joined node ids)
+    pub rejoin_log: String,
     /// record per-phase spans/histograms into the obs subsystem
     /// (`--trace-out`, config key `trace`). Tracing only observes —
     /// results stay bit-identical with it on or off — and is excluded
@@ -125,6 +142,10 @@ impl TrainConfig {
             straggler_node: -1,
             straggler_factor: 1.0,
             launch_generation: 0,
+            fault_plan: String::new(),
+            rejoin_from: -1,
+            regroup_log: String::new(),
+            rejoin_log: String::new(),
             trace: false,
         }
     }
@@ -159,17 +180,108 @@ pub struct EpochRecord {
     pub strategy_state: String,
 }
 
-/// One elastic-regroup event: a peer died mid-run and the survivors
-/// re-rendezvoused and continued (recorded in the run JSON).
+/// One elastic-regroup event: one or more peers died mid-run and the
+/// survivors re-rendezvoused and continued (recorded in the run JSON).
 #[derive(Debug, Clone, PartialEq)]
 pub struct RegroupEvent {
     /// epoch index training resumed at after the regroup
     pub resume_epoch: usize,
-    /// node id that died, in the failed attempt's numbering
-    pub lost_node: usize,
+    /// node ids that died, in the failed attempt's numbering (node 0 —
+    /// the coordinator — is a legal entry: the supervisor restarts it
+    /// like any peer)
+    pub lost_nodes: Vec<usize>,
     /// surviving topology
     pub nodes: usize,
     pub gpus_per_node: usize,
+}
+
+/// One elastic-rejoin event: after a regroup shrank the world, the
+/// supervisor restarted the lost processes and grew the world back to
+/// its target size from the newest snapshot (recorded in the run JSON).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RejoinEvent {
+    /// epoch index training resumed at after the world grew back
+    pub resume_epoch: usize,
+    /// node ids (in the grown attempt's numbering) that entered through
+    /// the REJOIN handshake
+    pub joined_nodes: Vec<usize>,
+    /// restored topology
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+}
+
+/// Codec for the supervisor→child event history strings
+/// (`regroup_log`/`rejoin_log` config keys): events are
+/// `resume_epoch:node+node:nodes:gpus_per_node`, joined by `;`. The
+/// supervisor encodes its accumulated history before each attempt; the
+/// node-0 child decodes it into the final report.
+fn encode_event(resume_epoch: usize, ids: &[usize], nodes: usize, gpn: usize) -> String {
+    let ids: Vec<String> = ids.iter().map(|n| n.to_string()).collect();
+    format!("{resume_epoch}:{}:{nodes}:{gpn}", ids.join("+"))
+}
+
+fn decode_event(what: &str, entry: &str) -> Result<(usize, Vec<usize>, usize, usize)> {
+    let parts: Vec<&str> = entry.split(':').collect();
+    ensure!(
+        parts.len() == 4,
+        "malformed {what} entry {entry:?}: expected resume:ids:nodes:gpus_per_node"
+    );
+    let field = |v: &str, name: &str| -> Result<usize> {
+        v.parse()
+            .map_err(|_| anyhow!("malformed {what} entry {entry:?}: bad {name} {v:?}"))
+    };
+    let ids = parts[1]
+        .split('+')
+        .map(|v| field(v, "node id"))
+        .collect::<Result<Vec<usize>>>()?;
+    ensure!(!ids.is_empty(), "malformed {what} entry {entry:?}: empty node list");
+    Ok((field(parts[0], "resume epoch")?, ids, field(parts[2], "nodes")?, field(parts[3], "gpus_per_node")?))
+}
+
+impl RegroupEvent {
+    /// Encode a regroup history for the `regroup_log` config key.
+    pub fn encode_log(events: &[RegroupEvent]) -> String {
+        let entries: Vec<String> = events
+            .iter()
+            .map(|e| encode_event(e.resume_epoch, &e.lost_nodes, e.nodes, e.gpus_per_node))
+            .collect();
+        entries.join(";")
+    }
+
+    /// Decode a `regroup_log` value (empty string = no events).
+    pub fn decode_log(log: &str) -> Result<Vec<RegroupEvent>> {
+        log.split(';')
+            .filter(|e| !e.is_empty())
+            .map(|entry| {
+                let (resume_epoch, lost_nodes, nodes, gpus_per_node) =
+                    decode_event("regroup_log", entry)?;
+                Ok(RegroupEvent { resume_epoch, lost_nodes, nodes, gpus_per_node })
+            })
+            .collect()
+    }
+}
+
+impl RejoinEvent {
+    /// Encode a rejoin history for the `rejoin_log` config key.
+    pub fn encode_log(events: &[RejoinEvent]) -> String {
+        let entries: Vec<String> = events
+            .iter()
+            .map(|e| encode_event(e.resume_epoch, &e.joined_nodes, e.nodes, e.gpus_per_node))
+            .collect();
+        entries.join(";")
+    }
+
+    /// Decode a `rejoin_log` value (empty string = no events).
+    pub fn decode_log(log: &str) -> Result<Vec<RejoinEvent>> {
+        log.split(';')
+            .filter(|e| !e.is_empty())
+            .map(|entry| {
+                let (resume_epoch, joined_nodes, nodes, gpus_per_node) =
+                    decode_event("rejoin_log", entry)?;
+                Ok(RejoinEvent { resume_epoch, joined_nodes, nodes, gpus_per_node })
+            })
+            .collect()
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -181,6 +293,12 @@ pub struct RunReport {
     /// elastic-regroup events survived during the run (injected by the
     /// launch supervisor; empty for undisturbed runs)
     pub regroups: Vec<RegroupEvent>,
+    /// elastic-rejoin events: worlds grown back to target size after a
+    /// regroup (injected by the launch supervisor)
+    pub rejoins: Vec<RejoinEvent>,
+    /// named degradation warnings (e.g. hybrid shm→tcp fallback);
+    /// surfaced in the run JSON so chaos CI can assert on them
+    pub warnings: Vec<String>,
     pub final_metric: f64,
     pub final_val_loss: f64,
     /// best validation metric over the run (the paper reports max IOU)
@@ -510,6 +628,8 @@ pub fn train(
         comm: strategy.comm_stats(),
         final_params: cluster.workers.iter().map(|w| w.params.clone()).collect(),
         regroups: vec![],
+        rejoins: vec![],
+        warnings: vec![],
         obs,
     })
 }
@@ -534,4 +654,42 @@ fn eval_consensus(
     let bufs: Vec<&Vec<f32>> = cluster.workers.iter().map(|w| &w.params).collect();
     let consensus = crate::comm::transport::wire::roundtrip_combine(wire, &bufs, naive_mean);
     evaluate(rt, &consensus, val, epoch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_logs_round_trip_through_the_config_codec() {
+        let regroups = vec![
+            RegroupEvent { resume_epoch: 2, lost_nodes: vec![1], nodes: 2, gpus_per_node: 2 },
+            RegroupEvent { resume_epoch: 4, lost_nodes: vec![0, 2], nodes: 1, gpus_per_node: 2 },
+        ];
+        let log = RegroupEvent::encode_log(&regroups);
+        assert_eq!(log, "2:1:2:2;4:0+2:1:2");
+        assert_eq!(RegroupEvent::decode_log(&log).unwrap(), regroups);
+        assert!(RegroupEvent::decode_log("").unwrap().is_empty());
+
+        let rejoins = vec![RejoinEvent {
+            resume_epoch: 4,
+            joined_nodes: vec![2],
+            nodes: 3,
+            gpus_per_node: 2,
+        }];
+        let log = RejoinEvent::encode_log(&rejoins);
+        assert_eq!(log, "4:2:3:2");
+        assert_eq!(RejoinEvent::decode_log(&log).unwrap(), rejoins);
+        assert!(RejoinEvent::decode_log("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn malformed_event_logs_are_named_errors() {
+        for bad in ["2:1:2", "x:1:2:2", "2::2:2", "2:a+b:2:2", "2:1:2:y"] {
+            let err = RegroupEvent::decode_log(bad).unwrap_err().to_string();
+            assert!(err.contains("regroup_log"), "{bad}: {err}");
+        }
+        let err = RejoinEvent::decode_log("nope").unwrap_err().to_string();
+        assert!(err.contains("rejoin_log"), "{err}");
+    }
 }

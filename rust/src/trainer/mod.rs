@@ -8,6 +8,6 @@ pub mod loop_;
 pub mod metrics;
 pub mod strategy;
 
-pub use loop_::{train, EpochRecord, RunReport, TrainConfig};
+pub use loop_::{train, EpochRecord, RegroupEvent, RejoinEvent, RunReport, TrainConfig};
 pub use metrics::{evaluate, MetricAccum};
 pub use strategy::{CommStats, RankCtx, RankStrategy, RankStrategyFactory, StepCtx, Strategy};

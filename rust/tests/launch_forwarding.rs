@@ -56,6 +56,10 @@ fn sample_for(key: &str) -> Option<String> {
         "train.straggler_node" => "1",
         "train.straggler_factor" => "1.5",
         "train.generation" => "2",
+        "train.fault_plan" => "delay:0-1:2:5,drop:1-2:1",
+        "train.rejoin_from" => "1",
+        "train.regroup_log" => "2:1:2:2",
+        "train.rejoin_log" => "4:2:3:2",
         "daso.b_initial" => "2",
         "daso.warmup_epochs" => "1",
         "daso.cooldown_epochs" => "1",

@@ -11,6 +11,8 @@
 //!   strictly shrinks rank 0's actual wire bytes (the decentralization
 //!   acceptance criterion);
 //! - DASO's cycling (non-blocking mailbox) must train across processes;
+//! - a seeded fault plan (frame delays + one mesh dial flap) must leave
+//!   results bit-identical to the same cluster with no faults;
 //! - a missing peer process must surface as a bounded error, not a hang;
 //! - `daso launch` must work end-to-end through the real binary.
 //!
@@ -153,9 +155,18 @@ fn multiprocess_report_with(strategy: &str, extra: &[&str]) -> RunReport {
         .map(|node| spawn_peer(&addr, node, strategy, extra))
         .collect();
     let factory = spec.build_rank_strategies();
+    // the coordinator runs through the library API, so it applies the
+    // spec's fault plan itself (children get it via the forwarded --set);
+    // an empty plan parses to a no-op for every other test
+    let faults = daso::comm::transport::faults::FaultPlan::parse(
+        &spec.train.fault_plan,
+        spec.train.seed,
+    )
+    .expect("test fault plans parse");
     let tuning = TcpTuning::new(Duration::from_secs(60), spec.train.global_wire)
         .with_placement(spec.train.leader_placement)
-        .with_chunk_elems(spec.train.pipeline_chunk_elems);
+        .with_chunk_elems(spec.train.pipeline_chunk_elems)
+        .with_faults(std::sync::Arc::new(faults));
     let mut transport = TcpTransport::coordinator(spec.train.topology(), listener, tuning);
     let result = train_with_transport(&rt, &spec.train, &*tr, &*va, &factory, &mut transport);
     let report = match result {
@@ -292,6 +303,32 @@ fn mesh_3_nodes_matches_serial_bitwise() {
         // placement node 0 is not the only process writing frames
         assert_eq!(multi.comm.wire_bytes_by_node.len(), 3);
         assert!(multi.comm.wire_bytes_by_node.iter().all(|&b| b > 0), "{:?}", multi.comm);
+    });
+}
+
+#[test]
+fn fault_injected_run_matches_clean_run_bitwise() {
+    // the fault-injection acceptance: deterministic network faults
+    // (frame delays on the coordinator's link to node 1 plus one mesh
+    // dial flap from node 2, absorbed by the seeded retry/backoff path)
+    // perturb timing and connectivity only — the run's parameters,
+    // records and byte counters must not move by a single bit relative
+    // to the same cluster with no fault plan
+    with_timeout(360, || {
+        let base: &[&str] = &[
+            "nodes=3",
+            "train.train_samples=1536",
+            "daso.warmup_epochs=2",
+            "daso.cooldown_epochs=1",
+        ];
+        let clean = multiprocess_report_with("daso", base);
+        let faulted = multiprocess_report_with(
+            "daso",
+            &[base, &["fault_plan=delay:0-1:3:5,flap:2-1:1"][..]].concat(),
+        );
+        assert_eq!(clean.world, faulted.world);
+        assert_reports_identical(&clean, &faulted, "fault-injected");
+        assert_eq!(clean.comm.global_syncs, faulted.comm.global_syncs);
     });
 }
 
