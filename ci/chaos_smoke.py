@@ -28,6 +28,7 @@ unrelated process. Deeper semantic assertions over the emitted run JSON
 """
 
 import argparse
+import json
 import os
 import random
 import shutil
@@ -123,6 +124,10 @@ def launch_cmd(args, ckpt_dir, out_dir):
         # traced: the healed trace + manifest must record the restored
         # world (checked by check_run_json.py chaos)
         "--trace-out", os.path.join(out_dir, "trace.json"),
+        # live telemetry on: every node beacons, the supervisor folds
+        # status.json, and the armed flight recorders leave dumps the
+        # kill assertions below read back
+        "--set", "obs.beacon_every_ms=50",
     ]
 
 
@@ -158,6 +163,48 @@ def pick_victims(args, rng, nodes):
     if not peers:
         sys.exit("checkpoint exists but no live peer process was found under /proc")
     return [rng.choice(peers)]
+
+
+def assert_live_telemetry(out_dir, victims):
+    """The beaconed kill run must leave a folded live status (with the
+    deaths recorded as anomalies) and swept flight-recorder dumps whose
+    rings hold real pre-kill phase events."""
+    status_path = os.path.join(out_dir, "status.json")
+    if not os.path.exists(status_path):
+        sys.exit(f"beacons were on but the supervisor folded no {status_path}")
+    status = json.load(open(status_path))
+    if status.get("kind") != "daso-live-status":
+        sys.exit(f"{status_path} is not a live status: {status.get('kind')!r}")
+    nodes = status.get("nodes", {})
+    if not nodes:
+        sys.exit(f"{status_path} folded no node beacons")
+    for nid, beacon in sorted(nodes.items()):
+        if beacon.get("epoch", 0) < 1 or beacon.get("steps_done", 0) < 1:
+            sys.exit(f"status node {nid} shows no training progress: {beacon}")
+    anomaly_nodes = {a["node"] for a in status.get("anomalies", [])
+                     if a.get("name") == "silent-peer"}
+    missing = set(victims) - anomaly_nodes
+    if missing:
+        sys.exit(f"killed node(s) {sorted(missing)} not recorded as silent-peer "
+                 f"anomalies: {status.get('anomalies')}")
+    swept = sorted(f for f in os.listdir(out_dir)
+                   if f.startswith("flight-node") and "-gen" in f and f.endswith(".json"))
+    if not swept:
+        sys.exit(f"no swept flight-node*-gen*.json dump under {out_dir} — the "
+                 "supervisor must sweep the kill cell's flight recorders")
+    with_events = 0
+    for name in swept:
+        dump = json.load(open(os.path.join(out_dir, name)))
+        if dump.get("kind") != "daso-flight":
+            sys.exit(f"{name} is not a flight dump: {dump.get('kind')!r}")
+        events = dump.get("events", [])
+        if events and all(e.get("phase") for e in events):
+            with_events += 1
+    if with_events == 0:
+        sys.exit(f"no swept flight dump carries pre-kill phase events: {swept}")
+    print(f"live telemetry ok: status folded {sorted(nodes)} with silent-peer "
+          f"anomalies for {sorted(victims)}; {with_events}/{len(swept)} swept "
+          f"flight dump(s) hold phase events")
 
 
 def chaos_run(args, deadline, shm_before):
@@ -200,6 +247,7 @@ def chaos_run(args, deadline, shm_before):
                    os.path.join(out_dir, "mlp_daso.manifest.json")):
         if not os.path.exists(needed):
             sys.exit(f"launch succeeded but wrote no {needed}")
+    assert_live_telemetry(out_dir, victims)
     assert_shm_clean(shm_before, f"the {args.kill}-kill {args.transport} run")
     print(f"chaos smoke: killed node(s) {victims}, run healed; report at {report}")
     return report

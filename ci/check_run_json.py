@@ -25,6 +25,13 @@ Subcommands:
                  process lanes)
   straggler      the per-phase virtual-clock histograms must single out the
                  configured straggler node
+  anomalies      assert over the run JSON's named anomaly trail (and,
+                 when given, the launch's folded live status.json) —
+                 e.g. a traced straggler launch must record a
+                 `straggler` anomaly, a clean run must record none
+  flight         assert over crash flight-recorder dumps: ring events
+                 with phases, capacity bounds, and (when given) that the
+                 sealed manifest lists every swept dump
   bench-doctor   rewrite mean_s in a daso-bench artifact and reseal its
                  results_sha256 (CI's injected-regression probe; also a
                  cross-language check that this canonicalizer matches the
@@ -473,6 +480,102 @@ def cmd_straggler(args):
     )
 
 
+def cmd_anomalies(args):
+    report = load(args.report)
+    anomalies = report.get("anomalies", [])
+    check(
+        isinstance(anomalies, list),
+        f"anomalies must be an array, got {type(anomalies).__name__}",
+    )
+    for a in anomalies:
+        check(
+            isinstance(a, dict) and {"name", "node", "detail", "first_unix_ms"} <= set(a),
+            f"malformed anomaly record: {a!r}",
+        )
+    print("anomalies:", [(a["name"], a["node"]) for a in anomalies])
+    if args.expect_empty:
+        check(not anomalies, f"expected no recorded anomalies, got {anomalies}")
+    names = sorted({a["name"] for a in anomalies})
+    for name in args.expect_name:
+        check(
+            any(a["name"] == name for a in anomalies),
+            f"no recorded anomaly named {name!r}; have {names}",
+        )
+    if args.status:
+        status = load(args.status)
+        check(
+            status.get("kind") == "daso-live-status",
+            f"{args.status} is not a live status: kind={status.get('kind')!r}",
+        )
+        nodes = status.get("nodes", {})
+        check(bool(nodes), f"{args.status} folded no node beacons")
+        for nid, beacon in sorted(nodes.items()):
+            check(
+                beacon.get("kind") == "daso-beacon" and "epoch" in beacon
+                and "steps_done" in beacon,
+                f"status node {nid} entry is not a folded beacon: {beacon!r}",
+            )
+        status_names = sorted({a["name"] for a in status.get("anomalies", [])})
+        for name in args.expect_name:
+            check(
+                name in status_names,
+                f"status.json records no {name!r} anomaly; have {status_names}",
+            )
+        print(f"live status ok: nodes {sorted(nodes)}, anomalies {status_names}")
+    print(f"anomalies ok: {len(anomalies)} recorded, expectations met")
+
+
+def cmd_flight(args):
+    dumps = sorted(
+        f for f in os.listdir(args.dir)
+        if f.startswith("flight-node") and f.endswith(".json")
+        and ("-gen" in f or not args.swept_only)
+    )
+    check(
+        len(dumps) >= args.min_dumps,
+        f"expected >= {args.min_dumps} flight dump(s) under {args.dir}, got {dumps}",
+    )
+    total_events = 0
+    for name in dumps:
+        dump = load(os.path.join(args.dir, name))
+        check(
+            dump.get("kind") == "daso-flight",
+            f"{name} is not a flight dump: kind={dump.get('kind')!r}",
+        )
+        for key in ("node", "generation", "pid", "reason", "capacity", "observed"):
+            check(key in dump, f"{name} is missing {key}")
+        events = dump.get("events", [])
+        check(
+            len(events) <= dump["capacity"],
+            f"{name}: {len(events)} events exceed the declared ring capacity "
+            f"{dump['capacity']}",
+        )
+        for e in events:
+            check(
+                isinstance(e.get("phase"), str) and e["phase"],
+                f"{name}: flight event without a phase: {e!r}",
+            )
+        total_events += len(events)
+        print(f"{name}: gen {dump['generation']} node {dump['node']} "
+              f"({dump['reason']}): {len(events)} event(s) of {dump['observed']} observed")
+    check(
+        total_events >= args.min_events,
+        f"flight dumps hold {total_events} event(s) total, expected >= {args.min_events}",
+    )
+    if args.manifest:
+        manifest = load(args.manifest)
+        sealed = {a["path"] for a in manifest.get("artifacts", [])}
+        swept = [d for d in dumps if "-gen" in d]
+        unsealed = sorted(set(swept) - sealed)
+        check(
+            not unsealed,
+            f"swept flight dump(s) {unsealed} are not sealed in the manifest "
+            f"(sealed: {sorted(sealed)})",
+        )
+        print(f"manifest seals all {len(swept)} swept flight dump(s)")
+    print(f"flight ok: {len(dumps)} dump(s), {total_events} ring event(s)")
+
+
 def cmd_bench_doctor(args):
     bench = load(args.inp)
     results = bench["results"]
@@ -556,6 +659,25 @@ def main():
     p.add_argument("--nodes", type=int, required=True)
     p.add_argument("--straggler", type=int, required=True)
     p.set_defaults(func=cmd_straggler)
+
+    p = sub.add_parser("anomalies", help="named anomaly-trail assertions (run JSON + status)")
+    p.add_argument("--report", required=True, help="run JSON to inspect")
+    p.add_argument("--status", help="the launch's live status.json (optional)")
+    p.add_argument("--expect-name", action="append", default=[],
+                   help="anomaly name that must be recorded (repeatable)")
+    p.add_argument("--expect-empty", action="store_true",
+                   help="require the anomalies array to be empty")
+    p.set_defaults(func=cmd_anomalies)
+
+    p = sub.add_parser("flight", help="flight-recorder dump assertions")
+    p.add_argument("--dir", required=True, help="directory holding flight-node*.json dumps")
+    p.add_argument("--min-dumps", type=int, default=1)
+    p.add_argument("--min-events", type=int, default=1,
+                   help="minimum ring events across all dumps")
+    p.add_argument("--swept-only", action="store_true",
+                   help="only consider swept flight-node*-gen*.json dumps")
+    p.add_argument("--manifest", help="sealed manifest that must list every swept dump")
+    p.set_defaults(func=cmd_flight)
 
     p = sub.add_parser("bench-doctor", help="inject a mean_s regression and reseal")
     p.add_argument("--in", dest="inp", required=True)

@@ -1,0 +1,81 @@
+//! Observability overhead bench: the same serial 2x2 mlp training run
+//! with (a) no telemetry, (b) phase tracing on, (c) heartbeat beacons
+//! on, and (d) both — the wall-clock cost of watching a run.
+//!
+//! Tracing buffers spans in-process and beacons rewrite one small JSON
+//! file per interval, so both should stay in the low single-digit
+//! percent range; the bench prints the measured overheads and emits
+//! `BENCH_obs.json` (schema daso-bench/2) so the perf trajectory of the
+//! telemetry plane is diffable across commits. CI's bench smoke job
+//! gates the rows against `ci/baselines/BENCH_obs.json`.
+//!
+//! `DASO_BENCH_QUICK=1` runs a reduced configuration (the CI smoke job).
+
+use daso::baselines::{Horovod, HorovodConfig};
+use daso::bench_support::{write_bench_json, Bench, BenchResult};
+use daso::runtime::Engine;
+use daso::trainer::{train, TrainConfig};
+
+fn main() {
+    let quick = std::env::var("DASO_BENCH_QUICK").is_ok();
+    let (epochs, samples) = if quick { (2, 1024) } else { (3, 4096) };
+    let bench = if quick { Bench::new(0, 2) } else { Bench::new(1, 5) };
+    println!(
+        "== obs bench: untraced vs traced vs beacons, serial 2x2 mlp{} ==",
+        if quick { " (quick)" } else { "" }
+    );
+
+    let engine = Engine::native();
+    let rt = engine.model("mlp").expect("native mlp runtime");
+    let mut base = TrainConfig::quick(2, 2, epochs);
+    base.train_samples = samples;
+    base.val_samples = 256;
+    base.lr_scale = 4.0;
+    let (tr, va) =
+        daso::data::for_model(&rt.spec, base.train_samples, base.val_samples, 42).expect("data");
+
+    let beacon_dir = std::env::temp_dir().join(format!("daso_obs_bench_{}", std::process::id()));
+    let _ = std::fs::create_dir_all(&beacon_dir);
+
+    // (label, trace on, beacons on): the trace recorder is process
+    // global, so every iteration resets it before training
+    let configs: &[(&str, bool, bool)] = &[
+        ("untraced", false, false),
+        ("traced", true, false),
+        ("beacons", false, true),
+        ("traced_beacons", true, true),
+    ];
+    let mut results: Vec<BenchResult> = Vec::new();
+    for &(label, trace, beacons) in configs {
+        let mut cfg = base.clone();
+        cfg.trace = trace;
+        if beacons {
+            cfg.beacon_every_ms = 5;
+            cfg.beacon_dir = beacon_dir.to_string_lossy().into_owned();
+        }
+        let timing = bench.run(&format!("serial_2x2_mlp/{label}"), || {
+            daso::obs::reset_for_tests();
+            let report = train(&rt, &cfg, &*tr, &*va, &mut Horovod::new(HorovodConfig::default()))
+                .expect("bench training run");
+            std::hint::black_box(report.final_metric);
+        });
+        results.push(timing);
+    }
+    let _ = std::fs::remove_dir_all(&beacon_dir);
+
+    let mean_of = |label: &str| {
+        results
+            .iter()
+            .find(|r| r.name.ends_with(label))
+            .expect("config ran")
+            .mean_s
+    };
+    let untraced = mean_of("/untraced");
+    let pct = |m: f64| 100.0 * (m - untraced) / untraced;
+    println!("\nobservability overhead vs untraced ({untraced:.4} s):");
+    println!("  traced         : {:+.1}%", pct(mean_of("/traced")));
+    println!("  beacons        : {:+.1}%", pct(mean_of("/beacons")));
+    println!("  traced+beacons : {:+.1}%", pct(mean_of("/traced_beacons")));
+
+    write_bench_json("obs", &results).expect("bench artifact");
+}

@@ -205,7 +205,31 @@ COMMANDS:
                                             (default 127.0.0.1:0 = free port)
                   plus all train flags (--model, --strategy, --set, --out,
                   --trace-out — tracing is forced onto every node process
-                  and gathered to node 0, so the trace shows all lanes)
+                  and gathered to node 0, so the trace shows all lanes).
+                With --out the launch also runs a *live telemetry plane*:
+                every node process beacons progress (epoch/steps/loss,
+                per-phase histogram deltas, wire bytes, cycler state) into
+                <out>/live/ at obs.beacon_every_ms intervals plus every
+                epoch boundary; the supervisor folds the beacons into an
+                atomically rewritten <out>/status.json (watch it with
+                `daso top`), runs observe-only anomaly detection over the
+                stream (persistent straggler skew, ring-stall outliers,
+                silent peers — surfaced in status.json and run-JSON
+                anomalies[]), and arms a crash *flight recorder* per
+                process: a bounded ring of the newest obs events dumped to
+                <out>/flight-node<N>.json on panic/error and refreshed at
+                every beacon, swept to flight-node<N>-gen<G>.json (and
+                sealed into the manifest) at each regroup. All of it only
+                observes — results stay bit-identical with beacons on.
+                  --set obs.beacon_every_ms=K  beacon cadence (0 = off)
+                  --set obs.beacon_dir=<dir>   beacon dir (default <out>/live)
+                  --set obs.flight_dir=<dir>   flight dumps (default <out>)
+                  --set obs.flight_events=N    flight ring size (default 512)
+    top         live per-node status table for a running (or finished)
+                launch, rendered from <dir>/status.json
+                  --dir <dir>        the launch's --out directory (required)
+                  --refresh-ms N     repaint cadence (default 1000)
+                  --once             print one frame and exit (CI-friendly)
     sweep       run daso/horovod/asgd/local_only on one model, compare
                   (same flags as train)
     bench       perf-contract tooling for BENCH_*.json artifacts
@@ -245,8 +269,8 @@ COMMANDS:
 pub fn known_command(cmd: &str) -> bool {
     matches!(
         cmd,
-        "train" | "launch" | "bench" | "audit" | "sweep" | "figures" | "project" | "selfcheck"
-            | "info" | "help"
+        "train" | "launch" | "top" | "bench" | "audit" | "sweep" | "figures" | "project"
+            | "selfcheck" | "info" | "help"
     )
 }
 

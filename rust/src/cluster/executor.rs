@@ -156,6 +156,37 @@ mod threaded {
         zero: Option<ZeroOut>,
     }
 
+    /// Live-beacon handle for the one rank thread per process that owns
+    /// heartbeat emission (the first hosted rank): the emitter plus this
+    /// process's transport byte counters for the beacon's wire field.
+    struct BeaconCtx {
+        emitter: std::sync::Arc<crate::obs::live::Emitter>,
+        wire: std::sync::Arc<crate::comm::transport::WireBytes>,
+    }
+
+    impl BeaconCtx {
+        fn progress(
+            &self,
+            cfg: &TrainConfig,
+            epoch: usize,
+            steps_done: u64,
+            loss: f64,
+            state: String,
+            done: bool,
+        ) -> crate::obs::live::Progress {
+            crate::obs::live::Progress {
+                epoch,
+                epochs: cfg.epochs,
+                steps_done,
+                loss,
+                state,
+                generation: cfg.launch_generation as usize,
+                wire_bytes: self.wire.sent_intra() + self.wire.sent_inter(),
+                done,
+            }
+        }
+    }
+
     /// Train with one OS thread per simulated GPU, all in this process.
     /// Mirrors `trainer::train`'s configuration and report; see the
     /// module docs for the determinism contract.
@@ -227,8 +258,10 @@ mod threaded {
         Ok(report.map(|mut r| {
             // surface this process's degradation warnings (hybrid
             // shm→tcp fallbacks) in the run JSON; peers print theirs to
-            // stderr, only the coordinator's land in the report
-            r.warnings = crate::comm::transport::faults::drain_warnings();
+            // stderr, only the coordinator's land in the report.
+            // Extend, not assign: the transport report may already carry
+            // an obs-overflow warning.
+            r.warnings.extend(crate::comm::transport::faults::drain_warnings());
             r
         }))
     }
@@ -256,7 +289,7 @@ mod threaded {
         );
         let report = train_with_transport(rt, cfg, train_data, val_data, factory, &mut transport)?;
         let mut report = report.expect("the coordinator hosts rank 0");
-        report.warnings = crate::comm::transport::faults::drain_warnings();
+        report.warnings.extend(crate::comm::transport::faults::drain_warnings());
         Ok(report)
     }
 
@@ -309,13 +342,32 @@ mod threaded {
             rank_comms.len(),
             hosted.len()
         );
+        // live heartbeat beacons: at most one emitter per process, owned
+        // by the first hosted rank's thread. Emission only reads training
+        // state and writes an out-of-band JSON file, so beacons-on runs
+        // stay bit-identical to beacons-off runs.
+        let beacon_node = hosted.first().map(|&r| topo.rank_of(r).node).unwrap_or(0);
+        let emitter = crate::obs::live::Emitter::from_config(
+            &cfg.beacon_dir,
+            cfg.beacon_every_ms,
+            beacon_node as i64,
+        );
         let results: Vec<Result<RankOutput>> = std::thread::scope(|s| {
             let handles: Vec<_> = rank_comms
                 .into_iter()
                 .zip(hosted.iter().copied())
-                .map(|(comm, rank)| {
+                .enumerate()
+                .map(|(slot, (comm, rank))| {
                     let init = init.clone();
                     let lr_sched = lr_proto.clone();
+                    let beacon = if slot == 0 {
+                        emitter.clone().map(|emitter| BeaconCtx {
+                            emitter,
+                            wire: std::sync::Arc::clone(&wire_bytes),
+                        })
+                    } else {
+                        None
+                    };
                     s.spawn(move || {
                         rank_main(
                             rank,
@@ -328,6 +380,7 @@ mod threaded {
                             init,
                             lr_sched,
                             steps_per_epoch,
+                            beacon,
                         )
                     })
                 })
@@ -514,7 +567,7 @@ mod threaded {
             final_params,
             regroups: vec![],
             rejoins: vec![],
-            warnings: vec![],
+            warnings: crate::obs::overflow_warning(obs.dropped).into_iter().collect(),
             obs,
         }))
     }
@@ -531,6 +584,7 @@ mod threaded {
         init: Vec<f32>,
         mut lr_sched: LrSchedule,
         steps_per_epoch: usize,
+        beacon: Option<BeaconCtx>,
     ) -> Result<RankOutput> {
         let topo = cfg.topology();
         let batch = rt.spec.batch;
@@ -594,6 +648,11 @@ mod threaded {
             }
         }
 
+        // what the final done-beacon reports (tracked unconditionally;
+        // read only when this thread owns the process's emitter)
+        let mut epochs_done = start_epoch;
+        let mut last_train_loss = f64::NAN;
+
         for epoch in start_epoch..cfg.epochs {
             strategy.on_epoch_start(epoch);
             let lr = lr_sched.lr() as f32;
@@ -624,8 +683,25 @@ mod threaded {
                     global_batch,
                     global_wire,
                 };
-                let _sp = crate::obs::span(crate::obs::phase::SYNC);
-                strategy.on_batch(&mut ctx)?;
+                {
+                    let _sp = crate::obs::span(crate::obs::phase::SYNC);
+                    strategy.on_batch(&mut ctx)?;
+                }
+                if let Some(b) = &beacon {
+                    // interval-gated: the progress closure only runs
+                    // when a beacon is actually due
+                    b.emitter.maybe_emit(|| {
+                        let loss = step_losses.last().copied().map_or(f64::NAN, f64::from);
+                        b.progress(
+                            cfg,
+                            epoch,
+                            global_batch as u64,
+                            loss,
+                            strategy.state_desc(),
+                            false,
+                        )
+                    });
+                }
             }
 
             // epoch bookkeeping (not modeled communication: clocks are
@@ -718,6 +794,18 @@ mod threaded {
                 }
                 records.push(rec);
             }
+            epochs_done = epoch + 1;
+            last_train_loss = train_loss;
+            if let Some(b) = &beacon {
+                b.emitter.emit_now(&b.progress(
+                    cfg,
+                    epoch + 1,
+                    global_batch as u64,
+                    train_loss,
+                    strategy.state_desc(),
+                    false,
+                ));
+            }
 
             if at_checkpoint && !cfg.checkpoint_dir.is_empty() {
                 let dir = Path::new(&cfg.checkpoint_dir);
@@ -791,6 +879,16 @@ mod threaded {
         } else {
             None
         };
+        if let Some(b) = &beacon {
+            b.emitter.emit_now(&b.progress(
+                cfg,
+                epochs_done,
+                global_batch as u64,
+                last_train_loss,
+                strategy.state_desc(),
+                true,
+            ));
+        }
         Ok(RankOutput { worker, stats: strategy.comm_stats(), name: strategy.name(), zero })
     }
 

@@ -111,6 +111,13 @@ pub fn forced_child_sets(spec: &RunSpec, transport: TransportKind) -> Vec<String
         // tracing must be symmetric: every process records and joins
         // the obs gather, or no process does
         format!("trace={}", spec.train.trace),
+        // the live telemetry plane: every child beacons into the
+        // supervisor's folded status.json and arms the same flight
+        // recorder (the supervisor derives the dirs from --out)
+        format!("obs.beacon_every_ms={}", spec.train.beacon_every_ms),
+        format!("obs.beacon_dir={}", spec.train.beacon_dir),
+        format!("obs.flight_dir={}", spec.train.flight_dir),
+        format!("obs.flight_events={}", spec.train.flight_events),
     ]
 }
 

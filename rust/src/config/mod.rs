@@ -239,6 +239,19 @@ impl RunSpec {
                 self.train.rejoin_log = as_str()?.to_string()
             }
 
+            "obs.beacon_every_ms" | "beacon_every_ms" => {
+                self.train.beacon_every_ms = as_f64()? as u64
+            }
+            "obs.beacon_dir" | "beacon_dir" => {
+                self.train.beacon_dir = as_str()?.to_string()
+            }
+            "obs.flight_dir" | "flight_dir" => {
+                self.train.flight_dir = as_str()?.to_string()
+            }
+            "obs.flight_events" | "flight_events" => {
+                self.train.flight_events = (as_usize()?).max(1)
+            }
+
             "daso.b_initial" => self.daso.b_initial = as_usize()?,
             "daso.warmup_epochs" => self.daso.warmup_epochs = as_usize()?,
             "daso.cooldown_epochs" => self.daso.cooldown_epochs = as_usize()?,
@@ -402,6 +415,10 @@ impl RunSpec {
             ("regroup_log", s(&self.train.regroup_log)),
             ("rejoin_log", s(&self.train.rejoin_log)),
             ("trace", Value::Bool(self.train.trace)),
+            ("obs.beacon_every_ms", num(self.train.beacon_every_ms as f64)),
+            ("obs.beacon_dir", s(&self.train.beacon_dir)),
+            ("obs.flight_dir", s(&self.train.flight_dir)),
+            ("obs.flight_events", num(self.train.flight_events as f64)),
             ("daso.b_initial", num(self.daso.b_initial as f64)),
             ("daso.warmup_epochs", num(self.daso.warmup_epochs as f64)),
             ("daso.cooldown_epochs", num(self.daso.cooldown_epochs as f64)),
@@ -691,6 +708,33 @@ mod tests {
         s.set("trace_out=/tmp/trace.json").unwrap();
         assert_eq!(s.trace_out.as_deref(), Some("/tmp/trace.json"));
         assert!(s.train.trace, "trace_out implies tracing");
+    }
+
+    #[test]
+    fn obs_live_overrides() {
+        let mut s = RunSpec::default_for("mlp");
+        assert_eq!(s.train.beacon_every_ms, 0, "beacons are off by default");
+        assert!(s.train.beacon_dir.is_empty());
+        assert!(s.train.flight_dir.is_empty());
+        assert_eq!(s.train.flight_events, crate::obs::flight::DEFAULT_FLIGHT_EVENTS);
+        s.set("obs.beacon_every_ms=250").unwrap();
+        s.set("obs.beacon_dir=/tmp/run/live").unwrap();
+        s.set("obs.flight_dir=/tmp/run").unwrap();
+        s.set("obs.flight_events=128").unwrap();
+        assert_eq!(s.train.beacon_every_ms, 250);
+        assert_eq!(s.train.beacon_dir, "/tmp/run/live");
+        assert_eq!(s.train.flight_dir, "/tmp/run");
+        assert_eq!(s.train.flight_events, 128);
+        // short aliases round-trip too, and a zero ring is clamped
+        s.set("beacon_every_ms=50").unwrap();
+        s.set("flight_events=0").unwrap();
+        assert_eq!(s.train.beacon_every_ms, 50);
+        assert_eq!(s.train.flight_events, 1);
+        let cfg = s.to_json();
+        assert_eq!(cfg.req_f64("obs.beacon_every_ms").unwrap(), 50.0);
+        assert_eq!(cfg.req_str("obs.beacon_dir").unwrap(), "/tmp/run/live");
+        assert_eq!(cfg.req_str("obs.flight_dir").unwrap(), "/tmp/run");
+        assert_eq!(cfg.req_f64("obs.flight_events").unwrap(), 1.0);
     }
 
     #[test]

@@ -21,6 +21,7 @@ fn main() {
     let result = match args.command.as_str() {
         "train" => cmd_train(&args),
         "launch" => cmd_launch(&args),
+        "top" => cmd_top(&args),
         "bench" => cmd_bench(&args),
         "audit" => cmd_audit(&args),
         "sweep" => cmd_sweep(&args),
@@ -38,6 +39,9 @@ fn main() {
         }
     };
     if let Err(e) = result {
+        // if a flight recorder is armed, this abnormal exit leaves a
+        // post-mortem dump next to the run artifacts (best-effort)
+        let _ = daso::obs::flight::dump(&format!("error: {e:#}"));
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
@@ -106,44 +110,55 @@ fn emit_report(spec: &RunSpec, report: &daso::trainer::RunReport) -> Result<()> 
         ("config", spec.to_json()),
         ("env", spec.env_json()),
     ]);
-    println!("{}", runlog::report_json_full(report, Some(&provenance)).to_string_pretty());
+    let mut run_json = runlog::report_json_full(report, Some(&provenance));
+    // anomaly trail: a launch supervisor folds beacon findings into
+    // <out>/status.json while the run is live; carry them into the
+    // run JSON so the sealed record keeps the observe-only verdicts
+    let anomalies = spec
+        .out_dir
+        .as_deref()
+        .map(|d| std::path::Path::new(d).join("status.json"))
+        .and_then(|p| std::fs::read_to_string(p).ok())
+        .and_then(|t| daso::util::json::Value::parse(&t).ok())
+        .and_then(|v| v.get("anomalies").cloned())
+        .unwrap_or_else(|| arr(vec![]));
+    if let daso::util::json::Value::Obj(map) = &mut run_json {
+        map.insert("anomalies".into(), anomalies);
+    }
+    println!("{}", run_json.to_string_pretty());
 
-    // trace file: an explicit --trace-out path wins; a traced run with
-    // --out but no explicit path lands next to the run JSON
-    let trace_path = match (&spec.trace_out, &spec.out_dir) {
-        (Some(p), _) => Some(std::path::PathBuf::from(p)),
-        (None, Some(dir)) if report.obs.enabled => {
-            Some(std::path::Path::new(dir).join(format!("{tag}.trace.json")))
-        }
-        _ => None,
-    };
+    // trace file resolution fails fast on --trace-out without tracing
+    let trace_path = daso::obs::trace::trace_out_path(
+        spec.trace_out.as_deref(),
+        spec.out_dir.as_deref(),
+        &tag,
+        report.obs.enabled,
+    )?;
     let mut trace_written: Option<std::path::PathBuf> = None;
     if let Some(path) = trace_path {
-        if report.obs.enabled {
-            let meta = obj(vec![
-                ("run_id", s(&run_id)),
-                ("world", num(report.world as f64)),
-                ("nodes", num(spec.train.nodes as f64)),
-                ("gpus_per_node", num(spec.train.gpus_per_node as f64)),
-                ("generation", num(spec.train.launch_generation as f64)),
-                ("regroups", num(report.regroups.len() as f64)),
-                ("rejoins", num(report.rejoins.len() as f64)),
-                ("git_commit", s(&git_commit)),
-            ]);
-            daso::obs::trace::write_chrome_trace(&path, &report.obs, meta)?;
-            eprintln!("wrote trace {}", path.display());
-            trace_written = Some(path);
-        } else {
-            eprintln!("--trace-out set but the run recorded no trace; nothing written");
-        }
+        let meta = obj(vec![
+            ("run_id", s(&run_id)),
+            ("world", num(report.world as f64)),
+            ("nodes", num(spec.train.nodes as f64)),
+            ("gpus_per_node", num(spec.train.gpus_per_node as f64)),
+            ("generation", num(spec.train.launch_generation as f64)),
+            ("regroups", num(report.regroups.len() as f64)),
+            ("rejoins", num(report.rejoins.len() as f64)),
+            ("git_commit", s(&git_commit)),
+        ]);
+        daso::obs::trace::write_chrome_trace(&path, &report.obs, meta)?;
+        eprintln!("wrote trace {}", path.display());
+        trace_written = Some(path);
     }
 
     if let Some(dir) = &spec.out_dir {
         let base = std::path::Path::new(dir);
+        std::fs::create_dir_all(base).with_context(|| format!("create out dir {base:?}"))?;
         let csv_path = base.join(format!("{tag}.csv"));
         let json_path = base.join(format!("{tag}.json"));
         runlog::write_csv(report, &csv_path)?;
-        runlog::write_json_full(report, Some(&provenance), &json_path)?;
+        std::fs::write(&json_path, run_json.to_string_pretty())
+            .with_context(|| format!("write {json_path:?}"))?;
         eprintln!("wrote {dir}/{tag}.{{csv,json}}");
 
         let mut artifacts = vec![
@@ -167,6 +182,22 @@ fn emit_report(spec: &RunSpec, report: &daso::trainer::RunReport) -> Result<()> 
                 let rel = comps[comps.len().saturating_sub(2)..].join("/");
                 artifacts.push((rel, f));
             }
+        }
+        // swept flight dumps (renamed at each regroup) are stable
+        // post-mortem records, so the manifest seals them; the live
+        // `flight-node<N>.json` files are continuously rewritten and
+        // deliberately stay out
+        if let Ok(rd) = std::fs::read_dir(base) {
+            let mut swept: Vec<(String, std::path::PathBuf)> = rd
+                .flatten()
+                .filter_map(|entry| {
+                    let name = entry.file_name().to_string_lossy().into_owned();
+                    let stem = name.strip_prefix("flight-node")?.strip_suffix(".json")?;
+                    stem.contains("-gen").then(|| (name.clone(), entry.path()))
+                })
+                .collect();
+            swept.sort();
+            artifacts.extend(swept);
         }
         let node_list =
             |ids: &[usize]| arr(ids.iter().map(|n| num(*n as f64)).collect());
@@ -307,6 +338,21 @@ fn cmd_audit(args: &Args) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let spec = build_spec(args)?;
+    if !spec.train.flight_dir.is_empty() {
+        // arm the crash flight recorder before anything can fail; the
+        // node id comes from the launcher's child environment (0 for a
+        // standalone train run, which is its own coordinator)
+        let node: i64 = std::env::var(daso::comm::transport::tcp::ENV_NODE_ID)
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        daso::obs::flight::init(
+            std::path::Path::new(&spec.train.flight_dir),
+            node,
+            spec.train.launch_generation as usize,
+            spec.train.flight_events,
+        );
+    }
     let engine = Engine::auto(&spec.artifacts_dir);
     let rt = engine.model(&spec.model)?;
     let (train_d, val_d) = daso::data::for_model(
@@ -394,6 +440,32 @@ fn cmd_launch(args: &Args) -> Result<()> {
         node0_extra.push(path.clone());
     }
 
+    // live telemetry plane: with --out set, default the beacon and
+    // flight dirs next to the run artifacts (before the attempt loop,
+    // so the forced child --set entries forward the derived values),
+    // and fold the children's beacons into <out>/status.json for
+    // `daso top`. All of it observes only — results are unchanged.
+    let mut board: Option<daso::obs::live::StatusBoard> = None;
+    if let Some(dir) = spec.out_dir.clone() {
+        let base = std::path::Path::new(&dir);
+        if spec.train.beacon_dir.is_empty() {
+            spec.train.beacon_dir = base.join("live").to_string_lossy().into_owned();
+        }
+        if spec.train.flight_dir.is_empty() {
+            spec.train.flight_dir = dir.clone();
+        }
+        if spec.train.beacon_every_ms > 0 {
+            board = Some(
+                daso::obs::live::StatusBoard::new(
+                    base,
+                    spec.train.nodes,
+                    spec.train.gpus_per_node,
+                )
+                .with_beacon_dir(std::path::Path::new(&spec.train.beacon_dir)),
+            );
+        }
+    }
+
     // the engine is consulted only for the canonical model name that
     // keys checkpoint fingerprints during regroup/rejoin rewrites (and
     // to fail fast on a bad --model before spawning anything)
@@ -426,15 +498,24 @@ fn cmd_launch(args: &Args) -> Result<()> {
             transport.name(),
             spec.train.launch_generation,
         );
+        if let Some(b) = &board {
+            b.set_generation(spec.train.launch_generation as usize);
+        }
         let (outcome, deaths) =
-            launch_attempt(&launcher, &spec, transport, &base_args, &node0_extra)?;
+            launch_attempt(&launcher, &spec, transport, &base_args, &node0_extra, board.as_ref())?;
         match outcome {
             Ok(()) => {
+                if let Some(b) = &board {
+                    b.fold_now();
+                }
                 if !pending_rejoin {
                     return Ok(());
                 }
                 // the shrunk interlude ran to its scheduled stop: grow
-                // the newest snapshot back and relaunch at full strength
+                // the newest snapshot back and relaunch at full strength.
+                // Its flight dumps are finished post-mortems now — sweep
+                // them aside before the grown world rewrites the names.
+                sweep_flight_dumps(&spec.train.flight_dir, spec.train.launch_generation as usize);
                 pending_rejoin = false;
                 let ev = rejoin_from_snapshot(&mut spec, &model_name, target_nodes)?;
                 rejoins.push(ev);
@@ -445,6 +526,16 @@ fn cmd_launch(args: &Args) -> Result<()> {
                 eprintln!(
                     "launch: node(s) {lost:?} died mid-run ({e:#}); regrouping onto survivors"
                 );
+                // collect every survivor's (and victim's, when the kill
+                // left one) flight dump under the dead attempt's
+                // generation, and record the deaths in the live status
+                let dead_generation = spec.train.launch_generation as usize;
+                sweep_flight_dumps(&spec.train.flight_dir, dead_generation);
+                if let Some(b) = &board {
+                    for &node in &lost {
+                        b.note_death(node as i64, dead_generation);
+                    }
+                }
                 let resume_epoch = regroup_onto_survivors(&mut spec, &model_name, &deaths)
                     .with_context(|| format!("cannot regroup after losing node(s) {lost:?}"))?;
                 regroups.push(daso::trainer::RegroupEvent {
@@ -476,6 +567,33 @@ fn cmd_launch(args: &Args) -> Result<()> {
     }
 }
 
+/// Rename every live `flight-node<N>.json` dump in `dir` to its
+/// generation-stamped swept name (`flight-node<N>-gen<G>.json`), so the
+/// next attempt's recorders cannot overwrite the post-mortems and the
+/// coordinator child can seal them into the run manifest. Best-effort:
+/// a node that never dumped simply has nothing to sweep.
+fn sweep_flight_dumps(dir: &str, generation: usize) {
+    if dir.is_empty() {
+        return;
+    }
+    let dir = std::path::Path::new(dir);
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    for entry in rd.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let Some(node) = name
+            .strip_prefix("flight-node")
+            .and_then(|r| r.strip_suffix(".json"))
+            .and_then(|n| n.parse::<i64>().ok())
+        else {
+            continue;
+        };
+        let swept = dir.join(daso::obs::flight::swept_file_name(node, generation));
+        if std::fs::rename(entry.path(), &swept).is_ok() {
+            eprintln!("swept flight dump {}", swept.display());
+        }
+    }
+}
+
 /// One supervised launch attempt: spawn node 0 (the coordinator child),
 /// wait for the address it publishes, spawn the peers against it, and
 /// babysit the lot with the watchdog. The coordinator child's exit
@@ -489,6 +607,7 @@ fn launch_attempt(
     transport: daso::comm::TransportKind,
     base_args: &[String],
     node0_extra: &[String],
+    board: Option<&daso::obs::live::StatusBoard>,
 ) -> Result<(Result<()>, std::collections::BTreeSet<usize>)> {
     use std::collections::BTreeSet;
     use std::sync::atomic::{AtomicBool, Ordering};
@@ -565,11 +684,21 @@ fn launch_attempt(
                 Err(e) => break Err(anyhow!("waiting on the coordinator process: {e}")),
             }
         }
+        // fold fresh beacons into status.json on the same cadence the
+        // supervisor polls its children (rate-limited inside)
+        if let Some(b) = board {
+            b.fold();
+        }
         std::thread::sleep(Duration::from_millis(50));
     };
     done.store(true, Ordering::Release);
     let _ = watchdog.join();
     let mut kids = std::mem::take(&mut *children.lock().unwrap());
+    // the attempt is over: sweep whatever beacons landed last into
+    // status.json before the supervisor decides what happens next
+    if let Some(b) = board {
+        b.fold_now();
+    }
     let node0_status = node0_status?;
 
     let outcome = if node0_status.success() {
@@ -721,6 +850,43 @@ fn rejoin_from_snapshot(
         nodes: target_nodes,
         gpus_per_node: spec.train.gpus_per_node,
     })
+}
+
+/// `daso top --dir <run>`: render the supervisor's folded
+/// `status.json` as a live per-node table. Plain text + ANSI clear, no
+/// extra dependencies; `--once` prints a single frame (CI-friendly),
+/// `--refresh-ms` sets the poll cadence.
+fn cmd_top(args: &Args) -> Result<()> {
+    let dir = args.require("dir")?;
+    let refresh = args.get_usize("refresh-ms")?.unwrap_or(1000).max(50) as u64;
+    let once = args.get_bool("once");
+    let path = std::path::Path::new(dir).join("status.json");
+    loop {
+        match std::fs::read_to_string(&path) {
+            Ok(text) => {
+                let status = daso::util::json::Value::parse(&text)
+                    .with_context(|| format!("parsing {}", path.display()))?;
+                let frame =
+                    daso::obs::live::render_status(&status, daso::obs::live::unix_ms());
+                if !once {
+                    // clear + home, so the table repaints in place
+                    print!("\x1b[2J\x1b[H");
+                }
+                println!("{frame}");
+            }
+            Err(e) if once => {
+                bail!("no live status at {} ({e}); is the launch running with beacons on \
+                       (--set obs.beacon_every_ms=K) and --out pointing here?", path.display());
+            }
+            Err(e) => {
+                println!("waiting for {} ({e})", path.display());
+            }
+        }
+        if once {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(refresh));
+    }
 }
 
 /// Run every strategy on the same model/config and print a comparison —

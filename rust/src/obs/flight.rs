@@ -1,0 +1,258 @@
+//! Crash flight recorder: a bounded per-process ring of the most
+//! recent obs events, persisted to `flight-node<N>.json` so abnormal
+//! exits leave a post-mortem timeline.
+//!
+//! The ring is fed from the recorder's `push_event` path *after* lane
+//! and node attribution but *before* the per-thread drop cap, so the
+//! newest events are always retained even when the trace buffers are
+//! saturated. Dumps happen on three paths:
+//!
+//! 1. a chained panic hook (installed once at `init`) dumps the ring
+//!    with the panic message as the reason;
+//! 2. the binary's top-level error path dumps with the error text;
+//! 3. the live beacon emitter refreshes the dump on every beacon
+//!    ("live checkpoint"), so even a SIGKILLed process — which runs no
+//!    exit code at all — leaves a timeline at most one beacon interval
+//!    stale.
+//!
+//! The supervisor renames the dumps to `flight-node<N>-gen<G>.json` on
+//! every regroup; those swept post-mortem files are the ones the
+//! sealed run manifest lists (the live `flight-node<N>.json` files are
+//! rewritten continuously and therefore deliberately stay unsealed).
+//!
+//! Like every obs probe, the recorder only observes: the armed check
+//! is one relaxed load, the ring never feeds back into training state,
+//! and all dump IO is best-effort (an unwritable dir never fails a
+//! run).
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::{arr, num, obj, s, Value};
+
+use super::RawEvent;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Default ring capacity (config key `obs.flight_events`).
+pub const DEFAULT_FLIGHT_EVENTS: usize = 512;
+
+struct FlightState {
+    dir: PathBuf,
+    node: i64,
+    generation: usize,
+    capacity: usize,
+    ring: VecDeque<RawEvent>,
+    /// Total events ever observed (so a dump proves wraparound).
+    observed: u64,
+}
+
+fn state() -> &'static Mutex<Option<FlightState>> {
+    static STATE: OnceLock<Mutex<Option<FlightState>>> = OnceLock::new();
+    STATE.get_or_init(|| Mutex::new(None))
+}
+
+/// Canonical dump file name for a node's flight recorder.
+pub fn file_name(node: i64) -> String {
+    format!("flight-node{node}.json")
+}
+
+/// Sweep name a dump is renamed to when the supervisor collects it at
+/// a regroup (generation = the attempt that died).
+pub fn swept_file_name(node: i64, generation: usize) -> String {
+    format!("flight-node{node}-gen{generation}.json")
+}
+
+/// Arm the flight recorder for this process: keep the newest
+/// `capacity` obs events in a ring and dump them to
+/// `dir/flight-node<node>.json` on panic (a chained hook) or on
+/// explicit `dump` calls. Also enables the obs recorder so spans flow
+/// even in untraced runs — the run report stays gated on `trace`, so
+/// arming never changes reported results (observe-only, like every obs
+/// path).
+pub fn init(dir: &Path, node: i64, generation: usize, capacity: usize) {
+    let capacity = capacity.max(1);
+    {
+        let mut st = state().lock().unwrap_or_else(|e| e.into_inner());
+        *st = Some(FlightState {
+            dir: dir.to_path_buf(),
+            node,
+            generation,
+            capacity,
+            ring: VecDeque::with_capacity(capacity),
+            observed: 0,
+        });
+    }
+    install_panic_hook();
+    super::enable();
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Is the flight recorder armed? (Cheapest possible probe.)
+#[inline]
+pub fn is_armed() -> bool {
+    // audit: allow(atomic-ordering): hot-path probe mirroring
+    // obs::is_enabled; a stale read mis-skips one ring append at the
+    // arm/disarm edge and nothing is published under this flag.
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Feed one attributed event into the ring (called from the
+/// recorder's `push_event`, before the drop cap, so the ring always
+/// holds the newest events).
+#[inline]
+pub(super) fn observe(ev: &RawEvent) {
+    if !is_armed() {
+        return;
+    }
+    let mut st = state().lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(st) = st.as_mut() {
+        if st.ring.len() == st.capacity {
+            st.ring.pop_front();
+        }
+        st.ring.push_back(*ev);
+        st.observed += 1;
+    }
+}
+
+fn ring_json(st: &FlightState, reason: &str) -> Value {
+    let events = st
+        .ring
+        .iter()
+        .map(|ev| {
+            obj(vec![
+                ("phase", s(ev.phase)),
+                ("node", num(ev.node as f64)),
+                ("lane", num(ev.lane as f64)),
+                ("start_ns", num(ev.start_ns as f64)),
+                ("dur_ns", num(ev.dur_ns as f64)),
+                ("bytes", num(ev.bytes as f64)),
+            ])
+        })
+        .collect();
+    let unix_ms = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as f64)
+        .unwrap_or(0.0);
+    obj(vec![
+        ("kind", s("daso-flight")),
+        ("node", num(st.node as f64)),
+        ("generation", num(st.generation as f64)),
+        ("pid", num(std::process::id() as f64)),
+        ("reason", s(reason)),
+        ("dumped_unix_ms", num(unix_ms)),
+        ("capacity", num(st.capacity as f64)),
+        ("observed", num(st.observed as f64)),
+        ("events", arr(events)),
+    ])
+}
+
+/// Dump the ring to `flight-node<N>.json` (atomic tmp + rename; last
+/// writer wins). Best-effort: IO errors are swallowed — the recorder
+/// must never turn a crash into a different crash. Returns the path
+/// written, if any.
+pub fn dump(reason: &str) -> Option<PathBuf> {
+    // try_lock: the panic hook may fire while this thread already
+    // holds the flight lock (e.g. an OOM inside `observe`); skipping
+    // the dump beats deadlocking the abort path.
+    let guard = match state().try_lock() {
+        Ok(g) => g,
+        Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+        Err(std::sync::TryLockError::WouldBlock) => return None,
+    };
+    let st = guard.as_ref()?;
+    let path = st.dir.join(file_name(st.node));
+    let tmp = st.dir.join(format!("{}.{}.tmp", file_name(st.node), std::process::id()));
+    let body = ring_json(st, reason).to_string_pretty();
+    if std::fs::create_dir_all(&st.dir).is_err() {
+        return None;
+    }
+    if std::fs::write(&tmp, body).is_err() {
+        return None;
+    }
+    if std::fs::rename(&tmp, &path).is_err() {
+        let _ = std::fs::remove_file(&tmp);
+        return None;
+    }
+    Some(path)
+}
+
+fn install_panic_hook() {
+    static HOOK: OnceLock<()> = OnceLock::new();
+    HOOK.get_or_init(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if is_armed() {
+                let msg = info
+                    .payload()
+                    .downcast_ref::<&str>()
+                    .map(|m| m.to_string())
+                    .or_else(|| info.payload().downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "unknown panic payload".to_string());
+                let _ = dump(&format!("panic: {msg}"));
+            }
+            prev(info);
+        }));
+    });
+}
+
+/// Disarm and clear the recorder (tests; obs::reset_for_tests calls
+/// this so the global state never leaks between tests).
+pub fn reset_for_tests() {
+    ARMED.store(false, Ordering::SeqCst);
+    let mut st = state().lock().unwrap_or_else(|e| e.into_inner());
+    *st = None;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::RawEvent;
+    use super::*;
+
+    fn test_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("daso_flight_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn ev(bytes: u64) -> RawEvent {
+        RawEvent { phase: "test.flight", node: 0, lane: 1, start_ns: bytes, dur_ns: 10, bytes }
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_newest_and_dump_is_valid_json() {
+        let _g = super::super::test_lock();
+        super::super::reset_for_tests();
+        let dir = test_dir("wrap");
+        init(&dir, 3, 2, 4);
+        for i in 0..20u64 {
+            observe(&ev(i));
+        }
+        let path = dump("test dump").expect("dump written");
+        let v = Value::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.req_str("kind").unwrap(), "daso-flight");
+        assert_eq!(v.req_usize("node").unwrap(), 3);
+        assert_eq!(v.req_usize("generation").unwrap(), 2);
+        assert_eq!(v.req_usize("observed").unwrap(), 20);
+        assert_eq!(v.req_str("reason").unwrap(), "test dump");
+        let events = v.req_arr("events").unwrap();
+        assert_eq!(events.len(), 4, "ring keeps exactly `capacity` events");
+        let kept: Vec<usize> = events.iter().map(|e| e.req_usize("bytes").unwrap()).collect();
+        assert_eq!(kept, vec![16, 17, 18, 19], "wraparound keeps the newest events");
+        reset_for_tests();
+        super::super::reset_for_tests();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unarmed_recorder_is_inert() {
+        let _g = super::super::test_lock();
+        super::super::reset_for_tests();
+        assert!(!is_armed());
+        observe(&ev(1));
+        assert!(dump("nothing armed").is_none());
+    }
+}

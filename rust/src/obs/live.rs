@@ -1,0 +1,858 @@
+//! Live telemetry plane: out-of-band heartbeat beacons, the
+//! supervisor's folded `status.json`, and the observe-only anomaly
+//! detector over the beacon stream.
+//!
+//! Every worker process owns an [`Emitter`] (enabled by
+//! `--set obs.beacon_every_ms=K` plus a beacon directory, which
+//! `daso launch` derives from `--out`). The emitter writes a compact
+//! `beacon-node<N>.json` — epoch/step progress, latest loss, cycler
+//! state, wire-byte counters and cumulative per-phase totals — at
+//! every epoch boundary and at most every K ms in between, each write
+//! atomic (tmp + rename) so a concurrent reader can never observe a
+//! torn file. Beacons ride the filesystem, not the transport: the wire
+//! surface and `PROTOCOL_VERSION` are untouched, and a beacon can
+//! never perturb training traffic — the bit-identity invariant
+//! (beacons only observe) is enforced by CI exactly like tracing.
+//!
+//! The `daso launch` supervisor folds the beacons through a
+//! [`StatusBoard`] into an atomically-rewritten `status.json` next to
+//! the run artifacts, runs the anomaly detectors (persistent straggler
+//! skew, ring-stall outliers, silent-peer staleness — plus fail-stop
+//! deaths it witnesses directly), and `daso top --dir <run>` renders
+//! the result as a live per-node table. The run's final JSON surfaces
+//! the same findings as an `anomalies[]` section.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::json::{arr, num, obj, s, Value};
+
+use super::phase;
+
+// ---------------------------------------------------------------------
+// shared plumbing
+// ---------------------------------------------------------------------
+
+/// Milliseconds since the unix epoch (0 if the clock is before 1970).
+pub fn unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Write a JSON value atomically: serialize to a pid-suffixed tmp file
+/// in the target's directory, then rename into place. A concurrent
+/// reader sees either the previous complete file or the new complete
+/// file, never a partial write.
+pub fn atomic_write_json(path: &Path, v: &Value) -> std::io::Result<()> {
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| std::io::Error::other("atomic_write_json: path has no file name"))?;
+    let tmp = path.with_file_name(format!("{file_name}.{}.tmp", std::process::id()));
+    std::fs::write(&tmp, v.to_string_pretty())?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    Ok(())
+}
+
+/// Cumulative totals of one phase across every registered thread
+/// buffer (non-destructive beacon snapshot; `drain` still sees every
+/// event).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseTotal {
+    pub count: u64,
+    pub sum_ns: u64,
+    pub bytes: u64,
+}
+
+/// Fold the recorder's pending per-thread buffers into per-phase
+/// totals without draining them. Empty when the recorder is disabled.
+pub fn phase_totals() -> BTreeMap<&'static str, PhaseTotal> {
+    let mut out: BTreeMap<&'static str, PhaseTotal> = BTreeMap::new();
+    if !super::is_enabled() {
+        return out;
+    }
+    let bufs = super::registry().lock().unwrap().clone();
+    for buf in bufs {
+        let b = buf.lock().unwrap();
+        for ev in &b.events {
+            let t = out.entry(ev.phase).or_default();
+            t.count += 1;
+            t.sum_ns += ev.dur_ns;
+            t.bytes += ev.bytes;
+        }
+    }
+    out
+}
+
+/// Canonical beacon file name for a node.
+pub fn beacon_file_name(node: i64) -> String {
+    format!("beacon-node{node}.json")
+}
+
+// ---------------------------------------------------------------------
+// emitter (worker side)
+// ---------------------------------------------------------------------
+
+/// A worker's progress snapshot at beacon time.
+#[derive(Debug, Clone)]
+pub struct Progress {
+    /// Epochs fully completed so far.
+    pub epoch: usize,
+    pub epochs: usize,
+    pub steps_done: u64,
+    /// Latest known train loss (NaN = none yet; serialized as null).
+    pub loss: f64,
+    /// Strategy/cycler state label (e.g. `cycling B=4 W=16 boost=1`).
+    pub state: String,
+    pub generation: usize,
+    /// Wire bytes this process has sent so far (0 for in-process runs).
+    pub wire_bytes: u64,
+    pub done: bool,
+}
+
+/// Per-process heartbeat beacon writer. Observe-only by construction:
+/// it reads counters and the obs registry, writes a file out-of-band,
+/// and swallows every IO error.
+pub struct Emitter {
+    node: i64,
+    dir: PathBuf,
+    every: Duration,
+    every_ms: u64,
+    state: Mutex<EmitState>,
+}
+
+struct EmitState {
+    seq: u64,
+    last: Option<Instant>,
+}
+
+impl Emitter {
+    /// Build the emitter from the resolved config. `None` (plane off)
+    /// unless both a beacon directory and a positive interval are set.
+    pub fn from_config(beacon_dir: &str, every_ms: u64, node: i64) -> Option<Arc<Emitter>> {
+        if beacon_dir.is_empty() || every_ms == 0 {
+            return None;
+        }
+        let dir = PathBuf::from(beacon_dir);
+        let _ = std::fs::create_dir_all(&dir);
+        Some(Arc::new(Emitter {
+            node,
+            dir,
+            every: Duration::from_millis(every_ms),
+            every_ms,
+            state: Mutex::new(EmitState { seq: 0, last: None }),
+        }))
+    }
+
+    /// Interval-gated emit for hot call sites (per training step): the
+    /// progress closure only runs when a beacon is actually due.
+    pub fn maybe_emit(&self, progress: impl FnOnce() -> Progress) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let due = st.last.map(|t| t.elapsed() >= self.every).unwrap_or(true);
+        if due {
+            self.emit_locked(&mut st, &progress());
+        }
+    }
+
+    /// Unconditional emit (epoch boundaries and the final beacon).
+    pub fn emit_now(&self, progress: &Progress) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        self.emit_locked(&mut st, progress);
+    }
+
+    fn emit_locked(&self, st: &mut EmitState, p: &Progress) {
+        st.seq += 1;
+        st.last = Some(Instant::now());
+        let mut phase_obj: BTreeMap<String, Value> = BTreeMap::new();
+        for (name, t) in phase_totals() {
+            phase_obj.insert(
+                name.to_string(),
+                obj(vec![
+                    ("count", num(t.count as f64)),
+                    ("ms", num(t.sum_ns as f64 / 1e6)),
+                    ("bytes", num(t.bytes as f64)),
+                ]),
+            );
+        }
+        let loss = if p.loss.is_finite() { num(p.loss) } else { Value::Null };
+        let beacon = obj(vec![
+            ("kind", s("daso-beacon")),
+            ("schema_version", s("1.0")),
+            ("node", num(self.node as f64)),
+            ("seq", num(st.seq as f64)),
+            ("pid", num(std::process::id() as f64)),
+            ("unix_ms", num(unix_ms() as f64)),
+            ("every_ms", num(self.every_ms as f64)),
+            ("epoch", num(p.epoch as f64)),
+            ("epochs", num(p.epochs as f64)),
+            ("steps_done", num(p.steps_done as f64)),
+            ("loss", loss),
+            ("state", s(&p.state)),
+            ("generation", num(p.generation as f64)),
+            ("wire_bytes", num(p.wire_bytes as f64)),
+            ("done", Value::Bool(p.done)),
+            ("phases", Value::Obj(phase_obj)),
+        ]);
+        let _ = atomic_write_json(&self.dir.join(beacon_file_name(self.node)), &beacon);
+        // refresh the flight-recorder dump alongside the beacon, so a
+        // fail-stop kill (no exit code runs) still leaves a timeline
+        // at most one beacon interval stale
+        if super::flight::is_armed() {
+            let _ = super::flight::dump(&format!("live checkpoint at beacon seq {}", st.seq));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// beacon parsing + anomaly detectors (pure, unit-testable)
+// ---------------------------------------------------------------------
+
+/// One node's latest beacon, parsed for the detectors. `raw` keeps the
+/// full beacon for the status fold.
+#[derive(Debug, Clone)]
+pub struct BeaconView {
+    pub node: i64,
+    pub seq: u64,
+    pub unix_ms: u64,
+    pub every_ms: u64,
+    pub done: bool,
+    /// phase -> (count, total ms)
+    pub phases: BTreeMap<String, (u64, f64)>,
+    pub raw: Value,
+}
+
+/// Parse one beacon file's JSON; `None` for files that are not (yet)
+/// complete beacons of a schema we understand.
+pub fn parse_beacon(raw: Value) -> Option<BeaconView> {
+    if raw.get("kind")?.as_str()? != "daso-beacon" {
+        return None;
+    }
+    let node = raw.get("node")?.as_f64()? as i64;
+    let seq = raw.get("seq")?.as_f64()? as u64;
+    let unix_ms = raw.get("unix_ms")?.as_f64()? as u64;
+    let every_ms = raw.get("every_ms")?.as_f64()? as u64;
+    let done = raw.get("done")?.as_bool()?;
+    let mut phases = BTreeMap::new();
+    if let Some(obj) = raw.get("phases").and_then(|p| p.as_obj()) {
+        for (name, v) in obj {
+            let count = v.get("count").and_then(|c| c.as_f64()).unwrap_or(0.0) as u64;
+            let ms = v.get("ms").and_then(|m| m.as_f64()).unwrap_or(0.0);
+            phases.insert(name.clone(), (count, ms));
+        }
+    }
+    Some(BeaconView { node, seq, unix_ms, every_ms, done, phases, raw })
+}
+
+fn mean_ms(view: &BeaconView, phase: &str) -> Option<f64> {
+    let &(count, ms) = view.phases.get(phase)?;
+    (count > 0).then(|| ms / count as f64)
+}
+
+/// A straggler candidate must out-compute every peer by this factor on
+/// the deterministic virtual clock (straggler_factor=4 in the CI gate
+/// gives a crisp 4x margin over this 2x threshold).
+pub const STRAGGLER_COMPUTE_RATIO: f64 = 2.0;
+/// ... and keep doing so across this many folds before it is recorded.
+pub const STRAGGLER_PERSIST_FOLDS: u32 = 2;
+/// A ring-stall outlier needs an absolute floor on its mean stall --
+/// sub-second ring waits are normal backpressure, not an anomaly.
+pub const RING_STALL_MIN_MS: f64 = 500.0;
+/// ... and must exceed the peer median by this factor.
+pub const RING_STALL_RATIO: f64 = 5.0;
+/// A silent peer must be stale by at least this long...
+pub const SILENT_MIN_MS: u64 = 5_000;
+/// ... and by at least this many beacon intervals.
+pub const SILENT_EVERY_FACTOR: u64 = 10;
+
+/// Persistent straggler skew: one node's virtual per-epoch compute is
+/// at least [`STRAGGLER_COMPUTE_RATIO`] times every peer's, while
+/// every peer reports positive virtual sync-skew wait (they really are
+/// idling on it). Uses the deterministic virtual-clock phases, so the
+/// detection is reproducible, not wall-clock-flaky.
+pub fn straggler_candidate(views: &BTreeMap<i64, BeaconView>) -> Option<(i64, String)> {
+    let computes: BTreeMap<i64, f64> = views
+        .iter()
+        .filter_map(|(&n, v)| mean_ms(v, phase::EPOCH_COMPUTE_VIRTUAL).map(|m| (n, m)))
+        .collect();
+    if computes.len() < 2 {
+        return None;
+    }
+    let (&cand, &cand_mean) = computes.iter().max_by(|a, b| a.1.total_cmp(b.1))?;
+    let others_max =
+        computes.iter().filter(|(&n, _)| n != cand).map(|(_, &m)| m).fold(0.0f64, f64::max);
+    if others_max <= 0.0 || cand_mean < STRAGGLER_COMPUTE_RATIO * others_max {
+        return None;
+    }
+    let all_others_wait = views
+        .iter()
+        .filter(|(&n, _)| n != cand && computes.contains_key(&n))
+        .all(|(_, v)| v.phases.get(phase::EPOCH_WAIT_VIRTUAL).map(|&(_, ms)| ms) > Some(0.0));
+    if !all_others_wait {
+        return None;
+    }
+    Some((
+        cand,
+        format!(
+            "virtual compute {cand_mean:.1} ms/epoch is {:.1}x the slowest peer \
+             ({others_max:.1} ms) and every peer reports sync-skew wait",
+            cand_mean / others_max
+        ),
+    ))
+}
+
+/// Ring-stall outliers: a node whose mean shm ring stall clears an
+/// absolute floor AND dwarfs the peer median.
+pub fn ring_stall_candidates(views: &BTreeMap<i64, BeaconView>) -> Vec<(i64, String)> {
+    let mut out = Vec::new();
+    for ring_phase in [phase::RING_WAIT_WRITE, phase::RING_WAIT_READ] {
+        let means: BTreeMap<i64, f64> = views
+            .iter()
+            .filter_map(|(&n, v)| mean_ms(v, ring_phase).map(|m| (n, m)))
+            .collect();
+        if means.len() < 2 {
+            continue;
+        }
+        let mut sorted: Vec<f64> = means.values().copied().collect();
+        sorted.sort_by(f64::total_cmp);
+        let median = sorted[(sorted.len() - 1) / 2];
+        for (&node, &m) in &means {
+            if m > RING_STALL_MIN_MS && m > RING_STALL_RATIO * median.max(f64::MIN_POSITIVE) {
+                out.push((
+                    node,
+                    format!(
+                        "mean {ring_phase} stall {m:.0} ms vs peer median {median:.1} ms \
+                         (> {RING_STALL_MIN_MS:.0} ms floor)"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Silent-peer staleness: an undone node whose last beacon is many
+/// intervals old while some peer is still beaconing freshly. Fail-stop
+/// deaths the supervisor witnesses directly are recorded through
+/// [`StatusBoard::note_death`] instead (a watchdog usually ends the
+/// attempt before pure staleness can accumulate).
+pub fn silent_candidates(views: &BTreeMap<i64, BeaconView>, now_ms: u64) -> Vec<(i64, String)> {
+    let mut out = Vec::new();
+    for (&node, v) in views {
+        if v.done {
+            continue;
+        }
+        let threshold = (v.every_ms.saturating_mul(SILENT_EVERY_FACTOR)).max(SILENT_MIN_MS);
+        let age = now_ms.saturating_sub(v.unix_ms);
+        if age <= threshold {
+            continue;
+        }
+        let peer_fresh = views.iter().any(|(&n, p)| {
+            n != node && !p.done && now_ms.saturating_sub(p.unix_ms) < threshold / 2
+        });
+        if peer_fresh {
+            out.push((
+                node,
+                format!(
+                    "no beacon for {age} ms (> {threshold} ms threshold) while peers keep \
+                     reporting"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// status board (supervisor side)
+// ---------------------------------------------------------------------
+
+/// One recorded anomaly (deduped by `(name, node)`; first sighting
+/// wins the timestamp).
+#[derive(Debug, Clone)]
+pub struct AnomalyRec {
+    pub name: String,
+    pub node: i64,
+    pub detail: String,
+    pub first_unix_ms: u64,
+}
+
+struct BoardState {
+    generation: usize,
+    folds: u64,
+    last_fold: Option<Instant>,
+    views: BTreeMap<i64, BeaconView>,
+    anomalies: Vec<AnomalyRec>,
+    straggler_hits: BTreeMap<i64, u32>,
+}
+
+/// The `daso launch` supervisor's fold of the beacon stream: reads the
+/// per-node beacon files, keeps the freshest view of each node, runs
+/// the anomaly detectors, and atomically rewrites `status.json`.
+/// Persists across regroup/rejoin attempts so the anomaly trail covers
+/// the whole elastic launch.
+pub struct StatusBoard {
+    beacon_dir: PathBuf,
+    status_path: PathBuf,
+    nodes_expected: usize,
+    workers_per_node: usize,
+    min_fold_interval: Duration,
+    state: Mutex<BoardState>,
+}
+
+impl StatusBoard {
+    /// `out_dir` is the run's `--out` directory: beacons go to
+    /// `<out>/live/`, the folded table to `<out>/status.json`.
+    pub fn new(out_dir: &Path, nodes_expected: usize, workers_per_node: usize) -> StatusBoard {
+        let beacon_dir = out_dir.join("live");
+        let _ = std::fs::create_dir_all(&beacon_dir);
+        StatusBoard {
+            beacon_dir,
+            status_path: out_dir.join("status.json"),
+            nodes_expected,
+            workers_per_node,
+            min_fold_interval: Duration::from_millis(200),
+            state: Mutex::new(BoardState {
+                generation: 0,
+                folds: 0,
+                last_fold: None,
+                views: BTreeMap::new(),
+                anomalies: Vec::new(),
+                straggler_hits: BTreeMap::new(),
+            }),
+        }
+    }
+
+    /// Override the beacon directory (when the user set an explicit
+    /// `obs.beacon_dir` instead of the `<out>/live` default).
+    pub fn with_beacon_dir(mut self, dir: &Path) -> StatusBoard {
+        let _ = std::fs::create_dir_all(dir);
+        self.beacon_dir = dir.to_path_buf();
+        self
+    }
+
+    /// Where workers should write their beacons (forwarded to children
+    /// as `obs.beacon_dir`).
+    pub fn beacon_dir(&self) -> &Path {
+        &self.beacon_dir
+    }
+
+    pub fn status_path(&self) -> &Path {
+        &self.status_path
+    }
+
+    /// The launch generation status.json reports (bumped per attempt).
+    pub fn set_generation(&self, generation: usize) {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).generation = generation;
+    }
+
+    /// Record a fail-stop death the supervisor witnessed directly: the
+    /// deterministic form of the silent-peer anomaly (the watchdog
+    /// ends the attempt long before beacon staleness could).
+    pub fn note_death(&self, node: i64, generation: usize) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        record_anomaly(
+            &mut st.anomalies,
+            "silent-peer",
+            node,
+            format!(
+                "node process died fail-stop during launch generation {generation}; \
+                 the supervisor is regrouping onto the survivors"
+            ),
+        );
+        self.write_status(&st);
+    }
+
+    /// Rate-limited fold (safe to call from a tight supervisor poll
+    /// loop; actual work happens at most every ~200 ms).
+    pub fn fold(&self) {
+        self.fold_inner(false);
+    }
+
+    /// Unconditional fold (the final sweep after a launch finishes).
+    pub fn fold_now(&self) {
+        self.fold_inner(true);
+    }
+
+    fn fold_inner(&self, force: bool) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let due = st.last_fold.map(|t| t.elapsed() >= self.min_fold_interval).unwrap_or(true);
+        if !force && !due {
+            return;
+        }
+        st.last_fold = Some(Instant::now());
+        st.folds += 1;
+        let entries = match std::fs::read_dir(&self.beacon_dir) {
+            Ok(e) => e,
+            Err(_) => return,
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if !name.starts_with("beacon-node") || !name.ends_with(".json") {
+                continue;
+            }
+            let Ok(body) = std::fs::read_to_string(entry.path()) else { continue };
+            let Ok(raw) = Value::parse(&body) else { continue };
+            let Some(view) = parse_beacon(raw) else { continue };
+            let fresher = st.views.get(&view.node).map(|old| view.seq >= old.seq).unwrap_or(true);
+            if fresher {
+                st.views.insert(view.node, view);
+            }
+        }
+        self.detect(&mut st);
+        self.write_status(&st);
+    }
+
+    fn detect(&self, st: &mut BoardState) {
+        if let Some((node, detail)) = straggler_candidate(&st.views) {
+            let hits = st.straggler_hits.entry(node).or_insert(0);
+            *hits += 1;
+            if *hits >= STRAGGLER_PERSIST_FOLDS {
+                record_anomaly(&mut st.anomalies, "straggler", node, detail);
+            }
+        }
+        for (node, detail) in ring_stall_candidates(&st.views) {
+            record_anomaly(&mut st.anomalies, "ring-stall", node, detail);
+        }
+        for (node, detail) in silent_candidates(&st.views, unix_ms()) {
+            record_anomaly(&mut st.anomalies, "silent-peer", node, detail);
+        }
+    }
+
+    fn write_status(&self, st: &BoardState) {
+        let now = unix_ms();
+        let mut nodes: BTreeMap<String, Value> = BTreeMap::new();
+        for (node, view) in &st.views {
+            let mut fields = match view.raw.clone() {
+                Value::Obj(map) => map,
+                other => [("beacon".to_string(), other)].into_iter().collect(),
+            };
+            fields.insert(
+                "age_ms".to_string(),
+                num(now.saturating_sub(view.unix_ms) as f64),
+            );
+            nodes.insert(node.to_string(), Value::Obj(fields));
+        }
+        let status = obj(vec![
+            ("kind", s("daso-live-status")),
+            ("schema_version", s("1.0")),
+            ("updated_unix_ms", num(now as f64)),
+            ("folds", num(st.folds as f64)),
+            ("generation", num(st.generation as f64)),
+            ("nodes_expected", num(self.nodes_expected as f64)),
+            ("workers_per_node", num(self.workers_per_node as f64)),
+            ("nodes", Value::Obj(nodes)),
+            ("anomalies", anomalies_value(&st.anomalies)),
+        ]);
+        let _ = atomic_write_json(&self.status_path, &status);
+    }
+}
+
+fn record_anomaly(list: &mut Vec<AnomalyRec>, name: &str, node: i64, detail: String) {
+    if list.iter().any(|a| a.name == name && a.node == node) {
+        return;
+    }
+    list.push(AnomalyRec {
+        name: name.to_string(),
+        node,
+        detail,
+        first_unix_ms: unix_ms(),
+    });
+}
+
+/// Serialize an anomaly list as the JSON array shape shared by
+/// `status.json` and the run JSON's `anomalies[]` section.
+pub fn anomalies_value(list: &[AnomalyRec]) -> Value {
+    arr(list
+        .iter()
+        .map(|a| {
+            obj(vec![
+                ("name", s(&a.name)),
+                ("node", num(a.node as f64)),
+                ("detail", s(&a.detail)),
+                ("first_unix_ms", num(a.first_unix_ms as f64)),
+            ])
+        })
+        .collect())
+}
+
+// ---------------------------------------------------------------------
+// `daso top` rendering
+// ---------------------------------------------------------------------
+
+fn fmt_age(ms: f64) -> String {
+    if ms < 0.0 {
+        "-".to_string()
+    } else if ms < 10_000.0 {
+        format!("{:.1}s", ms / 1000.0)
+    } else {
+        format!("{:.0}s", ms / 1000.0)
+    }
+}
+
+fn fmt_bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.1} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1} KB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Render a parsed `status.json` as the plain-text per-node table
+/// `daso top` refreshes. Pure (the caller supplies "now") so the table
+/// is unit-testable.
+pub fn render_status(status: &Value, now_ms: u64) -> String {
+    let mut out = String::new();
+    let gen = status.get("generation").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let expected = status.get("nodes_expected").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let workers = status.get("workers_per_node").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let folds = status.get("folds").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let updated = status.get("updated_unix_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let empty = BTreeMap::new();
+    let nodes = status.get("nodes").and_then(|v| v.as_obj()).unwrap_or(&empty);
+    out.push_str(&format!(
+        "daso live status — generation {gen:.0}, {}/{expected:.0} node(s) reporting, \
+         {workers:.0} worker(s)/node, fold #{folds:.0}, updated {} ago\n",
+        nodes.len(),
+        fmt_age(now_ms as f64 - updated),
+    ));
+    out.push_str(&format!(
+        "{:<5} {:<4} {:<9} {:<8} {:<10} {:<26} {:>10} {:>7} {:>5}\n",
+        "NODE", "GEN", "EPOCH", "STEPS", "LOSS", "STATE", "WIRE", "AGE", "DONE"
+    ));
+    let mut sorted: Vec<(&String, &Value)> = nodes.iter().collect();
+    sorted.sort_by_key(|(k, _)| k.parse::<i64>().unwrap_or(i64::MAX));
+    for (id, n) in sorted {
+        let f = |key: &str| n.get(key).and_then(|v| v.as_f64());
+        let loss = match n.get("loss").and_then(|v| v.as_f64()) {
+            Some(l) => format!("{l:.4}"),
+            None => "-".to_string(),
+        };
+        let state = n.get("state").and_then(|v| v.as_str()).unwrap_or("-");
+        let done = n.get("done").and_then(|v| v.as_bool()).unwrap_or(false);
+        out.push_str(&format!(
+            "{:<5} {:<4} {:<9} {:<8} {:<10} {:<26} {:>10} {:>7} {:>5}\n",
+            id,
+            f("generation").map(|g| format!("{g:.0}")).unwrap_or_else(|| "-".into()),
+            format!(
+                "{}/{}",
+                f("epoch").map(|e| format!("{e:.0}")).unwrap_or_else(|| "?".into()),
+                f("epochs").map(|e| format!("{e:.0}")).unwrap_or_else(|| "?".into()),
+            ),
+            f("steps_done").map(|v| format!("{v:.0}")).unwrap_or_else(|| "-".into()),
+            loss,
+            state,
+            f("wire_bytes").map(fmt_bytes).unwrap_or_else(|| "-".into()),
+            f("age_ms").map(fmt_age).unwrap_or_else(|| "-".into()),
+            if done { "yes" } else { "-" },
+        ));
+    }
+    let anomalies = status.get("anomalies").and_then(|v| v.as_arr()).unwrap_or(&[]);
+    if anomalies.is_empty() {
+        out.push_str("anomalies: none\n");
+    } else {
+        out.push_str("anomalies:\n");
+        for a in anomalies {
+            out.push_str(&format!(
+                "  [{}] node {}: {}\n",
+                a.get("name").and_then(|v| v.as_str()).unwrap_or("?"),
+                a.get("node").and_then(|v| v.as_f64()).unwrap_or(-1.0),
+                a.get("detail").and_then(|v| v.as_str()).unwrap_or(""),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(
+        node: i64,
+        unix_ms: u64,
+        done: bool,
+        phases: &[(&str, u64, f64)],
+    ) -> BeaconView {
+        BeaconView {
+            node,
+            seq: 1,
+            unix_ms,
+            every_ms: 100,
+            done,
+            phases: phases.iter().map(|&(p, c, ms)| (p.to_string(), (c, ms))).collect(),
+            raw: obj(vec![("node", num(node as f64))]),
+        }
+    }
+
+    fn views(list: Vec<BeaconView>) -> BTreeMap<i64, BeaconView> {
+        list.into_iter().map(|v| (v.node, v)).collect()
+    }
+
+    #[test]
+    fn straggler_detector_needs_ratio_and_peer_waits() {
+        let compute = phase::EPOCH_COMPUTE_VIRTUAL;
+        let wait = phase::EPOCH_WAIT_VIRTUAL;
+        // node 1 computes 4x while both peers wait: flagged
+        let vs = views(vec![
+            view(0, 0, false, &[(compute, 2, 20.0), (wait, 2, 60.0)]),
+            view(1, 0, false, &[(compute, 2, 80.0), (wait, 2, 0.0)]),
+            view(2, 0, false, &[(compute, 2, 20.0), (wait, 2, 60.0)]),
+        ]);
+        let (node, detail) = straggler_candidate(&vs).expect("straggler flagged");
+        assert_eq!(node, 1);
+        assert!(detail.contains("virtual compute"), "{detail}");
+        // ratio below the threshold: not flagged
+        let vs = views(vec![
+            view(0, 0, false, &[(compute, 2, 30.0), (wait, 2, 10.0)]),
+            view(1, 0, false, &[(compute, 2, 40.0), (wait, 2, 0.0)]),
+        ]);
+        assert!(straggler_candidate(&vs).is_none());
+        // peers not waiting on it: not flagged
+        let vs = views(vec![
+            view(0, 0, false, &[(compute, 2, 20.0), (wait, 2, 0.0)]),
+            view(1, 0, false, &[(compute, 2, 80.0), (wait, 2, 0.0)]),
+        ]);
+        assert!(straggler_candidate(&vs).is_none());
+        // a single reporting node can never be a straggler
+        let vs = views(vec![view(1, 0, false, &[(compute, 2, 80.0)])]);
+        assert!(straggler_candidate(&vs).is_none());
+    }
+
+    #[test]
+    fn ring_stall_detector_needs_floor_and_ratio() {
+        let ring = phase::RING_WAIT_WRITE;
+        // big outlier over a small median: flagged
+        let vs = views(vec![
+            view(0, 0, false, &[(ring, 10, 100.0)]),
+            view(1, 0, false, &[(ring, 10, 9_000.0)]),
+            view(2, 0, false, &[(ring, 10, 120.0)]),
+        ]);
+        let hits = ring_stall_candidates(&vs);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].0, 1);
+        // large but uniform stalls: backpressure, not an outlier
+        let vs = views(vec![
+            view(0, 0, false, &[(ring, 10, 9_000.0)]),
+            view(1, 0, false, &[(ring, 10, 9_500.0)]),
+        ]);
+        assert!(ring_stall_candidates(&vs).is_empty());
+        // outlier in ratio but under the absolute floor: ignored
+        let vs = views(vec![
+            view(0, 0, false, &[(ring, 10, 0.4)]),
+            view(1, 0, false, &[(ring, 10, 4.0)]),
+        ]);
+        assert!(ring_stall_candidates(&vs).is_empty());
+    }
+
+    #[test]
+    fn silent_detector_exempts_done_nodes_and_needs_a_fresh_peer() {
+        let now = 100_000u64;
+        // node 1 stale, node 0 fresh: flagged
+        let vs = views(vec![
+            view(0, now - 100, false, &[]),
+            view(1, now - 50_000, false, &[]),
+        ]);
+        let hits = silent_candidates(&vs, now);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].0, 1);
+        // done nodes are exempt (they stopped beaconing on purpose)
+        let vs = views(vec![
+            view(0, now - 100, false, &[]),
+            view(1, now - 50_000, true, &[]),
+        ]);
+        assert!(silent_candidates(&vs, now).is_empty());
+        // everyone stale (e.g. the launch is over): nothing to report
+        let vs = views(vec![
+            view(0, now - 50_000, false, &[]),
+            view(1, now - 60_000, false, &[]),
+        ]);
+        assert!(silent_candidates(&vs, now).is_empty());
+    }
+
+    #[test]
+    fn atomic_write_then_parse_roundtrips() {
+        let dir = std::env::temp_dir().join(format!("daso_live_aw_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("status.json");
+        let v = obj(vec![("kind", s("daso-live-status")), ("folds", num(3.0))]);
+        atomic_write_json(&path, &v).unwrap();
+        let back = Value::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.req_str("kind").unwrap(), "daso-live-status");
+        assert_eq!(back.req_usize("folds").unwrap(), 3);
+        // no tmp litter
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn emitter_writes_parseable_beacons_and_board_folds_them() {
+        let dir = std::env::temp_dir().join(format!("daso_live_em_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let board = StatusBoard::new(&dir, 2, 2);
+        assert!(Emitter::from_config("", 50, 0).is_none(), "no dir = plane off");
+        assert!(
+            Emitter::from_config(board.beacon_dir().to_str().unwrap(), 0, 0).is_none(),
+            "zero interval = plane off"
+        );
+        for node in 0..2i64 {
+            let em = Emitter::from_config(board.beacon_dir().to_str().unwrap(), 50, node)
+                .expect("emitter on");
+            em.emit_now(&Progress {
+                epoch: 1 + node as usize,
+                epochs: 4,
+                steps_done: 10,
+                loss: if node == 0 { 0.5 } else { f64::NAN },
+                state: "cycling".into(),
+                generation: 0,
+                wire_bytes: 1024,
+                done: false,
+            });
+        }
+        let b0 = Value::parse(
+            &std::fs::read_to_string(dir.join("live").join(beacon_file_name(0))).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(b0.req_str("kind").unwrap(), "daso-beacon");
+        assert_eq!(b0.req_f64("loss").unwrap(), 0.5);
+        let b1 = Value::parse(
+            &std::fs::read_to_string(dir.join("live").join(beacon_file_name(1))).unwrap(),
+        )
+        .unwrap();
+        assert!(matches!(b1.get("loss"), Some(Value::Null)), "NaN loss must serialize as null");
+        board.fold_now();
+        board.note_death(1, 2);
+        let status =
+            Value::parse(&std::fs::read_to_string(board.status_path()).unwrap()).unwrap();
+        assert_eq!(status.req_str("kind").unwrap(), "daso-live-status");
+        let nodes = status.req("nodes").unwrap().as_obj().unwrap();
+        assert_eq!(nodes.len(), 2, "both beacons folded: {status:?}");
+        assert!(nodes["0"].get("age_ms").is_some());
+        let anomalies = status.req_arr("anomalies").unwrap();
+        assert_eq!(anomalies.len(), 1);
+        assert_eq!(anomalies[0].req_str("name").unwrap(), "silent-peer");
+        assert_eq!(anomalies[0].req_usize("node").unwrap(), 1);
+        let table = render_status(&status, unix_ms());
+        assert!(table.contains("NODE"), "{table}");
+        assert!(table.contains("cycling"), "{table}");
+        assert!(table.contains("[silent-peer] node 1"), "{table}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

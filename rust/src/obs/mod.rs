@@ -18,6 +18,8 @@
 //! set to enforce exactly that.
 
 pub mod compare;
+pub mod flight;
+pub mod live;
 pub mod manifest;
 pub mod trace;
 
@@ -173,16 +175,20 @@ pub fn set_thread_meta(node: i32, label: &str) {
 fn push_event(ev: RawEvent) {
     let buf = thread_buf();
     let mut b = buf.lock().unwrap();
+    let mut ev = ev;
+    ev.lane = b.lane;
+    if ev.node < 0 {
+        ev.node = b.node;
+    }
+    // the flight ring sees every attributed event even when the trace
+    // buffer below is saturated: post-mortems want the newest events,
+    // the trace wants the oldest
+    flight::observe(&ev);
     if b.events.len() >= MAX_THREAD_EVENTS {
         // audit: allow(atomic-ordering): best-effort drop counter read
         // only at drain time, with no ordering dependence.
         DROPPED.fetch_add(1, Ordering::Relaxed);
         return;
-    }
-    let mut ev = ev;
-    ev.lane = b.lane;
-    if ev.node < 0 {
-        ev.node = b.node;
     }
     b.events.push(ev);
 }
@@ -321,11 +327,20 @@ pub fn drain(default_node: i64) -> (Vec<EventOut>, Vec<LaneInfo>, u64) {
 /// Test hook: clear all recorded state and disable the recorder.
 pub fn reset_for_tests() {
     disable();
+    flight::reset_for_tests();
     for buf in registry().lock().unwrap().iter() {
         buf.lock().unwrap().events.clear();
     }
     // audit: allow(atomic-ordering): single-threaded test hook.
     DROPPED.store(0, Ordering::Relaxed);
+}
+
+/// obs state is process-global; tests (here and in the `flight`/`live`
+/// submodules) that flip it serialize on this lock.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// How many events are currently sitting in thread buffers (test hook
@@ -452,6 +467,20 @@ pub fn local_report(node: i64) -> ObsReport {
         events.truncate(MAX_TRACE_EVENTS_PER_NODE);
     }
     ObsReport { enabled: true, phases, events, lanes, dropped }
+}
+
+/// Named run-JSON `warnings[]` entry for dropped obs events. The caps
+/// (`MAX_THREAD_EVENTS` per thread, `MAX_TRACE_EVENTS_PER_NODE` per
+/// process) always counted drops; this surfaces them instead of
+/// reporting them nowhere.
+pub fn overflow_warning(dropped: u64) -> Option<String> {
+    (dropped > 0).then(|| {
+        format!(
+            "obs-overflow: {dropped} trace event(s) dropped (per-thread buffer cap \
+             {MAX_THREAD_EVENTS}, per-node trace cap {MAX_TRACE_EVENTS_PER_NODE}); \
+             phase histograms still cover every event that reached a buffer"
+        )
+    })
 }
 
 /// Merge per-node reports (rank 0 after the gather).
@@ -638,12 +667,6 @@ pub fn decode_report(blob: &[f64]) -> Result<ObsReport> {
 mod tests {
     use super::*;
 
-    /// obs state is process-global; tests that flip it serialize here.
-    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
-        static LOCK: Mutex<()> = Mutex::new(());
-        LOCK.lock().unwrap_or_else(|e| e.into_inner())
-    }
-
     #[test]
     fn disabled_mode_records_nothing() {
         let _g = test_lock();
@@ -797,6 +820,32 @@ mod tests {
         // truncation is an error, not garbage
         assert!(decode_report(&blob[..blob.len() - 1]).is_err());
         assert!(decode_report(&[99.0]).is_err());
+    }
+
+    #[test]
+    fn trace_cap_overflow_sets_dropped_and_warning() {
+        let _g = test_lock();
+        reset_for_tests();
+        enable();
+        set_thread_meta(0, "overflow-lane");
+        let extra = 100usize;
+        for i in 0..(MAX_TRACE_EVENTS_PER_NODE + extra) {
+            event_ns("test.overflow", i as u64, 0, 0);
+        }
+        let rep = local_report(0);
+        assert_eq!(rep.events.len(), MAX_TRACE_EVENTS_PER_NODE, "trace list capped");
+        assert_eq!(rep.dropped, extra as u64, "drops counted");
+        let hist = &rep.phases["test.overflow"][&0];
+        assert_eq!(
+            hist.count,
+            (MAX_TRACE_EVENTS_PER_NODE + extra) as u64,
+            "histograms cover even the capped events"
+        );
+        let warning = overflow_warning(rep.dropped).expect("overflow must surface a warning");
+        assert!(warning.starts_with("obs-overflow:"), "{warning}");
+        assert!(warning.contains("100"), "{warning}");
+        assert!(overflow_warning(0).is_none(), "clean runs stay warning-free");
+        reset_for_tests();
     }
 
     #[test]

@@ -66,6 +66,33 @@ pub fn chrome_trace(rep: &ObsReport, metadata: Value) -> Value {
     ])
 }
 
+/// Resolve where the Chrome trace lands: an explicit `--trace-out`
+/// path wins; a traced run with `--out` but no explicit path lands
+/// next to the run JSON as `<tag>.trace.json`; an untraced run writes
+/// nothing. An explicit `--trace-out` on a run that recorded no trace
+/// is a configuration contradiction (the user asked for a file this
+/// run can never produce) and fails fast instead of silently skipping
+/// the write.
+pub fn trace_out_path(
+    trace_out: Option<&str>,
+    out_dir: Option<&str>,
+    tag: &str,
+    obs_enabled: bool,
+) -> Result<Option<std::path::PathBuf>> {
+    match (trace_out, out_dir) {
+        (Some(p), _) if obs_enabled => Ok(Some(std::path::PathBuf::from(p))),
+        (Some(p), _) => anyhow::bail!(
+            "--trace-out {p}: tracing is disabled for this run, so no trace was recorded \
+             and the file would never be written; enable it with `--set trace=true` \
+             (or drop --trace-out)"
+        ),
+        (None, Some(dir)) if obs_enabled => {
+            Ok(Some(Path::new(dir).join(format!("{tag}.trace.json"))))
+        }
+        _ => Ok(None),
+    }
+}
+
 pub fn write_chrome_trace(path: &Path, rep: &ObsReport, metadata: Value) -> Result<()> {
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
@@ -116,5 +143,27 @@ mod tests {
         assert_eq!(x.req_f64("ts").unwrap(), 5.0);
         assert_eq!(x.req_f64("dur").unwrap(), 2.0);
         assert_eq!(v.req("metadata").unwrap().req_f64("world").unwrap(), 6.0);
+    }
+
+    #[test]
+    fn explicit_trace_out_on_an_untraced_run_fails_fast() {
+        let err = trace_out_path(Some("t.json"), None, "tag", false).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--trace-out t.json"), "{msg}");
+        assert!(msg.contains("tracing is disabled"), "{msg}");
+        assert!(msg.contains("trace=true"), "{msg}");
+    }
+
+    #[test]
+    fn trace_out_path_resolves_the_enabled_directions() {
+        // explicit path wins on a traced run
+        let p = trace_out_path(Some("x/t.json"), Some("out"), "tag", true).unwrap();
+        assert_eq!(p, Some(std::path::PathBuf::from("x/t.json")));
+        // traced + --out only: lands next to the run JSON
+        let p = trace_out_path(None, Some("out"), "m_s", true).unwrap();
+        assert_eq!(p, Some(std::path::PathBuf::from("out").join("m_s.trace.json")));
+        // untraced without an explicit path: nothing, and no error
+        assert_eq!(trace_out_path(None, Some("out"), "tag", false).unwrap(), None);
+        assert_eq!(trace_out_path(None, None, "tag", true).unwrap(), None);
     }
 }

@@ -111,6 +111,27 @@ pub struct TrainConfig {
     /// from the checkpoint fingerprint, so traced runs resume untraced
     /// snapshots and vice versa.
     pub trace: bool,
+    /// live-telemetry heartbeat interval in wall-clock ms
+    /// (`obs.beacon_every_ms`; 0 = beacons off). With a beacon
+    /// directory set, every worker process writes an out-of-band
+    /// `beacon-node<N>.json` at each epoch boundary and at most this
+    /// often in between; the launch supervisor folds them into
+    /// `status.json`. Beacons only observe — results stay bit-identical
+    /// with them on or off, and like `trace` they are excluded from the
+    /// checkpoint fingerprint.
+    pub beacon_every_ms: u64,
+    /// directory beacons are written to (`obs.beacon_dir`; empty =
+    /// beacons off; `daso launch` derives `<out>/live` when `--out` is
+    /// set)
+    pub beacon_dir: String,
+    /// directory for crash flight-recorder dumps (`obs.flight_dir`;
+    /// empty = flight recorder off; `daso launch` derives the `--out`
+    /// directory). Armed processes dump their newest obs events to
+    /// `flight-node<N>.json` on panic/error and refresh the dump at
+    /// every beacon.
+    pub flight_dir: String,
+    /// flight-recorder ring capacity in events (`obs.flight_events`)
+    pub flight_events: usize,
 }
 
 impl TrainConfig {
@@ -147,6 +168,10 @@ impl TrainConfig {
             regroup_log: String::new(),
             rejoin_log: String::new(),
             trace: false,
+            beacon_every_ms: 0,
+            beacon_dir: String::new(),
+            flight_dir: String::new(),
+            flight_events: crate::obs::flight::DEFAULT_FLIGHT_EVENTS,
         }
     }
 
@@ -365,6 +390,9 @@ pub fn train(
         crate::obs::enable();
         crate::obs::set_thread_meta(0, "serial-trainer");
     }
+    // live heartbeat beacons (observe-only; the serial executor is one
+    // process hosting every node, so it beacons as node 0)
+    let beacon = crate::obs::live::Emitter::from_config(&cfg.beacon_dir, cfg.beacon_every_ms, 0);
 
     let wall_start = Instant::now();
     let mut records = Vec::with_capacity(cfg.epochs);
@@ -449,8 +477,23 @@ pub fn train(
                 global_batch,
                 global_wire,
             };
-            let _sp = crate::obs::span(crate::obs::phase::SYNC);
-            strategy.apply(&mut ctx)?;
+            {
+                let _sp = crate::obs::span(crate::obs::phase::SYNC);
+                strategy.apply(&mut ctx)?;
+            }
+            if let Some(b) = &beacon {
+                let last_loss = records.last().map(|r| r.train_loss).unwrap_or(f64::NAN);
+                b.maybe_emit(|| crate::obs::live::Progress {
+                    epoch,
+                    epochs: cfg.epochs,
+                    steps_done: global_batch as u64,
+                    loss: last_loss,
+                    state: strategy.state_desc(),
+                    generation: cfg.launch_generation as usize,
+                    wire_bytes: 0,
+                    done: false,
+                });
+            }
         }
 
         let train_loss = loss_sum / (world * steps_per_epoch) as f64;
@@ -541,6 +584,20 @@ pub fn train(
         }
         records.push(rec);
 
+        if let Some(b) = &beacon {
+            let r = records.last().expect("epoch record just pushed");
+            b.emit_now(&crate::obs::live::Progress {
+                epoch: epoch + 1,
+                epochs: cfg.epochs,
+                steps_done: global_batch as u64,
+                loss: r.train_loss,
+                state: r.strategy_state.clone(),
+                generation: cfg.launch_generation as usize,
+                wire_bytes: 0,
+                done: false,
+            });
+        }
+
         if at_checkpoint && !cfg.checkpoint_dir.is_empty() {
             let dir = Path::new(&cfg.checkpoint_dir);
             let wall_s = wall_offset + wall_start.elapsed().as_secs_f64();
@@ -613,7 +670,23 @@ pub fn train(
         .filter_map(|r| r.metric)
         .fold(final_metric, f64::max);
 
+    if let Some(b) = &beacon {
+        b.emit_now(&crate::obs::live::Progress {
+            epoch: records.len().min(cfg.epochs),
+            epochs: cfg.epochs,
+            steps_done: global_batch as u64,
+            loss: records.last().map(|r| r.train_loss).unwrap_or(f64::NAN),
+            state: strategy.state_desc(),
+            generation: cfg.launch_generation as usize,
+            wire_bytes: 0,
+            done: true,
+        });
+    }
+
     let obs = if cfg.trace { crate::obs::local_report(0) } else { Default::default() };
+    // surface obs event-buffer overflow as a named warning instead of a
+    // silently-absorbed counter
+    let warnings: Vec<String> = crate::obs::overflow_warning(obs.dropped).into_iter().collect();
 
     Ok(RunReport {
         strategy: strategy.name().to_string(),
@@ -629,7 +702,7 @@ pub fn train(
         final_params: cluster.workers.iter().map(|w| w.params.clone()).collect(),
         regroups: vec![],
         rejoins: vec![],
-        warnings: vec![],
+        warnings,
         obs,
     })
 }

@@ -60,6 +60,10 @@ fn sample_for(key: &str) -> Option<String> {
         "train.rejoin_from" => "1",
         "train.regroup_log" => "2:1:2:2",
         "train.rejoin_log" => "4:2:3:2",
+        "obs.beacon_every_ms" => "40",
+        "obs.beacon_dir" => "livebeacons",
+        "obs.flight_dir" => "flightdir",
+        "obs.flight_events" => "128",
         "daso.b_initial" => "2",
         "daso.warmup_epochs" => "1",
         "daso.cooldown_epochs" => "1",
@@ -152,9 +156,23 @@ fn every_config_key_round_trips_to_children() {
 #[test]
 fn forced_entries_track_the_spec_not_the_defaults() {
     let args = Args::parse(
-        ["launch", "--set", "stop_after_epochs=9", "--set", "straggler_factor=2.5"]
-            .iter()
-            .map(|s| s.to_string()),
+        [
+            "launch",
+            "--set",
+            "stop_after_epochs=9",
+            "--set",
+            "straggler_factor=2.5",
+            "--set",
+            "obs.beacon_every_ms=75",
+            "--set",
+            "obs.beacon_dir=run/live",
+            "--set",
+            "obs.flight_dir=run",
+            "--set",
+            "obs.flight_events=64",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
     )
     .unwrap();
     let mut spec = RunSpec::from_args(&args).unwrap();
@@ -164,4 +182,10 @@ fn forced_entries_track_the_spec_not_the_defaults() {
     assert!(forced.contains(&"straggler_factor=2.5".to_string()), "{forced:?}");
     assert!(forced.contains(&"executor=multiprocess".to_string()), "{forced:?}");
     assert!(forced.contains(&"transport=tcp".to_string()), "{forced:?}");
+    // the live telemetry plane rides the forced list too: children
+    // beacon into the same dir and arm the same flight recorder
+    assert!(forced.contains(&"obs.beacon_every_ms=75".to_string()), "{forced:?}");
+    assert!(forced.contains(&"obs.beacon_dir=run/live".to_string()), "{forced:?}");
+    assert!(forced.contains(&"obs.flight_dir=run".to_string()), "{forced:?}");
+    assert!(forced.contains(&"obs.flight_events=64".to_string()), "{forced:?}");
 }

@@ -1,0 +1,396 @@
+//! Live telemetry plane contract tests:
+//!
+//! - heartbeat beacons only observe: beacons-on runs are bit-identical
+//!   to beacons-off runs — serial, threaded, and multiprocess over TCP
+//!   loopback — at f32 and bf16 wire formats (the CI-enforced
+//!   invariant of the telemetry plane);
+//! - the emitted `beacon-node<N>.json` files carry the documented
+//!   schema and finish with a `done` beacon at the final epoch;
+//! - `status.json` is written atomically: concurrent readers never see
+//!   a torn/partial JSON document while a writer rewrites it in a loop;
+//! - `daso top --once` renders a live status and fails fast with a
+//!   named error when there is none.
+//!
+//! The multiprocess test mirrors transport_tcp.rs: this process is the
+//! coordinator (node 0) through the library API; the peer is a real
+//! `daso` child joined through the `DASO_COORD_ADDR` / `DASO_NODE_ID`
+//! env handshake with the `obs.*` keys forwarded as `--set`s.
+
+#![cfg(not(feature = "pjrt"))]
+
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use daso::baselines::{Horovod, HorovodConfig, HorovodRank};
+use daso::cluster::{train_threaded, train_with_transport};
+use daso::comm::transport::tcp::{TcpTransport, TcpTuning, ENV_COORD_ADDR, ENV_NODE_ID};
+use daso::config::RunSpec;
+use daso::runtime::Engine;
+use daso::trainer::strategy::RankStrategyFactory;
+use daso::trainer::{train, RunReport, TrainConfig};
+use daso::util::json::Value;
+
+/// Fresh scratch directory for one test's beacons/status artifacts.
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("daso_obs_live_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("creating test scratch dir");
+    dir
+}
+
+fn cfg(nodes: usize, gpn: usize, epochs: usize) -> TrainConfig {
+    let mut c = TrainConfig::quick(nodes, gpn, epochs);
+    c.train_samples = 1024;
+    c.val_samples = 256;
+    c.lr_scale = (nodes * gpn) as f64;
+    c
+}
+
+fn run_serial(c: &TrainConfig, seed: u64) -> RunReport {
+    let engine = Engine::native();
+    let rt = engine.model("mlp").unwrap();
+    let (tr, va) = daso::data::for_model(&rt.spec, c.train_samples, c.val_samples, seed).unwrap();
+    train(&rt, c, &*tr, &*va, &mut Horovod::new(HorovodConfig::default())).unwrap()
+}
+
+fn run_threaded(c: &TrainConfig, seed: u64) -> RunReport {
+    let engine = Engine::native();
+    let rt = engine.model("mlp").unwrap();
+    let (tr, va) = daso::data::for_model(&rt.spec, c.train_samples, c.val_samples, seed).unwrap();
+    let factory: RankStrategyFactory =
+        Box::new(|_| Box::new(HorovodRank::new(HorovodConfig::default())));
+    train_threaded(&rt, c, &*tr, &*va, &factory).unwrap()
+}
+
+/// Deadlock guard (mirrors transport_tcp.rs): run `f` on a helper
+/// thread, resume its panic as-is, fail loudly on a hang.
+fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    use std::sync::mpsc::RecvTimeoutError;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(out) => {
+            handle.join().expect("runner thread panicked after reporting");
+            out
+        }
+        Err(RecvTimeoutError::Disconnected) => match handle.join() {
+            Err(panic) => std::panic::resume_unwind(panic),
+            Ok(_) => unreachable!("runner dropped the channel without sending"),
+        },
+        Err(RecvTimeoutError::Timeout) => {
+            panic!("timed out after {secs}s — executor deadlock?")
+        }
+    }
+}
+
+fn assert_bit_identical(a: &RunReport, b: &RunReport) {
+    assert_eq!(a.final_params, b.final_params, "parameters diverged");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.train_loss, rb.train_loss, "epoch {} loss diverged", ra.epoch);
+    }
+    assert_eq!(a.final_metric, b.final_metric);
+}
+
+/// Parse `beacon-node<N>.json` in `dir` and sanity-check the schema;
+/// returns the parsed beacon for further assertions.
+fn read_beacon(dir: &Path, node: i64, epochs: usize) -> Value {
+    let path = dir.join(daso::obs::live::beacon_file_name(node));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing beacon {}: {e}", path.display()));
+    let b = Value::parse(&text).unwrap_or_else(|e| panic!("unparsable beacon: {e:#}\n{text}"));
+    assert_eq!(b.req_str("kind").unwrap(), "daso-beacon");
+    assert_eq!(b.req_str("schema_version").unwrap(), "1.0");
+    assert_eq!(b.req_f64("node").unwrap() as i64, node);
+    assert_eq!(b.req_usize("epochs").unwrap(), epochs);
+    // the run ended, so the last rewrite must be the done beacon at the
+    // final epoch with at least one emission per epoch boundary
+    assert!(b.req("done").unwrap().as_bool().unwrap(), "final beacon not done: {text}");
+    assert_eq!(b.req_usize("epoch").unwrap(), epochs, "final beacon epoch: {text}");
+    assert!(b.req_usize("seq").unwrap() >= epochs, "too few beacon emissions: {text}");
+    b
+}
+
+#[test]
+fn beacons_only_observe_serial() {
+    for wire in [daso::comm::Wire::F32, daso::comm::Wire::Bf16] {
+        let mut c = cfg(2, 2, 3);
+        c.global_wire = wire;
+        let plain = run_serial(&c, 11);
+
+        let dir = tmp_dir(&format!("serial_{wire:?}"));
+        let mut bc = c.clone();
+        bc.beacon_every_ms = 10;
+        bc.beacon_dir = dir.to_string_lossy().into_owned();
+        let beaconed = run_serial(&bc, 11);
+
+        assert_bit_identical(&plain, &beaconed);
+        // the serial executor is one process hosting every node, so it
+        // beacons as node 0
+        let b = read_beacon(&dir, 0, 3);
+        assert!(b.req_f64("loss").unwrap().is_finite(), "final loss not recorded");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn beacons_only_observe_threaded() {
+    for wire in [daso::comm::Wire::F32, daso::comm::Wire::Bf16] {
+        let mut c = cfg(2, 2, 3);
+        c.global_wire = wire;
+        let serial = run_serial(&c, 17);
+
+        let dir = tmp_dir(&format!("threaded_{wire:?}"));
+        let mut bc = c.clone();
+        bc.beacon_every_ms = 10;
+        bc.beacon_dir = dir.to_string_lossy().into_owned();
+        let beaconed = with_timeout(120, move || run_threaded(&bc, 17));
+
+        assert_bit_identical(&serial, &beaconed);
+        // threaded = one process hosting every rank: the first hosted
+        // rank's node (0) owns the single emitter
+        read_beacon(&dir, 0, 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// The shared 2x2 multiprocess run shape (mirrors transport_tcp.rs).
+const SETS: &[&str] = &[
+    "nodes=2",
+    "gpus_per_node=2",
+    "epochs=3",
+    "train.train_samples=1024",
+    "train.val_samples=256",
+    "train.lr_scale=4",
+];
+
+fn spec_with_extra(strategy: &str, extra: &[String]) -> RunSpec {
+    let mut s = RunSpec::default_for("mlp");
+    for set in SETS.iter().map(|s| s.to_string()).chain(extra.iter().cloned()) {
+        s.set(&set).unwrap();
+    }
+    s.set(&format!("strategy={strategy}")).unwrap();
+    s
+}
+
+fn spawn_peer(addr: &str, node: usize, strategy: &str, extra: &[String]) -> Child {
+    let exe = env!("CARGO_BIN_EXE_daso");
+    let mut args = vec![
+        "train".to_string(),
+        "--model".into(),
+        "mlp".into(),
+        "--strategy".into(),
+        strategy.into(),
+        "--executor".into(),
+        "multiprocess".into(),
+    ];
+    for set in SETS.iter().map(|s| s.to_string()).chain(extra.iter().cloned()) {
+        args.push("--set".into());
+        args.push(set);
+    }
+    Command::new(exe)
+        .args(&args)
+        .env(ENV_COORD_ADDR, addr)
+        .env(ENV_NODE_ID, node.to_string())
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawning the peer daso process")
+}
+
+fn serial_report_with(strategy: &str, extra: &[String]) -> RunReport {
+    let spec = spec_with_extra(strategy, extra);
+    let engine = Engine::native();
+    let rt = engine.model("mlp").unwrap();
+    let (tr, va) = daso::data::for_model(
+        &rt.spec,
+        spec.train.train_samples,
+        spec.train.val_samples,
+        spec.train.seed,
+    )
+    .unwrap();
+    let mut strategy = spec.build_strategy();
+    train(&rt, &spec.train, &*tr, &*va, strategy.as_mut()).unwrap()
+}
+
+fn multiprocess_report_with(strategy: &str, extra: &[String]) -> RunReport {
+    let spec = spec_with_extra(strategy, extra);
+    let engine = Engine::native();
+    let rt = engine.model("mlp").unwrap();
+    let (tr, va) = daso::data::for_model(
+        &rt.spec,
+        spec.train.train_samples,
+        spec.train.val_samples,
+        spec.train.seed,
+    )
+    .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut children: Vec<Child> = (1..spec.train.nodes)
+        .map(|node| spawn_peer(&addr, node, strategy, extra))
+        .collect();
+    let factory = spec.build_rank_strategies();
+    let faults =
+        daso::comm::transport::faults::FaultPlan::parse(&spec.train.fault_plan, spec.train.seed)
+            .expect("test fault plans parse");
+    let tuning = TcpTuning::new(Duration::from_secs(60), spec.train.global_wire)
+        .with_placement(spec.train.leader_placement)
+        .with_chunk_elems(spec.train.pipeline_chunk_elems)
+        .with_faults(std::sync::Arc::new(faults));
+    let mut transport = TcpTransport::coordinator(spec.train.topology(), listener, tuning);
+    let result = train_with_transport(&rt, &spec.train, &*tr, &*va, &factory, &mut transport);
+    let report = match result {
+        Ok(r) => r.expect("the coordinator hosts rank 0 and owns the report"),
+        Err(e) => {
+            for child in &mut children {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            panic!("coordinator failed: {e:#}");
+        }
+    };
+    for (node, mut child) in children.into_iter().enumerate() {
+        let status = child.wait().expect("reaping the peer process");
+        assert!(status.success(), "peer process for node {} exited with {status}", node + 1);
+    }
+    report
+}
+
+#[test]
+fn beacons_only_observe_multiprocess() {
+    with_timeout(240, || {
+        for wire in ["f32", "bf16"] {
+            let dir = tmp_dir(&format!("multi_{wire}"));
+            let wire_set = format!("global_wire={wire}");
+            let serial = serial_report_with("horovod", std::slice::from_ref(&wire_set));
+            let beacon_sets = vec![
+                wire_set,
+                "obs.beacon_every_ms=10".to_string(),
+                format!("obs.beacon_dir={}", dir.to_string_lossy()),
+            ];
+            let multi = multiprocess_report_with("horovod", &beacon_sets);
+            assert_bit_identical(&serial, &multi);
+            // each process owns one emitter: the coordinator beacons as
+            // node 0, the peer child as node 1
+            read_beacon(&dir, 0, 3);
+            read_beacon(&dir, 1, 3);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    });
+}
+
+/// `status.json` is rewritten via a pid-suffixed temp file + rename, so
+/// a reader must never observe a torn document — only the old complete
+/// status, the new complete status, or (before the first write) nothing.
+#[test]
+fn status_json_atomic_under_concurrent_reads() {
+    let dir = tmp_dir("atomic");
+    let path = dir.join("status.json");
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+    // ~4 KB payload so a torn read would surface as a parse failure
+    let payload = |i: usize| {
+        let filler: Vec<Value> = (0..200)
+            .map(|k| daso::util::json::s(&format!("node-{k}-fold-{i}-padding-padding")))
+            .collect();
+        daso::util::json::obj(vec![
+            ("kind", daso::util::json::s("daso-live-status")),
+            ("folds", daso::util::json::num(i as f64)),
+            ("filler", daso::util::json::arr(filler)),
+        ])
+    };
+
+    let readers: Vec<_> = (0..4)
+        .map(|_| {
+            let path = path.clone();
+            let stop = std::sync::Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut seen = 0usize;
+                // audit: allow(atomic-ordering): test stop flag, no data ordering
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    match std::fs::read_to_string(&path) {
+                        Ok(text) => {
+                            let v = Value::parse(&text)
+                                .unwrap_or_else(|e| panic!("torn status read: {e:#}\n{text}"));
+                            assert_eq!(v.req_str("kind").unwrap(), "daso-live-status");
+                            seen += 1;
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                        Err(e) => panic!("status read failed: {e}"),
+                    }
+                }
+                seen
+            })
+        })
+        .collect();
+
+    for i in 0..400 {
+        daso::obs::live::atomic_write_json(&path, &payload(i)).expect("atomic status write");
+    }
+    // audit: allow(atomic-ordering): test stop flag, no data ordering
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let total: usize = readers.into_iter().map(|r| r.join().expect("reader panicked")).sum();
+    assert!(total > 0, "readers never observed a status document");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `daso top --once` renders the status table when one exists and fails
+/// fast with a named error when it does not.
+#[test]
+fn daso_top_once_renders_and_fails_fast() {
+    let exe = env!("CARGO_BIN_EXE_daso");
+
+    // no status.json yet: --once must fail with the named error
+    let empty = tmp_dir("top_empty");
+    let out = Command::new(exe)
+        .arg("top")
+        .arg("--dir")
+        .arg(&empty)
+        .arg("--once")
+        .output()
+        .expect("running daso top");
+    assert!(!out.status.success(), "top --once on an empty dir must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("no live status"), "stderr: {err}");
+
+    // produce a real status through the emitter + board fold path
+    let dir = tmp_dir("top_live");
+    let board = daso::obs::live::StatusBoard::new(&dir, 1, 2);
+    let beacon_dir = board.beacon_dir().to_string_lossy().into_owned();
+    let emitter = daso::obs::live::Emitter::from_config(&beacon_dir, 10, 0)
+        .expect("emitter config is live");
+    emitter.emit_now(&daso::obs::live::Progress {
+        epoch: 2,
+        epochs: 3,
+        steps_done: 64,
+        loss: 0.25,
+        state: "cycling".into(),
+        generation: 0,
+        wire_bytes: 1024,
+        done: false,
+    });
+    board.fold_now();
+    assert!(board.status_path().exists(), "fold_now did not write status.json");
+
+    let out = Command::new(exe)
+        .arg("top")
+        .arg("--dir")
+        .arg(&dir)
+        .arg("--once")
+        .output()
+        .expect("running daso top");
+    assert!(
+        out.status.success(),
+        "top --once failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("NODE"), "missing table header: {stdout}");
+    assert!(stdout.contains("cycling"), "missing node state: {stdout}");
+    let _ = std::fs::remove_dir_all(&empty);
+    let _ = std::fs::remove_dir_all(&dir);
+}
